@@ -1,0 +1,51 @@
+//! Quickstart: encode a matrix with the `(n1,k1)×(n2,k2)` hierarchical
+//! code, launch the in-process cluster, and serve one request.
+//!
+//! ```bash
+//! cargo run --release --example quickstart            # native backend
+//! HIERCODE_PJRT=1 cargo run --release --example quickstart  # PJRT
+//! ```
+
+use hiercode::config::schema::ClusterConfig;
+use hiercode::coordinator::Cluster;
+use hiercode::linalg::{ops, Matrix};
+use hiercode::util::rng::Rng;
+
+fn main() -> hiercode::Result<()> {
+    // (3,2) x (3,2): the paper's Fig. 3 toy code — 9 workers in 3
+    // groups; any 2 workers per group, any 2 groups suffice.
+    let mut config = ClusterConfig::demo(3, 2, 3, 2);
+    config.runtime.use_pjrt = std::env::var("HIERCODE_PJRT").is_ok();
+
+    // A small data matrix A (rows divisible by k1·k2 = 4).
+    let (m, d) = (64, 32);
+    let mut rng = Rng::new(7);
+    let a = Matrix::from_fn(m, d, |_, _| rng.uniform(-1.0, 1.0));
+
+    // PJRT note: with use_pjrt=true the shard shape m/(k1·k2) × d =
+    // 16×32 must have an AOT artifact — worker_matvec_r16_d32_b1 ships
+    // in the default artifact set.
+    let cluster = Cluster::launch(&config, &a)?;
+    println!(
+        "cluster: 9 workers in 3 groups, backend = {}",
+        if config.runtime.use_pjrt { "PJRT" } else { "native" }
+    );
+
+    let x: Vec<f64> = (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let y = cluster.submit(x.clone())?.wait()?;
+
+    // Verify against a direct product.
+    let expect = ops::matvec(&a, &x);
+    let max_err = y
+        .iter()
+        .zip(expect.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("A·x computed by the cluster; max |err| vs direct = {max_err:.2e}");
+    assert!(max_err < 1e-3, "coded result must match direct product");
+
+    println!("\nmetrics:\n{}", cluster.metrics());
+    cluster.shutdown();
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,131 @@
+"""AOT pipeline: lower the L2 graphs to HLO text artifacts.
+
+Emits one ``.hlo.txt`` per (entry point, shape) pair plus a
+``manifest.json`` describing every artifact, which the Rust runtime
+(`rust/src/runtime/artifact.rs`) parses to discover and shape-check
+executables at startup.
+
+HLO **text** — not ``lowered.compile()`` / ``.serialize()`` — is the
+interchange format: jax ≥ 0.5 serializes HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Artifact schedule: every (name, entry, shapes) the runtime needs.
+# Shapes here MUST stay in sync with the examples' code parameters; the
+# manifest makes any drift a loud startup error on the Rust side rather
+# than a silent shape mismatch.
+WORKER_SPECS = [
+    # (r, d, b): shard rows, data dim, batch width.
+    (16, 32, 1),    # quickstart: tiny shards, single request
+    (64, 128, 4),   # integration tests
+    (256, 128, 4),  # end-to-end regression example (m=1024, k1=k2=2)
+    (256, 128, 8),  # batched serving example
+    (128, 64, 1),   # power-iteration (pagerank) example
+]
+ENCODE_SPECS = [
+    # (n, k, r, d): code params, block rows, data dim.
+    (6, 3, 64, 32),
+    (4, 2, 256, 128),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_worker(r, d, b):
+    """Lower ``worker_task`` for a (r, d) shard and (d, b) request."""
+    shard = jax.ShapeDtypeStruct((r, d), jax.numpy.float32)
+    x = jax.ShapeDtypeStruct((d, b), jax.numpy.float32)
+    return jax.jit(model.worker_task).lower(shard, x)
+
+
+def lower_encode(n, k, r, d):
+    """Lower ``encode_task`` for an (n, k) code over (k, r, d) blocks."""
+    g = jax.ShapeDtypeStruct((n, k), jax.numpy.float32)
+    blocks = jax.ShapeDtypeStruct((k, r, d), jax.numpy.float32)
+    return jax.jit(model.encode_task).lower(g, blocks)
+
+
+def emit(out_dir: str, verbose: bool = True) -> dict:
+    """Write all artifacts + manifest; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    def write(name, text, meta):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        entries.append(
+            {"name": name, "file": fname, "sha256_16": digest, **meta}
+        )
+        if verbose:
+            print(f"  wrote {fname} ({len(text)} chars)")
+
+    for r, d, b in WORKER_SPECS:
+        name = f"worker_matvec_r{r}_d{d}_b{b}"
+        write(
+            name,
+            to_hlo_text(lower_worker(r, d, b)),
+            {
+                "entry": "worker_task",
+                "inputs": [[r, d], [d, b]],
+                "output": [r, b],
+                "dtype": "f32",
+            },
+        )
+    for n, k, r, d in ENCODE_SPECS:
+        name = f"encode_n{n}_k{k}_r{r}_d{d}"
+        write(
+            name,
+            to_hlo_text(lower_encode(n, k, r, d)),
+            {
+                "entry": "encode_task",
+                "inputs": [[n, k], [k, r, d]],
+                "output": [n, r, d],
+                "dtype": "f32",
+            },
+        )
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"  wrote manifest.json ({len(entries)} artifacts)")
+    return manifest
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out-dir", default="../artifacts", help="artifact output directory"
+    )
+    parser.add_argument("--quiet", action="store_true")
+    args = parser.parse_args()
+    emit(args.out_dir, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

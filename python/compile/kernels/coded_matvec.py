@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: the worker hot-spot ``Â_{i,j} @ X``.
+
+The compute a worker performs in the hierarchical scheme (§II-A) is a
+dense product of its coded shard ``(r, d)`` with the (batched) request
+``(d, b)``. This is the only code on a worker's critical path, so it is
+the kernel the paper's latency model prices at rate `µ1`.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the shard's
+rows in ``block_r`` chunks and the batch in ``block_b`` chunks; each
+program owns a ``(block_r, d) × (d, block_b)`` product — an MXU-shaped
+GEMM whose operands fit VMEM. The reduction dimension `d` is kept whole
+per program (shards are short and wide: `r = m/(k1·k2) ≫ d` is the
+common shape), which avoids cross-program accumulation. All Pallas calls
+use ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness — not interpret-mode wallclock — is what
+CPU runs validate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, x_ref, o_ref):
+    """One grid program: a (block_r, d) x (d, block_b) MXU-shaped GEMM."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim, preferred):
+    """Largest divisor of ``dim`` that is <= ``preferred``.
+
+    Keeps the grid exact (no masking needed) for any shard shape while
+    still tiling big shards into VMEM-sized pieces.
+    """
+    for cand in range(min(preferred, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_b"))
+def shard_matmul(shard, x, *, block_r=256, block_b=128):
+    """Compute ``shard @ x`` with a tiled Pallas kernel.
+
+    Args:
+      shard: ``(r, d)`` float32 coded shard.
+      x: ``(d, b)`` float32 batched request.
+      block_r: preferred row-tile size (clipped to a divisor of ``r``).
+      block_b: preferred batch-tile size (clipped to a divisor of ``b``).
+
+    Returns:
+      ``(r, b)`` float32 product.
+    """
+    r, d = shard.shape
+    d2, b = x.shape
+    assert d == d2, f"contraction mismatch: {d} vs {d2}"
+    br = _pick_block(r, block_r)
+    bb = _pick_block(b, block_b)
+    grid = (r // br, b // bb)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bb), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, b), jnp.float32),
+        interpret=True,
+    )(shard, x)
+
+
+def vmem_footprint_bytes(r, d, b, block_r=256, block_b=128):
+    """Estimated VMEM bytes a single grid program touches (f32).
+
+    Used by DESIGN.md §Perf to check the tiling against the ~16 MiB VMEM
+    budget of a TPU core: one shard tile + one request tile + one output
+    tile, double-buffered (×2) for the HBM→VMEM pipeline.
+    """
+    br = _pick_block(r, block_r)
+    bb = _pick_block(b, block_b)
+    per_program = (br * d + d * bb + br * bb) * 4
+    return 2 * per_program

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: MDS encoding (generator × stacked blocks).
+
+Encoding happens once per dataset (§II-A: the coded shards are stored in
+the racks ahead of time, Facebook-cluster style), so this kernel is on
+the *setup* path, not the request path. It is still implemented as a
+first-class Pallas kernel: large `A` matrices make encoding a real cost,
+and the same kernel re-encodes after group membership changes.
+
+Layout: the ``(k, r, d)`` block stack is contracted with the ``(n, k)``
+generator. The grid tiles the output rows `r`; the tiny generator is
+replicated to every program (it would live in SMEM on a real TPU) while
+block tiles stream HBM→VMEM once each.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(g_ref, blocks_ref, o_ref):
+    """One grid program: out tile = einsum('ij,jrd->ird', G, block tile)."""
+    o_ref[...] = jnp.einsum(
+        "ij,jrd->ird",
+        g_ref[...],
+        blocks_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pick_block(dim, preferred):
+    for cand in range(min(preferred, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def encode_blocks(generator, blocks, *, block_r=128):
+    """MDS-encode ``k`` stacked blocks into ``n`` coded blocks.
+
+    Args:
+      generator: ``(n, k)`` float32 generator matrix.
+      blocks: ``(k, r, d)`` float32 stacked data blocks.
+      block_r: preferred row-tile size (clipped to a divisor of ``r``).
+
+    Returns:
+      ``(n, r, d)`` float32 stacked coded blocks.
+    """
+    n, k = generator.shape
+    k2, r, d = blocks.shape
+    assert k == k2, f"generator k={k} vs blocks k={k2}"
+    br = _pick_block(r, block_r)
+    grid = (r // br,)
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, br, d), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, br, d), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r, d), jnp.float32),
+        interpret=True,
+    )(generator, blocks)

@@ -1,0 +1,50 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the pytest suite checks the kernels against
+(`assert_allclose`), and double as the shape/semantics documentation:
+
+* ``shard_matmul_ref``   — the worker hot-spot `Â_{i,j} @ X`;
+* ``encode_blocks_ref``  — MDS encode: generator × stacked blocks;
+* ``lincomb_ref``        — one generator row applied to stacked blocks.
+"""
+
+import jax.numpy as jnp
+
+
+def shard_matmul_ref(shard, x):
+    """Worker task: ``shard @ x``.
+
+    Args:
+      shard: ``(r, d)`` coded shard `Â_{i,j}`.
+      x: ``(d, b)`` batched request matrix.
+
+    Returns:
+      ``(r, b)`` product.
+    """
+    return jnp.dot(shard, x, preferred_element_type=jnp.float32)
+
+
+def encode_blocks_ref(generator, blocks):
+    """MDS encode: ``out[i] = sum_j generator[i, j] * blocks[j]``.
+
+    Args:
+      generator: ``(n, k)`` MDS generator matrix.
+      blocks: ``(k, r, d)`` stacked data blocks.
+
+    Returns:
+      ``(n, r, d)`` stacked coded blocks.
+    """
+    return jnp.einsum("ij,jrd->ird", generator, blocks)
+
+
+def lincomb_ref(coeffs, blocks):
+    """One coded block: ``sum_j coeffs[j] * blocks[j]``.
+
+    Args:
+      coeffs: ``(k,)`` one generator row.
+      blocks: ``(k, r, d)`` stacked data blocks.
+
+    Returns:
+      ``(r, d)`` coded block.
+    """
+    return jnp.einsum("j,jrd->rd", coeffs, blocks)

@@ -1,0 +1,103 @@
+"""L2: the JAX compute graph of hierarchical coded computation.
+
+Composes the L1 Pallas kernels into the functions the Rust coordinator
+executes via PJRT:
+
+* :func:`worker_task` — the request-path graph (one worker's product),
+  lowered per shard shape by ``aot.py``;
+* :func:`encode_task` — the setup-path graph (MDS encode of a block
+  stack);
+* :func:`hierarchical_pipeline` — the whole scheme end-to-end in JAX
+  (encode → all worker products → two-level decode), used by the pytest
+  suite as a differential oracle against the Rust implementation's
+  semantics.
+
+Python never runs on the request path: these functions exist to be
+lowered once (``make artifacts``) and to power build-time tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import coded_matvec, encode
+
+
+def worker_task(shard, x):
+    """One worker's request-path compute: ``Â_{i,j} @ X``.
+
+    Args:
+      shard: ``(r, d)`` coded shard held by the worker.
+      x: ``(d, b)`` batched request.
+
+    Returns:
+      1-tuple of the ``(r, b)`` product (tuple so HLO lowering with
+      ``return_tuple=True`` matches the Rust loader's ``to_tuple1``).
+    """
+    return (coded_matvec.shard_matmul(shard, x),)
+
+
+def encode_task(generator, blocks):
+    """Setup-path compute: encode ``k`` blocks into ``n`` coded blocks.
+
+    Args:
+      generator: ``(n, k)`` generator.
+      blocks: ``(k, r, d)`` data blocks.
+
+    Returns:
+      1-tuple of ``(n, r, d)`` coded blocks.
+    """
+    return (encode.encode_blocks(generator, blocks),)
+
+
+def hierarchical_encode(a, g_outer, g_inner):
+    """Encode ``A`` with the two-level scheme of §II-A.
+
+    Args:
+      a: ``(m, d)`` input matrix, ``m`` divisible by ``k1·k2``.
+      g_outer: ``(n2, k2)`` outer generator.
+      g_inner: ``(n1, k1)`` inner generator (homogeneous groups).
+
+    Returns:
+      ``(n2, n1, r, d)`` shard tensor, ``r = m/(k1·k2)``;
+      ``shards[i, j]`` is `Â_{i,j}`.
+    """
+    n2, k2 = g_outer.shape
+    n1, k1 = g_inner.shape
+    m, d = a.shape
+    assert m % (k1 * k2) == 0, f"m={m} not divisible by k1*k2={k1 * k2}"
+    r = m // (k1 * k2)
+    # Outer: A -> k2 blocks of (m/k2, d) -> n2 coded group matrices.
+    outer_blocks = a.reshape(k2, m // k2, d)
+    coded_groups = encode.encode_blocks(g_outer, outer_blocks)
+    # Inner, per group: (m/k2, d) -> k1 blocks -> n1 coded shards.
+    inner_blocks = coded_groups.reshape(n2, k1, r, d)
+    shards = jax.vmap(lambda blocks: encode.encode_blocks(g_inner, blocks))(
+        inner_blocks
+    )
+    return shards
+
+
+def hierarchical_pipeline(a, x, g_outer, g_inner):
+    """The full scheme in JAX: encode, compute all products, decode from
+    the systematic workers (all-workers-finished reference path).
+
+    Returns ``(y, shards, products)`` where ``y ≈ A @ x``.
+    """
+    n2, k2 = g_outer.shape
+    n1, k1 = g_inner.shape
+    shards = hierarchical_encode(a, g_outer, g_inner)
+    products = jax.vmap(
+        jax.vmap(lambda s: coded_matvec.shard_matmul(s, x))
+    )(shards)
+    # Decode via the systematic prefix (generators are [I; P]): group i's
+    # result is the stack of its first k1 products; A@x stacks the first
+    # k2 groups.
+    m = a.shape[0]
+    b = x.shape[1]
+    y = products[:k2, :k1].reshape(m, b)
+    return y, shards, products
+
+
+def reference_product(a, x):
+    """Oracle: plain ``A @ x``."""
+    return jnp.dot(a, x, preferred_element_type=jnp.float32)

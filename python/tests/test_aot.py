@@ -1,0 +1,72 @@
+"""AOT pipeline integrity: HLO text artifacts + manifest.
+
+Verifies every artifact lowers, parses as HLO text (structural checks),
+and that the manifest is complete and consistent — the contract the Rust
+runtime's artifact loader depends on.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.emit(str(out), verbose=False)
+    return str(out), manifest
+
+
+def test_manifest_lists_all_specs(emitted):
+    _, manifest = emitted
+    assert manifest["version"] == 1
+    names = {e["name"] for e in manifest["artifacts"]}
+    assert len(names) == len(aot.WORKER_SPECS) + len(aot.ENCODE_SPECS)
+    for r, d, b in aot.WORKER_SPECS:
+        assert f"worker_matvec_r{r}_d{d}_b{b}" in names
+    for n, k, r, d in aot.ENCODE_SPECS:
+        assert f"encode_n{n}_k{k}_r{r}_d{d}" in names
+
+
+def test_artifacts_exist_and_are_hlo_text(emitted):
+    out, manifest = emitted
+    for e in manifest["artifacts"]:
+        path = os.path.join(out, e["file"])
+        assert os.path.exists(path), f"missing {e['file']}"
+        text = open(path).read()
+        # Structural sanity of HLO text.
+        assert "HloModule" in text, f"{e['file']}: no HloModule header"
+        assert "ROOT" in text, f"{e['file']}: no ROOT instruction"
+        assert "f32" in text, f"{e['file']}: expected f32 types"
+
+
+def test_manifest_shapes_match_hlo_entry(emitted):
+    out, manifest = emitted
+    for e in manifest["artifacts"]:
+        text = open(os.path.join(out, e["file"])).read()
+        # Every input shape should appear as a parameter type in the HLO.
+        for shape in e["inputs"]:
+            token = "f32[" + ",".join(str(s) for s in shape) + "]"
+            assert token in text, f"{e['file']}: {token} not found"
+
+
+def test_manifest_file_written(emitted):
+    out, manifest = emitted
+    on_disk = json.load(open(os.path.join(out, "manifest.json")))
+    assert on_disk == manifest
+
+
+def test_worker_lowering_deterministic():
+    """Same spec → same HLO text (stable artifact hashing)."""
+    t1 = aot.to_hlo_text(aot.lower_worker(16, 32, 1))
+    t2 = aot.to_hlo_text(aot.lower_worker(16, 32, 1))
+    assert t1 == t2
+
+
+def test_distinct_specs_distinct_hlo():
+    t1 = aot.to_hlo_text(aot.lower_worker(16, 32, 1))
+    t2 = aot.to_hlo_text(aot.lower_worker(16, 32, 2))
+    assert t1 != t2

@@ -1,0 +1,57 @@
+"""Hypothesis sweeps: kernel == oracle over randomized shapes/values.
+
+Property-based layer on top of the parametrized tests — hypothesis
+explores the shape space (including degenerate 1-sized axes) and value
+distributions far more densely than a hand-written grid.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import coded_matvec, encode, ref
+
+# Interpret-mode pallas is slow; keep dims modest but irregular.
+dims = st.integers(min_value=1, max_value=48)
+small_dims = st.integers(min_value=1, max_value=12)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+scales = st.sampled_from([1e-3, 1.0, 1e3])
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=dims, d=dims, b=small_dims, seed=seeds, scale=scales)
+def test_shard_matmul_property(r, d, b, seed, scale):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    shard = scale * jax.random.normal(k0, (r, d), dtype=jnp.float32)
+    x = scale * jax.random.normal(k1, (d, b), dtype=jnp.float32)
+    got = coded_matvec.shard_matmul(shard, x)
+    want = ref.shard_matmul_ref(shard, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=small_dims, k=small_dims, r=dims, d=small_dims, seed=seeds)
+def test_encode_blocks_property(n, k, r, d, seed):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    g = jax.random.normal(k0, (n, k), dtype=jnp.float32)
+    blocks = jax.random.normal(k1, (k, r, d), dtype=jnp.float32)
+    got = encode.encode_blocks(g, blocks)
+    want = ref.encode_blocks_ref(g, blocks)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=dims, d=dims, seed=seeds)
+def test_matmul_zero_and_identity_laws(r, d, seed):
+    """Â @ 0 == 0; with square Â, Â @ I == Â."""
+    key = jax.random.PRNGKey(seed)
+    shard = jax.random.normal(key, (r, d), dtype=jnp.float32)
+    zero = jnp.zeros((d, 2), dtype=jnp.float32)
+    np.testing.assert_array_equal(
+        coded_matvec.shard_matmul(shard, zero), jnp.zeros((r, 2))
+    )
+    eye = jnp.eye(d, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        coded_matvec.shard_matmul(shard, eye), shard, rtol=1e-5, atol=1e-5
+    )

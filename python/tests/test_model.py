@@ -1,0 +1,88 @@
+"""L2 correctness: the hierarchical pipeline in JAX.
+
+Validates the end-to-end encode→compute→decode semantics that the Rust
+coordinator mirrors, including the Fig. 3 toy example's structure.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def systematic_generator(key, n, k):
+    """[I_k; P] with Gaussian parity — mirrors the Rust generator's
+    structure (not its exact values; tests only need *a* valid MDS)."""
+    p = jax.random.normal(key, (n - k, k), dtype=jnp.float32) / np.sqrt(k)
+    return jnp.concatenate([jnp.eye(k, dtype=jnp.float32), p])
+
+
+@pytest.mark.parametrize(
+    "n1,k1,n2,k2,m,d,b",
+    [
+        (3, 2, 3, 2, 8, 4, 1),    # the paper's Fig. 3 parameters
+        (4, 2, 4, 2, 16, 8, 2),
+        (5, 3, 4, 2, 12, 16, 1),
+    ],
+)
+def test_pipeline_recovers_product(n1, k1, n2, k2, m, d, b):
+    keys = jax.random.split(jax.random.PRNGKey(m + n1), 4)
+    a = jax.random.normal(keys[0], (m, d), dtype=jnp.float32)
+    x = jax.random.normal(keys[1], (d, b), dtype=jnp.float32)
+    g_outer = systematic_generator(keys[2], n2, k2)
+    g_inner = systematic_generator(keys[3], n1, k1)
+    y, shards, products = model.hierarchical_pipeline(a, x, g_outer, g_inner)
+    np.testing.assert_allclose(
+        y, model.reference_product(a, x), rtol=1e-4, atol=1e-4
+    )
+    assert shards.shape == (n2, n1, m // (k1 * k2), d)
+    assert products.shape == (n2, n1, m // (k1 * k2), b)
+
+
+def test_fig3_parity_structure():
+    """Fig. 3: with sum-parity generators, Â_{3,j} = Â_{1,j} + Â_{2,j}
+    and Â_{i,3} = Â_{i,1} + Â_{i,2}."""
+    m, d = 8, 4
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, d), dtype=jnp.float32)
+    # (3,2) sum-parity generator — exactly the paper's toy code.
+    g = jnp.array([[1.0, 0.0], [0.0, 1.0], [1.0, 1.0]], dtype=jnp.float32)
+    shards = model.hierarchical_encode(a, g, g)
+    np.testing.assert_allclose(
+        shards[2], shards[0] + shards[1], rtol=1e-5, atol=1e-5
+    )
+    for i in range(3):
+        np.testing.assert_allclose(
+            shards[i, 2], shards[i, 0] + shards[i, 1], rtol=1e-5, atol=1e-5
+        )
+
+
+def test_worker_task_is_tuple_of_product():
+    key = jax.random.PRNGKey(1)
+    shard = jax.random.normal(key, (16, 32), dtype=jnp.float32)
+    x = jax.random.normal(key, (32, 4), dtype=jnp.float32)
+    out = model.worker_task(shard, x)
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_allclose(
+        out[0], ref.shard_matmul_ref(shard, x), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_encode_task_matches_ref():
+    key0, key1 = jax.random.split(jax.random.PRNGKey(2))
+    g = jax.random.normal(key0, (4, 2), dtype=jnp.float32)
+    blocks = jax.random.normal(key1, (2, 8, 4), dtype=jnp.float32)
+    out = model.encode_task(g, blocks)
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_allclose(
+        out[0], ref.encode_blocks_ref(g, blocks), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_encode_rejects_indivisible_rows():
+    a = jnp.zeros((10, 4), dtype=jnp.float32)  # 10 % (2*2) != 0
+    g = systematic_generator(jax.random.PRNGKey(3), 3, 2)
+    with pytest.raises(AssertionError):
+        model.hierarchical_encode(a, g, g)

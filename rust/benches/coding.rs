@@ -1,0 +1,89 @@
+//! Coding-substrate throughput: encode and decode micro-benchmarks for
+//! every scheme (the L3 hot-path building blocks the §Perf pass tunes).
+
+use hiercode::coding::{
+    compute_all_products, CodedScheme, HierarchicalCode, MdsCode, PolynomialCode, ProductCode,
+    ReplicationCode,
+};
+use hiercode::linalg::{lu::LuFactors, ops, Matrix};
+use hiercode::util::bench::Suite;
+use hiercode::util::rng::Rng;
+use hiercode::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+fn main() {
+    let mut suite = Suite::new("coding").with_iters(20, 3);
+    let mut r = Rng::new(7);
+
+    // linalg primitives.
+    let a256 = Matrix::from_fn(256, 256, |_, _| r.uniform(-1.0, 1.0));
+    let b256 = Matrix::from_fn(256, 256, |_, _| r.uniform(-1.0, 1.0));
+    suite.bench("gemm_256x256x256_blocked", || ops::matmul(&a256, &b256));
+    suite.bench("gemm_256x256x256_naive", || ops::matmul_naive(&a256, &b256));
+    let lu_m = {
+        let mut m = Matrix::from_fn(128, 128, |_, _| r.uniform(-1.0, 1.0));
+        for i in 0..128 {
+            m[(i, i)] += 128.0;
+        }
+        m
+    };
+    suite.bench("lu_factorize_128", || LuFactors::factorize(&lu_m).unwrap());
+    let lu = LuFactors::factorize(&lu_m).unwrap();
+    let rhs = Matrix::from_fn(128, 64, |_, _| r.uniform(-1.0, 1.0));
+    suite.bench("lu_solve_128x64rhs", || lu.solve_matrix(&rhs).unwrap());
+
+    // Encode throughput (m = 4096 rows, d = 32).
+    let a = Matrix::from_fn(4096, 32, |_, _| r.uniform(-1.0, 1.0));
+    let mds = MdsCode::new(16, 8).unwrap();
+    let hier = HierarchicalCode::homogeneous(4, 2, 4, 2).unwrap();
+    let prod = ProductCode::new(4, 2, 4, 2).unwrap();
+    let poly = PolynomialCode::new(16, 8).unwrap();
+    let rep = ReplicationCode::new(16, 8).unwrap();
+    suite.bench("encode_mds_16_8_4096x32", || mds.encode(&a).unwrap());
+    suite.bench("encode_hier_4,2x4,2_4096x32", || hier.encode(&a).unwrap());
+    suite.bench("encode_product_4,2x4,2_4096x32", || prod.encode(&a).unwrap());
+    suite.bench("encode_poly_16_8_4096x32", || poly.encode(&a).unwrap());
+    suite.bench("encode_rep_16_8_4096x32", || rep.encode(&a).unwrap());
+
+    // Decode throughput, parity-forcing subsets.
+    let x = Matrix::from_fn(32, 4, |_, _| r.uniform(-1.0, 1.0));
+    let run_decode = |code: &dyn CodedScheme, drop: usize| {
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        all[drop..].to_vec()
+    };
+    let subset_h = run_decode(&hier, 2);
+    suite.bench("decode_hier_parity_4096x4", || {
+        hier.decode(&subset_h, 4096).unwrap().flops
+    });
+    // Parallel intra-group decode with a pool.
+    let pool = Arc::new(ThreadPool::new(4));
+    let hier_par = HierarchicalCode::homogeneous(4, 2, 4, 2)
+        .unwrap()
+        .with_pool(pool);
+    suite.bench("decode_hier_parity_4096x4_pooled", || {
+        hier_par.decode(&subset_h, 4096).unwrap().flops
+    });
+    let subset_p = run_decode(&prod, 2);
+    suite.bench("decode_product_parity_4096x4", || {
+        prod.decode(&subset_p, 4096).unwrap().flops
+    });
+    let subset_y = run_decode(&poly, 2);
+    suite.bench("decode_poly_parity_4096x4", || {
+        poly.decode(&subset_y, 4096).unwrap().flops
+    });
+    let subset_m = run_decode(&mds, 2);
+    suite.bench("decode_mds_parity_4096x4", || {
+        mds.decode(&subset_m, 4096).unwrap().flops
+    });
+    // Systematic fast path (0 flops) for contrast.
+    let all_h = {
+        let shards = hier.encode(&a).unwrap();
+        compute_all_products(&shards, &x)
+    };
+    suite.bench("decode_hier_systematic_4096x4", || {
+        hier.decode(&all_h, 4096).unwrap().flops
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,62 @@
+//! Coordinator hot-path benchmark: end-to-end request latency and
+//! throughput of the in-process cluster with straggler injection OFF
+//! (isolating coordination overhead: channels, batching, decode) —
+//! the §Perf target is coordination overhead ≪ compute.
+//!
+//! PJRT rows appear when `make artifacts` has been run.
+
+use hiercode::config::schema::ClusterConfig;
+use hiercode::coordinator::Cluster;
+use hiercode::linalg::Matrix;
+use hiercode::util::bench::Suite;
+use hiercode::util::rng::Rng;
+
+fn bench_cluster(suite: &mut Suite, label: &str, config: &ClusterConfig, a: &Matrix) {
+    let d = a.cols();
+    let cluster = Cluster::launch(config, a).expect("launch");
+    let mut rng = Rng::new(1);
+    let x: Vec<f64> = (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    suite.bench(&format!("{label}_single_request"), || {
+        cluster.submit(x.clone()).unwrap().wait().unwrap()
+    });
+    suite.bench(&format!("{label}_32_concurrent"), || {
+        let handles: Vec<_> = (0..32)
+            .map(|_| cluster.submit(x.clone()).unwrap())
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+    });
+    eprintln!("{label} metrics after bench:\n{}", cluster.metrics());
+    cluster.shutdown();
+}
+
+fn main() {
+    let mut suite = Suite::new("coordinator").with_iters(10, 2);
+    let (m, d) = (1024usize, 128usize);
+    let mut rng = Rng::new(3);
+    let a = Matrix::from_fn(m, d, |_, _| rng.uniform(-1.0, 1.0));
+
+    // Native backend, no straggle: pure coordination + GEMM cost.
+    let mut native = ClusterConfig::demo(4, 2, 4, 2);
+    native.straggler.enabled = false;
+    native.batching.max_wait_ms = 0.5;
+    bench_cluster(&mut suite, "native", &native, &a);
+
+    // With straggler injection (the paper's Exp(10)/Exp(1) at 2ms/unit).
+    let mut straggle = native.clone();
+    straggle.straggler.enabled = true;
+    straggle.straggler.scale = 0.002;
+    bench_cluster(&mut suite, "native_straggle", &straggle, &a);
+
+    // PJRT backend if artifacts exist.
+    let dir = hiercode::runtime::artifact::default_artifact_dir();
+    if hiercode::runtime::artifact::artifacts_available(&dir) {
+        let mut pjrt = native.clone();
+        pjrt.runtime.use_pjrt = true;
+        bench_cluster(&mut suite, "pjrt", &pjrt, &a);
+    } else {
+        eprintln!("(skipping pjrt rows: run `make artifacts`)");
+    }
+    suite.finish();
+}

@@ -1,0 +1,55 @@
+//! Bench E6: the §IV decode-cost scaling sweep (k1 = k2^p) with
+//! measured flops from the real decoders, plus decode wall-clock at
+//! growing sizes to expose the β exponent empirically.
+
+use hiercode::coding::{
+    compute_all_products, CodedScheme, HierarchicalCode, PolynomialCode, ProductCode,
+};
+use hiercode::figures::decode_scaling;
+use hiercode::linalg::Matrix;
+use hiercode::util::bench::Suite;
+use hiercode::util::rng::Rng;
+
+fn setup(code: &dyn CodedScheme, rows: usize, seed: u64) -> (Vec<hiercode::coding::WorkerResult>, usize) {
+    let mut r = Rng::new(seed);
+    let a = Matrix::from_fn(rows, 8, |_, _| r.uniform(-1.0, 1.0));
+    let x = Matrix::from_fn(8, 1, |_, _| r.uniform(-1.0, 1.0));
+    let shards = code.encode(&a).expect("encode");
+    let all = compute_all_products(&shards, &x);
+    (all, rows)
+}
+
+fn main() {
+    let mut suite = Suite::new("decode_scaling").with_iters(10, 2);
+
+    if suite.selected("scaling_series") {
+        let rows = decode_scaling::run(42).expect("scaling");
+        assert!(!rows.is_empty());
+    }
+
+    // Decode wall-clock: hierarchical vs product vs polynomial at the
+    // same (n, k), parity-forcing erasures (first k1 workers dropped).
+    for (n1, k1, n2, k2) in [(8usize, 4usize, 4usize, 2usize), (16, 8, 4, 2), (32, 16, 4, 2)] {
+        let rows = k1 * k2 * 4;
+        let drop = k1;
+        let hier = HierarchicalCode::homogeneous(n1, k1, n2, k2).unwrap();
+        let (all_h, _) = setup(&hier, rows, 1);
+        suite.bench(&format!("decode_hier_{n1}x{k1}_{n2}x{k2}"), || {
+            let subset: Vec<_> = all_h[drop..].to_vec();
+            hier.decode(&subset, rows).unwrap().flops
+        });
+        let prod = ProductCode::new(n1, k1, n2, k2).unwrap();
+        let (all_p, _) = setup(&prod, rows, 1);
+        suite.bench(&format!("decode_product_{n1}x{k1}_{n2}x{k2}"), || {
+            let subset: Vec<_> = all_p[drop..].to_vec();
+            prod.decode(&subset, rows).unwrap().flops
+        });
+        let poly = PolynomialCode::new(n1 * n2, k1 * k2).unwrap();
+        let (all_y, _) = setup(&poly, rows, 1);
+        suite.bench(&format!("decode_poly_n{}_k{}", n1 * n2, k1 * k2), || {
+            let subset: Vec<_> = all_y[drop..].to_vec();
+            poly.decode(&subset, rows).unwrap().flops
+        });
+    }
+    suite.finish();
+}

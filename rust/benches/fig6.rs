@@ -1,0 +1,37 @@
+//! Bench E1/E2: regenerate Fig. 6a and Fig. 6b (series printed as CSV)
+//! and time the three estimators behind them.
+
+use hiercode::figures::fig6;
+use hiercode::sim::{markov, montecarlo, SimParams};
+use hiercode::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::new("fig6").with_iters(5, 1);
+
+    // Regenerate the actual figure series (the deliverable).
+    if suite.selected("fig6a_series") {
+        let rows = fig6::run(5, 20_000, 42).expect("fig6a");
+        assert_eq!(rows.len(), 10);
+    }
+    if suite.selected("fig6b_series") {
+        let rows = fig6::run(300, 5_000, 42).expect("fig6b");
+        assert_eq!(rows.len(), 10);
+    }
+
+    // Time each estimator at representative points.
+    let small = SimParams::fig6(5, 5);
+    let large = SimParams::fig6(300, 5);
+    suite.bench("mc_e[t]_k1=5_10k_trials", || {
+        montecarlo::expected_latency(&small, 10_000, 1).unwrap().mean
+    });
+    suite.bench("mc_e[t]_k1=300_1k_trials", || {
+        montecarlo::expected_latency(&large, 1_000, 1).unwrap().mean
+    });
+    suite.bench("markov_lower_bound_k1=5", || {
+        markov::lower_bound(&small).unwrap()
+    });
+    suite.bench("markov_lower_bound_k1=300", || {
+        markov::lower_bound(&large).unwrap()
+    });
+    suite.finish();
+}

@@ -1,0 +1,25 @@
+//! Bench E3: regenerate Fig. 7 (E[T_exec] vs α for the four schemes)
+//! and time its components.
+
+use hiercode::figures::fig7;
+use hiercode::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::new("fig7").with_iters(5, 1);
+
+    if suite.selected("fig7_series") {
+        let rows = fig7::run(20_000, 42).expect("fig7");
+        // The paper's qualitative claims, re-checked at bench scale.
+        assert_eq!(rows.first().unwrap().winner, "polynomial");
+        assert_eq!(rows.last().unwrap().winner, "replication");
+        assert!(rows.iter().any(|r| r.winner == "hierarchical"));
+        assert!(rows.iter().all(|r| r.exec[1] < r.exec[2]),
+            "hierarchical must strictly beat product for all alpha");
+    }
+
+    let p = fig7::Fig7Params::default();
+    suite.bench("fig7_components_5k_trials", || {
+        fig7::components(&p, 5_000, 1).unwrap()
+    });
+    suite.finish();
+}

@@ -1,0 +1,63 @@
+//! Simulator performance: Monte-Carlo sampling rate, Markov-chain
+//! solver, event-driven engine — the machinery behind Fig. 6 — plus the
+//! straggler-model ablation (paper's Exp vs shifted-Exp vs Weibull).
+
+use hiercode::sim::straggler::StragglerModel;
+use hiercode::sim::{engine, markov, montecarlo, SimParams};
+use hiercode::util::bench::Suite;
+use hiercode::util::rng::Rng;
+
+fn main() {
+    let mut suite = Suite::new("simulator").with_iters(15, 3);
+    let p = SimParams::fig6(5, 5);
+    let big = SimParams::fig6(300, 5);
+
+    suite.bench("mc_sample_k1=5", || {
+        let mut rng = Rng::new(1);
+        let mut acc = 0.0;
+        for _ in 0..1_000 {
+            acc += montecarlo::sample_hierarchical(&p, &mut rng);
+        }
+        acc
+    });
+    suite.bench("mc_sample_k1=300", || {
+        let mut rng = Rng::new(1);
+        let mut acc = 0.0;
+        for _ in 0..100 {
+            acc += montecarlo::sample_hierarchical(&big, &mut rng);
+        }
+        acc
+    });
+    suite.bench("markov_chain_solve_3000_states", || {
+        markov::lower_bound(&big).unwrap()
+    });
+    suite.bench("event_engine_job_k1=5", || {
+        engine::expected_latency_event_driven(&p, 200, 1).unwrap().mean
+    });
+
+    // Ablation: E[T] under different straggler models (equal means).
+    if suite.selected("straggler_ablation") {
+        println!("# straggler ablation: E[T] at (10,5)x(10,5), equal-mean models");
+        println!("model,E[T]");
+        let models = [
+            ("exponential", StragglerModel::exp(10.0)),
+            (
+                "shifted_exp",
+                StragglerModel::ShiftedExponential { shift: 0.05, mu: 20.0 },
+            ),
+            (
+                "weibull_heavy",
+                StragglerModel::Weibull { shape: 0.5, scale: 0.05 },
+            ),
+            ("deterministic", StragglerModel::Deterministic { value: 0.1 }),
+        ];
+        let link = StragglerModel::exp(1.0);
+        for (name, wm) in models {
+            let est = montecarlo::estimate(20_000, 11, |rng| {
+                montecarlo::sample_hierarchical_with(&p, &wm, &link, rng)
+            });
+            println!("{name},{:.6}", est.mean);
+        }
+    }
+    suite.finish();
+}

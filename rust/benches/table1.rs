@@ -1,0 +1,19 @@
+//! Bench E4: regenerate Table I (computing time + decoding cost per
+//! scheme) and time the generation.
+
+use hiercode::figures::table1;
+use hiercode::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::new("table1").with_iters(3, 1);
+
+    if suite.selected("table1_rows") {
+        let rows = table1::run(20_000, 42).expect("table1");
+        assert_eq!(rows.len(), 4);
+    }
+
+    suite.bench("table1_generate_5k_trials", || {
+        table1::generate(800, 400, 40, 20, 10.0, 1.0, 2.0, 5_000, 1).unwrap()
+    });
+    suite.finish();
+}

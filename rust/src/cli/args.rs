@@ -1,0 +1,121 @@
+//! Tiny declarative argument parser: `--key value`, `--flag`,
+//! positionals.
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// `--key value` pairs.
+    pub options: HashMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+    /// Positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv slice. A `--key` followed by a non-`--` token is an
+    /// option; a `--key` followed by another `--key` (or nothing) is a
+    /// flag.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err(Error::InvalidParams("bare '--' not supported".into()));
+                }
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    args.options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    args.flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                args.positional.push(tok.clone());
+                i += 1;
+            }
+        }
+        Ok(args)
+    }
+
+    /// String option.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// usize option with a parse error naming the key.
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<usize>().map(Some).map_err(|_| {
+                Error::InvalidParams(format!("--{key} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    /// f64 option.
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<f64>().map(Some).map_err(|_| {
+                Error::InvalidParams(format!("--{key} expects a number, got '{v}'"))
+            }),
+        }
+    }
+
+    /// Flag presence.
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&sv(&[
+            "fig6a", "--trials", "100", "--verbose", "--mu1", "2.5", "extra",
+        ]))
+        .unwrap();
+        assert_eq!(a.positional, vec!["fig6a", "extra"]);
+        assert_eq!(a.get_usize("trials").unwrap(), Some(100));
+        assert_eq!(a.get_f64("mu1").unwrap(), Some(2.5));
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&sv(&["--trials", "abc"])).unwrap();
+        assert!(a.get_usize("trials").is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&sv(&["--no-pjrt"])).unwrap();
+        assert!(a.has_flag("no-pjrt"));
+    }
+
+    #[test]
+    fn negative_number_is_value() {
+        // "--mu1 -2.5" would read -2.5 as a flag (starts with --? no,
+        // single dash) — ensure single-dash values are accepted.
+        let a = Args::parse(&sv(&["--shift", "-2.5"])).unwrap();
+        assert_eq!(a.get_f64("shift").unwrap(), Some(-2.5));
+    }
+}

@@ -1,0 +1,234 @@
+//! Command-line launcher (hand-rolled; `clap` is unavailable offline).
+//!
+//! ```text
+//! hiercode figures <fig6a|fig6b|fig7|table1|decode-scaling|all> [--trials N] [--seed S]
+//! hiercode sim     --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R] [--trials N]
+//! hiercode bounds  --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R]
+//! hiercode serve   [--config FILE] [--requests N] [--no-pjrt]
+//! hiercode help
+//! ```
+
+pub mod args;
+
+use crate::sim::{bounds, markov, montecarlo, SimParams};
+use args::Args;
+
+const USAGE: &str = "\
+hiercode — Hierarchical Coding for Distributed Computing (Park et al., 2018)
+
+USAGE:
+  hiercode figures <fig6a|fig6b|fig7|table1|decode-scaling|all>
+                   [--trials N] [--seed S]
+  hiercode sim     --k1 K1 --k2 K2 [--n1 N1] [--n2 N2]
+                   [--mu1 R] [--mu2 R] [--trials N] [--seed S]
+  hiercode bounds  --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R]
+  hiercode serve   [--config FILE] [--requests N] [--no-pjrt]
+  hiercode help
+
+`figures` regenerates the paper's evaluation artifacts (CSV on stdout).
+`sim` Monte-Carlo-estimates E[T]; `bounds` prints L / Lemma 2 / Thm 2.
+`serve` launches the in-process cluster and runs a request workload.
+";
+
+/// CLI entry point (called from `main.rs`).
+pub fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    });
+}
+
+/// Run a parsed command line (testable).
+pub fn run(argv: &[String]) -> crate::Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "figures" => figures_cmd(&args),
+        "sim" => sim_cmd(&args),
+        "bounds" => bounds_cmd(&args),
+        "serve" => serve_cmd(&args),
+        other => Err(crate::Error::InvalidParams(format!(
+            "unknown command '{other}' (try `hiercode help`)"
+        ))),
+    }
+}
+
+fn sim_params(args: &Args) -> crate::Result<SimParams> {
+    let k1 = args.get_usize("k1")?.ok_or_else(|| {
+        crate::Error::InvalidParams("--k1 is required".into())
+    })?;
+    let k2 = args.get_usize("k2")?.ok_or_else(|| {
+        crate::Error::InvalidParams("--k2 is required".into())
+    })?;
+    let p = SimParams {
+        n1: args.get_usize("n1")?.unwrap_or(2 * k1),
+        k1,
+        n2: args.get_usize("n2")?.unwrap_or(10),
+        k2,
+        mu1: args.get_f64("mu1")?.unwrap_or(10.0),
+        mu2: args.get_f64("mu2")?.unwrap_or(1.0),
+    };
+    p.validate()?;
+    Ok(p)
+}
+
+fn figures_cmd(args: &Args) -> crate::Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let trials = args.get_usize("trials")?.unwrap_or(20_000);
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    match which {
+        "fig6a" => {
+            crate::figures::fig6::run(5, trials, seed)?;
+        }
+        "fig6b" => {
+            crate::figures::fig6::run(300, trials, seed)?;
+        }
+        "fig7" => {
+            crate::figures::fig7::run(trials, seed)?;
+        }
+        "table1" => {
+            crate::figures::table1::run(trials, seed)?;
+        }
+        "decode-scaling" => {
+            crate::figures::decode_scaling::run(seed)?;
+        }
+        "all" => {
+            crate::figures::fig6::run(5, trials, seed)?;
+            println!();
+            crate::figures::fig6::run(300, trials, seed)?;
+            println!();
+            crate::figures::fig7::run(trials, seed)?;
+            println!();
+            crate::figures::table1::run(trials, seed)?;
+            println!();
+            crate::figures::decode_scaling::run(seed)?;
+        }
+        other => {
+            return Err(crate::Error::InvalidParams(format!(
+                "unknown figure '{other}'"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn sim_cmd(args: &Args) -> crate::Result<()> {
+    let p = sim_params(args)?;
+    let trials = args.get_usize("trials")?.unwrap_or(100_000);
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let est = montecarlo::expected_latency(&p, trials, seed)?;
+    println!(
+        "E[T] = {:.6} ± {:.6} (95% CI, {} trials)  [({},{})x({},{}), mu1={}, mu2={}]",
+        est.mean, est.ci95, trials, p.n1, p.k1, p.n2, p.k2, p.mu1, p.mu2
+    );
+    Ok(())
+}
+
+fn bounds_cmd(args: &Args) -> crate::Result<()> {
+    let p = sim_params(args)?;
+    println!("lower bound L (Thm 1 / Lemma 1): {:.6}", markov::lower_bound(&p)?);
+    println!("upper bound (Lemma 2):           {:.6}", bounds::lemma2_upper(&p)?);
+    match bounds::theorem2_upper(&p) {
+        Ok(u) => println!("upper bound (Thm 2, asymptotic): {u:.6}"),
+        Err(_) => println!("upper bound (Thm 2): n/a (needs n1 > k1)"),
+    }
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> crate::Result<()> {
+    use crate::config::schema::ClusterConfig;
+    use crate::coordinator::Cluster;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    let mut config = match args.get_str("config") {
+        Some(path) => ClusterConfig::from_file(path)?,
+        None => ClusterConfig::demo(4, 2, 4, 2),
+    };
+    if args.has_flag("no-pjrt") {
+        config.runtime.use_pjrt = false;
+    }
+    let requests = args.get_usize("requests")?.unwrap_or(32);
+    // Demo matrix sized to the code and the AOT'd shard shapes:
+    // m = 1024, d = 128 → shard 256×128 (worker_matvec_r256_d128_*).
+    let (m, d) = (1024, 128);
+    let mut rng = Rng::new(config.seed);
+    let a = Matrix::from_fn(m, d, |_, _| rng.uniform(-1.0, 1.0));
+    let cluster = Cluster::launch(&config, &a)?;
+    println!(
+        "cluster up: ({},{})x({},{}), matrix {m}x{d}, pjrt={}",
+        config.code.n1, config.code.k1, config.code.n2, config.code.k2,
+        config.runtime.use_pjrt
+    );
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .map(|_| {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            cluster.submit(x).expect("submit")
+        })
+        .collect();
+    let mut ok = 0;
+    for h in handles {
+        if h.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{ok}/{requests} requests ok in {wall:.3}s ({:.1} req/s)", requests as f64 / wall);
+    println!("{}", cluster.metrics());
+    cluster.shutdown();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn help_runs() {
+        run(&sv(&["help"])).unwrap();
+        run(&[]).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn sim_requires_k1_k2() {
+        assert!(run(&sv(&["sim"])).is_err());
+        assert!(run(&sv(&["sim", "--k1", "2"])).is_err());
+        run(&sv(&["sim", "--k1", "2", "--k2", "2", "--trials", "500"])).unwrap();
+    }
+
+    #[test]
+    fn bounds_works() {
+        run(&sv(&["bounds", "--k1", "5", "--k2", "5"])).unwrap();
+    }
+
+    #[test]
+    fn figures_rejects_unknown() {
+        assert!(run(&sv(&["figures", "fig9"])).is_err());
+    }
+
+    #[test]
+    fn serve_native_smoke() {
+        run(&sv(&["serve", "--no-pjrt", "--requests", "4"])).unwrap();
+    }
+}

@@ -1,0 +1,237 @@
+//! §IV / Table I cost models: decoding cost `T_dec` and computing time
+//! `T_comp` for every scheme, plus the total-execution-time tradeoff
+//! `T_exec = T_comp + α · T_dec` behind Fig. 7.
+//!
+//! The decoding-cost models treat the `O(·)` expressions of Table I as
+//! exact (unit constant) — matching how the paper evaluates Fig. 7 —
+//! while [`measured`] computes real flop counts from the implemented
+//! decoders so the *shape* of the model (who is cheaper, by what order)
+//! can be validated empirically (bench `decode_scaling`).
+
+use crate::util::harmonic::{expected_kth_of_n_exponential, harmonic};
+
+/// The four schemes of Table I.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// `(n, k)` replication (uncoded).
+    Replication,
+    /// The paper's `(n1,k1)×(n2,k2)` hierarchical code.
+    Hierarchical,
+    /// `(n1,k1)×(n2,k2)` product code.
+    Product,
+    /// `(n, k)` polynomial code.
+    Polynomial,
+}
+
+impl Scheme {
+    /// All schemes, Fig. 7's display order.
+    pub const ALL: [Scheme; 4] = [
+        Scheme::Replication,
+        Scheme::Hierarchical,
+        Scheme::Product,
+        Scheme::Polynomial,
+    ];
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Replication => "replication",
+            Scheme::Hierarchical => "hierarchical",
+            Scheme::Product => "product",
+            Scheme::Polynomial => "polynomial",
+        }
+    }
+}
+
+/// Decoding cost `T_dec` per Table I (unit-constant `O(·)`):
+///
+/// * replication: `0`
+/// * hierarchical: `k1^β + k1·k2^β` — one inner decode's worth
+///   (intra-group decodes run in parallel on the submasters, so only one
+///   `k1^β` is on the critical path) plus the outer decode over `k1`
+///   result sub-blocks.
+/// * product: `k1·k2^β + k2·k1^β` — all row and column decodes land on
+///   the master.
+/// * polynomial: `k^β = (k1·k2)^β = k1^β·k2^β`.
+pub fn decoding_cost(scheme: Scheme, k1: f64, k2: f64, beta: f64) -> f64 {
+    match scheme {
+        Scheme::Replication => 0.0,
+        Scheme::Hierarchical => k1.powf(beta) + k1 * k2.powf(beta),
+        Scheme::Product => k1 * k2.powf(beta) + k2 * k1.powf(beta),
+        Scheme::Polynomial => (k1 * k2).powf(beta),
+    }
+}
+
+/// Computing time `T_comp` per Table I for the **non-hierarchical**
+/// schemes, where every worker ships its result to the master over a
+/// cross-rack (ToR) link of rate `mu2`:
+///
+/// * replication: `k·H_k / (n·µ2)` — each block completes at the min of
+///   its `n/k` replicas (`Exp(n·µ2/k)`), all `k` blocks must finish.
+/// * product: `(1/µ2)·log( (√(n/k) + ⁴√(n/k)) / (√(n/k) − 1) )`
+///   (Lee–Suh–Ramchandran's asymptotic for the `n/k → const` regime).
+/// * polynomial: `(H_n − H_{n−k}) / µ2` — k-th order statistic of n.
+///
+/// The hierarchical scheme's `T_comp = E[T]` has no closed form; obtain
+/// it from [`crate::sim::montecarlo`] or bound it via
+/// [`crate::sim::markov`] / [`crate::sim::bounds`].
+pub fn computing_time(scheme: Scheme, n: usize, k: usize, mu2: f64) -> Option<f64> {
+    assert!(k >= 1 && k <= n && mu2 > 0.0);
+    match scheme {
+        Scheme::Replication => {
+            Some(k as f64 * harmonic(k) / (n as f64 * mu2))
+        }
+        Scheme::Product => {
+            let ratio = n as f64 / k as f64;
+            if ratio <= 1.0 {
+                return None; // formula requires redundancy n > k
+            }
+            let s = ratio.sqrt();
+            let q = ratio.powf(0.25);
+            Some((1.0 / mu2) * ((s + q) / (s - 1.0)).ln())
+        }
+        Scheme::Polynomial => Some(expected_kth_of_n_exponential(k, n, mu2)),
+        Scheme::Hierarchical => None, // needs simulation / bounds
+    }
+}
+
+/// Total execution time `T_exec = T_comp + α·T_dec` (§IV). `t_comp` for
+/// the hierarchical scheme comes from simulation; for the others from
+/// [`computing_time`].
+pub fn execution_time(t_comp: f64, alpha: f64, t_dec: f64) -> f64 {
+    t_comp + alpha * t_dec
+}
+
+/// Measured decode flops from the real implementations (used by the
+/// `decode_scaling` bench to validate the §IV models).
+pub mod measured {
+    use crate::coding::{
+        compute_all_products, CodedScheme, HierarchicalCode, PolynomialCode, ProductCode,
+    };
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+    use crate::Result;
+
+    /// Decode-flops for one full decode of each scheme at parameters
+    /// `(n1, k1, n2, k2)` with `rows × 1` data, erasing all parity-free
+    /// shortcuts by dropping the first `drop` workers.
+    pub fn decode_flops(
+        n1: usize,
+        k1: usize,
+        n2: usize,
+        k2: usize,
+        rows: usize,
+        drop: usize,
+        seed: u64,
+    ) -> Result<(u64, u64, u64)> {
+        let mut r = Rng::new(seed);
+        let a = Matrix::from_fn(rows, 4, |_, _| r.uniform(-1.0, 1.0));
+        let x = Matrix::from_fn(4, 1, |_, _| r.uniform(-1.0, 1.0));
+
+        let hier = HierarchicalCode::homogeneous(n1, k1, n2, k2)?;
+        let prod = ProductCode::new(n1, k1, n2, k2)?;
+        let poly = PolynomialCode::new(n1 * n2, k1 * k2)?;
+
+        let run = |code: &dyn CodedScheme| -> Result<u64> {
+            let shards = code.encode(&a)?;
+            let all = compute_all_products(&shards, &x);
+            // Drop the first `drop` workers (forces parity decodes).
+            let subset: Vec<_> = all.into_iter().skip(drop).collect();
+            Ok(code.decode(&subset, rows)?.flops)
+        };
+        Ok((run(&hier)?, run(&prod)?, run(&poly)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replication_decodes_free() {
+        assert_eq!(decoding_cost(Scheme::Replication, 400.0, 20.0, 2.0), 0.0);
+    }
+
+    #[test]
+    fn table1_ordering_at_paper_params() {
+        // (n1,k1)=(800,400), (n2,k2)=(40,20), β=2 — §IV's Fig. 7 setting.
+        let (k1, k2, beta) = (400.0, 20.0, 2.0);
+        let h = decoding_cost(Scheme::Hierarchical, k1, k2, beta);
+        let p = decoding_cost(Scheme::Product, k1, k2, beta);
+        let y = decoding_cost(Scheme::Polynomial, k1, k2, beta);
+        assert!(h < p, "hier {h} must beat product {p}");
+        assert!(p < y, "product {p} must beat polynomial {y}");
+        // Hier = k1² + k1·k2² = 160000 + 160000 = 320000.
+        assert!((h - 320_000.0).abs() < 1e-6);
+        // Product = k1·k2² + k2·k1² = 160000 + 3.2e6.
+        assert!((p - 3_360_000.0).abs() < 1e-6);
+        // Poly = (k1·k2)² = 64e6.
+        assert!((y - 64_000_000.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sec4_gain_grows_with_p() {
+        // §IV: with k1 = k2^p, hier/product gain increases in p.
+        let beta = 2.0;
+        let k2: f64 = 4.0;
+        let mut prev_gain = 0.0;
+        for p in [1.0, 1.5, 2.0, 2.5] {
+            let k1 = k2.powf(p);
+            let h = decoding_cost(Scheme::Hierarchical, k1, k2, beta);
+            let pr = decoding_cost(Scheme::Product, k1, k2, beta);
+            let gain = pr / h;
+            assert!(
+                gain > prev_gain,
+                "gain must grow with p: p={p} gain={gain} prev={prev_gain}"
+            );
+            prev_gain = gain;
+        }
+    }
+
+    #[test]
+    fn sec4_example_orders() {
+        // β=2, k1=k2²: hier O(k2⁴) vs product O(k2⁵).
+        let beta = 2.0;
+        for k2 in [4.0, 8.0, 16.0] {
+            let k1 = k2 * k2;
+            let h = decoding_cost(Scheme::Hierarchical, k1, k2, beta);
+            let p = decoding_cost(Scheme::Product, k1, k2, beta);
+            // h = k2⁴ + k2⁴ = 2·k2⁴; p = k2⁴ + k2⁵.
+            assert!((h - 2.0 * k2.powi(4)).abs() < 1e-6);
+            assert!((p - (k2.powi(4) + k2.powi(5))).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn computing_time_formulas() {
+        let (n, k, mu2) = (8000, 8000 / 2, 1.0);
+        // Replication.
+        let rep = computing_time(Scheme::Replication, n, k, mu2).unwrap();
+        assert!(rep > 0.0 && rep.is_finite());
+        // Polynomial = (H_n - H_{n-k})/mu2 ≈ log(n/(n-k)) = log 2.
+        let poly = computing_time(Scheme::Polynomial, n, k, mu2).unwrap();
+        assert!((poly - (2.0f64).ln()).abs() < 1e-3, "poly {poly}");
+        // Product formula finite for n > k.
+        let prod = computing_time(Scheme::Product, n, k, mu2).unwrap();
+        assert!(prod > 0.0 && prod.is_finite());
+        // Hierarchical has no closed form.
+        assert!(computing_time(Scheme::Hierarchical, n, k, mu2).is_none());
+        // Product undefined at n == k.
+        assert!(computing_time(Scheme::Product, 10, 10, 1.0).is_none());
+    }
+
+    #[test]
+    fn measured_flops_respect_model_ordering() {
+        // Small but parity-forcing decode: hier < product < polynomial.
+        let (h, p, y) = measured::decode_flops(6, 3, 4, 2, 24, 3, 7).unwrap();
+        assert!(h > 0 && p > 0 && y > 0);
+        assert!(h < y, "hier {h} must beat polynomial {y}");
+        assert!(p < y, "product {p} must beat polynomial {y}");
+    }
+
+    #[test]
+    fn execution_time_linear_in_alpha() {
+        let t = execution_time(2.0, 0.5, 10.0);
+        assert!((t - 7.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,602 @@
+//! The paper's hierarchical code: `(n1, k1) × (n2, k2)` concatenated
+//! MDS coding with **parallel two-level decoding** (§II-A, §IV).
+//!
+//! Encoding (Fig. 2): split `A` into `k2` blocks, apply the outer
+//! `(n2, k2)` MDS code to get `Ã_1..Ã_{n2}` (one per group / rack);
+//! split each `Ã_i` into `k1^{(i)}` sub-blocks and apply the inner
+//! `(n1^{(i)}, k1^{(i)})` MDS code to get `Â_{i,1}..Â_{i,n1}` (one per
+//! worker). Worker `w(i,j)` computes `Â_{i,j}·x`.
+//!
+//! Decoding: submaster `i` recovers `Ã_i·x` from any `k1` workers of its
+//! group (these `n2` decodes are independent → **parallel**), and the
+//! master recovers `A·x` from any `k2` groups. Total decode cost
+//! `O(k1^β + k1·k2^β)` versus the product code's
+//! `O(k1·k2^β + k2·k1^β)` (§IV, Table I).
+//!
+//! Heterogeneous groups (`n1^{(i)}, k1^{(i)}` varying per group, Fig. 2)
+//! are supported; the homogeneous `(n1,k1)×(n2,k2)` constructor is the
+//! common case used throughout the evaluation.
+
+use crate::coding::{CodedScheme, DecodeOutput, MdsCode, WorkerResult};
+use crate::linalg::Matrix;
+use crate::util::threadpool::ThreadPool;
+use crate::{Error, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Parameters of a hierarchical code.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HierarchicalParams {
+    /// Inner code length per group: `n1^{(i)}` for each of the `n2` groups.
+    pub n1: Vec<usize>,
+    /// Inner code dimension per group: `k1^{(i)}`.
+    pub k1: Vec<usize>,
+    /// Outer code length (number of groups).
+    pub n2: usize,
+    /// Outer code dimension.
+    pub k2: usize,
+}
+
+impl HierarchicalParams {
+    /// Homogeneous `(n1, k1) × (n2, k2)` parameters.
+    pub fn homogeneous(n1: usize, k1: usize, n2: usize, k2: usize) -> Self {
+        Self {
+            n1: vec![n1; n2],
+            k1: vec![k1; n2],
+            n2,
+            k2,
+        }
+    }
+
+    /// Total number of workers `Σ_i n1^{(i)}`.
+    pub fn total_workers(&self) -> usize {
+        self.n1.iter().sum()
+    }
+
+    /// Validate consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.n2 == 0 || self.k2 == 0 || self.k2 > self.n2 {
+            return Err(Error::InvalidParams(format!(
+                "outer code: need 1 <= k2 <= n2, got ({}, {})",
+                self.n2, self.k2
+            )));
+        }
+        if self.n1.len() != self.n2 || self.k1.len() != self.n2 {
+            return Err(Error::InvalidParams(format!(
+                "per-group params: expected {} entries, got n1:{} k1:{}",
+                self.n2,
+                self.n1.len(),
+                self.k1.len()
+            )));
+        }
+        for i in 0..self.n2 {
+            if self.k1[i] == 0 || self.k1[i] > self.n1[i] {
+                return Err(Error::InvalidParams(format!(
+                    "group {i}: need 1 <= k1 <= n1, got ({}, {})",
+                    self.n1[i], self.k1[i]
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Identifies worker `w(i, j)`: group `i`, in-group index `j`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WorkerId {
+    /// Group (rack) index `i ∈ [n2]`.
+    pub group: usize,
+    /// Worker index within the group, `j ∈ [n1^{(i)}]`.
+    pub index: usize,
+}
+
+/// The `(n1, k1) × (n2, k2)` hierarchical code.
+pub struct HierarchicalCode {
+    params: HierarchicalParams,
+    outer: MdsCode,
+    inner: Vec<MdsCode>,
+    /// Offset of each group's first worker in the flat indexing.
+    offsets: Vec<usize>,
+    /// Optional pool for parallel intra-group decoding.
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl HierarchicalCode {
+    /// Build from parameters (validates, constructs all generators).
+    pub fn new(params: HierarchicalParams) -> Result<Self> {
+        params.validate()?;
+        let outer = MdsCode::new(params.n2, params.k2)?;
+        let inner = (0..params.n2)
+            .map(|i| MdsCode::new(params.n1[i], params.k1[i]))
+            .collect::<Result<Vec<_>>>()?;
+        let mut offsets = Vec::with_capacity(params.n2);
+        let mut acc = 0;
+        for i in 0..params.n2 {
+            offsets.push(acc);
+            acc += params.n1[i];
+        }
+        Ok(Self {
+            params,
+            outer,
+            inner,
+            offsets,
+            pool: None,
+        })
+    }
+
+    /// Homogeneous constructor.
+    pub fn homogeneous(n1: usize, k1: usize, n2: usize, k2: usize) -> Result<Self> {
+        Self::new(HierarchicalParams::homogeneous(n1, k1, n2, k2))
+    }
+
+    /// Attach a thread pool: intra-group decodes then run in parallel
+    /// (the paper's §IV parallel-decoding argument).
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Code parameters.
+    pub fn params(&self) -> &HierarchicalParams {
+        &self.params
+    }
+
+    /// Rows of `A` must divide by `k2 · lcm-ish`: we require
+    /// `k2 · k1^{(i)}` for every group; for the homogeneous case this is
+    /// `k1·k2`.
+    pub fn required_row_divisor(&self) -> usize {
+        let mut d = self.params.k2;
+        for &k1 in &self.params.k1 {
+            d = lcm(d, self.params.k2 * k1);
+        }
+        d
+    }
+
+    /// Flat worker index of `w(i, j)`.
+    pub fn flat_index(&self, id: WorkerId) -> usize {
+        self.offsets[id.group] + id.index
+    }
+
+    /// Inverse of [`Self::flat_index`].
+    pub fn worker_id(&self, flat: usize) -> WorkerId {
+        let mut group = 0;
+        while group + 1 < self.params.n2 && self.offsets[group + 1] <= flat {
+            group += 1;
+        }
+        WorkerId {
+            group,
+            index: flat - self.offsets[group],
+        }
+    }
+
+    /// Encode `A` hierarchically: returns `shards[i][j] = Â_{i,j}`.
+    pub fn encode_grouped(&self, a: &Matrix) -> Result<Vec<Vec<Matrix>>> {
+        // Outer code: A = [A_1; ...; A_{k2}] → Ã_1..Ã_{n2}.
+        let blocks = a.split_rows(self.params.k2)?;
+        let coded_groups = self.outer.encode_blocks(&blocks)?;
+        // Inner code per group: Ã_i = [Ã_{i,1}; ...] → Â_{i,1}..Â_{i,n1}.
+        coded_groups
+            .iter()
+            .enumerate()
+            .map(|(i, g)| {
+                let sub = g.split_rows(self.params.k1[i])?;
+                self.inner[i].encode_blocks(&sub)
+            })
+            .collect()
+    }
+
+    /// Intra-group decode (what submaster `i` runs): recover `Ã_i·X`
+    /// from any `k1^{(i)}` worker results of group `i`, given as
+    /// `(in-group index, product)` pairs. Returns the stacked group
+    /// result and decode flops.
+    pub fn decode_group(
+        &self,
+        group: usize,
+        results: &[(usize, Matrix)],
+    ) -> Result<(Matrix, u64)> {
+        if group >= self.params.n2 {
+            return Err(Error::InvalidParams(format!(
+                "group {group} out of n2={}",
+                self.params.n2
+            )));
+        }
+        let (blocks, flops) = self.inner[group].decode_blocks(results)?;
+        Ok((Matrix::vstack(&blocks)?, flops))
+    }
+
+    /// Cross-group decode (what the master runs): recover `A·X` from any
+    /// `k2` group results given as `(group index, Ã_i·X)` pairs.
+    pub fn decode_cross(&self, groups: &[(usize, Matrix)]) -> Result<(Matrix, u64)> {
+        let (blocks, flops) = self.outer.decode_blocks(groups)?;
+        Ok((Matrix::vstack(&blocks)?, flops))
+    }
+
+    /// Full two-level decode from per-group worker results:
+    /// `per_group[i]` holds `(in-group index, product)` pairs for group
+    /// `i` (may be empty / insufficient for straggling groups). Runs the
+    /// `n2` intra-group decodes in parallel when a pool is attached.
+    pub fn decode_hierarchical(
+        &self,
+        per_group: &[Vec<(usize, Matrix)>],
+    ) -> Result<DecodeOutput> {
+        let t0 = Instant::now();
+        if per_group.len() != self.params.n2 {
+            return Err(Error::InvalidParams(format!(
+                "expected {} groups of results, got {}",
+                self.params.n2,
+                per_group.len()
+            )));
+        }
+        // Groups that have enough workers to decode.
+        let ready: Vec<usize> = (0..self.params.n2)
+            .filter(|&i| per_group[i].len() >= self.params.k1[i])
+            .collect();
+        if ready.len() < self.params.k2 {
+            return Err(Error::Insufficient {
+                needed: self.params.k2,
+                got: ready.len(),
+            });
+        }
+        // Only the k2 first-ready groups need decoding (the master uses
+        // the k2 fastest; decoding more wastes exactly the flops §IV
+        // counts).
+        let used: Vec<usize> = ready[..self.params.k2].to_vec();
+
+        // Stage 1: parallel intra-group decodes.
+        let stage1: Vec<Result<(usize, Matrix, u64)>> = match &self.pool {
+            Some(pool) => {
+                // Clone the per-group inputs into owned tasks.
+                let tasks: Vec<(usize, Vec<(usize, Matrix)>, MdsCode, usize)> = used
+                    .iter()
+                    .map(|&i| {
+                        (
+                            i,
+                            per_group[i].clone(),
+                            self.inner[i].clone(),
+                            self.params.k1[i],
+                        )
+                    })
+                    .collect();
+                pool.map(tasks, |(i, results, code, _k1)| {
+                    let (blocks, flops) = code.decode_blocks(&results)?;
+                    Ok((i, Matrix::vstack(&blocks)?, flops))
+                })
+            }
+            None => used
+                .iter()
+                .map(|&i| {
+                    let (m, f) = self.decode_group(i, &per_group[i])?;
+                    Ok((i, m, f))
+                })
+                .collect(),
+        };
+        let mut group_results = Vec::with_capacity(self.params.k2);
+        let mut flops = 0u64;
+        for s in stage1 {
+            let (i, m, f) = s?;
+            flops += f;
+            group_results.push((i, m));
+        }
+        // Stage 2: cross-group decode.
+        let (result, f2) = self.decode_cross(&group_results)?;
+        flops += f2;
+        Ok(DecodeOutput {
+            result,
+            flops,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Group results by flat worker index into the per-group layout
+    /// [`Self::decode_hierarchical`] expects.
+    pub fn group_results(&self, results: &[WorkerResult]) -> Vec<Vec<(usize, Matrix)>> {
+        let mut per_group: Vec<Vec<(usize, Matrix)>> =
+            (0..self.params.n2).map(|_| Vec::new()).collect();
+        for r in results {
+            if r.shard >= self.params.total_workers() {
+                continue;
+            }
+            let id = self.worker_id(r.shard);
+            per_group[id.group].push((id.index, r.data.clone()));
+        }
+        per_group
+    }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+impl CodedScheme for HierarchicalCode {
+    fn name(&self) -> String {
+        let p = &self.params;
+        if p.n1.windows(2).all(|w| w[0] == w[1]) && p.k1.windows(2).all(|w| w[0] == w[1]) {
+            format!("hier({},{})x({},{})", p.n1[0], p.k1[0], p.n2, p.k2)
+        } else {
+            format!("hier(hetero,n2={},k2={})", p.n2, p.k2)
+        }
+    }
+
+    fn num_workers(&self) -> usize {
+        self.params.total_workers()
+    }
+
+    fn num_data_blocks(&self) -> usize {
+        // k2 groups × k1 sub-blocks (homogeneous notion; heterogeneous
+        // groups report the outer dimension only via k2 · min k1).
+        self.params.k2 * self.params.k1.iter().min().copied().unwrap_or(1)
+    }
+
+    fn row_divisor(&self) -> usize {
+        self.required_row_divisor()
+    }
+
+    fn encode(&self, a: &Matrix) -> Result<Vec<Matrix>> {
+        Ok(self.encode_grouped(a)?.into_iter().flatten().collect())
+    }
+
+    fn can_decode(&self, present: &[usize]) -> bool {
+        let mut per_group = vec![0usize; self.params.n2];
+        let mut seen = std::collections::HashSet::new();
+        for &f in present {
+            if f < self.params.total_workers() && seen.insert(f) {
+                per_group[self.worker_id(f).group] += 1;
+            }
+        }
+        let ready = (0..self.params.n2)
+            .filter(|&i| per_group[i] >= self.params.k1[i])
+            .count();
+        ready >= self.params.k2
+    }
+
+    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput> {
+        let per_group = self.group_results(results);
+        let out = self.decode_hierarchical(&per_group)?;
+        if out.result.rows() != out_rows {
+            return Err(Error::InvalidParams(format!(
+                "decoded {} rows, expected {out_rows}",
+                out.result.rows()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{compute_all_products, select_results};
+    use crate::linalg::ops;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| r.uniform(-1.0, 1.0))
+    }
+
+    /// The paper's Fig. 3 toy example: (3,2) × (3,2).
+    #[test]
+    fn fig3_toy_example_structure() {
+        let code = HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap();
+        let mut r = Rng::new(1);
+        let a = random_matrix(&mut r, 8, 3); // k1*k2 = 4 | 8
+        let shards = code.encode_grouped(&a).unwrap();
+        assert_eq!(shards.len(), 3);
+        assert!(shards.iter().all(|g| g.len() == 3));
+        // Outer structure: group 3's Ã_3 = g·[Ã_1; Ã_2] with g the outer
+        // generator's parity row (Fig. 3 uses g = (1,1); our systematic
+        // generator draws g randomly — the *structure* is identical:
+        // Â_{3,j} = g0·Â_{1,j} + g1·Â_{2,j}).
+        let outer_g = crate::linalg::vandermonde::systematic_mds(3, 2).unwrap();
+        let parity = outer_g.row(2);
+        let combo = {
+            let mut m = Matrix::zeros(shards[0][0].rows(), shards[0][0].cols());
+            ops::axpy(parity[0], shards[0][0].data(), m.data_mut());
+            ops::axpy(parity[1], shards[1][0].data(), m.data_mut());
+            m
+        };
+        assert!(
+            shards[2][0].max_abs_diff(&combo) < 1e-12,
+            "parity group shard must be the generator combination of systematic group shards"
+        );
+        // Inner structure: Â_{i,3} = h0·Â_{i,1} + h1·Â_{i,2} with h the
+        // inner parity row.
+        let inner_g = crate::linalg::vandermonde::systematic_mds(3, 2).unwrap();
+        let h = inner_g.row(2);
+        for i in 0..3 {
+            let mut s = Matrix::zeros(shards[i][0].rows(), shards[i][0].cols());
+            ops::axpy(h[0], shards[i][0].data(), s.data_mut());
+            ops::axpy(h[1], shards[i][1].data(), s.data_mut());
+            assert!(shards[i][2].max_abs_diff(&s) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn decode_from_fastest_k1_of_k2_groups() {
+        let code = HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap();
+        let mut r = Rng::new(2);
+        let a = random_matrix(&mut r, 8, 4);
+        let x = random_matrix(&mut r, 4, 1);
+        let expect = ops::matmul(&a, &x);
+        let shards: Vec<Matrix> = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        // Use parity-heavy subsets: groups 1 and 2 (0-indexed 1, 2),
+        // workers 1,2 of each (parity worker included).
+        let picks = [
+            code.flat_index(WorkerId { group: 1, index: 1 }),
+            code.flat_index(WorkerId { group: 1, index: 2 }),
+            code.flat_index(WorkerId { group: 2, index: 0 }),
+            code.flat_index(WorkerId { group: 2, index: 2 }),
+        ];
+        let out = code.decode(&select_results(&all, &picks), 8).unwrap();
+        assert!(out.result.max_abs_diff(&expect) < 1e-8);
+    }
+
+    #[test]
+    fn insufficient_groups_rejected() {
+        let code = HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap();
+        let mut r = Rng::new(3);
+        let a = random_matrix(&mut r, 8, 2);
+        let x = random_matrix(&mut r, 2, 1);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        // Only one group has ≥ k1 workers.
+        let picks = [0usize, 1, 3]; // group 0: 2 workers; group 1: 1 worker
+        let err = code.decode(&select_results(&all, &picks), 8);
+        assert!(matches!(err, Err(Error::Insufficient { needed: 2, got: 1 })));
+    }
+
+    #[test]
+    fn heterogeneous_groups_roundtrip() {
+        let params = HierarchicalParams {
+            n1: vec![4, 3, 5],
+            k1: vec![2, 2, 3],
+            n2: 3,
+            k2: 2,
+        };
+        let code = HierarchicalCode::new(params).unwrap();
+        let mut r = Rng::new(4);
+        let rows = code.required_row_divisor();
+        let a = random_matrix(&mut r, rows, 3);
+        let x = random_matrix(&mut r, 3, 2);
+        let expect = ops::matmul(&a, &x);
+        let grouped = code.encode_grouped(&a).unwrap();
+        assert_eq!(grouped[0].len(), 4);
+        assert_eq!(grouped[1].len(), 3);
+        assert_eq!(grouped[2].len(), 5);
+        // Decode from groups 0 (workers 2,3) and 2 (workers 0,2,4).
+        let per_group = vec![
+            vec![
+                (2usize, grouped[0][2].clone()),
+                (3usize, grouped[0][3].clone()),
+            ]
+            .into_iter()
+            .map(|(j, s)| (j, ops::matmul(&s, &x)))
+            .collect::<Vec<_>>(),
+            vec![],
+            vec![
+                (0usize, grouped[2][0].clone()),
+                (2usize, grouped[2][2].clone()),
+                (4usize, grouped[2][4].clone()),
+            ]
+            .into_iter()
+            .map(|(j, s)| (j, ops::matmul(&s, &x)))
+            .collect::<Vec<_>>(),
+        ];
+        let out = code.decode_hierarchical(&per_group).unwrap();
+        assert!(out.result.max_abs_diff(&expect) < 1e-8);
+    }
+
+    #[test]
+    fn parallel_pool_decode_matches_serial() {
+        let mut r = Rng::new(5);
+        let a = random_matrix(&mut r, 24, 6);
+        let x = random_matrix(&mut r, 6, 2);
+        let serial = HierarchicalCode::homogeneous(4, 2, 4, 3).unwrap();
+        let pool = Arc::new(ThreadPool::new(4));
+        let parallel = HierarchicalCode::homogeneous(4, 2, 4, 3)
+            .unwrap()
+            .with_pool(pool);
+        let shards = serial.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        // groups 0,1,2 each contribute workers {1,3}; group 3 straggles.
+        let picks: Vec<usize> = (0..3)
+            .flat_map(|g| {
+                [
+                    serial.flat_index(WorkerId { group: g, index: 1 }),
+                    serial.flat_index(WorkerId { group: g, index: 3 }),
+                ]
+            })
+            .collect();
+        let o1 = serial.decode(&select_results(&all, &picks), 24).unwrap();
+        let o2 = parallel.decode(&select_results(&all, &picks), 24).unwrap();
+        assert!(o1.result.max_abs_diff(&o2.result) < 1e-12);
+        assert_eq!(o1.flops, o2.flops);
+    }
+
+    #[test]
+    fn flat_index_roundtrip() {
+        let code = HierarchicalCode::new(HierarchicalParams {
+            n1: vec![3, 5, 2],
+            k1: vec![2, 3, 1],
+            n2: 3,
+            k2: 2,
+        })
+        .unwrap();
+        for flat in 0..code.num_workers() {
+            let id = code.worker_id(flat);
+            assert_eq!(code.flat_index(id), flat);
+        }
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(HierarchicalCode::homogeneous(2, 3, 3, 2).is_err()); // k1 > n1
+        assert!(HierarchicalCode::homogeneous(3, 2, 2, 3).is_err()); // k2 > n2
+        assert!(HierarchicalCode::new(HierarchicalParams {
+            n1: vec![3, 3],
+            k1: vec![2],
+            n2: 2,
+            k2: 1,
+        })
+        .is_err()); // ragged
+    }
+
+    #[test]
+    fn property_decode_invariant_to_result_order() {
+        check("hier decode order-invariant", 15, |g| {
+            let n2 = g.usize_in(2..5);
+            let k2 = g.usize_in(1..n2 + 1);
+            let n1 = g.usize_in(2..5);
+            let k1 = g.usize_in(1..n1 + 1);
+            let mut r = Rng::new(g.usize_in(0..1 << 30) as u64);
+            let code = HierarchicalCode::homogeneous(n1, k1, n2, k2).unwrap();
+            let rows = code.required_row_divisor();
+            let a = random_matrix(&mut r, rows, 3);
+            let x = random_matrix(&mut r, 3, 1);
+            let expect = ops::matmul(&a, &x);
+            let shards = code.encode(&a).unwrap();
+            let all = compute_all_products(&shards, &x);
+            // All workers respond, in two different random orders.
+            let mut order1: Vec<usize> = (0..code.num_workers()).collect();
+            let mut order2 = order1.clone();
+            r.shuffle(&mut order1);
+            r.shuffle(&mut order2);
+            let o1 = code.decode(&select_results(&all, &order1), rows).unwrap();
+            let o2 = code.decode(&select_results(&all, &order2), rows).unwrap();
+            assert!(o1.result.max_abs_diff(&expect) < 1e-7);
+            assert!(o2.result.max_abs_diff(&expect) < 1e-7);
+        });
+    }
+
+    #[test]
+    fn systematic_everything_decodes_free() {
+        // If the k1 systematic workers of the k2 systematic groups
+        // respond, the whole decode is a reshuffle: 0 flops.
+        let code = HierarchicalCode::homogeneous(4, 2, 3, 2).unwrap();
+        let mut r = Rng::new(7);
+        let a = random_matrix(&mut r, 8, 3);
+        let x = random_matrix(&mut r, 3, 1);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let picks: Vec<usize> = (0..2)
+            .flat_map(|g| {
+                [
+                    code.flat_index(WorkerId { group: g, index: 0 }),
+                    code.flat_index(WorkerId { group: g, index: 1 }),
+                ]
+            })
+            .collect();
+        let out = code.decode(&select_results(&all, &picks), 8).unwrap();
+        assert_eq!(out.flops, 0);
+        assert!(out.result.max_abs_diff(&ops::matmul(&a, &x)) < 1e-12);
+    }
+}

@@ -1,0 +1,332 @@
+//! Flat `(n, k)` systematic MDS coded computation (Lee et al., 2017).
+//!
+//! `A` is split into `k` equal row-blocks, encoded into `n` coded blocks
+//! by a systematic MDS generator; worker `i` computes `Â_i·x`; any `k`
+//! results decode via a `k×k` solve. This is both a baseline scheme and
+//! the building block the hierarchical code composes at two levels.
+
+use crate::coding::{CodedScheme, DecodeOutput, WorkerResult};
+use crate::linalg::{lu::LuFactors, ops, vandermonde, Matrix};
+use crate::{Error, Result};
+use std::time::Instant;
+
+/// Systematic `(n, k)` MDS code over the reals.
+#[derive(Clone, Debug)]
+pub struct MdsCode {
+    n: usize,
+    k: usize,
+    /// `n × k` systematic generator `[I; C]`.
+    generator: Matrix,
+}
+
+impl MdsCode {
+    /// Construct an `(n, k)` code, `1 <= k <= n`.
+    pub fn new(n: usize, k: usize) -> Result<Self> {
+        let generator = vandermonde::systematic_mds(n, k)?;
+        Ok(Self { n, k, generator })
+    }
+
+    /// Code length `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Code dimension `k`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The `n × k` generator matrix.
+    pub fn generator(&self) -> &Matrix {
+        &self.generator
+    }
+
+    /// Encode `k` equal-shaped blocks into `n` coded blocks:
+    /// coded_i = Σ_j G[i][j] · block_j.
+    pub fn encode_blocks(&self, blocks: &[Matrix]) -> Result<Vec<Matrix>> {
+        if blocks.len() != self.k {
+            return Err(Error::InvalidParams(format!(
+                "encode_blocks: got {} blocks, code k={}",
+                blocks.len(),
+                self.k
+            )));
+        }
+        let refs: Vec<&Matrix> = blocks.iter().collect();
+        Ok((0..self.n)
+            .map(|i| {
+                if i < self.k {
+                    // Systematic prefix: the block itself (free).
+                    blocks[i].clone()
+                } else {
+                    ops::lincomb(self.generator.row(i), &refs)
+                }
+            })
+            .collect())
+    }
+
+    /// Decode the original `k` stacked blocks from any `k` coded blocks
+    /// given as `(index, block)` pairs. Returns the stacked result and
+    /// the flops spent.
+    ///
+    /// Fast path: if all `k` present indices are systematic, decoding is
+    /// a pure reshuffle (0 flops) — this matters for Fig. 7's `α`
+    /// tradeoff, where decode cost is the differentiator.
+    pub fn decode_blocks(&self, coded: &[(usize, Matrix)]) -> Result<(Vec<Matrix>, u64)> {
+        if coded.len() < self.k {
+            return Err(Error::Insufficient {
+                needed: self.k,
+                got: coded.len(),
+            });
+        }
+        let use_set = &coded[..self.k];
+        for &(idx, _) in use_set {
+            if idx >= self.n {
+                return Err(Error::InvalidParams(format!(
+                    "coded block index {idx} out of n={}",
+                    self.n
+                )));
+            }
+        }
+        // Systematic fast path.
+        if use_set.iter().all(|&(idx, _)| idx < self.k) {
+            let mut sorted: Vec<&(usize, Matrix)> = use_set.iter().collect();
+            sorted.sort_by_key(|&&(idx, _)| idx);
+            // All-systematic means indices are exactly {0..k}.
+            let distinct = {
+                let mut ids: Vec<usize> = sorted.iter().map(|&&(i, _)| i).collect();
+                ids.dedup();
+                ids.len() == self.k
+            };
+            if distinct {
+                return Ok((sorted.into_iter().map(|(_, b)| b.clone()).collect(), 0));
+            }
+        }
+        // General path: solve G_S · D = Y for the k stacked data blocks.
+        let idx: Vec<usize> = use_set.iter().map(|&(i, _)| i).collect();
+        {
+            let mut dedup = idx.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            if dedup.len() != self.k {
+                return Err(Error::InvalidParams(format!(
+                    "duplicate coded block indices: {idx:?}"
+                )));
+            }
+        }
+        let gsub = self.generator.select_rows(&idx);
+        let y = Matrix::vstack(
+            &use_set
+                .iter()
+                .map(|(_, b)| b.clone())
+                .collect::<Vec<_>>(),
+        )?;
+        let block_rows = y.rows() / self.k;
+        // Reshape: stacked blocks → k × (block_rows · cols) system.
+        // Each data block is a row of the k×k solve with block entries.
+        let cols = y.cols();
+        let mut rhs = Matrix::zeros(self.k, block_rows * cols);
+        for (bi, (_, block)) in use_set.iter().enumerate() {
+            if block.rows() != block_rows || block.cols() != cols {
+                return Err(Error::InvalidParams(
+                    "inconsistent coded block shapes".into(),
+                ));
+            }
+            rhs.row_mut(bi).copy_from_slice(block.data());
+        }
+        let lu = LuFactors::factorize(&gsub)?;
+        let solved = lu.solve_matrix(&rhs)?;
+        let flops = lu.factor_flops() + lu.solve_flops(block_rows * cols);
+        let blocks = (0..self.k)
+            .map(|i| Matrix::from_vec(block_rows, cols, solved.row(i).to_vec()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((blocks, flops))
+    }
+}
+
+impl CodedScheme for MdsCode {
+    fn name(&self) -> String {
+        format!("mds({},{})", self.n, self.k)
+    }
+
+    fn num_workers(&self) -> usize {
+        self.n
+    }
+
+    fn num_data_blocks(&self) -> usize {
+        self.k
+    }
+
+    fn row_divisor(&self) -> usize {
+        self.k
+    }
+
+    fn encode(&self, a: &Matrix) -> Result<Vec<Matrix>> {
+        let blocks = a.split_rows(self.k)?;
+        self.encode_blocks(&blocks)
+    }
+
+    fn can_decode(&self, present: &[usize]) -> bool {
+        let mut distinct: Vec<usize> = present.iter().copied().filter(|&i| i < self.n).collect();
+        distinct.sort_unstable();
+        distinct.dedup();
+        distinct.len() >= self.k
+    }
+
+    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput> {
+        let t0 = Instant::now();
+        let coded: Vec<(usize, Matrix)> = results
+            .iter()
+            .map(|r| (r.shard, r.data.clone()))
+            .collect();
+        let (blocks, flops) = self.decode_blocks(&coded)?;
+        let result = Matrix::vstack(&blocks)?;
+        if result.rows() != out_rows {
+            return Err(Error::InvalidParams(format!(
+                "decoded {} rows, expected {out_rows}",
+                result.rows()
+            )));
+        }
+        Ok(DecodeOutput {
+            result,
+            flops,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{compute_all_products, select_results};
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| r.uniform(-1.0, 1.0))
+    }
+
+    #[test]
+    fn encode_systematic_prefix_is_data() {
+        let code = MdsCode::new(5, 3).unwrap();
+        let mut r = Rng::new(1);
+        let a = random_matrix(&mut r, 9, 4);
+        let shards = code.encode(&a).unwrap();
+        assert_eq!(shards.len(), 5);
+        let blocks = a.split_rows(3).unwrap();
+        for i in 0..3 {
+            assert_eq!(shards[i], blocks[i]);
+        }
+    }
+
+    #[test]
+    fn any_k_subset_decodes_exactly() {
+        let code = MdsCode::new(6, 4).unwrap();
+        let mut r = Rng::new(2);
+        let a = random_matrix(&mut r, 8, 5);
+        let x = random_matrix(&mut r, 5, 2);
+        let expect = ops::matmul(&a, &x);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        // Every 4-subset of 6.
+        for s0 in 0..6 {
+            for s1 in (s0 + 1)..6 {
+                for s2 in (s1 + 1)..6 {
+                    for s3 in (s2 + 1)..6 {
+                        let subset = select_results(&all, &[s0, s1, s2, s3]);
+                        let out = code.decode(&subset, 8).unwrap();
+                        assert!(
+                            out.result.max_abs_diff(&expect) < 1e-8,
+                            "subset {:?} err {}",
+                            [s0, s1, s2, s3],
+                            out.result.max_abs_diff(&expect)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn systematic_fast_path_is_zero_flops() {
+        let code = MdsCode::new(6, 3).unwrap();
+        let mut r = Rng::new(3);
+        let a = random_matrix(&mut r, 6, 4);
+        let x = random_matrix(&mut r, 4, 1);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let out = code.decode(&select_results(&all, &[2, 0, 1]), 6).unwrap();
+        assert_eq!(out.flops, 0, "systematic decode must be free");
+        assert!(out.result.max_abs_diff(&ops::matmul(&a, &x)) < 1e-12);
+    }
+
+    #[test]
+    fn parity_decode_counts_flops() {
+        let code = MdsCode::new(6, 3).unwrap();
+        let mut r = Rng::new(4);
+        let a = random_matrix(&mut r, 6, 4);
+        let x = random_matrix(&mut r, 4, 1);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let out = code.decode(&select_results(&all, &[3, 4, 5]), 6).unwrap();
+        assert!(out.flops > 0);
+    }
+
+    #[test]
+    fn insufficient_results_rejected() {
+        let code = MdsCode::new(5, 3).unwrap();
+        let mut r = Rng::new(5);
+        let a = random_matrix(&mut r, 6, 2);
+        let x = random_matrix(&mut r, 2, 1);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let err = code.decode(&select_results(&all, &[0, 1]), 6);
+        assert!(matches!(err, Err(Error::Insufficient { needed: 3, got: 2 })));
+    }
+
+    #[test]
+    fn duplicate_indices_rejected() {
+        let code = MdsCode::new(5, 2).unwrap();
+        let mut r = Rng::new(6);
+        let a = random_matrix(&mut r, 4, 2);
+        let x = random_matrix(&mut r, 2, 1);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let dup = vec![all[3].clone(), all[3].clone()];
+        assert!(code.decode(&dup, 4).is_err());
+    }
+
+    #[test]
+    fn can_decode_logic() {
+        let code = MdsCode::new(5, 3).unwrap();
+        assert!(code.can_decode(&[0, 1, 2]));
+        assert!(code.can_decode(&[4, 2, 0, 1]));
+        assert!(!code.can_decode(&[0, 1]));
+        assert!(!code.can_decode(&[0, 0, 0])); // duplicates don't count
+    }
+
+    #[test]
+    fn property_random_subsets_roundtrip() {
+        check("mds decode∘encode = A·x on any k-subset", 25, |g| {
+            let (n, k) = g.code_params(10);
+            let rows = k * g.usize_in(1..4);
+            let cols = g.usize_in(1..5);
+            let batch = g.usize_in(1..3);
+            let mut r = Rng::new(g.usize_in(0..1 << 30) as u64);
+            let code = MdsCode::new(n, k).unwrap();
+            let a = random_matrix(&mut r, rows, cols);
+            let x = random_matrix(&mut r, cols, batch);
+            let expect = ops::matmul(&a, &x);
+            let shards = code.encode(&a).unwrap();
+            let all = compute_all_products(&shards, &x);
+            let subset_idx = g.subset(n, k);
+            let out = code
+                .decode(&select_results(&all, &subset_idx), rows)
+                .unwrap();
+            assert!(
+                out.result.max_abs_diff(&expect) < 1e-7,
+                "n={n} k={k} err={}",
+                out.result.max_abs_diff(&expect)
+            );
+        });
+    }
+}

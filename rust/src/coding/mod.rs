@@ -1,0 +1,101 @@
+//! Erasure-coded computation schemes.
+//!
+//! All schemes share one task model (§II-A of the paper): compute
+//! `y = A·x` (or batched `Y = A·X`) for `A ∈ R^{m×d}` by assigning each
+//! worker a coded shard `Â` of `A`; the worker computes `Â·x` and the
+//! decoder reconstructs `A·x` from a sufficient subset of results.
+//!
+//! * [`mds`] — flat `(n, k)` systematic MDS coded computation
+//!   (Lee et al., 2017), the building block;
+//! * [`hierarchical`] — **the paper's contribution**: an inner
+//!   `(n1, k1)` code per group concatenated with an outer `(n2, k2)`
+//!   code across groups, decoded in parallel (§II-A, §IV);
+//! * [`replication`] — uncoded `(n/k)`-way replication baseline;
+//! * [`product`] — the product code of Lee–Suh–Ramchandran (ISIT'17)
+//!   with an iterative peeling decoder;
+//! * [`polynomial`] — the polynomial code of Yu–Maddah-Ali–Avestimehr
+//!   (NIPS'17), decoded by (Vandermonde) interpolation;
+//! * [`cost`] — the §IV / Table I decoding-cost models `O(k^β)` and the
+//!   measured-flop accounting used to validate them.
+
+pub mod cost;
+pub mod hierarchical;
+pub mod mds;
+pub mod polynomial;
+pub mod product;
+pub mod replication;
+
+pub use hierarchical::{HierarchicalCode, HierarchicalParams};
+pub use mds::MdsCode;
+pub use polynomial::PolynomialCode;
+pub use product::ProductCode;
+pub use replication::ReplicationCode;
+
+use crate::linalg::Matrix;
+use crate::Result;
+
+/// A worker's computed result: `shard_index` identifies which coded
+/// shard it holds, `data` is `Â_shard · X` (`rows × batch` matrix).
+#[derive(Clone, Debug)]
+pub struct WorkerResult {
+    /// Global shard/worker index in `[0, num_workers)`.
+    pub shard: usize,
+    /// The shard-local product.
+    pub data: Matrix,
+}
+
+/// Output of a decode: the reconstructed `A·X` plus the exact flop
+/// count spent decoding (the paper's `T_dec` is proportional to this).
+#[derive(Clone, Debug)]
+pub struct DecodeOutput {
+    /// Reconstructed product, `m × batch`.
+    pub result: Matrix,
+    /// Flops spent in the decode itself (not the workers' products).
+    pub flops: u64,
+    /// Wall-clock decode time in seconds (single measurement).
+    pub seconds: f64,
+}
+
+/// A coded-computation scheme: how to shard/encode `A`, which worker
+/// subsets suffice, and how to decode their results.
+pub trait CodedScheme: Send + Sync {
+    /// Human-readable name (used in figures and CSV output).
+    fn name(&self) -> String;
+
+    /// Total number of workers/shards `n`.
+    fn num_workers(&self) -> usize;
+
+    /// Number of data blocks `k` (the recovery threshold for MDS-type
+    /// schemes; pattern-dependent schemes may need more).
+    fn num_data_blocks(&self) -> usize;
+
+    /// Rows of `A` must be divisible by this for equal sharding.
+    fn row_divisor(&self) -> usize;
+
+    /// Encode `A` into one shard per worker.
+    fn encode(&self, a: &Matrix) -> Result<Vec<Matrix>>;
+
+    /// Can the scheme decode from exactly this set of worker indices?
+    fn can_decode(&self, present: &[usize]) -> bool;
+
+    /// Decode `A·X` (`m = out_rows` rows) from worker results.
+    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput>;
+}
+
+/// Compute every worker's product for a given encode — the "all workers
+/// finished" reference path used by tests and benches.
+pub fn compute_all_products(shards: &[Matrix], x: &Matrix) -> Vec<WorkerResult> {
+    shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| WorkerResult {
+            shard: i,
+            data: crate::linalg::ops::matmul(s, x),
+        })
+        .collect()
+}
+
+/// Select a subset of results by worker index.
+pub fn select_results(all: &[WorkerResult], idx: &[usize]) -> Vec<WorkerResult> {
+    idx.iter().map(|&i| all[i].clone()).collect()
+}

@@ -1,0 +1,266 @@
+//! Polynomial code baseline (Yu, Maddah-Ali, Avestimehr — NIPS'17).
+//!
+//! For the matrix-vector task the polynomial code specializes to a
+//! non-systematic `(n, k)` MDS code whose generator is evaluation of the
+//! data polynomial `p(t) = Σ_s A_s t^s` at `n` distinct points: worker
+//! `l` computes `p(t_l)·x` and any `k` results interpolate. Its decode is
+//! a single monolithic `k×k` solve — `O(k^β)` with `k = k1·k2`, the
+//! largest decode cost in Table I, which is exactly what the paper's
+//! hierarchical scheme splits into parallel `k1`- and `k2`-sized pieces.
+//!
+//! Numerical note: the paper's polynomial code uses the monomial basis
+//! `p(t) = Σ_s A_s t^s`, whose Vandermonde systems are exponentially
+//! ill-conditioned in `k` over the reals (fine over the finite fields
+//! the paper implicitly assumes, unusable in f64 beyond k ≈ 20). We
+//! evaluate in the **Chebyshev basis** `p(t) = Σ_s A_s T_s(t)` at
+//! Chebyshev nodes instead — the same code family (degree-(k−1)
+//! polynomial evaluation, any k results interpolate, identical decode
+//! cost `O(k^β)`) with well-conditioned interpolation at the sizes the
+//! benches decode for real. DESIGN.md documents this substitution.
+
+use crate::coding::{CodedScheme, DecodeOutput, WorkerResult};
+use crate::linalg::{lu::LuFactors, ops, Matrix};
+use crate::{Error, Result};
+use std::time::Instant;
+
+/// `(n, k)` polynomial-evaluation code (Chebyshev basis).
+#[derive(Clone, Debug)]
+pub struct PolynomialCode {
+    n: usize,
+    k: usize,
+    /// Evaluation points (Chebyshev nodes on [-1, 1]).
+    points: Vec<f64>,
+    /// `n × k` generator `V[l][s] = T_s(t_l)`.
+    generator: Matrix,
+}
+
+/// `n × k` matrix of Chebyshev polynomials `T_s(t_l)` via the
+/// three-term recurrence.
+pub fn chebyshev_vandermonde(points: &[f64], k: usize) -> Matrix {
+    let mut m = Matrix::zeros(points.len(), k);
+    for (l, &t) in points.iter().enumerate() {
+        let row = m.row_mut(l);
+        if k >= 1 {
+            row[0] = 1.0;
+        }
+        if k >= 2 {
+            row[1] = t;
+        }
+        for s in 2..k {
+            row[s] = 2.0 * t * row[s - 1] - row[s - 2];
+        }
+    }
+    m
+}
+
+impl PolynomialCode {
+    /// Construct an `(n, k)` polynomial code.
+    pub fn new(n: usize, k: usize) -> Result<Self> {
+        if k == 0 || k > n {
+            return Err(Error::InvalidParams(format!(
+                "polynomial: need 1 <= k <= n, got ({n}, {k})"
+            )));
+        }
+        let points = chebyshev_points(n);
+        let generator = chebyshev_vandermonde(&points, k);
+        Ok(Self {
+            n,
+            k,
+            points,
+            generator,
+        })
+    }
+
+    /// The evaluation points.
+    pub fn points(&self) -> &[f64] {
+        &self.points
+    }
+}
+
+/// `n` Chebyshev nodes `cos((2i+1)π / 2n)` — distinct in `(-1, 1)`.
+pub fn chebyshev_points(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| ((2 * i + 1) as f64 * std::f64::consts::PI / (2 * n) as f64).cos())
+        .collect()
+}
+
+impl CodedScheme for PolynomialCode {
+    fn name(&self) -> String {
+        format!("poly({},{})", self.n, self.k)
+    }
+
+    fn num_workers(&self) -> usize {
+        self.n
+    }
+
+    fn num_data_blocks(&self) -> usize {
+        self.k
+    }
+
+    fn row_divisor(&self) -> usize {
+        self.k
+    }
+
+    fn encode(&self, a: &Matrix) -> Result<Vec<Matrix>> {
+        let blocks = a.split_rows(self.k)?;
+        let refs: Vec<&Matrix> = blocks.iter().collect();
+        Ok((0..self.n)
+            .map(|l| ops::lincomb(self.generator.row(l), &refs))
+            .collect())
+    }
+
+    fn can_decode(&self, present: &[usize]) -> bool {
+        let mut distinct: Vec<usize> =
+            present.iter().copied().filter(|&i| i < self.n).collect();
+        distinct.sort_unstable();
+        distinct.dedup();
+        distinct.len() >= self.k
+    }
+
+    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput> {
+        let t0 = Instant::now();
+        if results.len() < self.k {
+            return Err(Error::Insufficient {
+                needed: self.k,
+                got: results.len(),
+            });
+        }
+        let use_set = &results[..self.k];
+        let idx: Vec<usize> = use_set.iter().map(|r| r.shard).collect();
+        {
+            let mut dedup = idx.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            if dedup.len() != self.k {
+                return Err(Error::InvalidParams(format!(
+                    "duplicate worker indices: {idx:?}"
+                )));
+            }
+        }
+        // Interpolation = solving the Vandermonde system V_S · D = Y.
+        let vsub = self.generator.select_rows(&idx);
+        let block_rows = use_set[0].data.rows();
+        let cols = use_set[0].data.cols();
+        let mut rhs = Matrix::zeros(self.k, block_rows * cols);
+        for (bi, r) in use_set.iter().enumerate() {
+            if r.data.rows() != block_rows || r.data.cols() != cols {
+                return Err(Error::InvalidParams("inconsistent result shapes".into()));
+            }
+            rhs.row_mut(bi).copy_from_slice(r.data.data());
+        }
+        let lu = LuFactors::factorize(&vsub)?;
+        let solved = lu.solve_matrix(&rhs)?;
+        let flops = lu.factor_flops() + lu.solve_flops(block_rows * cols);
+        let blocks = (0..self.k)
+            .map(|s| Matrix::from_vec(block_rows, cols, solved.row(s).to_vec()))
+            .collect::<Result<Vec<_>>>()?;
+        let result = Matrix::vstack(&blocks)?;
+        if result.rows() != out_rows {
+            return Err(Error::InvalidParams(format!(
+                "decoded {} rows, expected {out_rows}",
+                result.rows()
+            )));
+        }
+        Ok(DecodeOutput {
+            result,
+            flops,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{compute_all_products, select_results};
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| r.uniform(-1.0, 1.0))
+    }
+
+    #[test]
+    fn chebyshev_points_distinct() {
+        let pts = chebyshev_points(50);
+        for i in 0..pts.len() {
+            for j in (i + 1)..pts.len() {
+                assert!((pts[i] - pts[j]).abs() > 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn any_k_subset_interpolates() {
+        let code = PolynomialCode::new(7, 4).unwrap();
+        let mut r = Rng::new(1);
+        let a = random_matrix(&mut r, 8, 5);
+        let x = random_matrix(&mut r, 5, 2);
+        let expect = ops::matmul(&a, &x);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        for _ in 0..20 {
+            let subset = r.subset(7, 4);
+            let out = code.decode(&select_results(&all, &subset), 8).unwrap();
+            assert!(
+                out.result.max_abs_diff(&expect) < 1e-7,
+                "subset {subset:?} err {}",
+                out.result.max_abs_diff(&expect)
+            );
+        }
+    }
+
+    #[test]
+    fn decode_always_pays_full_solve() {
+        // Unlike systematic MDS, polynomial codes have no free path.
+        let code = PolynomialCode::new(6, 3).unwrap();
+        let mut r = Rng::new(2);
+        let a = random_matrix(&mut r, 6, 2);
+        let x = random_matrix(&mut r, 2, 1);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let out = code.decode(&select_results(&all, &[0, 1, 2]), 6).unwrap();
+        assert!(out.flops > 0, "polynomial decode is never free");
+    }
+
+    #[test]
+    fn insufficient_rejected() {
+        let code = PolynomialCode::new(5, 4).unwrap();
+        assert!(!code.can_decode(&[0, 1, 2]));
+        assert!(code.can_decode(&[0, 1, 2, 4]));
+    }
+
+    #[test]
+    fn moderate_k_stays_accurate() {
+        // Conditioning check at the decode sizes benches use for real.
+        let code = PolynomialCode::new(48, 32).unwrap();
+        let mut r = Rng::new(3);
+        let a = random_matrix(&mut r, 64, 4);
+        let x = random_matrix(&mut r, 4, 1);
+        let expect = ops::matmul(&a, &x);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let subset = r.subset(48, 32);
+        let out = code.decode(&select_results(&all, &subset), 64).unwrap();
+        let err = out.result.max_abs_diff(&expect);
+        assert!(err < 1e-3, "interpolation error {err} too large");
+    }
+
+    #[test]
+    fn property_roundtrip_small() {
+        check("poly decode∘encode = A·x", 20, |g| {
+            let (n, k) = g.code_params(12);
+            let rows = k * g.usize_in(1..3);
+            let mut r = Rng::new(g.usize_in(0..1 << 30) as u64);
+            let code = PolynomialCode::new(n, k).unwrap();
+            let a = random_matrix(&mut r, rows, 3);
+            let x = random_matrix(&mut r, 3, 1);
+            let expect = ops::matmul(&a, &x);
+            let shards = code.encode(&a).unwrap();
+            let all = compute_all_products(&shards, &x);
+            let subset = g.subset(n, k);
+            let out = code.decode(&select_results(&all, &subset), rows).unwrap();
+            assert!(out.result.max_abs_diff(&expect) < 1e-5);
+        });
+    }
+}

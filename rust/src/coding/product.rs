@@ -1,0 +1,389 @@
+//! Product code baseline (Lee, Suh, Ramchandran — ISIT'17).
+//!
+//! Workers form an `n2 × n1` grid. The data is a `k2 × k1` grid of
+//! blocks `D[r][c]`; each grid row is a codeword of an `(n1, k1)` MDS
+//! code and each grid column a codeword of an `(n2, k2)` MDS code
+//! (tensor-product structure). Decoding is **iterative peeling**: any
+//! row with ≥ k1 known entries is row-decoded, any column with ≥ k2
+//! known entries is column-decoded, repeating until the data positions
+//! are filled or no progress is possible.
+//!
+//! Under the hierarchical (rack) topology the product code's decode
+//! cannot be split between submasters and master the way the
+//! hierarchical code's can — rows and columns interleave — so its cost
+//! `O(k1·k2^β + k2·k1^β)` lands entirely on the master, which is the
+//! §IV comparison the paper draws.
+
+use crate::coding::{CodedScheme, DecodeOutput, MdsCode, WorkerResult};
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+use std::time::Instant;
+
+/// `(n1, k1) × (n2, k2)` product code on an `n2 × n1` worker grid.
+#[derive(Clone, Debug)]
+pub struct ProductCode {
+    n1: usize,
+    k1: usize,
+    n2: usize,
+    k2: usize,
+    row_code: MdsCode,
+    col_code: MdsCode,
+}
+
+impl ProductCode {
+    /// Construct with the same parameters as the hierarchical code for
+    /// apples-to-apples comparison (`n = n1·n2`, `k = k1·k2`).
+    pub fn new(n1: usize, k1: usize, n2: usize, k2: usize) -> Result<Self> {
+        Ok(Self {
+            n1,
+            k1,
+            n2,
+            k2,
+            row_code: MdsCode::new(n1, k1)?,
+            col_code: MdsCode::new(n2, k2)?,
+        })
+    }
+
+    /// Grid position of flat worker `w`: `(row i ∈ [n2], col j ∈ [n1])`.
+    pub fn grid_pos(&self, w: usize) -> (usize, usize) {
+        (w / self.n1, w % self.n1)
+    }
+
+    /// Flat index of grid position `(i, j)`.
+    pub fn flat_index(&self, i: usize, j: usize) -> usize {
+        i * self.n1 + j
+    }
+
+    /// Peeling feasibility on a boolean mask (no data): returns true if
+    /// iterative row/column decoding can recover all data positions.
+    pub fn peel_mask(&self, mut known: Vec<Vec<bool>>) -> bool {
+        loop {
+            let mut progress = false;
+            for i in 0..self.n2 {
+                let cnt = known[i].iter().filter(|&&b| b).count();
+                if cnt >= self.k1 && cnt < self.n1 {
+                    known[i].iter_mut().for_each(|b| *b = true);
+                    progress = true;
+                }
+            }
+            for j in 0..self.n1 {
+                let cnt = (0..self.n2).filter(|&i| known[i][j]).count();
+                if cnt >= self.k2 && cnt < self.n2 {
+                    (0..self.n2).for_each(|i| known[i][j] = true);
+                    progress = true;
+                }
+            }
+            if !progress {
+                break;
+            }
+        }
+        (0..self.k2).all(|r| (0..self.k1).all(|c| known[r][c]))
+    }
+}
+
+impl CodedScheme for ProductCode {
+    fn name(&self) -> String {
+        format!("prod({},{})x({},{})", self.n1, self.k1, self.n2, self.k2)
+    }
+
+    fn num_workers(&self) -> usize {
+        self.n1 * self.n2
+    }
+
+    fn num_data_blocks(&self) -> usize {
+        self.k1 * self.k2
+    }
+
+    fn row_divisor(&self) -> usize {
+        self.k1 * self.k2
+    }
+
+    fn encode(&self, a: &Matrix) -> Result<Vec<Matrix>> {
+        // Split A into k2 row-groups, each into k1 sub-blocks — the same
+        // data layout the hierarchical code uses, so results compare
+        // directly.
+        let outer = a.split_rows(self.k2)?;
+        let mut data = Vec::with_capacity(self.k2);
+        for block in &outer {
+            data.push(block.split_rows(self.k1)?);
+        }
+        // Column-encode each data column c: k2 blocks → n2.
+        let mut col_encoded: Vec<Vec<Matrix>> = vec![Vec::new(); self.n2];
+        for c in 0..self.k1 {
+            let col: Vec<Matrix> = (0..self.k2).map(|r| data[r][c].clone()).collect();
+            let coded = self.col_code.encode_blocks(&col)?;
+            for (i, m) in coded.into_iter().enumerate() {
+                col_encoded[i].push(m);
+            }
+        }
+        // Row-encode each grid row i: k1 blocks → n1.
+        let mut shards = Vec::with_capacity(self.n1 * self.n2);
+        for row in col_encoded {
+            let coded = self.row_code.encode_blocks(&row)?;
+            shards.extend(coded);
+        }
+        Ok(shards)
+    }
+
+    fn can_decode(&self, present: &[usize]) -> bool {
+        let mut known = vec![vec![false; self.n1]; self.n2];
+        for &w in present {
+            if w < self.num_workers() {
+                let (i, j) = self.grid_pos(w);
+                known[i][j] = true;
+            }
+        }
+        self.peel_mask(known)
+    }
+
+    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput> {
+        let t0 = Instant::now();
+        let mut grid: Vec<Vec<Option<Matrix>>> = vec![vec![None; self.n1]; self.n2];
+        for r in results {
+            if r.shard >= self.num_workers() {
+                return Err(Error::InvalidParams(format!(
+                    "worker {} out of {}",
+                    r.shard,
+                    self.num_workers()
+                )));
+            }
+            let (i, j) = self.grid_pos(r.shard);
+            if grid[i][j].is_none() {
+                grid[i][j] = Some(r.data.clone());
+            }
+        }
+        let mut flops = 0u64;
+        // Iterative peeling with real data.
+        loop {
+            let mut progress = false;
+            // Row pass.
+            for i in 0..self.n2 {
+                let have: Vec<(usize, Matrix)> = (0..self.n1)
+                    .filter_map(|j| grid[i][j].as_ref().map(|m| (j, m.clone())))
+                    .collect();
+                if have.len() >= self.k1 && have.len() < self.n1 {
+                    let (blocks, f) = self.row_code.decode_blocks(&have)?;
+                    flops += f;
+                    let re = self.row_code.encode_blocks(&blocks)?;
+                    // Re-encode cost: 2·k1·elems per non-systematic entry.
+                    for (j, m) in re.into_iter().enumerate() {
+                        if grid[i][j].is_none() {
+                            if j >= self.k1 {
+                                flops += 2 * self.k1 as u64 * m.data().len() as u64;
+                            }
+                            grid[i][j] = Some(m);
+                        }
+                    }
+                    progress = true;
+                }
+            }
+            // Column pass.
+            for j in 0..self.n1 {
+                let have: Vec<(usize, Matrix)> = (0..self.n2)
+                    .filter_map(|i| grid[i][j].as_ref().map(|m| (i, m.clone())))
+                    .collect();
+                if have.len() >= self.k2 && have.len() < self.n2 {
+                    let (blocks, f) = self.col_code.decode_blocks(&have)?;
+                    flops += f;
+                    let re = self.col_code.encode_blocks(&blocks)?;
+                    for (i, m) in re.into_iter().enumerate() {
+                        if grid[i][j].is_none() {
+                            if i >= self.k2 {
+                                flops += 2 * self.k2 as u64 * m.data().len() as u64;
+                            }
+                            grid[i][j] = Some(m);
+                        }
+                    }
+                    progress = true;
+                }
+            }
+            let done = (0..self.k2).all(|r| (0..self.k1).all(|c| grid[r][c].is_some()));
+            if done {
+                break;
+            }
+            if !progress {
+                let got = grid
+                    .iter()
+                    .flat_map(|row| row.iter())
+                    .filter(|e| e.is_some())
+                    .count();
+                return Err(Error::Insufficient {
+                    needed: self.num_data_blocks(),
+                    got,
+                });
+            }
+        }
+        // Assemble A·x from the systematic grid positions.
+        let mut blocks = Vec::with_capacity(self.k1 * self.k2);
+        for r in 0..self.k2 {
+            for c in 0..self.k1 {
+                blocks.push(grid[r][c].clone().expect("peeled"));
+            }
+        }
+        let result = Matrix::vstack(&blocks)?;
+        if result.rows() != out_rows {
+            return Err(Error::InvalidParams(format!(
+                "decoded {} rows, expected {out_rows}",
+                result.rows()
+            )));
+        }
+        Ok(DecodeOutput {
+            result,
+            flops,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{compute_all_products, select_results};
+    use crate::linalg::ops;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| r.uniform(-1.0, 1.0))
+    }
+
+    #[test]
+    fn all_workers_decode_trivially() {
+        let code = ProductCode::new(3, 2, 3, 2).unwrap();
+        let mut r = Rng::new(1);
+        let a = random_matrix(&mut r, 8, 3);
+        let x = random_matrix(&mut r, 3, 1);
+        let expect = ops::matmul(&a, &x);
+        let shards = code.encode(&a).unwrap();
+        assert_eq!(shards.len(), 9);
+        let all = compute_all_products(&shards, &x);
+        let out = code.decode(&all, 8).unwrap();
+        assert!(out.result.max_abs_diff(&expect) < 1e-8);
+    }
+
+    #[test]
+    fn peeling_recovers_nontrivial_pattern() {
+        // 3x3 grid, (3,2)x(3,2): erase two entries of row 0. The row
+        // itself is stuck (1 < k1 = 2 known), but columns 0 and 1 each
+        // still have 2 ≥ k2 entries, so column decoding peels row 0 back.
+        let code = ProductCode::new(3, 2, 3, 2).unwrap();
+        let mut r = Rng::new(2);
+        let a = random_matrix(&mut r, 8, 3);
+        let x = random_matrix(&mut r, 3, 2);
+        let expect = ops::matmul(&a, &x);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let missing = [code.flat_index(0, 0), code.flat_index(0, 1)];
+        let present: Vec<usize> = (0..9).filter(|w| !missing.contains(w)).collect();
+        assert!(code.can_decode(&present));
+        let out = code.decode(&select_results(&all, &present), 8).unwrap();
+        assert!(out.result.max_abs_diff(&expect) < 1e-8);
+        assert!(out.flops > 0);
+    }
+
+    #[test]
+    fn square_corner_erasure_is_stuck_even_small() {
+        // The 2x2 systematic-corner erasure defeats peeling in a
+        // (3,2)x(3,2) product code: every affected row and column has
+        // only 1 surviving entry among the erased coordinates. (The
+        // hierarchical code fails on this pattern too — two groups each
+        // lost 2 of 3 workers; its advantage is decode *cost*, §IV, not
+        // erasure-pattern coverage.)
+        let prod = ProductCode::new(3, 2, 3, 2).unwrap();
+        let missing = [
+            prod.flat_index(0, 0),
+            prod.flat_index(0, 1),
+            prod.flat_index(1, 0),
+            prod.flat_index(1, 1),
+        ];
+        let present: Vec<usize> = (0..9).filter(|w| !missing.contains(w)).collect();
+        assert!(!prod.can_decode(&present));
+        use crate::coding::HierarchicalCode;
+        let hier = HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap();
+        assert!(!hier.can_decode(&present));
+    }
+
+    #[test]
+    fn stuck_pattern_detected() {
+        // (3,2)x(3,2): a 2x2 erased square spanning parity row+col can
+        // still peel, but erasing a full row + a full column minus
+        // nothing... craft a genuinely stuck pattern: erase 2 entries in
+        // each of rows 0,1 and cols 0,1 such that every row and column
+        // has exactly 1 known entry among the first two — use the
+        // diagonal pattern on a (2,1)x(2,1)... simpler: (4,3)x(4,3) with
+        // a 2x2 erased block: rows with 2 erasures have only 2 < 3
+        // known... wait n1=4, erasing 2 leaves 2 < k1=3. Columns same.
+        let code = ProductCode::new(4, 3, 4, 3).unwrap();
+        let mut present: Vec<usize> = (0..16).collect();
+        // Erase the 2x2 block at rows {0,1} x cols {0,1}.
+        present.retain(|&w| {
+            let (i, j) = code.grid_pos(w);
+            !(i < 2 && j < 2)
+        });
+        assert!(
+            !code.can_decode(&present),
+            "2x2 erasure in a (4,3)x(4,3) product code must be stuck"
+        );
+        // But an MDS code with the same n, k could decode 12 ≥ 9 shards —
+        // the classic product-code deficiency.
+        let mds = MdsCode::new(16, 9).unwrap();
+        assert!(mds.can_decode(&present));
+    }
+
+    #[test]
+    fn insufficient_errors_cleanly() {
+        let code = ProductCode::new(3, 2, 3, 2).unwrap();
+        let mut r = Rng::new(3);
+        let a = random_matrix(&mut r, 4, 2);
+        let x = random_matrix(&mut r, 2, 1);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let present = [
+            code.flat_index(0, 0),
+            code.flat_index(1, 1),
+            code.flat_index(2, 2),
+        ];
+        let err = code.decode(&select_results(&all, &present), 4);
+        assert!(matches!(err, Err(Error::Insufficient { .. })));
+    }
+
+    #[test]
+    fn matches_hierarchical_data_layout() {
+        // Product and hierarchical codes use the same A block layout, so
+        // they must agree on A·x exactly.
+        use crate::coding::HierarchicalCode;
+        let mut r = Rng::new(4);
+        let a = random_matrix(&mut r, 12, 4);
+        let x = random_matrix(&mut r, 4, 1);
+        let prod = ProductCode::new(3, 2, 3, 2).unwrap();
+        let hier = HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap();
+        let ps = prod.encode(&a).unwrap();
+        let hs = hier.encode(&a).unwrap();
+        let pall = compute_all_products(&ps, &x);
+        let hall = compute_all_products(&hs, &x);
+        let po = prod.decode(&pall, 12).unwrap();
+        let ho = hier.decode(&hall, 12).unwrap();
+        assert!(po.result.max_abs_diff(&ho.result) < 1e-8);
+    }
+
+    #[test]
+    fn property_random_erasures() {
+        check("product peeling correct when feasible", 15, |g| {
+            let mut r = Rng::new(g.usize_in(0..1 << 30) as u64);
+            let code = ProductCode::new(3, 2, 3, 2).unwrap();
+            let a = random_matrix(&mut r, 8, 2);
+            let x = random_matrix(&mut r, 2, 1);
+            let expect = ops::matmul(&a, &x);
+            let shards = code.encode(&a).unwrap();
+            let all = compute_all_products(&shards, &x);
+            let keep = g.usize_in(4..10);
+            let present = g.subset(9, keep);
+            if code.can_decode(&present) {
+                let out = code.decode(&select_results(&all, &present), 8).unwrap();
+                assert!(out.result.max_abs_diff(&expect) < 1e-7);
+            } else {
+                assert!(code.decode(&select_results(&all, &present), 8).is_err());
+            }
+        });
+    }
+}

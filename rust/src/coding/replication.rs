@@ -1,0 +1,183 @@
+//! Uncoded replication baseline.
+//!
+//! `A` is split into `k` blocks, each replicated `n/k` times. A block is
+//! recovered as soon as *any* of its replicas responds; decoding is a
+//! reshuffle (0 flops) — which is why Table I gives replication
+//! `T_dec = 0` and why it wins Fig. 7's high-`α` regime despite the
+//! worst computing time `k·H_k/(n·µ2)`.
+
+use crate::coding::{CodedScheme, DecodeOutput, WorkerResult};
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+use std::time::Instant;
+
+/// `(n, k)` replication: `n/k` replicas of each of `k` blocks.
+#[derive(Clone, Debug)]
+pub struct ReplicationCode {
+    n: usize,
+    k: usize,
+}
+
+impl ReplicationCode {
+    /// Construct; requires `k | n` so every block gets the same number
+    /// of replicas.
+    pub fn new(n: usize, k: usize) -> Result<Self> {
+        if k == 0 || k > n {
+            return Err(Error::InvalidParams(format!(
+                "replication: need 1 <= k <= n, got ({n}, {k})"
+            )));
+        }
+        if n % k != 0 {
+            return Err(Error::InvalidParams(format!(
+                "replication: k={k} must divide n={n}"
+            )));
+        }
+        Ok(Self { n, k })
+    }
+
+    /// Replication factor `n/k`.
+    pub fn replicas(&self) -> usize {
+        self.n / self.k
+    }
+
+    /// Which data block worker `i` holds.
+    pub fn block_of(&self, worker: usize) -> usize {
+        worker / self.replicas()
+    }
+}
+
+impl CodedScheme for ReplicationCode {
+    fn name(&self) -> String {
+        format!("rep({},{})", self.n, self.k)
+    }
+
+    fn num_workers(&self) -> usize {
+        self.n
+    }
+
+    fn num_data_blocks(&self) -> usize {
+        self.k
+    }
+
+    fn row_divisor(&self) -> usize {
+        self.k
+    }
+
+    fn encode(&self, a: &Matrix) -> Result<Vec<Matrix>> {
+        let blocks = a.split_rows(self.k)?;
+        let r = self.replicas();
+        let mut shards = Vec::with_capacity(self.n);
+        for b in &blocks {
+            for _ in 0..r {
+                shards.push(b.clone());
+            }
+        }
+        Ok(shards)
+    }
+
+    fn can_decode(&self, present: &[usize]) -> bool {
+        let mut covered = vec![false; self.k];
+        for &w in present {
+            if w < self.n {
+                covered[self.block_of(w)] = true;
+            }
+        }
+        covered.iter().all(|&c| c)
+    }
+
+    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput> {
+        let t0 = Instant::now();
+        let mut slots: Vec<Option<&Matrix>> = vec![None; self.k];
+        for r in results {
+            if r.shard >= self.n {
+                return Err(Error::InvalidParams(format!(
+                    "worker {} out of n={}",
+                    r.shard, self.n
+                )));
+            }
+            let b = self.block_of(r.shard);
+            if slots[b].is_none() {
+                slots[b] = Some(&r.data);
+            }
+        }
+        let got = slots.iter().filter(|s| s.is_some()).count();
+        if got < self.k {
+            return Err(Error::Insufficient {
+                needed: self.k,
+                got,
+            });
+        }
+        let blocks: Vec<Matrix> = slots.into_iter().map(|s| s.unwrap().clone()).collect();
+        let result = Matrix::vstack(&blocks)?;
+        if result.rows() != out_rows {
+            return Err(Error::InvalidParams(format!(
+                "decoded {} rows, expected {out_rows}",
+                result.rows()
+            )));
+        }
+        Ok(DecodeOutput {
+            result,
+            flops: 0, // replication decodes for free (Table I)
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{compute_all_products, select_results};
+    use crate::linalg::ops;
+    use crate::util::rng::Rng;
+
+    fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| r.uniform(-1.0, 1.0))
+    }
+
+    #[test]
+    fn params_validated() {
+        assert!(ReplicationCode::new(6, 3).is_ok());
+        assert!(ReplicationCode::new(5, 3).is_err()); // 3 ∤ 5
+        assert!(ReplicationCode::new(3, 0).is_err());
+        assert!(ReplicationCode::new(3, 4).is_err());
+    }
+
+    #[test]
+    fn one_replica_per_block_suffices() {
+        let code = ReplicationCode::new(6, 3).unwrap();
+        let mut r = Rng::new(1);
+        let a = random_matrix(&mut r, 9, 4);
+        let x = random_matrix(&mut r, 4, 1);
+        let expect = ops::matmul(&a, &x);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        // Second replica of each block: workers 1, 3, 5.
+        let out = code.decode(&select_results(&all, &[1, 3, 5]), 9).unwrap();
+        assert_eq!(out.flops, 0);
+        assert!(out.result.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn missing_block_rejected() {
+        let code = ReplicationCode::new(6, 3).unwrap();
+        let mut r = Rng::new(2);
+        let a = random_matrix(&mut r, 6, 2);
+        let x = random_matrix(&mut r, 2, 1);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        // Both replicas of block 0 and one of block 1 — block 2 missing.
+        let err = code.decode(&select_results(&all, &[0, 1, 2]), 6);
+        assert!(matches!(err, Err(Error::Insufficient { needed: 3, got: 2 })));
+        assert!(!code.can_decode(&[0, 1, 2]));
+        assert!(code.can_decode(&[0, 2, 4]));
+    }
+
+    #[test]
+    fn any_k_distinct_blocks_not_enough_unless_covering() {
+        // Unlike MDS, k responses don't suffice unless they cover all
+        // blocks — the defining weakness replication trades for T_dec=0.
+        let code = ReplicationCode::new(4, 2).unwrap();
+        assert!(!code.can_decode(&[0, 1])); // both replicas of block 0
+        assert!(code.can_decode(&[1, 2]));
+    }
+}

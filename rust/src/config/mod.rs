@@ -1,0 +1,12 @@
+//! Configuration system: a self-contained JSON parser plus the typed,
+//! validated config schema for clusters, codes and simulations.
+//!
+//! (`serde`/`serde_json` are unavailable in the offline build — see
+//! DESIGN.md; [`json`] implements the subset of JSON the project needs:
+//! full syntax, f64 numbers, no surrogate-pair escapes.)
+
+pub mod json;
+pub mod schema;
+
+pub use json::Json;
+pub use schema::{ClusterConfig, CodeConfig, RuntimeConfig, StragglerConfig};

@@ -1,0 +1,333 @@
+//! Typed configuration schema with validation.
+//!
+//! A deployment is described by a JSON document:
+//!
+//! ```json
+//! {
+//!   "code":      {"n1": 4, "k1": 2, "n2": 4, "k2": 2},
+//!   "straggler": {"model": "exponential", "mu1": 10.0, "mu2": 1.0,
+//!                 "scale": 0.02},
+//!   "runtime":   {"artifact_dir": "artifacts", "use_pjrt": true,
+//!                 "decode_threads": 4},
+//!   "batching":  {"max_batch": 8, "max_wait_ms": 5.0}
+//! }
+//! ```
+
+use crate::coding::hierarchical::HierarchicalParams;
+use crate::config::json::Json;
+use crate::sim::straggler::StragglerModel;
+use crate::{Error, Result};
+
+/// The `(n1,k1)×(n2,k2)` code parameters.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CodeConfig {
+    /// Workers per group.
+    pub n1: usize,
+    /// Inner code dimension.
+    pub k1: usize,
+    /// Number of groups.
+    pub n2: usize,
+    /// Outer code dimension.
+    pub k2: usize,
+}
+
+impl CodeConfig {
+    /// Parse from the `"code"` object.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let c = Self {
+            n1: v.req_usize("n1", "code")?,
+            k1: v.req_usize("k1", "code")?,
+            n2: v.req_usize("n2", "code")?,
+            k2: v.req_usize("k2", "code")?,
+        };
+        c.to_params().validate()?;
+        Ok(c)
+    }
+
+    /// Convert to [`HierarchicalParams`] (homogeneous).
+    pub fn to_params(&self) -> HierarchicalParams {
+        HierarchicalParams::homogeneous(self.n1, self.k1, self.n2, self.k2)
+    }
+}
+
+/// Straggler-injection configuration for the in-process cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StragglerConfig {
+    /// Worker compute-delay model.
+    pub worker: StragglerModel,
+    /// Group→master link-delay model.
+    pub link: StragglerModel,
+    /// Wall-clock seconds per model time unit (the paper's µ are in
+    /// abstract time units; `scale` maps them onto real sleeps).
+    pub scale: f64,
+    /// Whether delays are injected at all (off for pure-throughput runs).
+    pub enabled: bool,
+}
+
+impl Default for StragglerConfig {
+    fn default() -> Self {
+        Self {
+            worker: StragglerModel::exp(10.0),
+            link: StragglerModel::exp(1.0),
+            scale: 0.01,
+            enabled: true,
+        }
+    }
+}
+
+impl StragglerConfig {
+    /// Parse from the `"straggler"` object.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let model = v
+            .get("model")
+            .and_then(|m| m.as_str())
+            .unwrap_or("exponential")
+            .to_string();
+        let mu1 = v.req_f64("mu1", "straggler")?;
+        let mu2 = v.req_f64("mu2", "straggler")?;
+        if mu1 <= 0.0 || mu2 <= 0.0 {
+            return Err(Error::Config("straggler rates must be positive".into()));
+        }
+        let (worker, link) = match model.as_str() {
+            "exponential" => (StragglerModel::exp(mu1), StragglerModel::exp(mu2)),
+            "shifted" => {
+                let shift = v.req_f64("shift", "straggler")?;
+                (
+                    StragglerModel::ShiftedExponential { shift, mu: mu1 },
+                    StragglerModel::exp(mu2),
+                )
+            }
+            "deterministic" => (
+                StragglerModel::Deterministic { value: 1.0 / mu1 },
+                StragglerModel::Deterministic { value: 1.0 / mu2 },
+            ),
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown straggler model '{other}' (expected exponential|shifted|deterministic)"
+                )))
+            }
+        };
+        Ok(Self {
+            worker,
+            link,
+            scale: v.get("scale").and_then(|s| s.as_f64()).unwrap_or(0.01),
+            enabled: v.get("enabled").and_then(|e| e.as_bool()).unwrap_or(true),
+        })
+    }
+}
+
+/// PJRT runtime configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RuntimeConfig {
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifact_dir: String,
+    /// Execute worker products through PJRT (false = pure-Rust fallback,
+    /// used by tests that must run without artifacts).
+    pub use_pjrt: bool,
+    /// Threads for parallel intra-group decoding.
+    pub decode_threads: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self {
+            artifact_dir: "artifacts".to_string(),
+            use_pjrt: true,
+            decode_threads: 4,
+        }
+    }
+}
+
+impl RuntimeConfig {
+    /// Parse from the `"runtime"` object.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            artifact_dir: v
+                .get("artifact_dir")
+                .and_then(|a| a.as_str())
+                .unwrap_or(&d.artifact_dir)
+                .to_string(),
+            use_pjrt: v.get("use_pjrt").and_then(|u| u.as_bool()).unwrap_or(d.use_pjrt),
+            decode_threads: v
+                .get("decode_threads")
+                .and_then(|t| t.as_usize())
+                .unwrap_or(d.decode_threads),
+        })
+    }
+}
+
+/// Request batching policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchConfig {
+    /// Maximum requests folded into one coded job.
+    pub max_batch: usize,
+    /// Maximum time the batcher holds a request open (milliseconds).
+    pub max_wait_ms: f64,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait_ms: 5.0,
+        }
+    }
+}
+
+impl BatchConfig {
+    /// Parse from the `"batching"` object.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        let c = Self {
+            max_batch: v.get("max_batch").and_then(|b| b.as_usize()).unwrap_or(d.max_batch),
+            max_wait_ms: v
+                .get("max_wait_ms")
+                .and_then(|w| w.as_f64())
+                .unwrap_or(d.max_wait_ms),
+        };
+        if c.max_batch == 0 {
+            return Err(Error::Config("max_batch must be >= 1".into()));
+        }
+        Ok(c)
+    }
+}
+
+/// Full cluster configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Code parameters.
+    pub code: CodeConfig,
+    /// Straggler injection.
+    pub straggler: StragglerConfig,
+    /// Runtime / artifacts.
+    pub runtime: RuntimeConfig,
+    /// Batching policy.
+    pub batching: BatchConfig,
+    /// RNG seed for straggler injection.
+    pub seed: u64,
+}
+
+impl ClusterConfig {
+    /// Parse a full config document.
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let code = CodeConfig::from_json(v.req("code", "config")?)?;
+        let straggler = match v.get("straggler") {
+            Some(s) => StragglerConfig::from_json(s)?,
+            None => StragglerConfig::default(),
+        };
+        let runtime = match v.get("runtime") {
+            Some(r) => RuntimeConfig::from_json(r)?,
+            None => RuntimeConfig::default(),
+        };
+        let batching = match v.get("batching") {
+            Some(b) => BatchConfig::from_json(b)?,
+            None => BatchConfig::default(),
+        };
+        let seed = v.get("seed").and_then(|s| s.as_usize()).unwrap_or(42) as u64;
+        Ok(Self {
+            code,
+            straggler,
+            runtime,
+            batching,
+            seed,
+        })
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {path}: {e}")))?;
+        Self::from_json_text(&text)
+    }
+
+    /// A small test/demo config (no PJRT required).
+    pub fn demo(n1: usize, k1: usize, n2: usize, k2: usize) -> Self {
+        Self {
+            code: CodeConfig { n1, k1, n2, k2 },
+            straggler: StragglerConfig {
+                scale: 0.001,
+                ..StragglerConfig::default()
+            },
+            runtime: RuntimeConfig {
+                use_pjrt: false,
+                decode_threads: 2,
+                ..RuntimeConfig::default()
+            },
+            batching: BatchConfig::default(),
+            seed: 42,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"{
+        "code": {"n1": 4, "k1": 2, "n2": 3, "k2": 2},
+        "straggler": {"model": "exponential", "mu1": 10.0, "mu2": 1.0,
+                      "scale": 0.02, "enabled": true},
+        "runtime": {"artifact_dir": "artifacts", "use_pjrt": false,
+                    "decode_threads": 3},
+        "batching": {"max_batch": 4, "max_wait_ms": 2.5},
+        "seed": 7
+    }"#;
+
+    #[test]
+    fn parses_full_config() {
+        let c = ClusterConfig::from_json_text(FULL).unwrap();
+        assert_eq!(c.code, CodeConfig { n1: 4, k1: 2, n2: 3, k2: 2 });
+        assert_eq!(c.runtime.decode_threads, 3);
+        assert!(!c.runtime.use_pjrt);
+        assert_eq!(c.batching.max_batch, 4);
+        assert_eq!(c.seed, 7);
+        assert!(c.straggler.enabled);
+        assert_eq!(c.straggler.scale, 0.02);
+    }
+
+    #[test]
+    fn defaults_fill_missing_sections() {
+        let c = ClusterConfig::from_json_text(
+            r#"{"code": {"n1": 3, "k1": 2, "n2": 3, "k2": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.batching.max_batch, BatchConfig::default().max_batch);
+        assert!(c.runtime.use_pjrt);
+        assert_eq!(c.seed, 42);
+    }
+
+    #[test]
+    fn invalid_code_rejected() {
+        let bad = r#"{"code": {"n1": 2, "k1": 3, "n2": 3, "k2": 2}}"#;
+        assert!(ClusterConfig::from_json_text(bad).is_err());
+    }
+
+    #[test]
+    fn unknown_straggler_model_rejected() {
+        let bad = r#"{"code": {"n1": 3, "k1": 2, "n2": 3, "k2": 2},
+                      "straggler": {"model": "pareto", "mu1": 1, "mu2": 1}}"#;
+        assert!(ClusterConfig::from_json_text(bad).is_err());
+    }
+
+    #[test]
+    fn shifted_model_parsed() {
+        let c = ClusterConfig::from_json_text(
+            r#"{"code": {"n1": 3, "k1": 2, "n2": 3, "k2": 2},
+                "straggler": {"model": "shifted", "mu1": 5, "mu2": 1, "shift": 0.1}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.straggler.worker,
+            StragglerModel::ShiftedExponential { shift: 0.1, mu: 5.0 }
+        );
+    }
+
+    #[test]
+    fn zero_batch_rejected() {
+        let bad = r#"{"code": {"n1": 3, "k1": 2, "n2": 3, "k2": 2},
+                      "batching": {"max_batch": 0}}"#;
+        assert!(ClusterConfig::from_json_text(bad).is_err());
+    }
+}

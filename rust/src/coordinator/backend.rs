@@ -1,0 +1,153 @@
+//! Worker compute backends: PJRT artifact execution or pure Rust.
+
+use crate::linalg::{ops, Matrix};
+use crate::runtime::{PjrtRuntime, Tensor32};
+use crate::{Error, Result};
+
+/// How a worker computes its shard product.
+#[derive(Clone)]
+pub enum ComputeBackend {
+    /// Execute the AOT `worker_matvec_*` artifact through PJRT — the
+    /// production path (L1 Pallas kernel → HLO → PJRT).
+    Pjrt(PjrtRuntime),
+    /// Pure-Rust `f64` GEMM — fallback for artifact-less test runs and
+    /// the differential oracle for the PJRT path.
+    Native,
+}
+
+impl ComputeBackend {
+    /// Compute `shard · x` (`r×d · d×b`).
+    pub fn shard_product(&self, shard: &WorkerShard, x: &Matrix) -> Result<Matrix> {
+        match self {
+            ComputeBackend::Native => Ok(ops::matmul(&shard.f64, x)),
+            ComputeBackend::Pjrt(rt) => {
+                let xt = Tensor32::from_matrix(x);
+                let out = rt.execute_worker(&shard.f32, &xt)?;
+                out.to_matrix()
+            }
+        }
+    }
+
+    /// Batch widths this backend can serve for a `(r, d)` shard.
+    /// PJRT is restricted to the widths that were AOT-compiled;
+    /// native handles anything.
+    pub fn supported_batch_widths(&self, r: usize, d: usize) -> Option<Vec<usize>> {
+        match self {
+            ComputeBackend::Native => None, // unrestricted
+            ComputeBackend::Pjrt(rt) => {
+                let mut widths: Vec<usize> = rt
+                    .manifest()
+                    .entries()
+                    .iter()
+                    .filter(|e| {
+                        e.entry == "worker_task"
+                            && e.inputs.len() == 2
+                            && e.inputs[0] == vec![r, d]
+                    })
+                    .map(|e| e.inputs[1][1])
+                    .collect();
+                widths.sort_unstable();
+                widths.dedup();
+                Some(widths)
+            }
+        }
+    }
+}
+
+/// A worker's shard, stored in both precisions: `f32` feeds PJRT
+/// artifacts, `f64` feeds the native fallback. The `f64` copy is the
+/// `f32`-narrowed data widened back, so both backends compute from the
+/// *same* values and agree to f32 rounding.
+#[derive(Clone, Debug)]
+pub struct WorkerShard {
+    /// PJRT input.
+    pub f32: Tensor32,
+    /// Native-backend input (widened from the f32 data).
+    pub f64: Matrix,
+}
+
+impl WorkerShard {
+    /// Build from the encoder's `f64` shard.
+    pub fn new(shard: &Matrix) -> Result<Self> {
+        let f32 = Tensor32::from_matrix(shard);
+        let f64 = f32.to_matrix()?;
+        Ok(Self { f32, f64 })
+    }
+
+    /// Shard shape `(r, d)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.f64.rows(), self.f64.cols())
+    }
+}
+
+/// Pick the batch width to compile a batch of `b` requests against:
+/// smallest supported width ≥ `b` (requests are zero-padded up), or an
+/// error if the artifact set can't serve `b`.
+pub fn pick_batch_width(supported: Option<&[usize]>, b: usize) -> Result<usize> {
+    match supported {
+        None => Ok(b),
+        Some(ws) => ws
+            .iter()
+            .copied()
+            .find(|&w| w >= b)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no worker artifact supports batch width ≥ {b} (available: {ws:?}); \
+                     add the shape to python/compile/aot.py"
+                ))
+            }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_backend_computes_product() {
+        let mut r = Rng::new(1);
+        let shard_m = Matrix::from_fn(8, 6, |_, _| r.uniform(-1.0, 1.0));
+        let x = Matrix::from_fn(6, 2, |_, _| r.uniform(-1.0, 1.0));
+        let shard = WorkerShard::new(&shard_m).unwrap();
+        let out = ComputeBackend::Native.shard_product(&shard, &x).unwrap();
+        // f32-narrowed shard vs f64 original: small tolerance.
+        let expect = ops::matmul(&shard_m, &x);
+        assert!(out.max_abs_diff(&expect) < 1e-5);
+    }
+
+    #[test]
+    fn pick_batch_width_logic() {
+        assert_eq!(pick_batch_width(None, 3).unwrap(), 3);
+        assert_eq!(pick_batch_width(Some(&[1, 4, 8]), 1).unwrap(), 1);
+        assert_eq!(pick_batch_width(Some(&[1, 4, 8]), 3).unwrap(), 4);
+        assert_eq!(pick_batch_width(Some(&[1, 4, 8]), 8).unwrap(), 8);
+        assert!(pick_batch_width(Some(&[1, 4]), 5).is_err());
+    }
+
+    #[test]
+    fn pjrt_matches_native_backend() {
+        let dir = crate::runtime::artifact::default_artifact_dir();
+        if !crate::runtime::artifact::artifacts_available(&dir) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = PjrtRuntime::start(dir).unwrap();
+        let pjrt = ComputeBackend::Pjrt(rt);
+        let mut r = Rng::new(2);
+        // Matches artifact worker_matvec_r16_d32_b1.
+        let shard_m = Matrix::from_fn(16, 32, |_, _| r.uniform(-1.0, 1.0));
+        let x = Matrix::from_fn(32, 1, |_, _| r.uniform(-1.0, 1.0));
+        let shard = WorkerShard::new(&shard_m).unwrap();
+        let a = pjrt.shard_product(&shard, &x).unwrap();
+        let b = ComputeBackend::Native.shard_product(&shard, &x).unwrap();
+        assert!(
+            a.max_abs_diff(&b) < 1e-4,
+            "PJRT vs native differ by {}",
+            a.max_abs_diff(&b)
+        );
+        // Supported widths discovered from the manifest.
+        let widths = pjrt.supported_batch_widths(16, 32).unwrap();
+        assert!(widths.contains(&1));
+    }
+}

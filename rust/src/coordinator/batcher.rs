@@ -1,0 +1,331 @@
+//! Request batcher: folds client requests into batched coded jobs.
+//!
+//! Waits up to `max_wait_ms` for up to `max_batch` requests, stacks
+//! their vectors into one `d × b` matrix `X`, pads `b` up to a batch
+//! width the backend's artifact set supports (extra columns are zero and
+//! sliced off at reply fan-out), and hands the job to the master. One
+//! coded job then serves the whole batch — amortizing straggler waits,
+//! decodes and PJRT dispatches across requests, and shaping worker
+//! GEMMs for the MXU (DESIGN.md §Hardware-Adaptation).
+
+use crate::config::schema::BatchConfig;
+use crate::coordinator::messages::{
+    JobBroadcast, JobId, JobRequest, MasterMsg, ReplyRoute,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::linalg::Matrix;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Spawn the batcher thread.
+///
+/// `supported_widths`: `None` = any width (native backend); `Some(ws)` =
+/// pad to the smallest `w ∈ ws` with `w ≥ b` (PJRT artifact set).
+pub fn spawn(
+    d: usize,
+    config: BatchConfig,
+    supported_widths: Option<Vec<usize>>,
+    metrics: Arc<Metrics>,
+    rx: mpsc::Receiver<JobRequest>,
+    master: mpsc::Sender<MasterMsg>,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name("hiercode-batcher".to_string())
+        .spawn(move || {
+            let max_batch = effective_max_batch(config.max_batch, supported_widths.as_deref());
+            let max_wait = Duration::from_secs_f64(config.max_wait_ms / 1e3);
+            let mut next_id = 0u64;
+            let mut pending: Vec<JobRequest> = Vec::new();
+            let mut deadline: Option<Instant> = None;
+            loop {
+                // Wait for the first request (blocking) or until the
+                // current batch's deadline.
+                let msg = match deadline {
+                    None => match rx.recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => break,
+                    },
+                    Some(dl) => {
+                        let now = Instant::now();
+                        if now >= dl {
+                            None
+                        } else {
+                            match rx.recv_timeout(dl - now) {
+                                Ok(m) => Some(m),
+                                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                            }
+                        }
+                    }
+                };
+                match msg {
+                    Some(req) => {
+                        if req.x.len() != d {
+                            let _ = req.reply.send(Err(format!(
+                                "request dimension {} != cluster dimension {d}",
+                                req.x.len()
+                            )));
+                            continue;
+                        }
+                        Metrics::inc(&metrics.requests);
+                        pending.push(req);
+                        if pending.len() == 1 {
+                            deadline = Some(Instant::now() + max_wait);
+                        }
+                        if pending.len() >= max_batch {
+                            flush(
+                                &mut pending,
+                                &mut next_id,
+                                d,
+                                supported_widths.as_deref(),
+                                &master,
+                            );
+                            deadline = None;
+                        }
+                    }
+                    None => {
+                        // Deadline hit.
+                        if !pending.is_empty() {
+                            flush(
+                                &mut pending,
+                                &mut next_id,
+                                d,
+                                supported_widths.as_deref(),
+                                &master,
+                            );
+                        }
+                        deadline = None;
+                    }
+                }
+            }
+            // Channel closed: flush the tail.
+            if !pending.is_empty() {
+                flush(
+                    &mut pending,
+                    &mut next_id,
+                    d,
+                    supported_widths.as_deref(),
+                    &master,
+                );
+            }
+        })
+        .expect("failed to spawn batcher thread")
+}
+
+/// Cap the configured batch size at the largest width the artifact set
+/// can serve.
+pub fn effective_max_batch(configured: usize, supported: Option<&[usize]>) -> usize {
+    match supported {
+        None => configured,
+        Some(ws) => {
+            let max_w = ws.iter().copied().max().unwrap_or(1);
+            configured.min(max_w).max(1)
+        }
+    }
+}
+
+fn flush(
+    pending: &mut Vec<JobRequest>,
+    next_id: &mut u64,
+    d: usize,
+    supported: Option<&[usize]>,
+    master: &mpsc::Sender<MasterMsg>,
+) {
+    let b = pending.len();
+    let width = match crate::coordinator::backend::pick_batch_width(supported, b) {
+        Ok(w) => w,
+        Err(e) => {
+            for req in pending.drain(..) {
+                let _ = req.reply.send(Err(format!("{e}")));
+            }
+            return;
+        }
+    };
+    // Stack request vectors into X (d × width), zero-padded.
+    let mut x = Matrix::zeros(d, width);
+    let mut replies = Vec::with_capacity(b);
+    for (col, req) in pending.drain(..).enumerate() {
+        for (row, &v) in req.x.iter().enumerate() {
+            x[(row, col)] = v;
+        }
+        replies.push(ReplyRoute {
+            reply: req.reply,
+            column: col,
+            submitted_at: req.submitted_at,
+        });
+    }
+    let id = JobId(*next_id);
+    *next_id += 1;
+    let _ = master.send(MasterMsg::Batch {
+        job: JobBroadcast {
+            id,
+            x: Arc::new(x),
+        },
+        replies,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_request(d: usize, v: f64) -> (JobRequest, mpsc::Receiver<Result<Vec<f64>, String>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            JobRequest {
+                x: vec![v; d],
+                reply: tx,
+                submitted_at: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    fn recv_batch(master_rx: &mpsc::Receiver<MasterMsg>) -> (JobBroadcast, Vec<ReplyRoute>) {
+        match master_rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            MasterMsg::Batch { job, replies } => (job, replies),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let _h = spawn(
+            3,
+            BatchConfig {
+                max_batch: 2,
+                max_wait_ms: 10_000.0, // deadline never fires in this test
+            },
+            None,
+            metrics,
+            req_rx,
+            master_tx,
+        );
+        let (r1, _rx1) = mk_request(3, 1.0);
+        let (r2, _rx2) = mk_request(3, 2.0);
+        req_tx.send(r1).unwrap();
+        req_tx.send(r2).unwrap();
+        let (job, replies) = recv_batch(&master_rx);
+        assert_eq!(job.x.shape(), (3, 2));
+        assert_eq!(job.x[(0, 0)], 1.0);
+        assert_eq!(job.x[(0, 1)], 2.0);
+        assert_eq!(replies.len(), 2);
+        assert_eq!(replies[1].column, 1);
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let _h = spawn(
+            2,
+            BatchConfig {
+                max_batch: 100,
+                max_wait_ms: 20.0,
+            },
+            None,
+            Arc::new(Metrics::new()),
+            req_rx,
+            master_tx,
+        );
+        let (r1, _rx1) = mk_request(2, 5.0);
+        req_tx.send(r1).unwrap();
+        let t0 = Instant::now();
+        let (job, replies) = recv_batch(&master_rx);
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        assert_eq!(job.x.shape(), (2, 1));
+        assert_eq!(replies.len(), 1);
+    }
+
+    #[test]
+    fn pads_to_supported_width() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let _h = spawn(
+            2,
+            BatchConfig {
+                max_batch: 3,
+                max_wait_ms: 20.0,
+            },
+            Some(vec![1, 4, 8]),
+            Arc::new(Metrics::new()),
+            req_rx,
+            master_tx,
+        );
+        for v in [1.0, 2.0, 3.0] {
+            let (r, _rx) = mk_request(2, v);
+            req_tx.send(r).unwrap();
+        }
+        let (job, replies) = recv_batch(&master_rx);
+        // 3 requests padded to width 4.
+        assert_eq!(job.x.shape(), (2, 4));
+        assert_eq!(job.x[(0, 3)], 0.0, "pad column must be zero");
+        assert_eq!(replies.len(), 3);
+    }
+
+    #[test]
+    fn wrong_dimension_rejected_immediately() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, _master_rx) = mpsc::channel();
+        let _h = spawn(
+            4,
+            BatchConfig::default(),
+            None,
+            Arc::new(Metrics::new()),
+            req_rx,
+            master_tx,
+        );
+        let (r, rx) = mk_request(3, 1.0); // wrong d
+        req_tx.send(r).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.is_err());
+    }
+
+    #[test]
+    fn effective_max_batch_caps_at_artifact_width() {
+        assert_eq!(effective_max_batch(16, Some(&[1, 4, 8])), 8);
+        assert_eq!(effective_max_batch(4, Some(&[1, 4, 8])), 4);
+        assert_eq!(effective_max_batch(16, None), 16);
+    }
+
+    #[test]
+    fn requests_never_dropped_or_reordered() {
+        // Property: across many requests, each gets exactly its own
+        // column in submit order within a batch.
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let _h = spawn(
+            1,
+            BatchConfig {
+                max_batch: 4,
+                max_wait_ms: 50.0,
+            },
+            None,
+            Arc::new(Metrics::new()),
+            req_rx,
+            master_tx,
+        );
+        let n = 25;
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let (r, rx) = mk_request(1, i as f64);
+            req_tx.send(r).unwrap();
+            rxs.push(rx);
+        }
+        let mut seen = 0;
+        while seen < n {
+            let (job, replies) = recv_batch(&master_rx);
+            for route in &replies {
+                let val = job.x[(0, route.column)];
+                assert_eq!(val, seen as f64, "request order preserved");
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, n);
+    }
+}

@@ -1,0 +1,387 @@
+//! The public facade: launch a cluster around a matrix `A`, submit
+//! requests, collect results, read metrics, shut down cleanly.
+
+use crate::coding::HierarchicalCode;
+use crate::coordinator::backend::{ComputeBackend, WorkerShard};
+use crate::coordinator::batcher;
+use crate::coordinator::fault::FaultConfig;
+use crate::coordinator::master;
+use crate::coordinator::messages::{JobRequest, MasterMsg, SubmasterMsg, WorkerCmd};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::submaster::{self, LinkDelay};
+use crate::coordinator::worker::{self, WorkerDelay};
+use crate::config::schema::ClusterConfig;
+use crate::linalg::Matrix;
+use crate::runtime::PjrtRuntime;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+/// Handle to one in-flight request.
+pub struct JobHandle {
+    rx: mpsc::Receiver<std::result::Result<Vec<f64>, String>>,
+}
+
+impl JobHandle {
+    /// Block until the result arrives.
+    pub fn wait(self) -> Result<Vec<f64>> {
+        match self.rx.recv() {
+            Ok(Ok(y)) => Ok(y),
+            Ok(Err(msg)) => Err(Error::Coordinator(msg)),
+            Err(_) => Err(Error::Coordinator(
+                "cluster shut down before replying".into(),
+            )),
+        }
+    }
+
+    /// Block with a timeout.
+    pub fn wait_timeout(self, timeout: std::time::Duration) -> Result<Vec<f64>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(y)) => Ok(y),
+            Ok(Err(msg)) => Err(Error::Coordinator(msg)),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(Error::Coordinator("request timed out".into()))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(Error::Coordinator(
+                "cluster shut down before replying".into(),
+            )),
+        }
+    }
+}
+
+/// A running hierarchical coded-computation cluster.
+pub struct Cluster {
+    req_tx: Option<mpsc::Sender<JobRequest>>,
+    master_tx: mpsc::Sender<MasterMsg>,
+    metrics: Arc<Metrics>,
+    threads: Vec<thread::JoinHandle<()>>,
+    d: usize,
+    m: usize,
+    code: Arc<HierarchicalCode>,
+}
+
+impl Cluster {
+    /// Launch a cluster serving products with `a` (`m × d`), using the
+    /// given config and no faults.
+    pub fn launch(config: &ClusterConfig, a: &Matrix) -> Result<Self> {
+        Self::launch_with_faults(config, a, FaultConfig::none())
+    }
+
+    /// Launch with fault injection (tests / chaos runs).
+    pub fn launch_with_faults(
+        config: &ClusterConfig,
+        a: &Matrix,
+        faults: FaultConfig,
+    ) -> Result<Self> {
+        let p = config.code.to_params();
+        let code = Arc::new(HierarchicalCode::new(p.clone())?);
+        let (m, d) = a.shape();
+        let div = code.required_row_divisor();
+        if m % div != 0 {
+            return Err(Error::InvalidParams(format!(
+                "matrix rows {m} not divisible by k1·k2 ({div})"
+            )));
+        }
+        // Backend.
+        let backend = if config.runtime.use_pjrt {
+            ComputeBackend::Pjrt(PjrtRuntime::start(config.runtime.artifact_dir.clone())?)
+        } else {
+            ComputeBackend::Native
+        };
+        // Encode A (setup path, f64) and narrow shards for the workers.
+        let grouped = code.encode_grouped(a)?;
+        let shard_shape = (grouped[0][0].rows(), grouped[0][0].cols());
+        let supported_widths =
+            backend.supported_batch_widths(shard_shape.0, shard_shape.1);
+        if let Some(ws) = &supported_widths {
+            if ws.is_empty() {
+                return Err(Error::Runtime(format!(
+                    "no worker artifact for shard shape {}x{} — \
+                     add (r={}, d={}, b=…) to python/compile/aot.py WORKER_SPECS \
+                     and re-run `make artifacts`",
+                    shard_shape.0, shard_shape.1, shard_shape.0, shard_shape.1
+                )));
+            }
+        }
+
+        let metrics = Arc::new(Metrics::new());
+        let mut seed_rng = Rng::new(config.seed);
+        let (master_tx, master_rx) = mpsc::channel::<MasterMsg>();
+        let mut threads = Vec::new();
+        let mut submaster_txs = Vec::with_capacity(p.n2);
+
+        for (g, group_shards) in grouped.iter().enumerate() {
+            let (sub_tx, sub_rx) = mpsc::channel::<SubmasterMsg>();
+            let cancel = Arc::new(crate::coordinator::messages::CancelSet::new());
+            // Workers of this group.
+            let mut worker_txs = Vec::with_capacity(group_shards.len());
+            for (j, shard) in group_shards.iter().enumerate() {
+                let (w_tx, w_rx) = mpsc::channel::<WorkerCmd>();
+                let delay = WorkerDelay {
+                    model: config.straggler.worker,
+                    scale: config.straggler.scale,
+                    enabled: config.straggler.enabled,
+                };
+                threads.push(worker::spawn(
+                    g,
+                    j,
+                    WorkerShard::new(shard)?,
+                    backend.clone(),
+                    delay,
+                    faults.worker_dead(g, j),
+                    Arc::clone(&cancel),
+                    seed_rng.split(),
+                    w_rx,
+                    sub_tx.clone(),
+                ));
+                worker_txs.push(w_tx);
+            }
+            let link = LinkDelay {
+                model: config.straggler.link,
+                scale: config.straggler.scale,
+                enabled: config.straggler.enabled,
+            };
+            threads.push(submaster::spawn(
+                g,
+                Arc::clone(&code),
+                worker_txs,
+                link,
+                faults.link_dead(g),
+                Arc::clone(&cancel),
+                Arc::clone(&metrics),
+                seed_rng.split(),
+                sub_rx,
+                master_tx.clone(),
+            ));
+            submaster_txs.push(sub_tx);
+        }
+        threads.push(master::spawn(
+            Arc::clone(&code),
+            submaster_txs,
+            m,
+            Arc::clone(&metrics),
+            master_rx,
+        ));
+        let (req_tx, req_rx) = mpsc::channel::<JobRequest>();
+        threads.push(batcher::spawn(
+            d,
+            config.batching.clone(),
+            supported_widths,
+            Arc::clone(&metrics),
+            req_rx,
+            master_tx.clone(),
+        ));
+        crate::log_info!(
+            "cluster",
+            "launched ({},{})x({},{}) over {}x{} matrix, backend={}, {} threads",
+            p.n1[0],
+            p.k1[0],
+            p.n2,
+            p.k2,
+            m,
+            d,
+            if config.runtime.use_pjrt { "pjrt" } else { "native" },
+            threads.len()
+        );
+        Ok(Self {
+            req_tx: Some(req_tx),
+            master_tx,
+            metrics,
+            threads,
+            d,
+            m,
+            code,
+        })
+    }
+
+    /// Submit a request `x` (`d` elements); returns a handle to wait on
+    /// for `A·x` (`m` elements).
+    pub fn submit(&self, x: Vec<f64>) -> Result<JobHandle> {
+        if x.len() != self.d {
+            return Err(Error::InvalidParams(format!(
+                "request dimension {} != cluster dimension {}",
+                x.len(),
+                self.d
+            )));
+        }
+        let (reply, rx) = mpsc::channel();
+        self.req_tx
+            .as_ref()
+            .expect("cluster running")
+            .send(JobRequest {
+                x,
+                reply,
+                submitted_at: std::time::Instant::now(),
+            })
+            .map_err(|_| Error::Coordinator("cluster is shutting down".into()))?;
+        Ok(JobHandle { rx })
+    }
+
+    /// Output dimension `m`.
+    pub fn output_dim(&self) -> usize {
+        self.m
+    }
+
+    /// Input dimension `d`.
+    pub fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    /// The cluster's code.
+    pub fn code(&self) -> &HierarchicalCode {
+        &self.code
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: stop accepting requests, stop all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        // Closing the request channel stops the batcher.
+        self.req_tx.take();
+        let _ = self.master_tx.send(MasterMsg::Shutdown);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+
+    fn test_matrix(m: usize, d: usize, seed: u64) -> Matrix {
+        let mut r = Rng::new(seed);
+        Matrix::from_fn(m, d, |_, _| r.uniform(-1.0, 1.0))
+    }
+
+    #[test]
+    fn end_to_end_native_single_request() {
+        let config = ClusterConfig::demo(3, 2, 3, 2);
+        let a = test_matrix(8, 4, 1);
+        let cluster = Cluster::launch(&config, &a).unwrap();
+        let x = vec![1.0, -0.5, 0.25, 2.0];
+        let y = cluster.submit(x.clone()).unwrap().wait().unwrap();
+        let expect = ops::matvec(&a, &x);
+        assert_eq!(y.len(), 8);
+        for (i, (&got, &want)) in y.iter().zip(expect.iter()).enumerate() {
+            assert!((got - want).abs() < 1e-4, "row {i}: {got} vs {want}");
+        }
+        let m = cluster.metrics();
+        assert_eq!(m.completed, 1);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn many_requests_batch_and_complete() {
+        let config = ClusterConfig::demo(4, 2, 4, 2);
+        let a = test_matrix(16, 4, 2);
+        let cluster = Cluster::launch(&config, &a).unwrap();
+        let mut handles = Vec::new();
+        let mut expects = Vec::new();
+        for i in 0..20 {
+            let mut r = Rng::new(100 + i);
+            let x: Vec<f64> = (0..4).map(|_| r.uniform(-1.0, 1.0)).collect();
+            expects.push(ops::matvec(&a, &x));
+            handles.push(cluster.submit(x).unwrap());
+        }
+        for (h, expect) in handles.into_iter().zip(expects) {
+            let y = h.wait().unwrap();
+            for (got, want) in y.iter().zip(expect.iter()) {
+                assert!((got - want).abs() < 1e-3);
+            }
+        }
+        let m = cluster.metrics();
+        assert_eq!(m.requests, 20);
+        assert!(m.jobs <= 20, "batching should fold requests into jobs");
+        assert_eq!(m.completed, m.jobs);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn survives_tolerable_faults() {
+        let config = ClusterConfig::demo(3, 2, 3, 2);
+        let a = test_matrix(8, 4, 3);
+        let faults = FaultConfig::none()
+            .with_dead_workers(&[(0, 0)]) // group 0 down to exactly k1
+            .with_dead_links(&[2]); // group 2 unreachable
+        assert!(faults.survivable(3, 2, 3, 2));
+        let cluster = Cluster::launch_with_faults(&config, &a, faults).unwrap();
+        let x = vec![1.0, 1.0, 1.0, 1.0];
+        let y = cluster
+            .submit(x.clone())
+            .unwrap()
+            .wait_timeout(std::time::Duration::from_secs(30))
+            .unwrap();
+        let expect = ops::matvec(&a, &x);
+        for (got, want) in y.iter().zip(expect.iter()) {
+            assert!((got - want).abs() < 1e-4);
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn stalls_cleanly_under_excess_faults() {
+        let config = ClusterConfig::demo(3, 2, 3, 2);
+        let a = test_matrix(8, 4, 4);
+        let faults = FaultConfig::none().with_dead_links(&[0, 1]);
+        assert!(!faults.survivable(3, 2, 3, 2));
+        let cluster = Cluster::launch_with_faults(&config, &a, faults).unwrap();
+        let res = cluster
+            .submit(vec![1.0; 4])
+            .unwrap()
+            .wait_timeout(std::time::Duration::from_millis(500));
+        assert!(res.is_err(), "must time out, not return wrong data");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn wrong_dimension_rejected() {
+        let config = ClusterConfig::demo(3, 2, 3, 2);
+        let a = test_matrix(8, 4, 5);
+        let cluster = Cluster::launch(&config, &a).unwrap();
+        assert!(cluster.submit(vec![1.0; 5]).is_err());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn indivisible_matrix_rejected() {
+        let config = ClusterConfig::demo(3, 2, 3, 2);
+        let a = test_matrix(10, 4, 6); // 10 % 4 != 0
+        assert!(Cluster::launch(&config, &a).is_err());
+    }
+
+    #[test]
+    fn straggler_injection_still_correct() {
+        // With real exponential delays enabled, answers stay exact.
+        let mut config = ClusterConfig::demo(3, 2, 3, 2);
+        config.straggler.enabled = true;
+        config.straggler.scale = 0.002; // small but nonzero sleeps
+        let a = test_matrix(8, 4, 7);
+        let cluster = Cluster::launch(&config, &a).unwrap();
+        let x = vec![0.5, -1.0, 2.0, 0.0];
+        let y = cluster.submit(x.clone()).unwrap().wait().unwrap();
+        let expect = ops::matvec(&a, &x);
+        for (got, want) in y.iter().zip(expect.iter()) {
+            assert!((got - want).abs() < 1e-4);
+        }
+        let m = cluster.metrics();
+        assert!(m.latency_mean > 0.0);
+        cluster.shutdown();
+    }
+}

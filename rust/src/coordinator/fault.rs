@@ -1,0 +1,85 @@
+//! Failure injection for the in-process cluster.
+
+use std::collections::HashSet;
+
+/// Faults to inject into a launched cluster (fixed for its lifetime).
+#[derive(Clone, Debug, Default)]
+pub struct FaultConfig {
+    /// Workers `(group, index)` that never produce results.
+    pub dead_workers: HashSet<(usize, usize)>,
+    /// Groups whose uplink to the master is severed (submaster decodes
+    /// but deliveries are dropped).
+    pub dead_links: HashSet<usize>,
+}
+
+impl FaultConfig {
+    /// No faults.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Kill specific workers.
+    pub fn with_dead_workers(mut self, ws: &[(usize, usize)]) -> Self {
+        self.dead_workers.extend(ws.iter().copied());
+        self
+    }
+
+    /// Sever specific group uplinks.
+    pub fn with_dead_links(mut self, gs: &[usize]) -> Self {
+        self.dead_links.extend(gs.iter().copied());
+        self
+    }
+
+    /// Is this worker dead?
+    pub fn worker_dead(&self, group: usize, index: usize) -> bool {
+        self.dead_workers.contains(&(group, index))
+    }
+
+    /// Is this group's uplink dead?
+    pub fn link_dead(&self, group: usize) -> bool {
+        self.dead_links.contains(&group)
+    }
+
+    /// Whether an `(n1,k1)×(n2,k2)` deployment can still serve requests
+    /// under these faults (used by tests to assert expected outcomes).
+    pub fn survivable(&self, n1: usize, k1: usize, n2: usize, k2: usize) -> bool {
+        let healthy_groups = (0..n2)
+            .filter(|&g| {
+                if self.link_dead(g) {
+                    return false;
+                }
+                let alive = (0..n1).filter(|&w| !self.worker_dead(g, w)).count();
+                alive >= k1
+            })
+            .count();
+        healthy_groups >= k2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn survivability_logic() {
+        let f = FaultConfig::none();
+        assert!(f.survivable(3, 2, 3, 2));
+
+        // One group fully dead: still k2 = 2 of 3.
+        let f = FaultConfig::none().with_dead_links(&[0]);
+        assert!(f.survivable(3, 2, 3, 2));
+
+        // Two dead links: only 1 < k2 healthy groups.
+        let f = FaultConfig::none().with_dead_links(&[0, 1]);
+        assert!(!f.survivable(3, 2, 3, 2));
+
+        // Worker attrition below k1 in two groups.
+        let f = FaultConfig::none()
+            .with_dead_workers(&[(0, 0), (0, 1), (1, 0), (1, 1)]);
+        assert!(!f.survivable(3, 2, 3, 2));
+
+        // Attrition to exactly k1 survives.
+        let f = FaultConfig::none().with_dead_workers(&[(0, 0)]);
+        assert!(f.survivable(3, 2, 3, 2));
+    }
+}

@@ -1,0 +1,230 @@
+//! Master thread: the job state machine at the root of Fig. 1.
+//!
+//! Broadcasts batched jobs to all submasters, collects group results,
+//! and at the `k2`-th delivery performs the **cross-group decode**
+//! (recovering `A·X`), splits the batch back into per-request columns,
+//! and fans the replies out. Late group deliveries are discarded.
+
+use crate::coding::HierarchicalCode;
+use crate::coordinator::messages::{
+    JobBroadcast, JobId, MasterMsg, ReplyRoute, SubmasterMsg,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::linalg::Matrix;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+struct JobState {
+    /// Collected `(group, Ã_i·X)` results.
+    groups: Vec<(usize, Matrix)>,
+    /// Reply routing (one per batched request column).
+    replies: Vec<ReplyRoute>,
+    /// Set once decoded.
+    done: bool,
+    /// Dispatch time (for job-level latency).
+    dispatched_at: Instant,
+}
+
+/// Spawn the master thread.
+pub fn spawn(
+    code: Arc<HierarchicalCode>,
+    submasters: Vec<mpsc::Sender<SubmasterMsg>>,
+    out_rows: usize,
+    metrics: Arc<Metrics>,
+    rx: mpsc::Receiver<MasterMsg>,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name("hiercode-master".to_string())
+        .spawn(move || {
+            let k2 = code.params().k2;
+            let mut jobs: HashMap<JobId, JobState> = HashMap::new();
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    MasterMsg::Shutdown => {
+                        for sm in &submasters {
+                            let _ = sm.send(SubmasterMsg::Shutdown);
+                        }
+                        break;
+                    }
+                    MasterMsg::Batch { job, replies } => {
+                        Metrics::inc(&metrics.jobs);
+                        jobs.insert(
+                            job.id,
+                            JobState {
+                                groups: Vec::with_capacity(k2),
+                                replies,
+                                done: false,
+                                dispatched_at: Instant::now(),
+                            },
+                        );
+                        for sm in &submasters {
+                            let _ = sm.send(SubmasterMsg::Job(JobBroadcast {
+                                id: job.id,
+                                x: Arc::clone(&job.x),
+                            }));
+                        }
+                    }
+                    MasterMsg::Group(gr) => {
+                        let Some(state) = jobs.get_mut(&gr.id) else {
+                            continue; // late delivery for a finished job
+                        };
+                        if state.done {
+                            continue;
+                        }
+                        state.groups.push((gr.group, gr.data));
+                        if state.groups.len() < k2 {
+                            continue;
+                        }
+                        state.done = true;
+                        // k2-th fastest group arrived: cross-group decode.
+                        let t0 = Instant::now();
+                        let decode = code.decode_cross(&state.groups);
+                        match decode {
+                            Ok((result, flops)) => {
+                                Metrics::add(&metrics.decode_flops, flops);
+                                metrics.record_decode_latency(t0.elapsed().as_secs_f64());
+                                debug_assert_eq!(result.rows(), out_rows);
+                                // Count completion *before* fanning out so
+                                // clients never observe a reply while the
+                                // job still reads as in-flight.
+                                Metrics::inc(&metrics.completed);
+                                // Fan out per-request columns.
+                                for route in &state.replies {
+                                    let col: Vec<f64> = (0..result.rows())
+                                        .map(|r| result[(r, route.column)])
+                                        .collect();
+                                    metrics.record_latency(
+                                        route.submitted_at.elapsed().as_secs_f64(),
+                                    );
+                                    let _ = route.reply.send(Ok(col));
+                                }
+                                crate::log_debug!(
+                                    "master",
+                                    "job {:?} done in {:.1}ms ({} groups used)",
+                                    gr.id,
+                                    state.dispatched_at.elapsed().as_secs_f64() * 1e3,
+                                    k2
+                                );
+                            }
+                            Err(e) => {
+                                Metrics::inc(&metrics.failed);
+                                for route in &state.replies {
+                                    let _ = route
+                                        .reply
+                                        .send(Err(format!("cross-group decode failed: {e}")));
+                                }
+                            }
+                        }
+                        // Trim: keep the entry so later deliveries are
+                        // recognized as late, but free the payloads.
+                        let state = jobs.get_mut(&gr.id).expect("state exists");
+                        state.groups.clear();
+                        state.groups.shrink_to_fit();
+                        state.replies.clear();
+                    }
+                }
+            }
+        })
+        .expect("failed to spawn master thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::GroupResult;
+    use crate::linalg::ops;
+    use crate::util::rng::Rng;
+
+    /// Drive the master with synthetic group results.
+    #[test]
+    fn master_decodes_at_k2th_group_and_replies() {
+        let code = Arc::new(HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap());
+        let mut r = Rng::new(8);
+        let a = Matrix::from_fn(8, 3, |_, _| r.uniform(-1.0, 1.0));
+        let x = Matrix::from_fn(3, 2, |_, _| r.uniform(-1.0, 1.0));
+        let expect = ops::matmul(&a, &x);
+        // Build group results Ã_i·X from the code's own encode: the
+        // systematic inner prefix (first k1 shards) stacks to Ã_i.
+        let coded_groups = {
+            let grouped = code.encode_grouped(&a).unwrap();
+            (0..3)
+                .map(|i| Matrix::vstack(&grouped[i][..2].to_vec()).unwrap())
+                .collect::<Vec<_>>()
+        };
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let h = spawn(
+            Arc::clone(&code),
+            vec![], // no submasters needed: we inject group results
+            8,
+            Arc::clone(&metrics),
+            master_rx,
+        );
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let id = JobId(9);
+        master_tx
+            .send(MasterMsg::Batch {
+                job: JobBroadcast {
+                    id,
+                    x: Arc::new(x.clone()),
+                },
+                replies: vec![
+                    ReplyRoute {
+                        reply: reply_tx.clone(),
+                        column: 0,
+                        submitted_at: Instant::now(),
+                    },
+                    ReplyRoute {
+                        reply: reply_tx,
+                        column: 1,
+                        submitted_at: Instant::now(),
+                    },
+                ],
+            })
+            .unwrap();
+        // Deliver groups 2 and 1 (parity + systematic) — k2 = 2.
+        for &g in &[2usize, 1usize] {
+            master_tx
+                .send(MasterMsg::Group(GroupResult {
+                    id,
+                    group: g,
+                    data: ops::matmul(&coded_groups[g], &x),
+                    decode_flops: 0,
+                    finished_at: Instant::now(),
+                }))
+                .unwrap();
+        }
+        let r0 = reply_rx
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+        let r1 = reply_rx
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+        for (i, &v) in r0.iter().enumerate() {
+            assert!((v - expect[(i, 0)]).abs() < 1e-4, "col0[{i}]: {v}");
+        }
+        for (i, &v) in r1.iter().enumerate() {
+            assert!((v - expect[(i, 1)]).abs() < 1e-4, "col1[{i}]: {v}");
+        }
+        // Late third group is ignored.
+        master_tx
+            .send(MasterMsg::Group(GroupResult {
+                id,
+                group: 0,
+                data: ops::matmul(&coded_groups[0], &x),
+                decode_flops: 0,
+                finished_at: Instant::now(),
+            }))
+            .unwrap();
+        master_tx.send(MasterMsg::Shutdown).unwrap();
+        h.join().unwrap();
+        let s = metrics.snapshot();
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.failed, 0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Protocol types flowing between coordinator threads.
+
+use crate::linalg::Matrix;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Identifies one batched coded job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+/// A client request: multiply the cluster's matrix `A` by `x`.
+#[derive(Debug)]
+pub struct JobRequest {
+    /// The request vector (`d` elements).
+    pub x: Vec<f64>,
+    /// Where to deliver the result (`m` elements) or an error message.
+    pub reply: mpsc::Sender<Result<Vec<f64>, String>>,
+    /// Client-side submit timestamp (for end-to-end latency metrics).
+    pub submitted_at: Instant,
+}
+
+/// A batched job broadcast from master to submasters.
+#[derive(Clone, Debug)]
+pub struct JobBroadcast {
+    /// Job id.
+    pub id: JobId,
+    /// The batched request matrix, `d × b` (shared, read-only).
+    pub x: Arc<Matrix>,
+}
+
+/// Worker → submaster: one shard product.
+#[derive(Debug)]
+pub struct WorkerDone {
+    /// Job id.
+    pub id: JobId,
+    /// In-group worker index `j`.
+    pub index: usize,
+    /// The product `Â_{i,j} · X` (`r × b`).
+    pub data: Matrix,
+}
+
+/// Submaster → master: one group's decoded subtask result.
+#[derive(Debug)]
+pub struct GroupResult {
+    /// Job id.
+    pub id: JobId,
+    /// Group index `i`.
+    pub group: usize,
+    /// The decoded `Ã_i · X` (`(m/k2) × b`).
+    pub data: Matrix,
+    /// Flops the submaster spent decoding (metrics/§IV validation).
+    pub decode_flops: u64,
+    /// When the group finished its subtask (`S_i`, before link delay).
+    pub finished_at: Instant,
+}
+
+/// Commands to a worker thread.
+#[derive(Debug)]
+pub enum WorkerCmd {
+    /// Compute this job's shard product.
+    Compute(JobBroadcast),
+    /// Exit the thread.
+    Shutdown,
+}
+
+/// Everything a submaster thread receives (single-queue actor).
+#[derive(Debug)]
+pub enum SubmasterMsg {
+    /// New job from the master.
+    Job(JobBroadcast),
+    /// A worker finished.
+    Done(WorkerDone),
+    /// Exit.
+    Shutdown,
+}
+
+/// Everything the master thread receives.
+#[derive(Debug)]
+pub enum MasterMsg {
+    /// A batched job from the batcher, with the requests that compose
+    /// it: `(reply channel, column, submit time)` per request.
+    Batch {
+        /// The job.
+        job: JobBroadcast,
+        /// Reply routing: one entry per column of `X`.
+        replies: Vec<ReplyRoute>,
+    },
+    /// A group result arrived.
+    Group(GroupResult),
+    /// Exit.
+    Shutdown,
+}
+
+/// Group-local cancellation registry (§Perf): the submaster marks a job
+/// the moment its `k1`-th product arrives; workers still sleeping or
+/// queued for that job skip the compute entirely. The paper's scheme
+/// only ever *discards* straggler results — cancelling the unneeded
+/// work is pure savings (on a shared-core testbed it directly shortens
+/// the critical path).
+#[derive(Debug, Default)]
+pub struct CancelSet {
+    inner: std::sync::RwLock<std::collections::HashSet<JobId>>,
+}
+
+impl CancelSet {
+    /// Fresh, empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark `id` as no-longer-needed.
+    pub fn mark(&self, id: JobId) {
+        let mut set = self.inner.write().expect("cancel set poisoned");
+        // Unbounded growth guard: stale entries only cost a wasted
+        // compute if dropped, never correctness.
+        if set.len() > 4096 {
+            set.clear();
+        }
+        set.insert(id);
+    }
+
+    /// True if `id` has been marked.
+    pub fn is_cancelled(&self, id: JobId) -> bool {
+        self.inner.read().expect("cancel set poisoned").contains(&id)
+    }
+}
+
+/// Where one column of a batched result goes.
+#[derive(Debug)]
+pub struct ReplyRoute {
+    /// The client's reply channel.
+    pub reply: mpsc::Sender<Result<Vec<f64>, String>>,
+    /// Which column of the batched result belongs to this client.
+    pub column: usize,
+    /// Client submit time.
+    pub submitted_at: Instant,
+}

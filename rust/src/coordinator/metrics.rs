@@ -1,0 +1,149 @@
+//! Cluster metrics: counters and latency histograms, shared across
+//! coordinator threads.
+
+use crate::util::stats::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metrics sink. Counters are lock-free; histograms take a
+/// short mutex (recorded once per job, not per message).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Client requests accepted.
+    pub requests: AtomicU64,
+    /// Batched jobs dispatched.
+    pub jobs: AtomicU64,
+    /// Jobs completed successfully.
+    pub completed: AtomicU64,
+    /// Jobs failed (insufficient groups, decode error).
+    pub failed: AtomicU64,
+    /// Worker products computed.
+    pub worker_products: AtomicU64,
+    /// Worker products discarded (arrived after their group decoded).
+    pub late_products: AtomicU64,
+    /// Intra-group decodes performed.
+    pub group_decodes: AtomicU64,
+    /// Total decode flops (intra + cross), for §IV accounting.
+    pub decode_flops: AtomicU64,
+    /// End-to-end request latency (submit → reply).
+    latency: Mutex<Histogram>,
+    /// Decode-only latency at the master.
+    decode_latency: Mutex<Histogram>,
+}
+
+impl Metrics {
+    /// Fresh metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one end-to-end request latency.
+    pub fn record_latency(&self, seconds: f64) {
+        self.latency.lock().expect("metrics poisoned").record(seconds);
+    }
+
+    /// Record one master-side decode latency.
+    pub fn record_decode_latency(&self, seconds: f64) {
+        self.decode_latency
+            .lock()
+            .expect("metrics poisoned")
+            .record(seconds);
+    }
+
+    /// Snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latency.lock().expect("metrics poisoned");
+        let dec = self.decode_latency.lock().expect("metrics poisoned");
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            jobs: self.jobs.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            worker_products: self.worker_products.load(Ordering::Relaxed),
+            late_products: self.late_products.load(Ordering::Relaxed),
+            group_decodes: self.group_decodes.load(Ordering::Relaxed),
+            decode_flops: self.decode_flops.load(Ordering::Relaxed),
+            latency_mean: lat.mean(),
+            latency_p50: lat.quantile(0.5),
+            latency_p99: lat.quantile(0.99),
+            decode_mean: dec.mean(),
+        }
+    }
+
+    /// Bump a counter.
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add to a counter.
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time view of [`Metrics`].
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Client requests accepted.
+    pub requests: u64,
+    /// Batched jobs dispatched.
+    pub jobs: u64,
+    /// Jobs completed.
+    pub completed: u64,
+    /// Jobs failed.
+    pub failed: u64,
+    /// Worker products computed.
+    pub worker_products: u64,
+    /// Late (discarded) products.
+    pub late_products: u64,
+    /// Intra-group decodes.
+    pub group_decodes: u64,
+    /// Total decode flops.
+    pub decode_flops: u64,
+    /// Mean end-to-end latency (s).
+    pub latency_mean: f64,
+    /// Median end-to-end latency (s).
+    pub latency_p50: f64,
+    /// p99 end-to-end latency (s).
+    pub latency_p99: f64,
+    /// Mean master decode latency (s).
+    pub decode_mean: f64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "requests:        {}", self.requests)?;
+        writeln!(f, "jobs:            {} ({} completed, {} failed)", self.jobs, self.completed, self.failed)?;
+        writeln!(f, "worker products: {} ({} late/discarded)", self.worker_products, self.late_products)?;
+        writeln!(f, "group decodes:   {}", self.group_decodes)?;
+        writeln!(f, "decode flops:    {}", self.decode_flops)?;
+        writeln!(
+            f,
+            "latency:         mean {:.3}ms  p50 {:.3}ms  p99 {:.3}ms",
+            self.latency_mean * 1e3,
+            self.latency_p50 * 1e3,
+            self.latency_p99 * 1e3
+        )?;
+        write!(f, "decode latency:  mean {:.3}ms", self.decode_mean * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_snapshot() {
+        let m = Metrics::new();
+        Metrics::inc(&m.requests);
+        Metrics::inc(&m.requests);
+        Metrics::add(&m.decode_flops, 100);
+        m.record_latency(0.002);
+        m.record_latency(0.004);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.decode_flops, 100);
+        assert!((s.latency_mean - 0.003).abs() < 1e-9);
+        assert!(!format!("{s}").is_empty());
+    }
+}

@@ -1,0 +1,41 @@
+//! The runnable system: an in-process hierarchical coded-computation
+//! cluster (Fig. 1's topology as threads + channels).
+//!
+//! ```text
+//!  client ─▶ Batcher ─▶ Master ──▶ Submaster(1) ──▶ Worker(1,1..n1)
+//!    ▲          │          │  └──▶ Submaster(…) ──▶ Worker(…)
+//!    └──────────┴──results─┘       (intra-group decode at k1-th
+//!                                   result, uplink to master)
+//! ```
+//!
+//! * [`batcher`] — folds incoming requests into batched jobs (`X` with
+//!   up to `max_batch` columns) so worker products feed MXU-shaped
+//!   artifacts;
+//! * [`backend`] — the worker's compute: PJRT artifact execution or the
+//!   pure-Rust fallback;
+//! * [`worker`] — one thread per `w(i,j)`: straggler-delay injection,
+//!   shard product, result upload;
+//! * [`submaster`] — one thread per group: collects the `k1` fastest,
+//!   intra-group decode, uplink (with ToR delay) to the master;
+//! * [`master`] — job state machine: collects the `k2` fastest groups,
+//!   cross-group decode, response fan-out;
+//! * [`cluster`] — the public facade: [`cluster::Cluster::launch`],
+//!   [`cluster::Cluster::submit`], metrics, shutdown;
+//! * [`metrics`] — counters and latency histograms;
+//! * [`fault`] — failure injection (dead workers / severed uplinks).
+//!
+//! Python never appears here: workers execute AOT artifacts through
+//! [`crate::runtime`], everything else is Rust.
+
+pub mod backend;
+pub mod batcher;
+pub mod cluster;
+pub mod fault;
+pub mod master;
+pub mod messages;
+pub mod metrics;
+pub mod submaster;
+pub mod worker;
+
+pub use cluster::{Cluster, JobHandle};
+pub use messages::{JobId, JobRequest};

@@ -1,0 +1,287 @@
+//! Submaster thread: the group leader of Fig. 1.
+//!
+//! Forwards job broadcasts to its workers, collects their products, and
+//! — the moment the `k1`-th product for a job arrives — performs the
+//! **intra-group decode** (recovering `Ã_i·X`) and ships it to the
+//! master after a ToR-link delay. Products arriving after the decode
+//! are counted and discarded (the paper's "fastest `k1`" semantics).
+//! Because every group's submaster is its own thread, the `n2` decodes
+//! of §IV run genuinely in parallel.
+
+use crate::coding::HierarchicalCode;
+use crate::coordinator::messages::{
+    CancelSet, GroupResult, JobBroadcast, JobId, SubmasterMsg, WorkerCmd,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::linalg::Matrix;
+use crate::sim::straggler::StragglerModel;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Uplink (ToR) delay settings.
+#[derive(Clone)]
+pub struct LinkDelay {
+    /// Delay distribution (the paper's `Exp(µ2)`).
+    pub model: StragglerModel,
+    /// Wall-clock seconds per model time unit.
+    pub scale: f64,
+    /// Master switch.
+    pub enabled: bool,
+}
+
+struct JobState {
+    /// Collected `(worker index, product)` pairs.
+    results: Vec<(usize, Matrix)>,
+    /// Set once decoded and shipped.
+    decoded: bool,
+}
+
+/// Spawn the submaster for `group`.
+#[allow(clippy::too_many_arguments)]
+pub fn spawn(
+    group: usize,
+    code: Arc<HierarchicalCode>,
+    workers: Vec<mpsc::Sender<WorkerCmd>>,
+    link: LinkDelay,
+    link_dead: bool,
+    cancel: Arc<CancelSet>,
+    metrics: Arc<Metrics>,
+    mut rng: Rng,
+    rx: mpsc::Receiver<SubmasterMsg>,
+    master: mpsc::Sender<crate::coordinator::messages::MasterMsg>,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("hiercode-sm{group}"))
+        .spawn(move || {
+            let k1 = code.params().k1[group];
+            let mut jobs: HashMap<JobId, JobState> = HashMap::new();
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    SubmasterMsg::Shutdown => {
+                        for w in &workers {
+                            let _ = w.send(WorkerCmd::Shutdown);
+                        }
+                        break;
+                    }
+                    SubmasterMsg::Job(job) => {
+                        jobs.insert(
+                            job.id,
+                            JobState {
+                                results: Vec::with_capacity(k1),
+                                decoded: false,
+                            },
+                        );
+                        for w in &workers {
+                            let _ = w.send(WorkerCmd::Compute(JobBroadcast {
+                                id: job.id,
+                                x: Arc::clone(&job.x),
+                            }));
+                        }
+                    }
+                    SubmasterMsg::Done(done) => {
+                        Metrics::inc(&metrics.worker_products);
+                        let Some(state) = jobs.get_mut(&done.id) else {
+                            // Job already completed and garbage-collected.
+                            Metrics::inc(&metrics.late_products);
+                            continue;
+                        };
+                        if state.decoded {
+                            Metrics::inc(&metrics.late_products);
+                            continue;
+                        }
+                        state.results.push((done.index, done.data));
+                        if state.results.len() < k1 {
+                            continue;
+                        }
+                        // k1-th fastest arrived: cancel the group's
+                        // still-running workers, then decode.
+                        state.decoded = true;
+                        cancel.mark(done.id);
+                        match code.decode_group(group, &state.results) {
+                            Ok((data, flops)) => {
+                                Metrics::inc(&metrics.group_decodes);
+                                Metrics::add(&metrics.decode_flops, flops);
+                                let finished_at = Instant::now();
+                                if link_dead {
+                                    crate::log_debug!(
+                                        "submaster",
+                                        "group {group}: uplink dead, dropping job {:?}",
+                                        done.id
+                                    );
+                                } else {
+                                    if link.enabled {
+                                        let d = link.model.sample(&mut rng) * link.scale;
+                                        if d > 0.0 {
+                                            thread::sleep(Duration::from_secs_f64(d));
+                                        }
+                                    }
+                                    let _ = master.send(
+                                        crate::coordinator::messages::MasterMsg::Group(
+                                            GroupResult {
+                                                id: done.id,
+                                                group,
+                                                data,
+                                                decode_flops: flops,
+                                                finished_at,
+                                            },
+                                        ),
+                                    );
+                                }
+                                // Keep the entry (decoded=true) so later
+                                // arrivals count as late; trim memory.
+                                let state = jobs.get_mut(&done.id).expect("state exists");
+                                state.results.clear();
+                                state.results.shrink_to_fit();
+                            }
+                            Err(e) => {
+                                crate::log_error!(
+                                    "submaster",
+                                    "group {group} decode failed for job {:?}: {e}",
+                                    done.id
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        })
+        .expect("failed to spawn submaster thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::{MasterMsg, WorkerDone};
+    use crate::linalg::ops;
+    use crate::util::rng::Rng as URng;
+
+    fn no_link_delay() -> LinkDelay {
+        LinkDelay {
+            model: StragglerModel::Deterministic { value: 0.0 },
+            scale: 0.0,
+            enabled: false,
+        }
+    }
+
+    /// Drive a submaster directly with synthetic worker results and
+    /// check it decodes at the k1-th arrival.
+    #[test]
+    fn decodes_at_k1th_result_and_discards_late() {
+        let code = Arc::new(HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap());
+        let mut r = URng::new(4);
+        let a = Matrix::from_fn(8, 3, |_, _| r.uniform(-1.0, 1.0));
+        let x = Matrix::from_fn(3, 1, |_, _| r.uniform(-1.0, 1.0));
+        let grouped = code.encode_grouped(&a).unwrap();
+        let group = 1usize;
+        // Products of group 1's three workers.
+        let products: Vec<Matrix> = grouped[group]
+            .iter()
+            .map(|s| ops::matmul(s, &x))
+            .collect();
+
+        let (sub_tx, sub_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let h = spawn(
+            group,
+            Arc::clone(&code),
+            vec![], // no real workers; we inject Done messages
+            no_link_delay(),
+            false,
+            Arc::new(CancelSet::new()),
+            Arc::clone(&metrics),
+            URng::new(5),
+            sub_rx,
+            master_tx,
+        );
+        let id = JobId(1);
+        sub_tx
+            .send(SubmasterMsg::Job(JobBroadcast {
+                id,
+                x: Arc::new(x.clone()),
+            }))
+            .unwrap();
+        // Worker 2 then worker 0 arrive (k1 = 2) — parity + systematic.
+        for &j in &[2usize, 0usize] {
+            sub_tx
+                .send(SubmasterMsg::Done(WorkerDone {
+                    id,
+                    index: j,
+                    data: products[j].clone(),
+                }))
+                .unwrap();
+        }
+        let msg = master_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let MasterMsg::Group(gr) = msg else {
+            panic!("expected group result")
+        };
+        assert_eq!(gr.group, group);
+        // Ã_1 · x — check against direct computation.
+        let tilde = Matrix::vstack(&[grouped[group][0].clone(), grouped[group][1].clone()])
+            .unwrap();
+        // grouped[group][0..2] are the systematic shards == Ã_i split.
+        let expect = ops::matmul(&tilde, &x);
+        assert!(gr.data.max_abs_diff(&expect) < 1e-4);
+        // Late third worker is discarded.
+        sub_tx
+            .send(SubmasterMsg::Done(WorkerDone {
+                id,
+                index: 1,
+                data: products[1].clone(),
+            }))
+            .unwrap();
+        // Shutdown (drains the queue first).
+        sub_tx.send(SubmasterMsg::Shutdown).unwrap();
+        h.join().unwrap();
+        let s = metrics.snapshot();
+        assert_eq!(s.group_decodes, 1);
+        assert_eq!(s.late_products, 1);
+        assert_eq!(s.worker_products, 3);
+    }
+
+    #[test]
+    fn dead_link_decodes_but_never_delivers() {
+        let code = Arc::new(HierarchicalCode::homogeneous(2, 1, 2, 1).unwrap());
+        let mut r = URng::new(6);
+        let a = Matrix::from_fn(2, 2, |_, _| r.uniform(-1.0, 1.0));
+        let x = Matrix::from_fn(2, 1, |_, _| r.uniform(-1.0, 1.0));
+        let grouped = code.encode_grouped(&a).unwrap();
+        let (sub_tx, sub_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let h = spawn(
+            0,
+            code,
+            vec![],
+            no_link_delay(),
+            true, // dead link
+            Arc::new(CancelSet::new()),
+            Arc::clone(&metrics),
+            URng::new(7),
+            sub_rx,
+            master_tx,
+        );
+        let id = JobId(2);
+        sub_tx
+            .send(SubmasterMsg::Job(JobBroadcast {
+                id,
+                x: Arc::new(x.clone()),
+            }))
+            .unwrap();
+        sub_tx
+            .send(SubmasterMsg::Done(WorkerDone {
+                id,
+                index: 0,
+                data: ops::matmul(&grouped[0][0], &x),
+            }))
+            .unwrap();
+        assert!(master_rx.recv_timeout(Duration::from_millis(300)).is_err());
+        sub_tx.send(SubmasterMsg::Shutdown).unwrap();
+        h.join().unwrap();
+        assert_eq!(metrics.snapshot().group_decodes, 1);
+    }
+}

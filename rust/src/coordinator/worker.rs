@@ -1,0 +1,168 @@
+//! Worker thread: `w(i, j)` of Fig. 1.
+//!
+//! Each worker owns one coded shard `Â_{i,j}`. On a job broadcast it
+//! (optionally) sleeps a straggler delay drawn from the configured
+//! model — emulating the paper's `Exp(µ1)` completion times on a single
+//! machine — computes `Â_{i,j}·X` through its backend (PJRT artifact or
+//! native GEMM), and uploads the product to its submaster.
+
+use crate::coordinator::backend::{ComputeBackend, WorkerShard};
+use crate::coordinator::messages::{CancelSet, SubmasterMsg, WorkerCmd, WorkerDone};
+use crate::sim::straggler::StragglerModel;
+use crate::util::rng::Rng;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+/// Straggler-injection settings for one worker.
+#[derive(Clone)]
+pub struct WorkerDelay {
+    /// Delay distribution (the paper's `Exp(µ1)`).
+    pub model: StragglerModel,
+    /// Wall-clock seconds per model time unit.
+    pub scale: f64,
+    /// Master switch.
+    pub enabled: bool,
+}
+
+/// Spawn worker `w(group, index)`.
+#[allow(clippy::too_many_arguments)]
+pub fn spawn(
+    group: usize,
+    index: usize,
+    shard: WorkerShard,
+    backend: ComputeBackend,
+    delay: WorkerDelay,
+    dead: bool,
+    cancel: std::sync::Arc<CancelSet>,
+    mut rng: Rng,
+    rx: mpsc::Receiver<WorkerCmd>,
+    submaster: mpsc::Sender<SubmasterMsg>,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("hiercode-w{group}.{index}"))
+        .spawn(move || {
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    WorkerCmd::Shutdown => break,
+                    WorkerCmd::Compute(job) => {
+                        if dead {
+                            // Fault injection: silently drop the job.
+                            continue;
+                        }
+                        // §Perf: skip jobs the group already decoded.
+                        if cancel.is_cancelled(job.id) {
+                            continue;
+                        }
+                        if delay.enabled {
+                            let d = delay.model.sample(&mut rng) * delay.scale;
+                            if d > 0.0 {
+                                thread::sleep(Duration::from_secs_f64(d));
+                            }
+                        }
+                        // Re-check after the straggle sleep: the k1-th
+                        // product may have landed while we slept.
+                        if cancel.is_cancelled(job.id) {
+                            continue;
+                        }
+                        match backend.shard_product(&shard, &job.x) {
+                            Ok(data) => {
+                                let _ = submaster.send(SubmasterMsg::Done(WorkerDone {
+                                    id: job.id,
+                                    index,
+                                    data,
+                                }));
+                            }
+                            Err(e) => {
+                                crate::log_error!(
+                                    "worker",
+                                    "w({group},{index}) job {:?} failed: {e}",
+                                    job.id
+                                );
+                                // A failed worker behaves like a straggler:
+                                // the code absorbs it.
+                            }
+                        }
+                    }
+                }
+            }
+        })
+        .expect("failed to spawn worker thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::{JobBroadcast, JobId};
+    use crate::linalg::Matrix;
+    use std::sync::Arc;
+
+    fn no_delay() -> WorkerDelay {
+        WorkerDelay {
+            model: StragglerModel::Deterministic { value: 0.0 },
+            scale: 0.0,
+            enabled: false,
+        }
+    }
+
+    #[test]
+    fn worker_computes_and_uploads() {
+        let shard_m = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
+        let shard = WorkerShard::new(&shard_m).unwrap();
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let (sub_tx, sub_rx) = mpsc::channel();
+        let h = spawn(
+            1,
+            3,
+            shard,
+            ComputeBackend::Native,
+            no_delay(),
+            false,
+            std::sync::Arc::new(CancelSet::new()),
+            Rng::new(1),
+            cmd_rx,
+            sub_tx,
+        );
+        let x = Arc::new(Matrix::from_rows(&[&[1.0], &[1.0]]));
+        cmd_tx
+            .send(WorkerCmd::Compute(JobBroadcast { id: JobId(7), x }))
+            .unwrap();
+        let msg = sub_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        match msg {
+            SubmasterMsg::Done(done) => {
+                assert_eq!(done.id, JobId(7));
+                assert_eq!(done.index, 3);
+                assert_eq!(done.data.data(), &[1.0, 2.0]);
+            }
+            other => panic!("unexpected message {other:?}"),
+        }
+        cmd_tx.send(WorkerCmd::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dead_worker_stays_silent() {
+        let shard = WorkerShard::new(&Matrix::identity(2)).unwrap();
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let (sub_tx, sub_rx) = mpsc::channel();
+        let h = spawn(
+            0,
+            0,
+            shard,
+            ComputeBackend::Native,
+            no_delay(),
+            true, // dead
+            std::sync::Arc::new(CancelSet::new()),
+            Rng::new(2),
+            cmd_rx,
+            sub_tx,
+        );
+        let x = Arc::new(Matrix::identity(2));
+        cmd_tx
+            .send(WorkerCmd::Compute(JobBroadcast { id: JobId(1), x }))
+            .unwrap();
+        assert!(sub_rx.recv_timeout(Duration::from_millis(200)).is_err());
+        cmd_tx.send(WorkerCmd::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,124 @@
+//! §IV decode-cost scaling: the hierarchical/product gain as a function
+//! of `p` where `k1 = k2^p` — both the analytic model (the paper's
+//! claim that the gain grows monotonically in `p`) and the measured
+//! flops of the real decoders at feasible sizes.
+
+use crate::coding::cost::{self, Scheme};
+use crate::Result;
+
+/// One `(k2, p)` point.
+#[derive(Clone, Debug)]
+pub struct ScalingRow {
+    /// Outer dimension.
+    pub k2: usize,
+    /// Exponent `p` in `k1 = k2^p`.
+    pub p: f64,
+    /// Resulting `k1`.
+    pub k1: usize,
+    /// Model cost, hierarchical.
+    pub model_hier: f64,
+    /// Model cost, product.
+    pub model_product: f64,
+    /// Model gain (product / hierarchical).
+    pub model_gain: f64,
+    /// Measured decode flops (hier, product, polynomial) at this size,
+    /// when the decode is feasible in-memory (small sizes only).
+    pub measured: Option<(u64, u64, u64)>,
+}
+
+/// Generate the scaling sweep. `measure_limit` caps `n1·n2` for the
+/// real-decoder measurements.
+pub fn generate(beta: f64, measure_limit: usize, seed: u64) -> Result<Vec<ScalingRow>> {
+    let mut rows = Vec::new();
+    for k2 in [2usize, 3, 4] {
+        for &p in &[1.0, 1.5, 2.0] {
+            let k1 = (k2 as f64).powf(p).round() as usize;
+            if k1 < 1 {
+                continue;
+            }
+            let model_hier = cost::decoding_cost(Scheme::Hierarchical, k1 as f64, k2 as f64, beta);
+            let model_product = cost::decoding_cost(Scheme::Product, k1 as f64, k2 as f64, beta);
+            let (n1, n2) = (2 * k1, 2 * k2);
+            let rows_m = k1 * k2 * 2;
+            let measured = if n1 * n2 <= measure_limit {
+                // Drop k1 workers to force parity decodes in every scheme.
+                Some(cost::measured::decode_flops(n1, k1, n2, k2, rows_m, k1, seed)?)
+            } else {
+                None
+            };
+            rows.push(ScalingRow {
+                k2,
+                p,
+                k1,
+                model_hier,
+                model_product,
+                model_gain: model_product / model_hier,
+                measured,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render as CSV.
+pub fn to_csv(rows: &[ScalingRow]) -> String {
+    let mut out = String::from(
+        "k2,p,k1,model_hier,model_product,model_gain,meas_hier,meas_product,meas_poly\n",
+    );
+    for r in rows {
+        let (mh, mp, my) = r
+            .measured
+            .map(|(a, b, c)| (a.to_string(), b.to_string(), c.to_string()))
+            .unwrap_or_else(|| ("".into(), "".into(), "".into()));
+        out.push_str(&format!(
+            "{},{},{},{:.1},{:.1},{:.3},{mh},{mp},{my}\n",
+            r.k2, r.p, r.k1, r.model_hier, r.model_product, r.model_gain
+        ));
+    }
+    out
+}
+
+/// Print the sweep.
+pub fn run(seed: u64) -> Result<Vec<ScalingRow>> {
+    println!("# §IV decode-cost scaling: k1 = k2^p, beta = 2");
+    let rows = generate(2.0, 200, seed)?;
+    print!("{}", to_csv(&rows));
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gain_monotone_in_p_per_k2() {
+        let rows = generate(2.0, 0, 1).unwrap(); // model only
+        for k2 in [2usize, 3, 4] {
+            let gains: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.k2 == k2)
+                .map(|r| r.model_gain)
+                .collect();
+            for w in gains.windows(2) {
+                assert!(
+                    w[1] >= w[0],
+                    "k2={k2}: gain not monotone in p: {gains:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn measured_flops_available_at_small_sizes() {
+        let rows = generate(2.0, 200, 2).unwrap();
+        let with_measured = rows.iter().filter(|r| r.measured.is_some()).count();
+        assert!(with_measured >= 4, "want several measured points");
+        for r in rows.iter().filter(|r| r.measured.is_some()) {
+            let (h, p, y) = r.measured.unwrap();
+            assert!(h > 0 && p > 0 && y > 0);
+            // The polynomial decode (monolithic k×k solve) must be the
+            // most expensive in flops at every measured point.
+            assert!(h <= y && p <= y, "k2={} p={}: h={h} p={p} y={y}", r.k2, r.p);
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Fig. 6: expected total computation time and its bounds vs `k2`.
+//!
+//! Paper parameters: `n1 = (1+δ1)k1` with `δ1 = 1`, `n2 = 10`,
+//! `µ1 = 10`, `µ2 = 1`; `k1 = 5` (Fig. 6a) or `k1 = 300` (Fig. 6b);
+//! `k2` sweeps `1..=10`. Series: Monte-Carlo `E[T]`, the Markov-chain
+//! lower bound `L` (Thm. 1 / Lemma 1), and the two upper bounds
+//! (Lemma 2, Thm. 2).
+
+use crate::sim::{bounds, markov, montecarlo, SimParams};
+use crate::Result;
+
+/// One `k2` point of the figure.
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    /// Outer code dimension.
+    pub k2: usize,
+    /// Monte-Carlo `E[T]` with 95% CI half-width.
+    pub expected: f64,
+    /// CI half-width of `expected`.
+    pub ci95: f64,
+    /// Lower bound `L` (exact, via the Lemma 1 chain).
+    pub lower: f64,
+    /// Lemma 2 upper bound.
+    pub upper_lemma2: f64,
+    /// Theorem 2 upper bound.
+    pub upper_thm2: f64,
+}
+
+/// Generate the figure's rows for a given `k1` (5 → Fig. 6a,
+/// 300 → Fig. 6b).
+pub fn generate(k1: usize, trials: usize, seed: u64) -> Result<Vec<Fig6Row>> {
+    let mut rows = Vec::new();
+    for k2 in 1..=10 {
+        let p = SimParams::fig6(k1, k2);
+        let est = montecarlo::expected_latency(&p, trials, seed + k2 as u64)?;
+        rows.push(Fig6Row {
+            k2,
+            expected: est.mean,
+            ci95: est.ci95,
+            lower: markov::lower_bound(&p)?,
+            upper_lemma2: bounds::lemma2_upper(&p)?,
+            upper_thm2: bounds::theorem2_upper(&p)?,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render rows as CSV.
+pub fn to_csv(rows: &[Fig6Row]) -> String {
+    let mut out = String::from("k2,E[T],ci95,lower_L,upper_lemma2,upper_thm2\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{:.6},{:.6},{:.6},{:.6},{:.6}\n",
+            r.k2, r.expected, r.ci95, r.lower, r.upper_lemma2, r.upper_thm2
+        ));
+    }
+    out
+}
+
+/// Print the figure (CSV + a quick sanity summary on stderr).
+pub fn run(k1: usize, trials: usize, seed: u64) -> Result<Vec<Fig6Row>> {
+    let rows = generate(k1, trials, seed)?;
+    println!("# Fig 6{} — k1={k1}, n1={}, n2=10, mu1=10, mu2=1, trials={trials}",
+        if k1 <= 50 { "a" } else { "b" }, 2 * k1);
+    print!("{}", to_csv(&rows));
+    let violations = rows
+        .iter()
+        .filter(|r| r.lower > r.expected + 3.0 * r.ci95)
+        .count();
+    eprintln!("fig6(k1={k1}): {} rows, lower-bound violations: {violations}", rows.len());
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6a_shape() {
+        // Small trial count for test speed; the structural claims hold
+        // regardless of MC noise at these margins.
+        let rows = generate(5, 4_000, 1).unwrap();
+        assert_eq!(rows.len(), 10);
+        for r in &rows {
+            // Sandwich: L ≤ E[T] ≤ Lemma2 (Thm2 not valid at k1=5).
+            assert!(
+                r.lower <= r.expected + 3.0 * r.ci95,
+                "k2={}: L={} E[T]={}",
+                r.k2,
+                r.lower,
+                r.expected
+            );
+            assert!(
+                r.expected <= r.upper_lemma2 + 3.0 * r.ci95,
+                "k2={}: E[T]={} UB={}",
+                r.k2,
+                r.expected,
+                r.upper_lemma2
+            );
+        }
+        // Monotone in k2.
+        for w in rows.windows(2) {
+            assert!(w[1].expected >= w[0].expected - 3.0 * (w[0].ci95 + w[1].ci95));
+        }
+    }
+
+    #[test]
+    fn fig6b_thm2_tight_at_large_k1() {
+        let rows = generate(300, 1_500, 2).unwrap();
+        for r in &rows {
+            assert!(r.expected <= r.upper_thm2 + 3.0 * r.ci95);
+            // Paper: Thm 2 is the tighter bound at k1=300.
+            assert!(
+                r.upper_thm2 < r.upper_lemma2,
+                "k2={}: thm2 {} should beat lemma2 {}",
+                r.k2,
+                r.upper_thm2,
+                r.upper_lemma2
+            );
+        }
+    }
+
+    #[test]
+    fn csv_renders() {
+        let rows = generate(5, 500, 3).unwrap();
+        let csv = to_csv(&rows);
+        assert!(csv.lines().count() == 11);
+        assert!(csv.starts_with("k2,"));
+    }
+}

@@ -1,0 +1,202 @@
+//! Fig. 7: expected total execution time `E[T_exec] = T_comp + α·T_dec`
+//! of the four schemes as `α` sweeps.
+//!
+//! Paper parameters: `(n1,k1) = (800,400)`, `(n2,k2) = (40,20)`,
+//! `(µ1,µ2) = (10,1)`, `β = 2`. `T_comp` of the hierarchical code is
+//! simulated (`E[T]`, eq. 1); the baselines use their Table I closed
+//! forms. Expected qualitative shape (§IV): polynomial wins at low `α`,
+//! hierarchical in the moderate band (strictly beating product
+//! everywhere), replication at high `α`.
+
+use crate::coding::cost::{self, Scheme};
+use crate::sim::{montecarlo, SimParams};
+use crate::Result;
+
+/// One `α` point.
+#[derive(Clone, Debug)]
+pub struct Fig7Row {
+    /// Decode-cost weight `α`.
+    pub alpha: f64,
+    /// `E[T_exec]` per scheme, in [`Scheme::ALL`] order.
+    pub exec: [f64; 4],
+    /// Name of the best (minimum) scheme at this `α`.
+    pub winner: &'static str,
+}
+
+/// Fixed inputs of the figure.
+#[derive(Clone, Debug)]
+pub struct Fig7Params {
+    /// Workers per group.
+    pub n1: usize,
+    /// Inner dimension.
+    pub k1: usize,
+    /// Groups.
+    pub n2: usize,
+    /// Outer dimension.
+    pub k2: usize,
+    /// Worker rate.
+    pub mu1: f64,
+    /// Link rate.
+    pub mu2: f64,
+    /// Decode exponent β.
+    pub beta: f64,
+}
+
+impl Default for Fig7Params {
+    fn default() -> Self {
+        // The paper's Fig. 7 setting.
+        Self {
+            n1: 800,
+            k1: 400,
+            n2: 40,
+            k2: 20,
+            mu1: 10.0,
+            mu2: 1.0,
+            beta: 2.0,
+        }
+    }
+}
+
+/// Per-scheme `(T_comp, T_dec)` at the figure's parameters.
+pub fn components(p: &Fig7Params, trials: usize, seed: u64) -> Result<[(f64, f64); 4]> {
+    let n = p.n1 * p.n2;
+    let k = p.k1 * p.k2;
+    let sim = SimParams {
+        n1: p.n1,
+        k1: p.k1,
+        n2: p.n2,
+        k2: p.k2,
+        mu1: p.mu1,
+        mu2: p.mu2,
+    };
+    let hier_comp = montecarlo::expected_latency(&sim, trials, seed)?.mean;
+    let mut out = [(0.0, 0.0); 4];
+    for (i, s) in Scheme::ALL.iter().enumerate() {
+        let t_comp = match s {
+            Scheme::Hierarchical => hier_comp,
+            other => cost::computing_time(*other, n, k, p.mu2).ok_or_else(|| {
+                crate::Error::InvalidParams(format!(
+                    "no closed-form T_comp for {}",
+                    other.name()
+                ))
+            })?,
+        };
+        let t_dec = cost::decoding_cost(*s, p.k1 as f64, p.k2 as f64, p.beta);
+        out[i] = (t_comp, t_dec);
+    }
+    Ok(out)
+}
+
+/// Generate rows over a log-spaced `α` grid.
+pub fn generate(
+    p: &Fig7Params,
+    alphas: &[f64],
+    trials: usize,
+    seed: u64,
+) -> Result<Vec<Fig7Row>> {
+    let comps = components(p, trials, seed)?;
+    Ok(alphas
+        .iter()
+        .map(|&alpha| {
+            let mut exec = [0.0; 4];
+            for i in 0..4 {
+                exec[i] = cost::execution_time(comps[i].0, alpha, comps[i].1);
+            }
+            let winner_idx = (0..4)
+                .min_by(|&a, &b| exec[a].partial_cmp(&exec[b]).unwrap())
+                .unwrap();
+            Fig7Row {
+                alpha,
+                exec,
+                winner: Scheme::ALL[winner_idx].name(),
+            }
+        })
+        .collect())
+}
+
+/// Default log-spaced `α` grid `10^-9 .. 10^-3`.
+pub fn default_alphas() -> Vec<f64> {
+    (0..25).map(|i| 10f64.powf(-9.0 + i as f64 * 0.25)).collect()
+}
+
+/// Render rows as CSV.
+pub fn to_csv(rows: &[Fig7Row]) -> String {
+    let mut out = String::from("alpha,replication,hierarchical,product,polynomial,winner\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{:.3e},{:.6},{:.6},{:.6},{:.6},{}\n",
+            r.alpha, r.exec[0], r.exec[1], r.exec[2], r.exec[3], r.winner
+        ));
+    }
+    out
+}
+
+/// Print the figure.
+pub fn run(trials: usize, seed: u64) -> Result<Vec<Fig7Row>> {
+    let p = Fig7Params::default();
+    println!(
+        "# Fig 7 — (n1,k1)=({},{}), (n2,k2)=({},{}), (mu1,mu2)=({},{}), beta={}",
+        p.n1, p.k1, p.n2, p.k2, p.mu1, p.mu2, p.beta
+    );
+    let rows = generate(&p, &default_alphas(), trials, seed)?;
+    print!("{}", to_csv(&rows));
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_rows() -> Vec<Fig7Row> {
+        generate(&Fig7Params::default(), &default_alphas(), 3_000, 7).unwrap()
+    }
+
+    #[test]
+    fn hierarchical_strictly_beats_product_everywhere() {
+        // §IV: "the hierarchical code strictly outperforms the product
+        // code for all values of α" — T_comp(hier) < T_comp(product) at
+        // these rates and T_dec(hier) < T_dec(product).
+        for r in small_rows() {
+            assert!(
+                r.exec[1] < r.exec[2],
+                "α={}: hier {} !< product {}",
+                r.alpha,
+                r.exec[1],
+                r.exec[2]
+            );
+        }
+    }
+
+    #[test]
+    fn winner_transitions_poly_hier_replication() {
+        // Low α → polynomial; moderate → hierarchical; high → replication.
+        let rows = small_rows();
+        assert_eq!(rows.first().unwrap().winner, "polynomial");
+        assert_eq!(rows.last().unwrap().winner, "replication");
+        assert!(
+            rows.iter().any(|r| r.winner == "hierarchical"),
+            "hierarchical must win a moderate-α band"
+        );
+        // Winners appear in the paper's order (no interleaving back).
+        let order: Vec<&str> = {
+            let mut o = Vec::new();
+            for r in &rows {
+                if o.last() != Some(&r.winner) {
+                    o.push(r.winner);
+                }
+            }
+            o
+        };
+        assert_eq!(order, vec!["polynomial", "hierarchical", "replication"]);
+    }
+
+    #[test]
+    fn exec_monotone_in_alpha() {
+        let rows = small_rows();
+        for w in rows.windows(2) {
+            for s in 0..4 {
+                assert!(w[1].exec[s] >= w[0].exec[s]);
+            }
+        }
+    }
+}

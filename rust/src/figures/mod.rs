@@ -1,0 +1,17 @@
+//! Regeneration of every table and figure in the paper's evaluation.
+//!
+//! | ID | Paper artifact | Function |
+//! |----|----------------|----------|
+//! | E1 | Fig. 6a — `E[T]` + bounds vs `k2`, `k1 = 5`   | [`fig6::generate`] |
+//! | E2 | Fig. 6b — same, `k1 = 300`                    | [`fig6::generate`] |
+//! | E3 | Fig. 7 — `E[T_exec]` vs `α`, four schemes     | [`fig7::generate`] |
+//! | E4 | Table I — `T_comp` / `T_dec` per scheme       | [`table1::generate`] |
+//! | E6 | §IV decode-cost scaling in `p` (`k1 = k2^p`)  | [`decode_scaling::generate`] |
+//!
+//! Each generator returns structured rows and renders CSV (stdout) so
+//! series can be re-plotted; EXPERIMENTS.md quotes these outputs.
+
+pub mod decode_scaling;
+pub mod fig6;
+pub mod fig7;
+pub mod table1;

@@ -1,0 +1,143 @@
+//! Table I: computing time and decoding cost of the four schemes,
+//! evaluated at the paper's Fig. 7 parameters, with the analytic
+//! entries cross-checked against simulation and *measured* decode
+//! flops from the real decoders (at a scaled-down size).
+
+use crate::coding::cost::{self, Scheme};
+use crate::sim::{markov, montecarlo, SimParams};
+use crate::Result;
+
+/// One scheme's Table I row.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    /// Scheme name.
+    pub scheme: &'static str,
+    /// Computing time `T_comp` (analytic, or simulated for hierarchical).
+    pub t_comp: f64,
+    /// Decoding cost `T_dec` (unit-constant model).
+    pub t_dec: f64,
+    /// Decode flops measured from the real decoder at the scaled-down
+    /// validation size (None for replication — free by construction).
+    pub measured_flops: Option<u64>,
+}
+
+/// Generate Table I at parameters `(n1,k1)×(n2,k2)`, `(µ1,µ2)`, β.
+#[allow(clippy::too_many_arguments)]
+pub fn generate(
+    n1: usize,
+    k1: usize,
+    n2: usize,
+    k2: usize,
+    mu1: f64,
+    mu2: f64,
+    beta: f64,
+    trials: usize,
+    seed: u64,
+) -> Result<Vec<Table1Row>> {
+    let n = n1 * n2;
+    let k = k1 * k2;
+    let sim = SimParams {
+        n1,
+        k1,
+        n2,
+        k2,
+        mu1,
+        mu2,
+    };
+    let hier_t = montecarlo::expected_latency(&sim, trials, seed)?.mean;
+    // Measured decode flops at a scaled-down but parity-forcing size.
+    let (mh, mp, my) = cost::measured::decode_flops(6, 3, 4, 2, 24, 3, seed)?;
+    let rows = Scheme::ALL
+        .iter()
+        .map(|s| {
+            let t_comp = match s {
+                Scheme::Hierarchical => hier_t,
+                other => cost::computing_time(*other, n, k, mu2).unwrap_or(f64::NAN),
+            };
+            Table1Row {
+                scheme: s.name(),
+                t_comp,
+                t_dec: cost::decoding_cost(*s, k1 as f64, k2 as f64, beta),
+                measured_flops: match s {
+                    Scheme::Replication => None,
+                    Scheme::Hierarchical => Some(mh),
+                    Scheme::Product => Some(mp),
+                    Scheme::Polynomial => Some(my),
+                },
+            }
+        })
+        .collect();
+    Ok(rows)
+}
+
+/// Render as a Markdown table (the paper's presentation).
+pub fn to_markdown(rows: &[Table1Row]) -> String {
+    let mut out = String::from(
+        "| Scheme | T_comp | T_dec (model) | measured decode flops (scaled) |\n|---|---|---|---|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {:.4} | {:.3e} | {} |\n",
+            r.scheme,
+            r.t_comp,
+            r.t_dec,
+            r.measured_flops
+                .map(|f| f.to_string())
+                .unwrap_or_else(|| "0 (free)".into()),
+        ));
+    }
+    out
+}
+
+/// Print the table at the paper's parameters, plus the lower bound for
+/// reference.
+pub fn run(trials: usize, seed: u64) -> Result<Vec<Table1Row>> {
+    let (n1, k1, n2, k2) = (800, 400, 40, 20);
+    println!("# Table I — (n1,k1)=({n1},{k1}), (n2,k2)=({n2},{k2}), (mu1,mu2)=(10,1), beta=2");
+    let rows = generate(n1, k1, n2, k2, 10.0, 1.0, 2.0, trials, seed)?;
+    print!("{}", to_markdown(&rows));
+    let l = markov::lower_bound(&SimParams {
+        n1,
+        k1,
+        n2,
+        k2,
+        mu1: 10.0,
+        mu2: 1.0,
+    })?;
+    println!("\n(hierarchical lower bound L = {l:.4})");
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_papers_qualitative_ordering() {
+        let rows = generate(800, 400, 40, 20, 10.0, 1.0, 2.0, 2_000, 3).unwrap();
+        assert_eq!(rows.len(), 4);
+        let by_name = |n: &str| rows.iter().find(|r| r.scheme == n).unwrap().clone();
+        let rep = by_name("replication");
+        let hier = by_name("hierarchical");
+        let prod = by_name("product");
+        let poly = by_name("polynomial");
+        // Decode-cost ordering: rep(0) < hier < prod < poly.
+        assert_eq!(rep.t_dec, 0.0);
+        assert!(hier.t_dec < prod.t_dec);
+        assert!(prod.t_dec < poly.t_dec);
+        // Computing-time: replication is worst (waits for whole blocks
+        // at low parallel redundancy), coded schemes are comparable.
+        assert!(rep.t_comp > poly.t_comp);
+        assert!(hier.t_comp > 0.0 && hier.t_comp.is_finite());
+        // Measured flops respect the model's ordering (hier < poly).
+        assert!(hier.measured_flops.unwrap() < poly.measured_flops.unwrap());
+    }
+
+    #[test]
+    fn markdown_renders() {
+        let rows = generate(8, 4, 4, 2, 10.0, 1.0, 2.0, 500, 4).unwrap();
+        let md = to_markdown(&rows);
+        assert_eq!(md.lines().count(), 6);
+        assert!(md.contains("replication"));
+    }
+}

@@ -1,0 +1,82 @@
+//! # hiercode — Hierarchical Coding for Distributed Computing
+//!
+//! A production-grade reproduction of *"Hierarchical Coding for
+//! Distributed Computing"* (Park, Lee, Sohn, Suh, Moon — KAIST, 2018).
+//!
+//! The crate provides:
+//!
+//! * [`coding`] — real-field systematic MDS erasure codes, the paper's
+//!   two-level **hierarchical code** with its parallel decoder, and the
+//!   baselines it is compared against (replication, product codes,
+//!   polynomial codes).
+//! * [`linalg`] — the dense linear-algebra substrate (blocked GEMM/GEMV,
+//!   partial-pivot LU) every decoder is built on.
+//! * [`sim`] — a discrete-event simulator of the hierarchical cluster,
+//!   the auxiliary Markov chain of Lemma 1 (lower bound), the Lemma 2 /
+//!   Theorem 2 upper bounds, and Monte-Carlo latency estimation.
+//! * [`coordinator`] — the runnable system: threaded master / submaster
+//!   / worker topology with batching, routing, straggler handling and
+//!   two-level parallel decoding on the request path.
+//! * [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
+//! * [`config`], [`cli`], [`util`] — config system (own JSON parser),
+//!   launcher, and offline substitutes for rand/criterion/proptest.
+//! * [`figures`] — regenerates every table and figure of the paper.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod linalg;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug)]
+pub enum Error {
+    /// Invalid code / cluster / simulation parameters.
+    InvalidParams(String),
+    /// Numerical failure (singular system, non-finite values).
+    Numerical(String),
+    /// Not enough shards / groups arrived to decode.
+    Insufficient { needed: usize, got: usize },
+    /// Config file / JSON problems.
+    Config(String),
+    /// Artifact loading / PJRT execution problems.
+    Runtime(String),
+    /// Coordinator protocol violation or channel failure.
+    Coordinator(String),
+    /// I/O errors.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidParams(m) => write!(f, "invalid parameters: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Insufficient { needed, got } => {
+                write!(f, "insufficient shards: needed {needed}, got {got}")
+            }
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense linear-algebra substrate.
+//!
+//! MDS decoding over the reals reduces to solving `k × k` linear systems
+//! whose coefficient matrices are submatrices of the code's generator
+//! (§II-A). No external BLAS/LAPACK is available offline, so this module
+//! provides the needed kernels: a row-major [`Matrix`], blocked
+//! GEMM/GEMV ([`ops`]), partial-pivot LU with solve/inverse ([`lu`]) and
+//! the Vandermonde / Cauchy generator builders ([`vandermonde`]).
+
+pub mod lu;
+pub mod matrix;
+pub mod ops;
+pub mod vandermonde;
+
+pub use lu::LuFactors;
+pub use matrix::Matrix;

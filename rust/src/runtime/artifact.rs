@@ -1,0 +1,206 @@
+//! Artifact manifest: discovery and shape-checking of AOT outputs.
+
+use crate::config::json::Json;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact as described by `manifest.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    /// Logical name, e.g. `worker_matvec_r256_d128_b4`.
+    pub name: String,
+    /// File name within the artifact directory.
+    pub file: String,
+    /// L2 entry point (`worker_task` / `encode_task`).
+    pub entry: String,
+    /// Input shapes in argument order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape.
+    pub output: Vec<usize>,
+    /// Element type (always `f32` today).
+    pub dtype: String,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    dir: PathBuf,
+    entries: Vec<ArtifactEntry>,
+}
+
+fn parse_shape(v: &Json, ctx: &str) -> Result<Vec<usize>> {
+    v.as_array()
+        .ok_or_else(|| Error::Config(format!("{ctx}: shape must be an array")))?
+        .iter()
+        .map(|d| {
+            d.as_usize()
+                .ok_or_else(|| Error::Config(format!("{ctx}: bad dimension")))
+        })
+        .collect()
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let version = v.req_usize("version", "manifest")?;
+        if version != 1 {
+            return Err(Error::Config(format!(
+                "unsupported manifest version {version}"
+            )));
+        }
+        let arts = v
+            .req("artifacts", "manifest")?
+            .as_array()
+            .ok_or_else(|| Error::Config("manifest: 'artifacts' must be an array".into()))?;
+        let mut entries = Vec::with_capacity(arts.len());
+        for (i, a) in arts.iter().enumerate() {
+            let ctx = format!("manifest artifact #{i}");
+            let inputs = a
+                .req("inputs", &ctx)?
+                .as_array()
+                .ok_or_else(|| Error::Config(format!("{ctx}: inputs must be an array")))?
+                .iter()
+                .map(|s| parse_shape(s, &ctx))
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ArtifactEntry {
+                name: a.req_str("name", &ctx)?,
+                file: a.req_str("file", &ctx)?,
+                entry: a.req_str("entry", &ctx)?,
+                inputs,
+                output: parse_shape(a.req("output", &ctx)?, &ctx)?,
+                dtype: a.req_str("dtype", &ctx)?,
+            });
+        }
+        Ok(Self { dir, entries })
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Look up by logical name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find the worker-matvec artifact for shard `(r, d)` and batch `b`.
+    pub fn find_worker(&self, r: usize, d: usize, b: usize) -> Option<&ArtifactEntry> {
+        self.find(&format!("worker_matvec_r{r}_d{d}_b{b}"))
+    }
+
+    /// Find the encode artifact for an `(n, k)` code over `(r, d)` blocks.
+    pub fn find_encode(&self, n: usize, k: usize, r: usize, d: usize) -> Option<&ArtifactEntry> {
+        self.find(&format!("encode_n{n}_k{k}_r{r}_d{d}"))
+    }
+
+    /// Absolute path of an entry's HLO text file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Verify every listed file exists on disk.
+    pub fn verify_files(&self) -> Result<()> {
+        for e in &self.entries {
+            let p = self.path_of(e);
+            if !p.exists() {
+                return Err(Error::Runtime(format!(
+                    "manifest lists {} but {} does not exist",
+                    e.name,
+                    p.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// True if an artifact directory with a manifest exists — integration
+/// tests use this to skip PJRT paths gracefully before `make artifacts`.
+pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("manifest.json").exists()
+}
+
+/// Locate the repo's artifact directory from the test/bench environment
+/// (`HIERCODE_ARTIFACTS` override, else `./artifacts`).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("HIERCODE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "worker_matvec_r16_d32_b1", "file": "worker_matvec_r16_d32_b1.hlo.txt",
+         "sha256_16": "x", "entry": "worker_task",
+         "inputs": [[16, 32], [32, 1]], "output": [16, 1], "dtype": "f32"},
+        {"name": "encode_n6_k3_r64_d32", "file": "encode_n6_k3_r64_d32.hlo.txt",
+         "sha256_16": "y", "entry": "encode_task",
+         "inputs": [[6, 3], [3, 64, 32]], "output": [6, 64, 32], "dtype": "f32"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let w = m.find_worker(16, 32, 1).unwrap();
+        assert_eq!(w.entry, "worker_task");
+        assert_eq!(w.inputs, vec![vec![16, 32], vec![32, 1]]);
+        assert_eq!(w.output, vec![16, 1]);
+        let e = m.find_encode(6, 3, 64, 32).unwrap();
+        assert_eq!(e.output, vec![6, 64, 32]);
+        assert!(m.find("nonexistent").is_none());
+        assert!(m.find_worker(17, 32, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = r#"{"version": 2, "artifacts": []}"#;
+        assert!(ArtifactManifest::parse(bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        let bad = r#"{"version": 1, "artifacts": [{"name": "x"}]}"#;
+        assert!(ArtifactManifest::parse(bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn verify_files_catches_missing() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/nonexistent-dir")).unwrap();
+        assert!(m.verify_files().is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Exercises the real artifact dir when `make artifacts` has run.
+        let dir = default_artifact_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert!(!m.entries().is_empty());
+        m.verify_files().unwrap();
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute
+//! them from the Rust request path.
+//!
+//! * [`artifact`] — parses `artifacts/manifest.json` (written by
+//!   `python/compile/aot.py`) and shape-checks every entry;
+//! * [`tensor`] — the plain `f32` tensor type crossing the boundary;
+//! * [`service`] — a dedicated runtime thread that owns the
+//!   `PjRtClient` and all compiled executables, serving execute requests
+//!   over channels (PJRT objects never cross threads), with lazy
+//!   compile-on-first-use and a per-artifact executable cache.
+//!
+//! Interchange is HLO **text**: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` (see
+//! /opt/xla-example/README.md for why serialized protos don't work).
+
+pub mod artifact;
+pub mod service;
+pub mod tensor;
+
+pub use artifact::{ArtifactEntry, ArtifactManifest};
+pub use service::{PjrtRuntime, RuntimeStats};
+pub use tensor::Tensor32;

@@ -1,0 +1,381 @@
+//! The PJRT runtime service: one dedicated thread owns the client and
+//! all compiled executables; the rest of the system talks to it through
+//! a cloneable [`PjrtRuntime`] handle.
+//!
+//! Rationale: the `xla` crate's PJRT objects are not `Sync`, and the
+//! coordinator runs many worker threads. Funnelling execution through a
+//! service thread keeps ownership single-threaded (no unsafe), matches
+//! the one-accelerator-per-host deployment the artifacts target, and
+//! gives a natural place for the executable cache and execution metrics.
+
+use crate::runtime::artifact::{ArtifactEntry, ArtifactManifest};
+use crate::runtime::tensor::Tensor32;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Execution statistics of the runtime service.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    /// Executions served.
+    pub executions: u64,
+    /// Artifacts compiled (cache misses).
+    pub compiles: u64,
+    /// Total seconds inside PJRT execute calls.
+    pub execute_seconds: f64,
+    /// Total seconds inside compilation.
+    pub compile_seconds: f64,
+}
+
+enum Request {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor32>,
+        reply: mpsc::Sender<Result<Tensor32>>,
+    },
+    Stats {
+        reply: mpsc::Sender<RuntimeStats>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the runtime service thread.
+#[derive(Clone)]
+pub struct PjrtRuntime {
+    tx: mpsc::Sender<Request>,
+    manifest: Arc<ArtifactManifest>,
+    _joiner: Arc<Joiner>,
+}
+
+struct Joiner {
+    tx: mpsc::Sender<Request>,
+    handle: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl Drop for Joiner {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.lock().ok().and_then(|mut g| g.take()) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl PjrtRuntime {
+    /// Start the service: load the manifest, create the CPU PJRT client
+    /// on the service thread, return a handle.
+    pub fn start(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = artifact_dir.into();
+        let manifest = Arc::new(ArtifactManifest::load(&dir)?);
+        manifest.verify_files()?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let thread_manifest = Arc::clone(&manifest);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = thread::Builder::new()
+            .name("hiercode-pjrt".to_string())
+            .spawn(move || service_main(thread_manifest, rx, ready_tx))
+            .map_err(|e| Error::Runtime(format!("cannot spawn runtime thread: {e}")))?;
+        // Wait for client creation so startup errors surface here.
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("runtime thread died during startup".into()))??;
+        Ok(Self {
+            tx: tx.clone(),
+            manifest,
+            _joiner: Arc::new(Joiner {
+                tx,
+                handle: Mutex::new(Some(handle)),
+            }),
+        })
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `name` with `inputs`; returns the (single)
+    /// output tensor. Blocks until the service thread finishes the call.
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor32>) -> Result<Tensor32> {
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact named '{name}'")))?;
+        validate_inputs(entry, &inputs)?;
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute {
+                name: name.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| Error::Runtime("runtime service is down".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("runtime service dropped the request".into()))?
+    }
+
+    /// Convenience: execute the worker matvec artifact for shard
+    /// `(r, d)` × request `(d, b)`.
+    pub fn execute_worker(&self, shard: &Tensor32, x: &Tensor32) -> Result<Tensor32> {
+        let (r, d) = (shard.shape[0], shard.shape[1]);
+        let b = x.shape[1];
+        let entry = self
+            .manifest
+            .find_worker(r, d, b)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no worker artifact for shard {r}x{d}, batch {b} \
+                     (add the shape to python/compile/aot.py WORKER_SPECS)"
+                ))
+            })?
+            .name
+            .clone();
+        self.execute(&entry, vec![shard.clone(), x.clone()])
+    }
+
+    /// Fetch execution statistics.
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Stats { reply })
+            .map_err(|_| Error::Runtime("runtime service is down".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("runtime service dropped the request".into()))
+    }
+}
+
+fn validate_inputs(entry: &ArtifactEntry, inputs: &[Tensor32]) -> Result<()> {
+    if inputs.len() != entry.inputs.len() {
+        return Err(Error::Runtime(format!(
+            "artifact {} expects {} inputs, got {}",
+            entry.name,
+            entry.inputs.len(),
+            inputs.len()
+        )));
+    }
+    for (i, (t, expect)) in inputs.iter().zip(&entry.inputs).enumerate() {
+        if &t.shape != expect {
+            return Err(Error::Runtime(format!(
+                "artifact {} input #{i}: shape {:?} != manifest {:?}",
+                entry.name, t.shape, expect
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn service_main(
+    manifest: Arc<ArtifactManifest>,
+    rx: mpsc::Receiver<Request>,
+    ready_tx: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready_tx.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(Error::Runtime(format!(
+                "PjRtClient::cpu() failed: {e}"
+            ))));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut stats = RuntimeStats::default();
+    crate::log_info!(
+        "runtime",
+        "PJRT service up: platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Stats { reply } => {
+                let _ = reply.send(stats.clone());
+            }
+            Request::Execute {
+                name,
+                inputs,
+                reply,
+            } => {
+                let result =
+                    serve_execute(&client, &manifest, &mut cache, &mut stats, &name, inputs);
+                let _ = reply.send(result);
+            }
+        }
+    }
+    crate::log_info!("runtime", "PJRT service shut down ({} executions)", stats.executions);
+}
+
+fn serve_execute(
+    client: &xla::PjRtClient,
+    manifest: &ArtifactManifest,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: &mut RuntimeStats,
+    name: &str,
+    inputs: Vec<Tensor32>,
+) -> Result<Tensor32> {
+    let entry = manifest
+        .find(name)
+        .ok_or_else(|| Error::Runtime(format!("no artifact named '{name}'")))?;
+    if !cache.contains_key(name) {
+        let t0 = std::time::Instant::now();
+        let path = manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+        stats.compiles += 1;
+        stats.compile_seconds += t0.elapsed().as_secs_f64();
+        crate::log_debug!("runtime", "compiled {name} in {:.1}ms", t0.elapsed().as_secs_f64() * 1e3);
+        cache.insert(name.to_string(), exe);
+    }
+    let exe = cache.get(name).expect("just inserted");
+    // Build input literals.
+    let literals: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|t| {
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| Error::Runtime(format!("reshape input: {e}")))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let t0 = std::time::Instant::now();
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+    let out_lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("fetch result of {name}: {e}")))?;
+    // aot.py lowers with return_tuple=True → 1-tuple.
+    let out = out_lit
+        .to_tuple1()
+        .map_err(|e| Error::Runtime(format!("untuple result of {name}: {e}")))?;
+    let data = out
+        .to_vec::<f32>()
+        .map_err(|e| Error::Runtime(format!("read result of {name}: {e}")))?;
+    stats.executions += 1;
+    stats.execute_seconds += t0.elapsed().as_secs_f64();
+    Tensor32::new(entry.output.clone(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{artifacts_available, default_artifact_dir};
+
+    fn runtime_or_skip() -> Option<PjrtRuntime> {
+        let dir = default_artifact_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(PjrtRuntime::start(dir).expect("runtime starts"))
+    }
+
+    #[test]
+    fn executes_worker_artifact_correctly() {
+        let Some(rt) = runtime_or_skip() else { return };
+        // worker_matvec_r16_d32_b1: shard (16, 32) @ x (32, 1).
+        let mut rng = crate::util::rng::Rng::new(5);
+        let shard = Tensor32::new(
+            vec![16, 32],
+            (0..16 * 32).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        )
+        .unwrap();
+        let x = Tensor32::new(
+            vec![32, 1],
+            (0..32).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        )
+        .unwrap();
+        let out = rt.execute_worker(&shard, &x).unwrap();
+        assert_eq!(out.shape, vec![16, 1]);
+        // Cross-check against Rust linalg.
+        let sm = shard.to_matrix().unwrap();
+        let xm = x.to_matrix().unwrap();
+        let expect = crate::linalg::ops::matmul(&sm, &xm);
+        let got = out.to_matrix().unwrap();
+        assert!(
+            got.max_abs_diff(&expect) < 1e-4,
+            "PJRT vs linalg diff {}",
+            got.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let shard = Tensor32::zeros(vec![16, 32]);
+        let x = Tensor32::zeros(vec![32, 1]);
+        rt.execute_worker(&shard, &x).unwrap();
+        rt.execute_worker(&shard, &x).unwrap();
+        rt.execute_worker(&shard, &x).unwrap();
+        let stats = rt.stats().unwrap();
+        assert!(stats.executions >= 3);
+        assert_eq!(stats.compiles, 1, "one compile, then cache hits");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected_before_reaching_pjrt() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let bad_shard = Tensor32::zeros(vec![17, 32]);
+        let x = Tensor32::zeros(vec![32, 1]);
+        assert!(rt.execute_worker(&bad_shard, &x).is_err());
+        let err = rt
+            .execute(
+                "worker_matvec_r16_d32_b1",
+                vec![Tensor32::zeros(vec![16, 32])],
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("expects 2 inputs"));
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let Some(rt) = runtime_or_skip() else { return };
+        assert!(rt.execute("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn encode_artifact_matches_rust_encode() {
+        let Some(rt) = runtime_or_skip() else { return };
+        // encode_n6_k3_r64_d32.
+        let (n, k, r, d) = (6, 3, 64, 32);
+        let gen = crate::linalg::vandermonde::systematic_mds(n, k).unwrap();
+        let g = Tensor32::from_matrix(&gen);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let blocks = Tensor32::new(
+            vec![k, r, d],
+            (0..k * r * d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        )
+        .unwrap();
+        let out = rt
+            .execute(&format!("encode_n{n}_k{k}_r{r}_d{d}"), vec![g, blocks.clone()])
+            .unwrap();
+        assert_eq!(out.shape, vec![n, r, d]);
+        // Check one coded block (the last parity row) against lincomb.
+        let row = gen.row(n - 1);
+        for e in 0..r * d {
+            let mut acc = 0.0f64;
+            for j in 0..k {
+                acc += row[j] * blocks.data[j * r * d + e] as f64;
+            }
+            let got = out.data[(n - 1) * r * d + e] as f64;
+            assert!(
+                (got - acc).abs() < 1e-3,
+                "elem {e}: PJRT {got} vs expected {acc}"
+            );
+        }
+    }
+}

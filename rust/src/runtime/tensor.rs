@@ -1,0 +1,99 @@
+//! The `f32` tensor type crossing the Rust↔PJRT boundary.
+
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+
+/// A dense row-major `f32` tensor with explicit shape — what PJRT
+/// executables consume and produce. The coordinator's `f64` matrices
+/// convert at this boundary (artifacts are compiled for `f32`, the
+/// dtype the paper's workloads — ML gradients, page-rank — use).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor32 {
+    /// Dimension sizes, outermost first.
+    pub shape: Vec<usize>,
+    /// Row-major data; `len == shape.iter().product()`.
+    pub data: Vec<f32>,
+}
+
+impl Tensor32 {
+    /// Build, validating the element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            return Err(Error::Runtime(format!(
+                "tensor data length {} != shape {:?} product {expect}",
+                data.len(),
+                shape
+            )));
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// From an `f64` matrix (row-major), narrowing to `f32`.
+    pub fn from_matrix(m: &Matrix) -> Self {
+        Self {
+            shape: vec![m.rows(), m.cols()],
+            data: m.data().iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    /// To an `f64` matrix; requires a rank-2 shape.
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        if self.shape.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "expected rank-2 tensor, got shape {:?}",
+                self.shape
+            )));
+        }
+        Matrix::from_vec(
+            self.shape[0],
+            self.shape[1],
+            self.data.iter().map(|&x| x as f64).collect(),
+        )
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_length() {
+        assert!(Tensor32::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor32::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let t = Tensor32::from_matrix(&m);
+        assert_eq!(t.shape, vec![2, 2]);
+        let back = t.to_matrix().unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn rank3_to_matrix_rejected() {
+        let t = Tensor32::zeros(vec![2, 2, 2]);
+        assert!(t.to_matrix().is_err());
+    }
+}

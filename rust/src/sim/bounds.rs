@@ -1,0 +1,141 @@
+//! Upper bounds on `E[T]` — Lemma 2 and Theorem 2 (§III-B).
+
+use crate::sim::SimParams;
+use crate::util::harmonic::harmonic;
+use crate::Result;
+
+/// Lemma 2: `E[T] ≤ H_{n1·n2}/µ1 + (H_{n2} − H_{n2−k2})/µ2`.
+///
+/// Wait for *all* `n1·n2` workers (expected `H_{n1n2}/µ1`), then for the
+/// `k2`-th fastest of the `n2` group→master links. Valid for all
+/// parameters; tight for small `k1` (Fig. 6a).
+pub fn lemma2_upper(p: &SimParams) -> Result<f64> {
+    p.validate()?;
+    Ok(harmonic(p.n1 * p.n2) / p.mu1
+        + (harmonic(p.n2) - harmonic(p.n2 - p.k2)) / p.mu2)
+}
+
+/// Theorem 2 (asymptotic in `k1`, fixed `δ1 = n1/k1 − 1 > 0`):
+/// `E[T] ≤ log((1+δ1)/δ1)/µ1 + (H_{n2} − H_{n2−k2})/µ2 + o(1)`.
+///
+/// The first term is the limit of the intra-group order statistic
+/// `(H_{n1} − H_{n1−k1})/µ1`; concentration (Hoeffding) makes *every*
+/// group finish by then, so only the link order statistic is added.
+/// Tight for large `k1` (Fig. 6b); anti-conservative for small `k1`.
+pub fn theorem2_upper(p: &SimParams) -> Result<f64> {
+    p.validate()?;
+    if p.n1 <= p.k1 {
+        return Err(crate::Error::InvalidParams(format!(
+            "theorem 2 needs δ1 = n1/k1 − 1 > 0 (n1={}, k1={})",
+            p.n1, p.k1
+        )));
+    }
+    let delta1 = p.n1 as f64 / p.k1 as f64 - 1.0;
+    Ok(((1.0 + delta1) / delta1).ln() / p.mu1
+        + (harmonic(p.n2) - harmonic(p.n2 - p.k2)) / p.mu2)
+}
+
+/// The exact expected intra-group latency `(H_{n1} − H_{n1−k1})/µ1`
+/// (the `k1`-th order statistic of one group) — the quantity Theorem 2's
+/// `t0` tracks.
+pub fn intra_group_latency(p: &SimParams) -> Result<f64> {
+    p.validate()?;
+    Ok((harmonic(p.n1) - harmonic(p.n1 - p.k1)) / p.mu1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::markov;
+    use crate::sim::montecarlo;
+
+    #[test]
+    fn lemma2_dominates_simulation() {
+        for k2 in [1, 4, 7, 10] {
+            let p = SimParams::fig6(5, k2);
+            let ub = lemma2_upper(&p).unwrap();
+            let et = montecarlo::expected_latency(&p, 50_000, 3).unwrap();
+            assert!(
+                et.mean <= ub + 3.0 * et.ci95,
+                "k2={k2}: E[T]={} must be ≤ Lemma2={ub}",
+                et.mean
+            );
+        }
+    }
+
+    #[test]
+    fn theorem2_dominates_simulation_for_large_k1() {
+        // Fig. 6b regime: k1 = 300, δ1 = 1.
+        for k2 in [1, 5, 10] {
+            let p = SimParams::fig6(300, k2);
+            let ub = theorem2_upper(&p).unwrap();
+            let et = montecarlo::expected_latency(&p, 20_000, 5).unwrap();
+            assert!(
+                et.mean <= ub + 3.0 * et.ci95,
+                "k2={k2}: E[T]={} must be ≤ Thm2={ub}",
+                et.mean
+            );
+        }
+    }
+
+    #[test]
+    fn bounds_sandwich_everything() {
+        // L ≤ E[T] ≤ min(Lemma2, Thm2-for-large-k1).
+        let p = SimParams::fig6(300, 7);
+        let l = markov::lower_bound(&p).unwrap();
+        let et = montecarlo::expected_latency(&p, 20_000, 6).unwrap();
+        let ub2 = lemma2_upper(&p).unwrap();
+        let ubt = theorem2_upper(&p).unwrap();
+        assert!(l <= et.mean + 3.0 * et.ci95);
+        assert!(et.mean <= ub2 + 3.0 * et.ci95);
+        assert!(et.mean <= ubt + 3.0 * et.ci95);
+    }
+
+    #[test]
+    fn fig6_regime_tightness_flip() {
+        // §III-C: "the asymptotic upper bound in Theorem 2 becomes
+        // tighter as k1 grows". Theorem 2's expression (o(1) dropped) is
+        // only *valid* asymptotically — at small k1 it can dip below the
+        // true E[T] (which is why the paper calls Lemma 2 the tighter
+        // usable bound there). Robust checks: the Lemma2−Thm2 gap grows
+        // with k1, and at k1=300 Theorem 2 is a valid bound strictly
+        // tighter than Lemma 2.
+        let gap = |k1: usize| {
+            let p = SimParams::fig6(k1, 5);
+            lemma2_upper(&p).unwrap() - theorem2_upper(&p).unwrap()
+        };
+        assert!(gap(5) < gap(50));
+        assert!(gap(50) < gap(300));
+        let large = SimParams::fig6(300, 5);
+        assert!(
+            theorem2_upper(&large).unwrap() < lemma2_upper(&large).unwrap(),
+            "large k1: Theorem 2 should be tighter"
+        );
+        let et = montecarlo::expected_latency(&large, 20_000, 8).unwrap();
+        assert!(et.mean <= theorem2_upper(&large).unwrap() + 3.0 * et.ci95);
+    }
+
+    #[test]
+    fn theorem2_requires_redundancy() {
+        let p = SimParams {
+            n1: 5,
+            k1: 5,
+            n2: 10,
+            k2: 5,
+            mu1: 10.0,
+            mu2: 1.0,
+        };
+        assert!(theorem2_upper(&p).is_err());
+        assert!(lemma2_upper(&p).is_ok(), "Lemma 2 holds for all params");
+    }
+
+    #[test]
+    fn intra_group_latency_approaches_t0() {
+        // (H_{n1} − H_{n1−k1})/µ1 → log((1+δ)/δ)/µ1 as k1 → ∞.
+        let limit = (2.0f64).ln() / 10.0; // δ1 = 1, µ1 = 10
+        let small = intra_group_latency(&SimParams::fig6(5, 1)).unwrap();
+        let large = intra_group_latency(&SimParams::fig6(3000, 1)).unwrap();
+        assert!((large - limit).abs() < (small - limit).abs());
+        assert!((large - limit).abs() < 1e-3);
+    }
+}

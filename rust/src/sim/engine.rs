@@ -1,0 +1,236 @@
+//! Event-driven replay of a hierarchical coded job.
+//!
+//! Where [`crate::sim::montecarlo`] samples the closed-form latency
+//! expression (1)–(2) directly, this engine simulates the *system*:
+//! worker-finish events, submaster collection (decode trigger at the
+//! `k1`-th arrival), group→master transfers, master completion at the
+//! `k2`-th group. Both must agree on `E[T]` under the paper's model —
+//! a strong cross-validation — and the engine additionally supports
+//! worker/group failure injection and per-event traces the closed form
+//! cannot express.
+
+use crate::sim::events::EventQueue;
+use crate::sim::straggler::StragglerModel;
+use crate::sim::SimParams;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Failure injection plan for one simulated job.
+#[derive(Clone, Debug, Default)]
+pub struct FailurePlan {
+    /// Workers that never complete: `(group, index)` pairs.
+    pub dead_workers: Vec<(usize, usize)>,
+    /// Groups whose uplink to the master is severed.
+    pub dead_links: Vec<usize>,
+}
+
+/// Timeline of one simulated job.
+#[derive(Clone, Debug)]
+pub struct JobTrace {
+    /// Time each group's subtask finished (`S_i` + queueing), if ever.
+    pub group_done: Vec<Option<f64>>,
+    /// Time each group's result reached the master, if ever.
+    pub group_delivered: Vec<Option<f64>>,
+    /// Completion time of the whole job (`T`), if it completed.
+    pub total: Option<f64>,
+    /// Number of worker-finish events processed.
+    pub workers_finished: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    WorkerDone { group: usize },
+    GroupDelivered { group: usize },
+}
+
+/// Simulate one hierarchical job at event granularity.
+pub fn simulate_job(
+    p: &SimParams,
+    worker_model: &StragglerModel,
+    link_model: &StragglerModel,
+    failures: &FailurePlan,
+    rng: &mut Rng,
+) -> Result<JobTrace> {
+    p.validate()?;
+    let mut q: EventQueue<Event> = EventQueue::new();
+    // Schedule every live worker's completion.
+    for g in 0..p.n2 {
+        for w in 0..p.n1 {
+            if failures.dead_workers.contains(&(g, w)) {
+                continue;
+            }
+            q.schedule(worker_model.sample(rng), Event::WorkerDone { group: g });
+        }
+    }
+    let mut done_count = vec![0usize; p.n2];
+    let mut group_done: Vec<Option<f64>> = vec![None; p.n2];
+    let mut group_delivered: Vec<Option<f64>> = vec![None; p.n2];
+    let mut delivered = 0usize;
+    let mut workers_finished = 0usize;
+    let mut total = None;
+
+    while let Some((t, ev)) = q.pop() {
+        match ev {
+            Event::WorkerDone { group } => {
+                workers_finished += 1;
+                done_count[group] += 1;
+                // Submaster decodes at the k1-th arrival and starts the
+                // uplink transfer (unless the link is dead).
+                if done_count[group] == p.k1 {
+                    group_done[group] = Some(t);
+                    if !failures.dead_links.contains(&group) {
+                        q.schedule_after(
+                            link_model.sample(rng),
+                            Event::GroupDelivered { group },
+                        );
+                    }
+                }
+            }
+            Event::GroupDelivered { group } => {
+                if group_delivered[group].is_none() {
+                    group_delivered[group] = Some(t);
+                    delivered += 1;
+                    if delivered == p.k2 {
+                        total = Some(t);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    Ok(JobTrace {
+        group_done,
+        group_delivered,
+        total,
+        workers_finished,
+    })
+}
+
+/// Expected latency by running the event engine `trials` times under
+/// the paper's Exp(µ1)/Exp(µ2) model.
+pub fn expected_latency_event_driven(
+    p: &SimParams,
+    trials: usize,
+    seed: u64,
+) -> Result<crate::sim::montecarlo::Estimate> {
+    let wm = StragglerModel::exp(p.mu1);
+    let lm = StragglerModel::exp(p.mu2);
+    let no_failures = FailurePlan::default();
+    let mut rng = Rng::new(seed);
+    let mut acc = crate::util::stats::Welford::new();
+    for _ in 0..trials {
+        let trace = simulate_job(p, &wm, &lm, &no_failures, &mut rng)?;
+        acc.push(trace.total.expect("failure-free job must complete"));
+    }
+    Ok(crate::sim::montecarlo::Estimate::from(&acc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::montecarlo;
+
+    #[test]
+    fn event_engine_agrees_with_direct_sampler() {
+        let p = SimParams {
+            n1: 6,
+            k1: 3,
+            n2: 5,
+            k2: 3,
+            mu1: 10.0,
+            mu2: 1.0,
+        };
+        let ev = expected_latency_event_driven(&p, 40_000, 21).unwrap();
+        let mc = montecarlo::expected_latency(&p, 40_000, 22).unwrap();
+        assert!(
+            (ev.mean - mc.mean).abs() < 3.0 * (ev.ci95 + mc.ci95),
+            "event-driven {} vs direct {}",
+            ev.mean,
+            mc.mean
+        );
+    }
+
+    #[test]
+    fn job_completes_despite_tolerable_failures() {
+        // Kill n1 − k1 workers in one group and one whole other group's
+        // link: with n2 − k2 ≥ 1 slack, the job must still finish.
+        let p = SimParams {
+            n1: 4,
+            k1: 2,
+            n2: 4,
+            k2: 3,
+            mu1: 10.0,
+            mu2: 1.0,
+        };
+        let failures = FailurePlan {
+            dead_workers: vec![(0, 0), (0, 1)], // group 0 down to exactly k1
+            dead_links: vec![1],                // group 1 unreachable
+        };
+        let mut rng = Rng::new(33);
+        let trace = simulate_job(
+            &p,
+            &StragglerModel::exp(p.mu1),
+            &StragglerModel::exp(p.mu2),
+            &failures,
+            &mut rng,
+        )
+        .unwrap();
+        assert!(trace.total.is_some(), "job should survive");
+        assert!(trace.group_delivered[1].is_none(), "dead link delivers nothing");
+    }
+
+    #[test]
+    fn job_stalls_under_excess_failures() {
+        // Kill links of n2 − k2 + 1 groups: delivery can never reach k2.
+        let p = SimParams {
+            n1: 3,
+            k1: 2,
+            n2: 3,
+            k2: 2,
+            mu1: 10.0,
+            mu2: 1.0,
+        };
+        let failures = FailurePlan {
+            dead_workers: vec![],
+            dead_links: vec![0, 1],
+        };
+        let mut rng = Rng::new(34);
+        let trace = simulate_job(
+            &p,
+            &StragglerModel::exp(p.mu1),
+            &StragglerModel::exp(p.mu2),
+            &failures,
+            &mut rng,
+        )
+        .unwrap();
+        assert!(trace.total.is_none(), "job must not complete");
+        // All workers still ran to completion.
+        assert_eq!(trace.workers_finished, 9);
+    }
+
+    #[test]
+    fn group_done_precedes_delivery() {
+        let p = SimParams {
+            n1: 4,
+            k1: 2,
+            n2: 3,
+            k2: 2,
+            mu1: 5.0,
+            mu2: 2.0,
+        };
+        let mut rng = Rng::new(35);
+        let trace = simulate_job(
+            &p,
+            &StragglerModel::exp(p.mu1),
+            &StragglerModel::exp(p.mu2),
+            &FailurePlan::default(),
+            &mut rng,
+        )
+        .unwrap();
+        for g in 0..p.n2 {
+            if let (Some(d), Some(del)) = (trace.group_done[g], trace.group_delivered[g]) {
+                assert!(d <= del, "group {g}: done {d} after delivered {del}");
+            }
+        }
+    }
+}

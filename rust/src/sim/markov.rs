@@ -1,0 +1,242 @@
+//! The auxiliary Markov chain of Lemma 1 and its hitting time — the
+//! lower bound `L` of Theorem 1.
+//!
+//! The chain `C` lives on states `(u, v)` where `u` counts completed
+//! workers (globally, across all groups) and `v` counts groups whose
+//! results reached the master. Transition rates (Lemma 1):
+//!
+//! * `(u, v) → (u+1, v)` at rate `(n1·n2 − u)·µ1` while `u < n2·k1`;
+//! * `(u, v) → (u, v+1)` at rate `(⌊u/k1⌋ − v)·µ2` while
+//!   `v < min(⌊u/k1⌋, k2)`.
+//!
+//! `L` is the expected hitting time from `(0,0)` to `{v = k2}`. Because
+//! every transition increases `u` or `v`, the chain is a DAG and the
+//! first-step equations solve exactly by one backward sweep — no linear
+//! system needed. Fig. 5 of the paper is this chain for
+//! `(3,2) × (3,2)`.
+
+use crate::sim::SimParams;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Exact lower bound `L` via first-step analysis of the Lemma 1 chain.
+///
+/// Complexity: `O(n2·k1·k2)` states, `O(1)` work each.
+pub fn lower_bound(p: &SimParams) -> Result<f64> {
+    p.validate()?;
+    let (n1, k1, n2, k2) = (p.n1, p.k1, p.n2, p.k2);
+    let u_max = n2 * k1;
+    let total_workers = n1 * n2;
+    // h[u][v] = expected time to reach v = k2 from (u, v).
+    let mut h = vec![vec![0.0f64; k2 + 1]; u_max + 1];
+    // Backward sweep: h(u, v) depends on h(u+1, v) and h(u, v+1).
+    for v in (0..k2).rev() {
+        for u in (0..=u_max).rev() {
+            // Unreachable corner (v groups delivered needs u >= v·k1
+            // workers done) — leave at 0; never queried from (0,0).
+            let rate_right = if u < u_max {
+                (total_workers - u) as f64 * p.mu1
+            } else {
+                0.0
+            };
+            let groups_ready = (u / k1).min(n2);
+            let rate_up = if v < groups_ready.min(k2) {
+                (groups_ready - v) as f64 * p.mu2
+            } else {
+                0.0
+            };
+            let total = rate_right + rate_up;
+            if total == 0.0 {
+                // No outgoing transition with v < k2 can only happen in
+                // unreachable states (u = u_max forces groups_ready =
+                // n2 ≥ k2 > v, so rate_up > 0 there).
+                h[u][v] = f64::INFINITY;
+                continue;
+            }
+            let mut acc = 1.0;
+            if rate_right > 0.0 {
+                acc += rate_right * h[u + 1][v];
+            }
+            if rate_up > 0.0 {
+                acc += rate_up * h[u][v + 1];
+            }
+            h[u][v] = acc / total;
+        }
+    }
+    Ok(h[0][0])
+}
+
+/// Monte-Carlo estimate of `L` straight from its definition (Theorem 1,
+/// eq. 3): `L = E[ k2-th min_i ( T_i^(c) + T_(i·k1) ) ]` where `T_(m)`
+/// is the `m`-th smallest of all `n1·n2` worker times. Used to validate
+/// [`lower_bound`]'s chain construction.
+pub fn lower_bound_monte_carlo(p: &SimParams, trials: usize, seed: u64) -> Result<f64> {
+    p.validate()?;
+    let mut rng = Rng::new(seed);
+    let total = p.n1 * p.n2;
+    let mut sum = 0.0;
+    let mut times = vec![0.0f64; total];
+    for _ in 0..trials {
+        for t in times.iter_mut() {
+            *t = rng.exponential(p.mu1);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut candidates: Vec<f64> = (1..=p.n2)
+            .map(|i| rng.exponential(p.mu2) + times[i * p.k1 - 1])
+            .collect();
+        sum += crate::sim::montecarlo::kth_min(&mut candidates, p.k2);
+    }
+    Ok(sum / trials as f64)
+}
+
+/// A full trajectory of the chain (for tests and the `markov_solver`
+/// bench): simulate jumps until `v = k2`, return elapsed time.
+pub fn simulate_hitting_time(p: &SimParams, rng: &mut Rng) -> f64 {
+    let (k1, n2, k2) = (p.k1, p.n2, p.k2);
+    let u_max = n2 * k1;
+    let total_workers = p.n1 * n2;
+    let (mut u, mut v) = (0usize, 0usize);
+    let mut t = 0.0;
+    while v < k2 {
+        let rate_right = if u < u_max {
+            (total_workers - u) as f64 * p.mu1
+        } else {
+            0.0
+        };
+        let groups_ready = (u / k1).min(n2);
+        let rate_up = if v < groups_ready.min(k2) {
+            (groups_ready - v) as f64 * p.mu2
+        } else {
+            0.0
+        };
+        let total = rate_right + rate_up;
+        debug_assert!(total > 0.0, "absorbing non-target state ({u},{v})");
+        t += rng.exponential(total);
+        if rng.next_f64() < rate_right / total {
+            u += 1;
+        } else {
+            v += 1;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Trivial chain (1,1)×(1,1): L = 1/µ1 + 1/µ2 exactly.
+    #[test]
+    fn trivial_chain_exact() {
+        let p = SimParams {
+            n1: 1,
+            k1: 1,
+            n2: 1,
+            k2: 1,
+            mu1: 10.0,
+            mu2: 1.0,
+        };
+        let l = lower_bound(&p).unwrap();
+        assert!((l - (0.1 + 1.0)).abs() < 1e-12, "L = {l}");
+    }
+
+    /// Single group, n1 workers: L = (H_n1 − H_{n1−k1})/µ1 + 1/µ2.
+    #[test]
+    fn single_group_exact() {
+        let p = SimParams {
+            n1: 8,
+            k1: 5,
+            n2: 1,
+            k2: 1,
+            mu1: 4.0,
+            mu2: 2.0,
+        };
+        let l = lower_bound(&p).unwrap();
+        let expect =
+            crate::util::harmonic::expected_kth_of_n_exponential(5, 8, 4.0) + 0.5;
+        assert!((l - expect).abs() < 1e-10, "L = {l}, expect {expect}");
+    }
+
+    /// First-step analysis must agree with simulated trajectories of
+    /// the same chain.
+    #[test]
+    fn fsa_matches_chain_simulation() {
+        let p = SimParams {
+            n1: 3,
+            k1: 2,
+            n2: 3,
+            k2: 2,
+            mu1: 10.0,
+            mu2: 1.0,
+        };
+        let exact = lower_bound(&p).unwrap();
+        let mut rng = Rng::new(101);
+        let trials = 200_000;
+        let mc: f64 =
+            (0..trials).map(|_| simulate_hitting_time(&p, &mut rng)).sum::<f64>()
+                / trials as f64;
+        assert!(
+            (exact - mc).abs() < 0.01,
+            "first-step {exact} vs trajectory MC {mc}"
+        );
+    }
+
+    /// The chain's hitting time must equal the definition of L (eq. 3).
+    /// This is the content of Lemma 1 — the strongest correctness check.
+    #[test]
+    fn lemma1_chain_equals_definition() {
+        for (n1, k1, n2, k2) in [(3, 2, 3, 2), (4, 2, 3, 3), (5, 3, 4, 2)] {
+            let p = SimParams {
+                n1,
+                k1,
+                n2,
+                k2,
+                mu1: 10.0,
+                mu2: 1.0,
+            };
+            let exact = lower_bound(&p).unwrap();
+            let mc = lower_bound_monte_carlo(&p, 300_000, 55).unwrap();
+            assert!(
+                (exact - mc).abs() / exact < 0.02,
+                "({n1},{k1})x({n2},{k2}): chain {exact} vs definition-MC {mc}"
+            );
+        }
+    }
+
+    /// Theorem 1: L ≤ E[T] (statistically, with generous margin).
+    #[test]
+    fn theorem1_lower_bounds_simulation() {
+        for k2 in [1, 3, 5, 7, 10] {
+            let p = SimParams::fig6(5, k2);
+            let l = lower_bound(&p).unwrap();
+            let et = crate::sim::montecarlo::expected_latency(&p, 50_000, 77)
+                .unwrap();
+            assert!(
+                l <= et.mean + 3.0 * et.ci95,
+                "k2={k2}: L={l} must be ≤ E[T]={}",
+                et.mean
+            );
+        }
+    }
+
+    /// L is increasing in k2 (more groups to wait for).
+    #[test]
+    fn monotone_in_k2() {
+        let mut prev = 0.0;
+        for k2 in 1..=10 {
+            let p = SimParams::fig6(5, k2);
+            let l = lower_bound(&p).unwrap();
+            assert!(l > prev, "k2={k2}: L={l} <= prev={prev}");
+            prev = l;
+        }
+    }
+
+    /// Large-k1 chain stays finite and fast (Fig. 6b uses k1 = 300 —
+    /// a 3000×10 state space).
+    #[test]
+    fn large_k1_feasible() {
+        let p = SimParams::fig6(300, 5);
+        let l = lower_bound(&p).unwrap();
+        assert!(l.is_finite() && l > 0.0);
+    }
+}

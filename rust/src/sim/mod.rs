@@ -1,0 +1,113 @@
+//! Latency analysis of hierarchical coded computation (§III).
+//!
+//! The paper models worker completion times as i.i.d. `Exp(µ1)` and
+//! group→master (ToR) communication as i.i.d. `Exp(µ2)`; the total
+//! computation time of the `(n1,k1)×(n2,k2)` code is
+//!
+//! ```text
+//! T = k2-th min over groups i of ( T_i^(c) + S_i ),
+//! S_i = k1-th min over workers j of T_{i,j}                    (1)–(2)
+//! ```
+//!
+//! This module provides every piece of the §III analysis:
+//!
+//! * [`straggler`] — the completion-time distributions;
+//! * [`montecarlo`] — direct sampling of `E[T]` (the "simulation" series
+//!   of Fig. 6) for hierarchical and all baseline schemes;
+//! * [`markov`] — the auxiliary Markov chain of Lemma 1 whose hitting
+//!   time is the lower bound `L` of Theorem 1, solved exactly by
+//!   first-step analysis;
+//! * [`bounds`] — the Lemma 2 and Theorem 2 upper bounds;
+//! * [`events`] — a discrete-event simulation engine, used by
+//!   [`engine`] to replay the same job at full event granularity
+//!   (validates the direct sampler and powers failure-injection tests).
+
+pub mod bounds;
+pub mod engine;
+pub mod events;
+pub mod markov;
+pub mod montecarlo;
+pub mod straggler;
+
+/// Parameters of a simulated `(n1,k1)×(n2,k2)` deployment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimParams {
+    /// Workers per group.
+    pub n1: usize,
+    /// Inner code dimension (workers to wait for per group).
+    pub k1: usize,
+    /// Number of groups (racks).
+    pub n2: usize,
+    /// Outer code dimension (groups to wait for).
+    pub k2: usize,
+    /// Worker completion rate `µ1`.
+    pub mu1: f64,
+    /// Group→master (ToR) communication rate `µ2`.
+    pub mu2: f64,
+}
+
+impl SimParams {
+    /// Validate the parameter set.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.k1 == 0 || self.k1 > self.n1 {
+            return Err(crate::Error::InvalidParams(format!(
+                "need 1 <= k1 <= n1, got ({}, {})",
+                self.n1, self.k1
+            )));
+        }
+        if self.k2 == 0 || self.k2 > self.n2 {
+            return Err(crate::Error::InvalidParams(format!(
+                "need 1 <= k2 <= n2, got ({}, {})",
+                self.n2, self.k2
+            )));
+        }
+        if self.mu1 <= 0.0 || self.mu2 <= 0.0 {
+            return Err(crate::Error::InvalidParams(format!(
+                "rates must be positive: mu1={}, mu2={}",
+                self.mu1, self.mu2
+            )));
+        }
+        Ok(())
+    }
+
+    /// The paper's Fig. 6 defaults: `n1 = (1+δ1)·k1` with `δ1 = 1`,
+    /// `n2 = 10`, `µ1 = 10`, `µ2 = 1`.
+    pub fn fig6(k1: usize, k2: usize) -> Self {
+        Self {
+            n1: 2 * k1,
+            k1,
+            n2: 10,
+            k2,
+            mu1: 10.0,
+            mu2: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation() {
+        assert!(SimParams::fig6(5, 5).validate().is_ok());
+        let mut p = SimParams::fig6(5, 5);
+        p.k1 = 11;
+        assert!(p.validate().is_err());
+        let mut p = SimParams::fig6(5, 5);
+        p.k2 = 11;
+        assert!(p.validate().is_err());
+        let mut p = SimParams::fig6(5, 5);
+        p.mu1 = 0.0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn fig6_defaults_match_paper() {
+        let p = SimParams::fig6(300, 7);
+        assert_eq!(p.n1, 600);
+        assert_eq!(p.n2, 10);
+        assert_eq!(p.mu1, 10.0);
+        assert_eq!(p.mu2, 1.0);
+    }
+}

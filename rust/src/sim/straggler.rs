@@ -1,0 +1,161 @@
+//! Straggler (completion-time) models.
+//!
+//! The paper's analysis assumes pure `Exp(µ)` completion times (§III).
+//! Real clusters are better fit by a shifted exponential (a deterministic
+//! service floor plus an exponential tail — Lee et al., 2017), and heavy
+//! tails are sometimes modeled as Weibull. The simulator and coordinator
+//! accept any of these so the paper's conclusions can be stress-tested
+//! beyond its own model (ablation bench `straggler_models`).
+
+use crate::util::rng::Rng;
+
+/// A completion-time distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StragglerModel {
+    /// Pure exponential with rate `mu` — the paper's model.
+    Exponential {
+        /// Rate parameter (mean `1/mu`).
+        mu: f64,
+    },
+    /// `shift + Exp(mu)`: a deterministic minimum service time.
+    ShiftedExponential {
+        /// Deterministic floor.
+        shift: f64,
+        /// Exponential tail rate.
+        mu: f64,
+    },
+    /// Weibull with shape `k` and scale `lambda` (heavy tail for k < 1).
+    Weibull {
+        /// Shape parameter.
+        shape: f64,
+        /// Scale parameter.
+        scale: f64,
+    },
+    /// Deterministic time (no straggling) — useful as a control.
+    Deterministic {
+        /// The fixed completion time.
+        value: f64,
+    },
+}
+
+impl StragglerModel {
+    /// The paper's worker model at rate `mu`.
+    pub fn exp(mu: f64) -> Self {
+        StragglerModel::Exponential { mu }
+    }
+
+    /// Draw a completion time.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            StragglerModel::Exponential { mu } => rng.exponential(mu),
+            StragglerModel::ShiftedExponential { shift, mu } => {
+                rng.shifted_exponential(shift, mu)
+            }
+            StragglerModel::Weibull { shape, scale } => {
+                // Inverse CDF: scale * (-ln(1-U))^(1/shape).
+                let u = 1.0 - rng.next_f64();
+                scale * (-u.ln()).powf(1.0 / shape)
+            }
+            StragglerModel::Deterministic { value } => value,
+        }
+    }
+
+    /// Expected value of the distribution.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            StragglerModel::Exponential { mu } => 1.0 / mu,
+            StragglerModel::ShiftedExponential { shift, mu } => shift + 1.0 / mu,
+            StragglerModel::Weibull { shape, scale } => scale * gamma_fn(1.0 + 1.0 / shape),
+            StragglerModel::Deterministic { value } => value,
+        }
+    }
+}
+
+/// Lanczos approximation of Γ(x) for x > 0 (used only for Weibull
+/// means; accuracy ~1e-13 over the needed range).
+pub fn gamma_fn(x: f64) -> f64 {
+    // Lanczos g = 7, n = 9 coefficients.
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        std::f64::consts::PI / ((std::f64::consts::PI * x).sin() * gamma_fn(1.0 - x))
+    } else {
+        let x = x - 1.0;
+        let mut a = C[0];
+        let t = x + G + 0.5;
+        for (i, &c) in C.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mc_mean(model: StragglerModel, n: usize, seed: u64) -> f64 {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| model.sample(&mut r)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn gamma_known_values() {
+        assert!((gamma_fn(1.0) - 1.0).abs() < 1e-10);
+        assert!((gamma_fn(2.0) - 1.0).abs() < 1e-10);
+        assert!((gamma_fn(3.0) - 2.0).abs() < 1e-10);
+        assert!((gamma_fn(4.0) - 6.0).abs() < 1e-9);
+        assert!((gamma_fn(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let m = StragglerModel::exp(10.0);
+        assert!((m.mean() - 0.1).abs() < 1e-12);
+        assert!((mc_mean(m, 100_000, 1) - 0.1).abs() < 2e-3);
+    }
+
+    #[test]
+    fn shifted_exponential_mean() {
+        let m = StragglerModel::ShiftedExponential { shift: 1.0, mu: 2.0 };
+        assert!((m.mean() - 1.5).abs() < 1e-12);
+        assert!((mc_mean(m, 100_000, 2) - 1.5).abs() < 5e-3);
+        // No sample below the shift.
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            assert!(m.sample(&mut r) >= 1.0);
+        }
+    }
+
+    #[test]
+    fn weibull_mean_and_exponential_equivalence() {
+        // Weibull(shape=1, scale=s) == Exp(1/s).
+        let m = StragglerModel::Weibull { shape: 1.0, scale: 0.5 };
+        assert!((m.mean() - 0.5).abs() < 1e-10);
+        assert!((mc_mean(m, 200_000, 4) - 0.5).abs() < 5e-3);
+        // Heavy-tail shape < 1 has mean > scale.
+        let h = StragglerModel::Weibull { shape: 0.5, scale: 1.0 };
+        assert!((h.mean() - 2.0).abs() < 1e-9); // Γ(3) = 2
+    }
+
+    #[test]
+    fn deterministic_is_deterministic() {
+        let m = StragglerModel::Deterministic { value: 2.5 };
+        let mut r = Rng::new(5);
+        for _ in 0..10 {
+            assert_eq!(m.sample(&mut r), 2.5);
+        }
+        assert_eq!(m.mean(), 2.5);
+    }
+}

@@ -1,0 +1,258 @@
+//! Micro-benchmark harness (offline substitute for `criterion`).
+//!
+//! `cargo bench` targets in `rust/benches/` use `harness = false` and
+//! drive this module: warmup, timed iterations, mean/σ/p50/p95, and a
+//! stable one-line-per-benchmark report that EXPERIMENTS.md quotes.
+//! Supports `--filter <substr>`, `--iters N`, `--warmup N`, `--csv`.
+
+use crate::util::stats::percentile;
+use std::time::Instant;
+
+/// Parsed `cargo bench` CLI options.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    /// Substring filter on benchmark names.
+    pub filter: Option<String>,
+    /// Timed iterations per benchmark.
+    pub iters: usize,
+    /// Warmup iterations per benchmark.
+    pub warmup: usize,
+    /// Emit CSV instead of human-readable rows.
+    pub csv: bool,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            filter: None,
+            iters: 30,
+            warmup: 3,
+            csv: false,
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Parse from `std::env::args` (skips the libtest `--bench` flag
+    /// cargo passes through).
+    pub fn from_args() -> Self {
+        let mut opts = Self::default();
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--filter" if i + 1 < args.len() => {
+                    opts.filter = Some(args[i + 1].clone());
+                    i += 1;
+                }
+                "--iters" if i + 1 < args.len() => {
+                    opts.iters = args[i + 1].parse().unwrap_or(opts.iters);
+                    i += 1;
+                }
+                "--warmup" if i + 1 < args.len() => {
+                    opts.warmup = args[i + 1].parse().unwrap_or(opts.warmup);
+                    i += 1;
+                }
+                "--csv" => opts.csv = true,
+                "--bench" => {} // injected by cargo
+                other => {
+                    // bare positional = filter (criterion compatibility)
+                    if !other.starts_with('-') {
+                        opts.filter = Some(other.to_string());
+                    }
+                }
+            }
+            i += 1;
+        }
+        opts
+    }
+}
+
+/// One benchmark's timing summary, in seconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark name as reported.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: usize,
+    /// Mean iteration time.
+    pub mean: f64,
+    /// Standard deviation.
+    pub std_dev: f64,
+    /// Median.
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// Fastest iteration.
+    pub min: f64,
+}
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:8.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:8.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:8.3}ms", s * 1e3)
+    } else {
+        format!("{:8.4}s ", s)
+    }
+}
+
+/// A bench suite: register closures with [`Suite::bench`], then
+/// [`Suite::finish`] prints the report.
+pub struct Suite {
+    opts: BenchOpts,
+    results: Vec<BenchResult>,
+    header_printed: bool,
+}
+
+impl Suite {
+    /// Create a suite named `title` using CLI options.
+    pub fn new(title: &str) -> Self {
+        let opts = BenchOpts::from_args();
+        if !opts.csv {
+            eprintln!("## bench suite: {title} (iters={}, warmup={})", opts.iters, opts.warmup);
+        }
+        Self {
+            opts,
+            results: Vec::new(),
+            header_printed: false,
+        }
+    }
+
+    /// Override iteration counts (for expensive end-to-end benches).
+    pub fn with_iters(mut self, iters: usize, warmup: usize) -> Self {
+        // CLI-provided values still win.
+        let defaults = BenchOpts::default();
+        if self.opts.iters == defaults.iters {
+            self.opts.iters = iters;
+        }
+        if self.opts.warmup == defaults.warmup {
+            self.opts.warmup = warmup;
+        }
+        self
+    }
+
+    /// Whether `name` passes the CLI filter.
+    pub fn selected(&self, name: &str) -> bool {
+        self.opts
+            .filter
+            .as_deref()
+            .map(|f| name.contains(f))
+            .unwrap_or(true)
+    }
+
+    /// Run `f` repeatedly and record its timing. The closure's return
+    /// value is passed through `std::hint::black_box` to defeat DCE.
+    pub fn bench<R, F: FnMut() -> R>(&mut self, name: &str, mut f: F) {
+        if !self.selected(name) {
+            return;
+        }
+        for _ in 0..self.opts.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.opts.iters);
+        for _ in 0..self.opts.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / samples.len().max(1) as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean,
+            std_dev: var.sqrt(),
+            p50: percentile(&samples, 0.5),
+            p95: percentile(&samples, 0.95),
+            min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        self.report(&result);
+        self.results.push(result);
+    }
+
+    fn report(&mut self, r: &BenchResult) {
+        if self.opts.csv {
+            if !self.header_printed {
+                println!("name,iters,mean_s,std_s,p50_s,p95_s,min_s");
+                self.header_printed = true;
+            }
+            println!(
+                "{},{},{:.9},{:.9},{:.9},{:.9},{:.9}",
+                r.name, r.iters, r.mean, r.std_dev, r.p50, r.p95, r.min
+            );
+        } else {
+            println!(
+                "bench {:<44} mean {} ± {}  p50 {}  p95 {}",
+                r.name,
+                fmt_time(r.mean),
+                fmt_time(r.std_dev),
+                fmt_time(r.p50),
+                fmt_time(r.p95),
+            );
+        }
+    }
+
+    /// Consume the suite; returns all results for programmatic use.
+    pub fn finish(self) -> Vec<BenchResult> {
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains('s'));
+    }
+
+    #[test]
+    fn suite_runs_and_records() {
+        let mut s = Suite {
+            opts: BenchOpts {
+                filter: None,
+                iters: 5,
+                warmup: 1,
+                csv: true,
+            },
+            results: Vec::new(),
+            header_printed: true,
+        };
+        let mut calls = 0u32;
+        s.bench("noop", || {
+            calls += 1;
+            calls
+        });
+        let rs = s.finish();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].iters, 5);
+        assert_eq!(calls, 6); // warmup + iters
+        assert!(rs[0].mean >= 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut s = Suite {
+            opts: BenchOpts {
+                filter: Some("match".into()),
+                iters: 2,
+                warmup: 0,
+                csv: true,
+            },
+            results: Vec::new(),
+            header_printed: true,
+        };
+        s.bench("nomatch-here-actually-matches", || 1);
+        s.bench("other", || 2);
+        assert_eq!(s.finish().len(), 1);
+    }
+}

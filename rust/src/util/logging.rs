@@ -1,0 +1,140 @@
+//! Minimal leveled logger (offline substitute for `log` + `env_logger`).
+//!
+//! Controlled by `HIERCODE_LOG` (`error|warn|info|debug|trace`, default
+//! `info`). The coordinator threads log through this; output goes to
+//! stderr so figure/CSV output on stdout stays machine-readable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Log severity, ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable problems.
+    Error = 0,
+    /// Suspicious but recoverable.
+    Warn = 1,
+    /// Lifecycle events (default).
+    Info = 2,
+    /// Per-job details.
+    Debug = 3,
+    /// Per-message details.
+    Trace = 4,
+}
+
+impl Level {
+    fn from_env(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static INIT: OnceLock<()> = OnceLock::new();
+
+fn max_level() -> u8 {
+    INIT.get_or_init(|| {
+        let lvl = std::env::var("HIERCODE_LOG")
+            .map(|s| Level::from_env(&s))
+            .unwrap_or(Level::Info);
+        MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+    MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Override the level programmatically (tests, `--verbose`).
+pub fn set_level(level: Level) {
+    INIT.get_or_init(|| ());
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// True if `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= max_level()
+}
+
+/// Emit a log record. Prefer the [`crate::log_info!`]-style macros.
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    eprintln!("[{now:14.3} {} {target}] {msg}", level.tag());
+}
+
+/// Log at `Error` level.
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at `Warn` level.
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at `Info` level.
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at `Debug` level.
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at `Trace` level.
+#[macro_export]
+macro_rules! log_trace {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Trace, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_env("error"), Level::Error);
+        assert_eq!(Level::from_env("WARN"), Level::Warn);
+        assert_eq!(Level::from_env("bogus"), Level::Info);
+        assert_eq!(Level::from_env("trace"), Level::Trace);
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+    }
+}

@@ -1,0 +1,15 @@
+//! Offline substrates: PRNG, statistics, harmonic numbers, logging,
+//! thread pool, micro-benchmark harness and a property-testing
+//! mini-framework.
+//!
+//! The build environment is fully offline with no `rand`, `criterion`,
+//! `proptest` or `rayon` available, so this module provides the small,
+//! well-tested subset of each that the rest of the crate needs.
+
+pub mod bench;
+pub mod check;
+pub mod harmonic;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,266 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Implements SplitMix64 (seeding) and xoshiro256++ (bulk generation),
+//! plus the distributions the paper's latency model needs: uniform,
+//! exponential (worker runtimes and ToR-link delays are `Exp(mu)` in
+//! §III), and shuffling / subset sampling for erasure patterns.
+
+/// SplitMix64 — used to expand a single `u64` seed into xoshiro state.
+/// Reference: Steele, Lea, Flood, "Fast splittable pseudorandom number
+/// generators", OOPSLA 2014.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a new generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64 uniformly distributed bits.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — the crate-wide PRNG. Fast, 256-bit state, passes
+/// BigCrush; more than adequate for Monte-Carlo latency estimation.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Deterministically seed from a single `u64` via SplitMix64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = sm.next_u64();
+        }
+        // All-zero state is invalid for xoshiro; SplitMix64 cannot emit
+        // four consecutive zeros, but be defensive anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Self { s }
+    }
+
+    /// Seed from the system clock — for exploratory CLI runs only; all
+    /// tests and benches pass explicit seeds.
+    pub fn from_entropy() -> Self {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5EED);
+        Self::new(nanos ^ 0xA02B_DBF7_BB3C_0A7A)
+    }
+
+    /// Next 64 uniformly distributed bits (xoshiro256++ core).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's multiply-shift rejection).
+    pub fn next_below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "next_below(0)");
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n {
+                return (m >> 64) as u64 as usize;
+            }
+            // Rejection branch (rare): recompute threshold once.
+            let t = n.wrapping_neg() % n;
+            if lo >= t {
+                return (m >> 64) as u64 as usize;
+            }
+        }
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Exponentially distributed sample with rate `mu`
+    /// (mean `1/mu`) — the paper's worker-completion and ToR-link model.
+    #[inline]
+    pub fn exponential(&mut self, mu: f64) -> f64 {
+        assert!(mu > 0.0, "exponential rate must be positive");
+        // Inverse CDF; 1 - U avoids ln(0).
+        -(1.0 - self.next_f64()).ln() / mu
+    }
+
+    /// Shifted exponential: `shift + Exp(mu)` — the common refinement of
+    /// the straggler model (Lee et al., 2017).
+    pub fn shifted_exponential(&mut self, shift: f64, mu: f64) -> f64 {
+        shift + self.exponential(mu)
+    }
+
+    /// Standard normal via Box–Muller (used only by stats tests).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.next_f64();
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A uniformly random `k`-subset of `[0, n)`, in random order.
+    /// Used to sample which workers respond first in decoder tests.
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "subset k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+
+    /// Split off an independently-seeded child generator (for giving
+    /// each simulated worker / thread its own stream).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1_000 {
+            let x = r.next_below(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut r = Rng::new(11);
+        let mu = 10.0;
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(mu)).sum::<f64>() / n as f64;
+        assert!(
+            (mean - 1.0 / mu).abs() < 3e-3,
+            "mean {mean} vs expected {}",
+            1.0 / mu
+        );
+    }
+
+    #[test]
+    fn exponential_is_nonnegative_and_finite() {
+        let mut r = Rng::new(13);
+        for _ in 0..100_000 {
+            let x = r.exponential(1.0);
+            assert!(x.is_finite() && x >= 0.0);
+        }
+    }
+
+    #[test]
+    fn subset_is_valid() {
+        let mut r = Rng::new(5);
+        for _ in 0..100 {
+            let s = r.subset(20, 8);
+            assert_eq!(s.len(), 8);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 8, "no duplicates");
+            assert!(sorted.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(21);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut parent = Rng::new(1234);
+        let mut c1 = parent.split();
+        let mut c2 = parent.split();
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,179 @@
+//! Integration: the full coordinator against direct linear algebra,
+//! across code parameters, batch policies, backends and fault plans.
+
+use hiercode::config::schema::ClusterConfig;
+use hiercode::coordinator::fault::FaultConfig;
+use hiercode::coordinator::Cluster;
+use hiercode::linalg::{ops, Matrix};
+use hiercode::util::check::check;
+use hiercode::util::rng::Rng;
+
+fn matrix(m: usize, d: usize, seed: u64) -> Matrix {
+    let mut r = Rng::new(seed);
+    Matrix::from_fn(m, d, |_, _| r.uniform(-1.0, 1.0))
+}
+
+fn verify_requests(cluster: &Cluster, a: &Matrix, n_requests: usize, seed: u64, tol: f64) {
+    let d = a.cols();
+    let mut r = Rng::new(seed);
+    let xs: Vec<Vec<f64>> = (0..n_requests)
+        .map(|_| (0..d).map(|_| r.uniform(-2.0, 2.0)).collect())
+        .collect();
+    let handles: Vec<_> = xs
+        .iter()
+        .map(|x| cluster.submit(x.clone()).unwrap())
+        .collect();
+    for (x, h) in xs.iter().zip(handles) {
+        let y = h.wait().unwrap();
+        let expect = ops::matvec(a, x);
+        for (i, (&got, &want)) in y.iter().zip(expect.iter()).enumerate() {
+            assert!(
+                (got - want).abs() < tol,
+                "row {i}: {got} vs {want} (tol {tol})"
+            );
+        }
+    }
+}
+
+#[test]
+fn coded_equals_uncoded_across_code_params() {
+    for (n1, k1, n2, k2) in [(3, 2, 3, 2), (4, 2, 4, 3), (5, 3, 4, 2), (2, 1, 2, 1)] {
+        let config = ClusterConfig::demo(n1, k1, n2, k2);
+        let m = k1 * k2 * 4;
+        let a = matrix(m, 6, 10 + n1 as u64);
+        let cluster = Cluster::launch(&config, &a).unwrap();
+        verify_requests(&cluster, &a, 6, 99, 1e-3);
+        let snap = cluster.metrics();
+        assert_eq!(snap.failed, 0);
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn batching_policies_preserve_results() {
+    for max_batch in [1usize, 3, 8] {
+        let mut config = ClusterConfig::demo(4, 2, 3, 2);
+        config.batching.max_batch = max_batch;
+        config.batching.max_wait_ms = 1.0;
+        let a = matrix(16, 5, 20);
+        let cluster = Cluster::launch(&config, &a).unwrap();
+        verify_requests(&cluster, &a, 10, 50, 1e-3);
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn every_survivable_single_fault_plan_works() {
+    let (n1, k1, n2, k2) = (3usize, 2usize, 3usize, 2usize);
+    let a = matrix(8, 4, 30);
+    // All single-link faults and all single-worker faults are
+    // survivable at these parameters; each must produce exact results.
+    let mut plans: Vec<FaultConfig> = (0..n2)
+        .map(|g| FaultConfig::none().with_dead_links(&[g]))
+        .collect();
+    for g in 0..n2 {
+        for w in 0..n1 {
+            plans.push(FaultConfig::none().with_dead_workers(&[(g, w)]));
+        }
+    }
+    for plan in plans {
+        assert!(plan.survivable(n1, k1, n2, k2));
+        let config = ClusterConfig::demo(n1, k1, n2, k2);
+        let cluster = Cluster::launch_with_faults(&config, &a, plan.clone()).unwrap();
+        verify_requests(&cluster, &a, 2, 70, 1e-3);
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn property_random_fault_plans_match_survivability() {
+    // For random fault plans: survivable ⇒ exact results; not
+    // survivable ⇒ requests time out (never wrong data).
+    check("fault plans respect survivability", 8, |g| {
+        let (n1, k1, n2, k2) = (3usize, 2usize, 3usize, 2usize);
+        let mut plan = FaultConfig::none();
+        for grp in 0..n2 {
+            if g.bool_with(0.2) {
+                plan = plan.with_dead_links(&[grp]);
+            }
+            for w in 0..n1 {
+                if g.bool_with(0.15) {
+                    plan = plan.with_dead_workers(&[(grp, w)]);
+                }
+            }
+        }
+        let a = matrix(8, 4, 31);
+        let config = ClusterConfig::demo(n1, k1, n2, k2);
+        let cluster = Cluster::launch_with_faults(&config, &a, plan.clone()).unwrap();
+        let x = vec![1.0, -1.0, 0.5, 2.0];
+        let res = cluster
+            .submit(x.clone())
+            .unwrap()
+            .wait_timeout(std::time::Duration::from_millis(
+                if plan.survivable(n1, k1, n2, k2) { 20_000 } else { 400 },
+            ));
+        if plan.survivable(n1, k1, n2, k2) {
+            let y = res.expect("survivable plan must complete");
+            let expect = ops::matvec(&a, &x);
+            for (got, want) in y.iter().zip(expect.iter()) {
+                assert!((got - want).abs() < 1e-3);
+            }
+        } else {
+            assert!(res.is_err(), "unsurvivable plan must not answer");
+        }
+        cluster.shutdown();
+    });
+}
+
+#[test]
+fn pjrt_backend_end_to_end_if_artifacts_built() {
+    let dir = hiercode::runtime::artifact::default_artifact_dir();
+    if !hiercode::runtime::artifact::artifacts_available(&dir) {
+        eprintln!("skipping: artifacts not built (`make artifacts`)");
+        return;
+    }
+    // Shard shape 16x32 with batch 1 → worker_matvec_r16_d32_b1.
+    let mut config = ClusterConfig::demo(3, 2, 3, 2);
+    config.runtime.use_pjrt = true;
+    config.batching.max_batch = 1;
+    let a = matrix(64, 32, 40); // 64/(2*2) = 16 rows per shard
+    let cluster = Cluster::launch(&config, &a).unwrap();
+    verify_requests(&cluster, &a, 4, 80, 1e-3);
+    cluster.shutdown();
+}
+
+#[test]
+fn pjrt_batched_requests_if_artifacts_built() {
+    let dir = hiercode::runtime::artifact::default_artifact_dir();
+    if !hiercode::runtime::artifact::artifacts_available(&dir) {
+        eprintln!("skipping: artifacts not built (`make artifacts`)");
+        return;
+    }
+    // Shard 256x128 with batch widths {4, 8} → padding exercised.
+    let mut config = ClusterConfig::demo(2, 2, 2, 2);
+    config.runtime.use_pjrt = true;
+    config.batching.max_batch = 8;
+    config.batching.max_wait_ms = 10.0;
+    let a = matrix(1024, 128, 41);
+    let cluster = Cluster::launch(&config, &a).unwrap();
+    verify_requests(&cluster, &a, 6, 81, 1e-2);
+    let snap = cluster.metrics();
+    assert!(snap.jobs < 6, "requests must have been batched");
+    cluster.shutdown();
+}
+
+#[test]
+fn metrics_account_for_all_work() {
+    let config = ClusterConfig::demo(3, 2, 3, 2);
+    let a = matrix(8, 4, 50);
+    let cluster = Cluster::launch(&config, &a).unwrap();
+    verify_requests(&cluster, &a, 5, 90, 1e-3);
+    // Give stragglers a moment to drain so late products register.
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let snap = cluster.metrics();
+    assert_eq!(snap.requests, 5);
+    assert_eq!(snap.completed, snap.jobs);
+    assert!(snap.group_decodes >= snap.jobs * 2, "k2 = 2 decodes per job minimum");
+    assert!(snap.worker_products <= snap.jobs * 9);
+    cluster.shutdown();
+}

@@ -1,0 +1,145 @@
+//! Integration: cross-scheme agreement and the paper's comparative
+//! claims, exercised through the public API only.
+
+use hiercode::coding::cost::{self, Scheme};
+use hiercode::coding::{
+    compute_all_products, select_results, CodedScheme, HierarchicalCode, MdsCode,
+    PolynomialCode, ProductCode, ReplicationCode,
+};
+use hiercode::linalg::{ops, Matrix};
+use hiercode::sim::{bounds, markov, montecarlo, SimParams};
+use hiercode::util::check::check;
+use hiercode::util::rng::Rng;
+
+fn matrix(m: usize, d: usize, seed: u64) -> Matrix {
+    let mut r = Rng::new(seed);
+    Matrix::from_fn(m, d, |_, _| r.uniform(-1.0, 1.0))
+}
+
+/// All five schemes decode the same product from all-workers input.
+#[test]
+fn all_schemes_agree_on_the_product() {
+    let (n1, k1, n2, k2) = (4usize, 2usize, 4usize, 2usize);
+    let rows = k1 * k2 * 3;
+    let a = matrix(rows, 7, 1);
+    let x = matrix(7, 2, 2);
+    let expect = ops::matmul(&a, &x);
+    let schemes: Vec<Box<dyn CodedScheme>> = vec![
+        Box::new(MdsCode::new(n1 * n2, k1 * k2).unwrap()),
+        Box::new(HierarchicalCode::homogeneous(n1, k1, n2, k2).unwrap()),
+        Box::new(ProductCode::new(n1, k1, n2, k2).unwrap()),
+        Box::new(PolynomialCode::new(n1 * n2, k1 * k2).unwrap()),
+        Box::new(ReplicationCode::new(n1 * n2, k1 * k2).unwrap()),
+    ];
+    for s in &schemes {
+        let shards = s.encode(&a).unwrap();
+        assert_eq!(shards.len(), s.num_workers(), "{}", s.name());
+        let all = compute_all_products(&shards, &x);
+        let out = s.decode(&all, rows).unwrap();
+        assert!(
+            out.result.max_abs_diff(&expect) < 1e-6,
+            "{}: err {}",
+            s.name(),
+            out.result.max_abs_diff(&expect)
+        );
+    }
+}
+
+/// Hierarchical vs flat-MDS: same recovery threshold in workers, but
+/// the hierarchical code tolerates only group-constrained patterns —
+/// and pays far less decode (§IV).
+#[test]
+fn hierarchical_trades_patterns_for_decode_cost() {
+    let (n1, k1, n2, k2) = (4usize, 2usize, 4usize, 2usize);
+    let rows = 16;
+    let a = matrix(rows, 4, 3);
+    let x = matrix(4, 1, 4);
+    let hier = HierarchicalCode::homogeneous(n1, k1, n2, k2).unwrap();
+    let flat = MdsCode::new(n1 * n2, k1 * k2).unwrap();
+    // Any k1·k2 = 4 workers from one group: flat decodes, hier can't.
+    let one_group: Vec<usize> = (0..4).collect();
+    assert!(flat.can_decode(&one_group));
+    assert!(!hier.can_decode(&one_group));
+    // Group-aligned pattern: both decode; hier flops < flat flops when
+    // the subset is parity-heavy.
+    let shards_h = hier.encode(&a).unwrap();
+    let shards_f = flat.encode(&a).unwrap();
+    let all_h = compute_all_products(&shards_h, &x);
+    let all_f = compute_all_products(&shards_f, &x);
+    // Drop first k1 workers of each of the first k2 groups (parity use).
+    let picks: Vec<usize> = (0..n2)
+        .flat_map(|g| (k1..n1).map(move |j| g * n1 + j))
+        .collect();
+    let oh = hier.decode(&select_results(&all_h, &picks), rows).unwrap();
+    let of = flat.decode(&select_results(&all_f, &picks), rows).unwrap();
+    let expect = ops::matmul(&a, &x);
+    assert!(oh.result.max_abs_diff(&expect) < 1e-6);
+    assert!(of.result.max_abs_diff(&expect) < 1e-6);
+    assert!(
+        oh.flops < of.flops,
+        "hier decode ({}) must be cheaper than flat MDS ({})",
+        oh.flops,
+        of.flops
+    );
+}
+
+/// The full §III sandwich at multiple parameter points.
+#[test]
+fn latency_bounds_sandwich() {
+    for (k1, k2) in [(5, 3), (5, 10), (20, 5)] {
+        let p = SimParams::fig6(k1, k2);
+        let l = markov::lower_bound(&p).unwrap();
+        let et = montecarlo::expected_latency(&p, 30_000, 5).unwrap();
+        let u = bounds::lemma2_upper(&p).unwrap();
+        assert!(
+            l <= et.mean + 3.0 * et.ci95 && et.mean <= u + 3.0 * et.ci95,
+            "k1={k1},k2={k2}: L={l} E[T]={} U={u}",
+            et.mean
+        );
+    }
+}
+
+/// Measured decode flops scale like the Table I models predict:
+/// fitting log(flops) vs log(k) for the polynomial code gives an
+/// exponent near 2 (β=2 regime: solve dominated by 2k² per column).
+#[test]
+fn polynomial_decode_flops_scale_quadratically() {
+    let mut pts = Vec::new();
+    for k in [8usize, 16, 32] {
+        let n = 2 * k;
+        let code = PolynomialCode::new(n, k).unwrap();
+        let rows = k * 4;
+        let a = matrix(rows, 4, 6);
+        let x = matrix(4, 1, 7);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let out = code.decode(&all[k / 2..], rows).unwrap();
+        pts.push((k as f64, out.flops as f64));
+    }
+    // Slope of log-log fit between first and last point. With rhs
+    // columns ∝ rows/k · b, flops = O(k³) factor + O(k²·(rows/k)) solve;
+    // at rows = 4k the measured slope sits between 2 and 3.
+    let slope = (pts[2].1 / pts[0].1).ln() / (pts[2].0 / pts[0].0).ln();
+    assert!(
+        (1.8..=3.2).contains(&slope),
+        "polynomial decode exponent {slope} out of range: {pts:?}"
+    );
+}
+
+/// Property: for random valid parameters, the §IV model never ranks
+/// product below hierarchical, and replication is always free.
+#[test]
+fn property_cost_model_ordering() {
+    check("cost model ordering", 200, |g| {
+        let k1 = g.usize_in(1..500) as f64;
+        let k2 = g.usize_in(1..100) as f64;
+        let beta = g.f64_in(1.0, 3.0);
+        let h = cost::decoding_cost(Scheme::Hierarchical, k1, k2, beta);
+        let p = cost::decoding_cost(Scheme::Product, k1, k2, beta);
+        let r = cost::decoding_cost(Scheme::Replication, k1, k2, beta);
+        assert_eq!(r, 0.0);
+        // product = hier + k2·k1^β − ... : product − hier =
+        // k2·k1^β − k1^β = (k2 − 1)·k1^β ≥ 0.
+        assert!(p >= h - 1e-9, "k1={k1} k2={k2} beta={beta}: p={p} h={h}");
+    });
+}
