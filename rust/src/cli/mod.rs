@@ -4,7 +4,7 @@
 //! hiercode figures <fig6a|fig6b|fig7|table1|decode-scaling|all> [--trials N] [--seed S]
 //! hiercode sim     --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R] [--trials N]
 //! hiercode bounds  --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R]
-//! hiercode serve   [--config FILE] [--requests N] [--no-pjrt]
+//! hiercode serve   [--config FILE] [--scheme S] [--requests N] [--no-pjrt]
 //! hiercode help
 //! ```
 
@@ -23,11 +23,13 @@ USAGE:
                    [--mu1 R] [--mu2 R] [--trials N] [--seed S]
   hiercode bounds  --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R]
   hiercode serve   [--config FILE] [--requests N] [--no-pjrt]
+                   [--scheme hierarchical|mds|product|replication|polynomial]
   hiercode help
 
 `figures` regenerates the paper's evaluation artifacts (CSV on stdout).
 `sim` Monte-Carlo-estimates E[T]; `bounds` prints L / Lemma 2 / Thm 2.
-`serve` launches the in-process cluster and runs a request workload.
+`serve` launches the in-process cluster (any scheme via --scheme) and
+runs a request workload through its streaming decode sessions.
 ";
 
 /// CLI entry point (called from `main.rs`).
@@ -159,6 +161,10 @@ fn serve_cmd(args: &Args) -> crate::Result<()> {
     if args.has_flag("no-pjrt") {
         config.runtime.use_pjrt = false;
     }
+    if let Some(name) = args.get_str("scheme") {
+        config.code.scheme = crate::coding::SchemeKind::parse(name)?;
+        config.code.validate()?;
+    }
     let requests = args.get_usize("requests")?.unwrap_or(32);
     // Demo matrix sized to the code and the AOT'd shard shapes:
     // m = 1024, d = 128 → shard 256×128 (worker_matvec_r256_d128_*).
@@ -167,7 +173,8 @@ fn serve_cmd(args: &Args) -> crate::Result<()> {
     let a = Matrix::from_fn(m, d, |_, _| rng.uniform(-1.0, 1.0));
     let cluster = Cluster::launch(&config, &a)?;
     println!(
-        "cluster up: ({},{})x({},{}), matrix {m}x{d}, pjrt={}",
+        "cluster up: {} on ({},{})x({},{}), matrix {m}x{d}, pjrt={}",
+        cluster.scheme().name(),
         config.code.n1, config.code.k1, config.code.n2, config.code.k2,
         config.runtime.use_pjrt
     );
@@ -230,5 +237,16 @@ mod tests {
     #[test]
     fn serve_native_smoke() {
         run(&sv(&["serve", "--no-pjrt", "--requests", "4"])).unwrap();
+    }
+
+    #[test]
+    fn serve_every_scheme_smoke() {
+        for scheme in ["hierarchical", "mds", "product", "replication", "polynomial"] {
+            run(&sv(&[
+                "serve", "--no-pjrt", "--requests", "2", "--scheme", scheme,
+            ]))
+            .unwrap_or_else(|e| panic!("serve --scheme {scheme} failed: {e}"));
+        }
+        assert!(run(&sv(&["serve", "--no-pjrt", "--scheme", "raptor"])).is_err());
     }
 }

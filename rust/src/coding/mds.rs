@@ -5,7 +5,9 @@
 //! results decode via a `k×k` solve. This is both a baseline scheme and
 //! the building block the hierarchical code composes at two levels.
 
-use crate::coding::{CodedScheme, DecodeOutput, WorkerResult};
+use crate::coding::{
+    CodedScheme, DecodeOutput, DecodeProgress, Decoder, GatherK, WorkerResult,
+};
 use crate::linalg::{lu::LuFactors, ops, vandermonde, Matrix};
 use crate::{Error, Result};
 use std::time::Instant;
@@ -143,6 +145,74 @@ impl MdsCode {
     }
 }
 
+/// Streaming session for an [`MdsCode`]: gathers the first `k`
+/// distinct results, becomes ready at the `k`-th, and runs the `k×k`
+/// solve at `finish`. Also serves as the hierarchical code's per-group
+/// (inner) and master-side (outer) session.
+pub struct MdsDecoder {
+    code: MdsCode,
+    out_rows: usize,
+    gather: GatherK,
+    seconds: f64,
+    finished: bool,
+}
+
+impl MdsDecoder {
+    /// Open a session decoding an `out_rows`-row product through `code`.
+    pub fn new(code: MdsCode, out_rows: usize) -> Self {
+        let (n, k) = (code.n(), code.k());
+        Self {
+            code,
+            out_rows,
+            gather: GatherK::new(n, k),
+            seconds: 0.0,
+            finished: false,
+        }
+    }
+}
+
+impl Decoder for MdsDecoder {
+    fn push(&mut self, result: WorkerResult) -> Result<DecodeProgress> {
+        let t0 = Instant::now();
+        let p = self.gather.push(result.shard, result.data);
+        self.seconds += t0.elapsed().as_secs_f64();
+        p
+    }
+
+    fn progress(&self) -> DecodeProgress {
+        self.gather.progress()
+    }
+
+    fn finish(&mut self) -> Result<DecodeOutput> {
+        let t0 = Instant::now();
+        if self.finished {
+            return Err(Error::InvalidParams(
+                "decode session already finished".into(),
+            ));
+        }
+        let (blocks, flops) = self.code.decode_blocks(&self.gather.got)?;
+        let result = Matrix::vstack(&blocks)?;
+        if result.rows() != self.out_rows {
+            return Err(Error::InvalidParams(format!(
+                "decoded {} rows, expected {}",
+                result.rows(),
+                self.out_rows
+            )));
+        }
+        self.finished = true;
+        self.seconds += t0.elapsed().as_secs_f64();
+        Ok(DecodeOutput {
+            result,
+            flops,
+            seconds: self.seconds,
+        })
+    }
+
+    fn flops_so_far(&self) -> u64 {
+        0 // all MDS decode work happens in `finish` (one k×k solve)
+    }
+}
+
 impl CodedScheme for MdsCode {
     fn name(&self) -> String {
         format!("mds({},{})", self.n, self.k)
@@ -172,25 +242,8 @@ impl CodedScheme for MdsCode {
         distinct.len() >= self.k
     }
 
-    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput> {
-        let t0 = Instant::now();
-        let coded: Vec<(usize, Matrix)> = results
-            .iter()
-            .map(|r| (r.shard, r.data.clone()))
-            .collect();
-        let (blocks, flops) = self.decode_blocks(&coded)?;
-        let result = Matrix::vstack(&blocks)?;
-        if result.rows() != out_rows {
-            return Err(Error::InvalidParams(format!(
-                "decoded {} rows, expected {out_rows}",
-                result.rows()
-            )));
-        }
-        Ok(DecodeOutput {
-            result,
-            flops,
-            seconds: t0.elapsed().as_secs_f64(),
-        })
+    fn decoder(&self, out_rows: usize, _batch: usize) -> Box<dyn Decoder> {
+        Box::new(MdsDecoder::new(self.clone(), out_rows))
     }
 }
 

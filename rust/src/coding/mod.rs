@@ -17,6 +17,21 @@
 //!   (NIPS'17), decoded by (Vandermonde) interpolation;
 //! * [`cost`] — the §IV / Table I decoding-cost models `O(k^β)` and the
 //!   measured-flop accounting used to validate them.
+//!
+//! # Streaming decode sessions
+//!
+//! The paper's headline result (§IV, Table I) is that hierarchical
+//! coding wins because decode work can start *incrementally* — each
+//! group is eliminated the instant its `k1`-th result lands, instead of
+//! after all results are collected. The public decode API is therefore a
+//! stateful session: [`CodedScheme::decoder`] opens a [`Decoder`],
+//! results are fed one at a time with [`Decoder::push`] (which reports
+//! [`DecodeProgress`]), and [`Decoder::finish`] produces the
+//! [`DecodeOutput`] once the session is ready. Batch
+//! [`CodedScheme::decode`] is a provided method that *replays* the
+//! result slice through a session, so the batch path, the live
+//! coordinator, the simulator and the figures all account decode work
+//! through the same code — they cannot drift apart.
 
 pub mod cost;
 pub mod hierarchical;
@@ -26,13 +41,14 @@ pub mod product;
 pub mod replication;
 
 pub use hierarchical::{HierarchicalCode, HierarchicalParams};
-pub use mds::MdsCode;
+pub use mds::{MdsCode, MdsDecoder};
 pub use polynomial::PolynomialCode;
 pub use product::ProductCode;
 pub use replication::ReplicationCode;
 
 use crate::linalg::Matrix;
-use crate::Result;
+use crate::{Error, Result};
+use std::sync::Arc;
 
 /// A worker's computed result: `shard_index` identifies which coded
 /// shard it holds, `data` is `Â_shard · X` (`rows × batch` matrix).
@@ -50,10 +66,62 @@ pub struct WorkerResult {
 pub struct DecodeOutput {
     /// Reconstructed product, `m × batch`.
     pub result: Matrix,
-    /// Flops spent in the decode itself (not the workers' products).
+    /// Flops spent in the decode itself (not the workers' products),
+    /// across the whole session (`push` calls and `finish`).
     pub flops: u64,
-    /// Wall-clock decode time in seconds (single measurement).
+    /// Wall-clock seconds spent inside the decode session (summed over
+    /// `push` calls and `finish`).
     pub seconds: f64,
+}
+
+/// Progress of a streaming decode session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeProgress {
+    /// Not decodable yet. `still_needed` is a lower bound on how many
+    /// further (distinct) results must arrive before the session can
+    /// become ready.
+    NeedMore {
+        /// Lower bound on further results needed.
+        still_needed: usize,
+    },
+    /// The session can produce the output now; call [`Decoder::finish`].
+    Ready,
+}
+
+impl DecodeProgress {
+    /// True once the session is decodable.
+    pub fn is_ready(&self) -> bool {
+        matches!(self, DecodeProgress::Ready)
+    }
+}
+
+/// A stateful streaming decode session (see the module docs).
+///
+/// Contract:
+/// * `push` is idempotent per shard index — duplicates are ignored —
+///   and results arriving after `Ready` are ignored (the "fastest `k`"
+///   semantics of the paper: late stragglers are discarded).
+/// * Incremental schemes do real elimination work *inside* `push`
+///   (e.g. the hierarchical code decodes a group at its `k1`-th
+///   arrival), so the work left for `finish` — the post-last-arrival
+///   latency — is minimal.
+/// * `finish` is single-shot: it consumes the session's state and
+///   returns the reconstructed product with total session flops and
+///   wall-clock seconds. Calling it before `Ready` yields
+///   [`Error::Insufficient`].
+pub trait Decoder: Send {
+    /// Feed one worker result.
+    fn push(&mut self, result: WorkerResult) -> Result<DecodeProgress>;
+
+    /// Current progress, without feeding anything.
+    fn progress(&self) -> DecodeProgress;
+
+    /// Complete the decode and return the output (single-shot).
+    fn finish(&mut self) -> Result<DecodeOutput>;
+
+    /// Decode flops already spent inside `push` calls — the work the
+    /// streaming session has taken off the critical path.
+    fn flops_so_far(&self) -> u64;
 }
 
 /// A coded-computation scheme: how to shard/encode `A`, which worker
@@ -78,8 +146,181 @@ pub trait CodedScheme: Send + Sync {
     /// Can the scheme decode from exactly this set of worker indices?
     fn can_decode(&self, present: &[usize]) -> bool;
 
-    /// Decode `A·X` (`m = out_rows` rows) from worker results.
-    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput>;
+    /// Open a streaming decode session producing the `out_rows × batch`
+    /// product. `batch` is the number of columns of `X` (a sizing hint;
+    /// sessions accept whatever column count the first result carries).
+    fn decoder(&self, out_rows: usize, batch: usize) -> Box<dyn Decoder>;
+
+    /// Batch decode, defined as a *replay* of the streaming session:
+    /// results are pushed in slice order until the session is ready
+    /// (later entries are the discarded stragglers), then finished.
+    /// This is a provided method so batch and streaming paths cannot
+    /// disagree on result or flop accounting.
+    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput> {
+        let batch = results.first().map(|r| r.data.cols()).unwrap_or(1);
+        let mut session = self.decoder(out_rows, batch);
+        for r in results {
+            if session.push(r.clone())?.is_ready() {
+                break;
+            }
+        }
+        session.finish()
+    }
+
+    /// Two-tier cluster topology: how many workers each submaster
+    /// (rack) manages, in flat-index order. Defaults to one group
+    /// holding every worker (a single relay submaster).
+    fn topology(&self) -> Vec<usize> {
+        vec![self.num_workers()]
+    }
+
+    /// Group-local decode session for submaster `group`, or `None` if
+    /// this scheme's decode cannot be split across submasters (the
+    /// submaster then relays raw results to the master — the §IV
+    /// contrast with the hierarchical code). Sessions consume results
+    /// indexed by *in-group* worker index and produce that group's
+    /// share of the output. `out_rows` is the full output height.
+    fn group_decoder(
+        &self,
+        _group: usize,
+        _out_rows: usize,
+        _batch: usize,
+    ) -> Option<Box<dyn Decoder>> {
+        None
+    }
+
+    /// Master-side decode session. For schemes with group decoding the
+    /// session consumes group partials (`shard` = group index); for the
+    /// rest it consumes raw worker results (`shard` = flat worker
+    /// index) and defaults to [`CodedScheme::decoder`].
+    fn master_decoder(&self, out_rows: usize, batch: usize) -> Box<dyn Decoder> {
+        self.decoder(out_rows, batch)
+    }
+}
+
+/// The five scheme families the crate implements, as a parseable enum —
+/// the registry behind `config.code.scheme` and the CLI `--scheme`
+/// flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeKind {
+    /// The paper's `(n1,k1)×(n2,k2)` hierarchical code.
+    Hierarchical,
+    /// Flat `(n1·n2, k1·k2)` systematic MDS code.
+    Mds,
+    /// `(n1,k1)×(n2,k2)` product code.
+    Product,
+    /// `(n1·n2, k1·k2)` replication.
+    Replication,
+    /// `(n1·n2, k1·k2)` polynomial code.
+    Polynomial,
+}
+
+impl SchemeKind {
+    /// Every scheme, in the paper's comparison order.
+    pub const ALL: [SchemeKind; 5] = [
+        SchemeKind::Hierarchical,
+        SchemeKind::Mds,
+        SchemeKind::Product,
+        SchemeKind::Replication,
+        SchemeKind::Polynomial,
+    ];
+
+    /// Canonical lower-case name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeKind::Hierarchical => "hierarchical",
+            SchemeKind::Mds => "mds",
+            SchemeKind::Product => "product",
+            SchemeKind::Replication => "replication",
+            SchemeKind::Polynomial => "polynomial",
+        }
+    }
+
+    /// Parse a scheme name (as used in config files and `--scheme`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "hierarchical" | "hier" => Ok(SchemeKind::Hierarchical),
+            "mds" => Ok(SchemeKind::Mds),
+            "product" | "prod" => Ok(SchemeKind::Product),
+            "replication" | "rep" => Ok(SchemeKind::Replication),
+            "polynomial" | "poly" => Ok(SchemeKind::Polynomial),
+            other => Err(Error::InvalidParams(format!(
+                "unknown scheme '{other}' \
+                 (expected hierarchical|mds|product|replication|polynomial)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for SchemeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Build a scheme from the common `(n1,k1)×(n2,k2)` grid parameters.
+/// Grid schemes use them directly; flat schemes use `n = n1·n2`,
+/// `k = k1·k2` — the same worker count and recovery threshold, so the
+/// comparison is apples-to-apples (§IV).
+pub fn build_scheme(
+    kind: SchemeKind,
+    n1: usize,
+    k1: usize,
+    n2: usize,
+    k2: usize,
+) -> Result<Arc<dyn CodedScheme>> {
+    Ok(match kind {
+        SchemeKind::Hierarchical => Arc::new(HierarchicalCode::homogeneous(n1, k1, n2, k2)?),
+        SchemeKind::Mds => Arc::new(MdsCode::new(n1 * n2, k1 * k2)?),
+        SchemeKind::Product => Arc::new(ProductCode::new(n1, k1, n2, k2)?),
+        SchemeKind::Replication => Arc::new(ReplicationCode::new(n1 * n2, k1 * k2)?),
+        SchemeKind::Polynomial => Arc::new(PolynomialCode::new(n1 * n2, k1 * k2)?),
+    })
+}
+
+/// Shared collect-any-`k`-distinct core for MDS-type sessions: tracks
+/// the first `k` distinct shard indices pushed, ignoring duplicates and
+/// everything after the `k`-th (the discarded stragglers).
+pub(crate) struct GatherK {
+    n: usize,
+    k: usize,
+    pub(crate) got: Vec<(usize, Matrix)>,
+    seen: Vec<bool>,
+}
+
+impl GatherK {
+    pub(crate) fn new(n: usize, k: usize) -> Self {
+        Self {
+            n,
+            k,
+            got: Vec::with_capacity(k),
+            seen: vec![false; n],
+        }
+    }
+
+    pub(crate) fn push(&mut self, shard: usize, data: Matrix) -> Result<DecodeProgress> {
+        if shard >= self.n {
+            return Err(Error::InvalidParams(format!(
+                "shard index {shard} out of n={}",
+                self.n
+            )));
+        }
+        if self.got.len() < self.k && !self.seen[shard] {
+            self.seen[shard] = true;
+            self.got.push((shard, data));
+        }
+        Ok(self.progress())
+    }
+
+    pub(crate) fn progress(&self) -> DecodeProgress {
+        if self.got.len() >= self.k {
+            DecodeProgress::Ready
+        } else {
+            DecodeProgress::NeedMore {
+                still_needed: self.k - self.got.len(),
+            }
+        }
+    }
 }
 
 /// Compute every worker's product for a given encode — the "all workers
@@ -98,4 +339,47 @@ pub fn compute_all_products(shards: &[Matrix], x: &Matrix) -> Vec<WorkerResult> 
 /// Select a subset of results by worker index.
 pub fn select_results(all: &[WorkerResult], idx: &[usize]) -> Vec<WorkerResult> {
     idx.iter().map(|&i| all[i].clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_kind_parses_names_and_aliases() {
+        for kind in SchemeKind::ALL {
+            assert_eq!(SchemeKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(SchemeKind::parse("hier").unwrap(), SchemeKind::Hierarchical);
+        assert_eq!(SchemeKind::parse("POLY").unwrap(), SchemeKind::Polynomial);
+        assert!(SchemeKind::parse("raptor").is_err());
+    }
+
+    #[test]
+    fn build_scheme_matches_grid_parameters() {
+        for kind in SchemeKind::ALL {
+            let s = build_scheme(kind, 4, 2, 4, 2).unwrap();
+            assert_eq!(s.num_workers(), 16, "{}", s.name());
+        }
+        // Replication needs k | n: 3·3 = 9 workers, k = 4 does not divide.
+        assert!(build_scheme(SchemeKind::Replication, 3, 2, 3, 2).is_err());
+    }
+
+    #[test]
+    fn gather_k_ignores_duplicates_and_extras() {
+        let mut g = GatherK::new(5, 2);
+        let m = Matrix::zeros(1, 1);
+        assert_eq!(
+            g.push(3, m.clone()).unwrap(),
+            DecodeProgress::NeedMore { still_needed: 1 }
+        );
+        assert_eq!(g.push(3, m.clone()).unwrap(), DecodeProgress::NeedMore {
+            still_needed: 1
+        });
+        assert_eq!(g.push(0, m.clone()).unwrap(), DecodeProgress::Ready);
+        // Extras after ready are ignored.
+        assert_eq!(g.push(4, m).unwrap(), DecodeProgress::Ready);
+        assert_eq!(g.got.len(), 2);
+        assert!(g.push(9, Matrix::zeros(1, 1)).is_err());
+    }
 }

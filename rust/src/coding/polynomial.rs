@@ -18,7 +18,9 @@
 //! cost `O(k^β)`) with well-conditioned interpolation at the sizes the
 //! benches decode for real. DESIGN.md documents this substitution.
 
-use crate::coding::{CodedScheme, DecodeOutput, WorkerResult};
+use crate::coding::{
+    CodedScheme, DecodeOutput, DecodeProgress, Decoder, GatherK, WorkerResult,
+};
 use crate::linalg::{lu::LuFactors, ops, Matrix};
 use crate::{Error, Result};
 use std::time::Instant;
@@ -75,6 +77,101 @@ impl PolynomialCode {
     pub fn points(&self) -> &[f64] {
         &self.points
     }
+
+    /// Interpolate the stacked data blocks from exactly-`k` distinct
+    /// `(worker index, product)` pairs: solve the (Chebyshev)
+    /// Vandermonde system `V_S · D = Y`. Returns the stacked result and
+    /// the flops spent — the monolithic `O(k^β)` solve of Table I.
+    pub fn interpolate(&self, coded: &[(usize, Matrix)]) -> Result<(Matrix, u64)> {
+        if coded.len() < self.k {
+            return Err(Error::Insufficient {
+                needed: self.k,
+                got: coded.len(),
+            });
+        }
+        let use_set = &coded[..self.k];
+        let idx: Vec<usize> = use_set.iter().map(|&(i, _)| i).collect();
+        {
+            let mut dedup = idx.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            if dedup.len() != self.k {
+                return Err(Error::InvalidParams(format!(
+                    "duplicate worker indices: {idx:?}"
+                )));
+            }
+        }
+        let vsub = self.generator.select_rows(&idx);
+        let block_rows = use_set[0].1.rows();
+        let cols = use_set[0].1.cols();
+        let mut rhs = Matrix::zeros(self.k, block_rows * cols);
+        for (bi, (_, data)) in use_set.iter().enumerate() {
+            if data.rows() != block_rows || data.cols() != cols {
+                return Err(Error::InvalidParams("inconsistent result shapes".into()));
+            }
+            rhs.row_mut(bi).copy_from_slice(data.data());
+        }
+        let lu = LuFactors::factorize(&vsub)?;
+        let solved = lu.solve_matrix(&rhs)?;
+        let flops = lu.factor_flops() + lu.solve_flops(block_rows * cols);
+        let blocks = (0..self.k)
+            .map(|s| Matrix::from_vec(block_rows, cols, solved.row(s).to_vec()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((Matrix::vstack(&blocks)?, flops))
+    }
+}
+
+/// Streaming session for the polynomial code: gathers any `k` distinct
+/// evaluations and interpolates at `finish` — no incremental shortcut
+/// exists (the solve is monolithic), which is exactly the §IV
+/// comparison point against the hierarchical session.
+pub struct PolynomialDecoder {
+    code: PolynomialCode,
+    out_rows: usize,
+    gather: GatherK,
+    seconds: f64,
+    finished: bool,
+}
+
+impl Decoder for PolynomialDecoder {
+    fn push(&mut self, result: WorkerResult) -> Result<DecodeProgress> {
+        let t0 = Instant::now();
+        let p = self.gather.push(result.shard, result.data);
+        self.seconds += t0.elapsed().as_secs_f64();
+        p
+    }
+
+    fn progress(&self) -> DecodeProgress {
+        self.gather.progress()
+    }
+
+    fn finish(&mut self) -> Result<DecodeOutput> {
+        let t0 = Instant::now();
+        if self.finished {
+            return Err(Error::InvalidParams(
+                "decode session already finished".into(),
+            ));
+        }
+        let (result, flops) = self.code.interpolate(&self.gather.got)?;
+        if result.rows() != self.out_rows {
+            return Err(Error::InvalidParams(format!(
+                "decoded {} rows, expected {}",
+                result.rows(),
+                self.out_rows
+            )));
+        }
+        self.finished = true;
+        self.seconds += t0.elapsed().as_secs_f64();
+        Ok(DecodeOutput {
+            result,
+            flops,
+            seconds: self.seconds,
+        })
+    }
+
+    fn flops_so_far(&self) -> u64 {
+        0 // the interpolation solve is monolithic, all in `finish`
+    }
 }
 
 /// `n` Chebyshev nodes `cos((2i+1)π / 2n)` — distinct in `(-1, 1)`.
@@ -117,54 +214,13 @@ impl CodedScheme for PolynomialCode {
         distinct.len() >= self.k
     }
 
-    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput> {
-        let t0 = Instant::now();
-        if results.len() < self.k {
-            return Err(Error::Insufficient {
-                needed: self.k,
-                got: results.len(),
-            });
-        }
-        let use_set = &results[..self.k];
-        let idx: Vec<usize> = use_set.iter().map(|r| r.shard).collect();
-        {
-            let mut dedup = idx.clone();
-            dedup.sort_unstable();
-            dedup.dedup();
-            if dedup.len() != self.k {
-                return Err(Error::InvalidParams(format!(
-                    "duplicate worker indices: {idx:?}"
-                )));
-            }
-        }
-        // Interpolation = solving the Vandermonde system V_S · D = Y.
-        let vsub = self.generator.select_rows(&idx);
-        let block_rows = use_set[0].data.rows();
-        let cols = use_set[0].data.cols();
-        let mut rhs = Matrix::zeros(self.k, block_rows * cols);
-        for (bi, r) in use_set.iter().enumerate() {
-            if r.data.rows() != block_rows || r.data.cols() != cols {
-                return Err(Error::InvalidParams("inconsistent result shapes".into()));
-            }
-            rhs.row_mut(bi).copy_from_slice(r.data.data());
-        }
-        let lu = LuFactors::factorize(&vsub)?;
-        let solved = lu.solve_matrix(&rhs)?;
-        let flops = lu.factor_flops() + lu.solve_flops(block_rows * cols);
-        let blocks = (0..self.k)
-            .map(|s| Matrix::from_vec(block_rows, cols, solved.row(s).to_vec()))
-            .collect::<Result<Vec<_>>>()?;
-        let result = Matrix::vstack(&blocks)?;
-        if result.rows() != out_rows {
-            return Err(Error::InvalidParams(format!(
-                "decoded {} rows, expected {out_rows}",
-                result.rows()
-            )));
-        }
-        Ok(DecodeOutput {
-            result,
-            flops,
-            seconds: t0.elapsed().as_secs_f64(),
+    fn decoder(&self, out_rows: usize, _batch: usize) -> Box<dyn Decoder> {
+        Box::new(PolynomialDecoder {
+            code: self.clone(),
+            out_rows,
+            gather: GatherK::new(self.n, self.k),
+            seconds: 0.0,
+            finished: false,
         })
     }
 }

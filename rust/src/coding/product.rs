@@ -14,7 +14,9 @@
 //! `O(k1·k2^β + k2·k1^β)` lands entirely on the master, which is the
 //! §IV comparison the paper draws.
 
-use crate::coding::{CodedScheme, DecodeOutput, MdsCode, WorkerResult};
+use crate::coding::{
+    CodedScheme, DecodeOutput, DecodeProgress, Decoder, MdsCode, WorkerResult,
+};
 use crate::linalg::Matrix;
 use crate::{Error, Result};
 use std::time::Instant;
@@ -136,102 +138,216 @@ impl CodedScheme for ProductCode {
         self.peel_mask(known)
     }
 
-    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput> {
-        let t0 = Instant::now();
-        let mut grid: Vec<Vec<Option<Matrix>>> = vec![vec![None; self.n1]; self.n2];
-        for r in results {
-            if r.shard >= self.num_workers() {
-                return Err(Error::InvalidParams(format!(
-                    "worker {} out of {}",
-                    r.shard,
-                    self.num_workers()
-                )));
-            }
-            let (i, j) = self.grid_pos(r.shard);
-            if grid[i][j].is_none() {
-                grid[i][j] = Some(r.data.clone());
-            }
+    fn decoder(&self, out_rows: usize, _batch: usize) -> Box<dyn Decoder> {
+        Box::new(ProductDecoder::new(self.clone(), out_rows))
+    }
+
+    fn topology(&self) -> Vec<usize> {
+        // Grid rows map onto racks, but the product code's decode cannot
+        // be split between submasters and master (rows and columns
+        // interleave), so the submasters are relays — §IV's contrast.
+        vec![self.n1; self.n2]
+    }
+}
+
+/// Streaming session for the product code: **peeling-as-you-go**. Each
+/// pushed result is placed on the grid and peeling passes run
+/// immediately, so row/column eliminations happen as results arrive
+/// instead of after collection. Eager peeling may spend more total
+/// flops than an offline peel of the final subset (a row is decoded at
+/// its `k1`-th arrival even if more of it was still in flight) — that
+/// is the streaming tradeoff: work moves off the tail.
+pub struct ProductDecoder {
+    code: ProductCode,
+    out_rows: usize,
+    grid: Vec<Vec<Option<Matrix>>>,
+    /// Known entries per grid row / column (so peel passes check a
+    /// counter instead of cloning blocks to find out nothing decodes —
+    /// the common case on a streaming push).
+    row_count: Vec<usize>,
+    col_count: Vec<usize>,
+    /// Distinct results pushed (for the `still_needed` info bound).
+    pushed: Vec<Vec<bool>>,
+    received: usize,
+    flops: u64,
+    seconds: f64,
+    ready: bool,
+    finished: bool,
+}
+
+impl ProductDecoder {
+    fn new(code: ProductCode, out_rows: usize) -> Self {
+        let (n1, n2) = (code.n1, code.n2);
+        Self {
+            code,
+            out_rows,
+            grid: vec![vec![None; n1]; n2],
+            row_count: vec![0; n2],
+            col_count: vec![0; n1],
+            pushed: vec![vec![false; n1]; n2],
+            received: 0,
+            flops: 0,
+            seconds: 0.0,
+            ready: false,
+            finished: false,
         }
-        let mut flops = 0u64;
-        // Iterative peeling with real data.
+    }
+
+    fn data_complete(&self) -> bool {
+        (0..self.code.k2).all(|r| (0..self.code.k1).all(|c| self.grid[r][c].is_some()))
+    }
+
+    /// Run row/column peeling passes until no progress (or the data
+    /// positions are complete). Identical elimination and flop
+    /// accounting to the pre-session batch decoder, just invoked
+    /// incrementally; block clones happen only for a row/column that
+    /// actually decodes.
+    fn peel(&mut self) -> Result<()> {
+        let (n1, k1, n2, k2) = (self.code.n1, self.code.k1, self.code.n2, self.code.k2);
         loop {
             let mut progress = false;
             // Row pass.
-            for i in 0..self.n2 {
-                let have: Vec<(usize, Matrix)> = (0..self.n1)
-                    .filter_map(|j| grid[i][j].as_ref().map(|m| (j, m.clone())))
-                    .collect();
-                if have.len() >= self.k1 && have.len() < self.n1 {
-                    let (blocks, f) = self.row_code.decode_blocks(&have)?;
-                    flops += f;
-                    let re = self.row_code.encode_blocks(&blocks)?;
+            for i in 0..n2 {
+                if self.row_count[i] >= k1 && self.row_count[i] < n1 {
+                    let have: Vec<(usize, Matrix)> = (0..n1)
+                        .filter_map(|j| self.grid[i][j].as_ref().map(|m| (j, m.clone())))
+                        .collect();
+                    let (blocks, f) = self.code.row_code.decode_blocks(&have)?;
+                    self.flops += f;
+                    let re = self.code.row_code.encode_blocks(&blocks)?;
                     // Re-encode cost: 2·k1·elems per non-systematic entry.
                     for (j, m) in re.into_iter().enumerate() {
-                        if grid[i][j].is_none() {
-                            if j >= self.k1 {
-                                flops += 2 * self.k1 as u64 * m.data().len() as u64;
+                        if self.grid[i][j].is_none() {
+                            if j >= k1 {
+                                self.flops += 2 * k1 as u64 * m.data().len() as u64;
                             }
-                            grid[i][j] = Some(m);
+                            self.grid[i][j] = Some(m);
+                            self.row_count[i] += 1;
+                            self.col_count[j] += 1;
                         }
                     }
                     progress = true;
                 }
             }
             // Column pass.
-            for j in 0..self.n1 {
-                let have: Vec<(usize, Matrix)> = (0..self.n2)
-                    .filter_map(|i| grid[i][j].as_ref().map(|m| (i, m.clone())))
-                    .collect();
-                if have.len() >= self.k2 && have.len() < self.n2 {
-                    let (blocks, f) = self.col_code.decode_blocks(&have)?;
-                    flops += f;
-                    let re = self.col_code.encode_blocks(&blocks)?;
+            for j in 0..n1 {
+                if self.col_count[j] >= k2 && self.col_count[j] < n2 {
+                    let have: Vec<(usize, Matrix)> = (0..n2)
+                        .filter_map(|i| self.grid[i][j].as_ref().map(|m| (i, m.clone())))
+                        .collect();
+                    let (blocks, f) = self.code.col_code.decode_blocks(&have)?;
+                    self.flops += f;
+                    let re = self.code.col_code.encode_blocks(&blocks)?;
                     for (i, m) in re.into_iter().enumerate() {
-                        if grid[i][j].is_none() {
-                            if i >= self.k2 {
-                                flops += 2 * self.k2 as u64 * m.data().len() as u64;
+                        if self.grid[i][j].is_none() {
+                            if i >= k2 {
+                                self.flops += 2 * k2 as u64 * m.data().len() as u64;
                             }
-                            grid[i][j] = Some(m);
+                            self.grid[i][j] = Some(m);
+                            self.row_count[i] += 1;
+                            self.col_count[j] += 1;
                         }
                     }
                     progress = true;
                 }
             }
-            let done = (0..self.k2).all(|r| (0..self.k1).all(|c| grid[r][c].is_some()));
-            if done {
-                break;
-            }
-            if !progress {
-                let got = grid
-                    .iter()
-                    .flat_map(|row| row.iter())
-                    .filter(|e| e.is_some())
-                    .count();
-                return Err(Error::Insufficient {
-                    needed: self.num_data_blocks(),
-                    got,
-                });
+            if self.data_complete() || !progress {
+                return Ok(());
             }
         }
+    }
+}
+
+impl Decoder for ProductDecoder {
+    fn push(&mut self, result: WorkerResult) -> Result<DecodeProgress> {
+        let t0 = Instant::now();
+        if result.shard >= self.code.num_workers() {
+            return Err(Error::InvalidParams(format!(
+                "worker {} out of {}",
+                result.shard,
+                self.code.num_workers()
+            )));
+        }
+        let (i, j) = self.code.grid_pos(result.shard);
+        if !self.ready && !self.pushed[i][j] {
+            self.pushed[i][j] = true;
+            self.received += 1;
+            if self.grid[i][j].is_none() {
+                self.grid[i][j] = Some(result.data);
+                self.row_count[i] += 1;
+                self.col_count[j] += 1;
+            }
+            if self.data_complete() {
+                self.ready = true;
+            } else {
+                self.peel()?;
+                if self.data_complete() {
+                    self.ready = true;
+                }
+            }
+        }
+        self.seconds += t0.elapsed().as_secs_f64();
+        Ok(self.progress())
+    }
+
+    fn progress(&self) -> DecodeProgress {
+        if self.ready {
+            DecodeProgress::Ready
+        } else {
+            // Info-theoretic bound: any decode needs ≥ k1·k2 received
+            // coded symbols in total.
+            let k = self.code.k1 * self.code.k2;
+            DecodeProgress::NeedMore {
+                still_needed: k.saturating_sub(self.received).max(1),
+            }
+        }
+    }
+
+    fn finish(&mut self) -> Result<DecodeOutput> {
+        let t0 = Instant::now();
+        if self.finished {
+            return Err(Error::InvalidParams(
+                "decode session already finished".into(),
+            ));
+        }
+        if !self.ready {
+            let got = self
+                .grid
+                .iter()
+                .flat_map(|row| row.iter())
+                .filter(|e| e.is_some())
+                .count();
+            return Err(Error::Insufficient {
+                needed: self.code.num_data_blocks(),
+                got,
+            });
+        }
         // Assemble A·x from the systematic grid positions.
-        let mut blocks = Vec::with_capacity(self.k1 * self.k2);
-        for r in 0..self.k2 {
-            for c in 0..self.k1 {
-                blocks.push(grid[r][c].clone().expect("peeled"));
+        let mut blocks = Vec::with_capacity(self.code.k1 * self.code.k2);
+        for r in 0..self.code.k2 {
+            for c in 0..self.code.k1 {
+                blocks.push(self.grid[r][c].take().expect("peeled"));
             }
         }
         let result = Matrix::vstack(&blocks)?;
-        if result.rows() != out_rows {
+        if result.rows() != self.out_rows {
             return Err(Error::InvalidParams(format!(
-                "decoded {} rows, expected {out_rows}",
-                result.rows()
+                "decoded {} rows, expected {}",
+                result.rows(),
+                self.out_rows
             )));
         }
+        self.finished = true;
+        self.seconds += t0.elapsed().as_secs_f64();
         Ok(DecodeOutput {
             result,
-            flops,
-            seconds: t0.elapsed().as_secs_f64(),
+            flops: self.flops,
+            seconds: self.seconds,
         })
+    }
+
+    fn flops_so_far(&self) -> u64 {
+        self.flops
     }
 }
 

@@ -6,7 +6,9 @@
 //! `T_dec = 0` and why it wins Fig. 7's high-`α` regime despite the
 //! worst computing time `k·H_k/(n·µ2)`.
 
-use crate::coding::{CodedScheme, DecodeOutput, WorkerResult};
+use crate::coding::{
+    CodedScheme, DecodeOutput, DecodeProgress, Decoder, WorkerResult,
+};
 use crate::linalg::Matrix;
 use crate::{Error, Result};
 use std::time::Instant;
@@ -85,41 +87,95 @@ impl CodedScheme for ReplicationCode {
         covered.iter().all(|&c| c)
     }
 
-    fn decode(&self, results: &[WorkerResult], out_rows: usize) -> Result<DecodeOutput> {
+    fn decoder(&self, out_rows: usize, _batch: usize) -> Box<dyn Decoder> {
+        Box::new(ReplicationDecoder {
+            code: self.clone(),
+            out_rows,
+            slots: vec![None; self.k],
+            covered: 0,
+            seconds: 0.0,
+            finished: false,
+        })
+    }
+}
+
+/// Streaming session for replication: a block is recovered by its
+/// first-arriving replica; ready once every block is covered. Decode is
+/// a reshuffle — 0 flops (Table I's `T_dec = 0`).
+pub struct ReplicationDecoder {
+    code: ReplicationCode,
+    out_rows: usize,
+    slots: Vec<Option<Matrix>>,
+    covered: usize,
+    seconds: f64,
+    finished: bool,
+}
+
+impl Decoder for ReplicationDecoder {
+    fn push(&mut self, result: WorkerResult) -> Result<DecodeProgress> {
         let t0 = Instant::now();
-        let mut slots: Vec<Option<&Matrix>> = vec![None; self.k];
-        for r in results {
-            if r.shard >= self.n {
-                return Err(Error::InvalidParams(format!(
-                    "worker {} out of n={}",
-                    r.shard, self.n
-                )));
-            }
-            let b = self.block_of(r.shard);
-            if slots[b].is_none() {
-                slots[b] = Some(&r.data);
-            }
-        }
-        let got = slots.iter().filter(|s| s.is_some()).count();
-        if got < self.k {
-            return Err(Error::Insufficient {
-                needed: self.k,
-                got,
-            });
-        }
-        let blocks: Vec<Matrix> = slots.into_iter().map(|s| s.unwrap().clone()).collect();
-        let result = Matrix::vstack(&blocks)?;
-        if result.rows() != out_rows {
+        if result.shard >= self.code.n {
             return Err(Error::InvalidParams(format!(
-                "decoded {} rows, expected {out_rows}",
-                result.rows()
+                "worker {} out of n={}",
+                result.shard, self.code.n
             )));
         }
+        let b = self.code.block_of(result.shard);
+        if self.slots[b].is_none() {
+            self.slots[b] = Some(result.data);
+            self.covered += 1;
+        }
+        self.seconds += t0.elapsed().as_secs_f64();
+        Ok(self.progress())
+    }
+
+    fn progress(&self) -> DecodeProgress {
+        if self.covered >= self.code.k {
+            DecodeProgress::Ready
+        } else {
+            DecodeProgress::NeedMore {
+                still_needed: self.code.k - self.covered,
+            }
+        }
+    }
+
+    fn finish(&mut self) -> Result<DecodeOutput> {
+        let t0 = Instant::now();
+        if self.finished {
+            return Err(Error::InvalidParams(
+                "decode session already finished".into(),
+            ));
+        }
+        if self.covered < self.code.k {
+            return Err(Error::Insufficient {
+                needed: self.code.k,
+                got: self.covered,
+            });
+        }
+        let blocks: Vec<Matrix> = self
+            .slots
+            .iter_mut()
+            .map(|s| s.take().expect("covered"))
+            .collect();
+        let result = Matrix::vstack(&blocks)?;
+        if result.rows() != self.out_rows {
+            return Err(Error::InvalidParams(format!(
+                "decoded {} rows, expected {}",
+                result.rows(),
+                self.out_rows
+            )));
+        }
+        self.finished = true;
+        self.seconds += t0.elapsed().as_secs_f64();
         Ok(DecodeOutput {
             result,
             flops: 0, // replication decodes for free (Table I)
-            seconds: t0.elapsed().as_secs_f64(),
+            seconds: self.seconds,
         })
+    }
+
+    fn flops_so_far(&self) -> u64 {
+        0
     }
 }
 

@@ -4,7 +4,8 @@
 //!
 //! ```json
 //! {
-//!   "code":      {"n1": 4, "k1": 2, "n2": 4, "k2": 2},
+//!   "code":      {"scheme": "hierarchical",
+//!                 "n1": 4, "k1": 2, "n2": 4, "k2": 2},
 //!   "straggler": {"model": "exponential", "mu1": 10.0, "mu2": 1.0,
 //!                 "scale": 0.02},
 //!   "runtime":   {"artifact_dir": "artifacts", "use_pjrt": true,
@@ -12,15 +13,25 @@
 //!   "batching":  {"max_batch": 8, "max_wait_ms": 5.0}
 //! }
 //! ```
+//!
+//! `code.scheme` selects the coding scheme the cluster runs
+//! (`hierarchical | mds | product | replication | polynomial`, default
+//! `hierarchical`). Grid schemes use `(n1,k1)×(n2,k2)` directly; flat
+//! schemes use `n = n1·n2`, `k = k1·k2` so every scheme deploys the
+//! same worker count and recovery threshold (§IV's comparison).
 
 use crate::coding::hierarchical::HierarchicalParams;
+use crate::coding::{build_scheme, CodedScheme, SchemeKind};
 use crate::config::json::Json;
 use crate::sim::straggler::StragglerModel;
 use crate::{Error, Result};
+use std::sync::Arc;
 
-/// The `(n1,k1)×(n2,k2)` code parameters.
+/// The coding-scheme selection plus `(n1,k1)×(n2,k2)` grid parameters.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CodeConfig {
+    /// Which scheme the cluster runs.
+    pub scheme: SchemeKind,
     /// Workers per group.
     pub n1: usize,
     /// Inner code dimension.
@@ -34,17 +45,53 @@ pub struct CodeConfig {
 impl CodeConfig {
     /// Parse from the `"code"` object.
     pub fn from_json(v: &Json) -> Result<Self> {
+        let scheme = match v.get("scheme").and_then(|s| s.as_str()) {
+            Some(name) => SchemeKind::parse(name)?,
+            None => SchemeKind::Hierarchical,
+        };
         let c = Self {
+            scheme,
             n1: v.req_usize("n1", "code")?,
             k1: v.req_usize("k1", "code")?,
             n2: v.req_usize("n2", "code")?,
             k2: v.req_usize("k2", "code")?,
         };
-        c.to_params().validate()?;
+        c.validate()?;
         Ok(c)
     }
 
-    /// Convert to [`HierarchicalParams`] (homogeneous).
+    /// Validate the parameters for the selected scheme.
+    pub fn validate(&self) -> Result<()> {
+        let (n, k) = (self.n1 * self.n2, self.k1 * self.k2);
+        match self.scheme {
+            SchemeKind::Hierarchical | SchemeKind::Product => self.to_params().validate(),
+            SchemeKind::Mds | SchemeKind::Polynomial => {
+                if k == 0 || k > n {
+                    return Err(Error::InvalidParams(format!(
+                        "{}: need 1 <= k1·k2 <= n1·n2, got ({n}, {k})",
+                        self.scheme
+                    )));
+                }
+                Ok(())
+            }
+            SchemeKind::Replication => {
+                if k == 0 || k > n || n % k != 0 {
+                    return Err(Error::InvalidParams(format!(
+                        "replication: need k1·k2 ({k}) dividing n1·n2 ({n})"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Build the configured scheme.
+    pub fn build(&self) -> Result<Arc<dyn CodedScheme>> {
+        build_scheme(self.scheme, self.n1, self.k1, self.n2, self.k2)
+    }
+
+    /// Convert to [`HierarchicalParams`] (homogeneous) — meaningful for
+    /// the grid schemes.
     pub fn to_params(&self) -> HierarchicalParams {
         HierarchicalParams::homogeneous(self.n1, self.k1, self.n2, self.k2)
     }
@@ -242,10 +289,23 @@ impl ClusterConfig {
         Self::from_json_text(&text)
     }
 
-    /// A small test/demo config (no PJRT required).
+    /// A small test/demo config (no PJRT required) for any scheme.
+    pub fn demo_scheme(scheme: SchemeKind, n1: usize, k1: usize, n2: usize, k2: usize) -> Self {
+        let mut c = Self::demo(n1, k1, n2, k2);
+        c.code.scheme = scheme;
+        c
+    }
+
+    /// A small test/demo config (no PJRT required), hierarchical.
     pub fn demo(n1: usize, k1: usize, n2: usize, k2: usize) -> Self {
         Self {
-            code: CodeConfig { n1, k1, n2, k2 },
+            code: CodeConfig {
+                scheme: SchemeKind::Hierarchical,
+                n1,
+                k1,
+                n2,
+                k2,
+            },
             straggler: StragglerConfig {
                 scale: 0.001,
                 ..StragglerConfig::default()
@@ -278,7 +338,16 @@ mod tests {
     #[test]
     fn parses_full_config() {
         let c = ClusterConfig::from_json_text(FULL).unwrap();
-        assert_eq!(c.code, CodeConfig { n1: 4, k1: 2, n2: 3, k2: 2 });
+        assert_eq!(
+            c.code,
+            CodeConfig {
+                scheme: SchemeKind::Hierarchical,
+                n1: 4,
+                k1: 2,
+                n2: 3,
+                k2: 2
+            }
+        );
         assert_eq!(c.runtime.decode_threads, 3);
         assert!(!c.runtime.use_pjrt);
         assert_eq!(c.batching.max_batch, 4);
@@ -302,6 +371,34 @@ mod tests {
     fn invalid_code_rejected() {
         let bad = r#"{"code": {"n1": 2, "k1": 3, "n2": 3, "k2": 2}}"#;
         assert!(ClusterConfig::from_json_text(bad).is_err());
+    }
+
+    #[test]
+    fn scheme_field_parsed_and_validated() {
+        let c = ClusterConfig::from_json_text(
+            r#"{"code": {"scheme": "product", "n1": 3, "k1": 2, "n2": 3, "k2": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.code.scheme, SchemeKind::Product);
+        assert_eq!(c.code.build().unwrap().num_workers(), 9);
+        // Unknown scheme name rejected.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"scheme": "raptor", "n1": 3, "k1": 2, "n2": 3, "k2": 2}}"#,
+        )
+        .is_err());
+        // Replication needs k1·k2 | n1·n2: 4 does not divide 9.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"scheme": "replication", "n1": 3, "k1": 2, "n2": 3, "k2": 2}}"#,
+        )
+        .is_err());
+        // …but a 4×4 grid works for every scheme.
+        for name in ["hierarchical", "mds", "product", "replication", "polynomial"] {
+            let text = format!(
+                r#"{{"code": {{"scheme": "{name}", "n1": 4, "k1": 2, "n2": 4, "k2": 2}}}}"#
+            );
+            let c = ClusterConfig::from_json_text(&text).unwrap();
+            assert_eq!(c.code.build().unwrap().num_workers(), 16, "{name}");
+        }
     }
 
     #[test]

@@ -154,6 +154,7 @@ fn flush(
             reply: req.reply,
             column: col,
             submitted_at: req.submitted_at,
+            req_id: req.req_id,
         });
     }
     let id = JobId(*next_id);
@@ -178,6 +179,7 @@ mod tests {
                 x: vec![v; d],
                 reply: tx,
                 submitted_at: Instant::now(),
+                req_id: crate::coordinator::messages::RequestId(v.to_bits()),
             },
             rx,
         )

@@ -1,12 +1,20 @@
-//! The public facade: launch a cluster around a matrix `A`, submit
-//! requests, collect results, read metrics, shut down cleanly.
+//! The public facade: launch a cluster around a matrix `A` with any
+//! coding scheme, submit requests, collect results, read metrics, shut
+//! down cleanly.
+//!
+//! The cluster is generic over [`CodedScheme`]: `config.code.scheme`
+//! selects `hierarchical | mds | product | replication | polynomial`,
+//! and the same master/submaster/worker topology serves all of them —
+//! schemes with splittable decodes (hierarchical) decode inside the
+//! submasters, the rest relay raw products to the master's streaming
+//! decode session.
 
-use crate::coding::HierarchicalCode;
+use crate::coding::CodedScheme;
 use crate::coordinator::backend::{ComputeBackend, WorkerShard};
 use crate::coordinator::batcher;
 use crate::coordinator::fault::FaultConfig;
 use crate::coordinator::master;
-use crate::coordinator::messages::{JobRequest, MasterMsg, SubmasterMsg, WorkerCmd};
+use crate::coordinator::messages::{JobRequest, MasterMsg, RequestId, SubmasterMsg, WorkerCmd};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::submaster::{self, LinkDelay};
 use crate::coordinator::worker::{self, WorkerDelay};
@@ -15,6 +23,7 @@ use crate::linalg::Matrix;
 use crate::runtime::PjrtRuntime;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -22,6 +31,8 @@ use std::thread;
 /// Handle to one in-flight request.
 pub struct JobHandle {
     rx: mpsc::Receiver<std::result::Result<Vec<f64>, String>>,
+    master: mpsc::Sender<MasterMsg>,
+    req_id: RequestId,
 }
 
 impl JobHandle {
@@ -36,12 +47,16 @@ impl JobHandle {
         }
     }
 
-    /// Block with a timeout.
+    /// Block with a timeout. On timeout the request is **cancelled**:
+    /// the master drops its reply route and, once no client waits on
+    /// the underlying job, cancels the job itself — so abandoned jobs
+    /// leak neither decode work nor master-side state.
     pub fn wait_timeout(self, timeout: std::time::Duration) -> Result<Vec<f64>> {
         match self.rx.recv_timeout(timeout) {
             Ok(Ok(y)) => Ok(y),
             Ok(Err(msg)) => Err(Error::Coordinator(msg)),
             Err(mpsc::RecvTimeoutError::Timeout) => {
+                let _ = self.master.send(MasterMsg::CancelRequest(self.req_id));
                 Err(Error::Coordinator("request timed out".into()))
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => Err(Error::Coordinator(
@@ -49,9 +64,14 @@ impl JobHandle {
             )),
         }
     }
+
+    /// Abandon the request without waiting.
+    pub fn cancel(self) {
+        let _ = self.master.send(MasterMsg::CancelRequest(self.req_id));
+    }
 }
 
-/// A running hierarchical coded-computation cluster.
+/// A running coded-computation cluster.
 pub struct Cluster {
     req_tx: Option<mpsc::Sender<JobRequest>>,
     master_tx: mpsc::Sender<MasterMsg>,
@@ -59,7 +79,8 @@ pub struct Cluster {
     threads: Vec<thread::JoinHandle<()>>,
     d: usize,
     m: usize,
-    code: Arc<HierarchicalCode>,
+    scheme: Arc<dyn CodedScheme>,
+    next_req: AtomicU64,
 }
 
 impl Cluster {
@@ -75,13 +96,13 @@ impl Cluster {
         a: &Matrix,
         faults: FaultConfig,
     ) -> Result<Self> {
-        let p = config.code.to_params();
-        let code = Arc::new(HierarchicalCode::new(p.clone())?);
+        let scheme = config.code.build()?;
         let (m, d) = a.shape();
-        let div = code.required_row_divisor();
+        let div = scheme.row_divisor();
         if m % div != 0 {
             return Err(Error::InvalidParams(format!(
-                "matrix rows {m} not divisible by k1·k2 ({div})"
+                "matrix rows {m} not divisible by the {} scheme's row divisor {div}",
+                scheme.name()
             )));
         }
         // Backend.
@@ -91,8 +112,9 @@ impl Cluster {
             ComputeBackend::Native
         };
         // Encode A (setup path, f64) and narrow shards for the workers.
-        let grouped = code.encode_grouped(a)?;
-        let shard_shape = (grouped[0][0].rows(), grouped[0][0].cols());
+        let shards = scheme.encode(a)?;
+        debug_assert_eq!(shards.len(), scheme.num_workers());
+        let shard_shape = (shards[0].rows(), shards[0].cols());
         let supported_widths =
             backend.supported_batch_widths(shard_shape.0, shard_shape.1);
         if let Some(ws) = &supported_widths {
@@ -106,18 +128,21 @@ impl Cluster {
             }
         }
 
+        let topology = scheme.topology();
         let metrics = Arc::new(Metrics::new());
         let mut seed_rng = Rng::new(config.seed);
         let (master_tx, master_rx) = mpsc::channel::<MasterMsg>();
         let mut threads = Vec::new();
-        let mut submaster_txs = Vec::with_capacity(p.n2);
+        let mut submaster_txs = Vec::with_capacity(topology.len());
 
-        for (g, group_shards) in grouped.iter().enumerate() {
+        let mut offset = 0usize;
+        for (g, &group_size) in topology.iter().enumerate() {
             let (sub_tx, sub_rx) = mpsc::channel::<SubmasterMsg>();
             let cancel = Arc::new(crate::coordinator::messages::CancelSet::new());
             // Workers of this group.
-            let mut worker_txs = Vec::with_capacity(group_shards.len());
-            for (j, shard) in group_shards.iter().enumerate() {
+            let mut worker_txs = Vec::with_capacity(group_size);
+            for j in 0..group_size {
+                let shard = &shards[offset + j];
                 let (w_tx, w_rx) = mpsc::channel::<WorkerCmd>();
                 let delay = WorkerDelay {
                     model: config.straggler.worker,
@@ -145,7 +170,9 @@ impl Cluster {
             };
             threads.push(submaster::spawn(
                 g,
-                Arc::clone(&code),
+                offset,
+                Arc::clone(&scheme),
+                m,
                 worker_txs,
                 link,
                 faults.link_dead(g),
@@ -156,9 +183,10 @@ impl Cluster {
                 master_tx.clone(),
             ));
             submaster_txs.push(sub_tx);
+            offset += group_size;
         }
         threads.push(master::spawn(
-            Arc::clone(&code),
+            Arc::clone(&scheme),
             submaster_txs,
             m,
             Arc::clone(&metrics),
@@ -175,11 +203,10 @@ impl Cluster {
         ));
         crate::log_info!(
             "cluster",
-            "launched ({},{})x({},{}) over {}x{} matrix, backend={}, {} threads",
-            p.n1[0],
-            p.k1[0],
-            p.n2,
-            p.k2,
+            "launched {} ({} workers in {} groups) over {}x{} matrix, backend={}, {} threads",
+            scheme.name(),
+            scheme.num_workers(),
+            topology.len(),
             m,
             d,
             if config.runtime.use_pjrt { "pjrt" } else { "native" },
@@ -192,7 +219,8 @@ impl Cluster {
             threads,
             d,
             m,
-            code,
+            scheme,
+            next_req: AtomicU64::new(0),
         })
     }
 
@@ -206,6 +234,7 @@ impl Cluster {
                 self.d
             )));
         }
+        let req_id = RequestId(self.next_req.fetch_add(1, Ordering::Relaxed));
         let (reply, rx) = mpsc::channel();
         self.req_tx
             .as_ref()
@@ -214,9 +243,14 @@ impl Cluster {
                 x,
                 reply,
                 submitted_at: std::time::Instant::now(),
+                req_id,
             })
             .map_err(|_| Error::Coordinator("cluster is shutting down".into()))?;
-        Ok(JobHandle { rx })
+        Ok(JobHandle {
+            rx,
+            master: self.master_tx.clone(),
+            req_id,
+        })
     }
 
     /// Output dimension `m`.
@@ -229,9 +263,9 @@ impl Cluster {
         self.d
     }
 
-    /// The cluster's code.
-    pub fn code(&self) -> &HierarchicalCode {
-        &self.code
+    /// The cluster's coding scheme.
+    pub fn scheme(&self) -> &Arc<dyn CodedScheme> {
+        &self.scheme
     }
 
     /// Metrics snapshot.
@@ -263,6 +297,7 @@ impl Drop for Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::SchemeKind;
     use crate::linalg::ops;
 
     fn test_matrix(m: usize, d: usize, seed: u64) -> Matrix {
@@ -336,7 +371,7 @@ mod tests {
     }
 
     #[test]
-    fn stalls_cleanly_under_excess_faults() {
+    fn stalls_cleanly_under_excess_faults_and_cancels() {
         let config = ClusterConfig::demo(3, 2, 3, 2);
         let a = test_matrix(8, 4, 4);
         let faults = FaultConfig::none().with_dead_links(&[0, 1]);
@@ -347,6 +382,19 @@ mod tests {
             .unwrap()
             .wait_timeout(std::time::Duration::from_millis(500));
         assert!(res.is_err(), "must time out, not return wrong data");
+        // The timeout cancelled the abandoned job (no state leak).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            if cluster.metrics().cancelled == 1 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "abandoned job was never cancelled: {:?}",
+                cluster.metrics()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
         cluster.shutdown();
     }
 
@@ -382,6 +430,25 @@ mod tests {
         }
         let m = cluster.metrics();
         assert!(m.latency_mean > 0.0);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn flat_scheme_single_request() {
+        // A relay-topology scheme through the same cluster facade.
+        let config = ClusterConfig::demo_scheme(SchemeKind::Mds, 3, 2, 3, 2);
+        let a = test_matrix(8, 4, 8);
+        let cluster = Cluster::launch(&config, &a).unwrap();
+        assert_eq!(cluster.scheme().name(), "mds(9,4)");
+        let x = vec![0.5, 1.5, -0.25, 1.0];
+        let y = cluster.submit(x.clone()).unwrap().wait().unwrap();
+        let expect = ops::matvec(&a, &x);
+        for (got, want) in y.iter().zip(expect.iter()) {
+            assert!((got - want).abs() < 1e-4);
+        }
+        let m = cluster.metrics();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.group_decodes, 0, "flat schemes decode at the master only");
         cluster.shutdown();
     }
 }

@@ -1,36 +1,74 @@
-//! Master thread: the job state machine at the root of Fig. 1.
+//! Master thread: the job state machine at the root of Fig. 1,
+//! scheme-generic.
 //!
-//! Broadcasts batched jobs to all submasters, collects group results,
-//! and at the `k2`-th delivery performs the **cross-group decode**
-//! (recovering `A·X`), splits the batch back into per-request columns,
-//! and fans the replies out. Late group deliveries are discarded.
+//! Broadcasts batched jobs to all submasters and runs one streaming
+//! [`Decoder`] session per job ([`CodedScheme::master_decoder`]). For
+//! the hierarchical scheme the session consumes decoded group results
+//! (the outer code); for flat schemes the submasters are relays and the
+//! session consumes raw worker products. The moment a session reports
+//! `Ready`, the master finishes it, splits the batch back into
+//! per-request columns, fans the replies out, and tells every submaster
+//! the job is over (cancelling still-pending worker computes). Late
+//! partials are discarded.
+//!
+//! Clients that abandon a request ([`MasterMsg::CancelRequest`]) have
+//! their reply route dropped; a job nobody waits on anymore is
+//! cancelled outright so it leaks neither decode work nor state.
 
-use crate::coding::HierarchicalCode;
+use crate::coding::{CodedScheme, DecodeOutput, DecodeProgress, Decoder, WorkerResult};
 use crate::coordinator::messages::{
-    JobBroadcast, JobId, MasterMsg, ReplyRoute, SubmasterMsg,
+    JobId, MasterMsg, ReplyRoute, RequestId, SubmasterMsg,
 };
 use crate::coordinator::metrics::Metrics;
-use crate::linalg::Matrix;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-struct JobState {
-    /// Collected `(group, Ã_i·X)` results.
-    groups: Vec<(usize, Matrix)>,
+enum JobState {
+    Active(ActiveJob),
+    /// Completed, failed or cancelled — kept so late partials are
+    /// recognized (payload-free, so nothing leaks).
+    Done,
+}
+
+struct ActiveJob {
+    /// The job's streaming decode session.
+    session: Box<dyn Decoder>,
     /// Reply routing (one per batched request column).
     replies: Vec<ReplyRoute>,
-    /// Set once decoded.
-    done: bool,
     /// Dispatch time (for job-level latency).
     dispatched_at: Instant,
 }
 
+/// Deliver a finished decode to every waiting client.
+fn complete_job(metrics: &Metrics, replies: &[ReplyRoute], out: &DecodeOutput) {
+    Metrics::add(&metrics.decode_flops, out.flops);
+    metrics.record_decode_latency(out.seconds);
+    // Count completion *before* fanning out so clients never observe a
+    // reply while the job still reads as in-flight.
+    Metrics::inc(&metrics.completed);
+    for route in replies {
+        let col: Vec<f64> = (0..out.result.rows())
+            .map(|r| out.result[(r, route.column)])
+            .collect();
+        metrics.record_latency(route.submitted_at.elapsed().as_secs_f64());
+        let _ = route.reply.send(Ok(col));
+    }
+}
+
+/// Deliver a decode failure to every waiting client.
+fn fail_job(metrics: &Metrics, replies: &[ReplyRoute], msg: &str) {
+    Metrics::inc(&metrics.failed);
+    for route in replies {
+        let _ = route.reply.send(Err(msg.to_string()));
+    }
+}
+
 /// Spawn the master thread.
 pub fn spawn(
-    code: Arc<HierarchicalCode>,
+    scheme: Arc<dyn CodedScheme>,
     submasters: Vec<mpsc::Sender<SubmasterMsg>>,
     out_rows: usize,
     metrics: Arc<Metrics>,
@@ -39,8 +77,15 @@ pub fn spawn(
     thread::Builder::new()
         .name("hiercode-master".to_string())
         .spawn(move || {
-            let k2 = code.params().k2;
             let mut jobs: HashMap<JobId, JobState> = HashMap::new();
+            // Request → job lookup for O(1) cancellation. Entries are
+            // consumed by CancelRequest; like the Done entries in
+            // `jobs`, the rest are kept so a cancel racing completion
+            // is recognized as late instead of leaking elsewhere.
+            let mut req_index: HashMap<RequestId, JobId> = HashMap::new();
+            // Cancellations that arrived before their request was
+            // batched into a job (bounded; see CancelSet's rationale).
+            let mut cancelled_reqs: HashSet<RequestId> = HashSet::new();
             while let Ok(msg) = rx.recv() {
                 match msg {
                     MasterMsg::Shutdown => {
@@ -51,79 +96,129 @@ pub fn spawn(
                     }
                     MasterMsg::Batch { job, replies } => {
                         Metrics::inc(&metrics.jobs);
+                        let mut replies = replies;
+                        if !cancelled_reqs.is_empty() {
+                            replies.retain(|r| !cancelled_reqs.remove(&r.req_id));
+                        }
+                        if replies.is_empty() {
+                            // Every client already gave up: never dispatch.
+                            Metrics::inc(&metrics.cancelled);
+                            jobs.insert(job.id, JobState::Done);
+                            continue;
+                        }
+                        for route in &replies {
+                            req_index.insert(route.req_id, job.id);
+                        }
+                        let session = scheme.master_decoder(out_rows, job.x.cols());
                         jobs.insert(
                             job.id,
-                            JobState {
-                                groups: Vec::with_capacity(k2),
+                            JobState::Active(ActiveJob {
+                                session,
                                 replies,
-                                done: false,
                                 dispatched_at: Instant::now(),
-                            },
+                            }),
                         );
                         for sm in &submasters {
-                            let _ = sm.send(SubmasterMsg::Job(JobBroadcast {
+                            let _ = sm.send(SubmasterMsg::Job(crate::coordinator::messages::JobBroadcast {
                                 id: job.id,
                                 x: Arc::clone(&job.x),
                             }));
                         }
                     }
-                    MasterMsg::Group(gr) => {
-                        let Some(state) = jobs.get_mut(&gr.id) else {
-                            continue; // late delivery for a finished job
+                    MasterMsg::Partial(pr) => {
+                        let finished = match jobs.get_mut(&pr.id) {
+                            None | Some(JobState::Done) => continue, // late delivery
+                            Some(JobState::Active(state)) => {
+                                let pushed = state.session.push(WorkerResult {
+                                    shard: pr.shard,
+                                    data: pr.data,
+                                });
+                                match pushed {
+                                    Ok(DecodeProgress::NeedMore { .. }) => false,
+                                    Ok(DecodeProgress::Ready) => {
+                                        match state.session.finish() {
+                                            Ok(out) => {
+                                                debug_assert_eq!(
+                                                    out.result.rows(),
+                                                    out_rows
+                                                );
+                                                complete_job(
+                                                    &metrics,
+                                                    &state.replies,
+                                                    &out,
+                                                );
+                                                crate::log_debug!(
+                                                    "master",
+                                                    "job {:?} done in {:.1}ms",
+                                                    pr.id,
+                                                    state
+                                                        .dispatched_at
+                                                        .elapsed()
+                                                        .as_secs_f64()
+                                                        * 1e3
+                                                );
+                                            }
+                                            Err(e) => fail_job(
+                                                &metrics,
+                                                &state.replies,
+                                                &format!("decode failed: {e}"),
+                                            ),
+                                        }
+                                        true
+                                    }
+                                    Err(e) => {
+                                        fail_job(
+                                            &metrics,
+                                            &state.replies,
+                                            &format!("decode rejected a result: {e}"),
+                                        );
+                                        true
+                                    }
+                                }
+                            }
                         };
-                        if state.done {
-                            continue;
+                        if finished {
+                            jobs.insert(pr.id, JobState::Done);
+                            for sm in &submasters {
+                                let _ = sm.send(SubmasterMsg::Finish(pr.id));
+                            }
                         }
-                        state.groups.push((gr.group, gr.data));
-                        if state.groups.len() < k2 {
-                            continue;
-                        }
-                        state.done = true;
-                        // k2-th fastest group arrived: cross-group decode.
-                        let t0 = Instant::now();
-                        let decode = code.decode_cross(&state.groups);
-                        match decode {
-                            Ok((result, flops)) => {
-                                Metrics::add(&metrics.decode_flops, flops);
-                                metrics.record_decode_latency(t0.elapsed().as_secs_f64());
-                                debug_assert_eq!(result.rows(), out_rows);
-                                // Count completion *before* fanning out so
-                                // clients never observe a reply while the
-                                // job still reads as in-flight.
-                                Metrics::inc(&metrics.completed);
-                                // Fan out per-request columns.
-                                for route in &state.replies {
-                                    let col: Vec<f64> = (0..result.rows())
-                                        .map(|r| result[(r, route.column)])
-                                        .collect();
-                                    metrics.record_latency(
-                                        route.submitted_at.elapsed().as_secs_f64(),
+                    }
+                    MasterMsg::CancelRequest(req) => {
+                        match req_index.remove(&req) {
+                            Some(job_id) => {
+                                // O(1) lookup; a cancel racing completion
+                                // finds the job Done and is a no-op.
+                                let mut orphaned = false;
+                                if let Some(JobState::Active(active)) =
+                                    jobs.get_mut(&job_id)
+                                {
+                                    active.replies.retain(|r| r.req_id != req);
+                                    orphaned = active.replies.is_empty();
+                                }
+                                if orphaned {
+                                    // Nobody waits on this job anymore.
+                                    Metrics::inc(&metrics.cancelled);
+                                    jobs.insert(job_id, JobState::Done);
+                                    for sm in &submasters {
+                                        let _ =
+                                            sm.send(SubmasterMsg::Finish(job_id));
+                                    }
+                                    crate::log_debug!(
+                                        "master",
+                                        "job {job_id:?} cancelled (all clients gone)"
                                     );
-                                    let _ = route.reply.send(Ok(col));
                                 }
-                                crate::log_debug!(
-                                    "master",
-                                    "job {:?} done in {:.1}ms ({} groups used)",
-                                    gr.id,
-                                    state.dispatched_at.elapsed().as_secs_f64() * 1e3,
-                                    k2
-                                );
                             }
-                            Err(e) => {
-                                Metrics::inc(&metrics.failed);
-                                for route in &state.replies {
-                                    let _ = route
-                                        .reply
-                                        .send(Err(format!("cross-group decode failed: {e}")));
+                            None => {
+                                // Not batched yet: remember it for Batch time
+                                // (bounded, like CancelSet).
+                                if cancelled_reqs.len() > 4096 {
+                                    cancelled_reqs.clear();
                                 }
+                                cancelled_reqs.insert(req);
                             }
                         }
-                        // Trim: keep the entry so later deliveries are
-                        // recognized as late, but free the payloads.
-                        let state = jobs.get_mut(&gr.id).expect("state exists");
-                        state.groups.clear();
-                        state.groups.shrink_to_fit();
-                        state.replies.clear();
                     }
                 }
             }
@@ -134,11 +229,13 @@ pub fn spawn(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::messages::GroupResult;
-    use crate::linalg::ops;
+    use crate::coding::HierarchicalCode;
+    use crate::coordinator::messages::{JobBroadcast, PartialResult};
+    use crate::linalg::{ops, Matrix};
     use crate::util::rng::Rng;
 
-    /// Drive the master with synthetic group results.
+    /// Drive the master with synthetic group partials (hierarchical
+    /// scheme: master session = outer code).
     #[test]
     fn master_decodes_at_k2th_group_and_replies() {
         let code = Arc::new(HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap());
@@ -156,9 +253,10 @@ mod tests {
         };
         let (master_tx, master_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
+        let scheme: Arc<dyn CodedScheme> = code;
         let h = spawn(
-            Arc::clone(&code),
-            vec![], // no submasters needed: we inject group results
+            Arc::clone(&scheme),
+            vec![], // no submasters needed: we inject partials
             8,
             Arc::clone(&metrics),
             master_rx,
@@ -176,11 +274,13 @@ mod tests {
                         reply: reply_tx.clone(),
                         column: 0,
                         submitted_at: Instant::now(),
+                        req_id: RequestId(0),
                     },
                     ReplyRoute {
                         reply: reply_tx,
                         column: 1,
                         submitted_at: Instant::now(),
+                        req_id: RequestId(1),
                     },
                 ],
             })
@@ -188,9 +288,9 @@ mod tests {
         // Deliver groups 2 and 1 (parity + systematic) — k2 = 2.
         for &g in &[2usize, 1usize] {
             master_tx
-                .send(MasterMsg::Group(GroupResult {
+                .send(MasterMsg::Partial(PartialResult {
                     id,
-                    group: g,
+                    shard: g,
                     data: ops::matmul(&coded_groups[g], &x),
                     decode_flops: 0,
                     finished_at: Instant::now(),
@@ -213,9 +313,9 @@ mod tests {
         }
         // Late third group is ignored.
         master_tx
-            .send(MasterMsg::Group(GroupResult {
+            .send(MasterMsg::Partial(PartialResult {
                 id,
-                group: 0,
+                shard: 0,
                 data: ops::matmul(&coded_groups[0], &x),
                 decode_flops: 0,
                 finished_at: Instant::now(),
@@ -226,5 +326,99 @@ mod tests {
         let s = metrics.snapshot();
         assert_eq!(s.completed, 1);
         assert_eq!(s.failed, 0);
+    }
+
+    /// Cancelling every request of a job cancels the job itself; its
+    /// late partials are then discarded and nothing decodes.
+    #[test]
+    fn cancelled_job_never_decodes() {
+        let code = Arc::new(HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap());
+        let mut r = Rng::new(9);
+        let a = Matrix::from_fn(8, 3, |_, _| r.uniform(-1.0, 1.0));
+        let x = Matrix::from_fn(3, 1, |_, _| r.uniform(-1.0, 1.0));
+        let coded_groups = {
+            let grouped = code.encode_grouped(&a).unwrap();
+            (0..3)
+                .map(|i| Matrix::vstack(&grouped[i][..2].to_vec()).unwrap())
+                .collect::<Vec<_>>()
+        };
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let scheme: Arc<dyn CodedScheme> = code;
+        let h = spawn(scheme, vec![], 8, Arc::clone(&metrics), master_rx);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let id = JobId(1);
+        master_tx
+            .send(MasterMsg::Batch {
+                job: JobBroadcast {
+                    id,
+                    x: Arc::new(x.clone()),
+                },
+                replies: vec![ReplyRoute {
+                    reply: reply_tx,
+                    column: 0,
+                    submitted_at: Instant::now(),
+                    req_id: RequestId(7),
+                }],
+            })
+            .unwrap();
+        master_tx
+            .send(MasterMsg::CancelRequest(RequestId(7)))
+            .unwrap();
+        // Enough partials to decode — but the job is already cancelled.
+        for &g in &[0usize, 1] {
+            master_tx
+                .send(MasterMsg::Partial(PartialResult {
+                    id,
+                    shard: g,
+                    data: ops::matmul(&coded_groups[g], &x),
+                    decode_flops: 0,
+                    finished_at: Instant::now(),
+                }))
+                .unwrap();
+        }
+        master_tx.send(MasterMsg::Shutdown).unwrap();
+        h.join().unwrap();
+        assert!(
+            reply_rx.recv().is_err(),
+            "cancelled request must never get a reply"
+        );
+        let s = metrics.snapshot();
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.decode_flops, 0, "no decode work for a cancelled job");
+    }
+
+    /// A cancellation arriving before the Batch drops the route at
+    /// Batch time (the request was still in the batcher's buffer).
+    #[test]
+    fn pre_batch_cancellation_respected() {
+        let code = Arc::new(HierarchicalCode::homogeneous(2, 1, 2, 1).unwrap());
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let scheme: Arc<dyn CodedScheme> = code;
+        let h = spawn(scheme, vec![], 2, Arc::clone(&metrics), master_rx);
+        master_tx
+            .send(MasterMsg::CancelRequest(RequestId(3)))
+            .unwrap();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        master_tx
+            .send(MasterMsg::Batch {
+                job: JobBroadcast {
+                    id: JobId(5),
+                    x: Arc::new(Matrix::identity(1)),
+                },
+                replies: vec![ReplyRoute {
+                    reply: reply_tx,
+                    column: 0,
+                    submitted_at: Instant::now(),
+                    req_id: RequestId(3),
+                }],
+            })
+            .unwrap();
+        master_tx.send(MasterMsg::Shutdown).unwrap();
+        h.join().unwrap();
+        assert!(reply_rx.recv().is_err());
+        assert_eq!(metrics.snapshot().cancelled, 1);
     }
 }

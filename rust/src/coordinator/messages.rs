@@ -9,6 +9,10 @@ use std::time::Instant;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct JobId(pub u64);
 
+/// Identifies one client request (a single column of some batched job).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
 /// A client request: multiply the cluster's matrix `A` by `x`.
 #[derive(Debug)]
 pub struct JobRequest {
@@ -18,6 +22,8 @@ pub struct JobRequest {
     pub reply: mpsc::Sender<Result<Vec<f64>, String>>,
     /// Client-side submit timestamp (for end-to-end latency metrics).
     pub submitted_at: Instant,
+    /// Cluster-unique request identity (used for cancellation).
+    pub req_id: RequestId,
 }
 
 /// A batched job broadcast from master to submasters.
@@ -40,18 +46,22 @@ pub struct WorkerDone {
     pub data: Matrix,
 }
 
-/// Submaster → master: one group's decoded subtask result.
+/// Submaster → master: one partial result feeding the master's decode
+/// session. For schemes with group decoding (hierarchical) `shard` is
+/// the **group index** and `data` the decoded `Ã_i · X`; for relay
+/// groups `shard` is the **flat worker index** and `data` the raw shard
+/// product.
 #[derive(Debug)]
-pub struct GroupResult {
+pub struct PartialResult {
     /// Job id.
     pub id: JobId,
-    /// Group index `i`.
-    pub group: usize,
-    /// The decoded `Ã_i · X` (`(m/k2) × b`).
+    /// Shard index in the master session's index space (see above).
+    pub shard: usize,
+    /// The partial product.
     pub data: Matrix,
-    /// Flops the submaster spent decoding (metrics/§IV validation).
+    /// Flops the submaster spent decoding (0 for relayed products).
     pub decode_flops: u64,
-    /// When the group finished its subtask (`S_i`, before link delay).
+    /// When the partial was produced (`S_i`, before link delay).
     pub finished_at: Instant,
 }
 
@@ -71,6 +81,9 @@ pub enum SubmasterMsg {
     Job(JobBroadcast),
     /// A worker finished.
     Done(WorkerDone),
+    /// The master finished (or cancelled) this job: stop feeding it,
+    /// cancel still-pending worker computes.
+    Finish(JobId),
     /// Exit.
     Shutdown,
 }
@@ -86,8 +99,12 @@ pub enum MasterMsg {
         /// Reply routing: one entry per column of `X`.
         replies: Vec<ReplyRoute>,
     },
-    /// A group result arrived.
-    Group(GroupResult),
+    /// A partial result arrived.
+    Partial(PartialResult),
+    /// A client abandoned its request (e.g. `wait_timeout` elapsed):
+    /// drop its reply route; cancel the whole job once no client is
+    /// left waiting on it.
+    CancelRequest(RequestId),
     /// Exit.
     Shutdown,
 }
@@ -135,4 +152,6 @@ pub struct ReplyRoute {
     pub column: usize,
     /// Client submit time.
     pub submitted_at: Instant,
+    /// The request this column answers (for cancellation).
+    pub req_id: RequestId,
 }

@@ -17,6 +17,8 @@ pub struct Metrics {
     pub completed: AtomicU64,
     /// Jobs failed (insufficient groups, decode error).
     pub failed: AtomicU64,
+    /// Jobs cancelled (every client abandoned them before completion).
+    pub cancelled: AtomicU64,
     /// Worker products computed.
     pub worker_products: AtomicU64,
     /// Worker products discarded (arrived after their group decoded).
@@ -59,6 +61,7 @@ impl Metrics {
             jobs: self.jobs.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
             worker_products: self.worker_products.load(Ordering::Relaxed),
             late_products: self.late_products.load(Ordering::Relaxed),
             group_decodes: self.group_decodes.load(Ordering::Relaxed),
@@ -92,6 +95,8 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     /// Jobs failed.
     pub failed: u64,
+    /// Jobs cancelled (abandoned by every client).
+    pub cancelled: u64,
     /// Worker products computed.
     pub worker_products: u64,
     /// Late (discarded) products.
@@ -113,7 +118,11 @@ pub struct MetricsSnapshot {
 impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "requests:        {}", self.requests)?;
-        writeln!(f, "jobs:            {} ({} completed, {} failed)", self.jobs, self.completed, self.failed)?;
+        writeln!(
+            f,
+            "jobs:            {} ({} completed, {} failed, {} cancelled)",
+            self.jobs, self.completed, self.failed, self.cancelled
+        )?;
         writeln!(f, "worker products: {} ({} late/discarded)", self.worker_products, self.late_products)?;
         writeln!(f, "group decodes:   {}", self.group_decodes)?;
         writeln!(f, "decode flops:    {}", self.decode_flops)?;

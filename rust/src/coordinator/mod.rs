@@ -1,12 +1,19 @@
-//! The runnable system: an in-process hierarchical coded-computation
-//! cluster (Fig. 1's topology as threads + channels).
+//! The runnable system: an in-process coded-computation cluster
+//! (Fig. 1's topology as threads + channels), generic over the coding
+//! scheme.
 //!
 //! ```text
 //!  client ─▶ Batcher ─▶ Master ──▶ Submaster(1) ──▶ Worker(1,1..n1)
 //!    ▲          │          │  └──▶ Submaster(…) ──▶ Worker(…)
-//!    └──────────┴──results─┘       (intra-group decode at k1-th
-//!                                   result, uplink to master)
+//!    └──────────┴──results─┘       (group decode session at k1-th
+//!                                   result, or raw-product relay)
 //! ```
+//!
+//! Decoding runs through the streaming [`crate::coding::Decoder`]
+//! sessions: submasters of schemes with splittable decodes
+//! (hierarchical) finish their group session at the `k1`-th product and
+//! ship the partial; the master feeds partials into its own session and
+//! replies the instant it turns `Ready`.
 //!
 //! * [`batcher`] — folds incoming requests into batched jobs (`X` with
 //!   up to `max_batch` columns) so worker products feed MXU-shaped
@@ -15,10 +22,10 @@
 //!   pure-Rust fallback;
 //! * [`worker`] — one thread per `w(i,j)`: straggler-delay injection,
 //!   shard product, result upload;
-//! * [`submaster`] — one thread per group: collects the `k1` fastest,
-//!   intra-group decode, uplink (with ToR delay) to the master;
-//! * [`master`] — job state machine: collects the `k2` fastest groups,
-//!   cross-group decode, response fan-out;
+//! * [`submaster`] — one thread per group: group decode session or
+//!   relay, uplink (with ToR delay) to the master;
+//! * [`master`] — job state machine: one decode session per job,
+//!   response fan-out, job cancellation;
 //! * [`cluster`] — the public facade: [`cluster::Cluster::launch`],
 //!   [`cluster::Cluster::submit`], metrics, shutdown;
 //! * [`metrics`] — counters and latency histograms;
@@ -38,4 +45,4 @@ pub mod submaster;
 pub mod worker;
 
 pub use cluster::{Cluster, JobHandle};
-pub use messages::{JobId, JobRequest};
+pub use messages::{JobId, JobRequest, RequestId};

@@ -1,19 +1,29 @@
-//! Submaster thread: the group leader of Fig. 1.
+//! Submaster thread: the group leader of Fig. 1, scheme-generic.
 //!
-//! Forwards job broadcasts to its workers, collects their products, and
-//! — the moment the `k1`-th product for a job arrives — performs the
-//! **intra-group decode** (recovering `Ã_i·X`) and ships it to the
-//! master after a ToR-link delay. Products arriving after the decode
-//! are counted and discarded (the paper's "fastest `k1`" semantics).
-//! Because every group's submaster is its own thread, the `n2` decodes
-//! of §IV run genuinely in parallel.
+//! Forwards job broadcasts to its workers and then behaves according to
+//! the scheme ([`CodedScheme::group_decoder`]):
+//!
+//! * **Decoding group** (hierarchical): worker products feed a
+//!   per-job streaming [`Decoder`] session; the moment the session
+//!   reports `Ready` — the `k1`-th product — the submaster finishes it
+//!   (the intra-group decode), cancels the group's still-running
+//!   workers and ships the group partial to the master after a ToR-link
+//!   delay. Because every group's submaster is its own thread, the `n2`
+//!   decodes of §IV run genuinely in parallel.
+//! * **Relay group** (mds / product / replication / polynomial —
+//!   schemes whose decode cannot be split): every product is forwarded
+//!   raw to the master, translated to its flat worker index; the master
+//!   session does all decoding.
+//!
+//! Products arriving after the group decoded — or after the master
+//! declared the job finished ([`SubmasterMsg::Finish`]) — are counted
+//! and discarded (the paper's "fastest `k1`" semantics).
 
-use crate::coding::HierarchicalCode;
+use crate::coding::{CodedScheme, DecodeProgress, Decoder};
 use crate::coordinator::messages::{
-    CancelSet, GroupResult, JobBroadcast, JobId, SubmasterMsg, WorkerCmd,
+    CancelSet, JobId, MasterMsg, PartialResult, SubmasterMsg, WorkerCmd,
 };
 use crate::coordinator::metrics::Metrics;
-use crate::linalg::Matrix;
 use crate::sim::straggler::StragglerModel;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
@@ -33,18 +43,23 @@ pub struct LinkDelay {
     pub enabled: bool,
 }
 
-struct JobState {
-    /// Collected `(worker index, product)` pairs.
-    results: Vec<(usize, Matrix)>,
-    /// Set once decoded and shipped.
-    decoded: bool,
+enum GroupJob {
+    /// This group's streaming decode session (hierarchical inner code).
+    Decoding(Box<dyn Decoder>),
+    /// No group decoding — forward raw products to the master.
+    Relay,
+    /// Decoded / shipped / finished — later products are late.
+    Done,
 }
 
-/// Spawn the submaster for `group`.
+/// Spawn the submaster for `group`, whose workers start at flat index
+/// `offset`.
 #[allow(clippy::too_many_arguments)]
 pub fn spawn(
     group: usize,
-    code: Arc<HierarchicalCode>,
+    offset: usize,
+    scheme: Arc<dyn CodedScheme>,
+    out_rows: usize,
     workers: Vec<mpsc::Sender<WorkerCmd>>,
     link: LinkDelay,
     link_dead: bool,
@@ -52,13 +67,12 @@ pub fn spawn(
     metrics: Arc<Metrics>,
     mut rng: Rng,
     rx: mpsc::Receiver<SubmasterMsg>,
-    master: mpsc::Sender<crate::coordinator::messages::MasterMsg>,
+    master: mpsc::Sender<MasterMsg>,
 ) -> thread::JoinHandle<()> {
     thread::Builder::new()
         .name(format!("hiercode-sm{group}"))
         .spawn(move || {
-            let k1 = code.params().k1[group];
-            let mut jobs: HashMap<JobId, JobState> = HashMap::new();
+            let mut jobs: HashMap<JobId, GroupJob> = HashMap::new();
             while let Ok(msg) = rx.recv() {
                 match msg {
                     SubmasterMsg::Shutdown => {
@@ -68,81 +82,133 @@ pub fn spawn(
                         break;
                     }
                     SubmasterMsg::Job(job) => {
-                        jobs.insert(
-                            job.id,
-                            JobState {
-                                results: Vec::with_capacity(k1),
-                                decoded: false,
-                            },
-                        );
+                        let state =
+                            match scheme.group_decoder(group, out_rows, job.x.cols()) {
+                                Some(session) => GroupJob::Decoding(session),
+                                None => GroupJob::Relay,
+                            };
+                        jobs.insert(job.id, state);
                         for w in &workers {
-                            let _ = w.send(WorkerCmd::Compute(JobBroadcast {
-                                id: job.id,
-                                x: Arc::clone(&job.x),
-                            }));
+                            let _ = w.send(WorkerCmd::Compute(
+                                crate::coordinator::messages::JobBroadcast {
+                                    id: job.id,
+                                    x: Arc::clone(&job.x),
+                                },
+                            ));
+                        }
+                    }
+                    SubmasterMsg::Finish(id) => {
+                        // Master completed or cancelled the job: stop any
+                        // still-pending worker computes, mark late.
+                        cancel.mark(id);
+                        if let Some(state) = jobs.get_mut(&id) {
+                            *state = GroupJob::Done;
+                        } else {
+                            jobs.insert(id, GroupJob::Done);
                         }
                     }
                     SubmasterMsg::Done(done) => {
                         Metrics::inc(&metrics.worker_products);
                         let Some(state) = jobs.get_mut(&done.id) else {
-                            // Job already completed and garbage-collected.
+                            // Job unknown (already garbage-collected).
                             Metrics::inc(&metrics.late_products);
                             continue;
                         };
-                        if state.decoded {
-                            Metrics::inc(&metrics.late_products);
-                            continue;
-                        }
-                        state.results.push((done.index, done.data));
-                        if state.results.len() < k1 {
-                            continue;
-                        }
-                        // k1-th fastest arrived: cancel the group's
-                        // still-running workers, then decode.
-                        state.decoded = true;
-                        cancel.mark(done.id);
-                        match code.decode_group(group, &state.results) {
-                            Ok((data, flops)) => {
-                                Metrics::inc(&metrics.group_decodes);
-                                Metrics::add(&metrics.decode_flops, flops);
-                                let finished_at = Instant::now();
+                        match state {
+                            GroupJob::Done => {
+                                Metrics::inc(&metrics.late_products);
+                            }
+                            GroupJob::Relay => {
                                 if link_dead {
-                                    crate::log_debug!(
-                                        "submaster",
-                                        "group {group}: uplink dead, dropping job {:?}",
-                                        done.id
-                                    );
-                                } else {
-                                    if link.enabled {
-                                        let d = link.model.sample(&mut rng) * link.scale;
-                                        if d > 0.0 {
-                                            thread::sleep(Duration::from_secs_f64(d));
+                                    continue; // uplink severed: drop
+                                }
+                                if link.enabled {
+                                    let d = link.model.sample(&mut rng) * link.scale;
+                                    if d > 0.0 {
+                                        thread::sleep(Duration::from_secs_f64(d));
+                                    }
+                                }
+                                let _ = master.send(MasterMsg::Partial(PartialResult {
+                                    id: done.id,
+                                    shard: offset + done.index,
+                                    data: done.data,
+                                    decode_flops: 0,
+                                    finished_at: Instant::now(),
+                                }));
+                            }
+                            GroupJob::Decoding(session) => {
+                                let pushed = session.push(crate::coding::WorkerResult {
+                                    shard: done.index,
+                                    data: done.data,
+                                });
+                                match pushed {
+                                    Ok(DecodeProgress::NeedMore { .. }) => {}
+                                    Ok(DecodeProgress::Ready) => {
+                                        // k1-th fastest arrived: cancel the
+                                        // group's still-running workers, then
+                                        // run the intra-group decode.
+                                        cancel.mark(done.id);
+                                        match session.finish() {
+                                            Ok(out) => {
+                                                Metrics::inc(&metrics.group_decodes);
+                                                Metrics::add(
+                                                    &metrics.decode_flops,
+                                                    out.flops,
+                                                );
+                                                let finished_at = Instant::now();
+                                                if link_dead {
+                                                    crate::log_debug!(
+                                                        "submaster",
+                                                        "group {group}: uplink dead, \
+                                                         dropping job {:?}",
+                                                        done.id
+                                                    );
+                                                } else {
+                                                    if link.enabled {
+                                                        let d = link
+                                                            .model
+                                                            .sample(&mut rng)
+                                                            * link.scale;
+                                                        if d > 0.0 {
+                                                            thread::sleep(
+                                                                Duration::from_secs_f64(d),
+                                                            );
+                                                        }
+                                                    }
+                                                    let _ = master.send(
+                                                        MasterMsg::Partial(
+                                                            PartialResult {
+                                                                id: done.id,
+                                                                shard: group,
+                                                                data: out.result,
+                                                                decode_flops: out.flops,
+                                                                finished_at,
+                                                            },
+                                                        ),
+                                                    );
+                                                }
+                                                *state = GroupJob::Done;
+                                            }
+                                            Err(e) => {
+                                                crate::log_error!(
+                                                    "submaster",
+                                                    "group {group} decode failed \
+                                                     for job {:?}: {e}",
+                                                    done.id
+                                                );
+                                                *state = GroupJob::Done;
+                                            }
                                         }
                                     }
-                                    let _ = master.send(
-                                        crate::coordinator::messages::MasterMsg::Group(
-                                            GroupResult {
-                                                id: done.id,
-                                                group,
-                                                data,
-                                                decode_flops: flops,
-                                                finished_at,
-                                            },
-                                        ),
-                                    );
+                                    Err(e) => {
+                                        crate::log_error!(
+                                            "submaster",
+                                            "group {group} rejected a product \
+                                             for job {:?}: {e}",
+                                            done.id
+                                        );
+                                    }
                                 }
-                                // Keep the entry (decoded=true) so later
-                                // arrivals count as late; trim memory.
-                                let state = jobs.get_mut(&done.id).expect("state exists");
-                                state.results.clear();
-                                state.results.shrink_to_fit();
-                            }
-                            Err(e) => {
-                                crate::log_error!(
-                                    "submaster",
-                                    "group {group} decode failed for job {:?}: {e}",
-                                    done.id
-                                );
                             }
                         }
                     }
@@ -155,8 +221,9 @@ pub fn spawn(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::messages::{MasterMsg, WorkerDone};
-    use crate::linalg::ops;
+    use crate::coding::HierarchicalCode;
+    use crate::coordinator::messages::{JobBroadcast, WorkerDone};
+    use crate::linalg::{ops, Matrix};
     use crate::util::rng::Rng as URng;
 
     fn no_link_delay() -> LinkDelay {
@@ -186,9 +253,12 @@ mod tests {
         let (sub_tx, sub_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
+        let scheme: Arc<dyn CodedScheme> = Arc::clone(&code);
         let h = spawn(
             group,
-            Arc::clone(&code),
+            3, // offset of group 1 in the flat indexing
+            scheme,
+            8,
             vec![], // no real workers; we inject Done messages
             no_link_delay(),
             false,
@@ -216,16 +286,16 @@ mod tests {
                 .unwrap();
         }
         let msg = master_rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        let MasterMsg::Group(gr) = msg else {
-            panic!("expected group result")
+        let MasterMsg::Partial(pr) = msg else {
+            panic!("expected group partial")
         };
-        assert_eq!(gr.group, group);
+        assert_eq!(pr.shard, group, "hierarchical partials carry the group index");
         // Ã_1 · x — check against direct computation.
         let tilde = Matrix::vstack(&[grouped[group][0].clone(), grouped[group][1].clone()])
             .unwrap();
         // grouped[group][0..2] are the systematic shards == Ã_i split.
         let expect = ops::matmul(&tilde, &x);
-        assert!(gr.data.max_abs_diff(&expect) < 1e-4);
+        assert!(pr.data.max_abs_diff(&expect) < 1e-4);
         // Late third worker is discarded.
         sub_tx
             .send(SubmasterMsg::Done(WorkerDone {
@@ -253,9 +323,12 @@ mod tests {
         let (sub_tx, sub_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
+        let scheme: Arc<dyn CodedScheme> = code;
         let h = spawn(
             0,
-            code,
+            0,
+            scheme,
+            2,
             vec![],
             no_link_delay(),
             true, // dead link
@@ -283,5 +356,66 @@ mod tests {
         sub_tx.send(SubmasterMsg::Shutdown).unwrap();
         h.join().unwrap();
         assert_eq!(metrics.snapshot().group_decodes, 1);
+    }
+
+    /// A relay submaster (flat scheme) forwards raw products translated
+    /// to flat worker indices, and drops them after Finish.
+    #[test]
+    fn relay_group_forwards_flat_indexed_products() {
+        use crate::coding::MdsCode;
+        let scheme: Arc<dyn CodedScheme> = Arc::new(MdsCode::new(6, 3).unwrap());
+        let (sub_tx, sub_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let h = spawn(
+            0,
+            0, // single relay group at offset 0
+            scheme,
+            6,
+            vec![],
+            no_link_delay(),
+            false,
+            Arc::new(CancelSet::new()),
+            Arc::clone(&metrics),
+            URng::new(8),
+            sub_rx,
+            master_tx,
+        );
+        let id = JobId(3);
+        sub_tx
+            .send(SubmasterMsg::Job(JobBroadcast {
+                id,
+                x: Arc::new(Matrix::identity(2)),
+            }))
+            .unwrap();
+        sub_tx
+            .send(SubmasterMsg::Done(WorkerDone {
+                id,
+                index: 4,
+                data: Matrix::zeros(2, 2),
+            }))
+            .unwrap();
+        let MasterMsg::Partial(pr) =
+            master_rx.recv_timeout(Duration::from_secs(5)).unwrap()
+        else {
+            panic!("expected relayed partial")
+        };
+        assert_eq!(pr.shard, 4);
+        assert_eq!(pr.decode_flops, 0);
+        // After Finish, further products are late.
+        sub_tx.send(SubmasterMsg::Finish(id)).unwrap();
+        sub_tx
+            .send(SubmasterMsg::Done(WorkerDone {
+                id,
+                index: 5,
+                data: Matrix::zeros(2, 2),
+            }))
+            .unwrap();
+        assert!(master_rx.recv_timeout(Duration::from_millis(200)).is_err());
+        sub_tx.send(SubmasterMsg::Shutdown).unwrap();
+        h.join().unwrap();
+        let s = metrics.snapshot();
+        assert_eq!(s.late_products, 1);
+        assert_eq!(s.group_decodes, 0, "relay groups never decode");
     }
 }

@@ -6,9 +6,11 @@
 //! The crate provides:
 //!
 //! * [`coding`] — real-field systematic MDS erasure codes, the paper's
-//!   two-level **hierarchical code** with its parallel decoder, and the
-//!   baselines it is compared against (replication, product codes,
-//!   polynomial codes).
+//!   two-level **hierarchical code**, and the baselines it is compared
+//!   against (replication, product codes, polynomial codes) — all
+//!   decoded through streaming [`coding::Decoder`] **sessions** that
+//!   start elimination work at the `k`-th arrival (batch decode is a
+//!   replay of the same sessions).
 //! * [`linalg`] — the dense linear-algebra substrate (blocked GEMM/GEMV,
 //!   partial-pivot LU) every decoder is built on.
 //! * [`sim`] — a discrete-event simulator of the hierarchical cluster,

@@ -9,11 +9,13 @@
 //! worker/group failure injection and per-event traces the closed form
 //! cannot express.
 
+use crate::coding::{CodedScheme, DecodeOutput, WorkerResult};
+use crate::linalg::{ops, Matrix};
 use crate::sim::events::EventQueue;
 use crate::sim::straggler::StragglerModel;
 use crate::sim::SimParams;
 use crate::util::rng::Rng;
-use crate::Result;
+use crate::{Error, Result};
 
 /// Failure injection plan for one simulated job.
 #[derive(Clone, Debug, Default)]
@@ -103,6 +105,59 @@ pub fn simulate_job(
         group_delivered,
         total,
         workers_finished,
+    })
+}
+
+/// Outcome of replaying one job's worker arrivals through a streaming
+/// decode session (see [`replay_decode`]).
+#[derive(Debug)]
+pub struct DecodeReplay {
+    /// Results pushed before the session reported `Ready` (the job's
+    /// recovery threshold under this arrival order).
+    pub pushed: usize,
+    /// The decode output — real result, flops and session seconds.
+    pub output: DecodeOutput,
+}
+
+/// Sample a worker arrival order: draw one completion time per worker
+/// from `model` and sort.
+pub fn sample_arrival_order(n: usize, model: &StragglerModel, rng: &mut Rng) -> Vec<usize> {
+    let mut times: Vec<(f64, usize)> = (0..n).map(|w| (model.sample(rng), w)).collect();
+    times.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite sample times"));
+    times.into_iter().map(|(_, w)| w).collect()
+}
+
+/// Simulated decode-cost accounting through the **same streaming
+/// [`crate::coding::Decoder`] sessions the live cluster runs**: encode
+/// `a`, feed worker products in `arrival_order` until the session is
+/// ready (later arrivals are the discarded stragglers), then finish.
+/// Because simulator and coordinator share the sessions, their flop
+/// accounting cannot drift apart.
+pub fn replay_decode(
+    scheme: &dyn CodedScheme,
+    a: &Matrix,
+    x: &Matrix,
+    arrival_order: &[usize],
+) -> Result<DecodeReplay> {
+    let shards = scheme.encode(a)?;
+    let mut session = scheme.decoder(a.rows(), x.cols());
+    let mut pushed = 0usize;
+    for &w in arrival_order {
+        if w >= shards.len() {
+            return Err(Error::InvalidParams(format!(
+                "arrival order names worker {w}, scheme has {}",
+                shards.len()
+            )));
+        }
+        let data = ops::matmul(&shards[w], x);
+        pushed += 1;
+        if session.push(WorkerResult { shard: w, data })?.is_ready() {
+            break;
+        }
+    }
+    Ok(DecodeReplay {
+        pushed,
+        output: session.finish()?,
     })
 }
 
@@ -206,6 +261,37 @@ mod tests {
         assert!(trace.total.is_none(), "job must not complete");
         // All workers still ran to completion.
         assert_eq!(trace.workers_finished, 9);
+    }
+
+    #[test]
+    fn decode_replay_agrees_with_batch_path_for_every_scheme() {
+        use crate::coding::{build_scheme, compute_all_products, select_results, SchemeKind};
+        let mut rng = Rng::new(77);
+        let a = Matrix::from_fn(16, 4, |_, _| rng.uniform(-1.0, 1.0));
+        let x = Matrix::from_fn(4, 1, |_, _| rng.uniform(-1.0, 1.0));
+        let expect = ops::matmul(&a, &x);
+        for kind in SchemeKind::ALL {
+            let scheme = build_scheme(kind, 4, 2, 4, 2).unwrap();
+            let order =
+                sample_arrival_order(scheme.num_workers(), &StragglerModel::exp(10.0), &mut rng);
+            let replay = replay_decode(scheme.as_ref(), &a, &x, &order).unwrap();
+            // Batch decode replays the same order → bit-for-bit equal.
+            let shards = scheme.encode(&a).unwrap();
+            let all = compute_all_products(&shards, &x);
+            let batch = scheme.decode(&select_results(&all, &order), 16).unwrap();
+            assert_eq!(
+                replay.output.result.data(),
+                batch.result.data(),
+                "{kind}: results diverge"
+            );
+            assert_eq!(replay.output.flops, batch.flops, "{kind}: flops diverge");
+            assert!(
+                replay.output.result.max_abs_diff(&expect) < 1e-6,
+                "{kind}: wrong product"
+            );
+            // The recovery threshold is at least k.
+            assert!(replay.pushed >= scheme.num_data_blocks(), "{kind}");
+        }
     }
 
     #[test]

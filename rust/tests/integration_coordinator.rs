@@ -1,6 +1,8 @@
 //! Integration: the full coordinator against direct linear algebra,
-//! across code parameters, batch policies, backends and fault plans.
+//! across coding schemes, code parameters, batch policies, backends and
+//! fault plans.
 
+use hiercode::coding::SchemeKind;
 use hiercode::config::schema::ClusterConfig;
 use hiercode::coordinator::fault::FaultConfig;
 use hiercode::coordinator::Cluster;
@@ -47,6 +49,65 @@ fn coded_equals_uncoded_across_code_params() {
         assert_eq!(snap.failed, 0);
         cluster.shutdown();
     }
+}
+
+/// Acceptance: `Cluster::launch` serves a correct matvec end-to-end for
+/// **every** scheme the registry knows, through the same streaming
+/// decode sessions.
+#[test]
+fn every_scheme_serves_correct_matvec_end_to_end() {
+    for kind in SchemeKind::ALL {
+        // (4,2)×(4,2): 16 workers; flat schemes run (16, 4) — k | n, so
+        // replication is valid too.
+        let config = ClusterConfig::demo_scheme(kind, 4, 2, 4, 2);
+        let m = 16;
+        let a = matrix(m, 5, 60 + kind.name().len() as u64);
+        let cluster = Cluster::launch(&config, &a)
+            .unwrap_or_else(|e| panic!("{kind}: launch failed: {e}"));
+        verify_requests(&cluster, &a, 4, 61, 1e-3);
+        let snap = cluster.metrics();
+        assert_eq!(snap.failed, 0, "{kind}: {snap:?}");
+        assert!(snap.completed >= 1, "{kind}: {snap:?}");
+        if kind == SchemeKind::Hierarchical {
+            assert!(
+                snap.group_decodes >= snap.jobs * 2,
+                "{kind}: submasters must decode k2 groups per job"
+            );
+        } else {
+            assert_eq!(snap.group_decodes, 0, "{kind}: relay groups never decode");
+        }
+        cluster.shutdown();
+    }
+}
+
+/// Satellite: a timed-out (abandoned) request cancels its job via the
+/// CancelSet path instead of leaking master-side state and decode work.
+#[test]
+fn timed_out_request_cancels_master_side_job() {
+    let config = ClusterConfig::demo(3, 2, 3, 2);
+    let a = matrix(8, 4, 62);
+    // Two dead links make the job unservable: it would previously hang
+    // in the master's job table forever.
+    let faults = FaultConfig::none().with_dead_links(&[0, 1]);
+    let cluster = Cluster::launch_with_faults(&config, &a, faults).unwrap();
+    let res = cluster
+        .submit(vec![1.0; 4])
+        .unwrap()
+        .wait_timeout(std::time::Duration::from_millis(300));
+    assert!(res.is_err());
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while cluster.metrics().cancelled == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "timeout never cancelled the job: {:?}",
+            cluster.metrics()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    let snap = cluster.metrics();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.completed, 0);
+    cluster.shutdown();
 }
 
 #[test]

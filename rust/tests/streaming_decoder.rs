@@ -1,0 +1,307 @@
+//! Streaming-decoder satellites: batch `decode` and the streaming
+//! `Decoder` sessions must agree **bit-for-bit on result and flop
+//! count** when fed the same arrivals — checked from *every* minimal
+//! viable worker subset per scheme (exhaustive at small `(n, k)`,
+//! sampled through the `util::check` proptest substitute at larger
+//! sizes) — and the hierarchical session must do its inner decodes
+//! incrementally, leaving strictly less work after the last arrival
+//! than the batch path performs (the §IV / Table I claim).
+
+use hiercode::coding::{
+    build_scheme, compute_all_products, select_results, CodedScheme, HierarchicalCode,
+    MdsCode, PolynomialCode, ProductCode, ReplicationCode, SchemeKind, WorkerResult,
+};
+use hiercode::linalg::{ops, Matrix};
+use hiercode::util::check::check;
+use hiercode::util::rng::Rng;
+
+fn matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut r = Rng::new(seed);
+    Matrix::from_fn(rows, cols, |_, _| r.uniform(-1.0, 1.0))
+}
+
+/// Enumerate every `k`-subset of `[0, n)` in lexicographic order.
+fn k_subsets(n: usize, k: usize) -> Vec<Vec<usize>> {
+    fn rec(start: usize, n: usize, k: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if cur.len() == k {
+            out.push(cur.clone());
+            return;
+        }
+        for i in start..n {
+            if n - i < k - cur.len() {
+                break;
+            }
+            cur.push(i);
+            rec(i + 1, n, k, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    rec(0, n, k, &mut Vec::new(), &mut out);
+    out
+}
+
+/// Push `subset_idx`'s results through a fresh session and assert the
+/// output is bit-for-bit identical to the batch (replay) path, and
+/// correct. On a *minimal* subset the session must become ready exactly
+/// at the last arrival.
+fn assert_stream_matches_batch(
+    scheme: &dyn CodedScheme,
+    all: &[WorkerResult],
+    subset_idx: &[usize],
+    rows: usize,
+    expect: &Matrix,
+    minimal: bool,
+) {
+    let subset = select_results(all, subset_idx);
+    let batch = scheme
+        .decode(&subset, rows)
+        .unwrap_or_else(|e| panic!("{}: batch decode failed on {subset_idx:?}: {e}", scheme.name()));
+    let mut session = scheme.decoder(rows, subset[0].data.cols());
+    let mut ready_at = None;
+    for (i, r) in subset.iter().enumerate() {
+        let p = session
+            .push(r.clone())
+            .unwrap_or_else(|e| panic!("{}: push failed on {subset_idx:?}: {e}", scheme.name()));
+        if p.is_ready() {
+            ready_at = Some(i);
+            break;
+        }
+    }
+    if minimal {
+        assert_eq!(
+            ready_at,
+            Some(subset.len() - 1),
+            "{}: minimal subset {subset_idx:?} must become ready at its last arrival",
+            scheme.name()
+        );
+    } else {
+        assert!(ready_at.is_some(), "{}: {subset_idx:?}", scheme.name());
+    }
+    let out = session.finish().expect("finish after ready");
+    assert_eq!(
+        out.result.data(),
+        batch.result.data(),
+        "{}: stream/batch results differ on {subset_idx:?}",
+        scheme.name()
+    );
+    assert_eq!(
+        out.flops, batch.flops,
+        "{}: stream/batch flops differ on {subset_idx:?}",
+        scheme.name()
+    );
+    assert!(
+        out.result.max_abs_diff(expect) < 1e-6,
+        "{}: wrong product on {subset_idx:?} (err {})",
+        scheme.name(),
+        out.result.max_abs_diff(expect)
+    );
+}
+
+#[test]
+fn mds_every_minimal_subset_streams_exactly() {
+    let code = MdsCode::new(5, 3).unwrap();
+    let a = matrix(6, 4, 1);
+    let x = matrix(4, 2, 2);
+    let expect = ops::matmul(&a, &x);
+    let all = compute_all_products(&code.encode(&a).unwrap(), &x);
+    for subset in k_subsets(5, 3) {
+        assert_stream_matches_batch(&code, &all, &subset, 6, &expect, true);
+    }
+}
+
+#[test]
+fn polynomial_every_minimal_subset_streams_exactly() {
+    let code = PolynomialCode::new(5, 3).unwrap();
+    let a = matrix(6, 4, 3);
+    let x = matrix(4, 1, 4);
+    let expect = ops::matmul(&a, &x);
+    let all = compute_all_products(&code.encode(&a).unwrap(), &x);
+    for subset in k_subsets(5, 3) {
+        assert_stream_matches_batch(&code, &all, &subset, 6, &expect, true);
+    }
+}
+
+#[test]
+fn replication_every_minimal_subset_streams_exactly() {
+    // (6,3): one replica per block — 2^3 minimal covers.
+    let code = ReplicationCode::new(6, 3).unwrap();
+    let a = matrix(6, 3, 5);
+    let x = matrix(3, 1, 6);
+    let expect = ops::matmul(&a, &x);
+    let all = compute_all_products(&code.encode(&a).unwrap(), &x);
+    for r0 in 0..2 {
+        for r1 in 0..2 {
+            for r2 in 0..2 {
+                let subset = [r0, 2 + r1, 4 + r2];
+                assert_stream_matches_batch(&code, &all, &subset, 6, &expect, true);
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_every_minimal_subset_streams_exactly() {
+    // (3,2)×(3,2): choose any 2 of 3 groups, any 2 of 3 workers each —
+    // 3 · 3 · 3 = 27 minimal viable subsets.
+    let code = HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap();
+    let a = matrix(8, 3, 7);
+    let x = matrix(3, 2, 8);
+    let expect = ops::matmul(&a, &x);
+    let all = compute_all_products(&code.encode(&a).unwrap(), &x);
+    for groups in k_subsets(3, 2) {
+        for wa in k_subsets(3, 2) {
+            for wb in k_subsets(3, 2) {
+                let mut subset: Vec<usize> =
+                    wa.iter().map(|&j| groups[0] * 3 + j).collect();
+                subset.extend(wb.iter().map(|&j| groups[1] * 3 + j));
+                assert_stream_matches_batch(&code, &all, &subset, 8, &expect, true);
+            }
+        }
+    }
+}
+
+#[test]
+fn product_every_minimal_subset_streams_exactly() {
+    // (3,2)×(3,2): every size-4 subset (the information minimum) that
+    // peeling can decode, per `can_decode`.
+    let code = ProductCode::new(3, 2, 3, 2).unwrap();
+    let a = matrix(8, 3, 9);
+    let x = matrix(3, 1, 10);
+    let expect = ops::matmul(&a, &x);
+    let all = compute_all_products(&code.encode(&a).unwrap(), &x);
+    let mut viable = 0usize;
+    for subset in k_subsets(9, 4) {
+        if code.can_decode(&subset) {
+            viable += 1;
+            assert_stream_matches_batch(&code, &all, &subset, 8, &expect, true);
+        }
+    }
+    // Every decodable 2×2 subgrid is among them (3·3 choices of rows ×
+    // cols at least).
+    assert!(viable >= 9, "found only {viable} viable minimal subsets");
+}
+
+#[test]
+fn sampled_larger_subsets_stream_exactly() {
+    // Sampled coverage at larger (n, k) and shuffled arrival orders,
+    // via the proptest substitute.
+    check("stream == batch on sampled subsets", 20, |g| {
+        let (n, k) = g.code_params(12);
+        let rows = k * g.usize_in(1..3);
+        let mut r = Rng::new(g.usize_in(0..1 << 30) as u64);
+        let a = matrix(rows, 3, r.next_u64());
+        let x = matrix(3, 2, r.next_u64());
+        let expect = ops::matmul(&a, &x);
+        // MDS and polynomial: any k-subset, any order.
+        for scheme_box in [
+            Box::new(MdsCode::new(n, k).unwrap()) as Box<dyn CodedScheme>,
+            Box::new(PolynomialCode::new(n, k).unwrap()) as Box<dyn CodedScheme>,
+        ] {
+            let all = compute_all_products(&scheme_box.encode(&a).unwrap(), &x);
+            let mut subset = g.subset(n, k);
+            r.shuffle(&mut subset);
+            assert_stream_matches_batch(scheme_box.as_ref(), &all, &subset, rows, &expect, true);
+        }
+        // Hierarchical: k2 random groups, k1 random workers each, in a
+        // shuffled interleaving.
+        let n2 = g.usize_in(2..4);
+        let k2 = g.usize_in(1..n2 + 1);
+        let n1 = g.usize_in(2..4);
+        let k1 = g.usize_in(1..n1 + 1);
+        let code = HierarchicalCode::homogeneous(n1, k1, n2, k2).unwrap();
+        let hrows = code.required_row_divisor();
+        let ha = matrix(hrows, 3, r.next_u64());
+        let hx = matrix(3, 1, r.next_u64());
+        let hexpect = ops::matmul(&ha, &hx);
+        let hall = compute_all_products(&code.encode(&ha).unwrap(), &hx);
+        let groups = g.subset(n2, k2);
+        let mut subset = Vec::new();
+        for &grp in &groups {
+            for j in g.subset(n1, k1) {
+                subset.push(grp * n1 + j);
+            }
+        }
+        r.shuffle(&mut subset);
+        assert_stream_matches_batch(&code, &hall, &subset, hrows, &hexpect, true);
+    });
+}
+
+/// Acceptance: in the Table I regime (`k1 = k2²`, k1 ≫ k2), the
+/// hierarchical streaming session leaves strictly less work after the
+/// last arrival than the batch decode performs, because the `k2` inner
+/// decodes already ran incrementally inside `push` — post-k1-arrival
+/// latency is the outer decode alone.
+#[test]
+fn hierarchical_streaming_cuts_post_arrival_latency_in_table1_regime() {
+    // Scaled-down Table I shape: (n1,k1) = (128,64), (n2,k2) = (16,8),
+    // k1 = k2² — the paper's §IV scaling point p = 2.
+    let (n1, k1, n2, k2) = (128usize, 64usize, 16usize, 8usize);
+    let scheme = build_scheme(SchemeKind::Hierarchical, n1, k1, n2, k2).unwrap();
+    let rows = k1 * k2 * 2; // 1024
+    let a = matrix(rows, 4, 20);
+    let x = matrix(4, 1, 21);
+    let expect = ops::matmul(&a, &x);
+    let shards = scheme.encode(&a).unwrap();
+    let all = compute_all_products(&shards, &x);
+    // Parity-heavy arrivals: the last k1 workers of each group, group-
+    // major — every inner decode is a real k1×k1 elimination.
+    let picks: Vec<usize> = (0..n2)
+        .flat_map(|grp| (k1..n1).map(move |j| grp * n1 + j))
+        .collect();
+    let subset = select_results(&all, &picks);
+
+    // Run the streaming and batch paths three times and keep the best
+    // timing of each — min-of-N makes the wall-clock comparison robust
+    // to scheduler preemption on shared CI runners.
+    let mut tail = f64::INFINITY;
+    let mut full = f64::INFINITY;
+    let mut inner_flops = 0u64;
+    let mut finish_flops = 0u64;
+    let mut batch_flops = 0u64;
+    for round in 0..3 {
+        let mut session = scheme.decoder(rows, 1);
+        let mut ready_at = None;
+        for (i, res) in subset.iter().enumerate() {
+            if session.push(res.clone()).unwrap().is_ready() {
+                ready_at = Some(i);
+                break;
+            }
+        }
+        // Ready at the k2-th group's k1-th arrival: k1·k2 pushes.
+        assert_eq!(ready_at, Some(k1 * k2 - 1));
+        inner_flops = session.flops_so_far();
+        let t0 = std::time::Instant::now();
+        let streamed = session.finish().unwrap();
+        tail = tail.min(t0.elapsed().as_secs_f64());
+
+        // Batch path: the same arrivals, all work after the fact.
+        let t1 = std::time::Instant::now();
+        let batch = scheme.decode(&subset, rows).unwrap();
+        full = full.min(t1.elapsed().as_secs_f64());
+
+        if round == 0 {
+            assert_eq!(streamed.result.data(), batch.result.data());
+            assert_eq!(streamed.flops, batch.flops);
+            assert!(streamed.result.max_abs_diff(&expect) < 1e-5);
+            finish_flops = streamed.flops - inner_flops;
+            batch_flops = batch.flops;
+        }
+    }
+    // Deterministic form of the claim: the work remaining after the
+    // last arrival (`finish` = outer decode only) is a negligible
+    // share of what the batch path performs post-collection — the
+    // inner eliminations ran inside `push`.
+    assert!(inner_flops > 0, "inner decodes must run during pushes");
+    assert!(
+        finish_flops * 10 < batch_flops,
+        "post-arrival flops {finish_flops} must be ≪ batch decode flops {batch_flops}"
+    );
+    // And the wall-clock version (min of 3): post-k1-arrival latency is
+    // strictly below the batch-decode path.
+    assert!(
+        tail < full,
+        "streaming tail {tail:.6}s must beat batch decode {full:.6}s \
+         (inner flops front-loaded: {inner_flops})"
+    );
+}
