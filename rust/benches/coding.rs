@@ -6,20 +6,26 @@ use hiercode::coding::{
     ReplicationCode,
 };
 use hiercode::linalg::{lu::LuFactors, ops, Matrix};
+use hiercode::parallel::DecodePool;
 use hiercode::util::bench::Suite;
 use hiercode::util::rng::Rng;
-use hiercode::util::threadpool::ThreadPool;
 use std::sync::Arc;
 
 fn main() {
     let mut suite = Suite::new("coding").with_iters(20, 3);
     let mut r = Rng::new(7);
 
-    // linalg primitives.
+    // linalg primitives: the packed microkernel against both oracles,
+    // square and at the k=64 decode hot shape.
     let a256 = Matrix::from_fn(256, 256, |_, _| r.uniform(-1.0, 1.0));
     let b256 = Matrix::from_fn(256, 256, |_, _| r.uniform(-1.0, 1.0));
-    suite.bench("gemm_256x256x256_blocked", || ops::matmul(&a256, &b256));
+    suite.bench("gemm_256x256x256_packed", || ops::matmul(&a256, &b256));
+    suite.bench("gemm_256x256x256_ikj", || ops::matmul_ikj(&a256, &b256));
     suite.bench("gemm_256x256x256_naive", || ops::matmul_naive(&a256, &b256));
+    let a64 = Matrix::from_fn(64, 64, |_, _| r.uniform(-1.0, 1.0));
+    let b64w = Matrix::from_fn(64, 4096, |_, _| r.uniform(-1.0, 1.0));
+    suite.bench("gemm_64x64x4096_packed", || ops::matmul(&a64, &b64w));
+    suite.bench("gemm_64x64x4096_ikj", || ops::matmul_ikj(&a64, &b64w));
     let lu_m = {
         let mut m = Matrix::from_fn(128, 128, |_, _| r.uniform(-1.0, 1.0));
         for i in 0..128 {
@@ -57,7 +63,7 @@ fn main() {
         hier.decode(&subset_h, 4096).unwrap().flops
     });
     // Parallel intra-group decode with a pool.
-    let pool = Arc::new(ThreadPool::new(4));
+    let pool = Arc::new(DecodePool::new(4).unwrap());
     let hier_par = HierarchicalCode::homogeneous(4, 2, 4, 2)
         .unwrap()
         .with_pool(pool);

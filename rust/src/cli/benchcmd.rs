@@ -1,0 +1,384 @@
+//! `hiercode bench` — the decode/GEMM/simulator bench harness.
+//!
+//! Runs the perf-critical paths this crate is judged on and emits
+//! machine-readable baselines — `BENCH_decode.json` and
+//! `BENCH_sim.json` in `--out` (default: the current directory, i.e.
+//! the repo root when invoked from there) — so every future change has
+//! a measured trajectory to argue against:
+//!
+//! * `gemm_decode` — the packed 4×4-microkernel GEMM against the
+//!   pre-packing i-k-j kernel at the decode hot shape (`k×k · k×n`);
+//! * `lu_solve` — the blocked multi-RHS triangular solve;
+//! * `group_scaling` — hierarchical group decoding at 1..max threads,
+//!   with speedup and efficiency-vs-ideal, plus a bit-identical
+//!   cross-thread determinism check;
+//! * `session_decode` — streaming-session batch decode per scheme;
+//! * `BENCH_sim.json` — sharded Monte-Carlo throughput at 1..max
+//!   threads with its own bit-identical check.
+//!
+//! `--smoke` shrinks every size for CI (seconds, not minutes);
+//! `--threads N` caps the scaling sweep (default 4); `--iters N`
+//! overrides the per-measurement iteration count.
+
+use crate::cli::args::Args;
+use crate::coding::{build_scheme_with, SchemeKind, WorkerResult};
+use crate::linalg::{lu::LuFactors, ops, Matrix};
+use crate::parallel::DecodePool;
+use crate::sim::{montecarlo, SimParams};
+use crate::util::bench::fmt_time;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Best-of-`iters` wall-clock of `f` (min is the standard noise-robust
+/// point estimate for throughput benches).
+fn time_min<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> f64 {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// JSON-safe float literal.
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.9e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn jf_list(vs: &[f64]) -> String {
+    let items: Vec<String> = vs.iter().map(|&v| jf(v)).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn ju_list(vs: &[usize]) -> String {
+    let items: Vec<String> = vs.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_fn(rows, cols, |_, _| r.uniform(-1.0, 1.0))
+}
+
+struct BenchConfig {
+    smoke: bool,
+    threads: Vec<usize>,
+    iters: usize,
+    warmup: usize,
+    gemm_k: usize,
+    gemm_n: usize,
+    group_rows: usize,
+    group_batch: usize,
+    session_rows: usize,
+    sim_trials: usize,
+}
+
+impl BenchConfig {
+    fn new(smoke: bool, max_threads: usize, iters_override: Option<usize>) -> Self {
+        let mut threads = vec![1];
+        let mut t = 2;
+        while t <= max_threads {
+            threads.push(t);
+            t *= 2;
+        }
+        if smoke {
+            Self {
+                smoke,
+                threads,
+                iters: iters_override.unwrap_or(3),
+                warmup: 1,
+                gemm_k: 64,
+                gemm_n: 512,
+                group_rows: 2048,
+                group_batch: 2,
+                session_rows: 512,
+                sim_trials: 2 * montecarlo::MC_SHARD + 100,
+            }
+        } else {
+            Self {
+                smoke,
+                threads,
+                iters: iters_override.unwrap_or(15),
+                warmup: 3,
+                gemm_k: 64,
+                gemm_n: 4096,
+                group_rows: 32768,
+                group_batch: 16,
+                session_rows: 4096,
+                sim_trials: 1 << 19,
+            }
+        }
+    }
+}
+
+/// Run the bench harness; writes `BENCH_decode.json` / `BENCH_sim.json`.
+pub fn run(args: &Args) -> Result<()> {
+    let smoke = args.has_flag("smoke");
+    let out_dir = args.get_str("out").unwrap_or(".").to_string();
+    let max_threads = args.get_usize("threads")?.unwrap_or(4).max(1);
+    let cfg = BenchConfig::new(smoke, max_threads, args.get_usize("iters")?);
+    eprintln!(
+        "## hiercode bench (smoke={}, threads={:?}, iters={})",
+        cfg.smoke, cfg.threads, cfg.iters
+    );
+    let decode_json = bench_decode(&cfg)?;
+    let sim_json = bench_sim(&cfg)?;
+    let decode_path = format!("{out_dir}/BENCH_decode.json");
+    let sim_path = format!("{out_dir}/BENCH_sim.json");
+    std::fs::write(&decode_path, decode_json)?;
+    std::fs::write(&sim_path, sim_json)?;
+    println!("wrote {decode_path}");
+    println!("wrote {sim_path}");
+    Ok(())
+}
+
+/// GEMM + LU + hierarchical group scaling + per-scheme sessions.
+fn bench_decode(cfg: &BenchConfig) -> Result<String> {
+    let mut r = Rng::new(0xBEC);
+
+    // --- GEMM at the decode hot shape: (k×k)·(k×n). ---
+    let (k, n) = (cfg.gemm_k, cfg.gemm_n);
+    let a = random_matrix(&mut r, k, k);
+    let b = random_matrix(&mut r, k, n);
+    let packed_s = time_min(cfg.warmup, cfg.iters, || ops::matmul(&a, &b));
+    let ikj_s = time_min(cfg.warmup, cfg.iters, || ops::matmul_ikj(&a, &b));
+    let gemm_speedup = ikj_s / packed_s;
+    let gflops = 2.0 * (k * k * n) as f64 / packed_s / 1e9;
+    println!(
+        "bench gemm_decode_{k}x{k}x{n}       packed {}  ikj {}  speedup {:.2}x  ({:.2} GF/s)",
+        fmt_time(packed_s),
+        fmt_time(ikj_s),
+        gemm_speedup,
+        gflops
+    );
+
+    // --- Blocked multi-RHS solve at the same shape. ---
+    let mut gm = random_matrix(&mut r, k, k);
+    for i in 0..k {
+        gm[(i, i)] += k as f64;
+    }
+    let lu = LuFactors::factorize(&gm)?;
+    let rhs = random_matrix(&mut r, k, n);
+    let solve_s = time_min(cfg.warmup, cfg.iters, || lu.solve_matrix(&rhs).unwrap());
+    println!("bench lu_solve_{k}x{n}rhs          {}", fmt_time(solve_s));
+
+    // --- Hierarchical group-decode scaling. ---
+    // Parity-heavy arrivals (last k1 workers of each group) force real
+    // k1×k1 eliminations in every group; the k2 group decodes are the
+    // §IV parallel units. Synthetic products time identically to real
+    // ones (the solve never looks at the values) and skip a costly
+    // encode at the 32k-row full size.
+    let (n1, k1, n2, k2) = (20usize, 16usize, 5usize, 4usize);
+    let rows = cfg.group_rows;
+    let batch = cfg.group_batch;
+    let block_rows = rows / (k1 * k2);
+    let per_group: Vec<Vec<(usize, Matrix)>> = (0..n2)
+        .map(|_| {
+            (n1 - k1..n1)
+                .map(|j| (j, random_matrix(&mut r, block_rows, batch)))
+                .collect()
+        })
+        .collect();
+    let mut scaling_s = Vec::new();
+    let mut reference: Option<Vec<f64>> = None;
+    let mut deterministic = true;
+    for &t in &cfg.threads {
+        let code = crate::coding::HierarchicalCode::homogeneous(n1, k1, n2, k2)?
+            .with_pool(Arc::new(DecodePool::new(t)?));
+        let s = time_min(cfg.warmup, cfg.iters, || {
+            code.decode_hierarchical(&per_group).unwrap()
+        });
+        let out = code.decode_hierarchical(&per_group)?;
+        match &reference {
+            None => reference = Some(out.result.data().to_vec()),
+            Some(expect) => {
+                deterministic &= expect.as_slice() == out.result.data();
+            }
+        }
+        scaling_s.push(s);
+        println!(
+            "bench hier_group_decode_{rows}x{batch}_t{t}   {}  ({:.2}x vs t1)",
+            fmt_time(s),
+            scaling_s[0] / s
+        );
+    }
+    let speedup: Vec<f64> = scaling_s.iter().map(|&s| scaling_s[0] / s).collect();
+    let efficiency: Vec<f64> = cfg
+        .threads
+        .iter()
+        .zip(&speedup)
+        .map(|(&t, &sp)| sp / t as f64)
+        .collect();
+
+    // --- Streaming-session batch decode per scheme. ---
+    let mut sessions = Vec::new();
+    let srows = cfg.session_rows;
+    for kind in SchemeKind::ALL {
+        let scheme = build_scheme_with(kind, 4, 2, 4, 2, *cfg.threads.last().unwrap())?;
+        let shard_rows = srows / scheme.num_data_blocks().max(1);
+        let results: Vec<WorkerResult> = (2..scheme.num_workers())
+            .map(|w| WorkerResult {
+                shard: w,
+                data: random_matrix(&mut r, shard_rows, 4),
+            })
+            .collect();
+        let s = time_min(cfg.warmup, cfg.iters, || {
+            scheme.decode(&results, srows).unwrap()
+        });
+        let flops = scheme.decode(&results, srows)?.flops;
+        println!(
+            "bench session_decode_{:<24} {}  ({flops} decode flops)",
+            scheme.name(),
+            fmt_time(s)
+        );
+        sessions.push(format!(
+            "    {{\"scheme\": \"{}\", \"rows\": {srows}, \"batch\": 4, \
+             \"seconds\": {}, \"decode_flops\": {flops}}}",
+            scheme.name(),
+            jf(s)
+        ));
+    }
+
+    Ok(format!(
+        "{{\n\
+         \x20 \"schema\": \"hiercode-bench/decode/v1\",\n\
+         \x20 \"smoke\": {},\n\
+         \x20 \"gemm_decode\": {{\n\
+         \x20   \"k\": {k}, \"n\": {n},\n\
+         \x20   \"packed_s\": {},\n\
+         \x20   \"reference_ikj_s\": {},\n\
+         \x20   \"speedup_vs_reference\": {},\n\
+         \x20   \"packed_gflops\": {}\n\
+         \x20 }},\n\
+         \x20 \"lu_solve\": {{\"k\": {k}, \"rhs_cols\": {n}, \"seconds\": {}}},\n\
+         \x20 \"group_scaling\": {{\n\
+         \x20   \"n1\": {n1}, \"k1\": {k1}, \"n2\": {n2}, \"k2\": {k2},\n\
+         \x20   \"rows\": {rows}, \"batch\": {batch},\n\
+         \x20   \"threads\": {},\n\
+         \x20   \"seconds\": {},\n\
+         \x20   \"speedup\": {},\n\
+         \x20   \"efficiency_vs_ideal\": {}\n\
+         \x20 }},\n\
+         \x20 \"session_decode\": [\n{}\n  ],\n\
+         \x20 \"deterministic_across_threads\": {}\n\
+         }}\n",
+        cfg.smoke,
+        jf(packed_s),
+        jf(ikj_s),
+        jf(gemm_speedup),
+        jf(gflops),
+        jf(solve_s),
+        ju_list(&cfg.threads),
+        jf_list(&scaling_s),
+        jf_list(&speedup),
+        jf_list(&efficiency),
+        sessions.join(",\n"),
+        deterministic
+    ))
+}
+
+/// Sharded Monte-Carlo throughput with its bit-identical check.
+fn bench_sim(cfg: &BenchConfig) -> Result<String> {
+    let p = SimParams {
+        n1: 10,
+        k1: 5,
+        n2: 100,
+        k2: 90,
+        mu1: 10.0,
+        mu2: 1.0,
+    };
+    let trials = cfg.sim_trials;
+    let mut seconds = Vec::new();
+    let mut rates = Vec::new();
+    let mut reference: Option<montecarlo::Estimate> = None;
+    let mut bit_identical = true;
+    for &t in &cfg.threads {
+        let pool = DecodePool::new(t)?;
+        let s = time_min(0, 1.max(cfg.iters / 3), || {
+            montecarlo::expected_latency_with(&p, trials, 42, &pool).unwrap()
+        });
+        let est = montecarlo::expected_latency_with(&p, trials, 42, &pool)?;
+        match &reference {
+            None => reference = Some(est),
+            Some(e) => {
+                bit_identical &= e.mean.to_bits() == est.mean.to_bits()
+                    && e.ci95.to_bits() == est.ci95.to_bits();
+            }
+        }
+        seconds.push(s);
+        rates.push(trials as f64 / s);
+        println!(
+            "bench montecarlo_{trials}trials_t{t}   {}  ({:.0} trials/s)",
+            fmt_time(s),
+            trials as f64 / s
+        );
+    }
+    let est = reference.ok_or_else(|| Error::InvalidParams("no thread configs".into()))?;
+    Ok(format!(
+        "{{\n\
+         \x20 \"schema\": \"hiercode-bench/sim/v1\",\n\
+         \x20 \"smoke\": {},\n\
+         \x20 \"params\": {{\"n1\": {}, \"k1\": {}, \"n2\": {}, \"k2\": {}, \
+         \"mu1\": {}, \"mu2\": {}}},\n\
+         \x20 \"trials\": {trials},\n\
+         \x20 \"threads\": {},\n\
+         \x20 \"seconds\": {},\n\
+         \x20 \"trials_per_s\": {},\n\
+         \x20 \"mean\": {},\n\
+         \x20 \"ci95\": {},\n\
+         \x20 \"bit_identical_across_threads\": {bit_identical}\n\
+         }}\n",
+        cfg.smoke,
+        p.n1,
+        p.k1,
+        p.n2,
+        p.k2,
+        p.mu1,
+        p.mu2,
+        ju_list(&cfg.threads),
+        jf_list(&seconds),
+        jf_list(&rates),
+        jf(est.mean),
+        jf(est.ci95),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_bench_writes_json_baselines() {
+        let dir = std::env::temp_dir().join("hiercode_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.to_str().unwrap().to_string();
+        let args = Args::parse(&[
+            "--smoke".to_string(),
+            "--out".to_string(),
+            out.clone(),
+            "--iters".to_string(),
+            "1".to_string(),
+            "--threads".to_string(),
+            "2".to_string(),
+        ])
+        .unwrap();
+        run(&args).unwrap();
+        for name in ["BENCH_decode.json", "BENCH_sim.json"] {
+            let text = std::fs::read_to_string(dir.join(name)).unwrap();
+            // Must be parseable by our own JSON parser and carry the
+            // determinism verdicts.
+            let v = crate::config::json::Json::parse(&text).unwrap();
+            assert!(v.get("schema").is_some(), "{name} missing schema");
+            assert!(text.contains("true"), "{name}: determinism check absent");
+        }
+    }
+}

@@ -9,6 +9,7 @@
 //! ```
 
 pub mod args;
+pub mod benchcmd;
 
 use crate::sim::{bounds, markov, montecarlo, SimParams};
 use args::Args;
@@ -24,12 +25,15 @@ USAGE:
   hiercode bounds  --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R]
   hiercode serve   [--config FILE] [--requests N] [--no-pjrt]
                    [--scheme hierarchical|mds|product|replication|polynomial]
+  hiercode bench   [--smoke] [--threads N] [--iters N] [--out DIR]
   hiercode help
 
 `figures` regenerates the paper's evaluation artifacts (CSV on stdout).
 `sim` Monte-Carlo-estimates E[T]; `bounds` prints L / Lemma 2 / Thm 2.
 `serve` launches the in-process cluster (any scheme via --scheme) and
 runs a request workload through its streaming decode sessions.
+`bench` runs the decode/GEMM/simulator benches and writes the
+BENCH_decode.json / BENCH_sim.json perf baselines to --out (default .).
 ";
 
 /// CLI entry point (called from `main.rs`).
@@ -60,6 +64,7 @@ pub fn run(argv: &[String]) -> crate::Result<()> {
         "sim" => sim_cmd(&args),
         "bounds" => bounds_cmd(&args),
         "serve" => serve_cmd(&args),
+        "bench" => benchcmd::run(&args),
         other => Err(crate::Error::InvalidParams(format!(
             "unknown command '{other}' (try `hiercode help`)"
         ))),

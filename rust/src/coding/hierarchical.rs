@@ -19,10 +19,10 @@
 
 use crate::coding::mds::MdsDecoder;
 use crate::coding::{
-    CodedScheme, DecodeOutput, DecodeProgress, Decoder, MdsCode, WorkerResult,
+    CodedScheme, DecodeOutput, DecodeProgress, DecodeScratch, Decoder, MdsCode, WorkerResult,
 };
 use crate::linalg::Matrix;
-use crate::util::threadpool::ThreadPool;
+use crate::parallel::DecodePool;
 use crate::{Error, Result};
 use std::sync::Arc;
 use std::time::Instant;
@@ -100,8 +100,9 @@ pub struct HierarchicalCode {
     inner: Vec<MdsCode>,
     /// Offset of each group's first worker in the flat indexing.
     offsets: Vec<usize>,
-    /// Optional pool for parallel intra-group decoding.
-    pool: Option<Arc<ThreadPool>>,
+    /// Pool for parallel intra-group decoding and the in-decode solve
+    /// panels (serial by default).
+    pool: Arc<DecodePool>,
 }
 
 impl HierarchicalCode {
@@ -123,7 +124,7 @@ impl HierarchicalCode {
             outer,
             inner,
             offsets,
-            pool: None,
+            pool: Arc::new(DecodePool::serial()),
         })
     }
 
@@ -132,10 +133,19 @@ impl HierarchicalCode {
         Self::new(HierarchicalParams::homogeneous(n1, k1, n2, k2))
     }
 
-    /// Attach a thread pool: intra-group decodes then run in parallel
-    /// (the paper's §IV parallel-decoding argument).
-    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
-        self.pool = Some(pool);
+    /// Attach a decode pool: the `n2` intra-group decodes of
+    /// [`Self::decode_hierarchical`] fan across it (the paper's §IV
+    /// parallel-decoding argument), and the inner/outer codes' solve
+    /// panels use it inside the streaming sessions. Results are
+    /// bit-identical to serial at any pool width.
+    pub fn with_pool(mut self, pool: Arc<DecodePool>) -> Self {
+        self.outer = self.outer.clone().with_pool(Arc::clone(&pool));
+        self.inner = self
+            .inner
+            .iter()
+            .map(|c| c.clone().with_pool(Arc::clone(&pool)))
+            .collect();
+        self.pool = pool;
         self
     }
 
@@ -185,7 +195,9 @@ impl HierarchicalCode {
     /// Intra-group decode (what submaster `i` runs): recover `Ã_i·X`
     /// from any `k1^{(i)}` worker results of group `i`, given as
     /// `(in-group index, product)` pairs. Returns the stacked group
-    /// result and decode flops.
+    /// result and decode flops. Runs on the scratch-based stacked path
+    /// — the same elimination the streaming sessions and the batch
+    /// fan-out execute.
     pub fn decode_group(
         &self,
         group: usize,
@@ -197,15 +209,18 @@ impl HierarchicalCode {
                 self.params.n2
             )));
         }
-        let (blocks, flops) = self.inner[group].decode_blocks(results)?;
-        Ok((Matrix::vstack(&blocks)?, flops))
+        let mut scratch = DecodeScratch::new();
+        self.inner[group].decode_stacked(results, &mut scratch)
     }
 
     /// Cross-group decode (what the master runs): recover `A·X` from any
-    /// `k2` group results given as `(group index, Ã_i·X)` pairs.
+    /// `k2` group results given as `(group index, Ã_i·X)` pairs. The
+    /// outer solve — the largest single elimination of the batch path —
+    /// fans its column panels across the attached pool and produces the
+    /// stacked result directly (no split/vstack round trip).
     pub fn decode_cross(&self, groups: &[(usize, Matrix)]) -> Result<(Matrix, u64)> {
-        let (blocks, flops) = self.outer.decode_blocks(groups)?;
-        Ok((Matrix::vstack(&blocks)?, flops))
+        let mut scratch = DecodeScratch::new();
+        self.outer.decode_stacked_with(groups, &mut scratch, &self.pool)
     }
 
     /// Full two-level decode from per-group worker results:
@@ -239,34 +254,23 @@ impl HierarchicalCode {
         // counts).
         let used: Vec<usize> = ready[..self.params.k2].to_vec();
 
-        // Stage 1: parallel intra-group decodes.
-        let stage1: Vec<Result<(usize, Matrix, u64)>> = match &self.pool {
-            Some(pool) => {
-                // Clone the per-group inputs into owned tasks.
-                let tasks: Vec<(usize, Vec<(usize, Matrix)>, MdsCode, usize)> = used
-                    .iter()
-                    .map(|&i| {
-                        (
-                            i,
-                            per_group[i].clone(),
-                            self.inner[i].clone(),
-                            self.params.k1[i],
-                        )
-                    })
-                    .collect();
-                pool.map(tasks, |(i, results, code, _k1)| {
-                    let (blocks, flops) = code.decode_blocks(&results)?;
-                    Ok((i, Matrix::vstack(&blocks)?, flops))
-                })
-            }
-            None => used
-                .iter()
-                .map(|&i| {
-                    let (m, f) = self.decode_group(i, &per_group[i])?;
-                    Ok((i, m, f))
-                })
-                .collect(),
-        };
+        // Stage 1: intra-group decodes — independent, so they fan
+        // across the pool. The scoped pool lets tasks borrow
+        // `per_group` and the inner codes directly (no input clones,
+        // the pre-pool serial path's exact arithmetic), and results
+        // come back in `used` order, so parallel == serial bit-for-bit.
+        // Each task's solve runs serially to keep the fan-out at one
+        // level: group-level parallelism here, panel-level parallelism
+        // in the streaming sessions.
+        let stage1: Vec<Result<(usize, Matrix, u64)>> = self.pool.map(used, |i| {
+            let mut scratch = DecodeScratch::new();
+            let (m, f) = self.inner[i].decode_stacked_with(
+                &per_group[i],
+                &mut scratch,
+                &DecodePool::serial(),
+            )?;
+            Ok((i, m, f))
+        });
         let mut group_results = Vec::with_capacity(self.params.k2);
         let mut flops = 0u64;
         for s in stage1 {
@@ -319,6 +323,10 @@ pub struct HierarchicalDecoder {
     /// `(group, Ã_g·X)` in completion order, capped at `k2`.
     decoded: Vec<(usize, Matrix)>,
     group_done: Vec<bool>,
+    /// Session-owned scratch shared by every inner elimination and the
+    /// outer solve — with same-shaped jobs, pushes allocate nothing
+    /// beyond each group's decoded partial.
+    scratch: DecodeScratch,
     flops: u64,
     seconds: f64,
     finished: bool,
@@ -342,6 +350,7 @@ impl HierarchicalDecoder {
             seen,
             decoded,
             group_done,
+            scratch: DecodeScratch::new(),
             flops: 0,
             seconds: 0.0,
             finished: false,
@@ -382,10 +391,12 @@ impl Decoder for HierarchicalDecoder {
             if self.pending[g].len() == self.params.k1[g] {
                 // The incremental step: inner-decode group g now, at its
                 // k1-th arrival — off the job's completion critical path.
+                // The solve fans its panels across the code's pool.
                 let collected = std::mem::take(&mut self.pending[g]);
-                let (blocks, f) = self.inner[g].decode_blocks(&collected)?;
+                let (partial, f) =
+                    self.inner[g].decode_stacked(&collected, &mut self.scratch)?;
                 self.flops += f;
-                self.decoded.push((g, Matrix::vstack(&blocks)?));
+                self.decoded.push((g, partial));
                 self.group_done[g] = true;
             }
         }
@@ -427,9 +438,8 @@ impl Decoder for HierarchicalDecoder {
                 got: self.decoded.len(),
             });
         }
-        let (blocks, f) = self.outer.decode_blocks(&self.decoded)?;
+        let (result, f) = self.outer.decode_stacked(&self.decoded, &mut self.scratch)?;
         self.flops += f;
-        let result = Matrix::vstack(&blocks)?;
         if result.rows() != self.out_rows {
             return Err(Error::InvalidParams(format!(
                 "decoded {} rows, expected {}",
@@ -658,18 +668,18 @@ mod tests {
         ];
         let out = code.decode_hierarchical(&per_group).unwrap();
         assert!(out.result.max_abs_diff(&expect) < 1e-8);
+        // The standalone group decode produces group 0's share (m / k2
+        // rows of Ã_0·X) on the same stacked path.
+        let (g0, _) = code.decode_group(0, &per_group[0]).unwrap();
+        assert_eq!(g0.rows(), rows / 2);
     }
 
     #[test]
-    fn parallel_pool_decode_matches_serial() {
+    fn parallel_pool_decode_matches_serial_bitwise() {
         let mut r = Rng::new(5);
         let a = random_matrix(&mut r, 24, 6);
         let x = random_matrix(&mut r, 6, 2);
         let serial = HierarchicalCode::homogeneous(4, 2, 4, 3).unwrap();
-        let pool = Arc::new(ThreadPool::new(4));
-        let parallel = HierarchicalCode::homogeneous(4, 2, 4, 3)
-            .unwrap()
-            .with_pool(pool);
         let shards = serial.encode(&a).unwrap();
         let all = compute_all_products(&shards, &x);
         // groups 0,1,2 each contribute workers {1,3}; group 3 straggles.
@@ -682,9 +692,23 @@ mod tests {
             })
             .collect();
         let o1 = serial.decode(&select_results(&all, &picks), 24).unwrap();
-        let o2 = parallel.decode(&select_results(&all, &picks), 24).unwrap();
-        assert!(o1.result.max_abs_diff(&o2.result) < 1e-12);
-        assert_eq!(o1.flops, o2.flops);
+        // Both the streaming-session decode and the batch
+        // decode_hierarchical fan-out must be bit-identical to serial
+        // at every pool width.
+        for threads in [2, 4, 8] {
+            let pool = Arc::new(DecodePool::new(threads).unwrap());
+            let parallel = HierarchicalCode::homogeneous(4, 2, 4, 3)
+                .unwrap()
+                .with_pool(pool);
+            let o2 = parallel.decode(&select_results(&all, &picks), 24).unwrap();
+            assert_eq!(o1.result.data(), o2.result.data(), "threads={threads}");
+            assert_eq!(o1.flops, o2.flops);
+            let per_group = parallel.group_results(&select_results(&all, &picks));
+            let o3 = parallel.decode_hierarchical(&per_group).unwrap();
+            let o4 = serial.decode_hierarchical(&per_group).unwrap();
+            assert_eq!(o4.result.data(), o3.result.data(), "threads={threads}");
+            assert_eq!(o4.flops, o3.flops);
+        }
     }
 
     #[test]

@@ -6,10 +6,12 @@
 //! the building block the hierarchical code composes at two levels.
 
 use crate::coding::{
-    CodedScheme, DecodeOutput, DecodeProgress, Decoder, GatherK, WorkerResult,
+    CodedScheme, DecodeOutput, DecodeProgress, DecodeScratch, Decoder, GatherK, WorkerResult,
 };
 use crate::linalg::{lu::LuFactors, ops, vandermonde, Matrix};
+use crate::parallel::DecodePool;
 use crate::{Error, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Systematic `(n, k)` MDS code over the reals.
@@ -19,13 +21,27 @@ pub struct MdsCode {
     k: usize,
     /// `n × k` systematic generator `[I; C]`.
     generator: Matrix,
+    /// Pool the decode solve fans its column panels across.
+    pool: Arc<DecodePool>,
 }
 
 impl MdsCode {
-    /// Construct an `(n, k)` code, `1 <= k <= n`.
+    /// Construct an `(n, k)` code, `1 <= k <= n`; decodes run serially.
     pub fn new(n: usize, k: usize) -> Result<Self> {
         let generator = vandermonde::systematic_mds(n, k)?;
-        Ok(Self { n, k, generator })
+        Ok(Self {
+            n,
+            k,
+            generator,
+            pool: Arc::new(DecodePool::serial()),
+        })
+    }
+
+    /// Attach a decode pool: the `k×k` solve's column panels then run
+    /// in parallel (bit-identical results, see `parallel`).
+    pub fn with_pool(mut self, pool: Arc<DecodePool>) -> Self {
+        self.pool = pool;
+        self
     }
 
     /// Code length `n`.
@@ -67,13 +83,45 @@ impl MdsCode {
     }
 
     /// Decode the original `k` stacked blocks from any `k` coded blocks
-    /// given as `(index, block)` pairs. Returns the stacked result and
-    /// the flops spent.
+    /// given as `(index, block)` pairs. Returns the blocks and the
+    /// flops spent. Convenience wrapper over [`MdsCode::decode_stacked`]
+    /// (one-shot scratch, serial solve) for tests and composite codes.
+    pub fn decode_blocks(&self, coded: &[(usize, Matrix)]) -> Result<(Vec<Matrix>, u64)> {
+        let mut scratch = DecodeScratch::new();
+        let (stacked, flops) =
+            self.decode_stacked_with(coded, &mut scratch, &DecodePool::serial())?;
+        Ok((stacked.split_rows(self.k)?, flops))
+    }
+
+    /// Decode straight to the stacked `(k·block_rows) × cols` result
+    /// through the code's own pool — the session hot path.
+    pub fn decode_stacked(
+        &self,
+        coded: &[(usize, Matrix)],
+        scratch: &mut DecodeScratch,
+    ) -> Result<(Matrix, u64)> {
+        self.decode_stacked_with(coded, scratch, &self.pool)
+    }
+
+    /// Decode core: recover the stacked data from any `k` coded blocks.
     ///
     /// Fast path: if all `k` present indices are systematic, decoding is
     /// a pure reshuffle (0 flops) — this matters for Fig. 7's `α`
     /// tradeoff, where decode cost is the differentiator.
-    pub fn decode_blocks(&self, coded: &[(usize, Matrix)]) -> Result<(Vec<Matrix>, u64)> {
+    ///
+    /// General path: one `k×k` LU solve whose right-hand side stacks the
+    /// coded blocks row-per-block; the solved matrix's row-major storage
+    /// *is* the stacked result, so the output needs no per-block copies
+    /// or `vstack`. All intermediates (generator submatrix, gathered
+    /// RHS, solve panels) live in `scratch`, reused across pushes — a
+    /// session decoding the same shapes every job allocates nothing but
+    /// its output. The solve's column panels fan across `pool`.
+    pub fn decode_stacked_with(
+        &self,
+        coded: &[(usize, Matrix)],
+        scratch: &mut DecodeScratch,
+        pool: &DecodePool,
+    ) -> Result<(Matrix, u64)> {
         if coded.len() < self.k {
             return Err(Error::Insufficient {
                 needed: self.k,
@@ -89,59 +137,66 @@ impl MdsCode {
                 )));
             }
         }
-        // Systematic fast path.
-        if use_set.iter().all(|&(idx, _)| idx < self.k) {
-            let mut sorted: Vec<&(usize, Matrix)> = use_set.iter().collect();
-            sorted.sort_by_key(|&&(idx, _)| idx);
-            // All-systematic means indices are exactly {0..k}.
-            let distinct = {
-                let mut ids: Vec<usize> = sorted.iter().map(|&&(i, _)| i).collect();
-                ids.dedup();
-                ids.len() == self.k
-            };
-            if distinct {
-                return Ok((sorted.into_iter().map(|(_, b)| b.clone()).collect(), 0));
-            }
-        }
-        // General path: solve G_S · D = Y for the k stacked data blocks.
-        let idx: Vec<usize> = use_set.iter().map(|&(i, _)| i).collect();
-        {
-            let mut dedup = idx.clone();
-            dedup.sort_unstable();
-            dedup.dedup();
-            if dedup.len() != self.k {
-                return Err(Error::InvalidParams(format!(
-                    "duplicate coded block indices: {idx:?}"
-                )));
-            }
-        }
-        let gsub = self.generator.select_rows(&idx);
-        let y = Matrix::vstack(
-            &use_set
-                .iter()
-                .map(|(_, b)| b.clone())
-                .collect::<Vec<_>>(),
-        )?;
-        let block_rows = y.rows() / self.k;
-        // Reshape: stacked blocks → k × (block_rows · cols) system.
-        // Each data block is a row of the k×k solve with block entries.
-        let cols = y.cols();
-        let mut rhs = Matrix::zeros(self.k, block_rows * cols);
-        for (bi, (_, block)) in use_set.iter().enumerate() {
+        let block_rows = use_set[0].1.rows();
+        let cols = use_set[0].1.cols();
+        for (_, block) in use_set {
             if block.rows() != block_rows || block.cols() != cols {
                 return Err(Error::InvalidParams(
                     "inconsistent coded block shapes".into(),
                 ));
             }
-            rhs.row_mut(bi).copy_from_slice(block.data());
         }
-        let lu = LuFactors::factorize(&gsub)?;
-        let solved = lu.solve_matrix(&rhs)?;
+        // Systematic fast path: all indices < k and distinct — a pure
+        // reshuffle into index order.
+        if use_set.iter().all(|&(idx, _)| idx < self.k) {
+            scratch.idx.clear();
+            scratch.idx.extend(use_set.iter().map(|&(i, _)| i));
+            scratch.idx.sort_unstable();
+            scratch.idx.dedup();
+            if scratch.idx.len() == self.k {
+                let mut out = Matrix::zeros(self.k * block_rows, cols);
+                for (idx, block) in use_set {
+                    out.data_mut()[idx * block_rows * cols..(idx + 1) * block_rows * cols]
+                        .copy_from_slice(block.data());
+                }
+                return Ok((out, 0));
+            }
+        }
+        // General path: solve G_S · D = Y for the k stacked data blocks.
+        scratch.idx.clear();
+        scratch.idx.extend(use_set.iter().map(|&(i, _)| i));
+        {
+            let mut dedup = scratch.idx.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            if dedup.len() != self.k {
+                return Err(Error::InvalidParams(format!(
+                    "duplicate coded block indices: {:?}",
+                    scratch.idx
+                )));
+            }
+        }
+        scratch.gsub.resize_to(self.k, self.k);
+        for (bi, &src) in scratch.idx.iter().enumerate() {
+            scratch
+                .gsub
+                .row_mut(bi)
+                .copy_from_slice(self.generator.row(src));
+        }
+        // Reshape: stacked blocks → k × (block_rows · cols) system.
+        // Each data block is a row of the k×k solve with block entries.
+        scratch.rhs.resize_to(self.k, block_rows * cols);
+        for (bi, (_, block)) in use_set.iter().enumerate() {
+            scratch.rhs.row_mut(bi).copy_from_slice(block.data());
+        }
+        let lu = LuFactors::factorize(&scratch.gsub)?;
+        let solved = lu.solve_matrix_with(&scratch.rhs, pool, &mut scratch.solve_buf)?;
         let flops = lu.factor_flops() + lu.solve_flops(block_rows * cols);
-        let blocks = (0..self.k)
-            .map(|i| Matrix::from_vec(block_rows, cols, solved.row(i).to_vec()))
-            .collect::<Result<Vec<_>>>()?;
-        Ok((blocks, flops))
+        // Row i of `solved` is data block i row-major, so the solved
+        // storage reinterpreted as (k·block_rows) × cols *is* the
+        // stacked result.
+        let out = Matrix::from_vec(self.k * block_rows, cols, solved.into_vec())?;
+        Ok((out, flops))
     }
 }
 
@@ -153,6 +208,9 @@ pub struct MdsDecoder {
     code: MdsCode,
     out_rows: usize,
     gather: GatherK,
+    /// Session-owned scratch, threaded through the `finish` solve so
+    /// steady-state decoding allocates only the output.
+    scratch: DecodeScratch,
     seconds: f64,
     finished: bool,
 }
@@ -165,6 +223,7 @@ impl MdsDecoder {
             code,
             out_rows,
             gather: GatherK::new(n, k),
+            scratch: DecodeScratch::new(),
             seconds: 0.0,
             finished: false,
         }
@@ -190,8 +249,7 @@ impl Decoder for MdsDecoder {
                 "decode session already finished".into(),
             ));
         }
-        let (blocks, flops) = self.code.decode_blocks(&self.gather.got)?;
-        let result = Matrix::vstack(&blocks)?;
+        let (result, flops) = self.code.decode_stacked(&self.gather.got, &mut self.scratch)?;
         if result.rows() != self.out_rows {
             return Err(Error::InvalidParams(format!(
                 "decoded {} rows, expected {}",

@@ -47,8 +47,45 @@ pub use product::ProductCode;
 pub use replication::ReplicationCode;
 
 use crate::linalg::Matrix;
+use crate::parallel::DecodePool;
 use crate::{Error, Result};
 use std::sync::Arc;
+
+/// Reusable scratch for decode sessions: the `k×k` generator submatrix,
+/// the gathered right-hand sides, the solve's panel buffer and the
+/// index workspace. A session owns one and threads it through every
+/// `push`/`finish` elimination, so a decoder that sees the same shapes
+/// every job (the steady state of a serving cluster) performs no
+/// allocations beyond its output matrix.
+#[derive(Debug)]
+pub struct DecodeScratch {
+    /// Generator submatrix of the responding workers.
+    pub(crate) gsub: Matrix,
+    /// Stacked right-hand sides (`k × block_elems`).
+    pub(crate) rhs: Matrix,
+    /// Panel buffer for [`crate::linalg::LuFactors::solve_matrix_with`].
+    pub(crate) solve_buf: Vec<f64>,
+    /// Index workspace (dedup checks).
+    pub(crate) idx: Vec<usize>,
+}
+
+impl DecodeScratch {
+    /// Fresh, empty scratch (buffers grow on first use).
+    pub fn new() -> Self {
+        Self {
+            gsub: Matrix::zeros(0, 0),
+            rhs: Matrix::zeros(0, 0),
+            solve_buf: Vec::new(),
+            idx: Vec::new(),
+        }
+    }
+}
+
+impl Default for DecodeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// A worker's computed result: `shard_index` identifies which coded
 /// shard it holds, `data` is `Â_shard · X` (`rows × batch` matrix).
@@ -261,7 +298,8 @@ impl std::fmt::Display for SchemeKind {
 /// Build a scheme from the common `(n1,k1)×(n2,k2)` grid parameters.
 /// Grid schemes use them directly; flat schemes use `n = n1·n2`,
 /// `k = k1·k2` — the same worker count and recovery threshold, so the
-/// comparison is apples-to-apples (§IV).
+/// comparison is apples-to-apples (§IV). Decoders run serially; use
+/// [`build_scheme_with`] to attach a decode pool.
 pub fn build_scheme(
     kind: SchemeKind,
     n1: usize,
@@ -269,12 +307,34 @@ pub fn build_scheme(
     n2: usize,
     k2: usize,
 ) -> Result<Arc<dyn CodedScheme>> {
+    build_scheme_with(kind, n1, k1, n2, k2, 1)
+}
+
+/// [`build_scheme`] with `decode_threads` wired through: every decoder
+/// session the scheme opens (group, master, or standalone) fans its
+/// eliminations across a [`DecodePool`] of this width (`0` = all
+/// available cores). Parallel decode output is bit-identical to serial
+/// — the pool only changes wall-clock, never results (the determinism
+/// suite in `tests/parallel_determinism.rs` enforces this).
+pub fn build_scheme_with(
+    kind: SchemeKind,
+    n1: usize,
+    k1: usize,
+    n2: usize,
+    k2: usize,
+    decode_threads: usize,
+) -> Result<Arc<dyn CodedScheme>> {
+    let pool = Arc::new(DecodePool::new(decode_threads)?);
     Ok(match kind {
-        SchemeKind::Hierarchical => Arc::new(HierarchicalCode::homogeneous(n1, k1, n2, k2)?),
-        SchemeKind::Mds => Arc::new(MdsCode::new(n1 * n2, k1 * k2)?),
-        SchemeKind::Product => Arc::new(ProductCode::new(n1, k1, n2, k2)?),
+        SchemeKind::Hierarchical => {
+            Arc::new(HierarchicalCode::homogeneous(n1, k1, n2, k2)?.with_pool(pool))
+        }
+        SchemeKind::Mds => Arc::new(MdsCode::new(n1 * n2, k1 * k2)?.with_pool(pool)),
+        SchemeKind::Product => Arc::new(ProductCode::new(n1, k1, n2, k2)?.with_pool(pool)),
         SchemeKind::Replication => Arc::new(ReplicationCode::new(n1 * n2, k1 * k2)?),
-        SchemeKind::Polynomial => Arc::new(PolynomialCode::new(n1 * n2, k1 * k2)?),
+        SchemeKind::Polynomial => {
+            Arc::new(PolynomialCode::new(n1 * n2, k1 * k2)?.with_pool(pool))
+        }
     })
 }
 

@@ -19,10 +19,12 @@
 //! benches decode for real. DESIGN.md documents this substitution.
 
 use crate::coding::{
-    CodedScheme, DecodeOutput, DecodeProgress, Decoder, GatherK, WorkerResult,
+    CodedScheme, DecodeOutput, DecodeProgress, DecodeScratch, Decoder, GatherK, WorkerResult,
 };
 use crate::linalg::{lu::LuFactors, ops, Matrix};
+use crate::parallel::DecodePool;
 use crate::{Error, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// `(n, k)` polynomial-evaluation code (Chebyshev basis).
@@ -34,6 +36,8 @@ pub struct PolynomialCode {
     points: Vec<f64>,
     /// `n × k` generator `V[l][s] = T_s(t_l)`.
     generator: Matrix,
+    /// Pool the interpolation solve fans its column panels across.
+    pool: Arc<DecodePool>,
 }
 
 /// `n × k` matrix of Chebyshev polynomials `T_s(t_l)` via the
@@ -70,7 +74,15 @@ impl PolynomialCode {
             k,
             points,
             generator,
+            pool: Arc::new(DecodePool::serial()),
         })
+    }
+
+    /// Attach a decode pool: the interpolation solve's column panels
+    /// then run in parallel (bit-identical results).
+    pub fn with_pool(mut self, pool: Arc<DecodePool>) -> Self {
+        self.pool = pool;
+        self
     }
 
     /// The evaluation points.
@@ -83,6 +95,20 @@ impl PolynomialCode {
     /// Vandermonde system `V_S · D = Y`. Returns the stacked result and
     /// the flops spent — the monolithic `O(k^β)` solve of Table I.
     pub fn interpolate(&self, coded: &[(usize, Matrix)]) -> Result<(Matrix, u64)> {
+        self.interpolate_with(coded, &mut DecodeScratch::new())
+    }
+
+    /// [`PolynomialCode::interpolate`] with session scratch: the
+    /// Vandermonde submatrix and gathered RHS live in `scratch`
+    /// (reused across jobs — zero-alloc steady state beyond the
+    /// output), the solve's column panels fan across the code's pool,
+    /// and the solved storage is reinterpreted as the stacked result
+    /// (no per-block copies).
+    pub fn interpolate_with(
+        &self,
+        coded: &[(usize, Matrix)],
+        scratch: &mut DecodeScratch,
+    ) -> Result<(Matrix, u64)> {
         if coded.len() < self.k {
             return Err(Error::Insufficient {
                 needed: self.k,
@@ -90,34 +116,43 @@ impl PolynomialCode {
             });
         }
         let use_set = &coded[..self.k];
-        let idx: Vec<usize> = use_set.iter().map(|&(i, _)| i).collect();
+        scratch.idx.clear();
+        scratch.idx.extend(use_set.iter().map(|&(i, _)| i));
         {
-            let mut dedup = idx.clone();
+            let mut dedup = scratch.idx.clone();
             dedup.sort_unstable();
             dedup.dedup();
             if dedup.len() != self.k {
                 return Err(Error::InvalidParams(format!(
-                    "duplicate worker indices: {idx:?}"
+                    "duplicate worker indices: {:?}",
+                    scratch.idx
                 )));
             }
         }
-        let vsub = self.generator.select_rows(&idx);
         let block_rows = use_set[0].1.rows();
         let cols = use_set[0].1.cols();
-        let mut rhs = Matrix::zeros(self.k, block_rows * cols);
+        scratch.gsub.resize_to(self.k, self.k);
+        for (bi, &src) in scratch.idx.iter().enumerate() {
+            scratch
+                .gsub
+                .row_mut(bi)
+                .copy_from_slice(self.generator.row(src));
+        }
+        scratch.rhs.resize_to(self.k, block_rows * cols);
         for (bi, (_, data)) in use_set.iter().enumerate() {
             if data.rows() != block_rows || data.cols() != cols {
                 return Err(Error::InvalidParams("inconsistent result shapes".into()));
             }
-            rhs.row_mut(bi).copy_from_slice(data.data());
+            scratch.rhs.row_mut(bi).copy_from_slice(data.data());
         }
-        let lu = LuFactors::factorize(&vsub)?;
-        let solved = lu.solve_matrix(&rhs)?;
+        let lu = LuFactors::factorize(&scratch.gsub)?;
+        let solved =
+            lu.solve_matrix_with(&scratch.rhs, &self.pool, &mut scratch.solve_buf)?;
         let flops = lu.factor_flops() + lu.solve_flops(block_rows * cols);
-        let blocks = (0..self.k)
-            .map(|s| Matrix::from_vec(block_rows, cols, solved.row(s).to_vec()))
-            .collect::<Result<Vec<_>>>()?;
-        Ok((Matrix::vstack(&blocks)?, flops))
+        // Row s of `solved` is data block s row-major — its storage is
+        // the stacked result.
+        let out = Matrix::from_vec(self.k * block_rows, cols, solved.into_vec())?;
+        Ok((out, flops))
     }
 }
 
@@ -129,6 +164,8 @@ pub struct PolynomialDecoder {
     code: PolynomialCode,
     out_rows: usize,
     gather: GatherK,
+    /// Session-owned scratch for the interpolation solve.
+    scratch: DecodeScratch,
     seconds: f64,
     finished: bool,
 }
@@ -152,7 +189,9 @@ impl Decoder for PolynomialDecoder {
                 "decode session already finished".into(),
             ));
         }
-        let (result, flops) = self.code.interpolate(&self.gather.got)?;
+        let (result, flops) = self
+            .code
+            .interpolate_with(&self.gather.got, &mut self.scratch)?;
         if result.rows() != self.out_rows {
             return Err(Error::InvalidParams(format!(
                 "decoded {} rows, expected {}",
@@ -219,6 +258,7 @@ impl CodedScheme for PolynomialCode {
             code: self.clone(),
             out_rows,
             gather: GatherK::new(self.n, self.k),
+            scratch: DecodeScratch::new(),
             seconds: 0.0,
             finished: false,
         })

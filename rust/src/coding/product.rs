@@ -18,7 +18,9 @@ use crate::coding::{
     CodedScheme, DecodeOutput, DecodeProgress, Decoder, MdsCode, WorkerResult,
 };
 use crate::linalg::Matrix;
+use crate::parallel::DecodePool;
 use crate::{Error, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// `(n1, k1) × (n2, k2)` product code on an `n2 × n1` worker grid.
@@ -30,6 +32,9 @@ pub struct ProductCode {
     k2: usize,
     row_code: MdsCode,
     col_code: MdsCode,
+    /// Pool the peeling decoder fans each pass's independent row /
+    /// column eliminations across (serial by default).
+    pool: Arc<DecodePool>,
 }
 
 impl ProductCode {
@@ -43,7 +48,19 @@ impl ProductCode {
             k2,
             row_code: MdsCode::new(n1, k1)?,
             col_code: MdsCode::new(n2, k2)?,
+            pool: Arc::new(DecodePool::serial()),
         })
+    }
+
+    /// Attach a decode pool: within each peeling pass, the eligible
+    /// rows (resp. columns) are decoded concurrently — they are
+    /// independent by construction, since a row decode only fills
+    /// entries of its own row. Fills are applied in index order
+    /// afterwards, so results and flop counts are bit-identical to the
+    /// serial peel.
+    pub fn with_pool(mut self, pool: Arc<DecodePool>) -> Self {
+        self.pool = pool;
+        self
     }
 
     /// Grid position of flat worker `w`: `(row i ∈ [n2], col j ∈ [n1])`.
@@ -197,65 +214,108 @@ impl ProductDecoder {
         (0..self.code.k2).all(|r| (0..self.code.k1).all(|c| self.grid[r][c].is_some()))
     }
 
+    /// Decode one eligible grid line (row if `is_row`, else column):
+    /// MDS-decode its known entries, re-encode, and return the fills
+    /// for the line's missing entries plus the flops spent (decode +
+    /// re-encode cost of non-systematic fills). Read-only on the grid,
+    /// which is what makes a pass's lines safe to fan out.
+    fn decode_line(&self, line: usize, is_row: bool) -> Result<LineFill> {
+        let (code, span, k) = if is_row {
+            (&self.code.row_code, self.code.n1, self.code.k1)
+        } else {
+            (&self.code.col_code, self.code.n2, self.code.k2)
+        };
+        let have: Vec<(usize, Matrix)> = (0..span)
+            .filter_map(|o| {
+                let (i, j) = if is_row { (line, o) } else { (o, line) };
+                self.grid[i][j].as_ref().map(|m| (o, m.clone()))
+            })
+            .collect();
+        let (blocks, f) = code.decode_blocks(&have)?;
+        let mut flops = f;
+        let re = code.encode_blocks(&blocks)?;
+        let mut fills = Vec::new();
+        for (o, m) in re.into_iter().enumerate() {
+            let (i, j) = if is_row { (line, o) } else { (o, line) };
+            if self.grid[i][j].is_none() {
+                // Re-encode cost: 2·k·elems per non-systematic entry.
+                if o >= k {
+                    flops += 2 * k as u64 * m.data().len() as u64;
+                }
+                fills.push((o, m));
+            }
+        }
+        Ok(LineFill { line, fills, flops })
+    }
+
+    /// Place a pass's fills on the grid, in line order — the serial
+    /// peel's exact placement and flop-accumulation order, whatever
+    /// order the pool produced them in.
+    fn apply_fills(&mut self, fills: Vec<LineFill>, is_row: bool) {
+        for lf in fills {
+            self.flops += lf.flops;
+            for (o, m) in lf.fills {
+                let (i, j) = if is_row { (lf.line, o) } else { (o, lf.line) };
+                debug_assert!(self.grid[i][j].is_none(), "fill conflict at ({i},{j})");
+                self.grid[i][j] = Some(m);
+                self.row_count[i] += 1;
+                self.col_count[j] += 1;
+            }
+        }
+    }
+
     /// Run row/column peeling passes until no progress (or the data
     /// positions are complete). Identical elimination and flop
-    /// accounting to the pre-session batch decoder, just invoked
-    /// incrementally; block clones happen only for a row/column that
-    /// actually decodes.
+    /// accounting to the serial peel; within one pass the eligible
+    /// lines are independent (a row decode fills only its own row, so
+    /// it cannot change another row's eligibility or inputs; columns
+    /// symmetrically), which lets each pass fan across the code's pool
+    /// with bit-identical results.
     fn peel(&mut self) -> Result<()> {
         let (n1, k1, n2, k2) = (self.code.n1, self.code.k1, self.code.n2, self.code.k2);
         loop {
             let mut progress = false;
-            // Row pass.
-            for i in 0..n2 {
-                if self.row_count[i] >= k1 && self.row_count[i] < n1 {
-                    let have: Vec<(usize, Matrix)> = (0..n1)
-                        .filter_map(|j| self.grid[i][j].as_ref().map(|m| (j, m.clone())))
-                        .collect();
-                    let (blocks, f) = self.code.row_code.decode_blocks(&have)?;
-                    self.flops += f;
-                    let re = self.code.row_code.encode_blocks(&blocks)?;
-                    // Re-encode cost: 2·k1·elems per non-systematic entry.
-                    for (j, m) in re.into_iter().enumerate() {
-                        if self.grid[i][j].is_none() {
-                            if j >= k1 {
-                                self.flops += 2 * k1 as u64 * m.data().len() as u64;
-                            }
-                            self.grid[i][j] = Some(m);
-                            self.row_count[i] += 1;
-                            self.col_count[j] += 1;
-                        }
+            for is_row in [true, false] {
+                let (span, lo, hi) = if is_row { (n2, k1, n1) } else { (n1, k2, n2) };
+                let count = |line: usize| {
+                    if is_row {
+                        self.row_count[line]
+                    } else {
+                        self.col_count[line]
                     }
-                    progress = true;
+                };
+                let eligible: Vec<usize> = (0..span)
+                    .filter(|&l| count(l) >= lo && count(l) < hi)
+                    .collect();
+                if eligible.is_empty() {
+                    continue;
                 }
-            }
-            // Column pass.
-            for j in 0..n1 {
-                if self.col_count[j] >= k2 && self.col_count[j] < n2 {
-                    let have: Vec<(usize, Matrix)> = (0..n2)
-                        .filter_map(|i| self.grid[i][j].as_ref().map(|m| (i, m.clone())))
-                        .collect();
-                    let (blocks, f) = self.code.col_code.decode_blocks(&have)?;
-                    self.flops += f;
-                    let re = self.code.col_code.encode_blocks(&blocks)?;
-                    for (i, m) in re.into_iter().enumerate() {
-                        if self.grid[i][j].is_none() {
-                            if i >= k2 {
-                                self.flops += 2 * k2 as u64 * m.data().len() as u64;
-                            }
-                            self.grid[i][j] = Some(m);
-                            self.row_count[i] += 1;
-                            self.col_count[j] += 1;
-                        }
-                    }
-                    progress = true;
-                }
+                progress = true;
+                let decoded: Vec<Result<LineFill>> =
+                    if self.code.pool.size() > 1 && eligible.len() > 1 {
+                        self.code.pool.map(eligible, |l| self.decode_line(l, is_row))
+                    } else {
+                        eligible
+                            .into_iter()
+                            .map(|l| self.decode_line(l, is_row))
+                            .collect()
+                    };
+                let decoded = decoded.into_iter().collect::<Result<Vec<_>>>()?;
+                self.apply_fills(decoded, is_row);
             }
             if self.data_complete() || !progress {
                 return Ok(());
             }
         }
     }
+}
+
+/// One peeled line's output: fills for its missing entries (keyed by
+/// the in-line index) and the flops the elimination cost.
+struct LineFill {
+    line: usize,
+    fills: Vec<(usize, Matrix)>,
+    flops: u64,
 }
 
 impl Decoder for ProductDecoder {

@@ -171,7 +171,10 @@ pub struct RuntimeConfig {
     /// Execute worker products through PJRT (false = pure-Rust fallback,
     /// used by tests that must run without artifacts).
     pub use_pjrt: bool,
-    /// Threads for parallel intra-group decoding.
+    /// Width of the decode pool every decoder session fans across:
+    /// group eliminations and the multi-RHS solve's column panels.
+    /// `0` = all available cores; values above
+    /// [`crate::parallel::MAX_THREADS`] are rejected at parse time.
     pub decode_threads: usize,
 }
 
@@ -189,6 +192,17 @@ impl RuntimeConfig {
     /// Parse from the `"runtime"` object.
     pub fn from_json(v: &Json) -> Result<Self> {
         let d = Self::default();
+        let decode_threads = v
+            .get("decode_threads")
+            .and_then(|t| t.as_usize())
+            .unwrap_or(d.decode_threads);
+        if decode_threads > crate::parallel::MAX_THREADS {
+            return Err(Error::Config(format!(
+                "runtime.decode_threads = {decode_threads} exceeds the {} ceiling \
+                 (use 0 for all available cores)",
+                crate::parallel::MAX_THREADS
+            )));
+        }
         Ok(Self {
             artifact_dir: v
                 .get("artifact_dir")
@@ -196,10 +210,7 @@ impl RuntimeConfig {
                 .unwrap_or(&d.artifact_dir)
                 .to_string(),
             use_pjrt: v.get("use_pjrt").and_then(|u| u.as_bool()).unwrap_or(d.use_pjrt),
-            decode_threads: v
-                .get("decode_threads")
-                .and_then(|t| t.as_usize())
-                .unwrap_or(d.decode_threads),
+            decode_threads,
         })
     }
 }
@@ -256,6 +267,20 @@ pub struct ClusterConfig {
 }
 
 impl ClusterConfig {
+    /// Build the configured scheme with `runtime.decode_threads` wired
+    /// into its decode pool — the one construction path the live
+    /// cluster uses, so the config field actually drives the decoders.
+    pub fn build_scheme(&self) -> Result<Arc<dyn CodedScheme>> {
+        crate::coding::build_scheme_with(
+            self.code.scheme,
+            self.code.n1,
+            self.code.k1,
+            self.code.n2,
+            self.code.k2,
+            self.runtime.decode_threads,
+        )
+    }
+
     /// Parse a full config document.
     pub fn from_json_text(text: &str) -> Result<Self> {
         let v = Json::parse(text)?;
@@ -399,6 +424,24 @@ mod tests {
             let c = ClusterConfig::from_json_text(&text).unwrap();
             assert_eq!(c.code.build().unwrap().num_workers(), 16, "{name}");
         }
+    }
+
+    #[test]
+    fn decode_threads_validated_and_wired() {
+        // 0 = auto is accepted and resolves to >= 1 threads.
+        let c = ClusterConfig::from_json_text(
+            r#"{"code": {"n1": 3, "k1": 2, "n2": 3, "k2": 2},
+                "runtime": {"decode_threads": 0}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.runtime.decode_threads, 0);
+        assert!(c.build_scheme().is_ok());
+        // Absurd values are rejected at parse time.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"n1": 3, "k1": 2, "n2": 3, "k2": 2},
+                "runtime": {"decode_threads": 100000}}"#,
+        )
+        .is_err());
     }
 
     #[test]

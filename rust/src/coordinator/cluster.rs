@@ -96,7 +96,9 @@ impl Cluster {
         a: &Matrix,
         faults: FaultConfig,
     ) -> Result<Self> {
-        let scheme = config.code.build()?;
+        // Build via the config so `runtime.decode_threads` reaches every
+        // decoder session the master and submasters open.
+        let scheme = config.build_scheme()?;
         let (m, d) = a.shape();
         let div = scheme.row_divisor();
         if m % div != 0 {

@@ -11,8 +11,14 @@
 //!   decoded through streaming [`coding::Decoder`] **sessions** that
 //!   start elimination work at the `k`-th arrival (batch decode is a
 //!   replay of the same sessions).
-//! * [`linalg`] — the dense linear-algebra substrate (blocked GEMM/GEMV,
-//!   partial-pivot LU) every decoder is built on.
+//! * [`linalg`] — the dense linear-algebra substrate (packed-microkernel
+//!   GEMM, unrolled GEMV, partial-pivot LU with a blocked multi-RHS
+//!   solve) every decoder is built on.
+//! * [`parallel`] — the scoped decode work-pool (`DecodePool`) that
+//!   fans group eliminations, multi-RHS solve panels and Monte-Carlo
+//!   shards across `config.runtime.decode_threads` threads with
+//!   bit-deterministic results (GEMM offers the same fan-out via
+//!   `linalg::ops::matmul_with` for pool-bearing callers).
 //! * [`sim`] — a discrete-event simulator of the hierarchical cluster,
 //!   the auxiliary Markov chain of Lemma 1 (lower bound), the Lemma 2 /
 //!   Theorem 2 upper bounds, and Monte-Carlo latency estimation.
@@ -33,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod figures;
 pub mod linalg;
+pub mod parallel;
 pub mod runtime;
 pub mod sim;
 pub mod util;

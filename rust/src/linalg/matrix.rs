@@ -110,6 +110,23 @@ impl Matrix {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Reshape in place to `rows × cols`, reusing the existing
+    /// allocation whenever its capacity suffices. **Contents are
+    /// unspecified** — the caller must overwrite every element (no
+    /// re-zeroing pass, which is the point: this is the primitive
+    /// behind the decoders' reusable scratch, where a session that sees
+    /// the same shapes every job allocates and zeroes nothing).
+    pub fn resize_to(&mut self, rows: usize, cols: usize) {
+        let need = rows * cols;
+        if self.data.len() < need {
+            self.data.resize(need, 0.0);
+        } else {
+            self.data.truncate(need);
+        }
+        self.rows = rows;
+        self.cols = cols;
+    }
+
     /// Stack matrices vertically: `[A1; A2; ...]` (the paper's block
     /// notation for splitting the input `A`).
     pub fn vstack(blocks: &[Matrix]) -> Result<Matrix> {

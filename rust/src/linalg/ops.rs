@@ -1,20 +1,90 @@
-//! Matrix/vector products: naive and cache-blocked GEMM, GEMV.
+//! Matrix/vector products: packed-microkernel GEMM, unrolled GEMV, and
+//! the naive reference kernels they are validated against.
 //!
 //! The decode hot path multiplies an inverted `k×k` generator submatrix
 //! by the stacked worker results (a `k × (m/k · b)` matrix for batched
 //! requests), so GEMM throughput directly bounds decoding throughput —
 //! exactly the cost the paper's §IV weighs against computing time.
+//!
+//! §Perf: the production [`matmul`] is a packed kernel around a 4×4
+//! accumulator microtile. MR = NR = 4 keeps the 16 accumulators plus
+//! one A broadcast and one B vector inside the 16 ymm registers of
+//! baseline x86-64 (and comfortably inside aarch64's 32 v-registers);
+//! the `B` panel is repacked into NR-wide strips so the inner loop
+//! reads both operands unit-stride. Measured by `hiercode bench`
+//! (BENCH_decode.json, `gemm_decode`): ≥ 2× the pre-PR i-k-j kernel
+//! ([`matmul_ikj`]) at the k=64, n=4096 decode shape, because each A
+//! and B element loaded from cache is now reused 4× from registers
+//! instead of once. The previous `PANEL_THRESHOLD` heuristic (switch
+//! to k-panelling only above 1 Mi elements) is gone: packing makes the
+//! kernel cache-oblivious enough that one code path wins at every
+//! bench size.
 
 use crate::linalg::Matrix;
+use crate::parallel::DecodePool;
 
-/// `y = A x` — dense GEMV with row-major accumulation.
+/// Microtile rows (A-side register blocking).
+pub const MR: usize = 4;
+/// Microtile columns (B-side register blocking).
+pub const NR: usize = 4;
+/// K-panel depth: one packed `A` microtile panel is `MR·KC` f64
+/// (8 KiB — L1-resident) and accumulation runs `KC` deep per microtile.
+const KC: usize = 256;
+/// Column-panel width: one packed `B` panel is at most `KC·NC` f64
+/// (2 MiB worst case, typically far less at decode shapes).
+const NC: usize = 1024;
+/// Rows per parallel task when a [`DecodePool`] is attached: wide
+/// enough that a task amortizes its share of the scoped-spawn cost,
+/// narrow enough that `m = 64`-row decodes still split 4 ways.
+const MC: usize = 16;
+
+/// `y = A x` — dense GEMV, 4 rows per pass so the `x` stream is reused
+/// from registers (the row-major layout makes per-row dot products the
+/// natural unit; per-row accumulation order matches [`matvec_naive`],
+/// so the two agree bit-for-bit).
 pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len(), "matvec shape mismatch");
+    let (m, k) = (a.rows(), a.cols());
+    let mut y = vec![0.0; m];
+    let data = a.data();
+    let mut i = 0;
+    while i + 4 <= m {
+        let r0 = &data[i * k..(i + 1) * k];
+        let r1 = &data[(i + 1) * k..(i + 2) * k];
+        let r2 = &data[(i + 2) * k..(i + 3) * k];
+        let r3 = &data[(i + 3) * k..(i + 4) * k];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        for (j, &xj) in x.iter().enumerate() {
+            s0 += r0[j] * xj;
+            s1 += r1[j] * xj;
+            s2 += r2[j] * xj;
+            s3 += r3[j] * xj;
+        }
+        y[i] = s0;
+        y[i + 1] = s1;
+        y[i + 2] = s2;
+        y[i + 3] = s3;
+        i += 4;
+    }
+    while i < m {
+        let row = &data[i * k..(i + 1) * k];
+        let mut acc = 0.0;
+        for (aij, xj) in row.iter().zip(x.iter()) {
+            acc += aij * xj;
+        }
+        y[i] = acc;
+        i += 1;
+    }
+    y
+}
+
+/// Single-row reference GEMV — the oracle [`matvec`] is tested against.
+pub fn matvec_naive(a: &Matrix, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.cols(), x.len(), "matvec shape mismatch");
     let mut y = vec![0.0; a.rows()];
     for i in 0..a.rows() {
-        let row = a.row(i);
         let mut acc = 0.0;
-        for (aij, xj) in row.iter().zip(x.iter()) {
+        for (aij, xj) in a.row(i).iter().zip(x.iter()) {
             acc += aij * xj;
         }
         y[i] = acc;
@@ -22,8 +92,8 @@ pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
     y
 }
 
-/// Naive triple-loop GEMM (reference implementation, used by tests to
-/// validate the blocked kernel).
+/// Naive triple-loop GEMM — the correctness oracle the packed kernel's
+/// property tests compare against.
 pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
@@ -44,44 +114,163 @@ pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// Cache-block size for the tiled path of [`matmul`]: the `B` panel
-/// (`BLOCK × n` f64) stays resident across one `A`-row sweep.
-pub const BLOCK: usize = 64;
-
-/// Threshold (elements of `B`) above which [`matmul`] switches to the
-/// k-panelled path. §Perf: at bench sizes (≤ 256³) the straight i-k-j
-/// loop beat the 3-D tiled kernel by 1.4× on this machine (row-stream
-/// prefetch does the work; tiling only added loop overhead), so tiling
-/// is reserved for operands that genuinely exceed cache.
-pub const PANEL_THRESHOLD: usize = 1 << 20;
-
-/// GEMM `C = A·B`. i-k-j loop order: the inner loop runs contiguously
-/// over a `B` row and a `C` row (auto-vectorized); for large `B` the
-/// k-dimension is panelled so each `B` panel is reused across all `A`
-/// rows while cache-resident.
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+/// The pre-packing i-k-j kernel — kept verbatim as the measured
+/// baseline `hiercode bench` reports speedups against (and as a second
+/// oracle in the property tests). Not used on any production path.
+pub fn matmul_ikj(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Matrix::zeros(m, n);
-    let k_step = if k * n > PANEL_THRESHOLD { BLOCK } else { k };
-    for kk in (0..k).step_by(k_step.max(1)) {
-        let k_end = (kk + k_step).min(k);
-        for i in 0..m {
-            let arow = a.row(i);
-            let crow = c.row_mut(i);
-            for l in kk..k_end {
-                let ail = arow[l];
-                if ail == 0.0 {
-                    continue;
-                }
-                let brow = b.row(l);
-                for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
-                    *cj += ail * bj;
-                }
+    let (m, k, _n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, b.cols());
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for l in 0..k {
+            let ail = arow[l];
+            if ail == 0.0 {
+                continue;
+            }
+            let brow = b.row(l);
+            for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                *cj += ail * bj;
             }
         }
     }
     c
+}
+
+/// GEMM `C = A·B` with the packed 4×4 microkernel, serial.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_with(a, b, &DecodePool::serial())
+}
+
+/// GEMM `C = A·B`, row-parallel across `pool`.
+///
+/// The loop nest is jc → pc → (parallel) row chunks → MR×NR microtiles:
+/// the packed `B` panel is built once per (jc, pc) tile and shared
+/// read-only by every row task, each task owns a disjoint row range of
+/// `C`, and each microtile accumulates in registers over the full
+/// k-panel before touching `C`. Per-element accumulation order depends
+/// only on the fixed panel sizes — never on the thread count — so the
+/// result is bit-identical at any pool width.
+pub fn matmul_with(a: &Matrix, b: &Matrix, pool: &DecodePool) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let mut bpack = vec![0.0f64; KC.min(k) * NC.min(n.next_multiple_of(NR))];
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        let strips = nc.div_ceil(NR);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            pack_b(b, pc, kc, jc, nc, &mut bpack);
+            let bpack = &bpack[..strips * kc * NR];
+            if pool.size() > 1 && m > MC {
+                let tasks: Vec<(usize, &mut [f64])> = c
+                    .data_mut()
+                    .chunks_mut(MC * n)
+                    .enumerate()
+                    .map(|(t, chunk)| (t * MC, chunk))
+                    .collect();
+                pool.map(tasks, |(i0, chunk)| {
+                    gemm_rows(a, i0, chunk, n, jc, nc, pc, kc, bpack, strips);
+                });
+            } else {
+                gemm_rows(a, 0, c.data_mut(), n, jc, nc, pc, kc, bpack, strips);
+            }
+        }
+    }
+    c
+}
+
+/// Multiply the row range `[i0, i0 + chunk.len()/n)` of `A` against the
+/// packed `B` panel, accumulating into `chunk` (those rows of `C`).
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows(
+    a: &Matrix,
+    i0: usize,
+    chunk: &mut [f64],
+    n: usize,
+    jc: usize,
+    nc: usize,
+    pc: usize,
+    kc: usize,
+    bpack: &[f64],
+    strips: usize,
+) {
+    let rows = chunk.len() / n;
+    let mut apack = [0.0f64; MR * KC];
+    for ir in (0..rows).step_by(MR) {
+        let mr = MR.min(rows - ir);
+        pack_a(a, i0 + ir, mr, pc, kc, &mut apack);
+        for s in 0..strips {
+            let j0 = s * NR;
+            let nr = NR.min(nc - j0);
+            let bstrip = &bpack[s * kc * NR..(s + 1) * kc * NR];
+            let mut acc = [0.0f64; MR * NR];
+            microkernel(kc, &apack, bstrip, &mut acc);
+            for r in 0..mr {
+                let crow = &mut chunk[(ir + r) * n + jc + j0..][..nr];
+                for (cj, &av) in crow.iter_mut().zip(&acc[r * NR..r * NR + nr]) {
+                    *cj += av;
+                }
+            }
+        }
+    }
+}
+
+/// The register-resident core: `acc[r][c] += Σ_p apack[p][r]·bstrip[p][c]`
+/// with constant MR×NR bounds the compiler fully unrolls/vectorizes.
+#[inline]
+fn microkernel(kc: usize, apack: &[f64], bstrip: &[f64], acc: &mut [f64; MR * NR]) {
+    for p in 0..kc {
+        let av = &apack[p * MR..p * MR + MR];
+        let bv = &bstrip[p * NR..p * NR + NR];
+        for r in 0..MR {
+            let ar = av[r];
+            for cidx in 0..NR {
+                acc[r * NR + cidx] += ar * bv[cidx];
+            }
+        }
+    }
+}
+
+/// Pack `B[pc..pc+kc, jc..jc+nc]` into NR-wide strips, each strip laid
+/// out p-major (`strip[p·NR + c]`), zero-padded to NR so the
+/// microkernel never branches on width. Padding lanes are discarded at
+/// the `C` writeback, so they cannot perturb real results.
+fn pack_b(b: &Matrix, pc: usize, kc: usize, jc: usize, nc: usize, out: &mut [f64]) {
+    let strips = nc.div_ceil(NR);
+    for p in 0..kc {
+        let brow = &b.row(pc + p)[jc..jc + nc];
+        for s in 0..strips {
+            let j0 = s * NR;
+            let w = NR.min(nc - j0);
+            let dst = &mut out[s * kc * NR + p * NR..][..NR];
+            for (cidx, d) in dst.iter_mut().enumerate() {
+                *d = if cidx < w { brow[j0 + cidx] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack `mr` rows of `A[i0.., pc..pc+kc]` p-major (`apack[p·MR + r]`),
+/// zero-padding the `MR − mr` tail rows.
+fn pack_a(a: &Matrix, i0: usize, mr: usize, pc: usize, kc: usize, out: &mut [f64; MR * KC]) {
+    for r in 0..MR {
+        if r < mr {
+            let arow = &a.row(i0 + r)[pc..pc + kc];
+            for (p, &v) in arow.iter().enumerate() {
+                out[p * MR + r] = v;
+            }
+        } else {
+            for p in 0..kc {
+                out[p * MR + r] = 0.0;
+            }
+        }
+    }
 }
 
 /// `y += alpha * x` over slices.
@@ -133,6 +322,17 @@ mod tests {
     }
 
     #[test]
+    fn matvec_matches_naive_all_remainders() {
+        // Exercise every i % 4 tail length.
+        let mut r = Rng::new(9);
+        for m in [1usize, 2, 3, 4, 5, 7, 8, 13] {
+            let a = random_matrix(&mut r, m, 11);
+            let x: Vec<f64> = (0..11).map(|_| r.uniform(-1.0, 1.0)).collect();
+            assert_eq!(matvec(&a, &x), matvec_naive(&a, &x), "m={m}");
+        }
+    }
+
+    #[test]
     fn matmul_identity() {
         let mut r = Rng::new(1);
         let a = random_matrix(&mut r, 7, 7);
@@ -141,18 +341,44 @@ mod tests {
     }
 
     #[test]
-    fn blocked_matches_naive() {
+    fn packed_matches_naive_and_ikj() {
         let mut r = Rng::new(2);
-        for (m, k, n) in [(1, 1, 1), (5, 7, 3), (64, 64, 64), (65, 130, 67), (200, 33, 90)] {
+        for (m, k, n) in [
+            (1, 1, 1),
+            (5, 7, 3),
+            (64, 64, 64),
+            (65, 130, 67),
+            (200, 33, 90),
+            // Awkward shapes: degenerate dims and non-multiples of
+            // MR/NR/KC around the panel boundaries.
+            (1, 300, 5),
+            (5, 300, 1),
+            (3, 257, 1030),
+        ] {
             let a = random_matrix(&mut r, m, k);
             let b = random_matrix(&mut r, k, n);
             let c1 = matmul_naive(&a, &b);
             let c2 = matmul(&a, &b);
+            let c3 = matmul_ikj(&a, &b);
             assert!(
                 c1.max_abs_diff(&c2) < 1e-10,
-                "mismatch at {m}x{k}x{n}: {}",
+                "packed mismatch at {m}x{k}x{n}: {}",
                 c1.max_abs_diff(&c2)
             );
+            assert!(c1.max_abs_diff(&c3) < 1e-10, "ikj mismatch at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_is_bit_identical_to_serial() {
+        let mut r = Rng::new(8);
+        let a = random_matrix(&mut r, 61, 37);
+        let b = random_matrix(&mut r, 37, 113);
+        let serial = matmul(&a, &b);
+        for threads in [2, 3, 8] {
+            let pool = DecodePool::new(threads).unwrap();
+            let par = matmul_with(&a, &b, &pool);
+            assert_eq!(serial.data(), par.data(), "threads={threads}");
         }
     }
 
@@ -198,6 +424,20 @@ mod tests {
             let left = matmul(&matmul(&a, &b), &c);
             let right = matmul(&a, &matmul(&b, &c));
             assert!(left.max_abs_diff(&right) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn packed_vs_naive_property_random_shapes() {
+        check("packed GEMM == naive GEMM", 25, |g| {
+            let m = g.usize_in(1..40);
+            let k = g.usize_in(1..300);
+            let n = g.usize_in(1..40);
+            let mut r = Rng::new(g.usize_in(0..1 << 30) as u64);
+            let a = random_matrix(&mut r, m, k);
+            let b = random_matrix(&mut r, k, n);
+            let diff = matmul_naive(&a, &b).max_abs_diff(&matmul(&a, &b));
+            assert!(diff < 1e-10, "{m}x{k}x{n}: {diff}");
         });
     }
 }

@@ -1,0 +1,215 @@
+//! Dependency-free parallel execution layer for the decode hot path.
+//!
+//! The paper's §IV claim is that hierarchical coding "enables efficient
+//! parallel decoding" — the `n2` intra-group eliminations are
+//! independent, and inside each elimination the multi-RHS triangular
+//! solves and the GEMM row sweeps are embarrassingly parallel over
+//! disjoint output panels. [`DecodePool`] is the one primitive all of
+//! those fan out through: a **scoped** work pool over [`std::thread`]
+//! (no `'static` bounds, so tasks borrow the decoder's buffers
+//! directly), with **deterministic result ordering** — outputs land in
+//! input order no matter how the OS schedules the workers, which is
+//! what makes `parallel decode == serial decode` bit-for-bit testable.
+//!
+//! Ownership model (see DESIGN.md §Threading model): a `DecodePool` is
+//! configuration, not threads. Each parallel region spawns its workers
+//! inside [`std::thread::scope`] and joins them before returning, so
+//! the pool holds no OS resources, needs no shutdown protocol, and can
+//! be shared freely behind an `Arc` by every scheme and decoder
+//! session. Regions are short (one decode, one GEMM tile sweep, one
+//! Monte-Carlo run), so spawn cost is amortized by construction: every
+//! call site gates on `size() > 1` and falls back to an inline serial
+//! loop when there is nothing to fan out.
+
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Hard ceiling on the configured thread count: anything larger is a
+/// config typo, not a machine (`decode_threads` validation rejects it).
+pub const MAX_THREADS: usize = 1024;
+
+/// A scoped work pool of a fixed logical width.
+///
+/// * `new(0)` resolves to the machine's available parallelism — the
+///   `config.runtime.decode_threads = 0` convention.
+/// * [`DecodePool::map`] distributes tasks over a work-stealing atomic
+///   counter (good load balance when group decodes differ in size) and
+///   returns results **in input order**, so callers are deterministic
+///   at any thread count.
+#[derive(Clone, Debug)]
+pub struct DecodePool {
+    threads: usize,
+}
+
+impl DecodePool {
+    /// Build a pool of `threads` workers; `0` means "all available
+    /// cores". Rejects absurd values (> [`MAX_THREADS`]).
+    pub fn new(threads: usize) -> Result<Self> {
+        if threads > MAX_THREADS {
+            return Err(Error::InvalidParams(format!(
+                "decode_threads {threads} exceeds the {MAX_THREADS} ceiling \
+                 (use 0 for all available cores)"
+            )));
+        }
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        Ok(Self { threads })
+    }
+
+    /// The serial pool: every `map` runs inline on the caller's thread.
+    /// This is the default for all schemes, so nothing pays for
+    /// parallelism it did not ask for.
+    pub fn serial() -> Self {
+        Self { threads: 1 }
+    }
+
+    /// Logical width of the pool.
+    pub fn size(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f` to every item, fanning across up to `size()` scoped
+    /// threads, and return the results **in input order**.
+    ///
+    /// Tasks are claimed from an atomic counter (work stealing), so
+    /// uneven task costs still balance; each result is slotted by its
+    /// input index, so the output is deterministic regardless of
+    /// scheduling. Items and the closure may borrow caller state — no
+    /// `'static` bound — which is what lets decoder sessions fan out
+    /// over their own scratch without cloning inputs.
+    ///
+    /// A panic in `f` propagates to the caller once all workers have
+    /// been joined (the guarantee [`std::thread::scope`] provides).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return items.into_iter().map(f).collect();
+        }
+        // Each item is handed out exactly once via its own mutex slot;
+        // the atomic counter is the work queue.
+        let slots: Vec<Mutex<Option<T>>> =
+            items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let next = AtomicUsize::new(0);
+        let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let item = slots[i]
+                            .lock()
+                            .expect("pool item poisoned")
+                            .take()
+                            .expect("item claimed twice");
+                        local.push((i, f(item)));
+                    }
+                    done.lock().expect("pool results poisoned").extend(local);
+                });
+            }
+        });
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        for (i, r) in done.into_inner().expect("pool results poisoned") {
+            out[i] = Some(r);
+        }
+        out.into_iter()
+            .map(|r| r.expect("every task produces a result"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_resolves_to_available_parallelism() {
+        let p = DecodePool::new(0).unwrap();
+        assert!(p.size() >= 1);
+    }
+
+    #[test]
+    fn absurd_thread_count_rejected() {
+        assert!(DecodePool::new(MAX_THREADS + 1).is_err());
+        assert!(DecodePool::new(MAX_THREADS).is_ok());
+    }
+
+    #[test]
+    fn map_preserves_input_order() {
+        for threads in [1, 2, 3, 8] {
+            let pool = DecodePool::new(threads).unwrap();
+            let out = pool.map((0..100).collect::<Vec<usize>>(), |x| x * x);
+            assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        let pool = DecodePool::new(4).unwrap();
+        assert!(pool.map(Vec::<usize>::new(), |x| x).is_empty());
+        assert_eq!(pool.map(vec![7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn tasks_may_borrow_caller_state() {
+        // The scoped pool's whole point: no 'static bound.
+        let data = vec![1.0f64; 64];
+        let pool = DecodePool::new(4).unwrap();
+        let sums = pool.map(
+            data.chunks(16).collect::<Vec<&[f64]>>(),
+            |c| c.iter().sum::<f64>(),
+        );
+        assert_eq!(sums, vec![16.0; 4]);
+    }
+
+    #[test]
+    fn tasks_may_mutate_disjoint_chunks() {
+        let mut data = vec![0.0f64; 32];
+        let pool = DecodePool::new(4).unwrap();
+        let tasks: Vec<(usize, &mut [f64])> =
+            data.chunks_mut(8).enumerate().collect();
+        pool.map(tasks, |(i, chunk)| {
+            for v in chunk.iter_mut() {
+                *v = i as f64;
+            }
+        });
+        for (i, c) in data.chunks(8).enumerate() {
+            assert!(c.iter().all(|&v| v == i as f64));
+        }
+    }
+
+    #[test]
+    fn uneven_task_costs_balance() {
+        let pool = DecodePool::new(4).unwrap();
+        let out = pool.map((0..40usize).collect(), |i| {
+            // Task cost varies by ~100x; result must still be ordered.
+            let mut acc = 0u64;
+            for j in 0..(i * 100 + 1) {
+                acc = acc.wrapping_add(j as u64);
+            }
+            (i, acc)
+        });
+        for (i, (j, _)) in out.iter().enumerate() {
+            assert_eq!(i, *j);
+        }
+    }
+}

@@ -121,10 +121,22 @@ pub struct DecodeReplay {
 
 /// Sample a worker arrival order: draw one completion time per worker
 /// from `model` and sort.
-pub fn sample_arrival_order(n: usize, model: &StragglerModel, rng: &mut Rng) -> Vec<usize> {
+pub fn sample_arrival_order(
+    n: usize,
+    model: &StragglerModel,
+    rng: &mut Rng,
+) -> Result<Vec<usize>> {
     let mut times: Vec<(f64, usize)> = (0..n).map(|w| (model.sample(rng), w)).collect();
-    times.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite sample times"));
-    times.into_iter().map(|(_, w)| w).collect()
+    // total_cmp keeps the sort panic-free; a NaN completion time is a
+    // broken straggler model, not a slow worker, and is rejected at
+    // this boundary like the montecarlo drivers reject it at theirs.
+    if times.iter().any(|(t, _)| t.is_nan()) {
+        return Err(Error::Numerical(
+            "straggler model produced NaN sample times".into(),
+        ));
+    }
+    times.sort_by(|a, b| a.0.total_cmp(&b.0));
+    Ok(times.into_iter().map(|(_, w)| w).collect())
 }
 
 /// Simulated decode-cost accounting through the **same streaming
@@ -273,7 +285,8 @@ mod tests {
         for kind in SchemeKind::ALL {
             let scheme = build_scheme(kind, 4, 2, 4, 2).unwrap();
             let order =
-                sample_arrival_order(scheme.num_workers(), &StragglerModel::exp(10.0), &mut rng);
+                sample_arrival_order(scheme.num_workers(), &StragglerModel::exp(10.0), &mut rng)
+                    .unwrap();
             let replay = replay_decode(scheme.as_ref(), &a, &x, &order).unwrap();
             // Batch decode replays the same order → bit-for-bit equal.
             let shards = scheme.encode(&a).unwrap();

@@ -5,17 +5,24 @@
 //! corresponding expressions for the baseline schemes of Table I, all
 //! under a pluggable straggler model.
 
+use crate::parallel::DecodePool;
 use crate::sim::straggler::StragglerModel;
 use crate::sim::SimParams;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, SplitMix64};
 use crate::util::stats::Welford;
-use crate::Result;
+use crate::{Error, Result};
 
-/// `k`-th smallest of a scratch buffer (1-indexed `k`), via quickselect.
+/// `k`-th smallest of a scratch buffer (1-indexed `k`), via quickselect
+/// under `f64::total_cmp` — never panics on NaN (total order: negative
+/// NaN sorts below every finite value, positive NaN above), so a
+/// misbehaving straggler model surfaces as the drivers'
+/// [`Error::Numerical`] rather than a quickselect panic. Callers must
+/// reject NaN inputs if they need finite order statistics; every
+/// in-crate sampler does so at the straggler-model boundary.
 #[inline]
 pub fn kth_min(buf: &mut [f64], k: usize) -> f64 {
     debug_assert!(k >= 1 && k <= buf.len());
-    let (_, v, _) = buf.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
+    let (_, v, _) = buf.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
     *v
 }
 
@@ -49,6 +56,13 @@ pub fn sample_hierarchical(p: &SimParams, rng: &mut Rng) -> f64 {
 
 /// Same as [`sample_hierarchical`] but with arbitrary worker / link
 /// distributions (ablations beyond the paper's Exp model).
+///
+/// NaN containment: a single NaN worker draw could otherwise vanish
+/// inside the order statistic (under `total_cmp` a positive NaN sorts
+/// past every finite value, so the `k1`-th min may still be finite)
+/// and silently bias the estimate, so any NaN at the straggler-model
+/// boundary poisons the whole sample — the MC drivers then reject it
+/// with [`Error::Numerical`].
 pub fn sample_hierarchical_with(
     p: &SimParams,
     worker_model: &StragglerModel,
@@ -61,8 +75,15 @@ pub fn sample_hierarchical_with(
         for w in workers.iter_mut() {
             *w = worker_model.sample(rng);
         }
+        if workers.iter().any(|t| t.is_nan()) {
+            return f64::NAN;
+        }
         let s_i = kth_min(&mut workers, p.k1);
-        group_done.push(s_i + link_model.sample(rng));
+        let link = link_model.sample(rng);
+        if link.is_nan() {
+            return f64::NAN;
+        }
+        group_done.push(s_i + link);
     }
     kth_min(&mut group_done, p.k2)
 }
@@ -78,23 +99,97 @@ pub fn sample_heterogeneous(
 ) -> f64 {
     assert_eq!(n1.len(), k1.len());
     let mut group_done = Vec::with_capacity(n1.len());
-    for i in 0..n1.len() {
-        let mut workers: Vec<f64> = (0..n1[i]).map(|_| rng.exponential(mu1)).collect();
-        let s_i = kth_min(&mut workers, k1[i]);
+    for (&n1_i, &k1_i) in n1.iter().zip(k1.iter()) {
+        let mut workers: Vec<f64> = (0..n1_i).map(|_| rng.exponential(mu1)).collect();
+        let s_i = kth_min(&mut workers, k1_i);
         group_done.push(s_i + rng.exponential(mu2));
     }
     kth_min(&mut group_done, k2)
 }
 
+/// Trials per Monte-Carlo shard. Fixed — the shard grid is a function
+/// of `trials` alone, never of the thread count — so sharded estimates
+/// are bit-identical at any pool width.
+pub const MC_SHARD: usize = 8192;
+
+/// Counter-based per-shard RNG stream: shard `s` of run `seed` draws
+/// from `xoshiro256++` seeded by `SplitMix64(seed ⊕ s·φ64)`. Streams
+/// are a pure function of `(seed, shard)`, so any thread may execute
+/// any shard and the sample sequence is unchanged.
+fn shard_rng(seed: u64, shard: u64) -> Rng {
+    let mut sm = SplitMix64::new(seed ^ shard.wrapping_mul(0x9E3779B97F4A7C15));
+    Rng::new(sm.next_u64())
+}
+
 /// Monte-Carlo `E[T]` estimate with 95% CI for the hierarchical scheme.
 pub fn expected_latency(p: &SimParams, trials: usize, seed: u64) -> Result<Estimate> {
+    expected_latency_with(p, trials, seed, &DecodePool::serial())
+}
+
+/// [`expected_latency`] with the trials sharded across `pool`.
+pub fn expected_latency_with(
+    p: &SimParams,
+    trials: usize,
+    seed: u64,
+    pool: &DecodePool,
+) -> Result<Estimate> {
     p.validate()?;
-    let mut rng = Rng::new(seed);
-    let mut acc = Welford::new();
-    for _ in 0..trials {
-        acc.push(sample_hierarchical(p, &mut rng));
+    estimate_sharded(trials, seed, pool, |rng| sample_hierarchical(p, rng))
+}
+
+/// Hierarchical `E[T]` under arbitrary worker / link models, sharded
+/// across `pool`. Rejects non-finite samples at the straggler-model
+/// boundary with [`Error::Numerical`].
+pub fn expected_latency_models(
+    p: &SimParams,
+    worker_model: &StragglerModel,
+    link_model: &StragglerModel,
+    trials: usize,
+    seed: u64,
+    pool: &DecodePool,
+) -> Result<Estimate> {
+    p.validate()?;
+    estimate_sharded(trials, seed, pool, |rng| {
+        sample_hierarchical_with(p, worker_model, link_model, rng)
+    })
+}
+
+/// Sharded MC driver: split `trials` into [`MC_SHARD`]-sized shards,
+/// each with its own counter-based RNG stream, fan the shards across
+/// `pool`, and merge the per-shard Welford accumulators **in shard
+/// order** (Chan's parallel update). Results are bit-identical at any
+/// thread count. A non-finite sample (a NaN-producing straggler model)
+/// aborts the run with [`Error::Numerical`] instead of poisoning the
+/// estimate or panicking downstream order statistics.
+pub fn estimate_sharded(
+    trials: usize,
+    seed: u64,
+    pool: &DecodePool,
+    sampler: impl Fn(&mut Rng) -> f64 + Sync,
+) -> Result<Estimate> {
+    let shards: Vec<(u64, usize)> = (0..trials.div_ceil(MC_SHARD))
+        .map(|s| (s as u64, MC_SHARD.min(trials - s * MC_SHARD)))
+        .collect();
+    let accs: Vec<Result<Welford>> = pool.map(shards, |(s, count)| {
+        let mut rng = shard_rng(seed, s);
+        let mut acc = Welford::new();
+        for _ in 0..count {
+            let t = sampler(&mut rng);
+            if !t.is_finite() {
+                return Err(Error::Numerical(format!(
+                    "straggler model produced a non-finite sample ({t}) \
+                     in Monte-Carlo shard {s}"
+                )));
+            }
+            acc.push(t);
+        }
+        Ok(acc)
+    });
+    let mut all = Welford::new();
+    for acc in accs {
+        all.merge(&acc?);
     }
-    Ok(Estimate::from(&acc))
+    Ok(Estimate::from(&all))
 }
 
 /// Baseline samplers under Table I's model for non-hierarchical
@@ -140,7 +235,7 @@ pub mod baselines {
         let mut order: Vec<(f64, usize)> = (0..n)
             .map(|w| (rng.exponential(mu2), w))
             .collect();
-        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        order.sort_by(|a, b| a.0.total_cmp(&b.0));
         let mut present: Vec<usize> = Vec::with_capacity(n);
         // The earliest the pattern can possibly decode is k = k1·k2
         // arrivals; test peelability from there on.
@@ -198,6 +293,64 @@ mod tests {
         assert_eq!(kth_min(&mut v, 3), 3.0);
         let mut v = [5.0, 1.0, 3.0, 2.0, 4.0];
         assert_eq!(kth_min(&mut v, 5), 5.0);
+    }
+
+    #[test]
+    fn kth_min_tolerates_nan_without_panicking() {
+        // total_cmp orders NaN last: finite order statistics are still
+        // correct, and nothing panics.
+        let mut v = [5.0, f64::NAN, 3.0, 2.0, 4.0];
+        assert_eq!(kth_min(&mut v, 1), 2.0);
+        let mut v = [5.0, f64::NAN, 3.0, 2.0, 4.0];
+        assert!(kth_min(&mut v, 5).is_nan());
+    }
+
+    #[test]
+    fn nan_straggler_model_rejected_at_boundary() {
+        let p = SimParams {
+            n1: 3,
+            k1: 2,
+            n2: 2,
+            k2: 1,
+            mu1: 1.0,
+            mu2: 1.0,
+        };
+        let bad = StragglerModel::Deterministic { value: f64::NAN };
+        let link = StragglerModel::Deterministic { value: 0.5 };
+        let err = expected_latency_models(
+            &p,
+            &bad,
+            &link,
+            1_000,
+            3,
+            &crate::parallel::DecodePool::serial(),
+        );
+        assert!(
+            matches!(err, Err(crate::Error::Numerical(_))),
+            "NaN samples must surface as Error::Numerical, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn sharded_estimate_is_bit_identical_at_any_thread_count() {
+        let p = SimParams {
+            n1: 6,
+            k1: 3,
+            n2: 4,
+            k2: 2,
+            mu1: 10.0,
+            mu2: 1.0,
+        };
+        // Trials spanning several shards plus a partial tail.
+        let trials = 3 * MC_SHARD + 517;
+        let serial = expected_latency(&p, trials, 99).unwrap();
+        for threads in [2, 4, 8] {
+            let pool = crate::parallel::DecodePool::new(threads).unwrap();
+            let par = expected_latency_with(&p, trials, 99, &pool).unwrap();
+            assert_eq!(serial.mean.to_bits(), par.mean.to_bits(), "threads={threads}");
+            assert_eq!(serial.ci95.to_bits(), par.ci95.to_bits());
+            assert_eq!(serial.trials, par.trials);
+        }
     }
 
     /// Degenerate single-group case: E[T] = (H_n1 - H_{n1-k1})/µ1 + 1/µ2

@@ -1,10 +1,10 @@
 //! Offline substrates: PRNG, statistics, harmonic numbers, logging,
-//! thread pool, micro-benchmark harness and a property-testing
-//! mini-framework.
+//! micro-benchmark harness and a property-testing mini-framework.
 //!
-//! The build environment is fully offline with no `rand`, `criterion`,
-//! `proptest` or `rayon` available, so this module provides the small,
-//! well-tested subset of each that the rest of the crate needs.
+//! The build environment is fully offline with no `rand`, `criterion`
+//! or `proptest` available, so this module provides the small,
+//! well-tested subset of each that the rest of the crate needs
+//! (`rayon`'s role is filled by `crate::parallel::DecodePool`).
 
 pub mod bench;
 pub mod check;
@@ -12,4 +12,3 @@ pub mod harmonic;
 pub mod logging;
 pub mod rng;
 pub mod stats;
-pub mod threadpool;

@@ -1,0 +1,172 @@
+//! Determinism suite: parallel decode must equal serial decode
+//! **bit-for-bit** for every scheme at every thread count, and the
+//! packed GEMM must agree with the naive oracle at awkward shapes.
+//!
+//! This is the contract that makes `decode_threads` safe to turn up in
+//! production: the pool only changes wall-clock, never results.
+
+use hiercode::coding::{build_scheme_with, compute_all_products, select_results, SchemeKind};
+use hiercode::linalg::{lu::LuFactors, ops, Matrix};
+use hiercode::parallel::DecodePool;
+use hiercode::sim::engine::{replay_decode, sample_arrival_order};
+use hiercode::sim::straggler::StragglerModel;
+use hiercode::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_fn(rows, cols, |_, _| r.uniform(-1.0, 1.0))
+}
+
+/// Batch decode (session replay) of a shuffled, parity-heavy arrival
+/// order: identical bits and flops at decode_threads ∈ {1, 2, 8}.
+#[test]
+fn all_schemes_decode_bit_identically_at_any_thread_count() {
+    let mut r = Rng::new(4242);
+    for kind in SchemeKind::ALL {
+        let serial = build_scheme_with(kind, 4, 2, 4, 2, 1).unwrap();
+        // Large enough that the per-block RHS spans several solve
+        // panels, so the pooled panel fan-out actually engages.
+        let rows = serial.row_divisor() * 64;
+        let a = random_matrix(&mut r, rows, 6);
+        let x = random_matrix(&mut r, 6, 3);
+        let shards = serial.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        // Shuffled full arrival order: the session consumes the prefix
+        // it needs, which lands on parity shards for every scheme.
+        let mut order: Vec<usize> = (0..serial.num_workers()).collect();
+        r.shuffle(&mut order);
+        let subset = select_results(&all, &order);
+        let expect = ops::matmul(&a, &x);
+        let reference = serial.decode(&subset, rows).unwrap();
+        assert!(
+            reference.result.max_abs_diff(&expect) < 1e-6,
+            "{kind}: serial decode wrong"
+        );
+        for threads in THREADS {
+            let scheme = build_scheme_with(kind, 4, 2, 4, 2, threads).unwrap();
+            let out = scheme.decode(&subset, rows).unwrap();
+            assert_eq!(
+                reference.result.data(),
+                out.result.data(),
+                "{kind} at {threads} threads: bits diverge from serial"
+            );
+            assert_eq!(
+                reference.flops, out.flops,
+                "{kind} at {threads} threads: flop accounting diverges"
+            );
+        }
+    }
+}
+
+/// The simulator's session replay — the same decoders the live
+/// coordinator runs — is equally deterministic across thread counts.
+#[test]
+fn replay_decode_bit_identical_across_thread_counts() {
+    let mut r = Rng::new(77);
+    let a = random_matrix(&mut r, 32, 4);
+    let x = random_matrix(&mut r, 4, 2);
+    for kind in SchemeKind::ALL {
+        let order = sample_arrival_order(16, &StragglerModel::exp(10.0), &mut r).unwrap();
+        let reference = {
+            let scheme = build_scheme_with(kind, 4, 2, 4, 2, 1).unwrap();
+            replay_decode(scheme.as_ref(), &a, &x, &order).unwrap()
+        };
+        for threads in THREADS {
+            let scheme = build_scheme_with(kind, 4, 2, 4, 2, threads).unwrap();
+            let replay = replay_decode(scheme.as_ref(), &a, &x, &order).unwrap();
+            assert_eq!(replay.pushed, reference.pushed, "{kind}");
+            assert_eq!(
+                replay.output.result.data(),
+                reference.output.result.data(),
+                "{kind} at {threads} threads"
+            );
+            assert_eq!(replay.output.flops, reference.output.flops, "{kind}");
+        }
+    }
+}
+
+/// Packed GEMM vs the naive oracle at the awkward shapes: 1×n, n×1,
+/// and non-multiples of the microtile/panel sizes.
+#[test]
+fn packed_gemm_matches_naive_at_awkward_shapes() {
+    let mut r = Rng::new(7);
+    for (m, k, n) in [
+        (1usize, 17usize, 9usize), // 1×n row vector out
+        (9, 17, 1),                // n×1 column vector out
+        (1, 1, 1),
+        (2, 3, 2),
+        (5, 257, 6),    // k one past the KC=256 panel
+        (6, 511, 1030), // non-multiple of every block size
+        (63, 64, 65),
+        (4, 4, 4),
+    ] {
+        let a = random_matrix(&mut r, m, k);
+        let b = random_matrix(&mut r, k, n);
+        let naive = ops::matmul_naive(&a, &b);
+        let packed = ops::matmul(&a, &b);
+        assert!(
+            naive.max_abs_diff(&packed) < 1e-10,
+            "{m}x{k}x{n}: packed kernel diverges from oracle by {}",
+            naive.max_abs_diff(&packed)
+        );
+        // And row-parallel execution is bit-identical to serial.
+        for threads in THREADS {
+            let pool = DecodePool::new(threads).unwrap();
+            let par = ops::matmul_with(&a, &b, &pool);
+            assert_eq!(packed.data(), par.data(), "{m}x{k}x{n} t={threads}");
+        }
+    }
+}
+
+/// The blocked multi-RHS solve agrees with per-column solves and is
+/// thread-count invariant (column panels are independent).
+#[test]
+fn blocked_solve_matches_columns_and_threads() {
+    let mut r = Rng::new(11);
+    let n = 24;
+    let mut a = random_matrix(&mut r, n, n);
+    for i in 0..n {
+        a[(i, i)] += n as f64;
+    }
+    let f = LuFactors::factorize(&a).unwrap();
+    let b = random_matrix(&mut r, n, 300);
+    let serial = f.solve_matrix(&b).unwrap();
+    for j in [0, 127, 128, 299] {
+        let bj: Vec<f64> = (0..n).map(|i| b[(i, j)]).collect();
+        let xj = f.solve_vec(&bj).unwrap();
+        for i in 0..n {
+            assert!((serial[(i, j)] - xj[i]).abs() < 1e-9, "col {j} row {i}");
+        }
+    }
+    for threads in THREADS {
+        let pool = DecodePool::new(threads).unwrap();
+        let mut scratch = Vec::new();
+        let par = f.solve_matrix_with(&b, &pool, &mut scratch).unwrap();
+        assert_eq!(serial.data(), par.data(), "threads={threads}");
+    }
+}
+
+/// End-to-end: a live cluster configured with decode_threads ∈ {1, 2, 8}
+/// returns the same (correct) answers — the config field reaches the
+/// master/submaster sessions and never perturbs results.
+#[test]
+fn cluster_decode_threads_end_to_end() {
+    use hiercode::config::schema::ClusterConfig;
+    use hiercode::coordinator::Cluster;
+    let mut r = Rng::new(1234);
+    let a = random_matrix(&mut r, 16, 4);
+    let x = vec![0.5, -1.0, 2.0, 0.25];
+    let expect = ops::matvec(&a, &x);
+    for threads in THREADS {
+        let mut config = ClusterConfig::demo(4, 2, 4, 2);
+        config.runtime.decode_threads = threads;
+        config.straggler.enabled = false;
+        let cluster = Cluster::launch(&config, &a).unwrap();
+        let y = cluster.submit(x.clone()).unwrap().wait().unwrap();
+        for (got, want) in y.iter().zip(expect.iter()) {
+            assert!((got - want).abs() < 1e-6, "threads={threads}");
+        }
+        cluster.shutdown();
+    }
+}
