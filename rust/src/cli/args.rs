@@ -76,6 +76,42 @@ impl Args {
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// Comma-separated usize list option (e.g. `--n1 10,10,8`).
+    pub fn get_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim().parse::<usize>().map_err(|_| {
+                        Error::InvalidParams(format!(
+                            "--{key} expects comma-separated integers, got '{v}'"
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<usize>>>()
+                .map(Some),
+        }
+    }
+
+    /// Comma-separated f64 list option (e.g. `--mu1 10,10,0.5`).
+    pub fn get_f64_list(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim().parse::<f64>().map_err(|_| {
+                        Error::InvalidParams(format!(
+                            "--{key} expects comma-separated numbers, got '{v}'"
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()
+                .map(Some),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -109,6 +145,16 @@ mod tests {
     fn trailing_flag() {
         let a = Args::parse(&sv(&["--no-pjrt"])).unwrap();
         assert!(a.has_flag("no-pjrt"));
+    }
+
+    #[test]
+    fn list_options_parse_and_reject_garbage() {
+        let a = Args::parse(&sv(&["--n1", "10,8, 6", "--mu1", "10,0.5,1e-2"])).unwrap();
+        assert_eq!(a.get_usize_list("n1").unwrap(), Some(vec![10, 8, 6]));
+        assert_eq!(a.get_f64_list("mu1").unwrap(), Some(vec![10.0, 0.5, 0.01]));
+        assert_eq!(a.get_usize_list("absent").unwrap(), None);
+        let bad = Args::parse(&sv(&["--n1", "10,x"])).unwrap();
+        assert!(bad.get_usize_list("n1").is_err());
     }
 
     #[test]

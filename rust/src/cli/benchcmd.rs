@@ -12,6 +12,9 @@
 //! * `group_scaling` — hierarchical group decoding at 1..max threads,
 //!   with speedup and efficiency-vs-ideal, plus a bit-identical
 //!   cross-thread determinism check;
+//! * `hetero_group_decode` — a heterogeneous topology with skewed
+//!   per-group `k1_g` (unequal elimination sizes), serial vs pooled,
+//!   with its own bit-identical check;
 //! * `session_decode` — streaming-session batch decode per scheme;
 //! * `BENCH_sim.json` — sharded Monte-Carlo throughput at 1..max
 //!   threads with its own bit-identical check.
@@ -219,6 +222,57 @@ fn bench_decode(cfg: &BenchConfig) -> Result<String> {
         .map(|(&t, &sp)| sp / t as f64)
         .collect();
 
+    // --- Heterogeneous-topology group decode (skewed k1_g). ---
+    // Distinct per-group thresholds make the fan-out's work items
+    // unequal (16×16 eliminations next to 4×4 ones) — the load shape
+    // heterogeneous scenarios and the allocator produce, tracked here
+    // so the perf trajectory covers the non-uniform path too.
+    let het_n1: [usize; 5] = [20, 20, 12, 8, 8];
+    let het_k1: [usize; 5] = [16, 16, 8, 4, 4];
+    let het_k2 = 4usize;
+    let per_group_het: Vec<Vec<(usize, Matrix)>> = het_n1
+        .iter()
+        .zip(&het_k1)
+        .map(|(&n1g, &k1g)| {
+            let br = rows / (het_k2 * k1g);
+            (n1g - k1g..n1g)
+                .map(|j| (j, random_matrix(&mut r, br, batch)))
+                .collect()
+        })
+        .collect();
+    let het_code = |threads: usize| -> Result<crate::coding::HierarchicalCode> {
+        Ok(crate::coding::HierarchicalCode::new(
+            crate::coding::HierarchicalParams {
+                n1: het_n1.to_vec(),
+                k1: het_k1.to_vec(),
+                n2: het_n1.len(),
+                k2: het_k2,
+            },
+        )?
+        .with_pool(Arc::new(DecodePool::new(threads)?)))
+    };
+    let serial_code = het_code(1)?;
+    let het_serial_s = time_min(cfg.warmup, cfg.iters, || {
+        serial_code.decode_hierarchical(&per_group_het).unwrap()
+    });
+    let max_t = *cfg.threads.last().unwrap();
+    let par_code = het_code(max_t)?;
+    let het_parallel_s = time_min(cfg.warmup, cfg.iters, || {
+        par_code.decode_hierarchical(&per_group_het).unwrap()
+    });
+    let het_out_serial = serial_code.decode_hierarchical(&per_group_het)?;
+    let het_out_par = par_code.decode_hierarchical(&per_group_het)?;
+    let het_deterministic =
+        het_out_serial.result.data() == het_out_par.result.data()
+            && het_out_serial.flops == het_out_par.flops;
+    println!(
+        "bench hetero_group_decode_{rows}x{batch}  serial {}  t{max_t} {}  ({:.2}x, {} flops)",
+        fmt_time(het_serial_s),
+        fmt_time(het_parallel_s),
+        het_serial_s / het_parallel_s,
+        het_out_serial.flops
+    );
+
     // --- Streaming-session batch decode per scheme. ---
     let mut sessions = Vec::new();
     let srows = cfg.session_rows;
@@ -268,6 +322,13 @@ fn bench_decode(cfg: &BenchConfig) -> Result<String> {
          \x20   \"speedup\": {},\n\
          \x20   \"efficiency_vs_ideal\": {}\n\
          \x20 }},\n\
+         \x20 \"hetero_group_decode\": {{\n\
+         \x20   \"n1\": {}, \"k1\": {}, \"k2\": {het_k2},\n\
+         \x20   \"rows\": {rows}, \"batch\": {batch},\n\
+         \x20   \"serial_s\": {}, \"parallel_s\": {}, \"threads\": {max_t},\n\
+         \x20   \"speedup\": {}, \"decode_flops\": {},\n\
+         \x20   \"deterministic\": {het_deterministic}\n\
+         \x20 }},\n\
          \x20 \"session_decode\": [\n{}\n  ],\n\
          \x20 \"deterministic_across_threads\": {}\n\
          }}\n",
@@ -281,6 +342,12 @@ fn bench_decode(cfg: &BenchConfig) -> Result<String> {
         jf_list(&scaling_s),
         jf_list(&speedup),
         jf_list(&efficiency),
+        ju_list(&het_n1),
+        ju_list(&het_k1),
+        jf(het_serial_s),
+        jf(het_parallel_s),
+        jf(het_serial_s / het_parallel_s),
+        het_out_serial.flops,
         sessions.join(",\n"),
         deterministic
     ))
@@ -379,6 +446,16 @@ mod tests {
             let v = crate::config::json::Json::parse(&text).unwrap();
             assert!(v.get("schema").is_some(), "{name} missing schema");
             assert!(text.contains("true"), "{name}: determinism check absent");
+            if name == "BENCH_decode.json" {
+                let het = v
+                    .get("hetero_group_decode")
+                    .expect("heterogeneous decode scenario missing");
+                assert_eq!(
+                    het.get("deterministic").and_then(|d| d.as_bool()),
+                    Some(true),
+                    "hetero decode must be bit-identical across pool widths"
+                );
+            }
         }
     }
 }

@@ -1,10 +1,11 @@
 //! Command-line launcher (hand-rolled; `clap` is unavailable offline).
 //!
 //! ```text
-//! hiercode figures <fig6a|fig6b|fig7|table1|decode-scaling|all> [--trials N] [--seed S]
-//! hiercode sim     --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R] [--trials N]
-//! hiercode bounds  --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R]
-//! hiercode serve   [--config FILE] [--scheme S] [--requests N] [--no-pjrt]
+//! hiercode figures  <fig6a|fig6b|fig7|table1|decode-scaling|allocation|all>
+//! hiercode sim      --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R] [--trials N]
+//! hiercode bounds   --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R]
+//! hiercode allocate --n1 L --k2 K2 [--mu1 L|R] [--mu2 L|R] (--recovery F | --total-k1 K)
+//! hiercode serve    [--config FILE] [--scheme S] [--requests N] [--no-pjrt]
 //! hiercode help
 //! ```
 
@@ -18,11 +19,14 @@ const USAGE: &str = "\
 hiercode — Hierarchical Coding for Distributed Computing (Park et al., 2018)
 
 USAGE:
-  hiercode figures <fig6a|fig6b|fig7|table1|decode-scaling|all>
+  hiercode figures <fig6a|fig6b|fig7|table1|decode-scaling|allocation|all>
                    [--trials N] [--seed S]
   hiercode sim     --k1 K1 --k2 K2 [--n1 N1] [--n2 N2]
                    [--mu1 R] [--mu2 R] [--trials N] [--seed S]
   hiercode bounds  --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R]
+  hiercode allocate --n1 N1,N1,... --k2 K2 [--mu1 R | R,R,...]
+                   [--mu2 R | R,R,...] (--recovery F | --total-k1 K)
+                   [--trials N] [--seed S]
   hiercode serve   [--config FILE] [--requests N] [--no-pjrt]
                    [--scheme hierarchical|mds|product|replication|polynomial]
   hiercode bench   [--smoke] [--threads N] [--iters N] [--out DIR]
@@ -30,6 +34,9 @@ USAGE:
 
 `figures` regenerates the paper's evaluation artifacts (CSV on stdout).
 `sim` Monte-Carlo-estimates E[T]; `bounds` prints L / Lemma 2 / Thm 2.
+`allocate` searches per-group inner thresholds k1_g minimizing the §III
+upper bound for a heterogeneous fleet (per-group --mu1 rates), and
+reports uniform vs optimized bound and Monte-Carlo E[T].
 `serve` launches the in-process cluster (any scheme via --scheme) and
 runs a request workload through its streaming decode sessions.
 `bench` runs the decode/GEMM/simulator benches and writes the
@@ -63,6 +70,7 @@ pub fn run(argv: &[String]) -> crate::Result<()> {
         "figures" => figures_cmd(&args),
         "sim" => sim_cmd(&args),
         "bounds" => bounds_cmd(&args),
+        "allocate" => allocate_cmd(&args),
         "serve" => serve_cmd(&args),
         "bench" => benchcmd::run(&args),
         other => Err(crate::Error::InvalidParams(format!(
@@ -110,6 +118,9 @@ fn figures_cmd(args: &Args) -> crate::Result<()> {
         "decode-scaling" => {
             crate::figures::decode_scaling::run(seed)?;
         }
+        "allocation" => {
+            crate::figures::allocation::run(trials, seed)?;
+        }
         "all" => {
             crate::figures::fig6::run(5, trials, seed)?;
             println!();
@@ -120,6 +131,8 @@ fn figures_cmd(args: &Args) -> crate::Result<()> {
             crate::figures::table1::run(trials, seed)?;
             println!();
             crate::figures::decode_scaling::run(seed)?;
+            println!();
+            crate::figures::allocation::run(trials, seed)?;
         }
         other => {
             return Err(crate::Error::InvalidParams(format!(
@@ -153,6 +166,95 @@ fn bounds_cmd(args: &Args) -> crate::Result<()> {
     Ok(())
 }
 
+fn allocate_cmd(args: &Args) -> crate::Result<()> {
+    use crate::sim::allocate::{self, AllocationProblem};
+
+    let n1 = args.get_usize_list("n1")?.ok_or_else(|| {
+        crate::Error::InvalidParams(
+            "--n1 is required (comma-separated workers per group, e.g. 10,10,8)".into(),
+        )
+    })?;
+    let n2 = n1.len();
+    let k2 = args.get_usize("k2")?.ok_or_else(|| {
+        crate::Error::InvalidParams("--k2 is required".into())
+    })?;
+    // Rates: a single value broadcasts, a list is per-group.
+    let broadcast = |list: Option<Vec<f64>>, default: f64| -> crate::Result<Vec<f64>> {
+        match list {
+            None => Ok(vec![default; n2]),
+            Some(v) if v.len() == 1 => Ok(vec![v[0]; n2]),
+            Some(v) if v.len() == n2 => Ok(v),
+            Some(v) => Err(crate::Error::InvalidParams(format!(
+                "rate list has {} entries for {n2} groups",
+                v.len()
+            ))),
+        }
+    };
+    let mu1 = broadcast(args.get_f64_list("mu1")?, crate::scenario::DEFAULT_MU1)?;
+    let mu2 = broadcast(args.get_f64_list("mu2")?, crate::scenario::DEFAULT_MU2)?;
+    let problem = match (args.get_usize("total-k1")?, args.get_f64("recovery")?) {
+        (Some(total_k1), None) => {
+            let p = AllocationProblem {
+                n1,
+                k2,
+                mu1,
+                mu2,
+                total_k1,
+            };
+            p.validate()?;
+            p
+        }
+        (None, Some(recovery)) => {
+            AllocationProblem::with_recovery_fraction(n1, k2, mu1, mu2, recovery)?
+        }
+        (None, None) => {
+            return Err(crate::Error::InvalidParams(
+                "one of --total-k1 or --recovery is required".into(),
+            ))
+        }
+        (Some(_), Some(_)) => {
+            return Err(crate::Error::InvalidParams(
+                "--total-k1 and --recovery are mutually exclusive".into(),
+            ))
+        }
+    };
+    let alloc = allocate::optimize(&problem)?;
+    let trials = args.get_usize("trials")?.unwrap_or(50_000);
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let pool = crate::parallel::DecodePool::serial();
+    let uni = montecarlo::expected_latency_topology(
+        &problem.topology(&alloc.uniform_k1),
+        trials,
+        seed,
+        &pool,
+    )?;
+    let opt = montecarlo::expected_latency_topology(
+        &alloc.topology(&problem),
+        trials,
+        seed,
+        &pool,
+    )?;
+    println!(
+        "allocate: {} groups, k2={}, total k1={}",
+        problem.n1.len(),
+        problem.k2,
+        problem.total_k1
+    );
+    println!(
+        "uniform   k1={:?}  bound={:.6}  E[T]={:.6} ± {:.6}",
+        alloc.uniform_k1, alloc.uniform_bound, uni.mean, uni.ci95
+    );
+    println!(
+        "optimized k1={:?}  bound={:.6}  E[T]={:.6} ± {:.6}  ({} moves)",
+        alloc.k1, alloc.bound, opt.mean, opt.ci95, alloc.moves
+    );
+    println!(
+        "bound improvement: {:.2}%",
+        (1.0 - alloc.bound / alloc.uniform_bound) * 100.0
+    );
+    Ok(())
+}
+
 fn serve_cmd(args: &Args) -> crate::Result<()> {
     use crate::config::schema::ClusterConfig;
     use crate::coordinator::Cluster;
@@ -177,10 +279,26 @@ fn serve_cmd(args: &Args) -> crate::Result<()> {
     let mut rng = Rng::new(config.seed);
     let a = Matrix::from_fn(m, d, |_, _| rng.uniform(-1.0, 1.0));
     let cluster = Cluster::launch(&config, &a)?;
+    let shape = if config.code.topology.is_uniform_code() {
+        format!(
+            "({},{})x({},{})",
+            config.code.n1, config.code.k1, config.code.n2, config.code.k2
+        )
+    } else {
+        // Heterogeneous: print the real per-group specs, not the
+        // group-0 uniform view.
+        let groups: Vec<String> = config
+            .code
+            .topology
+            .groups
+            .iter()
+            .map(|g| format!("({},{})", g.n1, g.k1))
+            .collect();
+        format!("groups [{}] k2={}", groups.join(" "), config.code.k2)
+    };
     println!(
-        "cluster up: {} on ({},{})x({},{}), matrix {m}x{d}, pjrt={}",
+        "cluster up: {} on {shape}, matrix {m}x{d}, pjrt={}",
         cluster.scheme().name(),
-        config.code.n1, config.code.k1, config.code.n2, config.code.k2,
         config.runtime.use_pjrt
     );
     let t0 = std::time::Instant::now();
@@ -242,6 +360,38 @@ mod tests {
     #[test]
     fn serve_native_smoke() {
         run(&sv(&["serve", "--no-pjrt", "--requests", "4"])).unwrap();
+    }
+
+    #[test]
+    fn allocate_smoke_and_validation() {
+        // Skewed rates, explicit budget.
+        run(&sv(&[
+            "allocate", "--n1", "8,8,8,8", "--k2", "3", "--mu1", "1,1,1,0.05",
+            "--total-k1", "16", "--trials", "2000",
+        ]))
+        .unwrap();
+        // Recovery-fraction form with broadcast rates.
+        run(&sv(&[
+            "allocate", "--n1", "6,6", "--k2", "1", "--mu1", "2", "--recovery",
+            "0.5", "--trials", "1000",
+        ]))
+        .unwrap();
+        // Missing required args / contradictory forms rejected.
+        assert!(run(&sv(&["allocate", "--k2", "2"])).is_err());
+        assert!(run(&sv(&["allocate", "--n1", "4,4"])).is_err());
+        // A budget flag is required — no silent default.
+        assert!(run(&sv(&["allocate", "--n1", "4,4", "--k2", "1"])).is_err());
+        assert!(run(&sv(&[
+            "allocate", "--n1", "4,4", "--k2", "1", "--total-k1", "4",
+            "--recovery", "0.5",
+        ]))
+        .is_err());
+        // Rate list with the wrong length.
+        assert!(run(&sv(&[
+            "allocate", "--n1", "4,4", "--k2", "1", "--mu1", "1,2,3",
+            "--total-k1", "4",
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::coding::{
 };
 use crate::linalg::Matrix;
 use crate::parallel::DecodePool;
+use crate::scenario::{GroupSpec, Topology};
 use crate::{Error, Result};
 use std::sync::Arc;
 use std::time::Instant;
@@ -96,6 +97,10 @@ pub struct WorkerId {
 /// The `(n1, k1) × (n2, k2)` hierarchical code.
 pub struct HierarchicalCode {
     params: HierarchicalParams,
+    /// The scenario this code was built for ([`CodedScheme::topology`]
+    /// echoes it verbatim, so the coordinator and the simulator see the
+    /// per-group straggler profiles the config described).
+    topo: Topology,
     outer: MdsCode,
     inner: Vec<MdsCode>,
     /// Offset of each group's first worker in the flat indexing.
@@ -107,8 +112,28 @@ pub struct HierarchicalCode {
 
 impl HierarchicalCode {
     /// Build from parameters (validates, constructs all generators).
+    /// The scenario profile defaults to the paper's; use
+    /// [`Self::from_topology`] to carry per-group straggler profiles.
     pub fn new(params: HierarchicalParams) -> Result<Self> {
+        // Validate before indexing: ragged n1/k1 vectors must surface
+        // as Err, not as a panic or a silently truncated topology.
         params.validate()?;
+        let topo = Topology {
+            groups: (0..params.n2)
+                .map(|i| GroupSpec::new(params.n1[i], params.k1[i]))
+                .collect(),
+            k2: params.k2,
+        };
+        Self::from_topology(topo)
+    }
+
+    /// Build from a scenario-layer [`Topology`]: one inner `(n1_g,
+    /// k1_g)` MDS code per group concatenated with the `(n2, k2)` outer
+    /// code. The topology (including straggler profiles and dead-worker
+    /// sets) is kept and returned by [`CodedScheme::topology`].
+    pub fn from_topology(topo: Topology) -> Result<Self> {
+        topo.validate()?;
+        let params = topo.hierarchical_params();
         let outer = MdsCode::new(params.n2, params.k2)?;
         let inner = (0..params.n2)
             .map(|i| MdsCode::new(params.n1[i], params.k1[i]))
@@ -121,6 +146,7 @@ impl HierarchicalCode {
         }
         Ok(Self {
             params,
+            topo,
             outer,
             inner,
             offsets,
@@ -519,8 +545,8 @@ impl CodedScheme for HierarchicalCode {
         Box::new(HierarchicalDecoder::new(self, out_rows))
     }
 
-    fn topology(&self) -> Vec<usize> {
-        self.params.n1.clone()
+    fn topology(&self) -> Topology {
+        self.topo.clone()
     }
 
     fn group_decoder(

@@ -48,6 +48,7 @@ pub use replication::ReplicationCode;
 
 use crate::linalg::Matrix;
 use crate::parallel::DecodePool;
+use crate::scenario::Topology;
 use crate::{Error, Result};
 use std::sync::Arc;
 
@@ -204,11 +205,15 @@ pub trait CodedScheme: Send + Sync {
         session.finish()
     }
 
-    /// Two-tier cluster topology: how many workers each submaster
-    /// (rack) manages, in flat-index order. Defaults to one group
-    /// holding every worker (a single relay submaster).
-    fn topology(&self) -> Vec<usize> {
-        vec![self.num_workers()]
+    /// Two-tier cluster topology: the full scenario-layer
+    /// [`Topology`] — per-group worker counts, recovery thresholds and
+    /// straggler profiles, in flat-index order. Defaults to one relay
+    /// group holding every worker with recovery threshold `k` and the
+    /// paper's default straggler profile; schemes built from a custom
+    /// scenario return that scenario verbatim, so the coordinator and
+    /// the simulator run the exact same value.
+    fn topology(&self) -> Topology {
+        Topology::single_group(self.num_workers(), self.num_data_blocks())
     }
 
     /// Group-local decode session for submaster `group`, or `None` if
@@ -324,10 +329,34 @@ pub fn build_scheme_with(
     k2: usize,
     decode_threads: usize,
 ) -> Result<Arc<dyn CodedScheme>> {
+    build_scheme_topology(kind, &Topology::homogeneous(n1, k1, n2, k2), decode_threads)
+}
+
+/// Build a scheme from a scenario-layer [`Topology`] — the one
+/// construction path `ClusterConfig::build_scheme` uses, so the
+/// expanded per-group view drives every layer. The hierarchical code
+/// consumes the topology directly (per-group generators and decoder
+/// sessions sized by `k1_g`); the flat and grid baselines require a
+/// uniform code (`groups` with distinct `(n1_g, k1_g)` only make sense
+/// for the scheme whose decode is per-group).
+pub fn build_scheme_topology(
+    kind: SchemeKind,
+    topo: &Topology,
+    decode_threads: usize,
+) -> Result<Arc<dyn CodedScheme>> {
+    topo.validate()?;
     let pool = Arc::new(DecodePool::new(decode_threads)?);
+    if kind != SchemeKind::Hierarchical && !topo.is_uniform_code() {
+        return Err(Error::InvalidParams(format!(
+            "{kind}: heterogeneous per-group (n1,k1) specs require the \
+             hierarchical scheme"
+        )));
+    }
+    let (n1, k1) = (topo.groups[0].n1, topo.groups[0].k1);
+    let (n2, k2) = (topo.n2(), topo.k2);
     Ok(match kind {
         SchemeKind::Hierarchical => {
-            Arc::new(HierarchicalCode::homogeneous(n1, k1, n2, k2)?.with_pool(pool))
+            Arc::new(HierarchicalCode::from_topology(topo.clone())?.with_pool(pool))
         }
         SchemeKind::Mds => Arc::new(MdsCode::new(n1 * n2, k1 * k2)?.with_pool(pool)),
         SchemeKind::Product => Arc::new(ProductCode::new(n1, k1, n2, k2)?.with_pool(pool)),

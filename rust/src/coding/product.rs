@@ -159,11 +159,11 @@ impl CodedScheme for ProductCode {
         Box::new(ProductDecoder::new(self.clone(), out_rows))
     }
 
-    fn topology(&self) -> Vec<usize> {
+    fn topology(&self) -> crate::scenario::Topology {
         // Grid rows map onto racks, but the product code's decode cannot
         // be split between submasters and master (rows and columns
         // interleave), so the submasters are relays — §IV's contrast.
-        vec![self.n1; self.n2]
+        crate::scenario::Topology::homogeneous(self.n1, self.k1, self.n2, self.k2)
     }
 }
 

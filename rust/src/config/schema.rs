@@ -19,52 +19,262 @@
 //! `hierarchical`). Grid schemes use `(n1,k1)×(n2,k2)` directly; flat
 //! schemes use `n = n1·n2`, `k = k1·k2` so every scheme deploys the
 //! same worker count and recovery threshold (§IV's comparison).
+//!
+//! # Heterogeneous groups (the scenario layer)
+//!
+//! Instead of the uniform `(n1,k1,n2,k2)` sugar, the `"code"` object
+//! may carry a `groups` array describing each group (rack) separately —
+//! worker count, recovery threshold, and an optional per-group
+//! straggler profile overriding the global `"straggler"` section:
+//!
+//! ```json
+//! {
+//!   "code": {"scheme": "hierarchical", "k2": 2,
+//!            "groups": [
+//!              {"n1": 4, "k1": 2},
+//!              {"n1": 6, "k1": 3, "mu1": 2.0, "scale": 2.0},
+//!              {"n1": 5, "k1": 2, "dead_workers": [4]}
+//!            ]},
+//!   "straggler": {"mu1": 10.0, "mu2": 1.0}
+//! }
+//! ```
+//!
+//! A group's `scale` is a *relative slowdown multiplier* on its worker
+//! and link delays (2.0 = twice as slow), applied by the live cluster
+//! **and** by every simulator/bound/allocator path — the global
+//! `straggler.scale` stays the wall-clock rendering knob.
+//!
+//! Both forms expand into the same [`Topology`] value, which then
+//! drives the coding layer (per-group generators), the coordinator
+//! (per-group spawn + thresholds + delays) and the simulator — the
+//! uniform form is pure sugar for a `groups` array of identical
+//! entries. Per-group `mu1`/`mu2` overrides are the paper's
+//! exponential rates; `dead_workers` bakes failure domains into the
+//! scenario. The `groups` form requires the hierarchical scheme — the
+//! baselines have no per-group decode to size and would silently drop
+//! the per-group profiles at launch.
 
 use crate::coding::hierarchical::HierarchicalParams;
-use crate::coding::{build_scheme, CodedScheme, SchemeKind};
+use crate::coding::{CodedScheme, SchemeKind};
 use crate::config::json::Json;
+use crate::scenario::{GroupSpec, Topology};
 use crate::sim::straggler::StragglerModel;
 use crate::{Error, Result};
 use std::sync::Arc;
 
-/// The coding-scheme selection plus `(n1,k1)×(n2,k2)` grid parameters.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// The coding-scheme selection plus the expanded scenario topology.
+/// `n1/k1/n2/k2` hold the uniform grid view (for heterogeneous
+/// topologies: the first group's values, retained for the flat-scheme
+/// construction paths and display); `topology` is the authoritative
+/// per-group expansion every layer consumes.
+#[derive(Clone, Debug, PartialEq)]
 pub struct CodeConfig {
     /// Which scheme the cluster runs.
     pub scheme: SchemeKind,
-    /// Workers per group.
+    /// Workers per group (uniform view).
     pub n1: usize,
-    /// Inner code dimension.
+    /// Inner code dimension (uniform view).
     pub k1: usize,
     /// Number of groups.
     pub n2: usize,
     /// Outer code dimension.
     pub k2: usize,
+    /// The expanded scenario: per-group `(n1_g, k1_g)` + straggler
+    /// profiles. Uniform configs expand to identical groups.
+    pub topology: Topology,
+}
+
+/// Parse an optional per-group exponential-rate override (`mu1`/`mu2`),
+/// falling back to the given default model.
+fn group_rate(
+    v: &Json,
+    key: &str,
+    ctx: &str,
+    default: StragglerModel,
+) -> Result<StragglerModel> {
+    match v.get(key) {
+        Some(m) => {
+            let mu = m.as_f64().ok_or_else(|| {
+                Error::Config(format!("{ctx}: field '{key}' must be a number"))
+            })?;
+            if !mu.is_finite() || mu <= 0.0 {
+                return Err(Error::Config(format!(
+                    "{ctx}: {key} must be a positive finite rate"
+                )));
+            }
+            Ok(StragglerModel::exp(mu))
+        }
+        None => Ok(default),
+    }
+}
+
+/// Parse one entry of the `groups` array.
+fn group_from_json(v: &Json, index: usize, defaults: &StragglerConfig) -> Result<GroupSpec> {
+    let ctx = format!("code.groups[{index}]");
+    let n1 = v.req_usize("n1", &ctx)?;
+    let k1 = v.req_usize("k1", &ctx)?;
+    let worker = group_rate(v, "mu1", &ctx, defaults.worker)?;
+    let link = group_rate(v, "mu2", &ctx, defaults.link)?;
+    let scale = match v.get("scale") {
+        Some(s) => {
+            let m = s.as_f64().ok_or_else(|| {
+                Error::Config(format!("{ctx}: field 'scale' must be a number"))
+            })?;
+            if !m.is_finite() || m <= 0.0 {
+                return Err(Error::Config(format!(
+                    "{ctx}: scale must be a positive slowdown multiplier, got {m}"
+                )));
+            }
+            Some(m)
+        }
+        None => None,
+    };
+    let dead_workers = match v.get("dead_workers") {
+        Some(ds) => ds
+            .as_array()
+            .ok_or_else(|| {
+                Error::Config(format!("{ctx}: field 'dead_workers' must be an array"))
+            })?
+            .iter()
+            .map(|d| {
+                d.as_usize().ok_or_else(|| {
+                    Error::Config(format!(
+                        "{ctx}: dead_workers entries must be non-negative integers"
+                    ))
+                })
+            })
+            .collect::<Result<Vec<usize>>>()?,
+        None => Vec::new(),
+    };
+    Ok(GroupSpec {
+        n1,
+        k1,
+        worker,
+        link,
+        scale,
+        dead_workers,
+    })
 }
 
 impl CodeConfig {
-    /// Parse from the `"code"` object.
-    pub fn from_json(v: &Json) -> Result<Self> {
+    /// Parse from the `"code"` object, using the already-parsed global
+    /// straggler section as the default per-group profile.
+    pub fn from_json(v: &Json, straggler: &StragglerConfig) -> Result<Self> {
         let scheme = match v.get("scheme").and_then(|s| s.as_str()) {
             Some(name) => SchemeKind::parse(name)?,
             None => SchemeKind::Hierarchical,
         };
-        let c = Self {
-            scheme,
-            n1: v.req_usize("n1", "code")?,
-            k1: v.req_usize("k1", "code")?,
-            n2: v.req_usize("n2", "code")?,
-            k2: v.req_usize("k2", "code")?,
+        let c = match v.get("groups") {
+            Some(gs) => {
+                // The groups form is the scenario layer of the scheme
+                // whose decode is per-group. The baselines would accept
+                // the per-group profiles at parse time and then drop
+                // them at launch (their topologies carry no profiles) —
+                // exactly the sim/live drift this layer exists to kill,
+                // so reject it outright.
+                if scheme != SchemeKind::Hierarchical {
+                    return Err(Error::Config(format!(
+                        "code: 'groups' requires the hierarchical scheme \
+                         (got '{scheme}'); use the uniform n1/k1/n2/k2 form"
+                    )));
+                }
+                let arr = gs.as_array().ok_or_else(|| {
+                    Error::Config("code: field 'groups' must be an array".into())
+                })?;
+                if arr.is_empty() {
+                    return Err(Error::Config("code: 'groups' must be non-empty".into()));
+                }
+                for dup in ["n1", "k1"] {
+                    if v.get(dup).is_some() {
+                        return Err(Error::Config(format!(
+                            "code: '{dup}' conflicts with 'groups' (uniform sugar and \
+                             per-group specs are mutually exclusive)"
+                        )));
+                    }
+                }
+                let k2 = v.req_usize("k2", "code")?;
+                if v.get("n2").is_some() {
+                    // A present n2 must be well-formed and agree with
+                    // the group count (same strictness as 'seed').
+                    let n2 = v.req_usize("n2", "code")?;
+                    if n2 != arr.len() {
+                        return Err(Error::Config(format!(
+                            "code: n2 = {n2} contradicts the {} entries of 'groups'",
+                            arr.len()
+                        )));
+                    }
+                }
+                let groups = arr
+                    .iter()
+                    .enumerate()
+                    .map(|(i, g)| group_from_json(g, i, straggler))
+                    .collect::<Result<Vec<GroupSpec>>>()?;
+                let topology = Topology { groups, k2 };
+                Self {
+                    scheme,
+                    n1: topology.groups[0].n1,
+                    k1: topology.groups[0].k1,
+                    n2: topology.n2(),
+                    k2,
+                    topology,
+                }
+            }
+            None => {
+                let (n1, k1) = (v.req_usize("n1", "code")?, v.req_usize("k1", "code")?);
+                let (n2, k2) = (v.req_usize("n2", "code")?, v.req_usize("k2", "code")?);
+                Self::uniform_with_profile(scheme, n1, k1, n2, k2, straggler)
+            }
         };
         c.validate()?;
         Ok(c)
     }
 
+    /// The uniform `(n1,k1)×(n2,k2)` sugar, expanded into identical
+    /// per-group specs carrying the global straggler profile.
+    pub fn uniform_with_profile(
+        scheme: SchemeKind,
+        n1: usize,
+        k1: usize,
+        n2: usize,
+        k2: usize,
+        straggler: &StragglerConfig,
+    ) -> Self {
+        let topology = Topology {
+            groups: (0..n2)
+                .map(|_| GroupSpec {
+                    n1,
+                    k1,
+                    worker: straggler.worker,
+                    link: straggler.link,
+                    scale: None,
+                    dead_workers: Vec::new(),
+                })
+                .collect(),
+            k2,
+        };
+        Self {
+            scheme,
+            n1,
+            k1,
+            n2,
+            k2,
+            topology,
+        }
+    }
+
     /// Validate the parameters for the selected scheme.
     pub fn validate(&self) -> Result<()> {
+        self.topology.validate()?;
+        if self.scheme != SchemeKind::Hierarchical && !self.topology.is_uniform_code() {
+            return Err(Error::InvalidParams(format!(
+                "{}: heterogeneous 'groups' require the hierarchical scheme",
+                self.scheme
+            )));
+        }
         let (n, k) = (self.n1 * self.n2, self.k1 * self.k2);
         match self.scheme {
-            SchemeKind::Hierarchical | SchemeKind::Product => self.to_params().validate(),
+            SchemeKind::Hierarchical => self.topology.hierarchical_params().validate(),
+            SchemeKind::Product => self.to_params().validate(),
             SchemeKind::Mds | SchemeKind::Polynomial => {
                 if k == 0 || k > n {
                     return Err(Error::InvalidParams(format!(
@@ -85,9 +295,10 @@ impl CodeConfig {
         }
     }
 
-    /// Build the configured scheme.
+    /// Build the configured scheme (serial decoders; the cluster path
+    /// goes through [`ClusterConfig::build_scheme`] to attach a pool).
     pub fn build(&self) -> Result<Arc<dyn CodedScheme>> {
-        build_scheme(self.scheme, self.n1, self.k1, self.n2, self.k2)
+        crate::coding::build_scheme_topology(self.scheme, &self.topology, 1)
     }
 
     /// Convert to [`HierarchicalParams`] (homogeneous) — meaningful for
@@ -269,14 +480,12 @@ pub struct ClusterConfig {
 impl ClusterConfig {
     /// Build the configured scheme with `runtime.decode_threads` wired
     /// into its decode pool — the one construction path the live
-    /// cluster uses, so the config field actually drives the decoders.
+    /// cluster uses, so the config field actually drives the decoders
+    /// and the expanded [`Topology`] drives the spawn layout.
     pub fn build_scheme(&self) -> Result<Arc<dyn CodedScheme>> {
-        crate::coding::build_scheme_with(
+        crate::coding::build_scheme_topology(
             self.code.scheme,
-            self.code.n1,
-            self.code.k1,
-            self.code.n2,
-            self.code.k2,
+            &self.code.topology,
             self.runtime.decode_threads,
         )
     }
@@ -284,11 +493,13 @@ impl ClusterConfig {
     /// Parse a full config document.
     pub fn from_json_text(text: &str) -> Result<Self> {
         let v = Json::parse(text)?;
-        let code = CodeConfig::from_json(v.req("code", "config")?)?;
+        // Straggler first: its models are the per-group defaults the
+        // code section's `groups` entries inherit.
         let straggler = match v.get("straggler") {
             Some(s) => StragglerConfig::from_json(s)?,
             None => StragglerConfig::default(),
         };
+        let code = CodeConfig::from_json(v.req("code", "config")?, &straggler)?;
         let runtime = match v.get("runtime") {
             Some(r) => RuntimeConfig::from_json(r)?,
             None => RuntimeConfig::default(),
@@ -297,7 +508,17 @@ impl ClusterConfig {
             Some(b) => BatchConfig::from_json(b)?,
             None => BatchConfig::default(),
         };
-        let seed = v.get("seed").and_then(|s| s.as_usize()).unwrap_or(42) as u64;
+        let seed = match v.get("seed") {
+            // A present-but-malformed seed is a config mistake, not a
+            // request for the default: reject it instead of silently
+            // running an unexpected RNG stream.
+            Some(s) => s.as_usize().ok_or_else(|| {
+                Error::Config(
+                    "config: field 'seed' must be a non-negative integer".into(),
+                )
+            })? as u64,
+            None => 42,
+        };
         Ok(Self {
             code,
             straggler,
@@ -323,18 +544,20 @@ impl ClusterConfig {
 
     /// A small test/demo config (no PJRT required), hierarchical.
     pub fn demo(n1: usize, k1: usize, n2: usize, k2: usize) -> Self {
+        let straggler = StragglerConfig {
+            scale: 0.001,
+            ..StragglerConfig::default()
+        };
         Self {
-            code: CodeConfig {
-                scheme: SchemeKind::Hierarchical,
+            code: CodeConfig::uniform_with_profile(
+                SchemeKind::Hierarchical,
                 n1,
                 k1,
                 n2,
                 k2,
-            },
-            straggler: StragglerConfig {
-                scale: 0.001,
-                ..StragglerConfig::default()
-            },
+                &straggler,
+            ),
+            straggler,
             runtime: RuntimeConfig {
                 use_pjrt: false,
                 decode_threads: 2,
@@ -363,22 +586,137 @@ mod tests {
     #[test]
     fn parses_full_config() {
         let c = ClusterConfig::from_json_text(FULL).unwrap();
+        assert_eq!(c.code.scheme, SchemeKind::Hierarchical);
         assert_eq!(
-            c.code,
-            CodeConfig {
-                scheme: SchemeKind::Hierarchical,
-                n1: 4,
-                k1: 2,
-                n2: 3,
-                k2: 2
-            }
+            (c.code.n1, c.code.k1, c.code.n2, c.code.k2),
+            (4, 2, 3, 2)
         );
+        // The uniform sugar expands to identical per-group specs
+        // carrying the global straggler profile.
+        assert_eq!(c.code.topology.n2(), 3);
+        assert!(c.code.topology.is_uniform_code());
+        for g in &c.code.topology.groups {
+            assert_eq!((g.n1, g.k1), (4, 2));
+            assert_eq!(g.worker, c.straggler.worker);
+            assert_eq!(g.link, c.straggler.link);
+            assert!(g.dead_workers.is_empty());
+        }
         assert_eq!(c.runtime.decode_threads, 3);
         assert!(!c.runtime.use_pjrt);
         assert_eq!(c.batching.max_batch, 4);
         assert_eq!(c.seed, 7);
         assert!(c.straggler.enabled);
         assert_eq!(c.straggler.scale, 0.02);
+    }
+
+    #[test]
+    fn groups_array_parses_heterogeneous_topology() {
+        let c = ClusterConfig::from_json_text(
+            r#"{"code": {"scheme": "hierarchical", "k2": 2,
+                         "groups": [
+                           {"n1": 4, "k1": 2},
+                           {"n1": 6, "k1": 3, "mu1": 2.5, "scale": 2.0},
+                           {"n1": 5, "k1": 2, "mu2": 4.0, "dead_workers": [4]}
+                         ]},
+                "straggler": {"mu1": 10.0, "mu2": 1.0}}"#,
+        )
+        .unwrap();
+        let t = &c.code.topology;
+        assert_eq!(t.n2(), 3);
+        assert_eq!(t.k2, 2);
+        assert_eq!(t.group_sizes(), vec![4, 6, 5]);
+        assert!(!t.is_uniform_code());
+        // Group 0 inherits the global profile.
+        assert_eq!(t.groups[0].worker, StragglerModel::exp(10.0));
+        assert_eq!(t.groups[0].link, StragglerModel::exp(1.0));
+        // Group 1 overrides mu1 and carries a 2x slowdown multiplier.
+        assert_eq!(t.groups[1].worker, StragglerModel::exp(2.5));
+        assert_eq!(t.groups[1].scale, Some(2.0));
+        // Group 2 overrides mu2 and bakes in a dead worker.
+        assert_eq!(t.groups[2].link, StragglerModel::exp(4.0));
+        assert_eq!(t.groups[2].dead_workers, vec![4]);
+        // The built scheme spans the same topology.
+        let scheme = c.build_scheme().unwrap();
+        assert_eq!(scheme.num_workers(), 15);
+        assert_eq!(scheme.topology(), *t);
+    }
+
+    #[test]
+    fn groups_array_rejects_malformed_inputs() {
+        // The groups form needs the hierarchical scheme — even uniform
+        // groups, whose per-group profiles the baselines would drop.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"scheme": "mds", "k2": 1,
+                         "groups": [{"n1": 4, "k1": 2}, {"n1": 6, "k1": 3}]}}"#,
+        )
+        .is_err());
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"scheme": "product", "k2": 1,
+                         "groups": [{"n1": 4, "k1": 2}, {"n1": 4, "k1": 2}]}}"#,
+        )
+        .is_err());
+        // n2 contradicting the group count.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"k2": 1, "n2": 3,
+                         "groups": [{"n1": 4, "k1": 2}, {"n1": 4, "k1": 2}]}}"#,
+        )
+        .is_err());
+        // A malformed n2 next to groups is rejected, not ignored.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"k2": 1, "n2": 2.5,
+                         "groups": [{"n1": 4, "k1": 2}, {"n1": 4, "k1": 2}]}}"#,
+        )
+        .is_err());
+        // Uniform sugar and groups are mutually exclusive.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"n1": 4, "k1": 2, "k2": 1,
+                         "groups": [{"n1": 4, "k1": 2}]}}"#,
+        )
+        .is_err());
+        // k1 > n1 inside a group.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"k2": 1, "groups": [{"n1": 2, "k1": 3}]}}"#,
+        )
+        .is_err());
+        // Dead worker index out of the group's range.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"k2": 1, "groups": [{"n1": 3, "k1": 2, "dead_workers": [3]}]}}"#,
+        )
+        .is_err());
+        // Non-positive per-group rate.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"k2": 1, "groups": [{"n1": 3, "k1": 2, "mu1": 0}]}}"#,
+        )
+        .is_err());
+        // Non-positive slowdown multiplier.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"k2": 1, "groups": [{"n1": 3, "k1": 2, "scale": 0}]}}"#,
+        )
+        .is_err());
+        // Empty groups array.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"k2": 1, "groups": []}}"#,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn malformed_seed_rejected_instead_of_defaulted() {
+        for bad in [r#""42""#, "4.5", "true", "-1", "null"] {
+            let text = format!(
+                r#"{{"code": {{"n1": 3, "k1": 2, "n2": 3, "k2": 2}}, "seed": {bad}}}"#
+            );
+            assert!(
+                ClusterConfig::from_json_text(&text).is_err(),
+                "seed {bad} must be rejected, not silently defaulted"
+            );
+        }
+        // A valid integer seed still parses.
+        let c = ClusterConfig::from_json_text(
+            r#"{"code": {"n1": 3, "k1": 2, "n2": 3, "k2": 2}, "seed": 9}"#,
+        )
+        .unwrap();
+        assert_eq!(c.seed, 9);
     }
 
     #[test]

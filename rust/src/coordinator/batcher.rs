@@ -293,6 +293,87 @@ mod tests {
         assert_eq!(effective_max_batch(16, Some(&[1, 4, 8])), 8);
         assert_eq!(effective_max_batch(4, Some(&[1, 4, 8])), 4);
         assert_eq!(effective_max_batch(16, None), 16);
+        // Exact cap match.
+        assert_eq!(effective_max_batch(8, Some(&[1, 4, 8])), 8);
+        // Degenerate width set still yields a usable batch of 1.
+        assert_eq!(effective_max_batch(16, Some(&[])), 1);
+        // A width set whose max is below every batch still clamps to it.
+        assert_eq!(effective_max_batch(100, Some(&[2])), 2);
+    }
+
+    #[test]
+    fn pad_width_selection_edge_cases() {
+        use crate::coordinator::backend::pick_batch_width;
+        // Exact match: no padding.
+        assert_eq!(pick_batch_width(Some(&[1, 4, 8]), 4).unwrap(), 4);
+        assert_eq!(pick_batch_width(Some(&[1, 4, 8]), 1).unwrap(), 1);
+        // Smallest larger supported width.
+        assert_eq!(pick_batch_width(Some(&[1, 4, 8]), 2).unwrap(), 4);
+        assert_eq!(pick_batch_width(Some(&[1, 4, 8]), 3).unwrap(), 4);
+        assert_eq!(pick_batch_width(Some(&[1, 4, 8]), 5).unwrap(), 8);
+        // No supported width >= b: a Runtime error naming the problem.
+        assert!(pick_batch_width(Some(&[1, 4, 8]), 9).is_err());
+        assert!(pick_batch_width(Some(&[]), 1).is_err());
+        // Native backend serves any width verbatim.
+        assert_eq!(pick_batch_width(None, 17).unwrap(), 17);
+    }
+
+    #[test]
+    fn batcher_pads_single_request_to_smallest_supported_width() {
+        // Artifact set without width 1: a lone request rides a width-4
+        // job whose pad columns are zero.
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let _h = spawn(
+            2,
+            BatchConfig {
+                max_batch: 4,
+                max_wait_ms: 10.0,
+            },
+            Some(vec![4, 8]),
+            Arc::new(Metrics::new()),
+            req_rx,
+            master_tx,
+        );
+        let (r, _rx) = mk_request(2, 9.0);
+        req_tx.send(r).unwrap();
+        let (job, replies) = recv_batch(&master_rx);
+        assert_eq!(job.x.shape(), (2, 4));
+        assert_eq!(replies.len(), 1);
+        assert_eq!(job.x[(0, 0)], 9.0);
+        for pad in 1..4 {
+            assert_eq!(job.x[(0, pad)], 0.0, "pad column {pad} must be zero");
+        }
+    }
+
+    #[test]
+    fn batcher_flushes_at_effective_cap_below_configured_max() {
+        // max_batch 5 but the widest artifact is 2: batches must flush
+        // at 2, never exceeding what the backend can serve.
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let _h = spawn(
+            1,
+            BatchConfig {
+                max_batch: 5,
+                max_wait_ms: 10_000.0,
+            },
+            Some(vec![1, 2]),
+            Arc::new(Metrics::new()),
+            req_rx,
+            master_tx,
+        );
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            let (r, _rx) = mk_request(1, v);
+            req_tx.send(r).unwrap();
+        }
+        let (job1, replies1) = recv_batch(&master_rx);
+        assert_eq!(job1.x.shape(), (1, 2));
+        assert_eq!(replies1.len(), 2);
+        let (job2, replies2) = recv_batch(&master_rx);
+        assert_eq!(job2.x.shape(), (1, 2));
+        assert_eq!(replies2.len(), 2);
+        assert_eq!(job2.x[(0, 0)], 3.0, "order preserved across flushes");
     }
 
     #[test]

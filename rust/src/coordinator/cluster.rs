@@ -130,34 +130,65 @@ impl Cluster {
             }
         }
 
-        let topology = scheme.topology();
-        let metrics = Arc::new(Metrics::new());
+        // The scenario layer: per-group worker counts, recovery
+        // thresholds, straggler profiles and dead-worker sets all come
+        // from the scheme's Topology — the same value the simulator
+        // computes E[T] over, so live cluster and analysis can't drift.
+        // Schemes that only know code structure (the flat/grid
+        // baselines return a default-profile topology) get the global
+        // straggler section overlaid onto their group layout.
+        let topology = {
+            let t = scheme.topology();
+            if t == config.code.topology {
+                t
+            } else {
+                crate::scenario::Topology {
+                    k2: t.k2,
+                    groups: t
+                        .groups
+                        .into_iter()
+                        .map(|g| crate::scenario::GroupSpec {
+                            worker: config.straggler.worker,
+                            link: config.straggler.link,
+                            ..g
+                        })
+                        .collect(),
+                }
+            }
+        };
+        debug_assert_eq!(topology.total_workers(), scheme.num_workers());
+        let metrics = Arc::new(Metrics::with_groups(topology.n2()));
         let mut seed_rng = Rng::new(config.seed);
         let (master_tx, master_rx) = mpsc::channel::<MasterMsg>();
         let mut threads = Vec::new();
-        let mut submaster_txs = Vec::with_capacity(topology.len());
+        let mut submaster_txs = Vec::with_capacity(topology.n2());
 
         let mut offset = 0usize;
-        for (g, &group_size) in topology.iter().enumerate() {
+        for (g, spec) in topology.groups.iter().enumerate() {
             let (sub_tx, sub_rx) = mpsc::channel::<SubmasterMsg>();
             let cancel = Arc::new(crate::coordinator::messages::CancelSet::new());
-            // Workers of this group.
-            let mut worker_txs = Vec::with_capacity(group_size);
-            for j in 0..group_size {
+            // Global scale renders model time as wall-clock; the
+            // group's slowdown multiplier is model (the sim applies it
+            // too), so they compose.
+            let group_scale = config.straggler.scale * spec.slowdown();
+            // Workers of this group, with the group's straggler profile.
+            let mut worker_txs = Vec::with_capacity(spec.n1);
+            for j in 0..spec.n1 {
                 let shard = &shards[offset + j];
                 let (w_tx, w_rx) = mpsc::channel::<WorkerCmd>();
                 let delay = WorkerDelay {
-                    model: config.straggler.worker,
-                    scale: config.straggler.scale,
+                    model: spec.worker,
+                    scale: group_scale,
                     enabled: config.straggler.enabled,
                 };
+                let dead = faults.worker_dead(g, j) || spec.dead_workers.contains(&j);
                 threads.push(worker::spawn(
                     g,
                     j,
                     WorkerShard::new(shard)?,
                     backend.clone(),
                     delay,
-                    faults.worker_dead(g, j),
+                    dead,
                     Arc::clone(&cancel),
                     seed_rng.split(),
                     w_rx,
@@ -166,8 +197,8 @@ impl Cluster {
                 worker_txs.push(w_tx);
             }
             let link = LinkDelay {
-                model: config.straggler.link,
-                scale: config.straggler.scale,
+                model: spec.link,
+                scale: group_scale,
                 enabled: config.straggler.enabled,
             };
             threads.push(submaster::spawn(
@@ -185,7 +216,7 @@ impl Cluster {
                 master_tx.clone(),
             ));
             submaster_txs.push(sub_tx);
-            offset += group_size;
+            offset += spec.n1;
         }
         threads.push(master::spawn(
             Arc::clone(&scheme),
@@ -208,7 +239,7 @@ impl Cluster {
             "launched {} ({} workers in {} groups) over {}x{} matrix, backend={}, {} threads",
             scheme.name(),
             scheme.num_workers(),
-            topology.len(),
+            topology.n2(),
             m,
             d,
             if config.runtime.use_pjrt { "pjrt" } else { "native" },

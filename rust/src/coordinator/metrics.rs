@@ -5,6 +5,18 @@ use crate::util::stats::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// Per-group counters: arrivals and decode activity of one group
+/// (rack), so heterogeneous topologies are observable group by group.
+#[derive(Debug, Default)]
+struct GroupCounters {
+    /// Worker products that arrived at this group's submaster.
+    products: AtomicU64,
+    /// Intra-group decodes this group performed.
+    decodes: AtomicU64,
+    /// Group-decode session latency.
+    decode_latency: Mutex<Histogram>,
+}
+
 /// Shared metrics sink. Counters are lock-free; histograms take a
 /// short mutex (recorded once per job, not per message).
 #[derive(Debug, Default)]
@@ -31,12 +43,24 @@ pub struct Metrics {
     latency: Mutex<Histogram>,
     /// Decode-only latency at the master.
     decode_latency: Mutex<Histogram>,
+    /// Per-group counters (empty when the group count is unknown —
+    /// unit tests driving a submaster directly).
+    groups: Vec<GroupCounters>,
 }
 
 impl Metrics {
-    /// Fresh metrics.
+    /// Fresh metrics with no per-group breakdown.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Fresh metrics tracking `n_groups` groups — what the cluster
+    /// creates so heterogeneous runs are observable per group.
+    pub fn with_groups(n_groups: usize) -> Self {
+        Self {
+            groups: (0..n_groups).map(|_| GroupCounters::default()).collect(),
+            ..Self::default()
+        }
     }
 
     /// Record one end-to-end request latency.
@@ -52,10 +76,42 @@ impl Metrics {
             .record(seconds);
     }
 
+    /// Count one worker product arriving at `group`'s submaster
+    /// (no-op for out-of-range groups — untracked contexts).
+    pub fn record_group_product(&self, group: usize) {
+        if let Some(g) = self.groups.get(group) {
+            g.products.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one intra-group decode of `group` with its session
+    /// latency in seconds.
+    pub fn record_group_decode(&self, group: usize, seconds: f64) {
+        if let Some(g) = self.groups.get(group) {
+            g.decodes.fetch_add(1, Ordering::Relaxed);
+            g.decode_latency
+                .lock()
+                .expect("metrics poisoned")
+                .record(seconds);
+        }
+    }
+
     /// Snapshot for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latency.lock().expect("metrics poisoned");
         let dec = self.decode_latency.lock().expect("metrics poisoned");
+        let per_group = self
+            .groups
+            .iter()
+            .map(|g| {
+                let glat = g.decode_latency.lock().expect("metrics poisoned");
+                GroupMetricsSnapshot {
+                    products: g.products.load(Ordering::Relaxed),
+                    decodes: g.decodes.load(Ordering::Relaxed),
+                    decode_mean: glat.mean(),
+                }
+            })
+            .collect();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             jobs: self.jobs.load(Ordering::Relaxed),
@@ -70,6 +126,7 @@ impl Metrics {
             latency_p50: lat.quantile(0.5),
             latency_p99: lat.quantile(0.99),
             decode_mean: dec.mean(),
+            per_group,
         }
     }
 
@@ -82,6 +139,17 @@ impl Metrics {
     pub fn add(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
     }
+}
+
+/// Point-in-time view of one group's counters.
+#[derive(Clone, Debug, Default)]
+pub struct GroupMetricsSnapshot {
+    /// Worker products that arrived at this group's submaster.
+    pub products: u64,
+    /// Intra-group decodes this group performed.
+    pub decodes: u64,
+    /// Mean group-decode session latency (s).
+    pub decode_mean: f64,
 }
 
 /// Point-in-time view of [`Metrics`].
@@ -113,6 +181,9 @@ pub struct MetricsSnapshot {
     pub latency_p99: f64,
     /// Mean master decode latency (s).
     pub decode_mean: f64,
+    /// Per-group arrival / decode breakdown, in group-index order
+    /// (empty when the metrics were created without a group count).
+    pub per_group: Vec<GroupMetricsSnapshot>,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -133,13 +204,45 @@ impl std::fmt::Display for MetricsSnapshot {
             self.latency_p50 * 1e3,
             self.latency_p99 * 1e3
         )?;
-        write!(f, "decode latency:  mean {:.3}ms", self.decode_mean * 1e3)
+        write!(f, "decode latency:  mean {:.3}ms", self.decode_mean * 1e3)?;
+        for (g, gm) in self.per_group.iter().enumerate() {
+            write!(
+                f,
+                "\ngroup {g}:         {} products, {} decodes, decode mean {:.3}ms",
+                gm.products,
+                gm.decodes,
+                gm.decode_mean * 1e3
+            )?;
+        }
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn per_group_counters_tracked_and_out_of_range_ignored() {
+        let m = Metrics::with_groups(2);
+        m.record_group_product(0);
+        m.record_group_product(0);
+        m.record_group_product(1);
+        m.record_group_decode(1, 0.004);
+        // Out-of-range group index is a no-op, never a panic.
+        m.record_group_product(9);
+        m.record_group_decode(9, 1.0);
+        let s = m.snapshot();
+        assert_eq!(s.per_group.len(), 2);
+        assert_eq!(s.per_group[0].products, 2);
+        assert_eq!(s.per_group[0].decodes, 0);
+        assert_eq!(s.per_group[1].products, 1);
+        assert_eq!(s.per_group[1].decodes, 1);
+        assert!((s.per_group[1].decode_mean - 0.004).abs() < 1e-12);
+        assert!(format!("{s}").contains("group 1:"));
+        // Metrics::new() has no per-group breakdown.
+        assert!(Metrics::new().snapshot().per_group.is_empty());
+    }
 
     #[test]
     fn counters_and_snapshot() {

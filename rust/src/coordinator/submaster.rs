@@ -109,6 +109,7 @@ pub fn spawn(
                     }
                     SubmasterMsg::Done(done) => {
                         Metrics::inc(&metrics.worker_products);
+                        metrics.record_group_product(group);
                         let Some(state) = jobs.get_mut(&done.id) else {
                             // Job unknown (already garbage-collected).
                             Metrics::inc(&metrics.late_products);
@@ -151,6 +152,10 @@ pub fn spawn(
                                         match session.finish() {
                                             Ok(out) => {
                                                 Metrics::inc(&metrics.group_decodes);
+                                                metrics.record_group_decode(
+                                                    group,
+                                                    out.seconds,
+                                                );
                                                 Metrics::add(
                                                     &metrics.decode_flops,
                                                     out.flops,

@@ -7,10 +7,14 @@
 //! | E3 | Fig. 7 — `E[T_exec]` vs `α`, four schemes     | [`fig7::generate`] |
 //! | E4 | Table I — `T_comp` / `T_dec` per scheme       | [`table1::generate`] |
 //! | E6 | §IV decode-cost scaling in `p` (`k1 = k2^p`)  | [`decode_scaling::generate`] |
+//! | E7 | Allocation — uniform vs optimized `k1_g` E[T] | [`allocation::generate`] |
 //!
 //! Each generator returns structured rows and renders CSV (stdout) so
 //! series can be re-plotted; EXPERIMENTS.md quotes these outputs.
+//! E7 goes beyond the paper: it sweeps straggler skew and reports what
+//! the `sim::allocate` optimizer buys over the uniform assignment.
 
+pub mod allocation;
 pub mod decode_scaling;
 pub mod fig6;
 pub mod fig7;

@@ -19,9 +19,14 @@
 //!   shards across `config.runtime.decode_threads` threads with
 //!   bit-deterministic results (GEMM offers the same fan-out via
 //!   `linalg::ops::matmul_with` for pool-bearing callers).
+//! * [`scenario`] — the scenario layer: [`scenario::Topology`] /
+//!   [`scenario::GroupSpec`] describe heterogeneous per-group worker
+//!   counts, recovery thresholds and straggler profiles; config,
+//!   coding, coordinator and sim all consume the same value.
 //! * [`sim`] — a discrete-event simulator of the hierarchical cluster,
 //!   the auxiliary Markov chain of Lemma 1 (lower bound), the Lemma 2 /
-//!   Theorem 2 upper bounds, and Monte-Carlo latency estimation.
+//!   Theorem 2 upper bounds, Monte-Carlo latency estimation, and the
+//!   load-allocation optimizer (`sim::allocate`).
 //! * [`coordinator`] — the runnable system: threaded master / submaster
 //!   / worker topology with batching, routing, straggler handling and
 //!   two-level parallel decoding on the request path.
@@ -41,6 +46,7 @@ pub mod figures;
 pub mod linalg;
 pub mod parallel;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod util;
 

@@ -1,0 +1,345 @@
+//! The scenario layer: one heterogeneous-topology description shared by
+//! every layer of the system.
+//!
+//! A [`Topology`] is the full description of a two-tier deployment as a
+//! *scenario*: per group (rack) a [`GroupSpec`] carrying the inner code
+//! parameters `(n1_g, k1_g)`, that group's straggler profile (worker
+//! completion model, uplink model, optional wall-clock scale override)
+//! and its dead-worker set, plus the outer recovery threshold `k2`.
+//!
+//! The same `Topology` value flows through four layers:
+//!
+//! * `config` parses a `groups: [...]` array (or expands the uniform
+//!   `(n1,k1,n2,k2)` sugar) into one;
+//! * `coding` builds per-group generator matrices and decoder sessions
+//!   sized by `k1_g` from it ([`crate::coding::CodedScheme::topology`]
+//!   returns it);
+//! * `coordinator` spawns `n1_g` workers per group with that group's
+//!   straggler profile and thresholds each submaster at `k1_g`;
+//! * `sim` computes `E[T]` bounds and Monte-Carlo estimates over it
+//!   (`sim::montecarlo::expected_latency_topology`,
+//!   `sim::bounds::topology_upper`) and `sim::allocate` searches the
+//!   `k1_g` assignment minimizing the upper bound.
+//!
+//! One scenario type, four layers — the simulated cluster and the live
+//! cluster cannot drift apart.
+
+use crate::coding::hierarchical::HierarchicalParams;
+use crate::sim::straggler::StragglerModel;
+use crate::sim::SimParams;
+use crate::{Error, Result};
+
+/// The paper's default worker completion rate `µ1`.
+pub const DEFAULT_MU1: f64 = 10.0;
+/// The paper's default group→master (ToR) link rate `µ2`.
+pub const DEFAULT_MU2: f64 = 1.0;
+
+/// One group (rack) of a [`Topology`]: inner code parameters plus the
+/// group's straggler profile.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupSpec {
+    /// Workers in this group (`n1_g`).
+    pub n1: usize,
+    /// Inner recovery threshold (`k1_g`): how many of the group's
+    /// workers must respond before the group decodes.
+    pub k1: usize,
+    /// Worker completion-time model (the paper's `Exp(µ1)`).
+    pub worker: StragglerModel,
+    /// Group→master link-delay model (the paper's `Exp(µ2)`).
+    pub link: StragglerModel,
+    /// Optional relative slowdown multiplier on this group's worker
+    /// and link delays (`None` = 1). Honored by **both** the live
+    /// cluster (its wall-clock scale is the global scale times this)
+    /// and every sim/analysis path (samples and exponential rates are
+    /// scaled accordingly) — per-group speed is model, not rendering.
+    pub scale: Option<f64>,
+    /// In-group worker indices that never produce results (failure
+    /// domains baked into the scenario, merged with any ad-hoc
+    /// `FaultConfig` at launch).
+    pub dead_workers: Vec<usize>,
+}
+
+impl GroupSpec {
+    /// A group with the paper's default straggler profile.
+    pub fn new(n1: usize, k1: usize) -> Self {
+        Self {
+            n1,
+            k1,
+            worker: StragglerModel::exp(DEFAULT_MU1),
+            link: StragglerModel::exp(DEFAULT_MU2),
+            scale: None,
+            dead_workers: Vec::new(),
+        }
+    }
+
+    /// Workers of this group that can actually respond.
+    pub fn alive(&self) -> usize {
+        let dead = (0..self.n1)
+            .filter(|j| self.dead_workers.contains(j))
+            .count();
+        self.n1 - dead
+    }
+
+    /// Whether this group can ever reach its recovery threshold.
+    pub fn can_complete(&self) -> bool {
+        self.alive() >= self.k1
+    }
+
+    /// The group's delay multiplier (`scale`, defaulting to 1).
+    pub fn slowdown(&self) -> f64 {
+        self.scale.unwrap_or(1.0)
+    }
+
+    /// Exponential rates `(µ1, µ2)` when both models are the paper's
+    /// exponentials (the analytic §III machinery needs them).
+    pub fn exponential_rates(&self) -> Option<(f64, f64)> {
+        match (self.worker, self.link) {
+            (
+                StragglerModel::Exponential { mu: mu1 },
+                StragglerModel::Exponential { mu: mu2 },
+            ) => Some((mu1, mu2)),
+            _ => None,
+        }
+    }
+}
+
+/// A full two-tier scenario: the per-group specs plus the outer
+/// recovery threshold `k2`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    /// Per-group specs, in flat worker-index order.
+    pub groups: Vec<GroupSpec>,
+    /// Outer recovery threshold: how many groups must deliver.
+    pub k2: usize,
+}
+
+impl Topology {
+    /// Uniform `(n1,k1)×(n2,k2)` topology with the paper's default
+    /// straggler profile — what the config sugar expands to.
+    pub fn homogeneous(n1: usize, k1: usize, n2: usize, k2: usize) -> Self {
+        Self {
+            groups: (0..n2).map(|_| GroupSpec::new(n1, k1)).collect(),
+            k2,
+        }
+    }
+
+    /// Uniform code parameters with explicit straggler models on every
+    /// group (the event engine's wrapper path).
+    pub fn homogeneous_with_models(
+        n1: usize,
+        k1: usize,
+        n2: usize,
+        k2: usize,
+        worker: StragglerModel,
+        link: StragglerModel,
+    ) -> Self {
+        Self {
+            groups: (0..n2)
+                .map(|_| GroupSpec {
+                    worker,
+                    link,
+                    ..GroupSpec::new(n1, k1)
+                })
+                .collect(),
+            k2,
+        }
+    }
+
+    /// The relay topology of a flat scheme: one group holding all `n`
+    /// workers with recovery threshold `k`.
+    pub fn single_group(n: usize, k: usize) -> Self {
+        Self {
+            groups: vec![GroupSpec::new(n, k)],
+            k2: 1,
+        }
+    }
+
+    /// Number of groups (`n2`).
+    pub fn n2(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Total workers `Σ_g n1_g`.
+    pub fn total_workers(&self) -> usize {
+        self.groups.iter().map(|g| g.n1).sum()
+    }
+
+    /// Per-group worker counts in flat-index order.
+    pub fn group_sizes(&self) -> Vec<usize> {
+        self.groups.iter().map(|g| g.n1).collect()
+    }
+
+    /// Structural validation: outer threshold in range, per-group
+    /// `1 <= k1_g <= n1_g`, dead-worker indices in range.
+    pub fn validate(&self) -> Result<()> {
+        if self.groups.is_empty() || self.k2 == 0 || self.k2 > self.groups.len() {
+            return Err(Error::InvalidParams(format!(
+                "topology: need 1 <= k2 <= n2, got ({}, {})",
+                self.groups.len(),
+                self.k2
+            )));
+        }
+        for (g, spec) in self.groups.iter().enumerate() {
+            if spec.k1 == 0 || spec.k1 > spec.n1 {
+                return Err(Error::InvalidParams(format!(
+                    "topology group {g}: need 1 <= k1 <= n1, got ({}, {})",
+                    spec.n1, spec.k1
+                )));
+            }
+            if let Some(&j) = spec.dead_workers.iter().find(|&&j| j >= spec.n1) {
+                return Err(Error::InvalidParams(format!(
+                    "topology group {g}: dead worker {j} out of n1={}",
+                    spec.n1
+                )));
+            }
+            if let Some(s) = spec.scale {
+                if !s.is_finite() || s <= 0.0 {
+                    return Err(Error::InvalidParams(format!(
+                        "topology group {g}: scale must be a positive finite \
+                         multiplier, got {s}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether enough groups can complete for a job to ever decode.
+    pub fn survivable(&self) -> bool {
+        self.groups.iter().filter(|g| g.can_complete()).count() >= self.k2
+    }
+
+    /// True when every group has the same `(n1, k1)` — the homogeneous
+    /// code of the paper's evaluation.
+    pub fn is_uniform_code(&self) -> bool {
+        self.groups
+            .windows(2)
+            .all(|w| w[0].n1 == w[1].n1 && w[0].k1 == w[1].k1)
+    }
+
+    /// The coding-layer view: per-group `(n1_g, k1_g)` plus `(n2, k2)`.
+    pub fn hierarchical_params(&self) -> HierarchicalParams {
+        HierarchicalParams {
+            n1: self.groups.iter().map(|g| g.n1).collect(),
+            k1: self.groups.iter().map(|g| g.k1).collect(),
+            n2: self.groups.len(),
+            k2: self.k2,
+        }
+    }
+
+    /// The paper's homogeneous-exponential parameters, when this
+    /// topology is exactly that scenario: uniform code, every group on
+    /// the same `Exp(µ1)`/`Exp(µ2)` profile, no dead workers. The
+    /// Monte-Carlo driver uses this to route uniform topologies through
+    /// the seed's Rényi-spacings sampler bit-identically.
+    pub fn sim_params(&self) -> Option<SimParams> {
+        if !self.is_uniform_code() {
+            return None;
+        }
+        let first = self.groups.first()?;
+        let (mu1, mu2) = first.exponential_rates()?;
+        for g in &self.groups {
+            if !g.dead_workers.is_empty()
+                || g.slowdown() != 1.0
+                || g.exponential_rates() != Some((mu1, mu2))
+            {
+                return None;
+            }
+        }
+        Some(SimParams {
+            n1: first.n1,
+            k1: first.k1,
+            n2: self.groups.len(),
+            k2: self.k2,
+            mu1,
+            mu2,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_expansion_is_uniform() {
+        let t = Topology::homogeneous(4, 2, 3, 2);
+        assert_eq!(t.n2(), 3);
+        assert_eq!(t.total_workers(), 12);
+        assert!(t.is_uniform_code());
+        assert!(t.validate().is_ok());
+        assert!(t.survivable());
+        let p = t.sim_params().expect("uniform default profile");
+        assert_eq!((p.n1, p.k1, p.n2, p.k2), (4, 2, 3, 2));
+        assert_eq!((p.mu1, p.mu2), (DEFAULT_MU1, DEFAULT_MU2));
+        let hp = t.hierarchical_params();
+        assert_eq!(hp, HierarchicalParams::homogeneous(4, 2, 3, 2));
+    }
+
+    #[test]
+    fn heterogeneous_is_not_uniform_and_has_no_sim_params() {
+        let t = Topology {
+            groups: vec![GroupSpec::new(4, 2), GroupSpec::new(6, 3)],
+            k2: 1,
+        };
+        assert!(!t.is_uniform_code());
+        assert!(t.sim_params().is_none());
+        assert!(t.validate().is_ok());
+        assert_eq!(t.group_sizes(), vec![4, 6]);
+    }
+
+    #[test]
+    fn dead_workers_and_survivability() {
+        let mut t = Topology::homogeneous(3, 2, 3, 2);
+        t.groups[0].dead_workers = vec![0, 1]; // alive 1 < k1 2
+        assert!(t.validate().is_ok());
+        assert!(!t.groups[0].can_complete());
+        assert!(t.survivable(), "2 healthy groups >= k2 = 2");
+        t.groups[1].dead_workers = vec![2, 0];
+        assert!(!t.survivable());
+        // Dead workers break the uniform-exponential fast path.
+        assert!(t.sim_params().is_none());
+        // Out-of-range dead index rejected.
+        t.groups[2].dead_workers = vec![7];
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn structural_validation() {
+        assert!(Topology { groups: vec![], k2: 1 }.validate().is_err());
+        assert!(Topology::homogeneous(3, 2, 3, 4).validate().is_err()); // k2 > n2
+        assert!(Topology::homogeneous(2, 3, 3, 2).validate().is_err()); // k1 > n1
+        let mut t = Topology::homogeneous(3, 2, 3, 2);
+        t.groups[1].scale = Some(-1.0);
+        assert!(t.validate().is_err());
+        t.groups[1].scale = Some(0.0);
+        assert!(t.validate().is_err(), "zero multiplier rejected");
+    }
+
+    #[test]
+    fn slowdown_multiplier_blocks_uniform_fast_path() {
+        let mut t = Topology::homogeneous(4, 2, 2, 1);
+        assert!(t.sim_params().is_some());
+        t.groups[1].scale = Some(2.0);
+        assert_eq!(t.groups[1].slowdown(), 2.0);
+        assert!(t.validate().is_ok());
+        assert!(t.sim_params().is_none(), "scaled group is not the paper model");
+    }
+
+    #[test]
+    fn single_group_relay_shape() {
+        let t = Topology::single_group(9, 4);
+        assert_eq!(t.n2(), 1);
+        assert_eq!(t.k2, 1);
+        assert_eq!(t.total_workers(), 9);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn per_group_rate_mismatch_blocks_fast_path() {
+        let mut t = Topology::homogeneous(4, 2, 2, 1);
+        t.groups[1].worker = StragglerModel::exp(3.0);
+        assert!(t.sim_params().is_none());
+        assert_eq!(t.groups[1].exponential_rates(), Some((3.0, DEFAULT_MU2)));
+    }
+}

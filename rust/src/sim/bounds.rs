@@ -1,8 +1,11 @@
-//! Upper bounds on `E[T]` — Lemma 2 and Theorem 2 (§III-B).
+//! Upper bounds on `E[T]` — Lemma 2 and Theorem 2 (§III-B), plus the
+//! heterogeneous-topology generalization ([`topology_upper`]) the
+//! load-allocation optimizer minimizes.
 
+use crate::scenario::Topology;
 use crate::sim::SimParams;
 use crate::util::harmonic::harmonic;
-use crate::Result;
+use crate::{Error, Result};
 
 /// Lemma 2: `E[T] ≤ H_{n1·n2}/µ1 + (H_{n2} − H_{n2−k2})/µ2`.
 ///
@@ -41,6 +44,104 @@ pub fn theorem2_upper(p: &SimParams) -> Result<f64> {
 pub fn intra_group_latency(p: &SimParams) -> Result<f64> {
     p.validate()?;
     Ok((harmonic(p.n1) - harmonic(p.n1 - p.k1)) / p.mu1)
+}
+
+/// Expected §III group-completion time `E[S_g + C_g]` of one group of a
+/// [`Topology`]: the `k1_g`-th order statistic of the group's alive
+/// workers plus its mean link delay. `None` when the group can never
+/// complete (alive < `k1_g`) or its models are not exponential.
+pub fn topology_group_mean(topo: &Topology, g: usize) -> Option<f64> {
+    let spec = topo.groups.get(g)?;
+    // The slowdown multiplier divides the effective rates.
+    let (mu1, mu2) = spec.exponential_rates()?;
+    let (mu1, mu2) = (mu1 / spec.slowdown(), mu2 / spec.slowdown());
+    let alive = spec.alive();
+    if alive < spec.k1 {
+        return None;
+    }
+    Some((harmonic(alive) - harmonic(alive - spec.k1)) / mu1 + 1.0 / mu2)
+}
+
+/// Heterogeneous-topology upper bound on `E[T]` — the §III
+/// generalization the load allocator minimizes.
+///
+/// Derivation, following Lemma 2's subset argument: the `k2`-th
+/// smallest over *all* groups is dominated by the maximum over any
+/// fixed `k2`-subset `G`, so
+///
+/// ```text
+/// E[T] <= E[max_{g∈G} Z_g],   Z_g = S_g + C_g,
+/// ```
+///
+/// with `G` chosen greedily as the `k2` groups of smallest mean
+/// `E[Z_g]`. Under the paper's exponential model each `Z_g` is a
+/// hypoexponential sum (Rényi's spacings: rates `(a_g − l)·µ1_g` for
+/// `l < k1_g` over the `a_g` alive workers, plus the link's `µ2_g`),
+/// whose MGF is a closed-form product, and the maximum is bounded by
+/// the standard Chernoff/MGF device
+///
+/// ```text
+/// E[max_{g∈G} Z_g] <= min_{0<s<λ_min} (1/s)·ln Σ_{g∈G} M_g(s).
+/// ```
+///
+/// The minimization is a deterministic grid search (the objective is
+/// smooth and unimodal in practice; the grid keeps the bound exactly
+/// reproducible). Unlike Lemma 2, this bound moves with every `k1_g`,
+/// which is what makes it a usable allocation objective. Requires
+/// exponential worker/link models on every usable group; errors when
+/// fewer than `k2` groups can complete.
+pub fn topology_upper(topo: &Topology) -> Result<f64> {
+    topo.validate()?;
+    // Per usable group: (mean, hypoexponential rates of Z_g).
+    let mut cands: Vec<(f64, Vec<f64>)> = Vec::new();
+    for (g, spec) in topo.groups.iter().enumerate() {
+        let Some((mu1, mu2)) = spec.exponential_rates() else {
+            return Err(Error::InvalidParams(format!(
+                "topology_upper: group {g} has non-exponential straggler \
+                 models (the §III analysis needs Exp(µ))"
+            )));
+        };
+        // A scaled exponential is an exponential at the divided rate.
+        let (mu1, mu2) = (mu1 / spec.slowdown(), mu2 / spec.slowdown());
+        let alive = spec.alive();
+        if alive < spec.k1 {
+            continue; // can never complete: excluded from every subset
+        }
+        let mean = (harmonic(alive) - harmonic(alive - spec.k1)) / mu1 + 1.0 / mu2;
+        let mut rates: Vec<f64> = (0..spec.k1)
+            .map(|l| (alive - l) as f64 * mu1)
+            .collect();
+        rates.push(mu2);
+        cands.push((mean, rates));
+    }
+    if cands.len() < topo.k2 {
+        return Err(Error::InvalidParams(format!(
+            "topology_upper: only {} of {} groups can complete (< k2 = {})",
+            cands.len(),
+            topo.n2(),
+            topo.k2
+        )));
+    }
+    cands.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let chosen = &cands[..topo.k2];
+    let lam_min = chosen
+        .iter()
+        .flat_map(|(_, rates)| rates.iter().copied())
+        .fold(f64::INFINITY, f64::min);
+    // Grid-minimize (1/s)·ln Σ_g M_g(s) over s ∈ (0, λ_min).
+    const GRID: usize = 400;
+    let mut best = f64::INFINITY;
+    let mut logm = vec![0.0f64; chosen.len()];
+    for i in 1..=GRID {
+        let s = lam_min * i as f64 / (GRID + 1) as f64;
+        for (slot, (_, rates)) in logm.iter_mut().zip(chosen.iter()) {
+            *slot = rates.iter().map(|&l| (l / (l - s)).ln()).sum::<f64>();
+        }
+        let mx = logm.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+        let lse = mx + logm.iter().map(|&v| (v - mx).exp()).sum::<f64>().ln();
+        best = best.min(lse / s);
+    }
+    Ok(best)
 }
 
 #[cfg(test)]
@@ -113,6 +214,84 @@ mod tests {
         );
         let et = montecarlo::expected_latency(&large, 20_000, 8).unwrap();
         assert!(et.mean <= theorem2_upper(&large).unwrap() + 3.0 * et.ci95);
+    }
+
+    #[test]
+    fn topology_upper_dominates_simulation() {
+        use crate::parallel::DecodePool;
+        use crate::scenario::{GroupSpec, Topology};
+        use crate::sim::straggler::StragglerModel;
+        let mk = |n1: usize, k1: usize, mu1: f64| GroupSpec {
+            worker: StragglerModel::exp(mu1),
+            link: StragglerModel::exp(1.0),
+            ..GroupSpec::new(n1, k1)
+        };
+        // Homogeneous check against the seed sampler…
+        let hom = Topology::homogeneous(10, 5, 6, 3);
+        let ub = topology_upper(&hom).unwrap();
+        let et = montecarlo::expected_latency_topology(
+            &hom,
+            50_000,
+            17,
+            &DecodePool::serial(),
+        )
+        .unwrap();
+        assert!(
+            et.mean <= ub + 3.0 * et.ci95,
+            "homogeneous: E[T]={} must be ≤ topology_upper={ub}",
+            et.mean
+        );
+        // …and a skewed heterogeneous topology.
+        let het = Topology {
+            groups: vec![mk(12, 3, 20.0), mk(8, 6, 10.0), mk(6, 3, 1.0), mk(5, 2, 0.5)],
+            k2: 2,
+        };
+        let ub = topology_upper(&het).unwrap();
+        let et = montecarlo::expected_latency_topology(
+            &het,
+            50_000,
+            18,
+            &DecodePool::serial(),
+        )
+        .unwrap();
+        assert!(
+            et.mean <= ub + 3.0 * et.ci95,
+            "heterogeneous: E[T]={} must be ≤ topology_upper={ub}",
+            et.mean
+        );
+        // The bound is at least the best group's mean (max ≥ mean).
+        let best_mean = (0..4)
+            .filter_map(|g| topology_group_mean(&het, g))
+            .fold(f64::INFINITY, f64::min);
+        assert!(ub >= best_mean);
+    }
+
+    #[test]
+    fn topology_upper_moves_with_k1() {
+        // Unlike Lemma 2, the heterogeneous bound must respond to the
+        // k1_g assignment — that is what makes it an allocation
+        // objective. Raising every k1 raises the bound.
+        use crate::scenario::Topology;
+        let low = Topology::homogeneous(10, 2, 4, 2);
+        let high = Topology::homogeneous(10, 8, 4, 2);
+        assert!(topology_upper(&low).unwrap() < topology_upper(&high).unwrap());
+    }
+
+    #[test]
+    fn topology_upper_rejects_bad_inputs() {
+        use crate::scenario::{GroupSpec, Topology};
+        use crate::sim::straggler::StragglerModel;
+        // Non-exponential model.
+        let mut t = Topology::homogeneous(4, 2, 2, 1);
+        t.groups[0].worker = StragglerModel::Deterministic { value: 1.0 };
+        assert!(topology_upper(&t).is_err());
+        // Too many dead workers: fewer than k2 usable groups.
+        let mut t = Topology {
+            groups: vec![GroupSpec::new(3, 2), GroupSpec::new(3, 2)],
+            k2: 2,
+        };
+        t.groups[0].dead_workers = vec![0, 1];
+        assert!(topology_upper(&t).is_err());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 
 use crate::coding::{CodedScheme, DecodeOutput, WorkerResult};
 use crate::linalg::{ops, Matrix};
+use crate::scenario::Topology;
 use crate::sim::events::EventQueue;
 use crate::sim::straggler::StragglerModel;
 use crate::sim::SimParams;
@@ -45,7 +46,9 @@ enum Event {
     GroupDelivered { group: usize },
 }
 
-/// Simulate one hierarchical job at event granularity.
+/// Simulate one hierarchical job at event granularity under the
+/// paper's uniform model (a thin wrapper over
+/// [`simulate_job_topology`] with every group on the same spec).
 pub fn simulate_job(
     p: &SimParams,
     worker_model: &StragglerModel,
@@ -54,19 +57,47 @@ pub fn simulate_job(
     rng: &mut Rng,
 ) -> Result<JobTrace> {
     p.validate()?;
+    let topo = Topology::homogeneous_with_models(
+        p.n1,
+        p.k1,
+        p.n2,
+        p.k2,
+        *worker_model,
+        *link_model,
+    );
+    simulate_job_topology(&topo, failures, rng)
+}
+
+/// Simulate one job over a scenario-layer [`Topology`] at event
+/// granularity: each group schedules its alive workers from its own
+/// worker model, decodes at its own `k1_g`-th arrival, and ships over
+/// its own link model; the job completes at the `k2`-th delivery.
+/// Dead workers baked into the topology and the ad-hoc `failures` plan
+/// are merged.
+pub fn simulate_job_topology(
+    topo: &Topology,
+    failures: &FailurePlan,
+    rng: &mut Rng,
+) -> Result<JobTrace> {
+    topo.validate()?;
+    let n2 = topo.n2();
     let mut q: EventQueue<Event> = EventQueue::new();
-    // Schedule every live worker's completion.
-    for g in 0..p.n2 {
-        for w in 0..p.n1 {
-            if failures.dead_workers.contains(&(g, w)) {
+    // Schedule every live worker's completion (times scaled by the
+    // group's slowdown multiplier, like the live cluster's sleeps).
+    for (g, spec) in topo.groups.iter().enumerate() {
+        for w in 0..spec.n1 {
+            if failures.dead_workers.contains(&(g, w)) || spec.dead_workers.contains(&w) {
                 continue;
             }
-            q.schedule(worker_model.sample(rng), Event::WorkerDone { group: g });
+            q.schedule(
+                spec.worker.sample(rng) * spec.slowdown(),
+                Event::WorkerDone { group: g },
+            );
         }
     }
-    let mut done_count = vec![0usize; p.n2];
-    let mut group_done: Vec<Option<f64>> = vec![None; p.n2];
-    let mut group_delivered: Vec<Option<f64>> = vec![None; p.n2];
+    let mut done_count = vec![0usize; n2];
+    let mut group_done: Vec<Option<f64>> = vec![None; n2];
+    let mut group_delivered: Vec<Option<f64>> = vec![None; n2];
     let mut delivered = 0usize;
     let mut workers_finished = 0usize;
     let mut total = None;
@@ -76,13 +107,14 @@ pub fn simulate_job(
             Event::WorkerDone { group } => {
                 workers_finished += 1;
                 done_count[group] += 1;
-                // Submaster decodes at the k1-th arrival and starts the
-                // uplink transfer (unless the link is dead).
-                if done_count[group] == p.k1 {
+                // Submaster decodes at this group's k1-th arrival and
+                // starts the uplink transfer (unless the link is dead).
+                if done_count[group] == topo.groups[group].k1 {
                     group_done[group] = Some(t);
                     if !failures.dead_links.contains(&group) {
+                        let spec = &topo.groups[group];
                         q.schedule_after(
-                            link_model.sample(rng),
+                            spec.link.sample(rng) * spec.slowdown(),
                             Event::GroupDelivered { group },
                         );
                     }
@@ -92,7 +124,7 @@ pub fn simulate_job(
                 if group_delivered[group].is_none() {
                     group_delivered[group] = Some(t);
                     delivered += 1;
-                    if delivered == p.k2 {
+                    if delivered == topo.k2 {
                         total = Some(t);
                         break;
                     }
@@ -305,6 +337,72 @@ mod tests {
             // The recovery threshold is at least k.
             assert!(replay.pushed >= scheme.num_data_blocks(), "{kind}");
         }
+    }
+
+    #[test]
+    fn heterogeneous_event_engine_agrees_with_topology_sampler() {
+        use crate::scenario::{GroupSpec, Topology};
+        use crate::sim::straggler::StragglerModel;
+        let mk = |n1: usize, k1: usize, mu1: f64| GroupSpec {
+            worker: StragglerModel::exp(mu1),
+            link: StragglerModel::exp(1.0),
+            ..GroupSpec::new(n1, k1)
+        };
+        let topo = Topology {
+            groups: vec![mk(8, 4, 10.0), mk(4, 2, 2.0), mk(6, 3, 10.0), mk(6, 5, 5.0)],
+            k2: 3,
+        };
+        let trials = 30_000;
+        let mut rng = Rng::new(91);
+        let mut acc = crate::util::stats::Welford::new();
+        let no_failures = FailurePlan::default();
+        for _ in 0..trials {
+            let trace = simulate_job_topology(&topo, &no_failures, &mut rng).unwrap();
+            acc.push(trace.total.expect("failure-free job must complete"));
+        }
+        let ev = crate::sim::montecarlo::Estimate::from(&acc);
+        let mc = crate::sim::montecarlo::expected_latency_topology(
+            &topo,
+            trials,
+            92,
+            &crate::parallel::DecodePool::serial(),
+        )
+        .unwrap();
+        assert!(
+            (ev.mean - mc.mean).abs() < 3.0 * (ev.ci95 + mc.ci95),
+            "event-driven {} vs direct {}",
+            ev.mean,
+            mc.mean
+        );
+    }
+
+    #[test]
+    fn topology_dead_workers_merge_with_failure_plan() {
+        use crate::scenario::{GroupSpec, Topology};
+        let mut topo = Topology {
+            groups: vec![GroupSpec::new(3, 2), GroupSpec::new(3, 2)],
+            k2: 1,
+        };
+        // Group 0 loses one worker in the scenario and one more from
+        // the ad-hoc plan — exactly k1 = 2 alive, still completes.
+        topo.groups[0].dead_workers = vec![0];
+        let failures = FailurePlan {
+            dead_workers: vec![(0, 1)],
+            dead_links: vec![1],
+        };
+        let mut rng = Rng::new(93);
+        let trace = simulate_job_topology(&topo, &failures, &mut rng).unwrap();
+        assert!(trace.total.is_some());
+        // Group 0's two alive workers must both have finished for it to
+        // decode; only 5 worker events exist in total (the engine stops
+        // at the k2-th delivery, so late group-1 events may be unseen).
+        assert!(
+            (2..=5).contains(&trace.workers_finished),
+            "workers_finished = {}",
+            trace.workers_finished
+        );
+        assert!(trace.group_done[0].is_some(), "group 0 must decode at k1 = 2 alive");
+        assert!(trace.group_delivered[1].is_none(), "dead link delivers nothing");
     }
 
     #[test]

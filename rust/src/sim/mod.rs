@@ -17,11 +17,15 @@
 //! * [`markov`] — the auxiliary Markov chain of Lemma 1 whose hitting
 //!   time is the lower bound `L` of Theorem 1, solved exactly by
 //!   first-step analysis;
-//! * [`bounds`] — the Lemma 2 and Theorem 2 upper bounds;
+//! * [`bounds`] — the Lemma 2 and Theorem 2 upper bounds, plus the
+//!   heterogeneous-topology generalization (`topology_upper`);
+//! * [`allocate`] — the load-allocation optimizer: distribute `k1_g`
+//!   across groups to minimize the §III upper bound;
 //! * [`events`] — a discrete-event simulation engine, used by
 //!   [`engine`] to replay the same job at full event granularity
 //!   (validates the direct sampler and powers failure-injection tests).
 
+pub mod allocate;
 pub mod bounds;
 pub mod engine;
 pub mod events;

@@ -6,6 +6,7 @@
 //! under a pluggable straggler model.
 
 use crate::parallel::DecodePool;
+use crate::scenario::Topology;
 use crate::sim::straggler::StragglerModel;
 use crate::sim::SimParams;
 use crate::util::rng::{Rng, SplitMix64};
@@ -88,7 +89,10 @@ pub fn sample_hierarchical_with(
     kth_min(&mut group_done, p.k2)
 }
 
-/// One sample for heterogeneous groups (`n1[i], k1[i]` per group).
+/// One sample for heterogeneous groups (`n1[i], k1[i]` per group),
+/// uniform exponential rates — a thin wrapper over the scenario-layer
+/// [`sample_topology`], kept for API convenience (no more parallel
+/// sampling logic to drift).
 pub fn sample_heterogeneous(
     n1: &[usize],
     k1: &[usize],
@@ -98,13 +102,56 @@ pub fn sample_heterogeneous(
     rng: &mut Rng,
 ) -> f64 {
     assert_eq!(n1.len(), k1.len());
-    let mut group_done = Vec::with_capacity(n1.len());
-    for (&n1_i, &k1_i) in n1.iter().zip(k1.iter()) {
-        let mut workers: Vec<f64> = (0..n1_i).map(|_| rng.exponential(mu1)).collect();
-        let s_i = kth_min(&mut workers, k1_i);
-        group_done.push(s_i + rng.exponential(mu2));
+    let topo = Topology {
+        groups: n1
+            .iter()
+            .zip(k1)
+            .map(|(&n, &k)| crate::scenario::GroupSpec {
+                worker: StragglerModel::exp(mu1),
+                link: StragglerModel::exp(mu2),
+                ..crate::scenario::GroupSpec::new(n, k)
+            })
+            .collect(),
+        k2,
+    };
+    sample_topology(&topo, rng)
+}
+
+/// One sample of the total computation time `T` over a scenario-layer
+/// [`Topology`]: per group, the `k1_g`-th fastest of that group's
+/// *alive* workers (each drawn from the group's own worker model) plus
+/// one draw of the group's link model, the whole group scaled by its
+/// slowdown multiplier; across groups, the `k2`-th fastest. A group
+/// whose alive worker count is below `k1_g` never completes and
+/// contributes `+∞`; NaN draws poison the whole sample (the drivers
+/// reject non-finite samples with [`Error::Numerical`]).
+pub fn sample_topology(topo: &Topology, rng: &mut Rng) -> f64 {
+    let mut group_done = Vec::with_capacity(topo.n2());
+    let mut workers: Vec<f64> = Vec::new();
+    for spec in &topo.groups {
+        workers.clear();
+        for j in 0..spec.n1 {
+            if spec.dead_workers.contains(&j) {
+                continue;
+            }
+            let t = spec.worker.sample(rng);
+            if t.is_nan() {
+                return f64::NAN;
+            }
+            workers.push(t);
+        }
+        if workers.len() < spec.k1 {
+            group_done.push(f64::INFINITY);
+            continue;
+        }
+        let s = kth_min(&mut workers, spec.k1);
+        let link = spec.link.sample(rng);
+        if link.is_nan() {
+            return f64::NAN;
+        }
+        group_done.push((s + link) * spec.slowdown());
     }
-    kth_min(&mut group_done, k2)
+    kth_min(&mut group_done, topo.k2)
 }
 
 /// Trials per Monte-Carlo shard. Fixed — the shard grid is a function
@@ -135,6 +182,33 @@ pub fn expected_latency_with(
 ) -> Result<Estimate> {
     p.validate()?;
     estimate_sharded(trials, seed, pool, |rng| sample_hierarchical(p, rng))
+}
+
+/// Monte-Carlo `E[T]` over a scenario-layer [`Topology`], sharded
+/// across `pool` — the one estimator heterogeneous scenarios route
+/// through. Uniform exponential topologies (the paper's homogeneous
+/// case) delegate to the Rényi-spacings sampler of
+/// [`expected_latency`], so a uniform config produces **bit-identical**
+/// estimates through the Topology path. Topologies that can never
+/// decode (too many dead workers) are rejected up front.
+pub fn expected_latency_topology(
+    topo: &Topology,
+    trials: usize,
+    seed: u64,
+    pool: &DecodePool,
+) -> Result<Estimate> {
+    topo.validate()?;
+    if !topo.survivable() {
+        return Err(Error::InvalidParams(format!(
+            "topology cannot decode: fewer than k2 = {} groups can reach \
+             their recovery threshold",
+            topo.k2
+        )));
+    }
+    if let Some(p) = topo.sim_params() {
+        return expected_latency_with(&p, trials, seed, pool);
+    }
+    estimate_sharded(trials, seed, pool, |rng| sample_topology(topo, rng))
 }
 
 /// Hierarchical `E[T]` under arbitrary worker / link models, sharded
@@ -413,6 +487,137 @@ mod tests {
         let mut rng = Rng::new(1);
         let t = sample_hierarchical_with(&p, &wm, &lm, &mut rng);
         assert!((t - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_topology_is_bit_identical_to_seed_sampler() {
+        // Acceptance: a uniform config routed through the Topology path
+        // must produce the exact bits of the homogeneous estimator.
+        let p = SimParams {
+            n1: 6,
+            k1: 3,
+            n2: 4,
+            k2: 2,
+            mu1: 5.0,
+            mu2: 1.0,
+        };
+        let mut topo = crate::scenario::Topology::homogeneous(6, 3, 4, 2);
+        for g in &mut topo.groups {
+            g.worker = StragglerModel::exp(5.0);
+            g.link = StragglerModel::exp(1.0);
+        }
+        let trials = MC_SHARD + 321;
+        let pool = crate::parallel::DecodePool::serial();
+        let direct = expected_latency(&p, trials, 1234).unwrap();
+        let via_topo = expected_latency_topology(&topo, trials, 1234, &pool).unwrap();
+        assert_eq!(direct.mean.to_bits(), via_topo.mean.to_bits());
+        assert_eq!(direct.ci95.to_bits(), via_topo.ci95.to_bits());
+        assert_eq!(direct.trials, via_topo.trials);
+    }
+
+    #[test]
+    fn heterogeneous_topology_estimate_and_dead_workers() {
+        use crate::scenario::{GroupSpec, Topology};
+        // Two fast groups and one straggly group; k2 = 2 → E[T] should
+        // be close to the two fast groups' completion.
+        let mk = |n1: usize, k1: usize, mu1: f64| GroupSpec {
+            worker: StragglerModel::exp(mu1),
+            link: StragglerModel::exp(1.0),
+            ..GroupSpec::new(n1, k1)
+        };
+        // The slow group's rate is extreme so it is essentially never
+        // among the k2 fastest — killing it then barely moves E[T].
+        let topo = Topology {
+            groups: vec![mk(6, 3, 20.0), mk(6, 3, 20.0), mk(6, 3, 0.02)],
+            k2: 2,
+        };
+        let pool = crate::parallel::DecodePool::serial();
+        let est = expected_latency_topology(&topo, 50_000, 5, &pool).unwrap();
+        assert!(est.mean.is_finite() && est.mean > 0.0);
+        // Killing the slow group entirely barely moves the estimate
+        // (its samples were almost never among the k2 fastest)...
+        let mut dead_slow = topo.clone();
+        dead_slow.groups[2].dead_workers = (0..6).collect();
+        let est2 = expected_latency_topology(&dead_slow, 50_000, 5, &pool).unwrap();
+        assert!(
+            (est2.mean - est.mean).abs() < 5.0 * (est.ci95 + est2.ci95) + 0.02,
+            "dead slow group: {} vs {}",
+            est2.mean,
+            est.mean
+        );
+        // ...but killing a fast group's workers below k1 in TWO groups
+        // makes the topology undecodable → clean error, not a hang.
+        let mut dead_two = topo.clone();
+        dead_two.groups[0].dead_workers = (0..4).collect();
+        dead_two.groups[1].dead_workers = (0..4).collect();
+        assert!(expected_latency_topology(&dead_two, 1_000, 5, &pool).is_err());
+    }
+
+    #[test]
+    fn slowdown_multiplier_equals_divided_rates() {
+        use crate::scenario::{GroupSpec, Topology};
+        // A group with slowdown m under Exp(µ) must behave like an
+        // unscaled group at rate µ/m — cluster, sampler and bounds all
+        // share that reading.
+        let scaled = Topology {
+            groups: vec![
+                GroupSpec::new(6, 3),
+                GroupSpec {
+                    scale: Some(4.0),
+                    ..GroupSpec::new(6, 3)
+                },
+            ],
+            k2: 2,
+        };
+        let divided = Topology {
+            groups: vec![
+                GroupSpec::new(6, 3),
+                GroupSpec {
+                    worker: StragglerModel::exp(crate::scenario::DEFAULT_MU1 / 4.0),
+                    link: StragglerModel::exp(crate::scenario::DEFAULT_MU2 / 4.0),
+                    ..GroupSpec::new(6, 3)
+                },
+            ],
+            k2: 2,
+        };
+        let pool = crate::parallel::DecodePool::serial();
+        let a = expected_latency_topology(&scaled, 60_000, 21, &pool).unwrap();
+        let b = expected_latency_topology(&divided, 60_000, 22, &pool).unwrap();
+        assert!(
+            (a.mean - b.mean).abs() < 3.0 * (a.ci95 + b.ci95),
+            "scaled {} vs divided-rate {}",
+            a.mean,
+            b.mean
+        );
+        // The analytic bound sees the multiplier identically.
+        let ub_a = crate::sim::bounds::topology_upper(&scaled).unwrap();
+        let ub_b = crate::sim::bounds::topology_upper(&divided).unwrap();
+        assert!(
+            (ub_a - ub_b).abs() < 1e-9,
+            "bounds must agree: {ub_a} vs {ub_b}"
+        );
+    }
+
+    #[test]
+    fn sharded_topology_estimate_bit_identical_across_threads() {
+        use crate::scenario::{GroupSpec, Topology};
+        let topo = Topology {
+            groups: vec![
+                GroupSpec::new(8, 4),
+                GroupSpec::new(4, 2),
+                GroupSpec::new(6, 5),
+            ],
+            k2: 2,
+        };
+        let trials = 2 * MC_SHARD + 77;
+        let serial =
+            expected_latency_topology(&topo, trials, 31, &DecodePool::serial()).unwrap();
+        for threads in [2, 4] {
+            let pool = crate::parallel::DecodePool::new(threads).unwrap();
+            let par = expected_latency_topology(&topo, trials, 31, &pool).unwrap();
+            assert_eq!(serial.mean.to_bits(), par.mean.to_bits(), "threads={threads}");
+            assert_eq!(serial.ci95.to_bits(), par.ci95.to_bits());
+        }
     }
 
     #[test]

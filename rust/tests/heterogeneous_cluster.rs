@@ -1,0 +1,170 @@
+//! Integration: heterogeneous scenario-layer topologies end-to-end —
+//! config `groups` → coding → live cluster → metrics — plus the
+//! uniform-sugar bit-identity acceptance checks.
+
+use hiercode::coding::{compute_all_products, select_results, CodedScheme};
+use hiercode::config::schema::ClusterConfig;
+use hiercode::coordinator::Cluster;
+use hiercode::linalg::{ops, Matrix};
+use hiercode::util::rng::Rng;
+
+fn matrix(m: usize, d: usize, seed: u64) -> Matrix {
+    let mut r = Rng::new(seed);
+    Matrix::from_fn(m, d, |_, _| r.uniform(-1.0, 1.0))
+}
+
+/// A 3-group heterogeneous config with two distinct `(n1_g, k1_g)`
+/// specs (row divisor lcm(2·2, 2·3) = 12).
+const HET_CONFIG: &str = r#"{
+    "code": {"scheme": "hierarchical", "k2": 2,
+             "groups": [
+               {"n1": 4, "k1": 2},
+               {"n1": 5, "k1": 3, "mu1": 5.0},
+               {"n1": 4, "k1": 2}
+             ]},
+    "straggler": {"model": "exponential", "mu1": 10.0, "mu2": 1.0,
+                  "scale": 0.001},
+    "runtime": {"use_pjrt": false, "decode_threads": 2},
+    "seed": 11
+}"#;
+
+#[test]
+fn heterogeneous_cluster_serves_correct_results_end_to_end() {
+    let config = ClusterConfig::from_json_text(HET_CONFIG).unwrap();
+    let a = matrix(24, 5, 1);
+    let cluster = Cluster::launch(&config, &a).unwrap();
+    assert_eq!(cluster.scheme().num_workers(), 13);
+    let mut r = Rng::new(2);
+    let xs: Vec<Vec<f64>> = (0..6)
+        .map(|_| (0..5).map(|_| r.uniform(-2.0, 2.0)).collect())
+        .collect();
+    let handles: Vec<_> = xs
+        .iter()
+        .map(|x| cluster.submit(x.clone()).unwrap())
+        .collect();
+    for (x, h) in xs.iter().zip(handles) {
+        let y = h.wait().unwrap();
+        let expect = ops::matvec(&a, x);
+        for (i, (&got, &want)) in y.iter().zip(expect.iter()).enumerate() {
+            assert!((got - want).abs() < 1e-3, "row {i}: {got} vs {want}");
+        }
+    }
+    // Give stragglers a moment to drain so every product registers
+    // (the per-message counters are bumped in pairs by the submaster;
+    // snapshotting mid-drain could catch one of a pair).
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    // Per-group observability: every arrival and group decode is
+    // attributed to its group.
+    let snap = cluster.metrics();
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.per_group.len(), 3, "one breakdown per group");
+    let product_sum: u64 = snap.per_group.iter().map(|g| g.products).sum();
+    assert_eq!(product_sum, snap.worker_products);
+    let decode_sum: u64 = snap.per_group.iter().map(|g| g.decodes).sum();
+    assert_eq!(decode_sum, snap.group_decodes);
+    assert!(
+        snap.group_decodes >= snap.jobs * 2,
+        "k2 = 2 group decodes per job minimum: {snap:?}"
+    );
+    for (g, gm) in snap.per_group.iter().enumerate() {
+        if gm.decodes > 0 {
+            assert!(
+                gm.decode_mean >= 0.0,
+                "group {g}: decode latency must be recorded"
+            );
+            // A group cannot decode with fewer products than its k1.
+            let k1 = [2u64, 3, 2][g];
+            assert!(
+                gm.products >= k1,
+                "group {g}: {} products < k1 = {k1}",
+                gm.products
+            );
+        }
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn heterogeneous_parallel_decode_bit_identical_to_serial() {
+    // The same heterogeneous topology decoded through config-built
+    // schemes at pool widths 1 vs 4/8: streaming-session (batch
+    // replay) results and flop accounting must agree bit-for-bit.
+    let mut config = ClusterConfig::from_json_text(HET_CONFIG).unwrap();
+    config.runtime.decode_threads = 1;
+    let serial = config.build_scheme().unwrap();
+    let a = matrix(24, 4, 3);
+    let x = matrix(4, 2, 4);
+    let shards = serial.encode(&a).unwrap();
+    let all = compute_all_products(&shards, &x);
+    // Parity-heavy subset: last k1_g workers of groups 1 and 2
+    // (flat offsets: group 0 = 0..4, group 1 = 4..9, group 2 = 9..13).
+    let picks = [6usize, 7, 8, 11, 12];
+    let o1 = serial.decode(&select_results(&all, &picks), 24).unwrap();
+    assert!(o1.result.max_abs_diff(&ops::matmul(&a, &x)) < 1e-7);
+    for threads in [4usize, 8] {
+        config.runtime.decode_threads = threads;
+        let parallel = config.build_scheme().unwrap();
+        let o2 = parallel.decode(&select_results(&all, &picks), 24).unwrap();
+        assert_eq!(
+            o1.result.data(),
+            o2.result.data(),
+            "threads={threads}: parallel decode must be bit-identical"
+        );
+        assert_eq!(o1.flops, o2.flops, "threads={threads}");
+    }
+}
+
+#[test]
+fn uniform_config_topology_path_bit_identical_to_seed_construction() {
+    // Acceptance: the uniform (n1,k1,n2,k2) sugar routed through the
+    // expanded Topology must reproduce the direct homogeneous
+    // construction bit-for-bit — same generators, same decode results,
+    // same flops.
+    let config = ClusterConfig::demo(4, 2, 3, 2);
+    assert!(config.code.topology.is_uniform_code());
+    let via_topology = config.build_scheme().unwrap();
+    let direct = hiercode::coding::HierarchicalCode::homogeneous(4, 2, 3, 2).unwrap();
+    assert_eq!(via_topology.name(), direct.name());
+    let a = matrix(16, 5, 5);
+    let x = matrix(5, 3, 6);
+    let shards_t = via_topology.encode(&a).unwrap();
+    let shards_d = direct.encode(&a).unwrap();
+    assert_eq!(shards_t.len(), shards_d.len());
+    for (st, sd) in shards_t.iter().zip(&shards_d) {
+        assert_eq!(st.data(), sd.data(), "encode must be bit-identical");
+    }
+    let all = compute_all_products(&shards_d, &x);
+    // Parity-heavy subset across groups 1 and 2.
+    let picks = [6usize, 7, 10, 11];
+    let ot = via_topology
+        .decode(&select_results(&all, &picks), 16)
+        .unwrap();
+    let od = direct.decode(&select_results(&all, &picks), 16).unwrap();
+    assert_eq!(ot.result.data(), od.result.data());
+    assert_eq!(ot.flops, od.flops);
+}
+
+#[test]
+fn heterogeneous_scheme_topology_roundtrips_through_cluster_launch() {
+    // The scheme's topology is the config's topology, verbatim — the
+    // coordinator spawns from the very same value the simulator
+    // analyzes (zero drift).
+    let config = ClusterConfig::from_json_text(HET_CONFIG).unwrap();
+    let scheme = config.build_scheme().unwrap();
+    assert_eq!(scheme.topology(), config.code.topology);
+    // And the simulator consumes it directly.
+    let est = hiercode::sim::montecarlo::expected_latency_topology(
+        &config.code.topology,
+        20_000,
+        7,
+        &hiercode::parallel::DecodePool::serial(),
+    )
+    .unwrap();
+    assert!(est.mean.is_finite() && est.mean > 0.0);
+    let ub = hiercode::sim::bounds::topology_upper(&config.code.topology).unwrap();
+    assert!(
+        est.mean <= ub + 3.0 * est.ci95,
+        "E[T] {} must be below the topology upper bound {ub}",
+        est.mean
+    );
+}
