@@ -1,0 +1,373 @@
+//! `hiercode loadgen` — closed-loop load generator for the multi-tenant
+//! job service.
+//!
+//! The paper's latency analysis is per-job; serving millions of users
+//! is a queueing problem. This harness measures the difference: for
+//! each `scheme × concurrency` point it launches a fresh
+//! [`ClusterCore`], registers `--models` synthetic models, and spawns
+//! `c` **closed-loop** clients — each submits, waits for its reply,
+//! and immediately submits again (the canonical closed-loop driver, so
+//! offered load tracks service capacity and the system sits at its
+//! natural operating point). Clients round-robin across the registered
+//! models, so every run exercises multi-tenant batching lanes.
+//!
+//! Outcomes are accounted exactly once per submission: a reply (its
+//! latency lands in the percentile sample), an [`Error::Busy`] bounce
+//! (admission backpressure), a deadline shed, or a failure. The run
+//! cross-checks its client-side ledger against the service's own
+//! metrics and reports `accounting_consistent` in the output.
+//!
+//! Results go to `BENCH_serving.json` in `--out` (default `.`):
+//! throughput and p50/p95/p99 latency per scheme and concurrency —
+//! the serving-layer perf baseline, next to `BENCH_decode.json` /
+//! `BENCH_sim.json`.
+//!
+//! `--smoke` shrinks everything for CI (sub-second runs).
+
+use crate::cli::args::Args;
+use crate::coding::SchemeKind;
+use crate::config::schema::ClusterConfig;
+use crate::coordinator::{ClusterCore, SubmitOptions};
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+use crate::{Error, Result};
+use std::time::{Duration, Instant};
+
+/// JSON-safe float literal (same convention as `hiercode bench`).
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.9e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// One `scheme × concurrency` measurement.
+struct RunStats {
+    scheme: String,
+    clients: usize,
+    wall_s: f64,
+    completed: u64,
+    busy: u64,
+    shed: u64,
+    failed: u64,
+    /// Submissions that errored at submit time with a non-`Busy` error
+    /// (never accepted, so outside the service's `requests` ledger).
+    aborted: u64,
+    latencies_s: Vec<f64>,
+    accounting_consistent: bool,
+}
+
+impl RunStats {
+    fn throughput_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.completed as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    fn quantile_ms(&self, q: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            f64::NAN
+        } else {
+            percentile(&self.latencies_s, q) * 1e3
+        }
+    }
+
+    fn mean_ms(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            f64::NAN
+        } else {
+            self.latencies_s.iter().sum::<f64>() / self.latencies_s.len() as f64 * 1e3
+        }
+    }
+}
+
+/// Workload shape shared by every run.
+struct LoadConfig {
+    n_models: usize,
+    rows: usize,
+    cols: usize,
+    queue_cap: usize,
+    deadline_ms: f64,
+    duration_s: f64,
+    seed: u64,
+}
+
+/// Run the load generator; writes `BENCH_serving.json`.
+pub fn run(args: &Args) -> Result<()> {
+    let smoke = args.has_flag("smoke");
+    let out_dir = args.get_str("out").unwrap_or(".").to_string();
+    let duration_s = args
+        .get_f64("duration-s")?
+        .unwrap_or(if smoke { 0.3 } else { 2.0 });
+    if !duration_s.is_finite() || duration_s <= 0.0 {
+        return Err(Error::InvalidParams(
+            "--duration-s must be a positive number of seconds".into(),
+        ));
+    }
+    let clients_list = args
+        .get_usize_list("clients")?
+        .unwrap_or(if smoke { vec![1, 4] } else { vec![1, 4, 8, 16] });
+    if clients_list.is_empty() || clients_list.contains(&0) {
+        return Err(Error::InvalidParams(
+            "--clients expects positive client counts (e.g. 1,4,8)".into(),
+        ));
+    }
+    let schemes: Vec<SchemeKind> = match args.get_str("schemes") {
+        Some(s) => s
+            .split(',')
+            .map(SchemeKind::parse)
+            .collect::<Result<Vec<_>>>()?,
+        None => vec![SchemeKind::Hierarchical, SchemeKind::Mds],
+    };
+    let load = LoadConfig {
+        n_models: args.get_usize("models")?.unwrap_or(2).max(1),
+        rows: args.get_usize("rows")?.unwrap_or(if smoke { 64 } else { 256 }),
+        cols: args.get_usize("cols")?.unwrap_or(if smoke { 16 } else { 64 }),
+        queue_cap: args.get_usize("queue-cap")?.unwrap_or(8),
+        deadline_ms: args.get_f64("deadline-ms")?.unwrap_or(1_000.0),
+        duration_s,
+        seed: args.get_usize("seed")?.unwrap_or(42) as u64,
+    };
+    eprintln!(
+        "## hiercode loadgen (smoke={smoke}, schemes={:?}, clients={clients_list:?}, \
+         {} models of {}x{}, cap {}, deadline {}ms, {duration_s}s/run)",
+        schemes.iter().map(|s| s.name()).collect::<Vec<_>>(),
+        load.n_models,
+        load.rows,
+        load.cols,
+        load.queue_cap,
+        load.deadline_ms
+    );
+    let mut runs = Vec::new();
+    for &scheme in &schemes {
+        for &clients in &clients_list {
+            let stats = run_one(scheme, clients, &load)?;
+            println!(
+                "loadgen {:<14} c={:<3} {:>7.1} req/s  p50 {:>7.2}ms  p95 {:>7.2}ms  \
+                 p99 {:>7.2}ms  ({} ok, {} busy, {} shed, {} failed{})",
+                stats.scheme,
+                stats.clients,
+                stats.throughput_rps(),
+                stats.quantile_ms(0.5),
+                stats.quantile_ms(0.95),
+                stats.quantile_ms(0.99),
+                stats.completed,
+                stats.busy,
+                stats.shed,
+                stats.failed,
+                if stats.accounting_consistent {
+                    ""
+                } else {
+                    ", ACCOUNTING MISMATCH"
+                }
+            );
+            runs.push(stats);
+        }
+    }
+    let json = render_json(smoke, &load, &runs);
+    let path = format!("{out_dir}/BENCH_serving.json");
+    std::fs::write(&path, json)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// One closed-loop measurement against a fresh service.
+fn run_one(scheme: SchemeKind, clients: usize, load: &LoadConfig) -> Result<RunStats> {
+    // The demo 4×2 grid is valid for all five schemes and AOT-free.
+    let mut config = ClusterConfig::demo_scheme(scheme, 4, 2, 4, 2);
+    config.code.validate()?;
+    config.serving.queue_cap = load.queue_cap;
+    config.serving.default_deadline_ms = load.deadline_ms;
+    config.serving.drain_ms = 2_000.0;
+    // A tight batch window keeps the closed loop moving; stragglers
+    // stay on (tiny scale) so the measured path is the real one.
+    config.batching.max_wait_ms = 1.0;
+    config.straggler.enabled = true;
+    config.straggler.scale = 0.0002;
+    let core = ClusterCore::launch(&config)?;
+    let mut mr = Rng::new(load.seed);
+    let model_names: Vec<String> =
+        (0..load.n_models).map(|i| format!("model{i}")).collect();
+    for name in &model_names {
+        let a = Matrix::from_fn(load.rows, load.cols, |_, _| mr.uniform(-1.0, 1.0));
+        core.register_model(name, &a)?;
+    }
+    let t_end = Instant::now() + Duration::from_secs_f64(load.duration_s);
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..clients {
+        let client = core.handle();
+        let names = model_names.clone();
+        let cols = load.cols;
+        let mut rng = Rng::new(load.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(t as u64 + 1));
+        joins.push(std::thread::spawn(move || {
+            let mut latencies = Vec::new();
+            let (mut busy, mut shed, mut failed, mut aborted) = (0u64, 0u64, 0u64, 0u64);
+            let mut i = 0usize;
+            while Instant::now() < t_end {
+                let name = &names[i % names.len()];
+                i += 1;
+                let x: Vec<f64> = (0..cols).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let t_req = Instant::now();
+                match client.submit_with(x, SubmitOptions::to_model(name)) {
+                    Ok(handle) => match handle.wait() {
+                        Ok(_) => latencies.push(t_req.elapsed().as_secs_f64()),
+                        Err(Error::DeadlineExceeded) => shed += 1,
+                        Err(_) => failed += 1,
+                    },
+                    Err(Error::Busy { .. }) => {
+                        // Explicit backpressure: back off briefly.
+                        busy += 1;
+                        std::thread::yield_now();
+                    }
+                    Err(_) => {
+                        // Never accepted (shutdown/misconfiguration):
+                        // outside the service ledger. Stop this client.
+                        aborted += 1;
+                        break;
+                    }
+                }
+            }
+            (latencies, busy, shed, failed, aborted)
+        }));
+    }
+    let mut latencies_s = Vec::new();
+    let (mut busy, mut shed, mut failed, mut aborted) = (0u64, 0u64, 0u64, 0u64);
+    for j in joins {
+        let (lat, b, s, f, ab) = j.join().expect("loadgen client panicked");
+        latencies_s.extend(lat);
+        busy += b;
+        shed += s;
+        failed += f;
+        aborted += ab;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let completed = latencies_s.len() as u64;
+    let snap = core.metrics();
+    core.shutdown();
+    // Exactly-once accounting: the client-side ledger must agree with
+    // the service's own counters. `aborted` submissions were never
+    // accepted, so they sit outside the `requests` equation.
+    let accounting_consistent = snap.rejected == busy
+        && snap.shed == shed
+        && snap.requests == completed + shed + failed;
+    Ok(RunStats {
+        scheme: scheme.name().to_string(),
+        clients,
+        wall_s,
+        completed,
+        busy,
+        shed,
+        failed,
+        aborted,
+        latencies_s,
+        accounting_consistent,
+    })
+}
+
+/// Render the `BENCH_serving.json` document.
+fn render_json(smoke: bool, load: &LoadConfig, runs: &[RunStats]) -> String {
+    let entries: Vec<String> = runs
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"scheme\": \"{}\", \"clients\": {}, \"wall_s\": {}, \
+                 \"completed\": {}, \"busy_rejected\": {}, \"deadline_shed\": {}, \
+                 \"failed\": {}, \"submit_aborted\": {}, \"throughput_rps\": {}, \
+                 \"latency_ms\": {{\"mean\": {}, \"p50\": {}, \"p95\": {}, \
+                 \"p99\": {}}}, \"accounting_consistent\": {}}}",
+                r.scheme,
+                r.clients,
+                jf(r.wall_s),
+                r.completed,
+                r.busy,
+                r.shed,
+                r.failed,
+                r.aborted,
+                jf(r.throughput_rps()),
+                jf(r.mean_ms()),
+                jf(r.quantile_ms(0.5)),
+                jf(r.quantile_ms(0.95)),
+                jf(r.quantile_ms(0.99)),
+                r.accounting_consistent
+            )
+        })
+        .collect();
+    format!(
+        "{{\n\
+         \x20 \"schema\": \"hiercode-bench/serving/v1\",\n\
+         \x20 \"smoke\": {smoke},\n\
+         \x20 \"grid\": {{\"n1\": 4, \"k1\": 2, \"n2\": 4, \"k2\": 2}},\n\
+         \x20 \"models\": {}, \"rows\": {}, \"cols\": {},\n\
+         \x20 \"queue_cap\": {}, \"deadline_ms\": {},\n\
+         \x20 \"duration_s\": {},\n\
+         \x20 \"runs\": [\n{}\n  ]\n\
+         }}\n",
+        load.n_models,
+        load.rows,
+        load.cols,
+        load.queue_cap,
+        jf(load.deadline_ms),
+        jf(load.duration_s),
+        entries.join(",\n")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_loadgen_writes_serving_baseline() {
+        let dir = std::env::temp_dir().join("hiercode_loadgen_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.to_str().unwrap().to_string();
+        let args = Args::parse(&[
+            "--smoke".to_string(),
+            "--duration-s".to_string(),
+            "0.15".to_string(),
+            "--clients".to_string(),
+            "1,2".to_string(),
+            "--out".to_string(),
+            out,
+        ])
+        .unwrap();
+        run(&args).unwrap();
+        let text = std::fs::read_to_string(dir.join("BENCH_serving.json")).unwrap();
+        let v = crate::config::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            v.get("schema").and_then(|s| s.as_str()),
+            Some("hiercode-bench/serving/v1")
+        );
+        let runs = v.get("runs").and_then(|r| r.as_array()).unwrap();
+        // Default schemes (hierarchical, mds) × clients (1, 2).
+        assert_eq!(runs.len(), 4);
+        for entry in runs {
+            assert_eq!(
+                entry.get("accounting_consistent").and_then(|b| b.as_bool()),
+                Some(true),
+                "every submission must be accounted exactly once"
+            );
+            // The closed loop must actually complete work.
+            assert!(entry.get("completed").and_then(|c| c.as_usize()).unwrap() > 0);
+        }
+    }
+
+    #[test]
+    fn loadgen_rejects_bad_arguments() {
+        for bad in [
+            vec!["--duration-s", "0"],
+            vec!["--duration-s", "-1"],
+            vec!["--clients", "0,2"],
+            vec!["--schemes", "raptor"],
+        ] {
+            let argv: Vec<String> = bad.iter().map(|s| s.to_string()).collect();
+            let args = Args::parse(&argv).unwrap();
+            assert!(run(&args).is_err(), "must reject {bad:?}");
+        }
+    }
+}

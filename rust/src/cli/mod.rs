@@ -11,6 +11,7 @@
 
 pub mod args;
 pub mod benchcmd;
+pub mod loadgen;
 
 use crate::sim::{bounds, markov, montecarlo, SimParams};
 use args::Args;
@@ -30,6 +31,9 @@ USAGE:
   hiercode serve   [--config FILE] [--requests N] [--no-pjrt]
                    [--scheme hierarchical|mds|product|replication|polynomial]
   hiercode bench   [--smoke] [--threads N] [--iters N] [--out DIR]
+  hiercode loadgen [--smoke] [--schemes S,S] [--clients N,N,...]
+                   [--duration-s T] [--models N] [--rows R] [--cols C]
+                   [--queue-cap Q] [--deadline-ms D] [--seed S] [--out DIR]
   hiercode help
 
 `figures` regenerates the paper's evaluation artifacts (CSV on stdout).
@@ -41,6 +45,10 @@ reports uniform vs optimized bound and Monte-Carlo E[T].
 runs a request workload through its streaming decode sessions.
 `bench` runs the decode/GEMM/simulator benches and writes the
 BENCH_decode.json / BENCH_sim.json perf baselines to --out (default .).
+`loadgen` drives the multi-tenant job service with closed-loop clients
+round-robining across --models registered models, per scheme and
+concurrency level, and writes throughput + p50/p95/p99 latency (and
+busy/shed accounting) to BENCH_serving.json in --out.
 ";
 
 /// CLI entry point (called from `main.rs`).
@@ -73,6 +81,7 @@ pub fn run(argv: &[String]) -> crate::Result<()> {
         "allocate" => allocate_cmd(&args),
         "serve" => serve_cmd(&args),
         "bench" => benchcmd::run(&args),
+        "loadgen" => loadgen::run(&args),
         other => Err(crate::Error::InvalidParams(format!(
             "unknown command '{other}' (try `hiercode help`)"
         ))),
@@ -273,6 +282,10 @@ fn serve_cmd(args: &Args) -> crate::Result<()> {
         config.code.validate()?;
     }
     let requests = args.get_usize("requests")?.unwrap_or(32);
+    // The demo floods its whole workload up front (open loop), so size
+    // the admission queue to hold it — `loadgen` is the tool that
+    // exercises Busy backpressure deliberately.
+    config.serving.queue_cap = config.serving.queue_cap.max(requests);
     // Demo matrix sized to the code and the AOT'd shard shapes:
     // m = 1024, d = 128 → shard 256×128 (worker_matvec_r256_d128_*).
     let (m, d) = (1024, 128);

@@ -9,4 +9,6 @@ pub mod json;
 pub mod schema;
 
 pub use json::Json;
-pub use schema::{ClusterConfig, CodeConfig, RuntimeConfig, StragglerConfig};
+pub use schema::{
+    ClusterConfig, CodeConfig, RuntimeConfig, ServingConfig, StragglerConfig,
+};

@@ -10,7 +10,10 @@
 //!                 "scale": 0.02},
 //!   "runtime":   {"artifact_dir": "artifacts", "use_pjrt": true,
 //!                 "decode_threads": 4},
-//!   "batching":  {"max_batch": 8, "max_wait_ms": 5.0}
+//!   "batching":  {"max_batch": 8, "max_wait_ms": 5.0},
+//!   "serving":   {"queue_cap": 64, "default_deadline_ms": 10000,
+//!                 "drain_ms": 5000,
+//!                 "models": [{"name": "a", "rows": 1024, "cols": 128}]}
 //! }
 //! ```
 //!
@@ -462,6 +465,158 @@ impl BatchConfig {
     }
 }
 
+/// One entry of the serving model table: a named computation registered
+/// at launch. The matrix is synthetic — `rows × cols`, seeded — which
+/// is exactly what the `serve`/`loadgen` workloads need: a reproducible
+/// multi-tenant setup in config form. Real callers register their own
+/// matrices through `ClusterCore::register_model`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    /// Model name (submission routing key).
+    pub name: String,
+    /// Output dimension `m` (must divide by the scheme's row divisor).
+    pub rows: usize,
+    /// Input dimension `d`.
+    pub cols: usize,
+    /// Seed for the synthetic matrix entries.
+    pub seed: u64,
+}
+
+/// Admission-control and drain policy for the multi-tenant job service.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingConfig {
+    /// Per-model admission cap: submissions beyond this many queued
+    /// (accepted, undispatched) requests bounce with `Error::Busy`.
+    pub queue_cap: usize,
+    /// Default admission deadline (ms): a request still undispatched
+    /// past this is shed with `Error::DeadlineExceeded`. Per-request
+    /// override via `SubmitOptions::deadline`.
+    pub default_deadline_ms: f64,
+    /// Graceful-shutdown drain grace (ms): how long the master waits
+    /// for in-flight jobs before failing their routes.
+    pub drain_ms: f64,
+    /// Models registered at launch (may be empty).
+    pub models: Vec<ModelSpec>,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            queue_cap: 64,
+            default_deadline_ms: 10_000.0,
+            drain_ms: 5_000.0,
+            models: Vec::new(),
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Parse from the `"serving"` object. Malformed or degenerate
+    /// values are rejected with actionable errors — never silently
+    /// replaced by defaults.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        let queue_cap = match v.get("queue_cap") {
+            Some(q) => q.as_usize().ok_or_else(|| {
+                Error::Config(
+                    "serving.queue_cap must be a non-negative integer".into(),
+                )
+            })?,
+            None => d.queue_cap,
+        };
+        if queue_cap == 0 {
+            return Err(Error::Config(
+                "serving.queue_cap = 0 would reject every submission; \
+                 use a positive per-model cap"
+                    .into(),
+            ));
+        }
+        let default_deadline_ms = match v.get("default_deadline_ms") {
+            Some(x) => x.as_f64().ok_or_else(|| {
+                Error::Config(
+                    "serving.default_deadline_ms must be a number of milliseconds"
+                        .into(),
+                )
+            })?,
+            None => d.default_deadline_ms,
+        };
+        if !default_deadline_ms.is_finite() || default_deadline_ms <= 0.0 {
+            return Err(Error::Config(format!(
+                "serving.default_deadline_ms = {default_deadline_ms} would shed \
+                 every request at its first flush; use a positive deadline"
+            )));
+        }
+        let drain_ms = match v.get("drain_ms") {
+            Some(x) => x.as_f64().ok_or_else(|| {
+                Error::Config(
+                    "serving.drain_ms must be a number of milliseconds".into(),
+                )
+            })?,
+            None => d.drain_ms,
+        };
+        if !drain_ms.is_finite() || drain_ms <= 0.0 {
+            return Err(Error::Config(format!(
+                "serving.drain_ms = {drain_ms} would abandon in-flight jobs at \
+                 shutdown; use a positive grace period"
+            )));
+        }
+        let models = match v.get("models") {
+            None => Vec::new(),
+            Some(ms) => {
+                let arr = ms.as_array().ok_or_else(|| {
+                    Error::Config("serving.models must be an array".into())
+                })?;
+                let mut models = Vec::with_capacity(arr.len());
+                let mut seen = std::collections::HashSet::new();
+                for (i, entry) in arr.iter().enumerate() {
+                    let ctx = format!("serving.models[{i}]");
+                    let name = entry.req_str("name", &ctx)?;
+                    if name.is_empty() {
+                        return Err(Error::Config(format!(
+                            "{ctx}: model name must be non-empty"
+                        )));
+                    }
+                    if !seen.insert(name.clone()) {
+                        return Err(Error::Config(format!(
+                            "{ctx}: duplicate model name '{name}' \
+                             (model names must be unique)"
+                        )));
+                    }
+                    let rows = entry.req_usize("rows", &ctx)?;
+                    let cols = entry.req_usize("cols", &ctx)?;
+                    if rows == 0 || cols == 0 {
+                        return Err(Error::Config(format!(
+                            "{ctx}: model '{name}' needs positive rows and cols, \
+                             got {rows}x{cols}"
+                        )));
+                    }
+                    let seed = match entry.get("seed") {
+                        Some(s) => s.as_usize().ok_or_else(|| {
+                            Error::Config(format!(
+                                "{ctx}: field 'seed' must be a non-negative integer"
+                            ))
+                        })? as u64,
+                        None => 1 + i as u64,
+                    };
+                    models.push(ModelSpec {
+                        name,
+                        rows,
+                        cols,
+                        seed,
+                    });
+                }
+                models
+            }
+        };
+        Ok(Self {
+            queue_cap,
+            default_deadline_ms,
+            drain_ms,
+            models,
+        })
+    }
+}
+
 /// Full cluster configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterConfig {
@@ -473,6 +628,8 @@ pub struct ClusterConfig {
     pub runtime: RuntimeConfig,
     /// Batching policy.
     pub batching: BatchConfig,
+    /// Serving-layer admission control + model table.
+    pub serving: ServingConfig,
     /// RNG seed for straggler injection.
     pub seed: u64,
 }
@@ -508,6 +665,10 @@ impl ClusterConfig {
             Some(b) => BatchConfig::from_json(b)?,
             None => BatchConfig::default(),
         };
+        let serving = match v.get("serving") {
+            Some(s) => ServingConfig::from_json(s)?,
+            None => ServingConfig::default(),
+        };
         let seed = match v.get("seed") {
             // A present-but-malformed seed is a config mistake, not a
             // request for the default: reject it instead of silently
@@ -524,6 +685,7 @@ impl ClusterConfig {
             straggler,
             runtime,
             batching,
+            serving,
             seed,
         })
     }
@@ -564,6 +726,7 @@ impl ClusterConfig {
                 ..RuntimeConfig::default()
             },
             batching: BatchConfig::default(),
+            serving: ServingConfig::default(),
             seed: 42,
         }
     }
@@ -800,6 +963,64 @@ mod tests {
             c.straggler.worker,
             StragglerModel::ShiftedExponential { shift: 0.1, mu: 5.0 }
         );
+    }
+
+    #[test]
+    fn serving_section_parsed_with_model_table() {
+        let c = ClusterConfig::from_json_text(
+            r#"{"code": {"n1": 3, "k1": 2, "n2": 3, "k2": 2},
+                "serving": {"queue_cap": 8, "default_deadline_ms": 250.0,
+                            "drain_ms": 1000,
+                            "models": [
+                              {"name": "a", "rows": 8, "cols": 4},
+                              {"name": "b", "rows": 16, "cols": 2, "seed": 7}
+                            ]}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.serving.queue_cap, 8);
+        assert_eq!(c.serving.default_deadline_ms, 250.0);
+        assert_eq!(c.serving.drain_ms, 1000.0);
+        assert_eq!(c.serving.models.len(), 2);
+        assert_eq!(c.serving.models[0].name, "a");
+        assert_eq!(c.serving.models[0].seed, 1, "index-derived default seed");
+        assert_eq!(c.serving.models[1].seed, 7);
+        // Absent section: defaults.
+        let d = ClusterConfig::from_json_text(
+            r#"{"code": {"n1": 3, "k1": 2, "n2": 3, "k2": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(d.serving, ServingConfig::default());
+    }
+
+    #[test]
+    fn serving_rejects_degenerate_values_at_parse_time() {
+        for bad in [
+            // Zero / malformed admission parameters.
+            r#""serving": {"queue_cap": 0}"#,
+            r#""serving": {"queue_cap": 2.5}"#,
+            r#""serving": {"default_deadline_ms": 0}"#,
+            r#""serving": {"default_deadline_ms": -5}"#,
+            r#""serving": {"default_deadline_ms": true}"#,
+            r#""serving": {"drain_ms": 0}"#,
+            // Model-table mistakes.
+            r#""serving": {"models": [{"name": "a", "rows": 8, "cols": 4},
+                                      {"name": "a", "rows": 8, "cols": 4}]}"#,
+            r#""serving": {"models": [{"name": "", "rows": 8, "cols": 4}]}"#,
+            r#""serving": {"models": [{"name": "a", "rows": 0, "cols": 4}]}"#,
+            r#""serving": {"models": [{"name": "a", "rows": 8, "cols": 0}]}"#,
+            r#""serving": {"models": [{"rows": 8, "cols": 4}]}"#,
+            r#""serving": {"models": [{"name": "a", "rows": 8, "cols": 4,
+                                       "seed": "x"}]}"#,
+            r#""serving": {"models": {"name": "a"}}"#,
+        ] {
+            let text = format!(
+                r#"{{"code": {{"n1": 3, "k1": 2, "n2": 3, "k2": 2}}, {bad}}}"#
+            );
+            assert!(
+                ClusterConfig::from_json_text(&text).is_err(),
+                "must reject: {bad}"
+            );
+        }
     }
 
     #[test]

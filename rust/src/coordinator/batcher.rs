@@ -1,32 +1,51 @@
-//! Request batcher: folds client requests into batched coded jobs.
+//! Request batcher: folds client requests into batched coded jobs —
+//! one **lane per model**, since requests for different models can
+//! never share a job.
 //!
-//! Waits up to `max_wait_ms` for up to `max_batch` requests, stacks
-//! their vectors into one `d × b` matrix `X`, pads `b` up to a batch
-//! width the backend's artifact set supports (extra columns are zero and
-//! sliced off at reply fan-out), and hands the job to the master. One
-//! coded job then serves the whole batch — amortizing straggler waits,
-//! decodes and PJRT dispatches across requests, and shaping worker
-//! GEMMs for the MXU (DESIGN.md §Hardware-Adaptation).
+//! Each lane waits up to `max_wait_ms` for up to `max_batch` requests,
+//! stacks their vectors into one `d × b` matrix `X`, pads `b` up to a
+//! batch width the backend's artifact set supports for that model's
+//! shard shape (extra columns are zero and sliced off at reply
+//! fan-out), and hands the job to the master. One coded job then serves
+//! the whole batch — amortizing straggler waits, decodes and PJRT
+//! dispatches across requests, and shaping worker GEMMs for the MXU
+//! (DESIGN.md §Hardware-Adaptation).
+//!
+//! The batcher is also half of admission control: it releases each
+//! request's queue reservation (`ModelEntry::queued` and the global
+//! `queue_depth` gauge) when the request leaves the queue — dispatched
+//! into a job, or **shed** with [`JobError::Deadline`] if its admission
+//! deadline expired while it waited. Within a flush, higher
+//! [`JobRequest::priority`] dispatches first (FIFO within a class).
+//!
+//! On channel close (all client senders gone — `shutdown` took the
+//! service's sender) the batcher flushes every lane's tail and sends
+//! [`MasterMsg::Drain`] behind the last batch, handing the master the
+//! drain baton.
 
 use crate::config::schema::BatchConfig;
 use crate::coordinator::messages::{
-    JobBroadcast, JobId, JobRequest, MasterMsg, ReplyRoute,
+    JobBroadcast, JobError, JobId, JobRequest, MasterMsg, ModelEntry, ModelId,
+    ReplyRoute,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::linalg::Matrix;
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
+/// One model's open batch window.
+struct Lane {
+    reqs: Vec<JobRequest>,
+    /// When this lane flushes even if under-full.
+    window: Instant,
+}
+
 /// Spawn the batcher thread.
-///
-/// `supported_widths`: `None` = any width (native backend); `Some(ws)` =
-/// pad to the smallest `w ∈ ws` with `w ≥ b` (PJRT artifact set).
 pub fn spawn(
-    d: usize,
     config: BatchConfig,
-    supported_widths: Option<Vec<usize>>,
     metrics: Arc<Metrics>,
     rx: mpsc::Receiver<JobRequest>,
     master: mpsc::Sender<MasterMsg>,
@@ -34,15 +53,14 @@ pub fn spawn(
     thread::Builder::new()
         .name("hiercode-batcher".to_string())
         .spawn(move || {
-            let max_batch = effective_max_batch(config.max_batch, supported_widths.as_deref());
             let max_wait = Duration::from_secs_f64(config.max_wait_ms / 1e3);
             let mut next_id = 0u64;
-            let mut pending: Vec<JobRequest> = Vec::new();
-            let mut deadline: Option<Instant> = None;
+            let mut lanes: HashMap<ModelId, Lane> = HashMap::new();
             loop {
-                // Wait for the first request (blocking) or until the
-                // current batch's deadline.
-                let msg = match deadline {
+                // Wait for the next request (blocking) or until the
+                // earliest lane window closes.
+                let next_window = lanes.values().map(|l| l.window).min();
+                let msg = match next_window {
                     None => match rx.recv() {
                         Ok(m) => Some(m),
                         Err(_) => break,
@@ -62,54 +80,57 @@ pub fn spawn(
                 };
                 match msg {
                     Some(req) => {
-                        if req.x.len() != d {
-                            let _ = req.reply.send(Err(format!(
-                                "request dimension {} != cluster dimension {d}",
-                                req.x.len()
-                            )));
-                            continue;
-                        }
-                        Metrics::inc(&metrics.requests);
-                        pending.push(req);
-                        if pending.len() == 1 {
-                            deadline = Some(Instant::now() + max_wait);
-                        }
-                        if pending.len() >= max_batch {
+                        let model = req.entry.id;
+                        let cap = effective_max_batch(
+                            config.max_batch,
+                            req.entry.supported_widths.as_deref(),
+                        );
+                        let lane = lanes.entry(model).or_insert_with(|| Lane {
+                            reqs: Vec::new(),
+                            window: Instant::now() + max_wait,
+                        });
+                        lane.reqs.push(req);
+                        if lane.reqs.len() >= cap {
+                            let mut lane =
+                                lanes.remove(&model).expect("lane just filled");
                             flush(
-                                &mut pending,
+                                &mut lane.reqs,
                                 &mut next_id,
-                                d,
-                                supported_widths.as_deref(),
+                                &config,
+                                &metrics,
                                 &master,
                             );
-                            deadline = None;
                         }
                     }
                     None => {
-                        // Deadline hit.
-                        if !pending.is_empty() {
+                        // A window deadline hit: flush every due lane.
+                        let now = Instant::now();
+                        let due: Vec<ModelId> = lanes
+                            .iter()
+                            .filter(|(_, l)| l.window <= now)
+                            .map(|(&m, _)| m)
+                            .collect();
+                        for model in due {
+                            let mut lane =
+                                lanes.remove(&model).expect("due lane exists");
                             flush(
-                                &mut pending,
+                                &mut lane.reqs,
                                 &mut next_id,
-                                d,
-                                supported_widths.as_deref(),
+                                &config,
+                                &metrics,
                                 &master,
                             );
                         }
-                        deadline = None;
                     }
                 }
             }
-            // Channel closed: flush the tail.
-            if !pending.is_empty() {
-                flush(
-                    &mut pending,
-                    &mut next_id,
-                    d,
-                    supported_widths.as_deref(),
-                    &master,
-                );
+            // Channel closed (shutdown): flush every tail, then hand
+            // the master the drain baton — behind the last batch, so
+            // nothing accepted is ever dropped.
+            for (_, mut lane) in lanes.drain() {
+                flush(&mut lane.reqs, &mut next_id, &config, &metrics, &master);
             }
+            let _ = master.send(MasterMsg::Drain);
         })
         .expect("failed to spawn batcher thread")
 }
@@ -126,34 +147,89 @@ pub fn effective_max_batch(configured: usize, supported: Option<&[usize]>) -> us
     }
 }
 
+/// Release one request's admission reservation.
+fn release(metrics: &Metrics, entry: &ModelEntry) {
+    Metrics::dec(&metrics.queue_depth);
+    Metrics::dec(&entry.queued);
+}
+
+/// Flush one lane: shed expired requests, order by priority, dispatch
+/// the rest in `≤ effective_max_batch` chunks.
 fn flush(
-    pending: &mut Vec<JobRequest>,
+    reqs: &mut Vec<JobRequest>,
     next_id: &mut u64,
-    d: usize,
-    supported: Option<&[usize]>,
+    config: &BatchConfig,
+    metrics: &Metrics,
     master: &mpsc::Sender<MasterMsg>,
 ) {
-    let b = pending.len();
-    let width = match crate::coordinator::backend::pick_batch_width(supported, b) {
+    if reqs.is_empty() {
+        return;
+    }
+    // Deadline shedding: expired requests leave the queue here, with an
+    // explicit error — never silently buffered.
+    let now = Instant::now();
+    let mut kept: Vec<JobRequest> = Vec::with_capacity(reqs.len());
+    for req in reqs.drain(..) {
+        if req.deadline <= now {
+            Metrics::inc(&metrics.shed);
+            Metrics::inc(&req.entry.shed);
+            release(metrics, &req.entry);
+            req.slot.complete(Err(JobError::Deadline));
+        } else {
+            kept.push(req);
+        }
+    }
+    // Higher priority dispatches first; the sort is stable, so equal
+    // priorities keep submit order.
+    kept.sort_by_key(|r| std::cmp::Reverse(r.priority));
+    while !kept.is_empty() {
+        let entry = Arc::clone(&kept[0].entry);
+        let cap = effective_max_batch(
+            config.max_batch,
+            entry.supported_widths.as_deref(),
+        );
+        let take = cap.min(kept.len());
+        let chunk: Vec<JobRequest> = kept.drain(..take).collect();
+        dispatch(chunk, &entry, next_id, metrics, master);
+    }
+}
+
+/// Turn one chunk of same-model requests into a batched job.
+fn dispatch(
+    chunk: Vec<JobRequest>,
+    entry: &Arc<ModelEntry>,
+    next_id: &mut u64,
+    metrics: &Metrics,
+    master: &mpsc::Sender<MasterMsg>,
+) {
+    let b = chunk.len();
+    let width = match crate::coordinator::backend::pick_batch_width(
+        entry.supported_widths.as_deref(),
+        b,
+    ) {
         Ok(w) => w,
         Err(e) => {
-            for req in pending.drain(..) {
-                let _ = req.reply.send(Err(format!("{e}")));
+            for req in chunk {
+                release(metrics, &req.entry);
+                req.slot.complete(Err(JobError::Failed(format!("{e}"))));
             }
             return;
         }
     };
     // Stack request vectors into X (d × width), zero-padded.
-    let mut x = Matrix::zeros(d, width);
+    let mut x = Matrix::zeros(entry.d, width);
     let mut replies = Vec::with_capacity(b);
-    for (col, req) in pending.drain(..).enumerate() {
+    for (col, req) in chunk.into_iter().enumerate() {
         for (row, &v) in req.x.iter().enumerate() {
             x[(row, col)] = v;
         }
+        release(metrics, &req.entry);
         replies.push(ReplyRoute {
-            reply: req.reply,
+            entry: Arc::clone(&req.entry),
+            slot: req.slot,
             column: col,
             submitted_at: req.submitted_at,
+            deadline: req.deadline,
             req_id: req.req_id,
         });
     }
@@ -162,6 +238,8 @@ fn flush(
     let _ = master.send(MasterMsg::Batch {
         job: JobBroadcast {
             id,
+            model: entry.id,
+            out_rows: entry.m,
             x: Arc::new(x),
         },
         replies,
@@ -171,24 +249,51 @@ fn flush(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::messages::{CompletionSlot, ModelId, RequestId};
+    use std::sync::atomic::Ordering;
 
-    fn mk_request(d: usize, v: f64) -> (JobRequest, mpsc::Receiver<Result<Vec<f64>, String>>) {
-        let (tx, rx) = mpsc::channel();
+    fn mk_entry(d: usize, widths: Option<Vec<usize>>) -> Arc<ModelEntry> {
+        Arc::new(ModelEntry::new(ModelId(0), "default", d, 4 * d, 1024, widths))
+    }
+
+    fn mk_entry_id(id: u32, d: usize) -> Arc<ModelEntry> {
+        Arc::new(ModelEntry::new(
+            ModelId(id),
+            &format!("m{id}"),
+            d,
+            4 * d,
+            1024,
+            None,
+        ))
+    }
+
+    fn mk_request(
+        entry: &Arc<ModelEntry>,
+        v: f64,
+        req: u64,
+    ) -> (JobRequest, Arc<CompletionSlot>) {
+        let slot = Arc::new(CompletionSlot::new());
         (
             JobRequest {
-                x: vec![v; d],
-                reply: tx,
+                entry: Arc::clone(entry),
+                x: vec![v; entry.d],
+                slot: Arc::clone(&slot),
                 submitted_at: Instant::now(),
-                req_id: crate::coordinator::messages::RequestId(v.to_bits()),
+                deadline: Instant::now() + Duration::from_secs(60),
+                priority: 0,
+                req_id: RequestId(req),
             },
-            rx,
+            slot,
         )
     }
 
     fn recv_batch(master_rx: &mpsc::Receiver<MasterMsg>) -> (JobBroadcast, Vec<ReplyRoute>) {
-        match master_rx.recv_timeout(Duration::from_secs(5)).unwrap() {
-            MasterMsg::Batch { job, replies } => (job, replies),
-            other => panic!("unexpected {other:?}"),
+        loop {
+            match master_rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                MasterMsg::Batch { job, replies } => return (job, replies),
+                MasterMsg::Drain => continue,
+                other => panic!("unexpected {other:?}"),
+            }
         }
     }
 
@@ -198,22 +303,23 @@ mod tests {
         let (master_tx, master_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
         let _h = spawn(
-            3,
             BatchConfig {
                 max_batch: 2,
                 max_wait_ms: 10_000.0, // deadline never fires in this test
             },
-            None,
             metrics,
             req_rx,
             master_tx,
         );
-        let (r1, _rx1) = mk_request(3, 1.0);
-        let (r2, _rx2) = mk_request(3, 2.0);
+        let entry = mk_entry(3, None);
+        let (r1, _s1) = mk_request(&entry, 1.0, 0);
+        let (r2, _s2) = mk_request(&entry, 2.0, 1);
         req_tx.send(r1).unwrap();
         req_tx.send(r2).unwrap();
         let (job, replies) = recv_batch(&master_rx);
         assert_eq!(job.x.shape(), (3, 2));
+        assert_eq!(job.out_rows, 12);
+        assert_eq!(job.model, entry.id);
         assert_eq!(job.x[(0, 0)], 1.0);
         assert_eq!(job.x[(0, 1)], 2.0);
         assert_eq!(replies.len(), 2);
@@ -225,17 +331,16 @@ mod tests {
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
         let _h = spawn(
-            2,
             BatchConfig {
                 max_batch: 100,
                 max_wait_ms: 20.0,
             },
-            None,
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
         );
-        let (r1, _rx1) = mk_request(2, 5.0);
+        let entry = mk_entry(2, None);
+        let (r1, _s1) = mk_request(&entry, 5.0, 0);
         req_tx.send(r1).unwrap();
         let t0 = Instant::now();
         let (job, replies) = recv_batch(&master_rx);
@@ -249,18 +354,17 @@ mod tests {
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
         let _h = spawn(
-            2,
             BatchConfig {
                 max_batch: 3,
                 max_wait_ms: 20.0,
             },
-            Some(vec![1, 4, 8]),
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
         );
-        for v in [1.0, 2.0, 3.0] {
-            let (r, _rx) = mk_request(2, v);
+        let entry = mk_entry(2, Some(vec![1, 4, 8]));
+        for (i, v) in [1.0, 2.0, 3.0].into_iter().enumerate() {
+            let (r, _s) = mk_request(&entry, v, i as u64);
             req_tx.send(r).unwrap();
         }
         let (job, replies) = recv_batch(&master_rx);
@@ -268,24 +372,6 @@ mod tests {
         assert_eq!(job.x.shape(), (2, 4));
         assert_eq!(job.x[(0, 3)], 0.0, "pad column must be zero");
         assert_eq!(replies.len(), 3);
-    }
-
-    #[test]
-    fn wrong_dimension_rejected_immediately() {
-        let (req_tx, req_rx) = mpsc::channel();
-        let (master_tx, _master_rx) = mpsc::channel();
-        let _h = spawn(
-            4,
-            BatchConfig::default(),
-            None,
-            Arc::new(Metrics::new()),
-            req_rx,
-            master_tx,
-        );
-        let (r, rx) = mk_request(3, 1.0); // wrong d
-        req_tx.send(r).unwrap();
-        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert!(resp.is_err());
     }
 
     #[test]
@@ -325,17 +411,16 @@ mod tests {
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
         let _h = spawn(
-            2,
             BatchConfig {
                 max_batch: 4,
                 max_wait_ms: 10.0,
             },
-            Some(vec![4, 8]),
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
         );
-        let (r, _rx) = mk_request(2, 9.0);
+        let entry = mk_entry(2, Some(vec![4, 8]));
+        let (r, _s) = mk_request(&entry, 9.0, 0);
         req_tx.send(r).unwrap();
         let (job, replies) = recv_batch(&master_rx);
         assert_eq!(job.x.shape(), (2, 4));
@@ -353,18 +438,17 @@ mod tests {
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
         let _h = spawn(
-            1,
             BatchConfig {
                 max_batch: 5,
                 max_wait_ms: 10_000.0,
             },
-            Some(vec![1, 2]),
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
         );
-        for v in [1.0, 2.0, 3.0, 4.0] {
-            let (r, _rx) = mk_request(1, v);
+        let entry = mk_entry(1, Some(vec![1, 2]));
+        for (i, v) in [1.0, 2.0, 3.0, 4.0].into_iter().enumerate() {
+            let (r, _s) = mk_request(&entry, v, i as u64);
             req_tx.send(r).unwrap();
         }
         let (job1, replies1) = recv_batch(&master_rx);
@@ -383,22 +467,21 @@ mod tests {
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
         let _h = spawn(
-            1,
             BatchConfig {
                 max_batch: 4,
                 max_wait_ms: 50.0,
             },
-            None,
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
         );
+        let entry = mk_entry(1, None);
         let n = 25;
-        let mut rxs = Vec::new();
+        let mut slots = Vec::new();
         for i in 0..n {
-            let (r, rx) = mk_request(1, i as f64);
+            let (r, s) = mk_request(&entry, i as f64, i as u64);
             req_tx.send(r).unwrap();
-            rxs.push(rx);
+            slots.push(s);
         }
         let mut seen = 0;
         while seen < n {
@@ -410,5 +493,143 @@ mod tests {
             }
         }
         assert_eq!(seen, n);
+    }
+
+    #[test]
+    fn models_batch_in_separate_lanes() {
+        // Requests for different models never share a job, even when
+        // interleaved within one batch window.
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let _h = spawn(
+            BatchConfig {
+                max_batch: 2,
+                max_wait_ms: 10_000.0,
+            },
+            Arc::new(Metrics::new()),
+            req_rx,
+            master_tx,
+        );
+        let e0 = mk_entry_id(0, 1);
+        let e1 = mk_entry_id(1, 1);
+        for (i, e) in [&e0, &e1, &e0, &e1].into_iter().enumerate() {
+            let (r, _s) = mk_request(e, i as f64, i as u64);
+            req_tx.send(r).unwrap();
+        }
+        let (job1, _) = recv_batch(&master_rx);
+        let (job2, _) = recv_batch(&master_rx);
+        // Both lanes flushed at cap 2, single-model each.
+        assert_ne!(job1.model, job2.model);
+        assert_eq!(job1.x.shape(), (1, 2));
+        assert_eq!(job2.x.shape(), (1, 2));
+    }
+
+    #[test]
+    fn higher_priority_dispatches_first_within_flush() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let _h = spawn(
+            BatchConfig {
+                max_batch: 2,
+                max_wait_ms: 30.0,
+            },
+            Arc::new(Metrics::new()),
+            req_rx,
+            master_tx,
+        );
+        let entry = mk_entry(1, None);
+        // r0 (prio 0) and r2 (prio 5) fill the first cap-2 flush: the
+        // higher priority takes column 0 despite arriving second. r1
+        // (prio -1) rides the next window alone.
+        let (r0, _s0) = mk_request(&entry, 0.0, 0);
+        let (mut r1, _s1) = mk_request(&entry, 1.0, 1);
+        r1.priority = -1;
+        let (mut r2, _s2) = mk_request(&entry, 2.0, 2);
+        r2.priority = 5;
+        req_tx.send(r0).unwrap();
+        req_tx.send(r2).unwrap();
+        req_tx.send(r1).unwrap();
+        let (job1, replies1) = recv_batch(&master_rx);
+        // First chunk: priorities 0 and 5 sorted → 2.0 (prio 5) first.
+        assert_eq!(replies1.len(), 2);
+        assert_eq!(job1.x[(0, 0)], 2.0, "high priority takes column 0");
+        assert_eq!(job1.x[(0, 1)], 0.0);
+        let (job2, replies2) = recv_batch(&master_rx);
+        assert_eq!(replies2.len(), 1);
+        assert_eq!(job2.x[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn expired_requests_shed_with_deadline_error_and_counters_released() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let _h = spawn(
+            BatchConfig {
+                max_batch: 8,
+                max_wait_ms: 30.0,
+            },
+            Arc::clone(&metrics),
+            req_rx,
+            master_tx,
+        );
+        let entry = mk_entry(1, None);
+        // Simulate the admission reservation the client side makes.
+        entry.queued.fetch_add(2, Ordering::Relaxed);
+        metrics.queue_depth.fetch_add(2, Ordering::Relaxed);
+        let (mut dead, dead_slot) = mk_request(&entry, 1.0, 0);
+        dead.deadline = Instant::now() - Duration::from_millis(1);
+        let (live, _live_slot) = mk_request(&entry, 2.0, 1);
+        req_tx.send(dead).unwrap();
+        req_tx.send(live).unwrap();
+        let (job, replies) = recv_batch(&master_rx);
+        // Only the live request dispatched.
+        assert_eq!(replies.len(), 1);
+        assert_eq!(job.x[(0, 0)], 2.0);
+        // The shed one got its Deadline error and was accounted once.
+        assert_eq!(dead_slot.wait(), Err(JobError::Deadline));
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(entry.shed.load(Ordering::Relaxed), 1);
+        // Both reservations released (shed + dispatched).
+        assert_eq!(entry.queued.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn closing_the_channel_flushes_tails_and_sends_drain() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let h = spawn(
+            BatchConfig {
+                max_batch: 100,
+                max_wait_ms: 10_000.0, // window won't fire: drain must
+            },
+            Arc::new(Metrics::new()),
+            req_rx,
+            master_tx,
+        );
+        let e0 = mk_entry_id(0, 1);
+        let e1 = mk_entry_id(1, 1);
+        let (r0, _s0) = mk_request(&e0, 1.0, 0);
+        let (r1, _s1) = mk_request(&e1, 2.0, 1);
+        req_tx.send(r0).unwrap();
+        req_tx.send(r1).unwrap();
+        drop(req_tx);
+        h.join().unwrap();
+        // Two tail batches (one per lane), then Drain, in that order.
+        let mut batches = 0;
+        let mut drained = false;
+        while let Ok(msg) = master_rx.try_recv() {
+            match msg {
+                MasterMsg::Batch { .. } => {
+                    assert!(!drained, "no batch may follow Drain");
+                    batches += 1;
+                }
+                MasterMsg::Drain => drained = true,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(batches, 2);
+        assert!(drained, "batcher must hand the master the drain baton");
     }
 }

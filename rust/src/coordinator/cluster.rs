@@ -1,6 +1,25 @@
-//! The public facade: launch a cluster around a matrix `A` with any
-//! coding scheme, submit requests, collect results, read metrics, shut
-//! down cleanly.
+//! The multi-tenant job service facade.
+//!
+//! The serving API splits ownership in two:
+//!
+//! * [`ClusterCore`] **owns** the thread tree (master, submasters,
+//!   workers, batcher) and the model registry. It launches from config
+//!   alone — no matrix — and named computations ("models") are
+//!   registered at runtime with [`ClusterCore::register_model`]: each
+//!   registration encodes the matrix and ships one shard per worker.
+//! * [`ClientHandle`] is the cheap, cloneable, `Send` submission
+//!   surface handed to every tenant. Each submission carries
+//!   [`SubmitOptions`] (model name, deadline, priority) and passes
+//!   **admission control**: a bounded per-model queue that bounces
+//!   excess submissions with [`Error::Busy`] instead of buffering
+//!   without bound, plus deadline-expired shedding downstream in the
+//!   batcher and master.
+//!
+//! A submission yields a [`JobHandle`] backed by a shared completion
+//! slot — `try_wait` polls, `wait`/`wait_timeout` block — so handles
+//! can cross threads freely. Graceful shutdown **drains**: accepted
+//! work is completed (or failed within the drain grace); no handle ever
+//! hangs.
 //!
 //! The cluster is generic over [`CodedScheme`]: `config.code.scheme`
 //! selects `hierarchical | mds | product | replication | polynomial`,
@@ -8,14 +27,21 @@
 //! schemes with splittable decodes (hierarchical) decode inside the
 //! submasters, the rest relay raw products to the master's streaming
 //! decode session.
+//!
+//! [`Cluster`] remains as the single-tenant convenience facade
+//! (`launch(&config, &A)` = core + one model named
+//! [`DEFAULT_MODEL`]).
 
 use crate::coding::CodedScheme;
 use crate::coordinator::backend::{ComputeBackend, WorkerShard};
 use crate::coordinator::batcher;
 use crate::coordinator::fault::FaultConfig;
 use crate::coordinator::master;
-use crate::coordinator::messages::{JobRequest, MasterMsg, RequestId, SubmasterMsg, WorkerCmd};
-use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::messages::{
+    CompletionSlot, JobRequest, MasterMsg, ModelEntry, ModelId, RequestId,
+    SubmasterMsg, WorkerCmd,
+};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot, ModelMetricsSnapshot};
 use crate::coordinator::submaster::{self, LinkDelay};
 use crate::coordinator::worker::{self, WorkerDelay};
 use crate::config::schema::ClusterConfig;
@@ -23,14 +49,91 @@ use crate::linalg::Matrix;
 use crate::runtime::PjrtRuntime;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, RwLock};
 use std::thread;
+use std::time::{Duration, Instant};
 
-/// Handle to one in-flight request.
+/// The model name [`Cluster::launch`] registers its matrix under, and
+/// the default target of [`SubmitOptions`].
+pub const DEFAULT_MODEL: &str = "default";
+
+/// Per-submission options: which model, how long the request may wait
+/// for dispatch, and its batching priority.
+#[derive(Clone, Debug)]
+pub struct SubmitOptions {
+    /// Target model name (default [`DEFAULT_MODEL`]).
+    pub model: String,
+    /// Admission deadline: if the request is still queued (batcher or
+    /// master inbox) past this duration it is shed with
+    /// [`Error::DeadlineExceeded`]. `None` = the config's
+    /// `serving.default_deadline_ms`.
+    pub deadline: Option<Duration>,
+    /// Batching priority: higher dispatches first within a flush
+    /// (FIFO among equals). Default 0.
+    pub priority: i32,
+}
+
+impl Default for SubmitOptions {
+    fn default() -> Self {
+        Self {
+            model: DEFAULT_MODEL.to_string(),
+            deadline: None,
+            priority: 0,
+        }
+    }
+}
+
+impl SubmitOptions {
+    /// Options targeting `model` with default deadline and priority.
+    pub fn to_model(model: &str) -> Self {
+        Self {
+            model: model.to_string(),
+            ..Self::default()
+        }
+    }
+
+    /// Set an explicit admission deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set the batching priority.
+    pub fn with_priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+}
+
+/// State shared between the core and every client handle.
+struct ServiceState {
+    /// Registered models by name.
+    models: RwLock<HashMap<String, Arc<ModelEntry>>>,
+    /// The batcher's request channel. `shutdown` takes it; submissions
+    /// clone the sender under the read lock, so every send that
+    /// succeeds is processed before the batcher sees disconnect —
+    /// accepted work is never dropped.
+    req_tx: RwLock<Option<mpsc::Sender<JobRequest>>>,
+    /// Master channel (for cancellation).
+    master_tx: mpsc::Sender<MasterMsg>,
+    /// Shared metrics sink.
+    metrics: Arc<Metrics>,
+    /// Flips false at shutdown: new submissions are refused.
+    accepting: AtomicBool,
+    /// Request-id allocator.
+    next_req: AtomicU64,
+    /// Applied when `SubmitOptions::deadline` is `None`.
+    default_deadline: Duration,
+}
+
+/// Handle to one in-flight request, backed by a shared completion slot:
+/// `Send`, pollable, and guaranteed to resolve — the drain protocol
+/// completes or fails every accepted request's slot.
+#[derive(Debug)]
 pub struct JobHandle {
-    rx: mpsc::Receiver<std::result::Result<Vec<f64>, String>>,
+    slot: Arc<CompletionSlot>,
     master: mpsc::Sender<MasterMsg>,
     req_id: RequestId,
 }
@@ -38,31 +141,26 @@ pub struct JobHandle {
 impl JobHandle {
     /// Block until the result arrives.
     pub fn wait(self) -> Result<Vec<f64>> {
-        match self.rx.recv() {
-            Ok(Ok(y)) => Ok(y),
-            Ok(Err(msg)) => Err(Error::Coordinator(msg)),
-            Err(_) => Err(Error::Coordinator(
-                "cluster shut down before replying".into(),
-            )),
-        }
+        self.slot.wait().map_err(Error::from)
     }
 
     /// Block with a timeout. On timeout the request is **cancelled**:
     /// the master drops its reply route and, once no client waits on
     /// the underlying job, cancels the job itself — so abandoned jobs
     /// leak neither decode work nor master-side state.
-    pub fn wait_timeout(self, timeout: std::time::Duration) -> Result<Vec<f64>> {
-        match self.rx.recv_timeout(timeout) {
-            Ok(Ok(y)) => Ok(y),
-            Ok(Err(msg)) => Err(Error::Coordinator(msg)),
-            Err(mpsc::RecvTimeoutError::Timeout) => {
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Vec<f64>> {
+        match self.slot.wait_timeout(timeout) {
+            Some(outcome) => outcome.map_err(Error::from),
+            None => {
                 let _ = self.master.send(MasterMsg::CancelRequest(self.req_id));
                 Err(Error::Coordinator("request timed out".into()))
             }
-            Err(mpsc::RecvTimeoutError::Disconnected) => Err(Error::Coordinator(
-                "cluster shut down before replying".into(),
-            )),
         }
+    }
+
+    /// Non-blocking poll: `Some` exactly once, when the outcome is in.
+    pub fn try_wait(&self) -> Option<Result<Vec<f64>>> {
+        self.slot.try_take().map(|r| r.map_err(Error::from))
     }
 
     /// Abandon the request without waiting.
@@ -71,65 +169,160 @@ impl JobHandle {
     }
 }
 
-/// A running coded-computation cluster.
-pub struct Cluster {
-    req_tx: Option<mpsc::Sender<JobRequest>>,
-    master_tx: mpsc::Sender<MasterMsg>,
-    metrics: Arc<Metrics>,
-    threads: Vec<thread::JoinHandle<()>>,
-    d: usize,
-    m: usize,
-    scheme: Arc<dyn CodedScheme>,
-    next_req: AtomicU64,
+/// A cheap, cloneable, `Send + Sync` submission surface onto a running
+/// [`ClusterCore`]. Every tenant thread gets its own clone.
+#[derive(Clone)]
+pub struct ClientHandle {
+    state: Arc<ServiceState>,
 }
 
-impl Cluster {
-    /// Launch a cluster serving products with `a` (`m × d`), using the
-    /// given config and no faults.
-    pub fn launch(config: &ClusterConfig, a: &Matrix) -> Result<Self> {
-        Self::launch_with_faults(config, a, FaultConfig::none())
+impl ClientHandle {
+    /// Submit `x` to the default model with default options.
+    pub fn submit(&self, x: Vec<f64>) -> Result<JobHandle> {
+        self.submit_with(x, SubmitOptions::default())
+    }
+
+    /// Submit `x` to a named model with default options.
+    pub fn submit_to(&self, model: &str, x: Vec<f64>) -> Result<JobHandle> {
+        self.submit_with(x, SubmitOptions::to_model(model))
+    }
+
+    /// Submit `x` with full [`SubmitOptions`]. Nonblocking: admission
+    /// control answers immediately — [`Error::Busy`] when the model's
+    /// queue is at capacity, [`Error::InvalidParams`] for unknown
+    /// models or dimension mismatches.
+    pub fn submit_with(&self, x: Vec<f64>, opts: SubmitOptions) -> Result<JobHandle> {
+        if !self.state.accepting.load(Ordering::Acquire) {
+            return Err(Error::Coordinator("cluster is shutting down".into()));
+        }
+        let entry = self
+            .state
+            .models
+            .read()
+            .expect("model table poisoned")
+            .get(&opts.model)
+            .cloned()
+            .ok_or_else(|| {
+                Error::InvalidParams(format!(
+                    "unknown model '{}' (register it on the ClusterCore first)",
+                    opts.model
+                ))
+            })?;
+        if x.len() != entry.d {
+            return Err(Error::InvalidParams(format!(
+                "request dimension {} != model '{}' dimension {}",
+                x.len(),
+                entry.name,
+                entry.d
+            )));
+        }
+        // Admission control: reserve a queue slot or bounce. The
+        // reservation is released by the batcher at dispatch or shed.
+        let cap = entry.cap as u64;
+        if entry
+            .queued
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |q| {
+                if q < cap {
+                    Some(q + 1)
+                } else {
+                    None
+                }
+            })
+            .is_err()
+        {
+            Metrics::inc(&self.state.metrics.rejected);
+            Metrics::inc(&entry.rejected);
+            return Err(Error::Busy {
+                model: entry.name.clone(),
+            });
+        }
+        Metrics::inc(&self.state.metrics.queue_depth);
+        Metrics::inc(&self.state.metrics.requests);
+        Metrics::inc(&entry.accepted);
+        let submitted_at = Instant::now();
+        let deadline =
+            submitted_at + opts.deadline.unwrap_or(self.state.default_deadline);
+        let req_id = RequestId(self.state.next_req.fetch_add(1, Ordering::Relaxed));
+        let slot = Arc::new(CompletionSlot::new());
+        // Clone the sender under the read lock: a send that succeeds is
+        // then guaranteed to precede the batcher's disconnect.
+        let sent = {
+            let guard = self.state.req_tx.read().expect("request channel poisoned");
+            match guard.as_ref() {
+                Some(tx) => tx
+                    .send(JobRequest {
+                        entry: Arc::clone(&entry),
+                        x,
+                        slot: Arc::clone(&slot),
+                        submitted_at,
+                        deadline,
+                        priority: opts.priority,
+                        req_id,
+                    })
+                    .is_ok(),
+                None => false,
+            }
+        };
+        if !sent {
+            // Shutdown raced us: roll the reservation back.
+            Metrics::dec(&self.state.metrics.queue_depth);
+            Metrics::dec(&entry.queued);
+            Metrics::dec(&self.state.metrics.requests);
+            Metrics::dec(&entry.accepted);
+            return Err(Error::Coordinator("cluster is shutting down".into()));
+        }
+        Ok(JobHandle {
+            slot,
+            master: self.state.master_tx.clone(),
+            req_id,
+        })
+    }
+
+    /// `(rows, cols)` of a registered model, or `None` if unknown.
+    pub fn model_dims(&self, model: &str) -> Option<(usize, usize)> {
+        self.state
+            .models
+            .read()
+            .expect("model table poisoned")
+            .get(model)
+            .map(|e| (e.m, e.d))
+    }
+}
+
+/// The owning half of the job service: thread tree + model registry.
+pub struct ClusterCore {
+    state: Arc<ServiceState>,
+    scheme: Arc<dyn CodedScheme>,
+    backend: ComputeBackend,
+    /// Worker channels in flat `(group, index)` order — registration
+    /// ships shard `i` to `worker_txs[i]`.
+    worker_txs: Vec<mpsc::Sender<WorkerCmd>>,
+    threads: Vec<thread::JoinHandle<()>>,
+    /// Joined first at shutdown (see `shutdown_inner`): the drain
+    /// protocol must not depend on this thread being healthy.
+    batcher: Option<thread::JoinHandle<()>>,
+    next_model: AtomicU32,
+    queue_cap: usize,
+}
+
+impl ClusterCore {
+    /// Launch the service tree from config alone (no model yet), then
+    /// register the config's `serving.models` table.
+    pub fn launch(config: &ClusterConfig) -> Result<Self> {
+        Self::launch_with_faults(config, FaultConfig::none())
     }
 
     /// Launch with fault injection (tests / chaos runs).
-    pub fn launch_with_faults(
-        config: &ClusterConfig,
-        a: &Matrix,
-        faults: FaultConfig,
-    ) -> Result<Self> {
+    pub fn launch_with_faults(config: &ClusterConfig, faults: FaultConfig) -> Result<Self> {
         // Build via the config so `runtime.decode_threads` reaches every
         // decoder session the master and submasters open.
         let scheme = config.build_scheme()?;
-        let (m, d) = a.shape();
-        let div = scheme.row_divisor();
-        if m % div != 0 {
-            return Err(Error::InvalidParams(format!(
-                "matrix rows {m} not divisible by the {} scheme's row divisor {div}",
-                scheme.name()
-            )));
-        }
         // Backend.
         let backend = if config.runtime.use_pjrt {
             ComputeBackend::Pjrt(PjrtRuntime::start(config.runtime.artifact_dir.clone())?)
         } else {
             ComputeBackend::Native
         };
-        // Encode A (setup path, f64) and narrow shards for the workers.
-        let shards = scheme.encode(a)?;
-        debug_assert_eq!(shards.len(), scheme.num_workers());
-        let shard_shape = (shards[0].rows(), shards[0].cols());
-        let supported_widths =
-            backend.supported_batch_widths(shard_shape.0, shard_shape.1);
-        if let Some(ws) = &supported_widths {
-            if ws.is_empty() {
-                return Err(Error::Runtime(format!(
-                    "no worker artifact for shard shape {}x{} — \
-                     add (r={}, d={}, b=…) to python/compile/aot.py WORKER_SPECS \
-                     and re-run `make artifacts`",
-                    shard_shape.0, shard_shape.1, shard_shape.0, shard_shape.1
-                )));
-            }
-        }
-
         // The scenario layer: per-group worker counts, recovery
         // thresholds, straggler profiles and dead-worker sets all come
         // from the scheme's Topology — the same value the simulator
@@ -162,8 +355,8 @@ impl Cluster {
         let (master_tx, master_rx) = mpsc::channel::<MasterMsg>();
         let mut threads = Vec::new();
         let mut submaster_txs = Vec::with_capacity(topology.n2());
+        let mut worker_txs = Vec::with_capacity(scheme.num_workers());
 
-        let mut offset = 0usize;
         for (g, spec) in topology.groups.iter().enumerate() {
             let (sub_tx, sub_rx) = mpsc::channel::<SubmasterMsg>();
             let cancel = Arc::new(crate::coordinator::messages::CancelSet::new());
@@ -172,9 +365,8 @@ impl Cluster {
             // too), so they compose.
             let group_scale = config.straggler.scale * spec.slowdown();
             // Workers of this group, with the group's straggler profile.
-            let mut worker_txs = Vec::with_capacity(spec.n1);
+            let mut group_worker_txs = Vec::with_capacity(spec.n1);
             for j in 0..spec.n1 {
-                let shard = &shards[offset + j];
                 let (w_tx, w_rx) = mpsc::channel::<WorkerCmd>();
                 let delay = WorkerDelay {
                     model: spec.worker,
@@ -185,7 +377,6 @@ impl Cluster {
                 threads.push(worker::spawn(
                     g,
                     j,
-                    WorkerShard::new(shard)?,
                     backend.clone(),
                     delay,
                     dead,
@@ -194,7 +385,7 @@ impl Cluster {
                     w_rx,
                     sub_tx.clone(),
                 ));
-                worker_txs.push(w_tx);
+                group_worker_txs.push(w_tx);
             }
             let link = LinkDelay {
                 model: spec.link,
@@ -203,10 +394,9 @@ impl Cluster {
             };
             threads.push(submaster::spawn(
                 g,
-                offset,
+                worker_txs.len(),
                 Arc::clone(&scheme),
-                m,
-                worker_txs,
+                group_worker_txs.clone(),
                 link,
                 faults.link_dead(g),
                 Arc::clone(&cancel),
@@ -216,84 +406,160 @@ impl Cluster {
                 master_tx.clone(),
             ));
             submaster_txs.push(sub_tx);
-            offset += spec.n1;
+            worker_txs.extend(group_worker_txs);
         }
         threads.push(master::spawn(
             Arc::clone(&scheme),
             submaster_txs,
-            m,
             Arc::clone(&metrics),
+            Duration::from_secs_f64(config.serving.drain_ms / 1e3),
             master_rx,
         ));
         let (req_tx, req_rx) = mpsc::channel::<JobRequest>();
-        threads.push(batcher::spawn(
-            d,
+        let batcher = batcher::spawn(
             config.batching.clone(),
-            supported_widths,
             Arc::clone(&metrics),
             req_rx,
             master_tx.clone(),
-        ));
-        crate::log_info!(
-            "cluster",
-            "launched {} ({} workers in {} groups) over {}x{} matrix, backend={}, {} threads",
-            scheme.name(),
-            scheme.num_workers(),
-            topology.n2(),
-            m,
-            d,
-            if config.runtime.use_pjrt { "pjrt" } else { "native" },
-            threads.len()
         );
-        Ok(Self {
-            req_tx: Some(req_tx),
+        let state = Arc::new(ServiceState {
+            models: RwLock::new(HashMap::new()),
+            req_tx: RwLock::new(Some(req_tx)),
             master_tx,
             metrics,
-            threads,
-            d,
-            m,
-            scheme,
+            accepting: AtomicBool::new(true),
             next_req: AtomicU64::new(0),
-        })
+            default_deadline: Duration::from_secs_f64(
+                config.serving.default_deadline_ms / 1e3,
+            ),
+        });
+        let core = Self {
+            state,
+            scheme,
+            backend,
+            worker_txs,
+            threads,
+            batcher: Some(batcher),
+            next_model: AtomicU32::new(0),
+            queue_cap: config.serving.queue_cap,
+        };
+        crate::log_info!(
+            "cluster",
+            "service up: {} ({} workers in {} groups), backend={}, {} threads, \
+             queue cap {}/model",
+            core.scheme.name(),
+            core.scheme.num_workers(),
+            topology.n2(),
+            if config.runtime.use_pjrt { "pjrt" } else { "native" },
+            core.threads.len(),
+            core.queue_cap
+        );
+        // The config's model table (synthetic seeded matrices — the
+        // serve/loadgen multi-tenant setup in config form).
+        for spec in &config.serving.models {
+            let mut mr = Rng::new(spec.seed);
+            let a = Matrix::from_fn(spec.rows, spec.cols, |_, _| mr.uniform(-1.0, 1.0));
+            core.register_model(&spec.name, &a)?;
+        }
+        Ok(core)
     }
 
-    /// Submit a request `x` (`d` elements); returns a handle to wait on
-    /// for `A·x` (`m` elements).
-    pub fn submit(&self, x: Vec<f64>) -> Result<JobHandle> {
-        if x.len() != self.d {
+    /// Register a named computation: encode `a`, ship one shard per
+    /// worker, and open the model for submissions. Channel FIFO
+    /// guarantees the shards precede any job that multiplies them, so
+    /// submissions may begin the moment this returns.
+    pub fn register_model(&self, name: &str, a: &Matrix) -> Result<()> {
+        if name.is_empty() {
+            return Err(Error::InvalidParams(
+                "model name must be non-empty".into(),
+            ));
+        }
+        let (m, d) = a.shape();
+        let div = self.scheme.row_divisor();
+        if m % div != 0 {
             return Err(Error::InvalidParams(format!(
-                "request dimension {} != cluster dimension {}",
-                x.len(),
-                self.d
+                "model '{name}': matrix rows {m} not divisible by the {} \
+                 scheme's row divisor {div}",
+                self.scheme.name()
             )));
         }
-        let req_id = RequestId(self.next_req.fetch_add(1, Ordering::Relaxed));
-        let (reply, rx) = mpsc::channel();
-        self.req_tx
-            .as_ref()
-            .expect("cluster running")
-            .send(JobRequest {
-                x,
-                reply,
-                submitted_at: std::time::Instant::now(),
-                req_id,
+        // Cheap duplicate pre-check — don't pay the encode for an
+        // obvious mistake (the authoritative check is below, under the
+        // write lock).
+        if self
+            .state
+            .models
+            .read()
+            .expect("model table poisoned")
+            .contains_key(name)
+        {
+            return Err(Error::InvalidParams(format!(
+                "model '{name}' is already registered"
+            )));
+        }
+        // Encode + narrow off-lock: this is the expensive part, and
+        // holding the table lock here would stall every concurrent
+        // submission (they take the read lock) for its duration.
+        let shards = self.scheme.encode(a)?;
+        debug_assert_eq!(shards.len(), self.scheme.num_workers());
+        let shard_shape = (shards[0].rows(), shards[0].cols());
+        let supported_widths = self
+            .backend
+            .supported_batch_widths(shard_shape.0, shard_shape.1);
+        if let Some(ws) = &supported_widths {
+            if ws.is_empty() {
+                return Err(Error::Runtime(format!(
+                    "model '{name}': no worker artifact for shard shape {}x{} — \
+                     add (r={}, d={}, b=…) to python/compile/aot.py WORKER_SPECS \
+                     and re-run `make artifacts`",
+                    shard_shape.0, shard_shape.1, shard_shape.0, shard_shape.1
+                )));
+            }
+        }
+        let mut worker_shards = Vec::with_capacity(shards.len());
+        for shard in &shards {
+            worker_shards.push(WorkerShard::new(shard)?);
+        }
+        // Authoritative duplicate check, shard shipping (cheap channel
+        // sends) and table insert under one short write-lock hold, so
+        // racing duplicate registrations can't interleave their Loads.
+        let mut models = self.state.models.write().expect("model table poisoned");
+        if models.contains_key(name) {
+            return Err(Error::InvalidParams(format!(
+                "model '{name}' is already registered"
+            )));
+        }
+        let id = ModelId(self.next_model.fetch_add(1, Ordering::Relaxed));
+        for (tx, ws) in self.worker_txs.iter().zip(worker_shards) {
+            tx.send(WorkerCmd::Load {
+                model: id,
+                shard: Box::new(ws),
             })
             .map_err(|_| Error::Coordinator("cluster is shutting down".into()))?;
-        Ok(JobHandle {
-            rx,
-            master: self.master_tx.clone(),
-            req_id,
-        })
+        }
+        models.insert(
+            name.to_string(),
+            Arc::new(ModelEntry::new(
+                id,
+                name,
+                d,
+                m,
+                self.queue_cap,
+                supported_widths,
+            )),
+        );
+        crate::log_info!(
+            "cluster",
+            "registered model '{name}' ({m}x{d}) as {id:?}"
+        );
+        Ok(())
     }
 
-    /// Output dimension `m`.
-    pub fn output_dim(&self) -> usize {
-        self.m
-    }
-
-    /// Input dimension `d`.
-    pub fn input_dim(&self) -> usize {
-        self.d
+    /// A new client handle (clone freely — one per tenant thread).
+    pub fn handle(&self) -> ClientHandle {
+        ClientHandle {
+            state: Arc::clone(&self.state),
+        }
     }
 
     /// The cluster's coding scheme.
@@ -301,29 +567,148 @@ impl Cluster {
         &self.scheme
     }
 
-    /// Metrics snapshot.
-    pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+    /// Names of the registered models, sorted.
+    pub fn model_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .state
+            .models
+            .read()
+            .expect("model table poisoned")
+            .keys()
+            .cloned()
+            .collect();
+        names.sort();
+        names
     }
 
-    /// Graceful shutdown: stop accepting requests, stop all threads.
+    /// Metrics snapshot, including the per-model admission breakdown.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut snap = self.state.metrics.snapshot();
+        let models = self.state.models.read().expect("model table poisoned");
+        let mut per_model: Vec<ModelMetricsSnapshot> = models
+            .values()
+            .map(|e| ModelMetricsSnapshot {
+                name: e.name.clone(),
+                queued: e.queued.load(Ordering::Relaxed),
+                accepted: e.accepted.load(Ordering::Relaxed),
+                rejected: e.rejected.load(Ordering::Relaxed),
+                shed: e.shed.load(Ordering::Relaxed),
+                completed: e.completed.load(Ordering::Relaxed),
+            })
+            .collect();
+        per_model.sort_by(|a, b| a.name.cmp(&b.name));
+        snap.models = per_model;
+        snap
+    }
+
+    /// Graceful shutdown: refuse new submissions, drain queued and
+    /// in-flight jobs (reply or fail every accepted request — bounded
+    /// by `serving.drain_ms`), stop all threads.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
-        // Closing the request channel stops the batcher.
-        self.req_tx.take();
-        let _ = self.master_tx.send(MasterMsg::Shutdown);
+        self.state.accepting.store(false, Ordering::Release);
+        // Taking the sender closes the request channel once in-flight
+        // submissions finish; the batcher then flushes its tails and
+        // hands the master the drain baton.
+        self.state
+            .req_tx
+            .write()
+            .expect("request channel poisoned")
+            .take();
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+            // Belt and braces: if the batcher died without sending
+            // Drain (panic), send it ourselves so the master — whose
+            // channel we keep alive through ServiceState — still
+            // drains and exits instead of blocking recv() forever.
+            // A second Drain is idempotent.
+            let _ = self.state.master_tx.send(MasterMsg::Drain);
+        }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
 }
 
-impl Drop for Cluster {
+impl Drop for ClusterCore {
     fn drop(&mut self) {
         self.shutdown_inner();
+    }
+}
+
+/// Single-tenant convenience facade: a [`ClusterCore`] serving one
+/// matrix registered as [`DEFAULT_MODEL`], with the pre-serving-layer
+/// `launch`/`submit` shape. Multi-tenant callers use the core directly.
+pub struct Cluster {
+    core: ClusterCore,
+    client: ClientHandle,
+    m: usize,
+    d: usize,
+}
+
+impl Cluster {
+    /// Launch a cluster serving products with `a` (`m × d`), using the
+    /// given config and no faults.
+    pub fn launch(config: &ClusterConfig, a: &Matrix) -> Result<Self> {
+        Self::launch_with_faults(config, a, FaultConfig::none())
+    }
+
+    /// Launch with fault injection (tests / chaos runs).
+    pub fn launch_with_faults(
+        config: &ClusterConfig,
+        a: &Matrix,
+        faults: FaultConfig,
+    ) -> Result<Self> {
+        let core = ClusterCore::launch_with_faults(config, faults)?;
+        core.register_model(DEFAULT_MODEL, a)?;
+        let client = core.handle();
+        let (m, d) = a.shape();
+        Ok(Self { core, client, m, d })
+    }
+
+    /// Submit a request `x` (`d` elements); returns a handle to wait on
+    /// for `A·x` (`m` elements).
+    pub fn submit(&self, x: Vec<f64>) -> Result<JobHandle> {
+        self.client.submit(x)
+    }
+
+    /// The owning core (register more models, spawn more handles).
+    pub fn core(&self) -> &ClusterCore {
+        &self.core
+    }
+
+    /// A fresh client handle onto this cluster.
+    pub fn handle(&self) -> ClientHandle {
+        self.core.handle()
+    }
+
+    /// Output dimension `m` of the default model.
+    pub fn output_dim(&self) -> usize {
+        self.m
+    }
+
+    /// Input dimension `d` of the default model.
+    pub fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    /// The cluster's coding scheme.
+    pub fn scheme(&self) -> &Arc<dyn CodedScheme> {
+        self.core.scheme()
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.core.metrics()
+    }
+
+    /// Graceful shutdown: stop accepting requests, drain, stop all
+    /// threads.
+    pub fn shutdown(self) {
+        self.core.shutdown();
     }
 }
 
@@ -405,7 +790,11 @@ mod tests {
 
     #[test]
     fn stalls_cleanly_under_excess_faults_and_cancels() {
-        let config = ClusterConfig::demo(3, 2, 3, 2);
+        let mut config = ClusterConfig::demo(3, 2, 3, 2);
+        // Keep the admission deadline out of the way: this test is
+        // about client-side timeout + cancellation.
+        config.serving.default_deadline_ms = 60_000.0;
+        config.serving.drain_ms = 500.0;
         let a = test_matrix(8, 4, 4);
         let faults = FaultConfig::none().with_dead_links(&[0, 1]);
         assert!(!faults.survivable(3, 2, 3, 2));
@@ -483,5 +872,112 @@ mod tests {
         assert_eq!(m.completed, 1);
         assert_eq!(m.group_decodes, 0, "flat schemes decode at the master only");
         cluster.shutdown();
+    }
+
+    #[test]
+    fn two_models_serve_concurrently_from_one_core() {
+        let config = ClusterConfig::demo(3, 2, 3, 2);
+        let core = ClusterCore::launch(&config).unwrap();
+        let a0 = test_matrix(8, 4, 10);
+        let a1 = test_matrix(16, 2, 11); // different shape entirely
+        core.register_model("alpha", &a0).unwrap();
+        core.register_model("beta", &a1).unwrap();
+        assert_eq!(core.model_names(), vec!["alpha", "beta"]);
+        let client = core.handle();
+        assert_eq!(client.model_dims("alpha"), Some((8, 4)));
+        assert_eq!(client.model_dims("beta"), Some((16, 2)));
+        let x0 = vec![1.0, -1.0, 0.5, 2.0];
+        let x1 = vec![0.25, -2.0];
+        let h0 = client.submit_to("alpha", x0.clone()).unwrap();
+        let h1 = client.submit_to("beta", x1.clone()).unwrap();
+        let y0 = h0.wait().unwrap();
+        let y1 = h1.wait().unwrap();
+        let e0 = ops::matvec(&a0, &x0);
+        let e1 = ops::matvec(&a1, &x1);
+        assert_eq!(y0.len(), 8);
+        assert_eq!(y1.len(), 16);
+        for (got, want) in y0.iter().zip(e0.iter()) {
+            assert!((got - want).abs() < 1e-4);
+        }
+        for (got, want) in y1.iter().zip(e1.iter()) {
+            assert!((got - want).abs() < 1e-4);
+        }
+        let m = core.metrics();
+        assert_eq!(m.models.len(), 2);
+        assert_eq!(m.models[0].name, "alpha");
+        assert_eq!(m.models[0].completed, 1);
+        assert_eq!(m.models[1].completed, 1);
+        core.shutdown();
+    }
+
+    #[test]
+    fn duplicate_and_unknown_models_rejected() {
+        let config = ClusterConfig::demo(2, 1, 2, 1);
+        let core = ClusterCore::launch(&config).unwrap();
+        let a = test_matrix(2, 3, 12);
+        core.register_model("m", &a).unwrap();
+        assert!(core.register_model("m", &a).is_err(), "duplicate name");
+        assert!(core.register_model("", &a).is_err(), "empty name");
+        let client = core.handle();
+        assert!(matches!(
+            client.submit_to("ghost", vec![1.0; 3]),
+            Err(Error::InvalidParams(_))
+        ));
+        core.shutdown();
+    }
+
+    #[test]
+    fn busy_backpressure_at_queue_cap() {
+        let mut config = ClusterConfig::demo(2, 1, 2, 1);
+        config.serving.queue_cap = 2;
+        // A wide-open batch window so submissions pile up in the queue.
+        config.batching.max_batch = 1024;
+        config.batching.max_wait_ms = 200.0;
+        let core = ClusterCore::launch(&config).unwrap();
+        core.register_model("m", &test_matrix(2, 2, 13)).unwrap();
+        let client = core.handle();
+        let h0 = client.submit_to("m", vec![1.0, 2.0]).unwrap();
+        let h1 = client.submit_to("m", vec![3.0, 4.0]).unwrap();
+        // Third submission exceeds the cap → explicit backpressure.
+        let err = client.submit_to("m", vec![5.0, 6.0]).unwrap_err();
+        assert!(matches!(err, Error::Busy { ref model } if model == "m"));
+        // The queue drains; accepted work completes.
+        assert!(h0.wait().is_ok());
+        assert!(h1.wait().is_ok());
+        let m = core.metrics();
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.requests, 2);
+        // After dispatch the queue slot is free again.
+        assert!(client.submit_to("m", vec![7.0, 8.0]).unwrap().wait().is_ok());
+        core.shutdown();
+    }
+
+    #[test]
+    fn try_wait_polls_and_handle_crosses_threads() {
+        let config = ClusterConfig::demo(2, 1, 2, 1);
+        let core = ClusterCore::launch(&config).unwrap();
+        core.register_model("m", &test_matrix(4, 2, 14)).unwrap();
+        let client = core.handle();
+        let handle = client.submit_to("m", vec![1.0, -1.0]).unwrap();
+        // Poll from another thread (JobHandle is Send).
+        let waiter = std::thread::spawn(move || loop {
+            if let Some(outcome) = handle.try_wait() {
+                return outcome;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        let y = waiter.join().unwrap().unwrap();
+        assert_eq!(y.len(), 4);
+        core.shutdown();
+    }
+
+    #[test]
+    fn submissions_after_shutdown_refused() {
+        let config = ClusterConfig::demo(2, 1, 2, 1);
+        let core = ClusterCore::launch(&config).unwrap();
+        core.register_model("m", &test_matrix(2, 2, 15)).unwrap();
+        let client = core.handle();
+        core.shutdown();
+        assert!(client.submit_to("m", vec![1.0, 2.0]).is_err());
     }
 }

@@ -1,5 +1,5 @@
 //! Master thread: the job state machine at the root of Fig. 1,
-//! scheme-generic.
+//! scheme-generic and model-agnostic (output sizing rides on each job).
 //!
 //! Broadcasts batched jobs to all submasters and runs one streaming
 //! [`Decoder`] session per job ([`CodedScheme::master_decoder`]). For
@@ -7,24 +7,36 @@
 //! (the outer code); for flat schemes the submasters are relays and the
 //! session consumes raw worker products. The moment a session reports
 //! `Ready`, the master finishes it, splits the batch back into
-//! per-request columns, fans the replies out, and tells every submaster
-//! the job is over (cancelling still-pending worker computes). Late
-//! partials are discarded.
+//! per-request columns, completes every request's slot, and tells every
+//! submaster the job is over (cancelling still-pending worker
+//! computes). Late partials are discarded.
+//!
+//! Admission control's deadline reaches here too: routes whose deadline
+//! expired while the batch sat in the master's queue are shed before
+//! dispatch, so a saturated master doesn't burn worker time on requests
+//! nobody is waiting for.
 //!
 //! Clients that abandon a request ([`MasterMsg::CancelRequest`]) have
 //! their reply route dropped; a job nobody waits on anymore is
 //! cancelled outright so it leaks neither decode work nor state.
+//!
+//! **Graceful shutdown** is a drain, not a drop: when the batcher
+//! exits it sends [`MasterMsg::Drain`] behind its last batch. The
+//! master then keeps serving in-flight jobs until they all complete —
+//! bounded by the drain grace, after which the stragglers' routes are
+//! failed — so no [`crate::coordinator::JobHandle`] ever hangs across
+//! `shutdown`: every accepted request gets a terminal outcome.
 
 use crate::coding::{CodedScheme, DecodeOutput, DecodeProgress, Decoder, WorkerResult};
 use crate::coordinator::messages::{
-    JobId, MasterMsg, ReplyRoute, RequestId, SubmasterMsg,
+    JobError, JobId, MasterMsg, ReplyRoute, RequestId, SubmasterMsg,
 };
 use crate::coordinator::metrics::Metrics;
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 enum JobState {
     Active(ActiveJob),
@@ -54,7 +66,8 @@ fn complete_job(metrics: &Metrics, replies: &[ReplyRoute], out: &DecodeOutput) {
             .map(|r| out.result[(r, route.column)])
             .collect();
         metrics.record_latency(route.submitted_at.elapsed().as_secs_f64());
-        let _ = route.reply.send(Ok(col));
+        Metrics::inc(&route.entry.completed);
+        route.slot.complete(Ok(col));
     }
 }
 
@@ -62,16 +75,37 @@ fn complete_job(metrics: &Metrics, replies: &[ReplyRoute], out: &DecodeOutput) {
 fn fail_job(metrics: &Metrics, replies: &[ReplyRoute], msg: &str) {
     Metrics::inc(&metrics.failed);
     for route in replies {
-        let _ = route.reply.send(Err(msg.to_string()));
+        route.slot.complete(Err(JobError::Failed(msg.to_string())));
     }
 }
 
-/// Spawn the master thread.
+/// Shed one route whose admission deadline expired in the master queue.
+fn shed_route(metrics: &Metrics, route: &ReplyRoute) {
+    Metrics::inc(&metrics.shed);
+    Metrics::inc(&route.entry.shed);
+    route.slot.complete(Err(JobError::Deadline));
+}
+
+/// `Done` tombstones exist only so late partials are recognized; in a
+/// long-running service they would otherwise accumulate one entry per
+/// job forever. Past this bound the oldest information is expendable:
+/// dropping a tombstone turns a late partial into an unknown-job drop —
+/// the same outcome — so evict them all and keep only live jobs.
+const DONE_JOBS_BOUND: usize = 8192;
+
+fn gc_done_jobs(jobs: &mut HashMap<JobId, JobState>) {
+    if jobs.len() > DONE_JOBS_BOUND {
+        jobs.retain(|_, s| matches!(s, JobState::Active(_)));
+    }
+}
+
+/// Spawn the master thread. `drain_grace` bounds how long a shutdown
+/// drain waits for in-flight jobs before failing their routes.
 pub fn spawn(
     scheme: Arc<dyn CodedScheme>,
     submasters: Vec<mpsc::Sender<SubmasterMsg>>,
-    out_rows: usize,
     metrics: Arc<Metrics>,
+    drain_grace: Duration,
     rx: mpsc::Receiver<MasterMsg>,
 ) -> thread::JoinHandle<()> {
     thread::Builder::new()
@@ -86,30 +120,71 @@ pub fn spawn(
             // Cancellations that arrived before their request was
             // batched into a job (bounded; see CancelSet's rationale).
             let mut cancelled_reqs: HashSet<RequestId> = HashSet::new();
-            while let Ok(msg) = rx.recv() {
+            // In-flight (Active) job count; drives the drain exit.
+            let mut active = 0usize;
+            let mut draining = false;
+            loop {
+                let msg = if draining {
+                    // Drain mode: in-flight jobs get `drain_grace` of
+                    // quiet time to finish; then we abandon them (their
+                    // routes are failed below — never left hanging).
+                    match rx.recv_timeout(drain_grace) {
+                        Ok(m) => m,
+                        Err(_) => break,
+                    }
+                } else {
+                    match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => break,
+                    }
+                };
                 match msg {
-                    MasterMsg::Shutdown => {
-                        for sm in &submasters {
-                            let _ = sm.send(SubmasterMsg::Shutdown);
+                    MasterMsg::Drain => {
+                        draining = true;
+                        if active == 0 {
+                            break;
                         }
-                        break;
+                        crate::log_debug!(
+                            "master",
+                            "draining: {active} job(s) in flight"
+                        );
                     }
                     MasterMsg::Batch { job, replies } => {
                         Metrics::inc(&metrics.jobs);
                         let mut replies = replies;
+                        let before = replies.len();
                         if !cancelled_reqs.is_empty() {
                             replies.retain(|r| !cancelled_reqs.remove(&r.req_id));
                         }
+                        let removed_by_cancel = before - replies.len();
+                        // Shed requests whose admission deadline passed
+                        // while the batch queued here.
+                        let now = Instant::now();
+                        replies.retain(|r| {
+                            if r.deadline <= now {
+                                shed_route(&metrics, r);
+                                false
+                            } else {
+                                true
+                            }
+                        });
                         if replies.is_empty() {
-                            // Every client already gave up: never dispatch.
-                            Metrics::inc(&metrics.cancelled);
+                            // Nobody is waiting: never dispatch. Only a
+                            // batch emptied by *cancellation* counts as
+                            // cancelled — all-shed batches are already
+                            // fully accounted by the shed counter.
+                            if removed_by_cancel > 0 {
+                                Metrics::inc(&metrics.cancelled);
+                            }
                             jobs.insert(job.id, JobState::Done);
+                            gc_done_jobs(&mut jobs);
                             continue;
                         }
                         for route in &replies {
                             req_index.insert(route.req_id, job.id);
                         }
-                        let session = scheme.master_decoder(out_rows, job.x.cols());
+                        let session =
+                            scheme.master_decoder(job.out_rows, job.x.cols());
                         jobs.insert(
                             job.id,
                             JobState::Active(ActiveJob {
@@ -118,11 +193,9 @@ pub fn spawn(
                                 dispatched_at: Instant::now(),
                             }),
                         );
+                        active += 1;
                         for sm in &submasters {
-                            let _ = sm.send(SubmasterMsg::Job(crate::coordinator::messages::JobBroadcast {
-                                id: job.id,
-                                x: Arc::clone(&job.x),
-                            }));
+                            let _ = sm.send(SubmasterMsg::Job(job.clone()));
                         }
                     }
                     MasterMsg::Partial(pr) => {
@@ -138,10 +211,6 @@ pub fn spawn(
                                     Ok(DecodeProgress::Ready) => {
                                         match state.session.finish() {
                                             Ok(out) => {
-                                                debug_assert_eq!(
-                                                    out.result.rows(),
-                                                    out_rows
-                                                );
                                                 complete_job(
                                                     &metrics,
                                                     &state.replies,
@@ -178,9 +247,22 @@ pub fn spawn(
                             }
                         };
                         if finished {
+                            // Long-running service hygiene: release the
+                            // finished job's request-index entries and
+                            // keep the Done tombstone set bounded.
+                            if let Some(JobState::Active(state)) = jobs.get(&pr.id) {
+                                for route in &state.replies {
+                                    req_index.remove(&route.req_id);
+                                }
+                            }
                             jobs.insert(pr.id, JobState::Done);
+                            gc_done_jobs(&mut jobs);
+                            active -= 1;
                             for sm in &submasters {
                                 let _ = sm.send(SubmasterMsg::Finish(pr.id));
+                            }
+                            if draining && active == 0 {
+                                break;
                             }
                         }
                     }
@@ -190,16 +272,18 @@ pub fn spawn(
                                 // O(1) lookup; a cancel racing completion
                                 // finds the job Done and is a no-op.
                                 let mut orphaned = false;
-                                if let Some(JobState::Active(active)) =
+                                if let Some(JobState::Active(state)) =
                                     jobs.get_mut(&job_id)
                                 {
-                                    active.replies.retain(|r| r.req_id != req);
-                                    orphaned = active.replies.is_empty();
+                                    state.replies.retain(|r| r.req_id != req);
+                                    orphaned = state.replies.is_empty();
                                 }
                                 if orphaned {
                                     // Nobody waits on this job anymore.
                                     Metrics::inc(&metrics.cancelled);
                                     jobs.insert(job_id, JobState::Done);
+                                    gc_done_jobs(&mut jobs);
+                                    active -= 1;
                                     for sm in &submasters {
                                         let _ =
                                             sm.send(SubmasterMsg::Finish(job_id));
@@ -208,6 +292,9 @@ pub fn spawn(
                                         "master",
                                         "job {job_id:?} cancelled (all clients gone)"
                                     );
+                                    if draining && active == 0 {
+                                        break;
+                                    }
                                 }
                             }
                             None => {
@@ -222,6 +309,21 @@ pub fn spawn(
                     }
                 }
             }
+            // Exit invariant: no accepted request may be left pending.
+            // Jobs still Active here outlived the drain grace (e.g.
+            // dead links made them undecodable) — fail their routes.
+            for state in jobs.values_mut() {
+                if let JobState::Active(job) = state {
+                    Metrics::inc(&metrics.failed);
+                    for route in &job.replies {
+                        route.slot.complete(Err(JobError::Shutdown));
+                    }
+                    job.replies.clear();
+                }
+            }
+            for sm in &submasters {
+                let _ = sm.send(SubmasterMsg::Shutdown);
+            }
         })
         .expect("failed to spawn master thread")
 }
@@ -230,9 +332,35 @@ pub fn spawn(
 mod tests {
     use super::*;
     use crate::coding::HierarchicalCode;
-    use crate::coordinator::messages::{JobBroadcast, PartialResult};
+    use crate::coordinator::messages::{
+        CompletionSlot, JobBroadcast, ModelEntry, ModelId, PartialResult,
+    };
     use crate::linalg::{ops, Matrix};
     use crate::util::rng::Rng;
+
+    fn test_entry(d: usize, m: usize) -> Arc<ModelEntry> {
+        Arc::new(ModelEntry::new(ModelId(0), "default", d, m, 64, None))
+    }
+
+    fn far_deadline() -> Instant {
+        Instant::now() + Duration::from_secs(60)
+    }
+
+    fn route(
+        entry: &Arc<ModelEntry>,
+        slot: &Arc<CompletionSlot>,
+        column: usize,
+        req: u64,
+    ) -> ReplyRoute {
+        ReplyRoute {
+            entry: Arc::clone(entry),
+            slot: Arc::clone(slot),
+            column,
+            submitted_at: Instant::now(),
+            deadline: far_deadline(),
+            req_id: RequestId(req),
+        }
+    }
 
     /// Drive the master with synthetic group partials (hierarchical
     /// scheme: master session = outer code).
@@ -257,31 +385,25 @@ mod tests {
         let h = spawn(
             Arc::clone(&scheme),
             vec![], // no submasters needed: we inject partials
-            8,
             Arc::clone(&metrics),
+            Duration::from_secs(5),
             master_rx,
         );
-        let (reply_tx, reply_rx) = mpsc::channel();
+        let entry = test_entry(3, 8);
+        let slot0 = Arc::new(CompletionSlot::new());
+        let slot1 = Arc::new(CompletionSlot::new());
         let id = JobId(9);
         master_tx
             .send(MasterMsg::Batch {
                 job: JobBroadcast {
                     id,
+                    model: entry.id,
+                    out_rows: 8,
                     x: Arc::new(x.clone()),
                 },
                 replies: vec![
-                    ReplyRoute {
-                        reply: reply_tx.clone(),
-                        column: 0,
-                        submitted_at: Instant::now(),
-                        req_id: RequestId(0),
-                    },
-                    ReplyRoute {
-                        reply: reply_tx,
-                        column: 1,
-                        submitted_at: Instant::now(),
-                        req_id: RequestId(1),
-                    },
+                    route(&entry, &slot0, 0, 0),
+                    route(&entry, &slot1, 1, 1),
                 ],
             })
             .unwrap();
@@ -297,14 +419,8 @@ mod tests {
                 }))
                 .unwrap();
         }
-        let r0 = reply_rx
-            .recv_timeout(std::time::Duration::from_secs(5))
-            .unwrap()
-            .unwrap();
-        let r1 = reply_rx
-            .recv_timeout(std::time::Duration::from_secs(5))
-            .unwrap()
-            .unwrap();
+        let r0 = slot0.wait().unwrap();
+        let r1 = slot1.wait().unwrap();
         for (i, &v) in r0.iter().enumerate() {
             assert!((v - expect[(i, 0)]).abs() < 1e-4, "col0[{i}]: {v}");
         }
@@ -321,11 +437,13 @@ mod tests {
                 finished_at: Instant::now(),
             }))
             .unwrap();
-        master_tx.send(MasterMsg::Shutdown).unwrap();
+        master_tx.send(MasterMsg::Drain).unwrap();
         h.join().unwrap();
         let s = metrics.snapshot();
         assert_eq!(s.completed, 1);
         assert_eq!(s.failed, 0);
+        use std::sync::atomic::Ordering;
+        assert_eq!(entry.completed.load(Ordering::Relaxed), 2);
     }
 
     /// Cancelling every request of a job cancels the job itself; its
@@ -345,21 +463,25 @@ mod tests {
         let (master_tx, master_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
         let scheme: Arc<dyn CodedScheme> = code;
-        let h = spawn(scheme, vec![], 8, Arc::clone(&metrics), master_rx);
-        let (reply_tx, reply_rx) = mpsc::channel();
+        let h = spawn(
+            scheme,
+            vec![],
+            Arc::clone(&metrics),
+            Duration::from_secs(5),
+            master_rx,
+        );
+        let entry = test_entry(3, 8);
+        let slot = Arc::new(CompletionSlot::new());
         let id = JobId(1);
         master_tx
             .send(MasterMsg::Batch {
                 job: JobBroadcast {
                     id,
+                    model: entry.id,
+                    out_rows: 8,
                     x: Arc::new(x.clone()),
                 },
-                replies: vec![ReplyRoute {
-                    reply: reply_tx,
-                    column: 0,
-                    submitted_at: Instant::now(),
-                    req_id: RequestId(7),
-                }],
+                replies: vec![route(&entry, &slot, 0, 7)],
             })
             .unwrap();
         master_tx
@@ -377,10 +499,10 @@ mod tests {
                 }))
                 .unwrap();
         }
-        master_tx.send(MasterMsg::Shutdown).unwrap();
+        master_tx.send(MasterMsg::Drain).unwrap();
         h.join().unwrap();
         assert!(
-            reply_rx.recv().is_err(),
+            slot.try_take().is_none(),
             "cancelled request must never get a reply"
         );
         let s = metrics.snapshot();
@@ -397,28 +519,107 @@ mod tests {
         let (master_tx, master_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
         let scheme: Arc<dyn CodedScheme> = code;
-        let h = spawn(scheme, vec![], 2, Arc::clone(&metrics), master_rx);
+        let h = spawn(
+            scheme,
+            vec![],
+            Arc::clone(&metrics),
+            Duration::from_secs(5),
+            master_rx,
+        );
         master_tx
             .send(MasterMsg::CancelRequest(RequestId(3)))
             .unwrap();
-        let (reply_tx, reply_rx) = mpsc::channel();
+        let entry = test_entry(1, 2);
+        let slot = Arc::new(CompletionSlot::new());
         master_tx
             .send(MasterMsg::Batch {
                 job: JobBroadcast {
                     id: JobId(5),
+                    model: entry.id,
+                    out_rows: 2,
                     x: Arc::new(Matrix::identity(1)),
                 },
-                replies: vec![ReplyRoute {
-                    reply: reply_tx,
-                    column: 0,
-                    submitted_at: Instant::now(),
-                    req_id: RequestId(3),
-                }],
+                replies: vec![route(&entry, &slot, 0, 3)],
             })
             .unwrap();
-        master_tx.send(MasterMsg::Shutdown).unwrap();
+        master_tx.send(MasterMsg::Drain).unwrap();
         h.join().unwrap();
-        assert!(reply_rx.recv().is_err());
+        assert!(slot.try_take().is_none());
         assert_eq!(metrics.snapshot().cancelled, 1);
+    }
+
+    /// Routes whose admission deadline expired in the master's queue
+    /// are shed before dispatch — counted exactly once.
+    #[test]
+    fn expired_routes_shed_at_batch_receipt() {
+        let code = Arc::new(HierarchicalCode::homogeneous(2, 1, 2, 1).unwrap());
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let scheme: Arc<dyn CodedScheme> = code;
+        let h = spawn(
+            scheme,
+            vec![],
+            Arc::clone(&metrics),
+            Duration::from_secs(5),
+            master_rx,
+        );
+        let entry = test_entry(1, 2);
+        let slot = Arc::new(CompletionSlot::new());
+        let mut expired = route(&entry, &slot, 0, 4);
+        expired.deadline = Instant::now() - Duration::from_millis(1);
+        master_tx
+            .send(MasterMsg::Batch {
+                job: JobBroadcast {
+                    id: JobId(6),
+                    model: entry.id,
+                    out_rows: 2,
+                    x: Arc::new(Matrix::identity(1)),
+                },
+                replies: vec![expired],
+            })
+            .unwrap();
+        master_tx.send(MasterMsg::Drain).unwrap();
+        h.join().unwrap();
+        assert_eq!(slot.wait(), Err(JobError::Deadline));
+        let s = metrics.snapshot();
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.completed, 0);
+        use std::sync::atomic::Ordering;
+        assert_eq!(entry.shed.load(Ordering::Relaxed), 1);
+    }
+
+    /// A drain with an undecodable job in flight fails the job's routes
+    /// after the grace period instead of hanging.
+    #[test]
+    fn drain_grace_fails_stuck_jobs_instead_of_hanging() {
+        let code = Arc::new(HierarchicalCode::homogeneous(2, 1, 2, 1).unwrap());
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let scheme: Arc<dyn CodedScheme> = code;
+        let h = spawn(
+            scheme,
+            vec![],
+            Arc::clone(&metrics),
+            Duration::from_millis(50), // short grace
+            master_rx,
+        );
+        let entry = test_entry(1, 2);
+        let slot = Arc::new(CompletionSlot::new());
+        master_tx
+            .send(MasterMsg::Batch {
+                job: JobBroadcast {
+                    id: JobId(1),
+                    model: entry.id,
+                    out_rows: 2,
+                    x: Arc::new(Matrix::identity(1)),
+                },
+                replies: vec![route(&entry, &slot, 0, 0)],
+            })
+            .unwrap();
+        // No partials will ever arrive; drain must still terminate.
+        master_tx.send(MasterMsg::Drain).unwrap();
+        h.join().unwrap();
+        assert_eq!(slot.wait(), Err(JobError::Shutdown));
+        assert_eq!(metrics.snapshot().failed, 1);
     }
 }

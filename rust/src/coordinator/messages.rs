@@ -1,9 +1,12 @@
-//! Protocol types flowing between coordinator threads.
+//! Protocol types flowing between coordinator threads, plus the shared
+//! per-model admission state ([`ModelEntry`]) and the client-facing
+//! completion surface ([`CompletionSlot`]).
 
+use crate::coordinator::backend::WorkerShard;
 use crate::linalg::Matrix;
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Identifies one batched coded job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -13,15 +16,216 @@ pub struct JobId(pub u64);
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct RequestId(pub u64);
 
-/// A client request: multiply the cluster's matrix `A` by `x`.
+/// Identifies one registered model (a named computation `A·x`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(pub u32);
+
+/// How a served request fails, as delivered through its completion
+/// slot. `crate::Error` is not `Clone`, so the coordinator speaks this
+/// smaller vocabulary and the handle translates at the API boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// The admission deadline passed while the request was queued.
+    Deadline,
+    /// Decode or protocol failure.
+    Failed(String),
+    /// The cluster shut down before the request completed.
+    Shutdown,
+}
+
+impl From<JobError> for crate::Error {
+    fn from(e: JobError) -> Self {
+        match e {
+            JobError::Deadline => crate::Error::DeadlineExceeded,
+            JobError::Failed(m) => crate::Error::Coordinator(m),
+            JobError::Shutdown => {
+                crate::Error::Coordinator("cluster shut down before replying".into())
+            }
+        }
+    }
+}
+
+/// The terminal outcome of one request.
+pub type JobResult = std::result::Result<Vec<f64>, JobError>;
+
+#[derive(Debug)]
+enum SlotState {
+    /// No result yet.
+    Pending,
+    /// Result delivered, not yet taken by the client.
+    Done(JobResult),
+    /// Result taken; later waits fail rather than block.
+    Taken,
+}
+
+/// A one-shot completion slot: the coordinator side calls
+/// [`CompletionSlot::complete`] exactly once per terminal outcome
+/// (first write wins, later writes are ignored), the client side polls
+/// or blocks on the other end. Unlike an `mpsc` pair this is `Sync`, so
+/// a [`crate::coordinator::JobHandle`] is `Send` and pollable from any
+/// thread.
+#[derive(Debug)]
+pub struct CompletionSlot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+impl Default for CompletionSlot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CompletionSlot {
+    /// Fresh, pending slot.
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(SlotState::Pending),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Deliver the terminal outcome. The first write wins; any later
+    /// write is ignored (e.g. a deadline shed racing a completion).
+    pub fn complete(&self, result: JobResult) {
+        let mut s = self.state.lock().expect("completion slot poisoned");
+        if matches!(*s, SlotState::Pending) {
+            *s = SlotState::Done(result);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Non-blocking poll: `Some` exactly once, when the outcome is in;
+    /// `None` while pending (and after the outcome was already taken).
+    pub fn try_take(&self) -> Option<JobResult> {
+        let mut s = self.state.lock().expect("completion slot poisoned");
+        match std::mem::replace(&mut *s, SlotState::Taken) {
+            SlotState::Done(r) => Some(r),
+            prev => {
+                *s = prev;
+                None
+            }
+        }
+    }
+
+    /// Block until the outcome is in and take it.
+    pub fn wait(&self) -> JobResult {
+        let mut s = self.state.lock().expect("completion slot poisoned");
+        loop {
+            match std::mem::replace(&mut *s, SlotState::Taken) {
+                SlotState::Done(r) => return r,
+                SlotState::Taken => {
+                    return Err(JobError::Failed("result already consumed".into()))
+                }
+                SlotState::Pending => {
+                    *s = SlotState::Pending;
+                    s = self.cv.wait(s).expect("completion slot poisoned");
+                }
+            }
+        }
+    }
+
+    /// Block up to `timeout`; `None` on timeout (outcome left in place).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<JobResult> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().expect("completion slot poisoned");
+        loop {
+            match std::mem::replace(&mut *s, SlotState::Taken) {
+                SlotState::Done(r) => return Some(r),
+                SlotState::Taken => {
+                    return Some(Err(JobError::Failed("result already consumed".into())))
+                }
+                SlotState::Pending => {
+                    *s = SlotState::Pending;
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (guard, _) = self
+                        .cv
+                        .wait_timeout(s, deadline - now)
+                        .expect("completion slot poisoned");
+                    s = guard;
+                }
+            }
+        }
+    }
+}
+
+/// One registered model: immutable routing facts plus the shared
+/// admission-control counters. Clients reserve a queue slot against
+/// `queued`/`cap` at submit time; the batcher releases slots as it
+/// dispatches or sheds.
+#[derive(Debug)]
+pub struct ModelEntry {
+    /// Model identity (worker shard-table key).
+    pub id: ModelId,
+    /// Registered name.
+    pub name: String,
+    /// Input dimension (columns of the model's matrix).
+    pub d: usize,
+    /// Output dimension (rows of the model's matrix).
+    pub m: usize,
+    /// Admission cap: submissions beyond `cap` queued requests bounce
+    /// with [`crate::Error::Busy`].
+    pub cap: usize,
+    /// Batch widths the backend can serve for this model's shard shape
+    /// (`None` = unrestricted native backend).
+    pub supported_widths: Option<Vec<usize>>,
+    /// Requests accepted but not yet dispatched into a job.
+    pub queued: AtomicU64,
+    /// Requests accepted for this model.
+    pub accepted: AtomicU64,
+    /// Submissions bounced with `Busy`.
+    pub rejected: AtomicU64,
+    /// Requests shed because their deadline expired while queued.
+    pub shed: AtomicU64,
+    /// Requests answered successfully.
+    pub completed: AtomicU64,
+}
+
+impl ModelEntry {
+    /// Fresh entry with zeroed counters.
+    pub fn new(
+        id: ModelId,
+        name: &str,
+        d: usize,
+        m: usize,
+        cap: usize,
+        supported_widths: Option<Vec<usize>>,
+    ) -> Self {
+        Self {
+            id,
+            name: name.to_string(),
+            d,
+            m,
+            cap,
+            supported_widths,
+            queued: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A client request: multiply `entry`'s matrix by `x`.
 #[derive(Debug)]
 pub struct JobRequest {
-    /// The request vector (`d` elements).
+    /// The model this request targets.
+    pub entry: Arc<ModelEntry>,
+    /// The request vector (`entry.d` elements).
     pub x: Vec<f64>,
-    /// Where to deliver the result (`m` elements) or an error message.
-    pub reply: mpsc::Sender<Result<Vec<f64>, String>>,
+    /// Where the terminal outcome is delivered.
+    pub slot: Arc<CompletionSlot>,
     /// Client-side submit timestamp (for end-to-end latency metrics).
     pub submitted_at: Instant,
+    /// Admission deadline: if still undispatched past this instant the
+    /// request is shed with [`JobError::Deadline`].
+    pub deadline: Instant,
+    /// Batching priority: higher dispatches first within a flush.
+    pub priority: i32,
     /// Cluster-unique request identity (used for cancellation).
     pub req_id: RequestId,
 }
@@ -31,6 +235,10 @@ pub struct JobRequest {
 pub struct JobBroadcast {
     /// Job id.
     pub id: JobId,
+    /// Which model's shards this job multiplies.
+    pub model: ModelId,
+    /// Output rows `m` of that model (sizes the decode sessions).
+    pub out_rows: usize,
     /// The batched request matrix, `d × b` (shared, read-only).
     pub x: Arc<Matrix>,
 }
@@ -68,6 +276,15 @@ pub struct PartialResult {
 /// Commands to a worker thread.
 #[derive(Debug)]
 pub enum WorkerCmd {
+    /// Install a model's shard. Registration sends `Load` on the same
+    /// channel later `Compute`s arrive on, so FIFO ordering guarantees
+    /// the shard is in place before any job needs it.
+    Load {
+        /// The model the shard belongs to.
+        model: ModelId,
+        /// This worker's coded shard of the model.
+        shard: Box<WorkerShard>,
+    },
     /// Compute this job's shard product.
     Compute(JobBroadcast),
     /// Exit the thread.
@@ -92,7 +309,7 @@ pub enum SubmasterMsg {
 #[derive(Debug)]
 pub enum MasterMsg {
     /// A batched job from the batcher, with the requests that compose
-    /// it: `(reply channel, column, submit time)` per request.
+    /// it (one [`ReplyRoute`] per column of `X`).
     Batch {
         /// The job.
         job: JobBroadcast,
@@ -105,8 +322,11 @@ pub enum MasterMsg {
     /// drop its reply route; cancel the whole job once no client is
     /// left waiting on it.
     CancelRequest(RequestId),
-    /// Exit.
-    Shutdown,
+    /// The batcher flushed its last request and exited (sent on its own
+    /// channel clone, so every `Batch` precedes it). The master drains
+    /// in-flight jobs — bounded by the drain grace — completing or
+    /// failing every route, then shuts the worker tree down.
+    Drain,
 }
 
 /// Group-local cancellation registry (§Perf): the submaster marks a job
@@ -146,12 +366,73 @@ impl CancelSet {
 /// Where one column of a batched result goes.
 #[derive(Debug)]
 pub struct ReplyRoute {
-    /// The client's reply channel.
-    pub reply: mpsc::Sender<Result<Vec<f64>, String>>,
+    /// The model the request targeted (per-model accounting).
+    pub entry: Arc<ModelEntry>,
+    /// The client's completion slot.
+    pub slot: Arc<CompletionSlot>,
     /// Which column of the batched result belongs to this client.
     pub column: usize,
     /// Client submit time.
     pub submitted_at: Instant,
+    /// Admission deadline (the master sheds expired routes at batch
+    /// receipt — queueing in the master's channel counts too).
+    pub deadline: Instant,
     /// The request this column answers (for cancellation).
     pub req_id: RequestId,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn completion_slot_first_write_wins_and_take_is_single_shot() {
+        let slot = CompletionSlot::new();
+        assert!(slot.try_take().is_none());
+        slot.complete(Ok(vec![1.0, 2.0]));
+        slot.complete(Err(JobError::Deadline)); // ignored: first write won
+        assert_eq!(slot.try_take(), Some(Ok(vec![1.0, 2.0])));
+        // Taken: later polls see nothing, later waits fail fast.
+        assert!(slot.try_take().is_none());
+        assert!(slot.wait().is_err());
+    }
+
+    #[test]
+    fn completion_slot_blocks_until_completed() {
+        let slot = Arc::new(CompletionSlot::new());
+        let s2 = Arc::clone(&slot);
+        let h = std::thread::spawn(move || s2.wait());
+        std::thread::sleep(Duration::from_millis(20));
+        slot.complete(Ok(vec![7.0]));
+        assert_eq!(h.join().unwrap(), Ok(vec![7.0]));
+    }
+
+    #[test]
+    fn completion_slot_wait_timeout_leaves_pending_intact() {
+        let slot = CompletionSlot::new();
+        assert!(slot.wait_timeout(Duration::from_millis(10)).is_none());
+        // A timeout must not consume the slot.
+        slot.complete(Err(JobError::Shutdown));
+        assert_eq!(
+            slot.wait_timeout(Duration::from_millis(10)),
+            Some(Err(JobError::Shutdown))
+        );
+    }
+
+    #[test]
+    fn job_error_maps_to_crate_errors() {
+        assert!(matches!(
+            crate::Error::from(JobError::Deadline),
+            crate::Error::DeadlineExceeded
+        ));
+        assert!(matches!(
+            crate::Error::from(JobError::Failed("x".into())),
+            crate::Error::Coordinator(_)
+        ));
+        assert!(matches!(
+            crate::Error::from(JobError::Shutdown),
+            crate::Error::Coordinator(_)
+        ));
+    }
 }

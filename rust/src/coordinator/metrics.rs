@@ -1,5 +1,11 @@
-//! Cluster metrics: counters and latency histograms, shared across
-//! coordinator threads.
+//! Cluster metrics: counters, admission gauges and latency histograms,
+//! shared across coordinator threads.
+//!
+//! Latencies are log2-bucket [`Histogram`]s (1µs..~4000s), so job *and*
+//! decode latency expose p50/p95/p99 — tails, not just means — and the
+//! serving layer's admission behavior is observable: `queue_depth` is
+//! the live number of accepted-but-undispatched requests, `rejected`
+//! counts `Busy` bounces, `shed` counts deadline expiries.
 
 use crate::util::stats::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,7 +27,7 @@ struct GroupCounters {
 /// short mutex (recorded once per job, not per message).
 #[derive(Debug, Default)]
 pub struct Metrics {
-    /// Client requests accepted.
+    /// Client requests accepted (past admission control).
     pub requests: AtomicU64,
     /// Batched jobs dispatched.
     pub jobs: AtomicU64,
@@ -31,6 +37,12 @@ pub struct Metrics {
     pub failed: AtomicU64,
     /// Jobs cancelled (every client abandoned them before completion).
     pub cancelled: AtomicU64,
+    /// Submissions bounced with `Busy` (admission queue full).
+    pub rejected: AtomicU64,
+    /// Requests shed because their deadline expired while queued.
+    pub shed: AtomicU64,
+    /// Requests currently accepted but not yet dispatched (gauge).
+    pub queue_depth: AtomicU64,
     /// Worker products computed.
     pub worker_products: AtomicU64,
     /// Worker products discarded (arrived after their group decoded).
@@ -96,7 +108,9 @@ impl Metrics {
         }
     }
 
-    /// Snapshot for reporting.
+    /// Snapshot for reporting. The per-model breakdown is overlaid by
+    /// `ClusterCore::metrics` (the model table lives in the service
+    /// state, not here); `models` is empty on a bare snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latency.lock().expect("metrics poisoned");
         let dec = self.decode_latency.lock().expect("metrics poisoned");
@@ -118,21 +132,34 @@ impl Metrics {
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
             worker_products: self.worker_products.load(Ordering::Relaxed),
             late_products: self.late_products.load(Ordering::Relaxed),
             group_decodes: self.group_decodes.load(Ordering::Relaxed),
             decode_flops: self.decode_flops.load(Ordering::Relaxed),
             latency_mean: lat.mean(),
             latency_p50: lat.quantile(0.5),
+            latency_p95: lat.quantile(0.95),
             latency_p99: lat.quantile(0.99),
             decode_mean: dec.mean(),
+            decode_p50: dec.quantile(0.5),
+            decode_p95: dec.quantile(0.95),
+            decode_p99: dec.quantile(0.99),
             per_group,
+            models: Vec::new(),
         }
     }
 
     /// Bump a counter.
     pub fn inc(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Decrement a gauge (callers only release what they reserved).
+    pub fn dec(counter: &AtomicU64) {
+        counter.fetch_sub(1, Ordering::Relaxed);
     }
 
     /// Add to a counter.
@@ -152,6 +179,23 @@ pub struct GroupMetricsSnapshot {
     pub decode_mean: f64,
 }
 
+/// Point-in-time view of one model's admission counters.
+#[derive(Clone, Debug, Default)]
+pub struct ModelMetricsSnapshot {
+    /// Registered model name.
+    pub name: String,
+    /// Requests accepted but not yet dispatched (gauge).
+    pub queued: u64,
+    /// Requests accepted.
+    pub accepted: u64,
+    /// Submissions bounced with `Busy`.
+    pub rejected: u64,
+    /// Requests shed on deadline expiry.
+    pub shed: u64,
+    /// Requests answered successfully.
+    pub completed: u64,
+}
+
 /// Point-in-time view of [`Metrics`].
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
@@ -165,6 +209,12 @@ pub struct MetricsSnapshot {
     pub failed: u64,
     /// Jobs cancelled (abandoned by every client).
     pub cancelled: u64,
+    /// Submissions bounced with `Busy`.
+    pub rejected: u64,
+    /// Requests shed on deadline expiry.
+    pub shed: u64,
+    /// Requests currently queued ahead of dispatch (gauge).
+    pub queue_depth: u64,
     /// Worker products computed.
     pub worker_products: u64,
     /// Late (discarded) products.
@@ -177,18 +227,34 @@ pub struct MetricsSnapshot {
     pub latency_mean: f64,
     /// Median end-to-end latency (s).
     pub latency_p50: f64,
+    /// p95 end-to-end latency (s).
+    pub latency_p95: f64,
     /// p99 end-to-end latency (s).
     pub latency_p99: f64,
     /// Mean master decode latency (s).
     pub decode_mean: f64,
+    /// Median master decode latency (s).
+    pub decode_p50: f64,
+    /// p95 master decode latency (s).
+    pub decode_p95: f64,
+    /// p99 master decode latency (s).
+    pub decode_p99: f64,
     /// Per-group arrival / decode breakdown, in group-index order
     /// (empty when the metrics were created without a group count).
     pub per_group: Vec<GroupMetricsSnapshot>,
+    /// Per-model admission breakdown, sorted by name (filled by
+    /// `ClusterCore::metrics`; empty on a bare `Metrics::snapshot`).
+    pub models: Vec<ModelMetricsSnapshot>,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "requests:        {}", self.requests)?;
+        writeln!(
+            f,
+            "admission:       {} rejected (busy), {} shed (deadline), {} queued now",
+            self.rejected, self.shed, self.queue_depth
+        )?;
         writeln!(
             f,
             "jobs:            {} ({} completed, {} failed, {} cancelled)",
@@ -199,12 +265,20 @@ impl std::fmt::Display for MetricsSnapshot {
         writeln!(f, "decode flops:    {}", self.decode_flops)?;
         writeln!(
             f,
-            "latency:         mean {:.3}ms  p50 {:.3}ms  p99 {:.3}ms",
+            "latency:         mean {:.3}ms  p50 {:.3}ms  p95 {:.3}ms  p99 {:.3}ms",
             self.latency_mean * 1e3,
             self.latency_p50 * 1e3,
+            self.latency_p95 * 1e3,
             self.latency_p99 * 1e3
         )?;
-        write!(f, "decode latency:  mean {:.3}ms", self.decode_mean * 1e3)?;
+        write!(
+            f,
+            "decode latency:  mean {:.3}ms  p50 {:.3}ms  p95 {:.3}ms  p99 {:.3}ms",
+            self.decode_mean * 1e3,
+            self.decode_p50 * 1e3,
+            self.decode_p95 * 1e3,
+            self.decode_p99 * 1e3
+        )?;
         for (g, gm) in self.per_group.iter().enumerate() {
             write!(
                 f,
@@ -212,6 +286,13 @@ impl std::fmt::Display for MetricsSnapshot {
                 gm.products,
                 gm.decodes,
                 gm.decode_mean * 1e3
+            )?;
+        }
+        for m in &self.models {
+            write!(
+                f,
+                "\nmodel {:<10} {} accepted, {} completed, {} rejected, {} shed, {} queued",
+                m.name, m.accepted, m.completed, m.rejected, m.shed, m.queued
             )?;
         }
         Ok(())
@@ -257,5 +338,42 @@ mod tests {
         assert_eq!(s.decode_flops, 100);
         assert!((s.latency_mean - 0.003).abs() < 1e-9);
         assert!(!format!("{s}").is_empty());
+    }
+
+    #[test]
+    fn admission_counters_and_gauge() {
+        let m = Metrics::new();
+        Metrics::inc(&m.rejected);
+        Metrics::inc(&m.shed);
+        Metrics::inc(&m.queue_depth);
+        Metrics::inc(&m.queue_depth);
+        Metrics::dec(&m.queue_depth);
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.queue_depth, 1);
+        assert!(format!("{s}").contains("rejected"));
+    }
+
+    #[test]
+    fn latency_quantiles_from_histogram() {
+        let m = Metrics::new();
+        // 90 fast (≈1ms) + 10 slow (≈100ms) requests: p50 stays in the
+        // fast bucket, p99 lands in the slow one.
+        for _ in 0..90 {
+            m.record_latency(0.001);
+            m.record_decode_latency(0.001);
+        }
+        for _ in 0..10 {
+            m.record_latency(0.1);
+            m.record_decode_latency(0.1);
+        }
+        let s = m.snapshot();
+        assert!(s.latency_p50 < 0.01, "p50={}", s.latency_p50);
+        assert!(s.latency_p99 >= 0.05, "p99={}", s.latency_p99);
+        assert!(s.decode_p50 < 0.01, "decode p50={}", s.decode_p50);
+        assert!(s.decode_p99 >= 0.05, "decode p99={}", s.decode_p99);
+        assert!(s.latency_p95 >= s.latency_p50);
+        assert!(s.decode_p95 >= s.decode_p50);
     }
 }

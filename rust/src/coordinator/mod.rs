@@ -25,10 +25,15 @@
 //! * [`submaster`] — one thread per group: group decode session or
 //!   relay, uplink (with ToR delay) to the master;
 //! * [`master`] — job state machine: one decode session per job,
-//!   response fan-out, job cancellation;
-//! * [`cluster`] — the public facade: [`cluster::Cluster::launch`],
-//!   [`cluster::Cluster::submit`], metrics, shutdown;
-//! * [`metrics`] — counters and latency histograms;
+//!   response fan-out, job cancellation, shutdown drain;
+//! * [`cluster`] — the serving API: an owning [`cluster::ClusterCore`]
+//!   (thread tree + runtime model registry) and cheap cloneable
+//!   [`cluster::ClientHandle`]s with per-submission
+//!   [`cluster::SubmitOptions`] and bounded-queue admission control
+//!   ([`crate::Error::Busy`] backpressure, deadline shedding); plus the
+//!   single-tenant [`cluster::Cluster`] facade;
+//! * [`metrics`] — counters, admission gauges and latency histograms
+//!   (p50/p95/p99);
 //! * [`fault`] — failure injection (dead workers / severed uplinks).
 //!
 //! Python never appears here: workers execute AOT artifacts through
@@ -44,5 +49,7 @@ pub mod metrics;
 pub mod submaster;
 pub mod worker;
 
-pub use cluster::{Cluster, JobHandle};
-pub use messages::{JobId, JobRequest, RequestId};
+pub use cluster::{
+    ClientHandle, Cluster, ClusterCore, DEFAULT_MODEL, JobHandle, SubmitOptions,
+};
+pub use messages::{JobId, JobRequest, ModelId, RequestId};

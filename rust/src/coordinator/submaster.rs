@@ -52,14 +52,27 @@ enum GroupJob {
     Done,
 }
 
+/// `Done` tombstones only make late products recognizable; unbounded
+/// they are a per-job leak in a long-running service. Evicting one
+/// turns a late product into an unknown-job drop — the same outcome
+/// (both arms count `late_products`) — so past the bound keep only
+/// live jobs. Mirrors the master's identical GC.
+const DONE_JOBS_BOUND: usize = 8192;
+
+fn gc_done_jobs(jobs: &mut HashMap<JobId, GroupJob>) {
+    if jobs.len() > DONE_JOBS_BOUND {
+        jobs.retain(|_, s| !matches!(s, GroupJob::Done));
+    }
+}
+
 /// Spawn the submaster for `group`, whose workers start at flat index
-/// `offset`.
+/// `offset`. Output sizing is per-job ([`JobBroadcast::out_rows`]):
+/// different models route different heights through the same group.
 #[allow(clippy::too_many_arguments)]
 pub fn spawn(
     group: usize,
     offset: usize,
     scheme: Arc<dyn CodedScheme>,
-    out_rows: usize,
     workers: Vec<mpsc::Sender<WorkerCmd>>,
     link: LinkDelay,
     link_dead: bool,
@@ -83,18 +96,14 @@ pub fn spawn(
                     }
                     SubmasterMsg::Job(job) => {
                         let state =
-                            match scheme.group_decoder(group, out_rows, job.x.cols()) {
+                            match scheme.group_decoder(group, job.out_rows, job.x.cols()) {
                                 Some(session) => GroupJob::Decoding(session),
                                 None => GroupJob::Relay,
                             };
                         jobs.insert(job.id, state);
+                        gc_done_jobs(&mut jobs);
                         for w in &workers {
-                            let _ = w.send(WorkerCmd::Compute(
-                                crate::coordinator::messages::JobBroadcast {
-                                    id: job.id,
-                                    x: Arc::clone(&job.x),
-                                },
-                            ));
+                            let _ = w.send(WorkerCmd::Compute(job.clone()));
                         }
                     }
                     SubmasterMsg::Finish(id) => {
@@ -105,6 +114,7 @@ pub fn spawn(
                             *state = GroupJob::Done;
                         } else {
                             jobs.insert(id, GroupJob::Done);
+                            gc_done_jobs(&mut jobs);
                         }
                     }
                     SubmasterMsg::Done(done) => {
@@ -227,7 +237,7 @@ pub fn spawn(
 mod tests {
     use super::*;
     use crate::coding::HierarchicalCode;
-    use crate::coordinator::messages::{JobBroadcast, WorkerDone};
+    use crate::coordinator::messages::{JobBroadcast, ModelId, WorkerDone};
     use crate::linalg::{ops, Matrix};
     use crate::util::rng::Rng as URng;
 
@@ -263,7 +273,6 @@ mod tests {
             group,
             3, // offset of group 1 in the flat indexing
             scheme,
-            8,
             vec![], // no real workers; we inject Done messages
             no_link_delay(),
             false,
@@ -277,6 +286,8 @@ mod tests {
         sub_tx
             .send(SubmasterMsg::Job(JobBroadcast {
                 id,
+                model: ModelId(0),
+                out_rows: 8,
                 x: Arc::new(x.clone()),
             }))
             .unwrap();
@@ -333,7 +344,6 @@ mod tests {
             0,
             0,
             scheme,
-            2,
             vec![],
             no_link_delay(),
             true, // dead link
@@ -347,6 +357,8 @@ mod tests {
         sub_tx
             .send(SubmasterMsg::Job(JobBroadcast {
                 id,
+                model: ModelId(0),
+                out_rows: 2,
                 x: Arc::new(x.clone()),
             }))
             .unwrap();
@@ -376,7 +388,6 @@ mod tests {
             0,
             0, // single relay group at offset 0
             scheme,
-            6,
             vec![],
             no_link_delay(),
             false,
@@ -390,6 +401,8 @@ mod tests {
         sub_tx
             .send(SubmasterMsg::Job(JobBroadcast {
                 id,
+                model: ModelId(0),
+                out_rows: 6,
                 x: Arc::new(Matrix::identity(2)),
             }))
             .unwrap();

@@ -1,15 +1,20 @@
 //! Worker thread: `w(i, j)` of Fig. 1.
 //!
-//! Each worker owns one coded shard `Â_{i,j}`. On a job broadcast it
-//! (optionally) sleeps a straggler delay drawn from the configured
-//! model — emulating the paper's `Exp(µ1)` completion times on a single
-//! machine — computes `Â_{i,j}·X` through its backend (PJRT artifact or
-//! native GEMM), and uploads the product to its submaster.
+//! Each worker owns one coded shard **per registered model**, installed
+//! by [`WorkerCmd::Load`] at registration time (channel FIFO guarantees
+//! a model's shard precedes any job that multiplies it). On a job
+//! broadcast it (optionally) sleeps a straggler delay drawn from the
+//! configured model — emulating the paper's `Exp(µ1)` completion times
+//! on a single machine — computes `Â_{i,j}·X` through its backend (PJRT
+//! artifact or native GEMM), and uploads the product to its submaster.
 
 use crate::coordinator::backend::{ComputeBackend, WorkerShard};
-use crate::coordinator::messages::{CancelSet, SubmasterMsg, WorkerCmd, WorkerDone};
+use crate::coordinator::messages::{
+    CancelSet, ModelId, SubmasterMsg, WorkerCmd, WorkerDone,
+};
 use crate::sim::straggler::StragglerModel;
 use crate::util::rng::Rng;
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
@@ -30,7 +35,6 @@ pub struct WorkerDelay {
 pub fn spawn(
     group: usize,
     index: usize,
-    shard: WorkerShard,
     backend: ComputeBackend,
     delay: WorkerDelay,
     dead: bool,
@@ -42,9 +46,13 @@ pub fn spawn(
     thread::Builder::new()
         .name(format!("hiercode-w{group}.{index}"))
         .spawn(move || {
+            let mut shards: HashMap<ModelId, WorkerShard> = HashMap::new();
             while let Ok(cmd) = rx.recv() {
                 match cmd {
                     WorkerCmd::Shutdown => break,
+                    WorkerCmd::Load { model, shard } => {
+                        shards.insert(model, *shard);
+                    }
                     WorkerCmd::Compute(job) => {
                         if dead {
                             // Fault injection: silently drop the job.
@@ -54,6 +62,18 @@ pub fn spawn(
                         if cancel.is_cancelled(job.id) {
                             continue;
                         }
+                        let Some(shard) = shards.get(&job.model) else {
+                            // Registration bug: behave like a straggler
+                            // (the code absorbs missing products).
+                            crate::log_error!(
+                                "worker",
+                                "w({group},{index}) has no shard for model {:?} \
+                                 (job {:?})",
+                                job.model,
+                                job.id
+                            );
+                            continue;
+                        };
                         if delay.enabled {
                             let d = delay.model.sample(&mut rng) * delay.scale;
                             if d > 0.0 {
@@ -65,7 +85,7 @@ pub fn spawn(
                         if cancel.is_cancelled(job.id) {
                             continue;
                         }
-                        match backend.shard_product(&shard, &job.x) {
+                        match backend.shard_product(shard, &job.x) {
                             Ok(data) => {
                                 let _ = submaster.send(SubmasterMsg::Done(WorkerDone {
                                     id: job.id,
@@ -105,16 +125,21 @@ mod tests {
         }
     }
 
+    fn load(model: ModelId, shard: &Matrix) -> WorkerCmd {
+        WorkerCmd::Load {
+            model,
+            shard: Box::new(WorkerShard::new(shard).unwrap()),
+        }
+    }
+
     #[test]
     fn worker_computes_and_uploads() {
         let shard_m = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
-        let shard = WorkerShard::new(&shard_m).unwrap();
         let (cmd_tx, cmd_rx) = mpsc::channel();
         let (sub_tx, sub_rx) = mpsc::channel();
         let h = spawn(
             1,
             3,
-            shard,
             ComputeBackend::Native,
             no_delay(),
             false,
@@ -123,9 +148,15 @@ mod tests {
             cmd_rx,
             sub_tx,
         );
+        cmd_tx.send(load(ModelId(0), &shard_m)).unwrap();
         let x = Arc::new(Matrix::from_rows(&[&[1.0], &[1.0]]));
         cmd_tx
-            .send(WorkerCmd::Compute(JobBroadcast { id: JobId(7), x }))
+            .send(WorkerCmd::Compute(JobBroadcast {
+                id: JobId(7),
+                model: ModelId(0),
+                out_rows: 2,
+                x,
+            }))
             .unwrap();
         let msg = sub_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         match msg {
@@ -141,14 +172,66 @@ mod tests {
     }
 
     #[test]
-    fn dead_worker_stays_silent() {
-        let shard = WorkerShard::new(&Matrix::identity(2)).unwrap();
+    fn worker_serves_multiple_models_by_id() {
         let (cmd_tx, cmd_rx) = mpsc::channel();
         let (sub_tx, sub_rx) = mpsc::channel();
         let h = spawn(
             0,
             0,
-            shard,
+            ComputeBackend::Native,
+            no_delay(),
+            false,
+            std::sync::Arc::new(CancelSet::new()),
+            Rng::new(3),
+            cmd_rx,
+            sub_tx,
+        );
+        // Two models with distinguishable shards.
+        cmd_tx
+            .send(load(ModelId(0), &Matrix::from_rows(&[&[1.0]])))
+            .unwrap();
+        cmd_tx
+            .send(load(ModelId(1), &Matrix::from_rows(&[&[10.0]])))
+            .unwrap();
+        let x = Arc::new(Matrix::from_rows(&[&[2.0]]));
+        for (model, expect) in [(ModelId(1), 20.0), (ModelId(0), 2.0)] {
+            cmd_tx
+                .send(WorkerCmd::Compute(JobBroadcast {
+                    id: JobId(model.0 as u64),
+                    model,
+                    out_rows: 1,
+                    x: Arc::clone(&x),
+                }))
+                .unwrap();
+            let msg = sub_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            match msg {
+                SubmasterMsg::Done(done) => {
+                    assert_eq!(done.data.data(), &[expect], "model {model:?}");
+                }
+                other => panic!("unexpected message {other:?}"),
+            }
+        }
+        // A job for an unregistered model is absorbed like a straggler.
+        cmd_tx
+            .send(WorkerCmd::Compute(JobBroadcast {
+                id: JobId(9),
+                model: ModelId(9),
+                out_rows: 1,
+                x,
+            }))
+            .unwrap();
+        assert!(sub_rx.recv_timeout(Duration::from_millis(200)).is_err());
+        cmd_tx.send(WorkerCmd::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dead_worker_stays_silent() {
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let (sub_tx, sub_rx) = mpsc::channel();
+        let h = spawn(
+            0,
+            0,
             ComputeBackend::Native,
             no_delay(),
             true, // dead
@@ -157,9 +240,15 @@ mod tests {
             cmd_rx,
             sub_tx,
         );
+        cmd_tx.send(load(ModelId(0), &Matrix::identity(2))).unwrap();
         let x = Arc::new(Matrix::identity(2));
         cmd_tx
-            .send(WorkerCmd::Compute(JobBroadcast { id: JobId(1), x }))
+            .send(WorkerCmd::Compute(JobBroadcast {
+                id: JobId(1),
+                model: ModelId(0),
+                out_rows: 2,
+                x,
+            }))
             .unwrap();
         assert!(sub_rx.recv_timeout(Duration::from_millis(200)).is_err());
         cmd_tx.send(WorkerCmd::Shutdown).unwrap();

@@ -68,6 +68,14 @@ pub enum Error {
     Runtime(String),
     /// Coordinator protocol violation or channel failure.
     Coordinator(String),
+    /// Admission control: the model's submission queue is full —
+    /// explicit backpressure, retry later.
+    Busy {
+        /// The model whose queue was full.
+        model: String,
+    },
+    /// The request's deadline expired before it was served.
+    DeadlineExceeded,
     /// I/O errors.
     Io(std::io::Error),
 }
@@ -83,6 +91,12 @@ impl std::fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Busy { model } => {
+                write!(f, "busy: model '{model}' queue is full (backpressure; retry later)")
+            }
+            Error::DeadlineExceeded => {
+                write!(f, "deadline exceeded before the request was served")
+            }
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -1,0 +1,307 @@
+//! Integration tests for the multi-tenant job service: concurrency,
+//! admission control (Busy backpressure + deadline shedding) and the
+//! graceful-shutdown drain guarantee.
+
+use hiercode::config::schema::ClusterConfig;
+use hiercode::coordinator::fault::FaultConfig;
+use hiercode::coordinator::{ClusterCore, SubmitOptions};
+use hiercode::linalg::{ops, Matrix};
+use hiercode::util::rng::Rng;
+use hiercode::Error;
+use std::time::{Duration, Instant};
+
+fn test_matrix(m: usize, d: usize, seed: u64) -> Matrix {
+    let mut r = Rng::new(seed);
+    Matrix::from_fn(m, d, |_, _| r.uniform(-1.0, 1.0))
+}
+
+/// The request vector client `c` sends on its `i`-th iteration —
+/// deterministic, so independent runs can be compared request by
+/// request.
+fn request_vec(d: usize, client: usize, iter: usize) -> Vec<f64> {
+    let mut r = Rng::new(0xC0FFEE ^ ((client as u64) << 16) ^ (iter as u64));
+    (0..d).map(|_| r.uniform(-1.0, 1.0)).collect()
+}
+
+/// Faults that kill every parity worker and the parity group of a
+/// (3,2)×(3,2) hierarchical deployment: the only shards that can ever
+/// arrive are systematic, so both decode levels take the pure-reshuffle
+/// fast path (0 flops) — which is arrival-order-invariant, making
+/// results **bit-deterministic** across runs and thread interleavings.
+fn systematic_only_faults() -> FaultConfig {
+    FaultConfig::none()
+        .with_dead_workers(&[(0, 2), (1, 2), (2, 2)])
+        .with_dead_links(&[2])
+}
+
+fn stress_config() -> ClusterConfig {
+    let mut config = ClusterConfig::demo(3, 2, 3, 2);
+    config.straggler.enabled = true;
+    config.straggler.scale = 0.0005;
+    config.serving.queue_cap = 1024; // no Busy in the bit-match runs
+    // One request per job: every request's worker GEMM has the same
+    // shape in the single-client and concurrent runs, so the bitwise
+    // comparison isolates concurrency (not batch-width coalescing).
+    config.batching.max_batch = 1;
+    config
+}
+
+const MODELS: [&str; 2] = ["alpha", "beta"];
+const CLIENTS: usize = 8;
+const ITERS: usize = 12;
+
+/// Run the deterministic request set and return every result, keyed
+/// `[client][iter]`. `concurrent` = all 8 clients on their own threads
+/// (each a closed loop), else one thread submits everything in order.
+fn run_request_set(concurrent: bool) -> Vec<Vec<Vec<f64>>> {
+    let config = stress_config();
+    let core = ClusterCore::launch_with_faults(&config, systematic_only_faults())
+        .unwrap();
+    let a0 = test_matrix(8, 4, 50);
+    let a1 = test_matrix(16, 3, 51);
+    core.register_model(MODELS[0], &a0).unwrap();
+    core.register_model(MODELS[1], &a1).unwrap();
+    let dims = [4usize, 3usize];
+    let results: Vec<Vec<Vec<f64>>> = if concurrent {
+        let mut joins = Vec::new();
+        for c in 0..CLIENTS {
+            let client = core.handle();
+            joins.push(std::thread::spawn(move || {
+                (0..ITERS)
+                    .map(|i| {
+                        let model = MODELS[i % 2];
+                        let x = request_vec(dims[i % 2], c, i);
+                        client
+                            .submit_to(model, x)
+                            .expect("admission")
+                            .wait()
+                            .expect("result")
+                    })
+                    .collect::<Vec<Vec<f64>>>()
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    } else {
+        let client = core.handle();
+        (0..CLIENTS)
+            .map(|c| {
+                (0..ITERS)
+                    .map(|i| {
+                        let model = MODELS[i % 2];
+                        let x = request_vec(dims[i % 2], c, i);
+                        client
+                            .submit_to(model, x)
+                            .expect("admission")
+                            .wait()
+                            .expect("result")
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    let snap = core.metrics();
+    // Exactly-once accounting: every submission was accepted and
+    // completed; nothing bounced, shed, failed or leaked.
+    let total = (CLIENTS * ITERS) as u64;
+    assert_eq!(snap.requests, total);
+    assert_eq!(snap.rejected, 0);
+    assert_eq!(snap.shed, 0);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.queue_depth, 0);
+    assert_eq!(
+        snap.decode_flops, 0,
+        "systematic-only faults must keep both decode levels on the \
+         reshuffle fast path (the bit-determinism precondition)"
+    );
+    let by_name: std::collections::HashMap<_, _> = snap
+        .models
+        .iter()
+        .map(|m| (m.name.as_str(), m))
+        .collect();
+    for name in MODELS {
+        let m = by_name[name];
+        assert_eq!(m.accepted, total / 2, "model {name}");
+        assert_eq!(m.completed, total / 2, "model {name}");
+        assert_eq!(m.queued, 0, "model {name}");
+    }
+    core.shutdown();
+    // Correctness against the oracle (f32-narrowed shards: 1e-4).
+    for c in 0..CLIENTS {
+        for i in 0..ITERS {
+            let (a, d) = if i % 2 == 0 { (&a0, 4) } else { (&a1, 3) };
+            let expect = ops::matvec(a, &request_vec(d, c, i));
+            let got = &results[c][i];
+            assert_eq!(got.len(), expect.len());
+            for (g, w) in got.iter().zip(expect.iter()) {
+                assert!((g - w).abs() < 1e-4, "client {c} iter {i}");
+            }
+        }
+    }
+    results
+}
+
+/// Satellite: ≥8 threads against ≥2 models — results bit-match a
+/// single-client run of the identical request set, and every job is
+/// accounted exactly once.
+#[test]
+fn multi_client_stress_bit_matches_single_client_run() {
+    let single = run_request_set(false);
+    let concurrent = run_request_set(true);
+    for c in 0..CLIENTS {
+        for i in 0..ITERS {
+            assert_eq!(
+                single[c][i], concurrent[c][i],
+                "client {c} iter {i}: concurrent result must bit-match the \
+                 single-client run"
+            );
+        }
+    }
+}
+
+/// Acceptance: under saturating load, submissions beyond the queue cap
+/// return `Error::Busy` — and are accounted exactly once, while every
+/// accepted request still completes.
+#[test]
+fn saturating_load_bounces_busy_and_accounts_exactly_once() {
+    let mut config = ClusterConfig::demo(2, 1, 2, 1);
+    config.serving.queue_cap = 2;
+    // A wide batch window so the queue actually fills.
+    config.batching.max_batch = 1024;
+    config.batching.max_wait_ms = 150.0;
+    let core = ClusterCore::launch(&config).unwrap();
+    core.register_model("m", &test_matrix(4, 2, 60)).unwrap();
+    // 6 threads × 8 attempts against a cap of 2.
+    let mut joins = Vec::new();
+    for t in 0..6 {
+        let client = core.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut accepted = Vec::new();
+            let mut busy = 0u64;
+            for i in 0..8 {
+                match client.submit_to("m", vec![t as f64, i as f64]) {
+                    Ok(h) => accepted.push(h),
+                    Err(Error::Busy { model }) => {
+                        assert_eq!(model, "m");
+                        busy += 1;
+                        // Closed-loop backoff so accepted work drains.
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+            }
+            let completed = accepted
+                .into_iter()
+                .map(|h| h.wait().expect("accepted request must complete"))
+                .count() as u64;
+            (completed, busy)
+        }));
+    }
+    let (mut completed, mut busy) = (0u64, 0u64);
+    for j in joins {
+        let (c, b) = j.join().unwrap();
+        completed += c;
+        busy += b;
+    }
+    assert_eq!(completed + busy, 48, "every attempt accounted exactly once");
+    assert!(busy > 0, "cap 2 under 6 greedy clients must bounce");
+    let snap = core.metrics();
+    assert_eq!(snap.requests, completed);
+    assert_eq!(snap.rejected, busy);
+    assert_eq!(snap.shed, 0);
+    assert_eq!(snap.queue_depth, 0, "queue drains to empty");
+    core.shutdown();
+}
+
+/// Deadline shedding: a request that outlives its admission deadline in
+/// the batcher is shed with `DeadlineExceeded`, exactly once.
+#[test]
+fn expired_deadline_sheds_with_explicit_error() {
+    let mut config = ClusterConfig::demo(2, 1, 2, 1);
+    // The batch window (120ms) far exceeds the deadline (20ms): the
+    // request expires while queued.
+    config.batching.max_batch = 1024;
+    config.batching.max_wait_ms = 120.0;
+    config.serving.default_deadline_ms = 20.0;
+    let core = ClusterCore::launch(&config).unwrap();
+    core.register_model("m", &test_matrix(4, 2, 61)).unwrap();
+    let client = core.handle();
+    let shed = client.submit_to("m", vec![1.0, 2.0]).unwrap();
+    // A per-request deadline override outlives the window and succeeds.
+    let kept = client
+        .submit_with(
+            vec![3.0, 4.0],
+            SubmitOptions::to_model("m").with_deadline(Duration::from_secs(30)),
+        )
+        .unwrap();
+    assert!(matches!(shed.wait(), Err(Error::DeadlineExceeded)));
+    assert!(kept.wait().is_ok());
+    let snap = core.metrics();
+    assert_eq!(snap.shed, 1, "shed exactly once");
+    assert_eq!(snap.requests, 2);
+    assert_eq!(snap.queue_depth, 0);
+    let m = &snap.models[0];
+    assert_eq!(m.shed, 1);
+    assert_eq!(m.completed, 1);
+    core.shutdown();
+}
+
+/// Satellite regression: graceful shutdown drains — every accepted
+/// request resolves (reply or error); no `JobHandle` ever hangs.
+#[test]
+fn shutdown_drains_inflight_jobs_to_completion() {
+    let mut config = ClusterConfig::demo(3, 2, 3, 2);
+    config.straggler.enabled = true;
+    config.straggler.scale = 0.002; // real in-flight work at shutdown
+    let core = ClusterCore::launch(&config).unwrap();
+    let a = test_matrix(8, 4, 62);
+    core.register_model("m", &a).unwrap();
+    let client = core.handle();
+    let handles: Vec<_> = (0..16)
+        .map(|i| client.submit_to("m", request_vec(4, 0, i)).unwrap())
+        .collect();
+    // Shut down immediately: queued + in-flight work must drain.
+    core.shutdown();
+    for (i, h) in handles.into_iter().enumerate() {
+        let outcome = h
+            .try_wait()
+            .expect("after shutdown every handle must be resolved");
+        let y = outcome.unwrap_or_else(|e| {
+            panic!("drained request {i} should have completed, got: {e}")
+        });
+        let expect = ops::matvec(&a, &request_vec(4, 0, i));
+        for (g, w) in y.iter().zip(expect.iter()) {
+            assert!((g - w).abs() < 1e-4, "request {i}");
+        }
+    }
+}
+
+/// The drain guarantee also holds when jobs can never complete (all
+/// uplinks dead): the drain grace bounds the wait and every handle
+/// resolves with an error instead of hanging.
+#[test]
+fn shutdown_never_hangs_even_when_jobs_cannot_complete() {
+    let mut config = ClusterConfig::demo(2, 1, 2, 2);
+    config.serving.drain_ms = 300.0;
+    let faults = FaultConfig::none().with_dead_links(&[0, 1]);
+    assert!(!faults.survivable(2, 1, 2, 2));
+    let core = ClusterCore::launch_with_faults(&config, faults).unwrap();
+    core.register_model("m", &test_matrix(4, 2, 63)).unwrap();
+    let client = core.handle();
+    let handles: Vec<_> = (0..4)
+        .map(|i| client.submit_to("m", vec![i as f64, 1.0]).unwrap())
+        .collect();
+    let t0 = Instant::now();
+    core.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "shutdown must be bounded by the drain grace"
+    );
+    for h in handles {
+        let outcome = h
+            .try_wait()
+            .expect("every handle must resolve across shutdown");
+        assert!(outcome.is_err(), "undecodable jobs must fail, not hang");
+    }
+    // Late submissions are refused, not silently dropped.
+    assert!(client.submit_to("m", vec![0.0, 0.0]).is_err());
+}
