@@ -15,6 +15,9 @@
 //! * `hetero_group_decode` — a heterogeneous topology with skewed
 //!   per-group `k1_g` (unequal elimination sizes), serial vs pooled,
 //!   with its own bit-identical check;
+//! * `partial_decode` — partial-work mode at `r ∈ {1, 4}` sub-tasks
+//!   per worker (the group elimination grows to `(k1·r)×(k1·r)`),
+//!   serial vs pooled, with its own bit-identical verdict;
 //! * `session_decode` — streaming-session batch decode per scheme;
 //! * `BENCH_sim.json` — sharded Monte-Carlo throughput at 1..max
 //!   threads with its own bit-identical check.
@@ -273,6 +276,61 @@ fn bench_decode(cfg: &BenchConfig) -> Result<String> {
         het_out_serial.flops
     );
 
+    // --- Partial-work sub-task decode (r ∈ {1, 4}). ---
+    // Same worker grid and arrival pattern (k1 full workers per
+    // group), increasingly fine sub-task layering: each group's
+    // elimination grows from k1×k1 to (k1·r)×(k1·r) — the decode-cost
+    // side of the arXiv:1806.10250 tradeoff, with a serial-vs-pooled
+    // bit-identity verdict per r.
+    let pr_sweep: [usize; 2] = [1, 4];
+    let (pn1, pk1, pn2, pk2) = (8usize, 4usize, 4usize, 2usize);
+    let pblock = rows / (pk1 * pk2);
+    let mut partial_serial = Vec::new();
+    let mut partial_parallel = Vec::new();
+    let mut partial_flops: Vec<usize> = Vec::new();
+    let mut partial_deterministic = true;
+    for &pr in &pr_sweep {
+        let mut ptopo = crate::scenario::Topology::homogeneous(pn1, pk1, pn2, pk2);
+        for g in &mut ptopo.groups {
+            g.subtasks = pr;
+        }
+        let mk_code = |threads: usize| -> Result<crate::coding::HierarchicalCode> {
+            let pool = Arc::new(DecodePool::new(threads)?);
+            Ok(crate::coding::HierarchicalCode::from_topology(ptopo.clone())?.with_pool(pool))
+        };
+        // Parity-heavy full-worker products (last k1 workers of each
+        // group): the total data volume is constant across r.
+        let per_group_partial: Vec<Vec<(usize, Matrix)>> = (0..pn2)
+            .map(|_| {
+                (pn1 - pk1..pn1)
+                    .map(|j| (j, random_matrix(&mut r, pblock, batch)))
+                    .collect()
+            })
+            .collect();
+        let serial_code = mk_code(1)?;
+        let par_code = mk_code(max_t)?;
+        let s_serial = time_min(cfg.warmup, cfg.iters, || {
+            serial_code.decode_hierarchical(&per_group_partial).unwrap()
+        });
+        let s_par = time_min(cfg.warmup, cfg.iters, || {
+            par_code.decode_hierarchical(&per_group_partial).unwrap()
+        });
+        let o_serial = serial_code.decode_hierarchical(&per_group_partial)?;
+        let o_par = par_code.decode_hierarchical(&per_group_partial)?;
+        partial_deterministic &= o_serial.result.data() == o_par.result.data()
+            && o_serial.flops == o_par.flops;
+        println!(
+            "bench partial_decode_r{pr}_{rows}x{batch}   serial {}  t{max_t} {}  \
+             ({} flops)",
+            fmt_time(s_serial),
+            fmt_time(s_par),
+            o_serial.flops
+        );
+        partial_serial.push(s_serial);
+        partial_parallel.push(s_par);
+        partial_flops.push(o_serial.flops as usize);
+    }
+
     // --- Streaming-session batch decode per scheme. ---
     let mut sessions = Vec::new();
     let srows = cfg.session_rows;
@@ -329,6 +387,13 @@ fn bench_decode(cfg: &BenchConfig) -> Result<String> {
          \x20   \"speedup\": {}, \"decode_flops\": {},\n\
          \x20   \"deterministic\": {het_deterministic}\n\
          \x20 }},\n\
+         \x20 \"partial_decode\": {{\n\
+         \x20   \"n1\": {pn1}, \"k1\": {pk1}, \"n2\": {pn2}, \"k2\": {pk2},\n\
+         \x20   \"rows\": {rows}, \"batch\": {batch}, \"threads\": {max_t},\n\
+         \x20   \"r\": {}, \"serial_s\": {}, \"parallel_s\": {},\n\
+         \x20   \"decode_flops\": {},\n\
+         \x20   \"deterministic\": {partial_deterministic}\n\
+         \x20 }},\n\
          \x20 \"session_decode\": [\n{}\n  ],\n\
          \x20 \"deterministic_across_threads\": {}\n\
          }}\n",
@@ -348,6 +413,10 @@ fn bench_decode(cfg: &BenchConfig) -> Result<String> {
         jf(het_parallel_s),
         jf(het_serial_s / het_parallel_s),
         het_out_serial.flops,
+        ju_list(&pr_sweep),
+        jf_list(&partial_serial),
+        jf_list(&partial_parallel),
+        ju_list(&partial_flops),
         sessions.join(",\n"),
         deterministic
     ))
@@ -455,6 +524,16 @@ mod tests {
                     Some(true),
                     "hetero decode must be bit-identical across pool widths"
                 );
+                let partial = v
+                    .get("partial_decode")
+                    .expect("partial-work decode scenario missing");
+                assert_eq!(
+                    partial.get("deterministic").and_then(|d| d.as_bool()),
+                    Some(true),
+                    "partial-work decode must be bit-identical across pool widths"
+                );
+                let rs = partial.get("r").and_then(|x| x.as_array()).unwrap();
+                assert_eq!(rs.len(), 2, "r sweep covers 1 and 4");
             }
         }
     }

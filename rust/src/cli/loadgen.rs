@@ -357,6 +357,44 @@ mod tests {
         }
     }
 
+    /// Satellite regression: a run that completed nothing has no
+    /// latency sample — its p50/p95/p99 must serialize as `null`,
+    /// never as a fake `0.0` "zero latency" tail.
+    #[test]
+    fn empty_latency_sample_renders_null_not_zero() {
+        let load = LoadConfig {
+            n_models: 1,
+            rows: 8,
+            cols: 2,
+            queue_cap: 1,
+            deadline_ms: 10.0,
+            duration_s: 0.1,
+            seed: 1,
+        };
+        let runs = vec![RunStats {
+            scheme: "hierarchical".into(),
+            clients: 1,
+            wall_s: 0.1,
+            completed: 0,
+            busy: 3,
+            shed: 0,
+            failed: 0,
+            aborted: 0,
+            latencies_s: Vec::new(),
+            accounting_consistent: true,
+        }];
+        assert!(runs[0].quantile_ms(0.99).is_nan());
+        let json = render_json(true, &load, &runs);
+        assert!(
+            json.contains("\"p99\": null"),
+            "empty sample must render null, got: {json}"
+        );
+        assert!(!json.contains("\"p99\": 0"), "no fake zero-latency tail");
+        // The document stays parseable by our own JSON parser.
+        let v = crate::config::json::Json::parse(&json).unwrap();
+        assert!(v.get("runs").is_some());
+    }
+
     #[test]
     fn loadgen_rejects_bad_arguments() {
         for bad in [

@@ -1,7 +1,7 @@
 //! Command-line launcher (hand-rolled; `clap` is unavailable offline).
 //!
 //! ```text
-//! hiercode figures  <fig6a|fig6b|fig7|table1|decode-scaling|allocation|all>
+//! hiercode figures  <fig6a|fig6b|fig7|table1|decode-scaling|allocation|partial|all>
 //! hiercode sim      --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R] [--trials N]
 //! hiercode bounds   --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R]
 //! hiercode allocate --n1 L --k2 K2 [--mu1 L|R] [--mu2 L|R] (--recovery F | --total-k1 K)
@@ -20,7 +20,7 @@ const USAGE: &str = "\
 hiercode — Hierarchical Coding for Distributed Computing (Park et al., 2018)
 
 USAGE:
-  hiercode figures <fig6a|fig6b|fig7|table1|decode-scaling|allocation|all>
+  hiercode figures <fig6a|fig6b|fig7|table1|decode-scaling|allocation|partial|all>
                    [--trials N] [--seed S]
   hiercode sim     --k1 K1 --k2 K2 [--n1 N1] [--n2 N2]
                    [--mu1 R] [--mu2 R] [--trials N] [--seed S]
@@ -130,6 +130,9 @@ fn figures_cmd(args: &Args) -> crate::Result<()> {
         "allocation" => {
             crate::figures::allocation::run(trials, seed)?;
         }
+        "partial" => {
+            crate::figures::partial::run(trials, seed)?;
+        }
         "all" => {
             crate::figures::fig6::run(5, trials, seed)?;
             println!();
@@ -142,6 +145,8 @@ fn figures_cmd(args: &Args) -> crate::Result<()> {
             crate::figures::decode_scaling::run(seed)?;
             println!();
             crate::figures::allocation::run(trials, seed)?;
+            println!();
+            crate::figures::partial::run(trials, seed)?;
         }
         other => {
             return Err(crate::Error::InvalidParams(format!(

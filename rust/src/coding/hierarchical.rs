@@ -95,6 +95,20 @@ pub struct WorkerId {
 }
 
 /// The `(n1, k1) × (n2, k2)` hierarchical code.
+///
+/// # Partial-work mode (sub-tasks)
+///
+/// When a group's [`GroupSpec::subtasks`] is `r > 1`, that group's
+/// inner code is the `(n1·r, k1·r)` MDS code over `k1·r` sub-blocks of
+/// `Ã_g` (Ferdinand–Draper, arXiv:1806.10250, layered on the paper's
+/// outer code): worker `j`'s shard is the stack of its `r` coded
+/// sub-shards (rows `[s·b, (s+1)·b)` of the shard are sub-task `s`),
+/// computed **sequentially**, and the group decodes from **any** `k1·r`
+/// distinct sub-results — fast workers contribute all `r`, stragglers
+/// contribute however many they finished. With `r = 1` the inner
+/// generator is the exact `(n1, k1)` systematic MDS generator of the
+/// all-or-nothing scheme, so every encode/decode path is bit-identical
+/// to pre-partial behavior.
 pub struct HierarchicalCode {
     params: HierarchicalParams,
     /// The scenario this code was built for ([`CodedScheme::topology`]
@@ -103,6 +117,9 @@ pub struct HierarchicalCode {
     topo: Topology,
     outer: MdsCode,
     inner: Vec<MdsCode>,
+    /// Per-group sub-tasks per worker (`r_g`, 1 = all-or-nothing).
+    /// `inner[g]` is the `(n1_g·r_g, k1_g·r_g)` code.
+    subtasks: Vec<usize>,
     /// Offset of each group's first worker in the flat indexing.
     offsets: Vec<usize>,
     /// Pool for parallel intra-group decoding and the in-decode solve
@@ -134,9 +151,13 @@ impl HierarchicalCode {
     pub fn from_topology(topo: Topology) -> Result<Self> {
         topo.validate()?;
         let params = topo.hierarchical_params();
+        let subtasks: Vec<usize> = topo.groups.iter().map(|g| g.subtasks).collect();
         let outer = MdsCode::new(params.n2, params.k2)?;
+        // Partial-work layering: group g's inner code spans sub-task
+        // granularity, (n1·r, k1·r). At r = 1 this is the exact
+        // (n1, k1) generator of the all-or-nothing scheme.
         let inner = (0..params.n2)
-            .map(|i| MdsCode::new(params.n1[i], params.k1[i]))
+            .map(|i| MdsCode::new(params.n1[i] * subtasks[i], params.k1[i] * subtasks[i]))
             .collect::<Result<Vec<_>>>()?;
         let mut offsets = Vec::with_capacity(params.n2);
         let mut acc = 0;
@@ -149,6 +170,7 @@ impl HierarchicalCode {
             topo,
             outer,
             inner,
+            subtasks,
             offsets,
             pool: Arc::new(DecodePool::serial()),
         })
@@ -180,13 +202,19 @@ impl HierarchicalCode {
         &self.params
     }
 
+    /// Per-group sub-tasks per worker (`r_g`; all 1 = the paper's
+    /// all-or-nothing task model).
+    pub fn subtasks(&self) -> &[usize] {
+        &self.subtasks
+    }
+
     /// Rows of `A` must divide by `k2 · lcm-ish`: we require
-    /// `k2 · k1^{(i)}` for every group; for the homogeneous case this is
-    /// `k1·k2`.
+    /// `k2 · k1^{(i)} · r^{(i)}` for every group; for the homogeneous
+    /// all-or-nothing case this is `k1·k2`.
     pub fn required_row_divisor(&self) -> usize {
         let mut d = self.params.k2;
-        for &k1 in &self.params.k1 {
-            d = lcm(d, self.params.k2 * k1);
+        for (&k1, &r) in self.params.k1.iter().zip(&self.subtasks) {
+            d = lcm(d, self.params.k2 * k1 * r);
         }
         d
     }
@@ -203,19 +231,50 @@ impl HierarchicalCode {
     }
 
     /// Encode `A` hierarchically: returns `shards[i][j] = Â_{i,j}`.
+    /// With sub-tasks (`r_g > 1`) a worker's shard stacks its `r_g`
+    /// coded sub-shards: rows `[s·b, (s+1)·b)` are sub-task `s`.
     pub fn encode_grouped(&self, a: &Matrix) -> Result<Vec<Vec<Matrix>>> {
         // Outer code: A = [A_1; ...; A_{k2}] → Ã_1..Ã_{n2}.
         let blocks = a.split_rows(self.params.k2)?;
         let coded_groups = self.outer.encode_blocks(&blocks)?;
-        // Inner code per group: Ã_i = [Ã_{i,1}; ...] → Â_{i,1}..Â_{i,n1}.
+        // Inner code per group: Ã_i = [Ã_{i,1}; ...] → Â_{i,1}..Â_{i,n1}
+        // (sub-task granularity: k1·r sub-blocks → n1·r sub-shards,
+        // regrouped r-per-worker).
         coded_groups
             .iter()
             .enumerate()
             .map(|(i, g)| {
-                let sub = g.split_rows(self.params.k1[i])?;
-                self.inner[i].encode_blocks(&sub)
+                let r = self.subtasks[i];
+                let sub = g.split_rows(self.params.k1[i] * r)?;
+                let coded = self.inner[i].encode_blocks(&sub)?;
+                if r == 1 {
+                    return Ok(coded);
+                }
+                (0..self.params.n1[i])
+                    .map(|j| Matrix::vstack(&coded[j * r..(j + 1) * r]))
+                    .collect()
             })
             .collect()
+    }
+
+    /// Expand full worker products of group `g` into sub-result pairs
+    /// for the sub-task-granular inner code: `(j, Â_j·X)` becomes the
+    /// `r` pairs `(j·r + s, chunk_s)`. Identity (a copy) at `r = 1` —
+    /// the batch paths below branch so the all-or-nothing case keeps
+    /// its original zero-expansion slices.
+    fn expand_subresults(
+        &self,
+        group: usize,
+        results: &[(usize, Matrix)],
+    ) -> Result<Vec<(usize, Matrix)>> {
+        let r = self.subtasks[group];
+        let mut out = Vec::with_capacity(results.len() * r);
+        for (j, data) in results {
+            for (s, chunk) in data.split_rows(r)?.into_iter().enumerate() {
+                out.push((j * r + s, chunk));
+            }
+        }
+        Ok(out)
     }
 
     /// Intra-group decode (what submaster `i` runs): recover `Ã_i·X`
@@ -236,7 +295,12 @@ impl HierarchicalCode {
             )));
         }
         let mut scratch = DecodeScratch::new();
-        self.inner[group].decode_stacked(results, &mut scratch)
+        if self.subtasks[group] == 1 {
+            self.inner[group].decode_stacked(results, &mut scratch)
+        } else {
+            let expanded = self.expand_subresults(group, results)?;
+            self.inner[group].decode_stacked(&expanded, &mut scratch)
+        }
     }
 
     /// Cross-group decode (what the master runs): recover `A·X` from any
@@ -290,11 +354,22 @@ impl HierarchicalCode {
         // in the streaming sessions.
         let stage1: Vec<Result<(usize, Matrix, u64)>> = self.pool.map(used, |i| {
             let mut scratch = DecodeScratch::new();
-            let (m, f) = self.inner[i].decode_stacked_with(
-                &per_group[i],
-                &mut scratch,
-                &DecodePool::serial(),
-            )?;
+            let (m, f) = if self.subtasks[i] == 1 {
+                self.inner[i].decode_stacked_with(
+                    &per_group[i],
+                    &mut scratch,
+                    &DecodePool::serial(),
+                )?
+            } else {
+                // Partial-work: full worker products expand to their
+                // sub-results before the (k1·r)×(k1·r) elimination.
+                let expanded = self.expand_subresults(i, &per_group[i])?;
+                self.inner[i].decode_stacked_with(
+                    &expanded,
+                    &mut scratch,
+                    &DecodePool::serial(),
+                )?
+            };
             Ok((i, m, f))
         });
         let mut group_results = Vec::with_capacity(self.params.k2);
@@ -340,9 +415,14 @@ pub struct HierarchicalDecoder {
     params: HierarchicalParams,
     inner: Vec<MdsCode>,
     outer: MdsCode,
+    /// Per-group sub-tasks per worker (`r_g`): a pushed worker result
+    /// expands into `r_g` sub-results and group `g` decodes at its
+    /// `k1_g·r_g`-th distinct sub-result.
+    subtasks: Vec<usize>,
     offsets: Vec<usize>,
     out_rows: usize,
-    /// Collected `(in-group index, product)` pairs per group.
+    /// Collected `(sub-result index, product)` pairs per group
+    /// (`(in-group worker index, product)` when `r_g = 1`).
     pending: Vec<Vec<(usize, Matrix)>>,
     /// Duplicate guard per group.
     seen: Vec<Vec<bool>>,
@@ -362,7 +442,7 @@ impl HierarchicalDecoder {
     fn new(code: &HierarchicalCode, out_rows: usize) -> Self {
         let params = code.params.clone();
         let pending = (0..params.n2)
-            .map(|g| Vec::with_capacity(params.k1[g]))
+            .map(|g| Vec::with_capacity(params.k1[g] * code.subtasks[g]))
             .collect();
         let seen = (0..params.n2).map(|g| vec![false; params.n1[g]]).collect();
         let decoded = Vec::with_capacity(params.k2);
@@ -370,6 +450,7 @@ impl HierarchicalDecoder {
         Self {
             inner: code.inner.clone(),
             outer: code.outer.clone(),
+            subtasks: code.subtasks.clone(),
             offsets: code.offsets.clone(),
             out_rows,
             pending,
@@ -412,9 +493,22 @@ impl Decoder for HierarchicalDecoder {
         }
         let (g, j) = self.split_flat(result.shard);
         if self.decoded.len() < self.params.k2 && !self.group_done[g] && !self.seen[g][j] {
-            self.seen[g][j] = true;
-            self.pending[g].push((j, result.data));
-            if self.pending[g].len() == self.params.k1[g] {
+            let r = self.subtasks[g];
+            if r == 1 {
+                self.seen[g][j] = true;
+                self.pending[g].push((j, result.data));
+            } else {
+                // Partial-work: a full worker result carries all r of
+                // its sub-results (rows [s·b, (s+1)·b) = sub-task s).
+                // Split before marking the worker seen, so a malformed
+                // result doesn't consume its slot.
+                let chunks = result.data.split_rows(r)?;
+                self.seen[g][j] = true;
+                for (s, chunk) in chunks.into_iter().enumerate() {
+                    self.pending[g].push((j * r + s, chunk));
+                }
+            }
+            if self.pending[g].len() >= self.params.k1[g] * r {
                 // The incremental step: inner-decode group g now, at its
                 // k1-th arrival — off the job's completion critical path.
                 // The solve fans its panels across the code's pool.
@@ -436,10 +530,14 @@ impl Decoder for HierarchicalDecoder {
             return DecodeProgress::Ready;
         }
         // Lower bound on further results: the (k2 − done) smallest
-        // per-group deficits among not-yet-decoded groups.
+        // per-group deficits among not-yet-decoded groups, in whole
+        // worker results (a pushed result is worth r_g sub-results).
         let mut deficits: Vec<usize> = (0..self.params.n2)
             .filter(|&g| !self.group_done[g])
-            .map(|g| self.params.k1[g].saturating_sub(self.pending[g].len()))
+            .map(|g| {
+                let r = self.subtasks[g];
+                (self.params.k1[g] * r).saturating_sub(self.pending[g].len()).div_ceil(r)
+            })
             .collect();
         deficits.sort_unstable();
         let needed_groups = self.params.k2 - done;
@@ -502,10 +600,20 @@ fn lcm(a: usize, b: usize) -> usize {
 impl CodedScheme for HierarchicalCode {
     fn name(&self) -> String {
         let p = &self.params;
-        if p.n1.windows(2).all(|w| w[0] == w[1]) && p.k1.windows(2).all(|w| w[0] == w[1]) {
-            format!("hier({},{})x({},{})", p.n1[0], p.k1[0], p.n2, p.k2)
+        // Partial-work suffix only when sub-tasks are in play, so
+        // all-or-nothing names (and everything keyed on them) are
+        // untouched.
+        let suffix = if self.subtasks.iter().all(|&r| r == 1) {
+            String::new()
+        } else if self.subtasks.windows(2).all(|w| w[0] == w[1]) {
+            format!("r{}", self.subtasks[0])
         } else {
-            format!("hier(hetero,n2={},k2={})", p.n2, p.k2)
+            "r(hetero)".to_string()
+        };
+        if p.n1.windows(2).all(|w| w[0] == w[1]) && p.k1.windows(2).all(|w| w[0] == w[1]) {
+            format!("hier({},{})x({},{}){suffix}", p.n1[0], p.k1[0], p.n2, p.k2)
+        } else {
+            format!("hier(hetero,n2={},k2={}){suffix}", p.n2, p.k2)
         }
     }
 
@@ -558,7 +666,11 @@ impl CodedScheme for HierarchicalCode {
         if group >= self.params.n2 {
             return None;
         }
-        // A group's share of the output is one outer block: m / k2 rows.
+        // A group's share of the output is one outer block: m / k2
+        // rows. The session runs over the inner code's own index space:
+        // sub-result indices `j·r + s` in partial-work mode (any k1·r
+        // of them decode — fractional worker contributions included),
+        // plain in-group worker indices when r = 1.
         Some(Box::new(MdsDecoder::new(
             self.inner[group].clone(),
             out_rows / self.params.k2,
@@ -859,6 +971,129 @@ mod tests {
         assert!(master.progress().is_ready());
         let out = master.finish().unwrap();
         assert!(out.result.max_abs_diff(&ops::matmul(&a, &x)) < 1e-7);
+    }
+
+    #[test]
+    fn r1_topology_is_bit_identical_to_all_or_nothing() {
+        // A topology whose groups carry subtasks = 1 (the default)
+        // builds the exact generators, encode and decode of the
+        // pre-partial scheme — the acceptance bit-identity guarantee.
+        let plain = HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap();
+        let topo = Topology::homogeneous(3, 2, 3, 2);
+        let viatopo = HierarchicalCode::from_topology(topo).unwrap();
+        assert_eq!(plain.subtasks(), &[1, 1, 1]);
+        let mut rng = Rng::new(41);
+        let a = random_matrix(&mut rng, 8, 3);
+        let x = random_matrix(&mut rng, 3, 1);
+        let s1 = plain.encode(&a).unwrap();
+        let s2 = viatopo.encode(&a).unwrap();
+        for (m1, m2) in s1.iter().zip(&s2) {
+            assert_eq!(m1.data(), m2.data());
+        }
+        let all = compute_all_products(&s1, &x);
+        let picks: Vec<usize> = (0..plain.num_workers()).collect();
+        let o1 = plain.decode(&select_results(&all, &picks), 8).unwrap();
+        let o2 = viatopo.decode(&select_results(&all, &picks), 8).unwrap();
+        assert_eq!(o1.result.data(), o2.result.data());
+        assert_eq!(o1.flops, o2.flops);
+        assert_eq!(plain.name(), viatopo.name(), "no r suffix at r = 1");
+    }
+
+    #[test]
+    fn subtask_sessions_recover_from_straggler_partials() {
+        // (4,2)×(3,2), r = 4: a group decodes from ANY k1·r = 8
+        // distinct sub-results — here one complete worker plus three
+        // stragglers' partial work (2 + 1 + 1 sub-results).
+        let mut topo = Topology::homogeneous(4, 2, 3, 2);
+        for g in &mut topo.groups {
+            g.subtasks = 4;
+        }
+        let code = HierarchicalCode::from_topology(topo).unwrap();
+        assert_eq!(code.name(), "hier(4,2)x(3,2)r4");
+        let r = 4usize;
+        let mut rng = Rng::new(21);
+        let rows = code.required_row_divisor();
+        assert_eq!(rows, 16); // k2·k1·r
+        let a = random_matrix(&mut rng, rows, 3);
+        let x = random_matrix(&mut rng, 3, 2);
+        let expect = ops::matmul(&a, &x);
+        let grouped = code.encode_grouped(&a).unwrap();
+        // Per-worker sub-products: sub-task s = rows [s·b, (s+1)·b).
+        let sub_products = |g: usize, j: usize| -> Vec<Matrix> {
+            grouped[g][j]
+                .split_rows(r)
+                .unwrap()
+                .iter()
+                .map(|shard| ops::matmul(shard, &x))
+                .collect()
+        };
+        let mut master = code.master_decoder(rows, 2);
+        for g in [0usize, 2] {
+            let mut session = code.group_decoder(g, rows, 2).unwrap();
+            let contributions: [(usize, usize); 4] = [(1, 4), (0, 2), (2, 1), (3, 1)];
+            let mut pushed = 0;
+            let mut ready = false;
+            for (j, count) in contributions {
+                for (s, data) in sub_products(g, j).into_iter().take(count).enumerate() {
+                    pushed += 1;
+                    ready = session
+                        .push(WorkerResult { shard: j * r + s, data })
+                        .unwrap()
+                        .is_ready();
+                }
+            }
+            assert_eq!(pushed, 8);
+            assert!(ready, "k1·r sub-results must make the group ready");
+            let part = session.finish().unwrap();
+            assert_eq!(part.result.rows(), rows / 2); // m / k2
+            master
+                .push(WorkerResult { shard: g, data: part.result })
+                .unwrap();
+        }
+        assert!(master.progress().is_ready());
+        let out = master.finish().unwrap();
+        assert!(out.result.max_abs_diff(&expect) < 1e-6);
+    }
+
+    #[test]
+    fn subtask_batch_decode_matches_serial_across_pool_widths() {
+        let mut topo = Topology::homogeneous(4, 2, 4, 3);
+        for g in &mut topo.groups {
+            g.subtasks = 2;
+        }
+        let serial = HierarchicalCode::from_topology(topo.clone()).unwrap();
+        let mut rng = Rng::new(31);
+        let rows = serial.required_row_divisor();
+        let a = random_matrix(&mut rng, rows, 5);
+        let x = random_matrix(&mut rng, 5, 2);
+        let expect = ops::matmul(&a, &x);
+        let shards = serial.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        // Parity-heavy subset: workers {2,3} of groups 0..2.
+        let picks: Vec<usize> = (0..3)
+            .flat_map(|g| {
+                [
+                    serial.flat_index(WorkerId { group: g, index: 2 }),
+                    serial.flat_index(WorkerId { group: g, index: 3 }),
+                ]
+            })
+            .collect();
+        let o1 = serial.decode(&select_results(&all, &picks), rows).unwrap();
+        assert!(o1.result.max_abs_diff(&expect) < 1e-7);
+        assert!(o1.flops > 0, "parity sub-results force a real elimination");
+        for threads in [2, 8] {
+            let pool = Arc::new(DecodePool::new(threads).unwrap());
+            let parallel = HierarchicalCode::from_topology(topo.clone())
+                .unwrap()
+                .with_pool(pool);
+            let o2 = parallel.decode(&select_results(&all, &picks), rows).unwrap();
+            assert_eq!(o1.result.data(), o2.result.data(), "threads={threads}");
+            assert_eq!(o1.flops, o2.flops);
+            let per_group = parallel.group_results(&select_results(&all, &picks));
+            let o3 = parallel.decode_hierarchical(&per_group).unwrap();
+            assert_eq!(o1.result.data(), o3.result.data(), "threads={threads}");
+            assert_eq!(o1.flops, o3.flops);
+        }
     }
 
     #[test]

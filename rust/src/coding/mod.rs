@@ -352,6 +352,16 @@ pub fn build_scheme_topology(
              hierarchical scheme"
         )));
     }
+    if kind != SchemeKind::Hierarchical && topo.groups.iter().any(|g| g.subtasks > 1) {
+        // Same never-silently-dropped rule as heterogeneous specs: the
+        // flat schemes have no per-group inner code to layer sub-tasks
+        // on, so accepting the topology would discard its partial-work
+        // profile.
+        return Err(Error::InvalidParams(format!(
+            "{kind}: partial-work sub-tasks (subtasks > 1) require the \
+             hierarchical scheme"
+        )));
+    }
     let (n1, k1) = (topo.groups[0].n1, topo.groups[0].k1);
     let (n2, k2) = (topo.n2(), topo.k2);
     Ok(match kind {
@@ -452,6 +462,22 @@ mod tests {
         }
         // Replication needs k | n: 3·3 = 9 workers, k = 4 does not divide.
         assert!(build_scheme(SchemeKind::Replication, 3, 2, 3, 2).is_err());
+    }
+
+    #[test]
+    fn build_scheme_topology_rejects_subtasks_for_flat_schemes() {
+        // Partial-work layering is per-group: a flat scheme accepting a
+        // multi-round topology would silently drop its profile.
+        let mut topo = Topology::homogeneous(4, 2, 4, 2);
+        topo.groups[0].subtasks = 2;
+        for kind in SchemeKind::ALL {
+            let built = build_scheme_topology(kind, &topo, 1);
+            if kind == SchemeKind::Hierarchical {
+                assert!(built.is_ok(), "{kind}");
+            } else {
+                assert!(built.is_err(), "{kind} must reject sub-tasks");
+            }
+        }
     }
 
     #[test]

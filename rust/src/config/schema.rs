@@ -47,6 +47,19 @@
 //! **and** by every simulator/bound/allocator path — the global
 //! `straggler.scale` stays the wall-clock rendering knob.
 //!
+//! # Partial-work mode (`subtasks_per_worker`)
+//!
+//! `code.subtasks_per_worker = r` (default 1) splits every worker's
+//! shard into `r` sequentially-computed coded sub-tasks (per-group
+//! `(n1·r, k1·r)` MDS layering on the hierarchical inner code): workers
+//! stream one partial result per completed sub-task and a group decodes
+//! from **any** `k1·r` sub-results — harvesting stragglers' partial
+//! work instead of discarding it (Ferdinand–Draper, arXiv:1806.10250).
+//! Per-group override: a `subtasks` field on a `groups` entry. `r = 1`
+//! is bit-identical to the all-or-nothing model on every layer;
+//! `r > 1` requires the hierarchical scheme and (for now) the native
+//! backend.
+//!
 //! Both forms expand into the same [`Topology`] value, which then
 //! drives the coding layer (per-group generators), the coordinator
 //! (per-group spawn + thresholds + delays) and the simulator — the
@@ -111,11 +124,37 @@ fn group_rate(
     }
 }
 
+/// Parse an optional per-worker sub-task count (`1..=MAX_SUBTASKS`),
+/// falling back to `default`.
+fn subtasks_field(v: &Json, key: &str, ctx: &str, default: usize) -> Result<usize> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(s) => {
+            let r = s.as_usize().ok_or_else(|| {
+                Error::Config(format!("{ctx}: field '{key}' must be a positive integer"))
+            })?;
+            if r == 0 || r > crate::scenario::MAX_SUBTASKS {
+                return Err(Error::Config(format!(
+                    "{ctx}: {key} must be in 1..={}, got {r}",
+                    crate::scenario::MAX_SUBTASKS
+                )));
+            }
+            Ok(r)
+        }
+    }
+}
+
 /// Parse one entry of the `groups` array.
-fn group_from_json(v: &Json, index: usize, defaults: &StragglerConfig) -> Result<GroupSpec> {
+fn group_from_json(
+    v: &Json,
+    index: usize,
+    defaults: &StragglerConfig,
+    default_subtasks: usize,
+) -> Result<GroupSpec> {
     let ctx = format!("code.groups[{index}]");
     let n1 = v.req_usize("n1", &ctx)?;
     let k1 = v.req_usize("k1", &ctx)?;
+    let subtasks = subtasks_field(v, "subtasks", &ctx, default_subtasks)?;
     let worker = group_rate(v, "mu1", &ctx, defaults.worker)?;
     let link = group_rate(v, "mu2", &ctx, defaults.link)?;
     let scale = match v.get("scale") {
@@ -156,6 +195,7 @@ fn group_from_json(v: &Json, index: usize, defaults: &StragglerConfig) -> Result
         link,
         scale,
         dead_workers,
+        subtasks,
     })
 }
 
@@ -167,6 +207,10 @@ impl CodeConfig {
             Some(name) => SchemeKind::parse(name)?,
             None => SchemeKind::Hierarchical,
         };
+        // Partial-work mode: the uniform sub-task count every group
+        // inherits (per-group 'subtasks' entries override it). `1` is
+        // the paper's all-or-nothing task model.
+        let subtasks = subtasks_field(v, "subtasks_per_worker", "code", 1)?;
         let c = match v.get("groups") {
             Some(gs) => {
                 // The groups form is the scenario layer of the scheme
@@ -210,7 +254,7 @@ impl CodeConfig {
                 let groups = arr
                     .iter()
                     .enumerate()
-                    .map(|(i, g)| group_from_json(g, i, straggler))
+                    .map(|(i, g)| group_from_json(g, i, straggler, subtasks))
                     .collect::<Result<Vec<GroupSpec>>>()?;
                 let topology = Topology { groups, k2 };
                 Self {
@@ -225,7 +269,11 @@ impl CodeConfig {
             None => {
                 let (n1, k1) = (v.req_usize("n1", "code")?, v.req_usize("k1", "code")?);
                 let (n2, k2) = (v.req_usize("n2", "code")?, v.req_usize("k2", "code")?);
-                Self::uniform_with_profile(scheme, n1, k1, n2, k2, straggler)
+                let mut c = Self::uniform_with_profile(scheme, n1, k1, n2, k2, straggler);
+                for g in &mut c.topology.groups {
+                    g.subtasks = subtasks;
+                }
+                c
             }
         };
         c.validate()?;
@@ -251,6 +299,7 @@ impl CodeConfig {
                     link: straggler.link,
                     scale: None,
                     dead_workers: Vec::new(),
+                    subtasks: 1,
                 })
                 .collect(),
             k2,
@@ -271,6 +320,15 @@ impl CodeConfig {
         if self.scheme != SchemeKind::Hierarchical && !self.topology.is_uniform_code() {
             return Err(Error::InvalidParams(format!(
                 "{}: heterogeneous 'groups' require the hierarchical scheme",
+                self.scheme
+            )));
+        }
+        if self.scheme != SchemeKind::Hierarchical
+            && self.topology.groups.iter().any(|g| g.subtasks > 1)
+        {
+            return Err(Error::InvalidParams(format!(
+                "{}: subtasks_per_worker > 1 requires the hierarchical scheme \
+                 (partial-work mode is per-group MDS layering on the inner code)",
                 self.scheme
             )));
         }
@@ -861,6 +919,80 @@ mod tests {
             r#"{"code": {"k2": 1, "groups": []}}"#,
         )
         .is_err());
+    }
+
+    #[test]
+    fn subtasks_per_worker_parses_uniform_and_per_group() {
+        // Uniform sugar: every group inherits r.
+        let c = ClusterConfig::from_json_text(
+            r#"{"code": {"n1": 4, "k1": 2, "n2": 3, "k2": 2,
+                         "subtasks_per_worker": 4}}"#,
+        )
+        .unwrap();
+        assert!(c.code.topology.groups.iter().all(|g| g.subtasks == 4));
+        assert_eq!(c.code.topology.groups[0].recovery_subresults(), 8);
+        // Absent knob: the all-or-nothing default.
+        let d = ClusterConfig::from_json_text(
+            r#"{"code": {"n1": 4, "k1": 2, "n2": 3, "k2": 2}}"#,
+        )
+        .unwrap();
+        assert!(d.code.topology.groups.iter().all(|g| g.subtasks == 1));
+        // An explicit r = 1 is the exact same topology value as the
+        // default — the bit-identity guarantee starts at parse time.
+        let e = ClusterConfig::from_json_text(
+            r#"{"code": {"n1": 4, "k1": 2, "n2": 3, "k2": 2,
+                         "subtasks_per_worker": 1}}"#,
+        )
+        .unwrap();
+        assert_eq!(d.code.topology, e.code.topology);
+        // Groups form: the knob is the default, per-group overrides win.
+        let g = ClusterConfig::from_json_text(
+            r#"{"code": {"k2": 1, "subtasks_per_worker": 2,
+                         "groups": [{"n1": 4, "k1": 2},
+                                    {"n1": 4, "k1": 2, "subtasks": 8}]}}"#,
+        )
+        .unwrap();
+        assert_eq!(g.code.topology.groups[0].subtasks, 2);
+        assert_eq!(g.code.topology.groups[1].subtasks, 8);
+    }
+
+    #[test]
+    fn subtasks_per_worker_rejects_degenerate_values() {
+        for bad in [
+            r#""subtasks_per_worker": 0"#,
+            r#""subtasks_per_worker": 2.5"#,
+            r#""subtasks_per_worker": "4""#,
+            r#""subtasks_per_worker": 65"#,
+        ] {
+            let text = format!(r#"{{"code": {{"n1": 4, "k1": 2, "n2": 3, "k2": 2, {bad}}}}}"#);
+            assert!(
+                ClusterConfig::from_json_text(&text).is_err(),
+                "must reject: {bad}"
+            );
+        }
+        // Per-group subtasks validated the same way.
+        assert!(ClusterConfig::from_json_text(
+            r#"{"code": {"k2": 1, "groups": [{"n1": 3, "k1": 2, "subtasks": 0}]}}"#,
+        )
+        .is_err());
+        // Partial-work mode is hierarchical-only: flat schemes have no
+        // per-group inner code to layer sub-tasks on.
+        for scheme in ["mds", "product", "replication", "polynomial"] {
+            let text = format!(
+                r#"{{"code": {{"scheme": "{scheme}", "n1": 4, "k1": 2,
+                               "n2": 4, "k2": 2, "subtasks_per_worker": 2}}}}"#
+            );
+            assert!(
+                ClusterConfig::from_json_text(&text).is_err(),
+                "{scheme} must reject subtasks_per_worker > 1"
+            );
+        }
+        // r = 1 stays valid for every scheme (the sugar is inert).
+        let ok = ClusterConfig::from_json_text(
+            r#"{"code": {"scheme": "mds", "n1": 4, "k1": 2, "n2": 4, "k2": 2,
+                         "subtasks_per_worker": 1}}"#,
+        );
+        assert!(ok.is_ok());
     }
 
     #[test]

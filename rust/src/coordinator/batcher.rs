@@ -171,10 +171,16 @@ fn flush(
     let mut kept: Vec<JobRequest> = Vec::with_capacity(reqs.len());
     for req in reqs.drain(..) {
         if req.deadline <= now {
-            Metrics::inc(&metrics.shed);
-            Metrics::inc(&req.entry.shed);
+            // The queue reservation is released exactly once — here,
+            // where the request leaves the queue…
             release(metrics, &req.entry);
-            req.slot.complete(Err(JobError::Deadline));
+            // …while shed *accounting* keys on the winning slot write,
+            // so a request can never be counted shed twice (batcher vs
+            // master — idempotent-shed invariant).
+            if req.slot.complete(Err(JobError::Deadline)) {
+                Metrics::inc(&metrics.shed);
+                Metrics::inc(&req.entry.shed);
+            }
         } else {
             kept.push(req);
         }

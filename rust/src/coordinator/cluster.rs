@@ -314,6 +314,18 @@ impl ClusterCore {
 
     /// Launch with fault injection (tests / chaos runs).
     pub fn launch_with_faults(config: &ClusterConfig, faults: FaultConfig) -> Result<Self> {
+        // Partial-work mode computes per-sub-shard products; the AOT
+        // artifact set only covers whole-shard shapes, so gate it to
+        // the native backend rather than silently mixing numerics.
+        let partial = config.code.topology.groups.iter().any(|g| g.subtasks > 1);
+        if config.runtime.use_pjrt && partial {
+            return Err(Error::InvalidParams(
+                "partial-work mode (subtasks_per_worker > 1) requires the \
+                 native backend: sub-shard shapes have no AOT'd PJRT \
+                 artifacts yet — set runtime.use_pjrt = false"
+                    .into(),
+            ));
+        }
         // Build via the config so `runtime.decode_threads` reaches every
         // decoder session the master and submasters open.
         let scheme = config.build_scheme()?;
@@ -380,6 +392,7 @@ impl ClusterCore {
                     backend.clone(),
                     delay,
                     dead,
+                    spec.subtasks,
                     Arc::clone(&cancel),
                     seed_rng.split(),
                     w_rx,
@@ -399,6 +412,7 @@ impl ClusterCore {
                 group_worker_txs.clone(),
                 link,
                 faults.link_dead(g),
+                spec.subtasks,
                 Arc::clone(&cancel),
                 Arc::clone(&metrics),
                 seed_rng.split(),
@@ -818,6 +832,57 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(20));
         }
         cluster.shutdown();
+    }
+
+    /// Tentpole end-to-end: a partial-work cluster (r = 4) serves
+    /// correct products while workers stream sub-results and groups
+    /// decode from k1·r of them.
+    #[test]
+    fn partial_work_cluster_end_to_end() {
+        let mut config = ClusterConfig::demo(4, 2, 3, 2);
+        for g in &mut config.code.topology.groups {
+            g.subtasks = 4;
+        }
+        config.straggler.enabled = true;
+        config.straggler.scale = 0.0005;
+        // Row divisor is k2·k1·r = 16.
+        let a = test_matrix(32, 4, 20);
+        let cluster = Cluster::launch(&config, &a).unwrap();
+        assert_eq!(cluster.scheme().name(), "hier(4,2)x(3,2)r4");
+        let mut handles = Vec::new();
+        let mut expects = Vec::new();
+        for i in 0..6 {
+            let mut r = Rng::new(300 + i);
+            let x: Vec<f64> = (0..4).map(|_| r.uniform(-1.0, 1.0)).collect();
+            expects.push(ops::matvec(&a, &x));
+            handles.push(cluster.submit(x).unwrap());
+        }
+        for (h, expect) in handles.into_iter().zip(expects) {
+            let y = h.wait().unwrap();
+            for (got, want) in y.iter().zip(expect.iter()) {
+                assert!((got - want).abs() < 1e-3);
+            }
+        }
+        let m = cluster.metrics();
+        assert_eq!(m.completed, m.jobs);
+        assert!(
+            m.group_decodes >= m.jobs * 2,
+            "every job needs k2 = 2 group decodes (got {} for {} jobs)",
+            m.group_decodes,
+            m.jobs
+        );
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn partial_work_requires_native_backend() {
+        let mut config = ClusterConfig::demo(2, 1, 2, 1);
+        config.runtime.use_pjrt = true;
+        config.code.topology.groups[0].subtasks = 2;
+        assert!(matches!(
+            ClusterCore::launch(&config),
+            Err(Error::InvalidParams(_))
+        ));
     }
 
     #[test]

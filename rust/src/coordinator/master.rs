@@ -65,9 +65,13 @@ fn complete_job(metrics: &Metrics, replies: &[ReplyRoute], out: &DecodeOutput) {
         let col: Vec<f64> = (0..out.result.rows())
             .map(|r| out.result[(r, route.column)])
             .collect();
-        metrics.record_latency(route.submitted_at.elapsed().as_secs_f64());
-        Metrics::inc(&route.entry.completed);
-        route.slot.complete(Ok(col));
+        // Per-request accounting keys on the winning slot write: a
+        // route some earlier path already resolved (e.g. shed) must
+        // not also count as completed.
+        if route.slot.complete(Ok(col)) {
+            metrics.record_latency(route.submitted_at.elapsed().as_secs_f64());
+            Metrics::inc(&route.entry.completed);
+        }
     }
 }
 
@@ -79,11 +83,17 @@ fn fail_job(metrics: &Metrics, replies: &[ReplyRoute], msg: &str) {
     }
 }
 
-/// Shed one route whose admission deadline expired in the master queue.
+/// Shed one route whose admission deadline expired in the master
+/// queue. Idempotent per request: the counters only move when this
+/// shed actually delivered the route's terminal outcome — a request
+/// the batcher (or anyone else) already resolved is never
+/// double-counted, which is what kept the `shed` counter and the
+/// `queue_depth` gauge honest.
 fn shed_route(metrics: &Metrics, route: &ReplyRoute) {
-    Metrics::inc(&metrics.shed);
-    Metrics::inc(&route.entry.shed);
-    route.slot.complete(Err(JobError::Deadline));
+    if route.slot.complete(Err(JobError::Deadline)) {
+        Metrics::inc(&metrics.shed);
+        Metrics::inc(&route.entry.shed);
+    }
 }
 
 /// `Done` tombstones exist only so late partials are recognized; in a
@@ -200,7 +210,16 @@ pub fn spawn(
                     }
                     MasterMsg::Partial(pr) => {
                         let finished = match jobs.get_mut(&pr.id) {
-                            None | Some(JobState::Done) => continue, // late delivery
+                            None | Some(JobState::Done) => {
+                                // Late delivery — whether the tombstone
+                                // is still around or was evicted by
+                                // `gc_done_jobs` (every job id here was
+                                // minted by our own batcher, so an
+                                // unknown id IS a GC'd tombstone, not a
+                                // foreign job). Count it either way.
+                                Metrics::inc(&metrics.late_partials);
+                                continue;
+                            }
                             Some(JobState::Active(state)) => {
                                 let pushed = state.session.push(WorkerResult {
                                     shard: pr.shard,
@@ -586,6 +605,53 @@ mod tests {
         assert_eq!(s.completed, 0);
         use std::sync::atomic::Ordering;
         assert_eq!(entry.shed.load(Ordering::Relaxed), 1);
+    }
+
+    /// Satellite regression: shedding is idempotent per request. A
+    /// route whose slot was already resolved with `Deadline` (the
+    /// batcher shed it) arriving expired at Batch receipt must NOT
+    /// increment the shed counters a second time — double-shed was the
+    /// path to an inflated `shed` count and, one unpaired release
+    /// later, an underflowed `queue_depth` gauge.
+    #[test]
+    fn already_shed_route_is_not_shed_again_at_batch_receipt() {
+        let code = Arc::new(HierarchicalCode::homogeneous(2, 1, 2, 1).unwrap());
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let scheme: Arc<dyn CodedScheme> = code;
+        let h = spawn(
+            scheme,
+            vec![],
+            Arc::clone(&metrics),
+            Duration::from_secs(5),
+            master_rx,
+        );
+        let entry = test_entry(1, 2);
+        let slot = Arc::new(CompletionSlot::new());
+        // The batcher's shed already resolved this request…
+        assert!(slot.complete(Err(JobError::Deadline)));
+        // …but (bug scenario) its route still rides a Batch to the
+        // master, expired.
+        let mut expired = route(&entry, &slot, 0, 11);
+        expired.deadline = Instant::now() - Duration::from_millis(1);
+        master_tx
+            .send(MasterMsg::Batch {
+                job: JobBroadcast {
+                    id: JobId(8),
+                    model: entry.id,
+                    out_rows: 2,
+                    x: Arc::new(Matrix::identity(1)),
+                },
+                replies: vec![expired],
+            })
+            .unwrap();
+        master_tx.send(MasterMsg::Drain).unwrap();
+        h.join().unwrap();
+        let s = metrics.snapshot();
+        assert_eq!(s.shed, 0, "the master's shed must lose the write and not count");
+        use std::sync::atomic::Ordering;
+        assert_eq!(entry.shed.load(Ordering::Relaxed), 0);
+        assert_eq!(slot.wait(), Err(JobError::Deadline));
     }
 
     /// A drain with an undecodable job in flight fails the job's routes

@@ -87,11 +87,19 @@ impl CompletionSlot {
 
     /// Deliver the terminal outcome. The first write wins; any later
     /// write is ignored (e.g. a deadline shed racing a completion).
-    pub fn complete(&self, result: JobResult) {
+    /// Returns `true` iff this call was the winning (first) write —
+    /// callers key their terminal accounting (shed / completed
+    /// counters) on it, which makes shedding **idempotent per
+    /// request**: a request shed once can never be counted shed again
+    /// downstream.
+    pub fn complete(&self, result: JobResult) -> bool {
         let mut s = self.state.lock().expect("completion slot poisoned");
         if matches!(*s, SlotState::Pending) {
             *s = SlotState::Done(result);
             self.cv.notify_all();
+            true
+        } else {
+            false
         }
     }
 
@@ -243,14 +251,21 @@ pub struct JobBroadcast {
     pub x: Arc<Matrix>,
 }
 
-/// Worker → submaster: one shard product.
+/// Worker → submaster: one completed (sub-)task's product. In the
+/// all-or-nothing model a worker sends exactly one of these per job
+/// (`subtask = 0`, `data` the whole shard product); in partial-work
+/// mode it streams one per completed sub-task, so a group can harvest
+/// stragglers' partial work.
 #[derive(Debug)]
 pub struct WorkerDone {
     /// Job id.
     pub id: JobId,
     /// In-group worker index `j`.
     pub index: usize,
-    /// The product `Â_{i,j} · X` (`r × b`).
+    /// Sub-task index `s ∈ [0, r)` within worker `j`'s shard (0 when
+    /// the group runs all-or-nothing tasks).
+    pub subtask: usize,
+    /// The (sub-)shard product (`rows × b`).
     pub data: Matrix,
 }
 
@@ -390,8 +405,11 @@ mod tests {
     fn completion_slot_first_write_wins_and_take_is_single_shot() {
         let slot = CompletionSlot::new();
         assert!(slot.try_take().is_none());
-        slot.complete(Ok(vec![1.0, 2.0]));
-        slot.complete(Err(JobError::Deadline)); // ignored: first write won
+        assert!(slot.complete(Ok(vec![1.0, 2.0])), "first write wins");
+        assert!(
+            !slot.complete(Err(JobError::Deadline)),
+            "second write reports it lost (idempotent-shed keying)"
+        );
         assert_eq!(slot.try_take(), Some(Ok(vec![1.0, 2.0])));
         // Taken: later polls see nothing, later waits fail fast.
         assert!(slot.try_take().is_none());

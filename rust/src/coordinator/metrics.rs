@@ -15,10 +15,14 @@ use std::sync::Mutex;
 /// (rack), so heterogeneous topologies are observable group by group.
 #[derive(Debug, Default)]
 struct GroupCounters {
-    /// Worker products that arrived at this group's submaster.
+    /// Worker (sub-)results that arrived at this group's submaster.
     products: AtomicU64,
     /// Intra-group decodes this group performed.
     decodes: AtomicU64,
+    /// Straggler partial work harvested: sub-results consumed by this
+    /// group's decodes that came from workers which had not finished
+    /// all their sub-tasks (always 0 in the all-or-nothing model).
+    partials: AtomicU64,
     /// Group-decode session latency.
     decode_latency: Mutex<Histogram>,
 }
@@ -43,10 +47,16 @@ pub struct Metrics {
     pub shed: AtomicU64,
     /// Requests currently accepted but not yet dispatched (gauge).
     pub queue_depth: AtomicU64,
-    /// Worker products computed.
+    /// Worker (sub-)results computed.
     pub worker_products: AtomicU64,
-    /// Worker products discarded (arrived after their group decoded).
+    /// Worker (sub-)results discarded (arrived after their group
+    /// decoded or after the job's state was garbage-collected).
     pub late_products: AtomicU64,
+    /// Partials that reached the master after its job was already
+    /// complete/cancelled — including after the job's `Done` tombstone
+    /// was garbage-collected (a late delivery either way, never a
+    /// silent unknown-job drop).
+    pub late_partials: AtomicU64,
     /// Intra-group decodes performed.
     pub group_decodes: AtomicU64,
     /// Total decode flops (intra + cross), for §IV accounting.
@@ -108,6 +118,14 @@ impl Metrics {
         }
     }
 
+    /// Count `n` straggler sub-results harvested by one of `group`'s
+    /// decodes (no-op for out-of-range groups — untracked contexts).
+    pub fn record_group_partials(&self, group: usize, n: u64) {
+        if let Some(g) = self.groups.get(group) {
+            g.partials.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
     /// Snapshot for reporting. The per-model breakdown is overlaid by
     /// `ClusterCore::metrics` (the model table lives in the service
     /// state, not here); `models` is empty on a bare snapshot.
@@ -122,6 +140,7 @@ impl Metrics {
                 GroupMetricsSnapshot {
                     products: g.products.load(Ordering::Relaxed),
                     decodes: g.decodes.load(Ordering::Relaxed),
+                    partials_used: g.partials.load(Ordering::Relaxed),
                     decode_mean: glat.mean(),
                 }
             })
@@ -137,6 +156,7 @@ impl Metrics {
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             worker_products: self.worker_products.load(Ordering::Relaxed),
             late_products: self.late_products.load(Ordering::Relaxed),
+            late_partials: self.late_partials.load(Ordering::Relaxed),
             group_decodes: self.group_decodes.load(Ordering::Relaxed),
             decode_flops: self.decode_flops.load(Ordering::Relaxed),
             latency_mean: lat.mean(),
@@ -158,8 +178,14 @@ impl Metrics {
     }
 
     /// Decrement a gauge (callers only release what they reserved).
+    /// Saturates at zero — an unpaired release must not wrap the gauge
+    /// to `u64::MAX` (the double-shed symptom) — and debug builds
+    /// assert the invariant so the unpaired caller is caught in tests.
     pub fn dec(counter: &AtomicU64) {
-        counter.fetch_sub(1, Ordering::Relaxed);
+        let prev = counter
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)))
+            .expect("fetch_update with Some(_) cannot fail");
+        debug_assert!(prev > 0, "gauge decremented below zero (unpaired release)");
     }
 
     /// Add to a counter.
@@ -171,10 +197,14 @@ impl Metrics {
 /// Point-in-time view of one group's counters.
 #[derive(Clone, Debug, Default)]
 pub struct GroupMetricsSnapshot {
-    /// Worker products that arrived at this group's submaster.
+    /// Worker (sub-)results that arrived at this group's submaster.
     pub products: u64,
     /// Intra-group decodes this group performed.
     pub decodes: u64,
+    /// Straggler partial work harvested across this group's decodes:
+    /// sub-results used that came from workers which never finished
+    /// all their sub-tasks (0 in the all-or-nothing model).
+    pub partials_used: u64,
     /// Mean group-decode session latency (s).
     pub decode_mean: f64,
 }
@@ -215,10 +245,13 @@ pub struct MetricsSnapshot {
     pub shed: u64,
     /// Requests currently queued ahead of dispatch (gauge).
     pub queue_depth: u64,
-    /// Worker products computed.
+    /// Worker (sub-)results computed.
     pub worker_products: u64,
     /// Late (discarded) products.
     pub late_products: u64,
+    /// Partials that reached the master after its job completed (or
+    /// after the job's tombstone was garbage-collected).
+    pub late_partials: u64,
     /// Intra-group decodes.
     pub group_decodes: u64,
     /// Total decode flops.
@@ -247,6 +280,16 @@ pub struct MetricsSnapshot {
     pub models: Vec<ModelMetricsSnapshot>,
 }
 
+/// Render a latency in milliseconds, or `n/a` for the NaN sentinel an
+/// empty histogram reports (never a fake `0.000ms`).
+fn fmt_ms(seconds: f64) -> String {
+    if seconds.is_finite() {
+        format!("{:.3}ms", seconds * 1e3)
+    } else {
+        "n/a".to_string()
+    }
+}
+
 impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "requests:        {}", self.requests)?;
@@ -260,32 +303,38 @@ impl std::fmt::Display for MetricsSnapshot {
             "jobs:            {} ({} completed, {} failed, {} cancelled)",
             self.jobs, self.completed, self.failed, self.cancelled
         )?;
-        writeln!(f, "worker products: {} ({} late/discarded)", self.worker_products, self.late_products)?;
+        writeln!(
+            f,
+            "worker products: {} ({} late/discarded, {} late partials)",
+            self.worker_products, self.late_products, self.late_partials
+        )?;
         writeln!(f, "group decodes:   {}", self.group_decodes)?;
         writeln!(f, "decode flops:    {}", self.decode_flops)?;
         writeln!(
             f,
-            "latency:         mean {:.3}ms  p50 {:.3}ms  p95 {:.3}ms  p99 {:.3}ms",
-            self.latency_mean * 1e3,
-            self.latency_p50 * 1e3,
-            self.latency_p95 * 1e3,
-            self.latency_p99 * 1e3
+            "latency:         mean {}  p50 {}  p95 {}  p99 {}",
+            fmt_ms(self.latency_mean),
+            fmt_ms(self.latency_p50),
+            fmt_ms(self.latency_p95),
+            fmt_ms(self.latency_p99)
         )?;
         write!(
             f,
-            "decode latency:  mean {:.3}ms  p50 {:.3}ms  p95 {:.3}ms  p99 {:.3}ms",
-            self.decode_mean * 1e3,
-            self.decode_p50 * 1e3,
-            self.decode_p95 * 1e3,
-            self.decode_p99 * 1e3
+            "decode latency:  mean {}  p50 {}  p95 {}  p99 {}",
+            fmt_ms(self.decode_mean),
+            fmt_ms(self.decode_p50),
+            fmt_ms(self.decode_p95),
+            fmt_ms(self.decode_p99)
         )?;
         for (g, gm) in self.per_group.iter().enumerate() {
             write!(
                 f,
-                "\ngroup {g}:         {} products, {} decodes, decode mean {:.3}ms",
+                "\ngroup {g}:         {} products, {} decodes, {} partials used, \
+                 decode mean {}",
                 gm.products,
                 gm.decodes,
-                gm.decode_mean * 1e3
+                gm.partials_used,
+                fmt_ms(gm.decode_mean)
             )?;
         }
         for m in &self.models {
@@ -310,15 +359,19 @@ mod tests {
         m.record_group_product(0);
         m.record_group_product(1);
         m.record_group_decode(1, 0.004);
+        m.record_group_partials(1, 3);
         // Out-of-range group index is a no-op, never a panic.
         m.record_group_product(9);
         m.record_group_decode(9, 1.0);
+        m.record_group_partials(9, 5);
         let s = m.snapshot();
         assert_eq!(s.per_group.len(), 2);
         assert_eq!(s.per_group[0].products, 2);
         assert_eq!(s.per_group[0].decodes, 0);
+        assert_eq!(s.per_group[0].partials_used, 0);
         assert_eq!(s.per_group[1].products, 1);
         assert_eq!(s.per_group[1].decodes, 1);
+        assert_eq!(s.per_group[1].partials_used, 3);
         assert!((s.per_group[1].decode_mean - 0.004).abs() < 1e-12);
         assert!(format!("{s}").contains("group 1:"));
         // Metrics::new() has no per-group breakdown.
@@ -353,6 +406,44 @@ mod tests {
         assert_eq!(s.shed, 1);
         assert_eq!(s.queue_depth, 1);
         assert!(format!("{s}").contains("rejected"));
+    }
+
+    #[test]
+    fn empty_histograms_report_nan_not_fake_zero_latency() {
+        // Satellite regression: before any request completes, p50/p95/
+        // p99 must be the NaN sentinel — a 0.0 here is a fake "zero
+        // latency" tail that serializers would happily report.
+        let s = Metrics::new().snapshot();
+        assert!(s.latency_mean.is_nan(), "mean={}", s.latency_mean);
+        assert!(s.latency_p50.is_nan(), "p50={}", s.latency_p50);
+        assert!(s.latency_p95.is_nan());
+        assert!(s.latency_p99.is_nan());
+        assert!(s.decode_mean.is_nan());
+        assert!(s.decode_p50.is_nan());
+        assert!(s.decode_p99.is_nan());
+        let rendered = format!("{s}");
+        assert!(rendered.contains("n/a"), "Display must not fake 0.000ms");
+        assert!(
+            !rendered.contains("p99 0.000ms"),
+            "empty histogram must never render as zero latency"
+        );
+    }
+
+    #[test]
+    fn gauge_dec_saturates_at_zero() {
+        let m = Metrics::new();
+        Metrics::inc(&m.queue_depth);
+        Metrics::dec(&m.queue_depth);
+        assert_eq!(m.snapshot().queue_depth, 0);
+        // Release builds: an unpaired release clamps at 0 instead of
+        // wrapping the gauge to u64::MAX. (Debug builds catch the
+        // unpaired caller via debug_assert, so the clamp branch is
+        // only reachable here.)
+        #[cfg(not(debug_assertions))]
+        {
+            Metrics::dec(&m.queue_depth);
+            assert_eq!(m.snapshot().queue_depth, 0, "unpaired dec must clamp");
+        }
     }
 
     #[test]

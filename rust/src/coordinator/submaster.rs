@@ -44,8 +44,18 @@ pub struct LinkDelay {
 }
 
 enum GroupJob {
-    /// This group's streaming decode session (hierarchical inner code).
-    Decoding(Box<dyn Decoder>),
+    /// This group's streaming decode session (hierarchical inner code,
+    /// sub-result granularity in partial-work mode).
+    Decoding {
+        /// The session; consumes sub-result indices `j·r + s`.
+        session: Box<dyn Decoder>,
+        /// Sub-results contributed per in-group worker so far — the
+        /// ledger behind the per-group `partials_used` metric: at
+        /// decode time, contributions from workers that had NOT
+        /// finished all `r` sub-tasks are exactly the straggler
+        /// partial work the paper's scheme would have discarded.
+        contrib: HashMap<usize, usize>,
+    },
     /// No group decoding — forward raw products to the master.
     Relay,
     /// Decoded / shipped / finished — later products are late.
@@ -68,6 +78,11 @@ fn gc_done_jobs(jobs: &mut HashMap<JobId, GroupJob>) {
 /// Spawn the submaster for `group`, whose workers start at flat index
 /// `offset`. Output sizing is per-job ([`JobBroadcast::out_rows`]):
 /// different models route different heights through the same group.
+/// `subtasks` is the group's `r`: worker uploads `(j, s)` feed the
+/// decode session as sub-result index `j·r + s` (the identity when
+/// `r = 1`).
+///
+/// [`JobBroadcast::out_rows`]: crate::coordinator::messages::JobBroadcast::out_rows
 #[allow(clippy::too_many_arguments)]
 pub fn spawn(
     group: usize,
@@ -76,6 +91,7 @@ pub fn spawn(
     workers: Vec<mpsc::Sender<WorkerCmd>>,
     link: LinkDelay,
     link_dead: bool,
+    subtasks: usize,
     cancel: Arc<CancelSet>,
     metrics: Arc<Metrics>,
     mut rng: Rng,
@@ -97,7 +113,10 @@ pub fn spawn(
                     SubmasterMsg::Job(job) => {
                         let state =
                             match scheme.group_decoder(group, job.out_rows, job.x.cols()) {
-                                Some(session) => GroupJob::Decoding(session),
+                                Some(session) => GroupJob::Decoding {
+                                    session,
+                                    contrib: HashMap::new(),
+                                },
                                 None => GroupJob::Relay,
                             };
                         jobs.insert(job.id, state);
@@ -147,24 +166,44 @@ pub fn spawn(
                                     finished_at: Instant::now(),
                                 }));
                             }
-                            GroupJob::Decoding(session) => {
+                            GroupJob::Decoding { session, contrib } => {
+                                // Partial-work: the session's index
+                                // space is sub-results, j·r + s (the
+                                // identity when r = 1).
                                 let pushed = session.push(crate::coding::WorkerResult {
-                                    shard: done.index,
+                                    shard: done.index * subtasks + done.subtask,
                                     data: done.data,
                                 });
+                                if pushed.is_ok() {
+                                    *contrib.entry(done.index).or_insert(0) += 1;
+                                }
                                 match pushed {
                                     Ok(DecodeProgress::NeedMore { .. }) => {}
                                     Ok(DecodeProgress::Ready) => {
-                                        // k1-th fastest arrived: cancel the
-                                        // group's still-running workers, then
-                                        // run the intra-group decode.
+                                        // The k1·r-th fastest sub-result
+                                        // arrived: cancel the group's
+                                        // still-running workers, then run
+                                        // the intra-group decode.
                                         cancel.mark(done.id);
+                                        // Straggler partial work the
+                                        // all-or-nothing scheme would have
+                                        // discarded: sub-results from
+                                        // workers that never finished all
+                                        // r sub-tasks.
+                                        let partials: usize = contrib
+                                            .values()
+                                            .filter(|&&c| c < subtasks)
+                                            .sum();
                                         match session.finish() {
                                             Ok(out) => {
                                                 Metrics::inc(&metrics.group_decodes);
                                                 metrics.record_group_decode(
                                                     group,
                                                     out.seconds,
+                                                );
+                                                metrics.record_group_partials(
+                                                    group,
+                                                    partials as u64,
                                                 );
                                                 Metrics::add(
                                                     &metrics.decode_flops,
@@ -276,6 +315,7 @@ mod tests {
             vec![], // no real workers; we inject Done messages
             no_link_delay(),
             false,
+            1,
             Arc::new(CancelSet::new()),
             Arc::clone(&metrics),
             URng::new(5),
@@ -297,6 +337,7 @@ mod tests {
                 .send(SubmasterMsg::Done(WorkerDone {
                     id,
                     index: j,
+                    subtask: 0,
                     data: products[j].clone(),
                 }))
                 .unwrap();
@@ -317,6 +358,7 @@ mod tests {
             .send(SubmasterMsg::Done(WorkerDone {
                 id,
                 index: 1,
+                subtask: 0,
                 data: products[1].clone(),
             }))
             .unwrap();
@@ -327,6 +369,91 @@ mod tests {
         assert_eq!(s.group_decodes, 1);
         assert_eq!(s.late_products, 1);
         assert_eq!(s.worker_products, 3);
+    }
+
+    /// Partial-work: a group of 4 workers with r = 2 decodes at the
+    /// k1·r = 4th sub-result — harvested from one complete worker plus
+    /// two stragglers — and records the straggler sub-results in the
+    /// per-group `partials_used` metric.
+    #[test]
+    fn partial_group_decodes_from_straggler_subresults() {
+        use crate::scenario::Topology;
+        let mut topo = Topology::homogeneous(4, 2, 2, 1);
+        for g in &mut topo.groups {
+            g.subtasks = 2;
+        }
+        let code = Arc::new(HierarchicalCode::from_topology(topo).unwrap());
+        let r = 2usize;
+        let mut rng = URng::new(10);
+        let rows = code.required_row_divisor(); // k2·k1·r = 4
+        let a = Matrix::from_fn(rows, 3, |_, _| rng.uniform(-1.0, 1.0));
+        let x = Matrix::from_fn(3, 1, |_, _| rng.uniform(-1.0, 1.0));
+        let grouped = code.encode_grouped(&a).unwrap();
+        let group = 0usize;
+        // Sub-product of worker j's sub-task s in group 0.
+        let sub = |j: usize, s: usize| {
+            let shards = grouped[group][j].split_rows(r).unwrap();
+            ops::matmul(&shards[s], &x)
+        };
+        let (sub_tx, sub_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::with_groups(2));
+        let scheme: Arc<dyn CodedScheme> = Arc::clone(&code);
+        let h = spawn(
+            group,
+            0,
+            scheme,
+            vec![],
+            no_link_delay(),
+            false,
+            r,
+            Arc::new(CancelSet::new()),
+            Arc::clone(&metrics),
+            URng::new(11),
+            sub_rx,
+            master_tx,
+        );
+        let id = JobId(7);
+        sub_tx
+            .send(SubmasterMsg::Job(JobBroadcast {
+                id,
+                model: ModelId(0),
+                out_rows: rows,
+                x: Arc::new(x.clone()),
+            }))
+            .unwrap();
+        // Worker 3 completes both sub-tasks; stragglers 0 and 2 deliver
+        // one sub-result each → 4 = k1·r total, 2 from partial workers.
+        for (j, s) in [(3usize, 0usize), (3, 1), (0, 0), (2, 0)] {
+            sub_tx
+                .send(SubmasterMsg::Done(WorkerDone {
+                    id,
+                    index: j,
+                    subtask: s,
+                    data: sub(j, s),
+                }))
+                .unwrap();
+        }
+        let MasterMsg::Partial(pr) =
+            master_rx.recv_timeout(Duration::from_secs(5)).unwrap()
+        else {
+            panic!("expected group partial")
+        };
+        assert_eq!(pr.shard, group);
+        // Ã_0·x: the k1·r systematic sub-shards (= workers 0 and 1)
+        // stack to Ã_0.
+        let tilde = Matrix::vstack(&grouped[group][..2]).unwrap();
+        let expect = ops::matmul(&tilde, &x);
+        assert!(pr.data.max_abs_diff(&expect) < 1e-4);
+        assert!(pr.decode_flops > 0, "parity sub-results force a real solve");
+        sub_tx.send(SubmasterMsg::Shutdown).unwrap();
+        h.join().unwrap();
+        let s = metrics.snapshot();
+        assert_eq!(s.group_decodes, 1);
+        assert_eq!(
+            s.per_group[0].partials_used, 2,
+            "two sub-results came from workers that never finished"
+        );
     }
 
     #[test]
@@ -347,6 +474,7 @@ mod tests {
             vec![],
             no_link_delay(),
             true, // dead link
+            1,
             Arc::new(CancelSet::new()),
             Arc::clone(&metrics),
             URng::new(7),
@@ -366,6 +494,7 @@ mod tests {
             .send(SubmasterMsg::Done(WorkerDone {
                 id,
                 index: 0,
+                subtask: 0,
                 data: ops::matmul(&grouped[0][0], &x),
             }))
             .unwrap();
@@ -391,6 +520,7 @@ mod tests {
             vec![],
             no_link_delay(),
             false,
+            1,
             Arc::new(CancelSet::new()),
             Arc::clone(&metrics),
             URng::new(8),
@@ -410,6 +540,7 @@ mod tests {
             .send(SubmasterMsg::Done(WorkerDone {
                 id,
                 index: 4,
+                subtask: 0,
                 data: Matrix::zeros(2, 2),
             }))
             .unwrap();
@@ -426,6 +557,7 @@ mod tests {
             .send(SubmasterMsg::Done(WorkerDone {
                 id,
                 index: 5,
+                subtask: 0,
                 data: Matrix::zeros(2, 2),
             }))
             .unwrap();

@@ -7,11 +7,23 @@
 //! configured model — emulating the paper's `Exp(µ1)` completion times
 //! on a single machine — computes `Â_{i,j}·X` through its backend (PJRT
 //! artifact or native GEMM), and uploads the product to its submaster.
+//!
+//! # Partial-work mode
+//!
+//! With `subtasks = r > 1` the shard is split into `r` coded sub-shards
+//! at [`WorkerCmd::Load`] time and the job runs as `r` **sequential**
+//! sub-tasks: per sub-task one straggler delay of `sample/r` (the same
+//! total expected work), one sub-shard product, one [`WorkerDone`]
+//! uploaded immediately — so a straggling worker still streams the
+//! sub-results it finished before the group decoded. Cancellation is
+//! re-checked between sub-tasks: the moment the group reaches `k1·r`
+//! sub-results the remaining sub-tasks are skipped.
 
 use crate::coordinator::backend::{ComputeBackend, WorkerShard};
 use crate::coordinator::messages::{
     CancelSet, ModelId, SubmasterMsg, WorkerCmd, WorkerDone,
 };
+use crate::linalg::Matrix;
 use crate::sim::straggler::StragglerModel;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
@@ -30,7 +42,17 @@ pub struct WorkerDelay {
     pub enabled: bool,
 }
 
-/// Spawn worker `w(group, index)`.
+/// Split a worker's shard into its `r` coded sub-shards (rows
+/// `[s·b, (s+1)·b)` = sub-task `s`). The f64 data is already
+/// f32-narrowed, so the re-narrowing in [`WorkerShard::new`] is the
+/// identity.
+fn split_shard(shard: &Matrix, r: usize) -> crate::Result<Vec<WorkerShard>> {
+    shard.split_rows(r)?.iter().map(WorkerShard::new).collect()
+}
+
+/// Spawn worker `w(group, index)`. `subtasks` is the group's `r`
+/// (1 = the all-or-nothing task model, behavior-identical to the
+/// pre-partial worker).
 #[allow(clippy::too_many_arguments)]
 pub fn spawn(
     group: usize,
@@ -38,6 +60,7 @@ pub fn spawn(
     backend: ComputeBackend,
     delay: WorkerDelay,
     dead: bool,
+    subtasks: usize,
     cancel: std::sync::Arc<CancelSet>,
     mut rng: Rng,
     rx: mpsc::Receiver<WorkerCmd>,
@@ -46,12 +69,33 @@ pub fn spawn(
     thread::Builder::new()
         .name(format!("hiercode-w{group}.{index}"))
         .spawn(move || {
-            let mut shards: HashMap<ModelId, WorkerShard> = HashMap::new();
+            // Per model: the worker's sub-shards, in sub-task order
+            // (a single entry — the whole shard — when r = 1).
+            let mut shards: HashMap<ModelId, Vec<WorkerShard>> = HashMap::new();
+            let r = subtasks.max(1);
             while let Ok(cmd) = rx.recv() {
                 match cmd {
                     WorkerCmd::Shutdown => break,
                     WorkerCmd::Load { model, shard } => {
-                        shards.insert(model, *shard);
+                        if r == 1 {
+                            shards.insert(model, vec![*shard]);
+                            continue;
+                        }
+                        // Partial-work: pre-split into the r sub-shards
+                        // once, at load time.
+                        match split_shard(&shard.f64, r) {
+                            Ok(parts) => {
+                                shards.insert(model, parts);
+                            }
+                            Err(e) => {
+                                crate::log_error!(
+                                    "worker",
+                                    "w({group},{index}) cannot split model {:?} \
+                                     into {r} sub-shards: {e}",
+                                    model
+                                );
+                            }
+                        }
                     }
                     WorkerCmd::Compute(job) => {
                         if dead {
@@ -62,7 +106,7 @@ pub fn spawn(
                         if cancel.is_cancelled(job.id) {
                             continue;
                         }
-                        let Some(shard) = shards.get(&job.model) else {
+                        let Some(parts) = shards.get(&job.model) else {
                             // Registration bug: behave like a straggler
                             // (the code absorbs missing products).
                             crate::log_error!(
@@ -74,33 +118,47 @@ pub fn spawn(
                             );
                             continue;
                         };
-                        if delay.enabled {
-                            let d = delay.model.sample(&mut rng) * delay.scale;
-                            if d > 0.0 {
-                                thread::sleep(Duration::from_secs_f64(d));
+                        // Sequential (sub-)tasks: one delay + product +
+                        // upload per sub-task. With r = 1 this is the
+                        // exact pre-partial sequence (one sample, one
+                        // product, one upload).
+                        for (s, part) in parts.iter().enumerate() {
+                            if s > 0 && cancel.is_cancelled(job.id) {
+                                break; // group decoded: skip the tail
                             }
-                        }
-                        // Re-check after the straggle sleep: the k1-th
-                        // product may have landed while we slept.
-                        if cancel.is_cancelled(job.id) {
-                            continue;
-                        }
-                        match backend.shard_product(shard, &job.x) {
-                            Ok(data) => {
-                                let _ = submaster.send(SubmasterMsg::Done(WorkerDone {
-                                    id: job.id,
-                                    index,
-                                    data,
-                                }));
+                            if delay.enabled {
+                                let scale = delay.scale / parts.len() as f64;
+                                let d = delay.model.sample(&mut rng) * scale;
+                                if d > 0.0 {
+                                    thread::sleep(Duration::from_secs_f64(d));
+                                }
                             }
-                            Err(e) => {
-                                crate::log_error!(
-                                    "worker",
-                                    "w({group},{index}) job {:?} failed: {e}",
-                                    job.id
-                                );
-                                // A failed worker behaves like a straggler:
-                                // the code absorbs it.
+                            // Re-check after the straggle sleep: the
+                            // decode threshold may have been reached
+                            // while we slept.
+                            if cancel.is_cancelled(job.id) {
+                                break;
+                            }
+                            match backend.shard_product(part, &job.x) {
+                                Ok(data) => {
+                                    let _ = submaster.send(SubmasterMsg::Done(WorkerDone {
+                                        id: job.id,
+                                        index,
+                                        subtask: s,
+                                        data,
+                                    }));
+                                }
+                                Err(e) => {
+                                    crate::log_error!(
+                                        "worker",
+                                        "w({group},{index}) job {:?} sub-task {s} \
+                                         failed: {e}",
+                                        job.id
+                                    );
+                                    // A failed worker behaves like a
+                                    // straggler: the code absorbs it.
+                                    break;
+                                }
                             }
                         }
                     }
@@ -143,6 +201,7 @@ mod tests {
             ComputeBackend::Native,
             no_delay(),
             false,
+            1,
             std::sync::Arc::new(CancelSet::new()),
             Rng::new(1),
             cmd_rx,
@@ -163,10 +222,65 @@ mod tests {
             SubmasterMsg::Done(done) => {
                 assert_eq!(done.id, JobId(7));
                 assert_eq!(done.index, 3);
+                assert_eq!(done.subtask, 0, "all-or-nothing tasks are sub-task 0");
                 assert_eq!(done.data.data(), &[1.0, 2.0]);
             }
             other => panic!("unexpected message {other:?}"),
         }
+        cmd_tx.send(WorkerCmd::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn partial_worker_streams_one_result_per_subtask() {
+        // r = 4 over an 8-row shard: the worker streams sub-results
+        // 0..4 in order, each 2 rows, stacking to the full product.
+        let mut rng = Rng::new(9);
+        let shard_m = Matrix::from_fn(8, 3, |_, _| rng.uniform(-1.0, 1.0));
+        let x = Arc::new(Matrix::from_fn(3, 2, |_, _| rng.uniform(-1.0, 1.0)));
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let (sub_tx, sub_rx) = mpsc::channel();
+        let h = spawn(
+            0,
+            1,
+            ComputeBackend::Native,
+            no_delay(),
+            false,
+            4,
+            std::sync::Arc::new(CancelSet::new()),
+            Rng::new(4),
+            cmd_rx,
+            sub_tx,
+        );
+        cmd_tx.send(load(ModelId(0), &shard_m)).unwrap();
+        cmd_tx
+            .send(WorkerCmd::Compute(JobBroadcast {
+                id: JobId(5),
+                model: ModelId(0),
+                out_rows: 8,
+                x: Arc::clone(&x),
+            }))
+            .unwrap();
+        let mut chunks = Vec::new();
+        for s in 0..4 {
+            let msg = sub_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            match msg {
+                SubmasterMsg::Done(done) => {
+                    assert_eq!(done.id, JobId(5));
+                    assert_eq!(done.index, 1);
+                    assert_eq!(done.subtask, s, "sub-tasks stream in order");
+                    assert_eq!(done.data.shape(), (2, 2));
+                    chunks.push(done.data);
+                }
+                other => panic!("unexpected message {other:?}"),
+            }
+        }
+        // No fifth message: the job is done.
+        assert!(sub_rx.recv_timeout(Duration::from_millis(100)).is_err());
+        let stacked = Matrix::vstack(&chunks).unwrap();
+        let expect = crate::linalg::ops::matmul(&shard_m, &x);
+        // f32-narrowed shard: agree to f32 rounding.
+        assert!(stacked.max_abs_diff(&expect) < 1e-5);
         cmd_tx.send(WorkerCmd::Shutdown).unwrap();
         h.join().unwrap();
     }
@@ -181,6 +295,7 @@ mod tests {
             ComputeBackend::Native,
             no_delay(),
             false,
+            1,
             std::sync::Arc::new(CancelSet::new()),
             Rng::new(3),
             cmd_rx,
@@ -235,6 +350,7 @@ mod tests {
             ComputeBackend::Native,
             no_delay(),
             true, // dead
+            1,
             std::sync::Arc::new(CancelSet::new()),
             Rng::new(2),
             cmd_rx,

@@ -8,14 +8,19 @@
 //! | E4 | Table I — `T_comp` / `T_dec` per scheme       | [`table1::generate`] |
 //! | E6 | §IV decode-cost scaling in `p` (`k1 = k2^p`)  | [`decode_scaling::generate`] |
 //! | E7 | Allocation — uniform vs optimized `k1_g` E[T] | [`allocation::generate`] |
+//! | E8 | Partial work — `E[T]` / decode cost vs `r`    | [`partial::generate`] |
 //!
 //! Each generator returns structured rows and renders CSV (stdout) so
 //! series can be re-plotted; EXPERIMENTS.md quotes these outputs.
 //! E7 goes beyond the paper: it sweeps straggler skew and reports what
 //! the `sim::allocate` optimizer buys over the uniform assignment.
+//! E8 reproduces the Ferdinand–Draper multi-round tradeoff
+//! (arXiv:1806.10250) on top of the hierarchical outer code: expected
+//! latency falls with `subtasks_per_worker` while decode cost rises.
 
 pub mod allocation;
 pub mod decode_scaling;
 pub mod fig6;
 pub mod fig7;
+pub mod partial;
 pub mod table1;

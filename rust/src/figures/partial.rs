@@ -1,0 +1,175 @@
+//! E8 — partial-work tradeoff: `E[T]` and decode cost vs
+//! `subtasks_per_worker` (`r`), reproducing the Ferdinand–Draper
+//! multi-round result (arXiv:1806.10250) on a straggler-skewed
+//! hierarchical topology.
+//!
+//! The scenario pins the slow rack onto the critical path (`k2 = n2`,
+//! one group an order of magnitude slower), so every unit of straggler
+//! partial work harvested shortens the job. As `r` grows, `E[T]` falls
+//! toward the fluid limit `k1/(n1·µ1)` — but each group's decode is a
+//! `(k1·r)×(k1·r)` elimination, so decode flops grow with `r`: the
+//! tradeoff the `subtasks_per_worker` knob exposes.
+
+use crate::coding::{compute_all_products, select_results, CodedScheme, HierarchicalCode};
+use crate::linalg::Matrix;
+use crate::parallel::DecodePool;
+use crate::scenario::{GroupSpec, Topology};
+use crate::sim::bounds;
+use crate::sim::montecarlo::expected_latency_topology;
+use crate::sim::straggler::StragglerModel;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// One `r` point of the sweep.
+#[derive(Clone, Debug)]
+pub struct PartialRow {
+    /// Sub-tasks per worker.
+    pub r: usize,
+    /// Monte-Carlo `E[T]` of the multi-round model.
+    pub expected: f64,
+    /// CI half-width of `expected`.
+    pub ci95: f64,
+    /// Spacing-domination upper bound ([`bounds::topology_upper`]).
+    pub upper: f64,
+    /// Measured decode flops of one job at this `r` (parity-heavy
+    /// arrivals, through the real streaming sessions).
+    pub decode_flops: u64,
+}
+
+/// The sweep's straggler-skewed scenario at a given `r`: two healthy
+/// racks and one 20× slower rack, all required (`k2 = n2 = 3`).
+pub fn scenario(r: usize) -> Topology {
+    let mk = |mu1: f64| GroupSpec {
+        worker: StragglerModel::exp(mu1),
+        link: StragglerModel::exp(1.0),
+        subtasks: r,
+        ..GroupSpec::new(10, 5)
+    };
+    Topology {
+        groups: vec![mk(10.0), mk(10.0), mk(0.5)],
+        k2: 3,
+    }
+}
+
+/// The `r` values the figure sweeps.
+pub const R_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// Generate the sweep's rows.
+pub fn generate(trials: usize, seed: u64) -> Result<Vec<PartialRow>> {
+    let pool = DecodePool::serial();
+    // One fixed matrix shape valid for every r in the sweep:
+    // k2·k1·r = 15r divides 120 for r ∈ {1, 2, 4, 8}.
+    let (rows, cols) = (120usize, 8usize);
+    let mut rng = Rng::new(seed ^ 0xE8);
+    let a = Matrix::from_fn(rows, cols, |_, _| rng.uniform(-1.0, 1.0));
+    let x = Matrix::from_fn(cols, 1, |_, _| rng.uniform(-1.0, 1.0));
+    let mut out = Vec::new();
+    for (i, &r) in R_SWEEP.iter().enumerate() {
+        let topo = scenario(r);
+        let est = expected_latency_topology(&topo, trials, seed + i as u64, &pool)?;
+        let upper = bounds::topology_upper(&topo)?;
+        // Measured decode cost of one job: parity-heavy arrivals (the
+        // last k1 workers of every group) through the same streaming
+        // sessions the live cluster runs.
+        let code = HierarchicalCode::from_topology(topo)?;
+        let shards = code.encode(&a)?;
+        let all = compute_all_products(&shards, &x);
+        let picks: Vec<usize> = (0..3).flat_map(|g| (5..10).map(move |j| g * 10 + j)).collect();
+        let decoded = code.decode(&select_results(&all, &picks), rows)?;
+        out.push(PartialRow {
+            r,
+            expected: est.mean,
+            ci95: est.ci95,
+            upper,
+            decode_flops: decoded.flops,
+        });
+    }
+    Ok(out)
+}
+
+/// Render rows as CSV.
+pub fn to_csv(rows: &[PartialRow]) -> String {
+    let mut out = String::from("r,E[T],ci95,upper_bound,decode_flops\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{:.6},{:.6},{:.6},{}\n",
+            r.r, r.expected, r.ci95, r.upper, r.decode_flops
+        ));
+    }
+    out
+}
+
+/// Print the figure (CSV + a quick sanity summary on stderr).
+pub fn run(trials: usize, seed: u64) -> Result<Vec<PartialRow>> {
+    let rows = generate(trials, seed)?;
+    println!(
+        "# E8 partial-work sweep — (10,5)x(3,3), mu1=[10,10,0.5], mu2=1, \
+         trials={trials}"
+    );
+    print!("{}", to_csv(&rows));
+    let base = rows[0].expected;
+    for r in &rows[1..] {
+        eprintln!(
+            "partial: r={} E[T] {:.4} vs r=1 {:.4} ({:+.1}%), decode flops {}",
+            r.r,
+            r.expected,
+            base,
+            (r.expected / base - 1.0) * 100.0,
+            r.decode_flops
+        );
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multi_round_lowers_latency_and_raises_decode_cost() {
+        let rows = generate(20_000, 7).unwrap();
+        assert_eq!(rows.len(), R_SWEEP.len());
+        let r1 = &rows[0];
+        assert_eq!(r1.r, 1);
+        for row in &rows[1..] {
+            // Acceptance: E[T] strictly below the r = 1 baseline on the
+            // straggler-skewed topology.
+            assert!(
+                row.expected + 3.0 * (row.ci95 + r1.ci95) < r1.expected,
+                "r={}: E[T] {} must sit strictly below r=1's {}",
+                row.r,
+                row.expected,
+                r1.expected
+            );
+            // The §III bound still dominates the multi-round model.
+            assert!(
+                row.expected <= row.upper + 3.0 * row.ci95,
+                "r={}: E[T] {} exceeds bound {}",
+                row.r,
+                row.expected,
+                row.upper
+            );
+            // The price: a (k1·r)² elimination per group.
+            assert!(
+                row.decode_flops > r1.decode_flops,
+                "r={}: decode flops {} must exceed r=1's {}",
+                row.r,
+                row.decode_flops,
+                r1.decode_flops
+            );
+        }
+        // The sweep is monotone in r on both axes.
+        for w in rows.windows(2) {
+            assert!(w[1].expected < w[0].expected + 3.0 * (w[0].ci95 + w[1].ci95));
+            assert!(w[1].decode_flops > w[0].decode_flops);
+        }
+    }
+
+    #[test]
+    fn csv_renders() {
+        let rows = generate(2_000, 3).unwrap();
+        let csv = to_csv(&rows);
+        assert_eq!(csv.lines().count(), 1 + R_SWEEP.len());
+        assert!(csv.starts_with("r,"));
+    }
+}

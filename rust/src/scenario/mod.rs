@@ -33,6 +33,10 @@ use crate::{Error, Result};
 pub const DEFAULT_MU1: f64 = 10.0;
 /// The paper's default group→master (ToR) link rate `µ2`.
 pub const DEFAULT_MU2: f64 = 1.0;
+/// Ceiling on per-worker sub-task counts: the group decode is a
+/// `(k1·r)×(k1·r)` elimination, so an absurd `r` silently turns the
+/// decode hot path quadratic-in-`r` — reject it at validation instead.
+pub const MAX_SUBTASKS: usize = 64;
 
 /// One group (rack) of a [`Topology`]: inner code parameters plus the
 /// group's straggler profile.
@@ -57,6 +61,14 @@ pub struct GroupSpec {
     /// domains baked into the scenario, merged with any ad-hoc
     /// `FaultConfig` at launch).
     pub dead_workers: Vec<usize>,
+    /// Partial-work mode (Ferdinand–Draper, arXiv:1806.10250): each
+    /// worker's shard is encoded as `r` sequentially-computed coded
+    /// sub-tasks, streamed one result per completed sub-task, and the
+    /// group recovers from **any** `k1·r` sub-results — fast workers,
+    /// stragglers' partial work, or both. `1` (the default) is the
+    /// paper's all-or-nothing task model, bit-identical to pre-partial
+    /// behavior on every layer.
+    pub subtasks: usize,
 }
 
 impl GroupSpec {
@@ -69,6 +81,7 @@ impl GroupSpec {
             link: StragglerModel::exp(DEFAULT_MU2),
             scale: None,
             dead_workers: Vec::new(),
+            subtasks: 1,
         }
     }
 
@@ -88,6 +101,12 @@ impl GroupSpec {
     /// The group's delay multiplier (`scale`, defaulting to 1).
     pub fn slowdown(&self) -> f64 {
         self.scale.unwrap_or(1.0)
+    }
+
+    /// Sub-results this group must collect before it can decode:
+    /// `k1 · subtasks` (reduces to `k1` in the all-or-nothing model).
+    pub fn recovery_subresults(&self) -> usize {
+        self.k1 * self.subtasks
     }
 
     /// Exponential rates `(µ1, µ2)` when both models are the paper's
@@ -200,6 +219,13 @@ impl Topology {
                     )));
                 }
             }
+            if spec.subtasks == 0 || spec.subtasks > MAX_SUBTASKS {
+                return Err(Error::InvalidParams(format!(
+                    "topology group {g}: subtasks must be in 1..={MAX_SUBTASKS}, \
+                     got {}",
+                    spec.subtasks
+                )));
+            }
         }
         Ok(())
     }
@@ -241,6 +267,7 @@ impl Topology {
         for g in &self.groups {
             if !g.dead_workers.is_empty()
                 || g.slowdown() != 1.0
+                || g.subtasks != 1
                 || g.exponential_rates() != Some((mu1, mu2))
             {
                 return None;
@@ -333,6 +360,25 @@ mod tests {
         assert_eq!(t.k2, 1);
         assert_eq!(t.total_workers(), 9);
         assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn subtasks_validated_and_block_uniform_fast_path() {
+        let mut t = Topology::homogeneous(4, 2, 2, 1);
+        assert_eq!(t.groups[0].subtasks, 1, "all-or-nothing by default");
+        assert_eq!(t.groups[0].recovery_subresults(), 2);
+        assert!(t.sim_params().is_some());
+        t.groups[1].subtasks = 4;
+        assert!(t.validate().is_ok());
+        assert_eq!(t.groups[1].recovery_subresults(), 8);
+        assert!(
+            t.sim_params().is_none(),
+            "multi-round groups are not the paper's homogeneous model"
+        );
+        t.groups[1].subtasks = 0;
+        assert!(t.validate().is_err(), "zero sub-tasks rejected");
+        t.groups[1].subtasks = MAX_SUBTASKS + 1;
+        assert!(t.validate().is_err(), "absurd sub-task count rejected");
     }
 
     #[test]

@@ -124,6 +124,7 @@ impl AllocationProblem {
                     link: StragglerModel::exp(mu2),
                     scale: None,
                     dead_workers: Vec::new(),
+                    subtasks: 1,
                 })
                 .collect(),
             k2: self.k2,

@@ -74,6 +74,14 @@ pub fn simulate_job(
 /// its own link model; the job completes at the `k2`-th delivery.
 /// Dead workers baked into the topology and the ad-hoc `failures` plan
 /// are merged.
+///
+/// **Partial-work mode** (`subtasks = r > 1`): each alive worker emits
+/// one event per completed sub-task (at the partial sums of `sample/r`
+/// draws) and a group decodes at its `k1·r`-th sub-result — the same
+/// multi-round model [`crate::sim::montecarlo::sample_topology`]
+/// integrates in closed form, replayed at event granularity.
+/// [`JobTrace::workers_finished`] counts *sub-results* (identical to
+/// worker results at `r = 1`).
 pub fn simulate_job_topology(
     topo: &Topology,
     failures: &FailurePlan,
@@ -82,17 +90,25 @@ pub fn simulate_job_topology(
     topo.validate()?;
     let n2 = topo.n2();
     let mut q: EventQueue<Event> = EventQueue::new();
-    // Schedule every live worker's completion (times scaled by the
-    // group's slowdown multiplier, like the live cluster's sleeps).
+    // Schedule every live worker's (sub-)completions (times scaled by
+    // the group's slowdown multiplier, like the live cluster's sleeps).
     for (g, spec) in topo.groups.iter().enumerate() {
         for w in 0..spec.n1 {
             if failures.dead_workers.contains(&(g, w)) || spec.dead_workers.contains(&w) {
                 continue;
             }
-            q.schedule(
-                spec.worker.sample(rng) * spec.slowdown(),
-                Event::WorkerDone { group: g },
-            );
+            if spec.subtasks == 1 {
+                q.schedule(
+                    spec.worker.sample(rng) * spec.slowdown(),
+                    Event::WorkerDone { group: g },
+                );
+            } else {
+                let mut done_at = 0.0f64;
+                for _ in 0..spec.subtasks {
+                    done_at += spec.worker.sample(rng) / spec.subtasks as f64;
+                    q.schedule(done_at * spec.slowdown(), Event::WorkerDone { group: g });
+                }
+            }
         }
     }
     let mut done_count = vec![0usize; n2];
@@ -107,9 +123,10 @@ pub fn simulate_job_topology(
             Event::WorkerDone { group } => {
                 workers_finished += 1;
                 done_count[group] += 1;
-                // Submaster decodes at this group's k1-th arrival and
-                // starts the uplink transfer (unless the link is dead).
-                if done_count[group] == topo.groups[group].k1 {
+                // Submaster decodes at this group's k1·r-th sub-result
+                // and starts the uplink transfer (unless the link is
+                // dead).
+                if done_count[group] == topo.groups[group].recovery_subresults() {
                     group_done[group] = Some(t);
                     if !failures.dead_links.contains(&group) {
                         let spec = &topo.groups[group];
@@ -365,6 +382,45 @@ mod tests {
             &topo,
             trials,
             92,
+            &crate::parallel::DecodePool::serial(),
+        )
+        .unwrap();
+        assert!(
+            (ev.mean - mc.mean).abs() < 3.0 * (ev.ci95 + mc.ci95),
+            "event-driven {} vs direct {}",
+            ev.mean,
+            mc.mean
+        );
+    }
+
+    /// Multi-round cross-validation: the event engine and the direct
+    /// order-statistics sampler integrate the same partial-work model.
+    #[test]
+    fn multi_round_engine_agrees_with_topology_sampler() {
+        use crate::scenario::{GroupSpec, Topology};
+        let mk = |n1: usize, k1: usize, mu1: f64, r: usize| GroupSpec {
+            worker: StragglerModel::exp(mu1),
+            link: StragglerModel::exp(1.0),
+            subtasks: r,
+            ..GroupSpec::new(n1, k1)
+        };
+        let topo = Topology {
+            groups: vec![mk(6, 3, 10.0, 4), mk(6, 3, 1.0, 4), mk(4, 2, 5.0, 2)],
+            k2: 2,
+        };
+        let trials = 30_000;
+        let mut rng = Rng::new(95);
+        let mut acc = crate::util::stats::Welford::new();
+        let no_failures = FailurePlan::default();
+        for _ in 0..trials {
+            let trace = simulate_job_topology(&topo, &no_failures, &mut rng).unwrap();
+            acc.push(trace.total.expect("failure-free job must complete"));
+        }
+        let ev = crate::sim::montecarlo::Estimate::from(&acc);
+        let mc = crate::sim::montecarlo::expected_latency_topology(
+            &topo,
+            trials,
+            96,
             &crate::parallel::DecodePool::serial(),
         )
         .unwrap();

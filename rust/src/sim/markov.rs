@@ -84,7 +84,7 @@ pub fn lower_bound_monte_carlo(p: &SimParams, trials: usize, seed: u64) -> Resul
         let mut candidates: Vec<f64> = (1..=p.n2)
             .map(|i| rng.exponential(p.mu2) + times[i * p.k1 - 1])
             .collect();
-        sum += crate::sim::montecarlo::kth_min(&mut candidates, p.k2);
+        sum += crate::sim::montecarlo::kth_min(&mut candidates, p.k2)?;
     }
     Ok(sum / trials as f64)
 }

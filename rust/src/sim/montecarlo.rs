@@ -20,11 +20,22 @@ use crate::{Error, Result};
 /// [`Error::Numerical`] rather than a quickselect panic. Callers must
 /// reject NaN inputs if they need finite order statistics; every
 /// in-crate sampler does so at the straggler-model boundary.
+///
+/// An out-of-range `k` (`k == 0`, whose former `k - 1` would underflow,
+/// or `k > buf.len()`, whose `select_nth_unstable_by` would index out
+/// of bounds) is a caller bug in the topology arithmetic — rejected
+/// with a real [`Error::Numerical`] instead of a release-build panic.
 #[inline]
-pub fn kth_min(buf: &mut [f64], k: usize) -> f64 {
-    debug_assert!(k >= 1 && k <= buf.len());
+pub fn kth_min(buf: &mut [f64], k: usize) -> Result<f64> {
+    if k == 0 || k > buf.len() {
+        return Err(Error::Numerical(format!(
+            "order statistic k={k} out of range for {} samples \
+             (need 1 <= k <= len)",
+            buf.len()
+        )));
+    }
     let (_, v, _) = buf.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
-    *v
+    Ok(*v)
 }
 
 /// One sample of the `k`-th order statistic of `n` i.i.d. `Exp(mu)`
@@ -52,7 +63,8 @@ pub fn sample_hierarchical(p: &SimParams, rng: &mut Rng) -> f64 {
         let t_c = rng.exponential(p.mu2);
         group_done.push(s_i + t_c);
     }
-    kth_min(&mut group_done, p.k2)
+    // Out-of-range k2 poisons the sample; the drivers reject it.
+    kth_min(&mut group_done, p.k2).unwrap_or(f64::NAN)
 }
 
 /// Same as [`sample_hierarchical`] but with arbitrary worker / link
@@ -79,14 +91,16 @@ pub fn sample_hierarchical_with(
         if workers.iter().any(|t| t.is_nan()) {
             return f64::NAN;
         }
-        let s_i = kth_min(&mut workers, p.k1);
+        let Ok(s_i) = kth_min(&mut workers, p.k1) else {
+            return f64::NAN;
+        };
         let link = link_model.sample(rng);
         if link.is_nan() {
             return f64::NAN;
         }
         group_done.push(s_i + link);
     }
-    kth_min(&mut group_done, p.k2)
+    kth_min(&mut group_done, p.k2).unwrap_or(f64::NAN)
 }
 
 /// One sample for heterogeneous groups (`n1[i], k1[i]` per group),
@@ -125,33 +139,58 @@ pub fn sample_heterogeneous(
 /// whose alive worker count is below `k1_g` never completes and
 /// contributes `+∞`; NaN draws poison the whole sample (the drivers
 /// reject non-finite samples with [`Error::Numerical`]).
+///
+/// **Partial-work mode** (`subtasks = r > 1`): each alive worker runs
+/// `r` sequential sub-tasks of duration `sample/r` each, so its
+/// sub-results complete at the partial sums; the group finishes at the
+/// `k1·r`-th smallest of all per-sub-task completion times — the
+/// order-statistics model of the multi-round scheme (harvested partial
+/// work included). Reduces draw-for-draw to the all-or-nothing
+/// expression at `r = 1`.
 pub fn sample_topology(topo: &Topology, rng: &mut Rng) -> f64 {
     let mut group_done = Vec::with_capacity(topo.n2());
     let mut workers: Vec<f64> = Vec::new();
     for spec in &topo.groups {
         workers.clear();
+        let r = spec.subtasks;
         for j in 0..spec.n1 {
             if spec.dead_workers.contains(&j) {
                 continue;
             }
-            let t = spec.worker.sample(rng);
-            if t.is_nan() {
-                return f64::NAN;
+            if r == 1 {
+                let t = spec.worker.sample(rng);
+                if t.is_nan() {
+                    return f64::NAN;
+                }
+                workers.push(t);
+            } else {
+                // Sequential sub-tasks: sub-result s lands at the
+                // partial sum of s+1 draws of sample/r.
+                let mut done_at = 0.0f64;
+                for _ in 0..r {
+                    let d = spec.worker.sample(rng);
+                    if d.is_nan() {
+                        return f64::NAN;
+                    }
+                    done_at += d / r as f64;
+                    workers.push(done_at);
+                }
             }
-            workers.push(t);
         }
-        if workers.len() < spec.k1 {
+        if workers.len() < spec.recovery_subresults() {
             group_done.push(f64::INFINITY);
             continue;
         }
-        let s = kth_min(&mut workers, spec.k1);
+        let Ok(s) = kth_min(&mut workers, spec.recovery_subresults()) else {
+            return f64::NAN;
+        };
         let link = spec.link.sample(rng);
         if link.is_nan() {
             return f64::NAN;
         }
         group_done.push((s + link) * spec.slowdown());
     }
-    kth_min(&mut group_done, topo.k2)
+    kth_min(&mut group_done, topo.k2).unwrap_or(f64::NAN)
 }
 
 /// Trials per Monte-Carlo shard. Fixed — the shard grid is a function
@@ -288,7 +327,8 @@ pub mod baselines {
     /// MDS-type `(n, k)` (polynomial code): the `k`-th fastest worker.
     pub fn sample_mds(n: usize, k: usize, mu2: f64, rng: &mut Rng) -> f64 {
         let mut times: Vec<f64> = (0..n).map(|_| rng.exponential(mu2)).collect();
-        kth_min(&mut times, k)
+        // An out-of-range k poisons the estimate instead of panicking.
+        kth_min(&mut times, k).unwrap_or(f64::NAN)
     }
 
     /// Product code `(n1,k1)×(n2,k2)`: completion when the received
@@ -362,11 +402,30 @@ mod tests {
     #[test]
     fn kth_min_works() {
         let mut v = [5.0, 1.0, 3.0, 2.0, 4.0];
-        assert_eq!(kth_min(&mut v, 1), 1.0);
+        assert_eq!(kth_min(&mut v, 1).unwrap(), 1.0);
         let mut v = [5.0, 1.0, 3.0, 2.0, 4.0];
-        assert_eq!(kth_min(&mut v, 3), 3.0);
+        assert_eq!(kth_min(&mut v, 3).unwrap(), 3.0);
         let mut v = [5.0, 1.0, 3.0, 2.0, 4.0];
-        assert_eq!(kth_min(&mut v, 5), 5.0);
+        assert_eq!(kth_min(&mut v, 5).unwrap(), 5.0);
+    }
+
+    #[test]
+    fn kth_min_rejects_out_of_range_k_instead_of_panicking() {
+        // Satellite regression: k = 0 used to underflow `k - 1` and
+        // k > len used to index out of bounds inside quickselect — both
+        // are now a real Error::Numerical.
+        let mut v = [5.0, 1.0, 3.0];
+        assert!(matches!(
+            kth_min(&mut v, 0),
+            Err(crate::Error::Numerical(_))
+        ));
+        let mut v = [5.0, 1.0, 3.0];
+        assert!(matches!(
+            kth_min(&mut v, 4),
+            Err(crate::Error::Numerical(_))
+        ));
+        let mut empty: [f64; 0] = [];
+        assert!(kth_min(&mut empty, 1).is_err());
     }
 
     #[test]
@@ -374,9 +433,9 @@ mod tests {
         // total_cmp orders NaN last: finite order statistics are still
         // correct, and nothing panics.
         let mut v = [5.0, f64::NAN, 3.0, 2.0, 4.0];
-        assert_eq!(kth_min(&mut v, 1), 2.0);
+        assert_eq!(kth_min(&mut v, 1).unwrap(), 2.0);
         let mut v = [5.0, f64::NAN, 3.0, 2.0, 4.0];
-        assert!(kth_min(&mut v, 5).is_nan());
+        assert!(kth_min(&mut v, 5).unwrap().is_nan());
     }
 
     #[test]
@@ -551,6 +610,39 @@ mod tests {
         dead_two.groups[0].dead_workers = (0..4).collect();
         dead_two.groups[1].dead_workers = (0..4).collect();
         assert!(expected_latency_topology(&dead_two, 1_000, 5, &pool).is_err());
+    }
+
+    /// Tentpole acceptance (analysis side): on a straggler-skewed
+    /// topology, the multi-round model's E[T] sits strictly below the
+    /// all-or-nothing baseline — partial work harvested from the slow
+    /// group shortens the critical path (arXiv:1806.10250's tradeoff).
+    #[test]
+    fn multi_round_subtasks_reduce_expected_latency() {
+        use crate::scenario::{GroupSpec, Topology};
+        let mk = |mu1: f64, r: usize| GroupSpec {
+            worker: StragglerModel::exp(mu1),
+            link: StragglerModel::exp(1.0),
+            subtasks: r,
+            ..GroupSpec::new(6, 3)
+        };
+        let pool = crate::parallel::DecodePool::serial();
+        // k2 = n2: the slow group is always on the critical path.
+        let base = Topology {
+            groups: vec![mk(10.0, 1), mk(0.5, 1)],
+            k2: 2,
+        };
+        let multi = Topology {
+            groups: vec![mk(10.0, 8), mk(0.5, 8)],
+            k2: 2,
+        };
+        let et1 = expected_latency_topology(&base, 60_000, 71, &pool).unwrap();
+        let et8 = expected_latency_topology(&multi, 60_000, 72, &pool).unwrap();
+        assert!(
+            et8.mean + 3.0 * (et8.ci95 + et1.ci95) < et1.mean,
+            "multi-round E[T] {} must sit strictly below all-or-nothing {}",
+            et8.mean,
+            et1.mean
+        );
     }
 
     #[test]

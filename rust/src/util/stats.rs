@@ -171,19 +171,26 @@ impl Histogram {
         self.count
     }
 
-    /// Mean of recorded observations (seconds).
+    /// Mean of recorded observations (seconds). Like
+    /// [`Histogram::quantile`], an empty histogram reports the `NaN`
+    /// sentinel — never a fake "zero latency" mean.
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
-            0.0
+            f64::NAN
         } else {
             self.sum / self.count as f64
         }
     }
 
     /// Approximate quantile from bucket boundaries (upper edge).
+    ///
+    /// An **empty** histogram has no quantiles: returns the `NaN`
+    /// sentinel, never an arbitrary bucket edge — a `0.0` here would
+    /// read as a fake "zero latency" p99 in every serializer
+    /// downstream (JSON emitters render the sentinel as `null`).
     pub fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
-            return 0.0;
+            return f64::NAN;
         }
         let target = (q * self.count as f64).ceil() as u64;
         let mut acc = 0u64;
@@ -263,6 +270,24 @@ mod tests {
         assert!((h.mean() - 0.001).abs() < 1e-9);
         let p99 = h.quantile(0.99);
         assert!(p99 >= 0.001 && p99 <= 0.003, "p99={p99}");
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_nan_sentinel() {
+        let mut h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        for q in [0.5, 0.95, 0.99] {
+            assert!(
+                h.quantile(q).is_nan(),
+                "empty histogram q={q} must be NaN, not a bucket edge"
+            );
+        }
+        // The mean reports the same sentinel.
+        assert!(h.mean().is_nan());
+        // One observation and the statistics are defined again.
+        h.record(0.002);
+        assert!(h.quantile(0.99).is_finite());
+        assert!(h.mean().is_finite());
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Integration tests for the partial-work (multi-round sub-task) mode:
+//! `subtasks_per_worker = 1` bit-identity across every scheme, and
+//! partial-accumulation recovery from a mix of complete workers and
+//! straggler sub-results at decode pool widths 1/2/8.
+
+use hiercode::coding::{
+    build_scheme_topology, compute_all_products, select_results, CodedScheme, SchemeKind,
+    WorkerResult,
+};
+use hiercode::config::schema::ClusterConfig;
+use hiercode::linalg::{ops, Matrix};
+use hiercode::parallel::DecodePool;
+use hiercode::scenario::Topology;
+use hiercode::sim::montecarlo::expected_latency_topology;
+use hiercode::util::rng::Rng;
+
+fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_fn(rows, cols, |_, _| r.uniform(-1.0, 1.0))
+}
+
+/// Acceptance: an explicit `subtasks_per_worker = 1` is bit-identical
+/// to the knob being absent — topology value, encode, decode output,
+/// decode flops and sim E[T] — for all five schemes.
+#[test]
+fn r1_sugar_is_bit_identical_for_every_scheme() {
+    for kind in SchemeKind::ALL {
+        let base = format!(
+            r#"{{"code": {{"scheme": "{0}", "n1": 4, "k1": 2, "n2": 4, "k2": 2}}}}"#,
+            kind.name()
+        );
+        let with_r = format!(
+            r#"{{"code": {{"scheme": "{0}", "n1": 4, "k1": 2, "n2": 4, "k2": 2,
+                           "subtasks_per_worker": 1}}}}"#,
+            kind.name()
+        );
+        let c0 = ClusterConfig::from_json_text(&base).unwrap();
+        let c1 = ClusterConfig::from_json_text(&with_r).unwrap();
+        assert_eq!(c0.code.topology, c1.code.topology, "{kind}");
+        let s0 = c0.build_scheme().unwrap();
+        let s1 = c1.build_scheme().unwrap();
+        let mut rng = Rng::new(170);
+        let rows = s0.row_divisor() * 2;
+        let a = random_matrix(&mut rng, rows, 5);
+        let x = random_matrix(&mut rng, 5, 2);
+        let sh0 = s0.encode(&a).unwrap();
+        let sh1 = s1.encode(&a).unwrap();
+        for (m0, m1) in sh0.iter().zip(&sh1) {
+            assert_eq!(m0.data(), m1.data(), "{kind}: encode must be bit-identical");
+        }
+        let all = compute_all_products(&sh0, &x);
+        let order: Vec<usize> = (0..s0.num_workers()).collect();
+        let o0 = s0.decode(&select_results(&all, &order), rows).unwrap();
+        let o1 = s1.decode(&select_results(&all, &order), rows).unwrap();
+        assert_eq!(o0.result.data(), o1.result.data(), "{kind}");
+        assert_eq!(o0.flops, o1.flops, "{kind}");
+        // Sim E[T] over the two configs' topologies is bit-identical
+        // (the r = 1 uniform case still rides the seed's Rényi
+        // fast-path sampler).
+        let pool = DecodePool::serial();
+        let (t0, t1) = (&c0.code.topology, &c1.code.topology);
+        let e0 = expected_latency_topology(t0, 10_000, 9, &pool).unwrap();
+        let e1 = expected_latency_topology(t1, 10_000, 9, &pool).unwrap();
+        assert_eq!(e0.mean.to_bits(), e1.mean.to_bits(), "{kind}");
+        assert_eq!(e0.ci95.to_bits(), e1.ci95.to_bits(), "{kind}");
+    }
+}
+
+/// Acceptance: partial-accumulation recovery — each group reaches its
+/// `k1·r` threshold from a mix of complete workers and straggler
+/// partials, the composed two-level decode reconstructs `A·X`, and the
+/// result is bit-identical at decode pool widths 1, 2 and 8.
+#[test]
+fn partial_accumulation_recovers_identically_at_threads_1_2_8() {
+    // (5,3)×(3,2), r = 3: per group, k1·r = 9 sub-results.
+    let mut topo = Topology::homogeneous(5, 3, 3, 2);
+    for g in &mut topo.groups {
+        g.subtasks = 3;
+    }
+    let r = 3usize;
+    let mut rng = Rng::new(88);
+    let rows = 36; // divisible by k2·k1·r = 18
+    let a = random_matrix(&mut rng, rows, 4);
+    let x = random_matrix(&mut rng, 4, 2);
+    let expect = ops::matmul(&a, &x);
+    let mut reference: Option<(Vec<f64>, u64)> = None;
+    for threads in [1usize, 2, 8] {
+        let scheme = build_scheme_topology(SchemeKind::Hierarchical, &topo, threads).unwrap();
+        let shards = scheme.encode(&a).unwrap();
+        // Sub-product of flat worker w's sub-task s.
+        let sub = |w: usize, s: usize| -> Matrix {
+            let parts = shards[w].split_rows(r).unwrap();
+            ops::matmul(&parts[s], &x)
+        };
+        let mut master = scheme.master_decoder(rows, 2);
+        // Groups 1 and 2 decode (group 0 straggles entirely).
+        for g in [1usize, 2] {
+            let mut session = scheme.group_decoder(g, rows, 2).unwrap();
+            // Mix: worker 4 (parity) completes all 3 sub-tasks; workers
+            // 0..=3 contribute 2+2+1+1 straggler sub-results → 9 total.
+            let contributions: [(usize, usize); 5] = [(4, 3), (0, 2), (1, 2), (2, 1), (3, 1)];
+            let mut ready = false;
+            for (j, count) in contributions {
+                for s in 0..count {
+                    let res = WorkerResult {
+                        shard: j * r + s,
+                        data: sub(g * 5 + j, s),
+                    };
+                    ready = session.push(res).unwrap().is_ready();
+                }
+            }
+            assert!(ready, "threads={threads} group={g}: k1·r sub-results");
+            let part = session.finish().unwrap();
+            assert_eq!(part.result.rows(), rows / 2);
+            master
+                .push(WorkerResult { shard: g, data: part.result })
+                .unwrap();
+        }
+        assert!(master.progress().is_ready(), "threads={threads}");
+        let out = master.finish().unwrap();
+        assert!(
+            out.result.max_abs_diff(&expect) < 1e-6,
+            "threads={threads}: wrong product"
+        );
+        match &reference {
+            None => reference = Some((out.result.data().to_vec(), out.flops)),
+            Some((data, flops)) => {
+                assert_eq!(
+                    data.as_slice(),
+                    out.result.data(),
+                    "threads={threads}: partial decode must be bit-identical"
+                );
+                assert_eq!(*flops, out.flops, "threads={threads}");
+            }
+        }
+    }
+}
+
+/// The full-cluster streaming session accepts whole worker results in
+/// partial-work mode too (each expands to its r sub-results), staying
+/// bit-identical to the batch fan-out path.
+#[test]
+fn full_session_and_batch_agree_with_subtasks() {
+    let mut topo = Topology::homogeneous(4, 2, 3, 2);
+    for g in &mut topo.groups {
+        g.subtasks = 2;
+    }
+    let scheme = build_scheme_topology(SchemeKind::Hierarchical, &topo, 2).unwrap();
+    let mut rng = Rng::new(91);
+    let rows = scheme.row_divisor();
+    let a = random_matrix(&mut rng, rows, 3);
+    let x = random_matrix(&mut rng, 3, 1);
+    let shards = scheme.encode(&a).unwrap();
+    let all = compute_all_products(&shards, &x);
+    // Parity-heavy order: workers {2,3} of each group first.
+    let order: Vec<usize> = (0..3)
+        .flat_map(|g| [g * 4 + 2, g * 4 + 3])
+        .chain((0..3).flat_map(|g| [g * 4, g * 4 + 1]))
+        .collect();
+    let batch = scheme.decode(&select_results(&all, &order), rows).unwrap();
+    let mut session = scheme.decoder(rows, 1);
+    let mut pushed = 0;
+    for w in &order {
+        pushed += 1;
+        let res = WorkerResult {
+            shard: *w,
+            data: all[*w].data.clone(),
+        };
+        if session.push(res).unwrap().is_ready() {
+            break;
+        }
+    }
+    // Ready at the k2-th group's k1-th worker: 4 workers (2 groups × 2).
+    assert_eq!(pushed, 4);
+    let streamed = session.finish().unwrap();
+    assert_eq!(streamed.result.data(), batch.result.data());
+    assert_eq!(streamed.flops, batch.flops);
+    assert!(streamed.result.max_abs_diff(&ops::matmul(&a, &x)) < 1e-6);
+}

@@ -275,6 +275,89 @@ fn shutdown_drains_inflight_jobs_to_completion() {
     }
 }
 
+/// Satellite regression: a `PartialResult` arriving after the master's
+/// `gc_done_jobs` evicted its `Done` tombstone must be counted as a
+/// **late delivery** (`late_partials`), not silently dropped as an
+/// unknown job. This ordering is load-bearing for partial-work mode,
+/// where straggler sub-results keep streaming after a group decoded.
+#[test]
+fn late_partial_after_tombstone_gc_counts_as_late_delivery() {
+    use hiercode::coding::{CodedScheme, HierarchicalCode};
+    use hiercode::coordinator::master;
+    use hiercode::coordinator::messages::{JobBroadcast, MasterMsg, ModelId, PartialResult};
+    use hiercode::coordinator::metrics::Metrics;
+    use hiercode::coordinator::JobId;
+    use std::sync::{mpsc, Arc};
+
+    let code = Arc::new(HierarchicalCode::homogeneous(2, 1, 2, 1).unwrap());
+    let (master_tx, master_rx) = mpsc::channel();
+    let metrics = Arc::new(Metrics::new());
+    let scheme: Arc<dyn CodedScheme> = code;
+    let h = master::spawn(
+        scheme,
+        vec![],
+        Arc::clone(&metrics),
+        Duration::from_secs(5),
+        master_rx,
+    );
+    // 8193 reply-less batches leave one Done tombstone each; the
+    // 8193rd insert crosses the master's DONE_JOBS_BOUND (8192) and
+    // the GC evicts every tombstone.
+    for id in 0..8193u64 {
+        master_tx
+            .send(MasterMsg::Batch {
+                job: JobBroadcast {
+                    id: JobId(id),
+                    model: ModelId(0),
+                    out_rows: 2,
+                    x: Arc::new(Matrix::identity(1)),
+                },
+                replies: vec![],
+            })
+            .unwrap();
+    }
+    // A straggler partial for an evicted tombstone: late delivery…
+    master_tx
+        .send(MasterMsg::Partial(PartialResult {
+            id: JobId(0),
+            shard: 0,
+            data: Matrix::identity(1),
+            decode_flops: 0,
+            finished_at: Instant::now(),
+        }))
+        .unwrap();
+    // …and one for a still-present tombstone: the same accounting.
+    master_tx
+        .send(MasterMsg::Batch {
+            job: JobBroadcast {
+                id: JobId(9000),
+                model: ModelId(0),
+                out_rows: 2,
+                x: Arc::new(Matrix::identity(1)),
+            },
+            replies: vec![],
+        })
+        .unwrap();
+    master_tx
+        .send(MasterMsg::Partial(PartialResult {
+            id: JobId(9000),
+            shard: 0,
+            data: Matrix::identity(1),
+            decode_flops: 0,
+            finished_at: Instant::now(),
+        }))
+        .unwrap();
+    master_tx.send(MasterMsg::Drain).unwrap();
+    h.join().unwrap();
+    let s = metrics.snapshot();
+    assert_eq!(
+        s.late_partials, 2,
+        "evicted-tombstone and live-tombstone partials are both late deliveries"
+    );
+    assert_eq!(s.completed, 0);
+    assert_eq!(s.failed, 0);
+}
+
 /// The drain guarantee also holds when jobs can never complete (all
 /// uplinks dead): the drain grace bounds the wait and every handle
 /// resolves with an error instead of hanging.
