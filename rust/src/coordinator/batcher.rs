@@ -43,14 +43,15 @@ struct Lane {
     window: Instant,
 }
 
-/// Spawn the batcher thread.
+/// Spawn the batcher thread. Errors only if the OS refuses to spawn
+/// the thread.
 pub fn spawn(
     config: BatchConfig,
     metrics: Arc<Metrics>,
     rx: mpsc::Receiver<JobRequest>,
     master: mpsc::Sender<MasterMsg>,
-) -> thread::JoinHandle<()> {
-    thread::Builder::new()
+) -> crate::Result<thread::JoinHandle<()>> {
+    let handle = thread::Builder::new()
         .name("hiercode-batcher".to_string())
         .spawn(move || {
             let max_wait = Duration::from_secs_f64(config.max_wait_ms / 1e3);
@@ -91,15 +92,19 @@ pub fn spawn(
                         });
                         lane.reqs.push(req);
                         if lane.reqs.len() >= cap {
-                            let mut lane =
-                                lanes.remove(&model).expect("lane just filled");
-                            flush(
-                                &mut lane.reqs,
-                                &mut next_id,
-                                &config,
-                                &metrics,
-                                &master,
-                            );
+                            // The lane was inserted just above, so this
+                            // always takes the Some arm — written as
+                            // if-let so a (impossible) miss degrades to
+                            // a late window flush, not a panic.
+                            if let Some(mut lane) = lanes.remove(&model) {
+                                flush(
+                                    &mut lane.reqs,
+                                    &mut next_id,
+                                    &config,
+                                    &metrics,
+                                    &master,
+                                );
+                            }
                         }
                     }
                     None => {
@@ -111,15 +116,18 @@ pub fn spawn(
                             .map(|(&m, _)| m)
                             .collect();
                         for model in due {
-                            let mut lane =
-                                lanes.remove(&model).expect("due lane exists");
-                            flush(
-                                &mut lane.reqs,
-                                &mut next_id,
-                                &config,
-                                &metrics,
-                                &master,
-                            );
+                            // `due` was computed from the same map one
+                            // statement ago; if-let instead of expect so
+                            // a stale id is a no-op, not a panic.
+                            if let Some(mut lane) = lanes.remove(&model) {
+                                flush(
+                                    &mut lane.reqs,
+                                    &mut next_id,
+                                    &config,
+                                    &metrics,
+                                    &master,
+                                );
+                            }
                         }
                     }
                 }
@@ -131,8 +139,8 @@ pub fn spawn(
                 flush(&mut lane.reqs, &mut next_id, &config, &metrics, &master);
             }
             let _ = master.send(MasterMsg::Drain);
-        })
-        .expect("failed to spawn batcher thread")
+        })?;
+    Ok(handle)
 }
 
 /// Cap the configured batch size at the largest width the artifact set
@@ -150,7 +158,7 @@ pub fn effective_max_batch(configured: usize, supported: Option<&[usize]>) -> us
 /// Release one request's admission reservation.
 fn release(metrics: &Metrics, entry: &ModelEntry) {
     Metrics::dec(&metrics.queue_depth);
-    Metrics::dec(&entry.queued);
+    entry.admission.release();
 }
 
 /// Flush one lane: shed expired requests, order by priority, dispatch
@@ -316,7 +324,8 @@ mod tests {
             metrics,
             req_rx,
             master_tx,
-        );
+        )
+        .expect("spawn batcher");
         let entry = mk_entry(3, None);
         let (r1, _s1) = mk_request(&entry, 1.0, 0);
         let (r2, _s2) = mk_request(&entry, 2.0, 1);
@@ -344,7 +353,8 @@ mod tests {
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
-        );
+        )
+        .expect("spawn batcher");
         let entry = mk_entry(2, None);
         let (r1, _s1) = mk_request(&entry, 5.0, 0);
         req_tx.send(r1).unwrap();
@@ -367,7 +377,8 @@ mod tests {
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
-        );
+        )
+        .expect("spawn batcher");
         let entry = mk_entry(2, Some(vec![1, 4, 8]));
         for (i, v) in [1.0, 2.0, 3.0].into_iter().enumerate() {
             let (r, _s) = mk_request(&entry, v, i as u64);
@@ -424,7 +435,8 @@ mod tests {
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
-        );
+        )
+        .expect("spawn batcher");
         let entry = mk_entry(2, Some(vec![4, 8]));
         let (r, _s) = mk_request(&entry, 9.0, 0);
         req_tx.send(r).unwrap();
@@ -451,7 +463,8 @@ mod tests {
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
-        );
+        )
+        .expect("spawn batcher");
         let entry = mk_entry(1, Some(vec![1, 2]));
         for (i, v) in [1.0, 2.0, 3.0, 4.0].into_iter().enumerate() {
             let (r, _s) = mk_request(&entry, v, i as u64);
@@ -480,7 +493,8 @@ mod tests {
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
-        );
+        )
+        .expect("spawn batcher");
         let entry = mk_entry(1, None);
         let n = 25;
         let mut slots = Vec::new();
@@ -515,7 +529,8 @@ mod tests {
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
-        );
+        )
+        .expect("spawn batcher");
         let e0 = mk_entry_id(0, 1);
         let e1 = mk_entry_id(1, 1);
         for (i, e) in [&e0, &e1, &e0, &e1].into_iter().enumerate() {
@@ -542,7 +557,8 @@ mod tests {
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
-        );
+        )
+        .expect("spawn batcher");
         let entry = mk_entry(1, None);
         // r0 (prio 0) and r2 (prio 5) fill the first cap-2 flush: the
         // higher priority takes column 0 despite arriving second. r1
@@ -578,10 +594,12 @@ mod tests {
             Arc::clone(&metrics),
             req_rx,
             master_tx,
-        );
+        )
+        .expect("spawn batcher");
         let entry = mk_entry(1, None);
         // Simulate the admission reservation the client side makes.
-        entry.queued.fetch_add(2, Ordering::Relaxed);
+        assert!(entry.admission.try_reserve());
+        assert!(entry.admission.try_reserve());
         metrics.queue_depth.fetch_add(2, Ordering::Relaxed);
         let (mut dead, dead_slot) = mk_request(&entry, 1.0, 0);
         dead.deadline = Instant::now() - Duration::from_millis(1);
@@ -597,7 +615,7 @@ mod tests {
         assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
         assert_eq!(entry.shed.load(Ordering::Relaxed), 1);
         // Both reservations released (shed + dispatched).
-        assert_eq!(entry.queued.load(Ordering::Relaxed), 0);
+        assert_eq!(entry.admission.queued(), 0);
         assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 0);
     }
 
@@ -613,7 +631,8 @@ mod tests {
             Arc::new(Metrics::new()),
             req_rx,
             master_tx,
-        );
+        )
+        .expect("spawn batcher");
         let e0 = mk_entry_id(0, 1);
         let e1 = mk_entry_id(1, 1);
         let (r0, _s0) = mk_request(&e0, 1.0, 0);

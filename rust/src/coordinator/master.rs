@@ -32,6 +32,7 @@ use crate::coordinator::messages::{
     JobError, JobId, MasterMsg, ReplyRoute, RequestId, SubmasterMsg,
 };
 use crate::coordinator::metrics::Metrics;
+use crate::sync::DrainState;
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -111,14 +112,15 @@ fn gc_done_jobs(jobs: &mut HashMap<JobId, JobState>) {
 
 /// Spawn the master thread. `drain_grace` bounds how long a shutdown
 /// drain waits for in-flight jobs before failing their routes.
+/// Errors only if the OS refuses to spawn the thread.
 pub fn spawn(
     scheme: Arc<dyn CodedScheme>,
     submasters: Vec<mpsc::Sender<SubmasterMsg>>,
     metrics: Arc<Metrics>,
     drain_grace: Duration,
     rx: mpsc::Receiver<MasterMsg>,
-) -> thread::JoinHandle<()> {
-    thread::Builder::new()
+) -> crate::Result<thread::JoinHandle<()>> {
+    let handle = thread::Builder::new()
         .name("hiercode-master".to_string())
         .spawn(move || {
             let mut jobs: HashMap<JobId, JobState> = HashMap::new();
@@ -130,11 +132,11 @@ pub fn spawn(
             // Cancellations that arrived before their request was
             // batched into a job (bounded; see CancelSet's rationale).
             let mut cancelled_reqs: HashSet<RequestId> = HashSet::new();
-            // In-flight (Active) job count; drives the drain exit.
-            let mut active = 0usize;
-            let mut draining = false;
+            // In-flight (Active) job count + drain flag; drives the
+            // drain exit (model-checked: see `tests/model_check.rs`).
+            let mut drain = DrainState::new();
             loop {
-                let msg = if draining {
+                let msg = if drain.draining() {
                     // Drain mode: in-flight jobs get `drain_grace` of
                     // quiet time to finish; then we abandon them (their
                     // routes are failed below — never left hanging).
@@ -150,13 +152,13 @@ pub fn spawn(
                 };
                 match msg {
                     MasterMsg::Drain => {
-                        draining = true;
-                        if active == 0 {
+                        if drain.begin_drain() {
                             break;
                         }
                         crate::log_debug!(
                             "master",
-                            "draining: {active} job(s) in flight"
+                            "draining: {} job(s) in flight",
+                            drain.active()
                         );
                     }
                     MasterMsg::Batch { job, replies } => {
@@ -203,7 +205,7 @@ pub fn spawn(
                                 dispatched_at: Instant::now(),
                             }),
                         );
-                        active += 1;
+                        drain.job_dispatched();
                         for sm in &submasters {
                             let _ = sm.send(SubmasterMsg::Job(job.clone()));
                         }
@@ -276,11 +278,11 @@ pub fn spawn(
                             }
                             jobs.insert(pr.id, JobState::Done);
                             gc_done_jobs(&mut jobs);
-                            active -= 1;
+                            let can_exit = drain.job_settled();
                             for sm in &submasters {
                                 let _ = sm.send(SubmasterMsg::Finish(pr.id));
                             }
-                            if draining && active == 0 {
+                            if can_exit {
                                 break;
                             }
                         }
@@ -302,7 +304,7 @@ pub fn spawn(
                                     Metrics::inc(&metrics.cancelled);
                                     jobs.insert(job_id, JobState::Done);
                                     gc_done_jobs(&mut jobs);
-                                    active -= 1;
+                                    let can_exit = drain.job_settled();
                                     for sm in &submasters {
                                         let _ =
                                             sm.send(SubmasterMsg::Finish(job_id));
@@ -311,7 +313,7 @@ pub fn spawn(
                                         "master",
                                         "job {job_id:?} cancelled (all clients gone)"
                                     );
-                                    if draining && active == 0 {
+                                    if can_exit {
                                         break;
                                     }
                                 }
@@ -343,8 +345,8 @@ pub fn spawn(
             for sm in &submasters {
                 let _ = sm.send(SubmasterMsg::Shutdown);
             }
-        })
-        .expect("failed to spawn master thread")
+        })?;
+    Ok(handle)
 }
 
 #[cfg(test)]
@@ -407,7 +409,8 @@ mod tests {
             Arc::clone(&metrics),
             Duration::from_secs(5),
             master_rx,
-        );
+        )
+        .expect("spawn master");
         let entry = test_entry(3, 8);
         let slot0 = Arc::new(CompletionSlot::new());
         let slot1 = Arc::new(CompletionSlot::new());
@@ -488,7 +491,8 @@ mod tests {
             Arc::clone(&metrics),
             Duration::from_secs(5),
             master_rx,
-        );
+        )
+        .expect("spawn master");
         let entry = test_entry(3, 8);
         let slot = Arc::new(CompletionSlot::new());
         let id = JobId(1);
@@ -544,7 +548,8 @@ mod tests {
             Arc::clone(&metrics),
             Duration::from_secs(5),
             master_rx,
-        );
+        )
+        .expect("spawn master");
         master_tx
             .send(MasterMsg::CancelRequest(RequestId(3)))
             .unwrap();
@@ -581,7 +586,8 @@ mod tests {
             Arc::clone(&metrics),
             Duration::from_secs(5),
             master_rx,
-        );
+        )
+        .expect("spawn master");
         let entry = test_entry(1, 2);
         let slot = Arc::new(CompletionSlot::new());
         let mut expired = route(&entry, &slot, 0, 4);
@@ -625,7 +631,8 @@ mod tests {
             Arc::clone(&metrics),
             Duration::from_secs(5),
             master_rx,
-        );
+        )
+        .expect("spawn master");
         let entry = test_entry(1, 2);
         let slot = Arc::new(CompletionSlot::new());
         // The batcher's shed already resolved this request…
@@ -668,7 +675,8 @@ mod tests {
             Arc::clone(&metrics),
             Duration::from_millis(50), // short grace
             master_rx,
-        );
+        )
+        .expect("spawn master");
         let entry = test_entry(1, 2);
         let slot = Arc::new(CompletionSlot::new());
         master_tx

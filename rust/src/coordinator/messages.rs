@@ -4,8 +4,9 @@
 
 use crate::coordinator::backend::WorkerShard;
 use crate::linalg::Matrix;
+use crate::sync::{AdmissionGate, Condvar, Mutex, RwLock};
 use std::sync::atomic::AtomicU64;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Identifies one batched coded job.
@@ -64,6 +65,12 @@ enum SlotState {
 /// or blocks on the other end. Unlike an `mpsc` pair this is `Sync`, so
 /// a [`crate::coordinator::JobHandle`] is `Send` and pollable from any
 /// thread.
+///
+/// Built on the [`crate::sync`] facade: the mutex+condvar pair is
+/// poison-transparent (a panicking completer must not cascade into
+/// every waiter), and under `--features modelcheck` the first-write-
+/// wins and no-lost-wakeup invariants are checked exhaustively over
+/// all interleavings in `tests/model_check.rs`.
 #[derive(Debug)]
 pub struct CompletionSlot {
     state: Mutex<SlotState>,
@@ -93,7 +100,7 @@ impl CompletionSlot {
     /// request**: a request shed once can never be counted shed again
     /// downstream.
     pub fn complete(&self, result: JobResult) -> bool {
-        let mut s = self.state.lock().expect("completion slot poisoned");
+        let mut s = self.state.lock();
         if matches!(*s, SlotState::Pending) {
             *s = SlotState::Done(result);
             self.cv.notify_all();
@@ -106,7 +113,7 @@ impl CompletionSlot {
     /// Non-blocking poll: `Some` exactly once, when the outcome is in;
     /// `None` while pending (and after the outcome was already taken).
     pub fn try_take(&self) -> Option<JobResult> {
-        let mut s = self.state.lock().expect("completion slot poisoned");
+        let mut s = self.state.lock();
         match std::mem::replace(&mut *s, SlotState::Taken) {
             SlotState::Done(r) => Some(r),
             prev => {
@@ -118,7 +125,7 @@ impl CompletionSlot {
 
     /// Block until the outcome is in and take it.
     pub fn wait(&self) -> JobResult {
-        let mut s = self.state.lock().expect("completion slot poisoned");
+        let mut s = self.state.lock();
         loop {
             match std::mem::replace(&mut *s, SlotState::Taken) {
                 SlotState::Done(r) => return r,
@@ -127,7 +134,7 @@ impl CompletionSlot {
                 }
                 SlotState::Pending => {
                     *s = SlotState::Pending;
-                    s = self.cv.wait(s).expect("completion slot poisoned");
+                    s = self.cv.wait(s);
                 }
             }
         }
@@ -136,7 +143,7 @@ impl CompletionSlot {
     /// Block up to `timeout`; `None` on timeout (outcome left in place).
     pub fn wait_timeout(&self, timeout: Duration) -> Option<JobResult> {
         let deadline = Instant::now() + timeout;
-        let mut s = self.state.lock().expect("completion slot poisoned");
+        let mut s = self.state.lock();
         loop {
             match std::mem::replace(&mut *s, SlotState::Taken) {
                 SlotState::Done(r) => return Some(r),
@@ -149,10 +156,7 @@ impl CompletionSlot {
                     if now >= deadline {
                         return None;
                     }
-                    let (guard, _) = self
-                        .cv
-                        .wait_timeout(s, deadline - now)
-                        .expect("completion slot poisoned");
+                    let (guard, _) = self.cv.wait_timeout(s, deadline - now);
                     s = guard;
                 }
             }
@@ -161,9 +165,9 @@ impl CompletionSlot {
 }
 
 /// One registered model: immutable routing facts plus the shared
-/// admission-control counters. Clients reserve a queue slot against
-/// `queued`/`cap` at submit time; the batcher releases slots as it
-/// dispatches or sheds.
+/// admission-control state. Clients reserve a queue slot through
+/// [`AdmissionGate::try_reserve`] at submit time; the batcher releases
+/// slots as it dispatches or sheds.
 #[derive(Debug)]
 pub struct ModelEntry {
     /// Model identity (worker shard-table key).
@@ -174,14 +178,12 @@ pub struct ModelEntry {
     pub d: usize,
     /// Output dimension (rows of the model's matrix).
     pub m: usize,
-    /// Admission cap: submissions beyond `cap` queued requests bounce
+    /// Bounded admission queue: reservations beyond the cap bounce
     /// with [`crate::Error::Busy`].
-    pub cap: usize,
+    pub admission: AdmissionGate,
     /// Batch widths the backend can serve for this model's shard shape
     /// (`None` = unrestricted native backend).
     pub supported_widths: Option<Vec<usize>>,
-    /// Requests accepted but not yet dispatched into a job.
-    pub queued: AtomicU64,
     /// Requests accepted for this model.
     pub accepted: AtomicU64,
     /// Submissions bounced with `Busy`.
@@ -207,9 +209,8 @@ impl ModelEntry {
             name: name.to_string(),
             d,
             m,
-            cap,
+            admission: AdmissionGate::new(cap),
             supported_widths,
-            queued: AtomicU64::new(0),
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             shed: AtomicU64::new(0),
@@ -352,7 +353,7 @@ pub enum MasterMsg {
 /// the critical path).
 #[derive(Debug, Default)]
 pub struct CancelSet {
-    inner: std::sync::RwLock<std::collections::HashSet<JobId>>,
+    inner: RwLock<std::collections::HashSet<JobId>>,
 }
 
 impl CancelSet {
@@ -363,7 +364,7 @@ impl CancelSet {
 
     /// Mark `id` as no-longer-needed.
     pub fn mark(&self, id: JobId) {
-        let mut set = self.inner.write().expect("cancel set poisoned");
+        let mut set = self.inner.write();
         // Unbounded growth guard: stale entries only cost a wasted
         // compute if dropped, never correctness.
         if set.len() > 4096 {
@@ -374,7 +375,7 @@ impl CancelSet {
 
     /// True if `id` has been marked.
     pub fn is_cancelled(&self, id: JobId) -> bool {
-        self.inner.read().expect("cancel set poisoned").contains(&id)
+        self.inner.read().contains(&id)
     }
 }
 

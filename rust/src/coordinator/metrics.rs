@@ -7,9 +7,9 @@
 //! the live number of accepted-but-undispatched requests, `rejected`
 //! counts `Busy` bounces, `shed` counts deadline expiries.
 
+use crate::sync::Mutex;
 use crate::util::stats::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 /// Per-group counters: arrivals and decode activity of one group
 /// (rack), so heterogeneous topologies are observable group by group.
@@ -87,15 +87,12 @@ impl Metrics {
 
     /// Record one end-to-end request latency.
     pub fn record_latency(&self, seconds: f64) {
-        self.latency.lock().expect("metrics poisoned").record(seconds);
+        self.latency.lock().record(seconds);
     }
 
     /// Record one master-side decode latency.
     pub fn record_decode_latency(&self, seconds: f64) {
-        self.decode_latency
-            .lock()
-            .expect("metrics poisoned")
-            .record(seconds);
+        self.decode_latency.lock().record(seconds);
     }
 
     /// Count one worker product arriving at `group`'s submaster
@@ -111,10 +108,7 @@ impl Metrics {
     pub fn record_group_decode(&self, group: usize, seconds: f64) {
         if let Some(g) = self.groups.get(group) {
             g.decodes.fetch_add(1, Ordering::Relaxed);
-            g.decode_latency
-                .lock()
-                .expect("metrics poisoned")
-                .record(seconds);
+            g.decode_latency.lock().record(seconds);
         }
     }
 
@@ -130,13 +124,16 @@ impl Metrics {
     /// `ClusterCore::metrics` (the model table lives in the service
     /// state, not here); `models` is empty on a bare snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lat = self.latency.lock().expect("metrics poisoned");
-        let dec = self.decode_latency.lock().expect("metrics poisoned");
+        // Lock order (acyclic, documented for the lock-discipline
+        // lint): latency → decode_latency → per-group latency. No
+        // other path takes more than one of these at a time.
+        let lat = self.latency.lock();
+        let dec = self.decode_latency.lock();
         let per_group = self
             .groups
             .iter()
             .map(|g| {
-                let glat = g.decode_latency.lock().expect("metrics poisoned");
+                let glat = g.decode_latency.lock();
                 GroupMetricsSnapshot {
                     products: g.products.load(Ordering::Relaxed),
                     decodes: g.decodes.load(Ordering::Relaxed),
@@ -182,9 +179,13 @@ impl Metrics {
     /// to `u64::MAX` (the double-shed symptom) — and debug builds
     /// assert the invariant so the unpaired caller is caught in tests.
     pub fn dec(counter: &AtomicU64) {
+        // fetch_update with a total closure cannot return Err; default
+        // rather than unwrap so the gauge path stays panic-free.
         let prev = counter
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)))
-            .expect("fetch_update with Some(_) cannot fail");
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            })
+            .unwrap_or(0);
         debug_assert!(prev > 0, "gauge decremented below zero (unpaired release)");
     }
 

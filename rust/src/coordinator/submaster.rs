@@ -80,7 +80,7 @@ fn gc_done_jobs(jobs: &mut HashMap<JobId, GroupJob>) {
 /// different models route different heights through the same group.
 /// `subtasks` is the group's `r`: worker uploads `(j, s)` feed the
 /// decode session as sub-result index `j·r + s` (the identity when
-/// `r = 1`).
+/// `r = 1`). Errors only if the OS refuses to spawn the thread.
 ///
 /// [`JobBroadcast::out_rows`]: crate::coordinator::messages::JobBroadcast::out_rows
 #[allow(clippy::too_many_arguments)]
@@ -97,8 +97,8 @@ pub fn spawn(
     mut rng: Rng,
     rx: mpsc::Receiver<SubmasterMsg>,
     master: mpsc::Sender<MasterMsg>,
-) -> thread::JoinHandle<()> {
-    thread::Builder::new()
+) -> crate::Result<thread::JoinHandle<()>> {
+    let handle = thread::Builder::new()
         .name(format!("hiercode-sm{group}"))
         .spawn(move || {
             let mut jobs: HashMap<JobId, GroupJob> = HashMap::new();
@@ -268,8 +268,8 @@ pub fn spawn(
                     }
                 }
             }
-        })
-        .expect("failed to spawn submaster thread")
+        })?;
+    Ok(handle)
 }
 
 #[cfg(test)]
@@ -321,7 +321,8 @@ mod tests {
             URng::new(5),
             sub_rx,
             master_tx,
-        );
+        )
+        .expect("spawn submaster");
         let id = JobId(1);
         sub_tx
             .send(SubmasterMsg::Job(JobBroadcast {
@@ -412,7 +413,8 @@ mod tests {
             URng::new(11),
             sub_rx,
             master_tx,
-        );
+        )
+        .expect("spawn submaster");
         let id = JobId(7);
         sub_tx
             .send(SubmasterMsg::Job(JobBroadcast {
@@ -480,7 +482,8 @@ mod tests {
             URng::new(7),
             sub_rx,
             master_tx,
-        );
+        )
+        .expect("spawn submaster");
         let id = JobId(2);
         sub_tx
             .send(SubmasterMsg::Job(JobBroadcast {
@@ -526,7 +529,8 @@ mod tests {
             URng::new(8),
             sub_rx,
             master_tx,
-        );
+        )
+        .expect("spawn submaster");
         let id = JobId(3);
         sub_tx
             .send(SubmasterMsg::Job(JobBroadcast {

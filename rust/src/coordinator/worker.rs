@@ -52,7 +52,8 @@ fn split_shard(shard: &Matrix, r: usize) -> crate::Result<Vec<WorkerShard>> {
 
 /// Spawn worker `w(group, index)`. `subtasks` is the group's `r`
 /// (1 = the all-or-nothing task model, behavior-identical to the
-/// pre-partial worker).
+/// pre-partial worker). Errors only if the OS refuses to spawn the
+/// thread.
 #[allow(clippy::too_many_arguments)]
 pub fn spawn(
     group: usize,
@@ -65,8 +66,8 @@ pub fn spawn(
     mut rng: Rng,
     rx: mpsc::Receiver<WorkerCmd>,
     submaster: mpsc::Sender<SubmasterMsg>,
-) -> thread::JoinHandle<()> {
-    thread::Builder::new()
+) -> crate::Result<thread::JoinHandle<()>> {
+    let handle = thread::Builder::new()
         .name(format!("hiercode-w{group}.{index}"))
         .spawn(move || {
             // Per model: the worker's sub-shards, in sub-task order
@@ -164,8 +165,8 @@ pub fn spawn(
                     }
                 }
             }
-        })
-        .expect("failed to spawn worker thread")
+        })?;
+    Ok(handle)
 }
 
 #[cfg(test)]
@@ -206,7 +207,8 @@ mod tests {
             Rng::new(1),
             cmd_rx,
             sub_tx,
-        );
+        )
+        .expect("spawn worker");
         cmd_tx.send(load(ModelId(0), &shard_m)).unwrap();
         let x = Arc::new(Matrix::from_rows(&[&[1.0], &[1.0]]));
         cmd_tx
@@ -251,7 +253,8 @@ mod tests {
             Rng::new(4),
             cmd_rx,
             sub_tx,
-        );
+        )
+        .expect("spawn worker");
         cmd_tx.send(load(ModelId(0), &shard_m)).unwrap();
         cmd_tx
             .send(WorkerCmd::Compute(JobBroadcast {
@@ -300,7 +303,8 @@ mod tests {
             Rng::new(3),
             cmd_rx,
             sub_tx,
-        );
+        )
+        .expect("spawn worker");
         // Two models with distinguishable shards.
         cmd_tx
             .send(load(ModelId(0), &Matrix::from_rows(&[&[1.0]])))
@@ -355,7 +359,8 @@ mod tests {
             Rng::new(2),
             cmd_rx,
             sub_tx,
-        );
+        )
+        .expect("spawn worker");
         cmd_tx.send(load(ModelId(0), &Matrix::identity(2))).unwrap();
         let x = Arc::new(Matrix::identity(2));
         cmd_tx

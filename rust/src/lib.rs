@@ -30,6 +30,10 @@
 //! * [`coordinator`] — the runnable system: threaded master / submaster
 //!   / worker topology with batching, routing, straggler handling and
 //!   two-level parallel decoding on the request path.
+//! * [`sync`] — the synchronization facade the coordinator builds on:
+//!   poison-transparent locks, the admission gate and drain state
+//!   machine, and (under `--features modelcheck`) an in-repo
+//!   loom-style exhaustive interleaving explorer.
 //! * [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
 //! * [`config`], [`cli`], [`util`] — config system (own JSON parser),
@@ -48,6 +52,7 @@ pub mod parallel;
 pub mod runtime;
 pub mod scenario;
 pub mod sim;
+pub mod sync;
 pub mod util;
 
 /// Crate-wide result type.

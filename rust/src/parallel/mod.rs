@@ -21,9 +21,9 @@
 //! call site gates on `size() > 1` and falls back to an inline serial
 //! loop when there is nothing to fan out.
 
+use crate::sync::Mutex;
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Hard ceiling on the configured thread count: anything larger is a
 /// config typo, not a machine (`decode_threads` validation rejects it).
@@ -115,22 +115,25 @@ impl DecodePool {
                         if i >= n {
                             break;
                         }
-                        let item = slots[i]
-                            .lock()
-                            .expect("pool item poisoned")
-                            .take()
-                            .expect("item claimed twice");
+                        // Invariant: the atomic counter hands each
+                        // index out once, so the slot is still full
+                        // (allowlisted; masking a double-claim would
+                        // silently drop a task).
+                        let item = slots[i].lock().take().expect("item claimed twice");
                         local.push((i, f(item)));
                     }
-                    done.lock().expect("pool results poisoned").extend(local);
+                    done.lock().extend(local);
                 });
             }
         });
         let mut out: Vec<Option<R>> = Vec::with_capacity(n);
         out.resize_with(n, || None);
-        for (i, r) in done.into_inner().expect("pool results poisoned") {
+        for (i, r) in done.into_inner() {
             out[i] = Some(r);
         }
+        // Invariant: every index < n was claimed exactly once and its
+        // worker pushed a result before exiting (allowlisted; a hole
+        // here is a lost task, not a recoverable condition).
         out.into_iter()
             .map(|r| r.expect("every task produces a result"))
             .collect()

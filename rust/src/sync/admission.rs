@@ -1,0 +1,120 @@
+//! Admission-queue counter: the per-model backpressure gate.
+//!
+//! One [`AdmissionGate`] guards one model's submission queue. Clients
+//! reserve a slot at submit time ([`AdmissionGate::try_reserve`]); the
+//! batcher releases slots as it dispatches or sheds
+//! ([`AdmissionGate::release`]). The whole point of pulling this out of
+//! `ModelEntry` is that the reserve/release pair is now a single,
+//! model-checkable object: `tests/model_check.rs` proves (exhaustively,
+//! for small schedules) that racing reserves never exceed the cap and
+//! that releases never underflow the gauge — the double-shed symptom.
+
+use crate::sync::AtomicU64;
+
+/// Bounded admission counter: at most `cap` reservations outstanding.
+#[derive(Debug)]
+pub struct AdmissionGate {
+    /// Admission cap: reservations beyond `cap` outstanding bounce.
+    cap: u64,
+    /// Outstanding reservations (requests accepted, not yet released
+    /// by dispatch or shed).
+    queued: AtomicU64,
+}
+
+impl AdmissionGate {
+    /// Fresh gate admitting up to `cap` outstanding reservations.
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap as u64,
+            queued: AtomicU64::new(0),
+        }
+    }
+
+    /// The admission cap this gate was built with.
+    pub fn cap(&self) -> usize {
+        self.cap as usize
+    }
+
+    /// Currently outstanding reservations (gauge; racy by nature, exact
+    /// under quiescence).
+    pub fn queued(&self) -> u64 {
+        self.queued.load()
+    }
+
+    /// Try to reserve one queue slot. `true` on success; `false` means
+    /// the queue is full and the submission must bounce with `Busy`.
+    /// The bounded increment is one atomic step, so concurrent
+    /// reserves can never overshoot `cap`.
+    pub fn try_reserve(&self) -> bool {
+        self.queued
+            .fetch_update(|q| if q < self.cap { Some(q + 1) } else { None })
+            .is_ok()
+    }
+
+    /// Release one reserved slot (dispatch or shed). Saturates at zero
+    /// — an unpaired release must not wrap the gauge to `u64::MAX` —
+    /// and debug builds assert the pairing so the unpaired caller is
+    /// caught in tests.
+    pub fn release(&self) {
+        // fetch_update with a total closure cannot return Err; ignore
+        // rather than unwrap so this stays panic-free on the hot path.
+        let prev = self
+            .queued
+            .fetch_update(|q| Some(q.saturating_sub(1)))
+            .unwrap_or(0);
+        debug_assert!(prev > 0, "admission gauge released below zero (unpaired release)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn reserve_bounces_at_cap_and_release_reopens() {
+        let g = AdmissionGate::new(2);
+        assert_eq!(g.cap(), 2);
+        assert!(g.try_reserve());
+        assert!(g.try_reserve());
+        assert!(!g.try_reserve(), "third reserve must bounce");
+        assert_eq!(g.queued(), 2);
+        g.release();
+        assert!(g.try_reserve(), "released slot is reusable");
+    }
+
+    #[test]
+    fn zero_cap_rejects_everything() {
+        let g = AdmissionGate::new(0);
+        assert!(!g.try_reserve());
+        assert_eq!(g.queued(), 0);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn release_saturates_at_zero_in_release_builds() {
+        let g = AdmissionGate::new(4);
+        g.release();
+        assert_eq!(g.queued(), 0, "unpaired release must clamp, not wrap");
+    }
+
+    #[test]
+    fn concurrent_reserves_never_exceed_cap() {
+        // Stress version of the model-check invariant (example-based;
+        // the exhaustive proof lives in tests/model_check.rs).
+        let g = Arc::new(AdmissionGate::new(8));
+        let admitted: usize = std::thread::scope(|s| {
+            (0..4)
+                .map(|_| {
+                    let g = Arc::clone(&g);
+                    s.spawn(move || (0..100).filter(|_| g.try_reserve()).count())
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().expect("no panics"))
+                .sum()
+        });
+        assert_eq!(admitted, 8, "exactly cap reservations win");
+        assert_eq!(g.queued(), 8);
+    }
+}

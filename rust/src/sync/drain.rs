@@ -1,0 +1,122 @@
+//! The master's drain state machine, as an explicit type.
+//!
+//! The master loop used to track "how many jobs are in flight" and "am
+//! I draining" as two loose locals whose interplay decided when the
+//! thread could exit. [`DrainState`] makes that interplay a pure,
+//! deterministic state machine: the loop feeds it events
+//! (`job_dispatched`, `job_settled`, `begin_drain`) and exits exactly
+//! when a transition reports `true`. Pure state means it is unit- and
+//! model-testable in isolation — `tests/model_check.rs` drives it
+//! through every interleaving of a mini master protocol and proves the
+//! drain handshake can never hang (there is always a future transition
+//! that reports exit once drain has begun and jobs keep settling).
+
+/// Tracks in-flight jobs and the drain request; decides loop exit.
+///
+/// Invariant: `can_exit()` ⇔ `draining && active == 0`, and every
+/// transition returns whether that just became true, so callers never
+/// re-derive the exit condition from raw counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DrainState {
+    /// Jobs dispatched and not yet settled (completed/failed/cancelled).
+    active: usize,
+    /// A drain was requested: no new work will arrive; exit when idle.
+    draining: bool,
+}
+
+impl DrainState {
+    /// Fresh state: nothing in flight, not draining.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Jobs currently in flight.
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    /// Whether a drain has been requested.
+    pub fn draining(&self) -> bool {
+        self.draining
+    }
+
+    /// A job entered flight.
+    pub fn job_dispatched(&mut self) {
+        self.active += 1;
+    }
+
+    /// A job settled (completed, failed or cancelled). Returns `true`
+    /// iff the loop may now exit (draining and nothing left in flight).
+    /// Saturates rather than underflows if a settle was double-counted
+    /// — the exit condition stays monotone either way.
+    pub fn job_settled(&mut self) -> bool {
+        self.active = self.active.saturating_sub(1);
+        self.can_exit()
+    }
+
+    /// Drain requested: no further dispatches will arrive. Returns
+    /// `true` iff the loop may exit immediately (nothing in flight).
+    pub fn begin_drain(&mut self) -> bool {
+        self.draining = true;
+        self.can_exit()
+    }
+
+    /// The exit condition: draining with nothing in flight.
+    pub fn can_exit(&self) -> bool {
+        self.draining && self.active == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_requires_drain_and_idle() {
+        let mut d = DrainState::new();
+        assert!(!d.can_exit(), "fresh state must not exit");
+        d.job_dispatched();
+        assert!(!d.begin_drain(), "job still in flight");
+        assert!(d.job_settled(), "last settle under drain exits");
+        assert!(d.can_exit());
+    }
+
+    #[test]
+    fn drain_on_idle_exits_immediately() {
+        let mut d = DrainState::new();
+        assert!(d.begin_drain());
+    }
+
+    #[test]
+    fn settle_without_drain_never_exits() {
+        let mut d = DrainState::new();
+        d.job_dispatched();
+        d.job_dispatched();
+        assert!(!d.job_settled());
+        assert!(!d.job_settled());
+        assert!(!d.can_exit(), "idle but not draining");
+        assert!(d.begin_drain());
+    }
+
+    #[test]
+    fn double_settle_saturates_and_exit_stays_monotone() {
+        let mut d = DrainState::new();
+        d.job_dispatched();
+        assert!(!d.job_settled());
+        // A spurious extra settle must not wrap `active` and un-exit.
+        assert!(!d.job_settled());
+        assert_eq!(d.active(), 0);
+        assert!(d.begin_drain());
+        assert!(d.can_exit());
+    }
+
+    #[test]
+    fn interleaved_dispatch_and_settle_under_drain() {
+        let mut d = DrainState::new();
+        d.job_dispatched();
+        d.job_dispatched();
+        assert!(!d.begin_drain());
+        assert!(!d.job_settled(), "one job still active");
+        assert!(d.job_settled(), "last settle exits");
+    }
+}

@@ -1,0 +1,428 @@
+//! Synchronization facade for the concurrent serving stack.
+//!
+//! Every hand-rolled primitive the coordinator relies on —
+//! [`CompletionSlot`](crate::coordinator::CompletionSlot)'s
+//! mutex+condvar pair, the admission-queue counters
+//! ([`AdmissionGate`]), the master's drain state machine
+//! ([`DrainState`]) — goes through the types in this module instead of
+//! using `std::sync` directly. That buys two things:
+//!
+//! 1. **Poison transparency.** `lock()` / `read()` / `write()` return
+//!    guards directly, recovering the inner value from a poisoned lock
+//!    ([`std::sync::PoisonError::into_inner`]). A panic on one
+//!    coordinator thread must not cascade `.expect("poisoned")` panics
+//!    through the rest of the thread tree: all state guarded by these
+//!    locks is kept consistent at every await-free critical section
+//!    boundary, so observing a poisoned lock is always safe here.
+//! 2. **Model checking.** Under `--features modelcheck` the same types
+//!    compile with instrumentation hooks into [`model`], an in-repo
+//!    loom-style exhaustive interleaving explorer (the offline
+//!    substitute for the `loom` crate — this build has no external
+//!    dependencies). The model-check suite (`tests/model_check.rs`)
+//!    drives `CompletionSlot`, `AdmissionGate` and the drain protocol
+//!    through **every** schedule of small thread counts, proving
+//!    first-write-wins, no lost wakeups, no double-shed and
+//!    drain-never-hangs rather than spot-checking them.
+//!
+//! Outside an active exploration (and always in the default build) the
+//! wrappers are zero-cost passthroughs to `std::sync`.
+//!
+//! Known model limitations (documented, deliberate):
+//! * `RwLock` is a passthrough even under `modelcheck` — no coordinator
+//!   invariant under model test uses reader/writer distinctions.
+//! * `Condvar::wait_timeout` behaves as `wait` during exploration:
+//!   schedules are untimed, so liveness must come from notifies (which
+//!   is exactly what the no-lost-wakeup tests assert).
+//! * The explorer is sequentially consistent; it does not model weak
+//!   memory reorderings (all facade atomics are `SeqCst`).
+
+use std::sync::PoisonError;
+use std::time::Duration;
+
+pub mod admission;
+pub mod drain;
+#[cfg(feature = "modelcheck")]
+pub mod model;
+
+pub use admission::AdmissionGate;
+pub use drain::DrainState;
+
+/// Poison-transparent mutex; under `modelcheck` an instrumented one.
+///
+/// `lock()` returns the guard directly: poisoning is recovered, not
+/// propagated (see the module docs for why that is sound here).
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+    #[cfg(feature = "modelcheck")]
+    id: usize,
+}
+
+impl<T> Mutex<T> {
+    /// Fresh mutex owning `t`.
+    pub fn new(t: T) -> Self {
+        Self {
+            inner: std::sync::Mutex::new(t),
+            #[cfg(feature = "modelcheck")]
+            id: model::next_resource_id(),
+        }
+    }
+
+    /// Acquire, blocking. Recovers from poisoning instead of panicking.
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        #[cfg(feature = "modelcheck")]
+        model::mutex_acquire(self.id);
+        let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        MutexGuard {
+            inner: Some(g),
+            mutex: self,
+        }
+    }
+
+    /// Consume the mutex, returning the inner value (poison-recovered).
+    pub fn into_inner(self) -> T {
+        self.inner
+            .into_inner()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+/// Guard returned by [`Mutex::lock`]. Releases on drop; hand it to
+/// [`Condvar::wait`] to sleep on the condition.
+pub struct MutexGuard<'a, T> {
+    /// `Some` while the real lock is held; taken by `Condvar::wait`
+    /// before re-waiting and by `Drop`.
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    mutex: &'a Mutex<T>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard already released")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard already released")
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for MutexGuard<'_, T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        (**self).fmt(f)
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(g) = self.inner.take() {
+            drop(g);
+            #[cfg(feature = "modelcheck")]
+            model::mutex_release(self.mutex.id);
+        }
+    }
+}
+
+/// Condition variable paired with [`Mutex`]; wait/notify semantics of
+/// [`std::sync::Condvar`], instrumented under `modelcheck`.
+pub struct Condvar {
+    inner: std::sync::Condvar,
+    #[cfg(feature = "modelcheck")]
+    id: usize,
+}
+
+impl Condvar {
+    /// Fresh condition variable.
+    pub fn new() -> Self {
+        Self {
+            inner: std::sync::Condvar::new(),
+            #[cfg(feature = "modelcheck")]
+            id: model::next_resource_id(),
+        }
+    }
+
+    /// Atomically release `guard`'s mutex and sleep until notified;
+    /// returns with the mutex re-acquired. Poisoning is recovered.
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        let mutex = guard.mutex;
+        let inner = guard.inner.take().expect("guard already released");
+        std::mem::forget(guard);
+        #[cfg(feature = "modelcheck")]
+        if model::active() {
+            // Exploration path: the real guard is dropped here, the
+            // atomic release-and-enqueue happens inside the scheduler
+            // (no other thread runs in between — this thread still
+            // holds the schedule grant), and the re-acquired real lock
+            // is uncontended by construction.
+            drop(inner);
+            model::condvar_wait(self.id, mutex.id);
+            let g = mutex.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            return MutexGuard {
+                inner: Some(g),
+                mutex,
+            };
+        }
+        let g = self.inner.wait(inner).unwrap_or_else(PoisonError::into_inner);
+        MutexGuard {
+            inner: Some(g),
+            mutex,
+        }
+    }
+
+    /// [`Condvar::wait`] bounded by `timeout`; the `bool` is `true` if
+    /// the wait timed out. Under exploration this never times out —
+    /// schedules are untimed, so termination must come from notifies.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        timeout: Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let mutex = guard.mutex;
+        let inner = guard.inner.take().expect("guard already released");
+        std::mem::forget(guard);
+        #[cfg(feature = "modelcheck")]
+        if model::active() {
+            drop(inner);
+            let _ = timeout;
+            model::condvar_wait(self.id, mutex.id);
+            let g = mutex.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            return (
+                MutexGuard {
+                    inner: Some(g),
+                    mutex,
+                },
+                false,
+            );
+        }
+        let (g, res) = self
+            .inner
+            .wait_timeout(inner, timeout)
+            .unwrap_or_else(PoisonError::into_inner);
+        (
+            MutexGuard {
+                inner: Some(g),
+                mutex,
+            },
+            res.timed_out(),
+        )
+    }
+
+    /// Wake every thread waiting on this condition.
+    pub fn notify_all(&self) {
+        #[cfg(feature = "modelcheck")]
+        if model::active() {
+            model::condvar_notify_all(self.id);
+            return;
+        }
+        self.inner.notify_all();
+    }
+
+    /// Wake one waiting thread (under exploration: the lowest-id
+    /// waiter — a documented determinization of std's "any waiter").
+    pub fn notify_one(&self) {
+        #[cfg(feature = "modelcheck")]
+        if model::active() {
+            model::condvar_notify_one(self.id);
+            return;
+        }
+        self.inner.notify_one();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+/// Poison-transparent reader-writer lock. A passthrough to
+/// [`std::sync::RwLock`] in every build (see module docs): no model
+/// test exercises reader parallelism, and recovering poison is the
+/// behavior the coordinator needs everywhere it reads shared tables.
+pub struct RwLock<T> {
+    inner: std::sync::RwLock<T>,
+}
+
+impl<T> RwLock<T> {
+    /// Fresh lock owning `t`.
+    pub fn new(t: T) -> Self {
+        Self {
+            inner: std::sync::RwLock::new(t),
+        }
+    }
+
+    /// Acquire shared, blocking; poison-recovered.
+    pub fn read(&self) -> std::sync::RwLockReadGuard<'_, T> {
+        self.inner.read().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Acquire exclusive, blocking; poison-recovered.
+    pub fn write(&self) -> std::sync::RwLockWriteGuard<'_, T> {
+        self.inner.write().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Consume the lock, returning the inner value (poison-recovered).
+    pub fn into_inner(self) -> T {
+        self.inner
+            .into_inner()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+impl<T: Default> Default for RwLock<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for RwLock<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+/// Sequentially-consistent atomic counter, instrumented under
+/// `modelcheck` (one schedule decision point before every operation).
+/// Used by [`AdmissionGate`]; plain statistics counters keep using
+/// `std::sync::atomic` directly — their races are benign by design and
+/// not worth exploration states.
+pub struct AtomicU64 {
+    inner: std::sync::atomic::AtomicU64,
+}
+
+impl AtomicU64 {
+    /// Fresh counter at `v`.
+    pub fn new(v: u64) -> Self {
+        Self {
+            inner: std::sync::atomic::AtomicU64::new(v),
+        }
+    }
+
+    /// Read the current value.
+    pub fn load(&self) -> u64 {
+        #[cfg(feature = "modelcheck")]
+        model::maybe_yield();
+        self.inner.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// Atomic read-modify-write: retries `f` until the exchange wins
+    /// (the retry loop makes this a single atomic step — the model
+    /// treats it as one operation, which is equivalent). Returns
+    /// `Ok(previous)` when `f` returned `Some`, `Err(current)` when it
+    /// bailed with `None`.
+    pub fn fetch_update<F: FnMut(u64) -> Option<u64>>(&self, f: F) -> Result<u64, u64> {
+        #[cfg(feature = "modelcheck")]
+        model::maybe_yield();
+        self.inner.fetch_update(
+            std::sync::atomic::Ordering::SeqCst,
+            std::sync::atomic::Ordering::SeqCst,
+            f,
+        )
+    }
+}
+
+impl std::fmt::Debug for AtomicU64 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mutex_lock_and_into_inner() {
+        let m = Mutex::new(5usize);
+        *m.lock() += 2;
+        assert_eq!(*m.lock(), 7);
+        assert_eq!(m.into_inner(), 7);
+    }
+
+    #[test]
+    fn mutex_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(0usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison the lock");
+        })
+        .join();
+        // A poisoned facade lock hands out the value, not a panic.
+        assert_eq!(*m.lock(), 0);
+    }
+
+    #[test]
+    fn rwlock_read_write_and_poison_recovery() {
+        let l = Arc::new(RwLock::new(1usize));
+        *l.write() = 2;
+        assert_eq!(*l.read(), 2);
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write();
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(*l.read(), 2);
+        match Arc::try_unwrap(l) {
+            Ok(inner) => assert_eq!(inner.into_inner(), 2),
+            Err(_) => panic!("sole owner"),
+        }
+    }
+
+    #[test]
+    fn condvar_wait_and_notify() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let h = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut g = m.lock();
+            while !*g {
+                g = cv.wait(g);
+            }
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        let (m, cv) = &*pair;
+        *m.lock() = true;
+        cv.notify_all();
+        h.join().expect("waiter exits");
+    }
+
+    #[test]
+    fn condvar_wait_timeout_reports_timeout() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = m.lock();
+        let (_g, timed_out) = cv.wait_timeout(g, Duration::from_millis(5));
+        assert!(timed_out);
+    }
+
+    #[test]
+    fn atomic_fetch_update_bounded() {
+        let a = AtomicU64::new(0);
+        assert_eq!(a.fetch_update(|v| (v < 2).then_some(v + 1)), Ok(0));
+        assert_eq!(a.fetch_update(|v| (v < 2).then_some(v + 1)), Ok(1));
+        assert_eq!(a.fetch_update(|v| (v < 2).then_some(v + 1)), Err(2));
+        assert_eq!(a.load(), 2);
+    }
+}

@@ -1,0 +1,731 @@
+//! In-repo exhaustive interleaving explorer (loom-style model checker).
+//!
+//! The build environment is fully offline, so instead of the `loom`
+//! crate this module implements the same idea from scratch: run a
+//! small concurrent test body many times, once per **schedule** — a
+//! distinct interleaving of the threads' synchronization operations —
+//! until every schedule has been tried. Real OS threads execute the
+//! body, but a controller (the [`explore`] caller) grants exactly one
+//! thread the right to run at any moment; threads hand the grant back
+//! at every *yield point* (mutex acquire, condvar wait/notify, atomic
+//! op, spawn, join). At each step where more than one thread is
+//! runnable, the controller records a decision; depth-first search
+//! over those decisions with deterministic replay enumerates the full
+//! schedule space.
+//!
+//! What this checks, and how:
+//! * **Safety invariants** — assertions inside the body run under
+//!   every schedule; any failing interleaving is reported with the
+//!   decision trace that reproduces it.
+//! * **Liveness (no lost wakeups, drain-never-hangs)** — a schedule in
+//!   which every unfinished thread is blocked is a deadlock; the
+//!   controller detects it immediately (no timeouts involved) and
+//!   reports which thread is blocked on what.
+//!
+//! Model granularity (documented simplifications):
+//! * Sequentially consistent: no weak-memory reordering is modeled.
+//!   The facade's atomics are `SeqCst`, so the model matches the code.
+//! * `notify_one` wakes the lowest-id waiter instead of branching the
+//!   schedule on the choice of waiter. The coordinator only uses
+//!   `notify_all`.
+//! * Timeouts never fire during exploration (see
+//!   [`super::Condvar::wait_timeout`]).
+//!
+//! The explorer refuses to silently truncate: if the schedule space
+//! exceeds the caller's `max_schedules` bound it panics, so a test
+//! that passes really did run exhaustively.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, Once, PoisonError};
+
+/// Global resource-id allocator for facade mutexes/condvars. Ids only
+/// need uniqueness; per-schedule determinism follows from the
+/// single-runner discipline (objects are created in schedule order).
+static NEXT_RESOURCE_ID: AtomicUsize = AtomicUsize::new(0);
+
+pub(crate) fn next_resource_id() -> usize {
+    NEXT_RESOURCE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Sentinel panic payload used to unwind suspended threads when a
+/// schedule aborts (assertion failure or deadlock elsewhere). Filtered
+/// by the quiet panic hook and by [`finish`].
+struct Cancelled;
+
+fn cancel_unwind() -> ! {
+    std::panic::panic_any(Cancelled)
+}
+
+/// What a model thread is blocked on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum BlockOn {
+    /// Waiting to acquire facade mutex `#id`.
+    Mutex(usize),
+    /// Waiting on facade condvar `#id`.
+    Condvar(usize),
+    /// Waiting for thread `tid` to finish.
+    Join(usize),
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum TState {
+    Runnable,
+    Blocked(BlockOn),
+    Finished,
+}
+
+struct Shared {
+    /// Per-thread scheduler state, indexed by tid.
+    states: Vec<TState>,
+    /// The thread currently holding the run grant, if any.
+    running: Option<usize>,
+    /// Facade-mutex ownership: resource id → owning tid.
+    owners: HashMap<usize, usize>,
+    /// Set when the schedule is being torn down early.
+    abort: bool,
+    /// First non-sentinel panic message observed this schedule.
+    panic_msg: Option<String>,
+}
+
+/// One schedule's coordination state, shared by the controller and
+/// every model thread of that schedule iteration.
+struct Scheduler {
+    shared: StdMutex<Shared>,
+    cv: StdCondvar,
+    handles: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    fn new() -> Self {
+        Self {
+            shared: StdMutex::new(Shared {
+                states: Vec::new(),
+                running: None,
+                owners: HashMap::new(),
+                abort: false,
+                panic_msg: None,
+            }),
+            cv: StdCondvar::new(),
+            handles: StdMutex::new(Vec::new()),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Shared> {
+        self.shared.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Sleep until this thread holds the run grant (or the schedule
+    /// aborts, in which case this unwinds with the cancel sentinel).
+    /// The caller must already have relinquished (`running = None`,
+    /// own state set, controller notified).
+    fn wait_for_grant<'a>(
+        &'a self,
+        mut sh: std::sync::MutexGuard<'a, Shared>,
+        me: usize,
+    ) -> std::sync::MutexGuard<'a, Shared> {
+        loop {
+            if sh.abort {
+                drop(sh);
+                cancel_unwind();
+            }
+            if sh.running == Some(me) {
+                return sh;
+            }
+            sh = self.cv.wait(sh).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Relinquish the grant, let the controller pick the next runner,
+    /// and return once this thread is granted again. This is the basic
+    /// yield point every instrumented operation goes through.
+    fn yield_now(&self, me: usize) {
+        let mut sh = self.lock();
+        if sh.abort {
+            drop(sh);
+            cancel_unwind();
+        }
+        sh.states[me] = TState::Runnable;
+        sh.running = None;
+        self.cv.notify_all();
+        let sh = self.wait_for_grant(sh, me);
+        drop(sh);
+    }
+
+    /// Acquire logical ownership of mutex `res`, blocking (in model
+    /// time) while another thread owns it. No leading yield — callers
+    /// that want a pre-acquire decision point do it themselves.
+    fn acquire_no_yield(&self, me: usize, res: usize) {
+        loop {
+            let mut sh = self.lock();
+            if sh.abort {
+                drop(sh);
+                cancel_unwind();
+            }
+            if let std::collections::hash_map::Entry::Vacant(e) = sh.owners.entry(res) {
+                e.insert(me);
+                return;
+            }
+            sh.states[me] = TState::Blocked(BlockOn::Mutex(res));
+            sh.running = None;
+            self.cv.notify_all();
+            let sh = self.wait_for_grant(sh, me);
+            drop(sh);
+            // Granted again: some owner released. Retry the acquire —
+            // another thread may have been granted first and taken it.
+        }
+    }
+
+    /// Release logical ownership of `res` and make its waiters
+    /// runnable. Not a yield point (the next operation of the caller
+    /// yields, and the woken waiters create the decision); must also
+    /// be safe to call mid-unwind, so it never blocks or panics.
+    fn release(&self, me: usize, res: usize) {
+        let mut sh = self.lock();
+        let owner = sh.owners.remove(&res);
+        debug_assert!(
+            owner == Some(me) || sh.abort,
+            "release of mutex #{res} by non-owner t{me} (owner {owner:?})"
+        );
+        wake_mutex_waiters(&mut sh, res);
+        self.cv.notify_all();
+    }
+
+    /// Atomically release `mutex_id` and enqueue on condvar `cv_id`;
+    /// once notified and granted, re-acquire the mutex.
+    fn cond_wait(&self, me: usize, cv_id: usize, mutex_id: usize) {
+        {
+            let mut sh = self.lock();
+            if sh.abort {
+                drop(sh);
+                cancel_unwind();
+            }
+            // The release and the enqueue happen in one critical
+            // section with no other thread running: this is the atomic
+            // release-and-wait a real condvar guarantees.
+            sh.owners.remove(&mutex_id);
+            wake_mutex_waiters(&mut sh, mutex_id);
+            sh.states[me] = TState::Blocked(BlockOn::Condvar(cv_id));
+            sh.running = None;
+            self.cv.notify_all();
+            let sh = self.wait_for_grant(sh, me);
+            drop(sh);
+        }
+        self.acquire_no_yield(me, mutex_id);
+    }
+
+    /// Make every waiter of condvar `cv_id` runnable.
+    fn cond_notify(&self, me: usize, cv_id: usize, all: bool) {
+        // Decision point before the notify: it may race with waits.
+        self.yield_now(me);
+        let mut sh = self.lock();
+        if sh.abort {
+            drop(sh);
+            cancel_unwind();
+        }
+        for st in sh.states.iter_mut() {
+            if *st == TState::Blocked(BlockOn::Condvar(cv_id)) {
+                *st = TState::Runnable;
+                if !all {
+                    // Lowest-tid waiter: deterministic stand-in for
+                    // std's "any one waiter" (see module docs).
+                    break;
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Wake every thread blocked acquiring mutex `res`. They re-contend
+/// when granted; losers block again.
+fn wake_mutex_waiters(sh: &mut Shared, res: usize) {
+    for st in sh.states.iter_mut() {
+        if *st == TState::Blocked(BlockOn::Mutex(res)) {
+            *st = TState::Runnable;
+        }
+    }
+}
+
+/// Per-thread context: which schedule this thread belongs to.
+struct Ctx {
+    sched: Arc<Scheduler>,
+    tid: usize,
+}
+
+thread_local! {
+    static CTX: std::cell::RefCell<Option<Ctx>> = const { std::cell::RefCell::new(None) };
+}
+
+fn ctx() -> Option<(Arc<Scheduler>, usize)> {
+    CTX.with(|c| c.borrow().as_ref().map(|x| (Arc::clone(&x.sched), x.tid)))
+}
+
+/// True when the calling thread is executing under an active
+/// exploration (the facade branches on this).
+pub fn active() -> bool {
+    CTX.with(|c| c.borrow().is_some())
+}
+
+/// Facade hook: decision point before an atomic operation.
+pub(crate) fn maybe_yield() {
+    if let Some((sched, me)) = ctx() {
+        sched.yield_now(me);
+    }
+}
+
+/// Facade hook: logical mutex acquire (with a pre-acquire decision
+/// point). No-op outside exploration.
+pub(crate) fn mutex_acquire(id: usize) {
+    if let Some((sched, me)) = ctx() {
+        sched.yield_now(me);
+        sched.acquire_no_yield(me, id);
+    }
+}
+
+/// Facade hook: logical mutex release. No-op outside exploration.
+pub(crate) fn mutex_release(id: usize) {
+    if let Some((sched, me)) = ctx() {
+        sched.release(me, id);
+    }
+}
+
+/// Facade hook: condvar wait choreography. The caller (the facade)
+/// must have dropped the real guard already and re-locks after.
+pub(crate) fn condvar_wait(cv_id: usize, mutex_id: usize) {
+    if let Some((sched, me)) = ctx() {
+        sched.cond_wait(me, cv_id, mutex_id);
+    }
+}
+
+/// Facade hook: wake all condvar waiters.
+pub(crate) fn condvar_notify_all(cv_id: usize) {
+    if let Some((sched, me)) = ctx() {
+        sched.cond_notify(me, cv_id, true);
+    }
+}
+
+/// Facade hook: wake one condvar waiter.
+pub(crate) fn condvar_notify_one(cv_id: usize) {
+    if let Some((sched, me)) = ctx() {
+        sched.cond_notify(me, cv_id, false);
+    }
+}
+
+/// Handle to a thread spawned with [`spawn`] inside a model body.
+pub struct JoinHandle {
+    sched: Arc<Scheduler>,
+    tid: usize,
+}
+
+impl JoinHandle {
+    /// Wait (in model time) for the thread to finish. Panics in the
+    /// target thread abort the whole schedule, so this returns `()`.
+    pub fn join(self) {
+        let (_, me) = ctx().expect("JoinHandle::join outside explore()");
+        let sched = &self.sched;
+        sched.yield_now(me);
+        loop {
+            let mut sh = sched.lock();
+            if sh.abort {
+                drop(sh);
+                cancel_unwind();
+            }
+            if sh.states[self.tid] == TState::Finished {
+                return;
+            }
+            sh.states[me] = TState::Blocked(BlockOn::Join(self.tid));
+            sh.running = None;
+            sched.cv.notify_all();
+            let sh = sched.wait_for_grant(sh, me);
+            drop(sh);
+        }
+    }
+}
+
+/// Spawn a thread inside a model body. Must be called from within
+/// [`explore`]'s body (directly or transitively).
+pub fn spawn<F: FnOnce() + Send + 'static>(f: F) -> JoinHandle {
+    let (sched, me) = ctx().expect("model::spawn outside explore()");
+    let tid = {
+        let mut sh = sched.lock();
+        sh.states.push(TState::Runnable);
+        sh.states.len() - 1
+    };
+    let s2 = Arc::clone(&sched);
+    let real = std::thread::Builder::new()
+        .name(format!("model-t{tid}"))
+        .spawn(move || thread_main(s2, tid, f))
+        .expect("failed to spawn model thread");
+    sched
+        .handles
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .push(real);
+    // Decision point: the child may run before the spawner continues.
+    sched.yield_now(me);
+    JoinHandle { sched, tid }
+}
+
+/// Entry wrapper every model thread runs: install the context, wait
+/// for the first grant, run the body, record the outcome.
+fn thread_main<F: FnOnce()>(sched: Arc<Scheduler>, tid: usize, f: F) {
+    CTX.with(|c| {
+        *c.borrow_mut() = Some(Ctx {
+            sched: Arc::clone(&sched),
+            tid,
+        });
+    });
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        {
+            let sh = sched.lock();
+            let sh = sched.wait_for_grant(sh, tid);
+            drop(sh);
+        }
+        f();
+    }));
+    finish(&sched, tid, result);
+    CTX.with(|c| *c.borrow_mut() = None);
+}
+
+/// Mark `tid` finished, wake its joiners, record a real panic (the
+/// cancel sentinel is teardown, not failure) and hand the grant back.
+fn finish(sched: &Scheduler, tid: usize, result: std::thread::Result<()>) {
+    let mut sh = sched.lock();
+    sh.states[tid] = TState::Finished;
+    for st in sh.states.iter_mut() {
+        if *st == TState::Blocked(BlockOn::Join(tid)) {
+            *st = TState::Runnable;
+        }
+    }
+    if let Err(payload) = result {
+        if !payload.is::<Cancelled>() {
+            if sh.panic_msg.is_none() {
+                sh.panic_msg = Some(payload_message(payload.as_ref()));
+            }
+            sh.abort = true;
+        }
+    }
+    if sh.running == Some(tid) {
+        sh.running = None;
+    }
+    sched.cv.notify_all();
+}
+
+fn payload_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic payload>".to_string())
+}
+
+/// Outcome of running one schedule to completion (or failure).
+enum Outcome {
+    /// All threads finished; the decision trace taken.
+    Complete(Vec<(usize, usize)>),
+    /// A thread panicked; message plus the reproducing choice trace.
+    Panic(String, Vec<usize>),
+    /// Every unfinished thread was blocked; description + trace.
+    Deadlock(String, Vec<usize>),
+}
+
+/// The controller: grant threads one at a time, record decisions,
+/// detect completion / panic / deadlock.
+fn run_schedule(sched: &Scheduler, replay: &[usize]) -> Outcome {
+    let mut choices: Vec<(usize, usize)> = Vec::new();
+    let trace = |cs: &[(usize, usize)]| cs.iter().map(|c| c.1).collect::<Vec<_>>();
+    let mut sh = sched.lock();
+    loop {
+        while sh.running.is_some() {
+            sh = sched.cv.wait(sh).unwrap_or_else(PoisonError::into_inner);
+        }
+        if sh.panic_msg.is_some() {
+            sh.abort = true;
+            sched.cv.notify_all();
+            sh = wait_all_finished(sched, sh);
+            let msg = sh.panic_msg.clone().unwrap_or_default();
+            return Outcome::Panic(msg, trace(&choices));
+        }
+        let runnable: Vec<usize> = sh
+            .states
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s == TState::Runnable)
+            .map(|(i, _)| i)
+            .collect();
+        if runnable.is_empty() {
+            if sh.states.iter().all(|s| *s == TState::Finished) {
+                return Outcome::Complete(choices);
+            }
+            let desc = describe_blocked(&sh.states);
+            sh.abort = true;
+            sched.cv.notify_all();
+            sh = wait_all_finished(sched, sh);
+            return Outcome::Deadlock(desc, trace(&choices));
+        }
+        let depth = choices.len();
+        let pick = replay.get(depth).copied().unwrap_or(0);
+        debug_assert!(
+            pick < runnable.len(),
+            "replay divergence at depth {depth}: pick {pick} of {} runnable \
+             (nondeterministic body?)",
+            runnable.len()
+        );
+        let pick = pick.min(runnable.len() - 1);
+        choices.push((runnable.len(), pick));
+        sh.running = Some(runnable[pick]);
+        sched.cv.notify_all();
+    }
+}
+
+fn wait_all_finished<'a>(
+    sched: &'a Scheduler,
+    mut sh: std::sync::MutexGuard<'a, Shared>,
+) -> std::sync::MutexGuard<'a, Shared> {
+    while !sh.states.iter().all(|s| *s == TState::Finished) {
+        sh = sched.cv.wait(sh).unwrap_or_else(PoisonError::into_inner);
+    }
+    sh
+}
+
+fn describe_blocked(states: &[TState]) -> String {
+    states
+        .iter()
+        .enumerate()
+        .map(|(tid, st)| match st {
+            TState::Finished => format!("t{tid}: finished"),
+            TState::Runnable => format!("t{tid}: runnable"),
+            TState::Blocked(BlockOn::Mutex(r)) => format!("t{tid}: blocked on mutex #{r}"),
+            TState::Blocked(BlockOn::Condvar(r)) => {
+                format!("t{tid}: waiting on condvar #{r} (never notified)")
+            }
+            TState::Blocked(BlockOn::Join(t)) => format!("t{tid}: joining t{t}"),
+        })
+        .collect::<Vec<_>>()
+        .join("; ")
+}
+
+/// Next DFS replay prefix after a completed schedule, or `None` when
+/// the space is exhausted: bump the deepest decision that still has an
+/// untried alternative, drop everything below it.
+fn next_replay(choices: &[(usize, usize)]) -> Option<Vec<usize>> {
+    for depth in (0..choices.len()).rev() {
+        let (n, picked) = choices[depth];
+        if picked + 1 < n {
+            let mut prefix: Vec<usize> =
+                choices[..depth].iter().map(|c| c.1).collect();
+            prefix.push(picked + 1);
+            return Some(prefix);
+        }
+    }
+    None
+}
+
+/// Suppress the default "thread panicked" report for the cancel
+/// sentinel — teardown of suspended threads is not a failure. All
+/// other panics keep the previous hook's behavior.
+fn install_quiet_cancel_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<Cancelled>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Run `body` under every schedule of its threads' synchronization
+/// operations; returns the number of schedules explored. Panics —
+/// with the reproducing decision trace — if any schedule fails an
+/// assertion or deadlocks, and panics loudly if the schedule space
+/// exceeds `max_schedules` (never truncates silently).
+///
+/// `body` runs as model thread `t0` and may [`spawn`] further threads.
+/// Use `crate::sync` primitives inside; `std::sync` objects are
+/// invisible to the scheduler.
+pub fn explore<F: Fn() + Send + Sync + 'static>(
+    name: &str,
+    max_schedules: usize,
+    body: F,
+) -> usize {
+    install_quiet_cancel_hook();
+    let body = Arc::new(body);
+    let mut replay: Vec<usize> = Vec::new();
+    let mut schedules = 0usize;
+    loop {
+        schedules += 1;
+        assert!(
+            schedules <= max_schedules,
+            "model '{name}': schedule space exceeds {max_schedules} schedules; \
+             shrink the test or raise the bound (exploration must stay exhaustive)"
+        );
+        let sched = Arc::new(Scheduler::new());
+        sched.lock().states.push(TState::Runnable); // tid 0: the body
+        let b = Arc::clone(&body);
+        let s2 = Arc::clone(&sched);
+        let root = std::thread::Builder::new()
+            .name("model-t0".to_string())
+            .spawn(move || thread_main(s2, 0, move || b()))
+            .expect("failed to spawn model root thread");
+        sched
+            .handles
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(root);
+        let outcome = run_schedule(&sched, &replay);
+        for h in sched
+            .handles
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .drain(..)
+        {
+            let _ = h.join();
+        }
+        match outcome {
+            Outcome::Complete(choices) => match next_replay(&choices) {
+                Some(next) => replay = next,
+                None => return schedules,
+            },
+            Outcome::Panic(msg, trace) => panic!(
+                "model '{name}': schedule {schedules} failed \
+                 (decision trace {trace:?}): {msg}"
+            ),
+            Outcome::Deadlock(desc, trace) => panic!(
+                "model '{name}': deadlock in schedule {schedules} \
+                 (decision trace {trace:?}): {desc}"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::{Condvar, Mutex};
+
+    #[test]
+    fn explores_both_orders_of_two_threads() {
+        // Two threads append their id under a facade mutex; across the
+        // exploration both orders must be observed.
+        let seen: Arc<StdMutex<std::collections::HashSet<Vec<u8>>>> =
+            Arc::new(StdMutex::new(std::collections::HashSet::new()));
+        let seen2 = Arc::clone(&seen);
+        explore("two orders", 1_000, move || {
+            let log = Arc::new(Mutex::new(Vec::<u8>::new()));
+            let l2 = Arc::clone(&log);
+            let t = spawn(move || l2.lock().push(1));
+            log.lock().push(0);
+            t.join();
+            let order = log.lock().clone();
+            seen2.lock().expect("collector").insert(order);
+        });
+        let seen = seen.lock().expect("collector");
+        assert!(seen.contains(&vec![0, 1]), "order 0,1 explored");
+        assert!(seen.contains(&vec![1, 0]), "order 1,0 explored");
+    }
+
+    #[test]
+    fn assertion_failures_report_a_trace() {
+        let r = std::panic::catch_unwind(|| {
+            explore("seeded failure", 1_000, || {
+                let flag = Arc::new(Mutex::new(false));
+                let f2 = Arc::clone(&flag);
+                let t = spawn(move || *f2.lock() = true);
+                // Bug under test: asserts before joining the writer —
+                // fails in schedules where the writer runs late.
+                assert!(*flag.lock(), "writer must have run (it may not have)");
+                t.join();
+            });
+        });
+        let msg = payload_message(r.expect_err("some schedule fails").as_ref());
+        assert!(msg.contains("decision trace"), "got: {msg}");
+    }
+
+    #[test]
+    fn deadlock_is_detected_and_described() {
+        let r = std::panic::catch_unwind(|| {
+            explore("abba deadlock", 10_000, || {
+                let a = Arc::new(Mutex::new(()));
+                let b = Arc::new(Mutex::new(()));
+                let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+                let t = spawn(move || {
+                    let _gb = b2.lock();
+                    let _ga = a2.lock();
+                });
+                let _ga = a.lock();
+                let _gb = b.lock();
+                drop((_ga, _gb));
+                t.join();
+            });
+        });
+        let msg = payload_message(r.expect_err("ABBA must deadlock").as_ref());
+        assert!(msg.contains("deadlock"), "got: {msg}");
+        assert!(msg.contains("blocked on mutex"), "got: {msg}");
+    }
+
+    #[test]
+    fn lost_wakeup_bug_is_caught_as_deadlock() {
+        // Buggy protocol: the waiter sleeps without re-checking the
+        // flag under the lock, so a notify that lands before the wait
+        // is lost and the waiter hangs. The explorer must find the
+        // schedule that exposes it.
+        let r = std::panic::catch_unwind(|| {
+            explore("lost wakeup", 10_000, || {
+                let pair = Arc::new((Mutex::new(false), Condvar::new()));
+                let p2 = Arc::clone(&pair);
+                let t = spawn(move || {
+                    let (m, cv) = &*p2;
+                    *m.lock() = true;
+                    cv.notify_all();
+                });
+                let (m, cv) = &*pair;
+                let g = m.lock();
+                // BUG: no `while !*g` re-check before waiting.
+                let _g = cv.wait(g);
+                t.join();
+            });
+        });
+        let msg = payload_message(r.expect_err("lost wakeup must hang").as_ref());
+        assert!(msg.contains("never notified"), "got: {msg}");
+    }
+
+    #[test]
+    fn correct_condvar_protocol_passes_exhaustively() {
+        explore("correct handoff", 10_000, || {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = Arc::clone(&pair);
+            let t = spawn(move || {
+                let (m, cv) = &*p2;
+                *m.lock() = true;
+                cv.notify_all();
+            });
+            let (m, cv) = &*pair;
+            let mut g = m.lock();
+            while !*g {
+                g = cv.wait(g);
+            }
+            drop(g);
+            t.join();
+        });
+    }
+
+    #[test]
+    fn schedule_count_is_stable_and_exhaustive() {
+        let body = || {
+            let m = Arc::new(Mutex::new(0u32));
+            let m2 = Arc::clone(&m);
+            let t = spawn(move || *m2.lock() += 1);
+            *m.lock() += 1;
+            t.join();
+            assert_eq!(*m.lock(), 2);
+        };
+        let n1 = explore("count a", 10_000, body);
+        let n2 = explore("count b", 10_000, body);
+        assert_eq!(n1, n2, "replay must be deterministic");
+        assert!(n1 > 1, "two racing increments have multiple schedules");
+    }
+}

@@ -1,0 +1,213 @@
+//! Exhaustive interleaving tests for the serving stack's
+//! synchronization core, driven by the in-repo loom-style explorer
+//! (`hiercode::sync::model`). Run with:
+//!
+//! ```text
+//! cargo test --features modelcheck --test model_check
+//! ```
+//!
+//! Every test runs its body under **all** schedules of the
+//! participating threads' synchronization operations; `explore` panics
+//! with a reproducing decision trace on any assertion failure or
+//! deadlock, and panics loudly (never truncates) if the schedule space
+//! exceeds the stated bound.
+
+#![cfg(feature = "modelcheck")]
+
+use hiercode::coordinator::messages::{CompletionSlot, JobError};
+use hiercode::sync::model::{explore, spawn};
+use hiercode::sync::{AdmissionGate, Condvar, DrainState, Mutex};
+use std::collections::{BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::sync::Mutex as StdMutex;
+use std::time::Duration;
+
+/// First-write-wins: two completers race to deliver different results;
+/// exactly one `complete` reports the win, the waiter observes exactly
+/// the winner's value, and across the exploration both racers win at
+/// least once (so the schedule space really covers both orders).
+#[test]
+fn completion_slot_first_write_wins() {
+    let winners: Arc<StdMutex<BTreeSet<u64>>> = Arc::new(StdMutex::new(BTreeSet::new()));
+    let collect = Arc::clone(&winners);
+    let schedules = explore("slot-first-write-wins", 200_000, move || {
+        let slot = Arc::new(CompletionSlot::new());
+        let wins = Arc::new(AtomicUsize::new(0));
+        let (s1, w1) = (Arc::clone(&slot), Arc::clone(&wins));
+        let t1 = spawn(move || {
+            if s1.complete(Ok(vec![1.0])) {
+                w1.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        let (s2, w2) = (Arc::clone(&slot), Arc::clone(&wins));
+        let t2 = spawn(move || {
+            if s2.complete(Ok(vec![2.0])) {
+                w2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        let got = slot.wait().expect("one racing Ok always lands");
+        t1.join();
+        t2.join();
+        assert_eq!(wins.load(Ordering::SeqCst), 1, "exactly one write wins");
+        assert!(got == [1.0] || got == [2.0], "winner value intact: {got:?}");
+        collect.lock().expect("collector").insert(got[0] as u64);
+    });
+    let winners = winners.lock().expect("collector");
+    assert!(
+        winners.contains(&1) && winners.contains(&2),
+        "both racers must win somewhere in {schedules} schedules: {winners:?}"
+    );
+}
+
+/// No lost wakeups: the waiter blocks in `wait_timeout` (untimed under
+/// exploration — see the facade docs), so the *only* thing that can
+/// wake it is the completer's notify. A schedule where that wakeup is
+/// lost deadlocks, and `explore` reports it with a decision trace.
+#[test]
+fn completion_slot_wakeups_are_never_lost() {
+    let schedules = explore("slot-no-lost-wakeup", 200_000, || {
+        let slot = Arc::new(CompletionSlot::new());
+        let s1 = Arc::clone(&slot);
+        let t = spawn(move || {
+            s1.complete(Err(JobError::Shutdown));
+        });
+        let got = slot.wait_timeout(Duration::from_secs(60));
+        assert_eq!(
+            got,
+            Some(Err(JobError::Shutdown)),
+            "untimed wait ends only via the completer's notify"
+        );
+        t.join();
+    });
+    assert!(schedules > 1, "the race must have multiple schedules");
+}
+
+/// No double-shed: a deadline shed racing another terminal write can
+/// be *counted* at most once, because only the winning `complete`
+/// returns `true` — the coordinator keys its shed counters on exactly
+/// that return value.
+#[test]
+fn deadline_shed_is_never_counted_twice() {
+    explore("slot-no-double-shed", 200_000, || {
+        let slot = Arc::new(CompletionSlot::new());
+        let sheds = Arc::new(AtomicUsize::new(0));
+        let (s1, c1) = (Arc::clone(&slot), Arc::clone(&sheds));
+        let t1 = spawn(move || {
+            if s1.complete(Err(JobError::Deadline)) {
+                c1.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        let (s2, c2) = (Arc::clone(&slot), Arc::clone(&sheds));
+        let t2 = spawn(move || {
+            if s2.complete(Err(JobError::Deadline)) {
+                c2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        t1.join();
+        t2.join();
+        assert_eq!(
+            sheds.load(Ordering::SeqCst),
+            1,
+            "a request is shed (and counted) at most once"
+        );
+        assert_eq!(slot.wait(), Err(JobError::Deadline));
+    });
+}
+
+/// Admission cap under racing reserves: with `cap = 1`, two concurrent
+/// `try_reserve` calls admit exactly one request in every schedule —
+/// the bounded increment is a single atomic step, so there is no
+/// check-then-act window to interleave into.
+#[test]
+fn admission_gate_cap_holds_under_racing_reserves() {
+    explore("admission-cap-race", 200_000, || {
+        let gate = Arc::new(AdmissionGate::new(1));
+        let admitted = Arc::new(AtomicUsize::new(0));
+        let (g1, a1) = (Arc::clone(&gate), Arc::clone(&admitted));
+        let t1 = spawn(move || {
+            if g1.try_reserve() {
+                a1.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        let (g2, a2) = (Arc::clone(&gate), Arc::clone(&admitted));
+        let t2 = spawn(move || {
+            if g2.try_reserve() {
+                a2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        t1.join();
+        t2.join();
+        assert_eq!(
+            admitted.load(Ordering::SeqCst),
+            1,
+            "cap 1 admits exactly one of two racers"
+        );
+        assert_eq!(gate.queued(), 1);
+        gate.release();
+        assert_eq!(gate.queued(), 0, "release reopens the slot");
+    });
+}
+
+/// One event of the mini master protocol in [`drain_never_hangs`].
+enum Ev {
+    Dispatch,
+    Settle,
+    Drain,
+}
+
+/// Drain-never-hangs: a miniature master loop (event queue + condvar +
+/// [`DrainState`]) must terminate under **every** interleaving of a
+/// worker's dispatch/settle stream with the shutdown path's drain
+/// request — including the reordering where the drain request arrives
+/// before the dispatch. A schedule where the master waits forever is a
+/// deadlock, which `explore` reports with its decision trace.
+#[test]
+fn drain_never_hangs() {
+    let schedules = explore("drain-never-hangs", 500_000, || {
+        let q: Arc<(Mutex<VecDeque<Ev>>, Condvar)> =
+            Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+        let master = {
+            let q = Arc::clone(&q);
+            spawn(move || {
+                let (m, cv) = &*q;
+                let mut drain = DrainState::new();
+                let mut g = m.lock();
+                loop {
+                    match g.pop_front() {
+                        Some(Ev::Dispatch) => drain.job_dispatched(),
+                        Some(Ev::Settle) => {
+                            if drain.job_settled() {
+                                break;
+                            }
+                        }
+                        Some(Ev::Drain) => {
+                            if drain.begin_drain() {
+                                break;
+                            }
+                        }
+                        None => g = cv.wait(g),
+                    }
+                }
+            })
+        };
+        let worker = {
+            let q = Arc::clone(&q);
+            spawn(move || {
+                let (m, cv) = &*q;
+                m.lock().push_back(Ev::Dispatch);
+                cv.notify_all();
+                m.lock().push_back(Ev::Settle);
+                cv.notify_all();
+            })
+        };
+        // The shutdown path (this thread) races its drain request
+        // against the worker's whole dispatch/settle stream.
+        let (m, cv) = &*q;
+        m.lock().push_back(Ev::Drain);
+        cv.notify_all();
+        worker.join();
+        master.join();
+    });
+    assert!(schedules > 1, "the race must have multiple schedules");
+}

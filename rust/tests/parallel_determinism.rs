@@ -147,6 +147,44 @@ fn blocked_solve_matches_columns_and_threads() {
     }
 }
 
+/// Property: [`DecodePool::map`] returns results in input order,
+/// bit-identical to the serial map, for random task counts × thread
+/// counts 1/2/4/8 (seeded; reproduce with `HIERCODE_CHECK_SEED`).
+/// Uneven per-task sizes make the work-stealing counter actually
+/// reorder execution, so the in-order guarantee is doing real work.
+#[test]
+fn decode_pool_map_property_order_and_bits() {
+    use hiercode::util::check::{check, Gen};
+    check("DecodePool::map == serial map, in order", 60, |g: &mut Gen| {
+        let tasks = g.usize_in(0..65);
+        let inputs: Vec<Vec<f64>> = (0..tasks)
+            .map(|_| g.vec_f64(g.usize_in(1..33), -1e3, 1e3))
+            .collect();
+        let work = |v: &[f64]| -> f64 {
+            v.iter()
+                .enumerate()
+                .map(|(i, x)| x * (i as f64 + 1.0).sqrt())
+                .sum()
+        };
+        let serial: Vec<f64> = inputs.iter().map(|v| work(v)).collect();
+        for threads in [1usize, 2, 4, 8] {
+            let pool = DecodePool::new(threads).expect("valid pool width");
+            let items: Vec<(usize, &[f64])> =
+                inputs.iter().map(Vec::as_slice).enumerate().collect();
+            let out = pool.map(items, |(i, v)| (i, work(v)));
+            assert_eq!(out.len(), serial.len(), "threads={threads}: lost tasks");
+            for (i, (j, val)) in out.iter().enumerate() {
+                assert_eq!(i, *j, "threads={threads}: result out of input order");
+                assert_eq!(
+                    val.to_bits(),
+                    serial[i].to_bits(),
+                    "threads={threads}: bits diverge from serial at task {i}"
+                );
+            }
+        }
+    });
+}
+
 /// End-to-end: a live cluster configured with decode_threads ∈ {1, 2, 8}
 /// returns the same (correct) answers — the config field reaches the
 /// master/submaster sessions and never perturbs results.

@@ -299,7 +299,8 @@ fn late_partial_after_tombstone_gc_counts_as_late_delivery() {
         Arc::clone(&metrics),
         Duration::from_secs(5),
         master_rx,
-    );
+    )
+    .expect("spawn master");
     // 8193 reply-less batches leave one Done tombstone each; the
     // 8193rd insert crosses the master's DONE_JOBS_BOUND (8192) and
     // the GC evicts every tombstone.

@@ -1,0 +1,407 @@
+//! Token-level scanner shared by every lint.
+//!
+//! Not a Rust parser: the build is fully offline (no `syn`), so the
+//! lints work on a *stripped* view of each source file — comments and
+//! string/char-literal contents blanked to spaces, line structure
+//! preserved — plus the identifier stream over that view. That is
+//! enough to resolve method names, receivers, brace depth and
+//! `#[cfg(test)]` regions without false matches inside strings or
+//! doc comments.
+
+/// One identifier in the stripped source.
+#[derive(Debug, Clone)]
+pub struct Ident {
+    /// The identifier text.
+    pub text: String,
+    /// Char index of the first char.
+    pub start: usize,
+    /// Char index one past the last char.
+    pub end: usize,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// A stripped file plus the lookup tables every lint needs.
+pub struct Scan {
+    /// The stripped source (char-indexed below).
+    pub chars: Vec<char>,
+    /// 1-based line number of each char.
+    pub line_of: Vec<usize>,
+    /// Brace depth *after* consuming each char.
+    pub depth_after: Vec<usize>,
+    /// All identifiers, in source order.
+    pub idents: Vec<Ident>,
+    /// Per 1-based line: is it inside a `#[cfg(test)]` item?
+    test_line: Vec<bool>,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Blank comments and string/char-literal contents to spaces,
+/// preserving every newline (so line numbers survive) and the literal
+/// delimiters themselves.
+pub fn strip(src: &str) -> Vec<char> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out: Vec<char> = Vec::with_capacity(n);
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        let prev_ident = i > 0 && is_ident_char(b[i - 1]);
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            // Line comment (incl. doc comments).
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            // Block comment, nesting allowed.
+            let mut depth = 0usize;
+            while i < n {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+        } else if !prev_ident && (c == 'r' || c == 'b') && raw_string_at(&b, i).is_some() {
+            // Raw (byte) string: r"..." / r#"..."# / br#"..."#.
+            let (body_start, hashes) = raw_string_at(&b, i).unwrap();
+            for &d in &b[i..body_start] {
+                out.push(d);
+            }
+            i = body_start;
+            // Consume until `"` followed by `hashes` #s.
+            while i < n {
+                let closes = b[i] == '"'
+                    && b[i + 1..].len() >= hashes
+                    && b[i + 1..i + 1 + hashes].iter().all(|&h| h == '#');
+                if closes {
+                    out.push('"');
+                    i += 1;
+                    for _ in 0..hashes {
+                        out.push('#');
+                        i += 1;
+                    }
+                    break;
+                }
+                out.push(blank(b[i]));
+                i += 1;
+            }
+        } else if c == '"' {
+            // Normal string literal.
+            out.push('"');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '"' {
+                    out.push('"');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+        } else if c == '\'' {
+            // Lifetime or char literal. A lifetime is `'` + ident with
+            // no closing quote right after ('a, 'static); a char
+            // literal always closes ('x', '\n').
+            let is_lifetime = i + 2 < n
+                && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                && b[i + 2] != '\'';
+            if is_lifetime {
+                out.push('\'');
+                i += 1;
+            } else {
+                out.push('\'');
+                i += 1;
+                let mut consumed = 0;
+                while i < n && consumed < 12 {
+                    if b[i] == '\\' && i + 1 < n {
+                        out.push(' ');
+                        out.push(' ');
+                        i += 2;
+                        consumed += 2;
+                    } else if b[i] == '\'' {
+                        out.push('\'');
+                        i += 1;
+                        break;
+                    } else {
+                        out.push(blank(b[i]));
+                        i += 1;
+                        consumed += 1;
+                    }
+                }
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// If `b[i..]` starts a raw (byte) string, return (index of the first
+/// body char, number of `#`s).
+fn raw_string_at(b: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while j < b.len() && b[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == '"' {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+impl Scan {
+    /// Strip and index one source file.
+    pub fn new(source: &str) -> Scan {
+        let chars = strip(source);
+        let n = chars.len();
+        let mut line_of = Vec::with_capacity(n);
+        let mut depth_after = Vec::with_capacity(n);
+        let mut line = 1usize;
+        let mut depth = 0usize;
+        for &c in &chars {
+            line_of.push(line);
+            if c == '\n' {
+                line += 1;
+            }
+            match c {
+                '{' => depth += 1,
+                '}' => depth = depth.saturating_sub(1),
+                _ => {}
+            }
+            depth_after.push(depth);
+        }
+        let mut idents = Vec::new();
+        let mut i = 0;
+        while i < n {
+            if is_ident_char(chars[i]) && !chars[i].is_ascii_digit() {
+                let start = i;
+                while i < n && is_ident_char(chars[i]) {
+                    i += 1;
+                }
+                idents.push(Ident {
+                    text: chars[start..i].iter().collect(),
+                    start,
+                    end: i,
+                    line: line_of[start],
+                });
+            } else {
+                i += 1;
+            }
+        }
+        let mut scan = Scan {
+            chars,
+            line_of,
+            depth_after,
+            idents,
+            test_line: vec![false; line + 1],
+        };
+        scan.mark_test_regions();
+        scan
+    }
+
+    /// Is 1-based `line` inside a `#[cfg(test)]` item?
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_line.get(line).copied().unwrap_or(false)
+    }
+
+    /// First non-whitespace char at or after `pos`.
+    pub fn next_nonspace(&self, mut pos: usize) -> Option<(char, usize)> {
+        while pos < self.chars.len() {
+            let c = self.chars[pos];
+            if !c.is_whitespace() {
+                return Some((c, pos));
+            }
+            pos += 1;
+        }
+        None
+    }
+
+    /// First non-whitespace char strictly before `pos`.
+    pub fn prev_nonspace(&self, pos: usize) -> Option<(char, usize)> {
+        let mut p = pos;
+        while p > 0 {
+            p -= 1;
+            let c = self.chars[p];
+            if !c.is_whitespace() {
+                return Some((c, p));
+            }
+        }
+        None
+    }
+
+    /// The identifier whose span ends exactly at `end`.
+    pub fn ident_ending_at(&self, end: usize) -> Option<&Ident> {
+        self.idents
+            .binary_search_by(|id| id.end.cmp(&end))
+            .ok()
+            .map(|i| &self.idents[i])
+    }
+
+    /// The identifier whose span starts exactly at `start`.
+    pub fn ident_starting_at(&self, start: usize) -> Option<&Ident> {
+        self.idents
+            .binary_search_by(|id| id.start.cmp(&start))
+            .ok()
+            .map(|i| &self.idents[i])
+    }
+
+    /// Brace depth just before `pos`.
+    pub fn depth_at(&self, pos: usize) -> usize {
+        if pos == 0 {
+            0
+        } else {
+            self.depth_after[pos - 1]
+        }
+    }
+
+    /// Mark every line covered by a `#[cfg(test)]` braced item.
+    fn mark_test_regions(&mut self) {
+        let mut regions: Vec<(usize, usize)> = Vec::new();
+        for (k, id) in self.idents.iter().enumerate() {
+            if id.text != "cfg" {
+                continue;
+            }
+            // Pattern: `#[cfg(test)]` — `cfg` preceded by `[`, then
+            // `(test)` and `]`. `#[cfg(not(test))]` fails the `test`
+            // ident check and is left alone.
+            let Some(('[', _)) = self.prev_nonspace(id.start) else {
+                continue;
+            };
+            let Some(('(', op)) = self.next_nonspace(id.end) else {
+                continue;
+            };
+            let Some(inner) = self.idents.get(k + 1) else {
+                continue;
+            };
+            if inner.text != "test" || inner.start < op {
+                continue;
+            }
+            let Some((')', cp)) = self.next_nonspace(inner.end) else {
+                continue;
+            };
+            let Some((']', close)) = self.next_nonspace(cp + 1) else {
+                continue;
+            };
+            // The attribute's item: first `{` before any `;` opens the
+            // region (a `;` first means a single-statement item).
+            let mut p = close + 1;
+            let mut open = None;
+            while p < self.chars.len() {
+                match self.chars[p] {
+                    '{' => {
+                        open = Some(p);
+                        break;
+                    }
+                    ';' => break,
+                    _ => p += 1,
+                }
+            }
+            let Some(open) = open else { continue };
+            let target = self.depth_at(open);
+            let mut q = open;
+            while q < self.chars.len() {
+                if self.depth_after[q] == target && self.chars[q] == '}' {
+                    break;
+                }
+                q += 1;
+            }
+            let end = q.min(self.chars.len() - 1);
+            regions.push((self.line_of[open], self.line_of[end]));
+        }
+        for (a, b) in regions {
+            for l in a..=b {
+                if l < self.test_line.len() {
+                    self.test_line[l] = true;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let src = "let x = \"panic!\"; // panic!\n/* panic! */ let y = 'p';\n";
+        let stripped: String = strip(src).iter().collect();
+        assert!(!stripped.contains("panic"));
+        assert_eq!(stripped.matches('\n').count(), 2);
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes_survive() {
+        let src = "fn f<'a>(s: &'a str) -> &'a str { let _r = r#\"unwrap()\"#; s }";
+        let scan = Scan::new(src);
+        let texts: Vec<&str> = scan.idents.iter().map(|i| i.text.as_str()).collect();
+        assert!(texts.contains(&"a"), "lifetime ident kept: {texts:?}");
+        assert!(!texts.contains(&"unwrap"), "raw string stripped: {texts:?}");
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mods() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn live2() {}\n";
+        let scan = Scan::new(src);
+        assert!(!scan.in_test(1));
+        assert!(scan.in_test(3));
+        assert!(scan.in_test(4));
+        assert!(scan.in_test(5));
+        assert!(!scan.in_test(6));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nmod live {\n    fn f() {}\n}\n";
+        let scan = Scan::new(src);
+        assert!(!scan.in_test(3));
+    }
+
+    #[test]
+    fn depth_and_receivers_resolve() {
+        let src = "fn f() { let g = self.state.lock(); }";
+        let scan = Scan::new(src);
+        let lock = scan.idents.iter().find(|i| i.text == "lock").unwrap();
+        let ('.', dot) = scan.prev_nonspace(lock.start).unwrap() else {
+            panic!("expected dot receiver")
+        };
+        let (c, p) = scan.prev_nonspace(dot).unwrap();
+        assert!(is_ident_char(c));
+        assert_eq!(scan.ident_ending_at(p + 1).unwrap().text, "state");
+        assert_eq!(scan.depth_at(lock.start), 1);
+    }
+}

@@ -1,0 +1,86 @@
+//! `determinism`: the simulator and the decode paths must be
+//! replayable — same seed, same bytes.
+//!
+//! `sim/` results feed the paper's figures and the decode paths back
+//! the `parallel decode == serial decode` bit-identity tests, so both
+//! ban ambient nondeterminism: wall clocks (`Instant`, `SystemTime`),
+//! OS-seeded randomness (`thread_rng`, `RandomState`) and unordered
+//! `HashMap`/`HashSet` iteration. Sites that only *report* time (e.g.
+//! decode timing metadata riding on an otherwise deterministic result)
+//! carry allowlist justifications.
+
+use super::{Finding, SourceFile};
+
+/// Deterministic-by-contract module prefixes.
+const SCOPES: &[&str] = &["src/sim/", "src/coding/"];
+
+/// Banned identifiers and why.
+const BANNED: &[(&str, &str)] = &[
+    ("Instant", "wall-clock reads are not replayable"),
+    ("SystemTime", "wall-clock reads are not replayable"),
+    ("HashMap", "iteration order varies across runs; use BTreeMap or index by Vec"),
+    ("HashSet", "iteration order varies across runs; use BTreeSet or a sorted Vec"),
+    ("RandomState", "OS-seeded hasher breaks replayability"),
+    ("thread_rng", "OS-seeded RNG; thread the crate's seeded util::rng::Rng instead"),
+];
+
+/// Scan one file for nondeterminism sources outside test code.
+pub fn lint(file: &SourceFile) -> Vec<Finding> {
+    if !SCOPES.iter().any(|p| file.path.starts_with(p)) {
+        return Vec::new();
+    }
+    let s = &file.scan;
+    let mut out = Vec::new();
+    for id in &s.idents {
+        if s.in_test(id.line) {
+            continue;
+        }
+        if let Some((_, why)) = BANNED.iter().find(|(t, _)| *t == id.text) {
+            out.push(Finding {
+                lint: "determinism",
+                file: file.path.clone(),
+                line: id.line,
+                token: id.text.clone(),
+                message: format!(
+                    "`{}` in a deterministic path ({}): {why}",
+                    id.text,
+                    if file.path.starts_with("src/sim/") {
+                        "simulator"
+                    } else {
+                        "decode"
+                    }
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_clocks_and_unordered_collections_in_scope() {
+        let f = lint(&SourceFile::new(
+            "src/sim/x.rs",
+            "use std::time::Instant;\nuse std::collections::HashMap;\n",
+        ));
+        let tokens: Vec<&str> = f.iter().map(|x| x.token.as_str()).collect();
+        assert_eq!(tokens, vec!["Instant", "HashMap"]);
+    }
+
+    #[test]
+    fn out_of_scope_and_test_code_ignored() {
+        assert!(lint(&SourceFile::new(
+            "src/coordinator/x.rs",
+            "use std::time::Instant;",
+        ))
+        .is_empty());
+        assert!(lint(&SourceFile::new(
+            "src/coding/x.rs",
+            "#[cfg(test)]\nmod t {\n    use std::collections::HashMap;\n}",
+        ))
+        .is_empty());
+    }
+}

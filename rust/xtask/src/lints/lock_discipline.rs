@@ -1,0 +1,342 @@
+//! `lock_discipline`: extract the lock-acquisition graph and flag
+//! (a) cycles in the acquired-while-holding order and (b) channel
+//! sends / condvar waits performed while a lock guard is live.
+//!
+//! Guard tracking is lexical: a durable guard is a `let`-bound
+//! acquisition (`let g = x.lock();`) that lives until its block closes
+//! or an explicit `drop(g)`; chained temporaries
+//! (`x.lock().take()…`) die at the end of their statement. Locks are
+//! named by their receiver identifier (`self.models.read()` →
+//! `models`), so same-named fields on *different* objects (per-group
+//! histograms) can produce self-edges — those carry allowlist
+//! justifications rather than being silently skipped, because a
+//! self-edge is also exactly what a real double-lock looks like.
+
+use super::{Finding, SourceFile};
+use crate::lexer::Scan;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Guard-producing call names (empty-argument method calls only, so
+/// `io::Read::read(&mut buf)` never matches).
+const ACQUIRERS: &[&str] = &["lock", "read", "write"];
+
+/// One acquired-while-holding edge in the global lock graph.
+struct Edge {
+    from: String,
+    to: String,
+    file: String,
+    line: usize,
+}
+
+struct Guard {
+    name: String,
+    lock: String,
+    depth: usize,
+}
+
+/// Name the receiver of the method call whose `.` sits at `dot`.
+fn receiver_name(s: &Scan, dot: usize) -> String {
+    match s.prev_nonspace(dot) {
+        Some((']', mut p)) => {
+            // Indexed receiver `slots[i].lock()`: name the base.
+            let mut brackets = 1;
+            while p > 0 && brackets > 0 {
+                p -= 1;
+                match s.chars[p] {
+                    ']' => brackets += 1,
+                    '[' => brackets -= 1,
+                    _ => {}
+                }
+            }
+            match s.prev_nonspace(p) {
+                Some((c, q)) if c.is_alphanumeric() || c == '_' => s
+                    .ident_ending_at(q + 1)
+                    .map(|i| i.text.clone())
+                    .unwrap_or_else(|| "unknown".to_string()),
+                _ => "unknown".to_string(),
+            }
+        }
+        Some((c, p)) if c.is_alphanumeric() || c == '_' => s
+            .ident_ending_at(p + 1)
+            .map(|i| i.text.clone())
+            .unwrap_or_else(|| "unknown".to_string()),
+        _ => "unknown".to_string(),
+    }
+}
+
+/// If the statement containing the call at `dot` is a `let` binding,
+/// return the bound name.
+fn let_binding_name(s: &Scan, dot: usize) -> Option<String> {
+    // Statement start: last `;`, `{` or `}` before the call.
+    let mut p = dot;
+    while p > 0 {
+        p -= 1;
+        if matches!(s.chars[p], ';' | '{' | '}') {
+            break;
+        }
+    }
+    let mut in_stmt = s
+        .idents
+        .iter()
+        .filter(|i| i.start > p && i.end <= dot)
+        .map(|i| i.text.as_str());
+    if in_stmt.next() != Some("let") {
+        return None;
+    }
+    match in_stmt.next() {
+        Some("mut") => in_stmt.next().map(str::to_string),
+        Some(name) => Some(name.to_string()),
+        None => None,
+    }
+}
+
+fn analyze_file(file: &SourceFile, findings: &mut Vec<Finding>, edges: &mut Vec<Edge>) {
+    let s = &file.scan;
+    let mut guards: Vec<Guard> = Vec::new();
+    for id in &s.idents {
+        if s.in_test(id.line) {
+            guards.clear();
+            continue;
+        }
+        let depth_here = s.depth_at(id.start);
+        guards.retain(|g| g.depth <= depth_here);
+        let dotted = matches!(s.prev_nonspace(id.start), Some(('.', _)));
+        match id.text.as_str() {
+            t if ACQUIRERS.contains(&t) => {
+                let Some(('.', dot)) = s.prev_nonspace(id.start) else {
+                    continue;
+                };
+                let Some(('(', op)) = s.next_nonspace(id.end) else {
+                    continue;
+                };
+                let Some((')', cp)) = s.next_nonspace(op + 1) else {
+                    continue;
+                };
+                let lock = receiver_name(s, dot);
+                for g in &guards {
+                    edges.push(Edge {
+                        from: g.lock.clone(),
+                        to: lock.clone(),
+                        file: file.path.clone(),
+                        line: id.line,
+                    });
+                }
+                // Durable guard: `let g = x.lock();` — the statement
+                // ends right at the call and the result is named.
+                if matches!(s.next_nonspace(cp + 1), Some((';', _))) {
+                    if let Some(name) = let_binding_name(s, dot) {
+                        if name != "_" {
+                            guards.push(Guard {
+                                name,
+                                lock,
+                                depth: depth_here,
+                            });
+                        }
+                    }
+                }
+            }
+            "send" if dotted => {
+                for g in &guards {
+                    findings.push(Finding {
+                        lint: "lock_discipline",
+                        file: file.path.clone(),
+                        line: id.line,
+                        token: format!("send_while_holding:{}", g.lock),
+                        message: format!(
+                            "channel send while holding lock `{}` (guard \
+                             `{}`): a blocking send here can deadlock \
+                             against the receiver; drop the guard first, \
+                             or allowlist why this send cannot block",
+                            g.lock, g.name
+                        ),
+                    });
+                }
+            }
+            "wait" | "wait_timeout" if dotted => {
+                if guards.len() >= 2 {
+                    findings.push(Finding {
+                        lint: "lock_discipline",
+                        file: file.path.clone(),
+                        line: id.line,
+                        token: format!("wait_while_holding:{}", guards[0].lock),
+                        message: format!(
+                            "condvar wait with a second lock held (`{}`): \
+                             the wait releases only its own mutex, so the \
+                             other lock blocks every would-be notifier",
+                            guards[0].lock
+                        ),
+                    });
+                }
+            }
+            "drop" if !dotted => {
+                // `drop(g)`: release the named guard early.
+                if let Some(('(', op)) = s.next_nonspace(id.end) {
+                    if let Some((_, p)) = s.next_nonspace(op + 1) {
+                        if let Some(arg) = s.ident_starting_at(p) {
+                            if matches!(s.next_nonspace(arg.end), Some((')', _))) {
+                                let name = arg.text.clone();
+                                guards.retain(|g| g.name != name);
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Is `to` reachable from `from` in the edge graph?
+fn reaches(adj: &BTreeMap<&str, BTreeSet<&str>>, from: &str, to: &str) -> bool {
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let mut stack = vec![from];
+    while let Some(n) = stack.pop() {
+        let Some(next) = adj.get(n) else { continue };
+        for &m in next {
+            if m == to {
+                return true;
+            }
+            if seen.insert(m) {
+                stack.push(m);
+            }
+        }
+    }
+    false
+}
+
+/// Run the whole-crate pass: per-file guard tracking plus the global
+/// cycle check over the acquisition graph.
+pub fn lint(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut edges = Vec::new();
+    for f in files {
+        analyze_file(f, &mut findings, &mut edges);
+    }
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for e in &edges {
+        adj.entry(&e.from).or_default().insert(&e.to);
+    }
+    let mut reported: BTreeSet<String> = BTreeSet::new();
+    for e in &edges {
+        let cyclic = e.from == e.to || reaches(&adj, &e.to, &e.from);
+        if !cyclic {
+            continue;
+        }
+        let token = format!("cycle:{}->{}", e.from, e.to);
+        if reported.insert(token.clone()) {
+            findings.push(Finding {
+                lint: "lock_discipline",
+                file: e.file.clone(),
+                line: e.line,
+                token,
+                message: format!(
+                    "acquiring `{}` while holding `{}` closes a cycle in \
+                     the lock order — two threads taking the locks in \
+                     opposite orders deadlock; fix the order or allowlist \
+                     why the locks are distinct objects",
+                    e.to, e.from
+                ),
+            });
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(path: &str, src: &str) -> Vec<Finding> {
+        lint(&[SourceFile::new(path, src)])
+    }
+
+    #[test]
+    fn send_while_holding_a_guard_is_flagged_until_dropped() {
+        let f = one(
+            "src/coordinator/x.rs",
+            "fn f(&self) {\n    let g = self.models.read();\n    self.tx.send(1);\n}",
+        );
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].token, "send_while_holding:models");
+        assert_eq!(f[0].line, 3);
+        let ok = one(
+            "src/coordinator/x.rs",
+            "fn f(&self) {\n    let g = self.models.read();\n    drop(g);\n    self.tx.send(1);\n}",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn guard_dies_when_its_block_closes() {
+        let ok = one(
+            "src/coordinator/x.rs",
+            "fn f(&self) {\n    {\n        let g = self.models.read();\n    }\n    self.tx.send(1);\n}",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn chained_temporaries_are_not_durable_guards() {
+        let ok = one(
+            "src/parallel/x.rs",
+            "fn f(&self) {\n    let item = self.slots.lock().take();\n    self.tx.send(item);\n}",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn abba_order_across_files_is_a_cycle() {
+        let f = lint(&[
+            SourceFile::new(
+                "src/a.rs",
+                "fn f(&self) {\n    let a = self.alpha.lock();\n    let b = self.beta.lock();\n}",
+            ),
+            SourceFile::new(
+                "src/b.rs",
+                "fn g(&self) {\n    let b = self.beta.lock();\n    let a = self.alpha.lock();\n}",
+            ),
+        ]);
+        assert!(
+            f.iter().any(|x| x.token.starts_with("cycle:")),
+            "ABBA must be reported: {f:?}"
+        );
+        let ok = lint(&[SourceFile::new(
+            "src/a.rs",
+            "fn f(&self) {\n    let a = self.alpha.lock();\n    let b = self.beta.lock();\n}",
+        )]);
+        assert!(ok.is_empty(), "consistent order is fine: {ok:?}");
+    }
+
+    #[test]
+    fn self_edge_is_reported_as_a_cycle() {
+        let f = one(
+            "src/coordinator/x.rs",
+            "fn f(&self) {\n    let a = self.latency.lock();\n    let b = self.latency.lock();\n}",
+        );
+        assert!(
+            f.iter().any(|x| x.token == "cycle:latency->latency"),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn indexed_receivers_resolve_to_their_base() {
+        let f = one(
+            "src/coordinator/x.rs",
+            "fn f(&self) {\n    let g = self.slots[i].lock();\n    self.tx.send(1);\n}",
+        );
+        assert_eq!(f[0].token, "send_while_holding:slots");
+    }
+
+    #[test]
+    fn wait_with_a_second_lock_held_is_flagged() {
+        let f = one(
+            "src/coordinator/x.rs",
+            "fn f(&self) {\n    let a = self.state.lock();\n    let b = self.aux.lock();\n    let b = self.cv.wait(b);\n}",
+        );
+        assert!(
+            f.iter().any(|x| x.token.starts_with("wait_while_holding:")),
+            "{f:?}"
+        );
+    }
+}

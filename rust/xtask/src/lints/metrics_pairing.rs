@@ -1,0 +1,210 @@
+//! `metrics_pairing`: every gauge `inc` needs a reachable `dec`.
+//!
+//! Counters only ever go up, but a *gauge* (`queue_depth`) measures
+//! live population — an `inc` without a matching `dec` somewhere in
+//! the crate means the gauge drifts upward forever and the
+//! `debug_assert` in `Metrics::dec` (gauge-below-zero) can never catch
+//! the real bug. The same pairing argument applies to admission
+//! slots: a `try_reserve()` with no `release()` site leaks queue
+//! capacity until the model rejects everything.
+
+use super::{Finding, SourceFile};
+use crate::lexer::Scan;
+use std::collections::BTreeMap;
+
+/// Fields of `Metrics` that are gauges (everything else is a
+/// monotonic counter and exempt from pairing).
+const GAUGES: &[&str] = &["queue_depth"];
+
+/// One `Metrics::inc/dec` call site, keyed by the gauge field name.
+struct Site {
+    file: String,
+    line: usize,
+}
+
+/// The field named by the *first argument* of the call whose open
+/// paren sits at `open`: the last identifier before the `,` or `)`
+/// that ends the first argument (`&m.queue_depth` → `queue_depth`).
+fn first_arg_field(s: &Scan, open: usize) -> Option<String> {
+    let mut depth = 1usize;
+    let mut p = open + 1;
+    while p < s.chars.len() && depth > 0 {
+        match s.chars[p] {
+            '(' | '[' => depth += 1,
+            ')' | ']' => depth -= 1,
+            ',' if depth == 1 => break,
+            _ => {}
+        }
+        p += 1;
+    }
+    s.idents
+        .iter()
+        .rev()
+        .find(|i| i.start > open && i.end <= p)
+        .map(|i| i.text.clone())
+}
+
+/// True when the identifier at index `k` is a `Metrics::<name>` path
+/// call (`Metrics` `::` `<name>` `(`).
+fn metrics_helper_call(s: &Scan, k: usize) -> bool {
+    let id = &s.idents[k];
+    let Some((':', c2)) = s.prev_nonspace(id.start) else {
+        return false;
+    };
+    let Some((':', c1)) = s.prev_nonspace(c2) else {
+        return false;
+    };
+    matches!(s.ident_ending_at(c1), Some(i) if i.text == "Metrics")
+}
+
+/// Report every gauge present in `with` but absent from `without`
+/// (an `inc` with no `dec` anywhere, or the converse).
+fn unpaired(
+    out: &mut Vec<Finding>,
+    with: &BTreeMap<String, Vec<Site>>,
+    without: &BTreeMap<String, Vec<Site>>,
+    have: &str,
+    miss: &str,
+) {
+    for (field, sites) in with {
+        if !without.contains_key(field) && !sites.is_empty() {
+            out.push(Finding {
+                lint: "metrics_pairing",
+                file: sites[0].file.clone(),
+                line: sites[0].line,
+                token: field.clone(),
+                message: format!(
+                    "gauge `{field}` has a `Metrics::{have}` site but no \
+                     `Metrics::{miss}` anywhere in the crate — the gauge \
+                     drifts monotonically and stops measuring live \
+                     population"
+                ),
+            });
+        }
+    }
+}
+
+/// Run the whole-crate pass: collect gauge `inc`/`dec` sites and
+/// admission `try_reserve`/`release` sites, then demand each side of
+/// every pair is non-empty.
+pub fn lint(files: &[SourceFile]) -> Vec<Finding> {
+    let mut incs: BTreeMap<String, Vec<Site>> = BTreeMap::new();
+    let mut decs: BTreeMap<String, Vec<Site>> = BTreeMap::new();
+    let mut reserves: Vec<Site> = Vec::new();
+    let mut releases: Vec<Site> = Vec::new();
+    for f in files {
+        let s = &f.scan;
+        for (k, id) in s.idents.iter().enumerate() {
+            if s.in_test(id.line) {
+                continue;
+            }
+            let site = || Site {
+                file: f.path.clone(),
+                line: id.line,
+            };
+            match id.text.as_str() {
+                "inc" | "dec" if metrics_helper_call(s, k) => {
+                    let Some(('(', open)) = s.next_nonspace(id.end) else {
+                        continue;
+                    };
+                    let Some(field) = first_arg_field(s, open) else {
+                        continue;
+                    };
+                    if GAUGES.contains(&field.as_str()) {
+                        let map = if id.text == "inc" { &mut incs } else { &mut decs };
+                        map.entry(field).or_default().push(site());
+                    }
+                }
+                "try_reserve" | "release" => {
+                    let dotted = matches!(s.prev_nonspace(id.start), Some(('.', _)));
+                    let called = matches!(s.next_nonspace(id.end), Some(('(', _)));
+                    if dotted && called {
+                        if id.text == "try_reserve" {
+                            reserves.push(site());
+                        } else {
+                            releases.push(site());
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut out = Vec::new();
+    unpaired(&mut out, &incs, &decs, "inc", "dec");
+    unpaired(&mut out, &decs, &incs, "dec", "inc");
+    if !reserves.is_empty() && releases.is_empty() {
+        out.push(Finding {
+            lint: "metrics_pairing",
+            file: reserves[0].file.clone(),
+            line: reserves[0].line,
+            token: "try_reserve".to_string(),
+            message: "admission `try_reserve()` has no `release()` site \
+                      anywhere in the crate — queue slots leak until the \
+                      model rejects every submission"
+                .to_string(),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inc_only_gauge_is_flagged_and_paired_gauge_is_not() {
+        let f = lint(&[SourceFile::new(
+            "src/coordinator/a.rs",
+            "fn f(m: &Metrics) { Metrics::inc(&m.queue_depth); }",
+        )]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].token, "queue_depth");
+        let ok = lint(&[
+            SourceFile::new(
+                "src/coordinator/a.rs",
+                "fn f(m: &Metrics) { Metrics::inc(&m.queue_depth); }",
+            ),
+            SourceFile::new(
+                "src/coordinator/b.rs",
+                "fn g(m: &Metrics) { Metrics::dec(&m.queue_depth); }",
+            ),
+        ]);
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn counters_and_add_are_exempt() {
+        let ok = lint(&[SourceFile::new(
+            "src/coordinator/a.rs",
+            "fn f(m: &Metrics) { Metrics::inc(&m.requests); \
+             Metrics::add(&m.decode_flops, out.flops); }",
+        )]);
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn reserve_without_release_is_flagged() {
+        let f = lint(&[SourceFile::new(
+            "src/coordinator/a.rs",
+            "fn f(e: &Entry) -> bool { e.admission.try_reserve() }",
+        )]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].token, "try_reserve");
+        let ok = lint(&[SourceFile::new(
+            "src/coordinator/a.rs",
+            "fn f(e: &Entry) -> bool { e.admission.try_reserve() }\n\
+             fn g(e: &Entry) { e.admission.release(); }",
+        )]);
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn non_metrics_inc_calls_do_not_match() {
+        let ok = lint(&[SourceFile::new(
+            "src/coordinator/a.rs",
+            "fn f(c: &Counter) { c.inc(); other::inc(&c.queue_depth); }",
+        )]);
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+}

@@ -1,0 +1,178 @@
+//! The invariant lints behind `cargo xtask analyze`.
+//!
+//! Each lint is a pure function over pre-scanned sources, so the unit
+//! tests and the `--self-test` mode drive them with in-memory strings
+//! — no filesystem, no fixtures. Per-file lints ([`no_panic`],
+//! [`determinism`]) take one file; whole-crate lints
+//! ([`lock_discipline`], [`metrics_pairing`]) take the full set,
+//! because their properties (cycles, inc/dec pairing) span files.
+
+pub mod determinism;
+pub mod lock_discipline;
+pub mod metrics_pairing;
+pub mod no_panic;
+
+use crate::lexer::Scan;
+
+/// One scanned source file. `path` is relative to the crate root with
+/// forward slashes (e.g. `src/coordinator/master.rs`) — the same form
+/// the allowlist uses.
+pub struct SourceFile {
+    /// Crate-relative path.
+    pub path: String,
+    /// The token scan of its contents.
+    pub scan: Scan,
+}
+
+impl SourceFile {
+    /// Scan one source text under `path`.
+    pub fn new(path: &str, source: &str) -> SourceFile {
+        SourceFile {
+            path: path.to_string(),
+            scan: Scan::new(source),
+        }
+    }
+}
+
+/// One lint violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Lint name (`no_panic`, `determinism`, …) — allowlist key 1.
+    pub lint: &'static str,
+    /// Crate-relative file — allowlist key 2.
+    pub file: String,
+    /// 1-based line of the violating token.
+    pub line: usize,
+    /// Violation token (e.g. `unwrap`, `Instant`,
+    /// `send_while_holding:models`) — allowlist key 3.
+    pub token: String,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+/// Run every lint over the file set; findings come back sorted by
+/// (file, line, lint) so the report and allowlist diffs are stable.
+pub fn run_all(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        out.extend(no_panic::lint(f));
+        out.extend(determinism::lint(f));
+    }
+    out.extend(lock_discipline::lint(files));
+    out.extend(metrics_pairing::lint(files));
+    out.sort_by(|a, b| {
+        (&a.file, a.line, a.lint, &a.token).cmp(&(&b.file, b.line, b.lint, &b.token))
+    });
+    out
+}
+
+/// Seed one violation per lint and assert the pass fails; run each
+/// lint's clean fixture and assert it stays quiet. Returns one
+/// (lint, result) row per check — the `--self-test` mode and the unit
+/// tests share this.
+pub fn self_check() -> Vec<(&'static str, Result<(), String>)> {
+    let mut rows = Vec::new();
+    let fire = |name: &'static str, files: &[SourceFile], token: &str| -> Result<(), String> {
+        let found = run_all(files);
+        if found.iter().any(|f| f.lint == name && f.token.contains(token)) {
+            Ok(())
+        } else {
+            Err(format!(
+                "seeded `{token}` violation not caught (found: {:?})",
+                found.iter().map(|f| (f.lint, &f.token)).collect::<Vec<_>>()
+            ))
+        }
+    };
+    let quiet = |name: &'static str, files: &[SourceFile]| -> Result<(), String> {
+        let found: Vec<_> = run_all(files)
+            .into_iter()
+            .filter(|f| f.lint == name)
+            .collect();
+        if found.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("clean fixture flagged: {:?}", found[0]))
+        }
+    };
+
+    let seeded = vec![SourceFile::new(
+        "src/coordinator/seeded.rs",
+        "fn f(x: Option<u32>) -> u32 { x.unwrap() }",
+    )];
+    rows.push(("no_panic", fire("no_panic", &seeded, "unwrap")));
+    let clean = vec![SourceFile::new(
+        "src/coordinator/clean.rs",
+        "fn f(x: Option<u32>) -> Option<u32> { x }\n\
+         #[cfg(test)]\nmod tests { fn t(x: Option<u32>) { x.unwrap(); } }",
+    )];
+    rows.push(("no_panic", quiet("no_panic", &clean)));
+
+    let seeded = vec![SourceFile::new(
+        "src/sim/seeded.rs",
+        "use std::time::Instant;\nfn now() -> Instant { Instant::now() }",
+    )];
+    rows.push(("determinism", fire("determinism", &seeded, "Instant")));
+    let clean = vec![SourceFile::new(
+        "src/sim/clean.rs",
+        "fn tick(t: f64) -> f64 { t + 1.0 }",
+    )];
+    rows.push(("determinism", quiet("determinism", &clean)));
+
+    let seeded = vec![SourceFile::new(
+        "src/coordinator/seeded.rs",
+        "fn f(&self) {\n    let g = self.state.lock();\n    self.tx.send(1);\n    drop(g);\n}",
+    )];
+    rows.push((
+        "lock_discipline",
+        fire("lock_discipline", &seeded, "send_while_holding:state"),
+    ));
+    let clean = vec![SourceFile::new(
+        "src/coordinator/clean.rs",
+        "fn f(&self) {\n    let g = self.state.lock();\n    drop(g);\n    self.tx.send(1);\n}",
+    )];
+    rows.push(("lock_discipline", quiet("lock_discipline", &clean)));
+
+    let seeded = vec![SourceFile::new(
+        "src/coordinator/seeded.rs",
+        "fn f(m: &Metrics) { Metrics::inc(&m.queue_depth); }",
+    )];
+    rows.push((
+        "metrics_pairing",
+        fire("metrics_pairing", &seeded, "queue_depth"),
+    ));
+    let clean = vec![SourceFile::new(
+        "src/coordinator/clean.rs",
+        "fn f(m: &Metrics) { Metrics::inc(&m.queue_depth); }\n\
+         fn g(m: &Metrics) { Metrics::dec(&m.queue_depth); }",
+    )];
+    rows.push(("metrics_pairing", quiet("metrics_pairing", &clean)));
+
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_seeded_violation_fails_and_every_clean_fixture_passes() {
+        for (lint, result) in self_check() {
+            assert!(result.is_ok(), "{lint}: {}", result.unwrap_err());
+        }
+    }
+
+    #[test]
+    fn findings_are_sorted_and_stable() {
+        let files = vec![SourceFile::new(
+            "src/coordinator/a.rs",
+            "fn f(x: Option<u32>) { x.unwrap(); panic!(\"boom\"); }",
+        )];
+        let a = run_all(&files);
+        let b = run_all(&files);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!((x.line, &x.token), (y.line, &y.token));
+        }
+        assert!(a.windows(2).all(|w| w[0].line <= w[1].line));
+    }
+}

@@ -1,0 +1,110 @@
+//! `no_panic`: hot-path modules must not contain `.unwrap()`,
+//! `.expect(…)` or panicking macros outside `#[cfg(test)]` code.
+//!
+//! The coordinator's thread tree, the decoders and the linalg kernels
+//! sit on the request path: a panic there kills a worker/submaster/
+//! master thread and strands every in-flight job behind it. Errors
+//! must propagate as `crate::Result`, or the site must carry an
+//! allowlist justification naming the invariant that makes it
+//! unreachable.
+
+use super::{Finding, SourceFile};
+
+/// Module prefixes on the request hot path.
+const HOT_PATHS: &[&str] = &[
+    "src/coordinator/",
+    "src/coding/",
+    "src/linalg/",
+    "src/parallel/",
+];
+
+/// Panicking macros (checked as `name!`).
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "unimplemented", "todo"];
+
+fn applies(path: &str) -> bool {
+    HOT_PATHS.iter().any(|h| path.starts_with(h))
+}
+
+/// Scan one file for panic-family calls outside test code.
+pub fn lint(file: &SourceFile) -> Vec<Finding> {
+    if !applies(&file.path) {
+        return Vec::new();
+    }
+    let s = &file.scan;
+    let mut out = Vec::new();
+    for id in &s.idents {
+        if s.in_test(id.line) {
+            continue;
+        }
+        let method_call = matches!(s.prev_nonspace(id.start), Some(('.', _)))
+            && matches!(s.next_nonspace(id.end), Some(('(', _)));
+        if (id.text == "unwrap" || id.text == "expect") && method_call {
+            out.push(Finding {
+                lint: "no_panic",
+                file: file.path.clone(),
+                line: id.line,
+                token: id.text.clone(),
+                message: format!(
+                    "`.{}()` on the hot path can panic a coordinator \
+                     thread; propagate a crate::Result or allowlist the \
+                     site with the invariant that makes it unreachable",
+                    id.text
+                ),
+            });
+        }
+        if PANIC_MACROS.contains(&id.text.as_str())
+            && matches!(s.next_nonspace(id.end), Some(('!', _)))
+        {
+            out.push(Finding {
+                lint: "no_panic",
+                file: file.path.clone(),
+                line: id.line,
+                token: id.text.clone(),
+                message: format!(
+                    "`{}!` on the hot path kills its thread and strands \
+                     in-flight jobs; return an error instead",
+                    id.text
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hot(src: &str) -> Vec<Finding> {
+        lint(&SourceFile::new("src/coding/x.rs", src))
+    }
+
+    #[test]
+    fn flags_unwrap_expect_and_panic_macros() {
+        let f = hot("fn f(x: Option<u32>) -> u32 { x.unwrap() }");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].token, "unwrap");
+        assert_eq!(hot("fn f() { g().expect(\"nope\"); }")[0].token, "expect");
+        assert_eq!(hot("fn f() { panic!(\"boom\"); }")[0].token, "panic");
+        assert_eq!(hot("fn f() { unreachable!() }")[0].token, "unreachable");
+    }
+
+    #[test]
+    fn ignores_tests_strings_comments_and_cold_modules() {
+        assert!(hot("#[cfg(test)]\nmod t {\n fn f(x: Option<u32>) { x.unwrap(); }\n}").is_empty());
+        assert!(hot("// x.unwrap()\nfn f() { let s = \"panic!\"; }").is_empty());
+        let cold = lint(&SourceFile::new(
+            "src/sim/x.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }",
+        ));
+        assert!(cold.is_empty(), "sim/ is not a no_panic scope");
+    }
+
+    #[test]
+    fn unwrap_or_variants_do_not_match() {
+        assert!(hot("fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }").is_empty());
+        assert!(hot("fn f(x: Option<u32>) -> u32 { x.unwrap_or_else(|| 0) }").is_empty());
+        // `std::panic::catch_unwind` is a path, not a macro call.
+        assert!(hot("fn f() { let _ = std::panic::catch_unwind(|| 1); }").is_empty());
+    }
+}

@@ -1,0 +1,203 @@
+//! `cargo xtask analyze` — the repo's invariant lints.
+//!
+//! Runs the four passes in [`lints`] over `src/` of the root crate and
+//! reports every finding that does not carry an `analyze.allow` entry.
+//! The allowlist is exact-match on `(lint, file, token)` and every
+//! entry must both justify itself and still be *used* — a fixed
+//! violation whose entry lingers is an error, so the list can only
+//! shrink when the code improves.
+//!
+//! Exit codes: 0 clean, 1 findings (or stale allowlist entries, or a
+//! failed self-test), 2 usage / IO errors.
+
+mod lexer;
+mod lints;
+
+use lints::SourceFile;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// One parsed `analyze.allow` entry:
+/// `lint | file | token | justification`.
+struct AllowEntry {
+    lint: String,
+    file: String,
+    token: String,
+    source_line: usize,
+}
+
+fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut entries = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('|').map(str::trim).collect();
+        let &[lint, file, token, justification] = fields.as_slice() else {
+            return Err(format!(
+                "analyze.allow:{}: expected 4 `|`-separated fields \
+                 (lint | file | token | justification), got {}",
+                idx + 1,
+                fields.len()
+            ));
+        };
+        if justification.is_empty() {
+            return Err(format!(
+                "analyze.allow:{}: empty justification — every entry \
+                 must explain why the site is safe",
+                idx + 1
+            ));
+        }
+        entries.push(AllowEntry {
+            lint: lint.to_string(),
+            file: file.to_string(),
+            token: token.to_string(),
+            source_line: idx + 1,
+        });
+    }
+    Ok(entries)
+}
+
+/// Collect `root/src/**/*.rs`, sorted, as crate-relative forward-slash
+/// paths.
+fn collect_sources(root: &Path) -> Result<Vec<SourceFile>, String> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut stack = vec![root.join("src")];
+    while let Some(dir) = stack.pop() {
+        let entries = std::fs::read_dir(&dir)
+            .map_err(|e| format!("cannot read {}: {e}", dir.display()))?;
+        for entry in entries {
+            let path = entry.map_err(|e| e.to_string())?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                paths.push(path);
+            }
+        }
+    }
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for path in paths {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        files.push(SourceFile::new(&rel, &text));
+    }
+    Ok(files)
+}
+
+/// `--self-test`: seed one violation per lint, assert each pass fires,
+/// and assert each clean fixture stays quiet.
+fn self_test() -> i32 {
+    let rows = lints::self_check();
+    let mut failed = 0;
+    for (lint, result) in &rows {
+        match result {
+            Ok(()) => println!("self-test {lint}: ok"),
+            Err(msg) => {
+                println!("self-test {lint}: FAILED — {msg}");
+                failed += 1;
+            }
+        }
+    }
+    println!(
+        "self-test: {}/{} checks passed",
+        rows.len() - failed,
+        rows.len()
+    );
+    i32::from(failed > 0)
+}
+
+fn analyze(root: &Path) -> Result<i32, String> {
+    let files = collect_sources(root)?;
+    let allow_path = root.join("analyze.allow");
+    let allow_text = match std::fs::read_to_string(&allow_path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+        Err(e) => return Err(format!("cannot read {}: {e}", allow_path.display())),
+    };
+    let entries = parse_allowlist(&allow_text)?;
+
+    let findings = lints::run_all(&files);
+    let mut used: BTreeSet<usize> = BTreeSet::new();
+    let mut errors = 0usize;
+    let mut allowed = 0usize;
+    for f in &findings {
+        let hit = entries
+            .iter()
+            .position(|e| e.lint == f.lint && e.file == f.file && e.token == f.token);
+        match hit {
+            Some(i) => {
+                used.insert(i);
+                allowed += 1;
+            }
+            None => {
+                println!("error[{}]: {}:{}: {}", f.lint, f.file, f.line, f.message);
+                errors += 1;
+            }
+        }
+    }
+    for (i, e) in entries.iter().enumerate() {
+        if !used.contains(&i) {
+            println!(
+                "error[allowlist]: analyze.allow:{}: unused entry \
+                 ({} | {} | {}) — the violation is gone; delete the entry",
+                e.source_line, e.lint, e.file, e.token
+            );
+            errors += 1;
+        }
+    }
+    println!(
+        "analyze: {} files, {} findings ({} allowlisted), {} errors",
+        files.len(),
+        findings.len(),
+        allowed,
+        errors
+    );
+    Ok(i32::from(errors > 0))
+}
+
+fn run() -> Result<i32, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd = None;
+    let mut root: PathBuf = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let mut want_self_test = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "analyze" if cmd.is_none() => cmd = Some("analyze"),
+            "--self-test" => want_self_test = true,
+            "--root" => {
+                i += 1;
+                let dir = args
+                    .get(i)
+                    .ok_or_else(|| "--root needs a directory".to_string())?;
+                root = PathBuf::from(dir);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+        i += 1;
+    }
+    match cmd {
+        Some("analyze") if want_self_test => Ok(self_test()),
+        Some("analyze") => analyze(&root),
+        _ => Err("usage: cargo xtask analyze [--self-test] [--root <dir>]".to_string()),
+    }
+}
+
+fn main() {
+    match run() {
+        Ok(code) => std::process::exit(code),
+        Err(msg) => {
+            eprintln!("xtask: {msg}");
+            std::process::exit(2);
+        }
+    }
+}
