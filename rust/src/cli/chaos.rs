@@ -1,0 +1,467 @@
+//! `hiercode chaos` — seeded fault-injection harness for the serving
+//! cluster.
+//!
+//! Robustness is a claim until it is measured. This harness launches a
+//! live [`ClusterCore`] (demo hierarchical grid, native backend, tight
+//! liveness timeouts) and replays seeded [`FaultPlan`] schedules
+//! against it through the supervisor's [`FaultInjector`] surface while
+//! closed-loop clients keep submitting:
+//!
+//! 1. **Survivable churn, twice with the same seed** — every round one
+//!    worker per group (with spare redundancy) crashes and restarts.
+//!    Both runs must complete 100% of their accepted jobs, and their
+//!    [`ChaosReport`] event tallies must match event for event: the
+//!    determinism verdict.
+//! 2. **Unsurvivable severs** — `n2 − k2 + 1` uplinks go down and stay
+//!    down. Probe jobs submitted afterwards must fail **fast** with
+//!    [`Error::Insufficient`] (the master's failure detector sweeping
+//!    them out), never by hanging until the admission deadline.
+//!
+//! Results go to `BENCH_chaos.json` in `--out` (default `.`):
+//! per-run completion/failure tallies, recovery latencies for every
+//! worker restart, the determinism verdict, and the fail-fast verdict,
+//! plus the final [`MetricsSnapshot`](crate::coordinator::metrics::
+//! MetricsSnapshot) of the first churn run (liveness gauges included).
+//! The harness exits nonzero when any verdict fails, so CI catches
+//! robustness regressions, not just crashes.
+//!
+//! `--smoke` shrinks everything for CI (≈2s total).
+
+use crate::cli::args::Args;
+use crate::config::schema::ClusterConfig;
+use crate::coordinator::chaos::{self, ChaosReport};
+use crate::coordinator::fault::FaultPlan;
+use crate::coordinator::ClusterCore;
+use crate::linalg::Matrix;
+use crate::sync::WallClock;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// JSON-safe float literal (same convention as `hiercode bench`).
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.9e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// The model every chaos run registers and hammers.
+const MODEL: &str = "chaos";
+/// Model shape: rows divisible by the demo grid's k2·k1 = 4.
+const ROWS: usize = 16;
+const COLS: usize = 4;
+
+/// Workload knobs shared by every run.
+struct ChaosLoad {
+    seed: u64,
+    duration_ms: u64,
+    period_ms: u64,
+    clients: usize,
+    probe_jobs: usize,
+}
+
+/// A cluster config tuned for chaos runs: native backend, liveness on
+/// with tight timeouts (detection must be much faster than the
+/// admission deadline for the fail-fast verdict to mean anything).
+fn chaos_config() -> ClusterConfig {
+    let mut config = ClusterConfig::demo(3, 2, 3, 2);
+    config.chaos.liveness = true;
+    config.chaos.heartbeat_ms = 5.0;
+    config.chaos.suspect_ms = 40.0;
+    config.chaos.dead_ms = 120.0;
+    config.serving.queue_cap = 64;
+    config.serving.default_deadline_ms = 10_000.0;
+    config.serving.drain_ms = 2_000.0;
+    config.batching.max_wait_ms = 1.0;
+    config
+}
+
+/// One survivable-churn measurement.
+struct ChurnOutcome {
+    completed: u64,
+    failed: u64,
+    shed: u64,
+    busy: u64,
+    wall_s: f64,
+    report: ChaosReport,
+    metrics_json: String,
+}
+
+impl ChurnOutcome {
+    /// Every accepted job resolved successfully (Busy bounces are
+    /// admission backpressure, not failures).
+    fn all_jobs_completed(&self) -> bool {
+        self.completed > 0 && self.failed == 0 && self.shed == 0
+    }
+}
+
+/// Launch a fresh cluster, replay a survivable churn schedule against
+/// it under closed-loop load, and tally the outcome.
+fn run_churn(load: &ChaosLoad) -> Result<ChurnOutcome> {
+    let config = chaos_config();
+    let core = ClusterCore::launch(&config)?;
+    let mut mr = Rng::new(load.seed);
+    let a = Matrix::from_fn(ROWS, COLS, |_, _| mr.uniform(-1.0, 1.0));
+    core.register_model(MODEL, &a)?;
+    let plan = FaultPlan::survivable_churn(
+        load.seed,
+        &config.code.topology,
+        load.duration_ms,
+        load.period_ms,
+    );
+    let driver = chaos::spawn(core.injector(), plan, Arc::new(WallClock::new()))?;
+    let t0 = Instant::now();
+    // Clients outlive the schedule by one period, so the last restart's
+    // recovery path serves real jobs before shutdown.
+    let t_end = t0 + Duration::from_millis(load.duration_ms + load.period_ms);
+    let mut joins = Vec::new();
+    for t in 0..load.clients {
+        let client = core.handle();
+        let mut rng =
+            Rng::new(load.seed ^ (t as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        joins.push(std::thread::spawn(move || {
+            let (mut completed, mut failed, mut shed, mut busy) = (0u64, 0u64, 0u64, 0u64);
+            while Instant::now() < t_end {
+                let x: Vec<f64> = (0..COLS).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                match client.submit_to(MODEL, x) {
+                    // Bounded wait (well above the 10s admission
+                    // deadline): a stuck job counts as failed instead
+                    // of wedging the harness.
+                    Ok(h) => match h.wait_timeout(Duration::from_secs(15)) {
+                        Ok(_) => completed += 1,
+                        Err(Error::DeadlineExceeded) => shed += 1,
+                        Err(_) => failed += 1,
+                    },
+                    Err(Error::Busy { .. }) => {
+                        busy += 1;
+                        std::thread::yield_now();
+                    }
+                    Err(_) => {
+                        // Never accepted (shutdown raced us): stop.
+                        failed += 1;
+                        break;
+                    }
+                }
+            }
+            (completed, failed, shed, busy)
+        }));
+    }
+    let (mut completed, mut failed, mut shed, mut busy) = (0u64, 0u64, 0u64, 0u64);
+    for j in joins {
+        let (c, f, s, b) = j.join().expect("chaos client panicked");
+        completed += c;
+        failed += f;
+        shed += s;
+        busy += b;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let report = driver
+        .join()
+        .map_err(|_| Error::Coordinator("chaos driver panicked".into()))?;
+    let metrics_json = core.metrics().to_json();
+    core.shutdown();
+    Ok(ChurnOutcome {
+        completed,
+        failed,
+        shed,
+        busy,
+        wall_s,
+        report,
+        metrics_json,
+    })
+}
+
+/// The unsurvivable-severs measurement: probes submitted after the
+/// detector ages the severed groups out must fail fast with
+/// [`Error::Insufficient`].
+struct SeverOutcome {
+    baseline_completed: u64,
+    severs: u64,
+    insufficient: u64,
+    unexpected: u64,
+    max_fail_ms: f64,
+}
+
+impl SeverOutcome {
+    fn failed_fast(&self, probe_jobs: usize) -> bool {
+        self.insufficient == probe_jobs as u64 && self.unexpected == 0
+    }
+}
+
+fn run_severs(load: &ChaosLoad) -> Result<SeverOutcome> {
+    let config = chaos_config();
+    let core = ClusterCore::launch(&config)?;
+    let mut mr = Rng::new(load.seed);
+    let a = Matrix::from_fn(ROWS, COLS, |_, _| mr.uniform(-1.0, 1.0));
+    core.register_model(MODEL, &a)?;
+    let client = core.handle();
+    // Baseline: the healthy cluster serves.
+    let mut baseline_completed = 0u64;
+    for _ in 0..2 {
+        let x: Vec<f64> = (0..COLS).map(|_| mr.uniform(-1.0, 1.0)).collect();
+        if client.submit_to(MODEL, x)?.wait().is_ok() {
+            baseline_completed += 1;
+        }
+    }
+    let sever_at = 20u64;
+    let plan = FaultPlan::unsurvivable_severs(load.seed, &config.code.topology, sever_at);
+    let severs = plan.len() as u64;
+    let driver = chaos::spawn(core.injector(), plan, Arc::new(WallClock::new()))?;
+    // Let the severs land (≤ sever_at + 40ms jitter) and the detector
+    // age the quiet groups out (dead_ms), with margin.
+    std::thread::sleep(Duration::from_millis(
+        sever_at + 40 + config.chaos.dead_ms as u64 + 60,
+    ));
+    let (mut insufficient, mut unexpected) = (0u64, 0u64);
+    let mut max_fail_ms = 0.0f64;
+    for _ in 0..load.probe_jobs {
+        let x: Vec<f64> = (0..COLS).map(|_| mr.uniform(-1.0, 1.0)).collect();
+        let t = Instant::now();
+        // The 5s guard is far below the 10s admission deadline: a probe
+        // that needs it did NOT fail fast.
+        match client.submit_to(MODEL, x)?.wait_timeout(Duration::from_secs(5)) {
+            Err(Error::Insufficient { .. }) => {
+                insufficient += 1;
+                max_fail_ms = max_fail_ms.max(t.elapsed().as_secs_f64() * 1e3);
+            }
+            _ => unexpected += 1,
+        }
+    }
+    driver
+        .join()
+        .map_err(|_| Error::Coordinator("chaos driver panicked".into()))?;
+    core.shutdown();
+    Ok(SeverOutcome {
+        baseline_completed,
+        severs,
+        insufficient,
+        unexpected,
+        max_fail_ms,
+    })
+}
+
+/// Mean and max over the finite recovery latencies.
+fn recovery_stats(ms: &[f64]) -> (f64, f64) {
+    let finite: Vec<f64> = ms.iter().copied().filter(|v| v.is_finite()).collect();
+    if finite.is_empty() {
+        (f64::NAN, f64::NAN)
+    } else {
+        let mean = finite.iter().sum::<f64>() / finite.len() as f64;
+        let max = finite.iter().fold(f64::MIN, |a, &b| a.max(b));
+        (mean, max)
+    }
+}
+
+fn render_churn(r: &ChurnOutcome) -> String {
+    let (rec_mean, rec_max) = recovery_stats(&r.report.recovery_ms);
+    let counts = r.report.event_counts();
+    format!(
+        "      {{\"completed\": {}, \"failed\": {}, \"deadline_shed\": {}, \
+         \"busy_rejected\": {}, \"wall_s\": {}, \"event_counts\": [{}, {}, {}, {}, {}], \
+         \"recovery_ms\": {{\"count\": {}, \"mean\": {}, \"max\": {}}}}}",
+        r.completed,
+        r.failed,
+        r.shed,
+        r.busy,
+        jf(r.wall_s),
+        counts[0],
+        counts[1],
+        counts[2],
+        counts[3],
+        counts[4],
+        r.report.recovery_ms.len(),
+        jf(rec_mean),
+        jf(rec_max),
+    )
+}
+
+/// Render the `BENCH_chaos.json` document.
+fn render_json(
+    smoke: bool,
+    load: &ChaosLoad,
+    runs: &[ChurnOutcome],
+    identical: bool,
+    sever: &SeverOutcome,
+    pass: bool,
+) -> String {
+    let entries: Vec<String> = runs.iter().map(render_churn).collect();
+    let all_completed = runs.iter().all(ChurnOutcome::all_jobs_completed);
+    format!(
+        "{{\n\
+         \x20 \"schema\": \"hiercode-bench/chaos/v1\",\n\
+         \x20 \"smoke\": {smoke},\n\
+         \x20 \"seed\": {},\n\
+         \x20 \"grid\": {{\"n1\": 3, \"k1\": 2, \"n2\": 3, \"k2\": 2}},\n\
+         \x20 \"survivable\": {{\n\
+         \x20   \"duration_ms\": {}, \"period_ms\": {}, \"clients\": {},\n\
+         \x20   \"runs\": [\n{}\n    ],\n\
+         \x20   \"all_jobs_completed\": {all_completed},\n\
+         \x20   \"deterministic\": {identical}\n\
+         \x20 }},\n\
+         \x20 \"unsurvivable\": {{\n\
+         \x20   \"baseline_completed\": {}, \"severs\": {}, \"probe_jobs\": {},\n\
+         \x20   \"insufficient\": {}, \"unexpected\": {},\n\
+         \x20   \"max_fail_ms\": {}, \"failed_fast\": {}\n\
+         \x20 }},\n\
+         \x20 \"verdict\": \"{}\",\n\
+         \x20 \"metrics\": {}\n\
+         }}\n",
+        load.seed,
+        load.duration_ms,
+        load.period_ms,
+        load.clients,
+        entries.join(",\n"),
+        sever.baseline_completed,
+        sever.severs,
+        load.probe_jobs,
+        sever.insufficient,
+        sever.unexpected,
+        jf(sever.max_fail_ms),
+        sever.failed_fast(load.probe_jobs),
+        if pass { "pass" } else { "fail" },
+        runs.first()
+            .map(|r| r.metrics_json.as_str())
+            .unwrap_or("null"),
+    )
+}
+
+/// Run the chaos harness; writes `BENCH_chaos.json`.
+pub fn run(args: &Args) -> Result<()> {
+    let smoke = args.has_flag("smoke");
+    let out_dir = args.get_str("out").unwrap_or(".").to_string();
+    let load = ChaosLoad {
+        seed: args.get_usize("seed")?.unwrap_or(42) as u64,
+        duration_ms: args
+            .get_usize("duration-ms")?
+            .unwrap_or(if smoke { 600 } else { 3000 }) as u64,
+        period_ms: args
+            .get_usize("period-ms")?
+            .unwrap_or(if smoke { 150 } else { 300 }) as u64,
+        clients: args.get_usize("clients")?.unwrap_or(if smoke { 2 } else { 4 }),
+        probe_jobs: args.get_usize("probe-jobs")?.unwrap_or(3),
+    };
+    if load.period_ms == 0 || load.duration_ms < 2 * load.period_ms {
+        return Err(Error::InvalidParams(
+            "--duration-ms must be at least 2x --period-ms (and both positive), \
+             or the churn schedule is empty and the run proves nothing"
+                .into(),
+        ));
+    }
+    if load.clients == 0 || load.probe_jobs == 0 {
+        return Err(Error::InvalidParams(
+            "--clients and --probe-jobs must be positive".into(),
+        ));
+    }
+    eprintln!(
+        "## hiercode chaos (smoke={smoke}, seed={}, churn {}ms/{}ms, \
+         {} clients, {} probes)",
+        load.seed, load.duration_ms, load.period_ms, load.clients, load.probe_jobs
+    );
+    // Two identical seeded churn runs: the determinism verdict.
+    let mut runs = Vec::new();
+    for i in 0..2 {
+        let r = run_churn(&load)?;
+        println!(
+            "chaos churn run {i}: {} ok, {} failed, {} shed, {} busy in {:.2}s \
+             (events {:?})",
+            r.completed,
+            r.failed,
+            r.shed,
+            r.busy,
+            r.wall_s,
+            r.report.event_counts()
+        );
+        runs.push(r);
+    }
+    let identical = runs[0].report.event_counts() == runs[1].report.event_counts();
+    let sever = run_severs(&load)?;
+    println!(
+        "chaos severs: {} baseline ok, {} severed, {}/{} probes Insufficient \
+         (max fail {:.1}ms)",
+        sever.baseline_completed, sever.severs, sever.insufficient, load.probe_jobs,
+        sever.max_fail_ms
+    );
+    let pass = runs.iter().all(ChurnOutcome::all_jobs_completed)
+        && identical
+        && sever.baseline_completed == 2
+        && sever.failed_fast(load.probe_jobs);
+    let json = render_json(smoke, &load, &runs, identical, &sever, pass);
+    let path = format!("{out_dir}/BENCH_chaos.json");
+    std::fs::write(&path, json)?;
+    println!("wrote {path}");
+    if !pass {
+        return Err(Error::Coordinator(format!(
+            "chaos verdict FAILED (see {path}): churn complete={:?}, \
+             deterministic={identical}, fail-fast={}",
+            runs.iter().map(|r| r.all_jobs_completed()).collect::<Vec<_>>(),
+            sever.failed_fast(load.probe_jobs)
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_chaos_writes_report_and_passes() {
+        let dir = std::env::temp_dir().join("hiercode_chaos_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.to_str().unwrap().to_string();
+        let args = Args::parse(&[
+            "--smoke".to_string(),
+            "--duration-ms".to_string(),
+            "400".to_string(),
+            "--period-ms".to_string(),
+            "100".to_string(),
+            "--probe-jobs".to_string(),
+            "2".to_string(),
+            "--out".to_string(),
+            out,
+        ])
+        .unwrap();
+        run(&args).unwrap();
+        let text = std::fs::read_to_string(dir.join("BENCH_chaos.json")).unwrap();
+        let v = crate::config::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            v.get("schema").and_then(|s| s.as_str()),
+            Some("hiercode-bench/chaos/v1")
+        );
+        let surv = v.get("survivable").unwrap();
+        assert_eq!(surv.get("deterministic").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(
+            surv.get("all_jobs_completed").and_then(|b| b.as_bool()),
+            Some(true)
+        );
+        assert_eq!(surv.get("runs").and_then(|r| r.as_array()).unwrap().len(), 2);
+        let unsurv = v.get("unsurvivable").unwrap();
+        assert!(unsurv.get("insufficient").and_then(|n| n.as_usize()).unwrap() > 0);
+        assert_eq!(
+            unsurv.get("failed_fast").and_then(|b| b.as_bool()),
+            Some(true)
+        );
+        assert_eq!(v.get("verdict").and_then(|s| s.as_str()), Some("pass"));
+        // The embedded metrics snapshot is a real object with liveness
+        // gauges, not a stringified blob.
+        let metrics = v.get("metrics").unwrap();
+        assert!(metrics.get("per_group").is_some());
+    }
+
+    #[test]
+    fn chaos_rejects_bad_arguments() {
+        for bad in [
+            vec!["--duration-ms", "100", "--period-ms", "100"],
+            vec!["--period-ms", "0"],
+            vec!["--clients", "0"],
+            vec!["--probe-jobs", "0"],
+        ] {
+            let argv: Vec<String> = bad.iter().map(|s| s.to_string()).collect();
+            let args = Args::parse(&argv).unwrap();
+            assert!(run(&args).is_err(), "must reject {bad:?}");
+        }
+    }
+}

@@ -11,6 +11,7 @@
 
 pub mod args;
 pub mod benchcmd;
+pub mod chaos;
 pub mod loadgen;
 
 use crate::sim::{bounds, markov, montecarlo, SimParams};
@@ -34,6 +35,8 @@ USAGE:
   hiercode loadgen [--smoke] [--schemes S,S] [--clients N,N,...]
                    [--duration-s T] [--models N] [--rows R] [--cols C]
                    [--queue-cap Q] [--deadline-ms D] [--seed S] [--out DIR]
+  hiercode chaos   [--smoke] [--seed S] [--duration-ms T] [--period-ms P]
+                   [--clients N] [--probe-jobs N] [--out DIR]
   hiercode help
 
 `figures` regenerates the paper's evaluation artifacts (CSV on stdout).
@@ -49,6 +52,11 @@ BENCH_decode.json / BENCH_sim.json perf baselines to --out (default .).
 round-robining across --models registered models, per scheme and
 concurrency level, and writes throughput + p50/p95/p99 latency (and
 busy/shed accounting) to BENCH_serving.json in --out.
+`chaos` replays seeded kill/restart and link-sever schedules against a
+live serving cluster under closed-loop load: two same-seed survivable
+churn runs (determinism + 100% completion verdicts) and an
+unsurvivable sever run (fast-fail verdict), written to BENCH_chaos.json
+in --out; exits nonzero on any failed verdict.
 ";
 
 /// CLI entry point (called from `main.rs`).
@@ -82,6 +90,7 @@ pub fn run(argv: &[String]) -> crate::Result<()> {
         "serve" => serve_cmd(&args),
         "bench" => benchcmd::run(&args),
         "loadgen" => loadgen::run(&args),
+        "chaos" => chaos::run(&args),
         other => Err(crate::Error::InvalidParams(format!(
             "unknown command '{other}' (try `hiercode help`)"
         ))),

@@ -13,7 +13,9 @@
 //!   "batching":  {"max_batch": 8, "max_wait_ms": 5.0},
 //!   "serving":   {"queue_cap": 64, "default_deadline_ms": 10000,
 //!                 "drain_ms": 5000,
-//!                 "models": [{"name": "a", "rows": 1024, "cols": 128}]}
+//!                 "models": [{"name": "a", "rows": 1024, "cols": 128}]},
+//!   "chaos":     {"liveness": true, "heartbeat_ms": 25,
+//!                 "suspect_ms": 1000, "dead_ms": 5000}
 //! }
 //! ```
 //!
@@ -675,6 +677,83 @@ impl ServingConfig {
     }
 }
 
+/// Liveness tracking and chaos-run policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosConfig {
+    /// Master switch: heartbeats + the master's failure detector.
+    pub liveness: bool,
+    /// Heartbeat cadence (ms) for workers and submasters.
+    pub heartbeat_ms: f64,
+    /// Beacon silence (ms) after which a worker/group is Suspected.
+    pub suspect_ms: f64,
+    /// Beacon silence (ms) after which a worker/group is Dead.
+    pub dead_ms: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            liveness: true,
+            heartbeat_ms: 25.0,
+            suspect_ms: 1_000.0,
+            dead_ms: 5_000.0,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Parse from the `"chaos"` object. Malformed or degenerate values
+    /// are rejected — never silently replaced by defaults.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        let liveness = match v.get("liveness") {
+            Some(Json::Bool(b)) => *b,
+            Some(_) => {
+                return Err(Error::Config(
+                    "chaos.liveness must be a boolean".into(),
+                ))
+            }
+            None => d.liveness,
+        };
+        let ms_field = |key: &str, default: f64| -> Result<f64> {
+            match v.get(key) {
+                Some(x) => {
+                    let ms = x.as_f64().ok_or_else(|| {
+                        Error::Config(format!(
+                            "chaos.{key} must be a number of milliseconds"
+                        ))
+                    })?;
+                    if !ms.is_finite() || ms <= 0.0 {
+                        return Err(Error::Config(format!(
+                            "chaos.{key} = {ms} is not a positive finite \
+                             duration"
+                        )));
+                    }
+                    Ok(ms)
+                }
+                None => Ok(default),
+            }
+        };
+        let heartbeat_ms = ms_field("heartbeat_ms", d.heartbeat_ms)?;
+        let suspect_ms = ms_field("suspect_ms", d.suspect_ms)?;
+        let dead_ms = ms_field("dead_ms", d.dead_ms)?;
+        if !(heartbeat_ms < suspect_ms && suspect_ms <= dead_ms) {
+            return Err(Error::Config(format!(
+                "chaos thresholds must satisfy heartbeat_ms < suspect_ms <= \
+                 dead_ms, got {heartbeat_ms} / {suspect_ms} / {dead_ms} \
+                 (a cadence at or above the suspect window false-positives \
+                 every sweep)"
+            )));
+        }
+        Ok(Self {
+            liveness,
+            heartbeat_ms,
+            suspect_ms,
+            dead_ms,
+        })
+    }
+}
+
 /// Full cluster configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterConfig {
@@ -688,6 +767,8 @@ pub struct ClusterConfig {
     pub batching: BatchConfig,
     /// Serving-layer admission control + model table.
     pub serving: ServingConfig,
+    /// Liveness tracking (heartbeats + failure detector).
+    pub chaos: ChaosConfig,
     /// RNG seed for straggler injection.
     pub seed: u64,
 }
@@ -727,6 +808,10 @@ impl ClusterConfig {
             Some(s) => ServingConfig::from_json(s)?,
             None => ServingConfig::default(),
         };
+        let chaos = match v.get("chaos") {
+            Some(c) => ChaosConfig::from_json(c)?,
+            None => ChaosConfig::default(),
+        };
         let seed = match v.get("seed") {
             // A present-but-malformed seed is a config mistake, not a
             // request for the default: reject it instead of silently
@@ -744,6 +829,7 @@ impl ClusterConfig {
             runtime,
             batching,
             serving,
+            chaos,
             seed,
         })
     }
@@ -785,6 +871,7 @@ impl ClusterConfig {
             },
             batching: BatchConfig::default(),
             serving: ServingConfig::default(),
+            chaos: ChaosConfig::default(),
             seed: 42,
         }
     }
@@ -803,6 +890,45 @@ mod tests {
         "batching": {"max_batch": 4, "max_wait_ms": 2.5},
         "seed": 7
     }"#;
+
+    #[test]
+    fn chaos_section_parses_and_validates() {
+        const CODE: &str = r#""code": {"n1": 2, "k1": 1, "n2": 2, "k2": 1}"#;
+        let c = ClusterConfig::from_json_text(&format!(
+            r#"{{{CODE}, "chaos": {{"liveness": true, "heartbeat_ms": 10,
+                "suspect_ms": 100, "dead_ms": 400}}}}"#
+        ))
+        .unwrap();
+        assert!(c.chaos.liveness);
+        assert_eq!(c.chaos.heartbeat_ms, 10.0);
+        assert_eq!(c.chaos.dead_ms, 400.0);
+        // Absent section → defaults (liveness on).
+        let c = ClusterConfig::from_json_text(&format!("{{{CODE}}}")).unwrap();
+        assert_eq!(c.chaos, ChaosConfig::default());
+        // Present-but-malformed values are rejected, never defaulted.
+        for bad in [
+            r#"{"liveness": "yes"}"#,
+            r#"{"heartbeat_ms": "fast"}"#,
+            r#"{"heartbeat_ms": 0}"#,
+            r#"{"suspect_ms": -5}"#,
+            // cadence at/above suspect window: detector would
+            // false-positive between beats
+            r#"{"heartbeat_ms": 200, "suspect_ms": 100}"#,
+            r#"{"suspect_ms": 2000, "dead_ms": 100}"#,
+        ] {
+            let doc = format!(r#"{{{CODE}, "chaos": {bad}}}"#);
+            assert!(
+                ClusterConfig::from_json_text(&doc).is_err(),
+                "accepted malformed chaos section {bad}"
+            );
+        }
+        // liveness can be turned off while keeping valid thresholds.
+        let c = ClusterConfig::from_json_text(&format!(
+            r#"{{{CODE}, "chaos": {{"liveness": false}}}}"#
+        ))
+        .unwrap();
+        assert!(!c.chaos.liveness);
+    }
 
     #[test]
     fn parses_full_config() {

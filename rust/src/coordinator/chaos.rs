@@ -1,0 +1,458 @@
+//! Chaos driver and failure detector: the dynamic-fault side of the
+//! coordinator.
+//!
+//! Three pieces:
+//!
+//! * [`LivenessConfig`] — heartbeat cadence and the detector's
+//!   suspect/dead timeouts (parsed from the config's `chaos` section).
+//! * [`FailureDetector`] — the master's timeout-based liveness state
+//!   machine. Pure function of `(heartbeats, now_ms)` against a
+//!   [`Clock`](crate::sync::Clock): every worker and group is `Alive`
+//!   until its beacons go quiet for `suspect_ms` (→ [`Liveness::
+//!   Suspected`]) and then `dead_ms` (→ [`Liveness::Dead`]); one fresh
+//!   beacon revives it. Indexed by `Vec`, clocked externally — unit
+//!   tests drive it with a [`MockClock`](crate::sync::MockClock) and
+//!   never sleep.
+//! * [`spawn`] — the chaos driver thread: executes a seeded
+//!   [`FaultPlan`] against a live cluster through the [`FaultInjector`]
+//!   surface, tallying a [`ChaosReport`]. The plan is a pure function
+//!   of its seed, so two same-seed runs inject identical event
+//!   sequences — the `hiercode chaos` harness's determinism verdict.
+
+use crate::coordinator::fault::{FaultAction, FaultPlan};
+use crate::sync::Clock;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Liveness settings for the coordinator tree.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LivenessConfig {
+    /// Master switch: when off, no heartbeats are sent and the master
+    /// never sweeps (the pre-liveness quiet-channel behavior).
+    pub enabled: bool,
+    /// Heartbeat cadence for workers and submasters.
+    pub heartbeat: Duration,
+    /// Beacon silence after which a worker/group is `Suspected`.
+    pub suspect: Duration,
+    /// Beacon silence after which a worker/group is `Dead`.
+    pub dead: Duration,
+}
+
+impl LivenessConfig {
+    /// Liveness on, with the given cadence and timeouts.
+    pub fn new(heartbeat: Duration, suspect: Duration, dead: Duration) -> Self {
+        Self {
+            enabled: true,
+            heartbeat,
+            suspect,
+            dead,
+        }
+    }
+
+    /// Liveness off: no beacons, no sweeps, channels stay quiet.
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            heartbeat: Duration::from_millis(25),
+            suspect: Duration::from_millis(1000),
+            dead: Duration::from_millis(5000),
+        }
+    }
+
+    /// The worker/submaster heartbeat parameter: `Some(cadence)` when
+    /// enabled.
+    pub fn beat_period(&self) -> Option<Duration> {
+        self.enabled.then_some(self.heartbeat)
+    }
+}
+
+/// Detector verdict for one worker or group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Liveness {
+    /// Beacons within `suspect_ms`.
+    Alive,
+    /// Quiet past `suspect_ms` but not yet `dead_ms`.
+    Suspected,
+    /// Quiet past `dead_ms`: treated as failed for degradation math.
+    Dead,
+}
+
+/// Timeout-based failure detector over the coordinator's beacon
+/// streams. `Vec`-indexed (no hash iteration) and externally clocked:
+/// deterministic given the same beat/now sequence.
+#[derive(Debug)]
+pub struct FailureDetector {
+    suspect_ms: u64,
+    dead_ms: u64,
+    /// Last beacon per worker, `[group][index]`, ms.
+    workers: Vec<Vec<u64>>,
+    /// Last beacon per group (worker-relayed or submaster-own), ms.
+    groups: Vec<u64>,
+}
+
+impl FailureDetector {
+    /// Fresh detector: everything counts as having beaconed at
+    /// `now_ms`, so nothing is falsely suspected at startup.
+    pub fn new(group_sizes: &[usize], suspect_ms: u64, dead_ms: u64, now_ms: u64) -> Self {
+        Self {
+            suspect_ms,
+            dead_ms: dead_ms.max(suspect_ms),
+            workers: group_sizes.iter().map(|&n| vec![now_ms; n]).collect(),
+            groups: vec![now_ms; group_sizes.len()],
+        }
+    }
+
+    /// Record a beacon: `worker: Some(j)` is worker `j`'s (relayed by
+    /// its submaster), `None` the submaster's own. Either proves the
+    /// group's uplink works, so both refresh the group timestamp.
+    pub fn beat(&mut self, group: usize, worker: Option<usize>, now_ms: u64) {
+        if let Some(g) = self.groups.get_mut(group) {
+            *g = now_ms.max(*g);
+        }
+        if let Some(j) = worker {
+            if let Some(w) = self.workers.get_mut(group).and_then(|g| g.get_mut(j)) {
+                *w = now_ms.max(*w);
+            }
+        }
+    }
+
+    fn classify(&self, last_ms: u64, now_ms: u64) -> Liveness {
+        let quiet = now_ms.saturating_sub(last_ms);
+        if quiet >= self.dead_ms {
+            Liveness::Dead
+        } else if quiet >= self.suspect_ms {
+            Liveness::Suspected
+        } else {
+            Liveness::Alive
+        }
+    }
+
+    /// Verdict for worker `(group, j)`. Out-of-range ⇒ `Dead` (a
+    /// worker the detector never knew cannot be alive).
+    pub fn worker_state(&self, group: usize, j: usize, now_ms: u64) -> Liveness {
+        self.workers
+            .get(group)
+            .and_then(|g| g.get(j))
+            .map(|&last| self.classify(last, now_ms))
+            .unwrap_or(Liveness::Dead)
+    }
+
+    /// Verdict for a group's beacon stream (its uplink + submaster).
+    pub fn group_state(&self, group: usize, now_ms: u64) -> Liveness {
+        self.groups
+            .get(group)
+            .map(|&last| self.classify(last, now_ms))
+            .unwrap_or(Liveness::Dead)
+    }
+
+    /// Workers of `group` not currently `Dead`.
+    pub fn alive_workers(&self, group: usize, now_ms: u64) -> usize {
+        self.workers
+            .get(group)
+            .map(|g| {
+                g.iter()
+                    .filter(|&&last| self.classify(last, now_ms) != Liveness::Dead)
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Workers of `group` currently `Suspected` (quiet, not yet dead).
+    pub fn suspected_workers(&self, group: usize, now_ms: u64) -> usize {
+        self.workers
+            .get(group)
+            .map(|g| {
+                g.iter()
+                    .filter(|&&last| self.classify(last, now_ms) == Liveness::Suspected)
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Groups that can still deliver a partial: beacon stream not
+    /// `Dead` and at least `thresholds[g]` (= `k1_g`) workers not
+    /// `Dead` — with `r` sub-tasks per worker that is exactly
+    /// "≥ k1·r reachable sub-results".
+    pub fn healthy_groups(&self, thresholds: &[usize], now_ms: u64) -> usize {
+        self.groups
+            .iter()
+            .enumerate()
+            .filter(|&(g, _)| {
+                self.group_state(g, now_ms) != Liveness::Dead
+                    && self.alive_workers(g, now_ms)
+                        >= thresholds.get(g).copied().unwrap_or(usize::MAX)
+            })
+            .count()
+    }
+}
+
+/// The cluster surface the chaos driver injects through. Implemented
+/// by the cluster's supervisor; a trait so detector/driver tests can
+/// use a recording stub.
+pub trait FaultInjector: Send + Sync {
+    /// Kill worker `(group, index)` now: mark it dead and make its
+    /// thread exit, dropping its loaded shards.
+    fn worker_crash(&self, group: usize, index: usize);
+    /// Respawn worker `(group, index)` and re-ship its shards for
+    /// every registered model. Returns the recovery latency in ms
+    /// (respawn + re-ship, as observed by the injector).
+    fn worker_restart(&self, group: usize, index: usize) -> f64;
+    /// Sever a group's uplink.
+    fn link_sever(&self, group: usize);
+    /// Restore a severed uplink.
+    fn link_heal(&self, group: usize);
+    /// Degrade a group's uplink (delay ceiling + loss rate);
+    /// `(0.0, 0)` heals it.
+    fn uplink_degrade(&self, group: usize, delay_ms: f64, drop_per_mille: u64);
+}
+
+/// What a chaos run did: event tallies plus observed recovery
+/// latencies. Two same-seed runs must produce identical tallies.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosReport {
+    /// Worker crash events fired.
+    pub crashes: u64,
+    /// Worker restart events fired.
+    pub restarts: u64,
+    /// Uplink sever events fired.
+    pub severs: u64,
+    /// Uplink heal events fired.
+    pub heals: u64,
+    /// Uplink degrade events fired.
+    pub degrades: u64,
+    /// Per-restart recovery latency (respawn + shard re-ship), ms.
+    pub recovery_ms: Vec<f64>,
+}
+
+impl ChaosReport {
+    /// The determinism fingerprint: every event tally, in a fixed
+    /// order. Same seed ⇒ same fingerprint.
+    pub fn event_counts(&self) -> [u64; 5] {
+        [
+            self.crashes,
+            self.restarts,
+            self.severs,
+            self.heals,
+            self.degrades,
+        ]
+    }
+}
+
+/// How long the driver sleeps between clock polls while waiting for
+/// the next event. Small enough to keep injection jitter ≈ 1 ms, large
+/// enough not to busy-spin.
+const POLL: Duration = Duration::from_millis(1);
+
+/// Spawn the chaos driver: executes `plan` against `injector` on
+/// `clock` time, firing each event once its `at_ms` passes, and
+/// returns the tally through the join handle. Errors only if the OS
+/// refuses to spawn the thread.
+pub fn spawn(
+    injector: Arc<dyn FaultInjector>,
+    plan: FaultPlan,
+    clock: Arc<dyn Clock>,
+) -> crate::Result<thread::JoinHandle<ChaosReport>> {
+    let handle = thread::Builder::new()
+        .name("hiercode-chaos".into())
+        .spawn(move || {
+            let mut report = ChaosReport::default();
+            for event in plan.events() {
+                while clock.now_ms() < event.at_ms {
+                    thread::sleep(POLL);
+                }
+                match event.action {
+                    FaultAction::WorkerCrash { group, index } => {
+                        injector.worker_crash(group, index);
+                        report.crashes += 1;
+                    }
+                    FaultAction::WorkerRestart { group, index } => {
+                        let ms = injector.worker_restart(group, index);
+                        report.recovery_ms.push(ms);
+                        report.restarts += 1;
+                    }
+                    FaultAction::LinkSever { group } => {
+                        injector.link_sever(group);
+                        report.severs += 1;
+                    }
+                    FaultAction::LinkHeal { group } => {
+                        injector.link_heal(group);
+                        report.heals += 1;
+                    }
+                    FaultAction::UplinkDegrade {
+                        group,
+                        delay_ms,
+                        drop_per_mille,
+                    } => {
+                        injector.uplink_degrade(group, delay_ms, drop_per_mille);
+                        report.degrades += 1;
+                    }
+                }
+            }
+            report
+        })?;
+    Ok(handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::MockClock;
+    use std::sync::Mutex;
+
+    const SUSPECT: u64 = 100;
+    const DEAD: u64 = 500;
+
+    fn det() -> FailureDetector {
+        FailureDetector::new(&[3, 3], SUSPECT, DEAD, 0)
+    }
+
+    #[test]
+    fn suspect_then_dead_then_revived() {
+        let mut d = det();
+        // Fresh: alive everywhere.
+        assert_eq!(d.worker_state(0, 1, 0), Liveness::Alive);
+        // Quiet past suspect: suspected, not dead.
+        assert_eq!(d.worker_state(0, 1, SUSPECT), Liveness::Suspected);
+        assert_eq!(d.suspected_workers(0, SUSPECT), 3);
+        assert_eq!(d.alive_workers(0, SUSPECT), 3, "suspected still counts");
+        // Quiet past dead: dead.
+        assert_eq!(d.worker_state(0, 1, DEAD), Liveness::Dead);
+        assert_eq!(d.alive_workers(0, DEAD), 0);
+        // One beacon revives worker 1 (and its group).
+        d.beat(0, Some(1), DEAD);
+        assert_eq!(d.worker_state(0, 1, DEAD), Liveness::Alive);
+        assert_eq!(d.alive_workers(0, DEAD), 1);
+        assert_eq!(d.group_state(0, DEAD), Liveness::Alive);
+    }
+
+    #[test]
+    fn no_false_positive_before_timeout() {
+        let mut d = det();
+        // Beacons every SUSPECT-1 ms: never even suspected.
+        let mut now = 0;
+        for _ in 0..10 {
+            now += SUSPECT - 1;
+            for g in 0..2 {
+                for j in 0..3 {
+                    assert_eq!(d.worker_state(g, j, now), Liveness::Alive);
+                    d.beat(g, Some(j), now);
+                }
+            }
+        }
+        assert_eq!(d.healthy_groups(&[2, 2], now), 2);
+    }
+
+    #[test]
+    fn severed_uplink_marks_whole_group() {
+        let mut d = det();
+        // Group 1's beacons keep flowing; group 0 goes silent at t=0
+        // (severed uplink drops worker AND submaster beacons).
+        let mut now = 0;
+        while now < DEAD + 50 {
+            now += 20;
+            for j in 0..3 {
+                d.beat(1, Some(j), now);
+            }
+            d.beat(1, None, now);
+        }
+        assert_eq!(d.group_state(0, now), Liveness::Dead);
+        assert_eq!(
+            d.alive_workers(0, now),
+            0,
+            "every worker behind the severed uplink ages out"
+        );
+        assert_eq!(d.group_state(1, now), Liveness::Alive);
+        assert_eq!(d.healthy_groups(&[2, 2], now), 1);
+    }
+
+    #[test]
+    fn submaster_beacon_alone_keeps_group_alive_but_not_workers() {
+        let mut d = det();
+        let mut now = 0;
+        while now < DEAD + 50 {
+            now += 20;
+            d.beat(0, None, now); // submaster alive, workers silent
+        }
+        assert_eq!(d.group_state(0, now), Liveness::Alive);
+        assert_eq!(d.alive_workers(0, now), 0);
+        assert_eq!(
+            d.healthy_groups(&[2, 2], now),
+            0,
+            "group 0 lacks k1 workers, group 1 is fully quiet"
+        );
+    }
+
+    #[test]
+    fn out_of_range_is_dead() {
+        let d = det();
+        assert_eq!(d.worker_state(9, 0, 0), Liveness::Dead);
+        assert_eq!(d.group_state(9, 0), Liveness::Dead);
+        assert_eq!(d.alive_workers(9, 0), 0);
+    }
+
+    /// Recording injector: logs calls, returns fixed recovery latency.
+    #[derive(Default)]
+    struct RecordingInjector {
+        log: Mutex<Vec<String>>,
+    }
+
+    impl FaultInjector for RecordingInjector {
+        fn worker_crash(&self, g: usize, j: usize) {
+            self.log.lock().unwrap().push(format!("crash {g}.{j}"));
+        }
+        fn worker_restart(&self, g: usize, j: usize) -> f64 {
+            self.log.lock().unwrap().push(format!("restart {g}.{j}"));
+            1.5
+        }
+        fn link_sever(&self, g: usize) {
+            self.log.lock().unwrap().push(format!("sever {g}"));
+        }
+        fn link_heal(&self, g: usize) {
+            self.log.lock().unwrap().push(format!("heal {g}"));
+        }
+        fn uplink_degrade(&self, g: usize, d: f64, p: u64) {
+            self.log.lock().unwrap().push(format!("degrade {g} {d} {p}"));
+        }
+    }
+
+    #[test]
+    fn driver_fires_events_in_order_on_mock_time() {
+        let plan = FaultPlan::new()
+            .at(10, FaultAction::WorkerCrash { group: 0, index: 1 })
+            .at(
+                20,
+                FaultAction::UplinkDegrade {
+                    group: 1,
+                    delay_ms: 2.0,
+                    drop_per_mille: 100,
+                },
+            )
+            .at(30, FaultAction::WorkerRestart { group: 0, index: 1 })
+            .at(40, FaultAction::LinkSever { group: 1 })
+            .at(50, FaultAction::LinkHeal { group: 1 });
+        let injector = Arc::new(RecordingInjector::default());
+        let clock = Arc::new(MockClock::new());
+        let h = spawn(
+            Arc::clone(&injector) as Arc<dyn FaultInjector>,
+            plan,
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        )
+        .expect("spawn driver");
+        // Advance mock time past every event; the driver polls.
+        clock.set(60);
+        let report = h.join().expect("driver exits");
+        assert_eq!(report.event_counts(), [1, 1, 1, 1, 1]);
+        assert_eq!(report.recovery_ms, vec![1.5]);
+        assert_eq!(
+            *injector.log.lock().unwrap(),
+            vec![
+                "crash 0.1",
+                "degrade 1 2 100",
+                "restart 0.1",
+                "sever 1",
+                "heal 1",
+            ]
+        );
+    }
+}

@@ -35,19 +35,20 @@
 use crate::coding::CodedScheme;
 use crate::coordinator::backend::{ComputeBackend, WorkerShard};
 use crate::coordinator::batcher;
-use crate::coordinator::fault::FaultConfig;
+use crate::coordinator::chaos::{FaultInjector, LivenessConfig};
+use crate::coordinator::fault::{FaultConfig, FaultState};
 use crate::coordinator::master;
 use crate::coordinator::messages::{
     CompletionSlot, JobRequest, MasterMsg, ModelEntry, ModelId, RequestId,
-    SubmasterMsg, WorkerCmd,
+    SubmasterMsg, WorkerCmd, WorkerLink,
 };
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot, ModelMetricsSnapshot};
 use crate::coordinator::submaster::{self, LinkDelay};
-use crate::coordinator::worker::{self, WorkerDelay};
+use crate::coordinator::worker::{self, WorkerCtx, WorkerDelay};
 use crate::config::schema::ClusterConfig;
 use crate::linalg::Matrix;
 use crate::runtime::PjrtRuntime;
-use crate::sync::RwLock;
+use crate::sync::{Mutex, RwLock, WallClock};
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -276,14 +277,178 @@ impl ClientHandle {
     }
 }
 
+/// One worker's supervision record: everything needed to respawn the
+/// worker after a chaos crash with the exact same wiring.
+struct Seat {
+    /// Spawn context, retained verbatim for respawns.
+    ctx: WorkerCtx,
+    /// The live command channel; respawns swap the sender in place.
+    link: WorkerLink,
+    /// The worker's launch-time RNG seed; respawns derive a fresh
+    /// stream from it so straggler draws stay deterministic per seat.
+    seed: u64,
+}
+
+/// The cluster's recovery arm: owns every worker's [`Seat`], the live
+/// [`FaultState`] switchboard, and a copy of each registered model's
+/// encoded shards, so it can crash a worker (mark dead + stop its
+/// thread) and later restart it (respawn + re-ship every shard through
+/// [`WorkerCmd::Load`] before the new channel goes live). Implements
+/// [`FaultInjector`], so a [`crate::coordinator::chaos`] driver can
+/// replay a [`crate::coordinator::fault::FaultPlan`] against it.
+pub struct Supervisor {
+    /// Seats in flat `(group, index)` order.
+    seats: Vec<Seat>,
+    /// Flat index of each group's first worker.
+    group_offsets: Vec<usize>,
+    /// Workers per group.
+    group_sizes: Vec<usize>,
+    /// Live fault switchboard shared with every thread.
+    faults: Arc<FaultState>,
+    /// Encoded shards per model, in flat worker order — retained so a
+    /// restarted worker can be re-shipped everything it lost.
+    model_shards: Mutex<Vec<(ModelId, Vec<WorkerShard>)>>,
+    /// Threads created by restarts, joined at shutdown.
+    respawned: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// Bumped per restart: salts the respawned worker's RNG stream.
+    generation: AtomicU64,
+}
+
+impl Supervisor {
+    fn seat(&self, group: usize, index: usize) -> Option<&Seat> {
+        let off = *self.group_offsets.get(group)?;
+        if index >= self.group_sizes.get(group).copied().unwrap_or(0) {
+            return None;
+        }
+        self.seats.get(off + index)
+    }
+
+    /// Retain a registered model's shards for future re-ships. Must be
+    /// called **before** the registration ships its Loads: a restart
+    /// snapshots this table while it holds the link write lock, so
+    /// append-then-ship on one side and swap-then-snapshot on the
+    /// other guarantee no Load is lost to the race (at worst a shard
+    /// is shipped twice, and re-Loading identical data is idempotent).
+    fn retain_model(&self, id: ModelId, shards: Vec<WorkerShard>) {
+        self.model_shards.lock().push((id, shards));
+    }
+
+    /// The live fault switchboard (tests and the chaos CLI flip it).
+    pub fn fault_state(&self) -> &Arc<FaultState> {
+        &self.faults
+    }
+
+    /// Partials dropped so far by injected uplink loss.
+    pub fn injected_drops(&self) -> u64 {
+        self.faults.dropped()
+    }
+}
+
+impl FaultInjector for Supervisor {
+    fn worker_crash(&self, group: usize, index: usize) {
+        let Some(seat) = self.seat(group, index) else {
+            return;
+        };
+        // Dead flag first: the thread must not beacon between the
+        // Shutdown send and its exit.
+        self.faults.set_worker_dead(group, index, true);
+        let _ = seat.link.read().send(WorkerCmd::Shutdown);
+        crate::log_debug!("cluster", "chaos: crashed worker w({group},{index})");
+    }
+
+    fn worker_restart(&self, group: usize, index: usize) -> f64 {
+        let started = Instant::now();
+        let Some(seat) = self.seat(group, index) else {
+            return f64::NAN;
+        };
+        let flat = self.group_offsets.get(group).copied().unwrap_or(0) + index;
+        let generation = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        let (tx, rx) = mpsc::channel::<WorkerCmd>();
+        // Revive before spawning so the new thread's initial beacon
+        // isn't suppressed by its own dead flag.
+        self.faults.set_worker_dead(group, index, false);
+        let spawned = {
+            let mut link = seat.link.write();
+            // Idempotent with a prior crash; also makes a restart
+            // without one safe (the orphaned thread still exits).
+            let _ = link.send(WorkerCmd::Shutdown);
+            // Snapshot *inside* the link write lock: every model either
+            // appears here or will ship its Load through the new sender
+            // (see `retain_model`).
+            let loads: Vec<(ModelId, WorkerShard)> = self
+                .model_shards
+                .lock()
+                .iter()
+                .filter_map(|(id, shards)| Some((*id, shards.get(flat)?.clone())))
+                .collect();
+            let spawned = worker::spawn(
+                seat.ctx.clone(),
+                Rng::new(seat.seed ^ generation.wrapping_mul(0x9e37_79b9_7f4a_7c15)),
+                rx,
+            );
+            if spawned.is_ok() {
+                // Loads precede the sender swap, so any Compute routed
+                // through the new channel finds its shards installed.
+                for (id, ws) in loads {
+                    let _ = tx.send(WorkerCmd::Load {
+                        model: id,
+                        shard: Box::new(ws),
+                    });
+                }
+                *link = tx;
+            }
+            spawned
+        };
+        match spawned {
+            Ok(handle) => {
+                self.respawned.lock().push(handle);
+                let ms = started.elapsed().as_secs_f64() * 1e3;
+                crate::log_debug!(
+                    "cluster",
+                    "chaos: restarted worker w({group},{index}) in {ms:.2}ms"
+                );
+                ms
+            }
+            Err(e) => {
+                // The seat stays dead-flagged off but unservable; the
+                // failure detector will age it out.
+                crate::log_warn!(
+                    "cluster",
+                    "chaos: respawn of w({group},{index}) failed: {e}"
+                );
+                f64::NAN
+            }
+        }
+    }
+
+    fn link_sever(&self, group: usize) {
+        self.faults.set_link_dead(group, true);
+        crate::log_debug!("cluster", "chaos: severed uplink of group {group}");
+    }
+
+    fn link_heal(&self, group: usize) {
+        self.faults.set_link_dead(group, false);
+        crate::log_debug!("cluster", "chaos: healed uplink of group {group}");
+    }
+
+    fn uplink_degrade(&self, group: usize, delay_ms: f64, drop_per_mille: u64) {
+        self.faults.set_uplink_degrade(group, delay_ms, drop_per_mille);
+        crate::log_debug!(
+            "cluster",
+            "chaos: degraded uplink of group {group}: +{delay_ms:.1}ms, \
+             {drop_per_mille}/1000 loss"
+        );
+    }
+}
+
 /// The owning half of the job service: thread tree + model registry.
 pub struct ClusterCore {
     state: Arc<ServiceState>,
     scheme: Arc<dyn CodedScheme>,
     backend: ComputeBackend,
-    /// Worker channels in flat `(group, index)` order — registration
-    /// ships shard `i` to `worker_txs[i]`.
-    worker_txs: Vec<mpsc::Sender<WorkerCmd>>,
+    /// Worker seats, fault switchboard and retained shards — the
+    /// crash/restart machinery (also the [`FaultInjector`]).
+    supervisor: Arc<Supervisor>,
     threads: Vec<thread::JoinHandle<()>>,
     /// Joined first at shutdown (see `shutdown_inner`): the drain
     /// protocol must not depend on this thread being healthy.
@@ -354,7 +519,30 @@ impl ClusterCore {
         let (master_tx, master_rx) = mpsc::channel::<MasterMsg>();
         let mut threads = Vec::new();
         let mut submaster_txs = Vec::with_capacity(topology.n2());
-        let mut worker_txs = Vec::with_capacity(scheme.num_workers());
+        // Launch-time faults become the initial switchboard state; the
+        // scenario's per-group dead workers fold in too, so every
+        // thread consults one live source of truth.
+        let group_sizes = topology.group_sizes();
+        let fault_state = Arc::new(FaultState::from_config(&group_sizes, &faults));
+        for (g, spec) in topology.groups.iter().enumerate() {
+            for &j in &spec.dead_workers {
+                fault_state.set_worker_dead(g, j, true);
+            }
+        }
+        // Liveness tracking (config.chaos): heartbeat cadence for every
+        // worker/submaster plus the master's failure detector.
+        let liveness = if config.chaos.liveness {
+            LivenessConfig::new(
+                Duration::from_secs_f64(config.chaos.heartbeat_ms / 1e3),
+                Duration::from_secs_f64(config.chaos.suspect_ms / 1e3),
+                Duration::from_secs_f64(config.chaos.dead_ms / 1e3),
+            )
+        } else {
+            LivenessConfig::disabled()
+        };
+        let beat = liveness.beat_period();
+        let mut seats = Vec::with_capacity(scheme.num_workers());
+        let mut group_offsets = Vec::with_capacity(topology.n2());
 
         for (g, spec) in topology.groups.iter().enumerate() {
             let (sub_tx, sub_rx) = mpsc::channel::<SubmasterMsg>();
@@ -363,8 +551,9 @@ impl ClusterCore {
             // group's slowdown multiplier is model (the sim applies it
             // too), so they compose.
             let group_scale = config.straggler.scale * spec.slowdown();
+            group_offsets.push(seats.len());
             // Workers of this group, with the group's straggler profile.
-            let mut group_worker_txs = Vec::with_capacity(spec.n1);
+            let mut group_links = Vec::with_capacity(spec.n1);
             for j in 0..spec.n1 {
                 let (w_tx, w_rx) = mpsc::channel::<WorkerCmd>();
                 let delay = WorkerDelay {
@@ -372,20 +561,22 @@ impl ClusterCore {
                     scale: group_scale,
                     enabled: config.straggler.enabled,
                 };
-                let dead = faults.worker_dead(g, j) || spec.dead_workers.contains(&j);
-                threads.push(worker::spawn(
-                    g,
-                    j,
-                    backend.clone(),
+                let ctx = WorkerCtx {
+                    group: g,
+                    index: j,
+                    backend: backend.clone(),
                     delay,
-                    dead,
-                    spec.subtasks,
-                    Arc::clone(&cancel),
-                    seed_rng.split(),
-                    w_rx,
-                    sub_tx.clone(),
-                )?);
-                group_worker_txs.push(w_tx);
+                    subtasks: spec.subtasks,
+                    cancel: Arc::clone(&cancel),
+                    faults: Arc::clone(&fault_state),
+                    heartbeat: beat,
+                    submaster: sub_tx.clone(),
+                };
+                let seed = seed_rng.next_u64();
+                threads.push(worker::spawn(ctx.clone(), Rng::new(seed), w_rx)?);
+                let link: WorkerLink = Arc::new(RwLock::new(w_tx));
+                group_links.push(Arc::clone(&link));
+                seats.push(Seat { ctx, link, seed });
             }
             let link = LinkDelay {
                 model: spec.link,
@@ -394,12 +585,13 @@ impl ClusterCore {
             };
             threads.push(submaster::spawn(
                 g,
-                worker_txs.len(),
+                group_offsets[g],
                 Arc::clone(&scheme),
-                group_worker_txs.clone(),
+                group_links,
                 link,
-                faults.link_dead(g),
+                Arc::clone(&fault_state),
                 spec.subtasks,
+                beat,
                 Arc::clone(&cancel),
                 Arc::clone(&metrics),
                 seed_rng.split(),
@@ -407,13 +599,23 @@ impl ClusterCore {
                 master_tx.clone(),
             )?);
             submaster_txs.push(sub_tx);
-            worker_txs.extend(group_worker_txs);
         }
+        let supervisor = Arc::new(Supervisor {
+            seats,
+            group_offsets,
+            group_sizes,
+            faults: fault_state,
+            model_shards: Mutex::default(),
+            respawned: Mutex::default(),
+            generation: AtomicU64::new(0),
+        });
         threads.push(master::spawn(
             Arc::clone(&scheme),
             submaster_txs,
             Arc::clone(&metrics),
             Duration::from_secs_f64(config.serving.drain_ms / 1e3),
+            liveness,
+            Arc::new(WallClock::new()),
             master_rx,
         )?);
         let (req_tx, req_rx) = mpsc::channel::<JobRequest>();
@@ -438,7 +640,7 @@ impl ClusterCore {
             state,
             scheme,
             backend,
-            worker_txs,
+            supervisor,
             threads,
             batcher: Some(batcher),
             next_model: AtomicU32::new(0),
@@ -528,12 +730,31 @@ impl ClusterCore {
             )));
         }
         let id = ModelId(self.next_model.fetch_add(1, Ordering::Relaxed));
-        for (tx, ws) in self.worker_txs.iter().zip(worker_shards) {
-            tx.send(WorkerCmd::Load {
-                model: id,
-                shard: Box::new(ws),
-            })
-            .map_err(|_| Error::Coordinator("cluster is shutting down".into()))?;
+        // Retain BEFORE shipping: a concurrent chaos restart either
+        // sees this model in its snapshot or the Loads below go through
+        // the link it just swapped in (see `Supervisor::retain_model`).
+        self.supervisor.retain_model(id, worker_shards.clone());
+        for (seat, ws) in self.supervisor.seats.iter().zip(worker_shards) {
+            // Best-effort per seat: a crashed worker's channel is
+            // disconnected, but its shards are retained above and will
+            // re-ship when the supervisor restarts it.
+            if seat
+                .link
+                .read()
+                .send(WorkerCmd::Load {
+                    model: id,
+                    shard: Box::new(ws),
+                })
+                .is_err()
+            {
+                crate::log_debug!(
+                    "cluster",
+                    "model {id:?}: shard for crashed worker \
+                     w({},{}) deferred to restart",
+                    seat.ctx.group,
+                    seat.ctx.index
+                );
+            }
         }
         models.insert(
             name.to_string(),
@@ -571,6 +792,18 @@ impl ClusterCore {
             self.state.models.read().keys().cloned().collect();
         names.sort();
         names
+    }
+
+    /// The supervisor as a [`FaultInjector`] — hand it to
+    /// [`crate::coordinator::chaos::spawn`] to replay a fault plan
+    /// against this cluster.
+    pub fn injector(&self) -> Arc<dyn FaultInjector> {
+        Arc::clone(&self.supervisor) as Arc<dyn FaultInjector>
+    }
+
+    /// The supervisor itself (fault switchboard access for tests).
+    pub fn supervisor(&self) -> &Arc<Supervisor> {
+        &self.supervisor
     }
 
     /// Metrics snapshot, including the per-model admission breakdown.
@@ -616,6 +849,11 @@ impl ClusterCore {
             let _ = self.state.master_tx.send(MasterMsg::Drain);
         }
         for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        // Workers respawned by chaos restarts exit the same way (their
+        // submaster's Shutdown reaches them through the swapped link).
+        for t in self.supervisor.respawned.lock().drain(..) {
             let _ = t.join();
         }
     }
@@ -761,7 +999,7 @@ mod tests {
         let faults = FaultConfig::none()
             .with_dead_workers(&[(0, 0)]) // group 0 down to exactly k1
             .with_dead_links(&[2]); // group 2 unreachable
-        assert!(faults.survivable(3, 2, 3, 2));
+        assert!(faults.survivable_for(&config.code.topology));
         let cluster = Cluster::launch_with_faults(&config, &a, faults).unwrap();
         let x = vec![1.0, 1.0, 1.0, 1.0];
         let y = cluster
@@ -785,7 +1023,7 @@ mod tests {
         config.serving.drain_ms = 500.0;
         let a = test_matrix(8, 4, 4);
         let faults = FaultConfig::none().with_dead_links(&[0, 1]);
-        assert!(!faults.survivable(3, 2, 3, 2));
+        assert!(!faults.survivable_for(&config.code.topology));
         let cluster = Cluster::launch_with_faults(&config, &a, faults).unwrap();
         let res = cluster
             .submit(vec![1.0; 4])

@@ -1,8 +1,28 @@
 //! Failure injection for the in-process cluster.
+//!
+//! Three layers, from static to dynamic:
+//!
+//! * [`FaultConfig`] — faults present from launch (dead workers,
+//!   severed uplinks). Kept for scenario descriptions and merged into
+//!   the live [`FaultState`] at launch.
+//! * [`FaultState`] — the *live* fault switchboard shared by every
+//!   coordinator thread: per-worker dead flags, per-group uplink
+//!   sever flags and delay/drop degradation knobs, all atomics so the
+//!   chaos driver can flip them mid-serve without locks.
+//! * [`FaultPlan`] — a deterministic, seeded schedule of timed
+//!   [`FaultEvent`]s (crash/restart, sever/heal, uplink degradation
+//!   with bounded jitter) executed by the
+//!   [`chaos`](crate::coordinator::chaos) driver thread. Same seed,
+//!   same events — the chaos harness's determinism verdict rests on
+//!   this.
 
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
-/// Faults to inject into a launched cluster (fixed for its lifetime).
+use crate::scenario::Topology;
+use crate::util::rng::Rng;
+
+/// Faults to inject into a cluster at launch time.
 #[derive(Clone, Debug, Default)]
 pub struct FaultConfig {
     /// Workers `(group, index)` that never produce results.
@@ -41,18 +61,334 @@ impl FaultConfig {
     }
 
     /// Whether an `(n1,k1)×(n2,k2)` deployment can still serve requests
-    /// under these faults (used by tests to assert expected outcomes).
+    /// under these faults.
+    ///
+    /// Assumes a *uniform* code: every group the same `(n1, k1)`, one
+    /// sub-task per worker. Heterogeneous topologies (per-group
+    /// `n1_g`/`k1_g`, scenario-level dead workers, partial-work `r`)
+    /// need [`FaultConfig::survivable_for`].
+    #[deprecated(
+        since = "0.3.0",
+        note = "uniform-code only; use survivable_for(&Topology), which \
+                honors per-group (n1_g, k1_g), scenario dead workers and \
+                partial-work sub-tasks"
+    )]
     pub fn survivable(&self, n1: usize, k1: usize, n2: usize, k2: usize) -> bool {
-        let healthy_groups = (0..n2)
-            .filter(|&g| {
-                if self.link_dead(g) {
+        self.survivable_for(&Topology::homogeneous(n1, k1, n2, k2))
+    }
+
+    /// Whether `topo` can still serve requests under these faults.
+    ///
+    /// A group is healthy when its uplink is alive and its reachable
+    /// sub-results — alive workers (neither scenario-dead nor
+    /// fault-dead) times `subtasks` per worker — still meet the group
+    /// recovery threshold `k1_g · r`. The deployment serves while at
+    /// least `k2` groups are healthy. This is exactly the degradation
+    /// threshold the master's failure detector enforces at runtime.
+    pub fn survivable_for(&self, topo: &Topology) -> bool {
+        let healthy = topo
+            .groups
+            .iter()
+            .enumerate()
+            .filter(|(g, spec)| {
+                if self.link_dead(*g) {
                     return false;
                 }
-                let alive = (0..n1).filter(|&w| !self.worker_dead(g, w)).count();
-                alive >= k1
+                let alive = (0..spec.n1)
+                    .filter(|&j| {
+                        !self.worker_dead(*g, j) && !spec.dead_workers.contains(&j)
+                    })
+                    .count();
+                alive * spec.subtasks >= spec.recovery_subresults()
             })
             .count();
-        healthy_groups >= k2
+        healthy >= topo.k2
+    }
+}
+
+/// Sentinel meaning "no injected uplink delay".
+const NO_DELAY_BITS: u64 = 0;
+
+/// Live fault switchboard shared across the coordinator tree.
+///
+/// Workers consult their dead flag before computing or heartbeating;
+/// submasters consult the link flag and degradation knobs before
+/// shipping a partial upstream; the chaos driver and the cluster
+/// supervisor flip them. All fields are atomics — reads on the request
+/// hot path are wait-free, and out-of-range indices are treated as
+/// "no fault" rather than panicking.
+#[derive(Debug)]
+pub struct FaultState {
+    /// Per-worker dead flags, indexed `[group][index]`.
+    workers: Vec<Vec<AtomicBool>>,
+    /// Per-group uplink sever flags.
+    links: Vec<AtomicBool>,
+    /// Per-group injected uplink delay ceiling, f64 milliseconds as
+    /// bits (0 = none; actual delay is uniform in `[0, ceiling)`).
+    uplink_delay_bits: Vec<AtomicU64>,
+    /// Per-group injected uplink loss, in dropped partials per 1000.
+    uplink_drop_per_mille: Vec<AtomicU64>,
+    /// Partials dropped by injected loss (observability counter).
+    dropped: AtomicU64,
+}
+
+impl FaultState {
+    /// All-healthy state for groups of the given sizes.
+    pub fn new(group_sizes: &[usize]) -> Self {
+        Self {
+            workers: group_sizes
+                .iter()
+                .map(|&n| (0..n).map(|_| AtomicBool::new(false)).collect())
+                .collect(),
+            links: group_sizes.iter().map(|_| AtomicBool::new(false)).collect(),
+            uplink_delay_bits: group_sizes
+                .iter()
+                .map(|_| AtomicU64::new(NO_DELAY_BITS))
+                .collect(),
+            uplink_drop_per_mille: group_sizes.iter().map(|_| AtomicU64::new(0)).collect(),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// State seeded from a launch-time [`FaultConfig`].
+    pub fn from_config(group_sizes: &[usize], cfg: &FaultConfig) -> Self {
+        let s = Self::new(group_sizes);
+        for &(g, j) in &cfg.dead_workers {
+            s.set_worker_dead(g, j, true);
+        }
+        for &g in &cfg.dead_links {
+            s.set_link_dead(g, true);
+        }
+        s
+    }
+
+    /// Number of groups tracked.
+    pub fn n_groups(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Is this worker currently dead? Out-of-range ⇒ `false`.
+    pub fn worker_dead(&self, group: usize, index: usize) -> bool {
+        self.workers
+            .get(group)
+            .and_then(|g| g.get(index))
+            .map(|b| b.load(Ordering::SeqCst))
+            .unwrap_or(false)
+    }
+
+    /// Flip a worker's dead flag. Out-of-range ⇒ no-op.
+    pub fn set_worker_dead(&self, group: usize, index: usize, dead: bool) {
+        if let Some(b) = self.workers.get(group).and_then(|g| g.get(index)) {
+            b.store(dead, Ordering::SeqCst);
+        }
+    }
+
+    /// Workers of `group` currently not dead.
+    pub fn alive_in_group(&self, group: usize) -> usize {
+        self.workers
+            .get(group)
+            .map(|g| g.iter().filter(|b| !b.load(Ordering::SeqCst)).count())
+            .unwrap_or(0)
+    }
+
+    /// Is this group's uplink currently severed? Out-of-range ⇒ `false`.
+    pub fn link_dead(&self, group: usize) -> bool {
+        self.links
+            .get(group)
+            .map(|b| b.load(Ordering::SeqCst))
+            .unwrap_or(false)
+    }
+
+    /// Flip a group's uplink sever flag. Out-of-range ⇒ no-op.
+    pub fn set_link_dead(&self, group: usize, dead: bool) {
+        if let Some(b) = self.links.get(group) {
+            b.store(dead, Ordering::SeqCst);
+        }
+    }
+
+    /// Degrade a group's uplink: every shipped partial gains a delay
+    /// uniform in `[0, delay_ms)` and is dropped with probability
+    /// `drop_per_mille / 1000`. `(0.0, 0)` restores the link.
+    pub fn set_uplink_degrade(&self, group: usize, delay_ms: f64, drop_per_mille: u64) {
+        if let Some(d) = self.uplink_delay_bits.get(group) {
+            let ceil = if delay_ms.is_finite() && delay_ms > 0.0 {
+                delay_ms
+            } else {
+                0.0
+            };
+            d.store(ceil.to_bits(), Ordering::SeqCst);
+        }
+        if let Some(p) = self.uplink_drop_per_mille.get(group) {
+            p.store(drop_per_mille.min(1000), Ordering::SeqCst);
+        }
+    }
+
+    /// Current injected uplink delay ceiling for `group`, ms (0 = none).
+    pub fn uplink_delay_ms(&self, group: usize) -> f64 {
+        self.uplink_delay_bits
+            .get(group)
+            .map(|d| f64::from_bits(d.load(Ordering::SeqCst)))
+            .unwrap_or(0.0)
+    }
+
+    /// Current injected uplink loss for `group`, per 1000 partials.
+    pub fn uplink_drop_per_mille(&self, group: usize) -> u64 {
+        self.uplink_drop_per_mille
+            .get(group)
+            .map(|p| p.load(Ordering::SeqCst))
+            .unwrap_or(0)
+    }
+
+    /// Count one partial dropped by injected loss.
+    pub fn record_dropped(&self) {
+        self.dropped.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Partials dropped by injected loss so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::SeqCst)
+    }
+}
+
+/// One timed fault action.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Kill worker `(group, index)`: its thread exits, its loaded
+    /// shards are gone until a restart re-ships them.
+    WorkerCrash { group: usize, index: usize },
+    /// Respawn worker `(group, index)` and re-ship its shards for
+    /// every registered model.
+    WorkerRestart { group: usize, index: usize },
+    /// Sever a group's uplink: partials and heartbeats stop reaching
+    /// the master.
+    LinkSever { group: usize },
+    /// Restore a severed uplink.
+    LinkHeal { group: usize },
+    /// Degrade a group's uplink: per-partial delay uniform in
+    /// `[0, delay_ms)`, loss at `drop_per_mille / 1000`.
+    /// `(0.0, 0)` heals the degradation.
+    UplinkDegrade {
+        group: usize,
+        delay_ms: f64,
+        drop_per_mille: u64,
+    },
+}
+
+/// A [`FaultAction`] at a point in time (ms from serve start).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// When to fire, milliseconds after the chaos driver starts.
+    pub at_ms: u64,
+    /// What to do.
+    pub action: FaultAction,
+}
+
+/// A deterministic schedule of timed fault events, kept sorted by
+/// firing time (stable for ties: insertion order).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Empty plan.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an event, keeping the schedule sorted by time (builder).
+    pub fn at(mut self, at_ms: u64, action: FaultAction) -> Self {
+        let pos = self.events.partition_point(|e| e.at_ms <= at_ms);
+        self.events.insert(pos, FaultEvent { at_ms, action });
+        self
+    }
+
+    /// The schedule, sorted by firing time.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Number of scheduled events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether the schedule is empty.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Seeded churn schedule that never breaks survivability: in
+    /// rounds of `period_ms`, each group with spare redundancy
+    /// (`alive > k1`) crashes one randomly chosen non-scenario-dead
+    /// worker at a jittered time and restarts it well before the next
+    /// round. At every instant each group keeps ≥ `k1_g · r` reachable
+    /// sub-results and every uplink stays alive, so ≥ `k2` groups stay
+    /// healthy throughout — jobs under this plan must all complete.
+    ///
+    /// Deterministic: same `(seed, topo, duration_ms, period_ms)` ⇒
+    /// same schedule, event for event.
+    pub fn survivable_churn(
+        seed: u64,
+        topo: &Topology,
+        duration_ms: u64,
+        period_ms: u64,
+    ) -> Self {
+        let period = period_ms.max(8);
+        let jitter = |rng: &mut Rng, bound: u64| -> u64 {
+            if bound == 0 {
+                0
+            } else {
+                rng.next_u64() % bound
+            }
+        };
+        let mut rng = Rng::new(seed);
+        let mut plan = Self::new();
+        // Downtime fits inside the round: crash at t+[0,p/4), restart
+        // at crash + p/3 + [0,p/8) < t + p.
+        let mut t = period / 2;
+        while t + period < duration_ms {
+            for (g, spec) in topo.groups.iter().enumerate() {
+                // Candidates: workers the scenario hasn't already
+                // killed. Crash one only if the group keeps >= k1.
+                let candidates: Vec<usize> = (0..spec.n1)
+                    .filter(|j| !spec.dead_workers.contains(j))
+                    .collect();
+                if candidates.len() <= spec.k1 {
+                    continue; // no spare redundancy in this group
+                }
+                let pick = candidates[(rng.next_u64() as usize) % candidates.len()];
+                let crash_at = t + jitter(&mut rng, period / 4);
+                let down = period / 3 + jitter(&mut rng, period / 8);
+                plan = plan
+                    .at(crash_at, FaultAction::WorkerCrash { group: g, index: pick })
+                    .at(
+                        crash_at + down.max(1),
+                        FaultAction::WorkerRestart { group: g, index: pick },
+                    );
+            }
+            t += period;
+        }
+        plan
+    }
+
+    /// Seeded schedule that breaks survivability: severs
+    /// `n2 - k2 + 1` uplinks (chosen by a seeded rotation) at jittered
+    /// times near `at_ms`, and never heals them. Fewer than `k2`
+    /// groups stay healthy, so jobs in flight or submitted afterwards
+    /// must fail fast with `Error::Insufficient`.
+    pub fn unsurvivable_severs(seed: u64, topo: &Topology, at_ms: u64) -> Self {
+        let n2 = topo.n2();
+        let to_sever = n2 - topo.k2 + 1;
+        let mut rng = Rng::new(seed);
+        let start = (rng.next_u64() as usize) % n2.max(1);
+        let mut plan = Self::new();
+        for i in 0..to_sever {
+            let g = (start + i) % n2;
+            let when = at_ms + rng.next_u64() % 40;
+            plan = plan.at(when, FaultAction::LinkSever { group: g });
+        }
+        plan
     }
 }
 
@@ -61,7 +397,8 @@ mod tests {
     use super::*;
 
     #[test]
-    fn survivability_logic() {
+    #[allow(deprecated)]
+    fn survivability_logic_uniform() {
         let f = FaultConfig::none();
         assert!(f.survivable(3, 2, 3, 2));
 
@@ -81,5 +418,158 @@ mod tests {
         // Attrition to exactly k1 survives.
         let f = FaultConfig::none().with_dead_workers(&[(0, 0)]);
         assert!(f.survivable(3, 2, 3, 2));
+    }
+
+    #[test]
+    fn survivability_is_topology_aware() {
+        // Heterogeneous: group 0 is (2,1), group 1 is (4,3), k2 = 2.
+        let mut topo = Topology {
+            groups: vec![GroupSpecHelper::new(2, 1), GroupSpecHelper::new(4, 3)],
+            k2: 2,
+        };
+        // Uniform form (fed max n1) would think killing worker (0,1)
+        // leaves plenty; topology form knows group 0 only has 2.
+        let f = FaultConfig::none().with_dead_workers(&[(0, 0), (0, 1)]);
+        assert!(!f.survivable_for(&topo));
+        // One dead in the (4,3) group: 3 alive >= k1 = 3, survivable.
+        let f = FaultConfig::none().with_dead_workers(&[(1, 0)]);
+        assert!(f.survivable_for(&topo));
+        // Scenario-level dead workers are merged in: group 1 already
+        // lost a worker in the spec, so one more fault kills it.
+        topo.groups[1].dead_workers = vec![3];
+        assert!(!f.survivable_for(&topo));
+        // Severed link overrides worker health.
+        let f = FaultConfig::none().with_dead_links(&[0]);
+        topo.groups[1].dead_workers = vec![];
+        assert!(!f.survivable_for(&topo), "group 1 alone < k2 = 2");
+    }
+
+    use crate::scenario::GroupSpec as GroupSpecHelper;
+
+    #[test]
+    fn deprecated_uniform_form_delegates() {
+        // The uniform form must agree with the topology form on the
+        // homogeneous expansion it documents.
+        let f = FaultConfig::none().with_dead_links(&[0, 1]);
+        #[allow(deprecated)]
+        let uniform = f.survivable(3, 2, 3, 2);
+        assert_eq!(uniform, f.survivable_for(&Topology::homogeneous(3, 2, 3, 2)));
+    }
+
+    #[test]
+    fn fault_state_flips_and_bounds() {
+        let s = FaultState::new(&[3, 2]);
+        assert_eq!(s.n_groups(), 2);
+        assert!(!s.worker_dead(0, 1));
+        s.set_worker_dead(0, 1, true);
+        assert!(s.worker_dead(0, 1));
+        assert_eq!(s.alive_in_group(0), 2);
+        s.set_worker_dead(0, 1, false);
+        assert_eq!(s.alive_in_group(0), 3);
+        // Out-of-range reads are "no fault", writes are no-ops.
+        assert!(!s.worker_dead(7, 7));
+        s.set_worker_dead(7, 7, true);
+        assert!(!s.link_dead(9));
+        s.set_link_dead(0, true);
+        assert!(s.link_dead(0));
+        // Degradation knobs round-trip; garbage is clamped.
+        s.set_uplink_degrade(1, 5.0, 250);
+        assert_eq!(s.uplink_delay_ms(1), 5.0);
+        assert_eq!(s.uplink_drop_per_mille(1), 250);
+        s.set_uplink_degrade(1, f64::NAN, 5000);
+        assert_eq!(s.uplink_delay_ms(1), 0.0);
+        assert_eq!(s.uplink_drop_per_mille(1), 1000);
+        s.record_dropped();
+        assert_eq!(s.dropped(), 1);
+    }
+
+    #[test]
+    fn fault_state_from_config_merges() {
+        let cfg = FaultConfig::none()
+            .with_dead_workers(&[(0, 2), (1, 0)])
+            .with_dead_links(&[1]);
+        let s = FaultState::from_config(&[3, 3], &cfg);
+        assert!(s.worker_dead(0, 2));
+        assert!(s.worker_dead(1, 0));
+        assert!(!s.worker_dead(0, 0));
+        assert!(s.link_dead(1));
+        assert!(!s.link_dead(0));
+    }
+
+    #[test]
+    fn plan_builder_keeps_schedule_sorted() {
+        let plan = FaultPlan::new()
+            .at(50, FaultAction::LinkSever { group: 1 })
+            .at(10, FaultAction::WorkerCrash { group: 0, index: 2 })
+            .at(50, FaultAction::LinkHeal { group: 1 });
+        let times: Vec<u64> = plan.events().iter().map(|e| e.at_ms).collect();
+        assert_eq!(times, vec![10, 50, 50]);
+        // Stable for ties: sever inserted before heal stays first.
+        assert_eq!(plan.events()[1].action, FaultAction::LinkSever { group: 1 });
+        assert_eq!(plan.len(), 3);
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn survivable_churn_is_deterministic_and_survivable() {
+        let topo = Topology::homogeneous(3, 2, 3, 2);
+        let a = FaultPlan::survivable_churn(7, &topo, 2000, 250);
+        let b = FaultPlan::survivable_churn(7, &topo, 2000, 250);
+        assert_eq!(a, b, "same seed, same schedule");
+        let c = FaultPlan::survivable_churn(8, &topo, 2000, 250);
+        assert_ne!(a, c, "different seed perturbs the schedule");
+        assert!(!a.is_empty());
+
+        // Replay the schedule: at every instant each group keeps
+        // >= k1 alive workers (crash is always paired with a restart,
+        // one victim per group per round).
+        let mut dead: Vec<Vec<bool>> = topo.groups.iter().map(|g| vec![false; g.n1]).collect();
+        for e in a.events() {
+            match e.action {
+                FaultAction::WorkerCrash { group, index } => {
+                    dead[group][index] = true;
+                    let alive = dead[group].iter().filter(|d| !**d).count();
+                    assert!(alive >= topo.groups[group].k1, "never below k1");
+                }
+                FaultAction::WorkerRestart { group, index } => dead[group][index] = false,
+                _ => panic!("churn plan only crashes and restarts"),
+            }
+        }
+        assert!(
+            dead.iter().flatten().all(|d| !d),
+            "every crash is healed by the end of the plan"
+        );
+    }
+
+    #[test]
+    fn churn_skips_groups_without_redundancy() {
+        // (1,1) groups have no spare worker: the plan must leave them
+        // alone entirely rather than break survivability.
+        let topo = Topology::homogeneous(1, 1, 3, 2);
+        let plan = FaultPlan::survivable_churn(7, &topo, 5000, 200);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn unsurvivable_severs_break_k2() {
+        let topo = Topology::homogeneous(3, 2, 3, 2);
+        let plan = FaultPlan::unsurvivable_severs(11, &topo, 100);
+        assert_eq!(plan.len(), 3 - 2 + 1);
+        let mut cfg = FaultConfig::none();
+        for e in plan.events() {
+            assert!(e.at_ms >= 100 && e.at_ms < 140, "bounded jitter");
+            match e.action {
+                FaultAction::LinkSever { group } => {
+                    cfg = cfg.with_dead_links(&[group]);
+                }
+                _ => panic!("sever-only plan"),
+            }
+        }
+        assert!(!cfg.survivable_for(&topo));
+        assert_eq!(
+            plan,
+            FaultPlan::unsurvivable_severs(11, &topo, 100),
+            "seeded: replayable event for event"
+        );
     }
 }

@@ -28,11 +28,12 @@
 //! `shutdown`: every accepted request gets a terminal outcome.
 
 use crate::coding::{CodedScheme, DecodeOutput, DecodeProgress, Decoder, WorkerResult};
+use crate::coordinator::chaos::{FailureDetector, LivenessConfig};
 use crate::coordinator::messages::{
     JobError, JobId, MasterMsg, ReplyRoute, RequestId, SubmasterMsg,
 };
 use crate::coordinator::metrics::Metrics;
-use crate::sync::DrainState;
+use crate::sync::{Clock, DrainState};
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -110,16 +111,85 @@ fn gc_done_jobs(jobs: &mut HashMap<JobId, JobState>) {
     }
 }
 
+/// One failure-detector sweep: refresh the per-group liveness gauges
+/// and, when fewer than `k2` groups remain healthy, fail every active
+/// job fast with [`JobError::Insufficient`] — an undecodable job must
+/// not hang until its client's deadline. Returns `true` when a drain
+/// in progress settled its last job.
+#[allow(clippy::too_many_arguments)]
+fn liveness_sweep(
+    detector: &FailureDetector,
+    now_ms: u64,
+    thresholds: &[usize],
+    k2: usize,
+    metrics: &Metrics,
+    jobs: &mut HashMap<JobId, JobState>,
+    req_index: &mut HashMap<RequestId, JobId>,
+    drain: &mut DrainState,
+    submasters: &[mpsc::Sender<SubmasterMsg>],
+) -> bool {
+    for g in 0..thresholds.len() {
+        metrics.set_group_liveness(
+            g,
+            detector.alive_workers(g, now_ms) as u64,
+            detector.suspected_workers(g, now_ms) as u64,
+        );
+    }
+    let healthy = detector.healthy_groups(thresholds, now_ms);
+    if healthy >= k2 {
+        return false;
+    }
+    let active: Vec<JobId> = jobs
+        .iter()
+        .filter(|(_, s)| matches!(s, JobState::Active(_)))
+        .map(|(id, _)| *id)
+        .collect();
+    let mut can_exit = false;
+    for id in active {
+        if let Some(JobState::Active(job)) = jobs.get_mut(&id) {
+            Metrics::inc(&metrics.failed);
+            for route in &job.replies {
+                req_index.remove(&route.req_id);
+                route.slot.complete(Err(JobError::Insufficient {
+                    needed: k2,
+                    got: healthy,
+                }));
+            }
+            job.replies.clear();
+        }
+        jobs.insert(id, JobState::Done);
+        if drain.job_settled() {
+            can_exit = true;
+        }
+        for sm in submasters {
+            let _ = sm.send(SubmasterMsg::Finish(id));
+        }
+        crate::log_debug!(
+            "master",
+            "job {id:?} failed fast: {healthy} healthy group(s) < k2 = {k2}"
+        );
+    }
+    can_exit
+}
+
 /// Spawn the master thread. `drain_grace` bounds how long a shutdown
-/// drain waits for in-flight jobs before failing their routes.
-/// Errors only if the OS refuses to spawn the thread.
+/// drain waits for in-flight jobs before failing their routes (an
+/// **absolute** budget from the moment the drain begins — heartbeats
+/// or other chatter must not keep resetting it). With `liveness`
+/// enabled the master runs a [`FailureDetector`] over the beacon
+/// streams on `clock` time, exports per-group `alive`/`suspected`
+/// gauges, and fails active jobs fast once fewer than `k2` groups are
+/// healthy. Errors only if the OS refuses to spawn the thread.
 pub fn spawn(
     scheme: Arc<dyn CodedScheme>,
     submasters: Vec<mpsc::Sender<SubmasterMsg>>,
     metrics: Arc<Metrics>,
     drain_grace: Duration,
+    liveness: LivenessConfig,
+    clock: Arc<dyn Clock>,
     rx: mpsc::Receiver<MasterMsg>,
 ) -> crate::Result<thread::JoinHandle<()>> {
+    let topo = scheme.topology();
     let handle = thread::Builder::new()
         .name("hiercode-master".to_string())
         .spawn(move || {
@@ -135,14 +205,59 @@ pub fn spawn(
             // In-flight (Active) job count + drain flag; drives the
             // drain exit (model-checked: see `tests/model_check.rs`).
             let mut drain = DrainState::new();
+            // Absolute drain deadline, set when the drain begins.
+            let mut drain_deadline: Option<Instant> = None;
+            // Failure detector over the liveness beacon streams.
+            let thresholds: Vec<usize> = topo.groups.iter().map(|g| g.k1).collect();
+            let group_sizes = topo.group_sizes();
+            let mut detector = FailureDetector::new(
+                &group_sizes,
+                u64::try_from(liveness.suspect.as_millis()).unwrap_or(u64::MAX),
+                u64::try_from(liveness.dead.as_millis()).unwrap_or(u64::MAX),
+                clock.now_ms(),
+            );
+            let mut last_sweep = Instant::now();
             loop {
                 let msg = if drain.draining() {
-                    // Drain mode: in-flight jobs get `drain_grace` of
-                    // quiet time to finish; then we abandon them (their
-                    // routes are failed below — never left hanging).
-                    match rx.recv_timeout(drain_grace) {
+                    // Drain mode: in-flight jobs share one absolute
+                    // grace budget; then we abandon them (their routes
+                    // are failed below — never left hanging). The
+                    // budget must NOT reset per message: liveness
+                    // beacons arrive faster than any grace, and a
+                    // quiet-time drain would never fire under them.
+                    let now = Instant::now();
+                    let deadline = drain_deadline.unwrap_or(now);
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
                         Ok(m) => m,
                         Err(_) => break,
+                    }
+                } else if liveness.enabled {
+                    // Liveness mode: wake at the heartbeat cadence to
+                    // sweep the detector even when no messages flow.
+                    match rx.recv_timeout(liveness.heartbeat) {
+                        Ok(m) => m,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            let can_exit = liveness_sweep(
+                                &detector,
+                                clock.now_ms(),
+                                &thresholds,
+                                topo.k2,
+                                &metrics,
+                                &mut jobs,
+                                &mut req_index,
+                                &mut drain,
+                                &submasters,
+                            );
+                            last_sweep = Instant::now();
+                            if can_exit {
+                                break;
+                            }
+                            continue;
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
                 } else {
                     match rx.recv() {
@@ -151,10 +266,14 @@ pub fn spawn(
                     }
                 };
                 match msg {
+                    MasterMsg::Heartbeat { group, worker } => {
+                        detector.beat(group, worker, clock.now_ms());
+                    }
                     MasterMsg::Drain => {
                         if drain.begin_drain() {
                             break;
                         }
+                        drain_deadline = Some(Instant::now() + drain_grace);
                         crate::log_debug!(
                             "master",
                             "draining: {} job(s) in flight",
@@ -329,6 +448,26 @@ pub fn spawn(
                         }
                     }
                 }
+                // A steady message stream (heartbeats, partials) keeps
+                // the recv from timing out, so sweep opportunistically
+                // in the message path too.
+                if liveness.enabled && last_sweep.elapsed() >= liveness.heartbeat {
+                    let can_exit = liveness_sweep(
+                        &detector,
+                        clock.now_ms(),
+                        &thresholds,
+                        topo.k2,
+                        &metrics,
+                        &mut jobs,
+                        &mut req_index,
+                        &mut drain,
+                        &submasters,
+                    );
+                    last_sweep = Instant::now();
+                    if can_exit {
+                        break;
+                    }
+                }
             }
             // Exit invariant: no accepted request may be left pending.
             // Jobs still Active here outlived the drain grace (e.g.
@@ -408,6 +547,8 @@ mod tests {
             vec![], // no submasters needed: we inject partials
             Arc::clone(&metrics),
             Duration::from_secs(5),
+            LivenessConfig::disabled(),
+            Arc::new(crate::sync::WallClock::new()),
             master_rx,
         )
         .expect("spawn master");
@@ -490,6 +631,8 @@ mod tests {
             vec![],
             Arc::clone(&metrics),
             Duration::from_secs(5),
+            LivenessConfig::disabled(),
+            Arc::new(crate::sync::WallClock::new()),
             master_rx,
         )
         .expect("spawn master");
@@ -547,6 +690,8 @@ mod tests {
             vec![],
             Arc::clone(&metrics),
             Duration::from_secs(5),
+            LivenessConfig::disabled(),
+            Arc::new(crate::sync::WallClock::new()),
             master_rx,
         )
         .expect("spawn master");
@@ -585,6 +730,8 @@ mod tests {
             vec![],
             Arc::clone(&metrics),
             Duration::from_secs(5),
+            LivenessConfig::disabled(),
+            Arc::new(crate::sync::WallClock::new()),
             master_rx,
         )
         .expect("spawn master");
@@ -630,6 +777,8 @@ mod tests {
             vec![],
             Arc::clone(&metrics),
             Duration::from_secs(5),
+            LivenessConfig::disabled(),
+            Arc::new(crate::sync::WallClock::new()),
             master_rx,
         )
         .expect("spawn master");
@@ -674,6 +823,8 @@ mod tests {
             vec![],
             Arc::clone(&metrics),
             Duration::from_millis(50), // short grace
+            LivenessConfig::disabled(),
+            Arc::new(crate::sync::WallClock::new()),
             master_rx,
         )
         .expect("spawn master");
@@ -695,5 +846,119 @@ mod tests {
         h.join().unwrap();
         assert_eq!(slot.wait(), Err(JobError::Shutdown));
         assert_eq!(metrics.snapshot().failed, 1);
+    }
+
+    /// Drain vs. crash race regression: liveness heartbeats arrive
+    /// faster than the drain grace. A per-message `recv_timeout` would
+    /// reset its quiet-time budget on every beacon and never expire;
+    /// the deadline must be absolute from the moment the drain begins.
+    #[test]
+    fn drain_deadline_is_absolute_under_heartbeat_chatter() {
+        let code = Arc::new(HierarchicalCode::homogeneous(2, 1, 2, 1).unwrap());
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let scheme: Arc<dyn CodedScheme> = code;
+        let h = spawn(
+            scheme,
+            vec![],
+            Arc::clone(&metrics),
+            Duration::from_millis(50), // short grace
+            // Long detector timeouts: beacons flow, nothing is marked.
+            LivenessConfig::new(
+                Duration::from_millis(5),
+                Duration::from_secs(60),
+                Duration::from_secs(120),
+            ),
+            Arc::new(crate::sync::WallClock::new()),
+            master_rx,
+        )
+        .expect("spawn master");
+        let entry = test_entry(1, 2);
+        let slot = Arc::new(CompletionSlot::new());
+        master_tx
+            .send(MasterMsg::Batch {
+                job: JobBroadcast {
+                    id: JobId(1),
+                    model: entry.id,
+                    out_rows: 2,
+                    x: Arc::new(Matrix::identity(1)),
+                },
+                replies: vec![route(&entry, &slot, 0, 0)],
+            })
+            .unwrap();
+        master_tx.send(MasterMsg::Drain).unwrap();
+        // Chatter: a beacon every ~2ms, far below the 50ms grace. The
+        // stuck job means only the grace deadline can end the drain.
+        let started = Instant::now();
+        while started.elapsed() < Duration::from_secs(5) {
+            let alive = master_tx
+                .send(MasterMsg::Heartbeat {
+                    group: 0,
+                    worker: Some(0),
+                })
+                .is_ok();
+            if !alive {
+                break; // master exited and dropped its receiver
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "drain never expired under heartbeat chatter"
+        );
+        h.join().unwrap();
+        assert_eq!(slot.wait(), Err(JobError::Shutdown));
+    }
+
+    /// With every beacon stream silent past `dead`, the sweep fails
+    /// active jobs fast with `Insufficient` instead of letting them
+    /// hang to their deadline. Time is mock-driven: no detector sleeps.
+    #[test]
+    fn liveness_sweep_fails_active_jobs_when_below_k2() {
+        let code = Arc::new(HierarchicalCode::homogeneous(2, 1, 2, 2).unwrap());
+        let (master_tx, master_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let scheme: Arc<dyn CodedScheme> = code;
+        let clock = Arc::new(crate::sync::MockClock::new());
+        let h = spawn(
+            scheme,
+            vec![],
+            Arc::clone(&metrics),
+            Duration::from_secs(5),
+            LivenessConfig::new(
+                Duration::from_millis(2),
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+            ),
+            Arc::clone(&clock) as Arc<dyn crate::sync::Clock>,
+            master_rx,
+        )
+        .expect("spawn master");
+        let entry = test_entry(1, 2);
+        let slot = Arc::new(CompletionSlot::new());
+        master_tx
+            .send(MasterMsg::Batch {
+                job: JobBroadcast {
+                    id: JobId(3),
+                    model: entry.id,
+                    out_rows: 2,
+                    x: Arc::new(Matrix::identity(1)),
+                },
+                replies: vec![route(&entry, &slot, 0, 0)],
+            })
+            .unwrap();
+        // Silence every beacon stream well past the dead threshold.
+        clock.set(1_000);
+        assert_eq!(
+            slot.wait(),
+            Err(JobError::Insufficient { needed: 2, got: 0 })
+        );
+        assert_eq!(metrics.snapshot().failed, 1);
+        let snap = metrics.snapshot();
+        for g in &snap.per_group {
+            assert_eq!(g.alive_workers, Some(0));
+        }
+        master_tx.send(MasterMsg::Drain).unwrap();
+        h.join().unwrap();
     }
 }

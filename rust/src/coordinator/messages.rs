@@ -32,6 +32,15 @@ pub enum JobError {
     Failed(String),
     /// The cluster shut down before the request completed.
     Shutdown,
+    /// The failure detector found fewer healthy groups than the outer
+    /// threshold `k2`: the job can never decode, so it fails fast
+    /// instead of hanging until its deadline.
+    Insufficient {
+        /// Healthy groups required (`k2`).
+        needed: usize,
+        /// Healthy groups remaining.
+        got: usize,
+    },
 }
 
 impl From<JobError> for crate::Error {
@@ -41,6 +50,9 @@ impl From<JobError> for crate::Error {
             JobError::Failed(m) => crate::Error::Coordinator(m),
             JobError::Shutdown => {
                 crate::Error::Coordinator("cluster shut down before replying".into())
+            }
+            JobError::Insufficient { needed, got } => {
+                crate::Error::Insufficient { needed, got }
             }
         }
     }
@@ -289,6 +301,14 @@ pub struct PartialResult {
     pub finished_at: Instant,
 }
 
+/// A worker's command channel behind a reader/writer lock: senders
+/// (submaster broadcasts, model registration) go through `read()`;
+/// a chaos restart swaps in the respawned worker's fresh channel under
+/// `write()`, which also mutually excludes the shard re-ship against
+/// concurrent sends — `Load`-before-`Compute` FIFO holds on the new
+/// channel too.
+pub type WorkerLink = Arc<RwLock<std::sync::mpsc::Sender<WorkerCmd>>>;
+
 /// Commands to a worker thread.
 #[derive(Debug)]
 pub enum WorkerCmd {
@@ -317,6 +337,10 @@ pub enum SubmasterMsg {
     /// The master finished (or cancelled) this job: stop feeding it,
     /// cancel still-pending worker computes.
     Finish(JobId),
+    /// Liveness beacon from worker `index` (sent on its heartbeat
+    /// cadence; the submaster forwards it upstream while the group's
+    /// uplink is alive).
+    Heartbeat(usize),
     /// Exit.
     Shutdown,
 }
@@ -343,6 +367,16 @@ pub enum MasterMsg {
     /// in-flight jobs — bounded by the drain grace — completing or
     /// failing every route, then shuts the worker tree down.
     Drain,
+    /// Liveness beacon: `worker: Some(j)` relays worker `j`'s
+    /// heartbeat, `None` is the submaster's own. A severed uplink
+    /// silences a group's entire beacon stream — exactly the signal
+    /// the failure detector uses to mark the whole group dead.
+    Heartbeat {
+        /// Reporting group.
+        group: usize,
+        /// In-group worker index, or `None` for the submaster itself.
+        worker: Option<usize>,
+    },
 }
 
 /// Group-local cancellation registry (§Perf): the submaster marks a job
@@ -452,6 +486,10 @@ mod tests {
         assert!(matches!(
             crate::Error::from(JobError::Shutdown),
             crate::Error::Coordinator(_)
+        ));
+        assert!(matches!(
+            crate::Error::from(JobError::Insufficient { needed: 2, got: 1 }),
+            crate::Error::Insufficient { needed: 2, got: 1 }
         ));
     }
 }

@@ -11,9 +11,13 @@ use crate::sync::Mutex;
 use crate::util::stats::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// Sentinel for the liveness gauges: "the failure detector has never
+/// swept this group", distinct from a real reading of zero.
+const LIVENESS_UNTRACKED: u64 = u64::MAX;
+
 /// Per-group counters: arrivals and decode activity of one group
 /// (rack), so heterogeneous topologies are observable group by group.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct GroupCounters {
     /// Worker (sub-)results that arrived at this group's submaster.
     products: AtomicU64,
@@ -23,8 +27,27 @@ struct GroupCounters {
     /// group's decodes that came from workers which had not finished
     /// all their sub-tasks (always 0 in the all-or-nothing model).
     partials: AtomicU64,
+    /// Workers not classified Dead by the failure detector (gauge;
+    /// [`LIVENESS_UNTRACKED`] until the first sweep).
+    alive_workers: AtomicU64,
+    /// Workers currently Suspected (gauge; [`LIVENESS_UNTRACKED`]
+    /// until the first sweep).
+    suspected: AtomicU64,
     /// Group-decode session latency.
     decode_latency: Mutex<Histogram>,
+}
+
+impl Default for GroupCounters {
+    fn default() -> Self {
+        Self {
+            products: AtomicU64::new(0),
+            decodes: AtomicU64::new(0),
+            partials: AtomicU64::new(0),
+            alive_workers: AtomicU64::new(LIVENESS_UNTRACKED),
+            suspected: AtomicU64::new(LIVENESS_UNTRACKED),
+            decode_latency: Mutex::default(),
+        }
+    }
 }
 
 /// Shared metrics sink. Counters are lock-free; histograms take a
@@ -120,6 +143,16 @@ impl Metrics {
         }
     }
 
+    /// Publish the failure detector's view of `group` after a sweep:
+    /// how many workers are not Dead and how many are Suspected
+    /// (no-op for out-of-range groups — untracked contexts).
+    pub fn set_group_liveness(&self, group: usize, alive: u64, suspected: u64) {
+        if let Some(g) = self.groups.get(group) {
+            g.alive_workers.store(alive, Ordering::Relaxed);
+            g.suspected.store(suspected, Ordering::Relaxed);
+        }
+    }
+
     /// Snapshot for reporting. The per-model breakdown is overlaid by
     /// `ClusterCore::metrics` (the model table lives in the service
     /// state, not here); `models` is empty on a bare snapshot.
@@ -134,10 +167,16 @@ impl Metrics {
             .iter()
             .map(|g| {
                 let glat = g.decode_latency.lock();
+                let gauge = |a: &AtomicU64| match a.load(Ordering::Relaxed) {
+                    LIVENESS_UNTRACKED => None,
+                    v => Some(v),
+                };
                 GroupMetricsSnapshot {
                     products: g.products.load(Ordering::Relaxed),
                     decodes: g.decodes.load(Ordering::Relaxed),
                     partials_used: g.partials.load(Ordering::Relaxed),
+                    alive_workers: gauge(&g.alive_workers),
+                    suspected: gauge(&g.suspected),
                     decode_mean: glat.mean(),
                 }
             })
@@ -206,6 +245,11 @@ pub struct GroupMetricsSnapshot {
     /// sub-results used that came from workers which never finished
     /// all their sub-tasks (0 in the all-or-nothing model).
     pub partials_used: u64,
+    /// Workers the failure detector does not consider Dead, or `None`
+    /// when liveness tracking is off / has not swept yet.
+    pub alive_workers: Option<u64>,
+    /// Workers currently Suspected, or `None` when untracked.
+    pub suspected: Option<u64>,
     /// Mean group-decode session latency (s).
     pub decode_mean: f64,
 }
@@ -281,6 +325,95 @@ pub struct MetricsSnapshot {
     pub models: Vec<ModelMetricsSnapshot>,
 }
 
+/// JSON number, or `null` for the NaN sentinel an empty histogram
+/// reports — the BENCH files' convention for "no data", kept distinct
+/// from a real measured zero.
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.9e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// JSON liveness gauge: `null` while untracked, the count otherwise.
+fn jgauge(v: Option<u64>) -> String {
+    match v {
+        Some(v) => v.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+impl MetricsSnapshot {
+    /// Render the snapshot as a JSON object (counters, latency
+    /// quantiles, per-group breakdown with the liveness gauges).
+    /// Non-finite latencies and untracked gauges serialize as `null`,
+    /// mirroring the `n/a` sentinel in [`Display`](std::fmt::Display);
+    /// the output parses with [`crate::config::json::Json::parse`].
+    pub fn to_json(&self) -> String {
+        let per_group: Vec<String> = self
+            .per_group
+            .iter()
+            .map(|g| {
+                format!(
+                    "{{\"products\": {}, \"decodes\": {}, \"partials_used\": {}, \
+                     \"alive_workers\": {}, \"suspected\": {}, \"decode_mean_s\": {}}}",
+                    g.products,
+                    g.decodes,
+                    g.partials_used,
+                    jgauge(g.alive_workers),
+                    jgauge(g.suspected),
+                    jnum(g.decode_mean)
+                )
+            })
+            .collect();
+        let models: Vec<String> = self
+            .models
+            .iter()
+            .map(|m| {
+                format!(
+                    "{{\"name\": {:?}, \"queued\": {}, \"accepted\": {}, \
+                     \"rejected\": {}, \"shed\": {}, \"completed\": {}}}",
+                    m.name, m.queued, m.accepted, m.rejected, m.shed, m.completed
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"requests\": {}, \"jobs\": {}, \"completed\": {}, \"failed\": {}, \
+             \"cancelled\": {}, \"rejected\": {}, \"shed\": {}, \"queue_depth\": {},\n  \
+             \"worker_products\": {}, \"late_products\": {}, \"late_partials\": {}, \
+             \"group_decodes\": {}, \"decode_flops\": {},\n  \
+             \"latency_mean_s\": {}, \"latency_p50_s\": {}, \"latency_p95_s\": {}, \
+             \"latency_p99_s\": {},\n  \
+             \"decode_mean_s\": {}, \"decode_p50_s\": {}, \"decode_p95_s\": {}, \
+             \"decode_p99_s\": {},\n  \"per_group\": [{}],\n  \"models\": [{}]\n}}",
+            self.requests,
+            self.jobs,
+            self.completed,
+            self.failed,
+            self.cancelled,
+            self.rejected,
+            self.shed,
+            self.queue_depth,
+            self.worker_products,
+            self.late_products,
+            self.late_partials,
+            self.group_decodes,
+            self.decode_flops,
+            jnum(self.latency_mean),
+            jnum(self.latency_p50),
+            jnum(self.latency_p95),
+            jnum(self.latency_p99),
+            jnum(self.decode_mean),
+            jnum(self.decode_p50),
+            jnum(self.decode_p95),
+            jnum(self.decode_p99),
+            per_group.join(", "),
+            models.join(", ")
+        )
+    }
+}
+
 /// Render a latency in milliseconds, or `n/a` for the NaN sentinel an
 /// empty histogram reports (never a fake `0.000ms`).
 fn fmt_ms(seconds: f64) -> String {
@@ -288,6 +421,15 @@ fn fmt_ms(seconds: f64) -> String {
         format!("{:.3}ms", seconds * 1e3)
     } else {
         "n/a".to_string()
+    }
+}
+
+/// Render a liveness gauge, or `n/a` when the detector has never swept
+/// (never a fake `0` — same convention as the NaN latency sentinel).
+fn fmt_gauge(v: Option<u64>) -> String {
+    match v {
+        Some(v) => v.to_string(),
+        None => "n/a".to_string(),
     }
 }
 
@@ -331,11 +473,13 @@ impl std::fmt::Display for MetricsSnapshot {
             write!(
                 f,
                 "\ngroup {g}:         {} products, {} decodes, {} partials used, \
-                 decode mean {}",
+                 decode mean {}, alive {}, suspected {}",
                 gm.products,
                 gm.decodes,
                 gm.partials_used,
-                fmt_ms(gm.decode_mean)
+                fmt_ms(gm.decode_mean),
+                fmt_gauge(gm.alive_workers),
+                fmt_gauge(gm.suspected)
             )?;
         }
         for m in &self.models {
@@ -377,6 +521,53 @@ mod tests {
         assert!(format!("{s}").contains("group 1:"));
         // Metrics::new() has no per-group breakdown.
         assert!(Metrics::new().snapshot().per_group.is_empty());
+    }
+
+    #[test]
+    fn liveness_gauges_untracked_until_first_sweep() {
+        let m = Metrics::with_groups(2);
+        let s = m.snapshot();
+        // Before any sweep the gauges are the untracked sentinel, and
+        // Display must say so rather than fake an `alive 0` outage.
+        assert_eq!(s.per_group[0].alive_workers, None);
+        assert_eq!(s.per_group[0].suspected, None);
+        assert!(format!("{s}").contains("alive n/a, suspected n/a"));
+        m.set_group_liveness(0, 3, 1);
+        m.set_group_liveness(9, 5, 5); // out of range: no-op, no panic
+        let s = m.snapshot();
+        assert_eq!(s.per_group[0].alive_workers, Some(3));
+        assert_eq!(s.per_group[0].suspected, Some(1));
+        assert_eq!(s.per_group[1].alive_workers, None);
+        assert!(format!("{s}").contains("alive 3, suspected 1"));
+    }
+
+    #[test]
+    fn snapshot_json_parses_with_null_sentinels() {
+        let m = Metrics::with_groups(2);
+        Metrics::inc(&m.requests);
+        m.set_group_liveness(0, 4, 0);
+        let text = m.snapshot().to_json();
+        let v = crate::config::json::Json::parse(&text).expect("valid JSON");
+        assert_eq!(v.get("requests").and_then(|j| j.as_usize()), Some(1));
+        // Empty histograms are null, not 0.0 — same rule as BENCH files.
+        assert!(matches!(
+            v.get("latency_p99_s"),
+            Some(crate::config::json::Json::Null)
+        ));
+        let groups = match v.get("per_group") {
+            Some(crate::config::json::Json::Array(a)) => a,
+            other => panic!("per_group missing: {other:?}"),
+        };
+        assert_eq!(groups.len(), 2);
+        assert_eq!(
+            groups[0].get("alive_workers").and_then(|j| j.as_usize()),
+            Some(4)
+        );
+        // Group 1 was never swept: its gauges are null, not 0.
+        assert!(matches!(
+            groups[1].get("alive_workers"),
+            Some(crate::config::json::Json::Null)
+        ));
     }
 
     #[test]

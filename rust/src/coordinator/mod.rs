@@ -32,15 +32,22 @@
 //!   [`cluster::SubmitOptions`] and bounded-queue admission control
 //!   ([`crate::Error::Busy`] backpressure, deadline shedding); plus the
 //!   single-tenant [`cluster::Cluster`] facade;
-//! * [`metrics`] — counters, admission gauges and latency histograms
-//!   (p50/p95/p99);
-//! * [`fault`] — failure injection (dead workers / severed uplinks).
+//! * [`metrics`] — counters, admission gauges, liveness gauges and
+//!   latency histograms (p50/p95/p99);
+//! * [`fault`] — the fault model: launch-time [`fault::FaultConfig`],
+//!   the live [`fault::FaultState`] switchboard every thread consults,
+//!   and seeded timed [`fault::FaultPlan`] schedules;
+//! * [`chaos`] — robustness machinery: the failure detector the master
+//!   runs over heartbeat streams, the [`chaos::FaultInjector`] surface
+//!   the cluster supervisor implements, and the driver thread that
+//!   replays a `FaultPlan` against it.
 //!
 //! Python never appears here: workers execute AOT artifacts through
 //! [`crate::runtime`], everything else is Rust.
 
 pub mod backend;
 pub mod batcher;
+pub mod chaos;
 pub mod cluster;
 pub mod fault;
 pub mod master;

@@ -20,8 +20,9 @@
 //! and discarded (the paper's "fastest `k1`" semantics).
 
 use crate::coding::{CodedScheme, DecodeProgress, Decoder};
+use crate::coordinator::fault::FaultState;
 use crate::coordinator::messages::{
-    CancelSet, JobId, MasterMsg, PartialResult, SubmasterMsg, WorkerCmd,
+    CancelSet, JobId, MasterMsg, PartialResult, SubmasterMsg, WorkerCmd, WorkerLink,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::sim::straggler::StragglerModel;
@@ -75,6 +76,45 @@ fn gc_done_jobs(jobs: &mut HashMap<JobId, GroupJob>) {
     }
 }
 
+/// Ship one partial upstream through the group's (possibly faulted)
+/// uplink: dropped outright when severed, dropped with the injected
+/// loss probability when degraded, then delayed by the configured ToR
+/// model plus any injected extra delay (uniform in `[0, ceiling)` —
+/// bounded jitter), and finally sent.
+fn ship_partial(
+    faults: &FaultState,
+    group: usize,
+    link: &LinkDelay,
+    rng: &mut Rng,
+    master: &mpsc::Sender<MasterMsg>,
+    pr: PartialResult,
+) {
+    if faults.link_dead(group) {
+        crate::log_debug!(
+            "submaster",
+            "group {group}: uplink dead, dropping job {:?}",
+            pr.id
+        );
+        return;
+    }
+    let dpm = faults.uplink_drop_per_mille(group);
+    if dpm > 0 && rng.uniform(0.0, 1000.0) < dpm as f64 {
+        faults.record_dropped();
+        return;
+    }
+    if link.enabled {
+        let d = link.model.sample(rng) * link.scale;
+        if d > 0.0 {
+            thread::sleep(Duration::from_secs_f64(d));
+        }
+    }
+    let extra_ms = faults.uplink_delay_ms(group);
+    if extra_ms > 0.0 {
+        thread::sleep(Duration::from_secs_f64(rng.uniform(0.0, extra_ms) / 1e3));
+    }
+    let _ = master.send(MasterMsg::Partial(pr));
+}
+
 /// Spawn the submaster for `group`, whose workers start at flat index
 /// `offset`. Output sizing is per-job ([`JobBroadcast::out_rows`]):
 /// different models route different heights through the same group.
@@ -88,10 +128,11 @@ pub fn spawn(
     group: usize,
     offset: usize,
     scheme: Arc<dyn CodedScheme>,
-    workers: Vec<mpsc::Sender<WorkerCmd>>,
+    workers: Vec<WorkerLink>,
     link: LinkDelay,
-    link_dead: bool,
+    faults: Arc<FaultState>,
     subtasks: usize,
+    heartbeat: Option<Duration>,
     cancel: Arc<CancelSet>,
     metrics: Arc<Metrics>,
     mut rng: Rng,
@@ -102,13 +143,53 @@ pub fn spawn(
         .name(format!("hiercode-sm{group}"))
         .spawn(move || {
             let mut jobs: HashMap<JobId, GroupJob> = HashMap::new();
-            while let Ok(msg) = rx.recv() {
+            // Announce liveness immediately (a severed uplink drops it,
+            // which is the point: silence IS the failure signal).
+            if heartbeat.is_some() && !faults.link_dead(group) {
+                let _ = master.send(MasterMsg::Heartbeat {
+                    group,
+                    worker: None,
+                });
+            }
+            let mut last_beat = Instant::now();
+            loop {
+                let msg = match heartbeat {
+                    Some(period) => match rx.recv_timeout(period) {
+                        Ok(m) => m,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if !faults.link_dead(group) {
+                                let _ = master.send(MasterMsg::Heartbeat {
+                                    group,
+                                    worker: None,
+                                });
+                            }
+                            last_beat = Instant::now();
+                            continue;
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    },
+                    None => match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => break,
+                    },
+                };
                 match msg {
                     SubmasterMsg::Shutdown => {
                         for w in &workers {
-                            let _ = w.send(WorkerCmd::Shutdown);
+                            let _ = w.read().send(WorkerCmd::Shutdown);
                         }
                         break;
+                    }
+                    SubmasterMsg::Heartbeat(j) => {
+                        // Relay the worker's beacon while our uplink is
+                        // alive; a severed link silences the whole
+                        // group's beacon stream.
+                        if !faults.link_dead(group) {
+                            let _ = master.send(MasterMsg::Heartbeat {
+                                group,
+                                worker: Some(j),
+                            });
+                        }
                     }
                     SubmasterMsg::Job(job) => {
                         let state =
@@ -122,7 +203,7 @@ pub fn spawn(
                         jobs.insert(job.id, state);
                         gc_done_jobs(&mut jobs);
                         for w in &workers {
-                            let _ = w.send(WorkerCmd::Compute(job.clone()));
+                            let _ = w.read().send(WorkerCmd::Compute(job.clone()));
                         }
                     }
                     SubmasterMsg::Finish(id) => {
@@ -149,22 +230,20 @@ pub fn spawn(
                                 Metrics::inc(&metrics.late_products);
                             }
                             GroupJob::Relay => {
-                                if link_dead {
-                                    continue; // uplink severed: drop
-                                }
-                                if link.enabled {
-                                    let d = link.model.sample(&mut rng) * link.scale;
-                                    if d > 0.0 {
-                                        thread::sleep(Duration::from_secs_f64(d));
-                                    }
-                                }
-                                let _ = master.send(MasterMsg::Partial(PartialResult {
-                                    id: done.id,
-                                    shard: offset + done.index,
-                                    data: done.data,
-                                    decode_flops: 0,
-                                    finished_at: Instant::now(),
-                                }));
+                                ship_partial(
+                                    &faults,
+                                    group,
+                                    &link,
+                                    &mut rng,
+                                    &master,
+                                    PartialResult {
+                                        id: done.id,
+                                        shard: offset + done.index,
+                                        data: done.data,
+                                        decode_flops: 0,
+                                        finished_at: Instant::now(),
+                                    },
+                                );
                             }
                             GroupJob::Decoding { session, contrib } => {
                                 // Partial-work: the session's index
@@ -210,37 +289,20 @@ pub fn spawn(
                                                     out.flops,
                                                 );
                                                 let finished_at = Instant::now();
-                                                if link_dead {
-                                                    crate::log_debug!(
-                                                        "submaster",
-                                                        "group {group}: uplink dead, \
-                                                         dropping job {:?}",
-                                                        done.id
-                                                    );
-                                                } else {
-                                                    if link.enabled {
-                                                        let d = link
-                                                            .model
-                                                            .sample(&mut rng)
-                                                            * link.scale;
-                                                        if d > 0.0 {
-                                                            thread::sleep(
-                                                                Duration::from_secs_f64(d),
-                                                            );
-                                                        }
-                                                    }
-                                                    let _ = master.send(
-                                                        MasterMsg::Partial(
-                                                            PartialResult {
-                                                                id: done.id,
-                                                                shard: group,
-                                                                data: out.result,
-                                                                decode_flops: out.flops,
-                                                                finished_at,
-                                                            },
-                                                        ),
-                                                    );
-                                                }
+                                                ship_partial(
+                                                    &faults,
+                                                    group,
+                                                    &link,
+                                                    &mut rng,
+                                                    &master,
+                                                    PartialResult {
+                                                        id: done.id,
+                                                        shard: group,
+                                                        data: out.result,
+                                                        decode_flops: out.flops,
+                                                        finished_at,
+                                                    },
+                                                );
                                                 *state = GroupJob::Done;
                                             }
                                             Err(e) => {
@@ -267,6 +329,20 @@ pub fn spawn(
                         }
                     }
                 }
+                // A busy submaster never hits the recv timeout, so
+                // also beat after handling work once the cadence
+                // elapsed.
+                if let Some(period) = heartbeat {
+                    if last_beat.elapsed() >= period {
+                        if !faults.link_dead(group) {
+                            let _ = master.send(MasterMsg::Heartbeat {
+                                group,
+                                worker: None,
+                            });
+                        }
+                        last_beat = Instant::now();
+                    }
+                }
             }
         })?;
     Ok(handle)
@@ -286,6 +362,11 @@ mod tests {
             scale: 0.0,
             enabled: false,
         }
+    }
+
+    /// All-healthy fault switchboard big enough for every test group.
+    fn healthy_faults() -> Arc<FaultState> {
+        Arc::new(FaultState::new(&[4, 4, 4]))
     }
 
     /// Drive a submaster directly with synthetic worker results and
@@ -314,8 +395,9 @@ mod tests {
             scheme,
             vec![], // no real workers; we inject Done messages
             no_link_delay(),
-            false,
+            healthy_faults(),
             1,
+            None,
             Arc::new(CancelSet::new()),
             Arc::clone(&metrics),
             URng::new(5),
@@ -406,8 +488,9 @@ mod tests {
             scheme,
             vec![],
             no_link_delay(),
-            false,
+            healthy_faults(),
             r,
+            None,
             Arc::new(CancelSet::new()),
             Arc::clone(&metrics),
             URng::new(11),
@@ -469,14 +552,17 @@ mod tests {
         let (master_tx, master_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
         let scheme: Arc<dyn CodedScheme> = code;
+        let faults = healthy_faults();
+        faults.set_link_dead(0, true);
         let h = spawn(
             0,
             0,
             scheme,
             vec![],
             no_link_delay(),
-            true, // dead link
+            faults,
             1,
+            None,
             Arc::new(CancelSet::new()),
             Arc::clone(&metrics),
             URng::new(7),
@@ -522,8 +608,9 @@ mod tests {
             scheme,
             vec![],
             no_link_delay(),
-            false,
+            healthy_faults(),
             1,
+            None,
             Arc::new(CancelSet::new()),
             Arc::clone(&metrics),
             URng::new(8),

@@ -20,6 +20,7 @@
 //! sub-results the remaining sub-tasks are skipped.
 
 use crate::coordinator::backend::{ComputeBackend, WorkerShard};
+use crate::coordinator::fault::FaultState;
 use crate::coordinator::messages::{
     CancelSet, ModelId, SubmasterMsg, WorkerCmd, WorkerDone,
 };
@@ -28,8 +29,9 @@ use crate::sim::straggler::StragglerModel;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Straggler-injection settings for one worker.
 #[derive(Clone)]
@@ -50,23 +52,51 @@ fn split_shard(shard: &Matrix, r: usize) -> crate::Result<Vec<WorkerShard>> {
     shard.split_rows(r)?.iter().map(WorkerShard::new).collect()
 }
 
-/// Spawn worker `w(group, index)`. `subtasks` is the group's `r`
-/// (1 = the all-or-nothing task model, behavior-identical to the
-/// pre-partial worker). Errors only if the OS refuses to spawn the
-/// thread.
-#[allow(clippy::too_many_arguments)]
+/// Everything needed to spawn worker `w(group, index)` — bundled so
+/// the cluster supervisor can retain it and respawn the worker on a
+/// chaos restart event with the exact same wiring.
+#[derive(Clone)]
+pub struct WorkerCtx {
+    /// Group index `i`.
+    pub group: usize,
+    /// In-group worker index `j`.
+    pub index: usize,
+    /// Compute backend (PJRT artifact or native GEMM).
+    pub backend: ComputeBackend,
+    /// Straggler-injection settings.
+    pub delay: WorkerDelay,
+    /// The group's partial-work `r` (1 = all-or-nothing tasks).
+    pub subtasks: usize,
+    /// Group-local cancellation registry.
+    pub cancel: Arc<CancelSet>,
+    /// Live fault switchboard: the worker consults its dead flag
+    /// before computing or heartbeating.
+    pub faults: Arc<FaultState>,
+    /// Heartbeat cadence; `None` disables liveness beacons (the
+    /// pre-liveness quiet-channel behavior, used by unit tests).
+    pub heartbeat: Option<Duration>,
+    /// Upstream channel to the group's submaster.
+    pub submaster: mpsc::Sender<SubmasterMsg>,
+}
+
+/// Spawn worker `w(group, index)`. Errors only if the OS refuses to
+/// spawn the thread.
 pub fn spawn(
-    group: usize,
-    index: usize,
-    backend: ComputeBackend,
-    delay: WorkerDelay,
-    dead: bool,
-    subtasks: usize,
-    cancel: std::sync::Arc<CancelSet>,
+    ctx: WorkerCtx,
     mut rng: Rng,
     rx: mpsc::Receiver<WorkerCmd>,
-    submaster: mpsc::Sender<SubmasterMsg>,
 ) -> crate::Result<thread::JoinHandle<()>> {
+    let WorkerCtx {
+        group,
+        index,
+        backend,
+        delay,
+        subtasks,
+        cancel,
+        faults,
+        heartbeat,
+        submaster,
+    } = ctx;
     let handle = thread::Builder::new()
         .name(format!("hiercode-w{group}.{index}"))
         .spawn(move || {
@@ -74,7 +104,31 @@ pub fn spawn(
             // (a single entry — the whole shard — when r = 1).
             let mut shards: HashMap<ModelId, Vec<WorkerShard>> = HashMap::new();
             let r = subtasks.max(1);
-            while let Ok(cmd) = rx.recv() {
+            // Announce liveness immediately: a respawned worker must
+            // flip the failure detector back to Alive without waiting
+            // a full cadence.
+            if heartbeat.is_some() && !faults.worker_dead(group, index) {
+                let _ = submaster.send(SubmasterMsg::Heartbeat(index));
+            }
+            let mut last_beat = Instant::now();
+            loop {
+                let cmd = match heartbeat {
+                    Some(period) => match rx.recv_timeout(period) {
+                        Ok(c) => c,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if !faults.worker_dead(group, index) {
+                                let _ = submaster.send(SubmasterMsg::Heartbeat(index));
+                            }
+                            last_beat = Instant::now();
+                            continue;
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    },
+                    None => match rx.recv() {
+                        Ok(c) => c,
+                        Err(_) => break,
+                    },
+                };
                 match cmd {
                     WorkerCmd::Shutdown => break,
                     WorkerCmd::Load { model, shard } => {
@@ -99,7 +153,7 @@ pub fn spawn(
                         }
                     }
                     WorkerCmd::Compute(job) => {
-                        if dead {
+                        if faults.worker_dead(group, index) {
                             // Fault injection: silently drop the job.
                             continue;
                         }
@@ -164,6 +218,16 @@ pub fn spawn(
                         }
                     }
                 }
+                // A busy worker never hits the recv timeout, so also
+                // beat after handling work once the cadence elapsed.
+                if let Some(period) = heartbeat {
+                    if last_beat.elapsed() >= period {
+                        if !faults.worker_dead(group, index) {
+                            let _ = submaster.send(SubmasterMsg::Heartbeat(index));
+                        }
+                        last_beat = Instant::now();
+                    }
+                }
             }
         })?;
     Ok(handle)
@@ -184,6 +248,30 @@ mod tests {
         }
     }
 
+    /// Test wiring for one worker: quiet channels (no heartbeat), a
+    /// fresh fault switchboard with this worker's dead flag as given.
+    fn test_ctx(
+        group: usize,
+        index: usize,
+        subtasks: usize,
+        dead: bool,
+        submaster: mpsc::Sender<SubmasterMsg>,
+    ) -> WorkerCtx {
+        let faults = Arc::new(FaultState::new(&vec![index + 1; group + 1]));
+        faults.set_worker_dead(group, index, dead);
+        WorkerCtx {
+            group,
+            index,
+            backend: ComputeBackend::Native,
+            delay: no_delay(),
+            subtasks,
+            cancel: Arc::new(CancelSet::new()),
+            faults,
+            heartbeat: None,
+            submaster,
+        }
+    }
+
     fn load(model: ModelId, shard: &Matrix) -> WorkerCmd {
         WorkerCmd::Load {
             model,
@@ -196,19 +284,8 @@ mod tests {
         let shard_m = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
         let (cmd_tx, cmd_rx) = mpsc::channel();
         let (sub_tx, sub_rx) = mpsc::channel();
-        let h = spawn(
-            1,
-            3,
-            ComputeBackend::Native,
-            no_delay(),
-            false,
-            1,
-            std::sync::Arc::new(CancelSet::new()),
-            Rng::new(1),
-            cmd_rx,
-            sub_tx,
-        )
-        .expect("spawn worker");
+        let h = spawn(test_ctx(1, 3, 1, false, sub_tx), Rng::new(1), cmd_rx)
+            .expect("spawn worker");
         cmd_tx.send(load(ModelId(0), &shard_m)).unwrap();
         let x = Arc::new(Matrix::from_rows(&[&[1.0], &[1.0]]));
         cmd_tx
@@ -242,19 +319,8 @@ mod tests {
         let x = Arc::new(Matrix::from_fn(3, 2, |_, _| rng.uniform(-1.0, 1.0)));
         let (cmd_tx, cmd_rx) = mpsc::channel();
         let (sub_tx, sub_rx) = mpsc::channel();
-        let h = spawn(
-            0,
-            1,
-            ComputeBackend::Native,
-            no_delay(),
-            false,
-            4,
-            std::sync::Arc::new(CancelSet::new()),
-            Rng::new(4),
-            cmd_rx,
-            sub_tx,
-        )
-        .expect("spawn worker");
+        let h = spawn(test_ctx(0, 1, 4, false, sub_tx), Rng::new(4), cmd_rx)
+            .expect("spawn worker");
         cmd_tx.send(load(ModelId(0), &shard_m)).unwrap();
         cmd_tx
             .send(WorkerCmd::Compute(JobBroadcast {
@@ -292,19 +358,8 @@ mod tests {
     fn worker_serves_multiple_models_by_id() {
         let (cmd_tx, cmd_rx) = mpsc::channel();
         let (sub_tx, sub_rx) = mpsc::channel();
-        let h = spawn(
-            0,
-            0,
-            ComputeBackend::Native,
-            no_delay(),
-            false,
-            1,
-            std::sync::Arc::new(CancelSet::new()),
-            Rng::new(3),
-            cmd_rx,
-            sub_tx,
-        )
-        .expect("spawn worker");
+        let h = spawn(test_ctx(0, 0, 1, false, sub_tx), Rng::new(3), cmd_rx)
+            .expect("spawn worker");
         // Two models with distinguishable shards.
         cmd_tx
             .send(load(ModelId(0), &Matrix::from_rows(&[&[1.0]])))
@@ -348,19 +403,8 @@ mod tests {
     fn dead_worker_stays_silent() {
         let (cmd_tx, cmd_rx) = mpsc::channel();
         let (sub_tx, sub_rx) = mpsc::channel();
-        let h = spawn(
-            0,
-            0,
-            ComputeBackend::Native,
-            no_delay(),
-            true, // dead
-            1,
-            std::sync::Arc::new(CancelSet::new()),
-            Rng::new(2),
-            cmd_rx,
-            sub_tx,
-        )
-        .expect("spawn worker");
+        let h = spawn(test_ctx(0, 0, 1, true, sub_tx), Rng::new(2), cmd_rx)
+            .expect("spawn worker");
         cmd_tx.send(load(ModelId(0), &Matrix::identity(2))).unwrap();
         let x = Arc::new(Matrix::identity(2));
         cmd_tx
@@ -372,6 +416,31 @@ mod tests {
             }))
             .unwrap();
         assert!(sub_rx.recv_timeout(Duration::from_millis(200)).is_err());
+        cmd_tx.send(WorkerCmd::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn heartbeats_flow_and_dynamic_death_silences_them() {
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let (sub_tx, sub_rx) = mpsc::channel();
+        let mut ctx = test_ctx(0, 2, 1, false, sub_tx);
+        ctx.heartbeat = Some(Duration::from_millis(5));
+        let faults = Arc::clone(&ctx.faults);
+        let h = spawn(ctx, Rng::new(1), cmd_rx).expect("spawn worker");
+        // Initial beacon plus cadence beacons.
+        let msg = sub_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(matches!(msg, SubmasterMsg::Heartbeat(2)));
+        let msg = sub_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(matches!(msg, SubmasterMsg::Heartbeat(2)));
+        // Flipping the dead flag mid-run silences the beacons (drain
+        // whatever was already in flight first).
+        faults.set_worker_dead(0, 2, true);
+        while sub_rx.recv_timeout(Duration::from_millis(50)).is_ok() {}
+        assert!(sub_rx.recv_timeout(Duration::from_millis(100)).is_err());
+        // Reviving restores them.
+        faults.set_worker_dead(0, 2, false);
+        assert!(sub_rx.recv_timeout(Duration::from_secs(5)).is_ok());
         cmd_tx.send(WorkerCmd::Shutdown).unwrap();
         h.join().unwrap();
     }

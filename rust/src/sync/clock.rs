@@ -1,0 +1,105 @@
+//! Deterministic time source for the failure detector.
+//!
+//! The master's liveness sweep and the chaos driver both ask "how many
+//! milliseconds have elapsed" through the [`Clock`] trait instead of
+//! reading `Instant::now()` directly. Production code uses
+//! [`WallClock`]; failure-detector tests use [`MockClock`] and advance
+//! time explicitly, so suspect → dead transitions are exercised without
+//! a single `thread::sleep`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic millisecond clock. Implementations must be monotonic
+/// (successive `now_ms` reads never decrease) but need not be wall
+/// time — [`MockClock`] only moves when told to.
+pub trait Clock: Send + Sync {
+    /// Milliseconds since the clock's epoch (creation for
+    /// [`WallClock`], zero for [`MockClock`]).
+    fn now_ms(&self) -> u64;
+}
+
+/// Real time, measured from the clock's creation.
+#[derive(Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    /// Clock whose epoch is "now".
+    pub fn new() -> Self {
+        Self {
+            epoch: Instant::now(),
+        }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> u64 {
+        // u64 millis overflow after ~584M years of uptime; saturating
+        // keeps the cast total anyway.
+        u64::try_from(self.epoch.elapsed().as_millis()).unwrap_or(u64::MAX)
+    }
+}
+
+/// Manually advanced clock for tests. Starts at zero; `advance` moves
+/// it forward. Shared freely across threads (atomic inside).
+#[derive(Debug, Default)]
+pub struct MockClock {
+    ms: AtomicU64,
+}
+
+impl MockClock {
+    /// Clock frozen at t = 0 ms.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Move time forward by `delta_ms`.
+    pub fn advance(&self, delta_ms: u64) {
+        self.ms.fetch_add(delta_ms, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute time (no-op if `at_ms` is in the past —
+    /// the trait promises monotonicity).
+    pub fn set(&self, at_ms: u64) {
+        self.ms.fetch_max(at_ms, Ordering::SeqCst);
+    }
+}
+
+impl Clock for MockClock {
+    fn now_ms(&self) -> u64 {
+        self.ms.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_clock_advances_and_clamps_monotonic() {
+        let c = MockClock::new();
+        assert_eq!(c.now_ms(), 0);
+        c.advance(25);
+        assert_eq!(c.now_ms(), 25);
+        c.set(100);
+        assert_eq!(c.now_ms(), 100);
+        c.set(50); // backwards jump ignored
+        assert_eq!(c.now_ms(), 100);
+    }
+
+    #[test]
+    fn wall_clock_is_monotonic() {
+        let c = WallClock::new();
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a);
+    }
+}

@@ -40,11 +40,13 @@ use std::sync::PoisonError;
 use std::time::Duration;
 
 pub mod admission;
+pub mod clock;
 pub mod drain;
 #[cfg(feature = "modelcheck")]
 pub mod model;
 
 pub use admission::AdmissionGate;
+pub use clock::{Clock, MockClock, WallClock};
 pub use drain::DrainState;
 
 /// Poison-transparent mutex; under `modelcheck` an instrumented one.

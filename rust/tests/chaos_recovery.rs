@@ -1,0 +1,148 @@
+//! Integration: dynamic faults against the live cluster — seeded churn
+//! under load, crash/restart shard re-shipping, and the failure
+//! detector's fast-fail guarantee when survivability breaks.
+
+use hiercode::config::schema::ClusterConfig;
+use hiercode::coordinator::chaos::{self, FaultInjector};
+use hiercode::coordinator::fault::FaultPlan;
+use hiercode::coordinator::ClusterCore;
+use hiercode::linalg::{ops, Matrix};
+use hiercode::sync::WallClock;
+use hiercode::util::rng::Rng;
+use hiercode::Error;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn matrix(m: usize, d: usize, seed: u64) -> Matrix {
+    let mut r = Rng::new(seed);
+    Matrix::from_fn(m, d, |_, _| r.uniform(-1.0, 1.0))
+}
+
+/// Demo grid with liveness on and tight detector timeouts, so a test
+/// never waits seconds for a verdict.
+fn chaos_config(n1: usize, k1: usize, n2: usize, k2: usize) -> ClusterConfig {
+    let mut config = ClusterConfig::demo(n1, k1, n2, k2);
+    config.chaos.liveness = true;
+    config.chaos.heartbeat_ms = 5.0;
+    config.chaos.suspect_ms = 40.0;
+    config.chaos.dead_ms = 120.0;
+    config.serving.default_deadline_ms = 30_000.0;
+    config.serving.queue_cap = 64;
+    config
+}
+
+/// Tentpole e2e: a seeded survivable churn schedule (one worker per
+/// group crashing and restarting every round) runs against a serving
+/// cluster while a closed-loop client submits — every job must
+/// complete with correct results, and the chaos report must tally a
+/// restart for every crash.
+#[test]
+fn churn_under_load_completes_all_jobs() {
+    let config = chaos_config(3, 2, 3, 2);
+    let core = ClusterCore::launch(&config).unwrap();
+    let a = matrix(16, 4, 41);
+    core.register_model("m", &a).unwrap();
+    let plan = FaultPlan::survivable_churn(9, &config.code.topology, 800, 200);
+    assert!(!plan.is_empty(), "the schedule must actually churn");
+    let driver =
+        chaos::spawn(core.injector(), plan, Arc::new(WallClock::new())).unwrap();
+    let client = core.handle();
+    // Closed loop past the end of the schedule, so the last restart's
+    // re-shipped shards serve real jobs too.
+    let t_end = Instant::now() + Duration::from_millis(1_000);
+    let mut rng = Rng::new(7);
+    let mut jobs = 0u64;
+    while Instant::now() < t_end {
+        let x: Vec<f64> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let y = client
+            .submit_to("m", x.clone())
+            .unwrap()
+            .wait_timeout(Duration::from_secs(20))
+            .expect("every job under a survivable churn plan must complete");
+        let expect = ops::matvec(&a, &x);
+        for (got, want) in y.iter().zip(expect.iter()) {
+            assert!((got - want).abs() < 1e-3, "churn must not corrupt results");
+        }
+        jobs += 1;
+    }
+    assert!(jobs > 0);
+    let report = driver.join().unwrap();
+    assert!(report.crashes > 0, "the plan fired no crashes");
+    assert_eq!(
+        report.restarts, report.crashes,
+        "every crash in a survivable plan is paired with a restart"
+    );
+    assert!(
+        report.recovery_ms.iter().all(|ms| ms.is_finite()),
+        "every respawn must succeed: {:?}",
+        report.recovery_ms
+    );
+    core.shutdown();
+}
+
+/// Satellite: a restart re-ships the registered model's shards, and the
+/// recovered worker's products are **bit-identical** to the fault-free
+/// run. The (2,2)×(2,2) grid has a unique decode subset (every worker
+/// and every group is needed), so any corruption or loss in the
+/// re-shipped shard would change — or hang — the answer.
+#[test]
+fn reshipped_shards_bit_identical_after_restart() {
+    let mut config = ClusterConfig::demo(2, 2, 2, 2);
+    // No detector needed: the crash happens while the cluster is idle.
+    config.chaos.liveness = false;
+    let core = ClusterCore::launch(&config).unwrap();
+    let a = matrix(8, 3, 42);
+    core.register_model("m", &a).unwrap();
+    let client = core.handle();
+    let x = vec![0.5, -1.25, 2.0];
+    let clean = client.submit_to("m", x.clone()).unwrap().wait().unwrap();
+    // Crash + restart one worker while idle; the restart must re-ship
+    // the shard it dropped or the next job can never decode.
+    let sup = core.supervisor();
+    sup.worker_crash(0, 1);
+    let ms = sup.worker_restart(0, 1);
+    assert!(ms.is_finite(), "respawn failed");
+    let recovered = client.submit_to("m", x.clone()).unwrap().wait().unwrap();
+    assert_eq!(
+        clean, recovered,
+        "re-shipped shards must reproduce bit-identical results"
+    );
+    core.shutdown();
+}
+
+/// Satellite: when faults push the cluster below k2 healthy groups,
+/// jobs fail **fast** with `Error::Insufficient` — the detector sweeps
+/// them out instead of letting them ride the 30s admission deadline.
+#[test]
+fn unsurvivable_severs_fail_fast_with_insufficient() {
+    let config = chaos_config(3, 2, 3, 2);
+    let core = ClusterCore::launch(&config).unwrap();
+    let a = matrix(16, 4, 43);
+    core.register_model("m", &a).unwrap();
+    let client = core.handle();
+    let x = vec![1.0, -1.0, 0.5, 2.0];
+    // Sanity: the healthy cluster serves.
+    assert!(client.submit_to("m", x.clone()).unwrap().wait().is_ok());
+    // Two of three uplinks severed: 1 < k2 = 2 healthy groups remain.
+    let inj = core.injector();
+    inj.link_sever(0);
+    inj.link_sever(1);
+    // Let the detector age the quiet groups out (dead_ms = 120).
+    std::thread::sleep(Duration::from_millis(250));
+    let t0 = Instant::now();
+    let err = client
+        .submit_to("m", x)
+        .unwrap()
+        .wait_timeout(Duration::from_secs(10))
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::Insufficient { needed: 2, .. }),
+        "expected Insufficient, got: {err}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "must fail fast, not ride the deadline: took {:?}",
+        t0.elapsed()
+    );
+    core.shutdown();
+}

@@ -138,8 +138,8 @@ fn every_survivable_single_fault_plan_works() {
         }
     }
     for plan in plans {
-        assert!(plan.survivable(n1, k1, n2, k2));
         let config = ClusterConfig::demo(n1, k1, n2, k2);
+        assert!(plan.survivable_for(&config.code.topology));
         let cluster = Cluster::launch_with_faults(&config, &a, plan.clone()).unwrap();
         verify_requests(&cluster, &a, 2, 70, 1e-3);
         cluster.shutdown();
@@ -165,15 +165,16 @@ fn property_random_fault_plans_match_survivability() {
         }
         let a = matrix(8, 4, 31);
         let config = ClusterConfig::demo(n1, k1, n2, k2);
+        let survivable = plan.survivable_for(&config.code.topology);
         let cluster = Cluster::launch_with_faults(&config, &a, plan.clone()).unwrap();
         let x = vec![1.0, -1.0, 0.5, 2.0];
         let res = cluster
             .submit(x.clone())
             .unwrap()
             .wait_timeout(std::time::Duration::from_millis(
-                if plan.survivable(n1, k1, n2, k2) { 20_000 } else { 400 },
+                if survivable { 20_000 } else { 400 },
             ));
-        if plan.survivable(n1, k1, n2, k2) {
+        if survivable {
             let y = res.expect("survivable plan must complete");
             let expect = ops::matvec(&a, &x);
             for (got, want) in y.iter().zip(expect.iter()) {

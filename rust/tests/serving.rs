@@ -283,10 +283,12 @@ fn shutdown_drains_inflight_jobs_to_completion() {
 #[test]
 fn late_partial_after_tombstone_gc_counts_as_late_delivery() {
     use hiercode::coding::{CodedScheme, HierarchicalCode};
+    use hiercode::coordinator::chaos::LivenessConfig;
     use hiercode::coordinator::master;
     use hiercode::coordinator::messages::{JobBroadcast, MasterMsg, ModelId, PartialResult};
     use hiercode::coordinator::metrics::Metrics;
     use hiercode::coordinator::JobId;
+    use hiercode::sync::WallClock;
     use std::sync::{mpsc, Arc};
 
     let code = Arc::new(HierarchicalCode::homogeneous(2, 1, 2, 1).unwrap());
@@ -298,6 +300,8 @@ fn late_partial_after_tombstone_gc_counts_as_late_delivery() {
         vec![],
         Arc::clone(&metrics),
         Duration::from_secs(5),
+        LivenessConfig::disabled(),
+        Arc::new(WallClock::new()),
         master_rx,
     )
     .expect("spawn master");
@@ -367,7 +371,7 @@ fn shutdown_never_hangs_even_when_jobs_cannot_complete() {
     let mut config = ClusterConfig::demo(2, 1, 2, 2);
     config.serving.drain_ms = 300.0;
     let faults = FaultConfig::none().with_dead_links(&[0, 1]);
-    assert!(!faults.survivable(2, 1, 2, 2));
+    assert!(!faults.survivable_for(&config.code.topology));
     let core = ClusterCore::launch_with_faults(&config, faults).unwrap();
     core.register_model("m", &test_matrix(4, 2, 63)).unwrap();
     let client = core.handle();

@@ -1,18 +1,22 @@
 //! `determinism`: the simulator and the decode paths must be
 //! replayable — same seed, same bytes.
 //!
-//! `sim/` results feed the paper's figures and the decode paths back
-//! the `parallel decode == serial decode` bit-identity tests, so both
-//! ban ambient nondeterminism: wall clocks (`Instant`, `SystemTime`),
-//! OS-seeded randomness (`thread_rng`, `RandomState`) and unordered
-//! `HashMap`/`HashSet` iteration. Sites that only *report* time (e.g.
-//! decode timing metadata riding on an otherwise deterministic result)
-//! carry allowlist justifications.
+//! `sim/` results feed the paper's figures, the decode paths back the
+//! `parallel decode == serial decode` bit-identity tests, and the
+//! chaos driver backs the `hiercode chaos` same-seed determinism
+//! verdict, so all three ban ambient nondeterminism: wall clocks
+//! (`Instant`, `SystemTime`), OS-seeded randomness (`thread_rng`,
+//! `RandomState`) and unordered `HashMap`/`HashSet` iteration. Sites
+//! that only *report* time (e.g. decode timing metadata riding on an
+//! otherwise deterministic result) carry allowlist justifications.
 
 use super::{Finding, SourceFile};
 
-/// Deterministic-by-contract module prefixes.
-const SCOPES: &[&str] = &["src/sim/", "src/coding/"];
+/// Deterministic-by-contract module prefixes. The chaos driver clocks
+/// itself through the injectable `Clock` trait, so even its waiting is
+/// replayable — a raw `Instant` there would silently break the
+/// same-seed verdict.
+const SCOPES: &[&str] = &["src/sim/", "src/coding/", "src/coordinator/chaos.rs"];
 
 /// Banned identifiers and why.
 const BANNED: &[(&str, &str)] = &[
@@ -46,6 +50,8 @@ pub fn lint(file: &SourceFile) -> Vec<Finding> {
                     id.text,
                     if file.path.starts_with("src/sim/") {
                         "simulator"
+                    } else if file.path.starts_with("src/coordinator/") {
+                        "chaos driver"
                     } else {
                         "decode"
                     }
@@ -68,6 +74,16 @@ mod tests {
         ));
         let tokens: Vec<&str> = f.iter().map(|x| x.token.as_str()).collect();
         assert_eq!(tokens, vec!["Instant", "HashMap"]);
+    }
+
+    #[test]
+    fn chaos_driver_is_in_scope() {
+        let f = lint(&SourceFile::new(
+            "src/coordinator/chaos.rs",
+            "use std::time::Instant;\n",
+        ));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("chaos driver"));
     }
 
     #[test]
