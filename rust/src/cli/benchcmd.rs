@@ -8,7 +8,15 @@
 //!
 //! * `gemm_decode` — the packed 4×4-microkernel GEMM against the
 //!   pre-packing i-k-j kernel at the decode hot shape (`k×k · k×n`);
+//! * `gemm_simd` — the same packed GEMM on the runtime-dispatched
+//!   kernel table ([`dispatch::active`]) against the forced-scalar
+//!   table, with GFLOP/s + GB/s roofline numbers and a SIMD-vs-scalar
+//!   bit-identity verdict;
 //! * `lu_solve` — the blocked multi-RHS triangular solve;
+//! * `lu_cache` — repeat-erasure-pattern decodes through an MDS code
+//!   with the [`LuCache`] attached: cold (factorizing) vs warm
+//!   (memoized) per-decode time, steady-traffic hit rate, and a
+//!   cached-vs-uncached bit-identity verdict;
 //! * `group_scaling` — hierarchical group decoding at 1..max threads,
 //!   with speedup and efficiency-vs-ideal, plus a bit-identical
 //!   cross-thread determinism check;
@@ -24,11 +32,17 @@
 //!
 //! `--smoke` shrinks every size for CI (seconds, not minutes);
 //! `--threads N` caps the scaling sweep (default 4); `--iters N`
-//! overrides the per-measurement iteration count.
+//! overrides the per-measurement iteration count; `--trend FILE`
+//! compares the fresh `BENCH_decode.json` against a committed snapshot
+//! — any determinism/bit-identity verdict flipping to `false` is a hard
+//! failure, numeric figures only fail below a generous floor (¼ of the
+//! snapshot value), so CI catches real regressions without flaking on
+//! shared-runner noise.
 
 use crate::cli::args::Args;
-use crate::coding::{build_scheme_with, SchemeKind, WorkerResult};
-use crate::linalg::{lu::LuFactors, ops, Matrix};
+use crate::coding::{build_scheme_with, DecodeScratch, MdsCode, SchemeKind, WorkerResult};
+use crate::config::json::Json;
+use crate::linalg::{dispatch, lu::LuFactors, ops, LuCache, Matrix};
 use crate::parallel::DecodePool;
 use crate::sim::{montecarlo, SimParams};
 use crate::util::bench::fmt_time;
@@ -140,11 +154,87 @@ pub fn run(args: &Args) -> Result<()> {
     let sim_json = bench_sim(&cfg)?;
     let decode_path = format!("{out_dir}/BENCH_decode.json");
     let sim_path = format!("{out_dir}/BENCH_sim.json");
-    std::fs::write(&decode_path, decode_json)?;
+    std::fs::write(&decode_path, &decode_json)?;
     std::fs::write(&sim_path, sim_json)?;
     println!("wrote {decode_path}");
     println!("wrote {sim_path}");
+    if let Some(trend_path) = args.get_str("trend") {
+        let trend_text = std::fs::read_to_string(trend_path).map_err(|e| {
+            Error::InvalidParams(format!("--trend {trend_path}: {e}"))
+        })?;
+        check_trend(&decode_json, &trend_text)?;
+        println!("trend check vs {trend_path}: ok");
+    }
     Ok(())
+}
+
+/// Verdicts in `BENCH_decode.json` that must never regress to `false`.
+/// Dotted paths into the decode JSON; each resolves to a bool.
+const TREND_VERDICTS: [&str; 5] = [
+    "gemm_simd.bit_identical",
+    "lu_cache.bit_identical",
+    "hetero_group_decode.deterministic",
+    "partial_decode.deterministic",
+    "deterministic_across_threads",
+];
+
+/// Numeric figures compared against the committed snapshot. A figure
+/// fails only below `snapshot × TREND_NUMERIC_TOLERANCE` — generous on
+/// purpose: the snapshot records conservative floors, and CI runners
+/// vary wildly (a scalar-only host legitimately reports `gemm_simd`
+/// speedup ≈ 1.0 against an AVX2 snapshot floor of 1.5).
+const TREND_NUMERICS: [&str; 2] = ["gemm_simd.speedup_vs_scalar", "lu_cache.hit_rate"];
+
+/// Generous floor multiplier for [`TREND_NUMERICS`].
+const TREND_NUMERIC_TOLERANCE: f64 = 0.25;
+
+fn json_path<'a>(root: &'a Json, dotted: &str) -> Option<&'a Json> {
+    dotted.split('.').try_fold(root, |node, key| node.get(key))
+}
+
+/// Compare a fresh `BENCH_decode.json` against a committed trend
+/// snapshot. Determinism/bit-identity verdicts are hard gates; numeric
+/// figures fail only below ¼ of the snapshot value. A verdict or figure
+/// absent from the snapshot is skipped (older snapshots stay usable), a
+/// verdict absent from the *current* output is an error (the bench
+/// silently dropped a check).
+fn check_trend(current_text: &str, trend_text: &str) -> Result<()> {
+    let current = Json::parse(current_text)
+        .map_err(|e| Error::InvalidParams(format!("bench output unparseable: {e}")))?;
+    let trend = Json::parse(trend_text)
+        .map_err(|e| Error::InvalidParams(format!("trend snapshot unparseable: {e}")))?;
+    let mut failures = Vec::new();
+    for path in TREND_VERDICTS {
+        if json_path(&trend, path).and_then(Json::as_bool) != Some(true) {
+            continue; // snapshot doesn't pin this verdict
+        }
+        match json_path(&current, path).and_then(Json::as_bool) {
+            Some(true) => {}
+            Some(false) => failures.push(format!("verdict {path} regressed to false")),
+            None => failures.push(format!("verdict {path} missing from bench output")),
+        }
+    }
+    for path in TREND_NUMERICS {
+        let Some(floor) = json_path(&trend, path).and_then(Json::as_f64) else {
+            continue;
+        };
+        let allowed = floor * TREND_NUMERIC_TOLERANCE;
+        match json_path(&current, path).and_then(Json::as_f64) {
+            Some(v) if v >= allowed => {}
+            Some(v) => failures.push(format!(
+                "{path} = {v:.3} below floor {allowed:.3} (snapshot {floor:.3} × {TREND_NUMERIC_TOLERANCE})"
+            )),
+            None => failures.push(format!("{path} missing from bench output")),
+        }
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(Error::InvalidParams(format!(
+            "bench trend regression:\n  {}",
+            failures.join("\n  ")
+        )))
+    }
 }
 
 /// GEMM + LU + hierarchical group scaling + per-scheme sessions.
@@ -167,6 +257,36 @@ fn bench_decode(cfg: &BenchConfig) -> Result<String> {
         gflops
     );
 
+    // --- Runtime-dispatched SIMD kernels vs forced scalar. ---
+    // Same packed GEMM, same shape, serial pool both times — the only
+    // variable is the kernel table, so the ratio is the microkernel
+    // speedup and nothing else. GB/s counts the compulsory traffic
+    // (A + B read, C written once) to place the point on a roofline.
+    let serial = DecodePool::serial();
+    let kern = dispatch::active();
+    let simd_s = time_min(cfg.warmup, cfg.iters, || {
+        ops::matmul_with_kernels(&a, &b, &serial, kern)
+    });
+    let kscalar_s = time_min(cfg.warmup, cfg.iters, || {
+        ops::matmul_with_kernels(&a, &b, &serial, dispatch::scalar())
+    });
+    let simd_speedup = kscalar_s / simd_s;
+    let simd_gflops = 2.0 * (k * k * n) as f64 / simd_s / 1e9;
+    let simd_gbs = 8.0 * (k * k + 2 * k * n) as f64 / simd_s / 1e9;
+    let simd_out = ops::matmul_with_kernels(&a, &b, &serial, kern);
+    let kscalar_out = ops::matmul_with_kernels(&a, &b, &serial, dispatch::scalar());
+    let simd_identical = simd_out.data() == kscalar_out.data();
+    println!(
+        "bench gemm_simd_{k}x{k}x{n} [{}]    {}  scalar {}  speedup {:.2}x  \
+         ({:.2} GF/s, {:.2} GB/s, bit-identical: {simd_identical})",
+        kern.name,
+        fmt_time(simd_s),
+        fmt_time(kscalar_s),
+        simd_speedup,
+        simd_gflops,
+        simd_gbs
+    );
+
     // --- Blocked multi-RHS solve at the same shape. ---
     let mut gm = random_matrix(&mut r, k, k);
     for i in 0..k {
@@ -176,6 +296,72 @@ fn bench_decode(cfg: &BenchConfig) -> Result<String> {
     let rhs = random_matrix(&mut r, k, n);
     let solve_s = time_min(cfg.warmup, cfg.iters, || lu.solve_matrix(&rhs).unwrap());
     println!("bench lu_solve_{k}x{n}rhs          {}", fmt_time(solve_s));
+
+    // --- Erasure-pattern LU memoization on repeat decodes. ---
+    // An (n1, k1) MDS code decoding `cache_patterns` distinct erasure
+    // patterns (one systematic shard swapped for a parity shard, so the
+    // general k1×k1 path runs every time), each repeated `cache_reps`
+    // times — the steady traffic a serving cluster sees. Cold decodes
+    // pay factorize + solve; warm decodes are solve-only cache hits.
+    let (cn, ck) = (20usize, 16usize);
+    let cache_patterns = 4usize;
+    let cache_reps = 20usize;
+    let cache_block = (cfg.session_rows / ck).max(1);
+    let cache_code = MdsCode::new(cn, ck)?;
+    let cached_code = cache_code.clone().with_cache(Arc::new(LuCache::default()));
+    // Pattern p: systematic shards with index p replaced by parity
+    // shard ck + p. Values are synthetic (the solve never reads them).
+    let cache_sets: Vec<Vec<(usize, Matrix)>> = (0..cache_patterns)
+        .map(|p| {
+            (0..ck)
+                .map(|i| {
+                    let idx = if i == p { ck + p } else { i };
+                    (idx, random_matrix(&mut r, cache_block, cfg.group_batch))
+                })
+                .collect()
+        })
+        .collect();
+    let mut scratch = DecodeScratch::new();
+    let uncached_s = time_min(cfg.warmup, cfg.iters, || {
+        for set in &cache_sets {
+            cache_code.decode_stacked(set, &mut scratch).unwrap();
+        }
+    });
+    // Warm the cache (all patterns inserted), then time pure hits.
+    for set in &cache_sets {
+        cached_code.decode_stacked(set, &mut scratch)?;
+    }
+    let cached_s = time_min(cfg.warmup, cfg.iters, || {
+        for set in &cache_sets {
+            cached_code.decode_stacked(set, &mut scratch).unwrap();
+        }
+    });
+    // Steady-traffic hit rate on a fresh cache: patterns × reps
+    // lookups, one miss per distinct pattern.
+    let traffic_code = cache_code.clone().with_cache(Arc::new(LuCache::default()));
+    let mut cache_identical = true;
+    for _rep in 0..cache_reps {
+        for set in &cache_sets {
+            let (plain, plain_flops) = cache_code.decode_stacked(set, &mut scratch)?;
+            let (memo, memo_flops) = traffic_code.decode_stacked(set, &mut scratch)?;
+            // Bit-identity on every decode — cold misses and warm hits
+            // alike — plus warmth-independent flop accounting.
+            cache_identical &= plain.data() == memo.data() && plain_flops == memo_flops;
+        }
+    }
+    let cache_stats = traffic_code
+        .cache()
+        .map(|c| c.stats())
+        .unwrap_or_default();
+    let cache_hit_rate = cache_stats.hit_rate();
+    println!(
+        "bench lu_cache_{cn}c{ck}_{cache_patterns}pat   uncached {}  cached {}  \
+         speedup {:.2}x  (hit rate {:.1}%, bit-identical: {cache_identical})",
+        fmt_time(uncached_s),
+        fmt_time(cached_s),
+        uncached_s / cached_s,
+        cache_hit_rate * 100.0
+    );
 
     // --- Hierarchical group-decode scaling. ---
     // Parity-heavy arrivals (last k1 workers of each group) force real
@@ -371,7 +557,22 @@ fn bench_decode(cfg: &BenchConfig) -> Result<String> {
          \x20   \"speedup_vs_reference\": {},\n\
          \x20   \"packed_gflops\": {}\n\
          \x20 }},\n\
+         \x20 \"gemm_simd\": {{\n\
+         \x20   \"k\": {k}, \"n\": {n}, \"kernel\": \"{}\",\n\
+         \x20   \"simd_s\": {}, \"scalar_s\": {},\n\
+         \x20   \"speedup_vs_scalar\": {},\n\
+         \x20   \"simd_gflops\": {}, \"simd_gbs\": {},\n\
+         \x20   \"bit_identical\": {simd_identical}\n\
+         \x20 }},\n\
          \x20 \"lu_solve\": {{\"k\": {k}, \"rhs_cols\": {n}, \"seconds\": {}}},\n\
+         \x20 \"lu_cache\": {{\n\
+         \x20   \"n\": {cn}, \"k\": {ck}, \"patterns\": {cache_patterns}, \
+         \"reps\": {cache_reps},\n\
+         \x20   \"uncached_s\": {}, \"cached_s\": {},\n\
+         \x20   \"speedup_vs_uncached\": {},\n\
+         \x20   \"hits\": {}, \"misses\": {}, \"hit_rate\": {},\n\
+         \x20   \"bit_identical\": {cache_identical}\n\
+         \x20 }},\n\
          \x20 \"group_scaling\": {{\n\
          \x20   \"n1\": {n1}, \"k1\": {k1}, \"n2\": {n2}, \"k2\": {k2},\n\
          \x20   \"rows\": {rows}, \"batch\": {batch},\n\
@@ -402,7 +603,19 @@ fn bench_decode(cfg: &BenchConfig) -> Result<String> {
         jf(ikj_s),
         jf(gemm_speedup),
         jf(gflops),
+        kern.name,
+        jf(simd_s),
+        jf(kscalar_s),
+        jf(simd_speedup),
+        jf(simd_gflops),
+        jf(simd_gbs),
         jf(solve_s),
+        jf(uncached_s),
+        jf(cached_s),
+        jf(uncached_s / cached_s),
+        cache_stats.hits,
+        cache_stats.misses,
+        jf(cache_hit_rate),
         ju_list(&cfg.threads),
         jf_list(&scaling_s),
         jf_list(&speedup),
@@ -516,6 +729,31 @@ mod tests {
             assert!(v.get("schema").is_some(), "{name} missing schema");
             assert!(text.contains("true"), "{name}: determinism check absent");
             if name == "BENCH_decode.json" {
+                let simd = v.get("gemm_simd").expect("SIMD GEMM entry missing");
+                assert_eq!(
+                    simd.get("bit_identical").and_then(|d| d.as_bool()),
+                    Some(true),
+                    "dispatched kernels must be bit-identical to scalar"
+                );
+                assert!(
+                    simd.get("kernel").and_then(|x| x.as_str()).is_some(),
+                    "gemm_simd must record which kernel table ran"
+                );
+                let cache = v.get("lu_cache").expect("LU cache entry missing");
+                assert_eq!(
+                    cache.get("bit_identical").and_then(|d| d.as_bool()),
+                    Some(true),
+                    "cached decodes must be bit-identical to uncached"
+                );
+                // 4 patterns × 20 reps, one miss per pattern → 95%.
+                let rate = cache
+                    .get("hit_rate")
+                    .and_then(|x| x.as_f64())
+                    .expect("hit_rate present");
+                assert!(
+                    rate >= 0.9,
+                    "steady-traffic hit rate {rate} below the 90% target"
+                );
                 let het = v
                     .get("hetero_group_decode")
                     .expect("heterogeneous decode scenario missing");
@@ -536,5 +774,68 @@ mod tests {
                 assert_eq!(rs.len(), 2, "r sweep covers 1 and 4");
             }
         }
+        // The freshly written output must also pass against the
+        // committed trend snapshot — the exact check CI runs.
+        let decode_text =
+            std::fs::read_to_string(dir.join("BENCH_decode.json")).unwrap();
+        let trend = r#"{
+          "schema": "hiercode-bench/decode-trend/v1",
+          "gemm_simd": {"speedup_vs_scalar": 1.5, "bit_identical": true},
+          "lu_cache": {"hit_rate": 0.9, "bit_identical": true},
+          "hetero_group_decode": {"deterministic": true},
+          "partial_decode": {"deterministic": true},
+          "deterministic_across_threads": true
+        }"#;
+        check_trend(&decode_text, trend).unwrap();
+    }
+
+    #[test]
+    fn trend_check_gates_verdicts_hard_and_numerics_generously() {
+        let trend = r#"{
+          "gemm_simd": {"speedup_vs_scalar": 1.5, "bit_identical": true},
+          "lu_cache": {"hit_rate": 0.9, "bit_identical": true},
+          "hetero_group_decode": {"deterministic": true},
+          "partial_decode": {"deterministic": true},
+          "deterministic_across_threads": true
+        }"#;
+        let good = r#"{
+          "gemm_simd": {"speedup_vs_scalar": 0.95, "bit_identical": true},
+          "lu_cache": {"hit_rate": 0.95, "bit_identical": true},
+          "hetero_group_decode": {"deterministic": true},
+          "partial_decode": {"deterministic": true},
+          "deterministic_across_threads": true
+        }"#;
+        // 0.95x "speedup" (a scalar-only host) clears the ¼ floor.
+        check_trend(good, trend).unwrap();
+
+        // A flipped bit-identity verdict is a hard failure...
+        let bad_verdict = good.replace(
+            r#""lu_cache": {"hit_rate": 0.95, "bit_identical": true}"#,
+            r#""lu_cache": {"hit_rate": 0.95, "bit_identical": false}"#,
+        );
+        let err = check_trend(&bad_verdict, trend).unwrap_err().to_string();
+        assert!(err.contains("lu_cache.bit_identical"), "{err}");
+
+        // ...as is a numeric collapse far below the generous floor.
+        let bad_numeric = good.replace(
+            r#""speedup_vs_scalar": 0.95"#,
+            r#""speedup_vs_scalar": 0.2"#,
+        );
+        let err = check_trend(&bad_numeric, trend).unwrap_err().to_string();
+        assert!(err.contains("gemm_simd.speedup_vs_scalar"), "{err}");
+
+        // A missing verdict in the bench output is also a failure —
+        // silently dropping a check must not pass CI.
+        let dropped = r#"{
+          "gemm_simd": {"speedup_vs_scalar": 0.95, "bit_identical": true},
+          "lu_cache": {"hit_rate": 0.95, "bit_identical": true},
+          "partial_decode": {"deterministic": true},
+          "deterministic_across_threads": true
+        }"#;
+        let err = check_trend(dropped, trend).unwrap_err().to_string();
+        assert!(err.contains("hetero_group_decode.deterministic"), "{err}");
+
+        // An empty snapshot pins nothing except the numerics it names.
+        check_trend(good, "{}").unwrap();
     }
 }

@@ -32,6 +32,7 @@ USAGE:
   hiercode serve   [--config FILE] [--requests N] [--no-pjrt]
                    [--scheme hierarchical|mds|product|replication|polynomial]
   hiercode bench   [--smoke] [--threads N] [--iters N] [--out DIR]
+                   [--trend FILE]
   hiercode loadgen [--smoke] [--schemes S,S] [--clients N,N,...]
                    [--duration-s T] [--models N] [--rows R] [--cols C]
                    [--queue-cap Q] [--deadline-ms D] [--seed S] [--out DIR]
@@ -47,7 +48,9 @@ reports uniform vs optimized bound and Monte-Carlo E[T].
 `serve` launches the in-process cluster (any scheme via --scheme) and
 runs a request workload through its streaming decode sessions.
 `bench` runs the decode/GEMM/simulator benches and writes the
-BENCH_decode.json / BENCH_sim.json perf baselines to --out (default .).
+BENCH_decode.json / BENCH_sim.json perf baselines to --out (default .);
+--trend FILE diffs the decode baseline against a committed snapshot
+(hard-fails on determinism-verdict regressions, generous numeric floor).
 `loadgen` drives the multi-tenant job service with closed-loop clients
 round-robining across --models registered models, per scheme and
 concurrency level, and writes throughput + p50/p95/p99 latency (and

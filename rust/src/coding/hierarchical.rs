@@ -197,6 +197,28 @@ impl HierarchicalCode {
         self
     }
 
+    /// Attach a fresh erasure-pattern LU cache to every constituent
+    /// code: one per inner group plus one for the outer code (factors
+    /// are generator-specific, so caches are never shared across
+    /// codes). Every decoder session opened from this instance — group,
+    /// master, or standalone — then memoizes repeat surviving-index
+    /// sets. Results stay bit-identical to the uncached code.
+    pub fn with_decode_caches(mut self) -> Self {
+        self.outer = self
+            .outer
+            .clone()
+            .with_cache(Arc::new(crate::linalg::LuCache::default()));
+        self.inner = self
+            .inner
+            .iter()
+            .map(|c| {
+                c.clone()
+                    .with_cache(Arc::new(crate::linalg::LuCache::default()))
+            })
+            .collect();
+        self
+    }
+
     /// Code parameters.
     pub fn params(&self) -> &HierarchicalParams {
         &self.params
@@ -681,6 +703,14 @@ impl CodedScheme for HierarchicalCode {
         // Consumes group partials: shard = group index, data = Ã_i·X.
         Box::new(MdsDecoder::new(self.outer.clone(), out_rows))
     }
+
+    fn decode_caches(&self) -> Vec<Arc<crate::linalg::LuCache>> {
+        self.inner
+            .iter()
+            .chain(std::iter::once(&self.outer))
+            .filter_map(|c| c.cache().cloned())
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -693,6 +723,37 @@ mod tests {
 
     fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
         Matrix::from_fn(rows, cols, |_, _| r.uniform(-1.0, 1.0))
+    }
+
+    #[test]
+    fn decode_caches_cover_inner_and_outer_and_stay_bit_identical() {
+        let plain = HierarchicalCode::homogeneous(3, 2, 3, 2).unwrap();
+        let cached = HierarchicalCode::homogeneous(3, 2, 3, 2)
+            .unwrap()
+            .with_decode_caches();
+        assert!(plain.decode_caches().is_empty(), "bare codes are uncached");
+        assert_eq!(cached.decode_caches().len(), 4, "3 inner + 1 outer");
+        let mut r = Rng::new(11);
+        let a = random_matrix(&mut r, 8, 3);
+        let x = random_matrix(&mut r, 3, 2);
+        let shards = cached.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        // Parity-leaning subset: in-group workers {1,2} of groups 0 and
+        // 2, so every inner solve and the outer solve take the general
+        // (cacheable) path.
+        let subset = select_results(&all, &[1, 2, 7, 8]);
+        let p = plain.decode(&subset, 8).unwrap();
+        let c1 = cached.decode(&subset, 8).unwrap();
+        let c2 = cached.decode(&subset, 8).unwrap();
+        assert_eq!(p.result.data(), c1.result.data());
+        assert_eq!(c1.result.data(), c2.result.data());
+        assert_eq!(p.flops, c1.flops);
+        assert_eq!(c1.flops, c2.flops, "hits report full logical cost");
+        let stats: Vec<_> = cached.decode_caches().iter().map(|c| c.stats()).collect();
+        let hits: u64 = stats.iter().map(|s| s.hits).sum();
+        let misses: u64 = stats.iter().map(|s| s.misses).sum();
+        assert_eq!(misses, 3, "two inner + one outer cold factorization");
+        assert_eq!(hits, 3, "repeat pattern must hit every cache");
     }
 
     /// The paper's Fig. 3 toy example: (3,2) × (3,2).

@@ -8,7 +8,7 @@
 use crate::coding::{
     CodedScheme, DecodeOutput, DecodeProgress, DecodeScratch, Decoder, GatherK, WorkerResult,
 };
-use crate::linalg::{lu::LuFactors, ops, vandermonde, Matrix};
+use crate::linalg::{lu::LuFactors, ops, vandermonde, LuCache, Matrix};
 use crate::parallel::DecodePool;
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -23,6 +23,10 @@ pub struct MdsCode {
     generator: Matrix,
     /// Pool the decode solve fans its column panels across.
     pool: Arc<DecodePool>,
+    /// Optional erasure-pattern factor memo (see [`LuCache`]): attached
+    /// by the serving construction path, absent on bare codes so unit
+    /// semantics (flop accounting per decode) stay warmth-independent.
+    cache: Option<Arc<LuCache>>,
 }
 
 impl MdsCode {
@@ -34,6 +38,7 @@ impl MdsCode {
             k,
             generator,
             pool: Arc::new(DecodePool::serial()),
+            cache: None,
         })
     }
 
@@ -42,6 +47,23 @@ impl MdsCode {
     pub fn with_pool(mut self, pool: Arc<DecodePool>) -> Self {
         self.pool = pool;
         self
+    }
+
+    /// Attach an erasure-pattern LU cache: repeat surviving-index sets
+    /// skip `LuFactors::factorize` entirely. The cache must be private
+    /// to this code (factors are generator-specific); sessions cloned
+    /// from this code share it, which is exactly what serving wants.
+    /// Results are bit-identical with or without the cache — a hit
+    /// returns the same factors the canonical sorted-order
+    /// factorization would recompute.
+    pub fn with_cache(mut self, cache: Arc<LuCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// The attached erasure-pattern cache, if any.
+    pub fn cache(&self) -> Option<&Arc<LuCache>> {
+        self.cache.as_ref()
     }
 
     /// Code length `n`.
@@ -112,10 +134,15 @@ impl MdsCode {
     /// General path: one `k×k` LU solve whose right-hand side stacks the
     /// coded blocks row-per-block; the solved matrix's row-major storage
     /// *is* the stacked result, so the output needs no per-block copies
-    /// or `vstack`. All intermediates (generator submatrix, gathered
-    /// RHS, solve panels) live in `scratch`, reused across pushes — a
-    /// session decoding the same shapes every job allocates nothing but
-    /// its output. The solve's column panels fan across `pool`.
+    /// or `vstack`. The used blocks are first put into canonical
+    /// (ascending shard index) order, so the assembled system — and
+    /// every output bit — depends only on *which* shards survived,
+    /// never on arrival order; that invariance is what makes the sorted
+    /// index list a sound [`LuCache`] key. All intermediates (generator
+    /// submatrix, gathered RHS, solve panels) live in `scratch`, reused
+    /// across pushes — a session decoding the same shapes every job
+    /// allocates nothing but its output. The solve's column panels fan
+    /// across `pool`.
     pub fn decode_stacked_with(
         &self,
         coded: &[(usize, Matrix)],
@@ -162,19 +189,20 @@ impl MdsCode {
                 return Ok((out, 0));
             }
         }
-        // General path: solve G_S · D = Y for the k stacked data blocks.
+        // General path: solve G_S · D = Y for the k stacked data blocks,
+        // assembled in canonical (ascending shard index) order.
+        scratch.perm.clear();
+        scratch.perm.extend(0..self.k);
+        scratch.perm.sort_unstable_by_key(|&slot| use_set[slot].0);
         scratch.idx.clear();
-        scratch.idx.extend(use_set.iter().map(|&(i, _)| i));
-        {
-            let mut dedup = scratch.idx.clone();
-            dedup.sort_unstable();
-            dedup.dedup();
-            if dedup.len() != self.k {
-                return Err(Error::InvalidParams(format!(
-                    "duplicate coded block indices: {:?}",
-                    scratch.idx
-                )));
-            }
+        scratch
+            .idx
+            .extend(scratch.perm.iter().map(|&slot| use_set[slot].0));
+        if scratch.idx.windows(2).any(|w| w[0] == w[1]) {
+            return Err(Error::InvalidParams(format!(
+                "duplicate coded block indices: {:?}",
+                scratch.idx
+            )));
         }
         scratch.gsub.resize_to(self.k, self.k);
         for (bi, &src) in scratch.idx.iter().enumerate() {
@@ -186,10 +214,28 @@ impl MdsCode {
         // Reshape: stacked blocks → k × (block_rows · cols) system.
         // Each data block is a row of the k×k solve with block entries.
         scratch.rhs.resize_to(self.k, block_rows * cols);
-        for (bi, (_, block)) in use_set.iter().enumerate() {
-            scratch.rhs.row_mut(bi).copy_from_slice(block.data());
+        for (bi, &slot) in scratch.perm.iter().enumerate() {
+            scratch
+                .rhs
+                .row_mut(bi)
+                .copy_from_slice(use_set[slot].1.data());
         }
-        let lu = LuFactors::factorize(&scratch.gsub)?;
+        // Erasure-pattern memo: a repeat surviving-index set reuses the
+        // previously computed factors. Reported flops stay the full
+        // logical decode cost (the paper's §IV model) on hits and
+        // misses alike — cache wins show up in wall-clock and the
+        // hit/miss counters, never as a warmth-dependent flop figure.
+        let lu: Arc<LuFactors> = match &self.cache {
+            Some(cache) => match cache.lookup(&scratch.idx) {
+                Some(factors) => factors,
+                None => {
+                    let factors = Arc::new(LuFactors::factorize(&scratch.gsub)?);
+                    cache.insert(scratch.idx.clone(), Arc::clone(&factors));
+                    factors
+                }
+            },
+            None => Arc::new(LuFactors::factorize(&scratch.gsub)?),
+        };
         let solved = lu.solve_matrix_with(&scratch.rhs, pool, &mut scratch.solve_buf)?;
         let flops = lu.factor_flops() + lu.solve_flops(block_rows * cols);
         // Row i of `solved` is data block i row-major, so the solved
@@ -303,6 +349,10 @@ impl CodedScheme for MdsCode {
     fn decoder(&self, out_rows: usize, _batch: usize) -> Box<dyn Decoder> {
         Box::new(MdsDecoder::new(self.clone(), out_rows))
     }
+
+    fn decode_caches(&self) -> Vec<Arc<LuCache>> {
+        self.cache.iter().cloned().collect()
+    }
 }
 
 #[cfg(test)]
@@ -404,6 +454,49 @@ mod tests {
         let all = compute_all_products(&shards, &x);
         let dup = vec![all[3].clone(), all[3].clone()];
         assert!(code.decode(&dup, 4).is_err());
+    }
+
+    #[test]
+    fn parity_decode_is_arrival_order_invariant() {
+        let code = MdsCode::new(6, 3).unwrap();
+        let mut r = Rng::new(7);
+        let a = random_matrix(&mut r, 6, 4);
+        let x = random_matrix(&mut r, 4, 1);
+        let shards = code.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let fwd = code.decode(&select_results(&all, &[1, 4, 5]), 6).unwrap();
+        let rev = code.decode(&select_results(&all, &[5, 4, 1]), 6).unwrap();
+        assert_eq!(
+            fwd.result.data(),
+            rev.result.data(),
+            "canonical ordering must erase arrival order"
+        );
+        assert_eq!(fwd.flops, rev.flops);
+    }
+
+    #[test]
+    fn cached_parity_decode_is_bit_identical_and_counts_hits() {
+        let cache = Arc::new(LuCache::new(8));
+        let uncached = MdsCode::new(6, 3).unwrap();
+        let cached = uncached.clone().with_cache(Arc::clone(&cache));
+        let mut r = Rng::new(8);
+        let a = random_matrix(&mut r, 6, 4);
+        let x = random_matrix(&mut r, 4, 2);
+        let shards = cached.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        // Parity-heavy subset in shuffled arrival order.
+        let subset = select_results(&all, &[5, 3, 4]);
+        let plain = uncached.decode(&subset, 6).unwrap();
+        let cold = cached.decode(&subset, 6).unwrap();
+        let warm = cached.decode(&subset, 6).unwrap();
+        assert_eq!(plain.result.data(), cold.result.data());
+        assert_eq!(cold.result.data(), warm.result.data());
+        assert_eq!(plain.flops, cold.flops);
+        assert_eq!(cold.flops, warm.flops, "hits report full logical cost");
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 1);
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

@@ -66,8 +66,12 @@ pub struct DecodeScratch {
     pub(crate) rhs: Matrix,
     /// Panel buffer for [`crate::linalg::LuFactors::solve_matrix_with`].
     pub(crate) solve_buf: Vec<f64>,
-    /// Index workspace (dedup checks).
+    /// Sorted surviving-index workspace — doubles as the erasure-pattern
+    /// cache key (see [`crate::linalg::LuCache`]).
     pub(crate) idx: Vec<usize>,
+    /// Canonical-order permutation: `perm[bi]` is the arrival slot whose
+    /// shard index ranks `bi`-th ascending.
+    pub(crate) perm: Vec<usize>,
 }
 
 impl DecodeScratch {
@@ -78,6 +82,7 @@ impl DecodeScratch {
             rhs: Matrix::zeros(0, 0),
             solve_buf: Vec::new(),
             idx: Vec::new(),
+            perm: Vec::new(),
         }
     }
 }
@@ -238,6 +243,16 @@ pub trait CodedScheme: Send + Sync {
     fn master_decoder(&self, out_rows: usize, batch: usize) -> Box<dyn Decoder> {
         self.decoder(out_rows, batch)
     }
+
+    /// Every erasure-pattern LU cache this scheme's decoders consult
+    /// (one per constituent code for the hierarchical scheme). Empty for
+    /// schemes built without caches or whose decode has no `k×k` solve
+    /// to memoize (replication, product peeling). The coordinator uses
+    /// this to aggregate hit/miss metrics and to invalidate on model
+    /// re-registration or shard re-shipping.
+    fn decode_caches(&self) -> Vec<Arc<crate::linalg::LuCache>> {
+        Vec::new()
+    }
 }
 
 /// The five scheme families the crate implements, as a parseable enum —
@@ -364,16 +379,28 @@ pub fn build_scheme_topology(
     }
     let (n1, k1) = (topo.groups[0].n1, topo.groups[0].k1);
     let (n2, k2) = (topo.n2(), topo.k2);
+    // This is the serving construction path (cluster, simulator, CLI),
+    // so schemes with a k×k solve get an erasure-pattern LU cache —
+    // repeat straggler patterns then skip refactorization. Bare
+    // `MdsCode::new`-style constructors stay uncached.
     Ok(match kind {
-        SchemeKind::Hierarchical => {
-            Arc::new(HierarchicalCode::from_topology(topo.clone())?.with_pool(pool))
-        }
-        SchemeKind::Mds => Arc::new(MdsCode::new(n1 * n2, k1 * k2)?.with_pool(pool)),
+        SchemeKind::Hierarchical => Arc::new(
+            HierarchicalCode::from_topology(topo.clone())?
+                .with_pool(pool)
+                .with_decode_caches(),
+        ),
+        SchemeKind::Mds => Arc::new(
+            MdsCode::new(n1 * n2, k1 * k2)?
+                .with_pool(pool)
+                .with_cache(Arc::new(crate::linalg::LuCache::default())),
+        ),
         SchemeKind::Product => Arc::new(ProductCode::new(n1, k1, n2, k2)?.with_pool(pool)),
         SchemeKind::Replication => Arc::new(ReplicationCode::new(n1 * n2, k1 * k2)?),
-        SchemeKind::Polynomial => {
-            Arc::new(PolynomialCode::new(n1 * n2, k1 * k2)?.with_pool(pool))
-        }
+        SchemeKind::Polynomial => Arc::new(
+            PolynomialCode::new(n1 * n2, k1 * k2)?
+                .with_pool(pool)
+                .with_cache(Arc::new(crate::linalg::LuCache::default())),
+        ),
     })
 }
 

@@ -21,7 +21,7 @@
 use crate::coding::{
     CodedScheme, DecodeOutput, DecodeProgress, DecodeScratch, Decoder, GatherK, WorkerResult,
 };
-use crate::linalg::{lu::LuFactors, ops, Matrix};
+use crate::linalg::{lu::LuFactors, ops, LuCache, Matrix};
 use crate::parallel::DecodePool;
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -38,6 +38,9 @@ pub struct PolynomialCode {
     generator: Matrix,
     /// Pool the interpolation solve fans its column panels across.
     pool: Arc<DecodePool>,
+    /// Optional erasure-pattern factor memo (see [`LuCache`]); attached
+    /// by the serving construction path, absent on bare codes.
+    cache: Option<Arc<LuCache>>,
 }
 
 /// `n × k` matrix of Chebyshev polynomials `T_s(t_l)` via the
@@ -75,6 +78,7 @@ impl PolynomialCode {
             points,
             generator,
             pool: Arc::new(DecodePool::serial()),
+            cache: None,
         })
     }
 
@@ -82,6 +86,15 @@ impl PolynomialCode {
     /// then run in parallel (bit-identical results).
     pub fn with_pool(mut self, pool: Arc<DecodePool>) -> Self {
         self.pool = pool;
+        self
+    }
+
+    /// Attach an erasure-pattern LU cache: repeat surviving-index sets
+    /// skip refactorizing the Vandermonde submatrix. Must be private to
+    /// this code (factors are generator-specific); results are
+    /// bit-identical with or without it.
+    pub fn with_cache(mut self, cache: Arc<LuCache>) -> Self {
+        self.cache = Some(cache);
         self
     }
 
@@ -116,21 +129,29 @@ impl PolynomialCode {
             });
         }
         let use_set = &coded[..self.k];
-        scratch.idx.clear();
-        scratch.idx.extend(use_set.iter().map(|&(i, _)| i));
-        {
-            let mut dedup = scratch.idx.clone();
-            dedup.sort_unstable();
-            dedup.dedup();
-            if dedup.len() != self.k {
-                return Err(Error::InvalidParams(format!(
-                    "duplicate worker indices: {:?}",
-                    scratch.idx
-                )));
-            }
-        }
         let block_rows = use_set[0].1.rows();
         let cols = use_set[0].1.cols();
+        for (_, data) in use_set {
+            if data.rows() != block_rows || data.cols() != cols {
+                return Err(Error::InvalidParams("inconsistent result shapes".into()));
+            }
+        }
+        // Canonical (ascending worker index) order: the assembled system
+        // depends only on which workers responded, never on arrival
+        // order — the sorted index list is the [`LuCache`] key.
+        scratch.perm.clear();
+        scratch.perm.extend(0..self.k);
+        scratch.perm.sort_unstable_by_key(|&slot| use_set[slot].0);
+        scratch.idx.clear();
+        scratch
+            .idx
+            .extend(scratch.perm.iter().map(|&slot| use_set[slot].0));
+        if scratch.idx.windows(2).any(|w| w[0] == w[1]) {
+            return Err(Error::InvalidParams(format!(
+                "duplicate worker indices: {:?}",
+                scratch.idx
+            )));
+        }
         scratch.gsub.resize_to(self.k, self.k);
         for (bi, &src) in scratch.idx.iter().enumerate() {
             scratch
@@ -139,13 +160,25 @@ impl PolynomialCode {
                 .copy_from_slice(self.generator.row(src));
         }
         scratch.rhs.resize_to(self.k, block_rows * cols);
-        for (bi, (_, data)) in use_set.iter().enumerate() {
-            if data.rows() != block_rows || data.cols() != cols {
-                return Err(Error::InvalidParams("inconsistent result shapes".into()));
-            }
-            scratch.rhs.row_mut(bi).copy_from_slice(data.data());
+        for (bi, &slot) in scratch.perm.iter().enumerate() {
+            scratch
+                .rhs
+                .row_mut(bi)
+                .copy_from_slice(use_set[slot].1.data());
         }
-        let lu = LuFactors::factorize(&scratch.gsub)?;
+        // Erasure-pattern memo (flops stay the full logical decode cost
+        // on hits — see `MdsCode::decode_stacked_with`).
+        let lu: Arc<LuFactors> = match &self.cache {
+            Some(cache) => match cache.lookup(&scratch.idx) {
+                Some(factors) => factors,
+                None => {
+                    let factors = Arc::new(LuFactors::factorize(&scratch.gsub)?);
+                    cache.insert(scratch.idx.clone(), Arc::clone(&factors));
+                    factors
+                }
+            },
+            None => Arc::new(LuFactors::factorize(&scratch.gsub)?),
+        };
         let solved =
             lu.solve_matrix_with(&scratch.rhs, &self.pool, &mut scratch.solve_buf)?;
         let flops = lu.factor_flops() + lu.solve_flops(block_rows * cols);
@@ -263,6 +296,10 @@ impl CodedScheme for PolynomialCode {
             finished: false,
         })
     }
+
+    fn decode_caches(&self) -> Vec<Arc<LuCache>> {
+        self.cache.iter().cloned().collect()
+    }
 }
 
 #[cfg(test)]
@@ -317,6 +354,27 @@ mod tests {
         let all = compute_all_products(&shards, &x);
         let out = code.decode(&select_results(&all, &[0, 1, 2]), 6).unwrap();
         assert!(out.flops > 0, "polynomial decode is never free");
+    }
+
+    #[test]
+    fn cached_interpolation_is_bit_identical() {
+        let cache = Arc::new(LuCache::new(4));
+        let plain = PolynomialCode::new(6, 3).unwrap();
+        let cached = plain.clone().with_cache(Arc::clone(&cache));
+        let mut r = Rng::new(9);
+        let a = random_matrix(&mut r, 6, 2);
+        let x = random_matrix(&mut r, 2, 1);
+        let shards = plain.encode(&a).unwrap();
+        let all = compute_all_products(&shards, &x);
+        let subset = select_results(&all, &[4, 1, 5]);
+        let base = plain.decode(&subset, 6).unwrap();
+        let cold = cached.decode(&subset, 6).unwrap();
+        let warm = cached.decode(&subset, 6).unwrap();
+        assert_eq!(base.result.data(), cold.result.data());
+        assert_eq!(cold.result.data(), warm.result.data());
+        assert_eq!(cold.flops, warm.flops);
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 1);
     }
 
     #[test]

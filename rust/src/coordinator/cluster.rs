@@ -46,7 +46,8 @@ use crate::coordinator::metrics::{Metrics, MetricsSnapshot, ModelMetricsSnapshot
 use crate::coordinator::submaster::{self, LinkDelay};
 use crate::coordinator::worker::{self, WorkerCtx, WorkerDelay};
 use crate::config::schema::ClusterConfig;
-use crate::linalg::Matrix;
+use crate::linalg::lu::LuCacheStats;
+use crate::linalg::{LuCache, Matrix};
 use crate::runtime::PjrtRuntime;
 use crate::sync::{Mutex, RwLock, WallClock};
 use crate::util::rng::Rng;
@@ -312,6 +313,10 @@ pub struct Supervisor {
     respawned: Mutex<Vec<thread::JoinHandle<()>>>,
     /// Bumped per restart: salts the respawned worker's RNG stream.
     generation: AtomicU64,
+    /// The serving scheme's erasure-pattern LU caches, dropped whenever
+    /// shards are (re-)shipped — see
+    /// [`Supervisor::invalidate_decode_caches`].
+    caches: Vec<Arc<LuCache>>,
 }
 
 impl Supervisor {
@@ -341,6 +346,27 @@ impl Supervisor {
     /// Partials dropped so far by injected uplink loss.
     pub fn injected_drops(&self) -> u64 {
         self.faults.dropped()
+    }
+
+    /// Drop every memoized decode factorization. Called after model
+    /// (re-)registration and after a worker restart re-ships shards.
+    /// The memoized factors depend only on the scheme's generators, but
+    /// shard shipping is the conservative invalidation boundary — a
+    /// stale-entry bug is ruled out by construction instead of argued
+    /// about. Dropped entries count as evictions in the cache stats.
+    pub fn invalidate_decode_caches(&self) {
+        for cache in &self.caches {
+            cache.invalidate_all();
+        }
+    }
+
+    /// Aggregated stats across the scheme's decode caches (all zeros /
+    /// NaN hit-rate for schemes without caches).
+    pub fn decode_cache_stats(&self) -> LuCacheStats {
+        self.caches
+            .iter()
+            .map(|c| c.stats())
+            .fold(LuCacheStats::default(), LuCacheStats::merge)
     }
 }
 
@@ -402,6 +428,10 @@ impl FaultInjector for Supervisor {
         match spawned {
             Ok(handle) => {
                 self.respawned.lock().push(handle);
+                // The restart re-shipped shards: cross the conservative
+                // invalidation boundary (decodes after this point
+                // refactorize each pattern once).
+                self.invalidate_decode_caches();
                 let ms = started.elapsed().as_secs_f64() * 1e3;
                 crate::log_debug!(
                     "cluster",
@@ -608,6 +638,7 @@ impl ClusterCore {
             model_shards: Mutex::default(),
             respawned: Mutex::default(),
             generation: AtomicU64::new(0),
+            caches: scheme.decode_caches(),
         });
         threads.push(master::spawn(
             Arc::clone(&scheme),
@@ -771,6 +802,10 @@ impl ClusterCore {
             "cluster",
             "registered model '{name}' ({m}x{d}) as {id:?}"
         );
+        drop(models);
+        // Registration shipped fresh shards — same conservative
+        // invalidation boundary as a restart's re-ship.
+        self.supervisor.invalidate_decode_caches();
         Ok(())
     }
 
@@ -806,9 +841,15 @@ impl ClusterCore {
         &self.supervisor
     }
 
-    /// Metrics snapshot, including the per-model admission breakdown.
+    /// Metrics snapshot, including the per-model admission breakdown
+    /// and the scheme's aggregated decode-cache counters.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.state.metrics.snapshot();
+        let cache = self.supervisor.decode_cache_stats();
+        snap.decode_cache_hits = cache.hits;
+        snap.decode_cache_misses = cache.misses;
+        snap.decode_cache_evictions = cache.evictions;
+        snap.decode_cache_hit_rate = cache.hit_rate();
         let models = self.state.models.read();
         let mut per_model: Vec<ModelMetricsSnapshot> = models
             .values()

@@ -193,6 +193,14 @@ pub fn spawn(
     let handle = thread::Builder::new()
         .name("hiercode-master".to_string())
         .spawn(move || {
+            // The selection is process-wide and happens once; logging it
+            // from the master ties every decode latency in this run to
+            // the kernel set that produced it.
+            crate::log_debug!(
+                "master",
+                "decode kernels: {}",
+                crate::linalg::dispatch::active_name()
+            );
             let mut jobs: HashMap<JobId, JobState> = HashMap::new();
             // Request → job lookup for O(1) cancellation. Entries are
             // consumed by CancelRequest; like the Done entries in

@@ -205,6 +205,10 @@ impl Metrics {
             decode_p99: dec.quantile(0.99),
             per_group,
             models: Vec::new(),
+            decode_cache_hits: 0,
+            decode_cache_misses: 0,
+            decode_cache_evictions: 0,
+            decode_cache_hit_rate: f64::NAN,
         }
     }
 
@@ -323,6 +327,21 @@ pub struct MetricsSnapshot {
     /// Per-model admission breakdown, sorted by name (filled by
     /// `ClusterCore::metrics`; empty on a bare `Metrics::snapshot`).
     pub models: Vec<ModelMetricsSnapshot>,
+    /// Decode LU-cache lookups that skipped factorization, aggregated
+    /// across the scheme's caches (filled by `ClusterCore::metrics`
+    /// from [`crate::linalg::LuCache::stats`]; 0 on a bare snapshot).
+    pub decode_cache_hits: u64,
+    /// Decode LU-cache lookups that had to factorize (filled by
+    /// `ClusterCore::metrics`; 0 on a bare snapshot).
+    pub decode_cache_misses: u64,
+    /// Decode LU-cache entries dropped — LRU pressure or invalidation
+    /// on model registration / worker restart (filled by
+    /// `ClusterCore::metrics`; 0 on a bare snapshot).
+    pub decode_cache_evictions: u64,
+    /// Hit rate `hits / (hits + misses)` in `[0, 1]`, or the NaN
+    /// "no lookups yet" sentinel (same convention as the latency
+    /// histograms; serialized as `null`, displayed as `n/a`).
+    pub decode_cache_hit_rate: f64,
 }
 
 /// JSON number, or `null` for the NaN sentinel an empty histogram
@@ -386,7 +405,10 @@ impl MetricsSnapshot {
              \"latency_mean_s\": {}, \"latency_p50_s\": {}, \"latency_p95_s\": {}, \
              \"latency_p99_s\": {},\n  \
              \"decode_mean_s\": {}, \"decode_p50_s\": {}, \"decode_p95_s\": {}, \
-             \"decode_p99_s\": {},\n  \"per_group\": [{}],\n  \"models\": [{}]\n}}",
+             \"decode_p99_s\": {},\n  \
+             \"decode_cache_hits\": {}, \"decode_cache_misses\": {}, \
+             \"decode_cache_evictions\": {}, \"decode_cache_hit_rate\": {},\n  \
+             \"per_group\": [{}],\n  \"models\": [{}]\n}}",
             self.requests,
             self.jobs,
             self.completed,
@@ -408,9 +430,23 @@ impl MetricsSnapshot {
             jnum(self.decode_p50),
             jnum(self.decode_p95),
             jnum(self.decode_p99),
+            self.decode_cache_hits,
+            self.decode_cache_misses,
+            self.decode_cache_evictions,
+            jnum(self.decode_cache_hit_rate),
             per_group.join(", "),
             models.join(", ")
         )
+    }
+}
+
+/// Render a `[0, 1]` rate as a percentage, or `n/a` for the NaN
+/// "no data yet" sentinel.
+fn fmt_rate(rate: f64) -> String {
+    if rate.is_finite() {
+        format!("{:.1}%", rate * 100.0)
+    } else {
+        "n/a".to_string()
     }
 }
 
@@ -461,13 +497,21 @@ impl std::fmt::Display for MetricsSnapshot {
             fmt_ms(self.latency_p95),
             fmt_ms(self.latency_p99)
         )?;
-        write!(
+        writeln!(
             f,
             "decode latency:  mean {}  p50 {}  p95 {}  p99 {}",
             fmt_ms(self.decode_mean),
             fmt_ms(self.decode_p50),
             fmt_ms(self.decode_p95),
             fmt_ms(self.decode_p99)
+        )?;
+        write!(
+            f,
+            "decode cache:    {} hits, {} misses, {} evictions, hit rate {}",
+            self.decode_cache_hits,
+            self.decode_cache_misses,
+            self.decode_cache_evictions,
+            fmt_rate(self.decode_cache_hit_rate)
         )?;
         for (g, gm) in self.per_group.iter().enumerate() {
             write!(
@@ -618,6 +662,38 @@ mod tests {
         assert!(
             !rendered.contains("p99 0.000ms"),
             "empty histogram must never render as zero latency"
+        );
+    }
+
+    #[test]
+    fn decode_cache_fields_default_to_no_data_sentinels() {
+        // A bare snapshot has no cache overlay: zero counters and the
+        // NaN hit-rate sentinel — Display says n/a, JSON says null.
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.decode_cache_hits, 0);
+        assert_eq!(s.decode_cache_misses, 0);
+        assert_eq!(s.decode_cache_evictions, 0);
+        assert!(s.decode_cache_hit_rate.is_nan());
+        assert!(format!("{s}").contains("hit rate n/a"));
+        let v = crate::config::json::Json::parse(&s.to_json()).expect("valid JSON");
+        assert!(matches!(
+            v.get("decode_cache_hit_rate"),
+            Some(crate::config::json::Json::Null)
+        ));
+        assert_eq!(
+            v.get("decode_cache_hits").and_then(|j| j.as_usize()),
+            Some(0)
+        );
+        // Overlaid values render as a percentage.
+        let mut s = s;
+        s.decode_cache_hits = 9;
+        s.decode_cache_misses = 1;
+        s.decode_cache_hit_rate = 0.9;
+        assert!(format!("{s}").contains("hit rate 90.0%"));
+        let v = crate::config::json::Json::parse(&s.to_json()).expect("valid JSON");
+        assert_eq!(
+            v.get("decode_cache_misses").and_then(|j| j.as_usize()),
+            Some(1)
         );
     }
 

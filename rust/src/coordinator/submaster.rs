@@ -142,6 +142,14 @@ pub fn spawn(
     let handle = thread::Builder::new()
         .name(format!("hiercode-sm{group}"))
         .spawn(move || {
+            // Group decodes below run on the runtime-selected SIMD
+            // kernels; surface the choice once per submaster so thread
+            // dumps and logs tie per-group decode time to a kernel set.
+            crate::log_debug!(
+                "submaster",
+                "group {group} decode kernels: {}",
+                crate::linalg::dispatch::active_name()
+            );
             let mut jobs: HashMap<JobId, GroupJob> = HashMap::new();
             // Announce liveness immediately (a severed uplink drops it,
             // which is the point: silence IS the failure signal).

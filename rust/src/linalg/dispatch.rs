@@ -1,0 +1,603 @@
+//! Runtime-dispatched SIMD kernels for the decode hot path.
+//!
+//! The three register-resident inner loops everything else is built on
+//! — the packed GEMM microkernel ([`Kernels::microkernel`]), the
+//! 4-source panel update of the blocked triangular solve
+//! ([`Kernels::update4`]) and the 4-row GEMV core
+//! ([`Kernels::matvec4`]) — exist in one scalar and (per-arch) one SIMD
+//! implementation, packaged as a [`Kernels`] table of function
+//! pointers. [`active`] selects the table **once** per process: AVX2 on
+//! x86-64 hosts that report it (AVX-512 hosts take the same AVX2 table
+//! — the AVX-512 f64 intrinsics stabilized in Rust 1.89, above this
+//! crate's 1.75 MSRV, so the wider path is detected but not yet
+//! emitted), NEON on aarch64, and the scalar table everywhere else
+//! (including under Miri, where feature detection reports nothing).
+//!
+//! # Bit-identity contract
+//!
+//! The SIMD kernels are drop-in replacements, not approximations: for
+//! every input they produce **bit-for-bit** the scalar results, so the
+//! crate-wide `parallel == serial` determinism suites extend to
+//! `simd == scalar` with no tolerance. Two rules make that possible:
+//!
+//! * **No FMA contraction.** Every multiply-add is an explicit
+//!   `mul` + `add` intrinsic pair, never a fused `fmadd` — a fused op
+//!   rounds once where the scalar code rounds twice, which would change
+//!   low bits.
+//! * **Same per-accumulator order.** SIMD lanes map to *independent*
+//!   scalar accumulators (the NR columns of a GEMM microtile, the
+//!   panel columns of a solve sweep, the 4 rows of a GEMV block), and
+//!   each lane receives its terms in exactly the scalar loop's order.
+//!   Where the scalar code evaluates `l0*y0 + l1*y1 + l2*y2 + l3*y3`
+//!   left-associatively, the vector code uses the same association.
+//!
+//! Feature checks happen **only** in [`select`]; the `unsafe`
+//! target-feature functions are reachable solely through a table that
+//! the selector refused to hand out unless the feature is present.
+//! The scalar table stays compiled on every target as the fallback and
+//! as the oracle the unit tests compare against.
+
+use crate::linalg::ops::{MR, NR};
+use std::sync::OnceLock;
+
+/// The dispatchable kernel table. All three entries share the
+/// bit-identity contract described in the module docs; `name` is
+/// surfaced in benches and metrics so a run records which path it
+/// measured.
+#[derive(Clone, Copy, Debug)]
+pub struct Kernels {
+    /// Selected implementation: `"scalar"`, `"avx2"`,
+    /// `"avx2 (avx512f host)"` or `"neon"`.
+    pub name: &'static str,
+    /// GEMM microtile core:
+    /// `acc[r·NR + c] += Σ_p apack[p·MR + r] · bstrip[p·NR + c]`,
+    /// accumulating over `p` in ascending order per accumulator.
+    /// `kc` is clamped to the packed panels' lengths, so the call is
+    /// total (no panic, no out-of-bounds) on any input.
+    pub microkernel: fn(kc: usize, apack: &[f64], bstrip: &[f64], acc: &mut [f64; MR * NR]),
+    /// Panel sweep core of the blocked triangular solve:
+    /// `yi[c] -= l[0]·y0[c] + l[1]·y1[c] + l[2]·y2[c] + l[3]·y3[c]`
+    /// (left-associative, matching the unrolled scalar sweep) for every
+    /// column `c` up to the shortest slice.
+    pub update4: fn(yi: &mut [f64], l: [f64; 4], y0: &[f64], y1: &[f64], y2: &[f64], y3: &[f64]),
+    /// GEMV core: four row·x dot products, each accumulated in
+    /// ascending-`j` order (one product added per step, matching the
+    /// scalar 4-row loop), over the shortest of the five slices.
+    pub matvec4: fn(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], x: &[f64]) -> [f64; 4],
+}
+
+/// The always-available scalar table — fallback and bit-identity
+/// oracle.
+pub const SCALAR: Kernels = Kernels {
+    name: "scalar",
+    microkernel: scalar::microkernel,
+    update4: scalar::update4,
+    matvec4: scalar::matvec4,
+};
+
+/// The table selected for this host, chosen once per process (see the
+/// module docs for the selection order).
+pub fn active() -> &'static Kernels {
+    static ACTIVE: OnceLock<Kernels> = OnceLock::new();
+    ACTIVE.get_or_init(select)
+}
+
+/// The scalar table, by reference — what benches and oracle tests force
+/// to measure/verify the SIMD path against.
+pub fn scalar() -> &'static Kernels {
+    &SCALAR
+}
+
+/// Name of the active table (`"scalar"`, `"avx2"`, …).
+pub fn active_name() -> &'static str {
+    active().name
+}
+
+/// One-time selection. The only place feature detection runs: every
+/// SIMD entry point below is reached exclusively through the table this
+/// function returns, which is what makes their `unsafe` sound.
+fn select() -> Kernels {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                // Detected but routed to AVX2: the AVX-512 f64
+                // intrinsics need rustc ≥ 1.89 (MSRV here is 1.75).
+                return Kernels {
+                    name: "avx2 (avx512f host)",
+                    ..avx2::KERNELS
+                };
+            }
+            return avx2::KERNELS;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return neon::KERNELS;
+        }
+    }
+    SCALAR
+}
+
+/// Scalar reference implementations — the exact loops the pre-dispatch
+/// code ran, kept as total functions (they clamp to the shortest slice
+/// instead of indexing past it).
+mod scalar {
+    use super::{MR, NR};
+
+    pub(super) fn microkernel(
+        kc: usize,
+        apack: &[f64],
+        bstrip: &[f64],
+        acc: &mut [f64; MR * NR],
+    ) {
+        let kc = kc.min(apack.len() / MR).min(bstrip.len() / NR);
+        for p in 0..kc {
+            let av = &apack[p * MR..p * MR + MR];
+            let bv = &bstrip[p * NR..p * NR + NR];
+            for r in 0..MR {
+                let ar = av[r];
+                for cidx in 0..NR {
+                    acc[r * NR + cidx] += ar * bv[cidx];
+                }
+            }
+        }
+    }
+
+    pub(super) fn update4(
+        yi: &mut [f64],
+        l: [f64; 4],
+        y0: &[f64],
+        y1: &[f64],
+        y2: &[f64],
+        y3: &[f64],
+    ) {
+        let w = yi
+            .len()
+            .min(y0.len())
+            .min(y1.len())
+            .min(y2.len())
+            .min(y3.len());
+        for c in 0..w {
+            yi[c] -= l[0] * y0[c] + l[1] * y1[c] + l[2] * y2[c] + l[3] * y3[c];
+        }
+    }
+
+    pub(super) fn matvec4(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], x: &[f64]) -> [f64; 4] {
+        let n = x
+            .len()
+            .min(r0.len())
+            .min(r1.len())
+            .min(r2.len())
+            .min(r3.len());
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        for j in 0..n {
+            let xj = x[j];
+            s0 += r0[j] * xj;
+            s1 += r1[j] * xj;
+            s2 += r2[j] * xj;
+            s3 += r3[j] * xj;
+        }
+        [s0, s1, s2, s3]
+    }
+}
+
+/// AVX2 implementations (256-bit, 4 × f64 lanes). Reached only through
+/// [`select`] after `is_x86_feature_detected!("avx2")` succeeded.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{Kernels, MR, NR};
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_permute2f128_pd,
+        _mm256_set1_pd, _mm256_setzero_pd, _mm256_storeu_pd, _mm256_sub_pd, _mm256_unpackhi_pd,
+        _mm256_unpacklo_pd,
+    };
+
+    pub(super) const KERNELS: Kernels = Kernels {
+        name: "avx2",
+        microkernel,
+        update4,
+        matvec4,
+    };
+
+    fn microkernel(kc: usize, apack: &[f64], bstrip: &[f64], acc: &mut [f64; MR * NR]) {
+        // SAFETY: this table is only handed out by select() after the
+        // avx2 runtime check passed, so the target-feature fn is
+        // callable; it clamps kc to both slice lengths before any load.
+        unsafe { microkernel_avx2(kc, apack, bstrip, acc) }
+    }
+
+    fn update4(yi: &mut [f64], l: [f64; 4], y0: &[f64], y1: &[f64], y2: &[f64], y3: &[f64]) {
+        // SAFETY: avx2 verified by select() (see microkernel above);
+        // the callee loads only below the clamped common width.
+        unsafe { update4_avx2(yi, l, y0, y1, y2, y3) }
+    }
+
+    fn matvec4(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], x: &[f64]) -> [f64; 4] {
+        // SAFETY: avx2 verified by select(); loads stay below the
+        // clamped common length.
+        unsafe { matvec4_avx2(r0, r1, r2, r3, x) }
+    }
+
+    /// `acc_r` lane `c` accumulates `apack[p·MR+r]·bstrip[p·NR+c]` in
+    /// ascending `p`, exactly the scalar per-accumulator chain. Mul and
+    /// add stay separate intrinsics: no FMA contraction.
+    #[target_feature(enable = "avx2")]
+    unsafe fn microkernel_avx2(kc: usize, apack: &[f64], bstrip: &[f64], acc: &mut [f64; MR * NR]) {
+        let kc = kc.min(apack.len() / MR).min(bstrip.len() / NR);
+        // SAFETY: acc is exactly MR·NR = 16 f64, so the four 4-lane
+        // loads/stores at offsets 0/4/8/12 are in bounds; per-p loads
+        // are bounded by the kc clamp above (p·NR + 4 ≤ bstrip.len(),
+        // p·MR + 4 ≤ apack.len()).
+        unsafe {
+            let mut acc0 = _mm256_loadu_pd(acc.as_ptr());
+            let mut acc1 = _mm256_loadu_pd(acc.as_ptr().add(NR));
+            let mut acc2 = _mm256_loadu_pd(acc.as_ptr().add(2 * NR));
+            let mut acc3 = _mm256_loadu_pd(acc.as_ptr().add(3 * NR));
+            for p in 0..kc {
+                let bv = _mm256_loadu_pd(bstrip.as_ptr().add(p * NR));
+                let ap = apack.as_ptr().add(p * MR);
+                acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(_mm256_set1_pd(*ap), bv));
+                acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(_mm256_set1_pd(*ap.add(1)), bv));
+                acc2 = _mm256_add_pd(acc2, _mm256_mul_pd(_mm256_set1_pd(*ap.add(2)), bv));
+                acc3 = _mm256_add_pd(acc3, _mm256_mul_pd(_mm256_set1_pd(*ap.add(3)), bv));
+            }
+            _mm256_storeu_pd(acc.as_mut_ptr(), acc0);
+            _mm256_storeu_pd(acc.as_mut_ptr().add(NR), acc1);
+            _mm256_storeu_pd(acc.as_mut_ptr().add(2 * NR), acc2);
+            _mm256_storeu_pd(acc.as_mut_ptr().add(3 * NR), acc3);
+        }
+    }
+
+    /// Vector lanes are panel columns; the summand keeps the scalar
+    /// sweep's left association `((l0·y0 + l1·y1) + l2·y2) + l3·y3`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn update4_avx2(
+        yi: &mut [f64],
+        l: [f64; 4],
+        y0: &[f64],
+        y1: &[f64],
+        y2: &[f64],
+        y3: &[f64],
+    ) {
+        let w = yi
+            .len()
+            .min(y0.len())
+            .min(y1.len())
+            .min(y2.len())
+            .min(y3.len());
+        // SAFETY: every pointer load/store below is at offset c with
+        // c + 4 ≤ w ≤ the length of each slice involved.
+        unsafe {
+            let l0 = _mm256_set1_pd(l[0]);
+            let l1 = _mm256_set1_pd(l[1]);
+            let l2 = _mm256_set1_pd(l[2]);
+            let l3 = _mm256_set1_pd(l[3]);
+            let mut c = 0;
+            while c + 4 <= w {
+                let t01 = _mm256_add_pd(
+                    _mm256_mul_pd(l0, _mm256_loadu_pd(y0.as_ptr().add(c))),
+                    _mm256_mul_pd(l1, _mm256_loadu_pd(y1.as_ptr().add(c))),
+                );
+                let t012 = _mm256_add_pd(t01, _mm256_mul_pd(l2, _mm256_loadu_pd(y2.as_ptr().add(c))));
+                let t = _mm256_add_pd(t012, _mm256_mul_pd(l3, _mm256_loadu_pd(y3.as_ptr().add(c))));
+                let v = _mm256_sub_pd(_mm256_loadu_pd(yi.as_ptr().add(c)), t);
+                _mm256_storeu_pd(yi.as_mut_ptr().add(c), v);
+                c += 4;
+            }
+            while c < w {
+                yi[c] -= l[0] * y0[c] + l[1] * y1[c] + l[2] * y2[c] + l[3] * y3[c];
+                c += 1;
+            }
+        }
+    }
+
+    /// Vector lanes are the four rows: a 4×4 transpose turns row loads
+    /// into per-`j` columns, then each `j` adds one product per lane in
+    /// ascending order — the scalar 4-accumulator chain, four lanes at
+    /// a time.
+    #[target_feature(enable = "avx2")]
+    unsafe fn matvec4_avx2(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], x: &[f64]) -> [f64; 4] {
+        let n = x
+            .len()
+            .min(r0.len())
+            .min(r1.len())
+            .min(r2.len())
+            .min(r3.len());
+        let mut out = [0.0f64; 4];
+        // SAFETY: all vector loads read 4 lanes at offset j with
+        // j + 4 ≤ n ≤ every slice's length; the final store writes the
+        // local 4-element array.
+        unsafe {
+            let mut acc = _mm256_setzero_pd();
+            let mut j = 0;
+            while j + 4 <= n {
+                let v0 = _mm256_loadu_pd(r0.as_ptr().add(j));
+                let v1 = _mm256_loadu_pd(r1.as_ptr().add(j));
+                let v2 = _mm256_loadu_pd(r2.as_ptr().add(j));
+                let v3 = _mm256_loadu_pd(r3.as_ptr().add(j));
+                // 4×4 transpose: c_t = (r0[j+t], r1[j+t], r2[j+t], r3[j+t]).
+                let t0 = _mm256_unpacklo_pd(v0, v1);
+                let t1 = _mm256_unpackhi_pd(v0, v1);
+                let t2 = _mm256_unpacklo_pd(v2, v3);
+                let t3 = _mm256_unpackhi_pd(v2, v3);
+                let c0: __m256d = _mm256_permute2f128_pd(t0, t2, 0x20);
+                let c1: __m256d = _mm256_permute2f128_pd(t1, t3, 0x20);
+                let c2: __m256d = _mm256_permute2f128_pd(t0, t2, 0x31);
+                let c3: __m256d = _mm256_permute2f128_pd(t1, t3, 0x31);
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(c0, _mm256_set1_pd(x[j])));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(c1, _mm256_set1_pd(x[j + 1])));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(c2, _mm256_set1_pd(x[j + 2])));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(c3, _mm256_set1_pd(x[j + 3])));
+                j += 4;
+            }
+            _mm256_storeu_pd(out.as_mut_ptr(), acc);
+            while j < n {
+                let xj = x[j];
+                out[0] += r0[j] * xj;
+                out[1] += r1[j] * xj;
+                out[2] += r2[j] * xj;
+                out[3] += r3[j] * xj;
+                j += 1;
+            }
+        }
+        out
+    }
+}
+
+/// NEON implementations (128-bit, 2 × f64 lanes). Reached only through
+/// [`select`] after `is_aarch64_feature_detected!("neon")` succeeded.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{Kernels, MR, NR};
+    use std::arch::aarch64::{
+        vaddq_f64, vdupq_n_f64, vld1q_f64, vmulq_f64, vst1q_f64, vsubq_f64, vtrn1q_f64, vtrn2q_f64,
+    };
+
+    pub(super) const KERNELS: Kernels = Kernels {
+        name: "neon",
+        microkernel,
+        update4,
+        matvec4,
+    };
+
+    fn microkernel(kc: usize, apack: &[f64], bstrip: &[f64], acc: &mut [f64; MR * NR]) {
+        // SAFETY: this table is only handed out by select() after the
+        // neon runtime check passed; the callee clamps kc before any
+        // load.
+        unsafe { microkernel_neon(kc, apack, bstrip, acc) }
+    }
+
+    fn update4(yi: &mut [f64], l: [f64; 4], y0: &[f64], y1: &[f64], y2: &[f64], y3: &[f64]) {
+        // SAFETY: neon verified by select(); loads stay below the
+        // clamped common width.
+        unsafe { update4_neon(yi, l, y0, y1, y2, y3) }
+    }
+
+    fn matvec4(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], x: &[f64]) -> [f64; 4] {
+        // SAFETY: neon verified by select(); loads stay below the
+        // clamped common length.
+        unsafe { matvec4_neon(r0, r1, r2, r3, x) }
+    }
+
+    /// Two 2-lane accumulators per microtile row (columns 0–1 / 2–3),
+    /// chained over `p` in ascending order, mul and add unfused.
+    #[target_feature(enable = "neon")]
+    unsafe fn microkernel_neon(kc: usize, apack: &[f64], bstrip: &[f64], acc: &mut [f64; MR * NR]) {
+        let kc = kc.min(apack.len() / MR).min(bstrip.len() / NR);
+        // SAFETY: acc is MR·NR = 16 f64 so the eight 2-lane loads and
+        // stores are in bounds; per-p loads are bounded by the clamp.
+        unsafe {
+            let mut lo = [vld1q_f64(acc.as_ptr()); MR];
+            let mut hi = [vld1q_f64(acc.as_ptr()); MR];
+            for r in 0..MR {
+                lo[r] = vld1q_f64(acc.as_ptr().add(r * NR));
+                hi[r] = vld1q_f64(acc.as_ptr().add(r * NR + 2));
+            }
+            for p in 0..kc {
+                let blo = vld1q_f64(bstrip.as_ptr().add(p * NR));
+                let bhi = vld1q_f64(bstrip.as_ptr().add(p * NR + 2));
+                let ap = apack.as_ptr().add(p * MR);
+                for r in 0..MR {
+                    let ar = vdupq_n_f64(*ap.add(r));
+                    lo[r] = vaddq_f64(lo[r], vmulq_f64(ar, blo));
+                    hi[r] = vaddq_f64(hi[r], vmulq_f64(ar, bhi));
+                }
+            }
+            for r in 0..MR {
+                vst1q_f64(acc.as_mut_ptr().add(r * NR), lo[r]);
+                vst1q_f64(acc.as_mut_ptr().add(r * NR + 2), hi[r]);
+            }
+        }
+    }
+
+    /// Lanes are panel columns (two at a time); the summand keeps the
+    /// scalar left association.
+    #[target_feature(enable = "neon")]
+    unsafe fn update4_neon(
+        yi: &mut [f64],
+        l: [f64; 4],
+        y0: &[f64],
+        y1: &[f64],
+        y2: &[f64],
+        y3: &[f64],
+    ) {
+        let w = yi
+            .len()
+            .min(y0.len())
+            .min(y1.len())
+            .min(y2.len())
+            .min(y3.len());
+        // SAFETY: every load/store is at offset c with c + 2 ≤ w ≤ the
+        // length of each slice involved.
+        unsafe {
+            let l0 = vdupq_n_f64(l[0]);
+            let l1 = vdupq_n_f64(l[1]);
+            let l2 = vdupq_n_f64(l[2]);
+            let l3 = vdupq_n_f64(l[3]);
+            let mut c = 0;
+            while c + 2 <= w {
+                let t01 = vaddq_f64(
+                    vmulq_f64(l0, vld1q_f64(y0.as_ptr().add(c))),
+                    vmulq_f64(l1, vld1q_f64(y1.as_ptr().add(c))),
+                );
+                let t012 = vaddq_f64(t01, vmulq_f64(l2, vld1q_f64(y2.as_ptr().add(c))));
+                let t = vaddq_f64(t012, vmulq_f64(l3, vld1q_f64(y3.as_ptr().add(c))));
+                let v = vsubq_f64(vld1q_f64(yi.as_ptr().add(c)), t);
+                vst1q_f64(yi.as_mut_ptr().add(c), v);
+                c += 2;
+            }
+            while c < w {
+                yi[c] -= l[0] * y0[c] + l[1] * y1[c] + l[2] * y2[c] + l[3] * y3[c];
+                c += 1;
+            }
+        }
+    }
+
+    /// Lanes are row pairs (0–1 / 2–3); a 2×2 transpose per `j` pair
+    /// feeds one product per lane per `j` in ascending order.
+    #[target_feature(enable = "neon")]
+    unsafe fn matvec4_neon(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], x: &[f64]) -> [f64; 4] {
+        let n = x
+            .len()
+            .min(r0.len())
+            .min(r1.len())
+            .min(r2.len())
+            .min(r3.len());
+        let mut out = [0.0f64; 4];
+        // SAFETY: all 2-lane loads are at offset j with j + 2 ≤ n ≤
+        // every slice's length; the stores write the local array.
+        unsafe {
+            let mut acc01 = vdupq_n_f64(0.0);
+            let mut acc23 = vdupq_n_f64(0.0);
+            let mut j = 0;
+            while j + 2 <= n {
+                let v0 = vld1q_f64(r0.as_ptr().add(j));
+                let v1 = vld1q_f64(r1.as_ptr().add(j));
+                let v2 = vld1q_f64(r2.as_ptr().add(j));
+                let v3 = vld1q_f64(r3.as_ptr().add(j));
+                // 2×2 transpose: columns (r0[j], r1[j]) and (r0[j+1], r1[j+1]).
+                let c01_j = vtrn1q_f64(v0, v1);
+                let c01_j1 = vtrn2q_f64(v0, v1);
+                let c23_j = vtrn1q_f64(v2, v3);
+                let c23_j1 = vtrn2q_f64(v2, v3);
+                let xj = vdupq_n_f64(x[j]);
+                let xj1 = vdupq_n_f64(x[j + 1]);
+                acc01 = vaddq_f64(acc01, vmulq_f64(c01_j, xj));
+                acc23 = vaddq_f64(acc23, vmulq_f64(c23_j, xj));
+                acc01 = vaddq_f64(acc01, vmulq_f64(c01_j1, xj1));
+                acc23 = vaddq_f64(acc23, vmulq_f64(c23_j1, xj1));
+                j += 2;
+            }
+            vst1q_f64(out.as_mut_ptr(), acc01);
+            vst1q_f64(out.as_mut_ptr().add(2), acc23);
+            while j < n {
+                let xj = x[j];
+                out[0] += r0[j] * xj;
+                out[1] += r1[j] * xj;
+                out[2] += r2[j] * xj;
+                out[3] += r3[j] * xj;
+                j += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vec_rand(r: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| r.uniform(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn selection_is_stable_and_named() {
+        // active() must return the same table every call (OnceLock),
+        // and its name must be one of the known implementations.
+        let a = active();
+        let b = active();
+        assert_eq!(a.name, b.name);
+        assert!(
+            ["scalar", "avx2", "avx2 (avx512f host)", "neon"].contains(&a.name),
+            "unknown kernel table {:?}",
+            a.name
+        );
+        assert_eq!(scalar().name, "scalar");
+    }
+
+    #[test]
+    fn microkernel_simd_bit_identical_to_scalar() {
+        // On SIMD hosts this is the real oracle check; on scalar-only
+        // hosts (and under Miri, where detection reports nothing) both
+        // sides are the scalar kernel and the test is a tautology.
+        let mut r = Rng::new(0x51D);
+        for kc in [0usize, 1, 2, 3, 4, 7, 8, 33, 256] {
+            let apack = vec_rand(&mut r, kc * MR);
+            let bstrip = vec_rand(&mut r, kc * NR);
+            let seed = vec_rand(&mut r, MR * NR);
+            let mut want = [0.0f64; MR * NR];
+            let mut got = [0.0f64; MR * NR];
+            want.copy_from_slice(&seed);
+            got.copy_from_slice(&seed);
+            (SCALAR.microkernel)(kc, &apack, &bstrip, &mut want);
+            (active().microkernel)(kc, &apack, &bstrip, &mut got);
+            assert_eq!(want, got, "kc={kc}");
+        }
+    }
+
+    #[test]
+    fn update4_simd_bit_identical_to_scalar() {
+        let mut r = Rng::new(0x51E);
+        for w in [0usize, 1, 2, 3, 4, 5, 7, 8, 127, 128, 131] {
+            let l = [
+                r.uniform(-2.0, 2.0),
+                r.uniform(-2.0, 2.0),
+                0.0, // a zero coefficient must not change the path
+                r.uniform(-2.0, 2.0),
+            ];
+            let y0 = vec_rand(&mut r, w);
+            let y1 = vec_rand(&mut r, w);
+            let y2 = vec_rand(&mut r, w);
+            let y3 = vec_rand(&mut r, w);
+            let seed = vec_rand(&mut r, w);
+            let mut want = seed.clone();
+            let mut got = seed.clone();
+            (SCALAR.update4)(&mut want, l, &y0, &y1, &y2, &y3);
+            (active().update4)(&mut got, l, &y0, &y1, &y2, &y3);
+            assert_eq!(want, got, "w={w}");
+        }
+    }
+
+    #[test]
+    fn matvec4_simd_bit_identical_to_scalar() {
+        let mut r = Rng::new(0x51F);
+        for n in [0usize, 1, 2, 3, 4, 5, 8, 63, 64, 65] {
+            let r0 = vec_rand(&mut r, n);
+            let r1 = vec_rand(&mut r, n);
+            let r2 = vec_rand(&mut r, n);
+            let r3 = vec_rand(&mut r, n);
+            let x = vec_rand(&mut r, n);
+            let want = (SCALAR.matvec4)(&r0, &r1, &r2, &r3, &x);
+            let got = (active().matvec4)(&r0, &r1, &r2, &r3, &x);
+            assert_eq!(want, got, "n={n}");
+        }
+    }
+
+    #[test]
+    fn kernels_are_total_on_short_slices() {
+        // The clamp contract: mismatched slice lengths truncate instead
+        // of panicking or reading out of bounds.
+        let mut acc = [0.0f64; MR * NR];
+        (SCALAR.microkernel)(100, &[1.0; 8], &[1.0; 8], &mut acc);
+        (active().microkernel)(100, &[1.0; 8], &[1.0; 8], &mut acc);
+        let mut yi = vec![1.0; 10];
+        (active().update4)(&mut yi, [1.0; 4], &[1.0; 3], &[1.0; 10], &[1.0; 10], &[1.0; 10]);
+        assert_eq!(&yi[3..], &[1.0; 7][..], "columns past the clamp untouched");
+        let s = (active().matvec4)(&[1.0; 5], &[1.0; 5], &[1.0; 5], &[1.0; 5], &[2.0; 3]);
+        assert_eq!(s, [6.0; 4]);
+    }
+}

@@ -1,15 +1,29 @@
-//! Partial-pivot LU factorization, solve and inverse.
+//! Partial-pivot LU factorization, solve, inverse and the
+//! erasure-pattern factor cache.
 //!
 //! MDS decoding solves `G_S · A = Y` where `G_S` is the `k×k` submatrix
 //! of the generator for the responding workers and `Y` stacks their
 //! results. Decoding cost is `O(k^β)` with `β ≈ 2` once the `O(k³)`
 //! factorization is amortized across the `m/k`-row right-hand sides —
 //! which is exactly the cost model the paper assumes (§IV, footnote 2).
-//! The factorization cache in the coordinator exploits the same split.
+//! [`LuCache`] pushes the amortization across *requests*: `G_S` depends
+//! only on which workers responded, so under steady serving traffic —
+//! where the same few erasure patterns recur — the factors are memoized
+//! keyed by the **sorted** surviving-index set (the decoders gather
+//! rows in sorted index order precisely so arrival order cannot fork
+//! the key or the arithmetic). The cache is bounded (LRU eviction),
+//! per code instance (factors derive from the generator, never from
+//! model data), and invalidated wholesale by the coordinator whenever
+//! the ground truth could shift — model re-registration and supervisor
+//! shard re-shipping after a worker restart — so a stale pattern can
+//! never decode against rewired shards.
 
+use crate::linalg::dispatch;
 use crate::linalg::Matrix;
 use crate::parallel::DecodePool;
 use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Columns per solve panel: the triangular working set is
 /// `n × SOLVE_PANEL` f64 (128 KiB at n = 128 — L2-resident), and panel
@@ -225,7 +239,11 @@ impl LuFactors {
     }
 
     /// Forward + back substitution on one contiguous `n × w` panel.
+    /// The 4-source sweeps run the dispatched
+    /// [`dispatch::Kernels::update4`] kernel (SIMD where the host has
+    /// it, bit-identical to the scalar fallback by construction).
     fn solve_panel(&self, sl: &mut [f64], w: usize) {
+        let kern = dispatch::active();
         let n = self.dim();
         // Forward: L y = P b (unit lower triangle).
         for i in 1..n {
@@ -234,14 +252,12 @@ impl LuFactors {
             let lrow = self.lu.row(i);
             let mut j = 0;
             while j + 4 <= i {
-                let (l0, l1, l2, l3) = (lrow[j], lrow[j + 1], lrow[j + 2], lrow[j + 3]);
+                let l = [lrow[j], lrow[j + 1], lrow[j + 2], lrow[j + 3]];
                 let y0 = &head[j * w..(j + 1) * w];
                 let y1 = &head[(j + 1) * w..(j + 2) * w];
                 let y2 = &head[(j + 2) * w..(j + 3) * w];
                 let y3 = &head[(j + 3) * w..(j + 4) * w];
-                for c in 0..w {
-                    yi[c] -= l0 * y0[c] + l1 * y1[c] + l2 * y2[c] + l3 * y3[c];
-                }
+                (kern.update4)(yi, l, y0, y1, y2, y3);
                 j += 4;
             }
             while j < i {
@@ -262,15 +278,13 @@ impl LuFactors {
             let urow = self.lu.row(i);
             let mut j = i + 1;
             while j + 4 <= n {
-                let (u0, u1, u2, u3) = (urow[j], urow[j + 1], urow[j + 2], urow[j + 3]);
+                let u = [urow[j], urow[j + 1], urow[j + 2], urow[j + 3]];
                 let base = (j - i - 1) * w;
                 let x0 = &tail[base..base + w];
                 let x1 = &tail[base + w..base + 2 * w];
                 let x2 = &tail[base + 2 * w..base + 3 * w];
                 let x3 = &tail[base + 3 * w..base + 4 * w];
-                for c in 0..w {
-                    yi[c] -= u0 * x0[c] + u1 * x1[c] + u2 * x2[c] + u3 * x3[c];
-                }
+                (kern.update4)(yi, u, x0, x1, x2, x3);
                 j += 4;
             }
             while j < n {
@@ -308,6 +322,186 @@ impl LuFactors {
 /// Convenience: solve `A x = b` in one call.
 pub fn solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
     LuFactors::factorize(a)?.solve_vec(b)
+}
+
+/// Default [`LuCache`] capacity: generously above the handful of
+/// erasure patterns steady traffic produces per group, small enough
+/// that a worst-case full cache of `k×k` factors stays a few MiB.
+pub const LU_CACHE_PATTERNS: usize = 32;
+
+/// Point-in-time counters of one [`LuCache`] (hits and misses count
+/// lookups, so `hits + misses` is the total lookup count; `evictions`
+/// counts entries dropped, by LRU pressure or invalidation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LuCacheStats {
+    /// Lookups that returned memoized factors (factorization skipped).
+    pub hits: u64,
+    /// Lookups that found no entry (the caller factorizes and inserts).
+    pub misses: u64,
+    /// Entries dropped — LRU pressure or `invalidate_all`.
+    pub evictions: u64,
+}
+
+impl LuCacheStats {
+    /// Sum component-wise — aggregation across a scheme's caches.
+    pub fn merge(self, other: LuCacheStats) -> LuCacheStats {
+        LuCacheStats {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            evictions: self.evictions + other.evictions,
+        }
+    }
+
+    /// Hit rate in `[0, 1]`, or NaN before the first lookup (the same
+    /// "no data yet" sentinel the latency histograms use).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            f64::NAN
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One memoized erasure pattern.
+#[derive(Debug)]
+struct LuCacheEntry {
+    /// Sorted surviving-index set (the canonical decode order).
+    key: Box<[usize]>,
+    /// LRU clock value of the last touch.
+    stamp: u64,
+    /// The memoized factors, shared with in-flight solves.
+    factors: Arc<LuFactors>,
+}
+
+/// Bounded memo of LU factors keyed by the **sorted** surviving-index
+/// set of a decode — the erasure-pattern cache of the serving hot path.
+///
+/// Contract (the one the module docs describe):
+/// * **Keying.** The key is the sorted list of shard indices whose
+///   results the decoder consumed. Decoders canonicalize to sorted
+///   order before building `G_S`, so equal index *sets* produce equal
+///   keys *and* equal arithmetic — a hit returns bit-identical factors
+///   to what refactorizing would produce.
+/// * **Eviction.** Capacity is fixed at construction; inserting into a
+///   full cache evicts the least-recently-used entry.
+/// * **Invalidation.** [`LuCache::invalidate_all`] empties the cache
+///   (counting the drops as evictions). The coordinator calls it on
+///   model re-registration and on supervisor shard re-shipping; the
+///   factors themselves are generator-derived, so this is conservative
+///   — but conservative is what keeps a rewired cluster provably
+///   consistent.
+///
+/// Lookups take a short internal mutex (linear scan over at most
+/// `cap` entries — no hashing, so nothing about iteration order can
+/// leak into results); counters are lock-free atomics.
+#[derive(Debug)]
+pub struct LuCache {
+    /// Entries, unordered; `stamp` carries recency.
+    entries: crate::sync::Mutex<Vec<LuCacheEntry>>,
+    /// Maximum entry count.
+    cap: usize,
+    /// Monotonic LRU clock.
+    clock: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for LuCache {
+    fn default() -> Self {
+        Self::new(LU_CACHE_PATTERNS)
+    }
+}
+
+impl LuCache {
+    /// Cache holding at most `cap` patterns (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            entries: crate::sync::Mutex::new(Vec::new()),
+            cap: cap.max(1),
+            clock: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Memoized factors for the sorted index set `key`, bumping the
+    /// hit counter and the entry's recency — or `None` (a miss) when
+    /// the pattern has not been seen since the last invalidation.
+    pub fn lookup(&self, key: &[usize]) -> Option<Arc<LuFactors>> {
+        let mut entries = self.entries.lock();
+        if let Some(e) = entries.iter_mut().find(|e| e.key.as_ref() == key) {
+            e.stamp = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(Arc::clone(&e.factors));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Memoize `factors` under the sorted index set `key`, evicting the
+    /// least-recently-used entry when full. Re-inserting an existing
+    /// key replaces its factors (a racing double-factorize is benign:
+    /// both computed identical bits from identical inputs).
+    pub fn insert(&self, key: Vec<usize>, factors: Arc<LuFactors>) {
+        let stamp = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut entries = self.entries.lock();
+        if let Some(e) = entries.iter_mut().find(|e| e.key.as_ref() == key.as_slice()) {
+            e.stamp = stamp;
+            e.factors = factors;
+            return;
+        }
+        if entries.len() >= self.cap {
+            if let Some(lru) = entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i)
+            {
+                entries.swap_remove(lru);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        entries.push(LuCacheEntry {
+            key: key.into_boxed_slice(),
+            stamp,
+            factors,
+        });
+    }
+
+    /// Drop every entry (counted as evictions). The coordinator's
+    /// invalidation hook for model re-registration and shard
+    /// re-shipping.
+    pub fn invalidate_all(&self) {
+        let mut entries = self.entries.lock();
+        let dropped = entries.len() as u64;
+        entries.clear();
+        if dropped > 0 {
+            self.evictions.fetch_add(dropped, Ordering::Relaxed);
+        }
+    }
+
+    /// Current entry count.
+    pub fn len(&self) -> usize {
+        self.entries.lock().len()
+    }
+
+    /// True when no pattern is memoized.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> LuCacheStats {
+        LuCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -442,5 +636,69 @@ mod tests {
         assert!(f.factor_flops() > 0);
         // 2 n² per rhs column.
         assert_eq!(f.solve_flops(3), 2 * 100 * 3);
+    }
+
+    fn dummy_factors(r: &mut Rng, n: usize) -> Arc<LuFactors> {
+        Arc::new(LuFactors::factorize(&random_well_conditioned(r, n)).unwrap())
+    }
+
+    #[test]
+    fn cache_hits_misses_and_bit_identical_factors() {
+        let mut r = Rng::new(16);
+        let cache = LuCache::new(4);
+        assert!(cache.is_empty());
+        assert!(cache.lookup(&[0, 2, 3]).is_none());
+        let f = dummy_factors(&mut r, 5);
+        cache.insert(vec![0, 2, 3], Arc::clone(&f));
+        let hit = cache.lookup(&[0, 2, 3]).expect("pattern memoized");
+        // A hit returns the same factors object: trivially bit-identical.
+        assert!(Arc::ptr_eq(&hit, &f));
+        // A different pattern is a distinct key.
+        assert!(cache.lookup(&[0, 2, 4]).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used_at_capacity() {
+        let mut r = Rng::new(17);
+        let cache = LuCache::new(2);
+        cache.insert(vec![0], dummy_factors(&mut r, 2));
+        cache.insert(vec![1], dummy_factors(&mut r, 2));
+        // Touch [0] so [1] is the LRU entry.
+        assert!(cache.lookup(&[0]).is_some());
+        cache.insert(vec![2], dummy_factors(&mut r, 2));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup(&[0]).is_some(), "recently used survives");
+        assert!(cache.lookup(&[1]).is_none(), "LRU entry evicted");
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn cache_invalidate_all_empties_and_counts_evictions() {
+        let mut r = Rng::new(18);
+        let cache = LuCache::new(8);
+        cache.insert(vec![0, 1], dummy_factors(&mut r, 3));
+        cache.insert(vec![1, 2], dummy_factors(&mut r, 3));
+        cache.invalidate_all();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().evictions, 2);
+        assert!(cache.lookup(&[0, 1]).is_none(), "stale pattern gone");
+        // Fresh stats: hit rate NaN sentinel before any lookup.
+        assert!(LuCache::new(1).stats().hit_rate().is_nan());
+    }
+
+    #[test]
+    fn cache_reinsert_replaces_without_growth() {
+        let mut r = Rng::new(19);
+        let cache = LuCache::new(4);
+        let f1 = dummy_factors(&mut r, 3);
+        let f2 = dummy_factors(&mut r, 3);
+        cache.insert(vec![5, 6, 7], f1);
+        cache.insert(vec![5, 6, 7], Arc::clone(&f2));
+        assert_eq!(cache.len(), 1);
+        let got = cache.lookup(&[5, 6, 7]).unwrap();
+        assert!(Arc::ptr_eq(&got, &f2), "reinsert replaced the factors");
     }
 }

@@ -4,13 +4,16 @@
 //! whose coefficient matrices are submatrices of the code's generator
 //! (§II-A). No external BLAS/LAPACK is available offline, so this module
 //! provides the needed kernels: a row-major [`Matrix`], blocked
-//! GEMM/GEMV ([`ops`]), partial-pivot LU with solve/inverse ([`lu`]) and
-//! the Vandermonde / Cauchy generator builders ([`vandermonde`]).
+//! GEMM/GEMV ([`ops`]), partial-pivot LU with solve/inverse and the
+//! erasure-pattern factor cache ([`lu`]), runtime-dispatched SIMD inner
+//! kernels ([`dispatch`]) and the Vandermonde / Cauchy generator
+//! builders ([`vandermonde`]).
 
+pub mod dispatch;
 pub mod lu;
 pub mod matrix;
 pub mod ops;
 pub mod vandermonde;
 
-pub use lu::LuFactors;
+pub use lu::{LuCache, LuFactors};
 pub use matrix::Matrix;

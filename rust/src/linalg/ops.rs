@@ -7,7 +7,11 @@
 //! exactly the cost the paper's §IV weighs against computing time.
 //!
 //! §Perf: the production [`matmul`] is a packed kernel around a 4×4
-//! accumulator microtile. MR = NR = 4 keeps the 16 accumulators plus
+//! accumulator microtile, with the microtile core and the 4-row GEMV
+//! routed through the runtime-dispatched SIMD tables of
+//! [`crate::linalg::dispatch`] (AVX2/NEON when the host has them,
+//! bit-identical to the scalar fallback by construction).
+//! MR = NR = 4 keeps the 16 accumulators plus
 //! one A broadcast and one B vector inside the 16 ymm registers of
 //! baseline x86-64 (and comfortably inside aarch64's 32 v-registers);
 //! the `B` panel is repacked into NR-wide strips so the inner loop
@@ -20,6 +24,7 @@
 //! kernel cache-oblivious enough that one code path wins at every
 //! bench size.
 
+use crate::linalg::dispatch::{self, Kernels};
 use crate::linalg::Matrix;
 use crate::parallel::DecodePool;
 
@@ -40,10 +45,13 @@ const MC: usize = 16;
 
 /// `y = A x` — dense GEMV, 4 rows per pass so the `x` stream is reused
 /// from registers (the row-major layout makes per-row dot products the
-/// natural unit; per-row accumulation order matches [`matvec_naive`],
-/// so the two agree bit-for-bit).
+/// natural unit; the 4-row core runs the dispatched
+/// [`dispatch::Kernels::matvec4`] kernel, whose per-row accumulation
+/// order matches [`matvec_naive`], so scalar, SIMD and naive all agree
+/// bit-for-bit).
 pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.cols(), x.len(), "matvec shape mismatch");
+    let kern = dispatch::active();
     let (m, k) = (a.rows(), a.cols());
     let mut y = vec![0.0; m];
     let data = a.data();
@@ -53,13 +61,7 @@ pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
         let r1 = &data[(i + 1) * k..(i + 2) * k];
         let r2 = &data[(i + 2) * k..(i + 3) * k];
         let r3 = &data[(i + 3) * k..(i + 4) * k];
-        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-        for (j, &xj) in x.iter().enumerate() {
-            s0 += r0[j] * xj;
-            s1 += r1[j] * xj;
-            s2 += r2[j] * xj;
-            s3 += r3[j] * xj;
-        }
+        let [s0, s1, s2, s3] = (kern.matvec4)(r0, r1, r2, r3, x);
         y[i] = s0;
         y[i + 1] = s1;
         y[i + 2] = s2;
@@ -150,9 +152,17 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// read-only by every row task, each task owns a disjoint row range of
 /// `C`, and each microtile accumulates in registers over the full
 /// k-panel before touching `C`. Per-element accumulation order depends
-/// only on the fixed panel sizes — never on the thread count — so the
-/// result is bit-identical at any pool width.
+/// only on the fixed panel sizes — never on the thread count (and the
+/// dispatched SIMD microkernel preserves it lane-for-lane) — so the
+/// result is bit-identical at any pool width and on any kernel table.
 pub fn matmul_with(a: &Matrix, b: &Matrix, pool: &DecodePool) -> Matrix {
+    matmul_with_kernels(a, b, pool, dispatch::active())
+}
+
+/// [`matmul_with`] on an explicit kernel table — how `hiercode bench`
+/// times the SIMD path against the forced-scalar baseline, and how the
+/// oracle tests prove `simd == scalar` bit-for-bit.
+pub fn matmul_with_kernels(a: &Matrix, b: &Matrix, pool: &DecodePool, kern: &Kernels) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Matrix::zeros(m, n);
@@ -175,10 +185,10 @@ pub fn matmul_with(a: &Matrix, b: &Matrix, pool: &DecodePool) -> Matrix {
                     .map(|(t, chunk)| (t * MC, chunk))
                     .collect();
                 pool.map(tasks, |(i0, chunk)| {
-                    gemm_rows(a, i0, chunk, n, jc, nc, pc, kc, bpack, strips);
+                    gemm_rows(a, i0, chunk, n, jc, nc, pc, kc, bpack, strips, kern);
                 });
             } else {
-                gemm_rows(a, 0, c.data_mut(), n, jc, nc, pc, kc, bpack, strips);
+                gemm_rows(a, 0, c.data_mut(), n, jc, nc, pc, kc, bpack, strips, kern);
             }
         }
     }
@@ -199,6 +209,7 @@ fn gemm_rows(
     kc: usize,
     bpack: &[f64],
     strips: usize,
+    kern: &Kernels,
 ) {
     let rows = chunk.len() / n;
     let mut apack = [0.0f64; MR * KC];
@@ -210,28 +221,12 @@ fn gemm_rows(
             let nr = NR.min(nc - j0);
             let bstrip = &bpack[s * kc * NR..(s + 1) * kc * NR];
             let mut acc = [0.0f64; MR * NR];
-            microkernel(kc, &apack, bstrip, &mut acc);
+            (kern.microkernel)(kc, &apack, bstrip, &mut acc);
             for r in 0..mr {
                 let crow = &mut chunk[(ir + r) * n + jc + j0..][..nr];
                 for (cj, &av) in crow.iter_mut().zip(&acc[r * NR..r * NR + nr]) {
                     *cj += av;
                 }
-            }
-        }
-    }
-}
-
-/// The register-resident core: `acc[r][c] += Σ_p apack[p][r]·bstrip[p][c]`
-/// with constant MR×NR bounds the compiler fully unrolls/vectorizes.
-#[inline]
-fn microkernel(kc: usize, apack: &[f64], bstrip: &[f64], acc: &mut [f64; MR * NR]) {
-    for p in 0..kc {
-        let av = &apack[p * MR..p * MR + MR];
-        let bv = &bstrip[p * NR..p * NR + NR];
-        for r in 0..MR {
-            let ar = av[r];
-            for cidx in 0..NR {
-                acc[r * NR + cidx] += ar * bv[cidx];
             }
         }
     }
@@ -366,6 +361,22 @@ mod tests {
                 c1.max_abs_diff(&c2)
             );
             assert!(c1.max_abs_diff(&c3) < 1e-10, "ikj mismatch at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn dispatched_matmul_is_bit_identical_to_forced_scalar() {
+        // The simd == scalar oracle at the GEMM level: on SIMD hosts
+        // this exercises the AVX2/NEON microkernel against the scalar
+        // table; on scalar-only hosts both sides are the same kernel.
+        let mut r = Rng::new(21);
+        for (m, k, n) in [(1, 1, 1), (5, 7, 3), (64, 64, 64), (65, 130, 67), (3, 257, 41)] {
+            let a = random_matrix(&mut r, m, k);
+            let b = random_matrix(&mut r, k, n);
+            let pool = DecodePool::serial();
+            let active = matmul_with_kernels(&a, &b, &pool, dispatch::active());
+            let scalar = matmul_with_kernels(&a, &b, &pool, dispatch::scalar());
+            assert_eq!(active.data(), scalar.data(), "{m}x{k}x{n}");
         }
     }
 

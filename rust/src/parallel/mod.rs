@@ -24,10 +24,26 @@
 use crate::sync::Mutex;
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// Hard ceiling on the configured thread count: anything larger is a
 /// config typo, not a machine (`decode_threads` validation rejects it).
 pub const MAX_THREADS: usize = 1024;
+
+/// The machine's available parallelism, resolved **once** per process.
+/// `DecodePool::new(0)` used to re-query the OS on every call; on
+/// systems where the affinity mask can change under us (cgroup resizes,
+/// taskset) that made two "auto" pools disagree on width mid-run. One
+/// cached resolution keeps every auto-width pool — and therefore every
+/// pooled decode's panel split — consistent for the process lifetime.
+fn auto_threads() -> usize {
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
 
 /// A scoped work pool of a fixed logical width.
 ///
@@ -53,9 +69,7 @@ impl DecodePool {
             )));
         }
         let threads = if threads == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
+            auto_threads()
         } else {
             threads
         };
@@ -107,8 +121,11 @@ impl DecodePool {
         let next = AtomicUsize::new(0);
         let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
         std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| {
+            for w in 0..workers {
+                // Captures only shared references, so the closure is
+                // `Copy` — the named-spawn attempt below can consume a
+                // copy and still fall back to an anonymous spawn.
+                let work = || {
                     let mut local: Vec<(usize, R)> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
@@ -123,7 +140,16 @@ impl DecodePool {
                         local.push((i, f(item)));
                     }
                     done.lock().extend(local);
-                });
+                };
+                // Named threads so profiles and thread dumps attribute
+                // decode time to the pool instead of `<unnamed>`.
+                if std::thread::Builder::new()
+                    .name(format!("hc-decode-{w}"))
+                    .spawn_scoped(s, work)
+                    .is_err()
+                {
+                    s.spawn(work);
+                }
             }
         });
         let mut out: Vec<Option<R>> = Vec::with_capacity(n);
@@ -148,6 +174,36 @@ mod tests {
     fn zero_resolves_to_available_parallelism() {
         let p = DecodePool::new(0).unwrap();
         assert!(p.size() >= 1);
+    }
+
+    #[test]
+    fn auto_width_is_resolved_once_and_stable() {
+        // Repeated auto pools must agree: the width is resolved once
+        // per process, not re-queried from the OS per construction.
+        let first = DecodePool::new(0).unwrap().size();
+        for _ in 0..8 {
+            assert_eq!(DecodePool::new(0).unwrap().size(), first);
+        }
+        // Explicit widths are untouched by the cache.
+        assert_eq!(DecodePool::new(3).unwrap().size(), 3);
+    }
+
+    #[test]
+    fn pool_threads_are_named() {
+        let pool = DecodePool::new(2).unwrap();
+        let names = pool.map(vec![(), ()], |()| {
+            // Hold both workers briefly so each claims one task and we
+            // observe two distinct pool threads, not one fast worker.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            std::thread::current().name().map(str::to_string)
+        });
+        for name in names {
+            let name = name.unwrap_or_default();
+            assert!(
+                name.starts_with("hc-decode-"),
+                "pool thread named {name:?}"
+            );
+        }
     }
 
     #[test]

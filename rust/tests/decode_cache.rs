@@ -1,0 +1,144 @@
+//! Integration: the erasure-pattern LU cache under worker churn.
+//!
+//! A serving cluster with one systematic worker crashed per group pins
+//! every group's surviving-shard set, so each group decode takes the
+//! general (factorizing) path with a *constant* erasure pattern — the
+//! steady traffic the cache exists for. The tests drive jobs through
+//! that cluster and check the full contract end to end:
+//!
+//! * repeat patterns hit the cache, and every cached decode is
+//!   **bit-identical** to the cold (cache-miss) decode, which runs the
+//!   exact factorize-then-solve computation an uncached code performs
+//!   (the unit suites in `coding::mds` / `coding::polynomial` pin the
+//!   cached-vs-bare-code comparison directly);
+//! * hit/miss/eviction counters stay consistent with the traffic and
+//!   surface through `ClusterCore::metrics`;
+//! * `worker_restart` re-ships shards and **invalidates** every cache
+//!   (stale factors must not survive a topology repair), after which
+//!   the same pattern re-factorizes once and serves hits again.
+
+use hiercode::config::schema::ClusterConfig;
+use hiercode::coordinator::chaos::FaultInjector;
+use hiercode::coordinator::ClusterCore;
+use hiercode::linalg::{ops, Matrix};
+use hiercode::util::rng::Rng;
+
+fn matrix(m: usize, d: usize, seed: u64) -> Matrix {
+    let mut r = Rng::new(seed);
+    Matrix::from_fn(m, d, |_, _| r.uniform(-1.0, 1.0))
+}
+
+/// (3,2)×(2,2) grid with worker 0 of each group crashed: every group
+/// decodes from the pinned parity-bearing set {1, 2} (general path,
+/// one constant cache key per group), and the outer (2,2) decode is
+/// the systematic fast path (no cache traffic). All decode subsets are
+/// forced, so outputs are bit-reproducible across jobs and the
+/// counter arithmetic below is exact, not probabilistic.
+#[test]
+fn repeat_patterns_hit_cache_and_restart_invalidates() {
+    let mut config = ClusterConfig::demo(3, 2, 2, 2);
+    // The crashes below happen while the cluster is idle; no detector.
+    config.chaos.liveness = false;
+    let core = ClusterCore::launch(&config).unwrap();
+    let a = matrix(16, 3, 44);
+    core.register_model("m", &a).unwrap();
+    let sup = core.supervisor();
+    sup.worker_crash(0, 0);
+    sup.worker_crash(1, 0);
+
+    let client = core.handle();
+    let x = vec![0.5, -1.25, 2.0];
+    let expect = ops::matvec(&a, &x);
+
+    // Cold decode: one cache miss per group, and the factorize-path
+    // result every later hit must reproduce bit for bit.
+    let y0 = client.submit_to("m", x.clone()).unwrap().wait().unwrap();
+    for (got, want) in y0.iter().zip(expect.iter()) {
+        assert!((got - want).abs() < 1e-6, "decode must match A·x");
+    }
+    // Steady traffic: the same erasure pattern 9 more times.
+    for _ in 0..9 {
+        let y = client.submit_to("m", x.clone()).unwrap().wait().unwrap();
+        assert_eq!(y, y0, "cache hits must be bit-identical to the cold decode");
+    }
+    let stats = sup.decode_cache_stats();
+    assert_eq!(stats.misses, 2, "one factorization per group's pinned pattern");
+    assert_eq!(stats.hits, 18, "9 repeat jobs × 2 group decodes");
+    assert_eq!(stats.evictions, 0, "nothing invalidated yet");
+
+    // The same numbers must surface through the cluster snapshot.
+    let snap = core.metrics();
+    assert_eq!(snap.decode_cache_hits, stats.hits);
+    assert_eq!(snap.decode_cache_misses, stats.misses);
+    assert_eq!(snap.decode_cache_evictions, stats.evictions);
+    assert!(
+        (snap.decode_cache_hit_rate - 0.9).abs() < 1e-12,
+        "18 hits / 20 lookups, got {}",
+        snap.decode_cache_hit_rate
+    );
+
+    // Restart re-ships worker (0,0)'s shards and must flush every
+    // cache: the conservative invalidation boundary rules out stale
+    // factors instead of arguing about them.
+    let ms = sup.worker_restart(0, 0);
+    assert!(ms.is_finite(), "respawn failed");
+    let stats = sup.decode_cache_stats();
+    assert_eq!(
+        stats.evictions, 2,
+        "both groups' cached factors dropped on restart"
+    );
+
+    // Re-pin the pattern and decode again: the invalidated caches
+    // re-factorize once (bit-identical to the original cold decode),
+    // then serve hits again.
+    sup.worker_crash(0, 0);
+    let y1 = client.submit_to("m", x.clone()).unwrap().wait().unwrap();
+    assert_eq!(y1, y0, "re-factorized decode must reproduce the original bits");
+    let y2 = client.submit_to("m", x.clone()).unwrap().wait().unwrap();
+    assert_eq!(y2, y0);
+    let stats = sup.decode_cache_stats();
+    assert_eq!(stats.misses, 4, "each group re-factorizes once after the flush");
+    assert_eq!(stats.hits, 20, "the second post-restart job hits both caches");
+
+    // Registering a model also re-ships shards → same flush rule.
+    let b = matrix(16, 3, 45);
+    core.register_model("m2", &b).unwrap();
+    let stats = sup.decode_cache_stats();
+    assert_eq!(
+        stats.evictions, 4,
+        "register_model invalidates the repopulated caches"
+    );
+    core.shutdown();
+}
+
+/// A fully healthy grid keeps every group on the systematic fast path:
+/// no factorizations, so the cache sees zero traffic and the snapshot
+/// reports the no-data hit-rate sentinel (NaN → `"n/a"` in Display,
+/// `null` in JSON). Guards against the cache inserting itself into the
+/// zero-flop reshuffle path.
+#[test]
+fn systematic_fast_path_bypasses_cache() {
+    let mut config = ClusterConfig::demo(2, 2, 2, 2);
+    config.chaos.liveness = false;
+    let core = ClusterCore::launch(&config).unwrap();
+    let a = matrix(8, 3, 46);
+    core.register_model("m", &a).unwrap();
+    let client = core.handle();
+    let x = vec![1.0, 2.0, -0.5];
+    let expect = ops::matvec(&a, &x);
+    for _ in 0..3 {
+        let y = client.submit_to("m", x.clone()).unwrap().wait().unwrap();
+        for (got, want) in y.iter().zip(expect.iter()) {
+            assert!((got - want).abs() < 1e-6);
+        }
+    }
+    let stats = core.supervisor().decode_cache_stats();
+    assert_eq!(stats.hits + stats.misses, 0, "fast path must not touch the cache");
+    let snap = core.metrics();
+    assert!(
+        snap.decode_cache_hit_rate.is_nan(),
+        "no lookups → the no-data sentinel, got {}",
+        snap.decode_cache_hit_rate
+    );
+    core.shutdown();
+}

@@ -15,8 +15,17 @@ use super::{Finding, SourceFile};
 /// Deterministic-by-contract module prefixes. The chaos driver clocks
 /// itself through the injectable `Clock` trait, so even its waiting is
 /// replayable — a raw `Instant` there would silently break the
-/// same-seed verdict.
-const SCOPES: &[&str] = &["src/sim/", "src/coding/", "src/coordinator/chaos.rs"];
+/// same-seed verdict. `linalg/` backs the `simd == scalar` and
+/// cached == uncached bit-identity contracts, so its kernels, LU
+/// factorization and erasure-pattern cache get the same ban (the
+/// cache's Vec-scan store exists precisely because `HashMap` iteration
+/// order is not replayable).
+const SCOPES: &[&str] = &[
+    "src/sim/",
+    "src/coding/",
+    "src/linalg/",
+    "src/coordinator/chaos.rs",
+];
 
 /// Banned identifiers and why.
 const BANNED: &[(&str, &str)] = &[
@@ -52,6 +61,8 @@ pub fn lint(file: &SourceFile) -> Vec<Finding> {
                         "simulator"
                     } else if file.path.starts_with("src/coordinator/") {
                         "chaos driver"
+                    } else if file.path.starts_with("src/linalg/") {
+                        "kernel/cache"
                     } else {
                         "decode"
                     }
@@ -74,6 +85,16 @@ mod tests {
         ));
         let tokens: Vec<&str> = f.iter().map(|x| x.token.as_str()).collect();
         assert_eq!(tokens, vec!["Instant", "HashMap"]);
+    }
+
+    #[test]
+    fn linalg_is_in_scope() {
+        let f = lint(&SourceFile::new(
+            "src/linalg/lu.rs",
+            "use std::collections::HashMap;\n",
+        ));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("kernel/cache"));
     }
 
     #[test]

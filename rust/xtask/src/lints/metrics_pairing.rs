@@ -6,7 +6,9 @@
 //! `debug_assert` in `Metrics::dec` (gauge-below-zero) can never catch
 //! the real bug. The same pairing argument applies to admission
 //! slots: a `try_reserve()` with no `release()` site leaks queue
-//! capacity until the model rejects everything.
+//! capacity until the model rejects everything. A third pass checks
+//! [`COUPLED`] counters (decode-cache hits/misses) co-occur per file,
+//! so no overlay or emitter surfaces half a hit-rate.
 
 use super::{Finding, SourceFile};
 use crate::lexer::Scan;
@@ -15,6 +17,14 @@ use std::collections::BTreeMap;
 /// Fields of `Metrics` that are gauges (everything else is a
 /// monotonic counter and exempt from pairing).
 const GAUGES: &[&str] = &["queue_depth"];
+
+/// Counter names that must travel together *within a file*: a site
+/// that surfaces decode-cache hits but not misses (or vice versa)
+/// produces a hit-rate nobody can recompute — the overlay in
+/// `ClusterCore::metrics`, the JSON emitter and the Display impl must
+/// each carry both. (Evictions are deliberately unpaired: invalidation
+/// can evict without any lookup traffic.)
+const COUPLED: &[(&str, &str)] = &[("decode_cache_hits", "decode_cache_misses")];
 
 /// One `Metrics::inc/dec` call site, keyed by the gauge field name.
 struct Site {
@@ -133,6 +143,35 @@ pub fn lint(files: &[SourceFile]) -> Vec<Finding> {
     let mut out = Vec::new();
     unpaired(&mut out, &incs, &decs, "inc", "dec");
     unpaired(&mut out, &decs, &incs, "dec", "inc");
+    for f in files {
+        for (a, b) in COUPLED {
+            let site_of = |name: &str| {
+                f.scan
+                    .idents
+                    .iter()
+                    .find(|i| i.text == *name && !f.scan.in_test(i.line))
+            };
+            let (sa, sb) = (site_of(a), site_of(b));
+            let (present, absent, site) = match (sa, sb) {
+                (Some(s), None) => (*a, *b, s),
+                (None, Some(s)) => (*b, *a, s),
+                _ => continue,
+            };
+            out.push(Finding {
+                lint: "metrics_pairing",
+                file: f.path.clone(),
+                line: site.line,
+                token: present.to_string(),
+                message: format!(
+                    "`{present}` referenced without its paired counter \
+                     `{absent}` in this file — every site that surfaces \
+                     one side of the decode-cache hit/miss pair must \
+                     surface the other, or the hit-rate it implies \
+                     cannot be recomputed"
+                ),
+            });
+        }
+    }
     if !reserves.is_empty() && releases.is_empty() {
         out.push(Finding {
             lint: "metrics_pairing",
@@ -195,6 +234,24 @@ mod tests {
             "src/coordinator/a.rs",
             "fn f(e: &Entry) -> bool { e.admission.try_reserve() }\n\
              fn g(e: &Entry) { e.admission.release(); }",
+        )]);
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn half_of_a_coupled_counter_pair_is_flagged() {
+        let f = lint(&[SourceFile::new(
+            "src/coordinator/a.rs",
+            "fn f(s: &mut Snap, c: Stats) { s.decode_cache_hits = c.hits; }",
+        )]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].token, "decode_cache_hits");
+        let ok = lint(&[SourceFile::new(
+            "src/coordinator/a.rs",
+            "fn f(s: &mut Snap, c: Stats) {\n\
+             \x20   s.decode_cache_hits = c.hits;\n\
+             \x20   s.decode_cache_misses = c.misses;\n\
+             }",
         )]);
         assert!(ok.is_empty(), "{ok:?}");
     }

@@ -3,7 +3,7 @@
 //! Each lint is a pure function over pre-scanned sources, so the unit
 //! tests and the `--self-test` mode drive them with in-memory strings
 //! — no filesystem, no fixtures. Per-file lints ([`no_panic`],
-//! [`determinism`]) take one file; whole-crate lints
+//! [`determinism`], [`simd_safety`]) take one file; whole-crate lints
 //! ([`lock_discipline`], [`metrics_pairing`]) take the full set,
 //! because their properties (cycles, inc/dec pairing) span files.
 
@@ -11,6 +11,7 @@ pub mod determinism;
 pub mod lock_discipline;
 pub mod metrics_pairing;
 pub mod no_panic;
+pub mod simd_safety;
 
 use crate::lexer::Scan;
 
@@ -22,6 +23,9 @@ pub struct SourceFile {
     pub path: String,
     /// The token scan of its contents.
     pub scan: Scan,
+    /// The unstripped source — [`simd_safety`] reads comments (SAFETY
+    /// annotations), which the scan blanks out by design.
+    pub raw: String,
 }
 
 impl SourceFile {
@@ -30,6 +34,7 @@ impl SourceFile {
         SourceFile {
             path: path.to_string(),
             scan: Scan::new(source),
+            raw: source.to_string(),
         }
     }
 }
@@ -57,6 +62,7 @@ pub fn run_all(files: &[SourceFile]) -> Vec<Finding> {
     for f in files {
         out.extend(no_panic::lint(f));
         out.extend(determinism::lint(f));
+        out.extend(simd_safety::lint(f));
     }
     out.extend(lock_discipline::lint(files));
     out.extend(metrics_pairing::lint(files));
@@ -146,6 +152,20 @@ pub fn self_check() -> Vec<(&'static str, Result<(), String>)> {
          fn g(m: &Metrics) { Metrics::dec(&m.queue_depth); }",
     )];
     rows.push(("metrics_pairing", quiet("metrics_pairing", &clean)));
+
+    let seeded = vec![SourceFile::new(
+        "src/linalg/ops.rs",
+        "fn f(p: *const f64) -> f64 { unsafe { *p } }",
+    )];
+    rows.push(("simd_safety", fire("simd_safety", &seeded, "unsafe")));
+    let clean = vec![SourceFile::new(
+        "src/linalg/dispatch.rs",
+        "fn f(p: *const f64) -> f64 {\n\
+         \x20   // SAFETY: p points into a live slice (caller contract).\n\
+         \x20   unsafe { *p }\n\
+         }",
+    )];
+    rows.push(("simd_safety", quiet("simd_safety", &clean)));
 
     rows
 }

@@ -1,0 +1,167 @@
+//! `simd_safety`: `unsafe` stays inside the dispatch module, annotated.
+//!
+//! The crate's determinism and memory-safety story rests on keeping
+//! the SIMD kernels behind one audited boundary
+//! (`src/linalg/dispatch.rs`): feature detection runs only in its
+//! `select()`, and every `unsafe` block there cites the invariant that
+//! makes it sound. This lint enforces both halves mechanically:
+//!
+//! * an `unsafe` block anywhere else in the crate is a finding —
+//!   new unsafe code must either live in the dispatch module or carry
+//!   an allowlist entry arguing for a second audited boundary;
+//! * an `unsafe` block *inside* the dispatch module without a
+//!   `SAFETY:` comment in the few lines above it is a finding — the
+//!   soundness argument must sit next to the code it covers;
+//! * `is_x86_feature_detected!` / `is_aarch64_feature_detected!`
+//!   outside the dispatch module is a finding — scattered detection
+//!   reintroduces the per-call-site feature checks the one-shot
+//!   [`Kernels`](../../../src/linalg/dispatch.rs) table exists to
+//!   remove.
+//!
+//! Only `unsafe` *blocks* (`unsafe {`) are checked: an `unsafe fn`
+//! declaration shifts the obligation to its callers, and those call
+//! sites are themselves `unsafe` blocks this lint sees.
+
+use super::{Finding, SourceFile};
+
+/// The one module allowed to contain `unsafe` blocks and runtime
+/// feature detection.
+const DISPATCH: &str = "src/linalg/dispatch.rs";
+
+/// How many raw source lines above an `unsafe` block may hold its
+/// `SAFETY:` comment (the block's own line counts too).
+const SAFETY_WINDOW: usize = 5;
+
+/// Feature-detection macros that must not leave the dispatch module.
+const DETECT_MACROS: &[&str] = &["is_x86_feature_detected", "is_aarch64_feature_detected"];
+
+/// Scan one file for unsafe-boundary violations outside test code.
+pub fn lint(file: &SourceFile) -> Vec<Finding> {
+    let s = &file.scan;
+    let raw_lines: Vec<&str> = file.raw.lines().collect();
+    let mut out = Vec::new();
+    for id in &s.idents {
+        if s.in_test(id.line) {
+            continue;
+        }
+        if id.text == "unsafe" && matches!(s.next_nonspace(id.end), Some(('{', _))) {
+            if file.path != DISPATCH {
+                out.push(Finding {
+                    lint: "simd_safety",
+                    file: file.path.clone(),
+                    line: id.line,
+                    token: "unsafe".to_string(),
+                    message: format!(
+                        "`unsafe` block outside the audited kernel boundary \
+                         ({DISPATCH}); move the code behind the dispatch \
+                         table or allowlist a justified second boundary"
+                    ),
+                });
+            } else {
+                let lo = id.line.saturating_sub(SAFETY_WINDOW);
+                let annotated = raw_lines[lo..id.line.min(raw_lines.len())]
+                    .iter()
+                    .any(|l| l.contains("SAFETY"));
+                if !annotated {
+                    out.push(Finding {
+                        lint: "simd_safety",
+                        file: file.path.clone(),
+                        line: id.line,
+                        token: "missing_safety_comment".to_string(),
+                        message: format!(
+                            "`unsafe` block without a SAFETY: comment within \
+                             the {SAFETY_WINDOW} lines above it — state the \
+                             invariant that makes the block sound next to \
+                             the code"
+                        ),
+                    });
+                }
+            }
+        }
+        if file.path != DISPATCH && DETECT_MACROS.contains(&id.text.as_str()) {
+            out.push(Finding {
+                lint: "simd_safety",
+                file: file.path.clone(),
+                line: id.line,
+                token: id.text.clone(),
+                message: format!(
+                    "runtime feature detection outside {DISPATCH}: kernel \
+                     selection happens once in dispatch::select(), never \
+                     per call site"
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsafe_outside_dispatch_is_flagged() {
+        let f = lint(&SourceFile::new(
+            "src/linalg/ops.rs",
+            "fn f(p: *const f64) -> f64 { unsafe { *p } }",
+        ));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].token, "unsafe");
+    }
+
+    #[test]
+    fn annotated_unsafe_in_dispatch_is_clean() {
+        let f = lint(&SourceFile::new(
+            super::DISPATCH,
+            "fn f(p: *const f64) -> f64 {\n\
+             \x20   // SAFETY: p points into a live slice (caller contract).\n\
+             \x20   unsafe { *p }\n\
+             }",
+        ));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn unannotated_unsafe_in_dispatch_is_flagged() {
+        let f = lint(&SourceFile::new(
+            super::DISPATCH,
+            "fn f(p: *const f64) -> f64 { unsafe { *p } }",
+        ));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].token, "missing_safety_comment");
+    }
+
+    #[test]
+    fn unsafe_fn_declarations_are_exempt() {
+        // The obligation sits on callers; only blocks are checked.
+        let f = lint(&SourceFile::new(
+            "src/linalg/ops.rs",
+            "unsafe fn g(p: *const f64) -> f64 { *p }",
+        ));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn feature_detection_outside_dispatch_is_flagged() {
+        let f = lint(&SourceFile::new(
+            "src/coding/mds.rs",
+            "fn f() -> bool { std::arch::is_x86_feature_detected!(\"avx2\") }",
+        ));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].token, "is_x86_feature_detected");
+        let ok = lint(&SourceFile::new(
+            super::DISPATCH,
+            "fn f() -> bool { std::arch::is_x86_feature_detected!(\"avx2\") }",
+        ));
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn test_code_and_safety_in_strings_do_not_count() {
+        let f = lint(&SourceFile::new(
+            "src/linalg/ops.rs",
+            "#[cfg(test)]\nmod t {\n    fn f(p: *const f64) -> f64 { unsafe { *p } }\n}",
+        ));
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

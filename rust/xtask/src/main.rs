@@ -1,6 +1,6 @@
 //! `cargo xtask analyze` — the repo's invariant lints.
 //!
-//! Runs the four passes in [`lints`] over `src/` of the root crate and
+//! Runs the five passes in [`lints`] over `src/` of the root crate and
 //! reports every finding that does not carry an `analyze.allow` entry.
 //! The allowlist is exact-match on `(lint, file, token)` and every
 //! entry must both justify itself and still be *used* — a fixed
