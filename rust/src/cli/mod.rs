@@ -13,6 +13,8 @@ pub mod args;
 pub mod benchcmd;
 pub mod chaos;
 pub mod loadgen;
+pub mod node;
+pub mod transportcmd;
 
 use crate::sim::{bounds, markov, montecarlo, SimParams};
 use args::Args;
@@ -31,6 +33,7 @@ USAGE:
                    [--trials N] [--seed S]
   hiercode serve   [--config FILE] [--requests N] [--no-pjrt]
                    [--scheme hierarchical|mds|product|replication|polynomial]
+                   [--transport uds:PATH|tcp:HOST:PORT]
   hiercode bench   [--smoke] [--threads N] [--iters N] [--out DIR]
                    [--trend FILE]
   hiercode loadgen [--smoke] [--schemes S,S] [--clients N,N,...]
@@ -38,6 +41,12 @@ USAGE:
                    [--queue-cap Q] [--deadline-ms D] [--seed S] [--out DIR]
   hiercode chaos   [--smoke] [--seed S] [--duration-ms T] [--period-ms P]
                    [--clients N] [--probe-jobs N] [--out DIR]
+  hiercode node    --group G --connect ADDR
+                   (--config FILE | --preset NAME | --demo n1,k1,n2,k2)
+                   [--seed S] [--no-pjrt] [--max-dial-ms T]
+                   [--backoff-ms T] [--backoff-max-ms T]
+  hiercode transport [--smoke] [--threads] [--seed S] [--jobs N]
+                   [--probe-jobs N] [--max-dial-ms T] [--out DIR]
   hiercode help
 
 `figures` regenerates the paper's evaluation artifacts (CSV on stdout).
@@ -60,6 +69,17 @@ live serving cluster under closed-loop load: two same-seed survivable
 churn runs (determinism + 100% completion verdicts) and an
 unsurvivable sever run (fast-fail verdict), written to BENCH_chaos.json
 in --out; exits nonzero on any failed verdict.
+`serve --transport uds:/tmp/hub.sock` binds a socket hub instead of the
+in-memory channels and waits for one `hiercode node` process per group
+to dial in before serving.
+`node` runs one submaster/worker group as its own OS process: it
+rebuilds the master's config (same file, preset, or demo grid — the
+handshake checks the seed), dials the hub, and serves until Shutdown.
+`transport` verifies the socket transport against the in-memory oracle:
+bit-identical outputs and counters on the same seeded stream, reconnect
+with shard re-shipping under a node kill, and fast Insufficient failures
+on an unsurvivable outage, written to BENCH_transport.json in --out;
+exits nonzero on any failed verdict.
 ";
 
 /// CLI entry point (called from `main.rs`).
@@ -94,6 +114,8 @@ pub fn run(argv: &[String]) -> crate::Result<()> {
         "bench" => benchcmd::run(&args),
         "loadgen" => loadgen::run(&args),
         "chaos" => chaos::run(&args),
+        "node" => node::run(&args),
+        "transport" => transportcmd::run(&args),
         other => Err(crate::Error::InvalidParams(format!(
             "unknown command '{other}' (try `hiercode help`)"
         ))),
@@ -298,6 +320,12 @@ fn serve_cmd(args: &Args) -> crate::Result<()> {
         config.code.scheme = crate::coding::SchemeKind::parse(name)?;
         config.code.validate()?;
     }
+    if let Some(addr) = args.get_str("transport") {
+        // Fail on a malformed address here, before launch binds anything.
+        crate::transport::TransportAddr::parse(addr)?;
+        config.transport.mode = crate::config::schema::TransportMode::Socket;
+        config.transport.listen = addr.to_string();
+    }
     let requests = args.get_usize("requests")?.unwrap_or(32);
     // The demo floods its whole workload up front (open loop), so size
     // the admission queue to hold it — `loadgen` is the tool that
@@ -309,6 +337,22 @@ fn serve_cmd(args: &Args) -> crate::Result<()> {
     let mut rng = Rng::new(config.seed);
     let a = Matrix::from_fn(m, d, |_, _| rng.uniform(-1.0, 1.0));
     let cluster = Cluster::launch(&config, &a)?;
+    if config.transport.mode == crate::config::schema::TransportMode::Socket {
+        let wait_ms = config.transport.connect_wait_ms as u64;
+        println!(
+            "socket hub on {} — waiting up to {wait_ms}ms for {} node \
+             process(es) (hiercode node --group G --connect {})",
+            config.transport.listen,
+            config.code.topology.n2(),
+            config.transport.listen
+        );
+        if !cluster.core().wait_connected(wait_ms) {
+            cluster.shutdown();
+            return Err(crate::Error::Coordinator(format!(
+                "not every node group connected within {wait_ms}ms"
+            )));
+        }
+    }
     let shape = if config.code.topology.is_uniform_code() {
         format!(
             "({},{})x({},{})",
@@ -390,6 +434,8 @@ mod tests {
     #[test]
     fn serve_native_smoke() {
         run(&sv(&["serve", "--no-pjrt", "--requests", "4"])).unwrap();
+        // Malformed hub address fails before anything binds.
+        assert!(run(&sv(&["serve", "--no-pjrt", "--transport", "carrier:/x"])).is_err());
     }
 
     #[test]

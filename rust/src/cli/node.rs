@@ -1,0 +1,155 @@
+//! `hiercode node` — one submaster/worker group as its own OS process.
+//!
+//! The master side launches with `transport.mode = "socket"` (or
+//! `hiercode serve --transport uds:/tmp/hub.sock`) and listens; each
+//! `hiercode node` process rebuilds the same scheme from the same
+//! config, dials in, handshakes, and serves its group until the hub
+//! sends `Shutdown`:
+//!
+//! ```text
+//! hiercode serve --transport uds:/tmp/hub.sock --requests 8 &
+//! hiercode node --demo 4,2,4,2 --group 0 --connect uds:/tmp/hub.sock &
+//! hiercode node --demo 4,2,4,2 --group 1 --connect uds:/tmp/hub.sock &
+//! ...
+//! ```
+//!
+//! The config **must** match the master's — the handshake checks the
+//! seed as a cluster id, which catches the obvious mispairings (and
+//! `--preset` reproduces the exact configs the `hiercode transport`
+//! harness uses, so its child processes cannot drift).
+
+use crate::cli::args::Args;
+use crate::config::schema::ClusterConfig;
+use crate::transport::node::{run_node, NodeOptions};
+use crate::transport::TransportAddr;
+use crate::{Error, Result};
+
+/// Parse the CLI into [`NodeOptions`] (separated from [`run`] so tests
+/// can inspect the resolved options without dialing anything).
+pub fn options(args: &Args) -> Result<NodeOptions> {
+    let group = args.get_usize("group")?.ok_or_else(|| {
+        Error::InvalidParams("--group is required (which group this node hosts)".into())
+    })?;
+    let connect = args.get_str("connect").ok_or_else(|| {
+        Error::InvalidParams(
+            "--connect is required (the hub address, e.g. uds:/tmp/hub.sock)".into(),
+        )
+    })?;
+    let addr = TransportAddr::parse(connect)?;
+    let mut config = match (
+        args.get_str("config"),
+        args.get_str("preset"),
+        args.get_usize_list("demo")?,
+    ) {
+        (Some(path), None, None) => ClusterConfig::from_file(path)?,
+        (None, Some(name), None) => super::transportcmd::preset(name)?,
+        (None, None, Some(dims)) => match dims.as_slice() {
+            &[n1, k1, n2, k2] => ClusterConfig::demo(n1, k1, n2, k2),
+            _ => {
+                return Err(Error::InvalidParams(
+                    "--demo expects n1,k1,n2,k2 (four integers)".into(),
+                ))
+            }
+        },
+        (None, None, None) => {
+            return Err(Error::InvalidParams(
+                "one of --config FILE, --preset NAME or --demo n1,k1,n2,k2 \
+                 is required (must match the master's config)"
+                    .into(),
+            ))
+        }
+        _ => {
+            return Err(Error::InvalidParams(
+                "--config, --preset and --demo are mutually exclusive".into(),
+            ))
+        }
+    };
+    if let Some(seed) = args.get_usize("seed")? {
+        config.seed = seed as u64;
+    }
+    if args.has_flag("no-pjrt") {
+        config.runtime.use_pjrt = false;
+    }
+    let dial_backoff_ms = args
+        .get_usize("backoff-ms")?
+        .map(|v| v as u64)
+        .unwrap_or(config.transport.dial_backoff_ms as u64);
+    let dial_backoff_max_ms = args
+        .get_usize("backoff-max-ms")?
+        .map(|v| v as u64)
+        .unwrap_or(config.transport.dial_backoff_max_ms as u64);
+    let max_dial_ms = args
+        .get_usize("max-dial-ms")?
+        .map(|v| v as u64)
+        .unwrap_or(config.transport.connect_wait_ms as u64);
+    Ok(NodeOptions {
+        config,
+        group,
+        addr,
+        max_dial_ms,
+        dial_backoff_ms,
+        dial_backoff_max_ms,
+    })
+}
+
+/// Run a node process until clean shutdown or a fatal transport error.
+pub fn run(args: &Args) -> Result<()> {
+    run_node(options(args)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        let argv: Vec<String> = parts.iter().map(|s| s.to_string()).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn required_arguments_are_enforced() {
+        assert!(options(&parse(&["--connect", "uds:/tmp/x.sock"])).is_err());
+        assert!(options(&parse(&["--group", "0"])).is_err());
+        // No config source.
+        assert!(options(&parse(&["--group", "0", "--connect", "uds:/tmp/x.sock"])).is_err());
+        // Mutually exclusive sources.
+        assert!(options(&parse(&[
+            "--group", "0", "--connect", "uds:/tmp/x.sock", "--demo", "2,2,2,2",
+            "--preset", "bitident",
+        ]))
+        .is_err());
+        // Malformed demo grid.
+        assert!(options(&parse(&[
+            "--group", "0", "--connect", "uds:/tmp/x.sock", "--demo", "2,2,2",
+        ]))
+        .is_err());
+        // Bad address family.
+        assert!(options(&parse(&[
+            "--group", "0", "--connect", "carrier:/x", "--demo", "2,2,2,2",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn options_resolve_with_overrides() {
+        let o = options(&parse(&[
+            "--group", "1", "--connect", "uds:/tmp/x.sock", "--demo", "3,2,3,2",
+            "--seed", "7", "--max-dial-ms", "123", "--backoff-ms", "4",
+            "--backoff-max-ms", "40",
+        ]))
+        .unwrap();
+        assert_eq!(o.group, 1);
+        assert_eq!(o.config.seed, 7);
+        assert_eq!(o.max_dial_ms, 123);
+        assert_eq!(o.dial_backoff_ms, 4);
+        assert_eq!(o.dial_backoff_max_ms, 40);
+        assert_eq!(o.addr, TransportAddr::Uds("/tmp/x.sock".into()));
+        // Defaults flow from the config's transport section.
+        let d = options(&parse(&[
+            "--group", "0", "--connect", "uds:/tmp/x.sock", "--preset", "bitident",
+        ]))
+        .unwrap();
+        assert_eq!(d.dial_backoff_ms, 25);
+        assert_eq!(d.dial_backoff_max_ms, 1000);
+    }
+}

@@ -1,0 +1,716 @@
+//! `hiercode transport` — socket-cluster verification harness.
+//!
+//! The socket transport's whole claim is that it is *transparent*: a
+//! multi-process cluster must serve the exact bytes the in-memory
+//! channels serve, survive a node loss the way the supervisor survives
+//! a worker loss, and fail fast when too much of the tree goes dark.
+//! This harness measures all three against a live cluster:
+//!
+//! 1. **Bit-identity** — the same seeded job stream runs once over
+//!    in-memory channels and once over a real UDS hub with one node
+//!    per group. Every output must match bit for bit
+//!    (`f64::to_bits`), and the job/decode counters must agree
+//!    exactly: the determinism verdict.
+//! 2. **Reconnect** — one group's node goes away mid-stream (real
+//!    process kill, or a hub-side sever in `--threads` mode) and comes
+//!    back. Jobs during the outage must still complete (`k2 < n2`
+//!    redundancy), jobs after recovery must complete, and the hub must
+//!    log at least one reconnect with shards re-shipped.
+//! 3. **Fast-fail** — `n2 − k2 + 1` nodes go away and stay away.
+//!    Probes submitted after the failure detector ages them out must
+//!    fail with [`Error::Insufficient`] well before the admission
+//!    deadline, never by hanging.
+//!
+//! By default every node is a real `hiercode node` OS process (spawned
+//! from `current_exe`, joined by the wire handshake); `--threads` runs
+//! the same node code on in-process threads, which is what the unit
+//! test uses (the test binary has no `node` subcommand to exec).
+//!
+//! Results go to `BENCH_transport.json` in `--out` (default `.`) and
+//! the harness exits nonzero when any verdict fails, so CI catches
+//! transport regressions, not just crashes. `--smoke` shrinks
+//! everything for CI (≈3s total).
+
+use crate::cli::args::Args;
+use crate::config::schema::{ClusterConfig, TransportMode};
+use crate::coordinator::chaos::FaultInjector;
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::ClusterCore;
+use crate::linalg::Matrix;
+use crate::transport::node::{run_node, NodeOptions};
+use crate::transport::TransportAddr;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// JSON-safe float literal (same convention as `hiercode bench`).
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.9e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// The model every run registers and streams against.
+const MODEL: &str = "transport";
+/// Model shape: rows divisible by both presets' k2·k1 = 4.
+const ROWS: usize = 16;
+const COLS: usize = 4;
+
+/// A config the harness and every `hiercode node --preset` process can
+/// rebuild *identically* — the handshake's cluster id only covers the
+/// seed, so the rest of the config (grid, liveness windows) must come
+/// from a shared constructor rather than flags that could drift.
+pub fn preset(name: &str) -> Result<ClusterConfig> {
+    match name {
+        // No-redundancy grid: every shard is needed for every decode,
+        // so outputs are bitwise independent of arrival order — the
+        // bit-identity scenario's oracle.
+        "bitident" => {
+            let mut config = ClusterConfig::demo(2, 2, 2, 2);
+            config.serving.queue_cap = 64;
+            Ok(config)
+        }
+        // Redundant grid with tight liveness windows: same tuning as
+        // `hiercode chaos`, for the reconnect and fast-fail scenarios.
+        "chaos" => {
+            let mut config = ClusterConfig::demo(3, 2, 3, 2);
+            config.chaos.liveness = true;
+            config.chaos.heartbeat_ms = 5.0;
+            config.chaos.suspect_ms = 40.0;
+            config.chaos.dead_ms = 120.0;
+            config.serving.queue_cap = 64;
+            config.serving.default_deadline_ms = 10_000.0;
+            config.serving.drain_ms = 2_000.0;
+            config.batching.max_wait_ms = 1.0;
+            Ok(config)
+        }
+        other => Err(Error::InvalidParams(format!(
+            "unknown transport preset {other:?} (expected bitident or chaos)"
+        ))),
+    }
+}
+
+/// Workload knobs shared by every scenario.
+struct TransportLoad {
+    seed: u64,
+    jobs: usize,
+    probe_jobs: usize,
+    max_dial_ms: u64,
+}
+
+/// How node groups run.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum NodeMode {
+    /// In-process threads calling `run_node` (unit tests; outages are
+    /// hub-side severs).
+    Threads,
+    /// Real `hiercode node` child processes (the default; outages are
+    /// real kills).
+    Processes,
+}
+
+impl NodeMode {
+    fn label(self) -> &'static str {
+        match self {
+            NodeMode::Threads => "threads",
+            NodeMode::Processes => "processes",
+        }
+    }
+}
+
+static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh per-run UDS address (pid + counter keeps parallel test
+/// binaries and repeated runs from colliding on a stale path).
+fn fresh_uds() -> String {
+    let path = std::env::temp_dir().join(format!(
+        "hiercode-tp-{}-{}.sock",
+        std::process::id(),
+        SOCK_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    format!("uds:{}", path.display())
+}
+
+/// One node per group, as threads or child processes, with enough
+/// context retained to kill and respawn individual groups.
+struct NodeSet {
+    mode: NodeMode,
+    preset_name: &'static str,
+    config: ClusterConfig,
+    addr: String,
+    max_dial_ms: u64,
+    threads: Vec<Option<JoinHandle<Result<()>>>>,
+    children: Vec<Option<Child>>,
+}
+
+impl NodeSet {
+    fn spawn(
+        mode: NodeMode,
+        preset_name: &'static str,
+        config: &ClusterConfig,
+        addr: &str,
+        load: &TransportLoad,
+    ) -> Result<NodeSet> {
+        let groups = config.code.topology.n2();
+        let mut set = NodeSet {
+            mode,
+            preset_name,
+            config: config.clone(),
+            addr: addr.to_string(),
+            max_dial_ms: load.max_dial_ms,
+            threads: (0..groups).map(|_| None).collect(),
+            children: (0..groups).map(|_| None).collect(),
+        };
+        for g in 0..groups {
+            set.start(g)?;
+        }
+        Ok(set)
+    }
+
+    /// (Re)launch group `g`'s node.
+    fn start(&mut self, g: usize) -> Result<()> {
+        match self.mode {
+            NodeMode::Threads => {
+                let opts = NodeOptions {
+                    config: self.config.clone(),
+                    group: g,
+                    addr: TransportAddr::parse(&self.addr)?,
+                    max_dial_ms: self.max_dial_ms,
+                    dial_backoff_ms: 5,
+                    dial_backoff_max_ms: 50,
+                };
+                self.threads[g] = Some(std::thread::spawn(move || run_node(opts)));
+            }
+            NodeMode::Processes => {
+                let exe = std::env::current_exe()?;
+                let child = Command::new(exe)
+                    .args([
+                        "node",
+                        "--preset",
+                        self.preset_name,
+                        "--seed",
+                        &self.config.seed.to_string(),
+                        "--group",
+                        &g.to_string(),
+                        "--connect",
+                        &self.addr,
+                        "--max-dial-ms",
+                        &self.max_dial_ms.to_string(),
+                        "--backoff-ms",
+                        "5",
+                        "--backoff-max-ms",
+                        "50",
+                    ])
+                    .stdout(Stdio::null())
+                    .spawn()?;
+                self.children[g] = Some(child);
+            }
+        }
+        Ok(())
+    }
+
+    /// Take group `g` down: a real kill in process mode, a hub-side
+    /// sever (connection teardown + reject-while-severed) in thread
+    /// mode — a thread cannot be killed from outside.
+    fn take_down(&mut self, injector: &Arc<dyn FaultInjector>, g: usize) -> Result<()> {
+        match self.mode {
+            NodeMode::Threads => {
+                injector.link_sever(g);
+                Ok(())
+            }
+            NodeMode::Processes => {
+                if let Some(mut child) = self.children[g].take() {
+                    child.kill()?;
+                    child.wait()?;
+                }
+                // The node thread slot stays empty until `bring_back`.
+                Ok(())
+            }
+        }
+    }
+
+    /// Undo [`take_down`]: heal the sever (the node is still dialing)
+    /// or respawn the killed process.
+    fn bring_back(&mut self, injector: &Arc<dyn FaultInjector>, g: usize) -> Result<()> {
+        match self.mode {
+            NodeMode::Threads => {
+                injector.link_heal(g);
+                Ok(())
+            }
+            NodeMode::Processes => self.start(g),
+        }
+    }
+
+    /// Reap every node. Errors are tolerated: a killed process exits
+    /// nonzero by design, and a node whose dial window expired after
+    /// the hub closed returns `Err` — neither says anything the
+    /// scenario verdicts have not already measured.
+    fn join(mut self) {
+        for t in &mut self.threads {
+            if let Some(t) = t.take() {
+                let _ = t.join();
+            }
+        }
+        for c in &mut self.children {
+            if let Some(mut c) = c.take() {
+                let _ = c.wait();
+            }
+        }
+    }
+}
+
+/// Launch a socket-mode core on a fresh UDS hub plus one node per
+/// group, and wait for the full tree to join.
+fn launch_socket(
+    preset_name: &'static str,
+    load: &TransportLoad,
+    mode: NodeMode,
+) -> Result<(ClusterCore, NodeSet)> {
+    let mut config = preset(preset_name)?;
+    config.seed = load.seed;
+    config.transport.mode = TransportMode::Socket;
+    config.transport.listen = fresh_uds();
+    let addr = config.transport.listen.clone();
+    let core = ClusterCore::launch(&config)?;
+    let nodes = NodeSet::spawn(mode, preset_name, &config, &addr, load)?;
+    if !core.wait_connected(load.max_dial_ms) {
+        nodes.join();
+        core.shutdown();
+        return Err(Error::Coordinator(format!(
+            "transport harness: nodes failed to join {addr} within {}ms",
+            load.max_dial_ms
+        )));
+    }
+    Ok((core, nodes))
+}
+
+/// Register the seeded model and serve `jobs` seeded requests
+/// sequentially (submit-then-wait, so each batch holds exactly one
+/// request and the jobs counter is deterministic).
+fn run_stream(core: &ClusterCore, rng: &mut Rng, jobs: usize) -> Result<Vec<Vec<f64>>> {
+    let client = core.handle();
+    let mut outputs = Vec::with_capacity(jobs);
+    for _ in 0..jobs {
+        let x: Vec<f64> = (0..COLS).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        outputs.push(client.submit_to(MODEL, x)?.wait_timeout(Duration::from_secs(15))?);
+    }
+    Ok(outputs)
+}
+
+/// The counters that must agree exactly between transports. (Worker
+/// products and decode timings are node-local in socket mode, so they
+/// are deliberately absent.)
+#[derive(PartialEq, Eq)]
+struct StreamCounters {
+    jobs: u64,
+    completed: u64,
+    group_decodes: u64,
+    decode_flops: u64,
+}
+
+impl StreamCounters {
+    fn of(snap: &MetricsSnapshot) -> StreamCounters {
+        StreamCounters {
+            jobs: snap.jobs,
+            completed: snap.completed,
+            group_decodes: snap.group_decodes,
+            decode_flops: snap.decode_flops,
+        }
+    }
+
+    fn render(&self) -> String {
+        format!(
+            "{{\"jobs\": {}, \"completed\": {}, \"group_decodes\": {}, \
+             \"decode_flops\": {}}}",
+            self.jobs, self.completed, self.group_decodes, self.decode_flops
+        )
+    }
+}
+
+/// Scenario 1 outcome.
+struct BitIdentity {
+    memory: StreamCounters,
+    socket: StreamCounters,
+    socket_metrics_json: String,
+    bit_identical: bool,
+}
+
+impl BitIdentity {
+    fn ok(&self) -> bool {
+        self.bit_identical && self.memory == self.socket
+    }
+}
+
+/// Same seeded stream over in-memory channels and over a UDS hub; the
+/// outputs must match bit for bit and the counters exactly.
+fn run_bit_identity(load: &TransportLoad, mode: NodeMode) -> Result<BitIdentity> {
+    // Reference run: in-memory transport.
+    let config = {
+        let mut c = preset("bitident")?;
+        c.seed = load.seed;
+        c
+    };
+    let core = ClusterCore::launch(&config)?;
+    let mut rng = Rng::new(load.seed);
+    let a = Matrix::from_fn(ROWS, COLS, |_, _| rng.uniform(-1.0, 1.0));
+    core.register_model(MODEL, &a)?;
+    let mem_out = run_stream(&core, &mut rng, load.jobs)?;
+    let mem_snap = core.metrics();
+    core.shutdown();
+
+    // Same stream over the wire.
+    let (core, nodes) = launch_socket("bitident", load, mode)?;
+    let mut rng = Rng::new(load.seed);
+    let a = Matrix::from_fn(ROWS, COLS, |_, _| rng.uniform(-1.0, 1.0));
+    core.register_model(MODEL, &a)?;
+    let sock_out = run_stream(&core, &mut rng, load.jobs)?;
+    let sock_snap = core.metrics();
+    core.shutdown();
+    nodes.join();
+
+    let bit_identical = mem_out.len() == sock_out.len()
+        && mem_out.iter().zip(&sock_out).all(|(m, s)| {
+            m.len() == s.len()
+                && m.iter().zip(s).all(|(x, y)| x.to_bits() == y.to_bits())
+        });
+    Ok(BitIdentity {
+        memory: StreamCounters::of(&mem_snap),
+        socket: StreamCounters::of(&sock_snap),
+        socket_metrics_json: sock_snap.to_json(),
+        bit_identical,
+    })
+}
+
+/// Scenario 2 outcome.
+struct Reconnect {
+    baseline_completed: u64,
+    outage_completed: u64,
+    post_completed: u64,
+    reconnects: u64,
+}
+
+impl Reconnect {
+    fn ok(&self, jobs: usize) -> bool {
+        self.baseline_completed == jobs as u64
+            && self.outage_completed == jobs as u64
+            && self.post_completed == jobs as u64
+            && self.reconnects >= 1
+    }
+}
+
+/// Count how many of `jobs` seeded submissions complete (a failure is
+/// tallied, not fatal — the verdict is the count).
+fn count_completed(core: &ClusterCore, rng: &mut Rng, jobs: usize) -> Result<u64> {
+    let client = core.handle();
+    let mut completed = 0u64;
+    for _ in 0..jobs {
+        let x: Vec<f64> = (0..COLS).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        if client
+            .submit_to(MODEL, x)?
+            .wait_timeout(Duration::from_secs(15))
+            .is_ok()
+        {
+            completed += 1;
+        }
+    }
+    Ok(completed)
+}
+
+/// Kill one group's node mid-stream and bring it back: jobs must keep
+/// completing throughout (k2 = 2 of 3 groups suffice) and the hub must
+/// record the reconnect (which also re-ships the model shards).
+fn run_reconnect(load: &TransportLoad, mode: NodeMode) -> Result<Reconnect> {
+    let (core, mut nodes) = launch_socket("chaos", load, mode)?;
+    let injector = core.injector();
+    let mut rng = Rng::new(load.seed);
+    let a = Matrix::from_fn(ROWS, COLS, |_, _| rng.uniform(-1.0, 1.0));
+    core.register_model(MODEL, &a)?;
+    let baseline_completed = count_completed(&core, &mut rng, load.jobs)?;
+
+    let victim = core.metrics().per_group.len() - 1;
+    nodes.take_down(&injector, victim)?;
+    let outage_completed = count_completed(&core, &mut rng, load.jobs)?;
+
+    nodes.bring_back(&injector, victim)?;
+    let rejoined = core.wait_connected(load.max_dial_ms);
+    let post_completed = count_completed(&core, &mut rng, load.jobs)?;
+    let reconnects = core.metrics().transport_reconnects;
+    core.shutdown();
+    nodes.join();
+    if !rejoined {
+        return Err(Error::Coordinator(format!(
+            "transport harness: group {victim} never rejoined after recovery"
+        )));
+    }
+    Ok(Reconnect {
+        baseline_completed,
+        outage_completed,
+        post_completed,
+        reconnects,
+    })
+}
+
+/// Scenario 3 outcome.
+struct FastFail {
+    baseline_completed: u64,
+    severed: usize,
+    insufficient: u64,
+    unexpected: u64,
+    max_fail_ms: f64,
+}
+
+impl FastFail {
+    fn ok(&self, probe_jobs: usize) -> bool {
+        self.insufficient == probe_jobs as u64 && self.unexpected == 0
+    }
+}
+
+/// Take down an unsurvivable `n2 − k2 + 1` groups and verify probes
+/// fail fast with [`Error::Insufficient`] once the detector ages the
+/// silent groups out.
+fn run_fast_fail(load: &TransportLoad, mode: NodeMode) -> Result<FastFail> {
+    let config = preset("chaos")?;
+    let (core, mut nodes) = launch_socket("chaos", load, mode)?;
+    let injector = core.injector();
+    let mut rng = Rng::new(load.seed);
+    let a = Matrix::from_fn(ROWS, COLS, |_, _| rng.uniform(-1.0, 1.0));
+    core.register_model(MODEL, &a)?;
+    let baseline_completed = count_completed(&core, &mut rng, 2)?;
+
+    let n2 = config.code.topology.n2();
+    let k2 = config.code.topology.k2;
+    let victims: Vec<usize> = (0..n2).rev().take(n2 - k2 + 1).collect();
+    for &g in &victims {
+        nodes.take_down(&injector, g)?;
+    }
+    // Let the teardown land and the detector age the silent groups out
+    // (dead_ms), with margin.
+    std::thread::sleep(Duration::from_millis(50 + config.chaos.dead_ms as u64 + 80));
+
+    let client = core.handle();
+    let (mut insufficient, mut unexpected) = (0u64, 0u64);
+    let mut max_fail_ms = 0.0f64;
+    for _ in 0..load.probe_jobs {
+        let x: Vec<f64> = (0..COLS).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let t = Instant::now();
+        // 5s guard, far below the 10s admission deadline: a probe that
+        // needs it did NOT fail fast.
+        match client.submit_to(MODEL, x)?.wait_timeout(Duration::from_secs(5)) {
+            Err(Error::Insufficient { .. }) => {
+                insufficient += 1;
+                max_fail_ms = max_fail_ms.max(t.elapsed().as_secs_f64() * 1e3);
+            }
+            _ => unexpected += 1,
+        }
+    }
+    // Heal before shutdown so still-dialing thread-mode nodes can
+    // rejoin and receive their Shutdown frames instead of burning
+    // their full dial window against a closed hub.
+    if mode == NodeMode::Threads {
+        for &g in &victims {
+            nodes.bring_back(&injector, g)?;
+        }
+        core.wait_connected(load.max_dial_ms);
+    }
+    core.shutdown();
+    nodes.join();
+    Ok(FastFail {
+        baseline_completed,
+        severed: victims.len(),
+        insufficient,
+        unexpected,
+        max_fail_ms,
+    })
+}
+
+/// Render the `BENCH_transport.json` document.
+fn render_json(
+    smoke: bool,
+    mode: NodeMode,
+    load: &TransportLoad,
+    bit: &BitIdentity,
+    rec: &Reconnect,
+    ff: &FastFail,
+    pass: bool,
+) -> String {
+    format!(
+        "{{\n\
+         \x20 \"schema\": \"hiercode-bench/transport/v1\",\n\
+         \x20 \"smoke\": {smoke},\n\
+         \x20 \"seed\": {},\n\
+         \x20 \"mode\": \"{}\",\n\
+         \x20 \"bit_identity\": {{\n\
+         \x20   \"jobs\": {}, \"memory\": {}, \"socket\": {},\n\
+         \x20   \"bit_identical\": {}, \"counters_match\": {}\n\
+         \x20 }},\n\
+         \x20 \"reconnect\": {{\n\
+         \x20   \"baseline_completed\": {}, \"outage_completed\": {},\n\
+         \x20   \"post_completed\": {}, \"reconnects\": {}, \"ok\": {}\n\
+         \x20 }},\n\
+         \x20 \"fast_fail\": {{\n\
+         \x20   \"baseline_completed\": {}, \"severed\": {}, \"probe_jobs\": {},\n\
+         \x20   \"insufficient\": {}, \"unexpected\": {},\n\
+         \x20   \"max_fail_ms\": {}, \"ok\": {}\n\
+         \x20 }},\n\
+         \x20 \"verdict\": \"{}\",\n\
+         \x20 \"metrics\": {}\n\
+         }}\n",
+        load.seed,
+        mode.label(),
+        load.jobs,
+        bit.memory.render(),
+        bit.socket.render(),
+        bit.bit_identical,
+        bit.memory == bit.socket,
+        rec.baseline_completed,
+        rec.outage_completed,
+        rec.post_completed,
+        rec.reconnects,
+        rec.ok(load.jobs),
+        ff.baseline_completed,
+        ff.severed,
+        load.probe_jobs,
+        ff.insufficient,
+        ff.unexpected,
+        jf(ff.max_fail_ms),
+        ff.ok(load.probe_jobs),
+        if pass { "pass" } else { "fail" },
+        bit.socket_metrics_json,
+    )
+}
+
+/// Run the transport harness; writes `BENCH_transport.json`.
+pub fn run(args: &Args) -> Result<()> {
+    let smoke = args.has_flag("smoke");
+    let out_dir = args.get_str("out").unwrap_or(".").to_string();
+    let mode = if args.has_flag("threads") {
+        NodeMode::Threads
+    } else {
+        NodeMode::Processes
+    };
+    let load = TransportLoad {
+        seed: args.get_usize("seed")?.unwrap_or(42) as u64,
+        jobs: args.get_usize("jobs")?.unwrap_or(if smoke { 3 } else { 8 }),
+        probe_jobs: args.get_usize("probe-jobs")?.unwrap_or(if smoke { 2 } else { 3 }),
+        max_dial_ms: args
+            .get_usize("max-dial-ms")?
+            .unwrap_or(if smoke { 4_000 } else { 10_000 }) as u64,
+    };
+    if load.jobs == 0 || load.probe_jobs == 0 || load.max_dial_ms == 0 {
+        return Err(Error::InvalidParams(
+            "--jobs, --probe-jobs and --max-dial-ms must be positive".into(),
+        ));
+    }
+    eprintln!(
+        "## hiercode transport (smoke={smoke}, mode={}, seed={}, {} jobs, \
+         {} probes)",
+        mode.label(),
+        load.seed,
+        load.jobs,
+        load.probe_jobs
+    );
+    let bit = run_bit_identity(&load, mode)?;
+    println!(
+        "transport bit-identity: identical={} counters_match={} \
+         (memory {}, socket {})",
+        bit.bit_identical,
+        bit.memory == bit.socket,
+        bit.memory.render(),
+        bit.socket.render()
+    );
+    let rec = run_reconnect(&load, mode)?;
+    println!(
+        "transport reconnect: {}/{}/{} completed (baseline/outage/post), \
+         {} reconnects",
+        rec.baseline_completed, rec.outage_completed, rec.post_completed, rec.reconnects
+    );
+    let ff = run_fast_fail(&load, mode)?;
+    println!(
+        "transport fast-fail: {} baseline ok, {} severed, {}/{} probes \
+         Insufficient (max fail {:.1}ms)",
+        ff.baseline_completed, ff.severed, ff.insufficient, load.probe_jobs, ff.max_fail_ms
+    );
+    let pass = bit.ok() && rec.ok(load.jobs) && ff.baseline_completed == 2 && ff.ok(load.probe_jobs);
+    let json = render_json(smoke, mode, &load, &bit, &rec, &ff, pass);
+    let path = format!("{out_dir}/BENCH_transport.json");
+    std::fs::write(&path, json)?;
+    println!("wrote {path}");
+    if !pass {
+        return Err(Error::Coordinator(format!(
+            "transport verdict FAILED (see {path}): bit_identity={}, \
+             reconnect={}, fast_fail={}",
+            bit.ok(),
+            rec.ok(load.jobs),
+            ff.ok(load.probe_jobs)
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_transport_writes_report_and_passes() {
+        let dir = std::env::temp_dir().join("hiercode_transport_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.to_str().unwrap().to_string();
+        // Thread mode: the test binary cannot exec itself as `hiercode
+        // node`, and hub-side severs exercise the same reconnect path.
+        let args = Args::parse(&[
+            "--smoke".to_string(),
+            "--threads".to_string(),
+            "--jobs".to_string(),
+            "2".to_string(),
+            "--probe-jobs".to_string(),
+            "2".to_string(),
+            "--out".to_string(),
+            out,
+        ])
+        .unwrap();
+        run(&args).unwrap();
+        let text = std::fs::read_to_string(dir.join("BENCH_transport.json")).unwrap();
+        let v = crate::config::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            v.get("schema").and_then(|s| s.as_str()),
+            Some("hiercode-bench/transport/v1")
+        );
+        let bit = v.get("bit_identity").unwrap();
+        assert_eq!(bit.get("bit_identical").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(bit.get("counters_match").and_then(|b| b.as_bool()), Some(true));
+        let rec = v.get("reconnect").unwrap();
+        assert_eq!(rec.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert!(rec.get("reconnects").and_then(|n| n.as_usize()).unwrap() >= 1);
+        let ff = v.get("fast_fail").unwrap();
+        assert_eq!(ff.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(v.get("verdict").and_then(|s| s.as_str()), Some("pass"));
+        // The embedded metrics snapshot carries real transport traffic.
+        let metrics = v.get("metrics").unwrap();
+        assert!(
+            metrics
+                .get("transport_bytes_sent")
+                .and_then(|n| n.as_usize())
+                .unwrap()
+                > 0
+        );
+    }
+
+    #[test]
+    fn transport_rejects_bad_arguments_and_presets() {
+        for bad in [vec!["--jobs", "0"], vec!["--probe-jobs", "0"]] {
+            let argv: Vec<String> = bad.iter().map(|s| s.to_string()).collect();
+            let args = Args::parse(&argv).unwrap();
+            assert!(run(&args).is_err(), "must reject {bad:?}");
+        }
+        assert!(preset("bitident").is_ok());
+        assert!(preset("chaos").is_ok());
+        assert!(preset("carrier-pigeon").is_err());
+    }
+}

@@ -754,6 +754,120 @@ impl ChaosConfig {
     }
 }
 
+/// Which transport carries master ↔ submaster traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportMode {
+    /// In-process `mpsc` channels (the default fast path).
+    Memory,
+    /// Socket transport: the master binds `transport.listen` and
+    /// `hiercode node` processes dial in.
+    Socket,
+}
+
+/// Transport selection and socket-mode tuning.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportConfig {
+    /// Memory (in-process) or Socket (multi-process).
+    pub mode: TransportMode,
+    /// Hub address in socket mode: `uds:<path>` or `tcp:host:port`.
+    pub listen: String,
+    /// How long launch helpers wait for every node to connect (ms).
+    pub connect_wait_ms: f64,
+    /// Node reconnect backoff base delay (ms).
+    pub dial_backoff_ms: f64,
+    /// Node reconnect backoff clamp (ms).
+    pub dial_backoff_max_ms: f64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self {
+            mode: TransportMode::Memory,
+            listen: String::new(),
+            connect_wait_ms: 10_000.0,
+            dial_backoff_ms: 25.0,
+            dial_backoff_max_ms: 1_000.0,
+        }
+    }
+}
+
+impl TransportConfig {
+    /// Parse from the `"transport"` object. Malformed values are
+    /// rejected — never silently replaced by defaults.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        let mode = match v.get("mode") {
+            Some(Json::String(s)) => match s.as_str() {
+                "memory" => TransportMode::Memory,
+                "socket" => TransportMode::Socket,
+                other => {
+                    return Err(Error::Config(format!(
+                        "transport.mode must be \"memory\" or \"socket\", \
+                         got \"{other}\""
+                    )))
+                }
+            },
+            Some(_) => {
+                return Err(Error::Config(
+                    "transport.mode must be a string".into(),
+                ))
+            }
+            None => d.mode,
+        };
+        let listen = match v.get("listen") {
+            Some(Json::String(s)) => s.clone(),
+            Some(_) => {
+                return Err(Error::Config(
+                    "transport.listen must be a string address".into(),
+                ))
+            }
+            None => d.listen,
+        };
+        let ms_field = |key: &str, default: f64| -> Result<f64> {
+            match v.get(key) {
+                Some(x) => {
+                    let ms = x.as_f64().ok_or_else(|| {
+                        Error::Config(format!(
+                            "transport.{key} must be a number of milliseconds"
+                        ))
+                    })?;
+                    if !ms.is_finite() || ms <= 0.0 {
+                        return Err(Error::Config(format!(
+                            "transport.{key} = {ms} is not a positive finite \
+                             duration"
+                        )));
+                    }
+                    Ok(ms)
+                }
+                None => Ok(default),
+            }
+        };
+        let connect_wait_ms = ms_field("connect_wait_ms", d.connect_wait_ms)?;
+        let dial_backoff_ms = ms_field("dial_backoff_ms", d.dial_backoff_ms)?;
+        let dial_backoff_max_ms = ms_field("dial_backoff_max_ms", d.dial_backoff_max_ms)?;
+        if dial_backoff_max_ms < dial_backoff_ms {
+            return Err(Error::Config(format!(
+                "transport.dial_backoff_max_ms = {dial_backoff_max_ms} must be \
+                 >= dial_backoff_ms = {dial_backoff_ms}"
+            )));
+        }
+        if mode == TransportMode::Socket {
+            // Fail at parse time, not at bind time: a socket-mode
+            // config without a valid address is always a mistake.
+            crate::transport::TransportAddr::parse(&listen).map_err(|e| {
+                Error::Config(format!("transport.listen: {e}"))
+            })?;
+        }
+        Ok(Self {
+            mode,
+            listen,
+            connect_wait_ms,
+            dial_backoff_ms,
+            dial_backoff_max_ms,
+        })
+    }
+}
+
 /// Full cluster configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterConfig {
@@ -769,6 +883,8 @@ pub struct ClusterConfig {
     pub serving: ServingConfig,
     /// Liveness tracking (heartbeats + failure detector).
     pub chaos: ChaosConfig,
+    /// Transport selection (in-process channels or sockets).
+    pub transport: TransportConfig,
     /// RNG seed for straggler injection.
     pub seed: u64,
 }
@@ -812,6 +928,10 @@ impl ClusterConfig {
             Some(c) => ChaosConfig::from_json(c)?,
             None => ChaosConfig::default(),
         };
+        let transport = match v.get("transport") {
+            Some(t) => TransportConfig::from_json(t)?,
+            None => TransportConfig::default(),
+        };
         let seed = match v.get("seed") {
             // A present-but-malformed seed is a config mistake, not a
             // request for the default: reject it instead of silently
@@ -830,6 +950,7 @@ impl ClusterConfig {
             batching,
             serving,
             chaos,
+            transport,
             seed,
         })
     }
@@ -872,6 +993,7 @@ impl ClusterConfig {
             batching: BatchConfig::default(),
             serving: ServingConfig::default(),
             chaos: ChaosConfig::default(),
+            transport: TransportConfig::default(),
             seed: 42,
         }
     }
@@ -928,6 +1050,50 @@ mod tests {
         ))
         .unwrap();
         assert!(!c.chaos.liveness);
+    }
+
+    #[test]
+    fn transport_section_parses_and_validates() {
+        const CODE: &str = r#""code": {"n1": 2, "k1": 1, "n2": 2, "k2": 1}"#;
+        let c = ClusterConfig::from_json_text(&format!(
+            r#"{{{CODE}, "transport": {{"mode": "socket",
+                "listen": "uds:/tmp/h.sock", "connect_wait_ms": 500,
+                "dial_backoff_ms": 10, "dial_backoff_max_ms": 100}}}}"#
+        ))
+        .unwrap();
+        assert_eq!(c.transport.mode, TransportMode::Socket);
+        assert_eq!(c.transport.listen, "uds:/tmp/h.sock");
+        assert_eq!(c.transport.connect_wait_ms, 500.0);
+        assert_eq!(c.transport.dial_backoff_ms, 10.0);
+        assert_eq!(c.transport.dial_backoff_max_ms, 100.0);
+        // Absent section → in-memory defaults.
+        let c = ClusterConfig::from_json_text(&format!("{{{CODE}}}")).unwrap();
+        assert_eq!(c.transport, TransportConfig::default());
+        assert_eq!(c.transport.mode, TransportMode::Memory);
+        // Present-but-malformed values are rejected, never defaulted.
+        for bad in [
+            r#"{"mode": "carrier-pigeon"}"#,
+            r#"{"mode": 3}"#,
+            r#"{"listen": 9}"#,
+            r#"{"connect_wait_ms": "soon"}"#,
+            r#"{"dial_backoff_ms": 0}"#,
+            r#"{"dial_backoff_ms": 100, "dial_backoff_max_ms": 10}"#,
+            // socket mode demands a parseable address
+            r#"{"mode": "socket"}"#,
+            r#"{"mode": "socket", "listen": "carrier:/x"}"#,
+        ] {
+            let doc = format!(r#"{{{CODE}, "transport": {bad}}}"#);
+            assert!(
+                ClusterConfig::from_json_text(&doc).is_err(),
+                "accepted malformed transport section {bad}"
+            );
+        }
+        // Memory mode tolerates an empty listen address.
+        let c = ClusterConfig::from_json_text(&format!(
+            r#"{{{CODE}, "transport": {{"mode": "memory"}}}}"#
+        ))
+        .unwrap();
+        assert_eq!(c.transport.mode, TransportMode::Memory);
     }
 
     #[test]

@@ -45,11 +45,14 @@ use crate::coordinator::messages::{
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot, ModelMetricsSnapshot};
 use crate::coordinator::submaster::{self, LinkDelay};
 use crate::coordinator::worker::{self, WorkerCtx, WorkerDelay};
-use crate::config::schema::ClusterConfig;
+use crate::config::schema::{ClusterConfig, TransportMode};
 use crate::linalg::lu::LuCacheStats;
 use crate::linalg::{LuCache, Matrix};
 use crate::runtime::PjrtRuntime;
 use crate::sync::{Mutex, RwLock, WallClock};
+use crate::transport::memory::MemoryTransport;
+use crate::transport::socket::SocketHub;
+use crate::transport::{Transport, TransportAddr};
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -471,6 +474,36 @@ impl FaultInjector for Supervisor {
     }
 }
 
+/// The serving-time topology for `scheme` under `config`: the scheme's
+/// own topology when it matches the config's; otherwise (the flat/grid
+/// baselines, which only know code structure) the config's global
+/// straggler profiles overlaid onto the scheme's group layout. The
+/// in-process launch path and `hiercode node` both derive it from the
+/// same config, so worker counts — and therefore the worker/submaster
+/// seed stream — cannot drift between the two.
+pub(crate) fn serving_topology(
+    scheme: &Arc<dyn CodedScheme>,
+    config: &ClusterConfig,
+) -> crate::scenario::Topology {
+    let t = scheme.topology();
+    if t == config.code.topology {
+        t
+    } else {
+        crate::scenario::Topology {
+            k2: t.k2,
+            groups: t
+                .groups
+                .into_iter()
+                .map(|g| crate::scenario::GroupSpec {
+                    worker: config.straggler.worker,
+                    link: config.straggler.link,
+                    ..g
+                })
+                .collect(),
+        }
+    }
+}
+
 /// The owning half of the job service: thread tree + model registry.
 pub struct ClusterCore {
     state: Arc<ServiceState>,
@@ -479,6 +512,10 @@ pub struct ClusterCore {
     /// Worker seats, fault switchboard and retained shards — the
     /// crash/restart machinery (also the [`FaultInjector`]).
     supervisor: Arc<Supervisor>,
+    /// The socket hub when `transport.mode = "socket"`: owns the
+    /// listener and per-group connections, doubles as the
+    /// [`FaultInjector`] (severs become real teardowns).
+    hub: Option<Arc<SocketHub>>,
     threads: Vec<thread::JoinHandle<()>>,
     /// Joined first at shutdown (see `shutdown_inner`): the drain
     /// protocol must not depend on this thread being healthy.
@@ -524,25 +561,7 @@ impl ClusterCore {
         // Schemes that only know code structure (the flat/grid
         // baselines return a default-profile topology) get the global
         // straggler section overlaid onto their group layout.
-        let topology = {
-            let t = scheme.topology();
-            if t == config.code.topology {
-                t
-            } else {
-                crate::scenario::Topology {
-                    k2: t.k2,
-                    groups: t
-                        .groups
-                        .into_iter()
-                        .map(|g| crate::scenario::GroupSpec {
-                            worker: config.straggler.worker,
-                            link: config.straggler.link,
-                            ..g
-                        })
-                        .collect(),
-                }
-            }
-        };
+        let topology = serving_topology(&scheme, config);
         debug_assert_eq!(topology.total_workers(), scheme.num_workers());
         let metrics = Arc::new(Metrics::with_groups(topology.n2()));
         let mut seed_rng = Rng::new(config.seed);
@@ -571,64 +590,79 @@ impl ClusterCore {
             LivenessConfig::disabled()
         };
         let beat = liveness.beat_period();
+        let socket_mode = config.transport.mode == TransportMode::Socket;
         let mut seats = Vec::with_capacity(scheme.num_workers());
         let mut group_offsets = Vec::with_capacity(topology.n2());
 
-        for (g, spec) in topology.groups.iter().enumerate() {
-            let (sub_tx, sub_rx) = mpsc::channel::<SubmasterMsg>();
-            let cancel = Arc::new(crate::coordinator::messages::CancelSet::new());
-            // Global scale renders model time as wall-clock; the
-            // group's slowdown multiplier is model (the sim applies it
-            // too), so they compose.
-            let group_scale = config.straggler.scale * spec.slowdown();
-            group_offsets.push(seats.len());
-            // Workers of this group, with the group's straggler profile.
-            let mut group_links = Vec::with_capacity(spec.n1);
-            for j in 0..spec.n1 {
-                let (w_tx, w_rx) = mpsc::channel::<WorkerCmd>();
-                let delay = WorkerDelay {
-                    model: spec.worker,
+        if socket_mode {
+            // Submaster/worker trees live in `hiercode node` processes
+            // and dial in over the hub; this process only records the
+            // flat seat layout (the Supervisor keeps zero seats — its
+            // crash/restart machinery is vacuous here, the hub maps
+            // fault-plan actions onto connections instead).
+            let mut off = 0;
+            for &sz in &group_sizes {
+                group_offsets.push(off);
+                off += sz;
+            }
+        } else {
+            for (g, spec) in topology.groups.iter().enumerate() {
+                let (sub_tx, sub_rx) = mpsc::channel::<SubmasterMsg>();
+                let cancel = Arc::new(crate::coordinator::messages::CancelSet::new());
+                // Global scale renders model time as wall-clock; the
+                // group's slowdown multiplier is model (the sim applies
+                // it too), so they compose.
+                let group_scale = config.straggler.scale * spec.slowdown();
+                group_offsets.push(seats.len());
+                // Workers of this group, with the group's straggler
+                // profile.
+                let mut group_links = Vec::with_capacity(spec.n1);
+                for j in 0..spec.n1 {
+                    let (w_tx, w_rx) = mpsc::channel::<WorkerCmd>();
+                    let delay = WorkerDelay {
+                        model: spec.worker,
+                        scale: group_scale,
+                        enabled: config.straggler.enabled,
+                    };
+                    let ctx = WorkerCtx {
+                        group: g,
+                        index: j,
+                        backend: backend.clone(),
+                        delay,
+                        subtasks: spec.subtasks,
+                        cancel: Arc::clone(&cancel),
+                        faults: Arc::clone(&fault_state),
+                        heartbeat: beat,
+                        submaster: sub_tx.clone(),
+                    };
+                    let seed = seed_rng.next_u64();
+                    threads.push(worker::spawn(ctx.clone(), Rng::new(seed), w_rx)?);
+                    let link: WorkerLink = Arc::new(RwLock::new(w_tx));
+                    group_links.push(Arc::clone(&link));
+                    seats.push(Seat { ctx, link, seed });
+                }
+                let link = LinkDelay {
+                    model: spec.link,
                     scale: group_scale,
                     enabled: config.straggler.enabled,
                 };
-                let ctx = WorkerCtx {
-                    group: g,
-                    index: j,
-                    backend: backend.clone(),
-                    delay,
-                    subtasks: spec.subtasks,
-                    cancel: Arc::clone(&cancel),
-                    faults: Arc::clone(&fault_state),
-                    heartbeat: beat,
-                    submaster: sub_tx.clone(),
-                };
-                let seed = seed_rng.next_u64();
-                threads.push(worker::spawn(ctx.clone(), Rng::new(seed), w_rx)?);
-                let link: WorkerLink = Arc::new(RwLock::new(w_tx));
-                group_links.push(Arc::clone(&link));
-                seats.push(Seat { ctx, link, seed });
+                threads.push(submaster::spawn(
+                    g,
+                    group_offsets[g],
+                    Arc::clone(&scheme),
+                    group_links,
+                    link,
+                    Arc::clone(&fault_state),
+                    spec.subtasks,
+                    beat,
+                    Arc::clone(&cancel),
+                    Arc::clone(&metrics),
+                    seed_rng.split(),
+                    sub_rx,
+                    master_tx.clone(),
+                )?);
+                submaster_txs.push(sub_tx);
             }
-            let link = LinkDelay {
-                model: spec.link,
-                scale: group_scale,
-                enabled: config.straggler.enabled,
-            };
-            threads.push(submaster::spawn(
-                g,
-                group_offsets[g],
-                Arc::clone(&scheme),
-                group_links,
-                link,
-                Arc::clone(&fault_state),
-                spec.subtasks,
-                beat,
-                Arc::clone(&cancel),
-                Arc::clone(&metrics),
-                seed_rng.split(),
-                sub_rx,
-                master_tx.clone(),
-            )?);
-            submaster_txs.push(sub_tx);
         }
         let supervisor = Arc::new(Supervisor {
             seats,
@@ -640,9 +674,47 @@ impl ClusterCore {
             generation: AtomicU64::new(0),
             caches: scheme.decode_caches(),
         });
+        let (transport, hub): (Arc<dyn Transport>, Option<Arc<SocketHub>>) = if socket_mode {
+            let addr = TransportAddr::parse(&config.transport.listen)?;
+            let hub = SocketHub::launch(
+                &addr,
+                supervisor.group_offsets.clone(),
+                supervisor.group_sizes.clone(),
+                config.seed,
+                Arc::clone(&metrics),
+                master_tx.clone(),
+            )?;
+            // Launch-time dead links become real pre-severed
+            // connections (nodes bounce off the handshake until a
+            // heal); dead workers live inside node processes the hub
+            // cannot reach, so that fault spelling is refused loudly.
+            for g in 0..supervisor.group_sizes.len() {
+                if supervisor.faults.link_dead(g) {
+                    hub.link_sever(g);
+                }
+            }
+            for (g, &n) in supervisor.group_sizes.iter().enumerate() {
+                for j in 0..n {
+                    if supervisor.faults.worker_dead(g, j) {
+                        crate::log_warn!(
+                            "cluster",
+                            "dead_workers ({g},{j}) ignored in socket mode: \
+                             workers live in node processes — kill the node \
+                             instead"
+                        );
+                    }
+                }
+            }
+            (Arc::clone(&hub) as Arc<dyn Transport>, Some(hub))
+        } else {
+            (
+                Arc::new(MemoryTransport::new(submaster_txs)) as Arc<dyn Transport>,
+                None,
+            )
+        };
         threads.push(master::spawn(
             Arc::clone(&scheme),
-            submaster_txs,
+            transport,
             Arc::clone(&metrics),
             Duration::from_secs_f64(config.serving.drain_ms / 1e3),
             liveness,
@@ -672,6 +744,7 @@ impl ClusterCore {
             scheme,
             backend,
             supervisor,
+            hub,
             threads,
             batcher: Some(batcher),
             next_model: AtomicU32::new(0),
@@ -765,6 +838,17 @@ impl ClusterCore {
         // sees this model in its snapshot or the Loads below go through
         // the link it just swapped in (see `Supervisor::retain_model`).
         self.supervisor.retain_model(id, worker_shards.clone());
+        // Socket mode: the hub retains the `f64` shard matrices and
+        // ships `Load` frames to every connected node, re-shipping on
+        // reconnect (the socket analogue of the supervisor's restart
+        // re-ship). Done under the same write lock so the frame order
+        // preserves the in-memory Load-before-Job guarantee.
+        if let Some(hub) = &self.hub {
+            hub.retain_and_ship(
+                id.0,
+                worker_shards.iter().map(|ws| ws.f64.clone()).collect(),
+            );
+        }
         for (seat, ws) in self.supervisor.seats.iter().zip(worker_shards) {
             // Best-effort per seat: a crashed worker's channel is
             // disconnected, but its shards are retained above and will
@@ -829,11 +913,31 @@ impl ClusterCore {
         names
     }
 
-    /// The supervisor as a [`FaultInjector`] — hand it to
+    /// The cluster's [`FaultInjector`] — hand it to
     /// [`crate::coordinator::chaos::spawn`] to replay a fault plan
-    /// against this cluster.
+    /// against this cluster. In-memory clusters inject through the
+    /// supervisor's fault switchboard; socket clusters inject through
+    /// the hub, where `link_sever` is a real connection teardown.
     pub fn injector(&self) -> Arc<dyn FaultInjector> {
-        Arc::clone(&self.supervisor) as Arc<dyn FaultInjector>
+        match &self.hub {
+            Some(hub) => Arc::clone(hub) as Arc<dyn FaultInjector>,
+            None => Arc::clone(&self.supervisor) as Arc<dyn FaultInjector>,
+        }
+    }
+
+    /// The socket hub, when this cluster was launched with
+    /// `transport.mode = "socket"` (tests / CLI introspection).
+    pub fn hub(&self) -> Option<&Arc<SocketHub>> {
+        self.hub.as_ref()
+    }
+
+    /// Block until every group has a connected node, or `timeout_ms`
+    /// elapses. In-memory clusters are always "connected".
+    pub fn wait_connected(&self, timeout_ms: u64) -> bool {
+        match &self.hub {
+            Some(hub) => hub.wait_connected(timeout_ms),
+            None => true,
+        }
     }
 
     /// The supervisor itself (fault switchboard access for tests).
@@ -850,6 +954,19 @@ impl ClusterCore {
         snap.decode_cache_misses = cache.misses;
         snap.decode_cache_evictions = cache.evictions;
         snap.decode_cache_hit_rate = cache.hit_rate();
+        // Per-link transport counters live hub-side (per-connection
+        // atomics); overlay them onto the per-group rows here.
+        if let Some(hub) = &self.hub {
+            for (g, st) in hub.group_stats().iter().enumerate() {
+                if let Some(pg) = snap.per_group.get_mut(g) {
+                    pg.transport_bytes_sent = st.bytes_sent;
+                    pg.transport_bytes_received = st.bytes_received;
+                    pg.transport_frames_sent = st.frames_sent;
+                    pg.transport_frames_received = st.frames_received;
+                    pg.transport_reconnects = st.reconnects;
+                }
+            }
+        }
         let models = self.state.models.read();
         let mut per_model: Vec<ModelMetricsSnapshot> = models
             .values()
@@ -896,6 +1013,12 @@ impl ClusterCore {
         // submaster's Shutdown reaches them through the swapped link).
         for t in self.supervisor.respawned.lock().drain(..) {
             let _ = t.join();
+        }
+        // Socket mode: master has exited (Shutdown frames went out via
+        // the hub's writers), so tearing the hub down now lets remote
+        // nodes see EOF and exit their downstream loops.
+        if let Some(hub) = &self.hub {
+            hub.close();
         }
     }
 }

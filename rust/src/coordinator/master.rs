@@ -34,6 +34,7 @@ use crate::coordinator::messages::{
 };
 use crate::coordinator::metrics::Metrics;
 use crate::sync::{Clock, DrainState};
+use crate::transport::Transport;
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -126,7 +127,7 @@ fn liveness_sweep(
     jobs: &mut HashMap<JobId, JobState>,
     req_index: &mut HashMap<RequestId, JobId>,
     drain: &mut DrainState,
-    submasters: &[mpsc::Sender<SubmasterMsg>],
+    transport: &Arc<dyn Transport>,
 ) -> bool {
     for g in 0..thresholds.len() {
         metrics.set_group_liveness(
@@ -161,8 +162,8 @@ fn liveness_sweep(
         if drain.job_settled() {
             can_exit = true;
         }
-        for sm in submasters {
-            let _ = sm.send(SubmasterMsg::Finish(id));
+        for g in 0..transport.groups() {
+            transport.send(g, SubmasterMsg::Finish(id));
         }
         crate::log_debug!(
             "master",
@@ -182,7 +183,7 @@ fn liveness_sweep(
 /// healthy. Errors only if the OS refuses to spawn the thread.
 pub fn spawn(
     scheme: Arc<dyn CodedScheme>,
-    submasters: Vec<mpsc::Sender<SubmasterMsg>>,
+    transport: Arc<dyn Transport>,
     metrics: Arc<Metrics>,
     drain_grace: Duration,
     liveness: LivenessConfig,
@@ -257,7 +258,7 @@ pub fn spawn(
                                 &mut jobs,
                                 &mut req_index,
                                 &mut drain,
-                                &submasters,
+                                &transport,
                             );
                             last_sweep = Instant::now();
                             if can_exit {
@@ -333,8 +334,8 @@ pub fn spawn(
                             }),
                         );
                         drain.job_dispatched();
-                        for sm in &submasters {
-                            let _ = sm.send(SubmasterMsg::Job(job.clone()));
+                        for g in 0..transport.groups() {
+                            transport.send(g, SubmasterMsg::Job(job.clone()));
                         }
                     }
                     MasterMsg::Partial(pr) => {
@@ -406,8 +407,8 @@ pub fn spawn(
                             jobs.insert(pr.id, JobState::Done);
                             gc_done_jobs(&mut jobs);
                             let can_exit = drain.job_settled();
-                            for sm in &submasters {
-                                let _ = sm.send(SubmasterMsg::Finish(pr.id));
+                            for g in 0..transport.groups() {
+                                transport.send(g, SubmasterMsg::Finish(pr.id));
                             }
                             if can_exit {
                                 break;
@@ -432,9 +433,9 @@ pub fn spawn(
                                     jobs.insert(job_id, JobState::Done);
                                     gc_done_jobs(&mut jobs);
                                     let can_exit = drain.job_settled();
-                                    for sm in &submasters {
-                                        let _ =
-                                            sm.send(SubmasterMsg::Finish(job_id));
+                                    for g in 0..transport.groups() {
+                                        transport
+                                            .send(g, SubmasterMsg::Finish(job_id));
                                     }
                                     crate::log_debug!(
                                         "master",
@@ -469,7 +470,7 @@ pub fn spawn(
                         &mut jobs,
                         &mut req_index,
                         &mut drain,
-                        &submasters,
+                        &transport,
                     );
                     last_sweep = Instant::now();
                     if can_exit {
@@ -489,8 +490,8 @@ pub fn spawn(
                     job.replies.clear();
                 }
             }
-            for sm in &submasters {
-                let _ = sm.send(SubmasterMsg::Shutdown);
+            for g in 0..transport.groups() {
+                transport.send(g, SubmasterMsg::Shutdown);
             }
         })?;
     Ok(handle)
@@ -508,6 +509,12 @@ mod tests {
 
     fn test_entry(d: usize, m: usize) -> Arc<ModelEntry> {
         Arc::new(ModelEntry::new(ModelId(0), "default", d, m, 64, None))
+    }
+
+    /// A transport with no downstream links: these tests inject
+    /// partials directly, so broadcasts go nowhere.
+    fn no_transport() -> Arc<dyn Transport> {
+        Arc::new(crate::transport::memory::MemoryTransport::new(vec![]))
     }
 
     fn far_deadline() -> Instant {
@@ -552,7 +559,7 @@ mod tests {
         let scheme: Arc<dyn CodedScheme> = code;
         let h = spawn(
             Arc::clone(&scheme),
-            vec![], // no submasters needed: we inject partials
+            no_transport(), // no submasters needed: we inject partials
             Arc::clone(&metrics),
             Duration::from_secs(5),
             LivenessConfig::disabled(),
@@ -584,6 +591,7 @@ mod tests {
                 .send(MasterMsg::Partial(PartialResult {
                     id,
                     shard: g,
+                    decoded: true,
                     data: ops::matmul(&coded_groups[g], &x),
                     decode_flops: 0,
                     finished_at: Instant::now(),
@@ -604,6 +612,7 @@ mod tests {
                 id,
                 shard: 0,
                 data: ops::matmul(&coded_groups[0], &x),
+                decoded: true,
                 decode_flops: 0,
                 finished_at: Instant::now(),
             }))
@@ -636,7 +645,7 @@ mod tests {
         let scheme: Arc<dyn CodedScheme> = code;
         let h = spawn(
             scheme,
-            vec![],
+            no_transport(),
             Arc::clone(&metrics),
             Duration::from_secs(5),
             LivenessConfig::disabled(),
@@ -667,6 +676,7 @@ mod tests {
                 .send(MasterMsg::Partial(PartialResult {
                     id,
                     shard: g,
+                    decoded: true,
                     data: ops::matmul(&coded_groups[g], &x),
                     decode_flops: 0,
                     finished_at: Instant::now(),
@@ -695,7 +705,7 @@ mod tests {
         let scheme: Arc<dyn CodedScheme> = code;
         let h = spawn(
             scheme,
-            vec![],
+            no_transport(),
             Arc::clone(&metrics),
             Duration::from_secs(5),
             LivenessConfig::disabled(),
@@ -735,7 +745,7 @@ mod tests {
         let scheme: Arc<dyn CodedScheme> = code;
         let h = spawn(
             scheme,
-            vec![],
+            no_transport(),
             Arc::clone(&metrics),
             Duration::from_secs(5),
             LivenessConfig::disabled(),
@@ -782,7 +792,7 @@ mod tests {
         let scheme: Arc<dyn CodedScheme> = code;
         let h = spawn(
             scheme,
-            vec![],
+            no_transport(),
             Arc::clone(&metrics),
             Duration::from_secs(5),
             LivenessConfig::disabled(),
@@ -828,7 +838,7 @@ mod tests {
         let scheme: Arc<dyn CodedScheme> = code;
         let h = spawn(
             scheme,
-            vec![],
+            no_transport(),
             Arc::clone(&metrics),
             Duration::from_millis(50), // short grace
             LivenessConfig::disabled(),
@@ -868,7 +878,7 @@ mod tests {
         let scheme: Arc<dyn CodedScheme> = code;
         let h = spawn(
             scheme,
-            vec![],
+            no_transport(),
             Arc::clone(&metrics),
             Duration::from_millis(50), // short grace
             // Long detector timeouts: beacons flow, nothing is marked.
@@ -930,7 +940,7 @@ mod tests {
         let clock = Arc::new(crate::sync::MockClock::new());
         let h = spawn(
             scheme,
-            vec![],
+            no_transport(),
             Arc::clone(&metrics),
             Duration::from_secs(5),
             LivenessConfig::new(

@@ -295,6 +295,12 @@ pub struct PartialResult {
     pub shard: usize,
     /// The partial product.
     pub data: Matrix,
+    /// Whether this partial is a group-decoded result (as opposed to a
+    /// relayed raw worker product). Carried explicitly — a trivial
+    /// systematic decode can cost 0 flops, so `decode_flops > 0` is not
+    /// a reliable proxy — so the socket hub can mirror the submaster's
+    /// decode accounting exactly.
+    pub decoded: bool,
     /// Flops the submaster spent decoding (0 for relayed products).
     pub decode_flops: u64,
     /// When the partial was produced (`S_i`, before link delay).

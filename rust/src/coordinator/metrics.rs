@@ -84,6 +84,22 @@ pub struct Metrics {
     pub group_decodes: AtomicU64,
     /// Total decode flops (intra + cross), for §IV accounting.
     pub decode_flops: AtomicU64,
+    /// Transport bytes shipped downstream (socket mode; 0 in-memory).
+    /// Paired with `transport_bytes_received`.
+    pub transport_bytes_sent: AtomicU64,
+    /// Transport bytes received upstream. Paired with
+    /// `transport_bytes_sent`.
+    pub transport_bytes_received: AtomicU64,
+    /// Frames shipped downstream. Paired with
+    /// `transport_frames_received`.
+    pub transport_frames_sent: AtomicU64,
+    /// Frames received upstream. Paired with `transport_frames_sent`.
+    pub transport_frames_received: AtomicU64,
+    /// Node connections re-established after a loss (the initial
+    /// connect does not count).
+    pub transport_reconnects: AtomicU64,
+    /// Handshakes that ended in a `Reject` or a protocol/IO failure.
+    pub transport_handshake_failures: AtomicU64,
     /// End-to-end request latency (submit → reply).
     latency: Mutex<Histogram>,
     /// Decode-only latency at the master.
@@ -178,6 +194,9 @@ impl Metrics {
                     alive_workers: gauge(&g.alive_workers),
                     suspected: gauge(&g.suspected),
                     decode_mean: glat.mean(),
+                    // Per-link transport counters live hub-side; the
+                    // cluster overlays them (0 on a bare snapshot).
+                    ..GroupMetricsSnapshot::default()
                 }
             })
             .collect();
@@ -195,6 +214,14 @@ impl Metrics {
             late_partials: self.late_partials.load(Ordering::Relaxed),
             group_decodes: self.group_decodes.load(Ordering::Relaxed),
             decode_flops: self.decode_flops.load(Ordering::Relaxed),
+            transport_bytes_sent: self.transport_bytes_sent.load(Ordering::Relaxed),
+            transport_bytes_received: self.transport_bytes_received.load(Ordering::Relaxed),
+            transport_frames_sent: self.transport_frames_sent.load(Ordering::Relaxed),
+            transport_frames_received: self.transport_frames_received.load(Ordering::Relaxed),
+            transport_reconnects: self.transport_reconnects.load(Ordering::Relaxed),
+            transport_handshake_failures: self
+                .transport_handshake_failures
+                .load(Ordering::Relaxed),
             latency_mean: lat.mean(),
             latency_p50: lat.quantile(0.5),
             latency_p95: lat.quantile(0.95),
@@ -256,6 +283,21 @@ pub struct GroupMetricsSnapshot {
     pub suspected: Option<u64>,
     /// Mean group-decode session latency (s).
     pub decode_mean: f64,
+    /// Transport bytes shipped to this group's node (socket mode;
+    /// overlaid by `ClusterCore::metrics` from the hub's per-link
+    /// counters, 0 otherwise). Paired with `transport_bytes_received`.
+    pub transport_bytes_sent: u64,
+    /// Transport bytes received from this group's node. Paired with
+    /// `transport_bytes_sent`.
+    pub transport_bytes_received: u64,
+    /// Frames shipped to this group's node. Paired with
+    /// `transport_frames_received`.
+    pub transport_frames_sent: u64,
+    /// Frames received from this group's node. Paired with
+    /// `transport_frames_sent`.
+    pub transport_frames_received: u64,
+    /// Reconnects completed on this group's link.
+    pub transport_reconnects: u64,
 }
 
 /// Point-in-time view of one model's admission counters.
@@ -305,6 +347,18 @@ pub struct MetricsSnapshot {
     pub group_decodes: u64,
     /// Total decode flops.
     pub decode_flops: u64,
+    /// Transport bytes shipped downstream (socket mode; 0 in-memory).
+    pub transport_bytes_sent: u64,
+    /// Transport bytes received upstream.
+    pub transport_bytes_received: u64,
+    /// Frames shipped downstream.
+    pub transport_frames_sent: u64,
+    /// Frames received upstream.
+    pub transport_frames_received: u64,
+    /// Node connections re-established after a loss.
+    pub transport_reconnects: u64,
+    /// Handshakes that failed (rejects and protocol/IO failures).
+    pub transport_handshake_failures: u64,
     /// Mean end-to-end latency (s).
     pub latency_mean: f64,
     /// Median end-to-end latency (s).
@@ -376,13 +430,21 @@ impl MetricsSnapshot {
             .map(|g| {
                 format!(
                     "{{\"products\": {}, \"decodes\": {}, \"partials_used\": {}, \
-                     \"alive_workers\": {}, \"suspected\": {}, \"decode_mean_s\": {}}}",
+                     \"alive_workers\": {}, \"suspected\": {}, \"decode_mean_s\": {}, \
+                     \"transport_bytes_sent\": {}, \"transport_bytes_received\": {}, \
+                     \"transport_frames_sent\": {}, \"transport_frames_received\": {}, \
+                     \"transport_reconnects\": {}}}",
                     g.products,
                     g.decodes,
                     g.partials_used,
                     jgauge(g.alive_workers),
                     jgauge(g.suspected),
-                    jnum(g.decode_mean)
+                    jnum(g.decode_mean),
+                    g.transport_bytes_sent,
+                    g.transport_bytes_received,
+                    g.transport_frames_sent,
+                    g.transport_frames_received,
+                    g.transport_reconnects
                 )
             })
             .collect();
@@ -402,6 +464,9 @@ impl MetricsSnapshot {
              \"cancelled\": {}, \"rejected\": {}, \"shed\": {}, \"queue_depth\": {},\n  \
              \"worker_products\": {}, \"late_products\": {}, \"late_partials\": {}, \
              \"group_decodes\": {}, \"decode_flops\": {},\n  \
+             \"transport_bytes_sent\": {}, \"transport_bytes_received\": {}, \
+             \"transport_frames_sent\": {}, \"transport_frames_received\": {}, \
+             \"transport_reconnects\": {}, \"transport_handshake_failures\": {},\n  \
              \"latency_mean_s\": {}, \"latency_p50_s\": {}, \"latency_p95_s\": {}, \
              \"latency_p99_s\": {},\n  \
              \"decode_mean_s\": {}, \"decode_p50_s\": {}, \"decode_p95_s\": {}, \
@@ -422,6 +487,12 @@ impl MetricsSnapshot {
             self.late_partials,
             self.group_decodes,
             self.decode_flops,
+            self.transport_bytes_sent,
+            self.transport_bytes_received,
+            self.transport_frames_sent,
+            self.transport_frames_received,
+            self.transport_reconnects,
+            self.transport_handshake_failures,
             jnum(self.latency_mean),
             jnum(self.latency_p50),
             jnum(self.latency_p95),
@@ -491,6 +562,17 @@ impl std::fmt::Display for MetricsSnapshot {
         writeln!(f, "decode flops:    {}", self.decode_flops)?;
         writeln!(
             f,
+            "transport:       {} B out / {} B in, {} frames out / {} frames in, \
+             {} reconnects, {} handshake failures",
+            self.transport_bytes_sent,
+            self.transport_bytes_received,
+            self.transport_frames_sent,
+            self.transport_frames_received,
+            self.transport_reconnects,
+            self.transport_handshake_failures
+        )?;
+        writeln!(
+            f,
             "latency:         mean {}  p50 {}  p95 {}  p99 {}",
             fmt_ms(self.latency_mean),
             fmt_ms(self.latency_p50),
@@ -517,13 +599,19 @@ impl std::fmt::Display for MetricsSnapshot {
             write!(
                 f,
                 "\ngroup {g}:         {} products, {} decodes, {} partials used, \
-                 decode mean {}, alive {}, suspected {}",
+                 decode mean {}, alive {}, suspected {}, link {} B out / {} B in \
+                 ({}/{} frames, {} reconnects)",
                 gm.products,
                 gm.decodes,
                 gm.partials_used,
                 fmt_ms(gm.decode_mean),
                 fmt_gauge(gm.alive_workers),
-                fmt_gauge(gm.suspected)
+                fmt_gauge(gm.suspected),
+                gm.transport_bytes_sent,
+                gm.transport_bytes_received,
+                gm.transport_frames_sent,
+                gm.transport_frames_received,
+                gm.transport_reconnects
             )?;
         }
         for m in &self.models {
@@ -693,6 +781,60 @@ mod tests {
         let v = crate::config::json::Json::parse(&s.to_json()).expect("valid JSON");
         assert_eq!(
             v.get("decode_cache_misses").and_then(|j| j.as_usize()),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn transport_counters_surface_in_snapshot_json_and_display() {
+        let m = Metrics::with_groups(1);
+        Metrics::add(&m.transport_bytes_sent, 128);
+        Metrics::add(&m.transport_bytes_received, 64);
+        Metrics::inc(&m.transport_frames_sent);
+        Metrics::inc(&m.transport_frames_received);
+        Metrics::inc(&m.transport_reconnects);
+        Metrics::inc(&m.transport_handshake_failures);
+        let mut s = m.snapshot();
+        assert_eq!(s.transport_bytes_sent, 128);
+        assert_eq!(s.transport_bytes_received, 64);
+        assert_eq!(s.transport_frames_sent, 1);
+        assert_eq!(s.transport_frames_received, 1);
+        assert_eq!(s.transport_reconnects, 1);
+        assert_eq!(s.transport_handshake_failures, 1);
+        // Per-group breakdown is an overlay; bare snapshots read 0.
+        assert_eq!(s.per_group[0].transport_bytes_sent, 0);
+        s.per_group[0].transport_bytes_sent = 100;
+        s.per_group[0].transport_bytes_received = 50;
+        s.per_group[0].transport_frames_sent = 2;
+        s.per_group[0].transport_frames_received = 3;
+        s.per_group[0].transport_reconnects = 1;
+        let rendered = format!("{s}");
+        assert!(rendered.contains("128 B out / 64 B in"));
+        assert!(rendered.contains("100 B out / 50 B in (2/3 frames, 1 reconnects)"));
+        let v = crate::config::json::Json::parse(&s.to_json()).expect("valid JSON");
+        assert_eq!(
+            v.get("transport_bytes_sent").and_then(|j| j.as_usize()),
+            Some(128)
+        );
+        assert_eq!(
+            v.get("transport_handshake_failures")
+                .and_then(|j| j.as_usize()),
+            Some(1)
+        );
+        let groups = match v.get("per_group") {
+            Some(crate::config::json::Json::Array(a)) => a,
+            other => panic!("per_group missing: {other:?}"),
+        };
+        assert_eq!(
+            groups[0]
+                .get("transport_bytes_received")
+                .and_then(|j| j.as_usize()),
+            Some(50)
+        );
+        assert_eq!(
+            groups[0]
+                .get("transport_reconnects")
+                .and_then(|j| j.as_usize()),
             Some(1)
         );
     }

@@ -248,6 +248,7 @@ pub fn spawn(
                                         id: done.id,
                                         shard: offset + done.index,
                                         data: done.data,
+                                        decoded: false,
                                         decode_flops: 0,
                                         finished_at: Instant::now(),
                                     },
@@ -307,6 +308,7 @@ pub fn spawn(
                                                         id: done.id,
                                                         shard: group,
                                                         data: out.result,
+                                                        decoded: true,
                                                         decode_flops: out.flops,
                                                         finished_at,
                                                     },

@@ -34,6 +34,10 @@
 //!   poison-transparent locks, the admission gate and drain state
 //!   machine, and (under `--features modelcheck`) an in-repo
 //!   loom-style exhaustive interleaving explorer.
+//! * [`transport`] — the links between master ↔ submasters ↔ workers:
+//!   the in-memory FIFO fast path and a socket transport (UDS/TCP)
+//!   with a versioned, checksummed wire format, so submaster/worker
+//!   trees run as separate OS processes (`hiercode node`).
 //! * [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
 //! * [`config`], [`cli`], [`util`] — config system (own JSON parser),
@@ -53,6 +57,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod sim;
 pub mod sync;
+pub mod transport;
 pub mod util;
 
 /// Crate-wide result type.

@@ -79,6 +79,44 @@ impl Clock for MockClock {
     }
 }
 
+/// Deterministic exponential backoff schedule: doubles from a base
+/// delay up to a clamp. Pure arithmetic — the caller owns the actual
+/// sleeping (and any clock reads), so the schedule itself is fully
+/// reproducible and trivially testable. Used by the transport node's
+/// reconnect loop.
+#[derive(Debug)]
+pub struct Backoff {
+    base_ms: u64,
+    next_ms: u64,
+    max_ms: u64,
+}
+
+impl Backoff {
+    /// Schedule starting at `base_ms`, doubling, clamped to `max_ms`.
+    /// A zero base is lifted to 1 ms so the schedule actually grows.
+    pub fn new(base_ms: u64, max_ms: u64) -> Self {
+        let base = base_ms.max(1);
+        Self {
+            base_ms: base,
+            next_ms: base,
+            max_ms: max_ms.max(base),
+        }
+    }
+
+    /// The delay to apply for this attempt; the following attempt's
+    /// delay doubles (clamped).
+    pub fn next_delay_ms(&mut self) -> u64 {
+        let d = self.next_ms;
+        self.next_ms = self.next_ms.saturating_mul(2).min(self.max_ms);
+        d
+    }
+
+    /// Reset to the base delay (call after a successful attempt).
+    pub fn reset(&mut self) {
+        self.next_ms = self.base_ms;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +139,29 @@ mod tests {
         let a = c.now_ms();
         let b = c.now_ms();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn backoff_doubles_clamps_and_resets() {
+        let mut b = Backoff::new(10, 80);
+        assert_eq!(b.next_delay_ms(), 10);
+        assert_eq!(b.next_delay_ms(), 20);
+        assert_eq!(b.next_delay_ms(), 40);
+        assert_eq!(b.next_delay_ms(), 80);
+        assert_eq!(b.next_delay_ms(), 80); // clamped
+        b.reset();
+        assert_eq!(b.next_delay_ms(), 10);
+    }
+
+    #[test]
+    fn backoff_degenerate_params_stay_sane() {
+        // Zero base lifts to 1 ms and still grows; max below base
+        // clamps to base.
+        let mut b = Backoff::new(0, 0);
+        assert_eq!(b.next_delay_ms(), 1);
+        assert_eq!(b.next_delay_ms(), 1);
+        let mut b = Backoff::new(100, 5);
+        assert_eq!(b.next_delay_ms(), 100);
+        assert_eq!(b.next_delay_ms(), 100);
     }
 }

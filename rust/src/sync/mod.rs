@@ -46,7 +46,7 @@ pub mod drain;
 pub mod model;
 
 pub use admission::AdmissionGate;
-pub use clock::{Clock, MockClock, WallClock};
+pub use clock::{Backoff, Clock, MockClock, WallClock};
 pub use drain::DrainState;
 
 /// Poison-transparent mutex; under `modelcheck` an instrumented one.

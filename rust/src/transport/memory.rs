@@ -1,0 +1,67 @@
+//! The in-memory transport: the original `mpsc` fan-out behind the
+//! [`Transport`] trait.
+//!
+//! This is not a shim for tests — it *is* the single-process fast
+//! path, byte-for-byte the channel wiring the cluster used before the
+//! transport layer existed, and therefore the oracle the socket
+//! transport is measured against (`tests/socket_transport.rs` demands
+//! bit-identical decode outputs across the two).
+
+use super::Transport;
+use crate::coordinator::messages::SubmasterMsg;
+use std::sync::mpsc;
+
+/// One `mpsc` sender per submaster. Dropped receivers make `send` a
+/// silent no-op — in-memory "silence" matching a torn socket.
+pub struct MemoryTransport {
+    links: Vec<mpsc::Sender<SubmasterMsg>>,
+}
+
+impl MemoryTransport {
+    /// Wrap the per-group senders (possibly empty, for master unit
+    /// tests that exercise no downstream).
+    pub fn new(links: Vec<mpsc::Sender<SubmasterMsg>>) -> Self {
+        Self { links }
+    }
+}
+
+impl Transport for MemoryTransport {
+    fn groups(&self) -> usize {
+        self.links.len()
+    }
+
+    fn send(&self, group: usize, msg: SubmasterMsg) {
+        if let Some(tx) = self.links.get(group) {
+            let _ = tx.send(msg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::JobId;
+
+    #[test]
+    fn delivers_in_order_and_drops_dead_or_missing_links() {
+        let (tx, rx) = mpsc::channel();
+        let (dead_tx, dead_rx) = mpsc::channel::<SubmasterMsg>();
+        drop(dead_rx);
+        let t = MemoryTransport::new(vec![tx, dead_tx]);
+        assert_eq!(t.groups(), 2);
+        t.send(0, SubmasterMsg::Finish(JobId(1)));
+        t.send(0, SubmasterMsg::Finish(JobId(2)));
+        t.send(1, SubmasterMsg::Shutdown); // dead receiver: silence
+        t.send(9, SubmasterMsg::Shutdown); // out of range: silence
+        assert!(matches!(rx.try_recv(), Ok(SubmasterMsg::Finish(JobId(1)))));
+        assert!(matches!(rx.try_recv(), Ok(SubmasterMsg::Finish(JobId(2)))));
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn empty_transport_is_safe() {
+        let t = MemoryTransport::new(vec![]);
+        assert_eq!(t.groups(), 0);
+        t.send(0, SubmasterMsg::Shutdown);
+    }
+}

@@ -1,0 +1,224 @@
+//! Transport layer: the links between master ↔ submasters ↔ workers,
+//! abstracted so the cluster runs identically over in-process channels
+//! and real sockets.
+//!
+//! The paper's architecture is a tree — master, `n2` submasters, `n1`
+//! workers each — and until this layer existed the whole tree lived in
+//! one process wired by `mpsc` FIFOs. [`Transport`] abstracts exactly
+//! the surface the master uses: a fixed set of downstream group links
+//! carrying [`SubmasterMsg`]s, best-effort (a send into a dead link is
+//! *silence*, which is precisely the signal the failure detector
+//! consumes). Two implementations:
+//!
+//! - [`memory::MemoryTransport`] — the original in-memory FIFO fan-out,
+//!   kept as the bit-identical fast path and the test oracle;
+//! - [`socket::SocketHub`] — a listener plus per-group socket
+//!   connections (Unix-domain or TCP) carrying the versioned,
+//!   checksummed frames of [`wire`], with handshakes,
+//!   reconnect-with-backoff and shard re-shipping, so submaster/worker
+//!   trees run as separate OS processes (`hiercode node`, driven by
+//!   [`node::run_node`]).
+//!
+//! Silence semantics are load-bearing: neither implementation reports
+//! delivery failure to the master. An unreachable group simply stops
+//! producing partials and heartbeats, the `FailureDetector` ages it
+//! out, and the liveness sweep fails unsatisfiable jobs fast — the
+//! same code path for a dropped channel and a torn TCP connection.
+
+pub mod memory;
+pub mod node;
+pub mod socket;
+pub mod wire;
+
+use crate::coordinator::messages::SubmasterMsg;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// The master's view of its downstream links: `groups()` fixed lanes,
+/// each carrying [`SubmasterMsg`]s in order, best-effort.
+///
+/// `send` deliberately returns `()` — delivery failure is expressed as
+/// downstream silence, never as an error the master must branch on.
+/// That keeps the master's control flow identical across transports,
+/// which is what makes the in-memory path a valid oracle for the
+/// socket path.
+pub trait Transport: Send + Sync {
+    /// Number of downstream group links (`n2`).
+    fn groups(&self) -> usize;
+    /// Enqueue `msg` toward group `group`. Out-of-range groups and
+    /// dead links are silently dropped.
+    fn send(&self, group: usize, msg: SubmasterMsg);
+}
+
+/// A transport endpoint address: `uds:/path/to.sock` or
+/// `tcp:host:port`. UDS is the default for local multi-process
+/// clusters; the TCP form exists so nothing in the framing or
+/// handshake assumes same-host peers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TransportAddr {
+    /// Unix-domain socket path.
+    Uds(PathBuf),
+    /// TCP `host:port`.
+    Tcp(String),
+}
+
+impl TransportAddr {
+    /// Parse `uds:<path>` or `tcp:<host>:<port>`.
+    pub fn parse(s: &str) -> Result<Self> {
+        if let Some(path) = s.strip_prefix("uds:") {
+            if path.is_empty() {
+                return Err(Error::Config("uds: address needs a socket path".into()));
+            }
+            Ok(Self::Uds(PathBuf::from(path)))
+        } else if let Some(hostport) = s.strip_prefix("tcp:") {
+            if !hostport.contains(':') {
+                return Err(Error::Config(format!(
+                    "tcp: address needs host:port, got '{hostport}'"
+                )));
+            }
+            Ok(Self::Tcp(hostport.to_string()))
+        } else {
+            Err(Error::Config(format!(
+                "transport address '{s}' must start with 'uds:' or 'tcp:'"
+            )))
+        }
+    }
+}
+
+impl std::fmt::Display for TransportAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Uds(p) => write!(f, "uds:{}", p.display()),
+            Self::Tcp(hp) => write!(f, "tcp:{hp}"),
+        }
+    }
+}
+
+/// A bound listener over either address family.
+pub enum Listener {
+    /// Unix-domain listener.
+    Uds(UnixListener),
+    /// TCP listener.
+    Tcp(std::net::TcpListener),
+}
+
+impl Listener {
+    /// Bind `addr`. A stale UDS socket file from a dead process is
+    /// removed first (the bind would otherwise fail `AddrInUse`
+    /// forever — the file outlives its listener).
+    pub fn bind(addr: &TransportAddr) -> std::io::Result<Self> {
+        match addr {
+            TransportAddr::Uds(path) => {
+                let _ = std::fs::remove_file(path);
+                UnixListener::bind(path).map(Self::Uds)
+            }
+            TransportAddr::Tcp(hp) => std::net::TcpListener::bind(hp.as_str()).map(Self::Tcp),
+        }
+    }
+
+    /// Accept one connection.
+    pub fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Self::Uds(l) => l.accept().map(|(s, _)| Stream::Uds(s)),
+            Self::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+        }
+    }
+}
+
+/// A connected stream over either address family, exposing exactly the
+/// operations the hub and node need.
+#[derive(Debug)]
+pub enum Stream {
+    /// Unix-domain stream.
+    Uds(UnixStream),
+    /// TCP stream.
+    Tcp(std::net::TcpStream),
+}
+
+impl Stream {
+    /// Dial `addr`.
+    pub fn connect(addr: &TransportAddr) -> std::io::Result<Self> {
+        match addr {
+            TransportAddr::Uds(path) => UnixStream::connect(path).map(Self::Uds),
+            TransportAddr::Tcp(hp) => std::net::TcpStream::connect(hp.as_str()).map(Self::Tcp),
+        }
+    }
+
+    /// Clone the underlying descriptor (reader/writer split).
+    pub fn try_clone(&self) -> std::io::Result<Self> {
+        match self {
+            Self::Uds(s) => s.try_clone().map(Self::Uds),
+            Self::Tcp(s) => s.try_clone().map(Self::Tcp),
+        }
+    }
+
+    /// Tear the connection down in both directions: blocked reads on
+    /// every clone return EOF — how a fault-plan sever becomes real
+    /// downstream silence.
+    pub fn shutdown(&self) {
+        let how = std::net::Shutdown::Both;
+        let _ = match self {
+            Self::Uds(s) => s.shutdown(how),
+            Self::Tcp(s) => s.shutdown(how),
+        };
+    }
+
+    /// Bound blocking reads (handshake guard); `None` restores fully
+    /// blocking reads for the steady state.
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Self::Uds(s) => s.set_read_timeout(dur),
+            Self::Tcp(s) => s.set_read_timeout(dur),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Uds(s) => s.read(buf),
+            Self::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Uds(s) => s.write(buf),
+            Self::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Self::Uds(s) => s.flush(),
+            Self::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_parses_both_families_and_displays_back() {
+        let u = TransportAddr::parse("uds:/tmp/x.sock").unwrap();
+        assert_eq!(u, TransportAddr::Uds(PathBuf::from("/tmp/x.sock")));
+        assert_eq!(u.to_string(), "uds:/tmp/x.sock");
+        let t = TransportAddr::parse("tcp:127.0.0.1:9000").unwrap();
+        assert_eq!(t, TransportAddr::Tcp("127.0.0.1:9000".to_string()));
+        assert_eq!(t.to_string(), "tcp:127.0.0.1:9000");
+    }
+
+    #[test]
+    fn addr_rejects_malformed_forms() {
+        for bad in ["", "uds:", "tcp:nohost", "udp:/x", "/tmp/x.sock"] {
+            assert!(TransportAddr::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+}

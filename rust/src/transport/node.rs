@@ -1,0 +1,472 @@
+//! The node side of the socket transport: one submaster/worker group
+//! running as its own OS process (`hiercode node`), joined to the
+//! master's [`SocketHub`](super::socket::SocketHub) by the bootstrap
+//! handshake.
+//!
+//! A node rebuilds the *same* scheme from the *same* config the master
+//! loaded, replays the master's launch-time seed stream to recover its
+//! own group's worker and submaster RNGs (so a socket-mode cluster
+//! computes bit-identically to the in-memory one), then spawns the
+//! ordinary [`worker`] and [`submaster`] threads wired by local `mpsc`
+//! channels. The process boundary is bridged by exactly two loops:
+//!
+//! * **downstream** (this thread): dial → handshake → decode frames:
+//!   `Load` installs shards into local workers, `Job`/`Finish` feed the
+//!   local submaster, `Shutdown` tears the tree down;
+//! * **upstream** (the pump thread): the submaster's `MasterMsg`s —
+//!   partials and heartbeats — encode into frames and write to the
+//!   shared uplink. A dead uplink turns writes into drops: silence,
+//!   never an error, mirroring the in-memory dead-channel semantics.
+//!
+//! A lost connection (hub restart, fault-plan sever) sends the node
+//! back to a deterministic dial loop ([`Backoff`]) until the hub
+//! re-admits it — at which point the hub re-ships every retained model
+//! shard before any new job, restoring the Load-before-Job invariant.
+
+use super::wire::{self, WireMsg, NO_WORKER};
+use super::{Stream, TransportAddr};
+use crate::config::schema::ClusterConfig;
+use crate::coordinator::backend::{ComputeBackend, WorkerShard};
+use crate::coordinator::chaos::LivenessConfig;
+use crate::coordinator::fault::{FaultConfig, FaultState};
+use crate::coordinator::messages::{
+    CancelSet, JobBroadcast, JobId, MasterMsg, ModelId, SubmasterMsg, WorkerCmd, WorkerLink,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::submaster::{self, LinkDelay};
+use crate::coordinator::worker::{self, WorkerCtx, WorkerDelay};
+use crate::runtime::PjrtRuntime;
+use crate::sync::{Backoff, Clock, Mutex, RwLock, WallClock};
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+use std::io::Write as _;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+/// How long the node waits for the hub's handshake reply.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Everything a node process needs to join a cluster.
+pub struct NodeOptions {
+    /// The cluster config — must be byte-for-byte the config the hub's
+    /// master loaded (the handshake checks the seed as a cluster id,
+    /// catching the obvious mispairings).
+    pub config: ClusterConfig,
+    /// Which group (`0..n2`) this process hosts.
+    pub group: usize,
+    /// The hub's listen address.
+    pub addr: TransportAddr,
+    /// Give up dialing after this long without a successful handshake
+    /// (measured per connection attempt window, refreshed on success).
+    pub max_dial_ms: u64,
+    /// Reconnect backoff base delay.
+    pub dial_backoff_ms: u64,
+    /// Reconnect backoff clamp.
+    pub dial_backoff_max_ms: u64,
+}
+
+/// Run one group's submaster/worker tree against the hub at
+/// `opts.addr`. Blocks until the hub sends `Shutdown` (clean exit) or
+/// the dial window is exhausted / the hub rejects fatally (error).
+pub fn run_node(opts: NodeOptions) -> Result<()> {
+    let config = &opts.config;
+    // Mirror the in-process launch gates exactly: a node must refuse
+    // the same configs the master would.
+    let partial = config.code.topology.groups.iter().any(|g| g.subtasks > 1);
+    if config.runtime.use_pjrt && partial {
+        return Err(Error::InvalidParams(
+            "partial-work mode (subtasks_per_worker > 1) requires the \
+             native backend: sub-shard shapes have no AOT'd PJRT \
+             artifacts yet — set runtime.use_pjrt = false"
+                .into(),
+        ));
+    }
+    let scheme = config.build_scheme()?;
+    let backend = if config.runtime.use_pjrt {
+        ComputeBackend::Pjrt(PjrtRuntime::start(config.runtime.artifact_dir.clone())?)
+    } else {
+        ComputeBackend::Native
+    };
+    let topology = crate::coordinator::cluster::serving_topology(&scheme, config);
+    let n2 = topology.n2();
+    if opts.group >= n2 {
+        return Err(Error::InvalidParams(format!(
+            "node group {} out of range: topology has {n2} groups",
+            opts.group
+        )));
+    }
+    let group_sizes = topology.group_sizes();
+    let offset: usize = group_sizes.iter().take(opts.group).sum();
+
+    // Replay the master's launch-time seed stream: per group, one
+    // `next_u64` per worker then one `split` for the submaster — the
+    // exact draw order of `ClusterCore::launch_with_faults`. Only our
+    // group's values are kept; later groups' draws can't affect ours,
+    // so the replay stops early.
+    let mut seed_rng = Rng::new(config.seed);
+    let mut worker_seeds = Vec::new();
+    let mut sub_rng = None;
+    for (g, spec) in topology.groups.iter().enumerate() {
+        let mut seeds = Vec::with_capacity(spec.n1);
+        for _ in 0..spec.n1 {
+            seeds.push(seed_rng.next_u64());
+        }
+        let r = seed_rng.split();
+        if g == opts.group {
+            worker_seeds = seeds;
+            sub_rng = Some(r);
+            break;
+        }
+    }
+    let Some(sub_rng) = sub_rng else {
+        return Err(Error::InvalidParams("empty topology".into()));
+    };
+
+    // Local fault switchboard: launch-time dead workers from the
+    // scenario fold in, same as in-process launch.
+    let fault_state = Arc::new(FaultState::from_config(&group_sizes, &FaultConfig::none()));
+    for (g, spec) in topology.groups.iter().enumerate() {
+        for &j in &spec.dead_workers {
+            fault_state.set_worker_dead(g, j, true);
+        }
+    }
+    let liveness = if config.chaos.liveness {
+        LivenessConfig::new(
+            Duration::from_secs_f64(config.chaos.heartbeat_ms / 1e3),
+            Duration::from_secs_f64(config.chaos.suspect_ms / 1e3),
+            Duration::from_secs_f64(config.chaos.dead_ms / 1e3),
+        )
+    } else {
+        LivenessConfig::disabled()
+    };
+    let beat = liveness.beat_period();
+
+    // Node-local metrics sink: the submaster's decode accounting lands
+    // here; the hub mirrors the counters that must match the in-memory
+    // oracle from the Partial frames it receives.
+    let metrics = Arc::new(Metrics::with_groups(n2));
+    let (master_tx, master_rx) = mpsc::channel::<MasterMsg>();
+    let (sub_tx, sub_rx) = mpsc::channel::<SubmasterMsg>();
+    let cancel = Arc::new(CancelSet::new());
+    let spec = &topology.groups[opts.group];
+    let group_scale = config.straggler.scale * spec.slowdown();
+    let mut threads = Vec::with_capacity(spec.n1 + 1);
+    let mut group_links: Vec<WorkerLink> = Vec::with_capacity(spec.n1);
+    for (j, &seed) in worker_seeds.iter().enumerate() {
+        let (w_tx, w_rx) = mpsc::channel::<WorkerCmd>();
+        let ctx = WorkerCtx {
+            group: opts.group,
+            index: j,
+            backend: backend.clone(),
+            delay: WorkerDelay {
+                model: spec.worker,
+                scale: group_scale,
+                enabled: config.straggler.enabled,
+            },
+            subtasks: spec.subtasks,
+            cancel: Arc::clone(&cancel),
+            faults: Arc::clone(&fault_state),
+            heartbeat: beat,
+            submaster: sub_tx.clone(),
+        };
+        threads.push(worker::spawn(ctx, Rng::new(seed), w_rx)?);
+        group_links.push(Arc::new(RwLock::new(w_tx)));
+    }
+    threads.push(submaster::spawn(
+        opts.group,
+        offset,
+        Arc::clone(&scheme),
+        group_links.clone(),
+        LinkDelay {
+            model: spec.link,
+            scale: group_scale,
+            enabled: config.straggler.enabled,
+        },
+        Arc::clone(&fault_state),
+        spec.subtasks,
+        beat,
+        Arc::clone(&cancel),
+        Arc::clone(&metrics),
+        sub_rng,
+        sub_rx,
+        master_tx,
+    )?);
+
+    // Upstream pump: submaster → frames → whatever stream currently
+    // occupies the uplink slot. `None` (disconnected) or a failed
+    // write is a silent drop — real silence, which is exactly what the
+    // hub's failure detector is listening for. The pump exits when the
+    // submaster (the only sender) hangs up.
+    let uplink: Arc<Mutex<Option<Stream>>> = Arc::new(Mutex::new(None));
+    let pump_uplink = Arc::clone(&uplink);
+    let pump = thread::Builder::new()
+        .name(format!("hiercode-node-up{}", opts.group))
+        .spawn(move || {
+            while let Ok(msg) = master_rx.recv() {
+                let frame = match msg {
+                    MasterMsg::Partial(pr) => WireMsg::Partial {
+                        id: pr.id.0,
+                        shard: pr.shard as u64,
+                        decoded: pr.decoded,
+                        decode_flops: pr.decode_flops,
+                        data: pr.data,
+                    },
+                    MasterMsg::Heartbeat { group, worker } => WireMsg::Heartbeat {
+                        group: group as u32,
+                        worker: worker.map(|j| j as u32).unwrap_or(NO_WORKER),
+                    },
+                    _ => continue,
+                };
+                let bytes = frame.encode();
+                let mut slot = pump_uplink.lock();
+                if let Some(stream) = slot.as_mut() {
+                    if stream.write_all(&bytes).is_err() {
+                        *slot = None;
+                    }
+                }
+            }
+        })?;
+
+    // Downstream loop: dial, handshake, decode frames until Shutdown.
+    let result = downstream_loop(&opts, &uplink, &sub_tx, &group_links, offset, spec.n1);
+
+    // Teardown: make sure the local tree exits even on an error path
+    // (the hub's Shutdown already went through `sub_tx` on the clean
+    // path; a second one is harmless — the submaster is gone).
+    let _ = sub_tx.send(SubmasterMsg::Shutdown);
+    drop(sub_tx);
+    for t in threads {
+        let _ = t.join();
+    }
+    uplink.lock().take();
+    let _ = pump.join();
+    crate::log_info!(
+        "transport",
+        "node group {} exiting: {}",
+        opts.group,
+        if result.is_ok() { "clean shutdown" } else { "error" }
+    );
+    result
+}
+
+/// Dial/handshake/read until the hub says `Shutdown` (Ok), the hub
+/// rejects fatally, or the dial window closes without a connection.
+fn downstream_loop(
+    opts: &NodeOptions,
+    uplink: &Arc<Mutex<Option<Stream>>>,
+    sub_tx: &mpsc::Sender<SubmasterMsg>,
+    group_links: &[WorkerLink],
+    offset: usize,
+    n1: usize,
+) -> Result<()> {
+    let clock = WallClock::new();
+    let mut backoff = Backoff::new(opts.dial_backoff_ms, opts.dial_backoff_max_ms);
+    loop {
+        let mut stream = dial(opts, &clock, &mut backoff)?;
+        backoff.reset();
+        match stream.try_clone() {
+            Ok(up) => *uplink.lock() = Some(up),
+            Err(e) => {
+                crate::log_warn!("transport", "uplink clone failed: {e}; redialing");
+                continue;
+            }
+        }
+        crate::log_info!(
+            "transport",
+            "node group {} connected to {}",
+            opts.group,
+            opts.addr
+        );
+        loop {
+            let (msg, _) = match WireMsg::read_from(&mut stream) {
+                Ok(v) => v,
+                Err(e) => {
+                    crate::log_warn!(
+                        "transport",
+                        "node group {} lost its connection: {e}; redialing",
+                        opts.group
+                    );
+                    uplink.lock().take();
+                    break; // back to the dial loop
+                }
+            };
+            match msg {
+                WireMsg::Load {
+                    model,
+                    worker,
+                    shard,
+                } => {
+                    let flat = worker as usize;
+                    if flat < offset || flat >= offset + n1 {
+                        crate::log_warn!(
+                            "transport",
+                            "Load for worker {flat} outside group {} \
+                             (offset {offset}, n1 {n1}); dropped",
+                            opts.group
+                        );
+                        continue;
+                    }
+                    let ws = match WorkerShard::new(&shard) {
+                        Ok(ws) => ws,
+                        Err(e) => {
+                            crate::log_warn!(
+                                "transport",
+                                "bad shard for worker {flat}: {e}; dropped"
+                            );
+                            continue;
+                        }
+                    };
+                    if let Some(link) = group_links.get(flat - offset) {
+                        let _ = link.read().send(WorkerCmd::Load {
+                            model: ModelId(model),
+                            shard: Box::new(ws),
+                        });
+                    }
+                }
+                WireMsg::Job {
+                    id,
+                    model,
+                    out_rows,
+                    x,
+                } => {
+                    let _ = sub_tx.send(SubmasterMsg::Job(JobBroadcast {
+                        id: JobId(id),
+                        model: ModelId(model),
+                        out_rows: usize::try_from(out_rows).unwrap_or(usize::MAX),
+                        x: Arc::new(x),
+                    }));
+                }
+                WireMsg::Finish { id } => {
+                    let _ = sub_tx.send(SubmasterMsg::Finish(JobId(id)));
+                }
+                WireMsg::Shutdown => {
+                    let _ = sub_tx.send(SubmasterMsg::Shutdown);
+                    uplink.lock().take();
+                    return Ok(());
+                }
+                other => {
+                    crate::log_debug!(
+                        "transport",
+                        "unexpected downstream kind {}; ignored",
+                        other.kind()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// One dial window: connect + handshake with deterministic backoff
+/// until `Welcome`, a fatal `Reject`, or the window closes.
+fn dial(opts: &NodeOptions, clock: &WallClock, backoff: &mut Backoff) -> Result<Stream> {
+    let deadline = clock.now_ms().saturating_add(opts.max_dial_ms);
+    loop {
+        match try_handshake(opts) {
+            Ok(HandshakeOutcome::Admitted(stream)) => return Ok(stream),
+            Ok(HandshakeOutcome::FatalReject(reason)) => {
+                return Err(Error::Coordinator(format!(
+                    "hub rejected node group {}: {reason}",
+                    opts.group
+                )));
+            }
+            Ok(HandshakeOutcome::Retry(why)) => {
+                crate::log_debug!(
+                    "transport",
+                    "node group {} dial retry: {why}",
+                    opts.group
+                );
+            }
+            Err(e) => {
+                crate::log_debug!(
+                    "transport",
+                    "node group {} dial failed: {e}",
+                    opts.group
+                );
+            }
+        }
+        if clock.now_ms() >= deadline {
+            return Err(Error::Coordinator(format!(
+                "node group {} could not reach {} within {} ms",
+                opts.group, opts.addr, opts.max_dial_ms
+            )));
+        }
+        thread::sleep(Duration::from_millis(backoff.next_delay_ms()));
+    }
+}
+
+enum HandshakeOutcome {
+    Admitted(Stream),
+    Retry(String),
+    FatalReject(String),
+}
+
+/// One connect + Hello/Welcome exchange.
+fn try_handshake(opts: &NodeOptions) -> std::io::Result<HandshakeOutcome> {
+    let mut stream = Stream::connect(&opts.addr)?;
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    stream.write_all(
+        &WireMsg::Hello {
+            protocol: wire::VERSION,
+            group: opts.group as u32,
+            cluster_id: opts.config.seed,
+        }
+        .encode(),
+    )?;
+    let (reply, _) = match WireMsg::read_from(&mut stream) {
+        Ok(v) => v,
+        Err(e) => {
+            return Ok(HandshakeOutcome::Retry(format!("handshake read: {e}")));
+        }
+    };
+    match reply {
+        WireMsg::Welcome => {
+            stream.set_read_timeout(None)?;
+            Ok(HandshakeOutcome::Admitted(stream))
+        }
+        WireMsg::Reject { reason, retryable } => {
+            if retryable {
+                Ok(HandshakeOutcome::Retry(reason))
+            } else {
+                Ok(HandshakeOutcome::FatalReject(reason))
+            }
+        }
+        other => Ok(HandshakeOutcome::Retry(format!(
+            "expected Welcome/Reject, got kind {}",
+            other.kind()
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(group: usize, addr: TransportAddr, max_dial_ms: u64) -> NodeOptions {
+        NodeOptions {
+            config: ClusterConfig::demo(2, 2, 2, 2),
+            group,
+            addr,
+            max_dial_ms,
+            dial_backoff_ms: 5,
+            dial_backoff_max_ms: 20,
+        }
+    }
+
+    #[test]
+    fn out_of_range_group_is_rejected_before_dialing() {
+        let addr = TransportAddr::Uds("/nonexistent/never-dialed.sock".into());
+        let err = run_node(opts(99, addr, 10)).unwrap_err();
+        assert!(matches!(err, Error::InvalidParams(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn unreachable_hub_exhausts_the_dial_window() {
+        let addr = TransportAddr::Uds(std::env::temp_dir().join(format!(
+            "hiercode-node-nohub-{}.sock",
+            std::process::id()
+        )));
+        let err = run_node(opts(0, addr, 50)).unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "got {err:?}");
+    }
+}

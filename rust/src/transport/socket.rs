@@ -1,0 +1,943 @@
+//! The socket transport hub: the master's side of the multi-process
+//! cluster.
+//!
+//! One [`SocketHub`] lives in the master process. It binds a
+//! [`Listener`] (UDS or TCP), accepts one connection per group from
+//! `hiercode node` processes, performs the versioned [`wire`] handshake
+//! ([`WireMsg::Hello`] → [`WireMsg::Welcome`] / [`WireMsg::Reject`]),
+//! and then:
+//!
+//! * **downstream** — a writer thread per group drains that group's
+//!   outbox (a FIFO of encoded frames: retained model `Load`s first,
+//!   then the master's `Job` / `Finish` / `Shutdown` stream) into the
+//!   socket, so the Load-before-Job ordering the in-memory channels
+//!   guarantee holds over the wire too;
+//! * **upstream** — a reader thread per connection decodes `Partial`
+//!   and `Heartbeat` frames back into [`MasterMsg`]s for the master's
+//!   single inbox, re-stamping arrival times locally (an `Instant`
+//!   never crosses the wire).
+//!
+//! Silence semantics carry over exactly: a torn connection clears the
+//! group's outbox (sends become drops), its beacons stop, and the
+//! failure detector ages the group out — the same path as an in-memory
+//! dead channel. A [`FaultPlan`](crate::coordinator::fault::FaultPlan)
+//! `LinkSever` becomes a *real* teardown: the hub shuts the stream
+//! down and refuses re-handshakes until `LinkHeal`, at which point the
+//! node's reconnect-with-backoff loop re-establishes the link and the
+//! hub re-ships every retained model shard.
+
+use super::wire::{self, WireMsg, NO_WORKER};
+use super::{Listener, Stream, Transport, TransportAddr};
+use crate::coordinator::chaos::FaultInjector;
+use crate::coordinator::messages::{JobId, MasterMsg, PartialResult, SubmasterMsg};
+use crate::coordinator::metrics::Metrics;
+use crate::linalg::Matrix;
+use crate::sync::{Clock, Condvar, Mutex, WallClock};
+use crate::Result;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+/// How long a freshly accepted connection gets to present its `Hello`
+/// before the hub drops it (a guard against half-open dials wedging
+/// the accept loop).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Per-group link state.
+struct GroupLink {
+    /// Encoded-frame outbox toward the group's node. `None` while
+    /// disconnected: sends are silently dropped — in-memory "dead
+    /// receiver" semantics over a socket.
+    outbox: Mutex<Option<mpsc::Sender<WireMsg>>>,
+    /// The live stream, retained so a fault-plan sever can tear the
+    /// connection down for real.
+    stream: Mutex<Option<Stream>>,
+    /// Fault-plan sever flag: while set, the connection is torn down
+    /// and re-handshakes are refused (retryable — the node keeps its
+    /// backoff loop alive for the heal).
+    severed: AtomicBool,
+    /// Whether this group ever completed a handshake — distinguishes a
+    /// reconnect (counted) from the initial connect (not).
+    ever_connected: AtomicBool,
+    /// Reconnects completed on this link.
+    reconnects: AtomicU64,
+    /// Bytes/frames shipped to and received from this group.
+    bytes_tx: AtomicU64,
+    bytes_rx: AtomicU64,
+    frames_tx: AtomicU64,
+    frames_rx: AtomicU64,
+}
+
+impl GroupLink {
+    fn new() -> Self {
+        Self {
+            outbox: Mutex::new(None),
+            stream: Mutex::new(None),
+            severed: AtomicBool::new(false),
+            ever_connected: AtomicBool::new(false),
+            reconnects: AtomicU64::new(0),
+            bytes_tx: AtomicU64::new(0),
+            bytes_rx: AtomicU64::new(0),
+            frames_tx: AtomicU64::new(0),
+            frames_rx: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Per-group transport counters, surfaced through
+/// [`SocketHub::group_stats`] into the cluster's metrics snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GroupLinkStats {
+    /// Bytes shipped to this group's node.
+    pub bytes_sent: u64,
+    /// Bytes received from this group's node.
+    pub bytes_received: u64,
+    /// Frames shipped to this group's node.
+    pub frames_sent: u64,
+    /// Frames received from this group's node.
+    pub frames_received: u64,
+    /// Reconnects completed on this link.
+    pub reconnects: u64,
+}
+
+/// Shared state between the accept loop, the per-connection reader and
+/// writer threads, and the [`Transport`] / [`FaultInjector`] surfaces.
+struct HubInner {
+    addr: TransportAddr,
+    listener: Listener,
+    /// Cluster identity carried in the handshake (the config seed):
+    /// a node dialed at the wrong cluster is rejected fatally instead
+    /// of silently mixing job streams.
+    cluster_id: u64,
+    links: Vec<GroupLink>,
+    /// Connection admission table: `conn[g]` is true while group `g`
+    /// holds a live handshaken connection. Guards against duplicate
+    /// connections and backs [`SocketHub::wait_connected`].
+    conn: Mutex<Vec<bool>>,
+    conn_cv: Condvar,
+    /// Retained model shards in flat cluster-wide worker order, for
+    /// (re)connect re-shipping. Lock order: `models` → `outbox` (a
+    /// (re)connect publishes the outbox while holding `models`, so a
+    /// concurrent `retain_and_ship` either sees the outbox and ships
+    /// directly, or the connect's snapshot already contains the model).
+    models: Mutex<Vec<(u32, Vec<Matrix>)>>,
+    /// Flat index of each group's first worker.
+    group_offsets: Vec<usize>,
+    /// Workers per group.
+    group_sizes: Vec<usize>,
+    metrics: Arc<Metrics>,
+    master_tx: mpsc::Sender<MasterMsg>,
+    closed: AtomicBool,
+    clock: WallClock,
+    /// Reader threads spawned per accepted connection (joined at
+    /// close, after the streams are shut down).
+    readers: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// Writer threads (joined at close, after the outboxes are taken —
+    /// `mpsc` delivers already-buffered frames after the sender drops,
+    /// so queued `Shutdown` frames still flush).
+    writers: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+/// Socket-backed [`Transport`]: listener + per-group framed links.
+pub struct SocketHub {
+    inner: Arc<HubInner>,
+    accept: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl SocketHub {
+    /// Bind `addr` and start accepting node connections for `groups`
+    /// groups. `group_offsets`/`group_sizes` give the flat worker
+    /// layout (for `Load` frame addressing), `cluster_id` the identity
+    /// nodes must echo in their `Hello`.
+    pub fn launch(
+        addr: &TransportAddr,
+        group_offsets: Vec<usize>,
+        group_sizes: Vec<usize>,
+        cluster_id: u64,
+        metrics: Arc<Metrics>,
+        master_tx: mpsc::Sender<MasterMsg>,
+    ) -> Result<Arc<Self>> {
+        let listener = Listener::bind(addr)?;
+        let n2 = group_sizes.len();
+        let inner = Arc::new(HubInner {
+            addr: addr.clone(),
+            listener,
+            cluster_id,
+            links: (0..n2).map(|_| GroupLink::new()).collect(),
+            conn: Mutex::new(vec![false; n2]),
+            conn_cv: Condvar::new(),
+            models: Mutex::new(Vec::new()),
+            group_offsets,
+            group_sizes,
+            metrics,
+            master_tx,
+            closed: AtomicBool::new(false),
+            clock: WallClock::new(),
+            readers: Mutex::new(Vec::new()),
+            writers: Mutex::new(Vec::new()),
+        });
+        let accept_inner = Arc::clone(&inner);
+        let accept = thread::Builder::new()
+            .name("hiercode-hub".into())
+            .spawn(move || accept_loop(&accept_inner))?;
+        crate::log_info!("transport", "hub listening on {addr} for {n2} groups");
+        Ok(Arc::new(Self {
+            inner,
+            accept: Mutex::new(Some(accept)),
+        }))
+    }
+
+    /// Block until every group holds a live connection, or `timeout_ms`
+    /// elapses. Returns whether the cluster is fully connected.
+    pub fn wait_connected(&self, timeout_ms: u64) -> bool {
+        let deadline = self.inner.clock.now_ms().saturating_add(timeout_ms);
+        let mut conn = self.inner.conn.lock();
+        loop {
+            if conn.iter().all(|&c| c) {
+                return true;
+            }
+            let now = self.inner.clock.now_ms();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self
+                .inner
+                .conn_cv
+                .wait_timeout(conn, Duration::from_millis(deadline - now));
+            conn = guard;
+        }
+    }
+
+    /// Groups currently holding a live handshaken connection.
+    pub fn connected_groups(&self) -> usize {
+        self.inner.conn.lock().iter().filter(|&&c| c).count()
+    }
+
+    /// Retain `model`'s shards (flat cluster-wide worker order) and
+    /// ship a `Load` frame per worker to every currently connected
+    /// group. Future (re)connects re-ship from the retained table.
+    pub fn retain_and_ship(&self, model: u32, shards: Vec<Matrix>) {
+        // Lock order models → outbox (see `HubInner::models`): holding
+        // `models` across the sends means a concurrent reconnect cannot
+        // publish an outbox that misses this model.
+        let mut models = self.inner.models.lock();
+        models.push((model, shards));
+        let (id, shards) = match models.last() {
+            Some((id, shards)) => (*id, shards),
+            None => return,
+        };
+        for (g, link) in self.inner.links.iter().enumerate() {
+            let outbox = link.outbox.lock();
+            if let Some(tx) = outbox.as_ref() {
+                ship_model_loads(&self.inner, g, id, shards, tx);
+            }
+        }
+    }
+
+    /// Per-group transport counters (snapshot).
+    pub fn group_stats(&self) -> Vec<GroupLinkStats> {
+        self.inner
+            .links
+            .iter()
+            .map(|l| GroupLinkStats {
+                bytes_sent: l.bytes_tx.load(Ordering::Relaxed),
+                bytes_received: l.bytes_rx.load(Ordering::Relaxed),
+                frames_sent: l.frames_tx.load(Ordering::Relaxed),
+                frames_received: l.frames_rx.load(Ordering::Relaxed),
+                reconnects: l.reconnects.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Tear the hub down: flush and close every link, stop the accept
+    /// loop, join every transport thread, remove the UDS socket file.
+    /// Idempotent.
+    pub fn close(&self) {
+        if self.inner.closed.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Take the outboxes first: `mpsc` still delivers frames that
+        // were buffered before the sender dropped, so writers flush
+        // their queues (including any Shutdown frame) and then exit.
+        for link in &self.inner.links {
+            link.outbox.lock().take();
+        }
+        for w in self.inner.writers.lock().drain(..) {
+            let _ = w.join();
+        }
+        // Now tear the streams down so blocked readers see EOF.
+        for link in &self.inner.links {
+            if let Some(s) = link.stream.lock().take() {
+                s.shutdown();
+            }
+        }
+        // Unblock the accept loop with a throwaway self-connection.
+        let _ = Stream::connect(&self.inner.addr);
+        if let Some(h) = self.accept.lock().take() {
+            let _ = h.join();
+        }
+        for r in self.inner.readers.lock().drain(..) {
+            let _ = r.join();
+        }
+        if let TransportAddr::Uds(path) = &self.inner.addr {
+            let _ = std::fs::remove_file(path);
+        }
+        crate::log_debug!("transport", "hub on {} closed", self.inner.addr);
+    }
+}
+
+impl Drop for SocketHub {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+impl Transport for SocketHub {
+    fn groups(&self) -> usize {
+        self.inner.links.len()
+    }
+
+    fn send(&self, group: usize, msg: SubmasterMsg) {
+        let Some(link) = self.inner.links.get(group) else {
+            return;
+        };
+        // Upstream-only variants never travel master → node.
+        let frame = match msg {
+            SubmasterMsg::Job(job) => WireMsg::Job {
+                id: job.id.0,
+                model: job.model.0,
+                out_rows: job.out_rows as u64,
+                x: (*job.x).clone(),
+            },
+            SubmasterMsg::Finish(id) => WireMsg::Finish { id: id.0 },
+            SubmasterMsg::Shutdown => WireMsg::Shutdown,
+            SubmasterMsg::Done(_) | SubmasterMsg::Heartbeat(_) => return,
+        };
+        let outbox = link.outbox.lock();
+        if let Some(tx) = outbox.as_ref() {
+            let _ = tx.send(frame);
+        }
+        // No outbox = disconnected: dropped silently, the detector's
+        // problem — identical to the in-memory dead-receiver path.
+    }
+}
+
+impl FaultInjector for SocketHub {
+    fn worker_crash(&self, group: usize, index: usize) {
+        // Workers live in the node's process; the hub cannot reach
+        // them. Process-level chaos (kill the node) covers this arm.
+        crate::log_warn!(
+            "transport",
+            "worker_crash({group},{index}) ignored: workers live in node \
+             processes — kill the node instead"
+        );
+    }
+
+    fn worker_restart(&self, group: usize, index: usize) -> f64 {
+        crate::log_warn!(
+            "transport",
+            "worker_restart({group},{index}) ignored: workers live in node \
+             processes — respawn the node instead"
+        );
+        f64::NAN
+    }
+
+    fn link_sever(&self, group: usize) {
+        let Some(link) = self.inner.links.get(group) else {
+            return;
+        };
+        link.severed.store(true, Ordering::SeqCst);
+        // Real teardown: drop the outbox (sends become silence) and
+        // shut the stream down so the node sees EOF mid-flight.
+        link.outbox.lock().take();
+        if let Some(s) = link.stream.lock().take() {
+            s.shutdown();
+        }
+        crate::log_debug!("transport", "severed group {group}'s connection");
+    }
+
+    fn link_heal(&self, group: usize) {
+        if let Some(link) = self.inner.links.get(group) {
+            link.severed.store(false, Ordering::SeqCst);
+            crate::log_debug!(
+                "transport",
+                "healed group {group}: re-handshakes accepted again"
+            );
+        }
+    }
+
+    fn uplink_degrade(&self, group: usize, delay_ms: f64, drop_per_mille: u64) {
+        crate::log_warn!(
+            "transport",
+            "uplink_degrade({group}, {delay_ms}, {drop_per_mille}) ignored: \
+             degradation is injected node-side in socket mode"
+        );
+    }
+}
+
+/// Queue one `Load` frame per worker of `group` for `model` into `tx`,
+/// addressed by flat cluster-wide index.
+fn ship_model_loads(
+    inner: &HubInner,
+    group: usize,
+    model: u32,
+    shards: &[Matrix],
+    tx: &mpsc::Sender<WireMsg>,
+) {
+    let off = inner.group_offsets.get(group).copied().unwrap_or(0);
+    let n = inner.group_sizes.get(group).copied().unwrap_or(0);
+    for j in 0..n {
+        let Some(shard) = shards.get(off + j) else {
+            continue;
+        };
+        let _ = tx.send(WireMsg::Load {
+            model,
+            worker: (off + j) as u32,
+            shard: shard.clone(),
+        });
+    }
+}
+
+/// Accept loop: handshake every incoming connection, then hand it to a
+/// reader/writer thread pair.
+fn accept_loop(inner: &Arc<HubInner>) {
+    loop {
+        let stream = match inner.listener.accept() {
+            Ok(s) => s,
+            Err(e) => {
+                if inner.closed.load(Ordering::SeqCst) {
+                    break;
+                }
+                crate::log_warn!("transport", "accept failed: {e}");
+                continue;
+            }
+        };
+        if inner.closed.load(Ordering::SeqCst) {
+            break;
+        }
+        match handshake(inner, stream) {
+            Ok(Some((group, stream))) => {
+                if let Err(e) = attach(inner, group, stream) {
+                    crate::log_warn!(
+                        "transport",
+                        "group {group}: attach failed: {e}"
+                    );
+                }
+            }
+            Ok(None) => {} // rejected; already counted
+            Err(e) => {
+                Metrics::inc(&inner.metrics.transport_handshake_failures);
+                crate::log_debug!("transport", "handshake failed: {e}");
+            }
+        }
+    }
+}
+
+/// Run the server side of the handshake on a fresh connection.
+/// `Ok(Some(..))` admits the connection, `Ok(None)` means a `Reject`
+/// was delivered, `Err` a protocol/IO failure.
+fn handshake(
+    inner: &Arc<HubInner>,
+    mut stream: Stream,
+) -> std::io::Result<Option<(usize, Stream)>> {
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let (msg, _) = match WireMsg::read_from(&mut stream) {
+        Ok(v) => v,
+        Err(e) => {
+            return Err(std::io::Error::other(format!("bad hello frame: {e}")));
+        }
+    };
+    let WireMsg::Hello {
+        protocol,
+        group,
+        cluster_id,
+    } = msg
+    else {
+        return Err(std::io::Error::other(format!(
+            "expected Hello, got kind {}",
+            msg.kind()
+        )));
+    };
+    let reject = |stream: &mut Stream, reason: String, retryable: bool| {
+        Metrics::inc(&inner.metrics.transport_handshake_failures);
+        crate::log_debug!("transport", "rejecting group {group}: {reason}");
+        let _ = stream.write_all(&WireMsg::Reject { reason, retryable }.encode());
+        Ok(None)
+    };
+    if protocol != wire::VERSION {
+        return reject(
+            &mut stream,
+            format!(
+                "protocol version {protocol} unsupported (hub speaks {})",
+                wire::VERSION
+            ),
+            false,
+        );
+    }
+    let g = group as usize;
+    if g >= inner.links.len() {
+        return reject(
+            &mut stream,
+            format!("group {g} out of range (hub has {})", inner.links.len()),
+            false,
+        );
+    }
+    if cluster_id != inner.cluster_id {
+        return reject(
+            &mut stream,
+            format!(
+                "cluster id mismatch: node {cluster_id}, hub {}",
+                inner.cluster_id
+            ),
+            false,
+        );
+    }
+    if inner.links[g].severed.load(Ordering::SeqCst) {
+        return reject(&mut stream, format!("group {g} is severed"), true);
+    }
+    // Duplicate check and admission are one check-and-set under the
+    // conn lock, so two racing dials for the same group cannot both
+    // pass.
+    {
+        let mut conn = inner.conn.lock();
+        if conn[g] {
+            drop(conn);
+            return reject(
+                &mut stream,
+                format!("group {g} is already connected"),
+                true,
+            );
+        }
+        conn[g] = true;
+        inner.conn_cv.notify_all();
+    }
+    stream.write_all(&WireMsg::Welcome.encode())?;
+    stream.set_read_timeout(None)?;
+    Ok(Some((g, stream)))
+}
+
+/// Wire an admitted connection into its group link: publish a fresh
+/// outbox pre-loaded with every retained model's shards, then spawn the
+/// writer and reader threads.
+fn attach(inner: &Arc<HubInner>, group: usize, stream: Stream) -> Result<()> {
+    let link = &inner.links[group];
+    let write_half = stream.try_clone()?;
+    let (tx, rx) = mpsc::channel::<WireMsg>();
+    {
+        // Snapshot the model table and publish the outbox under one
+        // `models` hold: re-shipping and publication are atomic against
+        // a concurrent `retain_and_ship`.
+        let models = inner.models.lock();
+        for (id, shards) in models.iter() {
+            ship_model_loads(inner, group, *id, shards, &tx);
+        }
+        *link.outbox.lock() = Some(tx);
+        *link.stream.lock() = Some(stream.try_clone()?);
+    }
+    if link.ever_connected.swap(true, Ordering::SeqCst) {
+        link.reconnects.fetch_add(1, Ordering::Relaxed);
+        Metrics::inc(&inner.metrics.transport_reconnects);
+        crate::log_info!("transport", "group {group} reconnected");
+    } else {
+        crate::log_info!("transport", "group {group} connected");
+    }
+    let w_inner = Arc::clone(inner);
+    let writer = thread::Builder::new()
+        .name(format!("hiercode-hub-w{group}"))
+        .spawn(move || writer_loop(&w_inner, group, write_half, rx))?;
+    inner.writers.lock().push(writer);
+    let r_inner = Arc::clone(inner);
+    let reader = thread::Builder::new()
+        .name(format!("hiercode-hub-r{group}"))
+        .spawn(move || reader_loop(&r_inner, group, stream))?;
+    inner.readers.lock().push(reader);
+    Ok(())
+}
+
+/// Drain the group's outbox into the socket, counting bytes and
+/// frames. Exits when the outbox sender is dropped (disconnect or hub
+/// close) or the socket dies.
+fn writer_loop(
+    inner: &Arc<HubInner>,
+    group: usize,
+    mut stream: Stream,
+    rx: mpsc::Receiver<WireMsg>,
+) {
+    while let Ok(frame) = rx.recv() {
+        let bytes = frame.encode();
+        if stream.write_all(&bytes).is_err() {
+            // The reader side owns disconnect bookkeeping; just stop
+            // consuming — the dropped receiver turns future sends into
+            // silence.
+            break;
+        }
+        let n = bytes.len() as u64;
+        Metrics::add(&inner.metrics.transport_bytes_sent, n);
+        Metrics::inc(&inner.metrics.transport_frames_sent);
+        if let Some(link) = inner.links.get(group) {
+            link.bytes_tx.fetch_add(n, Ordering::Relaxed);
+            link.frames_tx.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Decode upstream frames into [`MasterMsg`]s until the connection
+/// dies, then run disconnect bookkeeping so the group reads as silent.
+fn reader_loop(inner: &Arc<HubInner>, group: usize, mut stream: Stream) {
+    loop {
+        let (msg, size) = match WireMsg::read_from(&mut stream) {
+            Ok(v) => v,
+            Err(e) => {
+                if !inner.closed.load(Ordering::SeqCst) {
+                    crate::log_debug!(
+                        "transport",
+                        "group {group} connection lost: {e}"
+                    );
+                }
+                break;
+            }
+        };
+        let n = size as u64;
+        Metrics::add(&inner.metrics.transport_bytes_received, n);
+        Metrics::inc(&inner.metrics.transport_frames_received);
+        if let Some(link) = inner.links.get(group) {
+            link.bytes_rx.fetch_add(n, Ordering::Relaxed);
+            link.frames_rx.fetch_add(1, Ordering::Relaxed);
+        }
+        match msg {
+            WireMsg::Partial {
+                id,
+                shard,
+                decoded,
+                decode_flops,
+                data,
+            } => {
+                // The node's submaster decoded in its own process with
+                // its own metrics sink; mirror its decode accounting
+                // here so socket-mode counters match the in-memory
+                // oracle (the latency sample is a placeholder — decode
+                // seconds don't cross the wire).
+                if decoded {
+                    Metrics::inc(&inner.metrics.group_decodes);
+                    Metrics::add(&inner.metrics.decode_flops, decode_flops);
+                    inner.metrics.record_group_decode(group, 0.0);
+                }
+                let _ = inner.master_tx.send(MasterMsg::Partial(PartialResult {
+                    id: JobId(id),
+                    shard: usize::try_from(shard).unwrap_or(usize::MAX),
+                    data,
+                    decoded,
+                    decode_flops,
+                    // Re-stamped at receipt: Instants never cross the
+                    // wire (allowlisted — wall-clock at the process
+                    // boundary, the decoded bytes are Instant-free).
+                    finished_at: std::time::Instant::now(),
+                }));
+            }
+            WireMsg::Heartbeat { group: g, worker } => {
+                let _ = inner.master_tx.send(MasterMsg::Heartbeat {
+                    group: g as usize,
+                    worker: (worker != NO_WORKER).then_some(worker as usize),
+                });
+            }
+            other => {
+                crate::log_debug!(
+                    "transport",
+                    "group {group} sent unexpected kind {} upstream; ignored",
+                    other.kind()
+                );
+            }
+        }
+    }
+    // Disconnect bookkeeping: silence the outbox, clear the stream,
+    // free the seat so the node may re-handshake.
+    if let Some(link) = inner.links.get(group) {
+        link.outbox.lock().take();
+        link.stream.lock().take();
+    }
+    {
+        let mut conn = inner.conn.lock();
+        if let Some(c) = conn.get_mut(group) {
+            *c = false;
+        }
+        inner.conn_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::JobBroadcast;
+    use crate::coordinator::messages::ModelId;
+    use std::io::Read as _;
+
+    fn test_addr(tag: &str) -> TransportAddr {
+        use std::sync::atomic::AtomicU64 as StdAtomicU64;
+        static NEXT: StdAtomicU64 = StdAtomicU64::new(0);
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        TransportAddr::Uds(std::env::temp_dir().join(format!(
+            "hiercode-hubtest-{tag}-{}-{n}.sock",
+            std::process::id()
+        )))
+    }
+
+    fn launch_hub(addr: &TransportAddr, n2: usize) -> (Arc<SocketHub>, mpsc::Receiver<MasterMsg>) {
+        let (master_tx, master_rx) = mpsc::channel();
+        let hub = SocketHub::launch(
+            addr,
+            (0..n2).map(|g| 2 * g).collect(),
+            vec![2; n2],
+            42,
+            Arc::new(Metrics::with_groups(n2)),
+            master_tx,
+        )
+        .expect("launch hub");
+        (hub, master_rx)
+    }
+
+    fn hello(group: u32) -> WireMsg {
+        WireMsg::Hello {
+            protocol: wire::VERSION,
+            group,
+            cluster_id: 42,
+        }
+    }
+
+    fn dial(addr: &TransportAddr, msg: &WireMsg) -> (Stream, WireMsg) {
+        let mut s = Stream::connect(addr).expect("connect");
+        s.write_all(&msg.encode()).expect("send hello");
+        let (reply, _) = WireMsg::read_from(&mut s).expect("handshake reply");
+        (s, reply)
+    }
+
+    #[test]
+    fn handshake_welcomes_and_rejects() {
+        let addr = test_addr("hs");
+        let (hub, _rx) = launch_hub(&addr, 2);
+        // Good hello → Welcome.
+        let (_s0, reply) = dial(&addr, &hello(0));
+        assert!(matches!(reply, WireMsg::Welcome));
+        // Admission happens before Welcome is written, so by the time
+        // we read the reply the seat is taken.
+        assert_eq!(hub.connected_groups(), 1);
+        // Duplicate group → retryable Reject.
+        let (_s1, reply) = dial(&addr, &hello(0));
+        let WireMsg::Reject { retryable, .. } = reply else {
+            panic!("expected duplicate reject, got {reply:?}");
+        };
+        assert!(retryable, "duplicates retry after the holder dies");
+        // Out-of-range group → fatal Reject.
+        let (_s2, reply) = dial(&addr, &hello(9));
+        assert!(matches!(reply, WireMsg::Reject { retryable: false, .. }));
+        // Wrong protocol version → fatal Reject.
+        let (_s3, reply) = dial(
+            &addr,
+            &WireMsg::Hello {
+                protocol: wire::VERSION + 1,
+                group: 1,
+                cluster_id: 42,
+            },
+        );
+        assert!(matches!(reply, WireMsg::Reject { retryable: false, .. }));
+        // Wrong cluster id → fatal Reject.
+        let (_s4, reply) = dial(
+            &addr,
+            &WireMsg::Hello {
+                protocol: wire::VERSION,
+                group: 1,
+                cluster_id: 7,
+            },
+        );
+        assert!(matches!(reply, WireMsg::Reject { retryable: false, .. }));
+        hub.close();
+    }
+
+    #[test]
+    fn jobs_flow_downstream_and_partials_upstream() {
+        let addr = test_addr("flow");
+        let (hub, master_rx) = launch_hub(&addr, 1);
+        let (mut s, reply) = dial(&addr, &hello(0));
+        assert!(matches!(reply, WireMsg::Welcome));
+        assert!(hub.wait_connected(2000), "group 0 connects");
+        // Master → node: a job broadcast crosses as a Job frame.
+        hub.send(
+            0,
+            SubmasterMsg::Job(JobBroadcast {
+                id: JobId(7),
+                model: ModelId(1),
+                out_rows: 4,
+                x: Arc::new(Matrix::identity(2)),
+            }),
+        );
+        let (frame, _) = WireMsg::read_from(&mut s).expect("job frame");
+        let WireMsg::Job { id, model, out_rows, .. } = frame else {
+            panic!("expected Job, got {frame:?}");
+        };
+        assert_eq!((id, model, out_rows), (7, 1, 4));
+        // Node → master: a decoded partial mirrors the submaster's
+        // decode accounting onto the hub's metrics.
+        s.write_all(
+            &WireMsg::Partial {
+                id: 7,
+                shard: 0,
+                decoded: true,
+                decode_flops: 99,
+                data: Matrix::identity(2),
+            }
+            .encode(),
+        )
+        .expect("send partial");
+        let msg = master_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("partial arrives");
+        let MasterMsg::Partial(pr) = msg else {
+            panic!("expected Partial, got {msg:?}");
+        };
+        assert_eq!(pr.id, JobId(7));
+        assert_eq!(pr.decode_flops, 99);
+        // Heartbeats translate, NO_WORKER → submaster beacon.
+        s.write_all(
+            &WireMsg::Heartbeat {
+                group: 0,
+                worker: NO_WORKER,
+            }
+            .encode(),
+        )
+        .expect("send beacon");
+        let msg = master_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("beacon arrives");
+        assert!(matches!(
+            msg,
+            MasterMsg::Heartbeat {
+                group: 0,
+                worker: None
+            }
+        ));
+        let snap = hub.inner.metrics.snapshot();
+        assert_eq!(snap.group_decodes, 1);
+        assert_eq!(snap.decode_flops, 99);
+        assert!(snap.transport_frames_sent >= 1);
+        assert!(snap.transport_frames_received >= 2);
+        assert!(snap.transport_bytes_sent > 0);
+        assert!(snap.transport_bytes_received > 0);
+        let stats = hub.group_stats();
+        assert_eq!(stats.len(), 1);
+        assert!(stats[0].frames_sent >= 1 && stats[0].frames_received >= 2);
+        hub.close();
+    }
+
+    #[test]
+    fn retained_models_ship_on_connect_and_reconnect_counts() {
+        let addr = test_addr("reship");
+        let (hub, _rx) = launch_hub(&addr, 1);
+        // Retain a model before any node connects: 2 workers in group 0
+        // at flat offsets 0 and 1.
+        hub.retain_and_ship(3, vec![Matrix::identity(2), Matrix::zeros(2, 2)]);
+        let (mut s, reply) = dial(&addr, &hello(0));
+        assert!(matches!(reply, WireMsg::Welcome));
+        for expect_worker in [0u32, 1] {
+            let (frame, _) = WireMsg::read_from(&mut s).expect("load frame");
+            let WireMsg::Load { model, worker, .. } = frame else {
+                panic!("expected Load, got {frame:?}");
+            };
+            assert_eq!((model, worker), (3, expect_worker));
+        }
+        // Tear the connection down node-side; the hub frees the seat.
+        s.shutdown();
+        drop(s);
+        // Reconnect: the retained model re-ships and reconnects counts.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut s2 = loop {
+            let (s2, reply) = dial(&addr, &hello(0));
+            match reply {
+                WireMsg::Welcome => break s2,
+                WireMsg::Reject { retryable: true, .. } => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "seat never freed after disconnect"
+                    );
+                    thread::sleep(Duration::from_millis(10));
+                }
+                other => panic!("unexpected reply {other:?}"),
+            }
+        };
+        let (frame, _) = WireMsg::read_from(&mut s2).expect("re-shipped load");
+        assert!(matches!(frame, WireMsg::Load { model: 3, worker: 0, .. }));
+        assert_eq!(hub.group_stats()[0].reconnects, 1);
+        assert_eq!(
+            hub.inner
+                .metrics
+                .transport_reconnects
+                .load(Ordering::Relaxed),
+            1
+        );
+        hub.close();
+    }
+
+    #[test]
+    fn sever_tears_down_and_refuses_until_heal() {
+        let addr = test_addr("sever");
+        let (hub, _rx) = launch_hub(&addr, 1);
+        let (mut s, reply) = dial(&addr, &hello(0));
+        assert!(matches!(reply, WireMsg::Welcome));
+        assert!(hub.wait_connected(2000));
+        hub.link_sever(0);
+        // The node-side read sees EOF — the sever is a real teardown.
+        let mut buf = [0u8; 1];
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => assert!(std::time::Instant::now() < deadline, "no EOF"),
+            }
+        }
+        // Re-handshakes bounce retryably while severed...
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let (_s, reply) = dial(&addr, &hello(0));
+            match reply {
+                WireMsg::Reject { retryable, ref reason } => {
+                    if reason.contains("severed") {
+                        assert!(retryable);
+                        break;
+                    }
+                    // Seat not freed yet: the reader is still tearing
+                    // down. Retry.
+                    assert!(std::time::Instant::now() < deadline);
+                    thread::sleep(Duration::from_millis(10));
+                }
+                WireMsg::Welcome => panic!("severed group must not connect"),
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        // ...and succeed after the heal.
+        hub.link_heal(0);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let (_s, reply) = dial(&addr, &hello(0));
+            match reply {
+                WireMsg::Welcome => break,
+                WireMsg::Reject { retryable: true, .. } => {
+                    assert!(std::time::Instant::now() < deadline, "heal ignored");
+                    thread::sleep(Duration::from_millis(10));
+                }
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        hub.close();
+    }
+
+    #[test]
+    fn close_is_idempotent_and_removes_socket_file() {
+        let addr = test_addr("close");
+        let (hub, _rx) = launch_hub(&addr, 1);
+        hub.close();
+        hub.close();
+        if let TransportAddr::Uds(path) = &addr {
+            assert!(!path.exists(), "socket file cleaned up");
+        }
+    }
+}

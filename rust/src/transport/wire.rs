@@ -1,0 +1,745 @@
+//! The hand-rolled wire format: versioned, length-prefixed, checksummed
+//! binary frames carrying the coordinator protocol across a socket.
+//!
+//! # Frame layout
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic      "hcw1" (little-endian u32)
+//!      4     2  version    protocol version (little-endian u16)
+//!      6     1  kind       message discriminant (see [`WireMsg`])
+//!      7     1  reserved   must be zero
+//!      8     4  len        payload length in bytes (little-endian u32)
+//!     12     4  crc        CRC-32 (IEEE) of the payload
+//!     16   len  payload    kind-specific fields
+//! ```
+//!
+//! All integers are little-endian fixed-width; floats travel as their
+//! IEEE-754 bit patterns (`f64::to_bits`), so a decoded matrix is
+//! **bit-identical** to the encoded one — the loopback bit-identity
+//! guarantee starts here. Strings are a `u32` length plus UTF-8 bytes.
+//! Matrices are `rows: u64`, `cols: u64`, then `rows·cols` f64 bit
+//! patterns in row-major order.
+//!
+//! Every malformed input surfaces a typed [`WireError`] — truncation,
+//! bad magic, version skew, checksum mismatch, oversize, garbage — and
+//! never a panic: the decode path is in the `no_panic` lint scope, and
+//! the property tests below drive random corruption through it.
+
+use crate::linalg::Matrix;
+use crate::Error;
+
+/// Frame magic: `"hcw1"` as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"hcw1");
+/// Current protocol version. Bumped on any frame- or payload-layout
+/// change; the handshake rejects mismatched peers explicitly.
+pub const VERSION: u16 = 1;
+/// Frame header size in bytes.
+pub const HEADER_LEN: usize = 16;
+/// Maximum accepted payload (64 MiB): a length field beyond this is a
+/// corrupt or hostile frame, not a real message.
+pub const MAX_PAYLOAD: usize = 64 << 20;
+
+/// Sentinel for "no worker" in [`WireMsg::Heartbeat`] (the submaster's
+/// own beacon).
+pub const NO_WORKER: u32 = u32::MAX;
+
+/// CRC-32 (IEEE 802.3, polynomial `0xEDB88320`) lookup table, built at
+/// compile time so the codec stays allocation- and dependency-free.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Typed decode failure. Every variant is a distinct, observable way a
+/// frame can be wrong — the rejection tests exercise each one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Fewer bytes than the header or the declared payload length.
+    Truncated,
+    /// The first four bytes are not the frame magic.
+    BadMagic,
+    /// The peer speaks a different protocol version.
+    BadVersion {
+        /// Version in the received frame.
+        got: u16,
+        /// Version this build speaks.
+        want: u16,
+    },
+    /// Unknown message discriminant.
+    BadKind(u8),
+    /// Payload checksum mismatch (bit rot or truncated write).
+    BadChecksum,
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversize(usize),
+    /// Structurally invalid payload (bad UTF-8, impossible matrix
+    /// dimensions, trailing bytes, nonzero reserved byte).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Truncated => write!(f, "truncated frame"),
+            Self::BadMagic => write!(f, "bad frame magic"),
+            Self::BadVersion { got, want } => {
+                write!(f, "protocol version {got} (this build speaks {want})")
+            }
+            Self::BadKind(k) => write!(f, "unknown message kind {k}"),
+            Self::BadChecksum => write!(f, "payload checksum mismatch"),
+            Self::Oversize(n) => {
+                write!(f, "payload length {n} exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            Self::Malformed(why) => write!(f, "malformed payload: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<WireError> for Error {
+    fn from(e: WireError) -> Self {
+        Error::Coordinator(format!("wire protocol: {e}"))
+    }
+}
+
+/// A frame-read failure on a blocking stream: either the transport
+/// itself failed (EOF, reset, timeout — the connection is gone) or the
+/// peer sent a protocol violation (the connection is garbage).
+#[derive(Debug)]
+pub enum FrameError {
+    /// Transport-level failure.
+    Io(std::io::Error),
+    /// Protocol-level failure.
+    Wire(WireError),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "transport: {e}"),
+            Self::Wire(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+/// Everything that crosses a master ↔ node link, one frame per message.
+///
+/// This mirrors `coordinator::messages::*` minus the fields that must
+/// not cross a process boundary: `PartialResult::finished_at` is an
+/// `Instant` (meaningless in another process) and is re-stamped at
+/// receipt. Identifier newtypes travel as their raw integers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMsg {
+    /// Node → master bootstrap: who am I, what do I speak, which
+    /// cluster do I think I'm joining (`cluster_id` is the config
+    /// seed — a cheap guard against cross-wiring two clusters).
+    Hello {
+        /// Protocol version the node speaks.
+        protocol: u16,
+        /// Group index the node serves.
+        group: u32,
+        /// Cluster identity (the config seed).
+        cluster_id: u64,
+    },
+    /// Master → node: handshake accepted, Loads follow.
+    Welcome,
+    /// Master → node: handshake refused. `retryable` distinguishes a
+    /// transient refusal (severed link mid-heal, duplicate in
+    /// teardown) from a fatal one (wrong cluster, bad group).
+    Reject {
+        /// Human-readable refusal reason.
+        reason: String,
+        /// Whether the node should back off and re-dial.
+        retryable: bool,
+    },
+    /// Master → node: install one worker's coded shard of a model
+    /// (`worker` is the flat cluster-wide index).
+    Load {
+        /// Model being installed.
+        model: u32,
+        /// Flat worker index owning this shard.
+        worker: u32,
+        /// The shard (already f32-narrowed by the master, so a node-
+        /// side re-narrow is the identity — bit-identical products).
+        shard: Matrix,
+    },
+    /// Master → node: a batched job broadcast.
+    Job {
+        /// Job id.
+        id: u64,
+        /// Target model.
+        model: u32,
+        /// Output rows `m` (sizes the decode sessions).
+        out_rows: u64,
+        /// The batched request matrix, `d × b`.
+        x: Matrix,
+    },
+    /// Master → node: stop feeding this job.
+    Finish {
+        /// Job id.
+        id: u64,
+    },
+    /// Master → node: drain and exit.
+    Shutdown,
+    /// Node → master: one partial result for the master's decode
+    /// session (the submaster's decoded group product or a relayed
+    /// worker product).
+    Partial {
+        /// Job id.
+        id: u64,
+        /// Shard index in the master session's index space.
+        shard: u64,
+        /// Whether this is a group-decoded result (vs a relayed raw
+        /// worker product). Carried explicitly: a trivial systematic
+        /// decode can cost 0 flops, so the hub cannot infer it.
+        decoded: bool,
+        /// Flops the submaster spent decoding (0 for relays).
+        decode_flops: u64,
+        /// The partial product.
+        data: Matrix,
+    },
+    /// Node → master: a liveness beacon ([`NO_WORKER`] = the
+    /// submaster's own).
+    Heartbeat {
+        /// Reporting group.
+        group: u32,
+        /// In-group worker index, or [`NO_WORKER`].
+        worker: u32,
+    },
+}
+
+impl WireMsg {
+    /// The frame discriminant.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Self::Hello { .. } => 0,
+            Self::Welcome => 1,
+            Self::Reject { .. } => 2,
+            Self::Load { .. } => 3,
+            Self::Job { .. } => 4,
+            Self::Finish { .. } => 5,
+            Self::Shutdown => 6,
+            Self::Partial { .. } => 7,
+            Self::Heartbeat { .. } => 8,
+        }
+    }
+
+    /// Encode into a complete frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Self::Hello {
+                protocol,
+                group,
+                cluster_id,
+            } => {
+                put_u16(&mut p, *protocol);
+                put_u32(&mut p, *group);
+                put_u64(&mut p, *cluster_id);
+            }
+            Self::Welcome | Self::Shutdown => {}
+            Self::Reject { reason, retryable } => {
+                put_str(&mut p, reason);
+                p.push(u8::from(*retryable));
+            }
+            Self::Load {
+                model,
+                worker,
+                shard,
+            } => {
+                put_u32(&mut p, *model);
+                put_u32(&mut p, *worker);
+                put_matrix(&mut p, shard);
+            }
+            Self::Job {
+                id,
+                model,
+                out_rows,
+                x,
+            } => {
+                put_u64(&mut p, *id);
+                put_u32(&mut p, *model);
+                put_u64(&mut p, *out_rows);
+                put_matrix(&mut p, x);
+            }
+            Self::Finish { id } => put_u64(&mut p, *id),
+            Self::Partial {
+                id,
+                shard,
+                decoded,
+                decode_flops,
+                data,
+            } => {
+                put_u64(&mut p, *id);
+                put_u64(&mut p, *shard);
+                p.push(u8::from(*decoded));
+                put_u64(&mut p, *decode_flops);
+                put_matrix(&mut p, data);
+            }
+            Self::Heartbeat { group, worker } => {
+                put_u32(&mut p, *group);
+                put_u32(&mut p, *worker);
+            }
+        }
+        let mut out = Vec::with_capacity(HEADER_LEN + p.len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.kind());
+        out.push(0);
+        out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&p).to_le_bytes());
+        out.extend_from_slice(&p);
+        out
+    }
+
+    /// Decode one frame from the front of `buf`. Returns the message
+    /// and the number of bytes consumed.
+    pub fn decode(buf: &[u8]) -> Result<(Self, usize), WireError> {
+        let header: &[u8; HEADER_LEN] = buf
+            .get(..HEADER_LEN)
+            .and_then(|h| h.try_into().ok())
+            .ok_or(WireError::Truncated)?;
+        let (kind, len) = parse_header(header)?;
+        let payload = buf
+            .get(HEADER_LEN..HEADER_LEN + len)
+            .ok_or(WireError::Truncated)?;
+        let crc = u32::from_le_bytes([header[12], header[13], header[14], header[15]]);
+        if crc32(payload) != crc {
+            return Err(WireError::BadChecksum);
+        }
+        Ok((decode_payload(kind, payload)?, HEADER_LEN + len))
+    }
+
+    /// Read one frame from a blocking stream. Returns the message and
+    /// its total frame size (header + payload bytes read).
+    pub fn read_from<R: std::io::Read>(r: &mut R) -> Result<(Self, usize), FrameError> {
+        let mut header = [0u8; HEADER_LEN];
+        r.read_exact(&mut header).map_err(FrameError::Io)?;
+        let (kind, len) = parse_header(&header).map_err(FrameError::Wire)?;
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload).map_err(FrameError::Io)?;
+        let crc = u32::from_le_bytes([header[12], header[13], header[14], header[15]]);
+        if crc32(&payload) != crc {
+            return Err(FrameError::Wire(WireError::BadChecksum));
+        }
+        let msg = decode_payload(kind, &payload).map_err(FrameError::Wire)?;
+        Ok((msg, HEADER_LEN + len))
+    }
+}
+
+/// Validate a header; returns `(kind, payload_len)`.
+fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize), WireError> {
+    let magic = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
+    if magic != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    if version != VERSION {
+        return Err(WireError::BadVersion {
+            got: version,
+            want: VERSION,
+        });
+    }
+    let kind = h[6];
+    if kind > 8 {
+        return Err(WireError::BadKind(kind));
+    }
+    if h[7] != 0 {
+        return Err(WireError::Malformed("nonzero reserved byte"));
+    }
+    let len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversize(len));
+    }
+    Ok((kind, len))
+}
+
+/// Decode a validated (magic/version/checksum-checked) payload.
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, WireError> {
+    let mut r = Reader {
+        buf: payload,
+        pos: 0,
+    };
+    let msg = match kind {
+        0 => WireMsg::Hello {
+            protocol: r.u16()?,
+            group: r.u32()?,
+            cluster_id: r.u64()?,
+        },
+        1 => WireMsg::Welcome,
+        2 => WireMsg::Reject {
+            reason: r.string()?,
+            retryable: r.u8()? != 0,
+        },
+        3 => WireMsg::Load {
+            model: r.u32()?,
+            worker: r.u32()?,
+            shard: r.matrix()?,
+        },
+        4 => WireMsg::Job {
+            id: r.u64()?,
+            model: r.u32()?,
+            out_rows: r.u64()?,
+            x: r.matrix()?,
+        },
+        5 => WireMsg::Finish { id: r.u64()? },
+        6 => WireMsg::Shutdown,
+        7 => WireMsg::Partial {
+            id: r.u64()?,
+            shard: r.u64()?,
+            decoded: r.u8()? != 0,
+            decode_flops: r.u64()?,
+            data: r.matrix()?,
+        },
+        8 => WireMsg::Heartbeat {
+            group: r.u32()?,
+            worker: r.u32()?,
+        },
+        k => return Err(WireError::BadKind(k)),
+    };
+    if r.pos != payload.len() {
+        return Err(WireError::Malformed("trailing bytes after payload"));
+    }
+    Ok(msg)
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
+    put_u64(out, m.rows() as u64);
+    put_u64(out, m.cols() as u64);
+    for &v in m.data() {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian payload reader.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated)?;
+        let s = self.buf.get(self.pos..end).ok_or(WireError::Truncated)?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        std::str::from_utf8(bytes)
+            .map(str::to_string)
+            .map_err(|_| WireError::Malformed("string is not UTF-8"))
+    }
+
+    fn matrix(&mut self) -> Result<Matrix, WireError> {
+        let rows = usize::try_from(self.u64()?)
+            .map_err(|_| WireError::Malformed("matrix rows overflow"))?;
+        let cols = usize::try_from(self.u64()?)
+            .map_err(|_| WireError::Malformed("matrix cols overflow"))?;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or(WireError::Malformed("matrix size overflow"))?;
+        // The element count must fit the remaining payload exactly-or-
+        // less *before* allocating, so a corrupt dimension cannot ask
+        // for gigabytes.
+        if self.buf.len().saturating_sub(self.pos) < n.saturating_mul(8) {
+            return Err(WireError::Truncated);
+        }
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(f64::from_bits(self.u64()?));
+        }
+        Matrix::from_vec(rows, cols, data)
+            .map_err(|_| WireError::Malformed("inconsistent matrix dimensions"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn roundtrip(msg: &WireMsg) {
+        let frame = msg.encode();
+        let (back, used) = WireMsg::decode(&frame).expect("decode own encoding");
+        assert_eq!(used, frame.len(), "whole frame consumed");
+        assert_eq!(&back, msg);
+        // The stream reader agrees with the buffer decoder.
+        let mut cursor = frame.as_slice();
+        let (streamed, n) = WireMsg::read_from(&mut cursor).expect("read_from");
+        assert_eq!(n, frame.len());
+        assert_eq!(&streamed, msg);
+    }
+
+    fn gen_matrix(g: &mut check::Gen) -> Matrix {
+        let rows = g.usize_in(1..6);
+        let cols = g.usize_in(1..6);
+        let data = g.vec_f64(rows * cols, -1e6, 1e6);
+        Matrix::from_vec(rows, cols, data).unwrap()
+    }
+
+    /// One random instance of every variant, driven by the shared
+    /// seeded generator (`HIERCODE_CHECK_SEED` reproduces failures).
+    fn gen_msg(g: &mut check::Gen, kind: u8) -> WireMsg {
+        let mut r = |hi: u64| g.rng().next_u64() % hi;
+        match kind {
+            0 => WireMsg::Hello {
+                protocol: r(u64::from(u16::MAX)) as u16,
+                group: r(1 << 20) as u32,
+                cluster_id: g.rng().next_u64(),
+            },
+            1 => WireMsg::Welcome,
+            2 => WireMsg::Reject {
+                reason: format!("refused-{}-π", r(1000)),
+                retryable: g.bool_with(0.5),
+            },
+            3 => WireMsg::Load {
+                model: r(1 << 16) as u32,
+                worker: r(1 << 10) as u32,
+                shard: gen_matrix(g),
+            },
+            4 => WireMsg::Job {
+                id: g.rng().next_u64(),
+                model: r(1 << 16) as u32,
+                out_rows: r(1 << 30),
+                x: gen_matrix(g),
+            },
+            5 => WireMsg::Finish {
+                id: g.rng().next_u64(),
+            },
+            6 => WireMsg::Shutdown,
+            7 => WireMsg::Partial {
+                id: g.rng().next_u64(),
+                shard: r(1 << 10),
+                decoded: g.bool_with(0.5),
+                decode_flops: g.rng().next_u64(),
+                data: gen_matrix(g),
+            },
+            8 => WireMsg::Heartbeat {
+                group: r(1 << 10) as u32,
+                worker: if g.bool_with(0.3) {
+                    NO_WORKER
+                } else {
+                    r(1 << 10) as u32
+                },
+            },
+            _ => unreachable!("kinds are 0..=8"),
+        }
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        check::check("wire_roundtrip_all_variants", 96, |g| {
+            for kind in 0..=8u8 {
+                roundtrip(&gen_msg(g, kind));
+            }
+        });
+    }
+
+    #[test]
+    fn floats_roundtrip_bit_exactly_including_specials() {
+        for v in [0.0, -0.0, f64::NAN, f64::INFINITY, f64::MIN_POSITIVE, 1e-308] {
+            let m = Matrix::from_vec(1, 1, vec![v]).unwrap();
+            let msg = WireMsg::Partial {
+                id: 1,
+                shard: 0,
+                decoded: true,
+                decode_flops: 0,
+                data: m,
+            };
+            let (back, _) = WireMsg::decode(&msg.encode()).unwrap();
+            let WireMsg::Partial { data, .. } = back else {
+                panic!("kind changed in flight");
+            };
+            assert_eq!(data.data()[0].to_bits(), v.to_bits(), "bits of {v}");
+        }
+    }
+
+    #[test]
+    fn truncated_frames_reject_at_every_length() {
+        check::check("wire_truncation_rejects", 48, |g| {
+            let msg = gen_msg(g, g.usize_in(0..9) as u8);
+            let frame = msg.encode();
+            let cut = g.usize_in(0..frame.len());
+            let err = WireMsg::decode(&frame[..cut]).unwrap_err();
+            assert_eq!(err, WireError::Truncated, "prefix of {cut} bytes");
+        });
+    }
+
+    #[test]
+    fn corrupted_byte_rejects_never_panics() {
+        check::check("wire_corruption_rejects", 96, |g| {
+            let msg = gen_msg(g, g.usize_in(0..9) as u8);
+            let mut frame = msg.encode();
+            let at = g.usize_in(0..frame.len());
+            let delta = 1 + (g.rng().next_u64() % 255) as u8;
+            frame[at] = frame[at].wrapping_add(delta);
+            match WireMsg::decode(&frame) {
+                // A corrupt length field can make the buffer "too
+                // short" or the payload mis-sized; everything else is
+                // caught by an explicit field check or the checksum.
+                Err(_) => {}
+                Ok((back, _)) => panic!(
+                    "byte {at} += {delta} went undetected (decoded {back:?})"
+                ),
+            }
+        });
+    }
+
+    #[test]
+    fn wrong_version_rejects_with_both_versions() {
+        let mut frame = WireMsg::Welcome.encode();
+        frame[4..6].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        assert_eq!(
+            WireMsg::decode(&frame).unwrap_err(),
+            WireError::BadVersion {
+                got: VERSION + 1,
+                want: VERSION,
+            }
+        );
+    }
+
+    #[test]
+    fn bad_magic_kind_checksum_and_reserved_reject() {
+        let good = WireMsg::Finish { id: 7 }.encode();
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(WireMsg::decode(&bad).unwrap_err(), WireError::BadMagic);
+        let mut bad = good.clone();
+        bad[6] = 9;
+        assert_eq!(WireMsg::decode(&bad).unwrap_err(), WireError::BadKind(9));
+        let mut bad = good.clone();
+        bad[7] = 1;
+        assert!(matches!(
+            WireMsg::decode(&bad).unwrap_err(),
+            WireError::Malformed(_)
+        ));
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert_eq!(WireMsg::decode(&bad).unwrap_err(), WireError::BadChecksum);
+        // Oversize length field.
+        let mut bad = good;
+        bad[8..12].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        assert_eq!(
+            WireMsg::decode(&bad).unwrap_err(),
+            WireError::Oversize(MAX_PAYLOAD + 1)
+        );
+    }
+
+    #[test]
+    fn corrupt_matrix_dims_cannot_allocate_giant_buffers() {
+        // A Load frame whose matrix claims 2^40 rows: the decoder must
+        // reject on the *declared payload size* before allocating.
+        let mut p = Vec::new();
+        put_u32(&mut p, 1);
+        put_u32(&mut p, 2);
+        put_u64(&mut p, 1 << 40);
+        put_u64(&mut p, 1 << 40);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC.to_le_bytes());
+        frame.extend_from_slice(&VERSION.to_le_bytes());
+        frame.push(3);
+        frame.push(0);
+        frame.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&p).to_le_bytes());
+        frame.extend_from_slice(&p);
+        assert_eq!(WireMsg::decode(&frame).unwrap_err(), WireError::Truncated);
+    }
+
+    #[test]
+    fn trailing_payload_bytes_reject() {
+        let mut p = Vec::new();
+        put_u64(&mut p, 3);
+        p.push(0xAB); // one byte too many for a Finish payload
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC.to_le_bytes());
+        frame.extend_from_slice(&VERSION.to_le_bytes());
+        frame.push(5);
+        frame.push(0);
+        frame.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&p).to_le_bytes());
+        frame.extend_from_slice(&p);
+        assert!(matches!(
+            WireMsg::decode(&frame).unwrap_err(),
+            WireError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn wire_error_maps_to_typed_crate_error() {
+        let e: Error = WireError::BadChecksum.into();
+        assert!(matches!(e, Error::Coordinator(_)));
+        assert!(format!("{e}").contains("checksum"));
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC-32 check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

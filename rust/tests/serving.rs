@@ -327,6 +327,7 @@ fn late_partial_after_tombstone_gc_counts_as_late_delivery() {
             id: JobId(0),
             shard: 0,
             data: Matrix::identity(1),
+            decoded: true,
             decode_flops: 0,
             finished_at: Instant::now(),
         }))
@@ -348,6 +349,7 @@ fn late_partial_after_tombstone_gc_counts_as_late_delivery() {
             id: JobId(9000),
             shard: 0,
             data: Matrix::identity(1),
+            decoded: true,
             decode_flops: 0,
             finished_at: Instant::now(),
         }))

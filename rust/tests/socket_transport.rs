@@ -1,0 +1,152 @@
+//! Loopback bit-identity: the socket transport must be a perfect
+//! stand-in for the in-memory FIFO path.
+//!
+//! The same seeded job stream is served twice — once over
+//! `MemoryTransport` (the oracle), once over a UDS `SocketHub` with one
+//! `run_node` thread per group — and the outputs must agree to the bit
+//! (`f64::to_bits`, not an epsilon), with the stream counters equal.
+//! The wire codec, the node's seed replay and the hub's partial
+//! mirroring all sit under this contract: any divergence is a
+//! transport bug, because the no-redundancy demo grid leaves the
+//! scheduler no freedom in which shards feed the decode.
+
+use hiercode::config::schema::{ClusterConfig, TransportMode};
+use hiercode::coordinator::ClusterCore;
+use hiercode::linalg::Matrix;
+use hiercode::transport::node::{run_node, NodeOptions};
+use hiercode::transport::TransportAddr;
+use hiercode::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const MODEL: &str = "loopback";
+const ROWS: usize = 16;
+const COLS: usize = 4;
+const SEED: u64 = 2027;
+const JOBS: usize = 4;
+
+static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A socket path no concurrent test (or stale run) is sitting on.
+fn fresh_uds() -> String {
+    let path = std::env::temp_dir().join(format!(
+        "hiercode-lb-{}-{}.sock",
+        std::process::id(),
+        SOCK_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    format!("uds:{}", path.display())
+}
+
+/// No-redundancy grid: every shard is needed, so the memory and socket
+/// runs must pick the same decode subset — any output difference is a
+/// transport bug, not scheduler freedom.
+fn demo_config() -> ClusterConfig {
+    let mut config = ClusterConfig::demo(2, 2, 2, 2);
+    config.seed = SEED;
+    config.serving.queue_cap = 64;
+    config
+}
+
+/// Serve `JOBS` seeded requests sequentially (submit-then-wait keeps
+/// every batch at exactly one request, so the jobs counter is
+/// deterministic across transports).
+fn run_stream(core: &ClusterCore, rng: &mut Rng) -> Vec<Vec<f64>> {
+    let client = core.handle();
+    (0..JOBS)
+        .map(|_| {
+            let x: Vec<f64> = (0..COLS).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            client
+                .submit_to(MODEL, x)
+                .expect("submit")
+                .wait_timeout(Duration::from_secs(15))
+                .expect("job result")
+        })
+        .collect()
+}
+
+#[test]
+fn socket_stream_is_bit_identical_to_memory() {
+    // Reference run: in-memory FIFO transport.
+    let config = demo_config();
+    let core = ClusterCore::launch(&config).expect("memory launch");
+    let mut rng = Rng::new(SEED);
+    let a = Matrix::from_fn(ROWS, COLS, |_, _| rng.uniform(-1.0, 1.0));
+    core.register_model(MODEL, &a).expect("register");
+    let mem_out = run_stream(&core, &mut rng);
+    let mem = core.metrics();
+    core.shutdown();
+
+    // Same seeded stream over a UDS hub, one node thread per group.
+    let mut config = demo_config();
+    config.transport.mode = TransportMode::Socket;
+    config.transport.listen = fresh_uds();
+    let addr = config.transport.listen.clone();
+    let core = ClusterCore::launch(&config).expect("socket launch");
+    let nodes: Vec<_> = (0..config.code.topology.n2())
+        .map(|g| {
+            let opts = NodeOptions {
+                config: config.clone(),
+                group: g,
+                addr: TransportAddr::parse(&addr).expect("addr"),
+                max_dial_ms: 10_000,
+                dial_backoff_ms: 5,
+                dial_backoff_max_ms: 50,
+            };
+            std::thread::spawn(move || run_node(opts))
+        })
+        .collect();
+    assert!(core.wait_connected(10_000), "node threads never joined {addr}");
+
+    let mut rng = Rng::new(SEED);
+    let a = Matrix::from_fn(ROWS, COLS, |_, _| rng.uniform(-1.0, 1.0));
+    core.register_model(MODEL, &a).expect("register");
+    let sock_out = run_stream(&core, &mut rng);
+    let sock = core.metrics();
+    core.shutdown();
+    for n in nodes {
+        n.join().expect("node thread").expect("node exits clean");
+    }
+
+    // Bitwise equality, not an epsilon.
+    assert_eq!(mem_out.len(), sock_out.len());
+    for (job, (m, s)) in mem_out.iter().zip(&sock_out).enumerate() {
+        assert_eq!(m.len(), s.len(), "job {job} length");
+        for (col, (x, y)) in m.iter().zip(s).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "job {job} col {col}: {x} != {y}");
+        }
+    }
+
+    // The stream counters agree exactly. (Worker products and decode
+    // timings are node-local in socket mode and deliberately absent.)
+    assert_eq!(mem.jobs, sock.jobs);
+    assert_eq!(mem.completed, sock.completed);
+    assert_eq!(mem.group_decodes, sock.group_decodes);
+    assert_eq!(mem.decode_flops, sock.decode_flops);
+    assert_eq!(sock.failed, 0);
+
+    // The socket run really used the wire: traffic in both directions,
+    // globally and on every group link — and a clean handshake.
+    assert!(sock.transport_bytes_sent > 0);
+    assert!(sock.transport_bytes_received > 0);
+    assert!(sock.transport_frames_sent > 0);
+    assert!(sock.transport_frames_received > 0);
+    assert_eq!(sock.transport_handshake_failures, 0);
+    assert_eq!(sock.per_group.len(), 2);
+    for g in &sock.per_group {
+        assert!(g.transport_bytes_sent > 0);
+        assert!(g.transport_bytes_received > 0);
+    }
+    // The memory oracle reports no wire traffic at all.
+    assert_eq!(mem.transport_bytes_sent, 0);
+    assert_eq!(mem.transport_frames_received, 0);
+}
+
+#[test]
+fn socket_launch_without_nodes_times_out_and_shuts_down_clean() {
+    let mut config = demo_config();
+    config.transport.mode = TransportMode::Socket;
+    config.transport.listen = fresh_uds();
+    let core = ClusterCore::launch(&config).expect("socket launch");
+    assert!(!core.wait_connected(100), "no nodes were spawned");
+    core.shutdown();
+}

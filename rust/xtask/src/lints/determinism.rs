@@ -25,6 +25,7 @@ const SCOPES: &[&str] = &[
     "src/coding/",
     "src/linalg/",
     "src/coordinator/chaos.rs",
+    "src/transport/",
 ];
 
 /// Banned identifiers and why.
@@ -63,6 +64,8 @@ pub fn lint(file: &SourceFile) -> Vec<Finding> {
                         "chaos driver"
                     } else if file.path.starts_with("src/linalg/") {
                         "kernel/cache"
+                    } else if file.path.starts_with("src/transport/") {
+                        "transport"
                     } else {
                         "decode"
                     }
@@ -105,6 +108,18 @@ mod tests {
         ));
         assert_eq!(f.len(), 1);
         assert!(f[0].message.contains("chaos driver"));
+    }
+
+    #[test]
+    fn transport_is_in_scope() {
+        // The wire codec and the node's seed replay back the loopback
+        // bit-identity contract: same frames in, same bytes out.
+        let f = lint(&SourceFile::new(
+            "src/transport/wire.rs",
+            "use std::collections::HashMap;\n",
+        ));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("transport"));
     }
 
     #[test]

@@ -24,7 +24,14 @@ const GAUGES: &[&str] = &["queue_depth"];
 /// `ClusterCore::metrics`, the JSON emitter and the Display impl must
 /// each carry both. (Evictions are deliberately unpaired: invalidation
 /// can evict without any lookup traffic.)
-const COUPLED: &[(&str, &str)] = &[("decode_cache_hits", "decode_cache_misses")];
+const COUPLED: &[(&str, &str)] = &[
+    ("decode_cache_hits", "decode_cache_misses"),
+    // A transport site that counts only one direction produces a
+    // traffic asymmetry nobody can distinguish from a real link
+    // imbalance: senders and receivers must be surfaced together.
+    ("transport_bytes_sent", "transport_bytes_received"),
+    ("transport_frames_sent", "transport_frames_received"),
+];
 
 /// One `Metrics::inc/dec` call site, keyed by the gauge field name.
 struct Site {
@@ -251,6 +258,30 @@ mod tests {
             "fn f(s: &mut Snap, c: Stats) {\n\
              \x20   s.decode_cache_hits = c.hits;\n\
              \x20   s.decode_cache_misses = c.misses;\n\
+             }",
+        )]);
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn transport_pairs_are_coupled() {
+        let f = lint(&[SourceFile::new(
+            "src/transport/a.rs",
+            "fn f(m: &Metrics) { Metrics::add(&m.transport_bytes_sent, n); }",
+        )]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].token, "transport_bytes_sent");
+        let f = lint(&[SourceFile::new(
+            "src/transport/a.rs",
+            "fn f(s: &mut Snap) { s.transport_frames_received = 1; }",
+        )]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].token, "transport_frames_received");
+        let ok = lint(&[SourceFile::new(
+            "src/transport/a.rs",
+            "fn f(m: &Metrics) {\n\
+             \x20   Metrics::add(&m.transport_bytes_sent, n);\n\
+             \x20   Metrics::add(&m.transport_bytes_received, n);\n\
              }",
         )]);
         assert!(ok.is_empty(), "{ok:?}");

@@ -16,6 +16,7 @@ const HOT_PATHS: &[&str] = &[
     "src/coding/",
     "src/linalg/",
     "src/parallel/",
+    "src/transport/",
 ];
 
 /// Panicking macros (checked as `name!`).
@@ -98,6 +99,15 @@ mod tests {
             "fn f(x: Option<u32>) -> u32 { x.unwrap() }",
         ));
         assert!(cold.is_empty(), "sim/ is not a no_panic scope");
+    }
+
+    #[test]
+    fn transport_is_a_hot_path() {
+        let f = lint(&SourceFile::new(
+            "src/transport/wire.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }",
+        ));
+        assert_eq!(f.len(), 1, "a panicking frame codec can kill the hub");
     }
 
     #[test]
