@@ -1,0 +1,473 @@
+//! `hiercode control` — control-plane verification harness.
+//!
+//! The control plane's whole claim is that an operator can change what
+//! a live cluster serves *without dropping anything*. This harness
+//! measures that claim against a real cluster driven through the real
+//! admin surface (UDS control socket, framed protocol), never through
+//! test-only backdoors:
+//!
+//! 1. **Zero drop** — a flood of jobs is dispatched, then a heavy
+//!    rollout (changed per-group k1 plan) lands via `admin rollout`
+//!    while they are still in the pipeline. Every pre-swap job must
+//!    complete: no drop, no error.
+//! 2. **Pre-swap bit-identity** — those pre-swap outputs must match a
+//!    reference run (same seed, no rollout) bit for bit
+//!    (`f64::to_bits`): the quiesce/cut-over must not perturb work
+//!    admitted under the old generation.
+//! 3. **Post-swap generation** — after the swap the cluster reports
+//!    generation 2 (via `admin status` over the socket, not the
+//!    in-process accessor), the rollout counter ticks, and a job
+//!    decoded under the new plan is numerically correct.
+//! 4. **Incompatible rejected** — an artifact with a changed outer
+//!    code (k2) must be refused atomically: typed error, generation
+//!    unchanged, cluster still serving.
+//! 5. **Rollback restores** — `admin rollback` returns to generation
+//!    1, and the original plan then serves the reference stream's
+//!    first input bit-identically again.
+//!
+//! Results go to `BENCH_control.json` in `--out` (default `.`) and the
+//! harness exits nonzero when any verdict fails, so CI catches control
+//! plane regressions, not just crashes. `--smoke` shrinks the flood
+//! for CI (the scenarios themselves are already second-scale).
+
+use crate::cli::args::Args;
+use crate::config::schema::ClusterConfig;
+use crate::controlplane::admin::{self, AdminRequest};
+use crate::controlplane::{self, AdminControl, AdminServer};
+use crate::coordinator::ClusterCore;
+use crate::linalg::{ops, Matrix};
+use crate::transport::TransportAddr;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The model every run registers and streams against.
+const MODEL: &str = "control";
+/// Model shape: rows divisible by both the launch plan's row divisor
+/// (k2·k1 = 4) and the rollout plan's lcm(2·3, 2·2, 2·1) = 12.
+const ROWS: usize = 24;
+const COLS: usize = 4;
+/// Per-job wait guard, far above any healthy completion time.
+const WAIT: Duration = Duration::from_secs(30);
+
+/// JSON-safe float literal (same convention as `hiercode bench`).
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.9e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh per-run UDS control address (pid + counter keeps parallel
+/// test binaries and repeated runs from colliding on a stale path).
+fn fresh_admin_addr() -> TransportAddr {
+    TransportAddr::Uds(std::env::temp_dir().join(format!(
+        "hiercode-ctl-{}-{}.sock",
+        std::process::id(),
+        SOCK_SEQ.fetch_add(1, Ordering::Relaxed)
+    )))
+}
+
+/// The config every scenario runs: a heterogeneous-capable demo grid
+/// with single-request batches (batch composition must not depend on
+/// flood timing, or bit-identity would race) and an admission queue
+/// that holds the whole flood.
+fn preset(seed: u64) -> ClusterConfig {
+    let mut config = ClusterConfig::demo(4, 2, 3, 2);
+    config.seed = seed;
+    config.runtime.use_pjrt = false;
+    config.serving.queue_cap = 256;
+    config.serving.default_deadline_ms = 30_000.0;
+    config.serving.drain_ms = 10_000.0;
+    config.batching.max_batch = 1;
+    config.batching.max_wait_ms = 0.5;
+    config
+}
+
+/// Workload knobs shared by every scenario.
+struct ControlLoad {
+    seed: u64,
+    inflight: usize,
+}
+
+/// Build the seeded model matrix and the seeded input stream — both
+/// runs must derive them from the same RNG stream or "bit-identical"
+/// would be vacuous.
+fn seeded_workload(load: &ControlLoad) -> (Matrix, Vec<Vec<f64>>) {
+    let mut rng = Rng::new(load.seed);
+    let a = Matrix::from_fn(ROWS, COLS, |_, _| rng.uniform(-1.0, 1.0));
+    let inputs = (0..load.inflight)
+        .map(|_| (0..COLS).map(|_| rng.uniform(-1.0, 1.0)).collect())
+        .collect();
+    (a, inputs)
+}
+
+/// Reference run: the same seeded flood with no rollout; its outputs
+/// are the bit-identity oracle.
+fn run_reference(load: &ControlLoad) -> Result<Vec<Vec<f64>>> {
+    let config = preset(load.seed);
+    let core = ClusterCore::launch(&config)?;
+    let (a, inputs) = seeded_workload(load);
+    core.register_model(MODEL, &a)?;
+    let client = core.handle();
+    let handles = inputs
+        .iter()
+        .map(|x| client.submit_to(MODEL, x.clone()))
+        .collect::<Result<Vec<_>>>()?;
+    let mut outputs = Vec::with_capacity(handles.len());
+    for h in handles {
+        outputs.push(h.wait_timeout(WAIT)?);
+    }
+    core.shutdown();
+    Ok(outputs)
+}
+
+/// Everything the verdicts need from the rollout run.
+struct RolloutOutcome {
+    completed: u64,
+    dropped: u64,
+    bit_identical: bool,
+    swap_generation: u64,
+    status_generation: u64,
+    rollouts: u64,
+    post_swap_max_err: f64,
+    incompatible_rejected: bool,
+    generation_after_reject: u64,
+    serves_after_reject: bool,
+    rollback_generation: u64,
+    rollbacks: u64,
+    rollback_bit_identical: bool,
+    metrics_json: String,
+}
+
+impl RolloutOutcome {
+    fn zero_drop_ok(&self, inflight: usize) -> bool {
+        self.dropped == 0 && self.completed == inflight as u64
+    }
+    fn post_swap_ok(&self) -> bool {
+        self.swap_generation == 2
+            && self.status_generation == 2
+            && self.rollouts == 1
+            && self.post_swap_max_err < 1e-6
+    }
+    fn reject_ok(&self) -> bool {
+        self.incompatible_rejected
+            && self.generation_after_reject == 2
+            && self.serves_after_reject
+    }
+    fn rollback_ok(&self) -> bool {
+        self.rollback_generation == 1 && self.rollbacks == 1 && self.rollback_bit_identical
+    }
+    fn ok(&self, inflight: usize) -> bool {
+        self.zero_drop_ok(inflight)
+            && self.bit_identical
+            && self.post_swap_ok()
+            && self.reject_ok()
+            && self.rollback_ok()
+    }
+}
+
+/// Bitwise comparison of two output streams.
+fn bits_equal(a: &[Vec<f64>], b: &[Vec<f64>]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+/// Send one admin request over the control socket and unwrap the
+/// payload (the harness always talks to the cluster the way an
+/// operator would).
+fn admin_call(addr: &TransportAddr, req: &AdminRequest) -> Result<Vec<u8>> {
+    admin::request(addr, req)?.into_payload()
+}
+
+/// The rollout run: flood, swap through the admin socket mid-pipeline,
+/// reject an incompatible artifact, roll back.
+fn run_rollout(load: &ControlLoad, reference: &[Vec<f64>]) -> Result<RolloutOutcome> {
+    let config = preset(load.seed);
+    let core = Arc::new(ClusterCore::launch(&config)?);
+    let (a, inputs) = seeded_workload(load);
+    core.register_model(MODEL, &a)?;
+    let mut server = AdminServer::spawn(
+        fresh_admin_addr(),
+        Arc::clone(&core) as Arc<dyn AdminControl>,
+    )?;
+    let addr = server.addr().clone();
+    let client = core.handle();
+
+    // Flood the pre-swap jobs, then wait until the batcher has
+    // dispatched every one of them (single-request batches, so the
+    // jobs counter equals dispatched requests): the quiesce must drain
+    // them under the *old* generation for bit-identity to be testable.
+    let handles = inputs
+        .iter()
+        .map(|x| client.submit_to(MODEL, x.clone()))
+        .collect::<Result<Vec<_>>>()?;
+    let dispatch_deadline = Instant::now() + Duration::from_secs(10);
+    while core.metrics().jobs < load.inflight as u64 {
+        if Instant::now() > dispatch_deadline {
+            return Err(Error::Coordinator(
+                "control harness: flood never fully dispatched".into(),
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // Heavy candidate: a skewed per-group k1 plan, rolled out over the
+    // admin socket while the flood is in the pipeline.
+    let mut cand = config.clone();
+    let plan = [3usize, 2, 1];
+    for (g, spec) in cand.code.topology.groups.iter_mut().enumerate() {
+        spec.k1 = plan[g];
+    }
+    cand.code.k1 = plan[0];
+    let payload = admin_call(&addr, &AdminRequest::Rollout(controlplane::compile(&cand)?))?;
+    let swap_generation = admin::generation_from_payload(&payload)?;
+
+    // Every pre-swap job must complete, bit-identical to the oracle.
+    let (mut completed, mut dropped) = (0u64, 0u64);
+    let mut outputs = Vec::with_capacity(handles.len());
+    for h in handles {
+        match h.wait_timeout(WAIT) {
+            Ok(y) => {
+                completed += 1;
+                outputs.push(y);
+            }
+            Err(_) => {
+                dropped += 1;
+                outputs.push(Vec::new());
+            }
+        }
+    }
+    let bit_identical = bits_equal(&outputs, reference);
+
+    // Post-swap: the admin surface reports the new generation and a
+    // job decoded under the new plan is numerically correct.
+    let status = String::from_utf8_lossy(&admin_call(&addr, &AdminRequest::Status)?).into_owned();
+    let status_generation = crate::config::json::Json::parse(&status)
+        .ok()
+        .and_then(|v| v.get("generation").and_then(|g| g.as_usize()))
+        .unwrap_or(0) as u64;
+    let mut rng = Rng::new(load.seed ^ 0x5a5a);
+    let x: Vec<f64> = (0..COLS).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let expect = ops::matvec(&a, &x);
+    let y = client.submit_to(MODEL, x)?.wait_timeout(WAIT)?;
+    let post_swap_max_err = y
+        .iter()
+        .zip(expect.iter())
+        .map(|(got, want)| (got - want).abs())
+        .fold(0.0f64, f64::max);
+    let rollouts = core.metrics().rollouts;
+
+    // Incompatible candidate: changed outer code → atomic refusal.
+    let mut bad = config.clone();
+    bad.code.k2 = 3;
+    bad.code.topology.k2 = 3;
+    let incompatible_rejected = matches!(
+        admin::request(&addr, &AdminRequest::Rollout(controlplane::compile(&bad)?))?,
+        admin::AdminResponse::Err(ref m) if m.contains("incompatible")
+    );
+    let generation_after_reject = core.artifact_generation();
+    let serves_after_reject = client
+        .submit_to(MODEL, vec![1.0; COLS])?
+        .wait_timeout(WAIT)
+        .is_ok();
+
+    // Rollback: generation 1 again, and the original plan serves the
+    // reference stream's first input bit-identically.
+    let payload = admin_call(&addr, &AdminRequest::Rollback)?;
+    let rollback_generation = admin::generation_from_payload(&payload)?;
+    let y = client
+        .submit_to(MODEL, inputs[0].clone())?
+        .wait_timeout(WAIT)?;
+    let rollback_bit_identical = !reference.is_empty()
+        && y.len() == reference[0].len()
+        && y.iter()
+            .zip(reference[0].iter())
+            .all(|(p, q)| p.to_bits() == q.to_bits());
+    let snap = core.metrics();
+    server.stop();
+    drop(client);
+    if let Ok(core) = Arc::try_unwrap(core) {
+        core.shutdown();
+    }
+    Ok(RolloutOutcome {
+        completed,
+        dropped,
+        bit_identical,
+        swap_generation,
+        status_generation,
+        rollouts,
+        post_swap_max_err,
+        incompatible_rejected,
+        generation_after_reject,
+        serves_after_reject,
+        rollback_generation,
+        rollbacks: snap.rollbacks,
+        rollback_bit_identical,
+        metrics_json: snap.to_json(),
+    })
+}
+
+/// Render the `BENCH_control.json` document.
+fn render_json(smoke: bool, load: &ControlLoad, out: &RolloutOutcome, pass: bool) -> String {
+    format!(
+        "{{\n\
+         \x20 \"schema\": \"hiercode-bench/control/v1\",\n\
+         \x20 \"smoke\": {smoke},\n\
+         \x20 \"seed\": {},\n\
+         \x20 \"inflight\": {},\n\
+         \x20 \"pre_swap_bit_identical\": {},\n\
+         \x20 \"zero_drop\": {{\n\
+         \x20   \"completed\": {}, \"dropped\": {}, \"ok\": {}\n\
+         \x20 }},\n\
+         \x20 \"post_swap_generation\": {{\n\
+         \x20   \"generation\": {}, \"status_generation\": {}, \"rollouts\": {},\n\
+         \x20   \"max_err\": {}, \"ok\": {}\n\
+         \x20 }},\n\
+         \x20 \"incompatible_rejected\": {{\n\
+         \x20   \"rejected\": {}, \"generation\": {}, \"serves\": {}, \"ok\": {}\n\
+         \x20 }},\n\
+         \x20 \"rollback_restores\": {{\n\
+         \x20   \"generation\": {}, \"rollbacks\": {}, \"bit_identical\": {}, \"ok\": {}\n\
+         \x20 }},\n\
+         \x20 \"verdict\": \"{}\",\n\
+         \x20 \"metrics\": {}\n\
+         }}\n",
+        load.seed,
+        load.inflight,
+        out.bit_identical,
+        out.completed,
+        out.dropped,
+        out.zero_drop_ok(load.inflight),
+        out.swap_generation,
+        out.status_generation,
+        out.rollouts,
+        jf(out.post_swap_max_err),
+        out.post_swap_ok(),
+        out.incompatible_rejected,
+        out.generation_after_reject,
+        out.serves_after_reject,
+        out.reject_ok(),
+        out.rollback_generation,
+        out.rollbacks,
+        out.rollback_bit_identical,
+        out.rollback_ok(),
+        if pass { "pass" } else { "fail" },
+        out.metrics_json,
+    )
+}
+
+/// Run the control harness; writes `BENCH_control.json`.
+pub fn run(args: &Args) -> Result<()> {
+    let smoke = args.has_flag("smoke");
+    let out_dir = args.get_str("out").unwrap_or(".").to_string();
+    let load = ControlLoad {
+        seed: args.get_usize("seed")?.unwrap_or(42) as u64,
+        inflight: args
+            .get_usize("inflight")?
+            .unwrap_or(if smoke { 4 } else { 12 }),
+    };
+    if load.inflight == 0 {
+        return Err(Error::InvalidParams("--inflight must be positive".into()));
+    }
+    eprintln!(
+        "## hiercode control (smoke={smoke}, seed={}, {} in-flight jobs)",
+        load.seed, load.inflight
+    );
+    let reference = run_reference(&load)?;
+    let out = run_rollout(&load, &reference)?;
+    println!(
+        "control zero-drop: {}/{} completed, {} dropped; pre-swap bit-identical={}",
+        out.completed, load.inflight, out.dropped, out.bit_identical
+    );
+    println!(
+        "control post-swap: generation {} (status {}), {} rollouts, max err {:.3e}",
+        out.swap_generation, out.status_generation, out.rollouts, out.post_swap_max_err
+    );
+    println!(
+        "control reject: incompatible rejected={} (generation {}, serving={})",
+        out.incompatible_rejected, out.generation_after_reject, out.serves_after_reject
+    );
+    println!(
+        "control rollback: generation {} ({} rollbacks), bit-identical={}",
+        out.rollback_generation, out.rollbacks, out.rollback_bit_identical
+    );
+    let pass = out.ok(load.inflight);
+    let json = render_json(smoke, &load, &out, pass);
+    let path = format!("{out_dir}/BENCH_control.json");
+    std::fs::write(&path, json)?;
+    println!("wrote {path}");
+    if !pass {
+        return Err(Error::Coordinator(format!(
+            "control verdict FAILED (see {path}): zero_drop={}, bit_identical={}, \
+             post_swap={}, reject={}, rollback={}",
+            out.zero_drop_ok(load.inflight),
+            out.bit_identical,
+            out.post_swap_ok(),
+            out.reject_ok(),
+            out.rollback_ok()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_control_writes_report_and_passes() {
+        let dir = std::env::temp_dir().join("hiercode_control_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.to_str().unwrap().to_string();
+        let args = Args::parse(&[
+            "--smoke".to_string(),
+            "--inflight".to_string(),
+            "3".to_string(),
+            "--out".to_string(),
+            out,
+        ])
+        .unwrap();
+        run(&args).unwrap();
+        let text = std::fs::read_to_string(dir.join("BENCH_control.json")).unwrap();
+        let v = crate::config::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            v.get("schema").and_then(|s| s.as_str()),
+            Some("hiercode-bench/control/v1")
+        );
+        assert_eq!(
+            v.get("pre_swap_bit_identical").and_then(|b| b.as_bool()),
+            Some(true)
+        );
+        let zd = v.get("zero_drop").unwrap();
+        assert_eq!(zd.get("dropped").and_then(|n| n.as_usize()), Some(0));
+        assert_eq!(zd.get("ok").and_then(|b| b.as_bool()), Some(true));
+        let ps = v.get("post_swap_generation").unwrap();
+        assert_eq!(ps.get("generation").and_then(|n| n.as_usize()), Some(2));
+        assert_eq!(ps.get("ok").and_then(|b| b.as_bool()), Some(true));
+        let ir = v.get("incompatible_rejected").unwrap();
+        assert_eq!(ir.get("ok").and_then(|b| b.as_bool()), Some(true));
+        let rb = v.get("rollback_restores").unwrap();
+        assert_eq!(rb.get("generation").and_then(|n| n.as_usize()), Some(1));
+        assert_eq!(rb.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(v.get("verdict").and_then(|s| s.as_str()), Some("pass"));
+        // The embedded metrics snapshot carries the rollout counters.
+        let metrics = v.get("metrics").unwrap();
+        assert_eq!(metrics.get("rollouts").and_then(|n| n.as_usize()), Some(1));
+        assert_eq!(metrics.get("rollbacks").and_then(|n| n.as_usize()), Some(1));
+    }
+
+    #[test]
+    fn control_rejects_bad_arguments() {
+        let args = Args::parse(&["--inflight".to_string(), "0".to_string()]).unwrap();
+        assert!(run(&args).is_err());
+    }
+}

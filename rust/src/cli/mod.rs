@@ -12,6 +12,7 @@
 pub mod args;
 pub mod benchcmd;
 pub mod chaos;
+pub mod controlcmd;
 pub mod loadgen;
 pub mod node;
 pub mod transportcmd;
@@ -30,10 +31,16 @@ USAGE:
   hiercode bounds  --k1 K1 --k2 K2 [--n1 N1] [--n2 N2] [--mu1 R] [--mu2 R]
   hiercode allocate --n1 N1,N1,... --k2 K2 [--mu1 R | R,R,...]
                    [--mu2 R | R,R,...] (--recovery F | --total-k1 K)
-                   [--trials N] [--seed S]
+                   [--trials N] [--seed S] [--json]
   hiercode serve   [--config FILE] [--requests N] [--no-pjrt]
                    [--scheme hierarchical|mds|product|replication|polynomial]
                    [--transport uds:PATH|tcp:HOST:PORT]
+                   [--admin uds:PATH|tcp:HOST:PORT] [--hold-ms T]
+  hiercode compile <config.json> [--out FILE]
+  hiercode admin   --connect uds:PATH|tcp:HOST:PORT
+                   <status|metrics|reoptimize|rollout <FILE>|rollback>
+                   [--out FILE]
+  hiercode control [--smoke] [--seed S] [--inflight N] [--out DIR]
   hiercode bench   [--smoke] [--threads N] [--iters N] [--out DIR]
                    [--trend FILE]
   hiercode loadgen [--smoke] [--schemes S,S] [--clients N,N,...]
@@ -80,6 +87,22 @@ bit-identical outputs and counters on the same seeded stream, reconnect
 with shard re-shipping under a node kill, and fast Insufficient failures
 on an unsurvivable outage, written to BENCH_transport.json in --out;
 exits nonzero on any failed verdict.
+`compile` turns a validated cluster config into a versioned,
+checksummed `.hca` scenario artifact (default scenario.hca) that
+`serve --config`, `admin rollout` and `hiercode control` consume.
+`serve --admin uds:/tmp/ctl.sock` additionally exposes the framed admin
+surface on a dedicated control socket; --hold-ms keeps it (and the
+cluster) up after the demo workload so an operator can drive rollouts.
+`admin` is that operator: status/metrics print the cluster's JSON
+documents, reoptimize writes a re-allocated candidate artifact to --out
+(default candidate.hca), rollout hot-swaps an artifact file in with a
+generation bump and zero dropped jobs, rollback restores the previous
+generation.
+`control` verifies the control plane end to end through a real admin
+socket: zero-drop + pre-swap bit-identity across a heavy rollout,
+post-swap generation and correctness, atomic rejection of incompatible
+artifacts, and rollback restoring generation 1, written to
+BENCH_control.json in --out; exits nonzero on any failed verdict.
 ";
 
 /// CLI entry point (called from `main.rs`).
@@ -111,6 +134,9 @@ pub fn run(argv: &[String]) -> crate::Result<()> {
         "bounds" => bounds_cmd(&args),
         "allocate" => allocate_cmd(&args),
         "serve" => serve_cmd(&args),
+        "compile" => compile_cmd(&args),
+        "admin" => admin_cmd(&args),
+        "control" => controlcmd::run(&args),
         "bench" => benchcmd::run(&args),
         "loadgen" => loadgen::run(&args),
         "chaos" => chaos::run(&args),
@@ -282,6 +308,48 @@ fn allocate_cmd(args: &Args) -> crate::Result<()> {
         seed,
         &pool,
     )?;
+    if args.has_flag("json") {
+        // Machine-readable form (stable schema, consumed by tooling
+        // that feeds `hiercode compile`d scenario configs).
+        let jnum = |v: f64| {
+            if v.is_finite() {
+                format!("{v:.9e}")
+            } else {
+                "null".to_string()
+            }
+        };
+        let jlist = |v: &[usize]| {
+            let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+            format!("[{}]", items.join(", "))
+        };
+        println!(
+            "{{\n\
+             \x20 \"schema\": \"hiercode-allocate/v1\",\n\
+             \x20 \"groups\": {}, \"k2\": {}, \"total_k1\": {},\n\
+             \x20 \"n1\": {},\n\
+             \x20 \"uniform\": {{\"k1\": {}, \"bound\": {}, \"latency_mean\": {}, \
+             \"latency_ci95\": {}}},\n\
+             \x20 \"optimized\": {{\"k1\": {}, \"bound\": {}, \"latency_mean\": {}, \
+             \"latency_ci95\": {}, \"moves\": {}}},\n\
+             \x20 \"bound_improvement_pct\": {}\n\
+             }}",
+            problem.n1.len(),
+            problem.k2,
+            problem.total_k1,
+            jlist(&problem.n1),
+            jlist(&alloc.uniform_k1),
+            jnum(alloc.uniform_bound),
+            jnum(uni.mean),
+            jnum(uni.ci95),
+            jlist(&alloc.k1),
+            jnum(alloc.bound),
+            jnum(opt.mean),
+            jnum(opt.ci95),
+            alloc.moves,
+            jnum((1.0 - alloc.bound / alloc.uniform_bound) * 100.0)
+        );
+        return Ok(());
+    }
     println!(
         "allocate: {} groups, k2={}, total k1={}",
         problem.n1.len(),
@@ -303,11 +371,116 @@ fn allocate_cmd(args: &Args) -> crate::Result<()> {
     Ok(())
 }
 
+fn compile_cmd(args: &Args) -> crate::Result<()> {
+    use crate::config::schema::ClusterConfig;
+
+    let path = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .or_else(|| args.get_str("config"))
+        .ok_or_else(|| {
+            crate::Error::InvalidParams(
+                "compile needs a config file (positional or --config)".into(),
+            )
+        })?;
+    let config = ClusterConfig::from_file(path)?;
+    let bytes = crate::controlplane::compile(&config)?;
+    // Round-trip through the decoder: what we print is what a loading
+    // cluster will actually see.
+    let artifact = crate::controlplane::decode(&bytes)?;
+    let out = args.get_str("out").unwrap_or("scenario.hca");
+    std::fs::write(out, &bytes)?;
+    let m = &artifact.manifest;
+    println!(
+        "compiled {path} -> {out}: {} bytes, artifact v{}, compiler v{}, \
+         topology digest {:#010x}, seed {}",
+        bytes.len(),
+        m.artifact_version,
+        m.compiler_version,
+        m.topology_digest,
+        m.seed
+    );
+    Ok(())
+}
+
+fn admin_cmd(args: &Args) -> crate::Result<()> {
+    use crate::controlplane::admin::{self, AdminRequest};
+
+    let addr_str = args.get_str("connect").ok_or_else(|| {
+        crate::Error::InvalidParams(
+            "--connect uds:PATH|tcp:HOST:PORT is required (the cluster's \
+             `serve --admin` address)"
+                .into(),
+        )
+    })?;
+    let addr = crate::transport::TransportAddr::parse(addr_str)?;
+    let verb = args.positional.first().map(|s| s.as_str()).ok_or_else(|| {
+        crate::Error::InvalidParams(
+            "admin needs a subcommand: status|metrics|reoptimize|rollout <FILE>|rollback"
+                .into(),
+        )
+    })?;
+    match verb {
+        "status" | "metrics" => {
+            let req = if verb == "status" {
+                AdminRequest::Status
+            } else {
+                AdminRequest::Metrics
+            };
+            let payload = admin::request(&addr, &req)?.into_payload()?;
+            println!("{}", String::from_utf8_lossy(&payload));
+        }
+        "reoptimize" => {
+            let payload = admin::request(&addr, &AdminRequest::Reoptimize)?.into_payload()?;
+            let out = args.get_str("out").unwrap_or("candidate.hca");
+            std::fs::write(out, &payload)?;
+            let m = crate::controlplane::decode(&payload)?.manifest;
+            println!(
+                "candidate artifact -> {out}: {} bytes, topology digest {:#010x} \
+                 (inspect, then `hiercode admin --connect {addr_str} rollout {out}`)",
+                payload.len(),
+                m.topology_digest
+            );
+        }
+        "rollout" => {
+            let file = args.positional.get(1).ok_or_else(|| {
+                crate::Error::InvalidParams(
+                    "rollout needs an artifact file (from `hiercode compile` or \
+                     `admin reoptimize`)"
+                        .into(),
+                )
+            })?;
+            let bytes = std::fs::read(file)?;
+            let payload = admin::request(&addr, &AdminRequest::Rollout(bytes))?.into_payload()?;
+            println!(
+                "rolled out {file}: generation {}",
+                admin::generation_from_payload(&payload)?
+            );
+        }
+        "rollback" => {
+            let payload = admin::request(&addr, &AdminRequest::Rollback)?.into_payload()?;
+            println!(
+                "rolled back: generation {}",
+                admin::generation_from_payload(&payload)?
+            );
+        }
+        other => {
+            return Err(crate::Error::InvalidParams(format!(
+                "unknown admin subcommand '{other}' (expected status, metrics, \
+                 reoptimize, rollout or rollback)"
+            )))
+        }
+    }
+    Ok(())
+}
+
 fn serve_cmd(args: &Args) -> crate::Result<()> {
     use crate::config::schema::ClusterConfig;
-    use crate::coordinator::Cluster;
+    use crate::coordinator::{ClusterCore, DEFAULT_MODEL};
     use crate::linalg::Matrix;
     use crate::util::rng::Rng;
+    use std::sync::Arc;
 
     let mut config = match args.get_str("config") {
         Some(path) => ClusterConfig::from_file(path)?,
@@ -336,7 +509,23 @@ fn serve_cmd(args: &Args) -> crate::Result<()> {
     let (m, d) = (1024, 128);
     let mut rng = Rng::new(config.seed);
     let a = Matrix::from_fn(m, d, |_, _| rng.uniform(-1.0, 1.0));
-    let cluster = Cluster::launch(&config, &a)?;
+    // The core is launched behind an `Arc` so the optional admin server
+    // can share it; `Cluster`'s single-tenant facade cannot be shared.
+    let core = Arc::new(ClusterCore::launch(&config)?);
+    core.register_model(DEFAULT_MODEL, &a)?;
+    let client = core.handle();
+    let mut admin = match args.get_str("admin") {
+        Some(spec) => {
+            let addr = crate::transport::TransportAddr::parse(spec)?;
+            let server = crate::controlplane::AdminServer::spawn(
+                addr,
+                Arc::clone(&core) as Arc<dyn crate::controlplane::AdminControl>,
+            )?;
+            println!("admin surface on {spec} (try `hiercode admin --connect {spec} status`)");
+            Some(server)
+        }
+        None => None,
+    };
     if config.transport.mode == crate::config::schema::TransportMode::Socket {
         let wait_ms = config.transport.connect_wait_ms as u64;
         println!(
@@ -346,8 +535,10 @@ fn serve_cmd(args: &Args) -> crate::Result<()> {
             config.code.topology.n2(),
             config.transport.listen
         );
-        if !cluster.core().wait_connected(wait_ms) {
-            cluster.shutdown();
+        if !core.wait_connected(wait_ms) {
+            if let Some(server) = admin.as_mut() {
+                server.stop();
+            }
             return Err(crate::Error::Coordinator(format!(
                 "not every node group connected within {wait_ms}ms"
             )));
@@ -372,14 +563,14 @@ fn serve_cmd(args: &Args) -> crate::Result<()> {
     };
     println!(
         "cluster up: {} on {shape}, matrix {m}x{d}, pjrt={}",
-        cluster.scheme().name(),
+        core.scheme().name(),
         config.runtime.use_pjrt
     );
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..requests)
         .map(|_| {
             let x: Vec<f64> = (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect();
-            cluster.submit(x).expect("submit")
+            client.submit(x).expect("submit")
         })
         .collect();
     let mut ok = 0;
@@ -390,8 +581,22 @@ fn serve_cmd(args: &Args) -> crate::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!("{ok}/{requests} requests ok in {wall:.3}s ({:.1} req/s)", requests as f64 / wall);
-    println!("{}", cluster.metrics());
-    cluster.shutdown();
+    println!("{}", core.metrics());
+    // With an admin surface up, optionally linger so an operator can
+    // drive rollouts against the live cluster after the demo workload.
+    let hold_ms = args.get_usize("hold-ms")?.unwrap_or(0) as u64;
+    if hold_ms > 0 {
+        println!("holding cluster + admin surface for {hold_ms}ms");
+        std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+    }
+    if let Some(server) = admin.as_mut() {
+        server.stop();
+    }
+    drop(admin);
+    drop(client);
+    if let Ok(core) = Arc::try_unwrap(core) {
+        core.shutdown();
+    }
     Ok(())
 }
 
@@ -468,6 +673,73 @@ mod tests {
             "--total-k1", "4",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn allocate_json_smoke() {
+        run(&sv(&[
+            "allocate", "--n1", "6,6", "--k2", "1", "--mu1", "2", "--recovery",
+            "0.5", "--trials", "1000", "--json",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn compile_round_trips_a_config_file() {
+        let dir = std::env::temp_dir().join("hiercode_compile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let config_path = dir.join("scenario.json");
+        std::fs::write(
+            &config_path,
+            r#"{"code": {"n1": 4, "k1": 2, "n2": 3, "k2": 2}, "seed": 11}"#,
+        )
+        .unwrap();
+        let out_path = dir.join("scenario.hca");
+        run(&sv(&[
+            "compile",
+            config_path.to_str().unwrap(),
+            "--out",
+            out_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let bytes = std::fs::read(&out_path).unwrap();
+        let artifact = crate::controlplane::decode(&bytes).unwrap();
+        assert_eq!(artifact.manifest.seed, 11);
+        assert_eq!(artifact.config.code.n1, 4);
+        // No config at all is a usage error, not a panic.
+        assert!(run(&sv(&["compile"])).is_err());
+        assert!(run(&sv(&["compile", "/nonexistent/config.json"])).is_err());
+    }
+
+    #[test]
+    fn admin_requires_connect_and_known_subcommand() {
+        assert!(run(&sv(&["admin", "status"])).is_err());
+        // A dead control socket is a typed connection error, not a hang.
+        let dead = format!(
+            "uds:{}",
+            std::env::temp_dir()
+                .join("hiercode-admin-cli-dead.sock")
+                .display()
+        );
+        assert!(run(&sv(&["admin", "--connect", &dead, "status"])).is_err());
+        assert!(run(&sv(&["admin", "--connect", &dead, "frobnicate"])).is_err());
+        assert!(run(&sv(&["admin", "--connect", &dead])).is_err());
+    }
+
+    #[test]
+    fn serve_admin_surface_smoke() {
+        let sock = format!(
+            "uds:{}",
+            std::env::temp_dir()
+                .join(format!("hiercode-serve-admin-{}.sock", std::process::id()))
+                .display()
+        );
+        run(&sv(&[
+            "serve", "--no-pjrt", "--requests", "2", "--admin", &sock,
+        ]))
+        .unwrap();
+        // Malformed admin address fails before anything binds.
+        assert!(run(&sv(&["serve", "--no-pjrt", "--admin", "carrier:/x"])).is_err());
     }
 
     #[test]

@@ -1,0 +1,440 @@
+//! The admin surface: a framed request/response protocol on a
+//! dedicated control socket (UDS or TCP), never the data lanes.
+//!
+//! `hiercode admin status|metrics|reoptimize|rollout <artifact>|
+//! rollback` connects here. The protocol reuses the wire conventions of
+//! `transport::wire` — a 16-byte header (magic, version, kind, length,
+//! CRC-32) followed by the payload — but with its own magic (`"hct1"`)
+//! so a control frame can never be confused with a data frame, and its
+//! own request/response kinds. One connection carries exactly one
+//! request and one response; the client dials per command, which keeps
+//! the server loop trivially serial and free of per-connection state.
+//!
+//! The server is transport-agnostic behind [`AdminControl`]: the
+//! cluster implements the trait, the server owns only framing and the
+//! accept loop. Everything here is panic-free (this module is in the
+//! `no_panic` lint scope): malformed frames, oversized payloads and
+//! checksum mismatches surface as typed errors on the offending
+//! connection and never take the server down.
+
+use crate::transport::wire::{self, Reader};
+use crate::transport::{Listener, Stream, TransportAddr};
+use crate::util::manifest::crc32;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Control-frame magic: `"hct1"` as a little-endian u32 — distinct from
+/// both the data wire (`"hcw1"`) and the artifact file (`"hca1"`).
+pub const MAGIC: u32 = u32::from_le_bytes(*b"hct1");
+/// Admin protocol version; version skew is rejected explicitly.
+pub const VERSION: u16 = 1;
+/// Frame header size in bytes.
+pub const HEADER_LEN: usize = 16;
+/// Maximum accepted payload (shared with the data wire: an artifact is
+/// the largest thing that ever crosses this socket).
+pub const MAX_PAYLOAD: usize = wire::MAX_PAYLOAD;
+/// Per-connection read guard: an admin peer that stalls longer than
+/// this mid-frame is dropped so the serial accept loop stays live.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Request kinds (client → server).
+const REQ_STATUS: u8 = 0;
+const REQ_METRICS: u8 = 1;
+const REQ_REOPTIMIZE: u8 = 2;
+const REQ_ROLLOUT: u8 = 3;
+const REQ_ROLLBACK: u8 = 4;
+/// Response kinds (server → client).
+const RESP_OK: u8 = 0x80;
+const RESP_ERR: u8 = 0x81;
+
+/// One admin request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdminRequest {
+    /// Cluster identity + generation summary (JSON text reply).
+    Status,
+    /// Full metrics snapshot (JSON text reply).
+    Metrics,
+    /// Run the allocator against the live topology; the reply payload
+    /// is a candidate `.hca` artifact (not applied).
+    Reoptimize,
+    /// Hot-swap to the carried artifact bytes; the reply payload is the
+    /// new generation (little-endian u64).
+    Rollout(Vec<u8>),
+    /// Restore the previous generation; the reply payload is the
+    /// restored generation (little-endian u64).
+    Rollback,
+}
+
+/// One admin response: the request-specific payload, or a typed
+/// failure message (the server never closes the connection without
+/// answering a well-formed request).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdminResponse {
+    /// Success; payload meaning depends on the request.
+    Ok(Vec<u8>),
+    /// Failure, with the server-side error rendered as text.
+    Err(String),
+}
+
+impl AdminResponse {
+    /// Unwrap into the success payload or a typed coordinator error.
+    pub fn into_payload(self) -> Result<Vec<u8>> {
+        match self {
+            Self::Ok(p) => Ok(p),
+            Self::Err(m) => Err(Error::Coordinator(format!("admin request failed: {m}"))),
+        }
+    }
+}
+
+/// What the admin server needs from a running cluster. `ClusterCore`
+/// implements this; tests substitute mocks.
+pub trait AdminControl: Send + Sync {
+    /// Identity + generation summary as a JSON document.
+    fn status_json(&self) -> String;
+    /// Full metrics snapshot as a JSON document.
+    fn metrics_json(&self) -> String;
+    /// Run the allocator against live liveness/latency; returns a
+    /// candidate artifact (compiled, not applied).
+    fn reoptimize(&self) -> Result<Vec<u8>>;
+    /// Hot-swap to the given artifact; returns the new generation.
+    fn rollout(&self, artifact: &[u8]) -> Result<u64>;
+    /// Restore the previous generation; returns the restored one.
+    fn rollback(&self) -> Result<u64>;
+}
+
+/// Serialize one frame (either direction).
+fn encode_frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(0); // reserved
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Write one frame to a stream.
+fn write_frame(stream: &mut Stream, kind: u8, payload: &[u8]) -> Result<()> {
+    stream.write_all(&encode_frame(kind, payload))?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one frame, verifying magic, version, size cap and checksum.
+fn read_frame(stream: &mut Stream) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; HEADER_LEN];
+    stream.read_exact(&mut header)?;
+    let magic = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+    if magic != MAGIC {
+        return Err(Error::Coordinator("admin frame: bad magic".into()));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(Error::Coordinator(format!(
+            "admin frame: version {version} (this build speaks {VERSION})"
+        )));
+    }
+    let kind = header[6];
+    let len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(Error::Coordinator(format!(
+            "admin frame: payload length {len} exceeds the {MAX_PAYLOAD}-byte cap"
+        )));
+    }
+    let crc = u32::from_le_bytes([header[12], header[13], header[14], header[15]]);
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)?;
+    if crc32(&payload) != crc {
+        return Err(Error::Coordinator("admin frame: checksum mismatch".into()));
+    }
+    Ok((kind, payload))
+}
+
+/// Decode a request frame.
+fn decode_request(kind: u8, payload: Vec<u8>) -> Result<AdminRequest> {
+    let req = match kind {
+        REQ_STATUS => AdminRequest::Status,
+        REQ_METRICS => AdminRequest::Metrics,
+        REQ_REOPTIMIZE => AdminRequest::Reoptimize,
+        REQ_ROLLOUT => return Ok(AdminRequest::Rollout(payload)),
+        REQ_ROLLBACK => AdminRequest::Rollback,
+        other => {
+            return Err(Error::Coordinator(format!(
+                "admin frame: unknown request kind {other}"
+            )))
+        }
+    };
+    if !payload.is_empty() {
+        return Err(Error::Coordinator(
+            "admin frame: unexpected payload on a bare request".into(),
+        ));
+    }
+    Ok(req)
+}
+
+/// Dispatch one decoded request against the control implementation.
+fn dispatch(ctrl: &dyn AdminControl, req: AdminRequest) -> AdminResponse {
+    let result: Result<Vec<u8>> = match req {
+        AdminRequest::Status => Ok(ctrl.status_json().into_bytes()),
+        AdminRequest::Metrics => Ok(ctrl.metrics_json().into_bytes()),
+        AdminRequest::Reoptimize => ctrl.reoptimize(),
+        AdminRequest::Rollout(bytes) => {
+            ctrl.rollout(&bytes).map(|g| g.to_le_bytes().to_vec())
+        }
+        AdminRequest::Rollback => ctrl.rollback().map(|g| g.to_le_bytes().to_vec()),
+    };
+    match result {
+        Ok(payload) => AdminResponse::Ok(payload),
+        Err(e) => AdminResponse::Err(format!("{e}")),
+    }
+}
+
+/// The admin server: one accept loop on a dedicated control socket,
+/// one request per connection, handled serially (an admin surface has
+/// no concurrency requirements, and serial handling means a rollout
+/// can never race another rollout at the framing layer).
+pub struct AdminServer {
+    addr: TransportAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl AdminServer {
+    /// Bind `addr` and serve until [`AdminServer::stop`].
+    pub fn spawn(addr: TransportAddr, ctrl: Arc<dyn AdminControl>) -> Result<AdminServer> {
+        let listener = Listener::bind(&addr).map_err(|e| {
+            Error::Coordinator(format!("admin server: cannot bind {addr}: {e}"))
+        })?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("hiercode-admin".into())
+            .spawn(move || {
+                while let Ok(mut stream) = listener.accept() {
+                    if stop_flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // A stalled or malformed peer only loses its own
+                    // connection; the loop serves the next one.
+                    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+                    let _ = serve_one(&mut stream, ctrl.as_ref());
+                }
+            })
+            .map_err(|e| Error::Coordinator(format!("admin server: spawn failed: {e}")))?;
+        Ok(AdminServer {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound control address.
+    pub fn addr(&self) -> &TransportAddr {
+        &self.addr
+    }
+
+    /// Stop the accept loop and join the server thread. Idempotent.
+    pub fn stop(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // Unblock the accept with a dummy dial; if the dial fails
+            // the listener is already gone and the join returns anyway.
+            if let Ok(s) = Stream::connect(&self.addr) {
+                s.shutdown();
+            }
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for AdminServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Serve exactly one request on an accepted connection.
+fn serve_one(stream: &mut Stream, ctrl: &dyn AdminControl) -> Result<()> {
+    let (kind, payload) = read_frame(stream)?;
+    let resp = match decode_request(kind, payload) {
+        Ok(req) => dispatch(ctrl, req),
+        Err(e) => AdminResponse::Err(format!("{e}")),
+    };
+    match resp {
+        AdminResponse::Ok(p) => write_frame(stream, RESP_OK, &p),
+        AdminResponse::Err(m) => write_frame(stream, RESP_ERR, m.as_bytes()),
+    }
+}
+
+/// Client side: dial, send one request, read the response.
+pub fn request(addr: &TransportAddr, req: &AdminRequest) -> Result<AdminResponse> {
+    let mut stream = Stream::connect(addr).map_err(|e| {
+        Error::Coordinator(format!("admin client: cannot connect {addr}: {e}"))
+    })?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let (kind, payload): (u8, &[u8]) = match req {
+        AdminRequest::Status => (REQ_STATUS, &[]),
+        AdminRequest::Metrics => (REQ_METRICS, &[]),
+        AdminRequest::Reoptimize => (REQ_REOPTIMIZE, &[]),
+        AdminRequest::Rollout(bytes) => (REQ_ROLLOUT, bytes),
+        AdminRequest::Rollback => (REQ_ROLLBACK, &[]),
+    };
+    write_frame(&mut stream, kind, payload)?;
+    let (kind, payload) = read_frame(&mut stream)?;
+    match kind {
+        RESP_OK => Ok(AdminResponse::Ok(payload)),
+        RESP_ERR => Ok(AdminResponse::Err(
+            String::from_utf8_lossy(&payload).into_owned(),
+        )),
+        other => Err(Error::Coordinator(format!(
+            "admin client: unknown response kind {other}"
+        ))),
+    }
+}
+
+/// Decode a generation reply (`rollout` / `rollback` success payload).
+pub fn generation_from_payload(payload: &[u8]) -> Result<u64> {
+    let mut r = Reader {
+        buf: payload,
+        pos: 0,
+    };
+    let generation = r
+        .u64()
+        .map_err(|_| Error::Coordinator("admin client: short generation reply".into()))?;
+    if r.pos != payload.len() {
+        return Err(Error::Coordinator(
+            "admin client: trailing bytes in generation reply".into(),
+        ));
+    }
+    Ok(generation)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    struct MockControl {
+        rollouts: AtomicU64,
+        rollbacks: AtomicU64,
+    }
+
+    impl MockControl {
+        fn new() -> Self {
+            Self {
+                rollouts: AtomicU64::new(0),
+                rollbacks: AtomicU64::new(0),
+            }
+        }
+    }
+
+    impl AdminControl for MockControl {
+        fn status_json(&self) -> String {
+            "{\"generation\": 1}".into()
+        }
+        fn metrics_json(&self) -> String {
+            "{\"jobs\": 0}".into()
+        }
+        fn reoptimize(&self) -> Result<Vec<u8>> {
+            Ok(vec![1, 2, 3])
+        }
+        fn rollout(&self, artifact: &[u8]) -> Result<u64> {
+            if artifact.is_empty() {
+                return Err(Error::Incompatible("empty artifact".into()));
+            }
+            Ok(2 + self.rollouts.fetch_add(1, Ordering::SeqCst))
+        }
+        fn rollback(&self) -> Result<u64> {
+            self.rollbacks.fetch_add(1, Ordering::SeqCst);
+            Ok(1)
+        }
+    }
+
+    fn fresh_addr(tag: &str) -> TransportAddr {
+        let path = std::env::temp_dir().join(format!(
+            "hiercode-admin-{tag}-{}.sock",
+            std::process::id()
+        ));
+        TransportAddr::Uds(path)
+    }
+
+    #[test]
+    fn round_trips_every_request_kind() {
+        let ctrl = Arc::new(MockControl::new());
+        let mut server = AdminServer::spawn(fresh_addr("rt"), Arc::clone(&ctrl) as _).unwrap();
+        let addr = server.addr().clone();
+
+        let status = request(&addr, &AdminRequest::Status).unwrap().into_payload().unwrap();
+        assert_eq!(String::from_utf8(status).unwrap(), "{\"generation\": 1}");
+        let metrics = request(&addr, &AdminRequest::Metrics).unwrap().into_payload().unwrap();
+        assert_eq!(String::from_utf8(metrics).unwrap(), "{\"jobs\": 0}");
+        let cand = request(&addr, &AdminRequest::Reoptimize).unwrap().into_payload().unwrap();
+        assert_eq!(cand, vec![1, 2, 3]);
+        let gen = request(&addr, &AdminRequest::Rollout(vec![9; 8]))
+            .unwrap()
+            .into_payload()
+            .unwrap();
+        assert_eq!(generation_from_payload(&gen).unwrap(), 2);
+        let gen = request(&addr, &AdminRequest::Rollback).unwrap().into_payload().unwrap();
+        assert_eq!(generation_from_payload(&gen).unwrap(), 1);
+        assert_eq!(ctrl.rollouts.load(Ordering::SeqCst), 1);
+        assert_eq!(ctrl.rollbacks.load(Ordering::SeqCst), 1);
+        server.stop();
+    }
+
+    #[test]
+    fn server_side_errors_come_back_typed_not_as_hangs() {
+        let ctrl = Arc::new(MockControl::new());
+        let mut server = AdminServer::spawn(fresh_addr("err"), ctrl as _).unwrap();
+        let addr = server.addr().clone();
+        let resp = request(&addr, &AdminRequest::Rollout(Vec::new())).unwrap();
+        let err = resp.into_payload().unwrap_err();
+        assert!(format!("{err}").contains("incompatible"), "got {err}");
+        // The server survives a failed request and serves the next one.
+        assert!(request(&addr, &AdminRequest::Status).is_ok());
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_frames_lose_only_their_connection() {
+        let ctrl = Arc::new(MockControl::new());
+        let mut server = AdminServer::spawn(fresh_addr("bad"), ctrl as _).unwrap();
+        let addr = server.addr().clone();
+        // Garbage bytes: the server drops the connection without reply.
+        let mut s = Stream::connect(&addr).unwrap();
+        s.write_all(b"not a control frame at all....").unwrap();
+        s.flush().unwrap();
+        s.shutdown();
+        // A correct client still gets served afterwards.
+        assert!(request(&addr, &AdminRequest::Status).is_ok());
+        // Unknown request kind gets a typed error reply.
+        let mut s = Stream::connect(&addr).unwrap();
+        s.write_all(&encode_frame(0x42, &[])).unwrap();
+        s.flush().unwrap();
+        let (kind, payload) = read_frame(&mut s).unwrap();
+        assert_eq!(kind, RESP_ERR);
+        assert!(String::from_utf8_lossy(&payload).contains("unknown request kind"));
+        server.stop();
+    }
+
+    #[test]
+    fn stop_is_idempotent_and_joins() {
+        let ctrl = Arc::new(MockControl::new());
+        let mut server = AdminServer::spawn(fresh_addr("stop"), ctrl as _).unwrap();
+        server.stop();
+        server.stop();
+    }
+
+    #[test]
+    fn generation_payload_rejects_malformed_replies() {
+        assert!(generation_from_payload(&[1, 2, 3]).is_err());
+        assert!(generation_from_payload(&[0; 9]).is_err());
+        assert_eq!(generation_from_payload(&7u64.to_le_bytes()).unwrap(), 7);
+    }
+}

@@ -1,0 +1,842 @@
+//! The compiled scenario artifact: `hiercode compile` turns a
+//! validated [`ClusterConfig`] into a versioned, CRC32-checksummed
+//! binary (`.hca`) that *is* the runtime configuration — "your spec is
+//! your gateway". Loading is a pure integrity + compatibility check:
+//! all semantic validation happened at compile time.
+//!
+//! # Format
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic             "hca1" (little-endian u32)
+//!      4     2  artifact version  (little-endian u16)
+//!      6     2  compiler version  (little-endian u16)
+//!      8     4  payload len       (little-endian u32)
+//!     12     4  payload crc       CRC-32 (IEEE) of the payload
+//!     16   len  payload           sections, in ascending kind order
+//! ```
+//!
+//! The payload is a sequence of sections, each framed as
+//! `kind: u8, len: u32, crc: u32, bytes` — the same conventions as the
+//! socket wire format (`transport::wire`): little-endian fixed-width
+//! integers, length-prefixed UTF-8 strings, floats as IEEE-754 bit
+//! patterns (`f64::to_bits`), so a decoded artifact re-serializes
+//! **bit-identically**. Section 0 is the manifest: topology digest,
+//! seed, and a `(kind, crc)` table covering every following section,
+//! so per-section integrity is checked twice (section header and
+//! manifest) and a spliced artifact cannot pass.
+//!
+//! Every malformed input surfaces a typed [`ArtifactError`] — never a
+//! panic: this codec is in the `no_panic` lint scope, and the
+//! rejection tests in `tests/control_plane.rs` drive corruption,
+//! truncation and version skew through it.
+
+use crate::coding::SchemeKind;
+use crate::config::schema::{
+    BatchConfig, ChaosConfig, ClusterConfig, CodeConfig, ModelSpec, RuntimeConfig,
+    ServingConfig, StragglerConfig, TransportConfig, TransportMode,
+};
+use crate::scenario::{GroupSpec, Topology};
+use crate::sim::straggler::StragglerModel;
+use crate::transport::wire::{self, Reader, WireError};
+use crate::util::manifest::crc32;
+
+/// Artifact magic: `"hca1"` as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"hca1");
+/// Artifact format version. Bumped on any layout change; load rejects
+/// skew explicitly.
+pub const ARTIFACT_VERSION: u16 = 1;
+/// Compiler version, recorded in the header for provenance (newer
+/// compilers emitting the same artifact version stay loadable).
+pub const COMPILER_VERSION: u16 = 1;
+/// Header size in bytes.
+pub const HEADER_LEN: usize = 16;
+/// Maximum accepted payload — shared with the wire format.
+pub const MAX_PAYLOAD: usize = wire::MAX_PAYLOAD;
+
+/// Section discriminants, in payload order.
+const SEC_MANIFEST: u8 = 0;
+const SEC_CODE: u8 = 1;
+const SEC_STRAGGLER: u8 = 2;
+const SEC_RUNTIME: u8 = 3;
+const SEC_BATCHING: u8 = 4;
+const SEC_SERVING: u8 = 5;
+const SEC_CHAOS: u8 = 6;
+const SEC_TRANSPORT: u8 = 7;
+/// Every non-manifest section, in the order they are emitted.
+const SECTIONS: [u8; 7] = [
+    SEC_CODE,
+    SEC_STRAGGLER,
+    SEC_RUNTIME,
+    SEC_BATCHING,
+    SEC_SERVING,
+    SEC_CHAOS,
+    SEC_TRANSPORT,
+];
+
+fn section_name(kind: u8) -> &'static str {
+    match kind {
+        SEC_MANIFEST => "manifest",
+        SEC_CODE => "code",
+        SEC_STRAGGLER => "straggler",
+        SEC_RUNTIME => "runtime",
+        SEC_BATCHING => "batching",
+        SEC_SERVING => "serving",
+        SEC_CHAOS => "chaos",
+        SEC_TRANSPORT => "transport",
+        _ => "unknown",
+    }
+}
+
+/// Typed artifact failure. Every variant is a distinct, observable way
+/// an artifact can be wrong; none of them panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactError {
+    /// Fewer bytes than the header or a declared length.
+    Truncated,
+    /// The first four bytes are not the artifact magic.
+    BadMagic,
+    /// The artifact was written by a different format version.
+    BadVersion {
+        /// Version in the artifact header.
+        got: u16,
+        /// Version this build speaks.
+        want: u16,
+    },
+    /// A checksum mismatch, naming the section (or "payload").
+    BadChecksum(&'static str),
+    /// Unknown, duplicate or out-of-order section discriminant.
+    BadSection(u8),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversize(usize),
+    /// Structurally invalid payload (bad UTF-8, bad tags, trailing
+    /// bytes).
+    Malformed(&'static str),
+    /// The decoded config fails semantic validation — a hand-crafted
+    /// artifact that never went through `compile`.
+    Invalid(String),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Truncated => write!(f, "truncated artifact"),
+            Self::BadMagic => write!(f, "bad artifact magic (not a .hca file)"),
+            Self::BadVersion { got, want } => {
+                write!(f, "artifact version {got} (this build speaks {want})")
+            }
+            Self::BadChecksum(what) => write!(f, "{what}: checksum mismatch"),
+            Self::BadSection(k) => write!(f, "bad section discriminant {k}"),
+            Self::Oversize(n) => {
+                write!(f, "payload length {n} exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            Self::Malformed(why) => write!(f, "malformed artifact: {why}"),
+            Self::Invalid(why) => write!(f, "invalid compiled config: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+impl From<ArtifactError> for crate::Error {
+    fn from(e: ArtifactError) -> Self {
+        crate::Error::Config(format!("scenario artifact: {e}"))
+    }
+}
+
+impl From<WireError> for ArtifactError {
+    fn from(e: WireError) -> Self {
+        match e {
+            WireError::Truncated => Self::Truncated,
+            WireError::Malformed(why) => Self::Malformed(why),
+            // The remaining wire variants concern frame headers, which
+            // the artifact codec parses itself; a Reader can only
+            // surface the two above.
+            _ => Self::Malformed("unexpected wire-level failure"),
+        }
+    }
+}
+
+/// The manifest section: provenance and integrity metadata.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScenarioManifest {
+    /// Artifact format version (from the header).
+    pub artifact_version: u16,
+    /// Compiler version that emitted the artifact (from the header).
+    pub compiler_version: u16,
+    /// Digest of the compatibility-relevant topology shape: scheme,
+    /// `k2`, per-group `(n1, k1, subtasks)`. Two artifacts with equal
+    /// digests are swap-compatible at the group-structure level.
+    pub topology_digest: u32,
+    /// The scenario seed (also the transport cluster id).
+    pub seed: u64,
+    /// Per-section `(kind, crc32)` table for every following section.
+    pub section_crcs: Vec<(u8, u32)>,
+}
+
+/// A loaded, integrity-checked scenario artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioArtifact {
+    /// Provenance + integrity metadata.
+    pub manifest: ScenarioManifest,
+    /// The full compiled configuration.
+    pub config: ClusterConfig,
+}
+
+impl ScenarioArtifact {
+    /// Load and decode an artifact file.
+    pub fn load(path: &str) -> crate::Result<Self> {
+        let bytes = std::fs::read(path).map_err(|e| {
+            crate::Error::Config(format!("cannot read artifact {path}: {e}"))
+        })?;
+        Ok(decode(&bytes)?)
+    }
+}
+
+/// Digest of the compatibility-relevant topology shape (see
+/// [`ScenarioManifest::topology_digest`]).
+pub fn topology_digest(scheme: SchemeKind, topology: &Topology) -> u32 {
+    let mut buf = Vec::new();
+    buf.push(scheme_tag(scheme));
+    wire::put_u32(&mut buf, topology.k2 as u32);
+    wire::put_u32(&mut buf, topology.groups.len() as u32);
+    for g in &topology.groups {
+        wire::put_u32(&mut buf, g.n1 as u32);
+        wire::put_u32(&mut buf, g.k1 as u32);
+        wire::put_u32(&mut buf, g.subtasks as u32);
+    }
+    crc32(&buf)
+}
+
+/// Compile a validated config into artifact bytes. All semantic
+/// validation happens here — loading the result is a pure integrity
+/// check. Compilation is deterministic: the same config always
+/// produces the same bytes, and `decode` → `compile` is bit-identical.
+pub fn compile(config: &ClusterConfig) -> crate::Result<Vec<u8>> {
+    config.code.validate()?;
+    let digest = topology_digest(config.code.scheme, &config.code.topology);
+
+    let bodies: Vec<(u8, Vec<u8>)> = vec![
+        (SEC_CODE, encode_code(&config.code)),
+        (SEC_STRAGGLER, encode_straggler(&config.straggler)),
+        (SEC_RUNTIME, encode_runtime(&config.runtime)),
+        (SEC_BATCHING, encode_batching(&config.batching)),
+        (SEC_SERVING, encode_serving(&config.serving)),
+        (SEC_CHAOS, encode_chaos(&config.chaos)),
+        (SEC_TRANSPORT, encode_transport(&config.transport)),
+    ];
+
+    // Manifest first: digest, seed, and the (kind, crc) table.
+    let mut manifest = Vec::new();
+    wire::put_u32(&mut manifest, digest);
+    wire::put_u64(&mut manifest, config.seed);
+    manifest.push(bodies.len() as u8);
+    for (kind, body) in &bodies {
+        manifest.push(*kind);
+        wire::put_u32(&mut manifest, crc32(body));
+    }
+
+    let mut payload = Vec::new();
+    push_section(&mut payload, SEC_MANIFEST, &manifest);
+    for (kind, body) in &bodies {
+        push_section(&mut payload, *kind, body);
+    }
+
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+    out.extend_from_slice(&COMPILER_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Decode artifact bytes: integrity (magic, version, payload and
+/// per-section checksums, manifest cross-check) plus a final semantic
+/// guard for hand-crafted inputs.
+pub fn decode(bytes: &[u8]) -> Result<ScenarioArtifact, ArtifactError> {
+    let header = bytes.get(..HEADER_LEN).ok_or(ArtifactError::Truncated)?;
+    let magic = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+    if magic != MAGIC {
+        return Err(ArtifactError::BadMagic);
+    }
+    let artifact_version = u16::from_le_bytes([header[4], header[5]]);
+    if artifact_version != ARTIFACT_VERSION {
+        return Err(ArtifactError::BadVersion {
+            got: artifact_version,
+            want: ARTIFACT_VERSION,
+        });
+    }
+    let compiler_version = u16::from_le_bytes([header[6], header[7]]);
+    let len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(ArtifactError::Oversize(len));
+    }
+    let payload = bytes
+        .get(HEADER_LEN..HEADER_LEN + len)
+        .ok_or(ArtifactError::Truncated)?;
+    if bytes.len() != HEADER_LEN + len {
+        return Err(ArtifactError::Malformed("trailing bytes after payload"));
+    }
+    let crc = u32::from_le_bytes([header[12], header[13], header[14], header[15]]);
+    if crc32(payload) != crc {
+        return Err(ArtifactError::BadChecksum("payload"));
+    }
+
+    // Walk the sections: manifest first, then each body in order, each
+    // checked against its own crc and the manifest table.
+    let mut sections: Vec<(u8, &[u8])> = Vec::new();
+    let mut pos = 0usize;
+    while pos < payload.len() {
+        let head = payload
+            .get(pos..pos + 9)
+            .ok_or(ArtifactError::Truncated)?;
+        let kind = head[0];
+        let slen = u32::from_le_bytes([head[1], head[2], head[3], head[4]]) as usize;
+        let scrc = u32::from_le_bytes([head[5], head[6], head[7], head[8]]);
+        let body = payload
+            .get(pos + 9..pos + 9 + slen)
+            .ok_or(ArtifactError::Truncated)?;
+        if crc32(body) != scrc {
+            return Err(ArtifactError::BadChecksum(section_name(kind)));
+        }
+        sections.push((kind, body));
+        pos += 9 + slen;
+    }
+
+    let (first_kind, manifest_body) = *sections
+        .first()
+        .ok_or(ArtifactError::Malformed("empty payload"))?;
+    if first_kind != SEC_MANIFEST {
+        return Err(ArtifactError::Malformed("manifest section must come first"));
+    }
+    let (digest, seed, table) = decode_manifest(manifest_body)?;
+
+    // The manifest table and the actual sections must agree exactly.
+    let rest = &sections[1..];
+    if rest.len() != table.len() || rest.len() != SECTIONS.len() {
+        return Err(ArtifactError::Malformed("section table mismatch"));
+    }
+    for (i, (kind, body)) in rest.iter().enumerate() {
+        if SECTIONS[i] != *kind {
+            return Err(ArtifactError::BadSection(*kind));
+        }
+        let (tkind, tcrc) = table[i];
+        if tkind != *kind || crc32(body) != tcrc {
+            return Err(ArtifactError::BadChecksum(section_name(*kind)));
+        }
+    }
+
+    let code = decode_code(rest[0].1)?;
+    let straggler = decode_straggler(rest[1].1)?;
+    let runtime = decode_runtime(rest[2].1)?;
+    let batching = decode_batching(rest[3].1)?;
+    let serving = decode_serving(rest[4].1)?;
+    let chaos = decode_chaos(rest[5].1)?;
+    let transport = decode_transport(rest[6].1)?;
+
+    if topology_digest(code.scheme, &code.topology) != digest {
+        return Err(ArtifactError::Malformed(
+            "topology digest does not match the code section",
+        ));
+    }
+    let config = ClusterConfig {
+        code,
+        straggler,
+        runtime,
+        batching,
+        serving,
+        chaos,
+        transport,
+        seed,
+    };
+    // Final semantic guard: `compile` validated, so this only fires on
+    // hand-crafted artifacts whose checksums are internally consistent.
+    config
+        .code
+        .validate()
+        .map_err(|e| ArtifactError::Invalid(format!("{e}")))?;
+    Ok(ScenarioArtifact {
+        manifest: ScenarioManifest {
+            artifact_version,
+            compiler_version,
+            topology_digest: digest,
+            seed,
+            section_crcs: table,
+        },
+        config,
+    })
+}
+
+fn push_section(out: &mut Vec<u8>, kind: u8, body: &[u8]) {
+    out.push(kind);
+    wire::put_u32(out, body.len() as u32);
+    wire::put_u32(out, crc32(body));
+    out.extend_from_slice(body);
+}
+
+fn decode_manifest(body: &[u8]) -> Result<(u32, u64, Vec<(u8, u32)>), ArtifactError> {
+    let mut r = Reader { buf: body, pos: 0 };
+    let digest = r.u32()?;
+    let seed = r.u64()?;
+    let count = r.u8()? as usize;
+    let mut table = Vec::with_capacity(count);
+    for _ in 0..count {
+        let kind = r.u8()?;
+        let crc = r.u32()?;
+        table.push((kind, crc));
+    }
+    finish(&r, body, "manifest")?;
+    Ok((digest, seed, table))
+}
+
+/// Reject trailing bytes after a fully-decoded section.
+fn finish(r: &Reader<'_>, body: &[u8], _what: &'static str) -> Result<(), ArtifactError> {
+    if r.pos != body.len() {
+        return Err(ArtifactError::Malformed("trailing bytes in section"));
+    }
+    Ok(())
+}
+
+fn scheme_tag(s: SchemeKind) -> u8 {
+    match s {
+        SchemeKind::Hierarchical => 0,
+        SchemeKind::Mds => 1,
+        SchemeKind::Product => 2,
+        SchemeKind::Replication => 3,
+        SchemeKind::Polynomial => 4,
+    }
+}
+
+fn scheme_from_tag(t: u8) -> Result<SchemeKind, ArtifactError> {
+    Ok(match t {
+        0 => SchemeKind::Hierarchical,
+        1 => SchemeKind::Mds,
+        2 => SchemeKind::Product,
+        3 => SchemeKind::Replication,
+        4 => SchemeKind::Polynomial,
+        _ => return Err(ArtifactError::Malformed("unknown scheme tag")),
+    })
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    wire::put_u64(out, v.to_bits());
+}
+
+fn read_f64(r: &mut Reader<'_>) -> Result<f64, ArtifactError> {
+    Ok(f64::from_bits(r.u64()?))
+}
+
+fn read_usize(r: &mut Reader<'_>) -> Result<usize, ArtifactError> {
+    Ok(r.u32()? as usize)
+}
+
+fn encode_model(out: &mut Vec<u8>, m: &StragglerModel) {
+    match m {
+        StragglerModel::Exponential { mu } => {
+            out.push(0);
+            put_f64(out, *mu);
+        }
+        StragglerModel::ShiftedExponential { shift, mu } => {
+            out.push(1);
+            put_f64(out, *shift);
+            put_f64(out, *mu);
+        }
+        StragglerModel::Weibull { shape, scale } => {
+            out.push(2);
+            put_f64(out, *shape);
+            put_f64(out, *scale);
+        }
+        StragglerModel::Deterministic { value } => {
+            out.push(3);
+            put_f64(out, *value);
+        }
+    }
+}
+
+fn decode_model(r: &mut Reader<'_>) -> Result<StragglerModel, ArtifactError> {
+    Ok(match r.u8()? {
+        0 => StragglerModel::Exponential { mu: read_f64(r)? },
+        1 => StragglerModel::ShiftedExponential {
+            shift: read_f64(r)?,
+            mu: read_f64(r)?,
+        },
+        2 => StragglerModel::Weibull {
+            shape: read_f64(r)?,
+            scale: read_f64(r)?,
+        },
+        3 => StragglerModel::Deterministic { value: read_f64(r)? },
+        _ => return Err(ArtifactError::Malformed("unknown straggler-model tag")),
+    })
+}
+
+fn encode_code(c: &CodeConfig) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.push(scheme_tag(c.scheme));
+    for v in [c.n1, c.k1, c.n2, c.k2, c.topology.k2, c.topology.groups.len()] {
+        wire::put_u32(&mut out, v as u32);
+    }
+    for g in &c.topology.groups {
+        wire::put_u32(&mut out, g.n1 as u32);
+        wire::put_u32(&mut out, g.k1 as u32);
+        wire::put_u32(&mut out, g.subtasks as u32);
+        encode_model(&mut out, &g.worker);
+        encode_model(&mut out, &g.link);
+        match g.scale {
+            Some(s) => {
+                out.push(1);
+                put_f64(&mut out, s);
+            }
+            None => out.push(0),
+        }
+        wire::put_u32(&mut out, g.dead_workers.len() as u32);
+        for &d in &g.dead_workers {
+            wire::put_u32(&mut out, d as u32);
+        }
+    }
+    out
+}
+
+fn decode_code(body: &[u8]) -> Result<CodeConfig, ArtifactError> {
+    let mut r = Reader { buf: body, pos: 0 };
+    let scheme = scheme_from_tag(r.u8()?)?;
+    let n1 = read_usize(&mut r)?;
+    let k1 = read_usize(&mut r)?;
+    let n2 = read_usize(&mut r)?;
+    let k2 = read_usize(&mut r)?;
+    let topo_k2 = read_usize(&mut r)?;
+    let count = read_usize(&mut r)?;
+    // A corrupt count cannot ask for gigabytes: the vectors below grow
+    // as bytes are actually consumed, so a huge declared count dies on
+    // `Truncated` after at most one over-read, never a giant alloc.
+    if count > body.len() {
+        return Err(ArtifactError::Truncated);
+    }
+    let mut groups = Vec::new();
+    for _ in 0..count {
+        let gn1 = read_usize(&mut r)?;
+        let gk1 = read_usize(&mut r)?;
+        let subtasks = read_usize(&mut r)?;
+        let worker = decode_model(&mut r)?;
+        let link = decode_model(&mut r)?;
+        let scale = match r.u8()? {
+            0 => None,
+            1 => Some(read_f64(&mut r)?),
+            _ => return Err(ArtifactError::Malformed("bad scale flag")),
+        };
+        let dead_count = read_usize(&mut r)?;
+        if dead_count > body.len() {
+            return Err(ArtifactError::Truncated);
+        }
+        let mut dead_workers = Vec::new();
+        for _ in 0..dead_count {
+            dead_workers.push(read_usize(&mut r)?);
+        }
+        groups.push(GroupSpec {
+            n1: gn1,
+            k1: gk1,
+            worker,
+            link,
+            scale,
+            dead_workers,
+            subtasks,
+        });
+    }
+    finish(&r, body, "code")?;
+    Ok(CodeConfig {
+        scheme,
+        n1,
+        k1,
+        n2,
+        k2,
+        topology: Topology { groups, k2: topo_k2 },
+    })
+}
+
+fn encode_straggler(s: &StragglerConfig) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_model(&mut out, &s.worker);
+    encode_model(&mut out, &s.link);
+    put_f64(&mut out, s.scale);
+    out.push(u8::from(s.enabled));
+    out
+}
+
+fn decode_straggler(body: &[u8]) -> Result<StragglerConfig, ArtifactError> {
+    let mut r = Reader { buf: body, pos: 0 };
+    let c = StragglerConfig {
+        worker: decode_model(&mut r)?,
+        link: decode_model(&mut r)?,
+        scale: read_f64(&mut r)?,
+        enabled: r.u8()? != 0,
+    };
+    finish(&r, body, "straggler")?;
+    Ok(c)
+}
+
+fn encode_runtime(c: &RuntimeConfig) -> Vec<u8> {
+    let mut out = Vec::new();
+    wire::put_str(&mut out, &c.artifact_dir);
+    out.push(u8::from(c.use_pjrt));
+    wire::put_u32(&mut out, c.decode_threads as u32);
+    out
+}
+
+fn decode_runtime(body: &[u8]) -> Result<RuntimeConfig, ArtifactError> {
+    let mut r = Reader { buf: body, pos: 0 };
+    let c = RuntimeConfig {
+        artifact_dir: r.string()?,
+        use_pjrt: r.u8()? != 0,
+        decode_threads: read_usize(&mut r)?,
+    };
+    finish(&r, body, "runtime")?;
+    Ok(c)
+}
+
+fn encode_batching(c: &BatchConfig) -> Vec<u8> {
+    let mut out = Vec::new();
+    wire::put_u32(&mut out, c.max_batch as u32);
+    put_f64(&mut out, c.max_wait_ms);
+    out
+}
+
+fn decode_batching(body: &[u8]) -> Result<BatchConfig, ArtifactError> {
+    let mut r = Reader { buf: body, pos: 0 };
+    let c = BatchConfig {
+        max_batch: read_usize(&mut r)?,
+        max_wait_ms: read_f64(&mut r)?,
+    };
+    finish(&r, body, "batching")?;
+    Ok(c)
+}
+
+fn encode_serving(c: &ServingConfig) -> Vec<u8> {
+    let mut out = Vec::new();
+    wire::put_u32(&mut out, c.queue_cap as u32);
+    put_f64(&mut out, c.default_deadline_ms);
+    put_f64(&mut out, c.drain_ms);
+    wire::put_u32(&mut out, c.models.len() as u32);
+    for m in &c.models {
+        wire::put_str(&mut out, &m.name);
+        wire::put_u64(&mut out, m.rows as u64);
+        wire::put_u64(&mut out, m.cols as u64);
+        wire::put_u64(&mut out, m.seed);
+    }
+    out
+}
+
+fn decode_serving(body: &[u8]) -> Result<ServingConfig, ArtifactError> {
+    let mut r = Reader { buf: body, pos: 0 };
+    let queue_cap = read_usize(&mut r)?;
+    let default_deadline_ms = read_f64(&mut r)?;
+    let drain_ms = read_f64(&mut r)?;
+    let count = read_usize(&mut r)?;
+    if count > body.len() {
+        return Err(ArtifactError::Truncated);
+    }
+    let mut models = Vec::new();
+    for _ in 0..count {
+        let name = r.string()?;
+        let rows = usize::try_from(r.u64()?)
+            .map_err(|_| ArtifactError::Malformed("model rows overflow"))?;
+        let cols = usize::try_from(r.u64()?)
+            .map_err(|_| ArtifactError::Malformed("model cols overflow"))?;
+        let seed = r.u64()?;
+        models.push(ModelSpec {
+            name,
+            rows,
+            cols,
+            seed,
+        });
+    }
+    finish(&r, body, "serving")?;
+    Ok(ServingConfig {
+        queue_cap,
+        default_deadline_ms,
+        drain_ms,
+        models,
+    })
+}
+
+fn encode_chaos(c: &ChaosConfig) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.push(u8::from(c.liveness));
+    put_f64(&mut out, c.heartbeat_ms);
+    put_f64(&mut out, c.suspect_ms);
+    put_f64(&mut out, c.dead_ms);
+    out
+}
+
+fn decode_chaos(body: &[u8]) -> Result<ChaosConfig, ArtifactError> {
+    let mut r = Reader { buf: body, pos: 0 };
+    let c = ChaosConfig {
+        liveness: r.u8()? != 0,
+        heartbeat_ms: read_f64(&mut r)?,
+        suspect_ms: read_f64(&mut r)?,
+        dead_ms: read_f64(&mut r)?,
+    };
+    finish(&r, body, "chaos")?;
+    Ok(c)
+}
+
+fn encode_transport(c: &TransportConfig) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.push(match c.mode {
+        TransportMode::Memory => 0,
+        TransportMode::Socket => 1,
+    });
+    wire::put_str(&mut out, &c.listen);
+    put_f64(&mut out, c.connect_wait_ms);
+    put_f64(&mut out, c.dial_backoff_ms);
+    put_f64(&mut out, c.dial_backoff_max_ms);
+    out
+}
+
+fn decode_transport(body: &[u8]) -> Result<TransportConfig, ArtifactError> {
+    let mut r = Reader { buf: body, pos: 0 };
+    let mode = match r.u8()? {
+        0 => TransportMode::Memory,
+        1 => TransportMode::Socket,
+        _ => return Err(ArtifactError::Malformed("unknown transport-mode tag")),
+    };
+    let c = TransportConfig {
+        mode,
+        listen: r.string()?,
+        connect_wait_ms: read_f64(&mut r)?,
+        dial_backoff_ms: read_f64(&mut r)?,
+        dial_backoff_max_ms: read_f64(&mut r)?,
+    };
+    finish(&r, body, "transport")?;
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_config() -> ClusterConfig {
+        let mut c = ClusterConfig::demo(3, 2, 3, 2);
+        c.serving.models = vec![
+            ModelSpec {
+                name: "alpha".into(),
+                rows: 12,
+                cols: 8,
+                seed: 5,
+            },
+            ModelSpec {
+                name: "β-model".into(),
+                rows: 24,
+                cols: 4,
+                seed: 9,
+            },
+        ];
+        c.code.topology.groups[1].worker = StragglerModel::Weibull {
+            shape: 0.7,
+            scale: 2.0,
+        };
+        c.code.topology.groups[1].scale = Some(1.5);
+        c.code.topology.groups[2].dead_workers = vec![1];
+        c
+    }
+
+    #[test]
+    fn compile_decode_recompile_is_bit_identical() {
+        let config = demo_config();
+        let bytes = compile(&config).unwrap();
+        let art = decode(&bytes).unwrap();
+        assert_eq!(art.config, config, "decode returns the compiled config");
+        assert_eq!(art.manifest.artifact_version, ARTIFACT_VERSION);
+        assert_eq!(art.manifest.seed, config.seed);
+        let again = compile(&art.config).unwrap();
+        assert_eq!(bytes, again, "compile is deterministic and lossless");
+    }
+
+    #[test]
+    fn digest_tracks_compatibility_shape_only() {
+        let a = demo_config();
+        let mut b = demo_config();
+        b.serving.queue_cap += 1;
+        b.batching.max_batch += 1;
+        assert_eq!(
+            decode(&compile(&a).unwrap()).unwrap().manifest.topology_digest,
+            decode(&compile(&b).unwrap()).unwrap().manifest.topology_digest,
+            "serving/batching changes keep the digest"
+        );
+        let mut c = demo_config();
+        c.code.topology.groups[0].k1 = 3;
+        c.code.topology.groups[0].n1 = 4;
+        assert_ne!(
+            topology_digest(a.code.scheme, &a.code.topology),
+            topology_digest(c.code.scheme, &c.code.topology),
+            "k1 plan changes move the digest"
+        );
+    }
+
+    #[test]
+    fn truncation_rejects_at_every_prefix_length() {
+        let bytes = compile(&demo_config()).unwrap();
+        for cut in 0..bytes.len() {
+            let err = decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, ArtifactError::Truncated | ArtifactError::BadChecksum(_)),
+                "prefix of {cut} bytes gave {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_rejects_never_panics() {
+        let bytes = compile(&demo_config()).unwrap();
+        for at in 0..bytes.len() {
+            if at == 6 || at == 7 {
+                // Compiler version is provenance, not integrity: newer
+                // compilers emitting the same format stay loadable.
+                continue;
+            }
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x5A;
+            assert!(decode(&bad).is_err(), "flipped byte {at} went undetected");
+        }
+    }
+
+    #[test]
+    fn version_skew_rejected_with_both_versions() {
+        let mut bytes = compile(&demo_config()).unwrap();
+        bytes[4..6].copy_from_slice(&(ARTIFACT_VERSION + 1).to_le_bytes());
+        assert_eq!(
+            decode(&bytes).unwrap_err(),
+            ArtifactError::BadVersion {
+                got: ARTIFACT_VERSION + 1,
+                want: ARTIFACT_VERSION,
+            }
+        );
+    }
+
+    #[test]
+    fn bad_magic_and_trailing_bytes_rejected() {
+        let mut bytes = compile(&demo_config()).unwrap();
+        bytes[0] ^= 0xFF;
+        assert_eq!(decode(&bytes).unwrap_err(), ArtifactError::BadMagic);
+        let mut bytes = compile(&demo_config()).unwrap();
+        bytes.push(0);
+        assert!(matches!(
+            decode(&bytes).unwrap_err(),
+            ArtifactError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn invalid_config_rejected_at_compile_time() {
+        let mut c = demo_config();
+        c.code.topology.groups[0].k1 = 99; // k1 > n1
+        assert!(compile(&c).is_err(), "compile validates semantics");
+    }
+
+    #[test]
+    fn artifact_error_maps_to_typed_crate_error() {
+        let e: crate::Error = ArtifactError::BadChecksum("payload").into();
+        assert!(matches!(e, crate::Error::Config(_)));
+        assert!(format!("{e}").contains("checksum"));
+    }
+}

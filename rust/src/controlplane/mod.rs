@@ -1,0 +1,36 @@
+//! Control plane: compiled scenario artifacts, zero-drop hot reload,
+//! and the framed admin surface.
+//!
+//! The data plane (coordinator, transport, coding) answers "how do we
+//! serve a job"; this module answers "how does an operator *change*
+//! what is being served without dropping anything". Three pieces:
+//!
+//! - [`artifact`] — `hiercode compile` turns a validated
+//!   [`crate::config::schema::ClusterConfig`] into a versioned,
+//!   CRC32-checksummed `.hca` binary. All semantic validation happens
+//!   at compile time; loading is a pure integrity + compatibility
+//!   check, so a cluster can trust any artifact that decodes.
+//! - [`rollout`] — the compatibility gate and light/heavy
+//!   classification for hot reload. A candidate artifact either swaps
+//!   in atomically (generation-stamped, in-flight jobs drained first,
+//!   shards re-shipped) or is rejected with
+//!   [`crate::Error::Incompatible`] and *nothing* is applied.
+//! - [`admin`] — a framed request/response protocol on a dedicated
+//!   control socket (never the data lanes) behind `hiercode admin
+//!   status|metrics|reoptimize|rollout|rollback`.
+//!
+//! The live swap itself lives in
+//! `coordinator::cluster::ClusterCore::load_artifact`, which drives the
+//! drain machinery, the per-seat shard re-ship and the
+//! generation bump; this module owns everything that can be decided
+//! *without* a running cluster.
+
+pub mod admin;
+pub mod artifact;
+pub mod rollout;
+
+pub use admin::{AdminControl, AdminRequest, AdminResponse, AdminServer};
+pub use artifact::{
+    compile, decode, topology_digest, ArtifactError, ScenarioArtifact, ScenarioManifest,
+};
+pub use rollout::{classify, RolloutKind};

@@ -1,0 +1,186 @@
+//! Rollout compatibility gate: decides whether a candidate config can
+//! hot-swap into a running cluster, and how invasive the swap is.
+//!
+//! A rollout is **atomic**: either the candidate passes this gate and
+//! the whole swap applies, or it is rejected with
+//! [`crate::Error::Incompatible`] and nothing changes. The gate is
+//! deliberately conservative — anything that would change the *shape*
+//! of the running tree (scheme, group count, per-group worker counts,
+//! straggler/chaos/transport/runtime sections, seed) is rejected,
+//! because the spawned threads/processes and their delay schedules
+//! cannot be rebuilt without a restart.
+//!
+//! What remains is classified into two tiers:
+//!
+//! - [`RolloutKind::Light`] — model table, serving limits
+//!   (`queue_cap`, `default_deadline_ms`, `drain_ms`) and batching
+//!   knobs. Applied live without quiescing: admission caps and
+//!   deadlines are atomics, and model registration already ships
+//!   shards to idle workers between jobs.
+//! - [`RolloutKind::Heavy`] — a changed per-group `k1_g` plan (the
+//!   allocator's output). Every registered model must be re-encoded
+//!   under the new inner code and every worker's shard replaced, which
+//!   requires draining in-flight jobs first (mixed-encoding partials
+//!   would decode garbage). The cluster layer runs the quiesce → cut
+//!   over → resume sequence.
+//!
+//! This module is pure (config in, verdict out) so the gate is
+//! unit-testable without a cluster and usable by `hiercode compile`
+//! tooling to pre-check a candidate against a running config.
+
+use crate::config::schema::ClusterConfig;
+use crate::{Error, Result};
+
+/// How invasive a compatible rollout is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RolloutKind {
+    /// Model table / serving limits / batching only: applied live,
+    /// no drain required.
+    Light,
+    /// The per-group `k1_g` plan changed: every model re-encodes and
+    /// every shard re-ships, so in-flight jobs must drain first.
+    Heavy,
+}
+
+/// One named compatibility check; returns the offending field on
+/// mismatch so the error names what to fix.
+fn require(ok: bool, what: &str) -> Result<()> {
+    if ok {
+        Ok(())
+    } else {
+        Err(Error::Incompatible(format!("candidate changes {what}")))
+    }
+}
+
+/// Gate a candidate config against the running one. `Ok(kind)` means
+/// the swap may proceed (light or heavy); `Err(Incompatible)` names the
+/// first field that cannot change without a restart.
+pub fn classify(current: &ClusterConfig, candidate: &ClusterConfig) -> Result<RolloutKind> {
+    require(current.code.scheme == candidate.code.scheme, "code.scheme")?;
+    require(
+        current.code.topology.k2 == candidate.code.topology.k2,
+        "code.k2",
+    )?;
+    require(
+        current.code.topology.groups.len() == candidate.code.topology.groups.len(),
+        "the number of groups",
+    )?;
+    for (g, (a, b)) in current
+        .code
+        .topology
+        .groups
+        .iter()
+        .zip(&candidate.code.topology.groups)
+        .enumerate()
+    {
+        require(a.n1 == b.n1, &format!("groups[{g}].n1 (worker count)"))?;
+        require(a.subtasks == b.subtasks, &format!("groups[{g}].subtasks"))?;
+        require(a.worker == b.worker, &format!("groups[{g}] worker profile"))?;
+        require(a.link == b.link, &format!("groups[{g}] link profile"))?;
+        require(a.scale == b.scale, &format!("groups[{g}].scale"))?;
+        require(
+            a.dead_workers == b.dead_workers,
+            &format!("groups[{g}].dead_workers"),
+        )?;
+    }
+    require(current.straggler == candidate.straggler, "the straggler section")?;
+    require(current.runtime == candidate.runtime, "the runtime section")?;
+    require(current.chaos == candidate.chaos, "the chaos section")?;
+    require(current.transport == candidate.transport, "the transport section")?;
+    require(current.seed == candidate.seed, "the seed")?;
+
+    let k1_changed = current
+        .code
+        .topology
+        .groups
+        .iter()
+        .zip(&candidate.code.topology.groups)
+        .any(|(a, b)| a.k1 != b.k1);
+    Ok(if k1_changed {
+        RolloutKind::Heavy
+    } else {
+        RolloutKind::Light
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::ModelSpec;
+
+    fn base() -> ClusterConfig {
+        ClusterConfig::demo(4, 2, 3, 2)
+    }
+
+    #[test]
+    fn identical_configs_are_a_light_rollout() {
+        assert_eq!(classify(&base(), &base()).unwrap(), RolloutKind::Light);
+    }
+
+    #[test]
+    fn model_and_serving_changes_stay_light() {
+        let mut cand = base();
+        cand.serving.queue_cap = 128;
+        cand.serving.default_deadline_ms = 500.0;
+        cand.batching.max_batch = 2;
+        cand.batching.max_wait_ms = 1.0;
+        cand.serving.models.push(ModelSpec {
+            name: "fresh".into(),
+            rows: 12,
+            cols: 4,
+            seed: 7,
+        });
+        assert_eq!(classify(&base(), &cand).unwrap(), RolloutKind::Light);
+    }
+
+    #[test]
+    fn k1_plan_change_is_heavy() {
+        let mut cand = base();
+        cand.code.topology.groups[0].k1 = 3;
+        cand.code.topology.groups[1].k1 = 1;
+        cand.code.k1 = 3;
+        assert_eq!(classify(&base(), &cand).unwrap(), RolloutKind::Heavy);
+    }
+
+    #[test]
+    fn shape_changes_are_rejected_with_the_field_named() {
+        let cases: Vec<(&str, Box<dyn Fn(&mut ClusterConfig)>)> = vec![
+            ("scheme", Box::new(|c| c.code.scheme = crate::coding::SchemeKind::Mds)),
+            ("k2", Box::new(|c| c.code.topology.k2 = 1)),
+            ("n1", Box::new(|c| c.code.topology.groups[0].n1 = 5)),
+            ("groups", Box::new(|c| {
+                let g = c.code.topology.groups[0].clone();
+                c.code.topology.groups.push(g);
+            })),
+            ("seed", Box::new(|c| c.seed = 7)),
+            ("runtime", Box::new(|c| c.runtime.decode_threads = 1)),
+            ("chaos", Box::new(|c| c.chaos.liveness = !c.chaos.liveness)),
+            ("straggler", Box::new(|c| c.straggler.scale *= 2.0)),
+            ("transport", Box::new(|c| {
+                c.transport.connect_wait_ms += 1.0;
+            })),
+            ("subtasks", Box::new(|c| c.code.topology.groups[0].subtasks = 2)),
+        ];
+        for (what, mutate) in cases {
+            let mut cand = base();
+            mutate(&mut cand);
+            let err = classify(&base(), &cand).unwrap_err();
+            assert!(
+                matches!(err, Error::Incompatible(_)),
+                "{what}: expected Incompatible, got {err:?}"
+            );
+            assert!(
+                format!("{err}").contains("nothing applied"),
+                "{what}: error must promise atomicity"
+            );
+        }
+    }
+
+    #[test]
+    fn gate_is_symmetric_for_light_and_detects_either_direction() {
+        let mut cand = base();
+        cand.serving.queue_cap += 1;
+        assert_eq!(classify(&base(), &cand).unwrap(), RolloutKind::Light);
+        assert_eq!(classify(&cand, &base()).unwrap(), RolloutKind::Light);
+    }
+}

@@ -30,7 +30,9 @@ use crate::coordinator::messages::{
 };
 use crate::coordinator::metrics::Metrics;
 use crate::linalg::Matrix;
+use crate::sync::{Condvar, Mutex};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -43,55 +45,154 @@ struct Lane {
     window: Instant,
 }
 
-/// Spawn the batcher thread. Errors only if the OS refuses to spawn
-/// the thread.
+/// How often the batcher wakes to observe the pause flag (and, while
+/// idle, live knob changes). Bounded so [`BatcherControl::pause`] is
+/// acknowledged promptly even when no requests flow.
+const PAUSE_POLL: Duration = Duration::from_millis(20);
+
+/// Live batching knobs plus the rollout pause gate, shared between the
+/// batcher thread and the control plane.
+///
+/// `pause` is the first step of a heavy rollout's quiesce: a paused
+/// batcher keeps *accepting* requests (they buffer in their lanes,
+/// admission-bounded as always) but dispatches no new `Batch` to the
+/// master — so once the master's in-flight set drains to zero it stays
+/// zero until [`BatcherControl::resume`]. The knobs (`max_batch`,
+/// `max_wait_us`) are read by the batcher on every flush decision, so
+/// a light rollout retunes batching without touching the thread.
+#[derive(Debug)]
+pub struct BatcherControl {
+    paused: AtomicBool,
+    /// Set by the batcher once it has *observed* the pause — the
+    /// handshake `pause()` waits on, so callers know no further batch
+    /// can be racing toward the master.
+    ack: Mutex<bool>,
+    ack_cv: Condvar,
+    max_batch: AtomicUsize,
+    max_wait_us: AtomicU64,
+}
+
+impl BatcherControl {
+    fn new(config: &BatchConfig) -> Self {
+        Self {
+            paused: AtomicBool::new(false),
+            ack: Mutex::new(false),
+            ack_cv: Condvar::new(),
+            max_batch: AtomicUsize::new(config.max_batch),
+            max_wait_us: AtomicU64::new((config.max_wait_ms * 1e3).max(0.0) as u64),
+        }
+    }
+
+    /// Retune the batching knobs live (light rollout path).
+    pub fn set_batching(&self, max_batch: usize, max_wait_ms: f64) {
+        self.max_batch.store(max_batch.max(1), Ordering::Relaxed);
+        self.max_wait_us
+            .store((max_wait_ms * 1e3).max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    /// Current per-lane window length.
+    fn max_wait(&self) -> Duration {
+        Duration::from_micros(self.max_wait_us.load(Ordering::Relaxed))
+    }
+
+    /// Stop dispatching batches and wait until the batcher acknowledges
+    /// (bounded by `timeout`). Returns whether the ack arrived — on
+    /// `false` the caller must *not* assume quiescence and should
+    /// [`BatcherControl::resume`] immediately.
+    pub fn pause(&self, timeout: Duration) -> bool {
+        {
+            let mut acked = self.ack.lock();
+            *acked = false;
+        }
+        self.paused.store(true, Ordering::Release);
+        let deadline = Instant::now() + timeout;
+        let mut acked = self.ack.lock();
+        loop {
+            if *acked {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.ack_cv.wait_timeout(acked, deadline - now);
+            acked = guard;
+        }
+    }
+
+    /// Resume dispatching. Buffered lanes flush on their (already
+    /// elapsed) windows within one poll cadence.
+    pub fn resume(&self) {
+        self.paused.store(false, Ordering::Release);
+    }
+}
+
+/// Spawn the batcher thread. Returns the join handle plus the shared
+/// [`BatcherControl`] the control plane uses to pause dispatch and
+/// retune the knobs live. Errors only if the OS refuses to spawn the
+/// thread.
 pub fn spawn(
     config: BatchConfig,
     metrics: Arc<Metrics>,
     rx: mpsc::Receiver<JobRequest>,
     master: mpsc::Sender<MasterMsg>,
-) -> crate::Result<thread::JoinHandle<()>> {
+) -> crate::Result<(thread::JoinHandle<()>, Arc<BatcherControl>)> {
+    let ctrl = Arc::new(BatcherControl::new(&config));
+    let thread_ctrl = Arc::clone(&ctrl);
     let handle = thread::Builder::new()
         .name("hiercode-batcher".to_string())
         .spawn(move || {
-            let max_wait = Duration::from_secs_f64(config.max_wait_ms / 1e3);
+            let ctrl = thread_ctrl;
             let mut next_id = 0u64;
             let mut lanes: HashMap<ModelId, Lane> = HashMap::new();
             loop {
-                // Wait for the next request (blocking) or until the
-                // earliest lane window closes.
-                let next_window = lanes.values().map(|l| l.window).min();
-                let msg = match next_window {
-                    None => match rx.recv() {
-                        Ok(m) => Some(m),
-                        Err(_) => break,
-                    },
-                    Some(dl) => {
+                let paused = ctrl.paused.load(Ordering::Acquire);
+                if paused {
+                    // Acknowledge exactly once per pause: after this,
+                    // no further Batch leaves until resume.
+                    let mut acked = ctrl.ack.lock();
+                    if !*acked {
+                        *acked = true;
+                        ctrl.ack_cv.notify_all();
+                    }
+                }
+                // Wait for the next request — but never longer than the
+                // poll cadence (the pause flag must be observed even on
+                // a quiet service), nor past the earliest lane window.
+                let mut timeout = PAUSE_POLL;
+                if !paused {
+                    if let Some(dl) = lanes.values().map(|l| l.window).min() {
                         let now = Instant::now();
-                        if now >= dl {
-                            None
+                        timeout = if now >= dl {
+                            Duration::ZERO
                         } else {
-                            match rx.recv_timeout(dl - now) {
-                                Ok(m) => Some(m),
-                                Err(mpsc::RecvTimeoutError::Timeout) => None,
-                                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                            }
-                        }
+                            PAUSE_POLL.min(dl - now)
+                        };
+                    }
+                }
+                let msg = if timeout.is_zero() {
+                    None
+                } else {
+                    match rx.recv_timeout(timeout) {
+                        Ok(m) => Some(m),
+                        Err(mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
                 };
                 match msg {
                     Some(req) => {
                         let model = req.entry.id;
                         let cap = effective_max_batch(
-                            config.max_batch,
+                            ctrl.max_batch.load(Ordering::Relaxed),
                             req.entry.supported_widths.as_deref(),
                         );
+                        let max_wait = ctrl.max_wait();
                         let lane = lanes.entry(model).or_insert_with(|| Lane {
                             reqs: Vec::new(),
                             window: Instant::now() + max_wait,
                         });
                         lane.reqs.push(req);
-                        if lane.reqs.len() >= cap {
+                        if !paused && lane.reqs.len() >= cap {
                             // The lane was inserted just above, so this
                             // always takes the Some arm — written as
                             // if-let so a (impossible) miss degrades to
@@ -100,7 +201,7 @@ pub fn spawn(
                                 flush(
                                     &mut lane.reqs,
                                     &mut next_id,
-                                    &config,
+                                    &ctrl,
                                     &metrics,
                                     &master,
                                 );
@@ -108,6 +209,11 @@ pub fn spawn(
                         }
                     }
                     None => {
+                        if paused {
+                            // Windows stay due while paused; they flush
+                            // within one poll of resume.
+                            continue;
+                        }
                         // A window deadline hit: flush every due lane.
                         let now = Instant::now();
                         let due: Vec<ModelId> = lanes
@@ -123,7 +229,7 @@ pub fn spawn(
                                 flush(
                                     &mut lane.reqs,
                                     &mut next_id,
-                                    &config,
+                                    &ctrl,
                                     &metrics,
                                     &master,
                                 );
@@ -134,13 +240,14 @@ pub fn spawn(
             }
             // Channel closed (shutdown): flush every tail, then hand
             // the master the drain baton — behind the last batch, so
-            // nothing accepted is ever dropped.
+            // nothing accepted is ever dropped. Deliberately ignores a
+            // pause: shutdown's drain supersedes any rollout in flight.
             for (_, mut lane) in lanes.drain() {
-                flush(&mut lane.reqs, &mut next_id, &config, &metrics, &master);
+                flush(&mut lane.reqs, &mut next_id, &ctrl, &metrics, &master);
             }
             let _ = master.send(MasterMsg::Drain);
         })?;
-    Ok(handle)
+    Ok((handle, ctrl))
 }
 
 /// Cap the configured batch size at the largest width the artifact set
@@ -166,7 +273,7 @@ fn release(metrics: &Metrics, entry: &ModelEntry) {
 fn flush(
     reqs: &mut Vec<JobRequest>,
     next_id: &mut u64,
-    config: &BatchConfig,
+    ctrl: &BatcherControl,
     metrics: &Metrics,
     master: &mpsc::Sender<MasterMsg>,
 ) {
@@ -199,7 +306,7 @@ fn flush(
     while !kept.is_empty() {
         let entry = Arc::clone(&kept[0].entry);
         let cap = effective_max_batch(
-            config.max_batch,
+            ctrl.max_batch.load(Ordering::Relaxed),
             entry.supported_widths.as_deref(),
         );
         let take = cap.min(kept.len());
@@ -316,7 +423,7 @@ mod tests {
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
-        let _h = spawn(
+        let (_h, _ctrl) = spawn(
             BatchConfig {
                 max_batch: 2,
                 max_wait_ms: 10_000.0, // deadline never fires in this test
@@ -345,7 +452,7 @@ mod tests {
     fn timeout_flushes_partial_batch() {
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
-        let _h = spawn(
+        let (_h, _ctrl) = spawn(
             BatchConfig {
                 max_batch: 100,
                 max_wait_ms: 20.0,
@@ -369,7 +476,7 @@ mod tests {
     fn pads_to_supported_width() {
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
-        let _h = spawn(
+        let (_h, _ctrl) = spawn(
             BatchConfig {
                 max_batch: 3,
                 max_wait_ms: 20.0,
@@ -427,7 +534,7 @@ mod tests {
         // job whose pad columns are zero.
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
-        let _h = spawn(
+        let (_h, _ctrl) = spawn(
             BatchConfig {
                 max_batch: 4,
                 max_wait_ms: 10.0,
@@ -455,7 +562,7 @@ mod tests {
         // at 2, never exceeding what the backend can serve.
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
-        let _h = spawn(
+        let (_h, _ctrl) = spawn(
             BatchConfig {
                 max_batch: 5,
                 max_wait_ms: 10_000.0,
@@ -485,7 +592,7 @@ mod tests {
         // column in submit order within a batch.
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
-        let _h = spawn(
+        let (_h, _ctrl) = spawn(
             BatchConfig {
                 max_batch: 4,
                 max_wait_ms: 50.0,
@@ -521,7 +628,7 @@ mod tests {
         // interleaved within one batch window.
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
-        let _h = spawn(
+        let (_h, _ctrl) = spawn(
             BatchConfig {
                 max_batch: 2,
                 max_wait_ms: 10_000.0,
@@ -549,7 +656,7 @@ mod tests {
     fn higher_priority_dispatches_first_within_flush() {
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
-        let _h = spawn(
+        let (_h, _ctrl) = spawn(
             BatchConfig {
                 max_batch: 2,
                 max_wait_ms: 30.0,
@@ -586,7 +693,7 @@ mod tests {
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
-        let _h = spawn(
+        let (_h, _ctrl) = spawn(
             BatchConfig {
                 max_batch: 8,
                 max_wait_ms: 30.0,
@@ -623,7 +730,7 @@ mod tests {
     fn closing_the_channel_flushes_tails_and_sends_drain() {
         let (req_tx, req_rx) = mpsc::channel();
         let (master_tx, master_rx) = mpsc::channel();
-        let h = spawn(
+        let (h, _ctrl) = spawn(
             BatchConfig {
                 max_batch: 100,
                 max_wait_ms: 10_000.0, // window won't fire: drain must
@@ -656,5 +763,63 @@ mod tests {
         }
         assert_eq!(batches, 2);
         assert!(drained, "batcher must hand the master the drain baton");
+    }
+
+    #[test]
+    fn pause_holds_dispatch_and_resume_releases_it() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let (_h, ctrl) = spawn(
+            BatchConfig {
+                max_batch: 1, // every request would flush instantly
+                max_wait_ms: 1.0,
+            },
+            Arc::new(Metrics::new()),
+            req_rx,
+            master_tx,
+        )
+        .expect("spawn batcher");
+        assert!(
+            ctrl.pause(Duration::from_secs(5)),
+            "pause must be acknowledged"
+        );
+        let entry = mk_entry(1, None);
+        let (r, _s) = mk_request(&entry, 3.0, 0);
+        req_tx.send(r).unwrap();
+        // Paused: nothing may reach the master even past cap + window.
+        assert!(
+            master_rx.recv_timeout(Duration::from_millis(150)).is_err(),
+            "a paused batcher must not dispatch"
+        );
+        ctrl.resume();
+        let (job, replies) = recv_batch(&master_rx);
+        assert_eq!(replies.len(), 1);
+        assert_eq!(job.x[(0, 0)], 3.0, "buffered request flushes on resume");
+    }
+
+    #[test]
+    fn set_batching_retunes_cap_live() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (master_tx, master_rx) = mpsc::channel();
+        let (_h, ctrl) = spawn(
+            BatchConfig {
+                max_batch: 100,
+                max_wait_ms: 10_000.0, // window never fires
+            },
+            Arc::new(Metrics::new()),
+            req_rx,
+            master_tx,
+        )
+        .expect("spawn batcher");
+        // Drop the cap to 2: the second request must flush the lane.
+        ctrl.set_batching(2, 10_000.0);
+        let entry = mk_entry(1, None);
+        for (i, v) in [1.0, 2.0].into_iter().enumerate() {
+            let (r, _s) = mk_request(&entry, v, i as u64);
+            req_tx.send(r).unwrap();
+        }
+        let (job, replies) = recv_batch(&master_rx);
+        assert_eq!(replies.len(), 2);
+        assert_eq!(job.x.shape(), (1, 2));
     }
 }

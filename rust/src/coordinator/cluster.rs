@@ -31,16 +31,35 @@
 //! [`Cluster`] remains as the single-tenant convenience facade
 //! (`launch(&config, &A)` = core + one model named
 //! [`DEFAULT_MODEL`]).
+//!
+//! # Hot reload
+//!
+//! The core is also the control plane's execution target: it tracks
+//! the compiled scenario artifact it was launched from as a
+//! generation-stamped `ActiveArtifact`, and
+//! [`ClusterCore::load_artifact`] hot-swaps to a new artifact without
+//! dropping in-flight jobs. **Light** rollouts (model table, serving
+//! limits, batching knobs — see [`controlplane::classify`]) apply
+//! in-place through atomics and registry updates. **Heavy** rollouts
+//! (a changed per-group `k1` recovery-threshold plan) re-encode every
+//! retained model under the new scheme *first*, then quiesce — pause
+//! the batcher (buffering, not bouncing, new work) and wait for the
+//! master to report zero in-flight jobs — cut over (re-ship shards,
+//! [`MasterMsg::Reconfigure`], [`SubmasterMsg::Swap`]), and resume.
+//! Any validation failure before the cut-over leaves the cluster
+//! untouched ([`Error::Incompatible`]); [`ClusterCore::rollback`]
+//! restores the previous generation through the same machinery.
 
 use crate::coding::CodedScheme;
+use crate::controlplane::{self, AdminControl, RolloutKind};
 use crate::coordinator::backend::{ComputeBackend, WorkerShard};
-use crate::coordinator::batcher;
+use crate::coordinator::batcher::{self, BatcherControl};
 use crate::coordinator::chaos::{FaultInjector, LivenessConfig};
 use crate::coordinator::fault::{FaultConfig, FaultState};
 use crate::coordinator::master;
 use crate::coordinator::messages::{
     CompletionSlot, JobRequest, MasterMsg, ModelEntry, ModelId, RequestId,
-    SubmasterMsg, WorkerCmd, WorkerLink,
+    SchemeSwap, SubmasterMsg, WorkerCmd, WorkerLink,
 };
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot, ModelMetricsSnapshot};
 use crate::coordinator::submaster::{self, LinkDelay};
@@ -56,7 +75,7 @@ use crate::transport::{Transport, TransportAddr};
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -130,8 +149,10 @@ struct ServiceState {
     accepting: AtomicBool,
     /// Request-id allocator.
     next_req: AtomicU64,
-    /// Applied when `SubmitOptions::deadline` is `None`.
-    default_deadline: Duration,
+    /// Applied when `SubmitOptions::deadline` is `None`, in
+    /// microseconds — atomic so a light rollout can retune it while
+    /// submissions race.
+    default_deadline_us: AtomicU64,
 }
 
 /// Handle to one in-flight request, backed by a shared completion slot:
@@ -234,8 +255,12 @@ impl ClientHandle {
         Metrics::inc(&self.state.metrics.requests);
         Metrics::inc(&entry.accepted);
         let submitted_at = Instant::now();
-        let deadline =
-            submitted_at + opts.deadline.unwrap_or(self.state.default_deadline);
+        let deadline = submitted_at
+            + opts.deadline.unwrap_or_else(|| {
+                Duration::from_micros(
+                    self.state.default_deadline_us.load(Ordering::Relaxed),
+                )
+            });
         let req_id = RequestId(self.state.next_req.fetch_add(1, Ordering::Relaxed));
         let slot = Arc::new(CompletionSlot::new());
         // Send under the read lock: a send that succeeds is then
@@ -318,8 +343,9 @@ pub struct Supervisor {
     generation: AtomicU64,
     /// The serving scheme's erasure-pattern LU caches, dropped whenever
     /// shards are (re-)shipped — see
-    /// [`Supervisor::invalidate_decode_caches`].
-    caches: Vec<Arc<LuCache>>,
+    /// [`Supervisor::invalidate_decode_caches`]. Behind a mutex so a
+    /// heavy rollout can swap in the replacement scheme's caches.
+    caches: Mutex<Vec<Arc<LuCache>>>,
 }
 
 impl Supervisor {
@@ -341,6 +367,28 @@ impl Supervisor {
         self.model_shards.lock().push((id, shards));
     }
 
+    /// Replace a retained model's shards in place (heavy rollout
+    /// re-encode). Falls back to an append if the id is unknown, which
+    /// keeps the restart re-ship path correct either way.
+    fn replace_model(&self, id: ModelId, shards: Vec<WorkerShard>) {
+        let mut table = self.model_shards.lock();
+        match table.iter_mut().find(|(mid, _)| *mid == id) {
+            Some(slot) => slot.1 = shards,
+            None => table.push((id, shards)),
+        }
+    }
+
+    /// Drop a retained model's shards (light rollout removal): a
+    /// restarted worker no longer re-loads it.
+    fn forget_model(&self, id: ModelId) {
+        self.model_shards.lock().retain(|(mid, _)| *mid != id);
+    }
+
+    /// Swap in a replacement scheme's decode caches (heavy rollout).
+    fn set_decode_caches(&self, caches: Vec<Arc<LuCache>>) {
+        *self.caches.lock() = caches;
+    }
+
     /// The live fault switchboard (tests and the chaos CLI flip it).
     pub fn fault_state(&self) -> &Arc<FaultState> {
         &self.faults
@@ -358,7 +406,7 @@ impl Supervisor {
     /// stale-entry bug is ruled out by construction instead of argued
     /// about. Dropped entries count as evictions in the cache stats.
     pub fn invalidate_decode_caches(&self) {
-        for cache in &self.caches {
+        for cache in self.caches.lock().iter() {
             cache.invalidate_all();
         }
     }
@@ -367,6 +415,7 @@ impl Supervisor {
     /// NaN hit-rate for schemes without caches).
     pub fn decode_cache_stats(&self) -> LuCacheStats {
         self.caches
+            .lock()
             .iter()
             .map(|c| c.stats())
             .fold(LuCacheStats::default(), LuCacheStats::merge)
@@ -504,14 +553,44 @@ pub(crate) fn serving_topology(
     }
 }
 
+/// One compiled scenario artifact the cluster is (or was) serving,
+/// stamped with a monotonically increasing generation number.
+struct ActiveArtifact {
+    /// 1 at launch, +1 per completed rollout; a rollback returns to
+    /// the previous artifact's number.
+    generation: u64,
+    /// The encoded `.hca` bytes (empty if launch-time compilation was
+    /// impossible, e.g. an exotic hand-built config).
+    bytes: Vec<u8>,
+    /// The decoded config — the classification baseline for the next
+    /// rollout.
+    config: ClusterConfig,
+}
+
+/// Current + previous artifact; `previous` is what [`ClusterCore::rollback`]
+/// restores.
+struct RolloutState {
+    current: ActiveArtifact,
+    previous: Option<ActiveArtifact>,
+}
+
+/// How long a rollout waits for the batcher to acknowledge its pause.
+const PAUSE_GRACE: Duration = Duration::from_secs(5);
+
 /// The owning half of the job service: thread tree + model registry.
 pub struct ClusterCore {
     state: Arc<ServiceState>,
-    scheme: Arc<dyn CodedScheme>,
+    /// Behind a lock so a heavy rollout can swap schemes while client
+    /// handles and registrations race.
+    scheme: RwLock<Arc<dyn CodedScheme>>,
     backend: ComputeBackend,
     /// Worker seats, fault switchboard and retained shards — the
     /// crash/restart machinery (also the [`FaultInjector`]).
     supervisor: Arc<Supervisor>,
+    /// The downstream fan-out to the submasters, retained so rollouts
+    /// can broadcast [`SubmasterMsg::Swap`] (the master holds its own
+    /// clone).
+    transport: Arc<dyn Transport>,
     /// The socket hub when `transport.mode = "socket"`: owns the
     /// listener and per-group connections, doubles as the
     /// [`FaultInjector`] (severs become real teardowns).
@@ -520,8 +599,18 @@ pub struct ClusterCore {
     /// Joined first at shutdown (see `shutdown_inner`): the drain
     /// protocol must not depend on this thread being healthy.
     batcher: Option<thread::JoinHandle<()>>,
+    /// Live batching knobs + the rollout pause/resume handshake.
+    batcher_ctrl: Arc<BatcherControl>,
+    /// Every registered model's original matrix, retained so a heavy
+    /// rollout can re-encode under the replacement scheme.
+    matrices: Mutex<Vec<(String, ModelId, Arc<Matrix>)>>,
+    /// The artifact lineage; also the rollout mutex — at most one
+    /// rollout or rollback runs at a time.
+    rollout: Mutex<RolloutState>,
     next_model: AtomicU32,
-    queue_cap: usize,
+    /// Per-model admission cap applied to registrations; atomic so a
+    /// light rollout can retune it.
+    queue_cap: AtomicUsize,
 }
 
 impl ClusterCore {
@@ -672,7 +761,7 @@ impl ClusterCore {
             model_shards: Mutex::default(),
             respawned: Mutex::default(),
             generation: AtomicU64::new(0),
-            caches: scheme.decode_caches(),
+            caches: Mutex::new(scheme.decode_caches()),
         });
         let (transport, hub): (Arc<dyn Transport>, Option<Arc<SocketHub>>) = if socket_mode {
             let addr = TransportAddr::parse(&config.transport.listen)?;
@@ -714,7 +803,7 @@ impl ClusterCore {
         };
         threads.push(master::spawn(
             Arc::clone(&scheme),
-            transport,
+            Arc::clone(&transport),
             Arc::clone(&metrics),
             Duration::from_secs_f64(config.serving.drain_ms / 1e3),
             liveness,
@@ -722,7 +811,7 @@ impl ClusterCore {
             master_rx,
         )?);
         let (req_tx, req_rx) = mpsc::channel::<JobRequest>();
-        let batcher = batcher::spawn(
+        let (batcher, batcher_ctrl) = batcher::spawn(
             config.batching.clone(),
             Arc::clone(&metrics),
             req_rx,
@@ -735,31 +824,53 @@ impl ClusterCore {
             metrics,
             accepting: AtomicBool::new(true),
             next_req: AtomicU64::new(0),
-            default_deadline: Duration::from_secs_f64(
-                config.serving.default_deadline_ms / 1e3,
+            default_deadline_us: AtomicU64::new(
+                (config.serving.default_deadline_ms * 1e3) as u64,
             ),
         });
+        // Generation 1 = the launch config itself, compiled to its
+        // artifact form so `hiercode admin status` and rollback have a
+        // baseline (empty bytes if the config has no artifact
+        // spelling — the config copy is authoritative either way).
+        let launch_artifact = ActiveArtifact {
+            generation: 1,
+            bytes: controlplane::compile(config).unwrap_or_default(),
+            config: config.clone(),
+        };
+        state
+            .metrics
+            .artifact_generation
+            .store(1, Ordering::Relaxed);
+        let scheme_name = scheme.name();
+        let scheme_workers = scheme.num_workers();
         let core = Self {
             state,
-            scheme,
+            scheme: RwLock::new(scheme),
             backend,
             supervisor,
+            transport,
             hub,
             threads,
             batcher: Some(batcher),
+            batcher_ctrl,
+            matrices: Mutex::default(),
+            rollout: Mutex::new(RolloutState {
+                current: launch_artifact,
+                previous: None,
+            }),
             next_model: AtomicU32::new(0),
-            queue_cap: config.serving.queue_cap,
+            queue_cap: AtomicUsize::new(config.serving.queue_cap),
         };
         crate::log_info!(
             "cluster",
             "service up: {} ({} workers in {} groups), backend={}, {} threads, \
              queue cap {}/model",
-            core.scheme.name(),
-            core.scheme.num_workers(),
+            scheme_name,
+            scheme_workers,
             topology.n2(),
             if config.runtime.use_pjrt { "pjrt" } else { "native" },
             core.threads.len(),
-            core.queue_cap
+            config.serving.queue_cap
         );
         // The config's model table (synthetic seeded matrices — the
         // serve/loadgen multi-tenant setup in config form).
@@ -781,13 +892,14 @@ impl ClusterCore {
                 "model name must be non-empty".into(),
             ));
         }
+        let scheme = self.scheme();
         let (m, d) = a.shape();
-        let div = self.scheme.row_divisor();
+        let div = scheme.row_divisor();
         if m % div != 0 {
             return Err(Error::InvalidParams(format!(
                 "model '{name}': matrix rows {m} not divisible by the {} \
                  scheme's row divisor {div}",
-                self.scheme.name()
+                scheme.name()
             )));
         }
         // Cheap duplicate pre-check — don't pay the encode for an
@@ -801,8 +913,8 @@ impl ClusterCore {
         // Encode + narrow off-lock: this is the expensive part, and
         // holding the table lock here would stall every concurrent
         // submission (they take the read lock) for its duration.
-        let shards = self.scheme.encode(a)?;
-        debug_assert_eq!(shards.len(), self.scheme.num_workers());
+        let shards = scheme.encode(a)?;
+        debug_assert_eq!(shards.len(), scheme.num_workers());
         let shard_shape = (shards[0].rows(), shards[0].cols());
         let supported_widths = self
             .backend
@@ -838,6 +950,11 @@ impl ClusterCore {
         // sees this model in its snapshot or the Loads below go through
         // the link it just swapped in (see `Supervisor::retain_model`).
         self.supervisor.retain_model(id, worker_shards.clone());
+        // Retain the original matrix too: a heavy rollout re-encodes
+        // every model under the replacement scheme.
+        self.matrices
+            .lock()
+            .push((name.to_string(), id, Arc::new(a.clone())));
         // Socket mode: the hub retains the `f64` shard matrices and
         // ships `Load` frames to every connected node, re-shipping on
         // reconnect (the socket analogue of the supervisor's restart
@@ -878,7 +995,7 @@ impl ClusterCore {
                 name,
                 d,
                 m,
-                self.queue_cap,
+                self.queue_cap.load(Ordering::Relaxed),
                 supported_widths,
             )),
         );
@@ -900,9 +1017,10 @@ impl ClusterCore {
         }
     }
 
-    /// The cluster's coding scheme.
-    pub fn scheme(&self) -> &Arc<dyn CodedScheme> {
-        &self.scheme
+    /// The cluster's current coding scheme (an owned handle — a heavy
+    /// rollout may swap the underlying scheme at any time).
+    pub fn scheme(&self) -> Arc<dyn CodedScheme> {
+        Arc::clone(&*self.scheme.read())
     }
 
     /// Names of the registered models, sorted.
@@ -984,6 +1102,368 @@ impl ClusterCore {
         snap
     }
 
+    // ------------------------------------------------------------------
+    // Control plane: artifact hot reload
+    // ------------------------------------------------------------------
+
+    /// The generation number of the artifact currently being served
+    /// (1 = the launch config; +1 per completed rollout).
+    pub fn artifact_generation(&self) -> u64 {
+        self.rollout.lock().current.generation
+    }
+
+    /// Hot-swap to a compiled `.hca` scenario artifact without
+    /// dropping in-flight jobs. Light rollouts (model table, serving
+    /// limits, batching knobs) apply in place; heavy rollouts (a
+    /// changed per-group `k1` plan) re-encode every retained model,
+    /// quiesce, cut over, and resume. Incompatible candidates (changed
+    /// scheme, `k2`, worker layout, …) reject with
+    /// [`Error::Incompatible`] before anything is applied. Returns the
+    /// new generation number.
+    pub fn load_artifact(&self, bytes: &[u8]) -> Result<u64> {
+        let artifact = controlplane::decode(bytes)?;
+        let candidate = artifact.config;
+        // The rollout lock serializes rollouts and rollbacks end to
+        // end, and makes `current.config` a stable classification
+        // baseline for the duration.
+        let mut ro = self.rollout.lock();
+        let kind = controlplane::classify(&ro.current.config, &candidate)?;
+        match kind {
+            RolloutKind::Light => {
+                self.apply_light(&ro.current.config, &candidate)?;
+            }
+            RolloutKind::Heavy => {
+                self.apply_heavy(&ro.current.config, &candidate)?;
+                // A heavy artifact may retune knobs and the model
+                // table too; reconcile those under the new scheme.
+                self.apply_light(&ro.current.config, &candidate)?;
+            }
+        }
+        let generation = ro.current.generation + 1;
+        let displaced = std::mem::replace(
+            &mut ro.current,
+            ActiveArtifact {
+                generation,
+                bytes: bytes.to_vec(),
+                config: candidate,
+            },
+        );
+        ro.previous = Some(displaced);
+        Metrics::inc(&self.state.metrics.rollouts);
+        self.state
+            .metrics
+            .artifact_generation
+            .store(generation, Ordering::Relaxed);
+        crate::log_info!(
+            "cluster",
+            "rollout complete ({kind:?}): serving artifact generation {generation}"
+        );
+        Ok(generation)
+    }
+
+    /// Restore the previous artifact generation through the same
+    /// light/heavy machinery as a rollout. The displaced artifact
+    /// becomes the new `previous`, so a rollback can itself be undone.
+    /// Returns the restored generation number.
+    pub fn rollback(&self) -> Result<u64> {
+        let mut ro = self.rollout.lock();
+        let prev = match ro.previous.take() {
+            Some(p) => p,
+            None => {
+                return Err(Error::Incompatible(
+                    "no previous artifact generation to roll back to".into(),
+                ))
+            }
+        };
+        let outcome = (|| {
+            match controlplane::classify(&ro.current.config, &prev.config)? {
+                RolloutKind::Light => {
+                    self.apply_light(&ro.current.config, &prev.config)
+                }
+                RolloutKind::Heavy => {
+                    self.apply_heavy(&ro.current.config, &prev.config)?;
+                    self.apply_light(&ro.current.config, &prev.config)
+                }
+            }
+        })();
+        if let Err(e) = outcome {
+            ro.previous = Some(prev);
+            return Err(e);
+        }
+        let generation = prev.generation;
+        let displaced = std::mem::replace(&mut ro.current, prev);
+        ro.previous = Some(displaced);
+        Metrics::inc(&self.state.metrics.rollbacks);
+        self.state
+            .metrics
+            .artifact_generation
+            .store(generation, Ordering::Relaxed);
+        crate::log_info!(
+            "cluster",
+            "rollback complete: serving artifact generation {generation} again"
+        );
+        Ok(generation)
+    }
+
+    /// Compute a re-optimized candidate artifact from live state: the
+    /// current config with its per-group `k1` plan re-run through the
+    /// allocator, each group's service rate discounted by its
+    /// dead-worker fraction (when liveness tracking has swept).
+    /// Returns compiled candidate bytes; **nothing is applied** — feed
+    /// the bytes back through [`ClusterCore::load_artifact`] to adopt.
+    pub fn reoptimize_artifact(&self) -> Result<Vec<u8>> {
+        let snap = self.metrics();
+        let config = self.rollout.lock().current.config.clone();
+        let topo = &config.code.topology;
+        if topo.groups.is_empty() {
+            return Err(Error::InvalidParams(
+                "no groups to re-optimize".into(),
+            ));
+        }
+        let mut n1 = Vec::with_capacity(topo.groups.len());
+        let mut mu1 = Vec::with_capacity(topo.groups.len());
+        let mut mu2 = Vec::with_capacity(topo.groups.len());
+        let mut total_k1 = 0usize;
+        for (g, spec) in topo.groups.iter().enumerate() {
+            n1.push(spec.n1);
+            total_k1 += spec.k1;
+            let slow = spec.slowdown().max(1e-9);
+            let mut rate1 = 1.0 / (spec.worker.mean() * slow).max(1e-9);
+            // Liveness overlay: a group missing workers is effectively
+            // slower, so discount its rate by the alive fraction and
+            // let the allocator shift recovery burden off it.
+            if let Some(alive) =
+                snap.per_group.get(g).and_then(|pg| pg.alive_workers)
+            {
+                if (alive as usize) < spec.n1 && spec.n1 > 0 {
+                    rate1 *= (alive as f64 / spec.n1 as f64).max(1e-3);
+                }
+            }
+            mu1.push(rate1);
+            mu2.push(1.0 / (spec.link.mean() * slow).max(1e-9));
+        }
+        let problem = crate::sim::allocate::AllocationProblem {
+            n1,
+            k2: topo.k2,
+            mu1,
+            mu2,
+            total_k1,
+        };
+        let alloc = crate::sim::allocate::optimize(&problem)?;
+        let mut cand = config.clone();
+        for (g, spec) in cand.code.topology.groups.iter_mut().enumerate() {
+            spec.k1 = alloc.k1.get(g).copied().unwrap_or(spec.k1);
+        }
+        if let Some(first) = cand.code.topology.groups.first() {
+            cand.code.k1 = first.k1;
+        }
+        controlplane::compile(&cand)
+    }
+
+    /// Apply the live-tunable half of a rollout: serving limits,
+    /// batching knobs, and the config-level model table. Synthetic
+    /// spec validation runs before any mutation; models registered at
+    /// runtime (absent from both spec tables) are left untouched.
+    fn apply_light(
+        &self,
+        current: &ClusterConfig,
+        cand: &ClusterConfig,
+    ) -> Result<()> {
+        let scheme = self.scheme();
+        let div = scheme.row_divisor();
+        for spec in &cand.serving.models {
+            if spec.rows % div != 0 {
+                return Err(Error::Incompatible(format!(
+                    "model '{}': {} rows not divisible by the {} scheme's \
+                     row divisor {div} (nothing applied)",
+                    spec.name,
+                    spec.rows,
+                    scheme.name()
+                )));
+            }
+        }
+        // Serving limits: registration default + every live gate.
+        self.queue_cap
+            .store(cand.serving.queue_cap, Ordering::Relaxed);
+        self.state.default_deadline_us.store(
+            (cand.serving.default_deadline_ms * 1e3) as u64,
+            Ordering::Relaxed,
+        );
+        for entry in self.state.models.read().values() {
+            entry.admission.set_cap(cand.serving.queue_cap);
+        }
+        // Batching knobs, applied to the running batcher.
+        self.batcher_ctrl
+            .set_batching(cand.batching.max_batch, cand.batching.max_wait_ms);
+        // Model table reconcile. Removals first, then adds/replacements.
+        for spec in &current.serving.models {
+            if !cand.serving.models.iter().any(|s| s.name == spec.name) {
+                self.unregister_model(&spec.name);
+            }
+        }
+        for spec in &cand.serving.models {
+            let unchanged = current.serving.models.iter().any(|s| s == spec);
+            let registered =
+                self.state.models.read().contains_key(&spec.name);
+            if unchanged && registered {
+                continue;
+            }
+            if registered {
+                self.unregister_model(&spec.name);
+            }
+            let mut mr = Rng::new(spec.seed);
+            let a = Matrix::from_fn(spec.rows, spec.cols, |_, _| {
+                mr.uniform(-1.0, 1.0)
+            });
+            self.register_model(&spec.name, &a)?;
+        }
+        Ok(())
+    }
+
+    /// Apply a heavy rollout (changed per-group `k1` plan): re-encode
+    /// every retained model under the replacement scheme, quiesce the
+    /// dispatch path, cut over, resume. Every failure before the
+    /// cut-over leaves the cluster running the old plan untouched.
+    fn apply_heavy(
+        &self,
+        current: &ClusterConfig,
+        cand: &ClusterConfig,
+    ) -> Result<()> {
+        if self.hub.is_some() {
+            return Err(Error::Incompatible(
+                "heavy rollout (changed k1 plan) requires the in-memory \
+                 transport: socket-mode node processes must relaunch with \
+                 the new artifact instead"
+                    .into(),
+            ));
+        }
+        if matches!(self.backend, ComputeBackend::Pjrt(_)) {
+            return Err(Error::Incompatible(
+                "heavy rollout requires the native backend: the re-encoded \
+                 shard shapes have no AOT'd PJRT artifacts"
+                    .into(),
+            ));
+        }
+        let new_scheme = cand.build_scheme()?;
+        let div = new_scheme.row_divisor();
+        // Phase 1 — validate and re-encode under the new scheme,
+        // before any mutation. The matrices registry snapshot is
+        // cheap (Arc clones); encoding is the expensive part and runs
+        // entirely off-lock.
+        let matrices: Vec<(String, ModelId, Arc<Matrix>)> = self
+            .matrices
+            .lock()
+            .iter()
+            .map(|(n, id, a)| (n.clone(), *id, Arc::clone(a)))
+            .collect();
+        for (name, _, a) in &matrices {
+            if a.rows() % div != 0 {
+                return Err(Error::Incompatible(format!(
+                    "model '{name}': {} rows not divisible by the new \
+                     scheme's row divisor {div} (nothing applied)",
+                    a.rows()
+                )));
+            }
+        }
+        let mut reencoded: Vec<(ModelId, Vec<WorkerShard>)> =
+            Vec::with_capacity(matrices.len());
+        for (_, id, a) in &matrices {
+            let shards = new_scheme.encode(a)?;
+            let mut ws = Vec::with_capacity(shards.len());
+            for shard in &shards {
+                ws.push(WorkerShard::new(shard)?);
+            }
+            reencoded.push((*id, ws));
+        }
+        // Phase 2 — quiesce. The batcher pauses (submissions keep
+        // being accepted and buffer in its lanes — nothing bounces),
+        // then the master acks once its in-flight job count hits zero.
+        if !self.batcher_ctrl.pause(PAUSE_GRACE) {
+            self.batcher_ctrl.resume();
+            return Err(Error::Coordinator(
+                "rollout aborted: batcher did not acknowledge the pause \
+                 (nothing applied)"
+                    .into(),
+            ));
+        }
+        let (ack_tx, ack_rx) = mpsc::channel();
+        if self
+            .state
+            .master_tx
+            .send(MasterMsg::Quiesce(ack_tx))
+            .is_err()
+        {
+            self.batcher_ctrl.resume();
+            return Err(Error::Coordinator(
+                "rollout aborted: master channel closed (nothing applied)"
+                    .into(),
+            ));
+        }
+        let grace = Duration::from_secs_f64(current.serving.drain_ms / 1e3);
+        if ack_rx.recv_timeout(grace).is_err() {
+            self.batcher_ctrl.resume();
+            return Err(Error::Coordinator(format!(
+                "rollout aborted: in-flight jobs did not drain within \
+                 {:.0}ms (nothing applied)",
+                current.serving.drain_ms
+            )));
+        }
+        // Phase 3 — cut over on an idle tree. Channel FIFO carries the
+        // ordering guarantees: each worker sees its Load before any
+        // post-resume Compute, the master sees Reconfigure before any
+        // post-resume Batch, and each submaster sees Swap before any
+        // post-resume Job. Model entries (ids, dims, admission gates)
+        // are untouched — buffered requests stay valid across the
+        // swap.
+        for (id, ws) in reencoded {
+            self.supervisor.replace_model(id, ws.clone());
+            for (seat, shard) in self.supervisor.seats.iter().zip(ws) {
+                let _ = seat.link.read().send(WorkerCmd::Load {
+                    model: id,
+                    shard: Box::new(shard),
+                });
+            }
+        }
+        let _ = self
+            .state
+            .master_tx
+            .send(MasterMsg::Reconfigure(SchemeSwap(Arc::clone(&new_scheme))));
+        for g in 0..self.transport.groups() {
+            self.transport
+                .send(g, SubmasterMsg::Swap(SchemeSwap(Arc::clone(&new_scheme))));
+        }
+        self.supervisor
+            .set_decode_caches(new_scheme.decode_caches());
+        *self.scheme.write() = new_scheme;
+        // Phase 4 — resume dispatch: buffered lanes flush under the
+        // new plan.
+        self.batcher_ctrl.resume();
+        crate::log_info!(
+            "cluster",
+            "heavy rollout cut over: new k1 plan [{}]",
+            cand.code
+                .topology
+                .groups
+                .iter()
+                .map(|g| g.k1.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        Ok(())
+    }
+
+    /// Remove a model from the serving table. In-flight requests keep
+    /// the entry alive through their `Arc`; retained shards and the
+    /// matrix are forgotten so restarts stop re-shipping them.
+    fn unregister_model(&self, name: &str) {
+        let entry = self.state.models.write().remove(name);
+        if let Some(entry) = entry {
+            self.supervisor.forget_model(entry.id);
+            self.matrices.lock().retain(|(n, _, _)| n.as_str() != name);
+            crate::log_info!("cluster", "unregistered model '{name}'");
+        }
+    }
+
     /// Graceful shutdown: refuse new submissions, drain queued and
     /// in-flight jobs (reply or fail every accepted request — bounded
     /// by `serving.drain_ms`), stop all threads.
@@ -1026,6 +1506,52 @@ impl ClusterCore {
 impl Drop for ClusterCore {
     fn drop(&mut self) {
         self.shutdown_inner();
+    }
+}
+
+/// The admin surface: `hiercode admin` talks to a running core through
+/// this vtable (see [`controlplane::admin`]).
+impl AdminControl for ClusterCore {
+    fn status_json(&self) -> String {
+        let (generation, rollback_available) = {
+            let ro = self.rollout.lock();
+            (ro.current.generation, ro.previous.is_some())
+        };
+        let scheme = self.scheme();
+        let names: Vec<String> = self
+            .model_names()
+            .iter()
+            .map(|n| format!("\"{}\"", n.replace('\\', "\\\\").replace('"', "\\\"")))
+            .collect();
+        format!(
+            "{{\"scheme\": \"{}\", \"generation\": {}, \
+             \"rollback_available\": {}, \"groups\": {}, \"workers\": {}, \
+             \"transport\": \"{}\", \"accepting\": {}, \"models\": [{}]}}",
+            scheme.name(),
+            generation,
+            rollback_available,
+            self.transport.groups(),
+            scheme.num_workers(),
+            if self.hub.is_some() { "socket" } else { "memory" },
+            self.state.accepting.load(Ordering::Acquire),
+            names.join(", ")
+        )
+    }
+
+    fn metrics_json(&self) -> String {
+        self.metrics().to_json()
+    }
+
+    fn reoptimize(&self) -> Result<Vec<u8>> {
+        self.reoptimize_artifact()
+    }
+
+    fn rollout(&self, artifact: &[u8]) -> Result<u64> {
+        self.load_artifact(artifact)
+    }
+
+    fn rollback(&self) -> Result<u64> {
+        ClusterCore::rollback(self)
     }
 }
 
@@ -1085,8 +1611,8 @@ impl Cluster {
         self.d
     }
 
-    /// The cluster's coding scheme.
-    pub fn scheme(&self) -> &Arc<dyn CodedScheme> {
+    /// The cluster's current coding scheme.
+    pub fn scheme(&self) -> Arc<dyn CodedScheme> {
         self.core.scheme()
     }
 
@@ -1420,5 +1946,133 @@ mod tests {
         let client = core.handle();
         core.shutdown();
         assert!(client.submit_to("m", vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn light_rollout_retunes_knobs_and_model_table() {
+        use crate::config::schema::ModelSpec;
+        let mut config = ClusterConfig::demo(3, 2, 3, 2);
+        config.serving.models.push(ModelSpec {
+            name: "alpha".into(),
+            rows: 8,
+            cols: 4,
+            seed: 7,
+        });
+        let core = ClusterCore::launch(&config).unwrap();
+        assert_eq!(core.model_names(), vec!["alpha"]);
+        assert_eq!(core.artifact_generation(), 1);
+        let mut cand = config.clone();
+        cand.serving.queue_cap = 128;
+        cand.batching.max_batch = 7;
+        cand.serving.models.clear();
+        cand.serving.models.push(ModelSpec {
+            name: "beta".into(),
+            rows: 16,
+            cols: 2,
+            seed: 9,
+        });
+        let bytes = crate::controlplane::compile(&cand).unwrap();
+        assert_eq!(core.load_artifact(&bytes).unwrap(), 2);
+        assert_eq!(core.model_names(), vec!["beta"]);
+        let client = core.handle();
+        assert!(client
+            .submit_to("beta", vec![0.5, -1.0])
+            .unwrap()
+            .wait()
+            .is_ok());
+        assert!(client.submit_to("alpha", vec![1.0; 4]).is_err());
+        // Rollback restores generation 1 and the old table.
+        assert_eq!(core.rollback().unwrap(), 1);
+        assert_eq!(core.artifact_generation(), 1);
+        assert_eq!(core.model_names(), vec!["alpha"]);
+        assert!(client
+            .submit_to("alpha", vec![1.0; 4])
+            .unwrap()
+            .wait()
+            .is_ok());
+        let m = core.metrics();
+        assert_eq!(m.rollouts, 1);
+        assert_eq!(m.rollbacks, 1);
+        assert_eq!(m.artifact_generation, 1);
+        core.shutdown();
+    }
+
+    #[test]
+    fn heavy_rollout_swaps_k1_plan_without_dropping_jobs() {
+        let config = ClusterConfig::demo(4, 2, 3, 2);
+        let core = ClusterCore::launch(&config).unwrap();
+        // Rows divisible by the old divisor (4) and the new plan's
+        // lcm(2·3, 2·2, 2·1) = 12.
+        let a = test_matrix(24, 4, 40);
+        core.register_model("m", &a).unwrap();
+        let client = core.handle();
+        let mut handles = Vec::new();
+        let mut expects = Vec::new();
+        for i in 0..8 {
+            let mut r = Rng::new(500 + i);
+            let x: Vec<f64> = (0..4).map(|_| r.uniform(-1.0, 1.0)).collect();
+            expects.push(ops::matvec(&a, &x));
+            handles.push(client.submit_to("m", x).unwrap());
+        }
+        let mut cand = config.clone();
+        let plan = [3usize, 2, 1];
+        for (g, spec) in cand.code.topology.groups.iter_mut().enumerate() {
+            spec.k1 = plan[g];
+        }
+        cand.code.k1 = plan[0];
+        let bytes = crate::controlplane::compile(&cand).unwrap();
+        assert_eq!(core.load_artifact(&bytes).unwrap(), 2);
+        // Every pre-swap job completes with the right answer.
+        for (h, expect) in handles.into_iter().zip(expects) {
+            let y = h.wait().unwrap();
+            for (got, want) in y.iter().zip(expect.iter()) {
+                assert!((got - want).abs() < 1e-3);
+            }
+        }
+        // Post-swap submissions decode under the new plan.
+        let x = vec![1.0, -0.5, 0.25, 2.0];
+        let y = client.submit_to("m", x.clone()).unwrap().wait().unwrap();
+        let expect = ops::matvec(&a, &x);
+        for (got, want) in y.iter().zip(expect.iter()) {
+            assert!((got - want).abs() < 1e-3);
+        }
+        let m = core.metrics();
+        assert_eq!(m.rollouts, 1);
+        assert_eq!(m.artifact_generation, 2);
+        core.shutdown();
+    }
+
+    #[test]
+    fn incompatible_rollout_rejected_atomically() {
+        let config = ClusterConfig::demo(3, 2, 3, 2);
+        let core = ClusterCore::launch(&config).unwrap();
+        core.register_model("m", &test_matrix(8, 4, 41)).unwrap();
+        // Changed outer code dimension: structurally incompatible.
+        let mut cand = config.clone();
+        cand.code.k2 = 3;
+        cand.code.topology.k2 = 3;
+        let bytes = crate::controlplane::compile(&cand).unwrap();
+        assert!(matches!(
+            core.load_artifact(&bytes),
+            Err(Error::Incompatible(_))
+        ));
+        // Nothing applied: same generation, still serving.
+        assert_eq!(core.artifact_generation(), 1);
+        let client = core.handle();
+        assert!(client.submit_to("m", vec![1.0; 4]).unwrap().wait().is_ok());
+        assert!(matches!(core.rollback(), Err(Error::Incompatible(_))));
+        core.shutdown();
+    }
+
+    #[test]
+    fn corrupt_artifact_rejected() {
+        let config = ClusterConfig::demo(2, 1, 2, 1);
+        let core = ClusterCore::launch(&config).unwrap();
+        let mut bytes = crate::controlplane::compile(&config).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        assert!(core.load_artifact(&bytes).is_err());
+        assert_eq!(core.artifact_generation(), 1);
+        core.shutdown();
     }
 }

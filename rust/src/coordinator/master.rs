@@ -202,6 +202,12 @@ pub fn spawn(
                 "decode kernels: {}",
                 crate::linalg::dispatch::active_name()
             );
+            // Hot reload (`MasterMsg::Reconfigure`) swaps the scheme
+            // and everything derived from it; the rollout gate
+            // guarantees group count and sizes never change, so the
+            // failure detector built below stays valid across swaps.
+            let mut scheme = scheme;
+            let mut topo = topo;
             let mut jobs: HashMap<JobId, JobState> = HashMap::new();
             // Request → job lookup for O(1) cancellation. Entries are
             // consumed by CancelRequest; like the Done entries in
@@ -216,8 +222,13 @@ pub fn spawn(
             let mut drain = DrainState::new();
             // Absolute drain deadline, set when the drain begins.
             let mut drain_deadline: Option<Instant> = None;
+            // A pending quiesce acknowledgement: answered the moment
+            // the in-flight job count reaches zero (the batcher is
+            // paused first, so zero stays zero until the rollout
+            // resumes it).
+            let mut quiesce: Option<mpsc::Sender<()>> = None;
             // Failure detector over the liveness beacon streams.
-            let thresholds: Vec<usize> = topo.groups.iter().map(|g| g.k1).collect();
+            let mut thresholds: Vec<usize> = topo.groups.iter().map(|g| g.k1).collect();
             let group_sizes = topo.group_sizes();
             let mut detector = FailureDetector::new(
                 &group_sizes,
@@ -263,6 +274,13 @@ pub fn spawn(
                             last_sweep = Instant::now();
                             if can_exit {
                                 break;
+                            }
+                            // A sweep can settle the last in-flight job
+                            // (failed fast) — answer a waiting quiesce.
+                            if quiesce.is_some() && drain.active() == 0 {
+                                if let Some(ack) = quiesce.take() {
+                                    let _ = ack.send(());
+                                }
                             }
                             continue;
                         }
@@ -455,6 +473,32 @@ pub fn spawn(
                                 cancelled_reqs.insert(req);
                             }
                         }
+                    }
+                    MasterMsg::Reconfigure(swap) => {
+                        // Sent only while quiesced (no Active jobs), so
+                        // no decode session ever spans two encodings.
+                        scheme = swap.0;
+                        topo = scheme.topology();
+                        thresholds = topo.groups.iter().map(|g| g.k1).collect();
+                        crate::log_debug!(
+                            "master",
+                            "reconfigured: decoding under '{}'",
+                            scheme.name()
+                        );
+                    }
+                    MasterMsg::Quiesce(ack) => {
+                        if drain.active() == 0 {
+                            let _ = ack.send(());
+                        } else {
+                            quiesce = Some(ack);
+                        }
+                    }
+                }
+                // Answer a pending quiesce the moment the last in-flight
+                // job settles (every settle path falls through here).
+                if quiesce.is_some() && drain.active() == 0 {
+                    if let Some(ack) = quiesce.take() {
+                        let _ = ack.send(());
                     }
                 }
                 // A steady message stream (heartbeats, partials) keeps

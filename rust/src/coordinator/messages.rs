@@ -333,6 +333,24 @@ pub enum WorkerCmd {
     Shutdown,
 }
 
+/// A replacement coding scheme carried by hot-reload messages. The
+/// newtype exists because `Arc<dyn CodedScheme>` is neither `Debug`
+/// nor derivable-`Clone` inside the message enums, so both are
+/// implemented by hand (Debug prints the scheme's name).
+pub struct SchemeSwap(pub Arc<dyn crate::coding::CodedScheme>);
+
+impl Clone for SchemeSwap {
+    fn clone(&self) -> Self {
+        SchemeSwap(Arc::clone(&self.0))
+    }
+}
+
+impl std::fmt::Debug for SchemeSwap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SchemeSwap({})", self.0.name())
+    }
+}
+
 /// Everything a submaster thread receives (single-queue actor).
 #[derive(Debug)]
 pub enum SubmasterMsg {
@@ -347,6 +365,10 @@ pub enum SubmasterMsg {
     /// cadence; the submaster forwards it upstream while the group's
     /// uplink is alive).
     Heartbeat(usize),
+    /// Hot reload: decode subsequent jobs under this scheme. Sent only
+    /// while the cluster is quiesced (no jobs in flight), so no decode
+    /// session ever mixes encodings.
+    Swap(SchemeSwap),
     /// Exit.
     Shutdown,
 }
@@ -383,6 +405,13 @@ pub enum MasterMsg {
         /// In-group worker index, or `None` for the submaster itself.
         worker: Option<usize>,
     },
+    /// Hot reload: replace the master's decode scheme (and the derived
+    /// topology/thresholds). Sent only while quiesced, between jobs.
+    Reconfigure(SchemeSwap),
+    /// Hot reload: answer on the enclosed channel once no job is in
+    /// flight. The batcher is paused first, so once the drain set is
+    /// empty it stays empty until the rollout resumes it.
+    Quiesce(std::sync::mpsc::Sender<()>),
 }
 
 /// Group-local cancellation registry (§Perf): the submaster marks a job

@@ -100,6 +100,14 @@ pub struct Metrics {
     pub transport_reconnects: AtomicU64,
     /// Handshakes that ended in a `Reject` or a protocol/IO failure.
     pub transport_handshake_failures: AtomicU64,
+    /// Artifact rollouts completed by the control plane.
+    pub rollouts: AtomicU64,
+    /// Artifact rollbacks completed by the control plane.
+    pub rollbacks: AtomicU64,
+    /// Artifact generation currently served (gauge; stored by the
+    /// cluster at launch and after every rollout/rollback — 0 only on
+    /// a bare `Metrics` with no cluster behind it).
+    pub artifact_generation: AtomicU64,
     /// End-to-end request latency (submit → reply).
     latency: Mutex<Histogram>,
     /// Decode-only latency at the master.
@@ -222,6 +230,9 @@ impl Metrics {
             transport_handshake_failures: self
                 .transport_handshake_failures
                 .load(Ordering::Relaxed),
+            rollouts: self.rollouts.load(Ordering::Relaxed),
+            rollbacks: self.rollbacks.load(Ordering::Relaxed),
+            artifact_generation: self.artifact_generation.load(Ordering::Relaxed),
             latency_mean: lat.mean(),
             latency_p50: lat.quantile(0.5),
             latency_p95: lat.quantile(0.95),
@@ -359,6 +370,13 @@ pub struct MetricsSnapshot {
     pub transport_reconnects: u64,
     /// Handshakes that failed (rejects and protocol/IO failures).
     pub transport_handshake_failures: u64,
+    /// Artifact rollouts completed by the control plane.
+    pub rollouts: u64,
+    /// Artifact rollbacks completed by the control plane.
+    pub rollbacks: u64,
+    /// Artifact generation currently served (gauge; 0 on a bare
+    /// snapshot with no cluster behind it).
+    pub artifact_generation: u64,
     /// Mean end-to-end latency (s).
     pub latency_mean: f64,
     /// Median end-to-end latency (s).
@@ -467,6 +485,7 @@ impl MetricsSnapshot {
              \"transport_bytes_sent\": {}, \"transport_bytes_received\": {}, \
              \"transport_frames_sent\": {}, \"transport_frames_received\": {}, \
              \"transport_reconnects\": {}, \"transport_handshake_failures\": {},\n  \
+             \"rollouts\": {}, \"rollbacks\": {}, \"artifact_generation\": {},\n  \
              \"latency_mean_s\": {}, \"latency_p50_s\": {}, \"latency_p95_s\": {}, \
              \"latency_p99_s\": {},\n  \
              \"decode_mean_s\": {}, \"decode_p50_s\": {}, \"decode_p95_s\": {}, \
@@ -493,6 +512,9 @@ impl MetricsSnapshot {
             self.transport_frames_received,
             self.transport_reconnects,
             self.transport_handshake_failures,
+            self.rollouts,
+            self.rollbacks,
+            self.artifact_generation,
             jnum(self.latency_mean),
             jnum(self.latency_p50),
             jnum(self.latency_p95),
@@ -570,6 +592,11 @@ impl std::fmt::Display for MetricsSnapshot {
             self.transport_frames_received,
             self.transport_reconnects,
             self.transport_handshake_failures
+        )?;
+        writeln!(
+            f,
+            "control plane:   generation {}, {} rollouts, {} rollbacks",
+            self.artifact_generation, self.rollouts, self.rollbacks
         )?;
         writeln!(
             f,
@@ -836,6 +863,28 @@ mod tests {
                 .get("transport_reconnects")
                 .and_then(|j| j.as_usize()),
             Some(1)
+        );
+    }
+
+    #[test]
+    fn control_plane_counters_surface_in_snapshot_json_and_display() {
+        let m = Metrics::new();
+        Metrics::inc(&m.rollouts);
+        Metrics::inc(&m.rollouts);
+        Metrics::inc(&m.rollbacks);
+        m.artifact_generation.store(3, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.rollouts, 2);
+        assert_eq!(s.rollbacks, 1);
+        assert_eq!(s.artifact_generation, 3);
+        assert!(format!("{s}")
+            .contains("generation 3, 2 rollouts, 1 rollbacks"));
+        let v = crate::config::json::Json::parse(&s.to_json()).expect("valid JSON");
+        assert_eq!(v.get("rollouts").and_then(|j| j.as_usize()), Some(2));
+        assert_eq!(v.get("rollbacks").and_then(|j| j.as_usize()), Some(1));
+        assert_eq!(
+            v.get("artifact_generation").and_then(|j| j.as_usize()),
+            Some(3)
         );
     }
 

@@ -150,6 +150,9 @@ pub fn spawn(
                 "group {group} decode kernels: {}",
                 crate::linalg::dispatch::active_name()
             );
+            // Hot reload swaps the decode scheme between jobs
+            // ([`SubmasterMsg::Swap`], sent only while quiesced).
+            let mut scheme = scheme;
             let mut jobs: HashMap<JobId, GroupJob> = HashMap::new();
             // Announce liveness immediately (a severed uplink drops it,
             // which is the point: silence IS the failure signal).
@@ -187,6 +190,16 @@ pub fn spawn(
                             let _ = w.read().send(WorkerCmd::Shutdown);
                         }
                         break;
+                    }
+                    SubmasterMsg::Swap(swap) => {
+                        // Quiesced when sent: no live decode session
+                        // consumes products under the old inner code.
+                        scheme = swap.0;
+                        crate::log_debug!(
+                            "submaster",
+                            "group {group}: swapped to scheme '{}'",
+                            scheme.name()
+                        );
                     }
                     SubmasterMsg::Heartbeat(j) => {
                         // Relay the worker's beacon while our uplink is

@@ -30,6 +30,10 @@
 //! * [`coordinator`] — the runnable system: threaded master / submaster
 //!   / worker topology with batching, routing, straggler handling and
 //!   two-level parallel decoding on the request path.
+//! * [`controlplane`] — the control plane: compiled scenario artifacts
+//!   (versioned, checksummed `.hca` binaries), generation-stamped
+//!   zero-drop hot reload of the serving config, and the framed admin
+//!   protocol behind `hiercode compile` / `hiercode admin`.
 //! * [`sync`] — the synchronization facade the coordinator builds on:
 //!   poison-transparent locks, the admission gate and drain state
 //!   machine, and (under `--features modelcheck`) an in-repo
@@ -49,6 +53,7 @@
 pub mod cli;
 pub mod coding;
 pub mod config;
+pub mod controlplane;
 pub mod coordinator;
 pub mod figures;
 pub mod linalg;
@@ -86,6 +91,10 @@ pub enum Error {
     },
     /// The request's deadline expired before it was served.
     DeadlineExceeded,
+    /// A control-plane rollout was rejected because the candidate
+    /// artifact is incompatible with the running cluster (changed
+    /// scheme, group structure, or transport) — nothing was applied.
+    Incompatible(String),
     /// I/O errors.
     Io(std::io::Error),
 }
@@ -106,6 +115,9 @@ impl std::fmt::Display for Error {
             }
             Error::DeadlineExceeded => {
                 write!(f, "deadline exceeded before the request was served")
+            }
+            Error::Incompatible(m) => {
+                write!(f, "incompatible rollout (nothing applied): {m}")
             }
             Error::Io(e) => write!(f, "io error: {e}"),
         }

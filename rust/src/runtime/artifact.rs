@@ -57,11 +57,7 @@ impl ArtifactManifest {
     pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
         let v = Json::parse(text)?;
         let version = v.req_usize("version", "manifest")?;
-        if version != 1 {
-            return Err(Error::Config(format!(
-                "unsupported manifest version {version}"
-            )));
-        }
+        crate::util::manifest::check_version("manifest", version as u64, 1)?;
         let arts = v
             .req("artifacts", "manifest")?
             .as_array()

@@ -15,7 +15,10 @@ use crate::sync::AtomicU64;
 #[derive(Debug)]
 pub struct AdmissionGate {
     /// Admission cap: reservations beyond `cap` outstanding bounce.
-    cap: u64,
+    /// Atomic so a control-plane rollout can retune it live; shrinking
+    /// below the current gauge only stops *new* reserves — outstanding
+    /// reservations drain normally.
+    cap: AtomicU64,
     /// Outstanding reservations (requests accepted, not yet released
     /// by dispatch or shed).
     queued: AtomicU64,
@@ -25,14 +28,21 @@ impl AdmissionGate {
     /// Fresh gate admitting up to `cap` outstanding reservations.
     pub fn new(cap: usize) -> Self {
         Self {
-            cap: cap as u64,
+            cap: AtomicU64::new(cap as u64),
             queued: AtomicU64::new(0),
         }
     }
 
-    /// The admission cap this gate was built with.
+    /// The current admission cap.
     pub fn cap(&self) -> usize {
-        self.cap as usize
+        self.cap.load() as usize
+    }
+
+    /// Retune the admission cap (control-plane hot reload). Takes
+    /// effect on the next `try_reserve`; never disturbs outstanding
+    /// reservations.
+    pub fn set_cap(&self, cap: usize) {
+        self.cap.store(cap as u64);
     }
 
     /// Currently outstanding reservations (gauge; racy by nature, exact
@@ -46,8 +56,9 @@ impl AdmissionGate {
     /// The bounded increment is one atomic step, so concurrent
     /// reserves can never overshoot `cap`.
     pub fn try_reserve(&self) -> bool {
+        let cap = self.cap.load();
         self.queued
-            .fetch_update(|q| if q < self.cap { Some(q + 1) } else { None })
+            .fetch_update(|q| if q < cap { Some(q + 1) } else { None })
             .is_ok()
     }
 
@@ -81,6 +92,25 @@ mod tests {
         assert_eq!(g.queued(), 2);
         g.release();
         assert!(g.try_reserve(), "released slot is reusable");
+    }
+
+    #[test]
+    fn set_cap_retunes_live_without_disturbing_reservations() {
+        let g = AdmissionGate::new(1);
+        assert!(g.try_reserve());
+        assert!(!g.try_reserve(), "cap 1 is full");
+        // Rollout raises the cap: new reserves proceed immediately.
+        g.set_cap(3);
+        assert_eq!(g.cap(), 3);
+        assert!(g.try_reserve());
+        // Rollout shrinks below the outstanding gauge: new reserves
+        // bounce, outstanding reservations drain normally.
+        g.set_cap(1);
+        assert!(!g.try_reserve());
+        assert_eq!(g.queued(), 2, "shrinking never cancels reservations");
+        g.release();
+        g.release();
+        assert!(g.try_reserve(), "drained gauge reopens under the new cap");
     }
 
     #[test]

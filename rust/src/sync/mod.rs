@@ -326,6 +326,13 @@ impl AtomicU64 {
         self.inner.load(std::sync::atomic::Ordering::SeqCst)
     }
 
+    /// Overwrite the current value (control-plane retunes).
+    pub fn store(&self, v: u64) {
+        #[cfg(feature = "modelcheck")]
+        model::maybe_yield();
+        self.inner.store(v, std::sync::atomic::Ordering::SeqCst)
+    }
+
     /// Atomic read-modify-write: retries `f` until the exchange wins
     /// (the retry loop makes this a single atomic step — the model
     /// treats it as one operation, which is equivalent). Returns

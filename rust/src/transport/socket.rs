@@ -313,7 +313,13 @@ impl Transport for SocketHub {
             },
             SubmasterMsg::Finish(id) => WireMsg::Finish { id: id.0 },
             SubmasterMsg::Shutdown => WireMsg::Shutdown,
-            SubmasterMsg::Done(_) | SubmasterMsg::Heartbeat(_) => return,
+            // `Swap` does not cross processes: heavy rollouts are
+            // memory-transport only (the gate rejects them on sockets),
+            // and node processes rebuild their scheme from re-shipped
+            // `Load` frames, not from a swapped trait object.
+            SubmasterMsg::Done(_)
+            | SubmasterMsg::Heartbeat(_)
+            | SubmasterMsg::Swap(_) => return,
         };
         let outbox = link.outbox.lock();
         if let Some(tx) = outbox.as_ref() {

@@ -44,34 +44,10 @@ pub const MAX_PAYLOAD: usize = 64 << 20;
 /// own beacon).
 pub const NO_WORKER: u32 = u32::MAX;
 
-/// CRC-32 (IEEE 802.3, polynomial `0xEDB88320`) lookup table, built at
-/// compile time so the codec stays allocation- and dependency-free.
-const fn crc_table() -> [u32; 256] {
-    let mut table = [0u32; 256];
-    let mut i = 0;
-    while i < 256 {
-        let mut c = i as u32;
-        let mut k = 0;
-        while k < 8 {
-            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
-            k += 1;
-        }
-        table[i] = c;
-        i += 1;
-    }
-    table
-}
-
-static CRC_TABLE: [u32; 256] = crc_table();
-
-/// CRC-32 (IEEE) of `data`.
-pub fn crc32(data: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in data {
-        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
-    }
-    c ^ 0xFFFF_FFFF
-}
+/// CRC-32 (IEEE) of `data` — the shared implementation in
+/// [`crate::util::manifest`], re-exported so wire-format callers keep
+/// their original path.
+pub use crate::util::manifest::crc32;
 
 /// Typed decode failure. Every variant is a distinct, observable way a
 /// frame can be wrong — the rejection tests exercise each one.
@@ -426,24 +402,24 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, WireError> {
     Ok(msg)
 }
 
-fn put_u16(out: &mut Vec<u8>, v: u16) {
+pub(crate) fn put_u16(out: &mut Vec<u8>, v: u16) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_str(out: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
     put_u32(out, s.len() as u32);
     out.extend_from_slice(s.as_bytes());
 }
 
-fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
+pub(crate) fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
     put_u64(out, m.rows() as u64);
     put_u64(out, m.cols() as u64);
     for &v in m.data() {
@@ -451,42 +427,45 @@ fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
     }
 }
 
-/// Bounds-checked little-endian payload reader.
-struct Reader<'a> {
-    buf: &'a [u8],
-    pos: usize,
+/// Bounds-checked little-endian payload reader. Shared with the
+/// control-plane artifact and admin codecs, which reuse the wire
+/// conventions (little-endian fixed-width ints, length-prefixed
+/// strings, `f64::to_bits` floats).
+pub(crate) struct Reader<'a> {
+    pub(crate) buf: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl Reader<'_> {
-    fn take(&mut self, n: usize) -> Result<&[u8], WireError> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&[u8], WireError> {
         let end = self.pos.checked_add(n).ok_or(WireError::Truncated)?;
         let s = self.buf.get(self.pos..end).ok_or(WireError::Truncated)?;
         self.pos = end;
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8, WireError> {
+    pub(crate) fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
-    fn u16(&mut self) -> Result<u16, WireError> {
+    pub(crate) fn u16(&mut self) -> Result<u16, WireError> {
         let b = self.take(2)?;
         Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
-    fn u32(&mut self) -> Result<u32, WireError> {
+    pub(crate) fn u32(&mut self) -> Result<u32, WireError> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn u64(&mut self) -> Result<u64, WireError> {
+    pub(crate) fn u64(&mut self) -> Result<u64, WireError> {
         let b = self.take(8)?;
         Ok(u64::from_le_bytes([
             b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
         ]))
     }
 
-    fn string(&mut self) -> Result<String, WireError> {
+    pub(crate) fn string(&mut self) -> Result<String, WireError> {
         let len = self.u32()? as usize;
         let bytes = self.take(len)?;
         std::str::from_utf8(bytes)
@@ -494,7 +473,7 @@ impl Reader<'_> {
             .map_err(|_| WireError::Malformed("string is not UTF-8"))
     }
 
-    fn matrix(&mut self) -> Result<Matrix, WireError> {
+    pub(crate) fn matrix(&mut self) -> Result<Matrix, WireError> {
         let rows = usize::try_from(self.u64()?)
             .map_err(|_| WireError::Malformed("matrix rows overflow"))?;
         let cols = usize::try_from(self.u64()?)

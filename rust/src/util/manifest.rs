@@ -1,0 +1,94 @@
+//! Shared artifact-integrity helpers: CRC-32, version gates and
+//! checksum verification.
+//!
+//! Two artifact formats live in this tree — the PJRT AOT manifest
+//! (`runtime::artifact`) and the compiled scenario artifact
+//! (`controlplane::artifact`) — plus the socket wire format
+//! (`transport::wire`). All three must agree on integrity-check
+//! semantics: the same CRC-32 (IEEE 802.3) polynomial, the same
+//! "reject version skew explicitly" rule, the same "checksum mismatch
+//! is a typed error, never a panic" contract. Centralizing the
+//! helpers here keeps the formats from drifting.
+
+/// CRC-32 (IEEE 802.3, polynomial `0xEDB88320`) lookup table, built at
+/// compile time so the codecs stay allocation- and dependency-free.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Gate a format version: `got` must equal `want`, otherwise a typed
+/// `Error::Config` naming the artifact (`what`) and both versions —
+/// version skew is always rejected explicitly, never coerced.
+pub fn check_version(what: &str, got: u64, want: u64) -> crate::Result<()> {
+    if got != want {
+        return Err(crate::Error::Config(format!(
+            "unsupported {what} version {got} (this build speaks {want})"
+        )));
+    }
+    Ok(())
+}
+
+/// Verify a section checksum: `data` must hash to `want`, otherwise a
+/// typed `Error::Config` naming the artifact section (`what`).
+pub fn verify_checksum(what: &str, data: &[u8], want: u32) -> crate::Result<()> {
+    let got = crc32(data);
+    if got != want {
+        return Err(crate::Error::Config(format!(
+            "{what}: checksum mismatch (stored {want:#010x}, computed {got:#010x})"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC-32 check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn version_gate_names_both_versions() {
+        assert!(check_version("scenario artifact", 1, 1).is_ok());
+        let err = check_version("scenario artifact", 2, 1).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("scenario artifact"), "{msg}");
+        assert!(msg.contains('2') && msg.contains('1'), "{msg}");
+    }
+
+    #[test]
+    fn checksum_gate_is_a_typed_error() {
+        let data = b"payload";
+        assert!(verify_checksum("section", data, crc32(data)).is_ok());
+        let err = verify_checksum("section", data, 0xDEAD_BEEF).unwrap_err();
+        assert!(matches!(err, crate::Error::Config(_)));
+        assert!(format!("{err}").contains("checksum mismatch"));
+    }
+}

@@ -10,5 +10,6 @@ pub mod bench;
 pub mod check;
 pub mod harmonic;
 pub mod logging;
+pub mod manifest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,279 @@
+//! Integration: the control plane end to end — compiled scenario
+//! artifacts, zero-drop hot reload, atomic rejection, and rollback.
+//!
+//! The contracts pinned here are the ones an operator leans on:
+//!
+//! * a compiled artifact decodes to exactly the config that was
+//!   compiled, and re-compiles **bit-identically** (the artifact is a
+//!   canonical form, safe to diff and checksum);
+//! * every way an artifact can be wrong — corruption, truncation,
+//!   version skew, splicing — is a *typed* rejection, never a panic
+//!   and never a partially-applied config;
+//! * a heavy rollout (changed per-group k1 plan) landing while jobs
+//!   are in the pipeline completes every one of them bit-identically
+//!   to an unswapped run;
+//! * an incompatible artifact is rejected atomically: typed error,
+//!   unchanged generation, cluster still serving;
+//! * rollback restores generation N−1 without dropping a handle.
+
+use hiercode::config::schema::{ClusterConfig, ModelSpec};
+use hiercode::controlplane::{self, ArtifactError};
+use hiercode::coordinator::ClusterCore;
+use hiercode::linalg::{ops, Matrix};
+use hiercode::util::rng::Rng;
+use hiercode::Error;
+use std::time::{Duration, Instant};
+
+fn matrix(m: usize, d: usize, seed: u64) -> Matrix {
+    let mut r = Rng::new(seed);
+    Matrix::from_fn(m, d, |_, _| r.uniform(-1.0, 1.0))
+}
+
+/// Serving-friendly demo grid: single-request batches so batch
+/// composition cannot race the swap, and a queue that holds a flood.
+fn control_config() -> ClusterConfig {
+    let mut config = ClusterConfig::demo(4, 2, 3, 2);
+    config.serving.queue_cap = 128;
+    config.serving.default_deadline_ms = 30_000.0;
+    config.serving.drain_ms = 10_000.0;
+    config.batching.max_batch = 1;
+    config.batching.max_wait_ms = 0.5;
+    config
+}
+
+/// Compile → decode → recompile must be a fixed point: the artifact is
+/// a canonical serialization, so the second compile is byte-identical
+/// and the decoded config matches the source exactly.
+#[test]
+fn artifact_round_trip_is_bit_identical() {
+    let mut config = control_config();
+    config.serving.models.push(ModelSpec {
+        name: "résumé-ranker".into(), // exercises UTF-8 string framing
+        rows: 24,
+        cols: 4,
+        seed: 9,
+    });
+    let bytes = controlplane::compile(&config).unwrap();
+    let artifact = controlplane::decode(&bytes).unwrap();
+    assert_eq!(artifact.config, config);
+    assert_eq!(artifact.manifest.seed, config.seed);
+    let recompiled = controlplane::compile(&artifact.config).unwrap();
+    assert_eq!(bytes, recompiled, "artifact is not a canonical form");
+    // The manifest digest is topology-derived: a different k1 plan
+    // digests differently, the same config digests the same.
+    let again = controlplane::decode(&recompiled).unwrap();
+    assert_eq!(artifact.manifest.topology_digest, again.manifest.topology_digest);
+}
+
+/// Every malformed input is a typed rejection: corruption at any byte,
+/// truncation at any length, version skew, wrong magic.
+#[test]
+fn malformed_artifacts_are_rejected_typed() {
+    let bytes = controlplane::compile(&control_config()).unwrap();
+
+    // Wrong magic.
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xff;
+    assert_eq!(controlplane::decode(&bad).unwrap_err(), ArtifactError::BadMagic);
+
+    // Version skew (artifact version lives at offset 4, LE u16).
+    let mut bad = bytes.clone();
+    bad[4] = 0xee;
+    bad[5] = 0x7f;
+    assert_eq!(
+        controlplane::decode(&bad).unwrap_err(),
+        ArtifactError::BadVersion {
+            got: u16::from_le_bytes([0xee, 0x7f]),
+            want: controlplane::artifact::ARTIFACT_VERSION,
+        }
+    );
+
+    // Truncation at every prefix length short of the full artifact.
+    for len in 0..bytes.len() {
+        let err = controlplane::decode(&bytes[..len]).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                ArtifactError::Truncated | ArtifactError::BadChecksum(_)
+            ),
+            "prefix of {len} bytes gave unexpected error {err:?}"
+        );
+    }
+
+    // Single-byte corruption anywhere past the version fields must be
+    // caught by a checksum or framing check, never accepted. (Bytes
+    // 6..8 are the compiler version, which is provenance, not a
+    // compatibility gate — skew there is deliberately loadable.)
+    for pos in 8..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0x01;
+        assert!(
+            controlplane::decode(&bad).is_err(),
+            "flipped bit at {pos} was accepted"
+        );
+    }
+
+    // The typed error converts into the crate error with context.
+    let err: Error = ArtifactError::Truncated.into();
+    assert!(format!("{err}").contains("artifact"));
+}
+
+/// The tentpole contract: a heavy rollout (skewed k1 plan) lands while
+/// a flood of jobs is in the pipeline. Every pre-swap job completes —
+/// zero drops — and bit-identically to a run that never swapped.
+#[test]
+fn hot_swap_under_load_drops_nothing_and_preserves_bits() {
+    let jobs = 8usize;
+    let config = control_config();
+    let a = matrix(24, 4, 77);
+    let inputs: Vec<Vec<f64>> = {
+        let mut r = Rng::new(78);
+        (0..jobs)
+            .map(|_| (0..4).map(|_| r.uniform(-1.0, 1.0)).collect())
+            .collect()
+    };
+
+    // Oracle: same flood, no swap.
+    let core = ClusterCore::launch(&config).unwrap();
+    core.register_model("m", &a).unwrap();
+    let client = core.handle();
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|x| client.submit_to("m", x.clone()).unwrap())
+        .collect();
+    let reference: Vec<Vec<f64>> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    core.shutdown();
+
+    // Swapped run: flood, wait for dispatch, then roll out mid-flight.
+    let core = ClusterCore::launch(&config).unwrap();
+    core.register_model("m", &a).unwrap();
+    let client = core.handle();
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|x| client.submit_to("m", x.clone()).unwrap())
+        .collect();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while core.metrics().jobs < jobs as u64 {
+        assert!(Instant::now() < deadline, "flood never dispatched");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut cand = config.clone();
+    let plan = [3usize, 2, 1];
+    for (g, spec) in cand.code.topology.groups.iter_mut().enumerate() {
+        spec.k1 = plan[g];
+    }
+    cand.code.k1 = plan[0];
+    let bytes = controlplane::compile(&cand).unwrap();
+    assert_eq!(core.load_artifact(&bytes).unwrap(), 2);
+
+    for (h, want) in handles.into_iter().zip(&reference) {
+        let got = h.wait().expect("pre-swap job dropped by the rollout");
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "pre-swap output perturbed");
+        }
+    }
+    // Post-swap traffic decodes correctly under the new plan.
+    let x = vec![0.25, -1.5, 0.75, 2.0];
+    let y = client.submit_to("m", x.clone()).unwrap().wait().unwrap();
+    let want = ops::matvec(&a, &x);
+    for (g, w) in y.iter().zip(want.iter()) {
+        assert!((g - w).abs() < 1e-6, "post-swap decode wrong: {g} vs {w}");
+    }
+    let m = core.metrics();
+    assert_eq!(m.rollouts, 1);
+    assert_eq!(m.artifact_generation, 2);
+    core.shutdown();
+}
+
+/// An artifact whose outer code changed is refused atomically: typed
+/// error, generation unchanged, and the cluster keeps serving.
+#[test]
+fn incompatible_swap_is_rejected_atomically() {
+    let config = control_config();
+    let core = ClusterCore::launch(&config).unwrap();
+    let a = matrix(24, 4, 80);
+    core.register_model("m", &a).unwrap();
+
+    let mut bad = config.clone();
+    bad.code.k2 = 3;
+    bad.code.topology.k2 = 3;
+    let bytes = controlplane::compile(&bad).unwrap();
+    let err = core.load_artifact(&bytes).unwrap_err();
+    assert!(matches!(err, Error::Incompatible(_)), "got {err}");
+    assert!(
+        format!("{err}").contains("nothing applied"),
+        "rejection must state atomicity: {err}"
+    );
+    assert_eq!(core.artifact_generation(), 1);
+    assert_eq!(core.metrics().rollouts, 0);
+
+    let client = core.handle();
+    let x = vec![1.0; 4];
+    let y = client.submit_to("m", x.clone()).unwrap().wait().unwrap();
+    let want = ops::matvec(&a, &x);
+    for (g, w) in y.iter().zip(want.iter()) {
+        assert!((g - w).abs() < 1e-6);
+    }
+    core.shutdown();
+}
+
+/// Rollback restores generation N−1 with jobs in flight: the handles
+/// submitted before the rollback all complete, and the restored plan
+/// serves bit-identically to the pre-rollout cluster.
+#[test]
+fn rollback_restores_previous_generation_without_drops() {
+    let config = control_config();
+    let core = ClusterCore::launch(&config).unwrap();
+    let a = matrix(24, 4, 90);
+    core.register_model("m", &a).unwrap();
+    let client = core.handle();
+
+    // Oracle output under generation 1.
+    let x0 = vec![0.5, -0.25, 1.5, -1.0];
+    let before = client.submit_to("m", x0.clone()).unwrap().wait().unwrap();
+
+    // Roll out a skewed plan (generation 2).
+    let mut cand = config.clone();
+    let plan = [3usize, 2, 1];
+    for (g, spec) in cand.code.topology.groups.iter_mut().enumerate() {
+        spec.k1 = plan[g];
+    }
+    cand.code.k1 = plan[0];
+    assert_eq!(
+        core.load_artifact(&controlplane::compile(&cand).unwrap()).unwrap(),
+        2
+    );
+
+    // Flood under generation 2, then roll back mid-flight.
+    let inputs: Vec<Vec<f64>> = {
+        let mut r = Rng::new(91);
+        (0..6).map(|_| (0..4).map(|_| r.uniform(-1.0, 1.0)).collect()).collect()
+    };
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|x| client.submit_to("m", x.clone()).unwrap())
+        .collect();
+    assert_eq!(core.rollback().unwrap(), 1);
+    for (h, x) in handles.into_iter().zip(&inputs) {
+        let got = h.wait().expect("in-flight job dropped by the rollback");
+        let want = ops::matvec(&a, x);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-6);
+        }
+    }
+
+    // The restored generation decodes bit-identically to generation 1.
+    let after = client.submit_to("m", x0).unwrap().wait().unwrap();
+    assert_eq!(before.len(), after.len());
+    for (b, a) in before.iter().zip(&after) {
+        assert_eq!(b.to_bits(), a.to_bits(), "rollback did not restore the plan");
+    }
+    let m = core.metrics();
+    assert_eq!(m.rollouts, 1);
+    assert_eq!(m.rollbacks, 1);
+    assert_eq!(m.artifact_generation, 1);
+    // A second rollback has nothing to restore: typed, not silent.
+    assert!(matches!(core.rollback(), Err(Error::Incompatible(_))));
+    core.shutdown();
+}

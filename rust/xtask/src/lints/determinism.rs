@@ -19,13 +19,17 @@ use super::{Finding, SourceFile};
 /// cached == uncached bit-identity contracts, so its kernels, LU
 /// factorization and erasure-pattern cache get the same ban (the
 /// cache's Vec-scan store exists precisely because `HashMap` iteration
-/// order is not replayable).
+/// order is not replayable). `controlplane/` backs the compile →
+/// decode → recompile bit-identity contract (the `.hca` artifact is a
+/// canonical form) and the rollout classifier's replayability, so the
+/// codec and the admin framing get it too.
 const SCOPES: &[&str] = &[
     "src/sim/",
     "src/coding/",
     "src/linalg/",
     "src/coordinator/chaos.rs",
     "src/transport/",
+    "src/controlplane/",
 ];
 
 /// Banned identifiers and why.
@@ -66,6 +70,8 @@ pub fn lint(file: &SourceFile) -> Vec<Finding> {
                         "kernel/cache"
                     } else if file.path.starts_with("src/transport/") {
                         "transport"
+                    } else if file.path.starts_with("src/controlplane/") {
+                        "control plane"
                     } else {
                         "decode"
                     }
@@ -120,6 +126,19 @@ mod tests {
         ));
         assert_eq!(f.len(), 1);
         assert!(f[0].message.contains("transport"));
+    }
+
+    #[test]
+    fn controlplane_is_in_scope() {
+        // The artifact codec backs the compile → decode → recompile
+        // bit-identity contract: a canonical form cannot depend on
+        // unordered iteration or wall clocks.
+        let f = lint(&SourceFile::new(
+            "src/controlplane/artifact.rs",
+            "use std::time::Instant;\n",
+        ));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("control plane"));
     }
 
     #[test]

@@ -17,6 +17,7 @@ const HOT_PATHS: &[&str] = &[
     "src/linalg/",
     "src/parallel/",
     "src/transport/",
+    "src/controlplane/",
 ];
 
 /// Panicking macros (checked as `name!`).
@@ -108,6 +109,18 @@ mod tests {
             "fn f(x: Option<u32>) -> u32 { x.unwrap() }",
         ));
         assert_eq!(f.len(), 1, "a panicking frame codec can kill the hub");
+    }
+
+    #[test]
+    fn controlplane_is_a_hot_path() {
+        // The artifact codec and the admin server both face untrusted
+        // bytes; a panic there would kill the rollout path or the
+        // control socket's accept loop.
+        let f = lint(&SourceFile::new(
+            "src/controlplane/artifact.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }",
+        ));
+        assert_eq!(f.len(), 1, "a panicking artifact codec can kill a rollout");
     }
 
     #[test]
